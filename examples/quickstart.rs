@@ -1,0 +1,73 @@
+//! Quickstart: one FlexSpec request end-to-end vs the Cloud-Only anchor.
+//!
+//!     make artifacts                 # once: trains + AOT-lowers the zoo
+//!     cargo run --release --example quickstart
+//!
+//! Loads the AOT model zoo through PJRT, serves a GSM8K-style request
+//! against the math-evolved cloud target with the FROZEN anchor-aligned
+//! edge draft, and prints the per-round adaptive strides and the speedup.
+
+use flexspec::baselines::Method;
+use flexspec::channel::{NetworkKind, NetworkProfile};
+use flexspec::coordinator::{CloudEngine, Pipeline};
+use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::experiments::REGIME_A;
+use flexspec::runtime::Registry;
+use flexspec::workload::{WorkloadGen, EOS};
+
+fn main() -> anyhow::Result<()> {
+    let reg = Registry::open_default()?;
+    println!("loaded model zoo from {:?}", reg.manifest.root);
+    println!("target versions available: {:?}", reg.names_of_kind("lora"));
+
+    let n_requests = 4;
+    let mut totals: Vec<(f64, usize)> = Vec::new(); // (decode_ms, tokens) per method
+    for method in [Method::CloudOnly, Method::FlexSpec].iter() {
+        // the cloud serves the MATH-EVOLVED target; the edge draft is the
+        // static FlexSpec bundle that has never seen this version.
+        let mut cloud = CloudEngine::new(&reg, "lora_llama2t_gsm8k", EOS)?;
+        let mut gen = WorkloadGen::new("gsm8k", 42)?;
+        let mut total = (0.0, 0usize);
+        for i in 0..n_requests {
+            let req = gen.next_request();
+            let mut chan = NetworkProfile::new(NetworkKind::FourG).channel(7 + i);
+            let mut pipe = Pipeline::new(
+                method.draft_source(&reg, "llama2t", "gsm8k")?,
+                &mut cloud,
+                &mut chan,
+                method.stride_policy(NetworkKind::FourG),
+                &JETSON_ORIN,
+                &A800_70B,
+                REGIME_A.mode,
+                REGIME_A.temperature,
+                REGIME_A.top_p,
+                method.label(),
+            );
+            let r = pipe.run_request(&req.prompt, req.max_new, i)?;
+            println!(
+                "[{}] req {i}: {} tokens, {:.1} ms/token, {} rounds, acceptance {:.2}",
+                method.label(),
+                r.new_tokens,
+                r.ms_per_token(),
+                r.rounds,
+                r.acceptance_rate()
+            );
+            if *method == Method::FlexSpec && i == 1 {
+                print!("    per-round K(tau): ");
+                for l in r.rounds_log.iter().take(14) {
+                    print!("{}({}) ", l.k, l.tau);
+                }
+                println!("...");
+            }
+            total.0 += r.decode_ms;
+            total.1 += r.new_tokens;
+        }
+        totals.push(total);
+        println!();
+    }
+    let co = totals[0].0 / totals[0].1 as f64;
+    let fs = totals[1].0 / totals[1].1 as f64;
+    println!("mean ms/token: Cloud-Only {co:.1} vs FlexSpec {fs:.1}");
+    println!("FlexSpec speedup vs Cloud-Only on 4G (math-evolved target, frozen draft): {:.2}x", co / fs);
+    Ok(())
+}

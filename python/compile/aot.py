@@ -1,0 +1,132 @@
+"""AOT lowering: jax → HLO *text* artifacts the rust runtime loads.
+
+HLO text (NOT `lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()`)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids that xla_extension 0.5.1 (the version the published `xla` crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Three entry points per architecture:
+
+  * <arch>.block.hlo.txt   — forward_block over BLOCK(=9) tokens: the
+    verify/decode/draft-step executable (valid-length masked);
+  * <arch>.prefill.hlo.txt — forward_block over PREFILL_CHUNK(=64) tokens:
+    chunked prompt ingestion;
+  * verify_v<vocab>.hlo.txt — the fused Pallas verification kernel.
+
+Argument order contract with rust (runtime/model.rs): jax flattens the
+argument pytree depth-first with dict keys sorted, i.e.
+
+    [params (sorted names)..., lora (sorted names, targets only)...,
+     tokens, pos, valid, kv]
+
+and returns a tuple (logits, kv_out).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import BLOCK, K_MAX, PREFILL_CHUNK, ModelConfig, all_archs
+from .kernels import verify as verify_k
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _block_fn(cfg: ModelConfig, n_tokens: int):
+    """Build the jittable serving entry point for one architecture."""
+    if cfg.lora_rank:
+
+        def fn(params, lora, tokens, pos, valid, kv):
+            return model.forward_block(cfg, params, lora, tokens, pos, valid, kv, use_kernels=True)
+
+    else:
+
+        def fn(params, tokens, pos, valid, kv):
+            return model.forward_block(cfg, params, None, tokens, pos, valid, kv, use_kernels=True)
+
+    return fn
+
+
+def _abstract(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_arch(cfg: ModelConfig, n_tokens: int) -> str:
+    """Lower forward_block for `n_tokens` to HLO text."""
+    params = {name: _abstract(shape) for name, shape in cfg.param_spec()}
+    tokens = _abstract((n_tokens,), jnp.int32)
+    pos = _abstract((1,), jnp.int32)
+    valid = _abstract((1,), jnp.int32)
+    kv = _abstract(cfg.kv_shape())
+    fn = _block_fn(cfg, n_tokens)
+    if cfg.lora_rank:
+        lora = {name: _abstract(shape) for name, shape in cfg.lora_spec()}
+        lowered = jax.jit(fn).lower(params, lora, tokens, pos, valid, kv)
+    else:
+        lowered = jax.jit(fn).lower(params, tokens, pos, valid, kv)
+    return to_hlo_text(lowered)
+
+
+def lower_verify(vocab: int) -> str:
+    """Lower the fused verification kernel for one vocabulary size."""
+    logits = _abstract((BLOCK, vocab))
+    draft = _abstract((K_MAX,), jnp.int32)
+    n = _abstract((1,), jnp.int32)
+    lowered = jax.jit(verify_k.verify).lower(logits, draft, n)
+    return to_hlo_text(lowered)
+
+
+def build_hlo(out_dir: str, archs: dict[str, ModelConfig] | None = None, log=print) -> dict:
+    """Lower every entry point; returns {key: relative path} for the manifest."""
+    archs = archs or all_archs()
+    hlo_dir = os.path.join(out_dir, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    paths: dict[str, str] = {}
+
+    vocabs = sorted({c.vocab for c in archs.values()})
+    for v in vocabs:
+        rel = f"hlo/verify_v{v}.hlo.txt"
+        text = lower_verify(v)
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        paths[f"verify_v{v}"] = rel
+        log(f"[aot] verify_v{v}: {len(text) / 1e3:.0f} kB")
+
+    for name, cfg in archs.items():
+        for kind, n in (("block", BLOCK), ("prefill", PREFILL_CHUNK)):
+            rel = f"hlo/{name}.{kind}.hlo.txt"
+            text = lower_arch(cfg, n)
+            with open(os.path.join(out_dir, rel), "w") as f:
+                f.write(text)
+            paths[f"{name}.{kind}"] = rel
+            log(f"[aot] {name}.{kind}: {len(text) / 1e3:.0f} kB")
+    return paths
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifacts directory")
+    p.add_argument("--arch", default=None, help="lower a single architecture")
+    args = p.parse_args()
+    archs = all_archs()
+    if args.arch:
+        archs = {args.arch: archs[args.arch]}
+    build_hlo(args.out, archs)
+
+
+if __name__ == "__main__":
+    main()

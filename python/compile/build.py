@@ -1,0 +1,277 @@
+"""`make artifacts` entry point: train → export → AOT-lower → calibrate.
+
+Incremental: every weight bundle is skipped if its .bin already exists
+(delete artifacts/ to force a full rebuild), HLO is re-lowered only when
+missing, and the manifest + acceptance calibration are refreshed at the
+end of every run. Python runs ONLY here — never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from . import aot, corpus, export, model, train
+from .configs import (
+    BLOCK,
+    K_MAX,
+    LLAMA2T,
+    LLAMA3T,
+    MIXTRALT,
+    PREFILL_CHUNK,
+    ModelConfig,
+    all_archs,
+    flex_draft_config,
+    generic_draft_config,
+)
+
+# Datasets of the paper's evaluation; nq_rag shares the nq grammar (same
+# knowledge, different prompt shape) so it reuses the nq LoRA target.
+EVAL_DOMAINS = ["gsm8k", "nq", "mtbench", "wmt14", "cnndm", "humaneval"]
+
+# Per-family training budgets (steps). llama2t is the headline model of
+# Tables II–V; the scalability families (Table VI) train a bit shorter.
+STEPS = {
+    "llama2t": dict(base=380, lora=220, full=300, flex=550, generic=250, synced=260),
+    "llama3t": dict(base=300, lora=200, flex=450, generic=0, synced=0),
+    "mixtralt": dict(base=260, lora=180, flex=400, generic=0, synced=0),
+}
+
+
+class Builder:
+    def __init__(self, out_dir: str, log=print):
+        self.out = out_dir
+        self.log = log
+        self.weights: dict[str, dict] = {}  # manifest "weights" section
+        os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.out, "weights", f"{name}.bin")
+
+    def have(self, name: str) -> bool:
+        return os.path.exists(self._path(name))
+
+    def save(self, name: str, tensors, meta: dict) -> None:
+        export.write_bundle(self._path(name), {k: np.asarray(v) for k, v in tensors.items()})
+        self.register(name, meta)
+
+    def register(self, name: str, meta: dict) -> None:
+        self.weights[name] = {**meta, "file": f"weights/{name}.bin"}
+
+    def load(self, name: str):
+        import jax.numpy as jnp
+
+        return {k: jnp.asarray(v) for k, v in export.read_bundle(self._path(name)).items()}
+
+
+def build_family(b: Builder, cfg: ModelConfig, budgets: dict) -> None:
+    """Train every bundle for one target family (with caching)."""
+    fam = cfg.name
+    base_name = f"target_{fam}_base"
+    t0 = time.time()
+
+    if not b.have(base_name):
+        params = train.train_base(cfg, seed=1, steps=budgets["base"], log=b.log)
+        b.save(base_name, params, {"arch": fam, "kind": "base"})
+    else:
+        b.register(base_name, {"arch": fam, "kind": "base"})
+    base = b.load(base_name)
+
+    # Evolving cloud versions: one PEFT update per eval domain.
+    domains = EVAL_DOMAINS if fam == "llama2t" else ["mtbench"]
+    for dom in domains:
+        name = f"lora_{fam}_{dom}"
+        if not b.have(name):
+            lora = train.train_lora(cfg, base, dom, seed=2, steps=budgets["lora"], log=b.log)
+            b.save(name, lora, {"arch": fam, "kind": "lora", "base": base_name, "domain": dom})
+        else:
+            b.register(name, {"arch": fam, "kind": "lora", "base": base_name, "domain": dom})
+
+    # Table II's "Code (Full)": full-parameter FT breaks the anchor.
+    if fam == "llama2t":
+        name = f"target_{fam}_code_full"
+        if not b.have(name):
+            params = train.train_full(cfg, base, "humaneval", seed=3, steps=budgets["full"], log=b.log)
+            b.save(name, params, {"arch": fam, "kind": "full", "domain": "humaneval"})
+        else:
+            b.register(name, {"arch": fam, "kind": "full", "domain": "humaneval"})
+
+    # FlexSpec's static draft: ONE distillation against the base teacher.
+    dcfg = flex_draft_config(cfg)
+    name = f"draft_flex_{fam}"
+    if not b.have(name):
+        params, _wp = train.distill_draft(dcfg, cfg, base, seed=4, steps=budgets["flex"], log=b.log)
+        b.save(name, params, {"arch": dcfg.name, "kind": "draft_flex", "target": base_name})
+    else:
+        b.register(name, {"arch": dcfg.name, "kind": "draft_flex", "target": base_name})
+
+    # Std-SD generic draft + per-version synced drafts (llama2t only).
+    if budgets.get("generic"):
+        gcfg = generic_draft_config(cfg)
+        name = f"draft_generic_{fam}"
+        if not b.have(name):
+            params = train.train_generic(gcfg, seed=5, steps=budgets["generic"], log=b.log)
+            b.save(name, params, {"arch": gcfg.name, "kind": "draft_generic"})
+        else:
+            b.register(name, {"arch": gcfg.name, "kind": "draft_generic"})
+
+    if budgets.get("synced"):
+        for dom in domains:
+            name = f"draft_synced_{fam}_{dom}"
+            meta = {"arch": dcfg.name, "kind": "draft_synced", "target": f"lora_{fam}_{dom}", "domain": dom}
+            if not b.have(name):
+                lora = b.load(f"lora_{fam}_{dom}")
+                params, _wp = train.distill_draft(
+                    dcfg, cfg, base, teacher_lora=lora, seed=6, steps=budgets["synced"],
+                    domain=dom, style='evolved', log=b.log,
+                )
+                b.save(name, params, meta)
+            else:
+                b.register(name, meta)
+
+    b.log(f"[build] family {fam} done in {time.time() - t0:.0f}s")
+
+
+def calibrate(b: Builder, log=print) -> dict:
+    """Measure draft/target acceptance for the headline pairs (Table II
+    shape + policy priors). Stored in the manifest; cross-checked by the
+    rust experiment harness."""
+    cfg = LLAMA2T
+    zero = model.init_lora(cfg, jax.random.PRNGKey(0), zero=True)
+    base = b.load("target_llama2t_base")
+    flex = b.load("draft_flex_llama2t")
+    gen = b.load("draft_generic_llama2t")
+    dcfg, gcfg = flex_draft_config(cfg), generic_draft_config(cfg)
+    out: dict[str, float] = {}
+
+    def acc(tag, tparams, tlora, dcfg_, dparams, domain):
+        v = train.acceptance_rate(cfg, tparams, tlora, dcfg_, dparams, domain, n_prompts=6, gen_len=40)
+        out[tag] = round(v, 4)
+        log(f"[calibrate] {tag} = {v:.3f}")
+
+    acc("flex_vs_base@general", base, zero, dcfg, flex, "general")
+    acc("generic_vs_base@general", base, zero, gcfg, gen, "general")
+    for dom in ("gsm8k", "humaneval"):
+        lora = b.load(f"lora_llama2t_{dom}")
+        acc(f"flex_vs_base@{dom}", base, zero, dcfg, flex, dom)
+        acc(f"generic_vs_base@{dom}", base, zero, gcfg, gen, dom)
+        acc(f"flex_vs_lora@{dom}", base, lora, dcfg, flex, dom)
+        acc(f"generic_vs_lora@{dom}", base, lora, gcfg, gen, dom)
+        sync = b.load(f"draft_synced_llama2t_{dom}")
+        acc(f"synced_vs_lora@{dom}", base, lora, dcfg, sync, dom)
+    full = b.load("target_llama2t_code_full")
+    acc("flex_vs_full@humaneval", full, zero, dcfg, flex, "humaneval")
+    acc("generic_vs_full@humaneval", full, zero, gcfg, gen, "humaneval")
+    return out
+
+
+def build_manifest(b: Builder, hlo_paths: dict, calib: dict) -> dict:
+    archs = {}
+    for name, cfg in all_archs().items():
+        archs[name] = {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "n_experts": cfg.n_experts,
+            "lora_rank": cfg.lora_rank,
+            "draft_head": cfg.draft_head,
+            "kv_shape": list(cfg.kv_shape()),
+            "params": [[n, list(s)] for n, s in cfg.param_spec()],
+            "lora": [[n, list(s)] for n, s in cfg.lora_spec()],
+            "hlo_block": hlo_paths[f"{name}.block"],
+            "hlo_prefill": hlo_paths[f"{name}.prefill"],
+        }
+    verify = {str(v): p for v, p in ((k.split("_v")[1], p) for k, p in hlo_paths.items() if k.startswith("verify_v"))}
+    domains = {
+        d.name: {
+            "offset": d.offset, "size": d.size, "mult": d.mult, "inc": d.inc,
+            "p_det": d.p_det, "p_eos": d.p_eos,
+            "prompt_len": list(d.prompt_len), "gen_len": list(d.gen_len),
+            "evolved_mult": d.evolved_mult, "evolved_inc": d.evolved_inc,
+            "evolve_mod": d.evolve_mod,
+        }
+        for d in corpus.DOMAINS.values()
+    }
+    return {
+        "version": 1,
+        "block": BLOCK,
+        "k_max": K_MAX,
+        "prefill_chunk": PREFILL_CHUNK,
+        "bos": corpus.BOS, "eos": corpus.EOS, "pad": corpus.PAD,
+        "archs": archs,
+        "weights": b.weights,
+        "verify_hlo": verify,
+        "domains": domains,
+        "acceptance_calibration": calib,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--skip-calibration", action="store_true")
+    p.add_argument("--family", default=None, help="build a single target family")
+    args = p.parse_args()
+    t0 = time.time()
+
+    b = Builder(args.out)
+    fams = [LLAMA2T, LLAMA3T, MIXTRALT]
+    if args.family:
+        fams = [f for f in fams if f.name == args.family]
+    for cfg in fams:
+        build_family(b, cfg, STEPS[cfg.name])
+
+    hlo_paths = {}
+    for key, rel in aot_cached(args.out).items():
+        hlo_paths[key] = rel
+
+    calib_path = os.path.join(args.out, "calibration.json")
+    if args.skip_calibration and os.path.exists(calib_path):
+        calib = json.load(open(calib_path))
+    else:
+        calib = calibrate(b)
+        json.dump(calib, open(calib_path, "w"), indent=1, sort_keys=True)
+
+    manifest = build_manifest(b, hlo_paths, calib)
+    export.write_manifest(os.path.join(args.out, "manifest.json"), manifest)
+    print(f"[build] artifacts complete in {time.time() - t0:.0f}s -> {args.out}")
+
+
+def aot_cached(out_dir: str, log=print) -> dict:
+    """Lower only the HLO files that are missing."""
+    archs = all_archs()
+    paths: dict[str, str] = {}
+    missing: dict[str, ModelConfig] = {}
+    for name in archs:
+        for kind in ("block", "prefill"):
+            rel = f"hlo/{name}.{kind}.hlo.txt"
+            paths[f"{name}.{kind}"] = rel
+            if not os.path.exists(os.path.join(out_dir, rel)):
+                missing[name] = archs[name]
+    for v in sorted({c.vocab for c in archs.values()}):
+        rel = f"hlo/verify_v{v}.hlo.txt"
+        paths[f"verify_v{v}"] = rel
+        if not os.path.exists(os.path.join(out_dir, rel)):
+            os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+            with open(os.path.join(out_dir, rel), "w") as f:
+                f.write(aot.lower_verify(v))
+            log(f"[aot] verify_v{v} lowered")
+    for name, cfg in missing.items():
+        for kind, n in (("block", BLOCK), ("prefill", PREFILL_CHUNK)):
+            rel = f"hlo/{name}.{kind}.hlo.txt"
+            with open(os.path.join(out_dir, rel), "w") as f:
+                f.write(aot.lower_arch(cfg, n))
+            log(f"[aot] {name}.{kind} lowered")
+    return paths
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Model architecture configs shared by training, AOT lowering and export.
+
+The reproduction scales the paper's model zoo down to tiny transformers
+(DESIGN.md substitution log): acceptance-rate dynamics — the quantity that
+drives every table — come from real draft/target interaction; absolute
+FLOPs are supplied by hardware profiles on the rust side.
+
+Parameter naming contract (also the export order, see export.py):
+params is a flat {name: array} dict; jax flattens dicts in sorted-key
+order, and the rust runtime feeds literals in the same sorted order read
+from the weight-bundle manifest. Changing a name here is a wire-format
+change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one model in the zoo (dense, MoE, or draft)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    n_experts: int = 0  # 0 => dense SwiGLU MLP; >0 => MoE with top_k routing
+    top_k: int = 2
+    lora_rank: int = 0  # 0 => no LoRA runtime args lowered into the HLO
+    draft_head: bool = False  # FlexSpec draft: anchor block + H_small MLP head
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def lora_layers(self) -> int:
+        """LoRA adapters are injected into layers 1..L-1 only: the paper's
+        backbone-freezing constraint keeps the anchor block (layer L) and
+        LM head invariant so the frozen edge draft stays feature-aligned."""
+        return max(self.n_layers - 1, 0) if self.lora_rank else 0
+
+    def param_spec(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Ordered (sorted-name) list of parameter names and shapes."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        spec: dict[str, tuple[int, ...]] = {"embed": (v, d), "ln_f": (d,), "lm_head": (d, v)}
+        for i in range(self.n_layers):
+            p = f"L{i}"
+            spec[f"{p}.ln1"] = (d,)
+            spec[f"{p}.ln2"] = (d,)
+            for w in ("wq", "wk", "wv", "wo"):
+                spec[f"{p}.{w}"] = (d, d)
+            if self.n_experts:
+                spec[f"{p}.gate"] = (d, self.n_experts)
+                for e in range(self.n_experts):
+                    spec[f"{p}.E{e}.wg"] = (d, ff)
+                    spec[f"{p}.E{e}.wu"] = (d, ff)
+                    spec[f"{p}.E{e}.wd"] = (ff, d)
+            else:
+                spec[f"{p}.wg"] = (d, ff)
+                spec[f"{p}.wu"] = (d, ff)
+                spec[f"{p}.wd"] = (ff, d)
+        if self.draft_head:
+            spec["head.w1"] = (d, 2 * d)
+            spec["head.b1"] = (2 * d,)
+            spec["head.w2"] = (2 * d, d)
+            spec["head.b2"] = (d,)
+        return sorted(spec.items())
+
+    def lora_spec(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Ordered LoRA adapter names/shapes (empty when lora_rank == 0)."""
+        r, d = self.lora_rank, self.d_model
+        spec: dict[str, tuple[int, ...]] = {}
+        for i in range(self.lora_layers):
+            for w in ("q", "v", "o"):
+                spec[f"L{i}.A{w}"] = (d, r)
+                spec[f"L{i}.B{w}"] = (r, d)
+        return sorted(spec.items())
+
+    def kv_shape(self) -> tuple[int, ...]:
+        return (self.n_layers, 2, self.n_heads, self.max_seq, self.d_head)
+
+    def n_params(self) -> int:
+        return sum(int_prod(s) for _, s in self.param_spec())
+
+
+def int_prod(shape: tuple[int, ...]) -> int:
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+# Speculation block: K_max draft tokens + 1 committed token per round.
+K_MAX = 8
+BLOCK = K_MAX + 1
+PREFILL_CHUNK = 64
+
+# ---------------------------------------------------------------------------
+# The model zoo. Names are wire-format (manifest keys, rust-side lookups).
+# ---------------------------------------------------------------------------
+
+LLAMA2T = ModelConfig(
+    name="llama2t", vocab=512, d_model=128, n_layers=4, n_heads=4,
+    d_ff=256, max_seq=256, lora_rank=8,
+)
+# "Llama-3-like": larger vocabulary, wider MLP — distinct training data.
+LLAMA3T = ModelConfig(
+    name="llama3t", vocab=1024, d_model=128, n_layers=4, n_heads=4,
+    d_ff=384, max_seq=256, lora_rank=8,
+)
+# "Mixtral-like": sparse MoE MLPs, 4 experts, top-2 routing.
+MIXTRALT = ModelConfig(
+    name="mixtralt", vocab=512, d_model=128, n_layers=4, n_heads=4,
+    d_ff=192, max_seq=256, n_experts=4, top_k=2, lora_rank=8,
+)
+
+
+def flex_draft_config(target: ModelConfig) -> ModelConfig:
+    """FlexSpec edge draft for a target family: one transformer block (the
+    frozen anchor, copied from the target's last layer) + trainable H_small
+    (2-layer MLP) + the target's frozen embedding/LM head (paper eq. 4)."""
+    return ModelConfig(
+        name=f"draft_flex_{target.name}", vocab=target.vocab,
+        d_model=target.d_model, n_layers=1, n_heads=target.n_heads,
+        d_ff=target.d_ff, max_seq=target.max_seq,
+        n_experts=target.n_experts, top_k=target.top_k, draft_head=True,
+    )
+
+
+def generic_draft_config(target: ModelConfig) -> ModelConfig:
+    """Std-SD baseline draft: an independently trained small LM (the paper's
+    generic Llama-2-7B stand-in) with no anchor sharing."""
+    return ModelConfig(
+        name=f"draft_generic_{target.name}", vocab=target.vocab,
+        d_model=96, n_layers=1, n_heads=target.n_heads,
+        d_ff=192, max_seq=target.max_seq,
+    )
+
+
+TARGETS = {c.name: c for c in (LLAMA2T, LLAMA3T, MIXTRALT)}
+
+
+def all_archs() -> dict[str, ModelConfig]:
+    """Every architecture that needs its own HLO entry points."""
+    archs: dict[str, ModelConfig] = dict(TARGETS)
+    for t in TARGETS.values():
+        for c in (flex_draft_config(t), generic_draft_config(t)):
+            archs[c.name] = c
+    return archs

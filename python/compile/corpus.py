@@ -1,0 +1,229 @@
+"""Synthetic domain corpora, deterministically matched with the rust side.
+
+The paper trains/evaluates on GSM8K, NQ, NQ-RAG, MT-Bench, WMT14 and
+CNN/DM and fine-tunes cloud targets per domain. We cannot ship those
+datasets, so each domain is a synthetic grammar over a shared vocabulary:
+a mostly-deterministic affine next-token rule inside a domain-specific
+token range, with in-domain noise and a shared "common word" range. LoRA
+fine-tuning a target on one grammar shifts its distribution exactly the
+way task fine-tuning does in the paper (DESIGN.md substitution log).
+
+CROSS-LANGUAGE CONTRACT: rust/src/workload/corpus.rs implements the same
+splitmix64 PRNG and the same tables; python/tests/test_corpus.py and the
+rust unit tests both pin golden sequences so the serving-time workload
+distribution provably equals the training distribution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+MASK64 = (1 << 64) - 1
+
+PAD, BOS, EOS = 0, 1, 2
+COMMON_OFFSET, COMMON_SIZE = 448, 64
+
+
+class SplitMix64:
+    """splitmix64; bit-identical to rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_range(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """One synthetic task grammar (wire-format: mirrored in rust).
+
+    Each domain has a *base* affine next-token rule and an *evolved*
+    variant used to fine-tune the cloud target: transitions from tokens
+    with (cur % evolve_mod == evolve_mod-1) follow (evolved_mult,
+    evolved_inc) instead. evolve_mod therefore controls how much of the
+    domain's behaviour the cloud update rewrites — the knob behind the
+    paper's distribution-shift gradient (Table II)."""
+
+    name: str
+    offset: int  # first token id of the domain range
+    size: int  # number of domain tokens
+    mult: int  # affine rule multiplier
+    inc: int  # affine rule increment
+    p_det: float  # probability of following the deterministic rule
+    p_eos: float  # per-token EOS probability once past min length
+    prompt_len: tuple[int, int]  # [lo, hi) prompt lengths (tokens, excl BOS)
+    gen_len: tuple[int, int]  # [lo, hi) target output lengths
+    evolved_mult: int = 0  # evolved-rule multiplier (0 => mult+2)
+    evolved_inc: int = 0
+    evolve_mod: int = 4  # evolve transitions from cur % mod == mod-1
+
+
+# Domain table. prompt/gen lengths echo the paper's task shapes: RAG and
+# summarisation are prompt-heavy, chat/translation mid, math/qa shorter.
+DOMAINS: dict[str, Domain] = {
+    d.name: d
+    for d in (
+        Domain("general", 16, 48, 5, 11, 0.75, 0.020, (8, 24), (24, 64)),
+        Domain("gsm8k", 64, 64, 7, 3, 0.85, 0.015, (12, 32), (32, 96)),
+        Domain("humaneval", 128, 64, 11, 5, 0.85, 0.012, (10, 28), (40, 112), evolve_mod=3),
+        Domain("mtbench", 192, 64, 3, 17, 0.78, 0.018, (8, 40), (32, 96)),
+        Domain("nq", 256, 64, 13, 7, 0.80, 0.030, (6, 20), (16, 48)),
+        Domain("nq_rag", 256, 64, 13, 7, 0.80, 0.025, (48, 120), (24, 64)),
+        Domain("wmt14", 320, 64, 9, 13, 0.80, 0.020, (12, 36), (24, 72)),
+        Domain("cnndm", 384, 64, 5, 19, 0.80, 0.022, (64, 160), (24, 80)),
+    )
+}
+
+# nq and nq_rag share a grammar range (same knowledge domain, different
+# prompt shape) — exactly the paper's NQ vs NQ-RAG split.
+
+
+# Grammar styles:
+#   base    — the pretraining rule;
+#   evolved — the cloud update: transitions from cur % evolve_mod ==
+#             evolve_mod-1 rewritten (the Table II shift knob);
+#   foreign — a *different provider's* data distribution used to train
+#             the Std-SD generic draft: general text is shared (mod-4
+#             sliver differs); every task domain follows that provider's
+#             own rules entirely.
+BASE, EVOLVED, FOREIGN, FULL_SHIFT = "base", "evolved", "foreign", "full_shift"
+
+
+def subset_hash(cur: int, salt: int) -> int:
+    """Multiplicative hash picking pseudorandom token subsets. Residue
+    classes of `cur` are invariant tracks of the affine dynamics (a mod-m
+    trigger would leave some trajectories untouched and absorb others —
+    bimodal acceptance); hashing decorrelates the rewritten subset from
+    the trajectory structure so every request sees the same rewrite rate."""
+    return ((cur * 2654435761 + salt * 40503) & 0xFFFFFFFF) >> 13
+
+
+def rule_next(cur: int, dom: Domain, style: str = BASE) -> int:
+    """The deterministic part of the grammar under a given style."""
+    if style == EVOLVED and subset_hash(cur, dom.offset) % dom.evolve_mod == dom.evolve_mod - 1:
+        m = dom.evolved_mult or dom.mult + 2
+        c = dom.evolved_inc or dom.inc + 5
+        return dom.offset + ((cur * m + c) % dom.size)
+    if style == FULL_SHIFT and cur % 2 == 0:
+        # full-parameter FT rewrite: absorbing on the even subset (the
+        # harsh Table II "Code (Full)" drift — trajectories converge into
+        # fully rewritten behaviour, collapsing base-aligned drafts).
+        return dom.offset + ((cur * (dom.mult + 2) + dom.inc + 5) % dom.size)
+    if style == FOREIGN:
+        # Another provider's corpus: general web text is universal (only a
+        # mod-4 sliver differs), but task-domain conventions differ on the
+        # odd half of the transitions — an off-the-shelf draft gets the
+        # domains only partially right (paper Table II's 0.45-on-math
+        # regime), and the odd class is exactly where EVOLVED trajectories
+        # concentrate, so its acceptance collapses further under updates.
+        if dom.name == "general":
+            if subset_hash(cur, 77) % 4 == 0:
+                return dom.offset + ((cur * (dom.mult + 4) + dom.inc + 7) % dom.size)
+        elif subset_hash(cur, 77) % 2 == 1:
+            return dom.offset + ((cur * (dom.mult + 4) + dom.inc + 7) % dom.size)
+    return dom.offset + ((cur * dom.mult + dom.inc) % dom.size)
+
+
+def next_token(cur: int, dom: Domain, rng: SplitMix64, style: str = BASE) -> int:
+    """One grammar step. Deterministic affine rule with prob p_det, else
+    in-domain noise (50%) or a common-range word (50%)."""
+    if rng.next_f64() < dom.p_det:
+        return rule_next(cur, dom, style)
+    if rng.next_f64() < 0.5:
+        return dom.offset + rng.next_range(dom.size)
+    return COMMON_OFFSET + rng.next_range(COMMON_SIZE)
+
+
+def gen_tokens(dom: Domain, rng: SplitMix64, length: int, start: int | None = None, style: str = BASE) -> list[int]:
+    """Generate `length` grammar tokens (no BOS/EOS framing)."""
+    cur = dom.offset + rng.next_range(dom.size) if start is None else start
+    out = []
+    for _ in range(length):
+        out.append(cur)
+        cur = next_token(cur, dom, rng, style)
+    return out
+
+
+def gen_document(dom: Domain, rng: SplitMix64, min_len: int = 16, max_len: int = 96, style: str = BASE) -> list[int]:
+    """BOS + grammar tokens + stochastic EOS — a training document."""
+    toks = [BOS]
+    cur = dom.offset + rng.next_range(dom.size)
+    for i in range(max_len - 2):
+        toks.append(cur)
+        if i >= min_len and rng.next_f64() < dom.p_eos:
+            break
+        cur = next_token(cur, dom, rng, style)
+    toks.append(EOS)
+    return toks
+
+
+def gen_prompt(dom: Domain, rng: SplitMix64) -> list[int]:
+    """BOS + a prompt-length grammar prefix — a serving request prompt."""
+    lo, hi = dom.prompt_len
+    n = lo + rng.next_range(hi - lo)
+    return [BOS] + gen_tokens(dom, rng, n)
+
+
+# Base-model pretraining mixture: mostly general, a light taste of every
+# task domain (the paper's generic pretraining corpus).
+BASE_MIX: list[tuple[str, float]] = [
+    ("general", 0.58),
+    ("gsm8k", 0.07),
+    ("humaneval", 0.07),
+    ("mtbench", 0.07),
+    ("nq", 0.07),
+    ("wmt14", 0.07),
+    ("cnndm", 0.07),
+]
+
+
+def pick_domain(rng: SplitMix64, mix: list[tuple[str, float]]) -> Domain:
+    r = rng.next_f64()
+    acc = 0.0
+    for name, w in mix:
+        acc += w
+        if r < acc:
+            return DOMAINS[name]
+    return DOMAINS[mix[-1][0]]
+
+
+# Distillation mixture: the "broad generic corpus" (RedPajama stand-in) —
+# uniform-ish domain coverage so the one-time draft alignment sees every
+# task family the way a web-scale corpus would.
+DISTILL_MIX: list[tuple[str, float]] = [
+    ("general", 0.30),
+    ("gsm8k", 0.1167),
+    ("humaneval", 0.1167),
+    ("mtbench", 0.1167),
+    ("nq", 0.1167),
+    ("wmt14", 0.1167),
+    ("cnndm", 0.1165),
+]
+
+
+def training_batch(rng: SplitMix64, batch: int, seqlen: int, mix=None, domain: str | None = None, style: str = BASE):
+    """[batch, seqlen] int32 array of packed documents (PAD-filled tails).
+
+    `style=EVOLVED` generates the fine-tuning corpus of an *updated* cloud
+    target; `style=FOREIGN` the off-provider corpus of the generic draft."""
+    import numpy as np
+
+    out = np.zeros((batch, seqlen), dtype=np.int32)
+    for b in range(batch):
+        dom = DOMAINS[domain] if domain else pick_domain(rng, mix or BASE_MIX)
+        row: list[int] = []
+        while len(row) < seqlen:
+            row.extend(gen_document(dom, rng, min_len=12, max_len=seqlen, style=style))
+        out[b] = row[:seqlen]
+    return out

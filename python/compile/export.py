@@ -1,0 +1,73 @@
+"""Weight-bundle export: the FSWB1 flat binary format + manifest.json.
+
+No serde/npz on the rust side, so the bundle format is deliberately
+trivial (little-endian throughout):
+
+    magic   8 bytes  b"FSWB1\\0\\0\\0"
+    u32     n_tensors
+    repeat n_tensors times (tensors sorted by name):
+      u32   name_len, then name bytes (utf-8)
+      u32   dtype     (0 = f32, 1 = i32)
+      u32   ndim, then u32 dims[ndim]
+      u64   byte_len, then raw data
+
+rust/src/runtime/weights.rs is the matching reader; both sides pin the
+same golden file in tests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+
+import numpy as np
+
+MAGIC = b"FSWB1\x00\x00\x00"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_bundle(path: str, tensors: dict) -> None:
+    """Write {name: array} to an FSWB1 file (sorted by name)."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(np.asarray(tensors[name]))
+            if arr.dtype not in DTYPES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", DTYPES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_bundle(path: str) -> dict:
+    """Read an FSWB1 file back into {name: np.ndarray} (round-trip test)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode("utf-8")
+            (dt,) = struct.unpack("<I", f.read(4))
+            (nd,) = struct.unpack("<I", f.read(4))
+            shape = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+            (nb,) = struct.unpack("<Q", f.read(8))
+            dtype = {0: np.float32, 1: np.int32}[dt]
+            out[name] = np.frombuffer(f.read(nb), dtype=dtype).reshape(shape)
+    return out
+
+
+def write_manifest(path: str, manifest: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: blocked causal flash-attention with absolute-position
+masking, used by every transformer layer in the L2 model.
+
+Hardware adaptation (paper targets CUDA threadblocks / tensor cores):
+  * the threadblock tiling of FlashAttention becomes a BlockSpec HBM→VMEM
+    schedule — one (head, q-tile) grid cell streams KV tiles of shape
+    [block_k, d_head] through VMEM;
+  * the warp-synchronous online softmax becomes a fori_loop-carried
+    (m, l, acc) triple living in VMEM registers;
+  * WMMA matmuls become MXU-shaped jnp.dot with f32 accumulation.
+
+The kernel MUST be lowered with interpret=True: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Correctness is
+checked against ref.attention_ref by python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = ref.NEG_INF
+
+
+def _attn_kernel(pos_ref, valid_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One grid cell = one attention head over the whole query tile.
+
+    q_ref: [q_len, d_head] — the query tile for this head.
+    k_ref/v_ref: [kv_len, d_head] — the full KV buffer for this head.
+    pos_ref/valid_ref: [1] int32 — absolute position of query row 0 and the
+      number of valid KV rows (kv_valid_len).
+    """
+    q = q_ref[...].astype(jnp.float32)
+    q_len, d_head = q.shape
+    kv_len = k_ref.shape[0]
+    pos = pos_ref[0]
+    kv_valid = valid_ref[0]
+    n_tiles = kv_len // block_k
+
+    q_abs = pos + jax.lax.iota(jnp.int32, q_len)  # [q_len]
+
+    def body(t, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = t * block_k
+        k_tile = jax.lax.dynamic_slice(k_ref[...], (start, 0), (block_k, d_head)).astype(jnp.float32)
+        v_tile = jax.lax.dynamic_slice(v_ref[...], (start, 0), (block_k, d_head)).astype(jnp.float32)
+        # [q_len, block_k] scores on the MXU, f32 accumulation
+        s = jax.lax.dot_general(
+            q, k_tile, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        k_abs = start + jax.lax.iota(jnp.int32, block_k)  # [block_k]
+        mask = (k_abs[None, :] <= q_abs[:, None]) & (k_abs[None, :] < kv_valid)
+        s = jnp.where(mask, s, NEG_INF)
+        # online softmax update
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_new = acc_prev * alpha[:, None] + jax.lax.dot_general(
+            p, v_tile, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((q_len,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_len,), jnp.float32)
+    acc0 = jnp.zeros((q_len, d_head), jnp.float32)
+    # PERF (EXPERIMENTS.md §Perf L1-1): unroll the KV-tile loop for small
+    # tile counts — the xla_extension 0.5.1 CPU runtime executes HLO while
+    # loops with heavy per-iteration dispatch and cannot fuse across them;
+    # straight-line tiles fuse into one kernel. fori_loop remains for long
+    # contexts where unrolling would bloat the module.
+    if n_tiles <= 8:
+        carry = (m0, l0, acc0)
+        for t in range(n_tiles):
+            carry = body(t, carry)
+        m, l, acc = carry
+    else:
+        m, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def attention(q, k, v, q_pos, kv_valid_len, *, block_k: int = 64, scale: float | None = None):
+    """Pallas flash-attention. Same contract as ref.attention_ref.
+
+    q: [n_heads, q_len, d_head]; k, v: [n_heads, kv_len, d_head];
+    q_pos, kv_valid_len: scalar int32 (absolute positions, see ref).
+    """
+    n_heads, q_len, d_head = q.shape
+    kv_len = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d_head**0.5)
+    block_k = min(block_k, kv_len)
+    assert kv_len % block_k == 0, (kv_len, block_k)
+    pos = jnp.reshape(q_pos.astype(jnp.int32), (1,))
+    valid = jnp.reshape(kv_valid_len.astype(jnp.int32), (1,))
+
+    kernel = functools.partial(_attn_kernel, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h: (0,)),
+            pl.BlockSpec((1,), lambda h: (0,)),
+            pl.BlockSpec((None, q_len, d_head), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, kv_len, d_head), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, kv_len, d_head), lambda h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, q_len, d_head), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, q_len, d_head), q.dtype),
+        interpret=True,
+    )(pos, valid, q, k, v)

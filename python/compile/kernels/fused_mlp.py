@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: fused SwiGLU MLP tile.
+
+Computes (silu(x@Wg) * (x@Wu)) @ Wd without materialising the [tokens,
+d_ff] intermediates in HBM: one grid cell per token tile keeps the gate/up
+activations in VMEM scratch. On TPU this is the classic MLP fusion the MXU
+wants — two [tile, d_model]x[d_model, d_ff] matmuls feeding an elementwise
+VPU epilogue and one [tile, d_ff]x[d_ff, d_model] matmul, all f32
+accumulation. interpret=True for CPU PJRT execution (see attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # [tile, d_model]
+    wg = wg_ref[...].astype(jnp.float32)
+    wu = wu_ref[...].astype(jnp.float32)
+    wd = wd_ref[...].astype(jnp.float32)
+    g = jax.lax.dot_general(x, wg, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wu, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    act = g * (1.0 / (1.0 + jnp.exp(-g))) * u
+    o = jax.lax.dot_general(act, wd, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down, *, tile: int = 64):
+    """Fused SwiGLU MLP; same contract as ref.swiglu_ref.
+
+    x: [tokens, d_model]; w_gate/w_up: [d_model, d_ff]; w_down: [d_ff, d_model].
+    """
+    tokens, d_model = x.shape
+    d_ff = w_gate.shape[1]
+    tile = min(tile, tokens)
+    assert tokens % tile == 0, (tokens, tile)
+    grid = (tokens // tile,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d_model), lambda i: (i, 0)),
+            pl.BlockSpec((d_model, d_ff), lambda i: (0, 0)),
+            pl.BlockSpec((d_model, d_ff), lambda i: (0, 0)),
+            pl.BlockSpec((d_ff, d_model), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, d_model), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tokens, d_model), x.dtype),
+        interpret=True,
+    )(x, w_gate, w_up, w_down)

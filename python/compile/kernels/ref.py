@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference implementation here written in
+straight-line jax.numpy. The pytest suite sweeps shapes/dtypes with
+hypothesis and asserts allclose between kernel and oracle; the L2 model
+calls the kernels, the tests call both.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, q_pos, kv_valid_len, scale=None):
+    """Causal attention with absolute-position masking.
+
+    Args:
+      q: [n_heads, q_len, d_head] queries for a block of new tokens.
+      k: [n_heads, kv_len, d_head] keys (full cache buffer, stale tail ok).
+      v: [n_heads, kv_len, d_head] values.
+      q_pos: scalar int32 — absolute position of the first query row.
+      kv_valid_len: scalar int32 — query row r (absolute position
+        q_pos + r) may attend keys at buffer index j iff j <= q_pos + r and
+        j < kv_valid_len (the cache stores key for position j at index j).
+    Returns:
+      [n_heads, q_len, d_head] attention outputs.
+    """
+    h, ql, d = q.shape
+    kv_len = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    kpos = jnp.arange(kv_len)[None, :]  # [1, kv]
+    qabs = q_pos + jnp.arange(ql)[:, None]  # [q, 1]
+    mask = (kpos <= qabs) & (kpos < kv_valid_len)  # [q, kv]
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def verify_ref(logits, draft, n_draft):
+    """Greedy speculative verification (paper Algorithm 2, step 2).
+
+    Row j of `logits` is the target's next-token distribution after
+    consuming draft token j-1 (row 0: after the last committed token).
+    Draft token j (0-based) is accepted iff it equals argmax(logits[j]) and
+    all earlier draft tokens were accepted. The correction token is
+    argmax(logits[tau]).
+
+    Args:
+      logits: [block, vocab] float logits (block >= n_draft + 1).
+      draft:  [block - 1] int32 draft token ids (only first n_draft valid).
+      n_draft: scalar int32 — number of proposed draft tokens (may be 0).
+    Returns:
+      (tau, correction): accepted prefix length and the bonus token.
+    """
+    block = logits.shape[0]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [block]
+    idx = jnp.arange(block - 1)
+    ok = (greedy[:-1] == draft) & (idx < n_draft)
+    prefix = jnp.cumprod(ok.astype(jnp.int32))
+    tau = jnp.minimum(prefix.sum().astype(jnp.int32), n_draft.astype(jnp.int32))
+    correction = greedy[tau]
+    return tau, correction
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: (silu(x@Wg) * (x@Wu)) @ Wd.
+
+    x: [tokens, d_model]; w_gate/w_up: [d_model, d_ff]; w_down: [d_ff, d_model].
+    """
+    g = x @ w_gate
+    u = x @ w_up
+    act = g * (1.0 / (1.0 + jnp.exp(-g))) * u  # silu(g) * u
+    return act @ w_down
+
+
+def softmax_temp_ref(logits, temperature):
+    """Temperature softmax over the last axis (used by the sampling path)."""
+    z = logits / temperature
+    z = z - z.max(axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def sample_verify_ref(logits, draft_probs, draft, n_draft, uniforms, temperature=1.0):
+    """Stochastic speculative verification (Leviathan-style acceptance).
+
+    Token j accepted with prob min(1, p_t(x_j)/p_d(x_j)); on the first
+    rejection the correction token is the argmax of the residual
+    max(p_t - p_d, 0) (deterministic residual pick keeps the rust side
+    bit-reproducible). If every proposal is accepted, the bonus token is
+    the argmax of p_t at the next position — sampling noise enters through
+    the accept tests only.
+
+    Args:
+      logits: [block, vocab] target logits.
+      draft_probs: [block-1, vocab] draft distribution for each proposal.
+      draft: [block-1] int32 proposed ids.
+      n_draft: scalar int32.
+      uniforms: [block-1] pre-drawn U(0,1) accept tests.
+    Returns (tau, correction).
+    """
+    block, vocab = logits.shape
+    pt = softmax_temp_ref(logits, jnp.asarray(temperature, logits.dtype))
+    idx = jnp.arange(block - 1)
+    p_t_j = pt[idx, draft]  # [block-1]
+    p_d_j = draft_probs[idx, draft]
+    ratio = p_t_j / jnp.maximum(p_d_j, 1e-20)
+    ok = (uniforms < jnp.minimum(1.0, ratio)) & (idx < n_draft)
+    prefix = jnp.cumprod(ok.astype(jnp.int32))
+    tau = jnp.minimum(prefix.sum().astype(jnp.int32), n_draft.astype(jnp.int32))
+    resid = jnp.maximum(
+        pt[tau]
+        - jnp.where(tau < n_draft, draft_probs[jnp.minimum(tau, block - 2)], 0.0),
+        0.0,
+    )
+    dist = jnp.where(tau < n_draft, resid, pt[tau])
+    correction = jnp.argmax(dist).astype(jnp.int32)
+    return tau, correction

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: fused greedy speculative verification.
+
+Given the target model's logits over a draft block and the proposed draft
+token ids, compute in a single VMEM-resident pass:
+
+  * the greedy (argmax) token per row,
+  * the accepted prefix length tau (Algorithm 2, step 2 of the paper),
+  * the correction/bonus token argmax(logits[tau]).
+
+On real hardware this fuses what would otherwise be a [block, vocab]
+argmax launch + host-side prefix scan + a second gather launch; the whole
+tile (block <= 9, vocab <= 2048) fits comfortably in VMEM (9*2048*4 =
+72 KiB), so a single grid cell handles it. Lowered with interpret=True for
+CPU PJRT (see attention.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _verify_kernel(logits_ref, draft_ref, n_ref, tau_ref, corr_ref, greedy_ref):
+    logits = logits_ref[...]  # [block, vocab]
+    block = logits.shape[0]
+    draft = draft_ref[...]  # [block - 1]
+    n_draft = n_ref[0]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [block]
+    idx = jax.lax.iota(jnp.int32, block - 1)
+    ok = (greedy[:-1] == draft) & (idx < n_draft)
+    prefix = jnp.cumprod(ok.astype(jnp.int32))
+    tau = jnp.minimum(jnp.sum(prefix).astype(jnp.int32), n_draft)
+    tau_ref[0] = tau
+    corr_ref[0] = greedy[tau]
+    greedy_ref[...] = greedy
+
+
+def verify(logits, draft, n_draft):
+    """Fused verification; same contract as ref.verify_ref but additionally
+    returns the per-row greedy tokens (used by the cloud engine to seed the
+    next round and by the stochastic path as the T=0 special case).
+
+    logits: [block, vocab] f32; draft: [block-1] i32; n_draft: [] or [1] i32.
+    Returns (tau [1] i32, correction [1] i32, greedy [block] i32).
+    """
+    block, vocab = logits.shape
+    n = jnp.reshape(n_draft.astype(jnp.int32), (1,))
+    return pl.pallas_call(
+        _verify_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((block,), jnp.int32),
+        ),
+        interpret=True,
+    )(logits, draft, n)

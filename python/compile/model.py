@@ -1,0 +1,262 @@
+"""L2: the JAX transformer family (targets + drafts) that FlexSpec serves.
+
+Two forward paths share the same parameters:
+
+  * `forward_block` — the serving path lowered to HLO by aot.py and driven
+    from rust through PJRT. Single sequence, fixed token block with a
+    valid-length mask, persistent KV cache passed in/out as one array so
+    the rust coordinator can do position-pointer rollback (paper §IV-C).
+    Calls the L1 Pallas kernels (attention, fused SwiGLU).
+  * `forward_train` — the training path: full-sequence causal forward over
+    a batch in pure jnp (fast on CPU), used by train.py for base training,
+    LoRA fine-tuning and Algorithm 1 draft distillation.
+
+Both paths are asserted equal (up to kernel tolerance) by
+python/tests/test_model.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import attention as attn_k
+from .kernels import fused_mlp as mlp_k
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jnp.ndarray]:
+    """Scaled-normal init for every parameter in cfg.param_spec()."""
+    params: dict[str, jnp.ndarray] = {}
+    for name, shape in cfg.param_spec():
+        key, sub = jax.random.split(key)
+        if name.endswith((".ln1", ".ln2")) or name == "ln_f":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith((".b1", ".b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 1.0 / max(fan_in, 1) ** 0.5
+            params[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def init_lora(cfg: ModelConfig, key: jax.Array, zero: bool = False) -> dict[str, jnp.ndarray]:
+    """LoRA adapters; A ~ normal, B = 0 at init (standard LoRA init)."""
+    lora: dict[str, jnp.ndarray] = {}
+    for name, shape in cfg.lora_spec():
+        key, sub = jax.random.split(key)
+        if zero or name.split(".")[-1].startswith("B"):
+            lora[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            lora[name] = jax.random.normal(sub, shape, jnp.float32) / shape[0] ** 0.5
+    return lora
+
+
+def empty_kv(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.zeros(cfg.kv_shape(), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    return x * g / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, base: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding. x: [..., seq, d_head]; positions: [seq] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [seq, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+LORA_SCALE = 2.0  # alpha / r with alpha = 2r
+
+
+def _proj(h, params, lora, layer: int, which: str, cfg: ModelConfig):
+    """Linear projection with optional LoRA delta (layers < lora_layers)."""
+    w = params[f"L{layer}.w{which}"]
+    y = h @ w
+    if lora is not None and which in ("q", "v", "o") and layer < cfg.lora_layers:
+        a = lora[f"L{layer}.A{which}"]
+        b = lora[f"L{layer}.B{which}"]
+        y = y + ((h @ a) @ b) * LORA_SCALE
+    return y
+
+
+def _mlp_block(h2, params, layer: int, cfg: ModelConfig, use_kernels: bool):
+    """Dense SwiGLU or top-k MoE MLP over [tokens, d_model]."""
+    p = f"L{layer}"
+    swiglu = mlp_k.swiglu if use_kernels else kref.swiglu_ref
+    if not cfg.n_experts:
+        return swiglu(h2, params[f"{p}.wg"], params[f"{p}.wu"], params[f"{p}.wd"])
+    # MoE: dense-compute every expert, weight by renormalised top-k gate.
+    # NOTE: jax.lax.top_k lowers to an HLO `topk(...)` op whose text syntax
+    # the xla_extension 0.5.1 parser rejects; a k-step max reduction
+    # produces the same threshold with parser-compatible ops.
+    gate_logits = h2 @ params[f"{p}.gate"]  # [tokens, E]
+    remaining = gate_logits
+    thresh = None
+    for _ in range(cfg.top_k):
+        cur = jnp.max(remaining, axis=-1, keepdims=True)
+        thresh = cur
+        remaining = jnp.where(remaining >= cur, kref.NEG_INF, remaining)
+    masked = jnp.where(gate_logits >= thresh, gate_logits, kref.NEG_INF)
+    gates = jax.nn.softmax(masked, axis=-1)  # [tokens, E]
+    out = jnp.zeros_like(h2)
+    for e in range(cfg.n_experts):
+        y = swiglu(h2, params[f"{p}.E{e}.wg"], params[f"{p}.E{e}.wu"], params[f"{p}.E{e}.wd"])
+        out = out + gates[:, e : e + 1] * y
+    return out
+
+
+def _head_mlp(x, params):
+    """H_small (paper eq. 4): trainable 2-layer MLP on top of the frozen
+    anchor block; returns the draft hidden state h_d."""
+    h = jax.nn.gelu(x @ params["head.w1"] + params["head.b1"])
+    return x + (h @ params["head.w2"] + params["head.b2"])
+
+
+# ---------------------------------------------------------------------------
+# Serving path (lowered to HLO)
+# ---------------------------------------------------------------------------
+
+
+def forward_block(
+    cfg: ModelConfig,
+    params: dict[str, jnp.ndarray],
+    lora: dict[str, jnp.ndarray] | None,
+    tokens: jnp.ndarray,  # [B] int32
+    pos: jnp.ndarray,  # [1] int32 — absolute position of tokens[0]
+    valid: jnp.ndarray,  # [1] int32 — number of real tokens in the block
+    kv: jnp.ndarray,  # cfg.kv_shape() f32
+    use_kernels: bool = True,
+):
+    """One verification/draft block forward with KV-cache update.
+
+    Rows >= valid are padding: they write KV slots that the absolute-
+    position mask (kv_valid = pos + valid) prevents anyone from attending,
+    and that the next round provably overwrites (DESIGN.md). Returns
+    (logits [B, vocab], kv_out).
+    """
+    b = tokens.shape[0]
+    pos_s = pos.reshape(())
+    valid_s = valid.reshape(())
+    positions = pos_s + jnp.arange(b, dtype=jnp.int32)
+    x = params["embed"][tokens]  # [B, d]
+    attend = attn_k.attention if use_kernels else kref.attention_ref
+
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"L{i}.ln1"])
+        q = _proj(h, params, lora, i, "q", cfg)
+        k = _proj(h, params, lora, i, "k", cfg)
+        v = _proj(h, params, lora, i, "v", cfg)
+        # [B, d] -> [H, B, dh]
+        q = q.reshape(b, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+        k = k.reshape(b, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+        v = v.reshape(b, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        kv = jax.lax.dynamic_update_slice(kv, k[None, None], (i, 0, 0, pos_s, 0))
+        kv = jax.lax.dynamic_update_slice(kv, v[None, None], (i, 1, 0, pos_s, 0))
+        o = attend(q, kv[i, 0], kv[i, 1], pos_s, pos_s + valid_s)  # [H, B, dh]
+        o = o.transpose(1, 0, 2).reshape(b, cfg.d_model)
+        x = x + _proj(o, params, lora, i, "o", cfg)
+        h2 = rmsnorm(x, params[f"L{i}.ln2"])
+        x = x + _mlp_block(h2, params, i, cfg, use_kernels)
+
+    if cfg.draft_head:
+        x = _head_mlp(x, params)
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return logits, kv
+
+
+# ---------------------------------------------------------------------------
+# Training path (full-sequence, batched, pure jnp)
+# ---------------------------------------------------------------------------
+
+
+def forward_train(
+    cfg: ModelConfig,
+    params: dict[str, jnp.ndarray],
+    lora: dict[str, jnp.ndarray] | None,
+    tokens: jnp.ndarray,  # [batch, T] int32
+):
+    """Batched causal forward (no cache). Returns (logits [B,T,V],
+    hidden [B,T,d] — the pre-ln_f hidden used as h_t / h_d in Algorithm 1)."""
+    bsz, t = tokens.shape
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = params["embed"][tokens]  # [B, T, d]
+    causal = jnp.tril(jnp.ones((t, t), bool))
+
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"L{i}.ln1"])
+        q = _proj(h, params, lora, i, "q", cfg)
+        k = _proj(h, params, lora, i, "k", cfg)
+        v = _proj(h, params, lora, i, "v", cfg)
+        q = q.reshape(bsz, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        k = k.reshape(bsz, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        v = v.reshape(bsz, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / cfg.d_head**0.5
+        s = jnp.where(causal[None, None], s, kref.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+        o = o.transpose(0, 2, 1, 3).reshape(bsz, t, cfg.d_model)
+        x = x + _proj(o, params, lora, i, "o", cfg)
+        h2 = rmsnorm(x, params[f"L{i}.ln2"])
+        flat = h2.reshape(bsz * t, cfg.d_model)
+        x = x + _mlp_block(flat, params, i, cfg, use_kernels=False).reshape(bsz, t, cfg.d_model)
+
+    if cfg.draft_head:
+        x = _head_mlp(x, params)
+    hidden = x
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return logits, hidden
+
+
+# ---------------------------------------------------------------------------
+# Anchor transplant (paper Algorithm 1, step 1)
+# ---------------------------------------------------------------------------
+
+# Frozen pieces of the edge draft (paper eq. 4): the input embedding and
+# the transplanted anchor block. H_small — the 2-layer MLP *and* its
+# vocabulary projection (lm_head) + final norm — is trainable.
+FROZEN_DRAFT_PARAMS = ("embed", "L0.")
+
+
+def transplant_anchor(
+    target_params: dict[str, jnp.ndarray],
+    target_cfg: ModelConfig,
+    draft_params: dict[str, jnp.ndarray],
+) -> dict[str, jnp.ndarray]:
+    """Copy the frozen pieces of the base target into a draft param dict:
+    embedding, the anchor block (target layer L-1 -> draft layer 0), ln_f
+    and the LM head. Everything else (H_small) stays trainable."""
+    out = dict(draft_params)
+    last = target_cfg.n_layers - 1
+    for name, val in target_params.items():
+        if name in ("embed", "ln_f", "lm_head"):
+            out[name] = val
+        elif name.startswith(f"L{last}."):
+            out["L0." + name.split(".", 1)[1]] = val
+    return out
+
+
+def is_frozen_draft_param(name: str) -> bool:
+    return name.startswith(FROZEN_DRAFT_PARAMS)

@@ -1,0 +1,305 @@
+"""Offline training pipeline (build-time only; never on the request path).
+
+Produces every weight bundle the rust coordinator serves:
+
+  * base targets        — pretrained on the BASE_MIX corpus (CE loss);
+  * LoRA domain targets — the paper's evolving cloud versions: adapters on
+    layers 1..L-1 only (backbone-freezing constraint, §IV-A), trained on a
+    single domain grammar;
+  * full-FT target      — the paper's "Code (Full)" version from Table II,
+    which violates the anchor invariant on purpose;
+  * FlexSpec draft      — Algorithm 1: frozen anchor transplant + H_small
+    distilled against the *base* target with L = l1*L_feat + l2*L_KD;
+  * synced drafts       — the EAGLE-2/Medusa "(Ideal Synced)" stand-ins:
+    the same draft architecture re-distilled against each evolved target;
+  * generic draft       — Std-SD baseline: an independent small LM trained
+    with plain CE on the general grammar only.
+
+Everything is deterministic given the seed. A tiny hand-rolled Adam is
+used (optax is not available in this environment).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+from .configs import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled, pytree-valued)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, state, params, lr, b1=0.9, b2=0.99, eps=1e-8, wd=0.0):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    bc1, bc2 = 1 - b1**tf, 1 - b2**tf
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * ((m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + wd * p),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, steps, peak, warmup=20):
+    w = jnp.minimum(step / warmup, 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(steps - warmup, 1), 0.0, 1.0)
+    return peak * w * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def ce_loss(cfg: ModelConfig, params, lora, tokens):
+    """Next-token cross entropy, PAD-masked."""
+    logits, _ = model.forward_train(cfg, params, lora, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != corpus.PAD).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def distill_loss(
+    draft_cfg: ModelConfig,
+    trainable,
+    frozen,
+    wp,
+    teacher_cfg: ModelConfig,
+    teacher_params,
+    teacher_lora,
+    tokens,
+    l_feat: float = 0.1,
+    l_kd: float = 1.0,
+    temp: float = 1.0,
+):
+    """Algorithm 1 multi-objective loss: L = l1*L_feat + l2*L_KD.
+
+    L_feat aligns W_p @ h_d with the teacher hidden h_t (paper eq. 5);
+    L_KD is temperature-softened KL(teacher || student) (paper eq. 6).
+    """
+    params = {**frozen, **trainable}
+    z_d, h_d = model.forward_train(draft_cfg, params, None, tokens)
+    z_t, h_t = model.forward_train(teacher_cfg, teacher_params, teacher_lora, tokens)
+    z_t = jax.lax.stop_gradient(z_t)
+    h_t = jax.lax.stop_gradient(h_t)
+    mask = (tokens != corpus.PAD).astype(jnp.float32)[..., None]
+
+    proj = h_d @ wp
+    feat = jnp.sum(((proj - h_t) ** 2) * mask) / jnp.maximum(mask.sum() * h_t.shape[-1], 1.0)
+
+    pt = jax.nn.softmax(z_t / temp, axis=-1)
+    logq = jax.nn.log_softmax(z_d / temp, axis=-1)
+    logp = jax.nn.log_softmax(z_t / temp, axis=-1)
+    kl = (pt * (logp - logq)).sum(-1, keepdims=True)
+    kd = (temp**2) * jnp.sum(kl * mask) / jnp.maximum(mask.sum(), 1.0)
+    return l_feat * feat + l_kd * kd
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------------
+
+BATCH = 24
+SEQLEN = 64
+
+
+def _batches(seed: int, steps: int, batch=BATCH, seqlen=SEQLEN, mix=None, domain=None, style=corpus.BASE):
+    rng = corpus.SplitMix64(seed)
+    for _ in range(steps):
+        yield jnp.asarray(corpus.training_batch(rng, batch, seqlen, mix=mix, domain=domain, style=style))
+
+
+def train_base(cfg: ModelConfig, seed: int = 1, steps: int = 350, lr: float = 3e-3, log=print):
+    """Pretrain a base target on the general mixture."""
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    lora_zero = model.init_lora(cfg, jax.random.PRNGKey(seed), zero=True)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, tokens, lr_now):
+        loss, grads = jax.value_and_grad(lambda p: ce_loss(cfg, p, lora_zero, tokens))(params)
+        params, opt = adam_update(grads, opt, params, lr_now)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i, tokens in enumerate(_batches(seed * 7919 + 13, steps)):
+        params, opt, loss = step(params, opt, tokens, cosine_lr(i, steps, lr))
+        if i % 50 == 0 or i == steps - 1:
+            log(f"[base {cfg.name}] step {i:4d} loss {float(loss):.4f} ({time.time()-t0:.0f}s)")
+    return params
+
+
+def train_lora(cfg: ModelConfig, base_params, domain: str, seed: int = 2, steps: int = 200, lr: float = 5e-3, log=print):
+    """PEFT evolution of the cloud target: adapters only, one domain."""
+    lora = model.init_lora(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(lora)
+
+    @jax.jit
+    def step(lora, opt, tokens, lr_now):
+        loss, grads = jax.value_and_grad(lambda l: ce_loss(cfg, base_params, l, tokens))(lora)
+        lora, opt = adam_update(grads, opt, lora, lr_now)
+        return lora, opt, loss
+
+    for i, tokens in enumerate(_batches(seed * 104729 + 29, steps, domain=domain, style=corpus.EVOLVED)):
+        lora, opt, loss = step(lora, opt, tokens, cosine_lr(i, steps, lr))
+        if i % 50 == 0 or i == steps - 1:
+            log(f"[lora {cfg.name}/{domain}] step {i:4d} loss {float(loss):.4f}")
+    return lora
+
+
+def train_full(cfg: ModelConfig, base_params, domain: str, seed: int = 3, steps: int = 300, lr: float = 2e-3, log=print):
+    """Full-parameter fine-tuning (Table II 'Code (Full)'): every weight
+    moves, breaking the anchor invariant on purpose."""
+    params = base_params
+    lora_zero = model.init_lora(cfg, jax.random.PRNGKey(seed), zero=True)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, tokens, lr_now):
+        loss, grads = jax.value_and_grad(lambda p: ce_loss(cfg, p, lora_zero, tokens))(params)
+        params, opt = adam_update(grads, opt, params, lr_now)
+        return params, opt, loss
+
+    for i, tokens in enumerate(_batches(seed * 15485863 + 31, steps, domain=domain, style=corpus.FULL_SHIFT)):
+        params, opt, loss = step(params, opt, tokens, cosine_lr(i, steps, lr))
+        if i % 50 == 0 or i == steps - 1:
+            log(f"[full {cfg.name}/{domain}] step {i:4d} loss {float(loss):.4f}")
+    return params
+
+
+def distill_draft(
+    draft_cfg: ModelConfig,
+    teacher_cfg: ModelConfig,
+    teacher_params,
+    teacher_lora=None,
+    seed: int = 4,
+    steps: int = 500,
+    lr: float = 2e-3,
+    mix=None,
+    domain: str | None = None,
+    style: str = corpus.BASE,
+    log=print,
+):
+    """Algorithm 1: one-time offline distillation of the draft head.
+
+    FlexSpec's own draft is distilled ONCE against the *base* teacher on
+    the general mixture (domain=None). The EAGLE-2/Medusa "(Ideal Synced)"
+    stand-ins re-run this per evolved target with domain/evolved set —
+    that re-distillation is exactly the sync cost FlexSpec avoids.
+
+    Returns (params, wp): full draft params (frozen transplant + trained
+    H_small) and the feature-regression projection W_p (training-only)."""
+    params = model.init_params(draft_cfg, jax.random.PRNGKey(seed))
+    params = model.transplant_anchor(teacher_params, teacher_cfg, params)
+    trainable = {k: v for k, v in params.items() if not model.is_frozen_draft_param(k)}
+    frozen = {k: v for k, v in params.items() if model.is_frozen_draft_param(k)}
+    wp = jnp.eye(draft_cfg.d_model, dtype=jnp.float32)
+    state = {"p": trainable, "wp": wp}
+    opt = adam_init(state)
+
+    @jax.jit
+    def step(state, opt, tokens, lr_now):
+        def loss_fn(s):
+            return distill_loss(
+                draft_cfg, s["p"], frozen, s["wp"],
+                teacher_cfg, teacher_params, teacher_lora, tokens,
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(state)
+        state, opt = adam_update(grads, opt, state, lr_now)
+        return state, opt, loss
+
+    for i, tokens in enumerate(
+        _batches(seed * 179424673 + 37, steps, mix=mix or corpus.DISTILL_MIX, domain=domain, style=style)
+    ):
+        state, opt, loss = step(state, opt, tokens, cosine_lr(i, steps, lr))
+        if i % 50 == 0 or i == steps - 1:
+            log(f"[distill {draft_cfg.name}<-{teacher_cfg.name}] step {i:4d} loss {float(loss):.4f}")
+    return {**frozen, **state["p"]}, state["wp"]
+
+
+def train_generic(cfg: ModelConfig, seed: int = 5, steps: int = 150, lr: float = 3e-3, log=print):
+    """Std-SD baseline draft: brief plain-CE pretraining with no alignment
+    to any target — the paper's off-the-shelf generic 7B draft."""
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, tokens, lr_now):
+        loss, grads = jax.value_and_grad(lambda p: ce_loss(cfg, p, None, tokens))(params)
+        params, opt = adam_update(grads, opt, params, lr_now)
+        return params, opt, loss
+
+    # an off-the-shelf small LM: decent on general text, shallow on the
+    # task domains (it was never trained on the provider's corpora) —
+    # foreign data distribution + thin domain exposure.
+    gen_mix = [("general", 0.76)] + [(d, 0.04) for d, _ in corpus.BASE_MIX[1:]]
+    for i, tokens in enumerate(_batches(seed * 32452843 + 41, steps, mix=gen_mix, style=corpus.FOREIGN)):
+        params, opt, loss = step(params, opt, tokens, cosine_lr(i, steps, lr))
+        if i % 50 == 0 or i == steps - 1:
+            log(f"[generic {cfg.name}] step {i:4d} loss {float(loss):.4f}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Acceptance-rate evaluation (used for calibration + tests, mirrors the
+# rust round loop at the distribution level)
+# ---------------------------------------------------------------------------
+
+
+def acceptance_rate(
+    target_cfg: ModelConfig,
+    target_params,
+    target_lora,
+    draft_cfg: ModelConfig,
+    draft_params,
+    domain: str,
+    n_prompts: int = 8,
+    gen_len: int = 48,
+    seed: int = 9,
+) -> float:
+    """Positionwise greedy agreement of draft vs target along the target's
+    own greedy trajectory — the steady-state token acceptance rate of
+    greedy speculative decoding."""
+    rng = corpus.SplitMix64(seed)
+    dom = corpus.DOMAINS[domain]
+    buf_len = min(target_cfg.max_seq, 192)  # fixed shape => one jit compile
+
+    @jax.jit
+    def both(tokens, last):
+        tl, _ = model.forward_train(target_cfg, target_params, target_lora, tokens)
+        dl, _ = model.forward_train(draft_cfg, draft_params, None, tokens)
+        return jnp.argmax(tl[0, last], -1), jnp.argmax(dl[0, last], -1)
+
+    agree = total = 0
+    for _ in range(n_prompts):
+        prompt = corpus.gen_prompt(dom, rng)[: SEQLEN // 2]
+        buf = np.zeros((1, buf_len), np.int32)
+        n = len(prompt)
+        buf[0, :n] = prompt
+        for _ in range(gen_len):
+            nxt, dnx = both(jnp.asarray(buf), n - 1)
+            nxt, dnx = int(nxt), int(dnx)
+            agree += int(nxt == dnx)
+            total += 1
+            if nxt == corpus.EOS or n >= buf_len:
+                break
+            buf[0, n] = nxt
+            n += 1
+    return agree / max(total, 1)

@@ -1,0 +1,52 @@
+"""AOT lowering smoke tests: HLO text is produced, parseable-looking and
+carries the expected parameter arity (argument-order contract with rust)."""
+
+import re
+
+from compile import aot, configs
+
+
+def entry_arity(text: str) -> int:
+    """Number of ENTRY parameters, from the entry_computation_layout."""
+    m = re.search(r"entry_computation_layout=\{\((.*?)\)->", text, re.S)
+    assert m, "no entry layout in HLO text"
+    body = m.group(1)
+    return len(re.findall(r"[fsu]\d+\[", body))
+
+
+def tiny():
+    return configs.ModelConfig(
+        name="tiny_aot", vocab=64, d_model=16, n_layers=2, n_heads=2,
+        d_ff=32, max_seq=128, lora_rank=2,
+    )
+
+
+def test_lower_arch_produces_hlo_text():
+    cfg = tiny()
+    text = aot.lower_arch(cfg, 4)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # parameter count: params + lora + tokens/pos/valid/kv
+    n_expected = len(cfg.param_spec()) + len(cfg.lora_spec()) + 4
+    assert entry_arity(text) == n_expected
+
+
+def test_lower_draft_arch_has_no_lora_params():
+    cfg = configs.flex_draft_config(tiny())
+    text = aot.lower_arch(cfg, 4)
+    n_expected = len(cfg.param_spec()) + 4
+    assert entry_arity(text) == n_expected
+
+
+def test_lower_verify_kernel():
+    text = aot.lower_verify(64)
+    assert "HloModule" in text
+    assert entry_arity(text) == 3  # logits, draft, n
+
+
+def test_block_and_prefill_differ_only_in_token_arity():
+    cfg = tiny()
+    b = aot.lower_arch(cfg, configs.BLOCK)
+    p = aot.lower_arch(cfg, configs.PREFILL_CHUNK)
+    assert f"s32[{configs.BLOCK}]" in b
+    assert f"s32[{configs.PREFILL_CHUNK}]" in p

@@ -1,0 +1,118 @@
+"""Corpus generator invariants + golden sequences pinned against the rust
+implementation (rust/src/workload/corpus.rs pins the same values)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus
+
+
+def test_splitmix64_golden():
+    """Golden values for seed=42 — MUST match rust util::rng tests."""
+    r = corpus.SplitMix64(42)
+    got = [r.next_u64() for _ in range(4)]
+    assert got == [
+        13679457532755275413,
+        2949826092126892291,
+        5139283748462763858,
+        6349198060258255764,
+    ], got
+
+
+def test_splitmix64_f64_range():
+    r = corpus.SplitMix64(7)
+    xs = [r.next_f64() for _ in range(1000)]
+    assert all(0.0 <= x < 1.0 for x in xs)
+    assert 0.4 < float(np.mean(xs)) < 0.6
+
+
+def test_gen_tokens_golden():
+    """Golden grammar sequence for (seed=42, gsm8k) — pinned in rust too."""
+    r = corpus.SplitMix64(42)
+    toks = corpus.gen_tokens(corpus.DOMAINS["gsm8k"], r, 12)
+    assert toks == [85, 86, 93, 78, 101, 100, 127, 124, 103, 84, 79, 108], toks
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), name=st.sampled_from(sorted(corpus.DOMAINS)))
+def test_tokens_stay_in_vocab(seed, name):
+    dom = corpus.DOMAINS[name]
+    r = corpus.SplitMix64(seed)
+    for t in corpus.gen_tokens(dom, r, 64):
+        in_domain = dom.offset <= t < dom.offset + dom.size
+        in_common = corpus.COMMON_OFFSET <= t < corpus.COMMON_OFFSET + corpus.COMMON_SIZE
+        assert in_domain or in_common
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), name=st.sampled_from(sorted(corpus.DOMAINS)))
+def test_document_framing(seed, name):
+    dom = corpus.DOMAINS[name]
+    r = corpus.SplitMix64(seed)
+    doc = corpus.gen_document(dom, r, min_len=12, max_len=64)
+    assert doc[0] == corpus.BOS and doc[-1] == corpus.EOS
+    assert len(doc) <= 64
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), name=st.sampled_from(sorted(corpus.DOMAINS)))
+def test_prompt_length_bounds(seed, name):
+    dom = corpus.DOMAINS[name]
+    r = corpus.SplitMix64(seed)
+    p = corpus.gen_prompt(dom, r)
+    assert p[0] == corpus.BOS
+    assert dom.prompt_len[0] <= len(p) - 1 < dom.prompt_len[1]
+
+
+def test_evolved_rule_differs_only_on_subset():
+    """The evolution rewrites exactly the cur % evolve_mod == mod-1
+    transitions (the Table II distribution-shift knob)."""
+    dom = corpus.DOMAINS["gsm8k"]
+    changed = 0
+    for cur in range(dom.offset, dom.offset + dom.size):
+        a = corpus.rule_next(cur, dom, corpus.BASE)
+        b = corpus.rule_next(cur, dom, corpus.EVOLVED)
+        if corpus.subset_hash(cur, dom.offset) % dom.evolve_mod == dom.evolve_mod - 1:
+            changed += a != b
+        else:
+            assert a == b, cur
+    assert changed > 0
+
+
+def test_foreign_rule_semantics():
+    # general: only the mod-4 sliver differs (web text is universal)
+    dom = corpus.DOMAINS["general"]
+    diff = 0
+    for cur in range(dom.offset, dom.offset + dom.size):
+        a = corpus.rule_next(cur, dom, corpus.BASE)
+        f = corpus.rule_next(cur, dom, corpus.FOREIGN)
+        if corpus.subset_hash(cur, 77) % 4 != 0:
+            assert a == f, cur
+        else:
+            diff += a != f
+    assert diff > 0
+    # task domains: the foreign provider differs on the odd transitions
+    g = corpus.DOMAINS["gsm8k"]
+    for c in range(g.offset, g.offset + g.size):
+        a = corpus.rule_next(c, g, corpus.BASE)
+        f = corpus.rule_next(c, g, corpus.FOREIGN)
+        if corpus.subset_hash(c, 77) % 2 == 0:
+            assert a == f, c
+
+
+def test_training_batch_shape_and_padding():
+    r = corpus.SplitMix64(3)
+    batch = corpus.training_batch(r, 4, 64, domain="wmt14")
+    assert batch.shape == (4, 64)
+    assert batch.dtype == np.int32
+    assert (batch >= 0).all() and (batch < 512).all()
+
+
+def test_base_mix_weights_sum_to_one():
+    assert abs(sum(w for _, w in corpus.BASE_MIX) - 1.0) < 1e-9
+
+
+def test_domain_ranges_disjoint_from_common():
+    for d in corpus.DOMAINS.values():
+        assert d.offset + d.size <= corpus.COMMON_OFFSET
+        assert d.offset >= 16

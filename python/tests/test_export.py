@@ -1,0 +1,50 @@
+"""FSWB1 bundle round-trip + manifest schema sanity."""
+
+import numpy as np
+
+from compile import configs, export
+
+
+def test_bundle_roundtrip(tmp_path):
+    tensors = {
+        "b.mat": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "a.vec": np.array([1, 2, 3], dtype=np.int32),
+        "scalarish": np.array([3.5], dtype=np.float32),
+    }
+    p = str(tmp_path / "w" / "t.bin")
+    export.write_bundle(p, tensors)
+    back = export.read_bundle(p)
+    assert sorted(back) == sorted(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_bundle_golden_header(tmp_path):
+    """Pin the first bytes of the format — rust reader pins the same."""
+    p = str(tmp_path / "g.bin")
+    export.write_bundle(p, {"x": np.array([1.0, 2.0], dtype=np.float32)})
+    raw = open(p, "rb").read()
+    assert raw[:8] == b"FSWB1\x00\x00\x00"
+    assert raw[8:12] == (1).to_bytes(4, "little")
+    assert raw[12:16] == (1).to_bytes(4, "little")  # name len
+    assert raw[16:17] == b"x"
+
+
+def test_param_spec_sorted_and_counts():
+    for name, cfg in configs.all_archs().items():
+        spec = cfg.param_spec()
+        names = [n for n, _ in spec]
+        assert names == sorted(names), name
+        assert cfg.n_params() == sum(configs.int_prod(s) for _, s in spec)
+        lora = cfg.lora_spec()
+        lnames = [n for n, _ in lora]
+        assert lnames == sorted(lnames)
+        if cfg.lora_rank == 0:
+            assert lora == []
+
+
+def test_kv_shape_consistency():
+    for cfg in configs.all_archs().values():
+        l, two, h, s, d = cfg.kv_shape()
+        assert (l, two, h, s, d) == (cfg.n_layers, 2, cfg.n_heads, cfg.max_seq, cfg.d_head)

@@ -1,0 +1,197 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/positions; every property asserts
+allclose (or exact equality for integer outputs) against ref.py. These
+tests are the core correctness signal for the AOT artifacts: the same
+kernel code is lowered into every .hlo.txt the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, fused_mlp, ref, verify
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_heads=st.sampled_from([1, 2, 4]),
+    q_len=st.sampled_from([1, 5, 9, 64]),
+    kv_len=st.sampled_from([64, 128, 256]),
+    d_head=st.sampled_from([16, 32]),
+    block_k=st.sampled_from([32, 64, 128]),
+)
+def test_attention_matches_ref(seed, n_heads, q_len, kv_len, d_head, block_k):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(n_heads, q_len, d_head)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(n_heads, kv_len, d_head)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n_heads, kv_len, d_head)), jnp.float32)
+    max_pos = kv_len - q_len
+    pos = jnp.asarray(int(rng.integers(0, max_pos + 1)), jnp.int32)
+    valid = jnp.asarray(int(rng.integers(1, q_len + 1)), jnp.int32)
+    got = attention.attention(q, k, v, pos, pos + valid, block_k=min(block_k, kv_len))
+    want = ref.attention_ref(q, k, v, pos, pos + valid)
+    # padded rows (>= valid) are unspecified: compare valid rows only
+    nv = int(valid)
+    np.testing.assert_allclose(got[:, :nv], want[:, :nv], rtol=2e-5, atol=2e-5)
+
+
+def test_attention_first_token():
+    """pos=0, one query, one valid key — the degenerate decode start."""
+    q = rand(0, (2, 1, 16))
+    k = rand(1, (2, 64, 16))
+    v = rand(2, (2, 64, 16))
+    got = attention.attention(q, k, v, jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32))
+    want = ref.attention_ref(q, k, v, jnp.asarray(0, jnp.int32), jnp.asarray(1, jnp.int32))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_ignores_stale_tail():
+    """Garbage beyond kv_valid_len must not leak into the output."""
+    q = rand(3, (1, 4, 16))
+    k = rand(4, (1, 64, 16))
+    v = rand(5, (1, 64, 16))
+    pos, valid = jnp.asarray(8, jnp.int32), jnp.asarray(12, jnp.int32)
+    base = attention.attention(q, k, v, pos, valid)
+    k2 = k.at[:, 12:].set(1e6)
+    v2 = v.at[:, 12:].set(-1e6)
+    poisoned = attention.attention(q, k2, v2, pos, valid)
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_softmax_rowsum():
+    """Attention output is a convex combination of valid values."""
+    q = rand(6, (2, 3, 16))
+    k = rand(7, (2, 64, 16))
+    v = jnp.ones((2, 64, 16), jnp.float32)
+    got = attention.attention(q, k, v, jnp.asarray(5, jnp.int32), jnp.asarray(8, jnp.int32))
+    np.testing.assert_allclose(got, jnp.ones_like(got), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# verify
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    vocab=st.sampled_from([64, 512, 1024]),
+    n_draft=st.integers(0, 8),
+    forced=st.integers(0, 8),
+)
+def test_verify_matches_ref(seed, vocab, n_draft, forced):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(9, vocab)), jnp.float32)
+    draft = jnp.asarray(rng.integers(0, vocab, size=(8,)), jnp.int32)
+    greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+    # force an accepted prefix of `forced` tokens
+    draft = draft.at[: min(forced, 8)].set(greedy[: min(forced, 8)])
+    n = jnp.asarray(n_draft, jnp.int32)
+    tau, corr, g = verify.verify(logits, draft, n)
+    t_ref, c_ref = ref.verify_ref(logits, draft, n)
+    assert int(tau[0]) == int(t_ref)
+    assert int(corr[0]) == int(c_ref)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(greedy))
+
+
+def test_verify_tau_bounds():
+    """tau <= n_draft always; tau == n_draft when every proposal matches."""
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(9, 128)), jnp.float32)
+    greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+    tau, corr, _ = verify.verify(logits, greedy[:8], jnp.asarray(8, jnp.int32))
+    assert int(tau[0]) == 8
+    assert int(corr[0]) == int(greedy[8])
+    tau0, corr0, _ = verify.verify(logits, greedy[:8], jnp.asarray(0, jnp.int32))
+    assert int(tau0[0]) == 0
+    assert int(corr0[0]) == int(greedy[0])
+
+
+def test_verify_reject_at_first_mismatch():
+    logits = jnp.asarray(np.random.default_rng(1).normal(size=(9, 128)), jnp.float32)
+    greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+    draft = greedy[:8]
+    draft = draft.at[3].set((greedy[3] + 1) % 128)
+    tau, corr, _ = verify.verify(logits, draft, jnp.asarray(8, jnp.int32))
+    assert int(tau[0]) == 3
+    assert int(corr[0]) == int(greedy[3])
+
+
+# ---------------------------------------------------------------------------
+# fused SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tokens=st.sampled_from([1, 8, 9, 64]),
+    d_model=st.sampled_from([32, 128]),
+    d_ff=st.sampled_from([64, 256]),
+    tile=st.sampled_from([8, 64]),
+)
+def test_swiglu_matches_ref(seed, tokens, d_model, d_ff, tile):
+    if tokens % min(tile, tokens) != 0:
+        tokens = tile  # keep divisibility; swiglu asserts it
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(tokens, d_model)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(d_model, d_ff)) * 0.1, jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(d_model, d_ff)) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.normal(size=(d_ff, d_model)) * 0.1, jnp.float32)
+    got = fused_mlp.swiglu(x, wg, wu, wd, tile=tile)
+    want = ref.swiglu_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_swiglu_zero_input():
+    x = jnp.zeros((8, 32), jnp.float32)
+    w = jnp.ones((32, 64), jnp.float32)
+    wd = jnp.ones((64, 32), jnp.float32)
+    np.testing.assert_allclose(fused_mlp.swiglu(x, w, w, wd), jnp.zeros((8, 32)), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# stochastic verification oracle self-consistency (the rust coordinator
+# re-implements this in f32; the oracle's invariants are pinned here)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), n_draft=st.integers(0, 8))
+def test_sample_verify_tau_bounds(seed, n_draft):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(9, 64)), jnp.float32)
+    dp = jax.nn.softmax(jnp.asarray(rng.normal(size=(8, 64)), jnp.float32), -1)
+    draft = jnp.asarray(rng.integers(0, 64, size=(8,)), jnp.int32)
+    u = jnp.asarray(rng.uniform(size=(8,)), jnp.float32)
+    tau, corr = ref.sample_verify_ref(logits, dp, draft, jnp.asarray(n_draft, jnp.int32), u)
+    assert 0 <= int(tau) <= n_draft
+    assert 0 <= int(corr) < 64
+
+
+def test_sample_verify_accepts_identical_distributions():
+    """If draft distribution == target distribution and u ~ 0, everything
+    is accepted (ratio == 1)."""
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(9, 32)), jnp.float32)
+    pt = jax.nn.softmax(logits[:8], -1)
+    draft = jnp.argmax(pt, -1).astype(jnp.int32)
+    u = jnp.zeros((8,), jnp.float32)
+    tau, _ = ref.sample_verify_ref(logits, pt, draft, jnp.asarray(8, jnp.int32), u)
+    assert int(tau) == 8

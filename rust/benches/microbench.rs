@@ -1,0 +1,164 @@
+//! `cargo bench --bench microbench` — hot-path microbenchmarks for the
+//! §Perf pass: the L3 coordinator pieces (policy search, codec, channel
+//! step, sampling) and the PJRT execution path (draft step, verify
+//! block, fused verify kernel, full round).
+
+use flexspec::channel::{Channel, NetworkKind, NetworkProfile};
+use flexspec::coordinator::edge::{DraftSource, ModelDraft};
+use flexspec::coordinator::policy::{AdaptivePolicy, LatencyModel};
+use flexspec::coordinator::CloudEngine;
+use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::protocol::{DraftMsg, VerifyMode, WireFormat};
+use flexspec::runtime::Registry;
+use flexspec::util::bench::{black_box, Group};
+use flexspec::util::rng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    // ---- pure-L3 paths (no artifacts needed) --------------------------
+    let mut g = Group::new("L3 coordinator hot paths").with_budget(150.0);
+
+    let mut chan = NetworkProfile::new(NetworkKind::WifiWeak).channel(3);
+    let state = chan.sample(0.0);
+    let policy = AdaptivePolicy::new(8, 0.15);
+    let lat = LatencyModel::build(&state, &JETSON_ORIN, &A800_70B, WireFormat::Sketch);
+    g.add("policy: LatencyModel::build + select_k", || {
+        let l = LatencyModel::build(
+            black_box(&state),
+            &JETSON_ORIN,
+            &A800_70B,
+            WireFormat::Sketch,
+        );
+        black_box(policy.select_k(&l));
+    });
+    g.add("channel: stochastic sample", || {
+        black_box(chan.sample(black_box(1.0)));
+    });
+    let msg = DraftMsg {
+        session: 1,
+        round: 2,
+        tokens: vec![100, 101, 102, 103, 104, 105],
+        chosen_probs: vec![0.5; 6],
+        mode: VerifyMode::Stochastic,
+        wire: WireFormat::Sketch,
+    };
+    g.add("protocol: DraftMsg encode+decode+air_bytes", || {
+        let buf = msg.encode();
+        let back = DraftMsg::decode(&buf).unwrap();
+        black_box((back.air_bytes(), lat.t_marginal_ms));
+    });
+    let mut rng = SplitMix64::new(1);
+    let logits: Vec<f32> = (0..9 * 512).map(|_| rng.next_normal() as f32).collect();
+    g.add("sampling: softmax(512) + top-p", || {
+        let p = flexspec::runtime::sampling::sample_top_p(
+            black_box(&logits[..512]),
+            1.0,
+            0.9,
+            &mut rng,
+        );
+        black_box(p);
+    });
+    g.add("verify: greedy_verify_ref 8 tokens", || {
+        let out = flexspec::runtime::sampling::greedy_verify_ref(
+            black_box(&logits),
+            512,
+            &[1, 2, 3, 4, 5, 6, 7, 8],
+            8,
+        );
+        black_box(out);
+    });
+
+    // ---- PJRT execution paths (need artifacts) ------------------------
+    let Ok(reg) = Registry::open_default() else {
+        println!("\n(artifacts missing — run `make artifacts` for the PJRT benches)");
+        return Ok(());
+    };
+    if !reg.manifest.weights.contains_key("draft_flex_llama2t") {
+        return Ok(());
+    }
+    let mut g2 = Group::new("PJRT execution paths").with_budget(2000.0);
+
+    let draft_rt = reg.model("draft_flex_llama2t")?;
+    let mut draft = ModelDraft::new(draft_rt.clone())?;
+    let committed: Vec<i32> = (0..24).map(|i| 64 + (i * 7 % 64)).collect();
+    let mut rng2 = SplitMix64::new(2);
+    g2.add("edge: ModelDraft.propose k=6 (incl. ingest)", || {
+        draft.reset().unwrap();
+        let p = draft
+            .propose(black_box(&committed), 6, 0.0, 1.0, &mut rng2)
+            .unwrap();
+        black_box(p.tokens.len());
+    });
+
+    let target = reg.model("target_llama2t_base")?;
+    let lora = reg.zero_lora("llama2t")?;
+    let mut kv = target.new_kv()?;
+    target.prefill(Some(&lora), &committed, &mut kv)?;
+    let block: Vec<i32> = (0..9).map(|i| 70 + i).collect();
+    g2.add("cloud: target forward_block(9) no-commit", || {
+        let pos = kv.pos;
+        let out = target
+            .forward_block(Some(&lora), black_box(&block), &mut kv, 0)
+            .unwrap();
+        kv.pos = pos;
+        black_box(out.rows);
+    });
+    let mut kvp = target.new_kv()?;
+    g2.add("cloud: target prefill(64)", || {
+        kvp.pos = 0;
+        let row = target
+            .prefill(Some(&lora), black_box(&committed), &mut kvp)
+            .unwrap();
+        black_box(row[0]);
+    });
+
+    let verify = reg.verify(512)?;
+    let vlogits = vec![0.5f32; 9 * 512];
+    let dtoks = [1i32, 2, 3, 4, 5, 6, 7, 8];
+    g2.add("L1: fused Pallas verify kernel (9x512)", || {
+        let (tau, corr, _) = verify.verify(black_box(&vlogits), &dtoks, 8).unwrap();
+        black_box((tau, corr));
+    });
+
+    let mut cloud = CloudEngine::new(&reg, "lora_llama2t_gsm8k", 2)?;
+    let prompt: Vec<i32> = vec![1, 70, 77, 85, 90, 71];
+    cloud.start_session(1, &prompt)?;
+    let mut committed2 = prompt.clone();
+    let mut rng3 = SplitMix64::new(3);
+    let mut draft = ModelDraft::new(reg.model("draft_flex_llama2t")?)?; // fresh context
+    draft.reset()?;
+    g2.add("e2e: full verify round (draft 5 + verify + commit)", || {
+        if cloud.remaining_capacity(1) < 12 {
+            cloud.end_session(1);
+            cloud.start_session(1, &prompt).unwrap();
+            committed2 = prompt.clone();
+            draft.reset().unwrap();
+        }
+        let p = draft.propose(&committed2, 5, 0.0, 1.0, &mut rng3).unwrap();
+        let v = cloud
+            .verify(
+                1,
+                &committed2,
+                &p.tokens,
+                &p.prob_rows,
+                VerifyMode::Greedy,
+                0.0,
+                1.0,
+                &mut rng3,
+            )
+            .unwrap();
+        for &t in &p.tokens[..v.outcome.tau] {
+            committed2.push(t);
+        }
+        committed2.push(v.outcome.correction);
+        black_box(v.outcome.tau);
+    });
+
+    println!(
+        "\nstats: target block_calls={} prefills={} tokens={} exec_time={:.1}ms",
+        target.stats.block_calls.get(),
+        target.stats.prefill_calls.get(),
+        target.stats.tokens_processed.get(),
+        target.stats.exec_nanos.get() as f64 / 1e6,
+    );
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! `cargo bench --bench paper_figures [-- fig5]` — regenerates every
+//! FIGURE of the paper's evaluation (Figs. 2, 4, 5, 6) on a reduced
+//! request count, printing the series each figure plots.
+
+use flexspec::experiments::{all_experiments, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let ctx = Ctx::open(2, 7)?;  // reduced request count; full grid via `flexspec exp`
+    let wanted = |id: &str| {
+        id.starts_with("fig") && (filter.is_empty() || filter.iter().any(|f| id.contains(f.as_str())))
+    };
+    let t0 = std::time::Instant::now();
+    for e in all_experiments() {
+        if !wanted(e.id) {
+            continue;
+        }
+        println!("\n############ {} — {}", e.id, e.title);
+        let s = std::time::Instant::now();
+        for t in (e.run)(&ctx)? {
+            println!("{}", t.render());
+        }
+        println!("[{} took {:.1}s]", e.id, s.elapsed().as_secs_f64());
+    }
+    println!("\npaper_figures total: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! `cargo bench --bench paper_tables [-- table3]` — regenerates every
+//! TABLE of the paper's evaluation end-to-end on a reduced request count
+//! (the full grid is `flexspec exp all --requests 12`). Prints the same
+//! rows the paper reports.
+
+use flexspec::experiments::{all_experiments, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let ctx = Ctx::open(2, 7)?;  // reduced request count; full grid via `flexspec exp`
+    let wanted = |id: &str| {
+        id.starts_with("table") && (filter.is_empty() || filter.iter().any(|f| id.contains(f.as_str())))
+    };
+    let t0 = std::time::Instant::now();
+    for e in all_experiments() {
+        if !wanted(e.id) {
+            continue;
+        }
+        println!("\n############ {} — {}", e.id, e.title);
+        let s = std::time::Instant::now();
+        for t in (e.run)(&ctx)? {
+            println!("{}", t.render());
+        }
+        println!("[{} took {:.1}s]", e.id, s.elapsed().as_secs_f64());
+    }
+    println!("\npaper_tables total: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Stochastic channel: log-normal shadowing + Gilbert-Elliott bursts.
+//!
+//! Shadowing is sampled per round with temporal correlation (AR(1) on the
+//! log-rate) so consecutive decode rounds see similar conditions — the
+//! property the paper's EMA-based policy exploits. The Gilbert-Elliott
+//! two-state chain produces the deep fades (elevator/subway) that make
+//! fixed large strides time out in Fig. 5.
+
+use super::profiles::NetworkProfile;
+use super::{Channel, ChannelState};
+use crate::util::rng::SplitMix64;
+
+#[derive(Debug, Clone)]
+pub struct StochasticChannel {
+    profile: NetworkProfile,
+    rng: SplitMix64,
+    /// AR(1) state of the log-shadowing term.
+    log_shadow: f64,
+    /// AR(1) correlation between consecutive samples.
+    rho: f64,
+    fading: bool,
+    samples: u64,
+}
+
+impl StochasticChannel {
+    pub fn new(profile: NetworkProfile, seed: u64) -> StochasticChannel {
+        StochasticChannel {
+            rng: SplitMix64::new(seed ^ 0xC0DE_C0DE),
+            log_shadow: 0.0,
+            rho: 0.85,
+            fading: false,
+            samples: 0,
+            profile,
+        }
+    }
+
+    pub fn profile(&self) -> &NetworkProfile {
+        &self.profile
+    }
+}
+
+impl Channel for StochasticChannel {
+    fn sample(&mut self, _now_ms: f64) -> ChannelState {
+        let p = &self.profile;
+        // AR(1) shadowing on log rate: stationary sigma == p.sigma
+        let innov = (1.0 - self.rho * self.rho).sqrt() * p.sigma;
+        self.log_shadow = self.rho * self.log_shadow + innov * self.rng.next_normal();
+        // Gilbert-Elliott burst state
+        if self.fading {
+            if self.rng.chance(p.p_exit_fade) {
+                self.fading = false;
+            }
+        } else if self.rng.chance(p.p_enter_fade) {
+            self.fading = true;
+        }
+        let shadow = self.log_shadow.exp();
+        let (rate_div, prop_mul) = if self.fading {
+            (p.fade_rate_div, p.fade_prop_mul)
+        } else {
+            (1.0, 1.0)
+        };
+        let prop_jitter = self.rng.next_lognormal(0.0, p.prop_sigma);
+        self.samples += 1;
+        ChannelState {
+            up_bps: (p.up_bps * shadow / rate_div).max(1e3),
+            down_bps: (p.down_bps * shadow / rate_div).max(1e3),
+            prop_ms: p.prop_ms * prop_jitter * prop_mul,
+            fading: self.fading,
+            loss_rate: if self.fading { p.fade_loss_rate } else { p.loss_rate },
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("{:?}", self.profile.kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::profiles::NetworkKind;
+    use crate::util::prop;
+
+    fn chan(seed: u64) -> StochasticChannel {
+        NetworkProfile::new(NetworkKind::WifiWeak).channel(seed)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = chan(3);
+        let mut b = chan(3);
+        for i in 0..50 {
+            assert_eq!(a.sample(i as f64), b.sample(i as f64));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = chan(3);
+        let mut b = chan(4);
+        let same = (0..50)
+            .filter(|&i| a.sample(i as f64) == b.sample(i as f64))
+            .count();
+        assert!(same < 5);
+    }
+
+    #[test]
+    fn fades_occur_and_clear() {
+        let mut c = chan(5);
+        let states: Vec<bool> = (0..2000).map(|i| c.sample(i as f64).fading).collect();
+        let fade_frac = states.iter().filter(|&&f| f).count() as f64 / states.len() as f64;
+        // stationary fraction ~ p_enter/(p_enter+p_exit) = 0.10/0.45 ≈ 0.22
+        assert!((0.1..0.4).contains(&fade_frac), "fade fraction {fade_frac}");
+        // bursts: at least one entry AND one exit
+        assert!(states.windows(2).any(|w| !w[0] && w[1]));
+        assert!(states.windows(2).any(|w| w[0] && !w[1]));
+    }
+
+    #[test]
+    fn rates_positive_and_correlated() {
+        prop::check(20, |rng| {
+            let mut c = chan(rng.next_u64());
+            let xs: Vec<f64> = (0..200).map(|i| c.sample(i as f64).up_bps).collect();
+            prop::assert_prop(xs.iter().all(|&x| x > 0.0), "nonpositive rate")?;
+            // lag-1 autocorrelation of log-rate should be clearly positive
+            let logs: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+            let mean = logs.iter().sum::<f64>() / logs.len() as f64;
+            let var: f64 = logs.iter().map(|x| (x - mean) * (x - mean)).sum();
+            let cov: f64 = logs
+                .windows(2)
+                .map(|w| (w[0] - mean) * (w[1] - mean))
+                .sum();
+            prop::assert_prop(cov / var > 0.3, format!("autocorr {}", cov / var))
+        });
+    }
+
+    #[test]
+    fn fading_state_degrades_rate() {
+        let mut c = chan(11);
+        let mut good = Vec::new();
+        let mut bad = Vec::new();
+        for i in 0..4000 {
+            let s = c.sample(i as f64);
+            if s.fading {
+                bad.push(s.up_bps);
+            } else {
+                good.push(s.up_bps);
+            }
+        }
+        let mg = good.iter().sum::<f64>() / good.len() as f64;
+        let mb = bad.iter().sum::<f64>() / bad.len() as f64;
+        assert!(mg > 3.0 * mb, "good {mg} vs bad {mb}");
+    }
+}

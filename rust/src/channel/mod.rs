@@ -1,0 +1,117 @@
+//! Wireless channel simulation (DESIGN.md S5).
+//!
+//! The paper evaluates three regimes — 5G (strong), 4G (average), weak
+//! WiFi — and eq. (8) consumes exactly two quantities per round: the
+//! instantaneous uplink rate `R_n` and the propagation delay `T_prop`.
+//! The simulator reproduces those regimes with log-normal shadowing on
+//! top of a Gilbert-Elliott good/bad burst process (deep fades in
+//! elevators/subways), plus trace record/replay for reproducible runs.
+
+pub mod fading;
+pub mod profiles;
+pub mod trace;
+
+pub use fading::StochasticChannel;
+pub use profiles::{NetworkProfile, NetworkKind};
+pub use trace::{ChannelTrace, TraceChannel};
+
+/// Instantaneous channel state observed by the edge at one decode round
+/// (the paper's "Measure channel conditions" step in Algorithm 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChannelState {
+    /// Achievable uplink rate in bits per second.
+    pub up_bps: f64,
+    /// Achievable downlink rate in bits per second.
+    pub down_bps: f64,
+    /// One-way propagation delay (ms) — half the RTT.
+    pub prop_ms: f64,
+    /// True while the Gilbert-Elliott process is in the deep-fade state.
+    pub fading: bool,
+    /// Per-MTU packet loss probability (drives ARQ retransmissions —
+    /// the superlinear cost that makes big fixed-stride draft blocks
+    /// time out on weak links, paper Fig. 5).
+    pub loss_rate: f64,
+}
+
+/// Path MTU used for ARQ accounting.
+pub const MTU_BYTES: f64 = 1500.0;
+/// Mean retransmission timeout per lost packet, ms.
+pub const RTO_MS: f64 = 600.0;
+
+impl ChannelState {
+    /// Uplink time for a payload of `bytes` (eq. 8 without T_prop),
+    /// including the expected ARQ retransmission penalty:
+    /// ceil(bytes/MTU) packets, each lost w.p. loss_rate, each loss
+    /// costing one RTO. This is what makes K large payloads superlinearly
+    /// expensive in weak signal.
+    pub fn up_ms(&self, bytes: usize) -> f64 {
+        let tx = (bytes as f64 * 8.0) / self.up_bps * 1e3;
+        let packets = (bytes as f64 / MTU_BYTES).ceil();
+        tx + packets * self.loss_rate * RTO_MS
+    }
+
+    pub fn down_ms(&self, bytes: usize) -> f64 {
+        let tx = (bytes as f64 * 8.0) / self.down_bps * 1e3;
+        let packets = (bytes as f64 / MTU_BYTES).ceil();
+        tx + packets * (self.loss_rate * 0.5) * RTO_MS
+    }
+}
+
+/// A channel model the coordinator can sample each round.
+pub trait Channel {
+    /// Sample the state at virtual time `now_ms`.
+    fn sample(&mut self, now_ms: f64) -> ChannelState;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> String;
+}
+
+/// Fixed channel (unit tests + analytic checks).
+#[derive(Debug, Clone)]
+pub struct ConstChannel(pub ChannelState);
+
+impl Channel for ConstChannel {
+    fn sample(&mut self, _now_ms: f64) -> ChannelState {
+        self.0
+    }
+
+    fn name(&self) -> String {
+        "const".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn up_ms_units() {
+        let s = ChannelState {
+            up_bps: 1e6, // 1 Mbps
+            down_bps: 2e6,
+            prop_ms: 10.0,
+            fading: false,
+            loss_rate: 0.0,
+        };
+        // 1000 bytes = 8000 bits over 1 Mbps = 8 ms
+        assert!((s.up_ms(1000) - 8.0).abs() < 1e-9);
+        assert!((s.down_ms(1000) - 4.0).abs() < 1e-9);
+        // with loss: 3000 bytes = 2 packets, 10% loss, 300ms RTO -> +60ms
+        let lossy = ChannelState { loss_rate: 0.1, ..s };
+        assert!((lossy.up_ms(3000) - (24.0 + 120.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn const_channel_is_constant() {
+        let st = ChannelState {
+            up_bps: 5e6,
+            down_bps: 5e6,
+            prop_ms: 5.0,
+            fading: false,
+            loss_rate: 0.0,
+        };
+        let mut c = ConstChannel(st);
+        assert_eq!(c.sample(0.0), st);
+        assert_eq!(c.sample(1e6), st);
+    }
+}

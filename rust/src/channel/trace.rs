@@ -1,0 +1,140 @@
+//! Channel trace record/replay.
+//!
+//! A trace is the sequence of `ChannelState`s a stochastic channel
+//! produced; replaying it gives bit-identical network conditions across
+//! methods — how the experiment harness guarantees every baseline sees
+//! the same wireless weather (the paper's per-figure comparisons assume
+//! this implicitly).
+
+use super::{Channel, ChannelState};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct ChannelTrace {
+    pub name: String,
+    pub states: Vec<ChannelState>,
+}
+
+impl ChannelTrace {
+    /// Record `n` samples from any channel.
+    pub fn record(chan: &mut dyn Channel, n: usize, dt_ms: f64) -> ChannelTrace {
+        ChannelTrace {
+            name: chan.name(),
+            states: (0..n).map(|i| chan.sample(i as f64 * dt_ms)).collect(),
+        }
+    }
+
+    /// CSV persistence: `up_bps,down_bps,prop_ms,fading,loss` per line.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut out = format!("# flexspec channel trace: {}\n", self.name);
+        for s in &self.states {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                s.up_bps, s.down_bps, s.prop_ms, s.fading as u8, s.loss_rate
+            ));
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ChannelTrace> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let mut t = ChannelTrace {
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into(),
+            states: Vec::new(),
+        };
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() != 5 {
+                bail!("trace {path:?} line {}: expected 5 fields", i + 1);
+            }
+            t.states.push(ChannelState {
+                up_bps: f[0].parse()?,
+                down_bps: f[1].parse()?,
+                prop_ms: f[2].parse()?,
+                fading: f[3] == "1",
+                loss_rate: f[4].parse()?,
+            });
+        }
+        if t.states.is_empty() {
+            bail!("trace {path:?} is empty");
+        }
+        Ok(t)
+    }
+
+    pub fn replay(&self) -> TraceChannel {
+        TraceChannel {
+            trace: self.clone(),
+            idx: 0,
+        }
+    }
+}
+
+/// Replays a trace, looping if the run outlives it.
+#[derive(Debug, Clone)]
+pub struct TraceChannel {
+    trace: ChannelTrace,
+    idx: usize,
+}
+
+impl Channel for TraceChannel {
+    fn sample(&mut self, _now_ms: f64) -> ChannelState {
+        let s = self.trace.states[self.idx % self.trace.states.len()];
+        self.idx += 1;
+        s
+    }
+
+    fn name(&self) -> String {
+        format!("trace:{}", self.trace.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::profiles::{NetworkKind, NetworkProfile};
+
+    #[test]
+    fn record_replay_roundtrip() {
+        let mut c = NetworkProfile::new(NetworkKind::FourG).channel(9);
+        let t = ChannelTrace::record(&mut c, 64, 100.0);
+        let mut r = t.replay();
+        for s in &t.states {
+            assert_eq!(r.sample(0.0), *s);
+        }
+        // loops
+        assert_eq!(r.sample(0.0), t.states[0]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("flexspec_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let mut c = NetworkProfile::new(NetworkKind::WifiWeak).channel(1);
+        let t = ChannelTrace::record(&mut c, 32, 50.0);
+        t.save(&path).unwrap();
+        let back = ChannelTrace::load(&path).unwrap();
+        assert_eq!(back.states.len(), 32);
+        for (a, b) in t.states.iter().zip(&back.states) {
+            assert!((a.up_bps - b.up_bps).abs() < 1e-6);
+            assert_eq!(a.fading, b.fading);
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("flexspec_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "1,2,3,4\n").unwrap();
+        assert!(ChannelTrace::load(&path).is_err());
+        std::fs::write(&path, "# only comments\n").unwrap();
+        assert!(ChannelTrace::load(&path).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! CLI entry point: `flexspec <command> [options]`.
+//!
+//! Commands:
+//!   list                         list experiments
+//!   exp <id|all> [--requests N] [--seed S] [--report path.md]
+//!   serve [--users N] [--network 5g|4g|wifi] [--window MS] ...
+//!   info                         artifact + model zoo inventory
+//!   trace <5g|4g|wifi> <out.csv> [--samples N]
+
+use crate::channel::{ChannelTrace, NetworkKind, NetworkProfile};
+use crate::coordinator::{serve, CloudEngine, ServeConfig};
+use crate::devices::{A800_70B, JETSON_ORIN};
+use crate::experiments::Ctx;
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+const VALUE_OPTS: &[&str] = &[
+    "requests", "seed", "report", "users", "network", "window", "max-batch",
+    "max-new", "dataset", "samples", "arrival-ms", "artifacts",
+];
+
+pub fn cli_main() -> Result<()> {
+    let args = Args::from_env(VALUE_OPTS);
+    if let Some(dir) = args.get("artifacts") {
+        std::env::set_var("FLEXSPEC_ARTIFACTS", dir);
+    }
+    if args.flag("verbose") {
+        crate::util::log::set_level(crate::util::log::Level::Debug);
+    }
+    match args.positional(0) {
+        Some("list") => {
+            println!("experiments:");
+            for e in crate::experiments::all_experiments() {
+                println!("  {:8} {}", e.id, e.title);
+            }
+            Ok(())
+        }
+        Some("info") => info(),
+        Some("exp") => exp(&args),
+        Some("serve") => serve_cmd(&args),
+        Some("trace") => trace_cmd(&args),
+        _ => {
+            println!(
+                "FlexSpec reproduction — usage:\n\
+                 \x20 flexspec list\n\
+                 \x20 flexspec info\n\
+                 \x20 flexspec exp <id|all> [--requests N] [--seed S] [--report out.md]\n\
+                 \x20 flexspec serve [--users N] [--network 5g|4g|wifi] [--window MS]\n\
+                 \x20 flexspec trace <5g|4g|wifi> <out.csv> [--samples N]\n\
+                 Run `make artifacts` first to build the AOT model zoo."
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let reg = crate::runtime::Registry::open_default()?;
+    let m = &reg.manifest;
+    println!("artifacts: {}", m.root.display());
+    println!("block={} k_max={} prefill_chunk={}", m.block, m.k_max, m.prefill_chunk);
+    println!("\narchitectures:");
+    for (name, a) in &m.archs {
+        println!(
+            "  {:24} vocab={:5} d={} L={} heads={} ff={} experts={} lora_r={} params={}",
+            name, a.vocab, a.d_model, a.n_layers, a.n_heads, a.d_ff, a.n_experts, a.lora_rank,
+            a.n_params()
+        );
+    }
+    println!("\nweight bundles:");
+    for (name, w) in &m.weights {
+        println!("  {:36} kind={:13} arch={}", name, w.kind, w.arch);
+    }
+    if !m.calibration.is_empty() {
+        println!("\nbuild-time acceptance calibration:");
+        for (k, v) in &m.calibration {
+            println!("  {k:32} {v:.3}");
+        }
+    }
+    Ok(())
+}
+
+fn exp(args: &Args) -> Result<()> {
+    let ids: Vec<String> = if args.positional.len() > 1 {
+        args.positional[1..].to_vec()
+    } else {
+        vec!["all".to_string()]
+    };
+    let requests = args.get_usize("requests", 6);
+    let seed = args.get_u64("seed", 7);
+    let mut ctx = Ctx::open(requests, seed)?;
+    ctx.verbose = args.flag("verbose");
+    let entries = crate::report::run_experiments(&ctx, &ids)?;
+    if let Some(path) = args.get("report") {
+        let header = format!(
+            "# FlexSpec reproduction — experiment results\n\n\
+             requests/cell = {requests}, seed = {seed}. Regenerate with\n\
+             `cargo run --release -- exp all --requests {requests} --seed {seed} --report <path>`.\n"
+        );
+        crate::report::write_markdown(&entries, &PathBuf::from(path), &header)?;
+    }
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let reg = crate::runtime::Registry::open_default()?;
+    let network = NetworkKind::parse(&args.get_or("network", "4g"))
+        .ok_or_else(|| anyhow::anyhow!("bad --network"))?;
+    let users = args.get_usize("users", 8);
+    let dataset = args.get_or("dataset", "mtbench");
+    let mut gen = crate::workload::WorkloadGen::new(&dataset, args.get_u64("seed", 1))?;
+    let prompts: Vec<Vec<i32>> = gen.take(users).into_iter().map(|r| r.prompt).collect();
+
+    let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", crate::workload::EOS)?;
+    let draft = reg.model("draft_flex_llama2t")?;
+    let cfg = ServeConfig {
+        users,
+        window_ms: args.get_f64("window", 12.0),
+        max_batch: args.get_usize("max-batch", 8),
+        max_new: args.get_usize("max-new", 32),
+        arrival_mean_ms: args.get_f64("arrival-ms", 300.0),
+        seed: args.get_u64("seed", 1),
+        ..Default::default()
+    };
+    let net = NetworkProfile::new(network);
+    let rep = serve(&mut cloud, draft, &prompts, &JETSON_ORIN, &A800_70B, &net, &cfg)?;
+    println!("served {} sessions on {} ({} dataset)", rep.completed, network.label(), dataset);
+    println!("  tokens           {}", rep.tokens);
+    println!("  wall time        {:.1} ms (virtual)", rep.wall_ms);
+    println!("  throughput       {:.1} tok/s", rep.throughput_tok_s());
+    println!("  mean batch size  {:.2} ({} batches)", rep.mean_batch, rep.batches);
+    println!("  T_base amortized {:.0} ms saved", rep.t_base_saved_ms);
+    println!("  request latency  p50 {:.0} ms  p95 {:.0} ms", rep.request_latency.p50(), rep.request_latency.p95());
+    println!("  per-token        p50 {:.0} ms  p95 {:.0} ms", rep.per_token_latency.p50(), rep.per_token_latency.p95());
+    println!("  acceptance       {:.2}", rep.acceptance.mean());
+    Ok(())
+}
+
+fn trace_cmd(args: &Args) -> Result<()> {
+    let Some(kind) = args.positional(1).and_then(NetworkKind::parse) else {
+        bail!("usage: flexspec trace <5g|4g|wifi> <out.csv>");
+    };
+    let Some(out) = args.positional(2) else {
+        bail!("usage: flexspec trace <5g|4g|wifi> <out.csv>");
+    };
+    let mut chan = NetworkProfile::new(kind).channel(args.get_u64("seed", 1));
+    let trace = ChannelTrace::record(&mut chan, args.get_usize("samples", 1000), 100.0);
+    trace.save(std::path::Path::new(out))?;
+    println!("wrote {} samples to {out}", args.get_usize("samples", 1000));
+    Ok(())
+}

@@ -1,0 +1,362 @@
+//! Cloud-side parallel verification (Algorithm 2, step 2).
+//!
+//! The cloud holds the evolving target version (base weights + the
+//! currently deployed LoRA adapter — hot-swappable through the registry)
+//! and one KV-cache session per user. Each verify round forwards
+//! [pending committed tokens ++ draft block] in ONE target pass, runs the
+//! fused Pallas verification kernel (greedy) or the Leviathan acceptance
+//! test (stochastic), and rolls the KV back to the accepted prefix by
+//! position-pointer rewind (§IV-C).
+
+use crate::protocol::VerifyMode;
+use crate::runtime::model::KvState;
+use crate::runtime::registry::TargetVersion;
+use crate::runtime::sampling::{self, VerifyOutcome};
+use crate::runtime::{Registry, VerifyRuntime};
+use crate::util::rng::SplitMix64;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+pub struct CloudEngine {
+    pub version: TargetVersion,
+    verify_rt: Rc<VerifyRuntime>,
+    sessions: HashMap<u32, KvState>,
+    pub eos: i32,
+    /// Rounds verified (metrics).
+    pub rounds: u64,
+    /// KV rollbacks performed (metrics; == rounds with tau < K).
+    pub rollbacks: u64,
+}
+
+pub struct CloudVerdict {
+    pub outcome: VerifyOutcome,
+    /// Tokens newly committed to the session KV this round (pending
+    /// prefix + accepted draft tokens). The correction token is NOT in
+    /// the KV yet — it is next round's pending token.
+    pub committed_tokens: usize,
+    pub eos: bool,
+}
+
+impl CloudEngine {
+    pub fn new(reg: &Registry, version_name: &str, eos: i32) -> Result<CloudEngine> {
+        let version = reg.target_version(version_name)?;
+        let verify_rt = reg.verify(version.runtime.arch.vocab)?;
+        Ok(CloudEngine {
+            version,
+            verify_rt,
+            sessions: HashMap::new(),
+            eos,
+            rounds: 0,
+            rollbacks: 0,
+        })
+    }
+
+    /// Hot-swap the deployed target version (the paper's cloud-side model
+    /// evolution; the edge never hears about it).
+    pub fn deploy(&mut self, reg: &Registry, version_name: &str) -> Result<()> {
+        let v = reg.target_version(version_name)?;
+        if v.runtime.arch.name != self.version.runtime.arch.name {
+            bail!(
+                "cannot hot-swap across architectures ({} -> {})",
+                self.version.runtime.arch.name,
+                v.runtime.arch.name
+            );
+        }
+        self.version = v;
+        // KV caches remain valid only for sessions that already ran on the
+        // old version in this reproduction we keep them (the backbone is
+        // frozen; adapters only perturb) — matches the paper's stateless-
+        // with-respect-to-draft, stateful-KV design.
+        Ok(())
+    }
+
+    /// Start a session: ingest prompt[..len-1]; prompt's last token is
+    /// the first pending token of round 1.
+    pub fn start_session(&mut self, id: u32, prompt: &[i32]) -> Result<()> {
+        if prompt.len() < 2 {
+            bail!("prompt must have at least 2 tokens (BOS + 1)");
+        }
+        let mut kv = self.version.runtime.new_kv()?;
+        self.version
+            .runtime
+            .prefill(Some(&self.version.lora), &prompt[..prompt.len() - 1], &mut kv)?;
+        self.sessions.insert(id, kv);
+        Ok(())
+    }
+
+    pub fn end_session(&mut self, id: u32) {
+        self.sessions.remove(&id);
+    }
+
+    pub fn session_kv_pos(&self, id: u32) -> Option<usize> {
+        self.sessions.get(&id).map(|kv| kv.pos)
+    }
+
+    pub fn remaining_capacity(&self, id: u32) -> usize {
+        self.sessions
+            .get(&id)
+            .map(|kv| kv.remaining())
+            .unwrap_or(0)
+    }
+
+    /// Verify one draft block for session `id`.
+    ///
+    /// `committed` is the full committed sequence (prompt + generated);
+    /// `draft`/`draft_probs` the proposal. Greedy mode uses the fused
+    /// Pallas kernel; stochastic mode the Leviathan test.
+    #[allow(clippy::too_many_arguments)]
+    pub fn verify(
+        &mut self,
+        id: u32,
+        committed: &[i32],
+        draft: &[i32],
+        draft_probs: &[Vec<f32>],
+        mode: VerifyMode,
+        temperature: f32,
+        top_p: f32,
+        rng: &mut SplitMix64,
+    ) -> Result<CloudVerdict> {
+        let kv = self
+            .sessions
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("no session {id}"))?;
+        let pending = &committed[kv.pos..];
+        if pending.is_empty() {
+            bail!("session {id}: nothing pending (protocol violation)");
+        }
+        let k = draft.len();
+        let block_len = pending.len() + k;
+        let rt = &self.version.runtime;
+        if block_len > rt.block {
+            bail!("block {} exceeds {} (pending {} + k {})", block_len, rt.block, pending.len(), k);
+        }
+
+        let mut block_tokens = Vec::with_capacity(block_len);
+        block_tokens.extend_from_slice(pending);
+        block_tokens.extend_from_slice(draft);
+
+        // Forward WITHOUT committing yet; commit after verification.
+        let pos_before = kv.pos;
+        let out = rt.forward_block(Some(&self.version.lora), &block_tokens, kv, 0)?;
+
+        // Rows: row (pending.len()-1 + j) is the distribution after
+        // consuming draft[0..j], j = 0..=k.
+        let first = pending.len() - 1;
+        let vocab = rt.arch.vocab;
+        let rows = &out.logits[first * vocab..(first + k + 1) * vocab];
+
+        let outcome = match mode {
+            VerifyMode::Greedy => {
+                // fused Pallas kernel over a fixed 9-row block
+                let mut padded = vec![0f32; self.verify_rt.block * vocab];
+                padded[..rows.len()].copy_from_slice(rows);
+                let mut dtoks = vec![0i32; self.verify_rt.block - 1];
+                dtoks[..k].copy_from_slice(draft);
+                let (tau, corr, _greedy) = self.verify_rt.verify(&padded, &dtoks, k)?;
+                VerifyOutcome {
+                    tau,
+                    correction: corr,
+                }
+            }
+            VerifyMode::Stochastic => {
+                // model-free drafts (PLD/Lookahead) propose deterministic
+                // continuations: their draft distribution is a point mass
+                // on the proposed token (p_d = 1), which is exactly what
+                // the Leviathan acceptance test needs.
+                let point_mass;
+                let probs: &[Vec<f32>] = if draft_probs.len() >= k {
+                    draft_probs
+                } else {
+                    point_mass = draft
+                        .iter()
+                        .map(|&t| {
+                            let mut p = vec![0f32; vocab];
+                            p[t as usize] = 1.0;
+                            p
+                        })
+                        .collect::<Vec<_>>();
+                    &point_mass
+                };
+                sampling::stochastic_verify(
+                    rows,
+                    vocab,
+                    probs,
+                    draft,
+                    k,
+                    temperature,
+                    top_p,
+                    rng,
+                )
+            }
+        };
+
+        // Commit pending + accepted prefix; rewind the rest (KV rollback).
+        let committed_tokens = pending.len() + outcome.tau;
+        kv.pos = pos_before + committed_tokens;
+        self.rounds += 1;
+        if outcome.tau < k {
+            self.rollbacks += 1;
+        }
+
+        let eos = outcome.correction == self.eos
+            || draft[..outcome.tau].iter().any(|&t| t == self.eos);
+        Ok(CloudVerdict {
+            outcome,
+            committed_tokens,
+            eos,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Engine, Manifest};
+
+    fn registry() -> Option<Registry> {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&root).ok()?;
+        if !m.weights.contains_key("target_llama2t_base") {
+            return None;
+        }
+        Some(Registry::open(
+            Rc::new(Engine::cpu().ok()?),
+            Rc::new(m),
+        ))
+    }
+
+    #[test]
+    fn greedy_self_drafts_always_accept() {
+        // Draft tokens computed from the TARGET's own greedy trajectory
+        // must be fully accepted — the lossless-ness sanity check.
+        let Some(reg) = registry() else { return };
+        let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+        let prompt: Vec<i32> = vec![1, 70, 77, 85, 90];
+        cloud.start_session(1, &prompt).unwrap();
+        let mut rng = SplitMix64::new(5);
+
+        // obtain target greedy continuation via k=0 rounds
+        let mut committed = prompt.clone();
+        let mut greedy = Vec::new();
+        for _ in 0..4 {
+            let v = cloud
+                .verify(1, &committed, &[], &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng)
+                .unwrap();
+            greedy.push(v.outcome.correction);
+            committed.push(v.outcome.correction);
+        }
+        cloud.end_session(1);
+
+        // fresh session: propose those 4 tokens at once
+        cloud.start_session(2, &prompt).unwrap();
+        let v = cloud
+            .verify(2, &prompt, &greedy, &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng)
+            .unwrap();
+        assert_eq!(v.outcome.tau, 4, "self-draft must be fully accepted");
+        assert_eq!(v.committed_tokens, 1 + 4);
+    }
+
+    #[test]
+    fn wrong_draft_rejected_with_correct_correction() {
+        let Some(reg) = registry() else { return };
+        let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+        let prompt: Vec<i32> = vec![1, 70, 77, 85, 90];
+        cloud.start_session(1, &prompt).unwrap();
+        let mut rng = SplitMix64::new(5);
+        // true greedy next token:
+        let v0 = cloud
+            .verify(1, &prompt, &[], &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng)
+            .unwrap();
+        let truth = v0.outcome.correction;
+        cloud.end_session(1);
+
+        cloud.start_session(2, &prompt).unwrap();
+        let wrong = if truth == 100 { 101 } else { 100 };
+        let v = cloud
+            .verify(2, &prompt, &[wrong, 50], &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng)
+            .unwrap();
+        assert_eq!(v.outcome.tau, 0);
+        assert_eq!(v.outcome.correction, truth);
+        assert_eq!(cloud.rollbacks, 1);
+    }
+
+    #[test]
+    fn rollback_preserves_trajectory() {
+        // A rejected round must not corrupt the session: the next round's
+        // greedy output equals a clean session's output.
+        let Some(reg) = registry() else { return };
+        let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+        let prompt: Vec<i32> = vec![1, 64, 67, 86];
+        let mut rng = SplitMix64::new(6);
+
+        // clean trajectory, 3 tokens
+        cloud.start_session(1, &prompt).unwrap();
+        let mut clean = prompt.clone();
+        for _ in 0..3 {
+            let v = cloud
+                .verify(1, &clean, &[], &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng)
+                .unwrap();
+            clean.push(v.outcome.correction);
+        }
+
+        // dirty: first round proposes garbage (rejected), then continues
+        cloud.start_session(2, &prompt).unwrap();
+        let mut dirty = prompt.clone();
+        let v = cloud
+            .verify(2, &dirty, &[3, 3, 3, 3], &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng)
+            .unwrap();
+        assert_eq!(v.outcome.tau, 0);
+        dirty.push(v.outcome.correction);
+        for _ in 0..2 {
+            let v = cloud
+                .verify(2, &dirty, &[], &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng)
+                .unwrap();
+            dirty.push(v.outcome.correction);
+        }
+        assert_eq!(clean, dirty);
+    }
+
+    #[test]
+    fn lora_hot_swap_changes_behaviour() {
+        let Some(reg) = registry() else { return };
+        if !reg.manifest.weights.contains_key("lora_llama2t_gsm8k") {
+            return;
+        }
+        let mut rng = SplitMix64::new(7);
+        let prompt: Vec<i32> = vec![1, 70, 77, 85, 90, 71, 80];
+        let mut run = |cloud: &mut CloudEngine| {
+            cloud.start_session(9, &prompt).unwrap();
+            let mut c = prompt.clone();
+            for _ in 0..8 {
+                let v = cloud
+                    .verify(9, &c, &[], &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng)
+                    .unwrap();
+                c.push(v.outcome.correction);
+            }
+            cloud.end_session(9);
+            c
+        };
+        let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+        let a = run(&mut cloud);
+        cloud.deploy(&reg, "lora_llama2t_gsm8k").unwrap();
+        let b = run(&mut cloud);
+        assert_ne!(a, b, "gsm8k adapter should change the math trajectory");
+    }
+
+    #[test]
+    fn block_overflow_rejected() {
+        let Some(reg) = registry() else { return };
+        let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+        let prompt: Vec<i32> = vec![1, 70, 77];
+        cloud.start_session(1, &prompt).unwrap();
+        let mut rng = SplitMix64::new(5);
+        let draft = vec![5i32; 9]; // pending 1 + 9 > block 9
+        assert!(cloud
+            .verify(1, &prompt, &draft, &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng)
+            .is_err());
+    }
+}

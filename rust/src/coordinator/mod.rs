@@ -1,0 +1,18 @@
+//! L3 coordinator — the paper's system contribution (DESIGN.md S7-S10):
+//! edge drafting engine, cloud verification engine with KV sessions and
+//! LoRA hot-swap, the channel-aware adaptive speculation policy, the full
+//! Algorithm-2 pipeline under a virtual clock, the multi-user batching
+//! scheduler, and the update-storm sync model.
+
+pub mod cloud;
+pub mod edge;
+pub mod pipeline;
+pub mod policy;
+pub mod scheduler;
+pub mod sync;
+
+pub use cloud::CloudEngine;
+pub use edge::{DraftSource, ModelDraft, NoDraft, PromptLookup, Proposal};
+pub use pipeline::{Pipeline, RequestResult, RoundLog, StridePolicy};
+pub use policy::{AcceptanceModel, AdaptivePolicy, LatencyModel};
+pub use scheduler::{serve, ServeConfig, ServeReport};

@@ -1,0 +1,524 @@
+//! The full edge-cloud decode loop (paper Algorithm 2 + Fig. 3) under a
+//! virtual clock: real models decide WHAT happens (every tau comes from
+//! actual draft/target execution through PJRT); the latency model of
+//! eqs. (7)-(10) decides WHEN (DESIGN.md substitution log).
+
+use super::cloud::CloudEngine;
+use super::edge::{DraftSource, Proposal};
+use super::policy::{AdaptivePolicy, LatencyModel};
+use crate::channel::Channel;
+use crate::devices::{CloudProfile, EdgeDevice};
+use crate::energy::{EnergyBreakdown, EnergyMeter};
+use crate::protocol::{self, DraftMsg, VerifyMode, VerifyMsg, WireFormat};
+use crate::util::rng::SplitMix64;
+use anyhow::Result;
+
+/// Stride selection strategy (FlexSpec adaptive vs baselines).
+#[derive(Debug, Clone)]
+pub enum StridePolicy {
+    /// FlexSpec: channel-aware K* search (eq. 11).
+    Adaptive(AdaptivePolicy),
+    /// Fixed stride (Std-SD, EAGLE-2, Medusa, and the Fig. 5 ablation).
+    Fixed(usize),
+    /// DSSD: network-class heuristic + acceptance EMA, but blind to the
+    /// instantaneous channel state.
+    Dssd { base_k: usize, policy: AdaptivePolicy },
+    /// Cloud-only: never draft.
+    None,
+}
+
+impl StridePolicy {
+    pub fn choose(&mut self, lat: &LatencyModel) -> usize {
+        match self {
+            StridePolicy::Adaptive(p) => p.select_k(lat),
+            StridePolicy::Fixed(k) => *k,
+            StridePolicy::Dssd { base_k, policy } => {
+                // scale the static class stride by the acceptance EMA only
+                let g = policy.gamma.get();
+                ((*base_k as f64 * (0.5 + g)).round() as usize).clamp(1, policy.k_max)
+            }
+            StridePolicy::None => 0,
+        }
+    }
+
+    pub fn observe(&mut self, tau: usize, k: usize) {
+        match self {
+            StridePolicy::Adaptive(p) | StridePolicy::Dssd { policy: p, .. } => p.observe(tau, k),
+            _ => {}
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            StridePolicy::Adaptive(_) => "adaptive".into(),
+            StridePolicy::Fixed(k) => format!("fixed(K={k})"),
+            StridePolicy::Dssd { base_k, .. } => format!("dssd(base={base_k})"),
+            StridePolicy::None => "none".into(),
+        }
+    }
+}
+
+/// Per-round telemetry (drives every figure).
+#[derive(Debug, Clone)]
+pub struct RoundLog {
+    pub k: usize,
+    pub tau: usize,
+    pub committed: usize,
+    pub t_step_ms: f64,
+    pub t_edge_ms: f64,
+    pub t_up_ms: f64,
+    pub t_cloud_ms: f64,
+    pub t_down_ms: f64,
+    pub bytes_up: usize,
+    pub bytes_down: usize,
+    pub fading: bool,
+}
+
+/// End-to-end result of one request.
+#[derive(Debug, Clone, Default)]
+pub struct RequestResult {
+    pub method: String,
+    pub prompt_tokens: usize,
+    pub new_tokens: usize,
+    pub rounds: usize,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub bytes_up: usize,
+    pub bytes_down: usize,
+    pub drafted: usize,
+    pub accepted: usize,
+    pub energy: EnergyBreakdown,
+    pub rounds_log: Vec<RoundLog>,
+    pub output: Vec<i32>,
+}
+
+impl RequestResult {
+    /// The paper's headline metric: decode latency per generated token.
+    pub fn ms_per_token(&self) -> f64 {
+        self.decode_ms / self.new_tokens.max(1) as f64
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    pub fn etgr_tokens_per_s(&self) -> f64 {
+        self.new_tokens as f64 / (self.decode_ms / 1e3).max(1e-9)
+    }
+
+    pub fn energy_per_token_j(&self) -> f64 {
+        self.energy.total_j() / self.new_tokens.max(1) as f64
+    }
+}
+
+/// Everything an experiment configures about one decode pipeline.
+pub struct Pipeline<'a> {
+    pub draft: Box<dyn DraftSource + 'a>,
+    pub cloud: &'a mut CloudEngine,
+    pub channel: &'a mut dyn Channel,
+    pub policy: StridePolicy,
+    pub device: &'a EdgeDevice,
+    pub cloud_profile: &'a CloudProfile,
+    pub mode: VerifyMode,
+    pub wire: WireFormat,
+    pub temperature: f32,
+    pub top_p: f32,
+    pub method: String,
+    session_counter: u32,
+}
+
+impl<'a> Pipeline<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        draft: Box<dyn DraftSource + 'a>,
+        cloud: &'a mut CloudEngine,
+        channel: &'a mut dyn Channel,
+        policy: StridePolicy,
+        device: &'a EdgeDevice,
+        cloud_profile: &'a CloudProfile,
+        mode: VerifyMode,
+        temperature: f32,
+        top_p: f32,
+        method: impl Into<String>,
+    ) -> Pipeline<'a> {
+        Pipeline {
+            draft,
+            cloud,
+            channel,
+            policy,
+            device,
+            cloud_profile,
+            mode,
+            wire: WireFormat::Compact,
+            temperature,
+            top_p,
+            method: method.into(),
+            session_counter: 0,
+        }
+    }
+
+    pub fn with_wire(mut self, wire: WireFormat) -> Self {
+        self.wire = wire;
+        self
+    }
+
+    /// Run one request to EOS or `max_new` tokens. Virtual-time account:
+    ///   round = t_edge + t_up + t_cloud + t_down   (eq. 7)
+    pub fn run_request(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+        seed: u64,
+    ) -> Result<RequestResult> {
+        self.session_counter += 1;
+        let sid = self.session_counter;
+        let mut rng = SplitMix64::new(seed ^ 0x5E55_1011);
+        let mut now_ms = 0.0f64;
+        let mut meter = EnergyMeter::new(self.device);
+        let mut res = RequestResult {
+            method: self.method.clone(),
+            prompt_tokens: prompt.len(),
+            ..Default::default()
+        };
+
+        // --- session setup: prompt uplink + prefills -------------------
+        self.draft.reset()?;
+        self.draft.on_prompt(prompt.len());
+        self.cloud.start_session(sid, prompt)?;
+        let st0 = self.channel.sample(now_ms);
+        let prompt_bytes = protocol::prompt_air_bytes(prompt.len());
+        let up0 = st0.prop_ms + st0.up_ms(prompt_bytes);
+        res.bytes_up += prompt_bytes;
+        meter.radio_burst(st0.up_ms(prompt_bytes), now_ms + up0);
+        // edge draft prefill runs concurrently with cloud prefill; the
+        // pipeline stalls on the slower of the two.
+        let edge_prefill = if self.draft.is_neural() {
+            prompt.len() as f64 * self.device.prefill_ms_per_token
+        } else {
+            0.0
+        };
+        meter.compute(edge_prefill);
+        let cloud_prefill = self.cloud_profile.prefill_ms(prompt.len());
+        now_ms += up0 + edge_prefill.max(cloud_prefill);
+        res.prefill_ms = now_ms;
+
+        let mut committed: Vec<i32> = prompt.to_vec();
+        let eos = self.cloud.eos;
+        let mut round_idx = 0u32;
+
+        // --- decode loop (Algorithm 2) ---------------------------------
+        while res.new_tokens < max_new {
+            // capacity guard: pending(1) + k + safety must fit both caches
+            let cap = self
+                .cloud
+                .remaining_capacity(sid)
+                .min(255)
+                .saturating_sub(2);
+            if cap == 0 {
+                break;
+            }
+
+            // Step 1a: measure channel, choose K*.
+            let chan = self.channel.sample(now_ms);
+            let lat = LatencyModel::build(&chan, self.device, self.cloud_profile, self.wire);
+            let mut k = self.policy.choose(&lat);
+            k = k.min(8).min(cap);
+
+            // Step 1b: draft K tokens on the edge (real model).
+            let prop: Proposal =
+                self.draft
+                    .propose(&committed, k, self.temperature, self.top_p, &mut rng)?;
+            let k_actual = prop.tokens.len();
+            let t_edge = if self.draft.is_neural() {
+                self.device.round_overhead_ms
+                    + prop.edge_tokens as f64 * self.device.draft_ms_per_token
+            } else {
+                self.device.round_overhead_ms * 0.25 // lookup cost
+            };
+            meter.compute(t_edge);
+
+            // Step 1c: uplink.
+            let msg = DraftMsg {
+                session: sid,
+                round: round_idx,
+                tokens: prop.tokens.clone(),
+                chosen_probs: prop.chosen_probs.clone(),
+                mode: self.mode,
+                wire: self.wire,
+            };
+            let bytes_up = msg.air_bytes();
+            let tx_ms = chan.up_ms(bytes_up);
+            let t_up = chan.prop_ms + tx_ms;
+            meter.radio_burst(tx_ms, now_ms + t_edge + t_up);
+
+            // Step 2: cloud verification (real model + fused kernel).
+            let verdict = self.cloud.verify(
+                sid,
+                &committed,
+                &prop.tokens,
+                &prop.prob_rows,
+                self.mode,
+                self.temperature,
+                self.top_p,
+                &mut rng,
+            )?;
+            let t_cloud = self.cloud_profile.verify_ms(k_actual + 1);
+            meter.idle(t_cloud + chan.prop_ms);
+
+            // Step 3: downlink + state update.
+            let vmsg = VerifyMsg {
+                session: sid,
+                round: round_idx,
+                tau: verdict.outcome.tau as u8,
+                correction: verdict.outcome.correction,
+                eos: verdict.eos,
+            };
+            let bytes_down = vmsg.air_bytes();
+            let rx_ms = chan.down_ms(bytes_down);
+            let t_down = chan.prop_ms + rx_ms;
+            let t_step = t_edge + t_up + t_cloud + t_down;
+            meter.radio_burst(rx_ms, now_ms + t_step);
+            now_ms += t_step;
+
+            let tau = verdict.outcome.tau;
+            for &t in &prop.tokens[..tau] {
+                committed.push(t);
+            }
+            committed.push(verdict.outcome.correction);
+            let gained = tau + 1;
+            res.new_tokens += gained;
+            res.drafted += k_actual;
+            res.accepted += tau;
+            res.bytes_up += bytes_up;
+            res.bytes_down += bytes_down;
+            if k_actual > 0 {
+                self.policy.observe(tau, k_actual);
+            }
+            res.rounds += 1;
+            res.rounds_log.push(RoundLog {
+                k: k_actual,
+                tau,
+                committed: gained,
+                t_step_ms: t_step,
+                t_edge_ms: t_edge,
+                t_up_ms: t_up,
+                t_cloud_ms: t_cloud,
+                t_down_ms: t_down,
+                bytes_up,
+                bytes_down,
+                fading: chan.fading,
+            });
+            round_idx += 1;
+
+            if verdict.eos {
+                break;
+            }
+        }
+
+        res.decode_ms = now_ms - res.prefill_ms;
+        res.energy = meter.finish(now_ms);
+        res.output = committed[prompt.len()..].to_vec();
+        // the last speculative round can overshoot the token budget;
+        // truncate to max_new like any serving API would
+        res.output.truncate(max_new);
+        // truncate output at EOS if present
+        if let Some(p) = res.output.iter().position(|&t| t == eos) {
+            res.output.truncate(p + 1);
+        }
+        self.cloud.end_session(sid);
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{ChannelState, ConstChannel};
+    use crate::coordinator::edge::{ModelDraft, NoDraft};
+    use crate::devices::{A800_70B, JETSON_ORIN};
+    use crate::runtime::{Engine, Manifest, Registry};
+    use std::rc::Rc;
+
+    fn registry() -> Option<Registry> {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&root).ok()?;
+        if !m.weights.contains_key("draft_flex_llama2t") {
+            return None;
+        }
+        Some(Registry::open(Rc::new(Engine::cpu().ok()?), Rc::new(m)))
+    }
+
+    fn const_chan() -> ConstChannel {
+        ConstChannel(ChannelState {
+            up_bps: 50e6,
+            down_bps: 100e6,
+            prop_ms: 20.0,
+            fading: false,
+            loss_rate: 0.002,
+        })
+    }
+
+    #[test]
+    fn cloud_only_generates_one_token_per_round() {
+        let Some(reg) = registry() else { return };
+        let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+        let mut chan = const_chan();
+        let mut p = Pipeline::new(
+            Box::new(NoDraft),
+            &mut cloud,
+            &mut chan,
+            StridePolicy::None,
+            &JETSON_ORIN,
+            &A800_70B,
+            VerifyMode::Greedy,
+            0.0,
+            1.0,
+            "cloud-only",
+        );
+        let prompt = vec![1i32, 70, 77, 85];
+        let r = p.run_request(&prompt, 10, 42).unwrap();
+        assert_eq!(r.rounds, r.new_tokens);
+        assert_eq!(r.drafted, 0);
+        assert!(r.decode_ms > 0.0 && r.prefill_ms > 0.0);
+        // per-token latency ≈ t_fixed of the model (А800 + 2×prop 20ms)
+        assert!(r.ms_per_token() > A800_70B.t_base_ms);
+    }
+
+    #[test]
+    fn flexspec_beats_cloud_only_in_virtual_time() {
+        let Some(reg) = registry() else { return };
+        let prompt = vec![1i32, 70, 77, 85, 90, 71];
+
+        let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+        let mut chan = const_chan();
+        let mut co = Pipeline::new(
+            Box::new(NoDraft),
+            &mut cloud,
+            &mut chan,
+            StridePolicy::None,
+            &JETSON_ORIN,
+            &A800_70B,
+            VerifyMode::Greedy,
+            0.0,
+            1.0,
+            "cloud-only",
+        );
+        let base = co.run_request(&prompt, 24, 1).unwrap();
+
+        let draft_rt = reg.model("draft_flex_llama2t").unwrap();
+        let mut cloud2 = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+        let mut chan2 = const_chan();
+        let mut fs = Pipeline::new(
+            Box::new(ModelDraft::new(draft_rt).unwrap()),
+            &mut cloud2,
+            &mut chan2,
+            StridePolicy::Adaptive(AdaptivePolicy::new(8, 0.1)),
+            &JETSON_ORIN,
+            &A800_70B,
+            VerifyMode::Greedy,
+            0.0,
+            1.0,
+            "flexspec",
+        );
+        let flex = fs.run_request(&prompt, 24, 1).unwrap();
+
+        assert!(flex.acceptance_rate() > 0.5, "accept {}", flex.acceptance_rate());
+        assert!(
+            flex.ms_per_token() < base.ms_per_token() * 0.8,
+            "flex {} vs cloud-only {}",
+            flex.ms_per_token(),
+            base.ms_per_token()
+        );
+        // consistency: every round commits tau+1 tokens
+        for r in &flex.rounds_log {
+            assert_eq!(r.committed, r.tau + 1);
+            assert!(r.tau <= r.k);
+        }
+    }
+
+    #[test]
+    fn greedy_pipeline_output_matches_cloud_only_output() {
+        // Losslessness: greedy speculative decoding must produce the SAME
+        // token sequence as plain target decoding.
+        let Some(reg) = registry() else { return };
+        let prompt = vec![1i32, 64, 67, 86, 93];
+
+        let run = |draft: Box<dyn DraftSource>, policy: StridePolicy, name: &str| {
+            let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+            let mut chan = const_chan();
+            let mut p = Pipeline::new(
+                draft,
+                &mut cloud,
+                &mut chan,
+                policy,
+                &JETSON_ORIN,
+                &A800_70B,
+                VerifyMode::Greedy,
+                0.0,
+                1.0,
+                name,
+            );
+            p.run_request(&prompt, 20, 9).unwrap().output
+        };
+
+        let a = run(Box::new(NoDraft), StridePolicy::None, "cloud-only");
+        let draft_rt = reg.model("draft_flex_llama2t").unwrap();
+        let b = run(
+            Box::new(ModelDraft::new(draft_rt).unwrap()),
+            StridePolicy::Fixed(5),
+            "flexspec",
+        );
+        assert_eq!(a, b, "speculative decoding must be lossless");
+    }
+
+    #[test]
+    fn energy_batching_beats_streaming() {
+        // Fig. 6 mechanism end-to-end: FlexSpec's per-round bursts cost
+        // less radio energy per token than Cloud-Only streaming.
+        let Some(reg) = registry() else { return };
+        let prompt = vec![1i32, 70, 77, 85, 90, 71];
+
+        let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+        let mut chan = const_chan();
+        let mut co = Pipeline::new(
+            Box::new(NoDraft),
+            &mut cloud,
+            &mut chan,
+            StridePolicy::None,
+            &crate::devices::SNAPDRAGON_8G3,
+            &A800_70B,
+            VerifyMode::Greedy,
+            0.0,
+            1.0,
+            "cloud-only",
+        );
+        let base = co.run_request(&prompt, 24, 3).unwrap();
+
+        let draft_rt = reg.model("draft_flex_llama2t").unwrap();
+        let mut cloud2 = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+        let mut chan2 = const_chan();
+        let mut fs = Pipeline::new(
+            Box::new(ModelDraft::new(draft_rt).unwrap()),
+            &mut cloud2,
+            &mut chan2,
+            StridePolicy::Fixed(6),
+            &crate::devices::SNAPDRAGON_8G3,
+            &A800_70B,
+            VerifyMode::Greedy,
+            0.0,
+            1.0,
+            "flexspec",
+        );
+        let flex = fs.run_request(&prompt, 24, 3).unwrap();
+        let e_base = base.energy.radio_tail_j / base.new_tokens as f64;
+        let e_flex = flex.energy.radio_tail_j / flex.new_tokens as f64;
+        assert!(e_flex < e_base, "tail energy/token {e_flex} !< {e_base}");
+    }
+}

@@ -1,0 +1,269 @@
+//! Channel-aware adaptive speculation (paper §IV-B, eqs. (7)–(11)) —
+//! FlexSpec's second contribution.
+//!
+//! Each round the edge builds the refined latency model
+//!
+//!   T_step(K, R_n) = T_fixed + K * T_marginal(n)
+//!   T_fixed        = T_prop + T_base + T_down + O_header/R_n + beta
+//!   T_marginal(n)  = alpha_edge + b/R_n + delta_cloud
+//!
+//! and selects K* = argmax_{K in [1, K_max]} E[tau|K] / T_step(K, R_n).
+//! E[tau|K] uses either the linear EMA approximation 1 + gamma*K of
+//! Algorithm 2 or the geometric model sum_{i<=K} gamma^i (both from the
+//! paper's §IV-B.2 discussion); the +1 counts the correction/bonus token
+//! every round commits.
+
+use crate::channel::ChannelState;
+use crate::devices::{CloudProfile, EdgeDevice};
+use crate::protocol::{self, WireFormat};
+use crate::util::stats::Ema;
+
+/// How E[tau | K] is approximated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AcceptanceModel {
+    /// E[tau|K] ≈ gamma_hat * K (paper's EMA linearization).
+    Linear,
+    /// E[tau|K] = sum_{i=1..K} gamma^i (i.i.d. geometric acceptance).
+    Geometric,
+}
+
+/// The per-round latency decomposition (returned for metrics/reports).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyModel {
+    pub t_fixed_ms: f64,
+    pub t_marginal_ms: f64,
+}
+
+impl LatencyModel {
+    /// Eq. (10).
+    pub fn build(
+        chan: &ChannelState,
+        device: &EdgeDevice,
+        cloud: &CloudProfile,
+        wire: WireFormat,
+    ) -> LatencyModel {
+        let header_ms = (protocol::O_HEADER_BYTES as f64 * 8.0) / chan.up_bps * 1e3;
+        let downlink_ms = (protocol::O_HEADER_BYTES as f64 * 8.0) / chan.down_bps * 1e3 + 16.0 / chan.down_bps * 1e3;
+        let t_fixed = 2.0 * chan.prop_ms          // T_prop up + T_down prop
+            + cloud.t_base_ms                     // T_base
+            + header_ms + downlink_ms             // O_header / R_n
+            + device.round_overhead_ms; // beta
+        let token_bytes = protocol::bits_per_token(wire) / 8.0;
+        let arq_ms = token_bytes / crate::channel::MTU_BYTES * chan.loss_rate * crate::channel::RTO_MS;
+        let t_marginal = device.draft_ms_per_token            // alpha_edge
+            + protocol::bits_per_token(wire) / chan.up_bps * 1e3 // b / R_n
+            + arq_ms                                          // expected ARQ cost
+            + cloud.delta_per_token_ms; // delta_cloud
+        LatencyModel {
+            t_fixed_ms: t_fixed,
+            t_marginal_ms: t_marginal,
+        }
+    }
+
+    /// T_step(K) of eq. (10).
+    pub fn step_ms(&self, k: usize) -> f64 {
+        self.t_fixed_ms + k as f64 * self.t_marginal_ms
+    }
+}
+
+pub fn expected_tau(model: AcceptanceModel, gamma: f64, k: usize) -> f64 {
+    match model {
+        AcceptanceModel::Linear => gamma * k as f64,
+        AcceptanceModel::Geometric => {
+            let mut s = 0.0;
+            let mut g = gamma;
+            for _ in 0..k {
+                s += g;
+                g *= gamma;
+            }
+            s
+        }
+    }
+}
+
+/// ETGR(K) of eq. (2)/(11): committed tokens per ms. Every round commits
+/// the accepted prefix plus one correction/bonus token.
+pub fn etgr(model: AcceptanceModel, gamma: f64, lat: &LatencyModel, k: usize) -> f64 {
+    (1.0 + expected_tau(model, gamma, k)) / lat.step_ms(k)
+}
+
+/// The channel-aware policy state: gamma-hat EMA + configuration.
+#[derive(Debug, Clone)]
+pub struct AdaptivePolicy {
+    pub gamma: Ema,
+    pub k_max: usize,
+    pub model: AcceptanceModel,
+}
+
+impl AdaptivePolicy {
+    /// Algorithm 2 initialization: gamma_hat <- 0.8, decay mu.
+    ///
+    /// Default acceptance model is GEOMETRIC: the paper's linear EMA
+    /// approximation `E[tau|K] ≈ gamma*K` makes ETGR monotone in K
+    /// (d/dK has constant sign), so K* degenerates to 1 or K_max and the
+    /// policy cannot express the Fig.-2 interior optima. The geometric
+    /// model `sum gamma^i` (also §IV-B.2) saturates and yields genuine
+    /// channel-dependent K*. The linear variant is kept for the ablation.
+    pub fn new(k_max: usize, mu: f64) -> AdaptivePolicy {
+        AdaptivePolicy {
+            gamma: Ema::new(0.8, mu),
+            k_max,
+            model: AcceptanceModel::Geometric,
+        }
+    }
+
+    pub fn with_model(mut self, model: AcceptanceModel) -> AdaptivePolicy {
+        self.model = model;
+        self
+    }
+
+    /// Eq. (11): search K in [1, K_max] maximizing ETGR. K_max is tiny
+    /// (8), so exhaustive search beats any closed form.
+    pub fn select_k(&self, lat: &LatencyModel) -> usize {
+        let g = self.gamma.get();
+        let mut best_k = 1;
+        let mut best = f64::NEG_INFINITY;
+        for k in 1..=self.k_max {
+            let v = etgr(self.model, g, lat, k);
+            if v > best {
+                best = v;
+                best_k = k;
+            }
+        }
+        best_k
+    }
+
+    /// Algorithm 2 step 3: gamma_hat <- (1-mu) gamma_hat + mu (tau/K).
+    pub fn observe(&mut self, tau: usize, k: usize) {
+        self.gamma.update(tau as f64 / k.max(1) as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::ChannelState;
+    use crate::devices::{A800_70B, JETSON_ORIN};
+    use crate::util::prop;
+
+    fn state(up_mbps: f64, prop_ms: f64) -> ChannelState {
+        ChannelState {
+            up_bps: up_mbps * 1e6,
+            down_bps: up_mbps * 2e6,
+            prop_ms,
+            fading: false,
+            loss_rate: if up_mbps < 1.0 { 0.25 } else if up_mbps < 10.0 { 0.05 } else { 0.005 },
+        }
+    }
+
+    /// Landscape tests use the Sketch wire — the paper's §III-D
+    /// per-token-payload operating point where the channel term is the
+    /// lever (FlexSpec's compact wire moves the lever to gamma + fixed
+    /// costs; both are exercised by the pipeline tests).
+    fn lat(up_mbps: f64, prop_ms: f64) -> LatencyModel {
+        LatencyModel::build(
+            &state(up_mbps, prop_ms),
+            &JETSON_ORIN,
+            &A800_70B,
+            WireFormat::Sketch,
+        )
+    }
+
+    #[test]
+    fn latency_model_is_affine_in_k() {
+        let l = lat(50.0, 95.0);
+        assert!((l.step_ms(5) - l.step_ms(0) - 5.0 * l.t_marginal_ms).abs() < 1e-9);
+        assert!(l.t_fixed_ms > A800_70B.t_base_ms);
+    }
+
+    #[test]
+    fn weak_channel_inflates_marginal_cost() {
+        let strong = lat(300.0, 18.0);
+        let weak = lat(1.5, 180.0);
+        assert!(weak.t_marginal_ms > 3.0 * strong.t_marginal_ms);
+        assert!(weak.t_fixed_ms > strong.t_fixed_ms);
+    }
+
+    #[test]
+    fn fig2_kstar_shifts_with_signal_strength() {
+        // The paper's Fig. 2: K* small (≈2) in weak signal, large (≈6)
+        // in strong signal. "Weak (SNR < 5 dB)" is the deep-fade state:
+        // wifi rate / 8, propagation x2.5 (elevator/subway), and the
+        // post-evolution acceptance gamma ≈ 0.6 FlexSpec operates at.
+        let mut p = AdaptivePolicy::new(8, 0.1);
+        p.gamma = Ema::new(0.6, 0.1);
+        let k_weak = p.select_k(&lat(1.5 / 8.0, 450.0));
+        let k_medium = p.select_k(&lat(50.0, 95.0));
+        p.gamma = Ema::new(0.8, 0.1);
+        let k_strong = p.select_k(&lat(300.0, 18.0));
+        assert!(k_weak <= 3, "weak K* = {k_weak}");
+        assert!(k_medium > k_weak, "medium K* = {k_medium}");
+        assert!(k_strong >= 6, "strong K* = {k_strong}");
+    }
+
+    #[test]
+    fn low_acceptance_shrinks_k() {
+        let mut p = AdaptivePolicy::new(8, 0.5);
+        let l = lat(300.0, 18.0);
+        let k_high = p.select_k(&l);
+        for _ in 0..30 {
+            p.observe(0, 5); // constant rejection
+        }
+        let k_low = p.select_k(&l);
+        assert!(k_low < k_high, "{k_low} !< {k_high}");
+        assert!(p.gamma.get() < 0.1);
+    }
+
+    #[test]
+    fn large_prop_delay_amortizes_toward_larger_k() {
+        // §IV-B.2: larger T_fixed incentivizes larger strides.
+        let p = AdaptivePolicy::new(8, 0.1);
+        let near = p.select_k(&lat(50.0, 10.0));
+        let far = p.select_k(&lat(50.0, 400.0));
+        assert!(far >= near, "far {far} < near {near}");
+    }
+
+    #[test]
+    fn geometric_model_is_more_conservative() {
+        let l = lat(300.0, 18.0);
+        let lin = AdaptivePolicy::new(8, 0.1).with_model(AcceptanceModel::Linear);
+        let geo = AdaptivePolicy::new(8, 0.1).with_model(AcceptanceModel::Geometric);
+        assert!(geo.select_k(&l) <= lin.select_k(&l));
+        // expected tau agrees at K=1
+        assert!(
+            (expected_tau(AcceptanceModel::Linear, 0.7, 1)
+                - expected_tau(AcceptanceModel::Geometric, 0.7, 1))
+            .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn policy_bounds_property() {
+        prop::check(200, |rng| {
+            let mut p = AdaptivePolicy::new(8, 0.2);
+            // random gamma history
+            for _ in 0..(rng.next_range(20)) {
+                let k = 1 + rng.next_range(8) as usize;
+                let tau = rng.next_range(k as u64 + 1) as usize;
+                p.observe(tau, k);
+            }
+            let l = lat(rng.range_f64(0.5, 400.0), rng.range_f64(5.0, 500.0));
+            let k = p.select_k(&l);
+            prop::assert_prop((1..=8).contains(&k), format!("K*={k} out of range"))?;
+            let g = p.gamma.get();
+            prop::assert_prop((0.0..=1.0).contains(&g), format!("gamma {g}"))
+        });
+    }
+
+    #[test]
+    fn etgr_matches_hand_computation() {
+        let l = LatencyModel {
+            t_fixed_ms: 100.0,
+            t_marginal_ms: 10.0,
+        };
+        // gamma=0.5, K=4, linear: (1 + 2)/140
+        let v = etgr(AcceptanceModel::Linear, 0.5, &l, 4);
+        assert!((v - 3.0 / 140.0).abs() < 1e-12);
+    }
+}

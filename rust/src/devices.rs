@@ -1,0 +1,207 @@
+//! Edge device + cloud server profiles (DESIGN.md substitution log).
+//!
+//! Table V only depends on the ratio between local drafting speed and the
+//! network + cloud service rate; these profiles carry exactly the numbers
+//! the paper reports for each device (draft ms/token) plus energy/thermal
+//! coefficients for Table V / Fig. 6.
+
+/// An edge device hosting the draft model (Table V).
+#[derive(Debug, Clone)]
+pub struct EdgeDevice {
+    pub name: &'static str,
+    pub processor: &'static str,
+    /// alpha_edge of eq. (10): marginal draft latency per token, ms.
+    pub draft_ms_per_token: f64,
+    /// beta of eq. (10): fixed per-round edge overhead (scheduling,
+    /// tokenizer, NPU dispatch), ms.
+    pub round_overhead_ms: f64,
+    /// Draft prefill throughput (prompt ingestion), ms per token.
+    pub prefill_ms_per_token: f64,
+    /// Active compute power while drafting, watts.
+    pub compute_watts: f64,
+    /// Radio transmit/receive power, watts (cellular active state).
+    pub radio_active_watts: f64,
+    /// Radio tail power after activity (the RRC tail the paper's Fig. 6
+    /// blames for Cloud-Only energy), watts.
+    pub radio_tail_watts: f64,
+    /// Radio tail duration after each burst, ms.
+    pub radio_tail_ms: f64,
+    /// Idle platform power, watts.
+    pub idle_watts: f64,
+    /// Sustained thermal budget class (for the RQ5 discussion).
+    pub thermal_class: &'static str,
+}
+
+pub const JETSON_ORIN: EdgeDevice = EdgeDevice {
+    name: "Jetson AGX Orin",
+    processor: "Ampere GPU",
+    draft_ms_per_token: 8.5,
+    round_overhead_ms: 2.0,
+    prefill_ms_per_token: 1.2,
+    compute_watts: 18.0,
+    radio_active_watts: 1.1,
+    radio_tail_watts: 0.6,
+    radio_tail_ms: 120.0,
+    idle_watts: 6.0,
+    thermal_class: "Low-Med",
+};
+
+pub const IPHONE_15_PRO_MAX: EdgeDevice = EdgeDevice {
+    name: "iPhone 15 Pro Max",
+    processor: "A17 Pro (NPU)",
+    draft_ms_per_token: 12.0,
+    round_overhead_ms: 2.5,
+    prefill_ms_per_token: 1.8,
+    compute_watts: 4.5,
+    radio_active_watts: 1.3,
+    radio_tail_watts: 0.7,
+    radio_tail_ms: 150.0,
+    idle_watts: 0.9,
+    thermal_class: "Low-Med",
+};
+
+pub const SNAPDRAGON_8G3: EdgeDevice = EdgeDevice {
+    name: "Snapdragon 8 Gen 3",
+    processor: "Hexagon NPU",
+    draft_ms_per_token: 10.5,
+    round_overhead_ms: 2.5,
+    prefill_ms_per_token: 1.6,
+    compute_watts: 5.0,
+    radio_active_watts: 1.3,
+    radio_tail_watts: 0.7,
+    radio_tail_ms: 150.0,
+    idle_watts: 1.0,
+    thermal_class: "Low-Med",
+};
+
+pub const RASPBERRY_PI_5: EdgeDevice = EdgeDevice {
+    name: "Raspberry Pi 5",
+    processor: "Cortex-A76 (CPU)",
+    draft_ms_per_token: 145.0,
+    round_overhead_ms: 4.0,
+    prefill_ms_per_token: 22.0,
+    compute_watts: 7.5,
+    radio_active_watts: 0.9,
+    radio_tail_watts: 0.4,
+    radio_tail_ms: 100.0,
+    idle_watts: 2.7,
+    thermal_class: "Med",
+};
+
+pub fn all_edge_devices() -> [&'static EdgeDevice; 4] {
+    [&RASPBERRY_PI_5, &JETSON_ORIN, &IPHONE_15_PRO_MAX, &SNAPDRAGON_8G3]
+}
+
+pub fn edge_device(name: &str) -> Option<&'static EdgeDevice> {
+    let n = name.to_ascii_lowercase();
+    all_edge_devices()
+        .into_iter()
+        .find(|d| d.name.to_ascii_lowercase().contains(&n) || n.contains("jetson") && d.name.contains("Jetson"))
+}
+
+impl EdgeDevice {
+    pub fn draft_throughput_tps(&self) -> f64 {
+        1e3 / self.draft_ms_per_token
+    }
+}
+
+/// A cloud serving tier hosting the target model.
+///
+/// Calibration: `t_base_ms` for the A800/70B pair is set so Cloud-Only
+/// per-token latency lands near the paper's anchors (EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct CloudProfile {
+    pub name: &'static str,
+    /// T_base of eq. (9): fixed per-step verification cost, ms.
+    pub t_base_ms: f64,
+    /// delta_cloud of eq. (9): marginal per-verified-token cost, ms.
+    pub delta_per_token_ms: f64,
+    /// Prefill cost per prompt token, ms.
+    pub prefill_ms_per_token: f64,
+}
+
+pub const A800_70B: CloudProfile = CloudProfile {
+    name: "8xA800 / 70B-class",
+    t_base_ms: 378.0,
+    delta_per_token_ms: 4.0,
+    prefill_ms_per_token: 0.9,
+};
+
+pub const H800_70B: CloudProfile = CloudProfile {
+    name: "8xH800 / 70B-class",
+    t_base_ms: 245.0,
+    delta_per_token_ms: 2.6,
+    prefill_ms_per_token: 0.6,
+};
+
+pub const V100_70B: CloudProfile = CloudProfile {
+    name: "8xV100 / 70B-class",
+    t_base_ms: 610.0,
+    delta_per_token_ms: 6.5,
+    prefill_ms_per_token: 1.5,
+};
+
+/// Llama-3 70B on H800-class serving (Table VI: baseline 395/550 ms).
+pub const CLOUD_LLAMA3: CloudProfile = CloudProfile {
+    name: "8xA800 / Llama-3-70B",
+    t_base_ms: 341.0,
+    delta_per_token_ms: 3.8,
+    prefill_ms_per_token: 0.9,
+};
+
+/// Mixtral 8x7B: conditional compute → faster base step (Table VI:
+/// baseline 320/485 ms).
+pub const CLOUD_MIXTRAL: CloudProfile = CloudProfile {
+    name: "8xA800 / Mixtral-8x7B",
+    t_base_ms: 266.0,
+    delta_per_token_ms: 2.2,
+    prefill_ms_per_token: 0.5,
+};
+
+impl CloudProfile {
+    /// eq. (9): verification latency for K tokens (+1 for the committed
+    /// token row that rides along in the block).
+    pub fn verify_ms(&self, k: usize) -> f64 {
+        self.t_base_ms + k as f64 * self.delta_per_token_ms
+    }
+
+    pub fn prefill_ms(&self, prompt_len: usize) -> f64 {
+        self.t_base_ms * 0.6 + prompt_len as f64 * self.prefill_ms_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_throughputs_match_paper() {
+        assert!((RASPBERRY_PI_5.draft_throughput_tps() - 6.9).abs() < 0.1);
+        assert!((JETSON_ORIN.draft_throughput_tps() - 117.6).abs() < 0.5);
+        assert!((IPHONE_15_PRO_MAX.draft_throughput_tps() - 83.3).abs() < 0.5);
+        assert!((SNAPDRAGON_8G3.draft_throughput_tps() - 95.2).abs() < 0.5);
+    }
+
+    #[test]
+    fn verify_ms_is_affine() {
+        let d0 = A800_70B.verify_ms(0);
+        let d4 = A800_70B.verify_ms(4);
+        let d8 = A800_70B.verify_ms(8);
+        assert!((d8 - d4 - (d4 - d0)).abs() < 1e-9);
+        assert!(d0 >= A800_70B.t_base_ms);
+    }
+
+    #[test]
+    fn cloud_tiers_ordered() {
+        assert!(H800_70B.t_base_ms < A800_70B.t_base_ms);
+        assert!(A800_70B.t_base_ms < V100_70B.t_base_ms);
+        assert!(CLOUD_MIXTRAL.t_base_ms < CLOUD_LLAMA3.t_base_ms);
+    }
+
+    #[test]
+    fn device_lookup() {
+        assert!(edge_device("jetson").is_some());
+        assert!(edge_device("raspberry pi 5").is_some());
+        assert!(edge_device("pdp-11").is_none());
+    }
+}

@@ -1,0 +1,158 @@
+//! Edge energy model (DESIGN.md S11, paper RQ5 / Fig. 6).
+//!
+//! Cellular radios burn most of their energy in the *tail* states that
+//! follow every transmission burst (RRC CONNECTED → tail). Cloud-Only
+//! decoding streams one round-trip per token, paying the active+tail
+//! price per token; FlexSpec batches K tokens per burst, amortizing it.
+//! The model tracks compute, radio-active, radio-tail and idle joules
+//! separately so Fig. 6's breakdown can be regenerated.
+
+use crate::devices::EdgeDevice;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub compute_j: f64,
+    pub radio_active_j: f64,
+    pub radio_tail_j: f64,
+    pub idle_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.radio_active_j + self.radio_tail_j + self.idle_j
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.compute_j += other.compute_j;
+        self.radio_active_j += other.radio_active_j;
+        self.radio_tail_j += other.radio_tail_j;
+        self.idle_j += other.idle_j;
+    }
+}
+
+/// Per-session energy accounting driven by the pipeline's virtual clock.
+#[derive(Debug, Clone)]
+pub struct EnergyMeter {
+    device: EdgeDevice,
+    pub breakdown: EnergyBreakdown,
+    /// Virtual time when the current radio tail expires.
+    tail_until_ms: f64,
+    last_event_ms: f64,
+}
+
+impl EnergyMeter {
+    pub fn new(device: &EdgeDevice) -> EnergyMeter {
+        EnergyMeter {
+            device: device.clone(),
+            breakdown: EnergyBreakdown::default(),
+            tail_until_ms: 0.0,
+            last_event_ms: 0.0,
+        }
+    }
+
+    /// Local compute for `ms` of active drafting/prefill.
+    pub fn compute(&mut self, ms: f64) {
+        self.breakdown.compute_j += self.device.compute_watts * ms / 1e3;
+    }
+
+    /// Radio actively transmitting/receiving for `ms`, ending at virtual
+    /// time `end_ms`; restarts the tail window.
+    pub fn radio_burst(&mut self, ms: f64, end_ms: f64) {
+        self.breakdown.radio_active_j += self.device.radio_active_watts * ms / 1e3;
+        // a new burst pre-empts the previous tail: account the part of the
+        // old tail that actually elapsed before this burst started.
+        let burst_start = end_ms - ms;
+        self.settle_tail(burst_start);
+        self.tail_until_ms = end_ms + self.device.radio_tail_ms;
+        self.last_event_ms = end_ms;
+    }
+
+    /// Account tail energy elapsed up to `now_ms`.
+    fn settle_tail(&mut self, now_ms: f64) {
+        if self.tail_until_ms > self.last_event_ms {
+            let tail_end = self.tail_until_ms.min(now_ms);
+            let dur = (tail_end - self.last_event_ms).max(0.0);
+            self.breakdown.radio_tail_j += self.device.radio_tail_watts * dur / 1e3;
+            self.last_event_ms = tail_end.max(self.last_event_ms);
+        }
+    }
+
+    /// Idle platform draw while waiting (cloud verify, downlink wait).
+    pub fn idle(&mut self, ms: f64) {
+        self.breakdown.idle_j += self.device.idle_watts * ms / 1e3;
+    }
+
+    /// Finalize at end of request: flush any remaining tail.
+    pub fn finish(&mut self, now_ms: f64) -> EnergyBreakdown {
+        self.settle_tail(now_ms.max(self.tail_until_ms));
+        self.breakdown.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::SNAPDRAGON_8G3;
+
+    #[test]
+    fn compute_energy_is_power_times_time() {
+        let mut m = EnergyMeter::new(&SNAPDRAGON_8G3);
+        m.compute(1000.0);
+        assert!((m.breakdown.compute_j - SNAPDRAGON_8G3.compute_watts).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tail_follows_burst_and_is_flushed_on_finish() {
+        let mut m = EnergyMeter::new(&SNAPDRAGON_8G3);
+        m.radio_burst(10.0, 100.0);
+        let b = m.finish(100.0 + SNAPDRAGON_8G3.radio_tail_ms + 500.0);
+        let expect_tail = SNAPDRAGON_8G3.radio_tail_watts * SNAPDRAGON_8G3.radio_tail_ms / 1e3;
+        assert!((b.radio_tail_j - expect_tail).abs() < 1e-9, "{b:?}");
+    }
+
+    #[test]
+    fn back_to_back_bursts_share_tail() {
+        // two bursts 10ms apart: only 10ms of tail between them elapses
+        let mut m = EnergyMeter::new(&SNAPDRAGON_8G3);
+        m.radio_burst(5.0, 50.0);
+        m.radio_burst(5.0, 60.0);
+        let b = m.finish(60.0 + SNAPDRAGON_8G3.radio_tail_ms);
+        let expect = SNAPDRAGON_8G3.radio_tail_watts * (5.0 + SNAPDRAGON_8G3.radio_tail_ms) / 1e3;
+        assert!((b.radio_tail_j - expect).abs() < 1e-6, "{b:?} vs {expect}");
+    }
+
+    #[test]
+    fn streaming_pays_more_tail_than_bursting() {
+        // Fig. 6's mechanism: N small bursts spaced beyond the tail window
+        // cost ~N full tails; one big burst costs one tail.
+        let dev = &SNAPDRAGON_8G3;
+        let mut stream = EnergyMeter::new(dev);
+        let mut now = 0.0;
+        for _ in 0..10 {
+            now += 500.0; // > tail window apart
+            stream.radio_burst(2.0, now);
+        }
+        let s = stream.finish(now + dev.radio_tail_ms);
+
+        let mut burst = EnergyMeter::new(dev);
+        burst.radio_burst(20.0, 500.0);
+        let b = burst.finish(500.0 + dev.radio_tail_ms);
+
+        assert!(s.radio_tail_j > 5.0 * b.radio_tail_j, "{s:?} vs {b:?}");
+        // same active energy (same bytes worth of airtime)
+        assert!((s.radio_active_j - b.radio_active_j).abs() < 1e-9);
+    }
+
+    #[test]
+    fn totals_add_up() {
+        let mut m = EnergyMeter::new(&SNAPDRAGON_8G3);
+        m.compute(100.0);
+        m.idle(200.0);
+        m.radio_burst(10.0, 300.0);
+        let b = m.finish(1000.0);
+        assert!(
+            (b.total_j() - (b.compute_j + b.radio_active_j + b.radio_tail_j + b.idle_j)).abs()
+                < 1e-12
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! Design-choice ablations beyond the paper's Fig. 5 (DESIGN.md §Perf):
+//!
+//!  A1 — acceptance model: linear EMA (paper's Algorithm-2 approximation)
+//!       vs geometric (our default; see policy.rs for why linear
+//!       degenerates to boundary K*).
+//!  A2 — gamma-hat EMA decay mu: adaptation speed vs stability.
+//!  A3 — wire format for FlexSpec itself: compact indices (the paper's
+//!       design) vs shipping the full sketch (what tightly-coupled
+//!       baselines pay).
+//!  A4 — verification batching window (multi-user serving).
+
+use super::{Ctx, REGIME_A};
+use crate::baselines::Method;
+use crate::channel::{NetworkKind, NetworkProfile};
+use crate::coordinator::policy::{AcceptanceModel, AdaptivePolicy};
+use crate::coordinator::{serve, CloudEngine, Pipeline, ServeConfig, StridePolicy};
+use crate::devices::{A800_70B, JETSON_ORIN};
+use crate::metrics::MetricsSet;
+use crate::protocol::WireFormat;
+use crate::util::table::Table;
+use anyhow::Result;
+
+fn flex_cell(
+    ctx: &Ctx,
+    label: &str,
+    network: NetworkKind,
+    policy: &dyn Fn() -> StridePolicy,
+    wire: WireFormat,
+    set: &mut MetricsSet,
+) -> Result<()> {
+    let mut gen = crate::workload::WorkloadGen::new("gsm8k", ctx.seed)?;
+    let mut cloud = CloudEngine::new(&ctx.reg, "lora_llama2t_gsm8k", crate::workload::EOS)?;
+    for i in 0..ctx.requests {
+        let req = gen.next_request();
+        let mut chan = NetworkProfile::new(network).channel(ctx.seed ^ (i as u64 * 7793 + 11));
+        let mut pipe = Pipeline::new(
+            Method::FlexSpec.draft_source(&ctx.reg, "llama2t", "gsm8k")?,
+            &mut cloud,
+            &mut chan,
+            policy(),
+            &JETSON_ORIN,
+            &A800_70B,
+            REGIME_A.mode,
+            REGIME_A.temperature,
+            REGIME_A.top_p,
+            label,
+        )
+        .with_wire(wire);
+        let r = pipe.run_request(&req.prompt, req.max_new, ctx.seed ^ i as u64)?;
+        set.record(&r);
+    }
+    Ok(())
+}
+
+pub fn run(ctx: &Ctx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+
+    // A1: acceptance model, weak WiFi (where K* choice matters most)
+    let mut set = MetricsSet::default();
+    for (label, model) in [
+        ("geometric (default)", AcceptanceModel::Geometric),
+        ("linear (paper eq. approx)", AcceptanceModel::Linear),
+    ] {
+        flex_cell(
+            ctx, label, NetworkKind::WifiWeak,
+            &|| StridePolicy::Adaptive(AdaptivePolicy::new(8, 0.15).with_model(model)),
+            WireFormat::Compact, &mut set,
+        )?;
+    }
+    tables.push(set.table("Ablation A1 — E[tau|K] model (GSM8K, weak WiFi)", None));
+
+    // A2: EMA decay mu
+    let mut set = MetricsSet::default();
+    for mu in [0.05, 0.15, 0.5] {
+        flex_cell(
+            ctx, &format!("mu={mu}"), NetworkKind::WifiWeak,
+            &|| StridePolicy::Adaptive(AdaptivePolicy::new(8, mu)),
+            WireFormat::Compact, &mut set,
+        )?;
+    }
+    tables.push(set.table("Ablation A2 — gamma-hat EMA decay (GSM8K, weak WiFi)", None));
+
+    // A3: FlexSpec wire format
+    let mut set = MetricsSet::default();
+    for (label, wire) in [
+        ("compact indices (paper design)", WireFormat::Compact),
+        ("full sketch (baseline wire)", WireFormat::Sketch),
+    ] {
+        flex_cell(
+            ctx, label, NetworkKind::WifiWeak,
+            &|| StridePolicy::Adaptive(AdaptivePolicy::new(8, 0.15)),
+            wire, &mut set,
+        )?;
+    }
+    tables.push(set.table("Ablation A3 — FlexSpec uplink format (GSM8K, weak WiFi)", None));
+
+    // A4: verification batching window (multi-user serving)
+    let mut t = Table::new(
+        "Ablation A4 — verification batching window (6 users, 5G, mtbench)",
+        &["window (ms)", "mean batch", "throughput tok/s", "p95 request ms", "T_base saved ms"],
+    );
+    let draft = ctx.reg.model("draft_flex_llama2t")?;
+    let mut gen = crate::workload::WorkloadGen::new("mtbench", ctx.seed)?;
+    let prompts: Vec<Vec<i32>> = gen.take(6).into_iter().map(|r| r.prompt).collect();
+    for window in [0.01, 12.0, 60.0] {
+        let mut cloud = CloudEngine::new(&ctx.reg, "lora_llama2t_mtbench", crate::workload::EOS)?;
+        let cfg = ServeConfig {
+            users: 6,
+            max_new: 16,
+            window_ms: window,
+            arrival_mean_ms: 5.0,
+            seed: ctx.seed,
+            ..Default::default()
+        };
+        let rep = serve(
+            &mut cloud, draft.clone(), &prompts, &JETSON_ORIN, &A800_70B,
+            &NetworkProfile::new(NetworkKind::FiveG), &cfg,
+        )?;
+        t.row(vec![
+            format!("{window}"),
+            format!("{:.2}", rep.mean_batch),
+            format!("{:.1}", rep.throughput_tok_s()),
+            format!("{:.0}", rep.request_latency.p95()),
+            format!("{:.0}", rep.t_base_saved_ms),
+        ]);
+    }
+    tables.push(t);
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_produce_all_tables() {
+        let Some(mut ctx) = super::super::test_ctx() else { return };
+        ctx.requests = 1;
+        let tables = run(&ctx).unwrap();
+        assert_eq!(tables.len(), 4);
+        assert_eq!(tables[0].rows.len(), 2);
+        assert_eq!(tables[1].rows.len(), 3);
+        // A3: compact wire must beat the sketch wire on weak WiFi
+        let parse = |s: &str| s.parse::<f64>().unwrap();
+        let compact = parse(&tables[2].rows[0][1]);
+        let sketch = parse(&tables[2].rows[1][1]);
+        assert!(compact < sketch, "compact {compact} vs sketch {sketch}");
+    }
+}

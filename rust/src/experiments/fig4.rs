@@ -1,0 +1,48 @@
+//! Fig. 4 — end-to-end latency comparison on GSM8K (bar chart data):
+//! the Table III gsm8k rows rendered as per-network bar series with an
+//! ASCII bar preview.
+
+use super::{run_cell_default, Ctx, REGIME_A};
+use crate::baselines::Method;
+use crate::channel::NetworkKind;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<Vec<Table>> {
+    let methods = Method::table_columns();
+    let mut t = Table::new(
+        "Fig. 4 — GSM8K end-to-end latency per token (Regime A)",
+        &["Network", "Method", "ms/token", "Speedup", "bar"],
+    );
+    for network in NetworkKind::all() {
+        let cells: Vec<_> = methods
+            .iter()
+            .map(|m| run_cell_default(ctx, *m, "gsm8k", network, REGIME_A))
+            .collect::<Result<_>>()?;
+        let base = cells[0].latency();
+        let max = cells.iter().map(|c| c.latency()).fold(0.0, f64::max);
+        for (m, c) in methods.iter().zip(&cells) {
+            let bar_len = ((c.latency() / max) * 40.0).round() as usize;
+            t.row(vec![
+                network.label().to_string(),
+                m.label().to_string(),
+                format!("{:.1}", c.latency()),
+                format!("{:.2}x", base / c.latency()),
+                "#".repeat(bar_len.max(1)),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig4_rows_cover_grid() {
+        let Some(mut ctx) = super::super::test_ctx() else { return };
+        ctx.requests = 1;
+        let t = &super::run(&ctx).unwrap()[0];
+        assert_eq!(t.rows.len(), 3 * 7);
+        assert!(t.render().contains("GSM8K"));
+    }
+}

@@ -1,0 +1,256 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (DESIGN.md per-experiment index). Each experiment returns rendered
+//! `Table`s; `report` collects them into EXPERIMENTS-results.md.
+
+pub mod ablations;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table5;
+pub mod table6;
+
+use crate::baselines::Method;
+use crate::channel::{NetworkKind, NetworkProfile};
+use crate::coordinator::{CloudEngine, Pipeline};
+use crate::devices::{CloudProfile, EdgeDevice, A800_70B, JETSON_ORIN};
+use crate::protocol::VerifyMode;
+use crate::runtime::Registry;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub reg: Registry,
+    /// Requests per (method, dataset, network) cell.
+    pub requests: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Ctx {
+    pub fn open(requests: usize, seed: u64) -> Result<Ctx> {
+        let reg = Registry::open_default()?;
+        crate::workload::corpus::validate_against_manifest(&reg.manifest)?;
+        Ok(Ctx {
+            reg,
+            requests,
+            seed,
+            verbose: false,
+        })
+    }
+}
+
+/// Aggregated result of one evaluation cell.
+#[derive(Debug, Clone, Default)]
+pub struct CellStats {
+    pub method: String,
+    pub ms_per_token: Summary,
+    pub acceptance: Summary,
+    pub energy_j_per_token: Summary,
+    pub bytes_up_per_token: Summary,
+    pub mean_k: Summary,
+    pub tokens: usize,
+}
+
+impl CellStats {
+    pub fn latency(&self) -> f64 {
+        self.ms_per_token.mean()
+    }
+
+    pub fn speedup_vs(&self, baseline: &CellStats) -> f64 {
+        baseline.latency() / self.latency()
+    }
+}
+
+/// Evaluation regime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Regime {
+    pub mode: VerifyMode,
+    pub temperature: f32,
+    pub top_p: f32,
+}
+
+pub const REGIME_A: Regime = Regime {
+    mode: VerifyMode::Greedy,
+    temperature: 0.0,
+    top_p: 1.0,
+};
+
+pub const REGIME_B: Regime = Regime {
+    mode: VerifyMode::Stochastic,
+    temperature: 1.0,
+    top_p: 0.9,
+};
+
+/// Run one (method, dataset, network) cell: `ctx.requests` requests of
+/// the dataset against the dataset's evolved target version, identical
+/// channel trace and workload across methods (seeded).
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell(
+    ctx: &Ctx,
+    method: Method,
+    family: &str,
+    dataset: &str,
+    target_version: &str,
+    network: NetworkKind,
+    regime: Regime,
+    device: &EdgeDevice,
+    cloud_profile: &CloudProfile,
+) -> Result<CellStats> {
+    let mut stats = CellStats {
+        method: method.label().to_string(),
+        ..Default::default()
+    };
+    let mut gen = crate::workload::WorkloadGen::new(dataset, ctx.seed)?;
+    let mut cloud = CloudEngine::new(&ctx.reg, target_version, crate::workload::EOS)?;
+    let dom = if dataset == "nq_rag" { "nq" } else { dataset };
+
+    for i in 0..ctx.requests {
+        let req = gen.next_request();
+        // fresh channel per request, seeded identically across methods
+        let mut chan = NetworkProfile::new(network).channel(ctx.seed ^ (i as u64 * 7793 + 11));
+        let draft = method.draft_source(&ctx.reg, family, dom)?;
+        let policy = method.stride_policy(network);
+        let mut pipe = Pipeline::new(
+            draft,
+            &mut cloud,
+            &mut chan,
+            policy,
+            device,
+            cloud_profile,
+            regime.mode,
+            regime.temperature,
+            regime.top_p,
+            method.label(),
+        )
+        .with_wire(method.wire_format());
+        let r = pipe.run_request(&req.prompt, req.max_new, ctx.seed ^ (i as u64))?;
+        stats.ms_per_token.add(r.ms_per_token());
+        if r.drafted > 0 {
+            stats.acceptance.add(r.acceptance_rate());
+        }
+        stats.energy_j_per_token.add(r.energy_per_token_j());
+        stats
+            .bytes_up_per_token
+            .add(r.bytes_up as f64 / r.new_tokens.max(1) as f64);
+        if !r.rounds_log.is_empty() {
+            stats.mean_k.add(
+                r.rounds_log.iter().map(|l| l.k as f64).sum::<f64>() / r.rounds_log.len() as f64,
+            );
+        }
+        stats.tokens += r.new_tokens;
+    }
+    Ok(stats)
+}
+
+/// Convenience: run_cell with the default testbed (Jetson + A800/70B).
+pub fn run_cell_default(
+    ctx: &Ctx,
+    method: Method,
+    dataset: &str,
+    network: NetworkKind,
+    regime: Regime,
+) -> Result<CellStats> {
+    let target = crate::workload::generator::target_for_dataset("llama2t", dataset);
+    run_cell(
+        ctx,
+        method,
+        "llama2t",
+        dataset,
+        &target,
+        network,
+        regime,
+        &JETSON_ORIN,
+        &A800_70B,
+    )
+}
+
+/// One experiment = name + runner.
+pub struct Experiment {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub run: fn(&Ctx) -> Result<Vec<Table>>,
+}
+
+pub fn all_experiments() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "table1", title: "Table I — update-storm sync cost", run: table1::run },
+        Experiment { id: "table2", title: "Table II — acceptance collapse under target evolution", run: table2::run },
+        Experiment { id: "fig2", title: "Fig. 2 — channel-aware policy landscape", run: fig2::run },
+        Experiment { id: "table3", title: "Table III — Regime A (T=0), 6 datasets x 3 networks", run: table3::run_regime_a },
+        Experiment { id: "table4", title: "Table IV — Regime B (T=1), 6 datasets x 3 networks", run: table3::run_regime_b },
+        Experiment { id: "fig4", title: "Fig. 4 — GSM8K end-to-end latency", run: fig4::run },
+        Experiment { id: "fig5", title: "Fig. 5 — fixed vs adaptive stride ablation", run: fig5::run },
+        Experiment { id: "table5", title: "Table V — heterogeneous edge devices", run: table5::run },
+        Experiment { id: "table6", title: "Table VI — model scalability (Llama-3-like, MoE)", run: table6::run },
+        Experiment { id: "fig6", title: "Fig. 6 — energy breakdown", run: fig6::run },
+        Experiment { id: "ablations", title: "Ablations — acceptance model, EMA decay, wire format, batching window", run: ablations::run },
+    ]
+}
+
+pub fn find(id: &str) -> Option<Experiment> {
+    all_experiments().into_iter().find(|e| e.id == id)
+}
+
+/// Used by several experiments: a Cloud-Only anchor cell for speedups.
+pub fn cloud_only_anchor(
+    ctx: &Ctx,
+    dataset: &str,
+    network: NetworkKind,
+    regime: Regime,
+) -> Result<CellStats> {
+    run_cell_default(ctx, Method::CloudOnly, dataset, network, regime)
+}
+
+#[cfg(test)]
+pub fn test_ctx() -> Option<Ctx> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        return None;
+    }
+    std::env::set_var("FLEXSPEC_ARTIFACTS", root.to_str().unwrap());
+    let ctx = Ctx::open(2, 7).ok()?;
+    if !ctx.reg.manifest.weights.contains_key("draft_flex_llama2t") {
+        return None;
+    }
+    Some(ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_ids_unique_and_findable() {
+        let exps = all_experiments();
+        for e in &exps {
+            assert!(find(e.id).is_some());
+        }
+        let mut ids: Vec<_> = exps.iter().map(|e| e.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), exps.len());
+    }
+
+    #[test]
+    fn run_cell_produces_consistent_stats() {
+        let Some(ctx) = test_ctx() else { return };
+        let cell = run_cell_default(
+            &ctx,
+            Method::FlexSpec,
+            "gsm8k",
+            NetworkKind::FourG,
+            REGIME_A,
+        )
+        .unwrap();
+        assert_eq!(cell.ms_per_token.count(), ctx.requests);
+        assert!(cell.latency() > 0.0);
+        assert!(cell.acceptance.mean() > 0.05, "accept {}", cell.acceptance.mean());
+        assert!(cell.tokens > 0);
+    }
+}

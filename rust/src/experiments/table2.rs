@@ -1,0 +1,91 @@
+//! Table II — impact of target-model evolution on a fixed draft model:
+//! the "performance collapse" motivation experiment, measured end-to-end
+//! through the real pipeline (acceptance of the generic frozen draft
+//! against Base / Math-LoRA / Code-Full target versions), extended with
+//! the FlexSpec anchor-aligned draft rows that explain the fix.
+
+use super::{run_cell, Ctx, REGIME_A};
+use crate::baselines::Method;
+use crate::channel::NetworkKind;
+use crate::devices::{A800_70B, JETSON_ORIN};
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<Vec<Table>> {
+    // (target version, domain prompts to evaluate on, label, domain col)
+    let cases: &[(&str, &str, &str, &str)] = &[
+        ("target_llama2t_base", "general", "Base", "General"),
+        ("lora_llama2t_gsm8k", "gsm8k", "Math (LoRA)", "Mathematics"),
+        ("target_llama2t_code_full", "humaneval", "Code (Full)", "Programming"),
+    ];
+
+    let mut t = Table::new(
+        "Table II — acceptance rate of a FIXED generic draft vs evolving targets",
+        &["Target Model Version", "Domain", "Acceptance (Std. SD)", "Acceptance (FlexSpec draft)"],
+    );
+    let mut base_generic = None;
+    for (version, dataset, label, domain_label) in cases {
+        let generic = run_cell(
+            ctx, Method::StdSd, "llama2t", dataset, version,
+            NetworkKind::FourG, REGIME_A, &JETSON_ORIN, &A800_70B,
+        )?;
+        let flex = run_cell(
+            ctx, Method::FlexSpec, "llama2t", dataset, version,
+            NetworkKind::FourG, REGIME_A, &JETSON_ORIN, &A800_70B,
+        )?;
+        let g = generic.acceptance.mean();
+        let f = flex.acceptance.mean();
+        let drop = base_generic
+            .map(|b: f64| format!("{:.2} (-{:.0}%)", g, (1.0 - g / b) * 100.0))
+            .unwrap_or_else(|| format!("{g:.2}"));
+        if base_generic.is_none() {
+            base_generic = Some(g);
+        }
+        t.row(vec![
+            format!("Llama-2t-{label}"),
+            domain_label.to_string(),
+            drop,
+            format!("{f:.2}"),
+        ]);
+    }
+
+    // cross-check against the build-time python calibration if present
+    let mut t2 = Table::new(
+        "Table II cross-check — build-time python calibration (manifest)",
+        &["pair", "acceptance"],
+    );
+    for (k, v) in &ctx.reg.manifest.calibration {
+        t2.row(vec![k.clone(), format!("{v:.3}")]);
+    }
+    Ok(vec![t, t2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collapse_gradient_reproduces() {
+        let Some(ctx) = super::super::test_ctx() else { return };
+        if !ctx
+            .reg
+            .manifest
+            .weights
+            .contains_key("target_llama2t_code_full")
+        {
+            return;
+        }
+        let tables = run(&ctx).unwrap();
+        let t = &tables[0];
+        assert_eq!(t.rows.len(), 3);
+        // generic acceptance must fall monotonically base -> math -> code
+        let parse = |s: &str| s.split_whitespace().next().unwrap().parse::<f64>().unwrap();
+        let base = parse(&t.rows[0][2]);
+        let math = parse(&t.rows[1][2]);
+        let code = parse(&t.rows[2][2]);
+        assert!(base > math && math > code, "collapse gradient: {base} {math} {code}");
+        // flex draft must hold up far better on the LoRA-evolved target
+        let flex_math = t.rows[1][3].parse::<f64>().unwrap();
+        assert!(flex_math > math, "anchor alignment fix: {flex_math} vs {math}");
+    }
+}

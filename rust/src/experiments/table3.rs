@@ -1,0 +1,101 @@
+//! Tables III & IV — the main grid: end-to-end latency + speedup for all
+//! methods across the six datasets and three networks, in both regimes
+//! (A: greedy T=0; B: stochastic T=1, top-p 0.9).
+
+use super::{run_cell_default, CellStats, Ctx, Regime, REGIME_A, REGIME_B};
+use crate::baselines::Method;
+use crate::channel::NetworkKind;
+use crate::util::table::{latency_cell, Table};
+use crate::workload::generator::EVAL_DATASETS;
+use anyhow::Result;
+
+pub fn run_regime_a(ctx: &Ctx) -> Result<Vec<Table>> {
+    run_grid(ctx, REGIME_A, "Table III — Regime A (Temperature = 0)")
+}
+
+pub fn run_regime_b(ctx: &Ctx) -> Result<Vec<Table>> {
+    run_grid(ctx, REGIME_B, "Table IV — Regime B (Temperature = 1, top-p 0.9)")
+}
+
+pub fn run_grid(ctx: &Ctx, regime: Regime, title: &str) -> Result<Vec<Table>> {
+    let methods = Method::table_columns();
+    let mut headers: Vec<&str> = vec!["Dataset", "Network"];
+    let labels: Vec<String> = methods.iter().map(|m| m.label().to_string()).collect();
+    for l in &labels {
+        headers.push(l);
+    }
+    let mut t = Table::new(title, &headers);
+
+    // "Sync Required?" header row, as in the paper
+    let mut sync_row = vec!["Sync Required?".to_string(), String::new()];
+    for m in &methods {
+        sync_row.push(if m.sync_required() { "Yes" } else { "No" }.to_string());
+    }
+    t.row(sync_row);
+
+    for (dataset, ds_label) in EVAL_DATASETS {
+        for network in NetworkKind::all() {
+            let mut cells: Vec<CellStats> = Vec::new();
+            for m in methods {
+                cells.push(run_cell_default(ctx, m, dataset, network, regime)?);
+                if ctx.verbose {
+                    eprintln!(
+                        "[table] {ds_label} {} {}: {:.1} ms/tok",
+                        network.label(),
+                        m.label(),
+                        cells.last().unwrap().latency()
+                    );
+                }
+            }
+            let base = cells[0].latency();
+            let mut row = vec![ds_label.to_string(), network.label().to_string()];
+            for c in &cells {
+                row.push(latency_cell(c.latency(), base / c.latency()));
+            }
+            t.row(row);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Method;
+    use crate::channel::NetworkKind;
+    use crate::experiments::{run_cell_default, REGIME_A, REGIME_B};
+
+    /// The qualitative SHAPE claims of Tables III/IV on the headline
+    /// dataset (gsm8k): who wins where. Full-grid rendering is covered by
+    /// the bench harness; here we pin the crossovers cheaply.
+    #[test]
+    fn regime_a_shape_gsm8k() {
+        let Some(ctx) = super::super::test_ctx() else { return };
+
+        // 5G: synced EAGLE-2 is the best; FlexSpec close behind; all beat cloud-only
+        let co = run_cell_default(&ctx, Method::CloudOnly, "gsm8k", NetworkKind::FiveG, REGIME_A).unwrap();
+        let eagle = run_cell_default(&ctx, Method::Eagle2, "gsm8k", NetworkKind::FiveG, REGIME_A).unwrap();
+        let flex = run_cell_default(&ctx, Method::FlexSpec, "gsm8k", NetworkKind::FiveG, REGIME_A).unwrap();
+        assert!(eagle.latency() < co.latency());
+        assert!(flex.latency() < co.latency());
+        assert!(eagle.latency() < flex.latency() * 1.15, "ideal-synced wins 5G");
+
+        // WiFi: Std SD collapses below 1x; FlexSpec stays the best method
+        let co_w = run_cell_default(&ctx, Method::CloudOnly, "gsm8k", NetworkKind::WifiWeak, REGIME_A).unwrap();
+        let std_w = run_cell_default(&ctx, Method::StdSd, "gsm8k", NetworkKind::WifiWeak, REGIME_A).unwrap();
+        let flex_w = run_cell_default(&ctx, Method::FlexSpec, "gsm8k", NetworkKind::WifiWeak, REGIME_A).unwrap();
+        let eagle_w = run_cell_default(&ctx, Method::Eagle2, "gsm8k", NetworkKind::WifiWeak, REGIME_A).unwrap();
+        assert!(std_w.latency() > co_w.latency(), "Std SD must collapse on weak WiFi");
+        assert!(flex_w.latency() < co_w.latency(), "FlexSpec must still accelerate");
+        assert!(flex_w.latency() < eagle_w.latency(), "fixed-stride synced methods lose weak nets");
+    }
+
+    #[test]
+    fn regime_b_flexspec_stays_robust() {
+        let Some(ctx) = super::super::test_ctx() else { return };
+        let co = run_cell_default(&ctx, Method::CloudOnly, "gsm8k", NetworkKind::FourG, REGIME_B).unwrap();
+        let flex = run_cell_default(&ctx, Method::FlexSpec, "gsm8k", NetworkKind::FourG, REGIME_B).unwrap();
+        let speedup = co.latency() / flex.latency();
+        assert!(speedup > 1.2, "Regime B 4G speedup {speedup}");
+    }
+}

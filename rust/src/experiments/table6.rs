@@ -1,0 +1,68 @@
+//! Table VI — scalability to newer model families: the Llama-3-like
+//! (bigger vocab) and Mixtral-like (MoE) targets on MT-Bench, 5G/4G.
+
+use super::{run_cell, Ctx, REGIME_A};
+use crate::baselines::Method;
+use crate::channel::NetworkKind;
+use crate::devices::{CloudProfile, A800_70B, CLOUD_LLAMA3, CLOUD_MIXTRAL, JETSON_ORIN};
+use crate::util::table::Table;
+use anyhow::Result;
+
+const FAMILIES: &[(&str, &str, &str, &CloudProfile)] = &[
+    ("llama2t", "Llama-2-70B (dense)", "lora_llama2t_mtbench", &A800_70B),
+    ("llama3t", "Llama-3-70B (dense)", "lora_llama3t_mtbench", &CLOUD_LLAMA3),
+    ("mixtralt", "Mixtral 8x7B (MoE)", "lora_mixtralt_mtbench", &CLOUD_MIXTRAL),
+];
+
+pub fn run(ctx: &Ctx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table VI — scalability across model families (MT-Bench)",
+        &["Target Model", "Arch.", "Baseline ms/tok (5G/4G)", "FlexSpec (5G)", "FlexSpec (4G)", "accept"],
+    );
+    for (family, label, target, cloud) in FAMILIES {
+        if !ctx.reg.manifest.weights.contains_key(*target) {
+            continue; // family not built yet
+        }
+        let mut cells = Vec::new();
+        for network in [NetworkKind::FiveG, NetworkKind::FourG] {
+            let co = run_cell(
+                ctx, Method::CloudOnly, family, "mtbench", target,
+                network, REGIME_A, &JETSON_ORIN, cloud,
+            )?;
+            let fs = run_cell(
+                ctx, Method::FlexSpec, family, "mtbench", target,
+                network, REGIME_A, &JETSON_ORIN, cloud,
+            )?;
+            cells.push((co, fs));
+        }
+        let arch = if family.contains("mixtral") { "MoE" } else { "Dense" };
+        t.row(vec![
+            label.to_string(),
+            arch.to_string(),
+            format!("{:.1} / {:.1}", cells[0].0.latency(), cells[1].0.latency()),
+            format!("{:.2}x", cells[0].0.latency() / cells[0].1.latency()),
+            format!("{:.2}x", cells[1].0.latency() / cells[1].1.latency()),
+            format!("{:.2}", cells[0].1.acceptance.mean()),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_built_family() {
+        let Some(mut ctx) = super::super::test_ctx() else { return };
+        ctx.requests = 1;
+        let t = &run(&ctx).unwrap()[0];
+        assert!(!t.rows.is_empty());
+        // llama2t is always built; others appear once their artifacts exist
+        assert!(t.rows.iter().any(|r| r[0].contains("Llama-2")));
+        for row in &t.rows {
+            let s5: f64 = row[3].trim_end_matches('x').parse().unwrap();
+            assert!(s5 > 0.8, "family {} speedup {s5}", row[0]);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! FlexSpec — frozen drafts meet evolving targets in edge-cloud
+//! collaborative LLM speculative decoding (reproduction).
+//!
+//! Three-layer architecture (DESIGN.md):
+//!   L3 (this crate): the coordinator — edge/cloud engines, channel-aware
+//!       adaptive speculation, wireless simulation, baselines, experiments.
+//!   L2/L1 (python/, build-time only): JAX transformer family + Pallas
+//!       kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//!
+//! The request path is pure rust: `runtime` loads the AOT artifacts via
+//! PJRT and everything above it is deterministic simulation + real model
+//! execution.
+
+pub mod channel;
+pub mod coordinator;
+pub mod devices;
+pub mod energy;
+pub mod protocol;
+pub mod runtime;
+pub mod util;
+
+pub mod metrics;
+pub mod workload;
+pub mod baselines;
+pub mod experiments;
+pub mod report;
+
+mod cli_entry;
+pub use cli_entry::cli_main;

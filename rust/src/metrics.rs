@@ -1,0 +1,197 @@
+//! Request-level metrics aggregation (DESIGN.md S15): collects
+//! `RequestResult`s into per-method summaries with the paper's metrics —
+//! ms/token, ETGR, acceptance, per-round latency decomposition, energy
+//! breakdown and byte accounting.
+
+use crate::coordinator::pipeline::RequestResult;
+use crate::energy::EnergyBreakdown;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+use std::collections::BTreeMap;
+
+/// Aggregate over many requests of one method/configuration.
+#[derive(Debug, Default, Clone)]
+pub struct MethodMetrics {
+    pub method: String,
+    pub requests: usize,
+    pub tokens: usize,
+    pub rounds: usize,
+    pub ms_per_token: Summary,
+    pub request_ms: Summary,
+    pub prefill_ms: Summary,
+    pub acceptance: Summary,
+    pub k_used: Summary,
+    pub round_edge_ms: Summary,
+    pub round_up_ms: Summary,
+    pub round_cloud_ms: Summary,
+    pub round_down_ms: Summary,
+    pub bytes_up: usize,
+    pub bytes_down: usize,
+    pub energy: EnergyBreakdown,
+    pub fade_rounds: usize,
+}
+
+impl MethodMetrics {
+    pub fn new(method: impl Into<String>) -> MethodMetrics {
+        MethodMetrics {
+            method: method.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record(&mut self, r: &RequestResult) {
+        self.requests += 1;
+        self.tokens += r.new_tokens;
+        self.rounds += r.rounds;
+        self.ms_per_token.add(r.ms_per_token());
+        self.request_ms.add(r.prefill_ms + r.decode_ms);
+        self.prefill_ms.add(r.prefill_ms);
+        if r.drafted > 0 {
+            self.acceptance.add(r.acceptance_rate());
+        }
+        self.bytes_up += r.bytes_up;
+        self.bytes_down += r.bytes_down;
+        self.energy.add(&r.energy);
+        for l in &r.rounds_log {
+            self.k_used.add(l.k as f64);
+            self.round_edge_ms.add(l.t_edge_ms);
+            self.round_up_ms.add(l.t_up_ms);
+            self.round_cloud_ms.add(l.t_cloud_ms);
+            self.round_down_ms.add(l.t_down_ms);
+            self.fade_rounds += l.fading as usize;
+        }
+    }
+
+    /// Effective token generation rate, tokens/s of virtual time (eq. 2).
+    pub fn etgr(&self) -> f64 {
+        1e3 / self.ms_per_token.mean()
+    }
+
+    pub fn energy_per_token(&self) -> f64 {
+        self.energy.total_j() / self.tokens.max(1) as f64
+    }
+
+    pub fn bytes_up_per_token(&self) -> f64 {
+        self.bytes_up as f64 / self.tokens.max(1) as f64
+    }
+}
+
+/// A labeled collection of method metrics (one experiment cell group).
+#[derive(Debug, Default)]
+pub struct MetricsSet {
+    pub by_method: BTreeMap<String, MethodMetrics>,
+}
+
+impl MetricsSet {
+    pub fn record(&mut self, r: &RequestResult) {
+        self.by_method
+            .entry(r.method.clone())
+            .or_insert_with(|| MethodMetrics::new(r.method.clone()))
+            .record(r);
+    }
+
+    /// Render the standard comparison table (the per-figure row format).
+    pub fn table(&self, title: &str, baseline: Option<&str>) -> Table {
+        let base_ms = baseline
+            .and_then(|b| self.by_method.get(b))
+            .map(|m| m.ms_per_token.mean());
+        let mut t = Table::new(
+            title,
+            &["Method", "ms/tok", "p95", "speedup", "ETGR tok/s", "accept", "mean K", "kB up/tok", "J/tok"],
+        );
+        for m in self.by_method.values() {
+            let ms = m.ms_per_token.mean();
+            t.row(vec![
+                m.method.clone(),
+                format!("{ms:.1}"),
+                format!("{:.1}", m.ms_per_token.p95()),
+                base_ms.map(|b| format!("{:.2}x", b / ms)).unwrap_or_default(),
+                format!("{:.2}", m.etgr()),
+                format!("{:.2}", m.acceptance.mean()),
+                format!("{:.1}", m.k_used.mean()),
+                format!("{:.2}", m.bytes_up_per_token() / 1e3),
+                format!("{:.2}", m.energy_per_token()),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::RoundLog;
+
+    fn fake_result(method: &str, ms: f64, tokens: usize) -> RequestResult {
+        RequestResult {
+            method: method.into(),
+            prompt_tokens: 10,
+            new_tokens: tokens,
+            rounds: 2,
+            prefill_ms: 50.0,
+            decode_ms: ms * tokens as f64,
+            bytes_up: 1000,
+            bytes_down: 200,
+            drafted: 8,
+            accepted: 5,
+            energy: Default::default(),
+            output: vec![1; tokens],
+            rounds_log: vec![
+                RoundLog {
+                    k: 4,
+                    tau: 3,
+                    committed: 4,
+                    t_step_ms: 100.0,
+                    t_edge_ms: 10.0,
+                    t_up_ms: 20.0,
+                    t_cloud_ms: 60.0,
+                    t_down_ms: 10.0,
+                    bytes_up: 500,
+                    bytes_down: 100,
+                    fading: false,
+                },
+                RoundLog {
+                    k: 4,
+                    tau: 2,
+                    committed: 3,
+                    t_step_ms: 120.0,
+                    t_edge_ms: 10.0,
+                    t_up_ms: 40.0,
+                    t_cloud_ms: 60.0,
+                    t_down_ms: 10.0,
+                    bytes_up: 500,
+                    bytes_down: 100,
+                    fading: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn aggregates_and_speedups() {
+        let mut set = MetricsSet::default();
+        for _ in 0..3 {
+            set.record(&fake_result("Cloud-Only", 100.0, 10));
+            set.record(&fake_result("FlexSpec", 50.0, 10));
+        }
+        let co = &set.by_method["Cloud-Only"];
+        let fs = &set.by_method["FlexSpec"];
+        assert_eq!(co.requests, 3);
+        assert_eq!(co.tokens, 30);
+        assert!((fs.etgr() - 20.0).abs() < 1e-9);
+        assert!((fs.acceptance.mean() - 5.0 / 8.0).abs() < 1e-9);
+        assert_eq!(fs.fade_rounds, 3);
+        let t = set.table("demo", Some("Cloud-Only"));
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.render().contains("2.00x"));
+    }
+
+    #[test]
+    fn round_decomposition_sums() {
+        let mut m = MethodMetrics::new("x");
+        m.record(&fake_result("x", 80.0, 7));
+        let total = m.round_edge_ms.mean() + m.round_up_ms.mean()
+            + m.round_cloud_ms.mean() + m.round_down_ms.mean();
+        assert!((total - 110.0).abs() < 1e-9); // mean of 100 and 120
+    }
+}

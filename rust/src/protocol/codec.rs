@@ -1,0 +1,116 @@
+//! Varint + fixed-width primitives for the wire protocol.
+
+use anyhow::{bail, Result};
+
+/// LEB128 unsigned varint (token ids fit in 2 bytes for vocab <= 16k).
+pub fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+pub fn read_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = buf.get(*pos) else {
+            bail!("varint: truncated");
+        };
+        *pos += 1;
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift >= 64 {
+            bail!("varint: overlong");
+        }
+    }
+}
+
+pub fn write_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    if *pos + 4 > buf.len() {
+        bail!("u32: truncated");
+    }
+    let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+pub fn write_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn read_u16(buf: &[u8], pos: &mut usize) -> Result<u16> {
+    if *pos + 2 > buf.len() {
+        bail!("u16: truncated");
+    }
+    let v = u16::from_le_bytes(buf[*pos..*pos + 2].try_into().unwrap());
+    *pos += 2;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn varint_known_values() {
+        let mut out = Vec::new();
+        write_varint(&mut out, 0);
+        write_varint(&mut out, 127);
+        write_varint(&mut out, 128);
+        write_varint(&mut out, 300);
+        assert_eq!(out, vec![0, 0x7f, 0x80, 0x01, 0xac, 0x02]);
+        let mut pos = 0;
+        assert_eq!(read_varint(&out, &mut pos).unwrap(), 0);
+        assert_eq!(read_varint(&out, &mut pos).unwrap(), 127);
+        assert_eq!(read_varint(&out, &mut pos).unwrap(), 128);
+        assert_eq!(read_varint(&out, &mut pos).unwrap(), 300);
+        assert_eq!(pos, out.len());
+    }
+
+    #[test]
+    fn varint_roundtrip_property() {
+        prop::check(500, |rng| {
+            let v = rng.next_u64() >> (rng.next_range(60) as u32);
+            let mut out = Vec::new();
+            write_varint(&mut out, v);
+            let mut pos = 0;
+            let back = read_varint(&out, &mut pos).map_err(|e| e.to_string())?;
+            prop::assert_prop(back == v && pos == out.len(), format!("{v} != {back}"))
+        });
+    }
+
+    #[test]
+    fn varint_rejects_truncation_and_overlong() {
+        let mut pos = 0;
+        assert!(read_varint(&[0x80], &mut pos).is_err());
+        let overlong = vec![0x80u8; 10];
+        let mut pos = 0;
+        assert!(read_varint(&overlong, &mut pos).is_err());
+    }
+
+    #[test]
+    fn fixed_width_roundtrip() {
+        let mut out = Vec::new();
+        write_u32(&mut out, 0xdead_beef);
+        write_u16(&mut out, 0xcafe);
+        let mut pos = 0;
+        assert_eq!(read_u32(&out, &mut pos).unwrap(), 0xdead_beef);
+        assert_eq!(read_u16(&out, &mut pos).unwrap(), 0xcafe);
+        let mut bad = 3;
+        assert!(read_u32(&out, &mut bad).is_err() || out.len() >= 7);
+    }
+}

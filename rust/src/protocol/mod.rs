@@ -1,0 +1,371 @@
+//! Edge↔cloud wire protocol with byte-accurate accounting (DESIGN.md S6).
+//!
+//! Every latency number in the evaluation flows through `B_up(K)` of
+//! eq. (8), so the protocol layer is explicit about what crosses the air:
+//!
+//! * `DraftMsg` (uplink): session/round framing + K draft token ids
+//!   (varint) + per-token draft probability payloads. The probability
+//!   payload is what lossless verification fallback needs on the cloud
+//!   side; it dominates the uplink and is why large strides hurt on weak
+//!   links (paper §III-D: "five tokens ≈ 200 ms of uplink delay").
+//! * `VerifyMsg` (downlink): tau + correction token + flow control.
+//! * `SyncMsg` accounting covers the update-storm analysis (Table I).
+//!
+//! `WIRE_SCALE` maps our 512-token vocabulary payloads to the paper's
+//! 32k-vocab 70B deployment so absolute milliseconds stay comparable
+//! (calibrated in EXPERIMENTS.md §Calibration).
+
+pub mod codec;
+
+use codec::{read_u16, read_u32, read_varint, write_u16, write_u32, write_varint};
+use anyhow::{bail, Result};
+
+/// Transport + framing overhead per message (IP/UDP/QUIC-ish + app header).
+pub const O_HEADER_BYTES: usize = 96;
+
+/// Scale factor from our tiny-vocab payloads to the paper's deployment
+/// (vocab 32k vs 512 → top-p payloads ~6x larger after top-k truncation).
+pub const WIRE_SCALE: f64 = 6.0;
+
+/// Verification mode — decides what the uplink must carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyMode {
+    /// Greedy (Regime A): token ids only.
+    Greedy,
+    /// Stochastic (Regime B): ids + quantized draft distributions.
+    Stochastic,
+}
+
+/// What a method's uplink actually ships (the decisive difference on
+/// weak links — paper §II-B: FlexSpec "transmits lightweight token
+/// indices instead of heavy activations"):
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    /// FlexSpec / DSSD / PLD / Lookahead: varint ids + f16 chosen-prob
+    /// per token. Residual distributions for Regime B are reconstructed
+    /// cloud-side (documented approximation; Algorithm 2 itself is
+    /// greedy).
+    Compact,
+    /// Tightly-coupled datacenter designs shipped unmodified to the
+    /// edge: EAGLE-2 candidate trees, Medusa head products, Std-SD's
+    /// lossless per-token distribution sketches.
+    Sketch,
+}
+
+/// Uplink draft block (Algorithm 2 step 1 → step 2 handoff).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DraftMsg {
+    pub session: u32,
+    pub round: u32,
+    pub tokens: Vec<i32>,
+    /// For stochastic verification: per-token draft probability of the
+    /// chosen token (f16-quantized on the wire) plus a truncated top-k
+    /// remainder sketch; we transmit the chosen-prob and account the
+    /// sketch in bytes (contents reconstructed cloud-side from ids).
+    pub chosen_probs: Vec<f32>,
+    pub mode: VerifyMode,
+    pub wire: WireFormat,
+}
+
+/// Per-token distribution sketch size on the wire (stochastic mode):
+/// top-k (id: u16, prob: f16) entries the cloud needs for the residual
+/// distribution. k = 256 of our 512-vocab ≈ the truncated top-p cover.
+pub const PROB_SKETCH_BYTES: usize = 256 * 4;
+
+impl DraftMsg {
+    /// Serialize (the id/prob part; the sketch is accounted, not built —
+    /// the cloud reconstructs residuals from its own forward pass in this
+    /// reproduction, see cloud.rs).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32 + self.tokens.len() * 3);
+        write_u32(&mut out, self.session);
+        write_u32(&mut out, self.round);
+        out.push(match self.mode {
+            VerifyMode::Greedy => 0,
+            VerifyMode::Stochastic => 1,
+        });
+        out.push(self.tokens.len() as u8);
+        for &t in &self.tokens {
+            write_varint(&mut out, t as u64);
+        }
+        if self.mode == VerifyMode::Stochastic {
+            for &p in &self.chosen_probs {
+                write_u16(&mut out, f32_to_f16_bits(p));
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<DraftMsg> {
+        let mut pos = 0usize;
+        let session = read_u32(buf, &mut pos)?;
+        let round = read_u32(buf, &mut pos)?;
+        let mode = match buf.get(pos) {
+            Some(0) => VerifyMode::Greedy,
+            Some(1) => VerifyMode::Stochastic,
+            _ => bail!("bad mode byte"),
+        };
+        pos += 1;
+        let n = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("truncated"))? as usize;
+        pos += 1;
+        let mut tokens = Vec::with_capacity(n);
+        for _ in 0..n {
+            tokens.push(read_varint(buf, &mut pos)? as i32);
+        }
+        let mut chosen_probs = Vec::new();
+        if mode == VerifyMode::Stochastic {
+            for _ in 0..n {
+                chosen_probs.push(f16_bits_to_f32(read_u16(buf, &mut pos)?));
+            }
+        }
+        if pos != buf.len() {
+            bail!("trailing bytes");
+        }
+        // wire format is not encoded (it is a per-method deployment
+        // property, not per-message state); decode defaults to Compact.
+        Ok(DraftMsg {
+            session,
+            round,
+            tokens,
+            chosen_probs,
+            mode,
+            wire: WireFormat::Compact,
+        })
+    }
+
+    /// Total air bytes for eq. (8): header + body, plus the per-token
+    /// distribution sketch for Sketch-format methods, scaled to
+    /// deployment size. The format (not the regime) decides the payload:
+    /// the paper's B_up(K) = K*b uses one b for Tables III and IV alike.
+    pub fn air_bytes(&self) -> usize {
+        let body = self.encode().len();
+        let sketch = match self.wire {
+            WireFormat::Compact => 0,
+            WireFormat::Sketch => self.tokens.len() * PROB_SKETCH_BYTES,
+        };
+        O_HEADER_BYTES + ((body + sketch) as f64 * WIRE_SCALE) as usize
+    }
+}
+
+/// Marginal uplink bits added by ONE more draft token (the `b` of
+/// eq. (8)/(10)) — what the policy's T_marginal uses.
+pub fn bits_per_token(wire: WireFormat) -> f64 {
+    let bytes = match wire {
+        WireFormat::Compact => 2.0 + 2.0,
+        WireFormat::Sketch => 2.0 + 2.0 + PROB_SKETCH_BYTES as f64,
+    };
+    bytes * WIRE_SCALE * 8.0
+}
+
+/// Downlink verification outcome (Algorithm 2 step 2 → step 3 handoff).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyMsg {
+    pub session: u32,
+    pub round: u32,
+    pub tau: u8,
+    pub correction: i32,
+    pub eos: bool,
+}
+
+impl VerifyMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        write_u32(&mut out, self.session);
+        write_u32(&mut out, self.round);
+        out.push(self.tau);
+        out.push(self.eos as u8);
+        write_varint(&mut out, self.correction as u64);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<VerifyMsg> {
+        let mut pos = 0usize;
+        let session = read_u32(buf, &mut pos)?;
+        let round = read_u32(buf, &mut pos)?;
+        let tau = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("truncated"))?;
+        pos += 1;
+        let eos = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("truncated"))? == 1;
+        pos += 1;
+        let correction = read_varint(buf, &mut pos)? as i32;
+        if pos != buf.len() {
+            bail!("trailing bytes");
+        }
+        Ok(VerifyMsg {
+            session,
+            round,
+            tau,
+            correction,
+            eos,
+        })
+    }
+
+    pub fn air_bytes(&self) -> usize {
+        O_HEADER_BYTES + self.encode().len()
+    }
+}
+
+/// Prompt upload (session start): header + varint token ids.
+pub fn prompt_air_bytes(prompt_len: usize) -> usize {
+    O_HEADER_BYTES + 2 * prompt_len
+}
+
+// --- minimal f16 (IEEE 754 half) conversion for wire quantization ---
+
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7f_ffff;
+    if exp == 0xff {
+        return sign | 0x7c00 | if frac != 0 { 1 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        sign | 0x7c00 // overflow -> inf
+    } else if e <= 0 {
+        if e < -10 {
+            sign
+        } else {
+            let m = (frac | 0x80_0000) >> (1 - e + 13);
+            sign | m as u16
+        }
+    } else {
+        sign | ((e as u16) << 10) | (frac >> 13) as u16
+    }
+}
+
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((h >> 10) & 0x1f) as i32;
+    let frac = (h & 0x3ff) as f32;
+    match exp {
+        0 => sign * frac * 2f32.powi(-24), // zero / subnormal
+        0x1f => {
+            if h & 0x3ff == 0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        _ => sign * (1.0 + frac / 1024.0) * 2f32.powi(exp - 15),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn draft_msg_roundtrip_greedy() {
+        let m = DraftMsg {
+            session: 7,
+            round: 42,
+            tokens: vec![5, 300, 511, 0],
+            chosen_probs: vec![],
+            mode: VerifyMode::Greedy,
+            wire: WireFormat::Compact,
+        };
+        assert_eq!(DraftMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn draft_msg_roundtrip_stochastic_quantizes() {
+        let m = DraftMsg {
+            session: 1,
+            round: 2,
+            tokens: vec![10, 20],
+            chosen_probs: vec![0.75, 0.124],
+            mode: VerifyMode::Stochastic,
+            wire: WireFormat::Compact,
+        };
+        let back = DraftMsg::decode(&m.encode()).unwrap();
+        assert_eq!(back.tokens, m.tokens);
+        for (a, b) in back.chosen_probs.iter().zip(&m.chosen_probs) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn verify_msg_roundtrip() {
+        let m = VerifyMsg {
+            session: 9,
+            round: 3,
+            tau: 5,
+            correction: 123,
+            eos: true,
+        };
+        assert_eq!(VerifyMsg::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn air_bytes_grow_linearly_with_k() {
+        let mk = |k: usize, wire| DraftMsg {
+            session: 0,
+            round: 0,
+            tokens: vec![100; k],
+            chosen_probs: vec![0.5; k],
+            mode: VerifyMode::Stochastic,
+            wire,
+        };
+        let c1 = mk(1, WireFormat::Compact).air_bytes();
+        let c5 = mk(5, WireFormat::Compact).air_bytes();
+        let s1 = mk(1, WireFormat::Sketch).air_bytes();
+        let s5 = mk(5, WireFormat::Sketch).air_bytes();
+        assert!(c5 > c1 && s5 > s1);
+        // sketch payload dominates; compact stays packet-sized
+        assert!(s5 - s1 > 4 * (PROB_SKETCH_BYTES as f64 * WIRE_SCALE * 0.9) as usize);
+        assert!(c5 < 600, "compact must stay light: {c5}");
+        // paper §III-D anchor: 5 sketch-format tokens over 1.5 Mbps ≈ 200 ms
+        let ms = (s5 as f64 * 8.0) / 1.5e6 * 1e3;
+        assert!((100.0..300.0).contains(&ms), "wifi uplink for K=5: {ms} ms");
+    }
+
+    #[test]
+    fn bits_per_token_consistent_with_messages() {
+        let b = bits_per_token(WireFormat::Sketch);
+        let mk = |k: usize| DraftMsg {
+            session: 0,
+            round: 0,
+            tokens: vec![100; k],
+            chosen_probs: vec![0.5; k],
+            mode: VerifyMode::Stochastic,
+            wire: WireFormat::Sketch,
+        };
+        let delta_bits = (mk(6).air_bytes() - mk(5).air_bytes()) as f64 * 8.0;
+        assert!((delta_bits - b).abs() / b < 0.1, "{delta_bits} vs {b}");
+    }
+
+    #[test]
+    fn f16_roundtrip_property() {
+        prop::check(300, |rng| {
+            let x = (rng.next_f64() as f32) * 2.0 - 1.0;
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            prop::assert_close(y as f64, x as f64, 1e-3, "f16 roundtrip")
+        });
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(0.0)), 0.0);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e6)).is_infinite());
+        assert!((f16_bits_to_f32(f32_to_f16_bits(1.0)) - 1.0).abs() < 1e-6);
+        assert!((f16_bits_to_f32(f32_to_f16_bits(6e-5)) - 6e-5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(DraftMsg::decode(&[1, 2, 3]).is_err());
+        let m = DraftMsg {
+            session: 0,
+            round: 0,
+            tokens: vec![1],
+            chosen_probs: vec![],
+            mode: VerifyMode::Greedy,
+            wire: WireFormat::Compact,
+        };
+        let mut buf = m.encode();
+        buf.push(0xff);
+        assert!(DraftMsg::decode(&buf).is_err());
+    }
+}

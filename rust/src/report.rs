@@ -1,0 +1,88 @@
+//! Report rendering: collect experiment tables into a markdown report
+//! (EXPERIMENTS-results.md) and print them to the terminal.
+
+use crate::experiments::{all_experiments, Ctx, Experiment};
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::Path;
+use std::time::Instant;
+
+pub struct ReportEntry {
+    pub id: String,
+    pub title: String,
+    pub tables: Vec<Table>,
+    pub secs: f64,
+}
+
+pub fn run_experiments(ctx: &Ctx, ids: &[String]) -> Result<Vec<ReportEntry>> {
+    let exps: Vec<Experiment> = if ids.len() == 1 && ids[0] == "all" {
+        all_experiments()
+    } else {
+        let mut out = Vec::new();
+        for id in ids {
+            out.push(
+                crate::experiments::find(id)
+                    .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}' (try `flexspec list`)"))?,
+            );
+        }
+        out
+    };
+
+    let mut entries = Vec::new();
+    for e in exps {
+        eprintln!("== running {} — {}", e.id, e.title);
+        let t0 = Instant::now();
+        let tables = (e.run)(ctx)?;
+        let secs = t0.elapsed().as_secs_f64();
+        for t in &tables {
+            println!("\n{}", t.render());
+        }
+        eprintln!("== {} done in {:.1}s", e.id, secs);
+        entries.push(ReportEntry {
+            id: e.id.to_string(),
+            title: e.title.to_string(),
+            tables,
+            secs,
+        });
+    }
+    Ok(entries)
+}
+
+pub fn write_markdown(entries: &[ReportEntry], path: &Path, header: &str) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(header);
+    for e in entries {
+        out.push_str(&format!("\n## {} — {} ({:.1}s)\n\n", e.id, e.title, e.secs));
+        for t in &e.tables {
+            out.push_str(&t.render_markdown());
+            out.push('\n');
+        }
+    }
+    std::fs::write(path, out)?;
+    eprintln!("report written to {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::table::Table;
+
+    #[test]
+    fn markdown_report_roundtrip() {
+        let mut t = Table::new("demo", &["a"]);
+        t.row(vec!["1".into()]);
+        let entries = vec![ReportEntry {
+            id: "x".into(),
+            title: "t".into(),
+            tables: vec![t],
+            secs: 0.5,
+        }];
+        let dir = std::env::temp_dir().join("flexspec_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("r.md");
+        write_markdown(&entries, &p, "# hdr\n").unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("# hdr") && text.contains("| a |"));
+    }
+}

@@ -1,0 +1,123 @@
+//! PJRT engine: CPU client + HLO-text loading + executable cache.
+//!
+//! One `Engine` per OS thread (PJRT handles are not `Send`); the
+//! coordinator performs logical concurrency via the discrete-event clock
+//! on a single thread, which also keeps every experiment deterministic.
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    compile_count: RefCell<usize>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: RefCell::new(HashMap::new()),
+            compile_count: RefCell::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn compiles(&self) -> usize {
+        *self.compile_count.borrow()
+    }
+
+    /// Load an HLO **text** file (see python/compile/aot.py for why text,
+    /// not serialized proto), compile it, and cache by path.
+    pub fn load_hlo(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key} (run `make artifacts`?)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?,
+        );
+        *self.compile_count.borrow_mut() += 1;
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute and unwrap the single tuple output into its elements.
+    /// jax-lowered modules always return a tuple root (return_tuple=True).
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<&xla::Literal>(args)?;
+        let mut lit = out[0][0].to_literal_sync()?;
+        let elems = lit.decompose_tuple()?;
+        Ok(elems)
+    }
+
+    /// Same, over device-resident buffers (hot path: weights stay
+    /// uploaded across calls — see WeightSet::buffers).
+    pub fn run_b(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        let mut lit = out[0][0].to_literal_sync()?;
+        let elems = lit.decompose_tuple()?;
+        Ok(elems)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn engine_creates_cpu_client() {
+        let e = Engine::cpu().unwrap();
+        assert_eq!(e.platform(), "cpu");
+    }
+
+    #[test]
+    fn hlo_cache_deduplicates_compiles() {
+        let p = artifacts().join("hlo/verify_v512.hlo.txt");
+        if !p.exists() {
+            return;
+        }
+        let e = Engine::cpu().unwrap();
+        let a = e.load_hlo(&p).unwrap();
+        let b = e.load_hlo(&p).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        assert_eq!(e.compiles(), 1);
+    }
+
+    #[test]
+    fn missing_hlo_is_a_clear_error() {
+        let e = Engine::cpu().unwrap();
+        let err = match e.load_hlo(Path::new("/nonexistent.hlo.txt")) {
+            Ok(_) => panic!("expected error"),
+            Err(err) => err.to_string(),
+        };
+        assert!(err.contains("nonexistent"));
+    }
+}

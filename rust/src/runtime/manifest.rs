@@ -1,0 +1,265 @@
+//! Typed view of `artifacts/manifest.json` (produced by
+//! `python/compile/build.py`): the model zoo, weight inventory, grammar
+//! tables and the acceptance calibration measured at build time.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ArchInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub n_experts: usize,
+    pub lora_rank: usize,
+    pub draft_head: bool,
+    pub kv_shape: Vec<usize>,
+    /// Ordered (sorted) parameter names/shapes — the HLO argument order.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Ordered LoRA adapter names/shapes (empty for drafts).
+    pub lora: Vec<(String, Vec<usize>)>,
+    pub hlo_block: String,
+    pub hlo_prefill: String,
+}
+
+impl ArchInfo {
+    pub fn kv_elements(&self) -> usize {
+        self.kv_shape.iter().product()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightInfo {
+    pub name: String,
+    pub arch: String,
+    pub kind: String, // base | lora | full | draft_flex | draft_generic | draft_synced
+    pub file: String,
+    pub base: Option<String>,
+    pub domain: Option<String>,
+    pub target: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DomainInfo {
+    pub name: String,
+    pub offset: u64,
+    pub size: u64,
+    pub mult: u64,
+    pub inc: u64,
+    pub p_det: f64,
+    pub p_eos: f64,
+    pub prompt_len: (u64, u64),
+    pub gen_len: (u64, u64),
+    pub evolved_mult: u64,
+    pub evolved_inc: u64,
+    pub evolve_mod: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub block: usize,
+    pub k_max: usize,
+    pub prefill_chunk: usize,
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+    pub archs: BTreeMap<String, ArchInfo>,
+    pub weights: BTreeMap<String, WeightInfo>,
+    pub verify_hlo: BTreeMap<usize, String>,
+    pub domains: BTreeMap<String, DomainInfo>,
+    pub calibration: BTreeMap<String, f64>,
+}
+
+fn shapes(j: &Json) -> Vec<(String, Vec<usize>)> {
+    j.as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr().unwrap();
+            (
+                p[0].as_str().unwrap().to_string(),
+                p[1].as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        let mut archs = BTreeMap::new();
+        for (name, a) in j.req("archs")?.as_obj().context("archs")? {
+            archs.insert(
+                name.clone(),
+                ArchInfo {
+                    name: name.clone(),
+                    vocab: a.req("vocab")?.as_usize().unwrap(),
+                    d_model: a.req("d_model")?.as_usize().unwrap(),
+                    n_layers: a.req("n_layers")?.as_usize().unwrap(),
+                    n_heads: a.req("n_heads")?.as_usize().unwrap(),
+                    d_ff: a.req("d_ff")?.as_usize().unwrap(),
+                    max_seq: a.req("max_seq")?.as_usize().unwrap(),
+                    n_experts: a.req("n_experts")?.as_usize().unwrap(),
+                    lora_rank: a.req("lora_rank")?.as_usize().unwrap(),
+                    draft_head: a.req("draft_head")?.as_bool().unwrap_or(false),
+                    kv_shape: a
+                        .req("kv_shape")?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|d| d.as_usize().unwrap())
+                        .collect(),
+                    params: shapes(a.req("params")?),
+                    lora: shapes(a.req("lora")?),
+                    hlo_block: a.req("hlo_block")?.as_str().unwrap().to_string(),
+                    hlo_prefill: a.req("hlo_prefill")?.as_str().unwrap().to_string(),
+                },
+            );
+        }
+
+        let mut weights = BTreeMap::new();
+        for (name, w) in j.req("weights")?.as_obj().context("weights")? {
+            weights.insert(
+                name.clone(),
+                WeightInfo {
+                    name: name.clone(),
+                    arch: w.req("arch")?.as_str().unwrap().to_string(),
+                    kind: w.req("kind")?.as_str().unwrap().to_string(),
+                    file: w.req("file")?.as_str().unwrap().to_string(),
+                    base: w.get("base").and_then(|v| v.as_str()).map(String::from),
+                    domain: w.get("domain").and_then(|v| v.as_str()).map(String::from),
+                    target: w.get("target").and_then(|v| v.as_str()).map(String::from),
+                },
+            );
+        }
+
+        let mut verify_hlo = BTreeMap::new();
+        for (v, p) in j.req("verify_hlo")?.as_obj().context("verify_hlo")? {
+            verify_hlo.insert(v.parse::<usize>()?, p.as_str().unwrap().to_string());
+        }
+
+        let mut domains = BTreeMap::new();
+        for (name, d) in j.req("domains")?.as_obj().context("domains")? {
+            let pair = |key: &str| -> Result<(u64, u64)> {
+                let a = d.req(key)?.as_arr().context("pair")?;
+                Ok((a[0].as_f64().unwrap() as u64, a[1].as_f64().unwrap() as u64))
+            };
+            domains.insert(
+                name.clone(),
+                DomainInfo {
+                    name: name.clone(),
+                    offset: d.req("offset")?.as_f64().unwrap() as u64,
+                    size: d.req("size")?.as_f64().unwrap() as u64,
+                    mult: d.req("mult")?.as_f64().unwrap() as u64,
+                    inc: d.req("inc")?.as_f64().unwrap() as u64,
+                    p_det: d.req("p_det")?.as_f64().unwrap(),
+                    p_eos: d.req("p_eos")?.as_f64().unwrap(),
+                    prompt_len: pair("prompt_len")?,
+                    gen_len: pair("gen_len")?,
+                    evolved_mult: d.req("evolved_mult")?.as_f64().unwrap() as u64,
+                    evolved_inc: d.req("evolved_inc")?.as_f64().unwrap() as u64,
+                    evolve_mod: d.req("evolve_mod")?.as_f64().unwrap() as u64,
+                },
+            );
+        }
+
+        let mut calibration = BTreeMap::new();
+        if let Some(obj) = j.get("acceptance_calibration").and_then(|c| c.as_obj()) {
+            for (k, v) in obj {
+                if let Some(x) = v.as_f64() {
+                    calibration.insert(k.clone(), x);
+                }
+            }
+        }
+
+        Ok(Manifest {
+            root,
+            block: j.req("block")?.as_usize().unwrap(),
+            k_max: j.req("k_max")?.as_usize().unwrap(),
+            prefill_chunk: j.req("prefill_chunk")?.as_usize().unwrap(),
+            bos: j.req("bos")?.as_i64().unwrap() as i32,
+            eos: j.req("eos")?.as_i64().unwrap() as i32,
+            pad: j.req("pad")?.as_i64().unwrap() as i32,
+            archs,
+            weights,
+            verify_hlo,
+            domains,
+            calibration,
+        })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchInfo> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown arch '{name}'"))
+    }
+
+    pub fn weight(&self, name: &str) -> Result<&WeightInfo> {
+        self.weights
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown weight bundle '{name}'"))
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Default artifacts directory: $FLEXSPEC_ARTIFACTS or ./artifacts.
+    pub fn default_root() -> PathBuf {
+        std::env::var("FLEXSPEC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&root).unwrap();
+        assert_eq!(m.block, 9);
+        assert_eq!(m.k_max, 8);
+        let l2t = m.arch("llama2t").unwrap();
+        assert_eq!(l2t.vocab, 512);
+        assert_eq!(l2t.kv_shape, vec![4, 2, 4, 256, 32]);
+        assert!(!l2t.params.is_empty());
+        assert!(m.weights.contains_key("target_llama2t_base"));
+        assert!(m.domains.contains_key("gsm8k"));
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let e = Manifest::load("/nonexistent/dir").unwrap_err().to_string();
+        assert!(e.contains("make artifacts"), "{e}");
+    }
+}

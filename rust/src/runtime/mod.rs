@@ -1,0 +1,16 @@
+//! Runtime layer: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! FSWB1 weight bundles) and executes them via the PJRT C API (`xla`
+//! crate). This is the only module that touches XLA; everything above it
+//! (coordinator, baselines, experiments) sees typed rust APIs.
+
+pub mod engine;
+pub mod manifest;
+pub mod model;
+pub mod registry;
+pub mod sampling;
+pub mod weights;
+
+pub use engine::Engine;
+pub use manifest::{ArchInfo, DomainInfo, Manifest, WeightInfo};
+pub use model::{BlockOut, KvState, ModelRuntime, VerifyRuntime, WeightSet};
+pub use registry::{Registry, TargetVersion};

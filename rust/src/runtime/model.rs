@@ -1,0 +1,468 @@
+//! Model runtime: drives the AOT-compiled `forward_block` / `prefill`
+//! executables with resident weight literals and a per-session KV cache.
+//!
+//! Argument order contract (python/compile/aot.py): params in sorted name
+//! order, then LoRA adapters in sorted name order (targets only), then
+//! tokens[B] i32, pos[1] i32, valid[1] i32, kv f32. Output tuple:
+//! (logits [B, vocab] f32, kv_out).
+
+use super::engine::Engine;
+use super::manifest::{ArchInfo, Manifest, WeightInfo};
+use super::weights::Bundle;
+use anyhow::{bail, Context, Result};
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// A weight bundle uploaded as xla literals in HLO argument order.
+///
+/// MEMORY SEMANTICS of the published xla 0.1.6 crate (measured, see
+/// EXPERIMENTS.md §Perf L3-3): `execute()` over literals LEAKS the
+/// device buffer it creates per argument (~the KV size per call → OOM
+/// over long experiment runs). The call path therefore creates its own
+/// buffers per call, hands them to `execute_b`, and frees them after —
+/// same copy volume, zero net growth. (A cached-weight-buffer variant
+/// crashed inside the prebuilt shim and was abandoned; fresh buffers
+/// measured leak-free and stable.)
+pub struct WeightSet {
+    pub info: WeightInfo,
+    pub literals: Vec<xla::Literal>,
+    pub n_params: usize,
+    pub byte_size: usize,
+}
+
+impl WeightSet {
+    pub fn load(m: &Manifest, arch: &ArchInfo, info: &WeightInfo, lora: bool) -> Result<WeightSet> {
+        let bundle = Bundle::load(&m.path(&info.file))?;
+        let spec = if lora { &arch.lora } else { &arch.params };
+        let mut literals = Vec::with_capacity(spec.len());
+        for (name, shape) in spec {
+            let t = bundle
+                .get(name)
+                .with_context(|| format!("bundle {} vs arch {}", info.name, arch.name))?;
+            if &t.shape != shape {
+                bail!(
+                    "tensor '{name}' in {}: shape {:?} != manifest {:?}",
+                    info.name,
+                    t.shape,
+                    shape
+                );
+            }
+            literals.push(t.to_literal()?);
+        }
+        Ok(WeightSet {
+            info: info.clone(),
+            n_params: bundle.n_params(),
+            byte_size: bundle.byte_size(),
+            literals,
+        })
+    }
+
+    /// All-zero LoRA adapters for an arch (the base version's "adapter").
+    pub fn zero_lora(arch: &ArchInfo) -> Result<WeightSet> {
+        let mut literals = Vec::with_capacity(arch.lora.len());
+        for (_, shape) in &arch.lora {
+            let n: usize = shape.iter().product();
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(&vec![0f32; n]).reshape(&dims)?);
+        }
+        Ok(WeightSet {
+            info: WeightInfo {
+                name: "zero_lora".into(),
+                arch: arch.name.clone(),
+                kind: "lora".into(),
+                file: String::new(),
+                base: None,
+                domain: None,
+                target: None,
+            },
+            n_params: 0,
+            byte_size: 0,
+            literals,
+        })
+    }
+}
+
+/// Per-session KV cache: an owned literal + the committed position.
+/// "Rollback" (paper §IV-C) is a position-pointer rewind — rejected
+/// slots are provably overwritten before they can be attended (DESIGN.md).
+pub struct KvState {
+    pub lit: xla::Literal,
+    pub pos: usize,
+    pub max_seq: usize,
+}
+
+impl KvState {
+    pub fn new(arch: &ArchInfo) -> Result<KvState> {
+        let n = arch.kv_elements();
+        let dims: Vec<i64> = arch.kv_shape.iter().map(|&d| d as i64).collect();
+        Ok(KvState {
+            lit: xla::Literal::vec1(&vec![0f32; n]).reshape(&dims)?,
+            pos: 0,
+            max_seq: arch.max_seq,
+        })
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_seq.saturating_sub(self.pos)
+    }
+}
+
+/// Execution statistics (fed into the metrics layer + §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct ModelStats {
+    pub block_calls: Cell<u64>,
+    pub prefill_calls: Cell<u64>,
+    pub tokens_processed: Cell<u64>,
+    pub exec_nanos: Cell<u64>,
+}
+
+/// One architecture's compiled entry points + one weight bundle.
+pub struct ModelRuntime {
+    pub arch: ArchInfo,
+    pub weights: Rc<WeightSet>,
+    engine: Rc<Engine>,
+    block_exe: Rc<xla::PjRtLoadedExecutable>,
+    prefill_exe: Rc<xla::PjRtLoadedExecutable>,
+    pub block: usize,
+    pub prefill_chunk: usize,
+    pub stats: ModelStats,
+}
+
+/// Result of one block forward: per-row logits and the updated cache.
+pub struct BlockOut {
+    /// Row-major [valid rows kept only] x vocab.
+    pub logits: Vec<f32>,
+    pub rows: usize,
+    pub vocab: usize,
+}
+
+impl BlockOut {
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.logits[r * self.vocab..(r + 1) * self.vocab]
+    }
+
+    pub fn argmax_row(&self, r: usize) -> i32 {
+        let row = self.row(r);
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+impl ModelRuntime {
+    pub fn new(
+        engine: Rc<Engine>,
+        m: &Manifest,
+        weight_name: &str,
+    ) -> Result<ModelRuntime> {
+        let info = m.weight(weight_name)?.clone();
+        let arch = m.arch(&info.arch)?.clone();
+        if info.kind == "lora" {
+            bail!("'{weight_name}' is a LoRA adapter, not a full weight bundle");
+        }
+        let weights = Rc::new(WeightSet::load(m, &arch, &info, false)?);
+        let block_exe = engine.load_hlo(&m.path(&arch.hlo_block))?;
+        let prefill_exe = engine.load_hlo(&m.path(&arch.hlo_prefill))?;
+        Ok(ModelRuntime {
+            arch,
+            weights,
+            engine,
+            block_exe,
+            prefill_exe,
+            block: m.block,
+            prefill_chunk: m.prefill_chunk,
+            stats: ModelStats::default(),
+        })
+    }
+
+    pub fn new_kv(&self) -> Result<KvState> {
+        KvState::new(&self.arch)
+    }
+
+    fn call(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        lora: Option<&WeightSet>,
+        tokens: &[i32],
+        pos: usize,
+        valid: usize,
+        kv: &mut KvState,
+    ) -> Result<BlockOut> {
+        // Fresh buffers per call + execute_b (donating) — see the
+        // WeightSet doc comment for why NOT execute() (leaks per-arg
+        // buffers) and why NOT cached buffers (donation frees them).
+        let t0 = std::time::Instant::now();
+        let client = self.engine.client();
+        let tok_lit = xla::Literal::vec1(tokens);
+        let pos_lit = xla::Literal::vec1(&[pos as i32]);
+        let valid_lit = xla::Literal::vec1(&[valid as i32]);
+
+        let mut bufs: Vec<xla::PjRtBuffer> =
+            Vec::with_capacity(self.weights.literals.len() + self.arch.lora.len() + 4);
+        for lit in &self.weights.literals {
+            bufs.push(client.buffer_from_host_literal(None, lit)?);
+        }
+        if self.arch.lora_rank > 0 {
+            let l = lora.expect("target arch requires a LoRA set (use zero_lora for base)");
+            assert_eq!(l.literals.len(), self.arch.lora.len());
+            for lit in &l.literals {
+                bufs.push(client.buffer_from_host_literal(None, lit)?);
+            }
+        }
+        bufs.push(client.buffer_from_host_literal(None, &tok_lit)?);
+        bufs.push(client.buffer_from_host_literal(None, &pos_lit)?);
+        bufs.push(client.buffer_from_host_literal(None, &valid_lit)?);
+        bufs.push(client.buffer_from_host_literal(None, &kv.lit)?);
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+
+        let mut out = self.engine.run_b(exe, &refs)?;
+        drop(refs);
+        drop(bufs); // caller-owned buffers freed here — execute() would have leaked its internal copies
+        if out.len() != 2 {
+            bail!("expected (logits, kv) tuple, got {} elements", out.len());
+        }
+        let kv_out = out.pop().unwrap();
+        let logits_lit = out.pop().unwrap();
+        let logits = logits_lit.to_vec::<f32>()?;
+        kv.lit = kv_out;
+
+        self.stats.tokens_processed.set(self.stats.tokens_processed.get() + valid as u64);
+        self.stats
+            .exec_nanos
+            .set(self.stats.exec_nanos.get() + t0.elapsed().as_nanos() as u64);
+        Ok(BlockOut {
+            rows: tokens.len(),
+            vocab: self.arch.vocab,
+            logits,
+        })
+    }
+
+    /// Forward up to `block` new tokens at kv.pos; advances kv.pos by
+    /// `commit` (callers commit fewer rows than they fed on rejection —
+    /// that position rewind IS the KV rollback).
+    pub fn forward_block(
+        &self,
+        lora: Option<&WeightSet>,
+        tokens: &[i32],
+        kv: &mut KvState,
+        commit: usize,
+    ) -> Result<BlockOut> {
+        if tokens.is_empty() || tokens.len() > self.block {
+            bail!("block must hold 1..={} tokens, got {}", self.block, tokens.len());
+        }
+        if kv.pos + tokens.len() > self.arch.max_seq {
+            bail!(
+                "KV overflow: pos {} + {} > max_seq {}",
+                kv.pos,
+                tokens.len(),
+                self.arch.max_seq
+            );
+        }
+        let mut padded = tokens.to_vec();
+        padded.resize(self.block, 0);
+        let pos = kv.pos;
+        let out = self.call(&self.block_exe.clone(), lora, &padded, pos, tokens.len(), kv)?;
+        self.stats.block_calls.set(self.stats.block_calls.get() + 1);
+        assert!(commit <= tokens.len());
+        kv.pos = pos + commit;
+        Ok(out)
+    }
+
+    /// Chunked prompt ingestion. Returns the logits row after the last
+    /// prompt token (the next-token distribution) and commits the prompt.
+    pub fn prefill(
+        &self,
+        lora: Option<&WeightSet>,
+        prompt: &[i32],
+        kv: &mut KvState,
+    ) -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if kv.pos + prompt.len() > self.arch.max_seq {
+            bail!("prompt of {} tokens overflows max_seq", prompt.len());
+        }
+        let mut last_row = None;
+        for chunk in prompt.chunks(self.prefill_chunk) {
+            let mut padded = chunk.to_vec();
+            padded.resize(self.prefill_chunk, 0);
+            let pos = kv.pos;
+            let out = self.call(&self.prefill_exe.clone(), lora, &padded, pos, chunk.len(), kv)?;
+            self.stats.prefill_calls.set(self.stats.prefill_calls.get() + 1);
+            kv.pos = pos + chunk.len();
+            last_row = Some(out.row(chunk.len() - 1).to_vec());
+        }
+        Ok(last_row.unwrap())
+    }
+}
+
+/// The fused Pallas verification kernel (L1), AOT-compiled per vocab.
+pub struct VerifyRuntime {
+    engine: Rc<Engine>,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub block: usize,
+    pub vocab: usize,
+}
+
+impl VerifyRuntime {
+    pub fn new(engine: Rc<Engine>, m: &Manifest, vocab: usize) -> Result<VerifyRuntime> {
+        let rel = m
+            .verify_hlo
+            .get(&vocab)
+            .ok_or_else(|| anyhow::anyhow!("no verify kernel for vocab {vocab}"))?;
+        let exe = engine.load_hlo(&m.path(rel))?;
+        Ok(VerifyRuntime {
+            engine,
+            exe,
+            block: m.block,
+            vocab,
+        })
+    }
+
+    /// Greedy verification: (tau, correction, greedy tokens per row).
+    pub fn verify(&self, logits: &[f32], draft: &[i32], n_draft: usize) -> Result<(usize, i32, Vec<i32>)> {
+        assert_eq!(logits.len(), self.block * self.vocab);
+        assert_eq!(draft.len(), self.block - 1);
+        let logits_lit = xla::Literal::vec1(logits)
+            .reshape(&[self.block as i64, self.vocab as i64])?;
+        let draft_lit = xla::Literal::vec1(draft);
+        let n_lit = xla::Literal::vec1(&[n_draft as i32]);
+        let out = self
+            .engine
+            .run(&self.exe, &[&logits_lit, &draft_lit, &n_lit])?;
+        let tau = out[0].to_vec::<i32>()?[0] as usize;
+        let corr = out[1].to_vec::<i32>()?[0];
+        let greedy = out[2].to_vec::<i32>()?;
+        Ok((tau, corr, greedy))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> Option<(Rc<Engine>, Manifest)> {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&root).unwrap();
+        if !m.weights.contains_key("target_llama2t_base") {
+            return None;
+        }
+        Some((Rc::new(Engine::cpu().unwrap()), m))
+    }
+
+    #[test]
+    fn verify_kernel_roundtrip() {
+        let Some((e, m)) = setup() else { return };
+        let v = VerifyRuntime::new(e, &m, 512).unwrap();
+        // logits that make greedy row r = 5 + r; row j predicts draft[j]
+        let mut logits = vec![0f32; 9 * 512];
+        for r in 0..9 {
+            logits[r * 512 + 5 + r] = 10.0;
+        }
+        let draft = [5, 6, 99, 0, 0, 0, 0, 0];
+        let (tau, corr, greedy) = v.verify(&logits, &draft, 5).unwrap();
+        assert_eq!(greedy[0], 5);
+        assert_eq!(tau, 2); // 5, 6 accepted; 99 != greedy[2]=7 rejected
+        assert_eq!(corr, 7); // correction = greedy[tau] = greedy[2]
+    }
+
+    #[test]
+    fn block_forward_and_incremental_consistency() {
+        let Some((e, m)) = setup() else { return };
+        let rt = ModelRuntime::new(e, &m, "target_llama2t_base").unwrap();
+        let lora = WeightSet::zero_lora(&rt.arch).unwrap();
+        let toks: Vec<i32> = (0..9).map(|i| 20 + i).collect();
+
+        // one shot
+        let mut kv_a = rt.new_kv().unwrap();
+        let one = rt.forward_block(Some(&lora), &toks, &mut kv_a, 9).unwrap();
+
+        // two chunks through the cache
+        let mut kv_b = rt.new_kv().unwrap();
+        let _ = rt.forward_block(Some(&lora), &toks[..5], &mut kv_b, 5).unwrap();
+        let two = rt.forward_block(Some(&lora), &toks[5..], &mut kv_b, 4).unwrap();
+
+        for r in 0..4 {
+            let a = one.row(5 + r);
+            let b = two.row(r);
+            let max_err = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 1e-3, "row {r} err {max_err}");
+        }
+        assert_eq!(kv_a.pos, 9);
+        assert_eq!(kv_b.pos, 9);
+    }
+
+    #[test]
+    fn prefill_matches_block_path() {
+        let Some((e, m)) = setup() else { return };
+        let rt = ModelRuntime::new(e, &m, "target_llama2t_base").unwrap();
+        let lora = WeightSet::zero_lora(&rt.arch).unwrap();
+        let prompt: Vec<i32> = (0..7).map(|i| 30 + 2 * i).collect();
+
+        let mut kv_a = rt.new_kv().unwrap();
+        let row_a = rt.prefill(Some(&lora), &prompt, &mut kv_a).unwrap();
+
+        let mut kv_b = rt.new_kv().unwrap();
+        let out = rt.forward_block(Some(&lora), &prompt, &mut kv_b, 7).unwrap();
+        let row_b = out.row(6);
+
+        let max_err = row_a
+            .iter()
+            .zip(row_b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-3, "err {max_err}");
+    }
+
+    #[test]
+    fn kv_rollback_pointer_rewind_is_safe() {
+        let Some((e, m)) = setup() else { return };
+        let rt = ModelRuntime::new(e, &m, "target_llama2t_base").unwrap();
+        let lora = WeightSet::zero_lora(&rt.arch).unwrap();
+
+        // clean trajectory: 4 then 3 committed tokens
+        let toks: Vec<i32> = vec![40, 41, 42, 43, 44, 45, 46];
+        let mut kv_clean = rt.new_kv().unwrap();
+        rt.forward_block(Some(&lora), &toks[..4], &mut kv_clean, 4).unwrap();
+        let clean = rt.forward_block(Some(&lora), &toks[4..], &mut kv_clean, 3).unwrap();
+
+        // dirty: speculate 4 + 4 garbage rows, commit only 4 (rollback),
+        // then feed the real continuation.
+        let mut kv = rt.new_kv().unwrap();
+        let spec: Vec<i32> = vec![40, 41, 42, 43, 99, 98, 97, 96];
+        rt.forward_block(Some(&lora), &spec, &mut kv, 4).unwrap();
+        let dirty = rt.forward_block(Some(&lora), &toks[4..], &mut kv, 3).unwrap();
+
+        for r in 0..3 {
+            let max_err = clean
+                .row(r)
+                .iter()
+                .zip(dirty.row(r))
+                .map(|(x, y)| (x - y).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 1e-3, "row {r} err {max_err}");
+        }
+    }
+
+    #[test]
+    fn kv_overflow_is_rejected() {
+        let Some((e, m)) = setup() else { return };
+        let rt = ModelRuntime::new(e, &m, "target_llama2t_base").unwrap();
+        let lora = WeightSet::zero_lora(&rt.arch).unwrap();
+        let mut kv = rt.new_kv().unwrap();
+        kv.pos = rt.arch.max_seq - 2;
+        let toks = vec![1i32; 9];
+        assert!(rt.forward_block(Some(&lora), &toks, &mut kv, 0).is_err());
+    }
+}

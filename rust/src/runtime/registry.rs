@@ -1,0 +1,232 @@
+//! Model/version registry: the cloud side's view of its evolving model
+//! fleet (base weights + hot-swappable LoRA adapters) and the edge side's
+//! static draft bundles.
+//!
+//! The registry is the piece that makes FlexSpec's decoupling concrete in
+//! code: one compiled `forward_block` executable per *architecture*
+//! serves every *version*, because adapters are runtime arguments. A
+//! "model update" on the cloud is a LoRA upload — the edge bundle never
+//! changes.
+
+use super::engine::Engine;
+use super::manifest::Manifest;
+use super::model::{ModelRuntime, VerifyRuntime, WeightSet};
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A resolved target version: full weights + the adapter to apply.
+#[derive(Clone)]
+pub struct TargetVersion {
+    pub name: String,
+    pub runtime: Rc<ModelRuntime>,
+    pub lora: Rc<WeightSet>,
+    /// Version sequence number s in the paper's {M_t^(s)} notation.
+    pub seq: u64,
+}
+
+pub struct Registry {
+    pub engine: Rc<Engine>,
+    pub manifest: Rc<Manifest>,
+    runtimes: RefCell<HashMap<String, Rc<ModelRuntime>>>,
+    loras: RefCell<HashMap<String, Rc<WeightSet>>>,
+    zero_loras: RefCell<HashMap<String, Rc<WeightSet>>>,
+    verifies: RefCell<HashMap<usize, Rc<VerifyRuntime>>>,
+    version_counter: RefCell<u64>,
+}
+
+impl Registry {
+    pub fn open(engine: Rc<Engine>, manifest: Rc<Manifest>) -> Registry {
+        Registry {
+            engine,
+            manifest,
+            runtimes: RefCell::new(HashMap::new()),
+            loras: RefCell::new(HashMap::new()),
+            zero_loras: RefCell::new(HashMap::new()),
+            verifies: RefCell::new(HashMap::new()),
+            version_counter: RefCell::new(0),
+        }
+    }
+
+    /// Open with defaults: CPU engine + manifest from the default root.
+    pub fn open_default() -> Result<Registry> {
+        let engine = Rc::new(Engine::cpu()?);
+        let manifest = Rc::new(Manifest::load(Manifest::default_root())?);
+        Ok(Self::open(engine, manifest))
+    }
+
+    /// Full model runtime (base target, full-FT target, or any draft).
+    pub fn model(&self, weight_name: &str) -> Result<Rc<ModelRuntime>> {
+        if let Some(rt) = self.runtimes.borrow().get(weight_name) {
+            return Ok(rt.clone());
+        }
+        let rt = Rc::new(ModelRuntime::new(
+            self.engine.clone(),
+            &self.manifest,
+            weight_name,
+        )?);
+        self.runtimes
+            .borrow_mut()
+            .insert(weight_name.to_string(), rt.clone());
+        Ok(rt)
+    }
+
+    /// LoRA adapter bundle by name.
+    pub fn lora(&self, name: &str) -> Result<Rc<WeightSet>> {
+        if let Some(l) = self.loras.borrow().get(name) {
+            return Ok(l.clone());
+        }
+        let info = self.manifest.weight(name)?;
+        if info.kind != "lora" {
+            bail!("'{name}' is not a LoRA bundle (kind = {})", info.kind);
+        }
+        let arch = self.manifest.arch(&info.arch)?;
+        let ws = Rc::new(WeightSet::load(&self.manifest, arch, info, true)?);
+        self.loras.borrow_mut().insert(name.to_string(), ws.clone());
+        Ok(ws)
+    }
+
+    /// The all-zero adapter for an arch (selects the base behaviour).
+    pub fn zero_lora(&self, arch_name: &str) -> Result<Rc<WeightSet>> {
+        if let Some(l) = self.zero_loras.borrow().get(arch_name) {
+            return Ok(l.clone());
+        }
+        let arch = self.manifest.arch(arch_name)?;
+        let ws = Rc::new(WeightSet::zero_lora(arch)?);
+        self.zero_loras
+            .borrow_mut()
+            .insert(arch_name.to_string(), ws.clone());
+        Ok(ws)
+    }
+
+    /// Resolve a target *version*:
+    ///   "target_<fam>_base"        -> base weights + zero adapter
+    ///   "lora_<fam>_<domain>"      -> base weights + that adapter
+    ///   "target_<fam>_code_full"   -> full-FT weights + zero adapter
+    pub fn target_version(&self, name: &str) -> Result<TargetVersion> {
+        let info = self.manifest.weight(name)?.clone();
+        let seq = {
+            let mut c = self.version_counter.borrow_mut();
+            *c += 1;
+            *c
+        };
+        let version = match info.kind.as_str() {
+            "base" | "full" => TargetVersion {
+                name: name.to_string(),
+                lora: self.zero_lora(&info.arch)?,
+                runtime: self.model(name)?,
+                seq,
+            },
+            "lora" => {
+                let base = info
+                    .base
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("lora '{name}' missing base"))?;
+                TargetVersion {
+                    name: name.to_string(),
+                    runtime: self.model(&base)?,
+                    lora: self.lora(name)?,
+                    seq,
+                }
+            }
+            k => bail!("'{name}' (kind {k}) is not a target version"),
+        };
+        Ok(version)
+    }
+
+    /// The fused verification kernel for a vocabulary size.
+    pub fn verify(&self, vocab: usize) -> Result<Rc<VerifyRuntime>> {
+        if let Some(v) = self.verifies.borrow().get(&vocab) {
+            return Ok(v.clone());
+        }
+        let v = Rc::new(VerifyRuntime::new(
+            self.engine.clone(),
+            &self.manifest,
+            vocab,
+        )?);
+        self.verifies.borrow_mut().insert(vocab, v.clone());
+        Ok(v)
+    }
+
+    /// Weight-bundle names of a given kind (e.g. every "lora" version).
+    pub fn names_of_kind(&self, kind: &str) -> Vec<String> {
+        self.manifest
+            .weights
+            .values()
+            .filter(|w| w.kind == kind)
+            .map(|w| w.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn open() -> Option<Registry> {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&root).unwrap();
+        if !m.weights.contains_key("lora_llama2t_gsm8k") {
+            return None;
+        }
+        Some(Registry::open(
+            Rc::new(Engine::cpu().unwrap()),
+            Rc::new(m),
+        ))
+    }
+
+    #[test]
+    fn version_resolution_shares_runtime() {
+        let Some(reg) = open() else { return };
+        let base = reg.target_version("target_llama2t_base").unwrap();
+        let math = reg.target_version("lora_llama2t_gsm8k").unwrap();
+        // same compiled executable + weights, different adapters
+        assert!(Rc::ptr_eq(&base.runtime, &math.runtime));
+        assert!(!Rc::ptr_eq(&base.lora, &math.lora));
+        assert!(math.seq > base.seq);
+    }
+
+    #[test]
+    fn lora_changes_model_output() {
+        let Some(reg) = open() else { return };
+        let base = reg.target_version("target_llama2t_base").unwrap();
+        let math = reg.target_version("lora_llama2t_gsm8k").unwrap();
+        let toks: Vec<i32> = (0..9).map(|i| 70 + i).collect();
+
+        let mut kv1 = base.runtime.new_kv().unwrap();
+        let a = base
+            .runtime
+            .forward_block(Some(&base.lora), &toks, &mut kv1, 9)
+            .unwrap();
+        let mut kv2 = base.runtime.new_kv().unwrap();
+        let b = math
+            .runtime
+            .forward_block(Some(&math.lora), &toks, &mut kv2, 9)
+            .unwrap();
+        let diff = a
+            .logits
+            .iter()
+            .zip(&b.logits)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(diff > 1e-3, "LoRA adapter had no effect (diff {diff})");
+    }
+
+    #[test]
+    fn kind_filters() {
+        let Some(reg) = open() else { return };
+        let loras = reg.names_of_kind("lora");
+        assert!(loras.iter().any(|n| n.contains("gsm8k")));
+        assert!(reg.names_of_kind("base").len() >= 1);
+    }
+
+    #[test]
+    fn rejects_lora_as_model() {
+        let Some(reg) = open() else { return };
+        assert!(reg.model("lora_llama2t_gsm8k").is_err());
+    }
+}

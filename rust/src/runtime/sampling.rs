@@ -1,0 +1,290 @@
+//! Sampling + stochastic speculative verification on the L3 side.
+//!
+//! The greedy path uses the fused Pallas verify kernel; the stochastic
+//! path (Regime B, Temperature = 1) implements Leviathan-style acceptance
+//! over the logits the runtime already pulled to the host. The residual
+//! pick mirrors python's `ref.sample_verify_ref` so both sides can be
+//! cross-checked.
+
+use crate::util::rng::SplitMix64;
+
+/// Softmax with temperature; numerically stable, f32 in/out.
+pub fn softmax_temp(logits: &[f32], temperature: f32) -> Vec<f32> {
+    let t = temperature.max(1e-6);
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut out: Vec<f32> = logits.iter().map(|&z| ((z - m) / t).exp()).collect();
+    let s: f32 = out.iter().sum();
+    for v in &mut out {
+        *v /= s;
+    }
+    out
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-p (nucleus) sampling at a given temperature.
+/// p >= 1.0 degrades to full sampling; temperature == 0 to greedy.
+pub fn sample_top_p(logits: &[f32], temperature: f32, top_p: f32, rng: &mut SplitMix64) -> usize {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let probs = softmax_temp(logits, temperature);
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    // nucleus
+    let mut kept = Vec::with_capacity(64);
+    let mut acc = 0f32;
+    for &i in &idx {
+        kept.push(i);
+        acc += probs[i];
+        if acc >= top_p {
+            break;
+        }
+    }
+    let r = rng.next_f64() as f32 * acc;
+    let mut c = 0f32;
+    for &i in &kept {
+        c += probs[i];
+        if r < c {
+            return i;
+        }
+    }
+    *kept.last().unwrap()
+}
+
+/// Outcome of one verification round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyOutcome {
+    /// Number of draft tokens accepted.
+    pub tau: usize,
+    /// Correction/bonus token committed after the accepted prefix.
+    pub correction: i32,
+}
+
+/// Stochastic speculative verification (Leviathan et al.): accept draft
+/// token j with prob min(1, p_t/p_d); on the first rejection pick the
+/// argmax of the residual max(p_t - p_d, 0) (deterministic residual —
+/// mirrors ref.sample_verify_ref); if everything is accepted the bonus
+/// token is sampled from the next-position target distribution.
+///
+/// `target_logits` is row-major [block x vocab]; `draft_probs[j]` is the
+/// draft distribution that proposed `draft[j]`.
+pub fn stochastic_verify(
+    target_logits: &[f32],
+    vocab: usize,
+    draft_probs: &[Vec<f32>],
+    draft: &[i32],
+    n_draft: usize,
+    temperature: f32,
+    top_p: f32,
+    rng: &mut SplitMix64,
+) -> VerifyOutcome {
+    assert!(target_logits.len() >= (n_draft + 1) * vocab);
+    assert!(draft_probs.len() >= n_draft && draft.len() >= n_draft);
+    let row = |j: usize| &target_logits[j * vocab..(j + 1) * vocab];
+
+    let mut tau = 0usize;
+    while tau < n_draft {
+        let pt = softmax_temp(row(tau), temperature);
+        let tok = draft[tau] as usize;
+        let p_t = pt[tok];
+        let p_d = draft_probs[tau][tok].max(1e-20);
+        let ratio = (p_t / p_d).min(1.0);
+        if rng.next_f64() < ratio as f64 {
+            tau += 1;
+        } else {
+            // rejected: residual distribution at this position
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for i in 0..vocab {
+                let r = (pt[i] - draft_probs[tau][i]).max(0.0);
+                if r > best_v {
+                    best_v = r;
+                    best = i;
+                }
+            }
+            return VerifyOutcome {
+                tau,
+                correction: best as i32,
+            };
+        }
+    }
+    // all accepted: bonus token from the next-position distribution
+    let bonus = sample_top_p(row(n_draft), temperature, top_p, rng);
+    VerifyOutcome {
+        tau,
+        correction: bonus as i32,
+    }
+}
+
+/// Greedy verification in pure rust — reference mirror of the Pallas
+/// kernel (used by tests and the trace validator, NOT the hot path).
+pub fn greedy_verify_ref(
+    target_logits: &[f32],
+    vocab: usize,
+    draft: &[i32],
+    n_draft: usize,
+) -> VerifyOutcome {
+    let row = |j: usize| &target_logits[j * vocab..(j + 1) * vocab];
+    let mut tau = 0usize;
+    while tau < n_draft && argmax(row(tau)) as i32 == draft[tau] {
+        tau += 1;
+    }
+    VerifyOutcome {
+        tau,
+        correction: argmax(row(tau)) as i32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let p = softmax_temp(&[1.0, 3.0, 2.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[1] > p[2] && p[2] > p[0]);
+        // low temperature sharpens
+        let sharp = softmax_temp(&[1.0, 3.0, 2.0], 0.1);
+        assert!(sharp[1] > p[1]);
+    }
+
+    #[test]
+    fn greedy_sampling_at_zero_temperature() {
+        let mut rng = SplitMix64::new(1);
+        assert_eq!(sample_top_p(&[0.1, 5.0, 0.2], 0.0, 0.9, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_p_restricts_to_nucleus() {
+        // one dominant token: top_p=0.5 must always pick it
+        let mut rng = SplitMix64::new(2);
+        let logits = [10.0, 0.0, 0.0, 0.0];
+        for _ in 0..50 {
+            assert_eq!(sample_top_p(&logits, 1.0, 0.5, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn sampling_is_distribution_shaped() {
+        let mut rng = SplitMix64::new(3);
+        let logits = [0.0f32, 2.0, 0.0, 0.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            counts[sample_top_p(&logits, 1.0, 1.0, &mut rng)] += 1;
+        }
+        assert!(counts[1] > counts[0] * 3);
+    }
+
+    #[test]
+    fn greedy_verify_accept_prefix() {
+        let vocab = 8;
+        let mut logits = vec![0f32; 3 * vocab];
+        logits[0 * vocab + 4] = 5.0; // greedy row0 = 4
+        logits[1 * vocab + 5] = 5.0; // greedy row1 = 5
+        logits[2 * vocab + 6] = 5.0;
+        let out = greedy_verify_ref(&logits, vocab, &[4, 9], 2);
+        assert_eq!(out, VerifyOutcome { tau: 1, correction: 5 });
+    }
+
+    #[test]
+    fn stochastic_verify_accepts_identical_distributions() {
+        // draft probs == target probs with dominant tokens => accept all
+        let vocab = 16;
+        let n = 4;
+        let mut logits = vec![0f32; (n + 1) * vocab];
+        let mut draft_probs = Vec::new();
+        let mut draft = Vec::new();
+        for j in 0..n {
+            logits[j * vocab + j] = 20.0; // ~deterministic
+            let p = softmax_temp(&logits[j * vocab..(j + 1) * vocab], 1.0);
+            draft_probs.push(p);
+            draft.push(j as i32);
+        }
+        logits[n * vocab + 7] = 20.0;
+        let mut rng = SplitMix64::new(4);
+        let out = stochastic_verify(&logits, vocab, &draft_probs, &draft, n, 1.0, 0.9, &mut rng);
+        assert_eq!(out.tau, n);
+        assert_eq!(out.correction, 7);
+    }
+
+    #[test]
+    fn stochastic_verify_rejects_zero_prob_draft() {
+        let vocab = 8;
+        let mut logits = vec![0f32; 2 * vocab];
+        logits[3] = 20.0; // target strongly prefers 3
+        // draft proposed 5, which it believed certain; target p(5) ~ 0
+        let mut dp = vec![1e-9f32; vocab];
+        dp[5] = 1.0;
+        let mut rng = SplitMix64::new(5);
+        let out = stochastic_verify(&logits, vocab, &[dp], &[5], 1, 1.0, 0.9, &mut rng);
+        assert_eq!(out.tau, 0);
+        assert_eq!(out.correction, 3); // residual argmax == target argmax
+    }
+
+    #[test]
+    fn stochastic_tau_bounds_property() {
+        prop::check(100, |rng| {
+            let vocab = 16;
+            let n = 1 + rng.next_range(7) as usize;
+            let mut logits = vec![0f32; (n + 1) * vocab];
+            for v in logits.iter_mut() {
+                *v = rng.next_normal() as f32;
+            }
+            let mut draft_probs = Vec::new();
+            let mut draft = Vec::new();
+            for j in 0..n {
+                let mut raw = vec![0f32; vocab];
+                for v in raw.iter_mut() {
+                    *v = rng.next_normal() as f32;
+                }
+                draft_probs.push(softmax_temp(&raw, 1.0));
+                draft.push(rng.next_range(vocab as u64) as i32);
+            }
+            let out = stochastic_verify(
+                &logits, vocab, &draft_probs, &draft, n, 1.0, 0.9, rng,
+            );
+            prop::assert_prop(out.tau <= n, "tau exceeds n_draft")?;
+            prop::assert_prop(
+                (out.correction as usize) < vocab,
+                "correction out of vocab",
+            )
+        });
+    }
+
+    #[test]
+    fn greedy_is_stochastic_limit() {
+        // At very low temperature with confident target, stochastic accepts
+        // exactly the greedy prefix.
+        let vocab = 8;
+        let n = 3;
+        let mut logits = vec![0f32; (n + 1) * vocab];
+        for j in 0..=n {
+            logits[j * vocab + (j % vocab)] = 30.0;
+        }
+        let draft = [0i32, 1, 7];
+        let dp: Vec<Vec<f32>> = draft
+            .iter()
+            .map(|&d| {
+                let mut p = vec![1e-6f32; vocab];
+                p[d as usize] = 1.0;
+                p
+            })
+            .collect();
+        let mut rng = SplitMix64::new(6);
+        let s = stochastic_verify(&logits, vocab, &dp, &draft, n, 0.05, 0.9, &mut rng);
+        let g = greedy_verify_ref(&logits, vocab, &draft, n);
+        assert_eq!(s.tau, g.tau);
+        assert_eq!(s.correction, g.correction);
+    }
+}

@@ -1,0 +1,239 @@
+//! FSWB1 weight-bundle reader — the rust half of the wire format written
+//! by `python/compile/export.py` (see that file for the layout).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"FSWB1\x00\x00\x00";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// A host tensor loaded from a bundle.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    /// Raw little-endian data; length == element_count * 4.
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor is not f32");
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != Dtype::I32 {
+            bail!("tensor is not i32");
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Build an xla literal with this tensor's shape and data.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self.dtype {
+            Dtype::F32 => {
+                let v = self.as_f32()?;
+                xla::Literal::vec1(&v).reshape(&dims)?
+            }
+            Dtype::I32 => {
+                let v = self.as_i32()?;
+                xla::Literal::vec1(&v).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// An ordered (by name) weight bundle.
+#[derive(Debug, Clone, Default)]
+pub struct Bundle {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Bundle {
+    pub fn load(path: &Path) -> Result<Bundle> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&raw).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(raw: &[u8]) -> Result<Bundle> {
+        let mut r = Cursor { raw, pos: 0 };
+        if r.take(8)? != MAGIC.as_slice() {
+            bail!("bad magic (not an FSWB1 bundle)");
+        }
+        let n = r.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+            let dtype = match r.u32()? {
+                0 => Dtype::F32,
+                1 => Dtype::I32,
+                d => bail!("unknown dtype tag {d}"),
+            };
+            let ndim = r.u32()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let nbytes = r.u64()? as usize;
+            let expect: usize = shape.iter().product::<usize>() * 4;
+            if nbytes != expect {
+                bail!("tensor '{name}': byte length {nbytes} != shape implies {expect}");
+            }
+            let data = r.take(nbytes)?.to_vec();
+            tensors.insert(name, Tensor { shape, dtype, data });
+        }
+        if r.pos != raw.len() {
+            bail!("trailing bytes after last tensor");
+        }
+        Ok(Bundle { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("bundle is missing tensor '{name}'"))
+    }
+
+    /// Total parameter count (for the paper's memory-footprint table).
+    pub fn n_params(&self) -> usize {
+        self.tensors.values().map(|t| t.element_count()).sum()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.tensors.values().map(|t| t.data.len()).sum()
+    }
+}
+
+struct Cursor<'a> {
+    raw: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.raw.len() {
+            bail!("truncated bundle at byte {}", self.pos);
+        }
+        let s = &self.raw[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a bundle in-memory exactly like python's export.write_bundle.
+    fn golden_bytes() -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&2u32.to_le_bytes());
+        // "a.vec" i32 [3]
+        out.extend_from_slice(&5u32.to_le_bytes());
+        out.extend_from_slice(b"a.vec");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&3u32.to_le_bytes());
+        out.extend_from_slice(&12u64.to_le_bytes());
+        for v in [1i32, 2, 3] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        // "b.mat" f32 [2,2]
+        out.extend_from_slice(&5u32.to_le_bytes());
+        out.extend_from_slice(b"b.mat");
+        out.extend_from_slice(&0u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&16u64.to_le_bytes());
+        for v in [1.5f32, -2.0, 0.0, 4.25] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parses_golden() {
+        let b = Bundle::parse(&golden_bytes()).unwrap();
+        assert_eq!(b.tensors.len(), 2);
+        let a = b.get("a.vec").unwrap();
+        assert_eq!(a.shape, vec![3]);
+        assert_eq!(a.as_i32().unwrap(), vec![1, 2, 3]);
+        let m = b.get("b.mat").unwrap();
+        assert_eq!(m.shape, vec![2, 2]);
+        assert_eq!(m.as_f32().unwrap(), vec![1.5, -2.0, 0.0, 4.25]);
+        assert_eq!(b.n_params(), 7);
+        assert_eq!(b.byte_size(), 28);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut raw = golden_bytes();
+        raw[0] = b'X';
+        assert!(Bundle::parse(&raw).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let raw = golden_bytes();
+        assert!(Bundle::parse(&raw[..raw.len() - 1]).is_err());
+        let mut extra = raw.clone();
+        extra.push(0);
+        assert!(Bundle::parse(&extra).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error_names_it() {
+        let b = Bundle::parse(&golden_bytes()).unwrap();
+        let e = b.get("nope").unwrap_err().to_string();
+        assert!(e.contains("nope"));
+    }
+
+    #[test]
+    fn loads_real_bundle_if_present() {
+        let p = std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts/weights/target_llama2t_base.bin"
+        ));
+        if p.exists() {
+            let b = Bundle::load(p).unwrap();
+            assert!(b.n_params() > 100_000);
+            assert!(b.tensors.contains_key("embed"));
+        }
+    }
+}

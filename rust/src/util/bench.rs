@@ -1,0 +1,132 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Warmup + timed iterations with mean/p50/p95 reporting and a
+//! `black_box` to defeat constant folding. Used by rust/benches/*.
+
+use std::time::Instant;
+
+pub use std::hint::black_box;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10}  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            format!("{} it", self.iters),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to roughly `budget_ms` of
+/// wall time (min 10 iterations), after `warmup` iterations.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: f64, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    let mut calib_iters = 0usize;
+    while t0.elapsed().as_secs_f64() < 0.02 || calib_iters < 3 {
+        f();
+        calib_iters += 1;
+        if calib_iters > 1000 {
+            break;
+        }
+    }
+    let per_iter = t0.elapsed().as_secs_f64() / calib_iters as f64;
+    let iters = ((budget_ms / 1e3 / per_iter.max(1e-9)) as usize).clamp(10, 100_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: crate::util::stats::percentile_sorted(&samples, 50.0),
+        p95_ns: crate::util::stats::percentile_sorted(&samples, 95.0),
+        min_ns: samples[0],
+    }
+}
+
+/// Run + print a group of benches; returns results for programmatic use.
+pub struct Group {
+    pub name: String,
+    pub results: Vec<BenchResult>,
+    budget_ms: f64,
+}
+
+impl Group {
+    pub fn new(name: &str) -> Self {
+        println!("\n### bench group: {name}");
+        Self {
+            name: name.to_string(),
+            results: Vec::new(),
+            budget_ms: 300.0,
+        }
+    }
+
+    pub fn with_budget(mut self, ms: f64) -> Self {
+        self.budget_ms = ms;
+        self
+    }
+
+    pub fn add<F: FnMut()>(&mut self, name: &str, f: F) -> &mut Self {
+        let r = bench(name, self.budget_ms, f);
+        println!("{}", r.report());
+        self.results.push(r);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut x = 0u64;
+        let r = bench("noop-ish", 10.0, || {
+            x = black_box(x.wrapping_add(1));
+        });
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+        assert!(r.min_ns <= r.p50_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,130 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Subcommand dispatch is done by the caller on `positional(0)`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `value_opts` lists the option names that consume a value; anything
+    /// else starting with `--` is a boolean flag.
+    pub fn parse(raw: impl IntoIterator<Item = String>, value_opts: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&body) {
+                    match it.next() {
+                        Some(v) => {
+                            out.options.insert(body.to_string(), v);
+                        }
+                        None => {
+                            out.flags.push(body.to_string());
+                        }
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(value_opts: &[&str]) -> Args {
+        Self::parse(std::env::args().skip(1), value_opts)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], value_opts: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), value_opts)
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse(&["exp", "table3", "--verbose"], &[]);
+        assert_eq!(a.positional(0), Some("exp"));
+        assert_eq!(a.positional(1), Some("table3"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn options_with_space_and_equals() {
+        let a = parse(
+            &["--requests", "40", "--network=wifi", "--seed=7"],
+            &["requests"],
+        );
+        assert_eq!(a.get_usize("requests", 0), 40);
+        assert_eq!(a.get("network"), Some("wifi"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_or("x", "dflt"), "dflt");
+        assert_eq!(a.get_f64("r", 1.5), 1.5);
+    }
+
+    #[test]
+    fn unparseable_value_falls_back() {
+        let a = parse(&["--n=abc"], &[]);
+        assert_eq!(a.get_usize("n", 9), 9);
+    }
+
+    #[test]
+    fn value_opt_at_end_degrades_to_flag() {
+        let a = parse(&["--requests"], &["requests"]);
+        assert!(a.flag("requests"));
+    }
+}

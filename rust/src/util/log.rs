@@ -1,0 +1,108 @@
+//! Minimal leveled logger with a global verbosity switch.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    VERBOSITY.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= VERBOSITY.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, module: &str, msg: &str) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag} {module}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($mod:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $mod, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($mod:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $mod, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($mod:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $mod, &format!($($arg)*))
+    };
+}
+
+/// Scope timer for coarse profiling (prints at Debug level on drop).
+pub struct ScopeTimer {
+    name: String,
+    start: Instant,
+}
+
+impl ScopeTimer {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        log(
+            Level::Debug,
+            "timer",
+            &format!("{}: {:.2} ms", self.name, self.elapsed_ms()),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = ScopeTimer::new("test");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+}

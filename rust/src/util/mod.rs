@@ -1,0 +1,12 @@
+//! Hand-rolled substrates: nothing beyond `xla` + `anyhow` is available
+//! offline, so JSON, CLI parsing, PRNG/distributions, stats, logging,
+//! property testing and the bench harness are implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,103 @@
+//! Mini property-based testing helper (proptest is not available offline).
+//!
+//! `check` runs a property over `n` seeded random cases and, on failure,
+//! reports the failing seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! prop::check(200, |rng| {
+//!     let k = rng.next_range(8) as usize + 1;
+//!     let policy_k = policy.select(k_ctx(rng));
+//!     prop::assert_prop(policy_k >= 1, "K must be at least 1")
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+#[derive(Debug)]
+pub struct PropFailure {
+    pub seed: u64,
+    pub case: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for PropFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed at case {} (replay seed {}): {}",
+            self.case, self.seed, self.msg
+        )
+    }
+}
+
+/// Run `property` over `n` random cases. Panics with the failing seed on
+/// the first counterexample. The base seed can be overridden with the
+/// FLEXSPEC_PROP_SEED env var to replay a failure.
+pub fn check<F>(n: usize, property: F)
+where
+    F: Fn(&mut SplitMix64) -> Result<(), String>,
+{
+    let base = std::env::var("FLEXSPEC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF1EC_5EED_u64);
+    for case in 0..n {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = SplitMix64::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("{}", PropFailure { seed, case, msg });
+        }
+    }
+}
+
+/// Readable assertion helper for properties.
+pub fn assert_prop(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert |a - b| <= tol with a diagnostic message.
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        // interior mutability through a cell to count invocations
+        let counter = std::cell::Cell::new(0usize);
+        check(50, |rng| {
+            counter.set(counter.get() + 1);
+            let x = rng.next_f64();
+            assert_prop((0.0..1.0).contains(&x), "f64 out of range")
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |rng| {
+            let x = rng.next_range(100);
+            assert_prop(x < 50, format!("x={x} too large"))
+        });
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(assert_close(1.0, 1.0005, 1e-3, "x").is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-3, "x").is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! Rust mirror of `python/compile/corpus.py` (DESIGN.md S14).
+//!
+//! CROSS-LANGUAGE CONTRACT: the same splitmix64 PRNG and the same grammar
+//! tables as the python training pipeline, so serving-time prompts come
+//! from exactly the distribution the models were trained/fine-tuned on.
+//! Golden sequences are pinned in both test suites; additionally the
+//! domain tables are validated against `manifest.json` at load time.
+
+use crate::runtime::{DomainInfo, Manifest};
+use crate::util::rng::SplitMix64;
+use anyhow::{bail, Result};
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const COMMON_OFFSET: u64 = 448;
+pub const COMMON_SIZE: u64 = 64;
+
+/// Grammar style (mirrors python's BASE / EVOLVED / FOREIGN).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Style {
+    Base,
+    Evolved,
+    Foreign,
+}
+
+/// One task grammar (constants mirror python; validated vs manifest).
+#[derive(Debug, Clone)]
+pub struct Domain {
+    pub name: &'static str,
+    pub offset: u64,
+    pub size: u64,
+    pub mult: u64,
+    pub inc: u64,
+    pub p_det: f64,
+    pub p_eos: f64,
+    pub prompt_len: (u64, u64),
+    pub gen_len: (u64, u64),
+    pub evolved_mult: u64,
+    pub evolved_inc: u64,
+    pub evolve_mod: u64,
+}
+
+pub const DOMAINS: &[Domain] = &[
+    Domain { name: "general",   offset: 16,  size: 48, mult: 5,  inc: 11, p_det: 0.75, p_eos: 0.020, prompt_len: (8, 24),   gen_len: (24, 64),  evolved_mult: 0, evolved_inc: 0, evolve_mod: 4 },
+    Domain { name: "gsm8k",     offset: 64,  size: 64, mult: 7,  inc: 3,  p_det: 0.85, p_eos: 0.015, prompt_len: (12, 32),  gen_len: (32, 96),  evolved_mult: 0, evolved_inc: 0, evolve_mod: 4 },
+    Domain { name: "humaneval", offset: 128, size: 64, mult: 11, inc: 5,  p_det: 0.85, p_eos: 0.012, prompt_len: (10, 28),  gen_len: (40, 112), evolved_mult: 0, evolved_inc: 0, evolve_mod: 3 },
+    Domain { name: "mtbench",   offset: 192, size: 64, mult: 3,  inc: 17, p_det: 0.78, p_eos: 0.018, prompt_len: (8, 40),   gen_len: (32, 96),  evolved_mult: 0, evolved_inc: 0, evolve_mod: 4 },
+    Domain { name: "nq",        offset: 256, size: 64, mult: 13, inc: 7,  p_det: 0.80, p_eos: 0.030, prompt_len: (6, 20),   gen_len: (16, 48),  evolved_mult: 0, evolved_inc: 0, evolve_mod: 4 },
+    Domain { name: "nq_rag",    offset: 256, size: 64, mult: 13, inc: 7,  p_det: 0.80, p_eos: 0.025, prompt_len: (48, 120), gen_len: (24, 64),  evolved_mult: 0, evolved_inc: 0, evolve_mod: 4 },
+    Domain { name: "wmt14",     offset: 320, size: 64, mult: 9,  inc: 13, p_det: 0.80, p_eos: 0.020, prompt_len: (12, 36),  gen_len: (24, 72),  evolved_mult: 0, evolved_inc: 0, evolve_mod: 4 },
+    Domain { name: "cnndm",     offset: 384, size: 64, mult: 5,  inc: 19, p_det: 0.80, p_eos: 0.022, prompt_len: (64, 160), gen_len: (24, 80),  evolved_mult: 0, evolved_inc: 0, evolve_mod: 4 },
+];
+
+pub fn domain(name: &str) -> Result<&'static Domain> {
+    DOMAINS
+        .iter()
+        .find(|d| d.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown domain '{name}'"))
+}
+
+/// Multiplicative hash picking pseudorandom token subsets (mirrors
+/// python `subset_hash`; see that docstring for why not residue classes).
+pub fn subset_hash(cur: u64, salt: u64) -> u64 {
+    ((cur.wrapping_mul(2654435761).wrapping_add(salt.wrapping_mul(40503))) & 0xFFFF_FFFF) >> 13
+}
+
+impl Domain {
+    /// Deterministic rule under a style — mirrors python `rule_next`.
+    pub fn rule_next(&self, cur: u64, style: Style) -> u64 {
+        match style {
+            Style::Evolved if subset_hash(cur, self.offset) % self.evolve_mod == self.evolve_mod - 1 => {
+                let m = if self.evolved_mult != 0 { self.evolved_mult } else { self.mult + 2 };
+                let c = if self.evolved_inc != 0 { self.evolved_inc } else { self.inc + 5 };
+                self.offset + ((cur * m + c) % self.size)
+            }
+            Style::Foreign
+                if (self.name == "general" && subset_hash(cur, 77) % 4 == 0)
+                    || (self.name != "general" && subset_hash(cur, 77) % 2 == 1) =>
+            {
+                self.offset + ((cur * (self.mult + 4) + self.inc + 7) % self.size)
+            }
+            _ => self.offset + ((cur * self.mult + self.inc) % self.size),
+        }
+    }
+
+    /// One grammar step — mirrors python `next_token`.
+    pub fn next_token(&self, cur: u64, rng: &mut SplitMix64, style: Style) -> u64 {
+        if rng.next_f64() < self.p_det {
+            self.rule_next(cur, style)
+        } else if rng.next_f64() < 0.5 {
+            self.offset + rng.next_range(self.size)
+        } else {
+            COMMON_OFFSET + rng.next_range(COMMON_SIZE)
+        }
+    }
+
+    /// `length` grammar tokens — mirrors python `gen_tokens`.
+    pub fn gen_tokens(&self, rng: &mut SplitMix64, length: usize, style: Style) -> Vec<i32> {
+        let mut cur = self.offset + rng.next_range(self.size);
+        let mut out = Vec::with_capacity(length);
+        for _ in 0..length {
+            out.push(cur as i32);
+            cur = self.next_token(cur, rng, style);
+        }
+        out
+    }
+
+    /// BOS + prompt prefix — mirrors python `gen_prompt`.
+    pub fn gen_prompt(&self, rng: &mut SplitMix64) -> Vec<i32> {
+        let (lo, hi) = self.prompt_len;
+        let n = lo + rng.next_range(hi - lo);
+        let mut p = vec![BOS];
+        p.extend(self.gen_tokens(rng, n as usize, Style::Base));
+        p
+    }
+
+    /// Output-length budget for a request of this task shape.
+    pub fn gen_budget(&self, rng: &mut SplitMix64) -> usize {
+        let (lo, hi) = self.gen_len;
+        (lo + rng.next_range(hi - lo)) as usize
+    }
+
+    /// Validate against the manifest's domain table (wire-format guard).
+    pub fn validate(&self, info: &DomainInfo) -> Result<()> {
+        if self.offset != info.offset
+            || self.size != info.size
+            || self.mult != info.mult
+            || self.inc != info.inc
+            || (self.p_det - info.p_det).abs() > 1e-9
+            || self.prompt_len != info.prompt_len
+            || self.gen_len != info.gen_len
+            || self.evolve_mod != info.evolve_mod
+        {
+            bail!(
+                "domain '{}' diverges between rust tables and manifest — \
+                 regenerate artifacts or update workload/corpus.rs",
+                self.name
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Validate every domain against the manifest (call at startup).
+pub fn validate_against_manifest(m: &Manifest) -> Result<()> {
+    for d in DOMAINS {
+        if let Some(info) = m.domains.get(d.name) {
+            d.validate(info)?;
+        } else {
+            bail!("manifest is missing domain '{}'", d.name);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_gsm8k_sequence_matches_python() {
+        // python/tests/test_corpus.py::test_gen_tokens_golden pins this.
+        let mut rng = SplitMix64::new(42);
+        let d = domain("gsm8k").unwrap();
+        let toks = d.gen_tokens(&mut rng, 12, Style::Base);
+        assert_eq!(toks, vec![85, 86, 93, 78, 101, 100, 127, 124, 103, 84, 79, 108]);
+    }
+
+    #[test]
+    fn tokens_stay_in_vocab_ranges() {
+        for d in DOMAINS {
+            let mut rng = SplitMix64::new(7);
+            for t in d.gen_tokens(&mut rng, 256, Style::Evolved) {
+                let t = t as u64;
+                let in_domain = t >= d.offset && t < d.offset + d.size;
+                let in_common = (COMMON_OFFSET..COMMON_OFFSET + COMMON_SIZE).contains(&t);
+                assert!(in_domain || in_common, "{} produced {t}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn evolved_rewrites_only_hashed_subset() {
+        let d = domain("gsm8k").unwrap();
+        let mut changed = 0;
+        for cur in d.offset..d.offset + d.size {
+            let base = d.rule_next(cur, Style::Base);
+            let evo = d.rule_next(cur, Style::Evolved);
+            if subset_hash(cur, d.offset) % d.evolve_mod != d.evolve_mod - 1 {
+                assert_eq!(base, evo);
+            } else {
+                changed += (base != evo) as usize;
+            }
+        }
+        // roughly 1/evolve_mod of the transitions rewritten
+        assert!((8..=26).contains(&changed), "changed {changed}");
+    }
+
+    #[test]
+    fn prompt_shapes_follow_task() {
+        let mut rng = SplitMix64::new(9);
+        let rag = domain("nq_rag").unwrap();
+        let nq = domain("nq").unwrap();
+        let p_rag = rag.gen_prompt(&mut rng);
+        let p_nq = nq.gen_prompt(&mut rng);
+        assert!(p_rag.len() > p_nq.len(), "RAG prompts are long");
+        assert_eq!(p_rag[0], BOS);
+    }
+
+    #[test]
+    fn validates_against_real_manifest_if_present() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if root.join("manifest.json").exists() {
+            let m = Manifest::load(&root).unwrap();
+            validate_against_manifest(&m).unwrap();
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Request workload generation: streams of (prompt, output budget)
+//! requests per dataset, deterministic per seed.
+
+use super::corpus::{domain, Domain};
+use crate::util::rng::SplitMix64;
+use anyhow::Result;
+
+/// One request of a workload.
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    pub id: u64,
+    pub domain: &'static str,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// Deterministic request stream for one dataset.
+pub struct WorkloadGen {
+    dom: &'static Domain,
+    rng: SplitMix64,
+    next_id: u64,
+    /// Cap prompt + generation to the model context (max_seq) minus slack.
+    pub context_budget: usize,
+}
+
+impl WorkloadGen {
+    pub fn new(dataset: &str, seed: u64) -> Result<WorkloadGen> {
+        Ok(WorkloadGen {
+            dom: domain(dataset)?,
+            rng: SplitMix64::new(seed ^ 0x0517_AD10),
+            next_id: 0,
+            context_budget: 244, // max_seq 256 - block slack
+        })
+    }
+
+    pub fn domain_name(&self) -> &'static str {
+        self.dom.name
+    }
+
+    /// Next request. Prompt + budget always fit the context window.
+    pub fn next_request(&mut self) -> RequestSpec {
+        self.next_id += 1;
+        let mut prompt = self.dom.gen_prompt(&mut self.rng);
+        let mut budget = self.dom.gen_budget(&mut self.rng);
+        if prompt.len() + budget > self.context_budget {
+            // RAG/summarization prompts can be long: trim output first,
+            // then the prompt head (keep the BOS + recent context).
+            budget = budget.min(self.context_budget.saturating_sub(prompt.len()).max(16));
+            if prompt.len() + budget > self.context_budget {
+                let keep = self.context_budget - budget;
+                let tail_start = prompt.len() - (keep - 1);
+                let mut trimmed = vec![super::corpus::BOS];
+                trimmed.extend_from_slice(&prompt[tail_start..]);
+                prompt = trimmed;
+            }
+        }
+        RequestSpec {
+            id: self.next_id,
+            domain: self.dom.name,
+            prompt,
+            max_new: budget,
+        }
+    }
+
+    /// A batch of requests.
+    pub fn take(&mut self, n: usize) -> Vec<RequestSpec> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+/// All six evaluation datasets of the paper (Tables III/IV).
+pub const EVAL_DATASETS: &[(&str, &str)] = &[
+    ("gsm8k", "GSM8K (Math)"),
+    ("nq", "Natural Questions (QA)"),
+    ("nq_rag", "Natural Questions (RAG)"),
+    ("mtbench", "MT-Bench (Chat)"),
+    ("wmt14", "WMT14 (Trans)"),
+    ("cnndm", "CNN/DM (Summ)"),
+];
+
+/// Which evolved cloud version serves a dataset (nq_rag reuses nq's).
+pub fn target_for_dataset(family: &str, dataset: &str) -> String {
+    let dom = if dataset == "nq_rag" { "nq" } else { dataset };
+    format!("lora_{family}_{dom}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_fit_context() {
+        for (ds, _) in EVAL_DATASETS {
+            let mut g = WorkloadGen::new(ds, 3).unwrap();
+            for r in g.take(50) {
+                assert!(r.prompt.len() + r.max_new <= 244, "{ds}");
+                assert_eq!(r.prompt[0], super::super::corpus::BOS);
+                assert!(r.max_new >= 16);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = WorkloadGen::new("gsm8k", 5).unwrap().take(5);
+        let b = WorkloadGen::new("gsm8k", 5).unwrap().take(5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+        }
+        let c = WorkloadGen::new("gsm8k", 6).unwrap().take(5);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn dataset_target_mapping() {
+        assert_eq!(target_for_dataset("llama2t", "gsm8k"), "lora_llama2t_gsm8k");
+        assert_eq!(target_for_dataset("llama2t", "nq_rag"), "lora_llama2t_nq");
+    }
+
+    #[test]
+    fn rag_prompts_longer_than_qa() {
+        let mut rag = WorkloadGen::new("nq_rag", 1).unwrap();
+        let mut nq = WorkloadGen::new("nq", 1).unwrap();
+        let lr: usize = rag.take(20).iter().map(|r| r.prompt.len()).sum();
+        let ln: usize = nq.take(20).iter().map(|r| r.prompt.len()).sum();
+        assert!(lr > 2 * ln);
+    }
+}

@@ -1,0 +1,8 @@
+//! Workload layer: the six evaluation datasets as synthetic grammar
+//! generators, PRNG-matched with the python training corpora.
+
+pub mod corpus;
+pub mod generator;
+
+pub use corpus::{Domain, Style, BOS, EOS, PAD};
+pub use generator::{RequestSpec, WorkloadGen};

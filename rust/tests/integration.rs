@@ -1,0 +1,189 @@
+//! Cross-module integration tests over the REAL artifacts: the full
+//! stack composed exactly as the examples/benches use it. Every test
+//! no-ops gracefully when `make artifacts` has not run yet.
+
+use flexspec::baselines::Method;
+use flexspec::channel::{Channel, ChannelState, ConstChannel, NetworkKind, NetworkProfile};
+use flexspec::channel::trace::ChannelTrace;
+use flexspec::coordinator::{CloudEngine, Pipeline};
+use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::experiments::{Ctx, REGIME_A, REGIME_B};
+use flexspec::runtime::Registry;
+use flexspec::workload::{WorkloadGen, EOS};
+
+fn ctx() -> Option<Ctx> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        return None;
+    }
+    std::env::set_var("FLEXSPEC_ARTIFACTS", root.to_str().unwrap());
+    let c = Ctx::open(2, 11).ok()?;
+    if !c.reg.manifest.weights.contains_key("draft_flex_llama2t") {
+        return None;
+    }
+    Some(c)
+}
+
+fn run_method(
+    reg: &Registry,
+    method: Method,
+    target: &str,
+    prompt: &[i32],
+    max_new: usize,
+    chan: &mut dyn Channel,
+    regime: flexspec::experiments::Regime,
+    seed: u64,
+) -> flexspec::coordinator::RequestResult {
+    let mut cloud = CloudEngine::new(reg, target, EOS).unwrap();
+    let mut pipe = Pipeline::new(
+        method.draft_source(reg, "llama2t", "gsm8k").unwrap(),
+        &mut cloud,
+        chan,
+        method.stride_policy(NetworkKind::FourG),
+        &JETSON_ORIN,
+        &A800_70B,
+        regime.mode,
+        regime.temperature,
+        regime.top_p,
+        method.label(),
+    );
+    pipe.run_request(prompt, max_new, seed).unwrap()
+}
+
+fn const_chan() -> ConstChannel {
+    ConstChannel(ChannelState {
+        up_bps: 50e6,
+        down_bps: 100e6,
+        prop_ms: 20.0,
+        fading: false,
+        loss_rate: 0.002,
+    })
+}
+
+#[test]
+fn every_greedy_method_is_lossless() {
+    // THE invariant of speculative decoding: all methods produce the
+    // cloud target's exact greedy output.
+    let Some(c) = ctx() else { return };
+    let mut gen = WorkloadGen::new("gsm8k", 4).unwrap();
+    let req = gen.next_request();
+    let max_new = req.max_new.min(24);
+
+    let mut chan = const_chan();
+    let reference = run_method(
+        &c.reg, Method::CloudOnly, "lora_llama2t_gsm8k", &req.prompt, max_new, &mut chan, REGIME_A, 5,
+    );
+    for m in [
+        Method::FlexSpec,
+        Method::StdSd,
+        Method::Pld,
+        Method::Lookahead,
+        Method::Eagle2,
+        Method::Medusa1,
+        Method::Dssd,
+    ] {
+        let mut chan = const_chan();
+        let r = run_method(
+            &c.reg, m, "lora_llama2t_gsm8k", &req.prompt, max_new, &mut chan, REGIME_A, 5,
+        );
+        assert_eq!(r.output, reference.output, "{} lost losslessness", m.label());
+    }
+}
+
+#[test]
+fn pipeline_is_deterministic_given_seeds() {
+    let Some(c) = ctx() else { return };
+    let mut gen = WorkloadGen::new("mtbench", 9).unwrap();
+    let req = gen.next_request();
+    let run = || {
+        let mut chan = NetworkProfile::new(NetworkKind::WifiWeak).channel(33);
+        run_method(
+            &c.reg, Method::FlexSpec, "lora_llama2t_mtbench", &req.prompt,
+            req.max_new.min(20), &mut chan, REGIME_B, 77,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.output, b.output);
+    assert_eq!(a.decode_ms, b.decode_ms);
+    assert_eq!(a.bytes_up, b.bytes_up);
+}
+
+#[test]
+fn stochastic_regime_respects_acceptance_bounds() {
+    let Some(c) = ctx() else { return };
+    let mut gen = WorkloadGen::new("nq", 2).unwrap();
+    let req = gen.next_request();
+    let mut chan = const_chan();
+    let r = run_method(
+        &c.reg, Method::FlexSpec, "lora_llama2t_nq", &req.prompt,
+        req.max_new.min(24), &mut chan, REGIME_B, 3,
+    );
+    assert!(r.new_tokens > 0);
+    assert!(r.accepted <= r.drafted);
+    for l in &r.rounds_log {
+        assert!(l.tau <= l.k);
+        assert_eq!(l.committed, l.tau + 1);
+        assert!(l.t_step_ms >= l.t_cloud_ms);
+    }
+}
+
+#[test]
+fn trace_replay_gives_identical_latency_across_runs() {
+    let Some(c) = ctx() else { return };
+    let mut stoch = NetworkProfile::new(NetworkKind::FourG).channel(5);
+    let trace = ChannelTrace::record(&mut stoch, 256, 100.0);
+    let mut gen = WorkloadGen::new("wmt14", 6).unwrap();
+    let req = gen.next_request();
+    let mut t1 = trace.replay();
+    let a = run_method(
+        &c.reg, Method::FlexSpec, "lora_llama2t_wmt14", &req.prompt,
+        req.max_new.min(16), &mut t1, REGIME_A, 8,
+    );
+    let mut t2 = trace.replay();
+    let b = run_method(
+        &c.reg, Method::FlexSpec, "lora_llama2t_wmt14", &req.prompt,
+        req.max_new.min(16), &mut t2, REGIME_A, 8,
+    );
+    assert_eq!(a.decode_ms, b.decode_ms);
+}
+
+#[test]
+fn frozen_draft_survives_hot_swap_across_all_versions() {
+    // The headline property: ONE draft bundle, every target version,
+    // decode never breaks and greedy output still matches cloud-only.
+    let Some(c) = ctx() else { return };
+    let versions: Vec<String> = c
+        .reg
+        .manifest
+        .weights
+        .values()
+        .filter(|w| w.arch == "llama2t" && (w.kind == "lora" || w.kind == "base" || w.kind == "full"))
+        .map(|w| w.name.clone())
+        .collect();
+    assert!(versions.len() >= 5, "zoo too small: {versions:?}");
+    let mut gen = WorkloadGen::new("general", 3).unwrap();
+    let req = gen.next_request();
+    for v in versions {
+        let mut chan = const_chan();
+        let flex = run_method(&c.reg, Method::FlexSpec, &v, &req.prompt, 12, &mut chan, REGIME_A, 2);
+        let mut chan2 = const_chan();
+        let co = run_method(&c.reg, Method::CloudOnly, &v, &req.prompt, 12, &mut chan2, REGIME_A, 2);
+        assert_eq!(flex.output, co.output, "lossless vs version {v}");
+    }
+}
+
+#[test]
+fn report_pipeline_renders_markdown() {
+    let Some(mut c) = ctx() else { return };
+    c.requests = 1;
+    let entries =
+        flexspec::report::run_experiments(&c, &["table1".to_string(), "fig2".to_string()]).unwrap();
+    let dir = std::env::temp_dir().join("flexspec_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("report.md");
+    flexspec::report::write_markdown(&entries, &path, "# test\n").unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("table1") && text.contains("fig2"));
+    assert!(text.contains("| Network Type |"));
+}
