@@ -1,0 +1,188 @@
+//! Multi-session serving over real localhost TCP + the determinism
+//! contract of the loopback transport.
+//!
+//!     cargo run --release --example serve_tcp
+//!
+//! Part 1 — REAL SOCKETS: a tokio cloud verification server on
+//! 127.0.0.1, five concurrent edge sessions (one OS thread each, like
+//! independent devices), cross-connection dynamic batching, and ONE
+//! mid-run target-version hot-swap (`gsm8k_lora`, drift 0.35) that live
+//! sessions survive — the frozen draft's acceptance visibly drops.
+//!
+//! Part 2 — DETERMINISM: the same serving stack over in-process
+//! `LoopbackTransport`s (same `handle_conn`, same verifier thread) must
+//! commit *exactly* the token counts the virtual-clock scheduler
+//! simulation commits for the same seed and a fixed stride K=4. No
+//! artifacts needed: both sides run the deterministic synthetic
+//! draft/target pair.
+
+use anyhow::Result;
+use flexspec::channel::{NetworkKind, NetworkProfile};
+use flexspec::coordinator::{serve_with, DraftSource, ServeConfig};
+use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::serve::{
+    run_edge_session, serve_cloud, serve_loopback, EdgeReport, EdgeSessionConfig, SyntheticDraft,
+    SyntheticTarget, TcpTransport, VerifierConfig, VerifyBackend,
+};
+
+const SEED: u64 = 7;
+const SESSIONS: usize = 5;
+const MAX_NEW: usize = 24;
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![1i32];
+            for j in 0..6 {
+                p.push(64 + ((i * 7 + j * 13) % 64) as i32);
+            }
+            p
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let rt = tokio::runtime::Builder::new_multi_thread()
+        .worker_threads(2)
+        .enable_all()
+        .build()?;
+
+    // ---- part 1: concurrent sessions over localhost TCP -------------
+    println!("== part 1: multi-session serving over localhost TCP ==");
+    let tcp_reports = rt.block_on(async {
+        let vcfg = VerifierConfig {
+            window_ms: 8.0,
+            max_batch: 8,
+            seed: SEED,
+            ..Default::default()
+        };
+        let handle = serve_cloud("127.0.0.1:0", vcfg, || {
+            Ok(Box::new(SyntheticTarget::new(SEED).with_version("gsm8k_lora", 0.35))
+                as Box<dyn VerifyBackend>)
+        })
+        .await?;
+        let addr = handle.addr.to_string();
+        println!("cloud verification server on {addr}");
+
+        let mut threads = Vec::new();
+        for prompt in prompts(SESSIONS) {
+            let addr = addr.clone();
+            threads.push(std::thread::spawn(move || -> Result<EdgeReport> {
+                let rt = tokio::runtime::Builder::new_current_thread()
+                    .enable_all()
+                    .build()?;
+                rt.block_on(async move {
+                    let mut t = TcpTransport::connect(&addr).await?;
+                    let mut draft = SyntheticDraft::new(SEED);
+                    let ecfg = EdgeSessionConfig {
+                        max_new: MAX_NEW,
+                        seed: SEED,
+                        ..Default::default()
+                    };
+                    run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+                })
+            }));
+        }
+
+        // mid-run hot-swap: as soon as sessions are live, evolve the
+        // target out from under them (they keep decoding)
+        loop {
+            tokio::time::sleep(std::time::Duration::from_millis(5)).await;
+            if handle.stats().await?.sessions_opened >= 2 {
+                break;
+            }
+        }
+        let seq = handle.deploy("gsm8k_lora").await?;
+        println!("hot-swapped target to gsm8k_lora (seq {seq}) with sessions in flight");
+
+        let reports: Vec<EdgeReport> = tokio::task::spawn_blocking(move || {
+            threads
+                .into_iter()
+                .map(|t| t.join().expect("edge thread panicked"))
+                .collect::<Result<Vec<_>>>()
+        })
+        .await??;
+
+        let metrics = handle.shutdown().await?;
+        println!("{}", metrics.render("TCP serving totals"));
+        assert_eq!(metrics.sessions_completed, SESSIONS, "all sessions must complete");
+        assert_eq!(metrics.hot_swaps, 1, "the mid-run deploy must have landed");
+        Ok::<_, anyhow::Error>(reports)
+    })?;
+    for r in &tcp_reports {
+        println!(
+            "  session {:2}: {} tokens in {} rounds, acceptance {:.2}, mean K {:.1}, rtt p50 {:.2} ms",
+            r.session,
+            r.new_tokens,
+            r.rounds,
+            r.acceptance(),
+            r.k_used.mean(),
+            r.rtt_ms.p50(),
+        );
+    }
+
+    // ---- part 2: loopback reproduces the scheduler simulation -------
+    println!("\n== part 2: loopback transport vs virtual-clock simulation ==");
+    let det_cfg = ServeConfig {
+        users: SESSIONS,
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed: SEED,
+        ..Default::default()
+    };
+    let mut backend = SyntheticTarget::new(SEED);
+    let mut make =
+        |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(SEED))) };
+    let sim = serve_with(
+        &mut backend,
+        &mut make,
+        &prompts(SESSIONS),
+        &JETSON_ORIN,
+        &A800_70B,
+        &NetworkProfile::new(NetworkKind::FourG),
+        &det_cfg,
+    )?;
+
+    let (loop_reports, loop_metrics) = rt.block_on(async {
+        let vcfg = VerifierConfig {
+            seed: SEED,
+            ..Default::default()
+        };
+        let edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>)> = prompts(SESSIONS)
+            .into_iter()
+            .map(|p| (Box::new(SyntheticDraft::new(SEED)) as Box<dyn DraftSource + Send>, p))
+            .collect();
+        let ecfg = EdgeSessionConfig {
+            max_new: MAX_NEW,
+            fixed_k: Some(4),
+            seed: SEED,
+            ..Default::default()
+        };
+        serve_loopback(
+            vcfg,
+            || Ok(Box::new(SyntheticTarget::new(SEED)) as Box<dyn VerifyBackend>),
+            edges,
+            ecfg,
+        )
+        .await
+    })?;
+
+    println!("{}", loop_metrics.render("loopback serving totals"));
+    for (i, (lr, so)) in loop_reports.iter().zip(&sim.per_session).enumerate() {
+        println!(
+            "  prompt {i}: loopback {} tokens / {} accepted / {} rounds  |  sim {} / {} / {}",
+            lr.new_tokens, lr.accepted, lr.rounds, so.new_tokens, so.accepted, so.rounds
+        );
+        assert_eq!(lr.new_tokens, so.new_tokens, "token count diverged on prompt {i}");
+        assert_eq!(lr.accepted, so.accepted, "accepted count diverged on prompt {i}");
+        assert_eq!(lr.drafted, so.drafted, "drafted count diverged on prompt {i}");
+        assert_eq!(lr.rounds, so.rounds, "round count diverged on prompt {i}");
+    }
+    println!(
+        "\nloopback == simulation for seed {SEED}: {} sessions, {} tokens, acceptance {:.3}",
+        SESSIONS,
+        sim.tokens,
+        loop_metrics.acceptance_rate()
+    );
+    Ok(())
+}

@@ -8,6 +8,7 @@ use flexspec::coordinator::edge::{DraftSource, ModelDraft};
 use flexspec::coordinator::policy::{AdaptivePolicy, LatencyModel};
 use flexspec::coordinator::CloudEngine;
 use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::protocol::frame::{Frame, FrameDecoder, FrameKind};
 use flexspec::protocol::{DraftMsg, VerifyMode, WireFormat};
 use flexspec::runtime::Registry;
 use flexspec::util::bench::{black_box, Group};
@@ -66,6 +67,44 @@ fn main() -> anyhow::Result<()> {
         );
         black_box(out);
     });
+
+    // ---- serve: frame codec throughput at K draft tokens --------------
+    // (regressions here tax every round of the TCP/loopback serving path)
+    let mut gf = Group::new("serve: frame codec (encode -> frame -> decode)").with_budget(80.0);
+    let ks = [2usize, 4, 8];
+    let frame_msgs: Vec<DraftMsg> = ks
+        .iter()
+        .map(|&k| DraftMsg {
+            session: 3,
+            round: 17,
+            tokens: (0..k as i32).map(|i| 100 + i).collect(),
+            chosen_probs: vec![0.5; k],
+            mode: VerifyMode::Stochastic,
+            wire: WireFormat::Compact,
+        })
+        .collect();
+    for (i, &k) in ks.iter().enumerate() {
+        let fmsg = &frame_msgs[i];
+        let nbytes = Frame::new(FrameKind::Draft, fmsg.encode()).encode().len();
+        gf.add(&format!("draft frame roundtrip K={k} ({nbytes} B/frame)"), || {
+            let f = Frame::new(FrameKind::Draft, black_box(fmsg).encode());
+            let b = f.encode();
+            let mut dec = FrameDecoder::new();
+            dec.push(&b);
+            let out = dec.next_frame().unwrap().unwrap();
+            black_box(DraftMsg::decode(&out.payload).unwrap());
+        });
+    }
+    for (i, r) in gf.results.iter().enumerate() {
+        let nbytes = Frame::new(FrameKind::Draft, frame_msgs[i].encode())
+            .encode()
+            .len();
+        println!(
+            "    -> K={}: {:.1} MB/s framed-codec throughput",
+            ks[i],
+            nbytes as f64 / (r.mean_ns / 1e9) / 1e6
+        );
+    }
 
     // ---- PJRT execution paths (need artifacts) ------------------------
     let Ok(reg) = Registry::open_default() else {

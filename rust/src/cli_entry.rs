@@ -4,6 +4,8 @@
 //!   list                         list experiments
 //!   exp <id|all> [--requests N] [--seed S] [--report path.md]
 //!   serve [--users N] [--network 5g|4g|wifi] [--window MS] ...
+//!   serve-cloud [--bind H:P] [--backend synthetic|engine] [--sessions N]
+//!   serve-edge  [--addr H:P] [--sessions N] [--draft synthetic|pld]
 //!   info                         artifact + model zoo inventory
 //!   trace <5g|4g|wifi> <out.csv> [--samples N]
 
@@ -11,6 +13,10 @@ use crate::channel::{ChannelTrace, NetworkKind, NetworkProfile};
 use crate::coordinator::{serve, CloudEngine, ServeConfig};
 use crate::devices::{A800_70B, JETSON_ORIN};
 use crate::experiments::Ctx;
+use crate::serve::{
+    run_edge_session, serve_cloud, EdgeSessionConfig, EngineBackend, SyntheticDraft,
+    SyntheticTarget, TcpTransport, VerifierConfig, VerifyBackend,
+};
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
@@ -18,6 +24,8 @@ use std::path::PathBuf;
 const VALUE_OPTS: &[&str] = &[
     "requests", "seed", "report", "users", "network", "window", "max-batch",
     "max-new", "dataset", "samples", "arrival-ms", "artifacts",
+    "bind", "addr", "backend", "sessions", "k", "draft", "version",
+    "deploy-version", "deploy-after",
 ];
 
 pub fn cli_main() -> Result<()> {
@@ -39,6 +47,8 @@ pub fn cli_main() -> Result<()> {
         Some("info") => info(),
         Some("exp") => exp(&args),
         Some("serve") => serve_cmd(&args),
+        Some("serve-cloud") => serve_cloud_cmd(&args),
+        Some("serve-edge") => serve_edge_cmd(&args),
         Some("trace") => trace_cmd(&args),
         _ => {
             println!(
@@ -47,6 +57,11 @@ pub fn cli_main() -> Result<()> {
                  \x20 flexspec info\n\
                  \x20 flexspec exp <id|all> [--requests N] [--seed S] [--report out.md]\n\
                  \x20 flexspec serve [--users N] [--network 5g|4g|wifi] [--window MS]\n\
+                 \x20 flexspec serve-cloud [--bind 127.0.0.1:7411] [--backend synthetic|engine]\n\
+                 \x20\x20\x20\x20 [--sessions N] [--window MS] [--max-batch N] [--seed S]\n\
+                 \x20\x20\x20\x20 [--deploy-version NAME --deploy-after N]\n\
+                 \x20 flexspec serve-edge [--addr 127.0.0.1:7411] [--sessions N] [--max-new N]\n\
+                 \x20\x20\x20\x20 [--draft synthetic|pld] [--k K|0=adaptive] [--seed S]\n\
                  \x20 flexspec trace <5g|4g|wifi> <out.csv> [--samples N]\n\
                  Run `make artifacts` first to build the AOT model zoo."
             );
@@ -134,6 +149,189 @@ fn serve_cmd(args: &Args) -> Result<()> {
     println!("  request latency  p50 {:.0} ms  p95 {:.0} ms", rep.request_latency.p50(), rep.request_latency.p95());
     println!("  per-token        p50 {:.0} ms  p95 {:.0} ms", rep.per_token_latency.p50(), rep.per_token_latency.p95());
     println!("  acceptance       {:.2}", rep.acceptance.mean());
+    Ok(())
+}
+
+/// `serve-cloud`: run the TCP verification server.
+///
+/// Backends: `synthetic` (deterministic, artifact-free; versions
+/// `synthetic_base` / `gsm8k_lora` / `nq_lora` / `code_full` with
+/// increasing drift) or `engine` (PJRT model zoo, needs `make
+/// artifacts`). With `--sessions N` the server shuts down gracefully
+/// after N sessions complete; with `--deploy-version V --deploy-after
+/// M` it hot-swaps the target once M sessions finished — live sessions
+/// keep decoding.
+fn serve_cloud_cmd(args: &Args) -> Result<()> {
+    let bind = args.get_or("bind", "127.0.0.1:7411");
+    let backend_kind = args.get_or("backend", "synthetic");
+    let seed = args.get_u64("seed", 1);
+    let vcfg = VerifierConfig {
+        window_ms: args.get_f64("window", 12.0),
+        max_batch: args.get_usize("max-batch", 8),
+        seed,
+        ..Default::default()
+    };
+    let sessions_target = args.get_usize("sessions", 0);
+    let deploy_version = args.get("deploy-version").map(|s| s.to_string());
+    let deploy_after = args.get_usize("deploy-after", 1);
+    let version = args.get_or("version", "target_llama2t_base");
+
+    let make_backend: Box<dyn FnOnce() -> Result<Box<dyn VerifyBackend>> + Send> =
+        match backend_kind.as_str() {
+            "synthetic" => Box::new(move || -> Result<Box<dyn VerifyBackend>> {
+                Ok(Box::new(synthetic_fleet(seed)) as Box<dyn VerifyBackend>)
+            }),
+            "engine" => Box::new(move || -> Result<Box<dyn VerifyBackend>> {
+                let reg = std::rc::Rc::new(crate::runtime::Registry::open_default()?);
+                Ok(Box::new(EngineBackend::new(reg, &version, crate::workload::EOS)?)
+                    as Box<dyn VerifyBackend>)
+            }),
+            other => bail!("unknown --backend '{other}' (synthetic|engine)"),
+        };
+
+    let rt = tokio::runtime::Builder::new_multi_thread()
+        .worker_threads(2)
+        .enable_all()
+        .build()?;
+    rt.block_on(async move {
+        let handle = serve_cloud(&bind, vcfg, make_backend).await?;
+        println!(
+            "cloud verification server on {} ({backend_kind} backend)",
+            handle.addr
+        );
+        // hot-swap poller runs in BOTH wait modes
+        if let Some(v) = deploy_version {
+            let vh = handle.verifier();
+            tokio::spawn(async move { poll_and_deploy(&vh, &v, deploy_after).await });
+        }
+        if sessions_target == 0 {
+            println!("serving until ctrl-c ...");
+            tokio::signal::ctrl_c().await?;
+        } else {
+            println!("serving until {sessions_target} sessions complete ...");
+            loop {
+                tokio::time::sleep(std::time::Duration::from_millis(200)).await;
+                if handle.stats().await?.sessions_completed >= sessions_target {
+                    break;
+                }
+            }
+        }
+        let metrics = handle.shutdown().await?;
+        println!("{}", metrics.render("serving totals"));
+        Ok(())
+    })
+}
+
+/// Wait for `after` completed sessions, then hot-swap the target to
+/// `version`. Exits quietly if the server shuts down first.
+async fn poll_and_deploy(vh: &crate::serve::VerifierHandle, version: &str, after: usize) {
+    loop {
+        tokio::time::sleep(std::time::Duration::from_millis(200)).await;
+        let Ok(stats) = vh.stats().await else {
+            return; // server shut down before the trigger fired
+        };
+        if stats.sessions_completed >= after {
+            match vh.deploy(version).await {
+                Ok(seq) => println!("hot-swapped target to '{version}' (seq {seq})"),
+                Err(e) => eprintln!("hot-swap of '{version}' failed: {e:#}"),
+            }
+            return;
+        }
+    }
+}
+
+/// The synthetic release train the `synthetic` backend can hot-swap
+/// through: drift grows with each deployment, so the frozen edge draft's
+/// acceptance visibly degrades — the paper's headline scenario without
+/// artifacts.
+fn synthetic_fleet(seed: u64) -> SyntheticTarget {
+    SyntheticTarget::new(seed)
+        .with_version("gsm8k_lora", 0.2)
+        .with_version("nq_lora", 0.3)
+        .with_version("code_full", 0.5)
+}
+
+/// `serve-edge`: run N concurrent edge sessions against a cloud server.
+/// Each session runs on its own OS thread with a current-thread tokio
+/// runtime — the shape a fleet of independent edge devices has.
+fn serve_edge_cmd(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7411");
+    let n = args.get_usize("sessions", 4);
+    let seed = args.get_u64("seed", 1);
+    let k = args.get_usize("k", 0);
+    let draft_kind = args.get_or("draft", "synthetic");
+    if !matches!(draft_kind.as_str(), "synthetic" | "pld") {
+        bail!("unknown --draft '{draft_kind}' (synthetic|pld)");
+    }
+    let dataset = args.get_or("dataset", "mtbench");
+    let mut gen = crate::workload::WorkloadGen::new(&dataset, seed)?;
+    let ecfg = EdgeSessionConfig {
+        max_new: args.get_usize("max-new", 32),
+        fixed_k: if k == 0 { None } else { Some(k) },
+        seed,
+        ..Default::default()
+    };
+
+    let mut threads = Vec::new();
+    for i in 0..n {
+        let prompt = gen.next_request().prompt;
+        let addr = addr.clone();
+        let ecfg = ecfg.clone();
+        let draft_kind = draft_kind.clone();
+        threads.push(std::thread::spawn(move || -> Result<crate::serve::EdgeReport> {
+            let rt = tokio::runtime::Builder::new_current_thread()
+                .enable_all()
+                .build()?;
+            rt.block_on(async move {
+                let mut t = TcpTransport::connect(&addr).await?;
+                match draft_kind.as_str() {
+                    "synthetic" => {
+                        let mut draft = SyntheticDraft::new(ecfg.seed);
+                        run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+                    }
+                    "pld" => {
+                        let mut draft = crate::coordinator::PromptLookup::pld(3);
+                        run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+                    }
+                    // validated before spawning; kept for exhaustiveness
+                    other => bail!("unknown --draft '{other}' [session {i}]"),
+                }
+            })
+        }));
+    }
+
+    let mut table = crate::util::table::Table::new(
+        &format!("edge sessions vs {addr} ({draft_kind} draft)"),
+        &["session", "tokens", "rounds", "accept", "mean K", "rtt p50 ms", "wall ms"],
+    );
+    let mut failures = 0usize;
+    for th in threads {
+        match th.join() {
+            Ok(Ok(r)) => {
+                table.row(vec![
+                    r.session.to_string(),
+                    r.new_tokens.to_string(),
+                    r.rounds.to_string(),
+                    format!("{:.2}", r.acceptance()),
+                    format!("{:.1}", r.k_used.mean()),
+                    format!("{:.2}", r.rtt_ms.p50()),
+                    format!("{:.0}", r.wall_ms),
+                ]);
+            }
+            Ok(Err(e)) => {
+                failures += 1;
+                eprintln!("edge session failed: {e:#}");
+            }
+            Err(_) => {
+                failures += 1;
+                eprintln!("edge session thread panicked");
+            }
+        }
+    }
+    println!("{}", table.render());
+    if failures > 0 {
+        bail!("{failures}/{n} edge sessions failed");
+    }
     Ok(())
 }
 

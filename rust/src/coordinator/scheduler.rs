@@ -5,8 +5,14 @@
 //! (vLLM-style continuous batching, applied to verification blocks).
 //! A discrete-event simulation advances virtual time; model execution is
 //! real (PJRT) and happens when events are processed.
+//!
+//! The batching window and per-session commit bookkeeping live in
+//! `serve::session` and are SHARED with the real server
+//! (`serve::verifier`): the simulator and the loopback/TCP serving paths
+//! run the same state machine, which is what makes their token counts
+//! comparable. `serve_with` is the generic entry (any `VerifyBackend`,
+//! any `DraftSource` factory); `serve` is the original PJRT wrapper.
 
-use super::cloud::CloudEngine;
 use super::edge::{DraftSource, ModelDraft};
 use super::policy::{AdaptivePolicy, LatencyModel};
 use crate::channel::{Channel, StochasticChannel};
@@ -16,6 +22,8 @@ use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
 use crate::runtime::ModelRuntime;
 #[cfg(test)]
 use crate::runtime::Registry;
+use crate::serve::backend::VerifyBackend;
+use crate::serve::session::{BatchDecision, BatchWindow, SessionCore, SessionOutcome};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::Summary;
 use anyhow::Result;
@@ -27,8 +35,11 @@ use std::rc::Rc;
 enum Event {
     /// A session's uplink draft block arrives at the cloud.
     RequestArrives(u32),
-    /// The open batch window closes.
-    BatchClose,
+    /// The open batch window closes. Carries the window epoch the timer
+    /// was armed for: if a `CloseNow` already drained that window, the
+    /// stale timer must not truncate the NEXT window (`BatchWindow`
+    /// epoch docs).
+    BatchClose(u64),
     /// A new user session arrives.
     SessionArrives(u32),
 }
@@ -42,7 +53,7 @@ struct Scheduled {
 
 impl PartialEq for Scheduled {
     fn eq(&self, other: &Self) -> bool {
-        self.at_ms == other.at_ms && self.seq == other.seq
+        self.at_ms.total_cmp(&other.at_ms).is_eq() && self.seq == other.seq
     }
 }
 impl Eq for Scheduled {}
@@ -53,30 +64,23 @@ impl PartialOrd for Scheduled {
 }
 impl Ord for Scheduled {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // total_cmp: a poisoned (NaN) event time must order, not panic
+        // the whole event loop
         self.at_ms
-            .partial_cmp(&other.at_ms)
-            .unwrap()
+            .total_cmp(&other.at_ms)
             .then(self.seq.cmp(&other.seq))
     }
 }
 
 struct SessionState {
-    id: u32,
-    draft: ModelDraft,
+    core: SessionCore,
+    draft: Box<dyn DraftSource>,
     channel: StochasticChannel,
     policy: AdaptivePolicy,
-    committed: Vec<i32>,
-    prompt_len: usize,
-    max_new: usize,
-    new_tokens: usize,
-    rounds: usize,
-    accepted: usize,
-    drafted: usize,
     started_ms: f64,
     /// In-flight proposal awaiting verification.
     pending: Option<(Vec<i32>, Vec<f32>, Vec<Vec<f32>>)>,
     rng: SplitMix64,
-    done: bool,
 }
 
 /// Scheduler configuration.
@@ -92,6 +96,13 @@ pub struct ServeConfig {
     pub temperature: f32,
     pub top_p: f32,
     pub seed: u64,
+    /// Pin the stride instead of running the adaptive policy — the knob
+    /// that makes sim ↔ loopback ↔ TCP token counts bit-comparable.
+    pub fixed_k: Option<usize>,
+    /// End a session when fewer KV slots than this remain. MUST match
+    /// `serve::VerifierConfig::capacity_floor` for sim ↔ serve count
+    /// equality.
+    pub capacity_floor: usize,
 }
 
 impl Default for ServeConfig {
@@ -106,6 +117,8 @@ impl Default for ServeConfig {
             temperature: 0.0,
             top_p: 1.0,
             seed: 1,
+            fixed_k: None,
+            capacity_floor: 10,
         }
     }
 }
@@ -123,6 +136,9 @@ pub struct ServeReport {
     pub per_token_latency: Summary,
     pub acceptance: Summary,
     pub t_base_saved_ms: f64,
+    /// Per-session final counters, in prompt order (for cross-checking
+    /// against loopback/TCP serving runs).
+    pub per_session: Vec<SessionOutcome>,
 }
 
 impl ServeReport {
@@ -131,13 +147,45 @@ impl ServeReport {
     }
 }
 
+/// Edge: draft + uplink; returns the virtual arrival time at the cloud.
+fn draft_and_send(
+    s: &mut SessionState,
+    now: f64,
+    device: &EdgeDevice,
+    cfg: &ServeConfig,
+    cloud_profile: &CloudProfile,
+) -> Result<f64> {
+    let chan = s.channel.sample(now);
+    let lat = LatencyModel::build(&chan, device, cloud_profile, WireFormat::Compact);
+    let k = cfg
+        .fixed_k
+        .unwrap_or_else(|| s.policy.select_k(&lat))
+        .clamp(1, 8);
+    let prop = s
+        .draft
+        .propose(&s.core.committed, k, cfg.temperature, cfg.top_p, &mut s.rng)?;
+    let t_edge = device.round_overhead_ms + prop.edge_tokens as f64 * device.draft_ms_per_token;
+    let msg = DraftMsg {
+        session: s.core.id,
+        round: s.core.rounds as u32,
+        tokens: prop.tokens.clone(),
+        chosen_probs: prop.chosen_probs.clone(),
+        mode: cfg.mode,
+        wire: WireFormat::Compact,
+    };
+    let t_up = chan.prop_ms + chan.up_ms(msg.air_bytes());
+    s.pending = Some((prop.tokens, prop.chosen_probs, prop.prob_rows));
+    Ok(now + t_edge + t_up)
+}
+
 /// Run a multi-user serving simulation with dynamic verification
-/// batching. Prompts are provided per user (generated by the workload
-/// layer); every session uses the same draft bundle + target version.
+/// batching over ANY verification backend and draft source. Prompts are
+/// provided per user (generated by the workload layer); `make_draft` is
+/// called once per session.
 #[allow(clippy::too_many_arguments)]
-pub fn serve(
-    cloud: &mut CloudEngine,
-    draft_runtime: Rc<ModelRuntime>,
+pub fn serve_with(
+    backend: &mut dyn VerifyBackend,
+    make_draft: &mut dyn FnMut(u32) -> Result<Box<dyn DraftSource>>,
     prompts: &[Vec<i32>],
     device: &EdgeDevice,
     cloud_profile: &CloudProfile,
@@ -156,60 +204,27 @@ pub fn serve(
     let mut t_arrive = 0.0;
     for (i, prompt) in prompts.iter().take(cfg.users).enumerate() {
         let id = (i + 1) as u32;
+        let mut draft = make_draft(id)?;
+        // same session-start notification the edge client gives its
+        // draft (PLD needs the prompt/generation boundary)
+        draft.on_prompt(prompt.len());
         sessions.push(SessionState {
-            id,
-            draft: ModelDraft::new(draft_runtime.clone())?,
+            core: SessionCore::new(id, prompt, cfg.max_new),
+            draft,
             channel: net.channel(cfg.seed ^ (0x1000 + id as u64)),
             policy: AdaptivePolicy::new(8, 0.15),
-            committed: prompt.clone(),
-            prompt_len: prompt.len(),
-            max_new: cfg.max_new,
-            new_tokens: 0,
-            rounds: 0,
-            accepted: 0,
-            drafted: 0,
             started_ms: 0.0,
             pending: None,
             rng: SplitMix64::new(cfg.seed ^ (0x2000 + id as u64)),
-            done: false,
         });
         push(&mut heap, t_arrive, Event::SessionArrives(id), &mut seq);
         t_arrive += arrival_rng.next_exp(1.0 / cfg.arrival_mean_ms);
     }
 
-    let mut open_batch: Vec<u32> = Vec::new();
-    let mut batch_open = false;
+    let mut window = BatchWindow::new(cfg.window_ms, cfg.max_batch);
     let mut report = ServeReport::default();
     #[allow(unused_assignments)]
     let mut now = 0.0f64;
-
-    // Edge: draft + uplink, then the request arrives at the cloud.
-    let draft_and_send = |s: &mut SessionState,
-                          now: f64,
-                          cloud_profile: &CloudProfile,
-                          device: &EdgeDevice,
-                          mode: VerifyMode,
-                          temp: f32,
-                          top_p: f32|
-     -> Result<f64> {
-        let chan = s.channel.sample(now);
-        let lat = LatencyModel::build(&chan, device, cloud_profile, WireFormat::Compact);
-        let k = s.policy.select_k(&lat).min(8);
-        let prop = s.draft.propose(&s.committed, k, temp, top_p, &mut s.rng)?;
-        let t_edge = device.round_overhead_ms
-            + prop.edge_tokens as f64 * device.draft_ms_per_token;
-        let msg = DraftMsg {
-            session: s.id,
-            round: s.rounds as u32,
-            tokens: prop.tokens.clone(),
-            chosen_probs: prop.chosen_probs.clone(),
-            mode,
-            wire: WireFormat::Compact,
-        };
-        let t_up = chan.prop_ms + chan.up_ms(msg.air_bytes());
-        s.pending = Some((prop.tokens, prop.chosen_probs, prop.prob_rows));
-        Ok(now + t_edge + t_up)
-    };
 
     while let Some(Reverse(Scheduled { at_ms, ev, .. })) = heap.pop() {
         now = at_ms;
@@ -217,34 +232,33 @@ pub fn serve(
             Event::SessionArrives(id) => {
                 let s = &mut sessions[(id - 1) as usize];
                 s.started_ms = now;
-                cloud.start_session(id, &s.committed.clone())?;
+                backend.start_session(id, &s.core.committed.clone())?;
                 let arrive = draft_and_send(
                     s,
-                    now + cloud_profile.prefill_ms(s.prompt_len),
-                    cloud_profile,
+                    now + cloud_profile.prefill_ms(s.core.prompt_len),
                     device,
-                    cfg.mode,
-                    cfg.temperature,
-                    cfg.top_p,
+                    cfg,
+                    cloud_profile,
                 )?;
                 push(&mut heap, arrive, Event::RequestArrives(id), &mut seq);
             }
-            Event::RequestArrives(id) => {
-                open_batch.push(id);
-                if open_batch.len() >= cfg.max_batch {
-                    // close immediately
-                    push(&mut heap, now, Event::BatchClose, &mut seq);
-                } else if !batch_open {
-                    batch_open = true;
-                    push(&mut heap, now + cfg.window_ms, Event::BatchClose, &mut seq);
+            Event::RequestArrives(id) => match window.offer(now, id) {
+                BatchDecision::CloseNow => {
+                    push(&mut heap, now, Event::BatchClose(window.epoch()), &mut seq)
                 }
-            }
-            Event::BatchClose => {
-                batch_open = false;
-                if open_batch.is_empty() {
+                BatchDecision::CloseAt(t) => {
+                    push(&mut heap, t, Event::BatchClose(window.epoch()), &mut seq)
+                }
+                BatchDecision::Queued => {}
+            },
+            Event::BatchClose(epoch) => {
+                if epoch != window.epoch() {
+                    continue; // stale timer from an already-drained window
+                }
+                let members = window.close();
+                if members.is_empty() {
                     continue;
                 }
-                let members = std::mem::take(&mut open_batch);
                 report.batches += 1;
                 report.mean_batch += members.len() as f64;
 
@@ -254,9 +268,9 @@ pub fn serve(
                 for &id in &members {
                     let s = &mut sessions[(id - 1) as usize];
                     let (tokens, _probs, rows) = s.pending.take().unwrap();
-                    let v = cloud.verify(
+                    let v = backend.verify_block(
                         id,
-                        &s.committed,
+                        &s.core.committed,
                         &tokens,
                         &rows,
                         cfg.mode,
@@ -277,52 +291,36 @@ pub fn serve(
                     let chan = s.channel.sample(now);
                     let vmsg = VerifyMsg {
                         session: id,
-                        round: s.rounds as u32,
-                        tau: v.outcome.tau as u8,
-                        correction: v.outcome.correction,
+                        round: s.core.rounds as u32,
+                        tau: v.tau as u8,
+                        correction: v.correction,
                         eos: v.eos,
                     };
                     let t_resp = now + t_batch + chan.prop_ms + chan.down_ms(vmsg.air_bytes());
-                    let tau = v.outcome.tau;
-                    for &t in &tokens[..tau] {
-                        s.committed.push(t);
-                    }
-                    s.committed.push(v.outcome.correction);
-                    s.new_tokens += tau + 1;
-                    s.accepted += tau;
-                    s.drafted += tokens.len();
-                    s.rounds += 1;
                     if !tokens.is_empty() {
-                        s.policy.observe(tau, tokens.len());
+                        s.policy.observe(v.tau, tokens.len());
                     }
+                    let out_of_capacity = backend.remaining_capacity(id) <= cfg.capacity_floor;
+                    let finished =
+                        s.core
+                            .apply_verdict(&tokens, v.tau, v.correction, v.eos, out_of_capacity);
                     report.rounds += 1;
 
-                    let out_of_capacity = cloud.remaining_capacity(id) <= 10;
-                    if v.eos || s.new_tokens >= s.max_new || out_of_capacity {
-                        s.done = true;
-                        cloud.end_session(id);
+                    if finished {
+                        backend.end_session(id);
                         report.completed += 1;
-                        report.tokens += s.new_tokens;
-                        report
-                            .request_latency
-                            .add(t_resp - s.started_ms);
+                        report.tokens += s.core.new_tokens;
+                        report.request_latency.add(t_resp - s.started_ms);
                         report
                             .per_token_latency
-                            .add((t_resp - s.started_ms) / s.new_tokens.max(1) as f64);
-                        if s.drafted > 0 {
-                            report.acceptance.add(s.accepted as f64 / s.drafted as f64);
+                            .add((t_resp - s.started_ms) / s.core.new_tokens.max(1) as f64);
+                        if s.core.drafted > 0 {
+                            report.acceptance.add(s.core.acceptance());
                         }
+                        report.per_session.push(s.core.outcome());
                         report.wall_ms = report.wall_ms.max(t_resp);
                     } else {
-                        let arrive = draft_and_send(
-                            s,
-                            t_resp,
-                            cloud_profile,
-                            device,
-                            cfg.mode,
-                            cfg.temperature,
-                            cfg.top_p,
-                        )?;
+                        let arrive = draft_and_send(s, t_resp, device, cfg, cloud_profile)?;
                         push(&mut heap, arrive, Event::RequestArrives(id), &mut seq);
                     }
                 }
@@ -333,7 +331,34 @@ pub fn serve(
     if report.batches > 0 {
         report.mean_batch /= report.batches as f64;
     }
+    report.per_session.sort_by_key(|o| o.id);
     Ok(report)
+}
+
+/// The original PJRT entry point: every session drafts with the same
+/// bundle (`draft_runtime`) and verifies on `cloud`'s deployed version.
+#[allow(clippy::too_many_arguments)]
+pub fn serve(
+    cloud: &mut super::cloud::CloudEngine,
+    draft_runtime: Rc<ModelRuntime>,
+    prompts: &[Vec<i32>],
+    device: &EdgeDevice,
+    cloud_profile: &CloudProfile,
+    net: &NetworkProfile,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let mut make_draft = |_id: u32| -> Result<Box<dyn DraftSource>> {
+        Ok(Box::new(ModelDraft::new(draft_runtime.clone())?))
+    };
+    serve_with(
+        cloud,
+        &mut make_draft,
+        prompts,
+        device,
+        cloud_profile,
+        net,
+        cfg,
+    )
 }
 
 #[cfg(test)]
@@ -342,6 +367,8 @@ mod tests {
     use crate::channel::NetworkKind;
     use crate::devices::{A800_70B, JETSON_ORIN};
     use crate::runtime::{Engine, Manifest};
+    use crate::serve::backend::{SyntheticDraft, SyntheticTarget};
+    use super::super::cloud::CloudEngine;
 
     fn registry() -> Option<Registry> {
         let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -392,6 +419,11 @@ mod tests {
         assert!(rep.tokens >= 4 * 4, "tokens {}", rep.tokens);
         assert!(rep.throughput_tok_s() > 0.0);
         assert!(rep.request_latency.count() == 4);
+        assert_eq!(rep.per_session.len(), 4);
+        assert_eq!(
+            rep.per_session.iter().map(|o| o.new_tokens).sum::<usize>(),
+            rep.tokens
+        );
     }
 
     #[test]
@@ -446,5 +478,76 @@ mod tests {
         // under load, but with 6 sessions the wait-window cost can mask
         // it — the saved T_base is the direct evidence)
         assert!(batched.t_base_saved_ms > solo.t_base_saved_ms);
+    }
+
+    #[test]
+    fn synthetic_backend_serves_without_artifacts() {
+        // serve_with needs no PJRT: the deterministic synthetic pair
+        // drives the full scheduler (this test runs everywhere).
+        let mut backend = SyntheticTarget::new(11);
+        let mut make =
+            |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(11))) };
+        let net = NetworkProfile::new(NetworkKind::FourG);
+        let cfg = ServeConfig {
+            users: 4,
+            max_new: 16,
+            fixed_k: Some(4),
+            seed: 5,
+            ..Default::default()
+        };
+        let rep = serve_with(
+            &mut backend,
+            &mut make,
+            &prompts(4),
+            &JETSON_ORIN,
+            &A800_70B,
+            &net,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(rep.completed, 4);
+        // zero drift: every draft token accepted
+        let acc: usize = rep.per_session.iter().map(|o| o.accepted).sum();
+        let drafted: usize = rep.per_session.iter().map(|o| o.drafted).sum();
+        assert_eq!(acc, drafted);
+        assert!(rep.tokens >= 4 * 16);
+
+        // bit-identical replay (NaN-safe deterministic event ordering)
+        let mut backend2 = SyntheticTarget::new(11);
+        let mut make2 =
+            |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(11))) };
+        let rep2 = serve_with(
+            &mut backend2,
+            &mut make2,
+            &prompts(4),
+            &JETSON_ORIN,
+            &A800_70B,
+            &net,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(rep.per_session, rep2.per_session);
+        assert_eq!(rep.batches, rep2.batches);
+    }
+
+    #[test]
+    fn scheduled_ordering_is_nan_safe() {
+        // a poisoned event time must not panic the event loop's heap
+        let a = Scheduled {
+            at_ms: f64::NAN,
+            seq: 1,
+            ev: Event::BatchClose(0),
+        };
+        let b = Scheduled {
+            at_ms: 1.0,
+            seq: 2,
+            ev: Event::BatchClose(0),
+        };
+        let mut heap = BinaryHeap::new();
+        heap.push(Reverse(a));
+        heap.push(Reverse(b));
+        // total_cmp orders NaN after every real number
+        assert_eq!(heap.pop().unwrap().0.at_ms, 1.0);
+        assert!(heap.pop().unwrap().0.at_ms.is_nan());
     }
 }

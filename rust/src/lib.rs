@@ -10,6 +10,22 @@
 //! The request path is pure rust: `runtime` loads the AOT artifacts via
 //! PJRT and everything above it is deterministic simulation + real model
 //! execution.
+//!
+//! On top of the simulator sits the SERVING subsystem (`serve`): a
+//! tokio-based cloud verification server and edge client running the
+//! same wire protocol (`protocol::{DraftMsg, VerifyMsg}`) over real TCP
+//! with a length-prefixed frame codec and a wire-format version
+//! handshake (`protocol::frame`). Its `Transport` trait has two
+//! implementations — `TcpTransport` (real sockets) and
+//! `LoopbackTransport` (in-process pair, optionally metered through the
+//! deterministic wireless-channel simulation) — and the cloud side runs
+//! a session manager with per-connection KV sessions, a cross-connection
+//! dynamic verification batcher (the same `serve::session::BatchWindow`
+//! state machine the simulator uses), LoRA/target-version hot-swap
+//! without dropping sessions, and graceful shutdown. With the
+//! deterministic synthetic backend and a fixed stride, loopback serving
+//! reproduces the simulator's token counts exactly — experiments stay
+//! reproducible while the transport is real.
 
 pub mod channel;
 pub mod coordinator;
@@ -17,6 +33,7 @@ pub mod devices;
 pub mod energy;
 pub mod protocol;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub mod metrics;

@@ -117,6 +117,96 @@ impl MetricsSet {
     }
 }
 
+/// Per-session serving counters for the `serve` subsystem (the live
+/// TCP/loopback server — as opposed to `MethodMetrics`, which aggregates
+/// virtual-clock experiment results). One instance lives in the
+/// verification service and is snapshotted by `stats`/`shutdown`.
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    pub sessions_opened: usize,
+    pub sessions_completed: usize,
+    /// Sessions ended by client disconnect before completion.
+    pub sessions_aborted: usize,
+    pub handshakes_rejected: usize,
+    pub rounds: usize,
+    pub batches: usize,
+    /// Verify requests per closed batch.
+    pub batch_occupancy: Summary,
+    /// Committed tokens (accepted + correction/bonus) across sessions.
+    pub tokens_committed: usize,
+    pub drafted: usize,
+    pub accepted: usize,
+    /// Target version hot-swaps performed while serving.
+    pub hot_swaps: usize,
+    /// Protocol-level air bytes (header + payload accounting).
+    pub bytes_up: usize,
+    pub bytes_down: usize,
+    /// Per completed session: acceptance rate and round count.
+    pub session_acceptance: Summary,
+    pub session_rounds: Summary,
+}
+
+impl ServingMetrics {
+    /// Record one verified round of one session.
+    pub fn note_round(&mut self, drafted: usize, tau: usize) {
+        self.rounds += 1;
+        self.drafted += drafted;
+        self.accepted += tau;
+        self.tokens_committed += tau + 1;
+    }
+
+    pub fn note_batch(&mut self, occupancy: usize) {
+        self.batches += 1;
+        self.batch_occupancy.add(occupancy as f64);
+    }
+
+    pub fn finish_session(&mut self, core: &crate::serve::session::SessionCore) {
+        self.sessions_completed += 1;
+        self.session_rounds.add(core.rounds as f64);
+        if core.drafted > 0 {
+            self.session_acceptance.add(core.acceptance());
+        }
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.batch_occupancy.mean()
+    }
+
+    /// Human-readable multi-line report for CLIs and examples.
+    pub fn render(&self, title: &str) -> String {
+        format!(
+            "{title}\n\
+             \x20 sessions         {} completed / {} opened ({} aborted, {} handshakes rejected)\n\
+             \x20 rounds           {} in {} batches (mean occupancy {:.2})\n\
+             \x20 tokens           {} committed, acceptance {:.3} ({} / {} drafted)\n\
+             \x20 hot-swaps        {}\n\
+             \x20 air bytes        {} up / {} down",
+            self.sessions_completed,
+            self.sessions_opened,
+            self.sessions_aborted,
+            self.handshakes_rejected,
+            self.rounds,
+            self.batches,
+            self.mean_batch(),
+            self.tokens_committed,
+            self.acceptance_rate(),
+            self.accepted,
+            self.drafted,
+            self.hot_swaps,
+            self.bytes_up,
+            self.bytes_down,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +274,26 @@ mod tests {
         let t = set.table("demo", Some("Cloud-Only"));
         assert_eq!(t.rows.len(), 2);
         assert!(t.render().contains("2.00x"));
+    }
+
+    #[test]
+    fn serving_metrics_aggregate() {
+        let mut m = ServingMetrics::default();
+        m.sessions_opened = 2;
+        m.note_batch(2);
+        m.note_round(4, 3);
+        m.note_round(4, 1);
+        let mut core = crate::serve::session::SessionCore::new(1, &[1, 2], 8);
+        core.apply_verdict(&[9, 9, 9, 9], 3, 7, false, false);
+        m.finish_session(&core);
+        assert_eq!(m.rounds, 2);
+        assert_eq!(m.tokens_committed, 6);
+        assert!((m.acceptance_rate() - 0.5).abs() < 1e-12);
+        assert!((m.mean_batch() - 2.0).abs() < 1e-12);
+        assert_eq!(m.sessions_completed, 1);
+        let r = m.render("serving");
+        assert!(r.contains("6 committed"));
+        assert!(r.contains("hot-swaps"));
     }
 
     #[test]

@@ -1,0 +1,483 @@
+//! Length-prefixed frame codec + wire-format version handshake for the
+//! `serve` subsystem (real sockets, not the byte-accounting simulation).
+//!
+//! Every frame on the stream is `[len: u32 le][kind: u8][payload]` where
+//! `len = 1 + payload.len()`. The codec is incremental (`FrameDecoder`
+//! accepts arbitrary byte splits — TCP guarantees neither message
+//! boundaries nor single-read delivery) and bounded (`MAX_FRAME_BYTES`
+//! rejects hostile or corrupt length prefixes before allocation).
+//!
+//! Connection lifecycle:
+//!
+//! ```text
+//! edge                      cloud
+//!  Hello{wire_version} ───────▶     version gate (reject ≠ WIRE_VERSION)
+//!       ◀─────── HelloAck{accepted}
+//!  Open{prompt, max_new} ─────▶     KV session created
+//!       ◀─────── OpenAck{session, target_seq}
+//!  Draft{DraftMsg} ───────────▶     dynamic verification batcher
+//!       ◀─────── Verify{VerifyMsg}
+//!  ...                               (target hot-swaps never drop this)
+//!  Bye ────────────────────────▶    session closed
+//! ```
+
+use super::codec::{read_u16, read_u32, read_varint, write_u16, write_u32, write_varint};
+use super::VerifyMode;
+use anyhow::{bail, Result};
+
+/// Version of the frame layout + message payloads. Bump on any breaking
+/// change; the handshake rejects mismatched peers instead of
+/// misinterpreting their bytes.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Upper bound on one frame's body (kind + payload). Prompts are ≤ a few
+/// hundred tokens and draft blocks ≤ K_max tokens, so 1 MiB is generous.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Frame discriminator (first payload byte after the length prefix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Edge → cloud: wire-format version + verify mode announcement.
+    Hello = 1,
+    /// Cloud → edge: handshake verdict.
+    HelloAck = 2,
+    /// Edge → cloud: open a session (prompt + output budget).
+    Open = 3,
+    /// Cloud → edge: session id + current target version sequence.
+    OpenAck = 4,
+    /// Edge → cloud: one `DraftMsg` draft block.
+    Draft = 5,
+    /// Cloud → edge: one `VerifyMsg` verification verdict.
+    Verify = 6,
+    /// Edge → cloud: orderly end of session.
+    Bye = 7,
+}
+
+impl FrameKind {
+    pub fn from_u8(b: u8) -> Option<FrameKind> {
+        Some(match b {
+            1 => FrameKind::Hello,
+            2 => FrameKind::HelloAck,
+            3 => FrameKind::Open,
+            4 => FrameKind::OpenAck,
+            5 => FrameKind::Draft,
+            6 => FrameKind::Verify,
+            7 => FrameKind::Bye,
+            _ => return None,
+        })
+    }
+}
+
+/// One wire frame: a kind tag + an opaque payload (message bytes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, payload: Vec<u8>) -> Frame {
+        Frame { kind, payload }
+    }
+
+    /// `[len: u32 le][kind: u8][payload]`, len = 1 + payload.len().
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(5 + self.payload.len());
+        write_u32(&mut out, (1 + self.payload.len()) as u32);
+        out.push(self.kind as u8);
+        out.extend_from_slice(&self.payload);
+        out
+    }
+}
+
+/// Incremental frame parser over an arbitrary byte stream.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted lazily to amortize copies).
+    off: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Feed raw bytes from the stream.
+    pub fn push(&mut self, bytes: &[u8]) {
+        // compact before growing if the dead prefix dominates
+        if self.off > 4096 && self.off * 2 > self.buf.len() {
+            self.buf.drain(..self.off);
+            self.off = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet returned as a frame.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    /// Pop the next complete frame, `Ok(None)` if more bytes are needed.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>> {
+        let avail = &self.buf[self.off..];
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let mut pos = 0usize;
+        let len = read_u32(avail, &mut pos)? as usize;
+        if len == 0 || len > MAX_FRAME_BYTES {
+            bail!("frame length {len} out of bounds (1..={MAX_FRAME_BYTES})");
+        }
+        if avail.len() < 4 + len {
+            return Ok(None);
+        }
+        let kind = FrameKind::from_u8(avail[4])
+            .ok_or_else(|| anyhow::anyhow!("unknown frame kind {}", avail[4]))?;
+        let payload = avail[5..4 + len].to_vec();
+        self.off += 4 + len;
+        if self.off == self.buf.len() {
+            self.buf.clear();
+            self.off = 0;
+        }
+        Ok(Some(Frame { kind, payload }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Handshake + session-control message payloads
+// ---------------------------------------------------------------------
+
+/// Edge → cloud greeting: the first frame on every connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    pub wire_version: u16,
+    pub mode: VerifyMode,
+    /// Largest draft block this edge will ever send (informational).
+    pub k_max: u8,
+}
+
+impl Hello {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4);
+        write_u16(&mut out, self.wire_version);
+        out.push(match self.mode {
+            VerifyMode::Greedy => 0,
+            VerifyMode::Stochastic => 1,
+        });
+        out.push(self.k_max);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Hello> {
+        let mut pos = 0usize;
+        let wire_version = read_u16(buf, &mut pos)?;
+        let mode = match buf.get(pos) {
+            Some(0) => VerifyMode::Greedy,
+            Some(1) => VerifyMode::Stochastic,
+            _ => bail!("hello: bad mode byte"),
+        };
+        pos += 1;
+        let k_max = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("hello: truncated"))?;
+        pos += 1;
+        if pos != buf.len() {
+            bail!("hello: trailing bytes");
+        }
+        Ok(Hello {
+            wire_version,
+            mode,
+            k_max,
+        })
+    }
+}
+
+/// Cloud → edge handshake verdict.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HelloAck {
+    pub wire_version: u16,
+    pub accepted: bool,
+    /// Human-readable rejection reason (empty when accepted).
+    pub reason: String,
+}
+
+impl HelloAck {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + self.reason.len());
+        write_u16(&mut out, self.wire_version);
+        out.push(self.accepted as u8);
+        write_varint(&mut out, self.reason.len() as u64);
+        out.extend_from_slice(self.reason.as_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<HelloAck> {
+        let mut pos = 0usize;
+        let wire_version = read_u16(buf, &mut pos)?;
+        let accepted = match buf.get(pos) {
+            Some(0) => false,
+            Some(1) => true,
+            _ => bail!("hello-ack: bad accepted byte"),
+        };
+        pos += 1;
+        let n = read_varint(buf, &mut pos)? as usize;
+        if pos + n != buf.len() {
+            bail!("hello-ack: reason length mismatch");
+        }
+        let reason = String::from_utf8(buf[pos..pos + n].to_vec())?;
+        Ok(HelloAck {
+            wire_version,
+            accepted,
+            reason,
+        })
+    }
+}
+
+/// The cloud's answer to a `Hello`: the single place the version gate
+/// lives, so the simulator-side tests and the server agree on it.
+pub fn hello_response(h: &Hello) -> HelloAck {
+    if h.wire_version == WIRE_VERSION {
+        HelloAck {
+            wire_version: WIRE_VERSION,
+            accepted: true,
+            reason: String::new(),
+        }
+    } else {
+        HelloAck {
+            wire_version: WIRE_VERSION,
+            accepted: false,
+            reason: format!(
+                "wire version mismatch: peer speaks v{}, this cloud speaks v{}",
+                h.wire_version, WIRE_VERSION
+            ),
+        }
+    }
+}
+
+/// Edge → cloud: open one serving session.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpenMsg {
+    pub prompt: Vec<i32>,
+    pub max_new: u32,
+}
+
+impl OpenMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + self.prompt.len() * 2);
+        write_u32(&mut out, self.max_new);
+        write_varint(&mut out, self.prompt.len() as u64);
+        for &t in &self.prompt {
+            write_varint(&mut out, t as u64);
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<OpenMsg> {
+        let mut pos = 0usize;
+        let max_new = read_u32(buf, &mut pos)?;
+        let n = read_varint(buf, &mut pos)? as usize;
+        if n > MAX_FRAME_BYTES {
+            bail!("open: absurd prompt length {n}");
+        }
+        let mut prompt = Vec::with_capacity(n);
+        for _ in 0..n {
+            prompt.push(read_varint(buf, &mut pos)? as i32);
+        }
+        if pos != buf.len() {
+            bail!("open: trailing bytes");
+        }
+        Ok(OpenMsg { prompt, max_new })
+    }
+}
+
+/// Cloud → edge: the session is live.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpenAck {
+    /// Server-assigned session id (used in every subsequent DraftMsg).
+    pub session: u32,
+    /// Target version sequence number currently deployed — lets the edge
+    /// observe cloud-side evolution without ever receiving weights.
+    pub target_seq: u64,
+}
+
+impl OpenAck {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12);
+        write_u32(&mut out, self.session);
+        write_varint(&mut out, self.target_seq);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<OpenAck> {
+        let mut pos = 0usize;
+        let session = read_u32(buf, &mut pos)?;
+        let target_seq = read_varint(buf, &mut pos)?;
+        if pos != buf.len() {
+            bail!("open-ack: trailing bytes");
+        }
+        Ok(OpenAck {
+            session,
+            target_seq,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{DraftMsg, VerifyMsg, WireFormat};
+    use crate::util::prop;
+
+    fn draft_frame(rng: &mut crate::util::rng::SplitMix64) -> (DraftMsg, Frame) {
+        let k = rng.next_range(8) as usize + 1;
+        let stochastic = rng.chance(0.5);
+        let msg = DraftMsg {
+            session: rng.next_u64() as u32,
+            round: rng.next_range(10_000) as u32,
+            tokens: (0..k).map(|_| rng.next_range(512) as i32).collect(),
+            chosen_probs: if stochastic {
+                (0..k).map(|_| rng.next_f64() as f32).collect()
+            } else {
+                vec![]
+            },
+            mode: if stochastic {
+                VerifyMode::Stochastic
+            } else {
+                VerifyMode::Greedy
+            },
+            wire: WireFormat::Compact,
+        };
+        let frame = Frame::new(FrameKind::Draft, msg.encode());
+        (msg, frame)
+    }
+
+    #[test]
+    fn frame_roundtrips_at_every_byte_split() {
+        prop::check(40, |rng| {
+            let (msg, frame) = draft_frame(rng);
+            let bytes = frame.encode();
+            for split in 0..=bytes.len() {
+                let mut dec = FrameDecoder::new();
+                dec.push(&bytes[..split]);
+                if split < bytes.len() {
+                    let early = dec.next_frame().map_err(|e| e.to_string())?;
+                    prop::assert_prop(early.is_none(), format!("early frame at split {split}"))?;
+                }
+                dec.push(&bytes[split..]);
+                let f = dec
+                    .next_frame()
+                    .map_err(|e| e.to_string())?
+                    .ok_or("no frame after full input")?;
+                prop::assert_prop(f == frame, format!("frame mismatch at split {split}"))?;
+                let back = DraftMsg::decode(&f.payload).map_err(|e| e.to_string())?;
+                prop::assert_prop(
+                    back.tokens == msg.tokens && back.session == msg.session,
+                    "payload mismatch",
+                )?;
+                prop::assert_prop(
+                    dec.next_frame().map_err(|e| e.to_string())?.is_none(),
+                    "phantom trailing frame",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn verify_frames_roundtrip_through_concatenated_stream() {
+        prop::check(40, |rng| {
+            // several frames back to back, pushed in random-sized chunks
+            let msgs: Vec<VerifyMsg> = (0..4)
+                .map(|i| VerifyMsg {
+                    session: i,
+                    round: rng.next_range(100) as u32,
+                    tau: rng.next_range(9) as u8,
+                    correction: rng.next_range(512) as i32,
+                    eos: rng.chance(0.2),
+                })
+                .collect();
+            let mut stream = Vec::new();
+            for m in &msgs {
+                stream.extend_from_slice(&Frame::new(FrameKind::Verify, m.encode()).encode());
+            }
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            let mut i = 0usize;
+            while i < stream.len() {
+                let n = (rng.next_range(7) as usize + 1).min(stream.len() - i);
+                dec.push(&stream[i..i + n]);
+                i += n;
+                while let Some(f) = dec.next_frame().map_err(|e| e.to_string())? {
+                    prop::assert_prop(f.kind == FrameKind::Verify, "wrong kind")?;
+                    got.push(VerifyMsg::decode(&f.payload).map_err(|e| e.to_string())?);
+                }
+            }
+            prop::assert_prop(got == msgs, "stream decode mismatch")?;
+            prop::assert_prop(dec.pending_bytes() == 0, "leftover bytes")
+        });
+    }
+
+    #[test]
+    fn decoder_rejects_bad_length_and_kind() {
+        let mut dec = FrameDecoder::new();
+        dec.push(&[0, 0, 0, 0, 9]); // len 0
+        assert!(dec.next_frame().is_err());
+
+        let mut dec = FrameDecoder::new();
+        let huge = (MAX_FRAME_BYTES as u32 + 1).to_le_bytes();
+        dec.push(&huge);
+        assert!(dec.next_frame().is_err());
+
+        let mut dec = FrameDecoder::new();
+        dec.push(&Frame::new(FrameKind::Bye, vec![]).encode());
+        let mut bad = Frame::new(FrameKind::Bye, vec![]).encode();
+        bad[4] = 200; // unknown kind, after a valid frame
+        dec.push(&bad);
+        assert_eq!(dec.next_frame().unwrap().unwrap().kind, FrameKind::Bye);
+        assert!(dec.next_frame().is_err());
+    }
+
+    #[test]
+    fn handshake_accepts_current_version() {
+        let h = Hello {
+            wire_version: WIRE_VERSION,
+            mode: VerifyMode::Greedy,
+            k_max: 8,
+        };
+        let back = Hello::decode(&h.encode()).unwrap();
+        assert_eq!(back, h);
+        let ack = hello_response(&back);
+        assert!(ack.accepted);
+        assert_eq!(HelloAck::decode(&ack.encode()).unwrap(), ack);
+    }
+
+    #[test]
+    fn handshake_rejects_mismatched_wire_version() {
+        let h = Hello {
+            wire_version: WIRE_VERSION + 7,
+            mode: VerifyMode::Stochastic,
+            k_max: 4,
+        };
+        let ack = hello_response(&Hello::decode(&h.encode()).unwrap());
+        assert!(!ack.accepted);
+        assert!(ack.reason.contains("mismatch"), "{}", ack.reason);
+        let wire = HelloAck::decode(&ack.encode()).unwrap();
+        assert!(!wire.accepted);
+        assert_eq!(wire.wire_version, WIRE_VERSION);
+    }
+
+    #[test]
+    fn open_messages_roundtrip() {
+        let o = OpenMsg {
+            prompt: vec![1, 64, 127, 511, 3],
+            max_new: 32,
+        };
+        assert_eq!(OpenMsg::decode(&o.encode()).unwrap(), o);
+        let a = OpenAck {
+            session: 9,
+            target_seq: 300,
+        };
+        assert_eq!(OpenAck::decode(&a.encode()).unwrap(), a);
+        assert!(OpenMsg::decode(&o.encode()[..3]).is_err());
+    }
+}

@@ -15,7 +15,13 @@
 //! 32k-vocab 70B deployment so absolute milliseconds stay comparable
 //! (calibrated in EXPERIMENTS.md §Calibration).
 
+//! For the *serving* subsystem (real sockets rather than byte-accounted
+//! simulation) `frame` adds the length-prefixed stream codec and the
+//! wire-format version handshake (`Hello`/`HelloAck`) that gates every
+//! connection.
+
 pub mod codec;
+pub mod frame;
 
 use codec::{read_u16, read_u32, read_varint, write_u16, write_u32, write_varint};
 use anyhow::{bail, Result};

@@ -1,0 +1,560 @@
+//! Pluggable cloud-side verification backends for the serving stack.
+//!
+//! `VerifyBackend` is the seam between the transport/session layer and
+//! model execution. Three implementations:
+//!
+//! * `CloudEngine` (PJRT, artifact-gated) — the real evolving target with
+//!   KV sessions and LoRA hot-swap; usable directly by the simulator.
+//! * `EngineBackend` — `CloudEngine` + its `Registry`, which is what a
+//!   server needs so `deploy` can hot-swap versions at runtime.
+//! * `SyntheticTarget` — a *deterministic* pure-function target: the
+//!   greedy next token is a hash of the recent context and the deployed
+//!   version's drift parameter. It needs no artifacts, is independent of
+//!   wall-clock timing and batching order, and therefore produces
+//!   identical accepted-token counts over TCP, loopback, and the
+//!   virtual-clock simulation — the property the serving tests pin.
+//!
+//! `SyntheticDraft` is the matching frozen edge draft: it always predicts
+//! the *base* (drift-free) trajectory, so acceptance degrades exactly by
+//! the deployed version's drift — the paper's frozen-draft-vs-evolving-
+//! target story in miniature.
+
+use crate::coordinator::edge::{DraftSource, Proposal};
+use crate::coordinator::CloudEngine;
+use crate::protocol::VerifyMode;
+use crate::runtime::Registry;
+use crate::util::rng::SplitMix64;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// One verification round's outcome, backend-agnostic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendVerdict {
+    /// Accepted draft prefix length.
+    pub tau: usize,
+    /// Correction/bonus token the target commits after the prefix.
+    pub correction: i32,
+    /// True when the round emitted (or accepted) an end-of-sequence.
+    pub eos: bool,
+}
+
+/// Cloud-side verification service: KV sessions + draft-block
+/// verification + target-version hot-swap.
+pub trait VerifyBackend {
+    fn start_session(&mut self, id: u32, prompt: &[i32]) -> Result<()>;
+
+    fn end_session(&mut self, id: u32);
+
+    /// Verify one draft block against the session's committed sequence.
+    #[allow(clippy::too_many_arguments)]
+    fn verify_block(
+        &mut self,
+        id: u32,
+        committed: &[i32],
+        draft: &[i32],
+        draft_probs: &[Vec<f32>],
+        mode: VerifyMode,
+        temperature: f32,
+        top_p: f32,
+        rng: &mut SplitMix64,
+    ) -> Result<BackendVerdict>;
+
+    /// Hot-swap the deployed target version without dropping sessions.
+    /// Returns the new version sequence number.
+    fn deploy(&mut self, version: &str) -> Result<u64> {
+        bail!("backend '{}' does not support hot-swap (version '{version}')", self.label())
+    }
+
+    fn version_name(&self) -> String;
+
+    fn version_seq(&self) -> u64;
+
+    /// KV slots left for this session (0 when unknown session).
+    fn remaining_capacity(&self, id: u32) -> usize;
+
+    fn label(&self) -> String {
+        "backend".into()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Real PJRT target (artifact-gated)
+// ---------------------------------------------------------------------
+
+impl VerifyBackend for CloudEngine {
+    fn start_session(&mut self, id: u32, prompt: &[i32]) -> Result<()> {
+        CloudEngine::start_session(self, id, prompt)
+    }
+
+    fn end_session(&mut self, id: u32) {
+        CloudEngine::end_session(self, id);
+    }
+
+    fn verify_block(
+        &mut self,
+        id: u32,
+        committed: &[i32],
+        draft: &[i32],
+        draft_probs: &[Vec<f32>],
+        mode: VerifyMode,
+        temperature: f32,
+        top_p: f32,
+        rng: &mut SplitMix64,
+    ) -> Result<BackendVerdict> {
+        let v = CloudEngine::verify(
+            self,
+            id,
+            committed,
+            draft,
+            draft_probs,
+            mode,
+            temperature,
+            top_p,
+            rng,
+        )?;
+        Ok(BackendVerdict {
+            tau: v.outcome.tau,
+            correction: v.outcome.correction,
+            eos: v.eos,
+        })
+    }
+
+    fn version_name(&self) -> String {
+        self.version.name.clone()
+    }
+
+    fn version_seq(&self) -> u64 {
+        self.version.seq
+    }
+
+    fn remaining_capacity(&self, id: u32) -> usize {
+        CloudEngine::remaining_capacity(self, id)
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt:{}", self.version.name)
+    }
+}
+
+/// `CloudEngine` plus its registry — the deployable production backend.
+/// `!Send` (PJRT handles are thread-pinned), so the server constructs it
+/// *inside* the verifier thread via the `make_backend` closure.
+pub struct EngineBackend {
+    pub reg: Rc<Registry>,
+    pub cloud: CloudEngine,
+}
+
+impl EngineBackend {
+    pub fn new(reg: Rc<Registry>, version: &str, eos: i32) -> Result<EngineBackend> {
+        let cloud = CloudEngine::new(&reg, version, eos)?;
+        Ok(EngineBackend { reg, cloud })
+    }
+}
+
+impl VerifyBackend for EngineBackend {
+    fn start_session(&mut self, id: u32, prompt: &[i32]) -> Result<()> {
+        self.cloud.start_session(id, prompt)
+    }
+
+    fn end_session(&mut self, id: u32) {
+        self.cloud.end_session(id);
+    }
+
+    fn verify_block(
+        &mut self,
+        id: u32,
+        committed: &[i32],
+        draft: &[i32],
+        draft_probs: &[Vec<f32>],
+        mode: VerifyMode,
+        temperature: f32,
+        top_p: f32,
+        rng: &mut SplitMix64,
+    ) -> Result<BackendVerdict> {
+        VerifyBackend::verify_block(
+            &mut self.cloud,
+            id,
+            committed,
+            draft,
+            draft_probs,
+            mode,
+            temperature,
+            top_p,
+            rng,
+        )
+    }
+
+    fn deploy(&mut self, version: &str) -> Result<u64> {
+        self.cloud.deploy(&self.reg, version)?;
+        Ok(self.cloud.version.seq)
+    }
+
+    fn version_name(&self) -> String {
+        self.cloud.version.name.clone()
+    }
+
+    fn version_seq(&self) -> u64 {
+        self.cloud.version.seq
+    }
+
+    fn remaining_capacity(&self, id: u32) -> usize {
+        self.cloud.remaining_capacity(id)
+    }
+
+    fn label(&self) -> String {
+        format!("engine:{}", self.cloud.version.name)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic synthetic target + frozen synthetic draft
+// ---------------------------------------------------------------------
+
+/// Context window the synthetic token function hashes over.
+const SYNTH_WINDOW: usize = 8;
+/// Tokens 0..=2 are PAD/BOS/EOS — the synthetic trajectory avoids them
+/// so runs are never cut short by a hash collision with EOS and token
+/// counts stay exactly reproducible.
+const SYNTH_RESERVED: i32 = 3;
+
+fn ctx_hash(ctx: &[i32]) -> u64 {
+    let tail = &ctx[ctx.len().saturating_sub(SYNTH_WINDOW)..];
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tail {
+        h = (h ^ t as u32 as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The frozen anchor's greedy prediction for the next token.
+pub fn synth_base_token(seed: u64, vocab: i32, ctx: &[i32]) -> i32 {
+    let mut r = SplitMix64::new(ctx_hash(ctx) ^ seed ^ 0xBA5E_70C5);
+    SYNTH_RESERVED + r.next_range((vocab - SYNTH_RESERVED) as u64) as i32
+}
+
+/// The deployed target version's greedy next token: equals the base
+/// prediction except at (deterministic, context-keyed) drift positions.
+pub fn synth_target_token(seed: u64, vocab: i32, version_salt: u64, drift: f64, ctx: &[i32]) -> i32 {
+    let base = synth_base_token(seed, vocab, ctx);
+    if drift <= 0.0 {
+        return base;
+    }
+    let mut r = SplitMix64::new(
+        ctx_hash(ctx) ^ seed ^ version_salt.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    if r.next_f64() < drift {
+        let span = (vocab - SYNTH_RESERVED) as u64;
+        let jump = 1 + r.next_range(span - 1) as i32;
+        SYNTH_RESERVED + (base - SYNTH_RESERVED + jump).rem_euclid(span as i32)
+    } else {
+        base
+    }
+}
+
+fn name_salt(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A registered synthetic target version: name + how far it has evolved
+/// away from the frozen draft's anchor (per-token disagreement rate).
+#[derive(Debug, Clone)]
+pub struct SyntheticVersion {
+    pub name: String,
+    pub drift: f64,
+}
+
+/// Deterministic verification backend (no artifacts, no clock, no
+/// batching-order sensitivity — see module docs).
+pub struct SyntheticTarget {
+    pub seed: u64,
+    pub vocab: i32,
+    pub eos: i32,
+    pub max_ctx: usize,
+    versions: Vec<SyntheticVersion>,
+    current: usize,
+    seq: u64,
+    /// id → committed length last seen (capacity accounting).
+    sessions: HashMap<u32, usize>,
+}
+
+impl SyntheticTarget {
+    pub fn new(seed: u64) -> SyntheticTarget {
+        SyntheticTarget {
+            seed,
+            vocab: 512,
+            eos: crate::workload::EOS,
+            max_ctx: 4096,
+            versions: vec![SyntheticVersion {
+                name: "synthetic_base".into(),
+                drift: 0.0,
+            }],
+            current: 0,
+            seq: 1,
+            sessions: HashMap::new(),
+        }
+    }
+
+    /// Register a deployable version (builder-style).
+    pub fn with_version(mut self, name: &str, drift: f64) -> SyntheticTarget {
+        self.versions.push(SyntheticVersion {
+            name: name.into(),
+            drift: drift.clamp(0.0, 1.0),
+        });
+        self
+    }
+
+    pub fn current_version(&self) -> &SyntheticVersion {
+        &self.versions[self.current]
+    }
+
+    fn target_token(&self, ctx: &[i32]) -> i32 {
+        let v = self.current_version();
+        synth_target_token(self.seed, self.vocab, name_salt(&v.name), v.drift, ctx)
+    }
+}
+
+impl VerifyBackend for SyntheticTarget {
+    fn start_session(&mut self, id: u32, prompt: &[i32]) -> Result<()> {
+        if prompt.len() < 2 {
+            bail!("prompt must have at least 2 tokens (BOS + 1)");
+        }
+        if self.sessions.contains_key(&id) {
+            bail!("session {id} already open");
+        }
+        self.sessions.insert(id, prompt.len());
+        Ok(())
+    }
+
+    fn end_session(&mut self, id: u32) {
+        self.sessions.remove(&id);
+    }
+
+    fn verify_block(
+        &mut self,
+        id: u32,
+        committed: &[i32],
+        draft: &[i32],
+        _draft_probs: &[Vec<f32>],
+        _mode: VerifyMode,
+        _temperature: f32,
+        _top_p: f32,
+        _rng: &mut SplitMix64,
+    ) -> Result<BackendVerdict> {
+        if !self.sessions.contains_key(&id) {
+            bail!("no session {id}");
+        }
+        // Greedy verification against the deterministic trajectory
+        // (stochastic mode degrades to greedy here by design — the
+        // synthetic target exists for reproducibility, not sampling).
+        let mut ctx = committed.to_vec();
+        let mut tau = draft.len();
+        let mut correction = None;
+        for (j, &d) in draft.iter().enumerate() {
+            let t = self.target_token(&ctx);
+            if d == t {
+                ctx.push(d);
+            } else {
+                tau = j;
+                correction = Some(t);
+                break;
+            }
+        }
+        let correction = correction.unwrap_or_else(|| self.target_token(&ctx));
+        let eos = correction == self.eos || draft[..tau].contains(&self.eos);
+        self.sessions.insert(id, committed.len() + tau + 1);
+        Ok(BackendVerdict {
+            tau,
+            correction,
+            eos,
+        })
+    }
+
+    fn deploy(&mut self, version: &str) -> Result<u64> {
+        let idx = self
+            .versions
+            .iter()
+            .position(|v| v.name == version)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown synthetic version '{version}' (have: {})",
+                    self.versions
+                        .iter()
+                        .map(|v| v.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+        self.current = idx;
+        self.seq += 1;
+        Ok(self.seq)
+    }
+
+    fn version_name(&self) -> String {
+        self.current_version().name.clone()
+    }
+
+    fn version_seq(&self) -> u64 {
+        self.seq
+    }
+
+    fn remaining_capacity(&self, id: u32) -> usize {
+        self.sessions
+            .get(&id)
+            .map(|&len| self.max_ctx.saturating_sub(len))
+            .unwrap_or(0)
+    }
+
+    fn label(&self) -> String {
+        format!("synthetic:{}", self.current_version().name)
+    }
+}
+
+/// The frozen edge draft matching `SyntheticTarget`: always predicts the
+/// drift-free base trajectory. Deterministic, `Send`, artifact-free.
+#[derive(Debug, Clone)]
+pub struct SyntheticDraft {
+    pub seed: u64,
+    pub vocab: i32,
+}
+
+impl SyntheticDraft {
+    pub fn new(seed: u64) -> SyntheticDraft {
+        SyntheticDraft { seed, vocab: 512 }
+    }
+}
+
+impl DraftSource for SyntheticDraft {
+    fn propose(
+        &mut self,
+        committed: &[i32],
+        k: usize,
+        _temperature: f32,
+        _top_p: f32,
+        _rng: &mut SplitMix64,
+    ) -> Result<Proposal> {
+        let mut prop = Proposal::default();
+        let mut ctx = committed.to_vec();
+        for _ in 0..k {
+            let t = synth_base_token(self.seed, self.vocab, &ctx);
+            prop.tokens.push(t);
+            prop.chosen_probs.push(1.0);
+            ctx.push(t);
+        }
+        prop.edge_tokens = k;
+        Ok(prop)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        "synthetic-draft".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> SplitMix64 {
+        SplitMix64::new(1)
+    }
+
+    fn run_rounds(t: &mut SyntheticTarget, d: &mut SyntheticDraft, rounds: usize, k: usize) -> (usize, usize) {
+        let prompt = vec![1, 70, 80, 90];
+        t.start_session(1, &prompt).unwrap();
+        let mut committed = prompt;
+        let (mut acc, mut drafted) = (0, 0);
+        for _ in 0..rounds {
+            let p = d
+                .propose(&committed, k, 0.0, 1.0, &mut rng())
+                .unwrap();
+            let v = t
+                .verify_block(1, &committed, &p.tokens, &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng())
+                .unwrap();
+            committed.extend_from_slice(&p.tokens[..v.tau]);
+            committed.push(v.correction);
+            acc += v.tau;
+            drafted += p.tokens.len();
+        }
+        t.end_session(1);
+        (acc, drafted)
+    }
+
+    #[test]
+    fn base_version_accepts_everything() {
+        let mut t = SyntheticTarget::new(7);
+        let mut d = SyntheticDraft::new(7);
+        let (acc, drafted) = run_rounds(&mut t, &mut d, 10, 4);
+        assert_eq!(acc, drafted, "zero drift must accept every draft token");
+    }
+
+    #[test]
+    fn drift_lowers_acceptance_deterministically() {
+        let mut t = SyntheticTarget::new(7).with_version("evolved", 0.4);
+        t.deploy("evolved").unwrap();
+        assert_eq!(t.version_seq(), 2);
+        let mut d = SyntheticDraft::new(7);
+        let (acc1, drafted1) = run_rounds(&mut t, &mut d, 20, 4);
+        assert!(acc1 < drafted1, "drift must reject some tokens");
+        assert!(acc1 > 0, "drift 0.4 must still accept some tokens");
+
+        // bit-identical on replay
+        let mut t2 = SyntheticTarget::new(7).with_version("evolved", 0.4);
+        t2.deploy("evolved").unwrap();
+        let mut d2 = SyntheticDraft::new(7);
+        assert_eq!(run_rounds(&mut t2, &mut d2, 20, 4), (acc1, drafted1));
+    }
+
+    #[test]
+    fn verdicts_are_independent_of_round_partitioning() {
+        // K=1 single-step rounds and K=4 rounds must walk the same
+        // greedy trajectory (timing/batching invariance in miniature).
+        let mk = || {
+            let mut t = SyntheticTarget::new(3).with_version("v2", 0.3);
+            t.deploy("v2").unwrap();
+            t
+        };
+        let mut d = SyntheticDraft::new(3);
+        let prompt = vec![1i32, 64, 65];
+
+        let mut trajectory = |k: usize| {
+            let mut t = mk();
+            t.start_session(9, &prompt).unwrap();
+            let mut committed = prompt.clone();
+            while committed.len() < prompt.len() + 24 {
+                let p = d.propose(&committed, k, 0.0, 1.0, &mut rng()).unwrap();
+                let v = t
+                    .verify_block(9, &committed, &p.tokens, &[], VerifyMode::Greedy, 0.0, 1.0, &mut rng())
+                    .unwrap();
+                committed.extend_from_slice(&p.tokens[..v.tau]);
+                committed.push(v.correction);
+            }
+            committed.truncate(prompt.len() + 24);
+            committed
+        };
+        assert_eq!(trajectory(1), trajectory(4));
+    }
+
+    #[test]
+    fn deploy_rejects_unknown_versions() {
+        let mut t = SyntheticTarget::new(1);
+        assert!(t.deploy("nope").is_err());
+        assert_eq!(t.version_name(), "synthetic_base");
+    }
+
+    #[test]
+    fn capacity_tracks_committed_length() {
+        let mut t = SyntheticTarget::new(1);
+        t.max_ctx = 10;
+        t.start_session(1, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(t.remaining_capacity(1), 6);
+        assert_eq!(t.remaining_capacity(99), 0);
+    }
+}

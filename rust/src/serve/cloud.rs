@@ -1,0 +1,241 @@
+//! The cloud verification server: a tokio accept loop feeding the
+//! dedicated verifier thread (`serve::verifier`).
+//!
+//! One connection carries one KV session. The per-connection protocol
+//! (`handle_conn`) is written against the `Transport` trait, so the TCP
+//! server and the in-process loopback harness (`serve_loopback`) share
+//! it verbatim — the loopback path is not a mock, it is the same server
+//! minus the socket.
+//!
+//! Operational properties the tests pin:
+//! * cross-connection dynamic batching (the verifier thread closes one
+//!   window over requests from many connections);
+//! * target-version hot-swap (`ServerHandle::deploy`) without dropping
+//!   live sessions;
+//! * graceful shutdown: stop accepting, drain active connections, flush
+//!   the open batch, report final `ServingMetrics`.
+
+use super::backend::VerifyBackend;
+use super::edge::{run_edge_session, EdgeReport, EdgeSessionConfig};
+use super::transport::{loopback_pair, TcpTransport, Transport};
+use super::verifier::{VerifierConfig, VerifierHandle};
+use crate::coordinator::edge::DraftSource;
+use crate::metrics::ServingMetrics;
+use crate::protocol::frame::{hello_response, Frame, FrameKind, Hello, OpenAck, OpenMsg};
+use crate::protocol::DraftMsg;
+use crate::util::log::{log, Level};
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::SocketAddr;
+use std::time::Duration;
+use tokio::net::TcpListener;
+use tokio::sync::watch;
+use tokio::task::JoinSet;
+
+/// How long `shutdown` waits for in-flight sessions before aborting
+/// their connections.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(30);
+
+/// Running server handle. Dropping it stops accepting new connections
+/// (the shutdown watch closes) but skips the graceful drain — call
+/// `shutdown` to flush the open batch and collect final metrics.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    verifier: VerifierHandle,
+    shutdown: watch::Sender<bool>,
+    accept: tokio::task::JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// Hot-swap the deployed target version; live sessions keep their
+    /// KV state and simply see different verification verdicts.
+    pub async fn deploy(&self, version: &str) -> Result<u64> {
+        self.verifier.deploy(version).await
+    }
+
+    /// Snapshot of the serving counters.
+    pub async fn stats(&self) -> Result<ServingMetrics> {
+        self.verifier.stats().await
+    }
+
+    /// A handle to the verification service (e.g. to share it with a
+    /// loopback harness next to the TCP listener).
+    pub fn verifier(&self) -> VerifierHandle {
+        self.verifier.clone()
+    }
+
+    /// Graceful shutdown: stop accepting, wait up to `SHUTDOWN_GRACE`
+    /// for active connections to finish (stragglers are aborted), flush
+    /// the open batch, return final metrics.
+    pub async fn shutdown(self) -> Result<ServingMetrics> {
+        let _ = self.shutdown.send(true);
+        let _ = self.accept.await;
+        self.verifier.shutdown().await
+    }
+}
+
+/// Bind a TCP verification server. `make_backend` runs on the verifier
+/// thread (so `!Send` PJRT backends work); pass port 0 to let the OS
+/// pick one (`handle.addr` has the result).
+pub async fn serve_cloud(
+    bind: &str,
+    vcfg: VerifierConfig,
+    make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
+) -> Result<ServerHandle> {
+    let verifier = VerifierHandle::spawn(vcfg, make_backend)?;
+    let listener = TcpListener::bind(bind)
+        .await
+        .with_context(|| format!("binding cloud server to {bind}"))?;
+    let addr = listener.local_addr()?;
+    let (shutdown, mut shutdown_rx) = watch::channel(false);
+    let vh = verifier.clone();
+    let accept = tokio::spawn(async move {
+        let mut conns: JoinSet<()> = JoinSet::new();
+        loop {
+            tokio::select! {
+                res = listener.accept() => match res {
+                    Ok((stream, peer)) => {
+                        let t = TcpTransport::new(stream, peer.to_string());
+                        let v = vh.clone();
+                        conns.spawn(async move {
+                            let peer = t.peer();
+                            if let Err(e) = handle_conn(t, v).await {
+                                log(Level::Warn, "serve", &format!("{peer}: {e:#}"));
+                            }
+                        });
+                    }
+                    Err(e) => {
+                        // transient (EMFILE, ECONNABORTED bursts): log,
+                        // breathe, keep accepting — only shutdown ends
+                        // the loop
+                        log(Level::Warn, "serve", &format!("accept failed: {e}"));
+                        tokio::time::sleep(std::time::Duration::from_millis(50)).await;
+                    }
+                },
+                _ = shutdown_rx.changed() => break,
+            }
+        }
+        // graceful drain: let in-flight sessions run to completion,
+        // bounded so one stalled connection cannot hang shutdown forever
+        let drain = async {
+            while conns.join_next().await.is_some() {}
+        };
+        if tokio::time::timeout(SHUTDOWN_GRACE, drain).await.is_err() {
+            log(
+                Level::Warn,
+                "serve",
+                "shutdown grace period expired; aborting remaining connections",
+            );
+            conns.abort_all();
+            while conns.join_next().await.is_some() {}
+        }
+    });
+    Ok(ServerHandle {
+        addr,
+        verifier,
+        shutdown,
+        accept,
+    })
+}
+
+/// Serve one connection: version handshake → session open → decode loop.
+/// Transport-generic so TCP and loopback share it.
+pub async fn handle_conn<T: Transport>(mut t: T, verifier: VerifierHandle) -> Result<()> {
+    // --- wire-format version handshake -------------------------------
+    let hello = match t.recv_frame().await? {
+        None => return Ok(()),
+        Some(f) if f.kind == FrameKind::Hello => Hello::decode(&f.payload)?,
+        Some(f) => bail!("expected Hello, got {:?}", f.kind),
+    };
+    let ack = hello_response(&hello);
+    let accepted = ack.accepted;
+    t.send_frame(Frame::new(FrameKind::HelloAck, ack.encode()))
+        .await?;
+    if !accepted {
+        verifier.note_rejected_handshake();
+        return Ok(());
+    }
+
+    // --- session open ------------------------------------------------
+    let open = match t.recv_frame().await? {
+        None => return Ok(()),
+        Some(f) if f.kind == FrameKind::Open => OpenMsg::decode(&f.payload)?,
+        Some(f) => bail!("expected Open, got {:?}", f.kind),
+    };
+    let (id, target_seq) = verifier.open(open.prompt, open.max_new as usize).await?;
+    t.send_frame(Frame::new(
+        FrameKind::OpenAck,
+        OpenAck {
+            session: id,
+            target_seq,
+        }
+        .encode(),
+    ))
+    .await?;
+
+    // --- decode loop -------------------------------------------------
+    let result = conn_loop(&mut t, &verifier, id).await;
+    // idempotent: no-op if the session completed naturally; counts an
+    // abort if the client vanished mid-session
+    verifier.end(id);
+    result
+}
+
+async fn conn_loop<T: Transport>(t: &mut T, verifier: &VerifierHandle, id: u32) -> Result<()> {
+    loop {
+        match t.recv_frame().await? {
+            None
+            | Some(Frame {
+                kind: FrameKind::Bye,
+                ..
+            }) => return Ok(()),
+            Some(f) if f.kind == FrameKind::Draft => {
+                let mut msg = DraftMsg::decode(&f.payload)?;
+                // the server-assigned session id is authoritative
+                msg.session = id;
+                let vmsg = verifier.verify(id, msg).await?;
+                t.send_frame(Frame::new(FrameKind::Verify, vmsg.encode()))
+                    .await?;
+            }
+            Some(f) => bail!("unexpected {:?} frame in session {id}", f.kind),
+        }
+    }
+}
+
+/// Run a full multi-session serve over in-process loopback transports:
+/// same verifier thread, same `handle_conn`, no sockets. Sessions run
+/// concurrently; reports come back in input order. This is the
+/// deterministic twin of the TCP path (with a deterministic backend and
+/// a fixed stride it reproduces the simulator's token counts exactly).
+pub async fn serve_loopback(
+    vcfg: VerifierConfig,
+    make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
+    edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>)>,
+    ecfg: EdgeSessionConfig,
+) -> Result<(Vec<EdgeReport>, ServingMetrics)> {
+    let verifier = VerifierHandle::spawn(vcfg, make_backend)?;
+    let mut tasks = Vec::new();
+    for (draft, prompt) in edges {
+        let (edge_t, cloud_t) = loopback_pair();
+        let v = verifier.clone();
+        tokio::spawn(async move {
+            if let Err(e) = handle_conn(cloud_t, v).await {
+                log(Level::Warn, "serve", &format!("loopback conn: {e:#}"));
+            }
+        });
+        let ecfg = ecfg.clone();
+        tasks.push(tokio::spawn(async move {
+            let mut draft = draft;
+            let mut t = edge_t;
+            run_edge_session(&mut t, draft.as_mut(), &prompt, &ecfg).await
+        }));
+    }
+    let mut reports = Vec::new();
+    for task in tasks {
+        reports.push(
+            task.await
+                .map_err(|e| anyhow!("edge session task failed: {e}"))??,
+        );
+    }
+    let metrics = verifier.shutdown().await?;
+    Ok((reports, metrics))
+}

@@ -1,0 +1,199 @@
+//! The edge client: drives one serving session over any `Transport`,
+//! running the channel-aware adaptive stride policy (paper §IV-B)
+//! against *measured* round-trip times instead of the simulator's
+//! synthetic channel — the same `AdaptivePolicy`/`LatencyModel` code
+//! path, fed by an EMA of observed RTT and effective goodput.
+
+use super::session::SessionCore;
+use super::transport::Transport;
+use crate::channel::ChannelState;
+use crate::coordinator::edge::DraftSource;
+use crate::coordinator::policy::{AdaptivePolicy, LatencyModel};
+use crate::devices::{CloudProfile, EdgeDevice, A800_70B, JETSON_ORIN};
+use crate::protocol::frame::{Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, WIRE_VERSION};
+use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
+use crate::util::rng::SplitMix64;
+use crate::util::stats::{Ema, Summary};
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct EdgeSessionConfig {
+    pub mode: VerifyMode,
+    pub temperature: f32,
+    pub top_p: f32,
+    pub max_new: usize,
+    pub k_max: usize,
+    /// Pin the stride (reproducibility runs, ablations); `None` runs the
+    /// channel-aware adaptive policy on measured RTTs.
+    pub fixed_k: Option<usize>,
+    pub seed: u64,
+    /// Device/cloud compute constants for the latency model's
+    /// alpha_edge / T_base terms (the network terms are measured).
+    pub device: &'static EdgeDevice,
+    pub cloud: &'static CloudProfile,
+}
+
+impl Default for EdgeSessionConfig {
+    fn default() -> Self {
+        EdgeSessionConfig {
+            mode: VerifyMode::Greedy,
+            temperature: 0.0,
+            top_p: 1.0,
+            max_new: 32,
+            k_max: 8,
+            fixed_k: None,
+            seed: 1,
+            device: &JETSON_ORIN,
+            cloud: &A800_70B,
+        }
+    }
+}
+
+/// Per-session client-side result.
+#[derive(Debug, Clone)]
+pub struct EdgeReport {
+    pub session: u32,
+    /// Target version sequence the cloud reported at open (observing
+    /// cloud-side evolution without ever downloading weights).
+    pub target_seq_at_open: u64,
+    pub new_tokens: usize,
+    pub accepted: usize,
+    pub drafted: usize,
+    pub rounds: usize,
+    pub wall_ms: f64,
+    /// Measured per-round RTT (draft sent → verdict decoded).
+    pub rtt_ms: Summary,
+    pub k_used: Summary,
+    /// Full committed sequence (prompt + generated).
+    pub committed: Vec<i32>,
+}
+
+impl EdgeReport {
+    pub fn acceptance(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+async fn expect_frame<T: Transport>(t: &mut T, kind: FrameKind) -> Result<Frame> {
+    match t.recv_frame().await? {
+        Some(f) if f.kind == kind => Ok(f),
+        Some(f) => bail!("expected {kind:?}, got {:?}", f.kind),
+        None => bail!("connection closed while waiting for {kind:?}"),
+    }
+}
+
+/// Run one full serving session: handshake, open, adaptive decode loop,
+/// orderly Bye. Generic over transport AND draft source so the same
+/// client serves TCP/loopback and model/model-free drafts.
+pub async fn run_edge_session<T, D>(
+    t: &mut T,
+    draft: &mut D,
+    prompt: &[i32],
+    cfg: &EdgeSessionConfig,
+) -> Result<EdgeReport>
+where
+    T: Transport,
+    D: DraftSource + ?Sized,
+{
+    let t0 = Instant::now();
+
+    // --- handshake ---------------------------------------------------
+    let hello = Hello {
+        wire_version: WIRE_VERSION,
+        mode: cfg.mode,
+        k_max: cfg.k_max.min(255) as u8,
+    };
+    t.send_frame(Frame::new(FrameKind::Hello, hello.encode()))
+        .await?;
+    let ack = HelloAck::decode(&expect_frame(t, FrameKind::HelloAck).await?.payload)?;
+    if !ack.accepted {
+        bail!("cloud rejected handshake: {}", ack.reason);
+    }
+
+    // --- open session ------------------------------------------------
+    let open = OpenMsg {
+        prompt: prompt.to_vec(),
+        max_new: cfg.max_new as u32,
+    };
+    t.send_frame(Frame::new(FrameKind::Open, open.encode()))
+        .await?;
+    let ack = OpenAck::decode(&expect_frame(t, FrameKind::OpenAck).await?.payload)?;
+    let id = ack.session;
+
+    let mut core = SessionCore::new(id, prompt, cfg.max_new);
+    draft.on_prompt(prompt.len());
+    let mut policy = AdaptivePolicy::new(cfg.k_max.max(1), 0.15);
+    let mut rng = SplitMix64::new(cfg.seed ^ (0x3000 + id as u64));
+
+    // Measured link state. Seeded optimistically; the first rounds
+    // correct it fast (EMA mu = 0.3).
+    let mut rtt_ms = Ema::new(40.0, 0.3);
+    let mut goodput_bps = Ema::new(10e6, 0.3);
+
+    let mut rtt_summary = Summary::new();
+    let mut k_summary = Summary::new();
+
+    // --- decode loop -------------------------------------------------
+    while !core.done {
+        let k = match cfg.fixed_k {
+            Some(k) => k.clamp(1, cfg.k_max.max(1)),
+            None => {
+                let state = ChannelState {
+                    up_bps: goodput_bps.get().max(1e4),
+                    down_bps: goodput_bps.get().max(1e4),
+                    prop_ms: (rtt_ms.get() / 2.0).max(0.01),
+                    fading: false,
+                    loss_rate: 0.0,
+                };
+                let lat = LatencyModel::build(&state, cfg.device, cfg.cloud, WireFormat::Compact);
+                policy.select_k(&lat)
+            }
+        };
+        let prop = draft.propose(&core.committed, k, cfg.temperature, cfg.top_p, &mut rng)?;
+        let msg = DraftMsg {
+            session: id,
+            round: core.rounds as u32,
+            tokens: prop.tokens.clone(),
+            chosen_probs: prop.chosen_probs,
+            mode: cfg.mode,
+            wire: WireFormat::Compact,
+        };
+        let sent = Instant::now();
+        t.send_frame(Frame::new(FrameKind::Draft, msg.encode()))
+            .await?;
+        let v = VerifyMsg::decode(&expect_frame(t, FrameKind::Verify).await?.payload)?;
+
+        // measure the link this round actually saw
+        let rtt_now = sent.elapsed().as_secs_f64() * 1e3;
+        rtt_ms.update(rtt_now);
+        let bytes = (msg.air_bytes() + v.air_bytes()) as f64;
+        goodput_bps.update(bytes * 8.0 / (rtt_now / 1e3).max(1e-6));
+        rtt_summary.add(rtt_now);
+        k_summary.add(prop.tokens.len() as f64);
+
+        let tau = (v.tau as usize).min(prop.tokens.len());
+        if !prop.tokens.is_empty() {
+            policy.observe(tau, prop.tokens.len());
+        }
+        core.apply_verdict(&prop.tokens, tau, v.correction, v.eos, false);
+    }
+    t.send_frame(Frame::new(FrameKind::Bye, vec![])).await?;
+
+    Ok(EdgeReport {
+        session: id,
+        target_seq_at_open: ack.target_seq,
+        new_tokens: core.new_tokens,
+        accepted: core.accepted,
+        drafted: core.drafted,
+        rounds: core.rounds,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        rtt_ms: rtt_summary,
+        k_used: k_summary,
+        committed: core.committed,
+    })
+}

@@ -1,0 +1,54 @@
+//! `flexspec::serve` — async edge↔cloud transport & multi-session
+//! serving subsystem.
+//!
+//! The simulator (`coordinator::scheduler`) proves the protocol under a
+//! virtual clock; this module runs the SAME wire protocol
+//! (`protocol::{DraftMsg, VerifyMsg}` in length-prefixed frames,
+//! `protocol::frame`) over real connections:
+//!
+//! * [`transport`] — the object-safe [`Transport`] trait with two
+//!   implementations: [`TcpTransport`] (real sockets, TCP_NODELAY) and
+//!   [`LoopbackTransport`] (in-process pair, optionally metered through
+//!   the deterministic wireless-channel simulation).
+//! * [`session`] — transport-agnostic state machines shared with the
+//!   simulator: [`BatchWindow`] (dynamic verification batching) and
+//!   [`SessionCore`] (per-session commit bookkeeping both endpoints
+//!   mirror).
+//! * [`backend`] — pluggable cloud verification: the PJRT
+//!   [`EngineBackend`] (KV sessions + LoRA hot-swap, artifact-gated) and
+//!   the deterministic [`SyntheticTarget`]/[`SyntheticDraft`] pair whose
+//!   verdicts are pure functions of (context, version) — timing- and
+//!   batching-order-independent, which is what makes TCP, loopback and
+//!   simulation runs byte-comparable.
+//! * [`verifier`] — the cloud session manager + cross-connection batcher
+//!   on a dedicated OS thread (PJRT handles are `!Send`), exposed to
+//!   tokio through the async [`VerifierHandle`].
+//! * [`cloud`] / [`edge`] — the accept loop + per-connection protocol
+//!   (`handle_conn`, shared by TCP and loopback), and the edge client
+//!   running the channel-aware adaptive stride policy against *measured*
+//!   round-trip times.
+//!
+//! Determinism contract: with a [`SyntheticTarget`] backend and a fixed
+//! stride, `serve_loopback`, the TCP path, and
+//! `coordinator::scheduler::serve_with` commit identical per-session
+//! token/acceptance counts for a fixed seed (pinned by
+//! `tests/serve_loopback.rs` and `examples/serve_tcp.rs`).
+
+pub mod backend;
+pub mod cloud;
+pub mod edge;
+pub mod session;
+pub mod transport;
+pub mod verifier;
+
+pub use backend::{
+    BackendVerdict, EngineBackend, SyntheticDraft, SyntheticTarget, VerifyBackend,
+};
+pub use cloud::{handle_conn, serve_cloud, serve_loopback, ServerHandle};
+pub use edge::{run_edge_session, EdgeReport, EdgeSessionConfig};
+pub use session::{BatchDecision, BatchWindow, SessionCore, SessionOutcome};
+pub use transport::{
+    loopback_pair, loopback_pair_with_channel, AirtimeLedger, LoopbackTransport, TcpTransport,
+    Transport,
+};
+pub use verifier::{VerifierConfig, VerifierCore, VerifierHandle};

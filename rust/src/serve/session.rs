@@ -1,0 +1,235 @@
+//! Transport-agnostic session + batching state machines, shared by the
+//! virtual-clock simulator (`coordinator::scheduler`) and the real
+//! tokio server (`serve::cloud`). Factoring them out is what guarantees
+//! the loopback serving path and the simulation commit byte-identical
+//! token trajectories for a fixed seed.
+
+/// Dynamic verification batching window (vLLM-style continuous batching
+/// applied to verification blocks). Time is an opaque `f64` in ms — the
+/// simulator feeds virtual time, the server feeds a monotonic clock.
+#[derive(Debug, Clone)]
+pub struct BatchWindow {
+    pub window_ms: f64,
+    pub max_batch: usize,
+    members: Vec<u32>,
+    window_open: bool,
+    /// Bumped on every `close()`. A scheduled close timer records the
+    /// epoch it was armed for; if the window was already drained (e.g.
+    /// by a `CloseNow`), the stale timer sees a newer epoch and must
+    /// not close the next window early.
+    epoch: u64,
+}
+
+/// What the caller must do after offering a request to the window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchDecision {
+    /// Batch reached `max_batch`: close it immediately.
+    CloseNow,
+    /// First request of a fresh window: schedule a close at this time.
+    CloseAt(f64),
+    /// A window is already pending; nothing to schedule.
+    Queued,
+}
+
+impl BatchWindow {
+    pub fn new(window_ms: f64, max_batch: usize) -> BatchWindow {
+        BatchWindow {
+            window_ms,
+            max_batch: max_batch.max(1),
+            members: Vec::new(),
+            window_open: false,
+            epoch: 0,
+        }
+    }
+
+    /// Current window generation (see `epoch` field docs).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Add a verify request to the open batch.
+    pub fn offer(&mut self, now_ms: f64, id: u32) -> BatchDecision {
+        self.members.push(id);
+        if self.members.len() >= self.max_batch {
+            BatchDecision::CloseNow
+        } else if !self.window_open {
+            self.window_open = true;
+            BatchDecision::CloseAt(now_ms + self.window_ms)
+        } else {
+            BatchDecision::Queued
+        }
+    }
+
+    /// Close the window and take its members (may be empty if a timer
+    /// fired after a `CloseNow` already drained it — callers skip those).
+    pub fn close(&mut self) -> Vec<u32> {
+        self.window_open = false;
+        self.epoch += 1;
+        std::mem::take(&mut self.members)
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+/// Per-session decoding progress — the part of Algorithm 2's state that
+/// both endpoints must agree on. The cloud keeps one per KV session; the
+/// edge keeps its own mirror and both advance it with `apply_verdict`,
+/// so the committed sequence can never diverge silently.
+#[derive(Debug, Clone)]
+pub struct SessionCore {
+    pub id: u32,
+    /// Full committed sequence: prompt + generated tokens.
+    pub committed: Vec<i32>,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub new_tokens: usize,
+    pub rounds: usize,
+    pub accepted: usize,
+    pub drafted: usize,
+    pub done: bool,
+}
+
+impl SessionCore {
+    pub fn new(id: u32, prompt: &[i32], max_new: usize) -> SessionCore {
+        SessionCore {
+            id,
+            committed: prompt.to_vec(),
+            prompt_len: prompt.len(),
+            max_new,
+            new_tokens: 0,
+            rounds: 0,
+            accepted: 0,
+            drafted: 0,
+            done: false,
+        }
+    }
+
+    /// Commit one round's outcome: accepted prefix + correction/bonus
+    /// token. Returns true when the session just finished.
+    pub fn apply_verdict(
+        &mut self,
+        draft: &[i32],
+        tau: usize,
+        correction: i32,
+        eos: bool,
+        out_of_capacity: bool,
+    ) -> bool {
+        debug_assert!(tau <= draft.len(), "tau {tau} > draft {}", draft.len());
+        let tau = tau.min(draft.len());
+        self.committed.extend_from_slice(&draft[..tau]);
+        self.committed.push(correction);
+        self.new_tokens += tau + 1;
+        self.accepted += tau;
+        self.drafted += draft.len();
+        self.rounds += 1;
+        if eos || self.new_tokens >= self.max_new || out_of_capacity {
+            self.done = true;
+        }
+        self.done
+    }
+
+    /// Acceptance rate over the session so far.
+    pub fn acceptance(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    pub fn outcome(&self) -> SessionOutcome {
+        SessionOutcome {
+            id: self.id,
+            new_tokens: self.new_tokens,
+            accepted: self.accepted,
+            drafted: self.drafted,
+            rounds: self.rounds,
+        }
+    }
+}
+
+/// Final per-session counters (comparable across sim / loopback / TCP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionOutcome {
+    pub id: u32,
+    pub new_tokens: usize,
+    pub accepted: usize,
+    pub drafted: usize,
+    pub rounds: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_closes_on_capacity_or_timer() {
+        let mut w = BatchWindow::new(10.0, 3);
+        assert_eq!(w.offer(0.0, 1), BatchDecision::CloseAt(10.0));
+        assert_eq!(w.offer(2.0, 2), BatchDecision::Queued);
+        assert_eq!(w.offer(3.0, 3), BatchDecision::CloseNow);
+        assert_eq!(w.close(), vec![1, 2, 3]);
+        assert!(w.is_empty());
+        // fresh window after close
+        assert_eq!(w.offer(20.0, 4), BatchDecision::CloseAt(30.0));
+        assert_eq!(w.close(), vec![4]);
+    }
+
+    #[test]
+    fn spurious_timer_close_is_empty() {
+        let mut w = BatchWindow::new(5.0, 2);
+        let _ = w.offer(0.0, 1);
+        let _ = w.offer(0.0, 2); // CloseNow drained by caller:
+        assert_eq!(w.close(), vec![1, 2]);
+        // the originally scheduled 5.0 ms timer still fires:
+        assert!(w.close().is_empty());
+    }
+
+    #[test]
+    fn epoch_detects_stale_close_timers() {
+        let mut w = BatchWindow::new(10.0, 2);
+        // window 1 opens; its timer records epoch 0
+        assert_eq!(w.offer(0.0, 1), BatchDecision::CloseAt(10.0));
+        let timer1_epoch = w.epoch();
+        // fills to max -> CloseNow drains it before the timer
+        assert_eq!(w.offer(1.0, 2), BatchDecision::CloseNow);
+        assert_eq!(w.close(), vec![1, 2]);
+        // window 2 opens at t=5
+        assert_eq!(w.offer(5.0, 3), BatchDecision::CloseAt(15.0));
+        // window 1's timer fires at t=10: stale, must be skipped
+        assert_ne!(timer1_epoch, w.epoch());
+        // window 2's own timer is current
+        assert_eq!(w.epoch(), 1);
+    }
+
+    #[test]
+    fn session_core_commits_accepted_prefix_plus_correction() {
+        let mut s = SessionCore::new(1, &[1, 10, 11], 6);
+        let fin = s.apply_verdict(&[20, 21, 22], 2, 30, false, false);
+        assert!(!fin);
+        assert_eq!(s.committed, vec![1, 10, 11, 20, 21, 30]);
+        assert_eq!((s.new_tokens, s.accepted, s.drafted, s.rounds), (3, 2, 3, 1));
+        // second round reaches max_new
+        let fin = s.apply_verdict(&[40, 41], 2, 42, false, false);
+        assert!(fin && s.done);
+        assert_eq!(s.new_tokens, 6);
+        assert!((s.acceptance() - 4.0 / 5.0).abs() < 1e-12);
+        let o = s.outcome();
+        assert_eq!(o.new_tokens, 6);
+        assert_eq!(o.accepted, 4);
+    }
+
+    #[test]
+    fn session_core_stops_on_eos_and_capacity() {
+        let mut s = SessionCore::new(1, &[1, 2], 100);
+        assert!(s.apply_verdict(&[5], 1, 2, true, false));
+        let mut s2 = SessionCore::new(2, &[1, 2], 100);
+        assert!(s2.apply_verdict(&[5], 1, 7, false, true));
+    }
+}

@@ -1,0 +1,528 @@
+//! The cloud-side verification service: session manager + cross-
+//! connection dynamic verification batcher, generalizing the window
+//! logic the simulator uses (`serve::session::BatchWindow`) to real
+//! concurrent connections.
+//!
+//! Split in two layers:
+//!
+//! * `VerifierCore` — pure, synchronous state machine (sessions, open
+//!   batch, backend, metrics). Unit-testable without threads or sockets;
+//!   time is an opaque `f64` ms parameter.
+//! * `VerifierHandle` — runs a `VerifierCore` on ONE dedicated OS thread
+//!   and exposes async message-passing methods to the tokio side. The
+//!   dedicated thread is not an implementation shortcut: the PJRT
+//!   backend (`EngineBackend`) holds thread-pinned `Rc` handles, so the
+//!   backend is *constructed inside* the thread via `make_backend` and
+//!   never crosses a thread boundary. Batch-window deadlines map to
+//!   `recv_timeout` on the command channel.
+
+use super::backend::VerifyBackend;
+use super::session::{BatchDecision, BatchWindow, SessionCore};
+use crate::metrics::ServingMetrics;
+use crate::protocol::{DraftMsg, VerifyMsg};
+use crate::util::rng::SplitMix64;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::mpsc as std_mpsc;
+use std::time::{Duration, Instant};
+use tokio::sync::oneshot;
+
+/// Verification service configuration (mirrors the simulator's
+/// `ServeConfig` batching knobs).
+#[derive(Debug, Clone)]
+pub struct VerifierConfig {
+    /// Batching window: how long the first request of a batch waits for
+    /// company before verification runs.
+    pub window_ms: f64,
+    /// Close the window immediately at this many requests.
+    pub max_batch: usize,
+    pub temperature: f32,
+    pub top_p: f32,
+    pub seed: u64,
+    /// End a session when fewer KV slots than this remain. MUST match
+    /// `coordinator::ServeConfig::capacity_floor` for sim ↔ serve
+    /// count equality.
+    pub capacity_floor: usize,
+}
+
+impl Default for VerifierConfig {
+    fn default() -> Self {
+        VerifierConfig {
+            window_ms: 12.0,
+            max_batch: 8,
+            temperature: 0.0,
+            top_p: 1.0,
+            seed: 1,
+            capacity_floor: 10,
+        }
+    }
+}
+
+/// Transport-agnostic cloud session/batching state machine.
+pub struct VerifierCore {
+    pub cfg: VerifierConfig,
+    backend: Box<dyn VerifyBackend>,
+    sessions: HashMap<u32, SessionCore>,
+    /// In-flight draft per session (protocol allows exactly one).
+    pending: HashMap<u32, DraftMsg>,
+    window: BatchWindow,
+    next_id: u32,
+    rng: SplitMix64,
+    pub metrics: ServingMetrics,
+}
+
+impl VerifierCore {
+    pub fn new(cfg: VerifierConfig, backend: Box<dyn VerifyBackend>) -> VerifierCore {
+        let window = BatchWindow::new(cfg.window_ms, cfg.max_batch);
+        let rng = SplitMix64::new(cfg.seed ^ 0x5E54_1CE5);
+        VerifierCore {
+            cfg,
+            backend,
+            sessions: HashMap::new(),
+            pending: HashMap::new(),
+            window,
+            next_id: 1,
+            rng,
+            metrics: ServingMetrics::default(),
+        }
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn backend_label(&self) -> String {
+        self.backend.label()
+    }
+
+    /// Open a new KV session; returns (assigned id, target version seq).
+    pub fn open_session(&mut self, prompt: &[i32], max_new: usize) -> Result<(u32, u64)> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.backend.start_session(id, prompt)?;
+        self.sessions
+            .insert(id, SessionCore::new(id, prompt, max_new));
+        self.metrics.sessions_opened += 1;
+        Ok((id, self.backend.version_seq()))
+    }
+
+    /// Queue one draft block for batched verification.
+    pub fn submit(&mut self, now_ms: f64, msg: DraftMsg) -> Result<BatchDecision> {
+        let id = msg.session;
+        if !self.sessions.contains_key(&id) {
+            bail!("no session {id}");
+        }
+        if self.pending.contains_key(&id) {
+            bail!("session {id} already has an in-flight draft (protocol violation)");
+        }
+        self.metrics.bytes_up += msg.air_bytes();
+        self.pending.insert(id, msg);
+        Ok(self.window.offer(now_ms, id))
+    }
+
+    /// Close the open window and verify its members as ONE batch
+    /// (one amortized T_base on a real accelerator). Sessions that
+    /// finish are torn down server-side; the verdict's `eos` flag tells
+    /// the edge to stop.
+    pub fn close_window(&mut self) -> Result<Vec<(u32, VerifyMsg)>> {
+        let members = self.window.close();
+        if members.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.metrics.note_batch(members.len());
+        let mut out = Vec::with_capacity(members.len());
+        for id in members {
+            // aborted mid-window (client disconnect): nothing pending
+            let Some(msg) = self.pending.remove(&id) else {
+                continue;
+            };
+            let Some(core) = self.sessions.get_mut(&id) else {
+                continue;
+            };
+            // Compact wire: full draft distributions never cross the
+            // air — the backend reconstructs them cloud-side (point
+            // mass / its own forward pass; see protocol module docs on
+            // the documented Regime-B approximation).
+            let v = self.backend.verify_block(
+                id,
+                &core.committed,
+                &msg.tokens,
+                &[],
+                msg.mode,
+                self.cfg.temperature,
+                self.cfg.top_p,
+                &mut self.rng,
+            )?;
+            let out_of_capacity =
+                self.backend.remaining_capacity(id) <= self.cfg.capacity_floor;
+            let finished =
+                core.apply_verdict(&msg.tokens, v.tau, v.correction, v.eos, out_of_capacity);
+            let vmsg = VerifyMsg {
+                session: id,
+                round: msg.round,
+                tau: v.tau as u8,
+                correction: v.correction,
+                eos: finished,
+            };
+            self.metrics.note_round(msg.tokens.len(), v.tau);
+            self.metrics.bytes_down += vmsg.air_bytes();
+            if finished {
+                self.metrics.finish_session(core);
+                self.backend.end_session(id);
+                self.sessions.remove(&id);
+            }
+            out.push((id, vmsg));
+        }
+        Ok(out)
+    }
+
+    /// Client went away: drop the session without counting completion.
+    pub fn abort_session(&mut self, id: u32) {
+        if self.sessions.remove(&id).is_some() {
+            self.pending.remove(&id);
+            self.backend.end_session(id);
+            self.metrics.sessions_aborted += 1;
+        }
+    }
+
+    /// Hot-swap the target version; live sessions keep their KV state.
+    pub fn deploy(&mut self, version: &str) -> Result<u64> {
+        let seq = self.backend.deploy(version)?;
+        self.metrics.hot_swaps += 1;
+        Ok(seq)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dedicated verifier thread + async handle
+// ---------------------------------------------------------------------
+
+enum VerifierCmd {
+    Open {
+        prompt: Vec<i32>,
+        max_new: usize,
+        reply: oneshot::Sender<Result<(u32, u64)>>,
+    },
+    Verify {
+        id: u32,
+        msg: DraftMsg,
+        reply: oneshot::Sender<Result<VerifyMsg>>,
+    },
+    End {
+        id: u32,
+    },
+    Deploy {
+        version: String,
+        reply: oneshot::Sender<Result<u64>>,
+    },
+    Stats {
+        reply: oneshot::Sender<ServingMetrics>,
+    },
+    RejectedHandshake,
+    Shutdown {
+        reply: oneshot::Sender<ServingMetrics>,
+    },
+}
+
+/// Cloneable async handle to the verifier thread. Dropping every handle
+/// shuts the thread down (command channel disconnect).
+#[derive(Clone)]
+pub struct VerifierHandle {
+    tx: std_mpsc::Sender<VerifierCmd>,
+}
+
+impl VerifierHandle {
+    /// Spawn the verifier thread. `make_backend` runs ON the new thread,
+    /// so `!Send` backends (PJRT) are constructed in place.
+    pub fn spawn(
+        cfg: VerifierConfig,
+        make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
+    ) -> Result<VerifierHandle> {
+        let (tx, rx) = std_mpsc::channel();
+        let (ready_tx, ready_rx) = std_mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("flexspec-verifier".into())
+            .spawn(move || {
+                let backend = match make_backend() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                run_verifier(VerifierCore::new(cfg, backend), rx);
+            })?;
+        ready_rx
+            .recv_timeout(Duration::from_secs(60))
+            .map_err(|_| anyhow!("verifier thread failed to start"))??;
+        Ok(VerifierHandle { tx })
+    }
+
+    fn post(&self, cmd: VerifierCmd) -> Result<()> {
+        self.tx
+            .send(cmd)
+            .map_err(|_| anyhow!("verifier thread is gone"))
+    }
+
+    pub async fn open(&self, prompt: Vec<i32>, max_new: usize) -> Result<(u32, u64)> {
+        let (reply, rx) = oneshot::channel();
+        self.post(VerifierCmd::Open {
+            prompt,
+            max_new,
+            reply,
+        })?;
+        rx.await.map_err(|_| anyhow!("verifier dropped the reply"))?
+    }
+
+    pub async fn verify(&self, id: u32, msg: DraftMsg) -> Result<VerifyMsg> {
+        let (reply, rx) = oneshot::channel();
+        self.post(VerifierCmd::Verify { id, msg, reply })?;
+        rx.await.map_err(|_| anyhow!("verifier dropped the reply"))?
+    }
+
+    /// Fire-and-forget session teardown (client disconnect path).
+    pub fn end(&self, id: u32) {
+        let _ = self.post(VerifierCmd::End { id });
+    }
+
+    pub fn note_rejected_handshake(&self) {
+        let _ = self.post(VerifierCmd::RejectedHandshake);
+    }
+
+    pub async fn deploy(&self, version: &str) -> Result<u64> {
+        let (reply, rx) = oneshot::channel();
+        self.post(VerifierCmd::Deploy {
+            version: version.to_string(),
+            reply,
+        })?;
+        rx.await.map_err(|_| anyhow!("verifier dropped the reply"))?
+    }
+
+    pub async fn stats(&self) -> Result<ServingMetrics> {
+        let (reply, rx) = oneshot::channel();
+        self.post(VerifierCmd::Stats { reply })?;
+        rx.await.map_err(|_| anyhow!("verifier dropped the reply"))
+    }
+
+    /// Flush the open batch, stop the thread, return final metrics.
+    pub async fn shutdown(&self) -> Result<ServingMetrics> {
+        let (reply, rx) = oneshot::channel();
+        self.post(VerifierCmd::Shutdown { reply })?;
+        rx.await.map_err(|_| anyhow!("verifier dropped the reply"))
+    }
+}
+
+fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
+    let start = Instant::now();
+    let now_ms = |start: &Instant| start.elapsed().as_secs_f64() * 1e3;
+    let mut replies: HashMap<u32, oneshot::Sender<Result<VerifyMsg>>> = HashMap::new();
+    let mut deadline: Option<f64> = None;
+
+    fn flush(
+        core: &mut VerifierCore,
+        replies: &mut HashMap<u32, oneshot::Sender<Result<VerifyMsg>>>,
+    ) {
+        match core.close_window() {
+            Ok(results) => {
+                for (id, vmsg) in results {
+                    if let Some(tx) = replies.remove(&id) {
+                        let _ = tx.send(Ok(vmsg));
+                    }
+                }
+            }
+            Err(e) => {
+                // a backend failure poisons the whole batch: every waiter
+                // gets the error and the connection layer tears down
+                let msg = format!("batch verification failed: {e:#}");
+                for (_, tx) in replies.drain() {
+                    let _ = tx.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+
+    loop {
+        // A queued command beats a zero timeout in recv_timeout, so an
+        // expired window must be flushed HERE — not only in the Timeout
+        // arm — or a busy command stream could hold it open forever.
+        if let Some(d) = deadline {
+            if now_ms(&start) >= d {
+                deadline = None;
+                flush(&mut core, &mut replies);
+            }
+        }
+        let timeout = match deadline {
+            Some(d) => Duration::from_secs_f64(((d - now_ms(&start)) / 1e3).max(0.0)),
+            None => Duration::from_millis(200),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(VerifierCmd::Open {
+                prompt,
+                max_new,
+                reply,
+            }) => {
+                let _ = reply.send(core.open_session(&prompt, max_new));
+            }
+            Ok(VerifierCmd::Verify { id, msg, reply }) => {
+                match core.submit(now_ms(&start), msg) {
+                    Ok(decision) => {
+                        replies.insert(id, reply);
+                        match decision {
+                            BatchDecision::CloseNow => {
+                                deadline = None;
+                                flush(&mut core, &mut replies);
+                            }
+                            BatchDecision::CloseAt(t) => deadline = Some(t),
+                            BatchDecision::Queued => {}
+                        }
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                }
+            }
+            Ok(VerifierCmd::End { id }) => core.abort_session(id),
+            Ok(VerifierCmd::Deploy { version, reply }) => {
+                let _ = reply.send(core.deploy(&version));
+            }
+            Ok(VerifierCmd::Stats { reply }) => {
+                let _ = reply.send(core.metrics.clone());
+            }
+            Ok(VerifierCmd::RejectedHandshake) => {
+                core.metrics.handshakes_rejected += 1;
+            }
+            Ok(VerifierCmd::Shutdown { reply }) => {
+                deadline = None;
+                flush(&mut core, &mut replies);
+                let _ = reply.send(core.metrics.clone());
+                return;
+            }
+            // expiry handled at the top of the loop
+            Err(std_mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std_mpsc::RecvTimeoutError::Disconnected) => {
+                flush(&mut core, &mut replies);
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{VerifyMode, WireFormat};
+    use crate::serve::backend::{SyntheticDraft, SyntheticTarget};
+    use crate::coordinator::edge::DraftSource;
+
+    fn core(window_ms: f64, max_batch: usize) -> VerifierCore {
+        let cfg = VerifierConfig {
+            window_ms,
+            max_batch,
+            ..Default::default()
+        };
+        VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)))
+    }
+
+    fn draft_for(id: u32, round: u32, committed: &[i32], k: usize) -> DraftMsg {
+        let mut d = SyntheticDraft::new(7);
+        let mut rng = SplitMix64::new(0);
+        let p = d.propose(committed, k, 0.0, 1.0, &mut rng).unwrap();
+        DraftMsg {
+            session: id,
+            round,
+            tokens: p.tokens,
+            chosen_probs: p.chosen_probs,
+            mode: VerifyMode::Greedy,
+            wire: WireFormat::Compact,
+        }
+    }
+
+    #[test]
+    fn batches_verify_and_complete_sessions() {
+        let mut c = core(10.0, 8);
+        let prompt_a = vec![1, 70, 71];
+        let prompt_b = vec![1, 80, 81];
+        let (a, seq) = c.open_session(&prompt_a, 8).unwrap();
+        let (b, _) = c.open_session(&prompt_b, 8).unwrap();
+        assert_eq!((a, b, seq), (1, 2, 1));
+
+        let mut committed_a = prompt_a.clone();
+        let mut committed_b = prompt_b.clone();
+        let mut finished = 0;
+        let mut round = 0u32;
+        while finished < 2 && round < 20 {
+            if !c.sessions.contains_key(&a) && !c.sessions.contains_key(&b) {
+                break;
+            }
+            for (&id, committed) in [(&a, &mut committed_a), (&b, &mut committed_b)] {
+                if !c.sessions.contains_key(&id) {
+                    continue;
+                }
+                let msg = draft_for(id, round, committed, 4);
+                c.submit(round as f64, msg).unwrap();
+            }
+            for (id, vmsg) in c.close_window().unwrap() {
+                let committed = if id == a { &mut committed_a } else { &mut committed_b };
+                let msg_tokens = draft_for(id, round, committed, 4).tokens;
+                committed.extend_from_slice(&msg_tokens[..vmsg.tau as usize]);
+                committed.push(vmsg.correction);
+                if vmsg.eos {
+                    finished += 1;
+                }
+            }
+            round += 1;
+        }
+        assert_eq!(finished, 2);
+        assert_eq!(c.metrics.sessions_completed, 2);
+        assert!(c.metrics.batches >= 2);
+        assert!(c.metrics.mean_batch() > 1.0, "batched both sessions");
+        assert_eq!(c.active_sessions(), 0);
+        // zero drift synthetic target: everything accepted
+        assert_eq!(c.metrics.accepted, c.metrics.drafted);
+    }
+
+    #[test]
+    fn duplicate_inflight_draft_is_rejected() {
+        let mut c = core(10.0, 8);
+        let prompt = vec![1, 70, 71];
+        let (id, _) = c.open_session(&prompt, 8).unwrap();
+        c.submit(0.0, draft_for(id, 0, &prompt, 2)).unwrap();
+        assert!(c.submit(0.1, draft_for(id, 0, &prompt, 2)).is_err());
+    }
+
+    #[test]
+    fn abort_mid_window_skips_member() {
+        let mut c = core(10.0, 8);
+        let pa = vec![1, 70, 71];
+        let pb = vec![1, 80, 81];
+        let (a, _) = c.open_session(&pa, 8).unwrap();
+        let (b, _) = c.open_session(&pb, 8).unwrap();
+        c.submit(0.0, draft_for(a, 0, &pa, 2)).unwrap();
+        c.submit(0.0, draft_for(b, 0, &pb, 2)).unwrap();
+        c.abort_session(a);
+        let out = c.close_window().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, b);
+        assert_eq!(c.metrics.sessions_aborted, 1);
+    }
+
+    #[test]
+    fn deploy_counts_hot_swap_and_keeps_sessions() {
+        let cfg = VerifierConfig::default();
+        let backend = SyntheticTarget::new(7).with_version("evolved", 0.3);
+        let mut c = VerifierCore::new(cfg, Box::new(backend));
+        let prompt = vec![1, 70, 71];
+        let (id, seq1) = c.open_session(&prompt, 64).unwrap();
+        let seq2 = c.deploy("evolved").unwrap();
+        assert!(seq2 > seq1);
+        assert_eq!(c.metrics.hot_swaps, 1);
+        // the session survives and keeps decoding on the new version
+        c.submit(0.0, draft_for(id, 0, &prompt, 4)).unwrap();
+        let out = c.close_window().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(c.active_sessions(), 1);
+    }
+}

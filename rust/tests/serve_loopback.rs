@@ -1,0 +1,285 @@
+//! Serving-stack integration tests: loopback + TCP transports against
+//! the deterministic synthetic backend (no artifacts needed — these run
+//! everywhere, unlike the artifact-gated PJRT tests).
+//!
+//! The headline property: the loopback serving path (real server code,
+//! real frames, real concurrency — just no socket) commits EXACTLY the
+//! per-session token counts the virtual-clock scheduler simulation
+//! commits for the same seed and a fixed stride.
+
+use anyhow::Result;
+use flexspec::channel::{NetworkKind, NetworkProfile};
+use flexspec::coordinator::{serve_with, DraftSource, ServeConfig};
+use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::protocol::frame::{Frame, FrameKind, Hello, HelloAck, WIRE_VERSION};
+use flexspec::protocol::VerifyMode;
+use flexspec::serve::{
+    loopback_pair, run_edge_session, serve_cloud, serve_loopback, EdgeReport, EdgeSessionConfig,
+    SyntheticDraft, SyntheticTarget, TcpTransport, Transport, VerifierConfig, VerifyBackend,
+};
+
+const SEED: u64 = 23;
+
+fn rt() -> tokio::runtime::Runtime {
+    tokio::runtime::Builder::new_multi_thread()
+        .worker_threads(2)
+        .enable_all()
+        .build()
+        .unwrap()
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![1i32];
+            for j in 0..5 {
+                p.push(100 + ((i * 11 + j * 3) % 100) as i32);
+            }
+            p
+        })
+        .collect()
+}
+
+/// A target that has evolved away from the frozen draft (drift 0.3), so
+/// tau genuinely varies round to round — the determinism check is not
+/// trivially satisfied by accept-everything.
+fn evolved_target() -> Result<SyntheticTarget> {
+    let mut t = SyntheticTarget::new(SEED).with_version("evolved", 0.3);
+    t.deploy("evolved")?;
+    Ok(t)
+}
+
+#[test]
+fn loopback_reproduces_scheduler_simulation_counts() {
+    const USERS: usize = 4;
+    const MAX_NEW: usize = 20;
+
+    // --- virtual-clock simulation ------------------------------------
+    let cfg = ServeConfig {
+        users: USERS,
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed: SEED,
+        ..Default::default()
+    };
+    let mut backend = evolved_target().unwrap();
+    let mut make =
+        |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(SEED))) };
+    let sim = serve_with(
+        &mut backend,
+        &mut make,
+        &prompts(USERS),
+        &JETSON_ORIN,
+        &A800_70B,
+        &NetworkProfile::new(NetworkKind::FourG),
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(sim.completed, USERS);
+    assert_eq!(sim.per_session.len(), USERS);
+    let sim_accepted: usize = sim.per_session.iter().map(|o| o.accepted).sum();
+    let sim_drafted: usize = sim.per_session.iter().map(|o| o.drafted).sum();
+    assert!(
+        sim_accepted > 0 && sim_accepted < sim_drafted,
+        "drifted target must partially accept ({sim_accepted}/{sim_drafted})"
+    );
+
+    // --- the same protocol over loopback transports ------------------
+    let (reports, metrics) = rt()
+        .block_on(async {
+            let vcfg = VerifierConfig {
+                seed: SEED,
+                ..Default::default()
+            };
+            let edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>)> = prompts(USERS)
+                .into_iter()
+                .map(|p| {
+                    (
+                        Box::new(SyntheticDraft::new(SEED)) as Box<dyn DraftSource + Send>,
+                        p,
+                    )
+                })
+                .collect();
+            let ecfg = EdgeSessionConfig {
+                max_new: MAX_NEW,
+                fixed_k: Some(4),
+                seed: SEED,
+                ..Default::default()
+            };
+            serve_loopback(
+                vcfg,
+                || Ok(Box::new(evolved_target()?) as Box<dyn VerifyBackend>),
+                edges,
+                ecfg,
+            )
+            .await
+        })
+        .unwrap();
+
+    assert_eq!(metrics.sessions_completed, USERS);
+    // reports come back in prompt order; sim.per_session is sorted by
+    // session id == prompt order
+    for (i, (lr, so)) in reports.iter().zip(&sim.per_session).enumerate() {
+        assert_eq!(lr.new_tokens, so.new_tokens, "tokens diverged (prompt {i})");
+        assert_eq!(lr.accepted, so.accepted, "accepted diverged (prompt {i})");
+        assert_eq!(lr.drafted, so.drafted, "drafted diverged (prompt {i})");
+        assert_eq!(lr.rounds, so.rounds, "rounds diverged (prompt {i})");
+    }
+    assert_eq!(metrics.accepted, sim_accepted);
+    assert_eq!(metrics.drafted, sim_drafted);
+}
+
+#[test]
+fn tcp_serving_completes_sessions_and_survives_hot_swap() {
+    const USERS: usize = 4;
+    rt().block_on(async {
+        let vcfg = VerifierConfig {
+            window_ms: 5.0,
+            seed: SEED,
+            ..Default::default()
+        };
+        let handle = serve_cloud("127.0.0.1:0", vcfg, || {
+            Ok(Box::new(SyntheticTarget::new(SEED).with_version("evolved", 0.5))
+                as Box<dyn VerifyBackend>)
+        })
+        .await
+        .unwrap();
+        let addr = handle.addr.to_string();
+
+        let mut threads = Vec::new();
+        for prompt in prompts(USERS) {
+            let addr = addr.clone();
+            threads.push(std::thread::spawn(move || -> Result<EdgeReport> {
+                let rt = tokio::runtime::Builder::new_current_thread()
+                    .enable_all()
+                    .build()?;
+                rt.block_on(async move {
+                    let mut t = TcpTransport::connect(&addr).await?;
+                    let mut draft = SyntheticDraft::new(SEED);
+                    let ecfg = EdgeSessionConfig {
+                        max_new: 24,
+                        seed: SEED,
+                        ..Default::default()
+                    };
+                    run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+                })
+            }));
+        }
+
+        // hot-swap while sessions are (or were just) in flight
+        loop {
+            tokio::time::sleep(std::time::Duration::from_millis(2)).await;
+            if handle.stats().await.unwrap().sessions_opened >= 2 {
+                break;
+            }
+        }
+        let seq = handle.deploy("evolved").await.unwrap();
+        assert_eq!(seq, 2);
+
+        let reports: Vec<EdgeReport> = tokio::task::spawn_blocking(move || {
+            threads
+                .into_iter()
+                .map(|t| t.join().expect("edge thread panicked"))
+                .collect::<Result<Vec<_>>>()
+        })
+        .await
+        .unwrap()
+        .unwrap();
+
+        let metrics = handle.shutdown().await.unwrap();
+        assert_eq!(metrics.sessions_completed, USERS);
+        assert_eq!(metrics.sessions_aborted, 0);
+        assert_eq!(metrics.hot_swaps, 1);
+        assert_eq!(
+            metrics.tokens_committed,
+            reports.iter().map(|r| r.new_tokens).sum::<usize>()
+        );
+        for r in &reports {
+            assert!(r.new_tokens >= 24, "session {} under-generated", r.session);
+            assert!(r.rtt_ms.count() == r.rounds);
+        }
+    });
+}
+
+#[test]
+fn cross_connection_batching_amortizes_windows() {
+    const USERS: usize = 4;
+    let (_reports, metrics) = rt()
+        .block_on(async {
+            // generous window + max_batch == USERS: lockstep rounds land
+            // in shared batches
+            let vcfg = VerifierConfig {
+                window_ms: 100.0,
+                max_batch: USERS,
+                seed: SEED,
+                ..Default::default()
+            };
+            let edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>)> = prompts(USERS)
+                .into_iter()
+                .map(|p| {
+                    (
+                        Box::new(SyntheticDraft::new(SEED)) as Box<dyn DraftSource + Send>,
+                        p,
+                    )
+                })
+                .collect();
+            let ecfg = EdgeSessionConfig {
+                max_new: 15,
+                fixed_k: Some(4),
+                seed: SEED,
+                ..Default::default()
+            };
+            serve_loopback(
+                vcfg,
+                || Ok(Box::new(SyntheticTarget::new(SEED)) as Box<dyn VerifyBackend>),
+                edges,
+                ecfg,
+            )
+            .await
+        })
+        .unwrap();
+    assert!(
+        metrics.mean_batch() > 1.5,
+        "expected cross-connection batches, got occupancy {}",
+        metrics.mean_batch()
+    );
+    assert!(metrics.batches < metrics.rounds, "batching must merge rounds");
+}
+
+#[test]
+fn wire_version_mismatch_is_rejected() {
+    rt().block_on(async {
+        let verifier = flexspec::serve::VerifierHandle::spawn(
+            VerifierConfig::default(),
+            || Ok(Box::new(SyntheticTarget::new(1)) as Box<dyn VerifyBackend>),
+        )
+        .unwrap();
+        let (mut edge, cloud) = loopback_pair();
+        let v = verifier.clone();
+        let server = tokio::spawn(async move {
+            flexspec::serve::handle_conn(cloud, v).await
+        });
+
+        let bad_hello = Hello {
+            wire_version: WIRE_VERSION + 1,
+            mode: VerifyMode::Greedy,
+            k_max: 8,
+        };
+        edge.send_frame(Frame::new(FrameKind::Hello, bad_hello.encode()))
+            .await
+            .unwrap();
+        let f = edge.recv_frame().await.unwrap().unwrap();
+        assert_eq!(f.kind, FrameKind::HelloAck);
+        let ack = HelloAck::decode(&f.payload).unwrap();
+        assert!(!ack.accepted);
+        assert!(ack.reason.contains("mismatch"));
+        assert_eq!(ack.wire_version, WIRE_VERSION);
+        // server closes the connection after rejecting
+        assert!(edge.recv_frame().await.unwrap().is_none());
+        server.await.unwrap().unwrap();
+        let stats = verifier.stats().await.unwrap();
+        assert_eq!(stats.handshakes_rejected, 1);
+        assert_eq!(stats.sessions_opened, 0);
+        verifier.shutdown().await.unwrap();
+    });
+}
