@@ -15,14 +15,24 @@
 //! simulation commits for the same seed and a fixed stride K=4. No
 //! artifacts needed: both sides run the deterministic synthetic
 //! draft/target pair.
+//!
+//! Part 3 — MULTIPLEXING: the same five sessions over ONE TCP
+//! connection (stream ids + edge-side mux), committing the same token
+//! counts as part 2 — N sessions on one socket batch and decode exactly
+//! like N sockets.
+//!
+//! Part 4 — FAULTS: a seeded `FaultTransport` kills the link mid-round;
+//! the edge reconnects, replays the resume handshake, and the committed
+//! sequences come out bit-identical to the fault-free run.
 
 use anyhow::Result;
 use flexspec::channel::{NetworkKind, NetworkProfile};
 use flexspec::coordinator::{serve_with, DraftSource, ServeConfig};
 use flexspec::devices::{A800_70B, JETSON_ORIN};
 use flexspec::serve::{
-    run_edge_session, serve_cloud, serve_loopback, EdgeReport, EdgeSessionConfig, SyntheticDraft,
-    SyntheticTarget, TcpTransport, VerifierConfig, VerifyBackend,
+    loopback_fault_dial, run_edge_session, run_session_on, serve_cloud, serve_loopback,
+    serve_loopback_mux, EdgeMux, EdgeReport, EdgeSessionConfig, FaultConfig, FaultPlan, FaultSide,
+    SyntheticDraft, SyntheticTarget, TcpTransport, VerifierConfig, VerifyBackend,
 };
 
 const SEED: u64 = 7;
@@ -183,6 +193,134 @@ fn main() -> Result<()> {
         SESSIONS,
         sim.tokens,
         loop_metrics.acceptance_rate()
+    );
+
+    // ---- part 3: five sessions multiplexed over ONE TCP connection --
+    println!("\n== part 3: {SESSIONS} sessions multiplexed over one TCP connection ==");
+    let (mux_reports, mux_metrics) = rt.block_on(async {
+        let vcfg = VerifierConfig {
+            seed: SEED,
+            ..Default::default()
+        };
+        let handle = serve_cloud("127.0.0.1:0", vcfg, || {
+            Ok(Box::new(SyntheticTarget::new(SEED)) as Box<dyn VerifyBackend>)
+        })
+        .await?;
+        let addr = handle.addr.to_string();
+        let ecfg = EdgeSessionConfig {
+            max_new: MAX_NEW,
+            fixed_k: Some(4),
+            seed: SEED,
+            ..Default::default()
+        };
+        let initial = TcpTransport::connect(&addr).await?;
+        let mut mux = EdgeMux::connect(Box::new(initial), None, &ecfg).await?;
+        let mut tasks = Vec::new();
+        for prompt in prompts(SESSIONS) {
+            let mut stream = mux.open_stream();
+            let ecfg = ecfg.clone();
+            tasks.push(tokio::spawn(async move {
+                let sid = stream.stream_id();
+                let mut draft = SyntheticDraft::new(SEED);
+                run_session_on(&mut stream, sid, &mut draft, &prompt, &ecfg).await
+            }));
+        }
+        let mut reports: Vec<EdgeReport> = Vec::new();
+        for t in tasks {
+            reports.push(t.await.expect("mux session task panicked")?);
+        }
+        drop(mux);
+        let metrics = handle.shutdown().await?;
+        Ok::<_, anyhow::Error>((reports, metrics))
+    })?;
+    println!("{}", mux_metrics.render("muxed TCP serving totals"));
+    for (i, (mr, so)) in mux_reports.iter().zip(&sim.per_session).enumerate() {
+        assert_eq!(mr.new_tokens, so.new_tokens, "mux tokens diverged (prompt {i})");
+        assert_eq!(mr.rounds, so.rounds, "mux rounds diverged (prompt {i})");
+    }
+    println!(
+        "one connection, {} streams: token counts identical to part 2 and the simulator",
+        SESSIONS
+    );
+
+    // ---- part 4: seeded link faults + reconnect-and-resume ----------
+    println!("\n== part 4: forced disconnects + resume (loopback, seeded) ==");
+    let fault_free = rt.block_on(async {
+        let vcfg = VerifierConfig {
+            seed: SEED,
+            ..Default::default()
+        };
+        let edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>)> = prompts(SESSIONS)
+            .into_iter()
+            .map(|p| (Box::new(SyntheticDraft::new(SEED)) as Box<dyn DraftSource + Send>, p))
+            .collect();
+        let ecfg = EdgeSessionConfig {
+            max_new: MAX_NEW,
+            fixed_k: Some(4),
+            seed: SEED,
+            ..Default::default()
+        };
+        serve_loopback_mux(
+            vcfg,
+            || Ok(Box::new(SyntheticTarget::new(SEED)) as Box<dyn VerifyBackend>),
+            edges,
+            ecfg,
+        )
+        .await
+    })?;
+
+    let faulty_reports = rt.block_on(async {
+        let verifier = flexspec::serve::VerifierHandle::spawn(
+            VerifierConfig {
+                seed: SEED,
+                ..Default::default()
+            },
+            || Ok(Box::new(SyntheticTarget::new(SEED)) as Box<dyn VerifyBackend>),
+        )?;
+        let mut tasks = Vec::new();
+        for (i, prompt) in prompts(SESSIONS).into_iter().enumerate() {
+            let plan = FaultPlan::shared(
+                FaultConfig {
+                    seed: SEED + i as u64,
+                    max_disconnects: 1,
+                    disconnect_gap: (5, 10),
+                    disconnect_on: FaultSide::Any,
+                    ..Default::default()
+                },
+                NetworkProfile::new(NetworkKind::FourG).channel(SEED + i as u64),
+            );
+            let dial = loopback_fault_dial(verifier.clone(), plan);
+            let ecfg = EdgeSessionConfig {
+                max_new: MAX_NEW,
+                fixed_k: Some(4),
+                seed: SEED,
+                max_reattach: 16,
+                ..Default::default()
+            };
+            tasks.push(tokio::spawn(async move {
+                let mut t = flexspec::serve::ResumableTransport::connect(dial, &ecfg).await?;
+                let mut draft = SyntheticDraft::new(SEED);
+                run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+            }));
+        }
+        let mut reports: Vec<EdgeReport> = Vec::new();
+        for t in tasks {
+            reports.push(t.await.expect("faulty session task panicked")?);
+        }
+        let metrics = verifier.shutdown().await?;
+        println!("{}", metrics.render("fault-injected serving totals"));
+        Ok::<_, anyhow::Error>(reports)
+    })?;
+    let total_resumes: usize = faulty_reports.iter().map(|r| r.resumes).sum();
+    for (i, (fr, clean)) in faulty_reports.iter().zip(&fault_free.0).enumerate() {
+        assert_eq!(
+            fr.committed, clean.committed,
+            "fault-injected committed sequence diverged (prompt {i})"
+        );
+    }
+    println!(
+        "{} forced disconnects survived; committed sequences bit-identical to the fault-free run",
+        total_resumes
     );
     Ok(())
 }

@@ -85,9 +85,9 @@ fn main() -> anyhow::Result<()> {
         .collect();
     for (i, &k) in ks.iter().enumerate() {
         let fmsg = &frame_msgs[i];
-        let nbytes = Frame::new(FrameKind::Draft, fmsg.encode()).encode().len();
+        let nbytes = Frame::on(1, FrameKind::Draft, fmsg.encode()).encode().len();
         gf.add(&format!("draft frame roundtrip K={k} ({nbytes} B/frame)"), || {
-            let f = Frame::new(FrameKind::Draft, black_box(fmsg).encode());
+            let f = Frame::on(1, FrameKind::Draft, black_box(fmsg).encode());
             let b = f.encode();
             let mut dec = FrameDecoder::new();
             dec.push(&b);
@@ -96,7 +96,7 @@ fn main() -> anyhow::Result<()> {
         });
     }
     for (i, r) in gf.results.iter().enumerate() {
-        let nbytes = Frame::new(FrameKind::Draft, frame_msgs[i].encode())
+        let nbytes = Frame::on(1, FrameKind::Draft, frame_msgs[i].encode())
             .encode()
             .len();
         println!(

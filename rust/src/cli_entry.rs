@@ -10,22 +10,27 @@
 //!   trace <5g|4g|wifi> <out.csv> [--samples N]
 
 use crate::channel::{ChannelTrace, NetworkKind, NetworkProfile};
+use crate::coordinator::edge::DraftSource;
 use crate::coordinator::{serve, CloudEngine, ServeConfig};
 use crate::devices::{A800_70B, JETSON_ORIN};
 use crate::experiments::Ctx;
+use crate::serve::transport::BoxFuture;
 use crate::serve::{
-    run_edge_session, serve_cloud, EdgeSessionConfig, EngineBackend, SyntheticDraft,
-    SyntheticTarget, TcpTransport, VerifierConfig, VerifyBackend,
+    run_edge_session, run_session_on, serve_cloud, EdgeMux, EdgeReport, EdgeSessionConfig,
+    EngineBackend, FaultConfig, FaultPlan, Reconnect, ResumableTransport, SyntheticDraft,
+    SyntheticTarget, TcpTransport, Transport, VerifierConfig, VerifyBackend,
 };
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 const VALUE_OPTS: &[&str] = &[
     "requests", "seed", "report", "users", "network", "window", "max-batch",
     "max-new", "dataset", "samples", "arrival-ms", "artifacts",
     "bind", "addr", "backend", "sessions", "k", "draft", "version",
-    "deploy-version", "deploy-after",
+    "deploy-version", "deploy-after", "resume-grace", "fault-seed",
+    "fault-disconnects",
 ];
 
 pub fn cli_main() -> Result<()> {
@@ -59,9 +64,10 @@ pub fn cli_main() -> Result<()> {
                  \x20 flexspec serve [--users N] [--network 5g|4g|wifi] [--window MS]\n\
                  \x20 flexspec serve-cloud [--bind 127.0.0.1:7411] [--backend synthetic|engine]\n\
                  \x20\x20\x20\x20 [--sessions N] [--window MS] [--max-batch N] [--seed S]\n\
-                 \x20\x20\x20\x20 [--deploy-version NAME --deploy-after N]\n\
+                 \x20\x20\x20\x20 [--resume-grace MS] [--deploy-version NAME --deploy-after N]\n\
                  \x20 flexspec serve-edge [--addr 127.0.0.1:7411] [--sessions N] [--max-new N]\n\
                  \x20\x20\x20\x20 [--draft synthetic|pld] [--k K|0=adaptive] [--seed S]\n\
+                 \x20\x20\x20\x20 [--mux] [--fault-seed S] [--fault-disconnects N]\n\
                  \x20 flexspec trace <5g|4g|wifi> <out.csv> [--samples N]\n\
                  Run `make artifacts` first to build the AOT model zoo."
             );
@@ -169,6 +175,7 @@ fn serve_cloud_cmd(args: &Args) -> Result<()> {
         window_ms: args.get_f64("window", 12.0),
         max_batch: args.get_usize("max-batch", 8),
         seed,
+        resume_grace_ms: args.get_f64("resume-grace", 10_000.0),
         ..Default::default()
     };
     let sessions_target = args.get_usize("sessions", 0);
@@ -251,14 +258,58 @@ fn synthetic_fleet(seed: u64) -> SyntheticTarget {
         .with_version("code_full", 0.5)
 }
 
+fn make_edge_draft(kind: &str, seed: u64) -> Result<Box<dyn DraftSource + Send>> {
+    match kind {
+        "synthetic" => Ok(Box::new(SyntheticDraft::new(seed))),
+        "pld" => Ok(Box::new(crate::coordinator::PromptLookup::pld(3))),
+        other => bail!("unknown --draft '{other}' (synthetic|pld)"),
+    }
+}
+
+/// A `Reconnect` factory dialing TCP, optionally wrapping every fresh
+/// connection in a `FaultTransport` over the shared plan.
+fn tcp_dial(addr: String, plan: Option<Arc<Mutex<FaultPlan>>>) -> Box<dyn Reconnect> {
+    Box::new(move || -> BoxFuture<'static, Result<Box<dyn Transport>>> {
+        let addr = addr.clone();
+        let plan = plan.clone();
+        Box::pin(async move {
+            let t = TcpTransport::connect(&addr).await?;
+            Ok(match plan {
+                Some(p) => Box::new(crate::serve::FaultTransport::new(Box::new(t), p))
+                    as Box<dyn Transport>,
+                None => Box::new(t) as Box<dyn Transport>,
+            })
+        })
+    })
+}
+
+fn fault_plan_for(fault_seed: u64, disconnects: usize, salt: u64) -> Arc<Mutex<FaultPlan>> {
+    let seed = fault_seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    FaultPlan::shared(
+        FaultConfig {
+            seed,
+            max_disconnects: disconnects,
+            ..Default::default()
+        },
+        NetworkProfile::new(NetworkKind::FourG).channel(seed),
+    )
+}
+
 /// `serve-edge`: run N concurrent edge sessions against a cloud server.
-/// Each session runs on its own OS thread with a current-thread tokio
-/// runtime — the shape a fleet of independent edge devices has.
+/// By default each session dials its own connection on its own OS
+/// thread (the shape a fleet of independent edge devices has); with
+/// `--mux` all N sessions are MULTIPLEXED over one connection. With
+/// `--fault-seed` every connection is wrapped in a seeded
+/// `FaultTransport` (forced disconnects + reconnect-and-resume), which
+/// demos the resume path against a live server.
 fn serve_edge_cmd(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7411");
     let n = args.get_usize("sessions", 4);
     let seed = args.get_u64("seed", 1);
     let k = args.get_usize("k", 0);
+    let mux = args.flag("mux");
+    let fault_seed = args.get_u64("fault-seed", 0); // 0 = no faults
+    let fault_disconnects = args.get_usize("fault-disconnects", 1);
     let draft_kind = args.get_or("draft", "synthetic");
     if !matches!(draft_kind.as_str(), "synthetic" | "pld") {
         bail!("unknown --draft '{draft_kind}' (synthetic|pld)");
@@ -272,59 +323,92 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
         ..Default::default()
     };
 
-    let mut threads = Vec::new();
-    for i in 0..n {
-        let prompt = gen.next_request().prompt;
-        let addr = addr.clone();
-        let ecfg = ecfg.clone();
-        let draft_kind = draft_kind.clone();
-        threads.push(std::thread::spawn(move || -> Result<crate::serve::EdgeReport> {
-            let rt = tokio::runtime::Builder::new_current_thread()
-                .enable_all()
-                .build()?;
-            rt.block_on(async move {
-                let mut t = TcpTransport::connect(&addr).await?;
-                match draft_kind.as_str() {
-                    "synthetic" => {
-                        let mut draft = SyntheticDraft::new(ecfg.seed);
-                        run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
-                    }
-                    "pld" => {
-                        let mut draft = crate::coordinator::PromptLookup::pld(3);
-                        run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
-                    }
-                    // validated before spawning; kept for exhaustiveness
-                    other => bail!("unknown --draft '{other}' [session {i}]"),
-                }
+    let results: Vec<Result<EdgeReport>> = if mux {
+        // one connection, N streams, session tasks on a shared runtime
+        let rt = tokio::runtime::Builder::new_multi_thread()
+            .worker_threads(2)
+            .enable_all()
+            .build()?;
+        rt.block_on(async {
+            let plan = (fault_seed != 0).then(|| fault_plan_for(fault_seed, fault_disconnects, 0));
+            let mut dial = tcp_dial(addr.clone(), plan);
+            let initial = dial.connect().await?;
+            let mut emux = EdgeMux::connect(initial, Some(dial), &ecfg).await?;
+            let mut tasks = Vec::new();
+            for _ in 0..n {
+                let prompt = gen.next_request().prompt;
+                let mut stream = emux.open_stream();
+                let ecfg = ecfg.clone();
+                let dk = draft_kind.clone();
+                tasks.push(tokio::spawn(async move {
+                    let sid = stream.stream_id();
+                    let mut draft = make_edge_draft(&dk, ecfg.seed)?;
+                    run_session_on(&mut stream, sid, draft.as_mut(), &prompt, &ecfg).await
+                }));
+            }
+            let mut out = Vec::new();
+            for t in tasks {
+                out.push(match t.await {
+                    Ok(r) => r,
+                    Err(e) => Err(anyhow::anyhow!("session task panicked: {e}")),
+                });
+            }
+            Ok::<_, anyhow::Error>(out)
+        })?
+    } else {
+        // one connection per session, one OS thread each
+        let mut threads = Vec::new();
+        for i in 0..n {
+            let prompt = gen.next_request().prompt;
+            let addr = addr.clone();
+            let ecfg = ecfg.clone();
+            let dk = draft_kind.clone();
+            let plan =
+                (fault_seed != 0).then(|| fault_plan_for(fault_seed, fault_disconnects, 1 + i as u64));
+            threads.push(std::thread::spawn(move || -> Result<EdgeReport> {
+                let rt = tokio::runtime::Builder::new_current_thread()
+                    .enable_all()
+                    .build()?;
+                rt.block_on(async move {
+                    let mut draft = make_edge_draft(&dk, ecfg.seed)?;
+                    let mut t =
+                        ResumableTransport::connect(tcp_dial(addr, plan), &ecfg).await?;
+                    run_edge_session(&mut t, draft.as_mut(), &prompt, &ecfg).await
+                })
+            }));
+        }
+        threads
+            .into_iter()
+            .map(|th| match th.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("edge session thread panicked")),
             })
-        }));
-    }
+            .collect()
+    };
 
+    let mode = if mux { "1 muxed conn" } else { "1 conn/session" };
     let mut table = crate::util::table::Table::new(
-        &format!("edge sessions vs {addr} ({draft_kind} draft)"),
-        &["session", "tokens", "rounds", "accept", "mean K", "rtt p50 ms", "wall ms"],
+        &format!("edge sessions vs {addr} ({draft_kind} draft, {mode})"),
+        &["session", "tokens", "rounds", "accept", "mean K", "resumes", "rtt p50 ms", "wall ms"],
     );
     let mut failures = 0usize;
-    for th in threads {
-        match th.join() {
-            Ok(Ok(r)) => {
+    for res in results {
+        match res {
+            Ok(r) => {
                 table.row(vec![
                     r.session.to_string(),
                     r.new_tokens.to_string(),
                     r.rounds.to_string(),
                     format!("{:.2}", r.acceptance()),
                     format!("{:.1}", r.k_used.mean()),
+                    r.resumes.to_string(),
                     format!("{:.2}", r.rtt_ms.p50()),
                     format!("{:.0}", r.wall_ms),
                 ]);
             }
-            Ok(Err(e)) => {
+            Err(e) => {
                 failures += 1;
                 eprintln!("edge session failed: {e:#}");
-            }
-            Err(_) => {
-                failures += 1;
-                eprintln!("edge session thread panicked");
             }
         }
     }

@@ -139,6 +139,10 @@ pub struct ServeReport {
     /// Per-session final counters, in prompt order (for cross-checking
     /// against loopback/TCP serving runs).
     pub per_session: Vec<SessionOutcome>,
+    /// Per-session committed sequences (prompt + generated), aligned
+    /// with `per_session` — the reference trajectory the fault-injection
+    /// serving tests compare reconnect-and-resume runs against.
+    pub per_session_committed: Vec<Vec<i32>>,
 }
 
 impl ServeReport {
@@ -332,6 +336,11 @@ pub fn serve_with(
         report.mean_batch /= report.batches as f64;
     }
     report.per_session.sort_by_key(|o| o.id);
+    report.per_session_committed = report
+        .per_session
+        .iter()
+        .map(|o| sessions[(o.id - 1) as usize].core.committed.clone())
+        .collect();
     Ok(report)
 }
 

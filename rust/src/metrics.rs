@@ -125,8 +125,19 @@ impl MetricsSet {
 pub struct ServingMetrics {
     pub sessions_opened: usize,
     pub sessions_completed: usize,
-    /// Sessions ended by client disconnect before completion.
+    /// Sessions ended by an explicit client Bye before completion.
     pub sessions_aborted: usize,
+    /// Sessions whose connection died: kept alive for the resume grace
+    /// window instead of being dropped.
+    pub sessions_parked: usize,
+    /// Successful reconnect-and-resume handshakes (includes resumes of
+    /// just-finished sessions fetching their final tail).
+    pub sessions_resumed: usize,
+    /// Parked sessions reclaimed because no resume arrived in time.
+    pub sessions_evicted: usize,
+    /// Drafts answered from the per-session verdict cache (transport
+    /// duplicates and post-resume retransmits).
+    pub verdicts_replayed: usize,
     pub handshakes_rejected: usize,
     pub rounds: usize,
     pub batches: usize,
@@ -185,6 +196,7 @@ impl ServingMetrics {
         format!(
             "{title}\n\
              \x20 sessions         {} completed / {} opened ({} aborted, {} handshakes rejected)\n\
+             \x20 resume           {} parked, {} resumed, {} evicted, {} verdicts replayed\n\
              \x20 rounds           {} in {} batches (mean occupancy {:.2})\n\
              \x20 tokens           {} committed, acceptance {:.3} ({} / {} drafted)\n\
              \x20 hot-swaps        {}\n\
@@ -193,6 +205,10 @@ impl ServingMetrics {
             self.sessions_opened,
             self.sessions_aborted,
             self.handshakes_rejected,
+            self.sessions_parked,
+            self.sessions_resumed,
+            self.sessions_evicted,
+            self.verdicts_replayed,
             self.rounds,
             self.batches,
             self.mean_batch(),
@@ -291,9 +307,14 @@ mod tests {
         assert!((m.acceptance_rate() - 0.5).abs() < 1e-12);
         assert!((m.mean_batch() - 2.0).abs() < 1e-12);
         assert_eq!(m.sessions_completed, 1);
+        m.sessions_parked = 2;
+        m.sessions_resumed = 1;
+        m.sessions_evicted = 1;
+        m.verdicts_replayed = 3;
         let r = m.render("serving");
         assert!(r.contains("6 committed"));
         assert!(r.contains("hot-swaps"));
+        assert!(r.contains("2 parked, 1 resumed, 1 evicted, 3 verdicts replayed"));
     }
 
     #[test]

@@ -1,25 +1,60 @@
-//! Length-prefixed frame codec + wire-format version handshake for the
-//! `serve` subsystem (real sockets, not the byte-accounting simulation).
+//! Length-prefixed, stream-multiplexed frame codec + wire-format version
+//! handshake for the `serve` subsystem (real sockets, not the
+//! byte-accounting simulation).
 //!
-//! Every frame on the stream is `[len: u32 le][kind: u8][payload]` where
-//! `len = 1 + payload.len()`. The codec is incremental (`FrameDecoder`
-//! accepts arbitrary byte splits — TCP guarantees neither message
-//! boundaries nor single-read delivery) and bounded (`MAX_FRAME_BYTES`
-//! rejects hostile or corrupt length prefixes before allocation).
+//! Every frame on the stream is `[len: u32 le][kind: u8][stream: u32 le]
+//! [payload]` where `len = 1 + 4 + payload.len()`. The codec is
+//! incremental (`FrameDecoder` accepts arbitrary byte splits — TCP
+//! guarantees neither message boundaries nor single-read delivery) and
+//! bounded (`MAX_FRAME_BYTES` rejects hostile or corrupt length prefixes
+//! before allocation).
 //!
-//! Connection lifecycle:
+//! # Multiplexed connection lifecycle (wire v2)
+//!
+//! One connection carries ONE handshake and MANY sessions. Stream id 0
+//! ([`CONTROL_STREAM`]) is reserved for connection-scoped control frames
+//! (`Hello`/`HelloAck`); every session lives on its own nonzero stream:
 //!
 //! ```text
-//! edge                      cloud
-//!  Hello{wire_version} ───────▶     version gate (reject ≠ WIRE_VERSION)
-//!       ◀─────── HelloAck{accepted}
-//!  Open{prompt, max_new} ─────▶     KV session created
-//!       ◀─────── OpenAck{session, target_seq}
-//!  Draft{DraftMsg} ───────────▶     dynamic verification batcher
-//!       ◀─────── Verify{VerifyMsg}
-//!  ...                               (target hot-swaps never drop this)
-//!  Bye ────────────────────────▶    session closed
+//! edge                                cloud
+//!  s0 Hello{wire_version} ─────────▶       version gate (reject ≠ WIRE_VERSION)
+//!          ◀───────── s0 HelloAck{accepted}
+//!  s1 Open{prompt, max_new, nonce} ▶       KV session created
+//!          ◀───────── s1 OpenAck{session, target_seq, resume_token}
+//!  s2 Open{...} ───────────────────▶       second session, same connection
+//!  s1 Draft{DraftMsg} ─────────────▶       cross-connection verification batcher
+//!  s2 Draft{DraftMsg} ─────────────▶
+//!          ◀───────── s2 Verify{VerifyMsg}     (replies interleave freely)
+//!          ◀───────── s1 Verify{VerifyMsg}
+//!  ...                                      (target hot-swaps never drop this)
+//!  s1 Bye ─────────────────────────▶       session closed; s2 keeps decoding
 //! ```
+//!
+//! # Reconnect-and-resume handshake
+//!
+//! When the transport dies, the cloud PARKS every session the connection
+//! carried (KV state kept alive for a grace window) instead of aborting
+//! it. The edge dials a fresh connection and replays, per session, a
+//! resume handshake carrying the session token from `OpenAck` and its
+//! last committed position:
+//!
+//! ```text
+//! edge (new connection)               cloud
+//!  s0 Hello ───────────────────────▶
+//!          ◀───────── s0 HelloAck
+//!  s7 Resume{token, committed_len} ─▶      un-park; compute missing tail
+//!          ◀───────── s7 ResumeAck{tail, rounds, done, ...}
+//!  s7 Draft{...} ───────────────────▶      decoding continues from the
+//!                                          committed prefix — no re-sync
+//! ```
+//!
+//! The server is the source of truth: its committed sequence can only be
+//! AHEAD of the edge's (a verdict applied whose reply was lost), never
+//! behind, so `ResumeAck.tail` is exactly the suffix the edge is missing.
+//! A session that finished while the link was down resumes with
+//! `done = true` and the final tail. `Open` carries a client nonce so a
+//! retransmitted open (ack lost mid-handshake) reattaches the existing
+//! session instead of leaking a second one.
 
 use super::codec::{read_u16, read_u32, read_varint, write_u16, write_u32, write_varint};
 use super::VerifyMode;
@@ -27,12 +62,23 @@ use anyhow::{bail, Result};
 
 /// Version of the frame layout + message payloads. Bump on any breaking
 /// change; the handshake rejects mismatched peers instead of
-/// misinterpreting their bytes.
-pub const WIRE_VERSION: u16 = 1;
+/// misinterpreting their bytes. v2: stream-multiplexed framing + the
+/// resume handshake (`Resume`/`ResumeAck`, open nonces, resume tokens).
+pub const WIRE_VERSION: u16 = 2;
 
-/// Upper bound on one frame's body (kind + payload). Prompts are ≤ a few
-/// hundred tokens and draft blocks ≤ K_max tokens, so 1 MiB is generous.
+/// Upper bound on one frame's body (kind + stream + payload). Prompts are
+/// ≤ a few hundred tokens and draft blocks ≤ K_max tokens, so 1 MiB is
+/// generous.
 pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Stream id reserved for connection-scoped control frames
+/// (`Hello`/`HelloAck`). Session frames must use a nonzero stream.
+pub const CONTROL_STREAM: u32 = 0;
+
+/// Frame body bytes before the payload: kind (1) + stream (4). Public
+/// so byte-accounting consumers (e.g. the fault injector's delay
+/// sampling) stay in lockstep with the layout.
+pub const FRAME_HEAD: usize = 5;
 
 /// Frame discriminator (first payload byte after the length prefix).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,16 +88,21 @@ pub enum FrameKind {
     Hello = 1,
     /// Cloud → edge: handshake verdict.
     HelloAck = 2,
-    /// Edge → cloud: open a session (prompt + output budget).
+    /// Edge → cloud: open a session (prompt + output budget + nonce).
     Open = 3,
-    /// Cloud → edge: session id + current target version sequence.
+    /// Cloud → edge: session id + resume token + target version sequence.
     OpenAck = 4,
     /// Edge → cloud: one `DraftMsg` draft block.
     Draft = 5,
     /// Cloud → edge: one `VerifyMsg` verification verdict.
     Verify = 6,
-    /// Edge → cloud: orderly end of session.
+    /// Edge → cloud: orderly end of one session (the connection and its
+    /// other streams live on).
     Bye = 7,
+    /// Edge → cloud: reattach a parked session after a transport drop.
+    Resume = 8,
+    /// Cloud → edge: resume verdict + the committed tail the edge missed.
+    ResumeAck = 9,
 }
 
 impl FrameKind {
@@ -64,28 +115,87 @@ impl FrameKind {
             5 => FrameKind::Draft,
             6 => FrameKind::Verify,
             7 => FrameKind::Bye,
+            8 => FrameKind::Resume,
+            9 => FrameKind::ResumeAck,
             _ => return None,
         })
     }
+
+    /// Connection-scoped control frames ride [`CONTROL_STREAM`]; every
+    /// other kind is session-scoped and must name a nonzero stream.
+    pub fn is_control(self) -> bool {
+        matches!(self, FrameKind::Hello | FrameKind::HelloAck)
+    }
+
+    /// Kinds that may bind a FRESH stream id. Everything else
+    /// session-scoped must arrive on an already-bound stream.
+    pub fn opens_stream(self) -> bool {
+        matches!(self, FrameKind::Open | FrameKind::Resume)
+    }
 }
 
-/// One wire frame: a kind tag + an opaque payload (message bytes).
+/// Demux guard shared by the cloud connection handler and the edge-side
+/// multiplexer: control frames must use stream 0, session frames must
+/// name a nonzero stream, and non-stream-opening session frames must
+/// name a stream `is_bound` recognizes. (Duplicate `Open`/`Resume` on an
+/// already-bound stream is NOT rejected here — the demux layer replays
+/// the cached ack, absorbing transport-level retransmits.)
+pub fn check_stream(
+    kind: FrameKind,
+    stream: u32,
+    is_bound: impl Fn(u32) -> bool,
+) -> Result<()> {
+    if kind.is_control() {
+        if stream != CONTROL_STREAM {
+            bail!("{kind:?} frame must use control stream 0, got stream {stream}");
+        }
+        return Ok(());
+    }
+    if stream == CONTROL_STREAM {
+        bail!("session frame {kind:?} on reserved control stream 0");
+    }
+    if !kind.opens_stream() && !is_bound(stream) {
+        bail!("{kind:?} frame for unknown stream {stream}");
+    }
+    Ok(())
+}
+
+/// One wire frame: a kind tag + the stream it belongs to + an opaque
+/// payload (message bytes).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
     pub kind: FrameKind,
+    /// 0 for connection control, the session's stream id otherwise.
+    pub stream: u32,
     pub payload: Vec<u8>,
 }
 
 impl Frame {
-    pub fn new(kind: FrameKind, payload: Vec<u8>) -> Frame {
-        Frame { kind, payload }
+    /// A connection-scoped control frame (stream 0).
+    pub fn control(kind: FrameKind, payload: Vec<u8>) -> Frame {
+        Frame {
+            kind,
+            stream: CONTROL_STREAM,
+            payload,
+        }
     }
 
-    /// `[len: u32 le][kind: u8][payload]`, len = 1 + payload.len().
+    /// A session frame on the given (nonzero) stream.
+    pub fn on(stream: u32, kind: FrameKind, payload: Vec<u8>) -> Frame {
+        Frame {
+            kind,
+            stream,
+            payload,
+        }
+    }
+
+    /// `[len: u32 le][kind: u8][stream: u32 le][payload]`,
+    /// len = 5 + payload.len().
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(5 + self.payload.len());
-        write_u32(&mut out, (1 + self.payload.len()) as u32);
+        let mut out = Vec::with_capacity(4 + FRAME_HEAD + self.payload.len());
+        write_u32(&mut out, (FRAME_HEAD + self.payload.len()) as u32);
         out.push(self.kind as u8);
+        write_u32(&mut out, self.stream);
         out.extend_from_slice(&self.payload);
         out
     }
@@ -127,21 +237,27 @@ impl FrameDecoder {
         }
         let mut pos = 0usize;
         let len = read_u32(avail, &mut pos)? as usize;
-        if len == 0 || len > MAX_FRAME_BYTES {
-            bail!("frame length {len} out of bounds (1..={MAX_FRAME_BYTES})");
+        if len < FRAME_HEAD || len > MAX_FRAME_BYTES {
+            bail!("frame length {len} out of bounds ({FRAME_HEAD}..={MAX_FRAME_BYTES})");
         }
         if avail.len() < 4 + len {
             return Ok(None);
         }
         let kind = FrameKind::from_u8(avail[4])
             .ok_or_else(|| anyhow::anyhow!("unknown frame kind {}", avail[4]))?;
-        let payload = avail[5..4 + len].to_vec();
+        let mut spos = 5usize;
+        let stream = read_u32(avail, &mut spos)?;
+        let payload = avail[4 + FRAME_HEAD..4 + len].to_vec();
         self.off += 4 + len;
         if self.off == self.buf.len() {
             self.buf.clear();
             self.off = 0;
         }
-        Ok(Some(Frame { kind, payload }))
+        Ok(Some(Frame {
+            kind,
+            stream,
+            payload,
+        }))
     }
 }
 
@@ -259,12 +375,18 @@ pub fn hello_response(h: &Hello) -> HelloAck {
 pub struct OpenMsg {
     pub prompt: Vec<i32>,
     pub max_new: u32,
+    /// Client-chosen open nonce. A retransmitted `Open` (ack lost in a
+    /// transport drop mid-handshake) carries the same nonce, and the
+    /// cloud reattaches the already-created session instead of leaking a
+    /// second KV session.
+    pub nonce: u64,
 }
 
 impl OpenMsg {
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(8 + self.prompt.len() * 2);
+        let mut out = Vec::with_capacity(16 + self.prompt.len() * 2);
         write_u32(&mut out, self.max_new);
+        write_varint(&mut out, self.nonce);
         write_varint(&mut out, self.prompt.len() as u64);
         for &t in &self.prompt {
             write_varint(&mut out, t as u64);
@@ -275,6 +397,7 @@ impl OpenMsg {
     pub fn decode(buf: &[u8]) -> Result<OpenMsg> {
         let mut pos = 0usize;
         let max_new = read_u32(buf, &mut pos)?;
+        let nonce = read_varint(buf, &mut pos)?;
         let n = read_varint(buf, &mut pos)? as usize;
         if n > MAX_FRAME_BYTES {
             bail!("open: absurd prompt length {n}");
@@ -286,7 +409,11 @@ impl OpenMsg {
         if pos != buf.len() {
             bail!("open: trailing bytes");
         }
-        Ok(OpenMsg { prompt, max_new })
+        Ok(OpenMsg {
+            prompt,
+            max_new,
+            nonce,
+        })
     }
 }
 
@@ -298,13 +425,16 @@ pub struct OpenAck {
     /// Target version sequence number currently deployed — lets the edge
     /// observe cloud-side evolution without ever receiving weights.
     pub target_seq: u64,
+    /// Capability the edge replays in a `Resume` after a transport drop.
+    pub resume_token: u64,
 }
 
 impl OpenAck {
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(12);
+        let mut out = Vec::with_capacity(24);
         write_u32(&mut out, self.session);
         write_varint(&mut out, self.target_seq);
+        write_varint(&mut out, self.resume_token);
         out
     }
 
@@ -312,12 +442,136 @@ impl OpenAck {
         let mut pos = 0usize;
         let session = read_u32(buf, &mut pos)?;
         let target_seq = read_varint(buf, &mut pos)?;
+        let resume_token = read_varint(buf, &mut pos)?;
         if pos != buf.len() {
             bail!("open-ack: trailing bytes");
         }
         Ok(OpenAck {
             session,
             target_seq,
+            resume_token,
+        })
+    }
+}
+
+/// Edge → cloud: reattach a parked session after a transport drop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResumeMsg {
+    /// The `resume_token` from the session's `OpenAck`.
+    pub token: u64,
+    /// The edge's committed length (prompt + generated) — the position
+    /// decoding continues from. The server replies with any committed
+    /// tail beyond it (verdicts applied whose replies were lost).
+    pub committed_len: u64,
+}
+
+impl ResumeMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20);
+        write_varint(&mut out, self.token);
+        write_varint(&mut out, self.committed_len);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ResumeMsg> {
+        let mut pos = 0usize;
+        let token = read_varint(buf, &mut pos)?;
+        let committed_len = read_varint(buf, &mut pos)?;
+        if pos != buf.len() {
+            bail!("resume: trailing bytes");
+        }
+        Ok(ResumeMsg {
+            token,
+            committed_len,
+        })
+    }
+}
+
+/// Cloud → edge: resume verdict.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResumeAck {
+    pub accepted: bool,
+    /// True when the session already finished server-side while the link
+    /// was down — `tail` completes it and no further drafting is needed.
+    pub done: bool,
+    /// Server-assigned session id (0 when rejected).
+    pub session: u32,
+    /// Server-side committed length after applying `tail`.
+    pub committed_len: u64,
+    /// Server-side round count (the edge syncs its round counter so
+    /// draft round numbers stay monotone across the reconnect).
+    pub rounds: u64,
+    /// Target version sequence currently deployed.
+    pub target_seq: u64,
+    /// Committed tokens the edge is missing (suffix beyond its reported
+    /// position). Bounded: at most K+1 tokens per round lost in flight.
+    pub tail: Vec<i32>,
+    /// Human-readable rejection reason (empty when accepted).
+    pub reason: String,
+}
+
+impl ResumeAck {
+    pub fn rejected(reason: String) -> ResumeAck {
+        ResumeAck {
+            accepted: false,
+            done: false,
+            session: 0,
+            committed_len: 0,
+            rounds: 0,
+            target_seq: 0,
+            tail: Vec::new(),
+            reason,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32 + self.tail.len() * 2 + self.reason.len());
+        out.push((self.accepted as u8) | ((self.done as u8) << 1));
+        write_u32(&mut out, self.session);
+        write_varint(&mut out, self.committed_len);
+        write_varint(&mut out, self.rounds);
+        write_varint(&mut out, self.target_seq);
+        write_varint(&mut out, self.tail.len() as u64);
+        for &t in &self.tail {
+            write_varint(&mut out, t as u64);
+        }
+        write_varint(&mut out, self.reason.len() as u64);
+        out.extend_from_slice(self.reason.as_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ResumeAck> {
+        let flags = *buf.first().ok_or_else(|| anyhow::anyhow!("resume-ack: empty"))?;
+        if flags & !0b11 != 0 {
+            bail!("resume-ack: bad flags byte {flags:#x}");
+        }
+        let mut pos = 1usize;
+        let session = read_u32(buf, &mut pos)?;
+        let committed_len = read_varint(buf, &mut pos)?;
+        let rounds = read_varint(buf, &mut pos)?;
+        let target_seq = read_varint(buf, &mut pos)?;
+        let n = read_varint(buf, &mut pos)? as usize;
+        if n > MAX_FRAME_BYTES {
+            bail!("resume-ack: absurd tail length {n}");
+        }
+        let mut tail = Vec::with_capacity(n);
+        for _ in 0..n {
+            tail.push(read_varint(buf, &mut pos)? as i32);
+        }
+        let rn = read_varint(buf, &mut pos)? as usize;
+        if pos + rn != buf.len() {
+            bail!("resume-ack: reason length mismatch");
+        }
+        let reason = String::from_utf8(buf[pos..pos + rn].to_vec())?;
+        Ok(ResumeAck {
+            accepted: flags & 1 != 0,
+            done: flags & 2 != 0,
+            session,
+            committed_len,
+            rounds,
+            target_seq,
+            tail,
+            reason,
         })
     }
 }
@@ -347,7 +601,9 @@ mod tests {
             },
             wire: WireFormat::Compact,
         };
-        let frame = Frame::new(FrameKind::Draft, msg.encode());
+        // stream ids from tiny to the full u32 range
+        let stream = (rng.next_u64() as u32 >> (rng.next_range(31) as u32)).max(1);
+        let frame = Frame::on(stream, FrameKind::Draft, msg.encode());
         (msg, frame)
     }
 
@@ -369,6 +625,10 @@ mod tests {
                     .map_err(|e| e.to_string())?
                     .ok_or("no frame after full input")?;
                 prop::assert_prop(f == frame, format!("frame mismatch at split {split}"))?;
+                prop::assert_prop(
+                    f.stream == frame.stream,
+                    format!("stream id corrupted at split {split}"),
+                )?;
                 let back = DraftMsg::decode(&f.payload).map_err(|e| e.to_string())?;
                 prop::assert_prop(
                     back.tokens == msg.tokens && back.session == msg.session,
@@ -384,43 +644,109 @@ mod tests {
     }
 
     #[test]
-    fn verify_frames_roundtrip_through_concatenated_stream() {
+    fn interleaved_multi_stream_decode_preserves_per_stream_order() {
         prop::check(40, |rng| {
-            // several frames back to back, pushed in random-sized chunks
-            let msgs: Vec<VerifyMsg> = (0..4)
-                .map(|i| VerifyMsg {
-                    session: i,
-                    round: rng.next_range(100) as u32,
+            // 4 streams, several frames each, interleaved in random order
+            // on ONE connection, pushed in random-sized chunks: global
+            // order and per-stream sequences must both survive.
+            const STREAMS: u32 = 4;
+            let mut frames = Vec::new();
+            let mut per_stream: Vec<Vec<VerifyMsg>> = vec![Vec::new(); STREAMS as usize];
+            for i in 0..16u32 {
+                let stream = 1 + rng.next_range(STREAMS as u64) as u32;
+                let m = VerifyMsg {
+                    session: stream, // sessions mirror streams here
+                    round: i,
                     tau: rng.next_range(9) as u8,
                     correction: rng.next_range(512) as i32,
                     eos: rng.chance(0.2),
-                })
-                .collect();
-            let mut stream = Vec::new();
-            for m in &msgs {
-                stream.extend_from_slice(&Frame::new(FrameKind::Verify, m.encode()).encode());
+                };
+                per_stream[(stream - 1) as usize].push(m.clone());
+                frames.push(Frame::on(stream, FrameKind::Verify, m.encode()));
+            }
+            let mut wire = Vec::new();
+            for f in &frames {
+                wire.extend_from_slice(&f.encode());
             }
             let mut dec = FrameDecoder::new();
             let mut got = Vec::new();
+            let mut demuxed: Vec<Vec<VerifyMsg>> = vec![Vec::new(); STREAMS as usize];
             let mut i = 0usize;
-            while i < stream.len() {
-                let n = (rng.next_range(7) as usize + 1).min(stream.len() - i);
-                dec.push(&stream[i..i + n]);
+            while i < wire.len() {
+                let n = (rng.next_range(11) as usize + 1).min(wire.len() - i);
+                dec.push(&wire[i..i + n]);
                 i += n;
                 while let Some(f) = dec.next_frame().map_err(|e| e.to_string())? {
-                    prop::assert_prop(f.kind == FrameKind::Verify, "wrong kind")?;
-                    got.push(VerifyMsg::decode(&f.payload).map_err(|e| e.to_string())?);
+                    prop::assert_prop(
+                        (1..=STREAMS).contains(&f.stream),
+                        format!("stream {} out of range", f.stream),
+                    )?;
+                    demuxed[(f.stream - 1) as usize]
+                        .push(VerifyMsg::decode(&f.payload).map_err(|e| e.to_string())?);
+                    got.push(f);
                 }
             }
-            prop::assert_prop(got == msgs, "stream decode mismatch")?;
+            prop::assert_prop(got == frames, "interleaved global order diverged")?;
+            prop::assert_prop(demuxed == per_stream, "per-stream demux diverged")?;
             prop::assert_prop(dec.pending_bytes() == 0, "leftover bytes")
+        });
+    }
+
+    #[test]
+    fn check_stream_rejects_zero_and_unknown_stream_ids() {
+        let bound = |s: u32| s == 3 || s == 7;
+        // control frames: stream 0 only
+        assert!(check_stream(FrameKind::Hello, 0, bound).is_ok());
+        assert!(check_stream(FrameKind::HelloAck, 0, bound).is_ok());
+        assert!(check_stream(FrameKind::Hello, 1, bound).is_err());
+        // session frames: never stream 0
+        for kind in [
+            FrameKind::Open,
+            FrameKind::OpenAck,
+            FrameKind::Draft,
+            FrameKind::Verify,
+            FrameKind::Bye,
+            FrameKind::Resume,
+            FrameKind::ResumeAck,
+        ] {
+            assert!(check_stream(kind, 0, bound).is_err(), "{kind:?} on stream 0");
+        }
+        // stream-opening kinds may name fresh streams
+        assert!(check_stream(FrameKind::Open, 99, bound).is_ok());
+        assert!(check_stream(FrameKind::Resume, 99, bound).is_ok());
+        // everything else must be bound
+        assert!(check_stream(FrameKind::Draft, 3, bound).is_ok());
+        assert!(check_stream(FrameKind::Verify, 7, bound).is_ok());
+        assert!(check_stream(FrameKind::Draft, 99, bound).is_err());
+        assert!(check_stream(FrameKind::Bye, 4, bound).is_err());
+
+        // property: a random unknown stream is always rejected for
+        // non-opening session kinds, and stream 0 for every session kind
+        prop::check(60, |rng| {
+            let s = rng.next_u64() as u32;
+            let kind = match rng.next_range(5) {
+                0 => FrameKind::Draft,
+                1 => FrameKind::Verify,
+                2 => FrameKind::Bye,
+                3 => FrameKind::OpenAck,
+                _ => FrameKind::ResumeAck,
+            };
+            let none_bound = |_: u32| false;
+            prop::assert_prop(
+                check_stream(kind, s, none_bound).is_err(),
+                format!("{kind:?} accepted on unknown stream {s}"),
+            )
         });
     }
 
     #[test]
     fn decoder_rejects_bad_length_and_kind() {
         let mut dec = FrameDecoder::new();
-        dec.push(&[0, 0, 0, 0, 9]); // len 0
+        dec.push(&[0, 0, 0, 0, 9]); // len 0 < FRAME_HEAD
+        assert!(dec.next_frame().is_err());
+
+        let mut dec = FrameDecoder::new();
+        dec.push(&[4, 0, 0, 0]); // len 4 < FRAME_HEAD (kind + stream)
         assert!(dec.next_frame().is_err());
 
         let mut dec = FrameDecoder::new();
@@ -429,8 +755,8 @@ mod tests {
         assert!(dec.next_frame().is_err());
 
         let mut dec = FrameDecoder::new();
-        dec.push(&Frame::new(FrameKind::Bye, vec![]).encode());
-        let mut bad = Frame::new(FrameKind::Bye, vec![]).encode();
+        dec.push(&Frame::on(1, FrameKind::Bye, vec![]).encode());
+        let mut bad = Frame::on(1, FrameKind::Bye, vec![]).encode();
         bad[4] = 200; // unknown kind, after a valid frame
         dec.push(&bad);
         assert_eq!(dec.next_frame().unwrap().unwrap().kind, FrameKind::Bye);
@@ -471,13 +797,93 @@ mod tests {
         let o = OpenMsg {
             prompt: vec![1, 64, 127, 511, 3],
             max_new: 32,
+            nonce: 0xDEAD_BEEF_CAFE,
         };
         assert_eq!(OpenMsg::decode(&o.encode()).unwrap(), o);
         let a = OpenAck {
             session: 9,
             target_seq: 300,
+            resume_token: u64::MAX - 17,
         };
         assert_eq!(OpenAck::decode(&a.encode()).unwrap(), a);
         assert!(OpenMsg::decode(&o.encode()[..3]).is_err());
+    }
+
+    #[test]
+    fn resume_messages_roundtrip() {
+        let r = ResumeMsg {
+            token: 0x1234_5678_9ABC_DEF0,
+            committed_len: 421,
+        };
+        assert_eq!(ResumeMsg::decode(&r.encode()).unwrap(), r);
+        assert!(ResumeMsg::decode(&r.encode()[..1]).is_err());
+
+        let live = ResumeAck {
+            accepted: true,
+            done: false,
+            session: 7,
+            committed_len: 24,
+            rounds: 5,
+            target_seq: 3,
+            tail: vec![100, 205, 17],
+            reason: String::new(),
+        };
+        assert_eq!(ResumeAck::decode(&live.encode()).unwrap(), live);
+
+        let finished = ResumeAck {
+            accepted: true,
+            done: true,
+            session: 7,
+            committed_len: 30,
+            rounds: 8,
+            target_seq: 3,
+            tail: vec![9, 9, 2],
+            reason: String::new(),
+        };
+        assert_eq!(ResumeAck::decode(&finished.encode()).unwrap(), finished);
+
+        let rejected = ResumeAck::rejected("unknown or expired resume token".into());
+        let back = ResumeAck::decode(&rejected.encode()).unwrap();
+        assert!(!back.accepted && !back.done);
+        assert!(back.reason.contains("expired"));
+
+        // flags byte with junk bits is rejected (guards against skew)
+        let mut bytes = live.encode();
+        bytes[0] |= 0b100;
+        assert!(ResumeAck::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn resume_ack_roundtrips_at_every_byte_split() {
+        prop::check(20, |rng| {
+            let ack = ResumeAck {
+                accepted: true,
+                done: rng.chance(0.3),
+                session: rng.next_u64() as u32,
+                committed_len: rng.next_range(4096),
+                rounds: rng.next_range(512),
+                target_seq: rng.next_range(64),
+                tail: (0..rng.next_range(9)).map(|_| rng.next_range(512) as i32).collect(),
+                reason: String::new(),
+            };
+            let frame = Frame::on(
+                1 + rng.next_u64() as u32 % 1000,
+                FrameKind::ResumeAck,
+                ack.encode(),
+            );
+            let bytes = frame.encode();
+            for split in 0..=bytes.len() {
+                let mut dec = FrameDecoder::new();
+                dec.push(&bytes[..split]);
+                dec.push(&bytes[split..]);
+                let f = dec
+                    .next_frame()
+                    .map_err(|e| e.to_string())?
+                    .ok_or("no frame after full input")?;
+                let back = ResumeAck::decode(&f.payload).map_err(|e| e.to_string())?;
+                prop::assert_prop(back == ack, format!("resume-ack mismatch at split {split}"))?;
+            }
+            Ok(())
+        });
     }
 }

@@ -1,34 +1,52 @@
 //! The cloud verification server: a tokio accept loop feeding the
 //! dedicated verifier thread (`serve::verifier`).
 //!
-//! One connection carries one KV session. The per-connection protocol
-//! (`handle_conn`) is written against the `Transport` trait, so the TCP
-//! server and the in-process loopback harness (`serve_loopback`) share
-//! it verbatim — the loopback path is not a mock, it is the same server
-//! minus the socket.
+//! One connection carries MANY sessions (wire v2): after a single
+//! `Hello` handshake on the control stream, the per-connection demux
+//! (`handle_conn`) binds each nonzero stream id to a KV session on
+//! `Open`/`Resume` and routes `Draft`/`Verify` frames per stream into
+//! the existing cross-connection verification batcher. Draft
+//! verifications run as concurrent tasks feeding one writer queue, so
+//! eight multiplexed sessions batch exactly like eight connections. The
+//! handler is written against the `Transport` trait, so the TCP server
+//! and the in-process loopback harness (`serve_loopback`,
+//! `serve_loopback_mux`) share it verbatim — the loopback path is not a
+//! mock, it is the same server minus the socket.
 //!
 //! Operational properties the tests pin:
-//! * cross-connection dynamic batching (the verifier thread closes one
-//!   window over requests from many connections);
+//! * cross-connection AND cross-stream dynamic batching (the verifier
+//!   thread closes one window over requests from many connections);
 //! * target-version hot-swap (`ServerHandle::deploy`) without dropping
 //!   live sessions;
+//! * a dead transport PARKS its sessions for the resume grace window
+//!   (`verifier.detach`) instead of aborting them; a reconnecting edge
+//!   reattaches per session via `Resume` and decoding continues from
+//!   the committed prefix;
+//! * transport-level duplicates are absorbed: handshake/open/resume
+//!   acks are replayed from per-stream caches, duplicate drafts are
+//!   answered from the verifier's verdict cache;
 //! * graceful shutdown: stop accepting, drain active connections, flush
 //!   the open batch, report final `ServingMetrics`.
 
 use super::backend::VerifyBackend;
 use super::edge::{run_edge_session, EdgeReport, EdgeSessionConfig};
+use super::mux::EdgeMux;
 use super::transport::{loopback_pair, TcpTransport, Transport};
 use super::verifier::{VerifierConfig, VerifierHandle};
 use crate::coordinator::edge::DraftSource;
 use crate::metrics::ServingMetrics;
-use crate::protocol::frame::{hello_response, Frame, FrameKind, Hello, OpenAck, OpenMsg};
+use crate::protocol::frame::{
+    check_stream, hello_response, Frame, FrameKind, Hello, OpenAck, OpenMsg, ResumeAck, ResumeMsg,
+    CONTROL_STREAM,
+};
 use crate::protocol::DraftMsg;
 use crate::util::log::{log, Level};
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::time::Duration;
 use tokio::net::TcpListener;
-use tokio::sync::watch;
+use tokio::sync::{mpsc, watch};
 use tokio::task::JoinSet;
 
 /// How long `shutdown` waits for in-flight sessions before aborting
@@ -137,75 +155,236 @@ pub async fn serve_cloud(
     })
 }
 
-/// Serve one connection: version handshake → session open → decode loop.
-/// Transport-generic so TCP and loopback share it.
+/// A stream bound to a live session, with its cached handshake ack for
+/// duplicate replay.
+struct Bound {
+    id: u32,
+    /// Attachment epoch handed out at open/resume — passed back in
+    /// `detach` so a stale connection can never park a stolen session.
+    attachment: u64,
+    ack: Frame,
+}
+
+/// Events the per-draft verify tasks feed back to the connection writer.
+enum OutEvent {
+    Frame(Frame),
+    Fatal(String),
+}
+
+/// Serve one connection: version handshake → multiplexed demux loop.
+/// Transport-generic so TCP and loopback share it. When the transport
+/// dies with sessions still bound, they are PARKED for the resume grace
+/// window rather than aborted.
 pub async fn handle_conn<T: Transport>(mut t: T, verifier: VerifierHandle) -> Result<()> {
-    // --- wire-format version handshake -------------------------------
+    // --- wire-format version handshake (control stream) --------------
     let hello = match t.recv_frame().await? {
         None => return Ok(()),
-        Some(f) if f.kind == FrameKind::Hello => Hello::decode(&f.payload)?,
+        Some(f) if f.kind == FrameKind::Hello => {
+            check_stream(f.kind, f.stream, |_| false)?;
+            Hello::decode(&f.payload)?
+        }
         Some(f) => bail!("expected Hello, got {:?}", f.kind),
     };
     let ack = hello_response(&hello);
     let accepted = ack.accepted;
-    t.send_frame(Frame::new(FrameKind::HelloAck, ack.encode()))
-        .await?;
+    let hello_ack = Frame::control(FrameKind::HelloAck, ack.encode());
+    t.send_frame(hello_ack.clone()).await?;
     if !accepted {
         verifier.note_rejected_handshake();
         return Ok(());
     }
 
-    // --- session open ------------------------------------------------
-    let open = match t.recv_frame().await? {
-        None => return Ok(()),
-        Some(f) if f.kind == FrameKind::Open => OpenMsg::decode(&f.payload)?,
-        Some(f) => bail!("expected Open, got {:?}", f.kind),
-    };
-    let (id, target_seq) = verifier.open(open.prompt, open.max_new as usize).await?;
-    t.send_frame(Frame::new(
-        FrameKind::OpenAck,
-        OpenAck {
-            session: id,
-            target_seq,
-        }
-        .encode(),
-    ))
-    .await?;
-
-    // --- decode loop -------------------------------------------------
-    let result = conn_loop(&mut t, &verifier, id).await;
-    // idempotent: no-op if the session completed naturally; counts an
-    // abort if the client vanished mid-session
-    verifier.end(id);
+    // --- multiplexed session demux -----------------------------------
+    let mut bound: HashMap<u32, Bound> = HashMap::new();
+    let result = mux_loop(&mut t, &verifier, &mut bound, hello_ack).await;
+    // the transport is gone: park every session this connection still
+    // carried so a reconnecting edge can resume it within the grace
+    // window (orderly completions already unbound their streams, and a
+    // stale attachment epoch makes this a no-op after a steal)
+    for b in bound.values() {
+        verifier.detach(b.id, b.attachment);
+    }
     result
 }
 
-async fn conn_loop<T: Transport>(t: &mut T, verifier: &VerifierHandle, id: u32) -> Result<()> {
+async fn mux_loop<T: Transport>(
+    t: &mut T,
+    verifier: &VerifierHandle,
+    bound: &mut HashMap<u32, Bound>,
+    hello_ack: Frame,
+) -> Result<()> {
+    let (out_tx, mut out_rx) = mpsc::unbounded_channel::<OutEvent>();
     loop {
-        match t.recv_frame().await? {
-            None
-            | Some(Frame {
-                kind: FrameKind::Bye,
-                ..
-            }) => return Ok(()),
-            Some(f) if f.kind == FrameKind::Draft => {
-                let mut msg = DraftMsg::decode(&f.payload)?;
-                // the server-assigned session id is authoritative
-                msg.session = id;
-                let vmsg = verifier.verify(id, msg).await?;
-                t.send_frame(Frame::new(FrameKind::Verify, vmsg.encode()))
-                    .await?;
-            }
-            Some(f) => bail!("unexpected {:?} frame in session {id}", f.kind),
+        // Stage the winning event, then act with the select borrows
+        // released (recv_frame holds &mut t while polled).
+        enum Step {
+            In(Option<Frame>),
+            Out(Option<OutEvent>),
+        }
+        let step = tokio::select! {
+            r = t.recv_frame() => Step::In(r?),
+            ev = out_rx.recv() => Step::Out(ev),
+        };
+        match step {
+            // we hold an out_tx, so the channel can never report closed
+            Step::Out(None) => continue,
+            Step::Out(Some(OutEvent::Frame(f))) => t.send_frame(f).await?,
+            Step::Out(Some(OutEvent::Fatal(msg))) => bail!("{msg}"),
+            // peer hung up: the caller parks whatever is still bound
+            Step::In(None) => return Ok(()),
+            Step::In(Some(f)) => handle_frame(t, verifier, bound, &out_tx, &hello_ack, f).await?,
         }
     }
 }
 
-/// Run a full multi-session serve over in-process loopback transports:
-/// same verifier thread, same `handle_conn`, no sockets. Sessions run
-/// concurrently; reports come back in input order. This is the
-/// deterministic twin of the TCP path (with a deterministic backend and
-/// a fixed stride it reproduces the simulator's token counts exactly).
+async fn handle_frame<T: Transport>(
+    t: &mut T,
+    verifier: &VerifierHandle,
+    bound: &mut HashMap<u32, Bound>,
+    out_tx: &mpsc::UnboundedSender<OutEvent>,
+    hello_ack: &Frame,
+    f: Frame,
+) -> Result<()> {
+    match f.kind {
+        // transport-level retransmit of the greeting: replay the ack
+        FrameKind::Hello => {
+            check_stream(f.kind, f.stream, |_| false)?;
+            t.send_frame(hello_ack.clone()).await
+        }
+        FrameKind::Open => {
+            check_stream(f.kind, f.stream, |s| bound.contains_key(&s))?;
+            if let Some(b) = bound.get(&f.stream) {
+                if b.ack.kind == FrameKind::OpenAck {
+                    // duplicate Open on a bound stream: replay the ack
+                    return t.send_frame(b.ack.clone()).await;
+                }
+                // bound via Resume: fall through — the open-nonce dedup
+                // reattaches rather than leaking a session
+            }
+            let open = OpenMsg::decode(&f.payload)?;
+            let info = verifier
+                .open(open.prompt, open.max_new as usize, open.nonce)
+                .await?;
+            let ack = Frame::on(
+                f.stream,
+                FrameKind::OpenAck,
+                OpenAck {
+                    session: info.session,
+                    target_seq: info.target_seq,
+                    resume_token: info.resume_token,
+                }
+                .encode(),
+            );
+            bound.insert(
+                f.stream,
+                Bound {
+                    id: info.session,
+                    attachment: info.attachment,
+                    ack: ack.clone(),
+                },
+            );
+            t.send_frame(ack).await
+        }
+        FrameKind::Resume => {
+            check_stream(f.kind, f.stream, |s| bound.contains_key(&s))?;
+            if let Some(b) = bound.get(&f.stream) {
+                if b.ack.kind == FrameKind::ResumeAck {
+                    // duplicate Resume: replay the cached ack
+                    return t.send_frame(b.ack.clone()).await;
+                }
+                // stream bound via Open but the edge is resuming ON the
+                // same connection (e.g. a mux stream retrying without a
+                // redial): process it fresh so the reply is a genuine
+                // ResumeAck, not a replayed OpenAck of the wrong kind
+            }
+            let msg = ResumeMsg::decode(&f.payload)?;
+            let (ack, live_session) =
+                match verifier.resume(msg.token, msg.committed_len as usize).await {
+                    Ok(info) => (
+                        ResumeAck {
+                            accepted: true,
+                            done: info.done,
+                            session: info.session,
+                            committed_len: info.committed_len as u64,
+                            rounds: info.rounds as u64,
+                            target_seq: info.target_seq,
+                            tail: info.tail,
+                            reason: String::new(),
+                        },
+                        (!info.done).then_some((info.session, info.attachment)),
+                    ),
+                    Err(e) => (ResumeAck::rejected(format!("{e:#}")), None),
+                };
+            let frame = Frame::on(f.stream, FrameKind::ResumeAck, ack.encode());
+            if let Some((id, attachment)) = live_session {
+                bound.insert(
+                    f.stream,
+                    Bound {
+                        id,
+                        attachment,
+                        ack: frame.clone(),
+                    },
+                );
+            }
+            t.send_frame(frame).await
+        }
+        FrameKind::Draft => {
+            check_stream(f.kind, f.stream, |s| bound.contains_key(&s))?;
+            let (id, attachment) = {
+                let b = &bound[&f.stream];
+                (b.id, b.attachment)
+            };
+            let mut msg = DraftMsg::decode(&f.payload)?;
+            // the server-assigned session id is authoritative
+            msg.session = id;
+            // verify concurrently so other streams keep feeding the
+            // batcher while this round waits for its window
+            let v = verifier.clone();
+            let out = out_tx.clone();
+            let stream = f.stream;
+            tokio::spawn(async move {
+                match v.verify(id, attachment, msg).await {
+                    Ok(Some(vmsg)) => {
+                        let _ = out.send(OutEvent::Frame(Frame::on(
+                            stream,
+                            FrameKind::Verify,
+                            vmsg.encode(),
+                        )));
+                    }
+                    // duplicate swallowed by the verifier: no reply owed
+                    Ok(None) => {}
+                    Err(e) => {
+                        let _ = out.send(OutEvent::Fatal(format!(
+                            "verify failed on stream {stream}: {e:#}"
+                        )));
+                    }
+                }
+            });
+            Ok(())
+        }
+        FrameKind::Bye => {
+            if f.stream == CONTROL_STREAM {
+                bail!("Bye on reserved control stream 0");
+            }
+            // orderly end of ONE session; a Bye for an unknown stream is
+            // a harmless transport-level duplicate
+            if let Some(b) = bound.remove(&f.stream) {
+                verifier.end(b.id);
+            }
+            Ok(())
+        }
+        FrameKind::HelloAck | FrameKind::OpenAck | FrameKind::ResumeAck | FrameKind::Verify => {
+            bail!("unexpected {:?} frame from edge", f.kind)
+        }
+    }
+}
+
+/// Run a full multi-session serve over in-process loopback transports,
+/// ONE CONNECTION PER SESSION: same verifier thread, same `handle_conn`,
+/// no sockets. Sessions run concurrently; reports come back in input
+/// order. This is the deterministic twin of the TCP path (with a
+/// deterministic backend and a fixed stride it reproduces the
+/// simulator's token counts exactly).
 pub async fn serve_loopback(
     vcfg: VerifierConfig,
     make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
@@ -236,6 +415,50 @@ pub async fn serve_loopback(
                 .map_err(|e| anyhow!("edge session task failed: {e}"))??,
         );
     }
+    let metrics = verifier.shutdown().await?;
+    Ok((reports, metrics))
+}
+
+/// Run a full multi-session serve with ALL sessions MULTIPLEXED over ONE
+/// loopback connection via the edge-side mux: one `Hello`, one transport,
+/// one stream id per session. With a deterministic backend and a fixed
+/// stride this commits the same per-session token counts as
+/// [`serve_loopback`] and the virtual-clock simulator — the equivalence
+/// `tests/serve_loopback.rs` pins.
+pub async fn serve_loopback_mux(
+    vcfg: VerifierConfig,
+    make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
+    edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>)>,
+    ecfg: EdgeSessionConfig,
+) -> Result<(Vec<EdgeReport>, ServingMetrics)> {
+    let verifier = VerifierHandle::spawn(vcfg, make_backend)?;
+    let (edge_t, cloud_t) = loopback_pair();
+    let v = verifier.clone();
+    tokio::spawn(async move {
+        if let Err(e) = handle_conn(cloud_t, v).await {
+            log(Level::Warn, "serve", &format!("loopback mux conn: {e:#}"));
+        }
+    });
+    let mut mux = EdgeMux::connect(Box::new(edge_t), None, &ecfg).await?;
+    let mut tasks = Vec::new();
+    for (draft, prompt) in edges {
+        let stream = mux.open_stream();
+        let ecfg = ecfg.clone();
+        tasks.push(tokio::spawn(async move {
+            let mut draft = draft;
+            let mut t = stream;
+            let stream_id = t.stream_id();
+            super::edge::run_session_on(&mut t, stream_id, draft.as_mut(), &prompt, &ecfg).await
+        }));
+    }
+    let mut reports = Vec::new();
+    for task in tasks {
+        reports.push(
+            task.await
+                .map_err(|e| anyhow!("edge mux session task failed: {e}"))??,
+        );
+    }
+    drop(mux);
     let metrics = verifier.shutdown().await?;
     Ok((reports, metrics))
 }

@@ -3,19 +3,51 @@
 //! against *measured* round-trip times instead of the simulator's
 //! synthetic channel — the same `AdaptivePolicy`/`LatencyModel` code
 //! path, fed by an EMA of observed RTT and effective goodput.
+//!
+//! # Surviving link drops
+//!
+//! The session loop is RESUMABLE: any transport error triggers
+//! `Transport::reattach`, and on success the loop replays the resume
+//! handshake (`Resume{token, committed_len}` → `ResumeAck{tail, ...}`),
+//! fast-forwards its committed mirror with the tail the cloud applied
+//! while the link was down, and keeps decoding from the committed
+//! prefix — the frozen draft needs no retraining and no re-sync, only
+//! the position. Two transports provide reattach:
+//!
+//! * [`ResumableTransport`] — one session per connection; reattach
+//!   redials through a [`Reconnect`] factory and replays the `Hello`.
+//! * [`mux::MuxStream`](super::mux::MuxStream) — many sessions per
+//!   connection; reattach waits for the shared pump's redial.
+//!
+//! An `Open` whose ack was lost is retransmitted with the same client
+//! nonce, so the cloud reattaches the half-created session instead of
+//! leaking a second one. Transport-level duplicates of acks and
+//! verdicts are skipped by round/kind filters on the receive path.
 
 use super::session::SessionCore;
-use super::transport::Transport;
+use super::transport::{BoxFuture, Reconnect, Transport};
 use crate::channel::ChannelState;
 use crate::coordinator::edge::DraftSource;
 use crate::coordinator::policy::{AdaptivePolicy, LatencyModel};
 use crate::devices::{CloudProfile, EdgeDevice, A800_70B, JETSON_ORIN};
-use crate::protocol::frame::{Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, WIRE_VERSION};
+use crate::protocol::frame::{
+    Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, ResumeAck, ResumeMsg, WIRE_VERSION,
+};
 use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
+use crate::util::log::{log, Level};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::{Ema, Summary};
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Stream id a single-session connection uses for its one session.
+pub const SESSION_STREAM: u32 = 1;
+
+/// Upper bound on consecutive ignorable frames skipped while waiting
+/// for a specific one (duplicate-retransmit tolerance, not an allowance
+/// for protocol drift).
+const SKIP_BUDGET: usize = 1024;
 
 #[derive(Debug, Clone)]
 pub struct EdgeSessionConfig {
@@ -28,6 +60,8 @@ pub struct EdgeSessionConfig {
     /// channel-aware adaptive policy on measured RTTs.
     pub fixed_k: Option<usize>,
     pub seed: u64,
+    /// Give up after this many reattach attempts within one session.
+    pub max_reattach: usize,
     /// Device/cloud compute constants for the latency model's
     /// alpha_edge / T_base terms (the network terms are measured).
     pub device: &'static EdgeDevice,
@@ -44,6 +78,7 @@ impl Default for EdgeSessionConfig {
             k_max: 8,
             fixed_k: None,
             seed: 1,
+            max_reattach: 8,
             device: &JETSON_ORIN,
             cloud: &A800_70B,
         }
@@ -62,6 +97,11 @@ pub struct EdgeReport {
     pub drafted: usize,
     pub rounds: usize,
     pub wall_ms: f64,
+    /// Successful link reattaches this session survived.
+    pub reattaches: usize,
+    /// Successful resume handshakes (≤ reattaches; an open retransmit
+    /// reattaches without a resume).
+    pub resumes: usize,
     /// Measured per-round RTT (draft sent → verdict decoded).
     pub rtt_ms: Summary,
     pub k_used: Summary,
@@ -79,17 +119,341 @@ impl EdgeReport {
     }
 }
 
-async fn expect_frame<T: Transport>(t: &mut T, kind: FrameKind) -> Result<Frame> {
-    match t.recv_frame().await? {
-        Some(f) if f.kind == kind => Ok(f),
-        Some(f) => bail!("expected {kind:?}, got {:?}", f.kind),
-        None => bail!("connection closed while waiting for {kind:?}"),
+/// Process-unique open nonce (value is irrelevant to determinism; only
+/// uniqueness matters, so OS-entropy hashing is fine).
+fn fresh_nonce() -> u64 {
+    use std::collections::hash_map::RandomState;
+    use std::hash::{BuildHasher, Hasher};
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    let mut h = RandomState::new().build_hasher();
+    h.write_u64(COUNTER.fetch_add(1, Ordering::Relaxed));
+    h.finish().max(1)
+}
+
+pub(crate) fn hello_for(cfg: &EdgeSessionConfig) -> Hello {
+    Hello {
+        wire_version: WIRE_VERSION,
+        mode: cfg.mode,
+        k_max: cfg.k_max.min(255) as u8,
     }
 }
 
-/// Run one full serving session: handshake, open, adaptive decode loop,
-/// orderly Bye. Generic over transport AND draft source so the same
-/// client serves TCP/loopback and model/model-free drafts.
+/// Run the connection-scoped `Hello` handshake (once per connection,
+/// regardless of how many sessions it will carry).
+pub async fn edge_handshake<T: Transport + ?Sized>(
+    t: &mut T,
+    cfg: &EdgeSessionConfig,
+) -> Result<()> {
+    handshake_with(t, &hello_for(cfg)).await
+}
+
+pub(crate) async fn handshake_with<T: Transport + ?Sized>(
+    t: &mut T,
+    hello: &Hello,
+) -> Result<()> {
+    t.send_frame(Frame::control(FrameKind::Hello, hello.encode()))
+        .await?;
+    let ack = HelloAck::decode(&await_kind(t, FrameKind::HelloAck).await?.payload)?;
+    if !ack.accepted {
+        bail!("cloud rejected handshake: {}", ack.reason);
+    }
+    Ok(())
+}
+
+/// Wait for a frame of `want` kind, skipping harmless transport-level
+/// duplicates of earlier acks/verdicts.
+async fn await_kind<T: Transport + ?Sized>(t: &mut T, want: FrameKind) -> Result<Frame> {
+    for _ in 0..SKIP_BUDGET {
+        match t.recv_frame().await? {
+            None => bail!("connection closed while waiting for {want:?}"),
+            Some(f) if f.kind == want => return Ok(f),
+            Some(f)
+                if matches!(
+                    f.kind,
+                    FrameKind::HelloAck
+                        | FrameKind::OpenAck
+                        | FrameKind::ResumeAck
+                        | FrameKind::Verify
+                ) =>
+            {
+                log(
+                    Level::Debug,
+                    "edge",
+                    &format!("skipping stale {:?} while waiting for {want:?}", f.kind),
+                );
+            }
+            Some(f) => bail!("expected {want:?}, got {:?}", f.kind),
+        }
+    }
+    bail!("no {want:?} frame within the skip budget")
+}
+
+/// Wait for THE verdict of `round`, ignoring stale duplicates of
+/// earlier rounds (replays the cloud sent to absorb retransmits).
+async fn await_verify<T: Transport + ?Sized>(t: &mut T, round: u32) -> Result<VerifyMsg> {
+    for _ in 0..SKIP_BUDGET {
+        let f = await_kind(t, FrameKind::Verify).await?;
+        let v = VerifyMsg::decode(&f.payload)?;
+        if v.round == round {
+            return Ok(v);
+        }
+        if v.round > round {
+            bail!("verdict for future round {} (expected {round})", v.round);
+        }
+        // stale duplicate of an already-applied round: ignore
+    }
+    bail!("no verdict for round {round} within the skip budget")
+}
+
+/// Rejections the cloud made deliberately (bad token, version gate):
+/// reconnecting cannot change the verdict, so the session fails fast.
+fn is_permanent_rejection(e: &anyhow::Error) -> bool {
+    let msg = format!("{e:#}");
+    msg.contains("cloud rejected resume") || msg.contains("cloud rejected handshake")
+}
+
+/// Session state that survives reattaches.
+struct LiveSession {
+    id: u32,
+    token: u64,
+    target_seq_at_open: u64,
+    core: SessionCore,
+}
+
+/// Measured-link state + policy, persistent across reattaches.
+struct LinkStats {
+    policy: AdaptivePolicy,
+    rtt_ms: Ema,
+    goodput_bps: Ema,
+    rtt_summary: Summary,
+    k_summary: Summary,
+}
+
+impl LinkStats {
+    fn new(cfg: &EdgeSessionConfig) -> LinkStats {
+        LinkStats {
+            policy: AdaptivePolicy::new(cfg.k_max.max(1), 0.15),
+            // seeded optimistically; the first rounds correct it fast
+            rtt_ms: Ema::new(40.0, 0.3),
+            goodput_bps: Ema::new(10e6, 0.3),
+            rtt_summary: Summary::new(),
+            k_summary: Summary::new(),
+        }
+    }
+
+    fn select_k(&mut self, cfg: &EdgeSessionConfig) -> usize {
+        match cfg.fixed_k {
+            Some(k) => k.clamp(1, cfg.k_max.max(1)),
+            None => {
+                let state = ChannelState {
+                    up_bps: self.goodput_bps.get().max(1e4),
+                    down_bps: self.goodput_bps.get().max(1e4),
+                    prop_ms: (self.rtt_ms.get() / 2.0).max(0.01),
+                    fading: false,
+                    loss_rate: 0.0,
+                };
+                let lat = LatencyModel::build(&state, cfg.device, cfg.cloud, WireFormat::Compact);
+                self.policy.select_k(&lat)
+            }
+        }
+    }
+
+    fn observe_round(&mut self, rtt_now_ms: f64, air_bytes: usize, k: usize) {
+        self.rtt_ms.update(rtt_now_ms);
+        self.goodput_bps
+            .update(air_bytes as f64 * 8.0 / (rtt_now_ms / 1e3).max(1e-6));
+        self.rtt_summary.add(rtt_now_ms);
+        self.k_summary.add(k as f64);
+    }
+}
+
+/// Run one full serving session on an already-handshaked connection:
+/// open (or resume, after reattaches), adaptive decode loop, orderly
+/// Bye — all frames on the given stream. Generic over transport AND
+/// draft source so the same client serves TCP/loopback/mux and
+/// model/model-free drafts.
+pub async fn run_session_on<T, D>(
+    t: &mut T,
+    stream: u32,
+    draft: &mut D,
+    prompt: &[i32],
+    cfg: &EdgeSessionConfig,
+) -> Result<EdgeReport>
+where
+    T: Transport + ?Sized,
+    D: DraftSource + ?Sized,
+{
+    let t0 = Instant::now();
+    let nonce = fresh_nonce();
+    let mut sess: Option<LiveSession> = None;
+    let mut stats = LinkStats::new(cfg);
+    let mut rng = SplitMix64::new(cfg.seed ^ (0x3000 + stream as u64));
+    let mut reattaches = 0usize;
+    let mut resumes = 0usize;
+
+    loop {
+        match attempt_session(
+            t, stream, &mut sess, draft, prompt, cfg, nonce, &mut stats, &mut rng, &mut resumes,
+        )
+        .await
+        {
+            Ok(()) => break,
+            Err(e) => {
+                // permanent protocol rejections cannot be cured by a
+                // fresh link: fail fast instead of hammering the server
+                if is_permanent_rejection(&e) {
+                    return Err(e);
+                }
+                reattaches += 1;
+                if reattaches > cfg.max_reattach {
+                    return Err(e.context(format!(
+                        "giving up after {} reattach attempts",
+                        cfg.max_reattach
+                    )));
+                }
+                match t.reattach().await {
+                    Ok(true) => {
+                        log(
+                            Level::Debug,
+                            "edge",
+                            &format!("stream {stream}: reattached after: {e:#}"),
+                        );
+                        continue;
+                    }
+                    // no reconnect support on this transport: the
+                    // original link error stands
+                    Ok(false) => return Err(e),
+                    Err(re) => {
+                        // the reattach itself died (a fault can land on
+                        // the fresh link's handshake): retry within the
+                        // same budget; exhaustion surfaces the error
+                        log(
+                            Level::Debug,
+                            "edge",
+                            &format!("stream {stream}: reattach failed, retrying: {re:#}"),
+                        );
+                        continue;
+                    }
+                }
+            }
+        }
+    }
+
+    let st = sess.ok_or_else(|| anyhow!("session finished without opening"))?;
+    Ok(EdgeReport {
+        session: st.id,
+        target_seq_at_open: st.target_seq_at_open,
+        new_tokens: st.core.new_tokens,
+        accepted: st.core.accepted,
+        drafted: st.core.drafted,
+        rounds: st.core.rounds,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        reattaches,
+        resumes,
+        rtt_ms: stats.rtt_summary,
+        k_used: stats.k_summary,
+        committed: st.core.committed,
+    })
+}
+
+/// One attachment's worth of work: open or resume, then decode until
+/// done (or until the link dies, in which case the caller reattaches
+/// and calls again — `sess` carries the state across).
+#[allow(clippy::too_many_arguments)]
+async fn attempt_session<T, D>(
+    t: &mut T,
+    stream: u32,
+    sess: &mut Option<LiveSession>,
+    draft: &mut D,
+    prompt: &[i32],
+    cfg: &EdgeSessionConfig,
+    nonce: u64,
+    stats: &mut LinkStats,
+    rng: &mut SplitMix64,
+    resumes: &mut usize,
+) -> Result<()>
+where
+    T: Transport + ?Sized,
+    D: DraftSource + ?Sized,
+{
+    match sess.as_mut() {
+        None => {
+            // --- open (idempotent via nonce) --------------------------
+            let open = OpenMsg {
+                prompt: prompt.to_vec(),
+                max_new: cfg.max_new as u32,
+                nonce,
+            };
+            t.send_frame(Frame::on(stream, FrameKind::Open, open.encode()))
+                .await?;
+            let ack = OpenAck::decode(&await_kind(t, FrameKind::OpenAck).await?.payload)?;
+            draft.on_prompt(prompt.len());
+            // reseed per SERVER-assigned id so concurrent sessions draw
+            // independent sampling streams regardless of their local
+            // stream ids (every dedicated connection uses stream 1)
+            *rng = SplitMix64::new(cfg.seed ^ (0x3000 + ack.session as u64));
+            *sess = Some(LiveSession {
+                id: ack.session,
+                token: ack.resume_token,
+                target_seq_at_open: ack.target_seq,
+                core: SessionCore::new(ack.session, prompt, cfg.max_new),
+            });
+        }
+        Some(st) => {
+            // --- resume from the committed prefix ---------------------
+            let msg = ResumeMsg {
+                token: st.token,
+                committed_len: st.core.committed.len() as u64,
+            };
+            t.send_frame(Frame::on(stream, FrameKind::Resume, msg.encode()))
+                .await?;
+            let ack = ResumeAck::decode(&await_kind(t, FrameKind::ResumeAck).await?.payload)?;
+            if !ack.accepted {
+                bail!("cloud rejected resume: {}", ack.reason);
+            }
+            *resumes += 1;
+            st.core.fast_forward(&ack.tail, ack.rounds as usize, ack.done);
+        }
+    }
+
+    // --- decode loop -------------------------------------------------
+    let st = sess.as_mut().expect("session is live after open/resume");
+    while !st.core.done {
+        let k = stats.select_k(cfg);
+        let prop = draft.propose(&st.core.committed, k, cfg.temperature, cfg.top_p, rng)?;
+        let round = st.core.rounds as u32;
+        let msg = DraftMsg {
+            session: st.id,
+            round,
+            tokens: prop.tokens.clone(),
+            chosen_probs: prop.chosen_probs,
+            mode: cfg.mode,
+            wire: WireFormat::Compact,
+        };
+        let air_up = msg.air_bytes();
+        let sent = Instant::now();
+        t.send_frame(Frame::on(stream, FrameKind::Draft, msg.encode()))
+            .await?;
+        let v = await_verify(t, round).await?;
+
+        // measure the link this round actually saw
+        let rtt_now = sent.elapsed().as_secs_f64() * 1e3;
+        stats.observe_round(rtt_now, air_up + v.air_bytes(), prop.tokens.len());
+
+        let tau = (v.tau as usize).min(prop.tokens.len());
+        if !prop.tokens.is_empty() {
+            stats.policy.observe(tau, prop.tokens.len());
+        }
+        st.core.apply_verdict(&prop.tokens, tau, v.correction, v.eos, false);
+    }
+    t.send_frame(Frame::on(stream, FrameKind::Bye, vec![]))
+        .await?;
+    Ok(())
+}
+
+/// Run one full serving session over a dedicated connection: `Hello`
+/// handshake, then the (resumable) session loop on stream
+/// [`SESSION_STREAM`].
 pub async fn run_edge_session<T, D>(
     t: &mut T,
     draft: &mut D,
@@ -97,103 +461,105 @@ pub async fn run_edge_session<T, D>(
     cfg: &EdgeSessionConfig,
 ) -> Result<EdgeReport>
 where
-    T: Transport,
+    T: Transport + ?Sized,
     D: DraftSource + ?Sized,
 {
-    let t0 = Instant::now();
-
-    // --- handshake ---------------------------------------------------
-    let hello = Hello {
-        wire_version: WIRE_VERSION,
-        mode: cfg.mode,
-        k_max: cfg.k_max.min(255) as u8,
-    };
-    t.send_frame(Frame::new(FrameKind::Hello, hello.encode()))
-        .await?;
-    let ack = HelloAck::decode(&expect_frame(t, FrameKind::HelloAck).await?.payload)?;
-    if !ack.accepted {
-        bail!("cloud rejected handshake: {}", ack.reason);
-    }
-
-    // --- open session ------------------------------------------------
-    let open = OpenMsg {
-        prompt: prompt.to_vec(),
-        max_new: cfg.max_new as u32,
-    };
-    t.send_frame(Frame::new(FrameKind::Open, open.encode()))
-        .await?;
-    let ack = OpenAck::decode(&expect_frame(t, FrameKind::OpenAck).await?.payload)?;
-    let id = ack.session;
-
-    let mut core = SessionCore::new(id, prompt, cfg.max_new);
-    draft.on_prompt(prompt.len());
-    let mut policy = AdaptivePolicy::new(cfg.k_max.max(1), 0.15);
-    let mut rng = SplitMix64::new(cfg.seed ^ (0x3000 + id as u64));
-
-    // Measured link state. Seeded optimistically; the first rounds
-    // correct it fast (EMA mu = 0.3).
-    let mut rtt_ms = Ema::new(40.0, 0.3);
-    let mut goodput_bps = Ema::new(10e6, 0.3);
-
-    let mut rtt_summary = Summary::new();
-    let mut k_summary = Summary::new();
-
-    // --- decode loop -------------------------------------------------
-    while !core.done {
-        let k = match cfg.fixed_k {
-            Some(k) => k.clamp(1, cfg.k_max.max(1)),
-            None => {
-                let state = ChannelState {
-                    up_bps: goodput_bps.get().max(1e4),
-                    down_bps: goodput_bps.get().max(1e4),
-                    prop_ms: (rtt_ms.get() / 2.0).max(0.01),
-                    fading: false,
-                    loss_rate: 0.0,
-                };
-                let lat = LatencyModel::build(&state, cfg.device, cfg.cloud, WireFormat::Compact);
-                policy.select_k(&lat)
-            }
-        };
-        let prop = draft.propose(&core.committed, k, cfg.temperature, cfg.top_p, &mut rng)?;
-        let msg = DraftMsg {
-            session: id,
-            round: core.rounds as u32,
-            tokens: prop.tokens.clone(),
-            chosen_probs: prop.chosen_probs,
-            mode: cfg.mode,
-            wire: WireFormat::Compact,
-        };
-        let sent = Instant::now();
-        t.send_frame(Frame::new(FrameKind::Draft, msg.encode()))
-            .await?;
-        let v = VerifyMsg::decode(&expect_frame(t, FrameKind::Verify).await?.payload)?;
-
-        // measure the link this round actually saw
-        let rtt_now = sent.elapsed().as_secs_f64() * 1e3;
-        rtt_ms.update(rtt_now);
-        let bytes = (msg.air_bytes() + v.air_bytes()) as f64;
-        goodput_bps.update(bytes * 8.0 / (rtt_now / 1e3).max(1e-6));
-        rtt_summary.add(rtt_now);
-        k_summary.add(prop.tokens.len() as f64);
-
-        let tau = (v.tau as usize).min(prop.tokens.len());
-        if !prop.tokens.is_empty() {
-            policy.observe(tau, prop.tokens.len());
+    if let Err(e) = edge_handshake(t, cfg).await {
+        // a link fault during the very first handshake: one reattach
+        // (which redials AND replays the Hello) before giving up
+        if !t.reattach().await.unwrap_or(false) {
+            return Err(e);
         }
-        core.apply_verdict(&prop.tokens, tau, v.correction, v.eos, false);
     }
-    t.send_frame(Frame::new(FrameKind::Bye, vec![])).await?;
+    run_session_on(t, SESSION_STREAM, draft, prompt, cfg).await
+}
 
-    Ok(EdgeReport {
-        session: id,
-        target_seq_at_open: ack.target_seq,
-        new_tokens: core.new_tokens,
-        accepted: core.accepted,
-        drafted: core.drafted,
-        rounds: core.rounds,
-        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-        rtt_ms: rtt_summary,
-        k_used: k_summary,
-        committed: core.committed,
-    })
+// ---------------------------------------------------------------------
+// Reconnect-capable single-connection transport
+// ---------------------------------------------------------------------
+
+/// A `Transport` that can replace its underlying connection: on
+/// `reattach` it redials through the [`Reconnect`] factory and replays
+/// the `Hello` handshake, after which the session loop replays its own
+/// `Resume`. One session per connection (for many, use
+/// [`mux::EdgeMux`](super::mux::EdgeMux), whose streams reattach
+/// through the shared pump instead).
+pub struct ResumableTransport {
+    inner: Option<Box<dyn Transport>>,
+    dial: Box<dyn Reconnect>,
+    hello: Hello,
+}
+
+impl ResumableTransport {
+    /// Adopt an already-connected (but not yet handshaked) transport;
+    /// the session runner performs the first `Hello` as usual.
+    pub fn new(
+        initial: Box<dyn Transport>,
+        dial: Box<dyn Reconnect>,
+        cfg: &EdgeSessionConfig,
+    ) -> ResumableTransport {
+        ResumableTransport {
+            inner: Some(initial),
+            dial,
+            hello: hello_for(cfg),
+        }
+    }
+
+    /// Dial the first connection through the factory.
+    pub async fn connect(
+        mut dial: Box<dyn Reconnect>,
+        cfg: &EdgeSessionConfig,
+    ) -> Result<ResumableTransport> {
+        let t = dial.connect().await?;
+        Ok(ResumableTransport {
+            inner: Some(t),
+            dial,
+            hello: hello_for(cfg),
+        })
+    }
+
+    fn live(&mut self) -> Result<&mut Box<dyn Transport>> {
+        self.inner
+            .as_mut()
+            .ok_or_else(|| anyhow!("link is down (reattach first)"))
+    }
+}
+
+impl Transport for ResumableTransport {
+    fn send_frame(&mut self, frame: Frame) -> BoxFuture<'_, Result<()>> {
+        Box::pin(async move {
+            let r = self.live()?.send_frame(frame).await;
+            if r.is_err() {
+                self.inner = None;
+            }
+            r
+        })
+    }
+
+    fn recv_frame(&mut self) -> BoxFuture<'_, Result<Option<Frame>>> {
+        Box::pin(async move {
+            let r = self.live()?.recv_frame().await;
+            if r.is_err() {
+                self.inner = None;
+            }
+            r
+        })
+    }
+
+    fn peer(&self) -> String {
+        match &self.inner {
+            Some(t) => format!("resumable:{}", t.peer()),
+            None => "resumable:<down>".into(),
+        }
+    }
+
+    fn reattach(&mut self) -> BoxFuture<'_, Result<bool>> {
+        Box::pin(async move {
+            self.inner = None;
+            let mut t = self.dial.connect().await?;
+            handshake_with(&mut *t, &self.hello).await?;
+            self.inner = Some(t);
+            Ok(true)
+        })
+    }
 }

@@ -1,0 +1,454 @@
+//! Deterministic fault injection for any [`Transport`]: seeded
+//! drop/delay/duplicate/disconnect schedules, so every link failure mode
+//! the resume machinery must survive is reproducible in-process.
+//!
+//! `FaultTransport` wraps one endpoint (conventionally the edge end) of
+//! a transport and consults a shared, seeded [`FaultPlan`] on every
+//! frame event (each send and each delivery):
+//!
+//! * **Deliver** — pass through untouched.
+//! * **Duplicate** — deliver the frame twice (a transport-level
+//!   retransmit; the protocol's round/nonce dedup must absorb it).
+//! * **Delay** — hold the frame for a `StochasticChannel`-sampled air
+//!   time before delivering (ordering is preserved; batching windows
+//!   shift, token trajectories must not).
+//! * **DropAndDisconnect** — the link dies *here*: the in-flight frame
+//!   is lost and the underlying transport is dropped, so the peer sees
+//!   EOF and parks the connection's sessions while this side surfaces an
+//!   error on its next operation — exactly the shape of a mid-round
+//!   link drop ("drop mid-draft" when it lands on a send, "drop
+//!   mid-verify-reply" when it lands on a delivery).
+//!
+//! The plan is SHARED across reconnects (`Arc<Mutex<FaultPlan>>`): an
+//! edge-side reconnector wraps each fresh connection in a new
+//! `FaultTransport` over the same plan, so disconnect schedules span the
+//! whole session ("force ≥1 disconnect, then let it finish") and the
+//! whole run replays bit-identically for a fixed seed.
+
+use super::transport::{loopback_pair, BoxFuture, Reconnect, Transport};
+use super::verifier::VerifierHandle;
+use crate::channel::{Channel, StochasticChannel};
+use crate::protocol::frame::{Frame, FRAME_HEAD};
+use crate::util::rng::SplitMix64;
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
+
+/// What happens to one frame event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOp {
+    Deliver,
+    Duplicate,
+    Delay,
+    DropAndDisconnect,
+}
+
+/// Which frame events a scheduled disconnect may land on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSide {
+    /// Only on sends — the classic "draft lost in flight".
+    Send,
+    /// Only on deliveries — "verify reply lost in flight".
+    Recv,
+    /// Whichever event the countdown expires on.
+    Any,
+}
+
+/// Seeded fault schedule configuration.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    pub seed: u64,
+    /// P(duplicate) per frame event.
+    pub dup_p: f64,
+    /// P(channel-sampled delay) per frame event.
+    pub delay_p: f64,
+    /// Forced disconnects across the whole plan; after the quota the
+    /// link stays clean so sessions always finish.
+    pub max_disconnects: usize,
+    /// Each disconnect fires a seeded number of frame events after the
+    /// previous one, drawn uniformly from this inclusive range. Keep the
+    /// lower bound ≥ 4 to let the open handshake (Hello/HelloAck/Open/
+    /// OpenAck) land at least once before the first drop.
+    pub disconnect_gap: (usize, usize),
+    /// Restrict which event kind disconnects land on.
+    pub disconnect_on: FaultSide,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 1,
+            dup_p: 0.0,
+            delay_p: 0.0,
+            max_disconnects: 1,
+            disconnect_gap: (5, 24),
+            disconnect_on: FaultSide::Any,
+        }
+    }
+}
+
+/// Deterministic schedule shared by every connection of one edge.
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    rng: SplitMix64,
+    chan: StochasticChannel,
+    /// Frame events remaining until the next scheduled disconnect
+    /// (`None` once the quota is exhausted).
+    until_disconnect: Option<usize>,
+    /// Total frame events observed (drives channel sampling times).
+    events: u64,
+    /// Disconnects injected so far.
+    pub disconnects: usize,
+    /// Duplicates injected so far.
+    pub duplicates: usize,
+    /// Delays injected so far.
+    pub delays: usize,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig, chan: StochasticChannel) -> FaultPlan {
+        let mut rng = SplitMix64::new(cfg.seed ^ 0xFA_017_FA_017);
+        let until_disconnect = if cfg.max_disconnects > 0 {
+            Some(draw_gap(&mut rng, cfg.disconnect_gap))
+        } else {
+            None
+        };
+        FaultPlan {
+            cfg,
+            rng,
+            chan,
+            until_disconnect,
+            events: 0,
+            disconnects: 0,
+            duplicates: 0,
+            delays: 0,
+        }
+    }
+
+    /// Shared handle for wiring one plan through many reconnects.
+    pub fn shared(cfg: FaultConfig, chan: StochasticChannel) -> Arc<Mutex<FaultPlan>> {
+        Arc::new(Mutex::new(FaultPlan::new(cfg, chan)))
+    }
+
+    /// Decide the fate of one frame event on the given side.
+    fn next_op(&mut self, send: bool) -> FaultOp {
+        self.events += 1;
+        if let Some(n) = self.until_disconnect {
+            let side_ok = match self.cfg.disconnect_on {
+                FaultSide::Send => send,
+                FaultSide::Recv => !send,
+                FaultSide::Any => true,
+            };
+            if n == 0 && side_ok {
+                self.disconnects += 1;
+                self.until_disconnect = if self.disconnects < self.cfg.max_disconnects {
+                    Some(draw_gap(&mut self.rng, self.cfg.disconnect_gap))
+                } else {
+                    None
+                };
+                return FaultOp::DropAndDisconnect;
+            }
+            self.until_disconnect = Some(n.saturating_sub(1));
+        }
+        if self.rng.chance(self.cfg.dup_p) {
+            self.duplicates += 1;
+            FaultOp::Duplicate
+        } else if self.rng.chance(self.cfg.delay_p) {
+            self.delays += 1;
+            FaultOp::Delay
+        } else {
+            FaultOp::Deliver
+        }
+    }
+
+    /// Injected delay for one frame, from the wireless-channel model
+    /// (capped so tests stay fast; the value, not the cap, is seeded).
+    fn delay_ms(&mut self, bytes: usize) -> f64 {
+        let st = self.chan.sample(self.events as f64);
+        (st.prop_ms + st.up_ms(bytes)).min(4.0)
+    }
+}
+
+/// On-the-wire size of a frame without encoding it: length prefix (4)
+/// + frame head + payload (kept in lockstep with the codec via
+/// `FRAME_HEAD`).
+fn wire_len(f: &Frame) -> usize {
+    4 + FRAME_HEAD + f.payload.len()
+}
+
+/// A [`Reconnect`] factory producing fresh in-process loopback
+/// connections to `verifier` — each served by the REAL connection
+/// handler (`cloud::handle_conn`) — with the edge end wrapped in a
+/// [`FaultTransport`] over the SHARED plan, so disconnect schedules
+/// span reconnects. This is the standard wiring for fault-injection
+/// tests and demos (`tests/serve_faults.rs`, `examples/serve_tcp.rs`).
+pub fn loopback_fault_dial(
+    verifier: VerifierHandle,
+    plan: Arc<Mutex<FaultPlan>>,
+) -> Box<dyn Reconnect> {
+    Box::new(move || -> BoxFuture<'static, Result<Box<dyn Transport>>> {
+        let v = verifier.clone();
+        let plan = plan.clone();
+        Box::pin(async move {
+            let (edge_t, cloud_t) = loopback_pair();
+            tokio::spawn(async move {
+                // conn errors under injected faults are expected; the
+                // verifier parks the sessions and the edge resumes
+                let _ = super::cloud::handle_conn(cloud_t, v).await;
+            });
+            Ok(Box::new(FaultTransport::new(Box::new(edge_t), plan)) as Box<dyn Transport>)
+        })
+    })
+}
+
+fn draw_gap(rng: &mut SplitMix64, (lo, hi): (usize, usize)) -> usize {
+    let hi = hi.max(lo);
+    lo + rng.next_range((hi - lo + 1) as u64) as usize
+}
+
+/// A [`Transport`] wrapper that injects the plan's faults.
+pub struct FaultTransport {
+    inner: Option<Box<dyn Transport>>,
+    plan: Arc<Mutex<FaultPlan>>,
+    /// Copy of the last delivered frame pending re-delivery.
+    pending_dup: Option<Frame>,
+    /// Frame held across an injected inbound delay. `recv_frame` may be
+    /// polled inside `select!` (the mux pump does); if the future is
+    /// cancelled mid-sleep the frame survives here and is delivered by
+    /// the next call instead of being silently lost.
+    pending_delay: Option<Frame>,
+    label: String,
+}
+
+impl FaultTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: Arc<Mutex<FaultPlan>>) -> FaultTransport {
+        let label = format!("faulty:{}", inner.peer());
+        FaultTransport {
+            inner: Some(inner),
+            plan,
+            pending_dup: None,
+            pending_delay: None,
+            label,
+        }
+    }
+}
+
+impl Transport for FaultTransport {
+    fn send_frame(&mut self, frame: Frame) -> BoxFuture<'_, Result<()>> {
+        Box::pin(async move {
+            let Some(inner) = self.inner.as_mut() else {
+                bail!("{}: link is down (injected disconnect)", self.label);
+            };
+            let (op, delay) = {
+                let mut p = self.plan.lock().expect("fault plan poisoned");
+                let op = p.next_op(true);
+                let delay = if op == FaultOp::Delay {
+                    p.delay_ms(wire_len(&frame))
+                } else {
+                    0.0
+                };
+                (op, delay)
+            };
+            match op {
+                FaultOp::Deliver => inner.send_frame(frame).await,
+                FaultOp::Duplicate => {
+                    inner.send_frame(frame.clone()).await?;
+                    inner.send_frame(frame).await
+                }
+                FaultOp::Delay => {
+                    tokio::time::sleep(std::time::Duration::from_secs_f64(delay / 1e3)).await;
+                    inner.send_frame(frame).await
+                }
+                FaultOp::DropAndDisconnect => {
+                    // the frame is lost in flight and the link dies:
+                    // dropping the inner transport shows the peer EOF;
+                    // locally the write "succeeded" (like a socket whose
+                    // buffer took the bytes) and death surfaces on the
+                    // next receive
+                    self.inner = None;
+                    Ok(())
+                }
+            }
+        })
+    }
+
+    fn recv_frame(&mut self) -> BoxFuture<'_, Result<Option<Frame>>> {
+        Box::pin(async move {
+            if let Some(f) = self.pending_dup.take() {
+                return Ok(Some(f));
+            }
+            if let Some(f) = self.pending_delay.take() {
+                // a previous delayed delivery was cancelled mid-sleep:
+                // the frame is overdue, deliver it immediately
+                return Ok(Some(f));
+            }
+            let Some(inner) = self.inner.as_mut() else {
+                bail!("{}: link is down (injected disconnect)", self.label);
+            };
+            let Some(frame) = inner.recv_frame().await? else {
+                return Ok(None);
+            };
+            let (op, delay) = {
+                let mut p = self.plan.lock().expect("fault plan poisoned");
+                let op = p.next_op(false);
+                let delay = if op == FaultOp::Delay {
+                    p.delay_ms(wire_len(&frame))
+                } else {
+                    0.0
+                };
+                (op, delay)
+            };
+            match op {
+                FaultOp::Deliver => Ok(Some(frame)),
+                FaultOp::Duplicate => {
+                    self.pending_dup = Some(frame.clone());
+                    Ok(Some(frame))
+                }
+                FaultOp::Delay => {
+                    // cancellation-safe: the frame lives in self while we
+                    // sleep, so a select! cancelling this future cannot
+                    // lose it
+                    self.pending_delay = Some(frame);
+                    tokio::time::sleep(std::time::Duration::from_secs_f64(delay / 1e3)).await;
+                    Ok(self.pending_delay.take())
+                }
+                FaultOp::DropAndDisconnect => {
+                    // the delivery is lost and the link dies on the spot
+                    self.inner = None;
+                    bail!("{}: link dropped while receiving (injected)", self.label);
+                }
+            }
+        })
+    }
+
+    fn peer(&self) -> String {
+        self.label.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{NetworkKind, NetworkProfile};
+    use crate::protocol::frame::FrameKind;
+    use crate::serve::transport::loopback_pair;
+
+    fn rt() -> tokio::runtime::Runtime {
+        tokio::runtime::Builder::new_current_thread()
+            .enable_all()
+            .build()
+            .unwrap()
+    }
+
+    fn chan(seed: u64) -> StochasticChannel {
+        NetworkProfile::new(NetworkKind::FourG).channel(seed)
+    }
+
+    #[test]
+    fn schedules_are_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut p = FaultPlan::new(
+                FaultConfig {
+                    seed,
+                    dup_p: 0.2,
+                    delay_p: 0.2,
+                    max_disconnects: 3,
+                    disconnect_gap: (2, 9),
+                    disconnect_on: FaultSide::Any,
+                },
+                chan(seed),
+            );
+            (0..200)
+                .map(|i| p.next_op(i % 2 == 0))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5), "same seed must replay the same schedule");
+        assert_ne!(run(5), run(6), "different seeds must differ");
+        let ops = run(5);
+        assert_eq!(
+            ops.iter().filter(|o| **o == FaultOp::DropAndDisconnect).count(),
+            3,
+            "exactly max_disconnects disconnects"
+        );
+        assert!(ops.iter().any(|o| *o == FaultOp::Duplicate));
+    }
+
+    #[test]
+    fn disconnect_side_restriction_is_honored() {
+        let mut p = FaultPlan::new(
+            FaultConfig {
+                seed: 9,
+                max_disconnects: 2,
+                disconnect_gap: (0, 0),
+                disconnect_on: FaultSide::Recv,
+                ..Default::default()
+            },
+            chan(9),
+        );
+        // countdown expires immediately but the next events are sends:
+        // the disconnect must wait for a recv event
+        assert_eq!(p.next_op(true), FaultOp::Deliver);
+        assert_eq!(p.next_op(true), FaultOp::Deliver);
+        assert_eq!(p.next_op(false), FaultOp::DropAndDisconnect);
+    }
+
+    #[test]
+    fn drop_on_send_loses_frame_and_shows_peer_eof() {
+        rt().block_on(async {
+            let (edge, mut cloud) = loopback_pair();
+            let plan = FaultPlan::shared(
+                FaultConfig {
+                    seed: 1,
+                    max_disconnects: 1,
+                    disconnect_gap: (1, 1),
+                    disconnect_on: FaultSide::Send,
+                    ..Default::default()
+                },
+                chan(1),
+            );
+            let mut faulty = FaultTransport::new(Box::new(edge), plan.clone());
+            // event 1: delivered; event 2: dropped + link death
+            faulty
+                .send_frame(Frame::on(1, FrameKind::Draft, vec![1]))
+                .await
+                .unwrap();
+            faulty
+                .send_frame(Frame::on(1, FrameKind::Draft, vec![2]))
+                .await
+                .unwrap(); // lost in flight, no local error yet
+            assert!(faulty.recv_frame().await.is_err(), "link must be down");
+            assert!(faulty
+                .send_frame(Frame::on(1, FrameKind::Draft, vec![3]))
+                .await
+                .is_err());
+            // the peer got frame 1 and then a clean EOF
+            let got = cloud.recv_frame().await.unwrap().unwrap();
+            assert_eq!(got.payload, vec![1]);
+            assert!(cloud.recv_frame().await.unwrap().is_none());
+            assert_eq!(plan.lock().unwrap().disconnects, 1);
+        });
+    }
+
+    #[test]
+    fn duplicate_on_recv_delivers_twice() {
+        rt().block_on(async {
+            let (mut edge, cloud) = loopback_pair();
+            let plan = FaultPlan::shared(
+                FaultConfig {
+                    seed: 2,
+                    dup_p: 1.0,
+                    max_disconnects: 0,
+                    ..Default::default()
+                },
+                chan(2),
+            );
+            let mut faulty = FaultTransport::new(Box::new(cloud), plan);
+            edge.send_frame(Frame::on(1, FrameKind::Verify, vec![7]))
+                .await
+                .unwrap();
+            let a = faulty.recv_frame().await.unwrap().unwrap();
+            let b = faulty.recv_frame().await.unwrap().unwrap();
+            assert_eq!(a, b, "duplicate must be byte-identical");
+            assert_eq!(a.payload, vec![7]);
+        });
+    }
+}

@@ -6,14 +6,15 @@
 //! (`protocol::{DraftMsg, VerifyMsg}` in length-prefixed frames,
 //! `protocol::frame`) over real connections:
 //!
-//! * [`transport`] — the object-safe [`Transport`] trait with two
+//! * [`transport`] — the object-safe [`Transport`] trait with two base
 //!   implementations: [`TcpTransport`] (real sockets, TCP_NODELAY) and
 //!   [`LoopbackTransport`] (in-process pair, optionally metered through
-//!   the deterministic wireless-channel simulation).
+//!   the deterministic wireless-channel simulation) — plus the
+//!   [`Reconnect`] connection-factory trait the resumable wrappers use.
 //! * [`session`] — transport-agnostic state machines shared with the
 //!   simulator: [`BatchWindow`] (dynamic verification batching) and
 //!   [`SessionCore`] (per-session commit bookkeeping both endpoints
-//!   mirror).
+//!   mirror, including the resume fast-forward).
 //! * [`backend`] — pluggable cloud verification: the PJRT
 //!   [`EngineBackend`] (KV sessions + LoRA hot-swap, artifact-gated) and
 //!   the deterministic [`SyntheticTarget`]/[`SyntheticDraft`] pair whose
@@ -23,20 +24,81 @@
 //! * [`verifier`] — the cloud session manager + cross-connection batcher
 //!   on a dedicated OS thread (PJRT handles are `!Send`), exposed to
 //!   tokio through the async [`VerifierHandle`].
-//! * [`cloud`] / [`edge`] — the accept loop + per-connection protocol
+//! * [`cloud`] / [`edge`] — the accept loop + per-connection demux
 //!   (`handle_conn`, shared by TCP and loopback), and the edge client
 //!   running the channel-aware adaptive stride policy against *measured*
 //!   round-trip times.
+//! * [`mux`] / [`fault`] — the edge-side connection multiplexer and the
+//!   deterministic fault-injection transport (below).
+//!
+//! # Multiplexed wire format (wire v2)
+//!
+//! Every frame is `[len: u32 le][kind: u8][stream: u32 le][payload]`.
+//! Stream 0 is reserved for connection control (`Hello`/`HelloAck`,
+//! once per connection); each session binds one nonzero stream with
+//! `Open` (or `Resume`) and all its `Draft`/`Verify`/`Bye` traffic
+//! carries that id. The cloud demux (`cloud::handle_conn`) verifies
+//! drafts from different streams CONCURRENTLY into the shared batching
+//! window, so N sessions on one socket batch exactly like N sockets;
+//! the edge-side [`EdgeMux`] hands out per-session [`MuxStream`]s that
+//! implement [`Transport`], so session code is mux-agnostic.
+//!
+//! # Reconnect-and-resume state machine
+//!
+//! ```text
+//! cloud session:  ATTACHED ──link died──▶ PARKED ──grace over──▶ EVICTED
+//!                    ▲                      │
+//!                    └──────Resume──────────┘        (KV state kept)
+//!                 finished ──▶ RESIDUE(grace) — final tail still fetchable
+//!
+//! edge session:   decode ──error──▶ reattach ──▶ Resume{token, len}
+//!                   ▲                                   │
+//!                   └── fast_forward(tail, rounds) ◀────┘
+//! ```
+//!
+//! `OpenAck` carries a resume token; on reconnect the edge replays
+//! `Resume{token, committed_len}` and the cloud answers with the
+//! committed TAIL it applied while the link was down (the server can
+//! only ever be ahead). Decoding continues from the committed prefix —
+//! no retraining, no re-sync: the paper's frozen-draft/evolving-target
+//! decoupling applied to the link layer. Duplicate `Open`s are deduped
+//! by client nonce; duplicate drafts are answered from the verifier's
+//! per-session verdict cache; eviction uses a strict per-session
+//! deadline so a resume inside the grace window can never lose the
+//! race (pinned by `verifier::tests::reconnect_within_grace_cannot_
+//! race_eviction`).
+//!
+//! # Fault-testing recipe
+//!
+//! Wrap any transport in a [`FaultTransport`] over a seeded, shared
+//! [`FaultPlan`]: per frame event it delivers, duplicates, delays
+//! (channel-model sampled), or kills the link (dropping the in-flight
+//! frame). Schedules are deterministic per seed and span reconnects, so
+//! `tests/serve_faults.rs` asserts that under forced disconnects the
+//! committed token sequences stay IDENTICAL to the fault-free
+//! `scheduler::serve_with` trajectory. E.g.:
+//!
+//! ```ignore
+//! let plan = FaultPlan::shared(FaultConfig { seed, max_disconnects: 2,
+//!     disconnect_on: FaultSide::Send, ..Default::default() }, channel);
+//! let dial = move || -> BoxFuture<'static, Result<Box<dyn Transport>>> { /* fresh conn */ };
+//! let mut t = ResumableTransport::connect(Box::new(dial), &ecfg).await?;
+//! let report = run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await?;
+//! assert_eq!(report.committed, fault_free_committed);
+//! ```
 //!
 //! Determinism contract: with a [`SyntheticTarget`] backend and a fixed
-//! stride, `serve_loopback`, the TCP path, and
+//! stride, `serve_loopback`, `serve_loopback_mux`, the TCP path, and
 //! `coordinator::scheduler::serve_with` commit identical per-session
-//! token/acceptance counts for a fixed seed (pinned by
-//! `tests/serve_loopback.rs` and `examples/serve_tcp.rs`).
+//! token/acceptance counts for a fixed seed — and with a seeded
+//! `FaultTransport` forcing disconnects, identical committed sequences
+//! (pinned by `tests/serve_loopback.rs` and `tests/serve_faults.rs`).
 
 pub mod backend;
 pub mod cloud;
 pub mod edge;
+pub mod fault;
+pub mod mux;
 pub mod session;
 pub mod transport;
 pub mod verifier;
@@ -44,11 +106,18 @@ pub mod verifier;
 pub use backend::{
     BackendVerdict, EngineBackend, SyntheticDraft, SyntheticTarget, VerifyBackend,
 };
-pub use cloud::{handle_conn, serve_cloud, serve_loopback, ServerHandle};
-pub use edge::{run_edge_session, EdgeReport, EdgeSessionConfig};
+pub use cloud::{handle_conn, serve_cloud, serve_loopback, serve_loopback_mux, ServerHandle};
+pub use edge::{
+    edge_handshake, run_edge_session, run_session_on, EdgeReport, EdgeSessionConfig,
+    ResumableTransport, SESSION_STREAM,
+};
+pub use fault::{loopback_fault_dial, FaultConfig, FaultOp, FaultPlan, FaultSide, FaultTransport};
+pub use mux::{EdgeMux, MuxStream};
 pub use session::{BatchDecision, BatchWindow, SessionCore, SessionOutcome};
 pub use transport::{
-    loopback_pair, loopback_pair_with_channel, AirtimeLedger, LoopbackTransport, TcpTransport,
-    Transport,
+    loopback_pair, loopback_pair_with_channel, AirtimeLedger, LoopbackTransport, Reconnect,
+    TcpTransport, Transport,
 };
-pub use verifier::{VerifierConfig, VerifierCore, VerifierHandle};
+pub use verifier::{
+    OpenInfo, ResumeInfo, SubmitOutcome, VerifierConfig, VerifierCore, VerifierHandle,
+};

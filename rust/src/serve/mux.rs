@@ -1,0 +1,544 @@
+//! Edge-side connection multiplexer: N sessions over ONE transport.
+//!
+//! [`EdgeMux`] owns the real connection through a background *pump* task
+//! and hands out per-session [`MuxStream`] handles that implement
+//! [`Transport`] themselves, so the per-session client code
+//! (`edge::run_session_on`) is written once and runs identically over a
+//! dedicated connection or a multiplexed one:
+//!
+//! ```text
+//!  session task 1 ──┐ MuxStream (stream 1)
+//!  session task 2 ──┤ MuxStream (stream 2)      ┌────────────────┐
+//!        ...        ├──── out queue ───▶ pump ──┤ one Transport  │──▶ cloud
+//!  session task N ──┘ ◀── per-stream in queues ─┤ (TCP/loopback) │
+//!                                               └────────────────┘
+//! ```
+//!
+//! The pump performs the connection-scoped `Hello` handshake once,
+//! stamps outbound frames with their stream id, and demuxes inbound
+//! frames by stream id. When the transport dies it (a) notifies every
+//! stream with a generation-tagged reset, (b) redials through the
+//! optional [`Reconnect`] factory and replays the handshake, and
+//! (c) answers the streams' `reattach` requests once the new generation
+//! is live — each session then replays its own `Resume` handshake.
+//! Outbound frames are tagged with the generation current at send time;
+//! frames queued against a dead generation are dropped instead of
+//! leaking onto the new connection (they are "lost in flight", exactly
+//! like bytes sitting in a dead socket's buffer).
+
+use super::edge::{handshake_with, EdgeSessionConfig};
+use super::transport::{BoxFuture, Reconnect, Transport};
+use crate::protocol::frame::{Frame, Hello, CONTROL_STREAM};
+use crate::util::log::{log, Level};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use tokio::sync::{mpsc, oneshot};
+
+/// Redial attempts before the pump gives up on a dead link.
+const MAX_REDIALS: usize = 8;
+
+enum PumpCmd {
+    Register {
+        stream: u32,
+        tx: mpsc::UnboundedSender<InEvent>,
+    },
+    Deregister {
+        stream: u32,
+    },
+    /// Reply once a connection generation newer than `seen` is live.
+    AwaitReattach {
+        seen: u64,
+        reply: oneshot::Sender<Result<u64>>,
+    },
+}
+
+enum InEvent {
+    Frame(Frame),
+    /// The connection generation `.0` died; reattach to continue.
+    Reset(u64),
+}
+
+/// Handle to a multiplexed connection. Dropping it (after all its
+/// [`MuxStream`]s) shuts the pump down and closes the transport.
+pub struct EdgeMux {
+    cmd_tx: mpsc::UnboundedSender<PumpCmd>,
+    out_tx: mpsc::UnboundedSender<(u64, Frame)>,
+    gen_shared: Arc<AtomicU64>,
+    next_stream: u32,
+}
+
+impl EdgeMux {
+    /// Adopt a connected transport, run the `Hello` handshake on it, and
+    /// spawn the pump. `reconnect` enables transparent redial +
+    /// per-session resume after link drops; without it a dead link is
+    /// fatal to its sessions.
+    pub async fn connect(
+        mut t: Box<dyn Transport>,
+        reconnect: Option<Box<dyn Reconnect>>,
+        cfg: &EdgeSessionConfig,
+    ) -> Result<EdgeMux> {
+        let hello = super::edge::hello_for(cfg);
+        handshake_with(&mut *t, &hello).await?;
+        let (cmd_tx, cmd_rx) = mpsc::unbounded_channel();
+        let (out_tx, out_rx) = mpsc::unbounded_channel();
+        let gen_shared = Arc::new(AtomicU64::new(1));
+        let pump = Pump {
+            t: Some(t),
+            reconnect,
+            hello,
+            gen: 1,
+            gen_shared: gen_shared.clone(),
+            streams: HashMap::new(),
+            cmd_rx,
+            out_rx,
+            waiting: Vec::new(),
+        };
+        tokio::spawn(run_pump(pump));
+        Ok(EdgeMux {
+            cmd_tx,
+            out_tx,
+            gen_shared,
+            next_stream: 0,
+        })
+    }
+
+    /// Allocate the next stream id and register it with the pump. The
+    /// returned handle is a full [`Transport`] for one session.
+    pub fn open_stream(&mut self) -> MuxStream {
+        self.next_stream += 1;
+        let stream = self.next_stream;
+        let (tx, rx) = mpsc::unbounded_channel();
+        // the pump polls its command queue before the outbound queue, so
+        // this registration is processed before any frame the session
+        // sends on the new stream
+        let _ = self.cmd_tx.send(PumpCmd::Register { stream, tx });
+        MuxStream {
+            stream,
+            seen_gen: 0,
+            attached_gen: self.gen_shared.load(Ordering::Acquire),
+            reset: false,
+            out_tx: self.out_tx.clone(),
+            in_rx: rx,
+            cmd_tx: self.cmd_tx.clone(),
+        }
+    }
+}
+
+/// One session's view of the shared connection. Implements [`Transport`]:
+/// sends are stamped with this stream's id and the generation the stream
+/// is attached under. `reattach` waits until a connection generation
+/// NEWER than the last one this stream observed dying is live; if the
+/// stream never observed a reset (it errored for a non-link reason while
+/// the shared connection stayed up), reattach returns immediately and
+/// the session simply replays its `Resume` on the live connection — the
+/// cloud handles an in-place resume on a bound stream correctly.
+pub struct MuxStream {
+    stream: u32,
+    /// Latest generation this stream has observed dying (reset dedup).
+    seen_gen: u64,
+    /// Generation this stream is attached under (set at creation and on
+    /// every successful reattach). Sends are stamped with THIS — not the
+    /// pump's live generation — so a stream that has not yet observed a
+    /// reset can never leak a frame onto a freshly redialed connection
+    /// it has not resumed on (the pump drops the stale-tagged frame and
+    /// resets the stream instead).
+    attached_gen: u64,
+    /// Sticky after a reset until `reattach` succeeds.
+    reset: bool,
+    out_tx: mpsc::UnboundedSender<(u64, Frame)>,
+    in_rx: mpsc::UnboundedReceiver<InEvent>,
+    cmd_tx: mpsc::UnboundedSender<PumpCmd>,
+}
+
+impl MuxStream {
+    pub fn stream_id(&self) -> u32 {
+        self.stream
+    }
+}
+
+impl Drop for MuxStream {
+    fn drop(&mut self) {
+        let _ = self.cmd_tx.send(PumpCmd::Deregister {
+            stream: self.stream,
+        });
+    }
+}
+
+impl Transport for MuxStream {
+    fn send_frame(&mut self, mut frame: Frame) -> BoxFuture<'_, Result<()>> {
+        Box::pin(async move {
+            if self.reset {
+                bail!("stream {}: link reset (reattach first)", self.stream);
+            }
+            // control frames stay on stream 0; everything else is ours
+            if frame.stream != CONTROL_STREAM || !frame.kind.is_control() {
+                frame.stream = self.stream;
+            }
+            self.out_tx
+                .send((self.attached_gen, frame))
+                .map_err(|_| anyhow!("stream {}: mux pump is gone", self.stream))
+        })
+    }
+
+    fn recv_frame(&mut self) -> BoxFuture<'_, Result<Option<Frame>>> {
+        Box::pin(async move {
+            if self.reset {
+                bail!("stream {}: link reset (reattach first)", self.stream);
+            }
+            loop {
+                match self.in_rx.recv().await {
+                    None => return Ok(None),
+                    Some(InEvent::Frame(f)) => return Ok(Some(f)),
+                    Some(InEvent::Reset(gen)) => {
+                        if gen >= self.seen_gen {
+                            self.seen_gen = gen;
+                            self.reset = true;
+                            bail!(
+                                "stream {}: connection dropped (generation {gen})",
+                                self.stream
+                            );
+                        }
+                        // reset for a generation we already left: stale
+                    }
+                }
+            }
+        })
+    }
+
+    fn peer(&self) -> String {
+        format!("mux-stream-{}", self.stream)
+    }
+
+    fn reattach(&mut self) -> BoxFuture<'_, Result<bool>> {
+        Box::pin(async move {
+            let (tx, rx) = oneshot::channel();
+            self.cmd_tx
+                .send(PumpCmd::AwaitReattach {
+                    seen: self.seen_gen,
+                    reply: tx,
+                })
+                .map_err(|_| anyhow!("stream {}: mux pump is gone", self.stream))?;
+            let gen = rx
+                .await
+                .map_err(|_| anyhow!("stream {}: mux pump dropped the reattach", self.stream))??;
+            self.seen_gen = gen;
+            self.attached_gen = gen;
+            self.reset = false;
+            Ok(true)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// The pump: one task owning the real transport
+// ---------------------------------------------------------------------
+
+struct Pump {
+    t: Option<Box<dyn Transport>>,
+    reconnect: Option<Box<dyn Reconnect>>,
+    hello: Hello,
+    gen: u64,
+    gen_shared: Arc<AtomicU64>,
+    streams: HashMap<u32, mpsc::UnboundedSender<InEvent>>,
+    cmd_rx: mpsc::UnboundedReceiver<PumpCmd>,
+    out_rx: mpsc::UnboundedReceiver<(u64, Frame)>,
+    waiting: Vec<oneshot::Sender<Result<u64>>>,
+}
+
+impl Pump {
+    /// The link died: drop the transport (the peer sees EOF and parks
+    /// our sessions) and tell every stream which generation it lost.
+    fn link_down(&mut self) {
+        if self.t.take().is_some() {
+            let gen = self.gen;
+            for tx in self.streams.values() {
+                let _ = tx.send(InEvent::Reset(gen));
+            }
+        }
+    }
+
+    /// Redial + handshake until a new generation is live; notify waiting
+    /// reattach requests.
+    async fn ensure_link(&mut self) -> Result<()> {
+        if self.t.is_some() {
+            return Ok(());
+        }
+        let Some(dial) = self.reconnect.as_mut() else {
+            bail!("mux link died and no reconnector is configured");
+        };
+        let mut last_err = anyhow!("link down");
+        for attempt in 0..MAX_REDIALS {
+            match dial.connect().await {
+                Ok(mut t) => match handshake_with(&mut *t, &self.hello).await {
+                    Ok(()) => {
+                        self.t = Some(t);
+                        self.gen += 1;
+                        self.gen_shared.store(self.gen, Ordering::Release);
+                        let gen = self.gen;
+                        for reply in self.waiting.drain(..) {
+                            let _ = reply.send(Ok(gen));
+                        }
+                        log(
+                            Level::Debug,
+                            "mux",
+                            &format!("reconnected (generation {gen})"),
+                        );
+                        return Ok(());
+                    }
+                    Err(e) => last_err = e,
+                },
+                Err(e) => last_err = e,
+            }
+            tokio::time::sleep(Duration::from_millis(5 << attempt.min(6))).await;
+        }
+        Err(last_err.context(format!("redial failed {MAX_REDIALS} times")))
+    }
+
+    fn handle_cmd(&mut self, cmd: PumpCmd) {
+        match cmd {
+            PumpCmd::Register { stream, tx } => {
+                self.streams.insert(stream, tx);
+            }
+            PumpCmd::Deregister { stream } => {
+                self.streams.remove(&stream);
+            }
+            PumpCmd::AwaitReattach { seen, reply } => {
+                // `seen` is at most the current generation (it comes
+                // from Resets/attachments the pump itself issued). With
+                // the link up, gen == seen means the stream is retrying
+                // in place on a HEALTHY connection (non-link error):
+                // reply immediately — waiting for a bump that will
+                // never come would hang the session. With the link
+                // down, the redial at the loop top drains `waiting`.
+                if self.t.is_some() && self.gen >= seen {
+                    let _ = reply.send(Ok(self.gen));
+                } else {
+                    self.waiting.push(reply);
+                }
+            }
+        }
+    }
+
+    fn route(&mut self, f: Frame) {
+        if f.stream == CONTROL_STREAM {
+            // duplicate HelloAck retransmits and the like: connection-
+            // scoped, already handled at handshake time
+            log(
+                Level::Debug,
+                "mux",
+                &format!("ignoring control {:?} outside handshake", f.kind),
+            );
+            return;
+        }
+        match self.streams.get(&f.stream) {
+            Some(tx) => {
+                let _ = tx.send(InEvent::Frame(f));
+            }
+            None => {
+                // unknown stream: a late frame for a closed session
+                log(
+                    Level::Debug,
+                    "mux",
+                    &format!("dropping {:?} for unknown stream {}", f.kind, f.stream),
+                );
+            }
+        }
+    }
+
+    /// Everything went away while the link was unrecoverable.
+    fn fail_all(&mut self, err: anyhow::Error) {
+        let msg = format!("{err:#}");
+        for reply in self.waiting.drain(..) {
+            let _ = reply.send(Err(anyhow!("{msg}")));
+        }
+        // streams still blocked in recv get a terminal reset, then EOF
+        // when the pump (and their senders) drop
+        self.link_down();
+    }
+}
+
+async fn run_pump(mut p: Pump) {
+    loop {
+        if p.t.is_none() {
+            match p.ensure_link().await {
+                Ok(()) => {}
+                Err(e) => {
+                    log(Level::Warn, "mux", &format!("pump stopping: {e:#}"));
+                    p.fail_all(e);
+                    return;
+                }
+            }
+        }
+        enum Step {
+            Cmd(Option<PumpCmd>),
+            Out(Option<(u64, Frame)>),
+            In(Result<Option<Frame>>),
+        }
+        let step = {
+            let t = p.t.as_mut().expect("link ensured above");
+            tokio::select! {
+                // commands first: a Register must land before the new
+                // stream's first outbound frame is pumped
+                biased;
+                c = p.cmd_rx.recv() => Step::Cmd(c),
+                o = p.out_rx.recv() => Step::Out(o),
+                r = t.recv_frame() => Step::In(r),
+            }
+        };
+        match step {
+            // every EdgeMux and MuxStream handle is gone: orderly stop —
+            // flush any queued frames (session Byes), then drop the
+            // transport, which closes the connection
+            Step::Cmd(None) | Step::Out(None) => {
+                while let Ok((gen, frame)) = p.out_rx.try_recv() {
+                    if gen != p.gen {
+                        continue;
+                    }
+                    let Some(t) = p.t.as_mut() else { break };
+                    if t.send_frame(frame).await.is_err() {
+                        break;
+                    }
+                }
+                return;
+            }
+            Step::Cmd(Some(cmd)) => p.handle_cmd(cmd),
+            Step::Out(Some((gen, frame))) => {
+                if gen != p.gen {
+                    // queued against a dead generation: lost in flight.
+                    // Tell the sender (it may not have observed the
+                    // reset yet) so it reattaches instead of waiting on
+                    // a reply that can never come.
+                    if let Some(tx) = p.streams.get(&frame.stream) {
+                        let _ = tx.send(InEvent::Reset(gen));
+                    }
+                    continue;
+                }
+                let Some(t) = p.t.as_mut() else { continue };
+                if let Err(e) = t.send_frame(frame).await {
+                    log(Level::Debug, "mux", &format!("send failed: {e:#}"));
+                    p.link_down();
+                }
+            }
+            Step::In(Ok(Some(f))) => p.route(f),
+            Step::In(Ok(None)) => p.link_down(),
+            Step::In(Err(e)) => {
+                log(Level::Debug, "mux", &format!("recv failed: {e:#}"));
+                p.link_down();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::frame::{hello_response, FrameKind, Hello};
+    use crate::serve::transport::loopback_pair;
+
+    fn rt() -> tokio::runtime::Runtime {
+        tokio::runtime::Builder::new_current_thread()
+            .enable_all()
+            .build()
+            .unwrap()
+    }
+
+    /// A minimal fake cloud: answer the Hello, then echo session frames.
+    async fn echo_cloud(mut t: impl Transport) {
+        let hello = match t.recv_frame().await.unwrap() {
+            Some(f) if f.kind == FrameKind::Hello => Hello::decode(&f.payload).unwrap(),
+            other => panic!("expected hello, got {other:?}"),
+        };
+        let ack = hello_response(&hello);
+        t.send_frame(Frame::control(FrameKind::HelloAck, ack.encode()))
+            .await
+            .unwrap();
+        while let Ok(Some(f)) = t.recv_frame().await {
+            t.send_frame(f).await.unwrap();
+        }
+    }
+
+    #[test]
+    fn mux_streams_round_trip_independently() {
+        rt().block_on(async {
+            let (edge_t, cloud_t) = loopback_pair();
+            tokio::spawn(echo_cloud(cloud_t));
+            let mut mux = EdgeMux::connect(
+                Box::new(edge_t),
+                None,
+                &crate::serve::EdgeSessionConfig::default(),
+            )
+            .await
+            .unwrap();
+            let mut a = mux.open_stream();
+            let mut b = mux.open_stream();
+            assert_ne!(a.stream_id(), b.stream_id());
+            // interleave sends; each stream only sees its own echoes
+            a.send_frame(Frame::on(99, FrameKind::Draft, vec![1]))
+                .await
+                .unwrap();
+            b.send_frame(Frame::on(99, FrameKind::Draft, vec![2]))
+                .await
+                .unwrap();
+            let fb = b.recv_frame().await.unwrap().unwrap();
+            assert_eq!((fb.stream, fb.payload), (b.stream_id(), vec![2]));
+            let fa = a.recv_frame().await.unwrap().unwrap();
+            assert_eq!((fa.stream, fa.payload), (a.stream_id(), vec![1]));
+        });
+    }
+
+    #[test]
+    fn mux_reset_then_reattach_recovers() {
+        rt().block_on(async {
+            let (edge_t, cloud_t) = loopback_pair();
+            // first cloud: handshake, echo exactly ONE frame, hang up
+            tokio::spawn(async move {
+                let mut t = cloud_t;
+                let f = t.recv_frame().await.unwrap().unwrap();
+                assert_eq!(f.kind, FrameKind::Hello);
+                let ack = hello_response(&Hello::decode(&f.payload).unwrap());
+                t.send_frame(Frame::control(FrameKind::HelloAck, ack.encode()))
+                    .await
+                    .unwrap();
+                let f = t.recv_frame().await.unwrap().unwrap();
+                t.send_frame(f).await.unwrap();
+                // drop: edge sees EOF
+            });
+            let reconnect: Box<dyn Reconnect> = Box::new(move || -> BoxFuture<
+                'static,
+                Result<Box<dyn Transport>>,
+            > {
+                Box::pin(async move {
+                    let (e, c) = loopback_pair();
+                    tokio::spawn(echo_cloud(c));
+                    Ok(Box::new(e) as Box<dyn Transport>)
+                })
+            });
+            let mut mux = EdgeMux::connect(
+                Box::new(edge_t),
+                Some(reconnect),
+                &crate::serve::EdgeSessionConfig::default(),
+            )
+            .await
+            .unwrap();
+            let mut s = mux.open_stream();
+            // one round trip proves the stream is registered on gen 1...
+            s.send_frame(Frame::on(0, FrameKind::Draft, vec![5]))
+                .await
+                .unwrap();
+            assert_eq!(s.recv_frame().await.unwrap().unwrap().payload, vec![5]);
+            // ...then the cloud hangs up and the reset surfaces
+            let err = s.recv_frame().await;
+            assert!(err.is_err(), "reset must surface as an error");
+            // reattach waits for the redialed generation, then echoes work
+            assert!(s.reattach().await.unwrap());
+            s.send_frame(Frame::on(0, FrameKind::Draft, vec![9]))
+                .await
+                .unwrap();
+            let f = s.recv_frame().await.unwrap().unwrap();
+            assert_eq!(f.payload, vec![9]);
+        });
+    }
+}

@@ -60,6 +60,14 @@ impl BatchWindow {
         }
     }
 
+    /// Drop a pending member whose draft was voided (link died, session
+    /// stolen by a reconnect, or aborted) — without this, a fast
+    /// resume-and-resubmit within the same window would enter the id
+    /// twice, inflating occupancy and closing windows early.
+    pub fn remove(&mut self, id: u32) {
+        self.members.retain(|&m| m != id);
+    }
+
     /// Close the window and take its members (may be empty if a timer
     /// fired after a `CloseNow` already drained it — callers skip those).
     pub fn close(&mut self) -> Vec<u32> {
@@ -134,6 +142,37 @@ impl SessionCore {
         self.done
     }
 
+    /// Committed length (prompt + generated) — the position a resume
+    /// handshake reports to the cloud.
+    pub fn committed_len(&self) -> usize {
+        self.committed.len()
+    }
+
+    /// Committed tokens beyond `from` — what a resuming peer is missing.
+    /// The cloud's sequence can only be AHEAD of the edge's (verdicts
+    /// applied whose replies were lost), so this suffix is exactly the
+    /// catch-up payload of a `ResumeAck`.
+    pub fn committed_tail(&self, from: usize) -> &[i32] {
+        &self.committed[from.min(self.committed.len())..]
+    }
+
+    /// Fast-forward the mirror with a `ResumeAck`: append the committed
+    /// tail the cloud applied while the link was down and sync the round
+    /// counter, preserving the invariant
+    /// `new_tokens == committed.len() - prompt_len`. Acceptance counters
+    /// cannot be reconstructed for lost rounds and are left as-is (the
+    /// committed sequence, not the counters, is the correctness
+    /// contract under faults). Returns true when the session is done.
+    pub fn fast_forward(&mut self, tail: &[i32], rounds: usize, done: bool) -> bool {
+        self.committed.extend_from_slice(tail);
+        self.new_tokens = self.committed.len() - self.prompt_len;
+        self.rounds = rounds;
+        if done || self.new_tokens >= self.max_new {
+            self.done = true;
+        }
+        self.done
+    }
+
     /// Acceptance rate over the session so far.
     pub fn acceptance(&self) -> f64 {
         if self.drafted == 0 {
@@ -182,6 +221,17 @@ mod tests {
     }
 
     #[test]
+    fn removed_member_leaves_window_open_for_the_rest() {
+        let mut w = BatchWindow::new(10.0, 3);
+        assert_eq!(w.offer(0.0, 1), BatchDecision::CloseAt(10.0));
+        assert_eq!(w.offer(1.0, 2), BatchDecision::Queued);
+        w.remove(1);
+        // re-offer after a resume does not double-count the session
+        assert_eq!(w.offer(2.0, 1), BatchDecision::Queued);
+        assert_eq!(w.close(), vec![2, 1]);
+    }
+
+    #[test]
     fn spurious_timer_close_is_empty() {
         let mut w = BatchWindow::new(5.0, 2);
         let _ = w.offer(0.0, 1);
@@ -223,6 +273,33 @@ mod tests {
         let o = s.outcome();
         assert_eq!(o.new_tokens, 6);
         assert_eq!(o.accepted, 4);
+    }
+
+    #[test]
+    fn fast_forward_preserves_mirror_invariant() {
+        let mut edge = SessionCore::new(1, &[1, 10], 6);
+        let mut cloud = SessionCore::new(1, &[1, 10], 6);
+        // round 0 verdict applied on both sides
+        edge.apply_verdict(&[20, 21], 2, 30, false, false);
+        cloud.apply_verdict(&[20, 21], 2, 30, false, false);
+        // round 1 verdict applied cloud-side only (reply lost in flight)
+        cloud.apply_verdict(&[40], 1, 41, false, false);
+        assert!(cloud.committed.len() > edge.committed.len());
+        // resume: edge fast-forwards with the tail it missed
+        let tail = cloud.committed_tail(edge.committed_len()).to_vec();
+        assert_eq!(tail, vec![40, 41]);
+        let done = edge.fast_forward(&tail, cloud.rounds, false);
+        assert_eq!(edge.committed, cloud.committed);
+        assert_eq!(edge.new_tokens, cloud.new_tokens);
+        assert_eq!(edge.rounds, cloud.rounds);
+        // 5 of max_new 6 committed: not done yet
+        assert!(!done && !edge.done);
+        // a tail that reaches max_new finishes the session
+        let mut edge2 = SessionCore::new(2, &[1, 10], 3);
+        assert!(edge2.fast_forward(&[5, 6, 7], 2, false));
+        // an explicit done flag finishes regardless of budget
+        let mut edge3 = SessionCore::new(3, &[1, 10], 100);
+        assert!(edge3.fast_forward(&[5], 1, true));
     }
 
     #[test]

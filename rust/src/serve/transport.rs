@@ -35,6 +35,33 @@ pub trait Transport: Send {
 
     /// Peer label for logs.
     fn peer(&self) -> String;
+
+    /// Try to re-establish the link after a send/recv failure.
+    /// `Ok(false)` means this transport has no reconnect support (the
+    /// default); `Ok(true)` means the link is live again and the caller
+    /// should replay its resume handshake. `edge::ResumableTransport`
+    /// (fresh dial + Hello) and `mux::MuxStream` (wait for the shared
+    /// connection pump to reconnect) override this.
+    fn reattach(&mut self) -> BoxFuture<'_, Result<bool>> {
+        Box::pin(async { Ok(false) })
+    }
+}
+
+/// Async connection factory used by the reconnect-capable wrappers
+/// (`edge::ResumableTransport`, `mux::EdgeMux`): dials a fresh
+/// underlying transport after a link failure. Closures returning boxed
+/// `'static` futures implement it directly.
+pub trait Reconnect: Send {
+    fn connect(&mut self) -> BoxFuture<'_, Result<Box<dyn Transport>>>;
+}
+
+impl<F> Reconnect for F
+where
+    F: FnMut() -> BoxFuture<'static, Result<Box<dyn Transport>>> + Send,
+{
+    fn connect(&mut self) -> BoxFuture<'_, Result<Box<dyn Transport>>> {
+        (self)()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -242,7 +269,7 @@ mod tests {
         rt().block_on(async {
             let (mut edge, mut cloud) = loopback_pair();
             for i in 0..5u8 {
-                edge.send_frame(Frame::new(FrameKind::Draft, vec![i]))
+                edge.send_frame(Frame::on(1, FrameKind::Draft, vec![i]))
                     .await
                     .unwrap();
             }
@@ -262,7 +289,7 @@ mod tests {
                 let chan = NetworkProfile::new(NetworkKind::FourG).channel(9);
                 let (mut edge, mut cloud, ledger) = loopback_pair_with_channel(chan);
                 for _ in 0..8 {
-                    edge.send_frame(Frame::new(FrameKind::Draft, vec![0; 64]))
+                    edge.send_frame(Frame::on(1, FrameKind::Draft, vec![0; 64]))
                         .await
                         .unwrap();
                     let f = cloud.recv_frame().await.unwrap().unwrap();
@@ -295,12 +322,12 @@ mod tests {
             });
             let mut c = TcpTransport::connect(&addr.to_string()).await.unwrap();
             let payload: Vec<u8> = (0..200).map(|i| (i % 251) as u8).collect();
-            c.send_frame(Frame::new(FrameKind::Draft, payload.clone()))
+            c.send_frame(Frame::on(1, FrameKind::Draft, payload.clone()))
                 .await
                 .unwrap();
             let back = c.recv_frame().await.unwrap().unwrap();
             assert_eq!(back.payload, payload);
-            c.send_frame(Frame::new(FrameKind::Bye, vec![])).await.unwrap();
+            c.send_frame(Frame::on(1, FrameKind::Bye, vec![])).await.unwrap();
             server.await.unwrap();
         });
     }

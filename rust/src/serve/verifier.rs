@@ -15,6 +15,35 @@
 //!   backend is *constructed inside* the thread via `make_backend` and
 //!   never crosses a thread boundary. Batch-window deadlines map to
 //!   `recv_timeout` on the command channel.
+//!
+//! # Session lifetime under transport faults
+//!
+//! A connection drop no longer aborts its sessions. The state machine is:
+//!
+//! ```text
+//!            open                    detach (link died)
+//!   (none) ───────▶ ATTACHED ─────────────────────────▶ PARKED
+//!                      ▲                                  │   │
+//!                      │        resume (token, pos)       │   │ grace
+//!                      └──────────────────────────────────┘   │ expired
+//!                      │                                      ▼
+//!                   finished ──▶ RESIDUE (grace) ──▶ gone   EVICTED
+//! ```
+//!
+//! * **Parked** sessions keep their KV state; the eviction sweep reaps
+//!   them only STRICTLY after their per-session deadline, and `resume`
+//!   never re-checks the clock — if the sweep has not actually reaped a
+//!   session, a reconnect wins. Re-parking after a resume records a
+//!   fresh deadline, so a stale timer armed for an earlier park can
+//!   never evict early (the race `tests::reconnect_within_grace_cannot_
+//!   race_eviction` pins).
+//! * **Finished residues**: a session that completes while its link is
+//!   down leaves (token → final committed tail) behind for one grace
+//!   window, so a resume that missed the last verdict still converges.
+//! * **Replay**: the last verdict per session is cached; a draft whose
+//!   round was already verified (transport duplicate, reconnect
+//!   retransmit) is answered from the cache instead of re-advancing the
+//!   sequence, and `Open` retransmits are deduplicated by client nonce.
 
 use super::backend::VerifyBackend;
 use super::session::{BatchDecision, BatchWindow, SessionCore};
@@ -43,6 +72,9 @@ pub struct VerifierConfig {
     /// `coordinator::ServeConfig::capacity_floor` for sim ↔ serve
     /// count equality.
     pub capacity_floor: usize,
+    /// How long a parked session (and a finished residue) survives a
+    /// dead link before eviction reclaims its KV state.
+    pub resume_grace_ms: f64,
 }
 
 impl Default for VerifierConfig {
@@ -54,8 +86,64 @@ impl Default for VerifierConfig {
             top_p: 1.0,
             seed: 1,
             capacity_floor: 10,
+            resume_grace_ms: 10_000.0,
         }
     }
+}
+
+/// What `submit` decided about one draft.
+#[derive(Debug)]
+pub enum SubmitOutcome {
+    /// Fresh round: queued for batched verification.
+    Queued(BatchDecision),
+    /// The round was already verified (duplicate / retransmit): answer
+    /// with the cached verdict, do not advance the sequence.
+    Replay(VerifyMsg),
+    /// Duplicate of a round still in flight: the round is already
+    /// queued, but THIS caller becomes the reply waiter (the previous
+    /// waiter may belong to a dead predecessor connection — the latest
+    /// requester is the one that can still deliver the verdict).
+    TakeOver,
+    /// Stale retransmit of a round older than the cached verdict: no
+    /// reply owed.
+    Swallowed,
+}
+
+/// Everything a `ResumeAck` needs.
+#[derive(Debug, Clone)]
+pub struct ResumeInfo {
+    pub session: u32,
+    /// Attachment epoch of this (re)attachment — the connection passes
+    /// it back in `detach` so a STALE connection's teardown can never
+    /// park a session that a newer connection has since reattached.
+    pub attachment: u64,
+    /// Server-side committed length after `tail`.
+    pub committed_len: usize,
+    /// Committed suffix beyond the edge's reported position.
+    pub tail: Vec<i32>,
+    pub rounds: usize,
+    pub target_seq: u64,
+    /// True when the session finished while the link was down.
+    pub done: bool,
+}
+
+/// Everything an `OpenAck` needs.
+#[derive(Debug, Clone, Copy)]
+pub struct OpenInfo {
+    pub session: u32,
+    pub target_seq: u64,
+    pub resume_token: u64,
+    /// Attachment epoch (see [`ResumeInfo::attachment`]).
+    pub attachment: u64,
+}
+
+/// Final state a completed session leaves behind for the grace window.
+#[derive(Debug, Clone)]
+struct FinishedResidue {
+    session: u32,
+    committed: Vec<i32>,
+    rounds: usize,
+    deadline_ms: f64,
 }
 
 /// Transport-agnostic cloud session/batching state machine.
@@ -65,9 +153,34 @@ pub struct VerifierCore {
     sessions: HashMap<u32, SessionCore>,
     /// In-flight draft per session (protocol allows exactly one).
     pending: HashMap<u32, DraftMsg>,
+    /// Parked sessions: id → eviction deadline. Overlay on `sessions`
+    /// (the core stays put; only attachment changes).
+    parked: HashMap<u32, f64>,
+    /// Last verdict per session for duplicate-round replay. Kept past
+    /// completion (tombstone) until the finished residue expires.
+    last_verdict: HashMap<u32, VerifyMsg>,
+    /// Resume capability tokens.
+    token_of: HashMap<u32, u64>,
+    session_of_token: HashMap<u64, u32>,
+    /// Open-nonce dedup (retransmitted `Open` reattaches, never leaks).
+    open_nonces: HashMap<u64, u32>,
+    nonce_of: HashMap<u32, u64>,
+    finished: HashMap<u64, FinishedResidue>,
+    /// Current attachment epoch per session (bumped on open AND resume);
+    /// `detach` is a no-op unless the caller's epoch is still current.
+    attachment_of: HashMap<u32, u64>,
+    attach_seq: u64,
+    /// Earliest grace deadline among parked sessions and finished
+    /// residues (+inf when none) — cheap gate so the per-iteration
+    /// eviction sweep skips the map walks until something can expire.
+    next_sweep_ms: f64,
     window: BatchWindow,
     next_id: u32,
+    /// Verification sampling stream (stochastic mode).
     rng: SplitMix64,
+    /// Separate stream for resume tokens so capability minting never
+    /// perturbs the verification sampling sequence.
+    token_rng: SplitMix64,
     pub metrics: ServingMetrics,
 }
 
@@ -75,56 +188,149 @@ impl VerifierCore {
     pub fn new(cfg: VerifierConfig, backend: Box<dyn VerifyBackend>) -> VerifierCore {
         let window = BatchWindow::new(cfg.window_ms, cfg.max_batch);
         let rng = SplitMix64::new(cfg.seed ^ 0x5E54_1CE5);
+        let token_rng = SplitMix64::new(cfg.seed ^ 0x70CE_D117);
         VerifierCore {
             cfg,
             backend,
             sessions: HashMap::new(),
             pending: HashMap::new(),
+            parked: HashMap::new(),
+            last_verdict: HashMap::new(),
+            token_of: HashMap::new(),
+            session_of_token: HashMap::new(),
+            open_nonces: HashMap::new(),
+            nonce_of: HashMap::new(),
+            finished: HashMap::new(),
+            attachment_of: HashMap::new(),
+            attach_seq: 0,
+            next_sweep_ms: f64::INFINITY,
             window,
             next_id: 1,
             rng,
+            token_rng,
             metrics: ServingMetrics::default(),
         }
     }
 
+    /// Live sessions (attached + parked).
     pub fn active_sessions(&self) -> usize {
         self.sessions.len()
+    }
+
+    /// Sessions currently parked awaiting a resume.
+    pub fn parked_sessions(&self) -> usize {
+        self.parked.len()
     }
 
     pub fn backend_label(&self) -> String {
         self.backend.label()
     }
 
-    /// Open a new KV session; returns (assigned id, target version seq).
-    pub fn open_session(&mut self, prompt: &[i32], max_new: usize) -> Result<(u32, u64)> {
+    fn next_attachment(&mut self, id: u32) -> u64 {
+        self.attach_seq += 1;
+        self.attachment_of.insert(id, self.attach_seq);
+        self.attach_seq
+    }
+
+    /// Open a new KV session. A nonzero `nonce` seen before reattaches
+    /// the session it created (retransmitted `Open` whose ack was lost)
+    /// instead of leaking a second one.
+    pub fn open_session(&mut self, prompt: &[i32], max_new: usize, nonce: u64) -> Result<OpenInfo> {
+        if nonce != 0 {
+            if let Some(&id) = self.open_nonces.get(&nonce) {
+                if self.sessions.contains_key(&id) {
+                    self.parked.remove(&id);
+                    self.pending.remove(&id);
+                    let resume_token = *self
+                        .token_of
+                        .get(&id)
+                        .ok_or_else(|| anyhow!("session {id} has no resume token"))?;
+                    return Ok(OpenInfo {
+                        session: id,
+                        target_seq: self.backend.version_seq(),
+                        resume_token,
+                        attachment: self.next_attachment(id),
+                    });
+                }
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
         self.backend.start_session(id, prompt)?;
         self.sessions
             .insert(id, SessionCore::new(id, prompt, max_new));
+        let token = loop {
+            let t = self.token_rng.next_u64();
+            if t != 0 && !self.session_of_token.contains_key(&t) && !self.finished.contains_key(&t)
+            {
+                break t;
+            }
+        };
+        self.token_of.insert(id, token);
+        self.session_of_token.insert(token, id);
+        if nonce != 0 {
+            self.open_nonces.insert(nonce, id);
+            self.nonce_of.insert(id, nonce);
+        }
         self.metrics.sessions_opened += 1;
-        Ok((id, self.backend.version_seq()))
+        Ok(OpenInfo {
+            session: id,
+            target_seq: self.backend.version_seq(),
+            resume_token: token,
+            attachment: self.next_attachment(id),
+        })
     }
 
-    /// Queue one draft block for batched verification.
-    pub fn submit(&mut self, now_ms: f64, msg: DraftMsg) -> Result<BatchDecision> {
+    /// Queue one draft block for batched verification — or recognize it
+    /// as a duplicate/retransmit and replay/swallow it. `attachment` is
+    /// the submitting connection's epoch: a draft from a STALE
+    /// attachment (its session was stolen by a reconnect) is swallowed
+    /// outright — it could neither deliver a verdict nor is one owed.
+    pub fn submit(&mut self, now_ms: f64, attachment: u64, msg: DraftMsg) -> Result<SubmitOutcome> {
         let id = msg.session;
+        if self.attachment_of.contains_key(&id)
+            && self.attachment_of.get(&id) != Some(&attachment)
+        {
+            return Ok(SubmitOutcome::Swallowed);
+        }
+        // already-verified round: replay the cached verdict (covers
+        // transport duplicates AND post-resume retransmits, including
+        // the final round of an already-finished session)
+        if let Some(v) = self.last_verdict.get(&id) {
+            if msg.round == v.round {
+                self.metrics.verdicts_replayed += 1;
+                return Ok(SubmitOutcome::Replay(v.clone()));
+            }
+            if msg.round < v.round {
+                return Ok(SubmitOutcome::Swallowed);
+            }
+        }
         if !self.sessions.contains_key(&id) {
             bail!("no session {id}");
         }
-        if self.pending.contains_key(&id) {
+        if self.parked.contains_key(&id) {
+            bail!("session {id} is parked (reconnect pending)");
+        }
+        if let Some(p) = self.pending.get(&id) {
+            if p.round == msg.round {
+                // duplicated while still queued: the round runs once,
+                // but the NEWEST requester takes over the reply slot
+                // (its predecessor may be a dead connection's task)
+                return Ok(SubmitOutcome::TakeOver);
+            }
             bail!("session {id} already has an in-flight draft (protocol violation)");
         }
         self.metrics.bytes_up += msg.air_bytes();
         self.pending.insert(id, msg);
-        Ok(self.window.offer(now_ms, id))
+        Ok(SubmitOutcome::Queued(self.window.offer(now_ms, id)))
     }
 
     /// Close the open window and verify its members as ONE batch
     /// (one amortized T_base on a real accelerator). Sessions that
-    /// finish are torn down server-side; the verdict's `eos` flag tells
-    /// the edge to stop.
-    pub fn close_window(&mut self) -> Result<Vec<(u32, VerifyMsg)>> {
+    /// finish are torn down server-side (leaving a grace-window residue
+    /// for late resumes); the verdict's `eos` flag tells the edge to
+    /// stop.
+    pub fn close_window(&mut self, now_ms: f64) -> Result<Vec<(u32, VerifyMsg)>> {
         let members = self.window.close();
         if members.is_empty() {
             return Ok(Vec::new());
@@ -132,7 +338,7 @@ impl VerifierCore {
         self.metrics.note_batch(members.len());
         let mut out = Vec::with_capacity(members.len());
         for id in members {
-            // aborted mid-window (client disconnect): nothing pending
+            // detached mid-window (link died): nothing pending
             let Some(msg) = self.pending.remove(&id) else {
                 continue;
             };
@@ -166,20 +372,180 @@ impl VerifierCore {
             };
             self.metrics.note_round(msg.tokens.len(), v.tau);
             self.metrics.bytes_down += vmsg.air_bytes();
+            self.last_verdict.insert(id, vmsg.clone());
             if finished {
                 self.metrics.finish_session(core);
+                let residue = FinishedResidue {
+                    session: id,
+                    committed: core.committed.clone(),
+                    rounds: core.rounds,
+                    deadline_ms: now_ms + self.cfg.resume_grace_ms,
+                };
                 self.backend.end_session(id);
                 self.sessions.remove(&id);
+                self.parked.remove(&id);
+                if let Some(tok) = self.token_of.remove(&id) {
+                    self.session_of_token.remove(&tok);
+                    self.next_sweep_ms = self.next_sweep_ms.min(residue.deadline_ms);
+                    self.finished.insert(tok, residue);
+                }
+                if let Some(n) = self.nonce_of.remove(&id) {
+                    self.open_nonces.remove(&n);
+                }
+                self.attachment_of.remove(&id);
             }
             out.push((id, vmsg));
         }
         Ok(out)
     }
 
-    /// Client went away: drop the session without counting completion.
+    /// The connection carrying this session died: PARK it for the grace
+    /// window instead of aborting. `attachment` must be the epoch that
+    /// connection was handed at open/resume — a stale connection's late
+    /// teardown (its session was already stolen by a reconnect) is a
+    /// no-op. Returns true when the session was newly parked.
+    pub fn detach(&mut self, now_ms: f64, id: u32, attachment: u64) -> bool {
+        if self.attachment_of.get(&id) != Some(&attachment) {
+            return false; // a newer connection owns this session now
+        }
+        if !self.sessions.contains_key(&id) || self.parked.contains_key(&id) {
+            return false;
+        }
+        // an in-flight draft whose reply can no longer be delivered is
+        // void — the resume handshake re-synchronizes instead (and the
+        // id leaves the open window so a resubmit cannot double-count)
+        self.pending.remove(&id);
+        self.window.remove(id);
+        let deadline = now_ms + self.cfg.resume_grace_ms;
+        self.next_sweep_ms = self.next_sweep_ms.min(deadline);
+        self.parked.insert(id, deadline);
+        self.metrics.sessions_parked += 1;
+        true
+    }
+
+    /// Reattach a session by resume token. Deliberately does NOT
+    /// re-check the grace deadline: if the eviction sweep has not
+    /// actually reaped the session yet, the reconnect wins (see module
+    /// docs on the resume/eviction race).
+    pub fn resume(&mut self, token: u64, committed_len: usize) -> Result<ResumeInfo> {
+        if let Some(fin) = self.finished.get(&token) {
+            if committed_len > fin.committed.len() {
+                bail!(
+                    "resume position {committed_len} beyond committed length {}",
+                    fin.committed.len()
+                );
+            }
+            self.metrics.sessions_resumed += 1;
+            return Ok(ResumeInfo {
+                session: fin.session,
+                attachment: 0, // finished: nothing left to detach
+                committed_len: fin.committed.len(),
+                tail: fin.committed[committed_len..].to_vec(),
+                rounds: fin.rounds,
+                target_seq: self.backend.version_seq(),
+                done: true,
+            });
+        }
+        let Some(&id) = self.session_of_token.get(&token) else {
+            bail!("unknown or expired resume token");
+        };
+        let core = self
+            .sessions
+            .get(&id)
+            .ok_or_else(|| anyhow!("resume token maps to missing session {id}"))?;
+        if committed_len < core.prompt_len || committed_len > core.committed.len() {
+            bail!(
+                "resume position {committed_len} out of range ({}..={})",
+                core.prompt_len,
+                core.committed.len()
+            );
+        }
+        let mut info = ResumeInfo {
+            session: id,
+            attachment: 0,
+            committed_len: core.committed.len(),
+            tail: core.committed_tail(committed_len).to_vec(),
+            rounds: core.rounds,
+            target_seq: self.backend.version_seq(),
+            done: false,
+        };
+        // un-park; also steals from a half-dead connection (new link
+        // wins, and the bumped attachment epoch makes the old
+        // connection's eventual detach a no-op)
+        self.parked.remove(&id);
+        self.pending.remove(&id);
+        self.window.remove(id);
+        info.attachment = self.next_attachment(id);
+        self.metrics.sessions_resumed += 1;
+        Ok(info)
+    }
+
+    /// Reap parked sessions and finished residues whose grace deadline
+    /// is STRICTLY in the past. Attached sessions are never touched.
+    /// O(1) until the earliest pending deadline passes (the verifier
+    /// loop calls this every iteration).
+    pub fn evict_expired(&mut self, now_ms: f64) -> usize {
+        if now_ms <= self.next_sweep_ms {
+            return 0;
+        }
+        let expired: Vec<u32> = self
+            .parked
+            .iter()
+            .filter(|&(_, &deadline)| now_ms > deadline)
+            .map(|(&id, _)| id)
+            .collect();
+        for &id in &expired {
+            self.parked.remove(&id);
+            self.pending.remove(&id);
+            self.last_verdict.remove(&id);
+            self.sessions.remove(&id);
+            if let Some(tok) = self.token_of.remove(&id) {
+                self.session_of_token.remove(&tok);
+            }
+            if let Some(n) = self.nonce_of.remove(&id) {
+                self.open_nonces.remove(&n);
+            }
+            self.attachment_of.remove(&id);
+            self.backend.end_session(id);
+            self.metrics.sessions_evicted += 1;
+        }
+        let expired_residues: Vec<u64> = self
+            .finished
+            .iter()
+            .filter(|&(_, f)| now_ms > f.deadline_ms)
+            .map(|(&t, _)| t)
+            .collect();
+        for t in expired_residues {
+            if let Some(f) = self.finished.remove(&t) {
+                self.last_verdict.remove(&f.session);
+            }
+        }
+        // recompute the gate from what survived (resumes may have left
+        // it stale-early, which only costs one extra sweep)
+        self.next_sweep_ms = self
+            .parked
+            .values()
+            .copied()
+            .chain(self.finished.values().map(|f| f.deadline_ms))
+            .fold(f64::INFINITY, f64::min);
+        expired.len()
+    }
+
+    /// Client explicitly gave up: drop the session without counting
+    /// completion (and without a resume residue).
     pub fn abort_session(&mut self, id: u32) {
         if self.sessions.remove(&id).is_some() {
             self.pending.remove(&id);
+            self.window.remove(id);
+            self.parked.remove(&id);
+            self.last_verdict.remove(&id);
+            if let Some(tok) = self.token_of.remove(&id) {
+                self.session_of_token.remove(&tok);
+            }
+            if let Some(n) = self.nonce_of.remove(&id) {
+                self.open_nonces.remove(&n);
+            }
+            self.attachment_of.remove(&id);
             self.backend.end_session(id);
             self.metrics.sessions_aborted += 1;
         }
@@ -201,12 +567,23 @@ enum VerifierCmd {
     Open {
         prompt: Vec<i32>,
         max_new: usize,
-        reply: oneshot::Sender<Result<(u32, u64)>>,
+        nonce: u64,
+        reply: oneshot::Sender<Result<OpenInfo>>,
     },
     Verify {
         id: u32,
+        attachment: u64,
         msg: DraftMsg,
-        reply: oneshot::Sender<Result<VerifyMsg>>,
+        reply: oneshot::Sender<Result<Option<VerifyMsg>>>,
+    },
+    Detach {
+        id: u32,
+        attachment: u64,
+    },
+    Resume {
+        token: u64,
+        committed_len: usize,
+        reply: oneshot::Sender<Result<ResumeInfo>>,
     },
     End {
         id: u32,
@@ -267,23 +644,60 @@ impl VerifierHandle {
             .map_err(|_| anyhow!("verifier thread is gone"))
     }
 
-    pub async fn open(&self, prompt: Vec<i32>, max_new: usize) -> Result<(u32, u64)> {
+    pub async fn open(&self, prompt: Vec<i32>, max_new: usize, nonce: u64) -> Result<OpenInfo> {
         let (reply, rx) = oneshot::channel();
         self.post(VerifierCmd::Open {
             prompt,
             max_new,
+            nonce,
             reply,
         })?;
         rx.await.map_err(|_| anyhow!("verifier dropped the reply"))?
     }
 
-    pub async fn verify(&self, id: u32, msg: DraftMsg) -> Result<VerifyMsg> {
+    /// Verify one draft. `Ok(None)` means no reply is owed on the wire:
+    /// the draft was a swallowed duplicate, or this waiter was
+    /// superseded by a later retransmit of the same round (the newest
+    /// requester delivers the verdict) — a dropped reply channel is
+    /// therefore benign, not an error.
+    pub async fn verify(
+        &self,
+        id: u32,
+        attachment: u64,
+        msg: DraftMsg,
+    ) -> Result<Option<VerifyMsg>> {
         let (reply, rx) = oneshot::channel();
-        self.post(VerifierCmd::Verify { id, msg, reply })?;
+        self.post(VerifierCmd::Verify {
+            id,
+            attachment,
+            msg,
+            reply,
+        })?;
+        match rx.await {
+            Ok(res) => res,
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// Fire-and-forget park (connection died; session may resume).
+    /// `attachment` is the epoch this connection was handed — a stale
+    /// detach after a steal is ignored.
+    pub fn detach(&self, id: u32, attachment: u64) {
+        let _ = self.post(VerifierCmd::Detach { id, attachment });
+    }
+
+    /// Reattach a parked (or stolen) session by resume token.
+    pub async fn resume(&self, token: u64, committed_len: usize) -> Result<ResumeInfo> {
+        let (reply, rx) = oneshot::channel();
+        self.post(VerifierCmd::Resume {
+            token,
+            committed_len,
+            reply,
+        })?;
         rx.await.map_err(|_| anyhow!("verifier dropped the reply"))?
     }
 
-    /// Fire-and-forget session teardown (client disconnect path).
+    /// Fire-and-forget session teardown (client Bye / explicit abort).
     pub fn end(&self, id: u32) {
         let _ = self.post(VerifierCmd::End { id });
     }
@@ -318,18 +732,19 @@ impl VerifierHandle {
 fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
     let start = Instant::now();
     let now_ms = |start: &Instant| start.elapsed().as_secs_f64() * 1e3;
-    let mut replies: HashMap<u32, oneshot::Sender<Result<VerifyMsg>>> = HashMap::new();
+    let mut replies: HashMap<u32, oneshot::Sender<Result<Option<VerifyMsg>>>> = HashMap::new();
     let mut deadline: Option<f64> = None;
 
     fn flush(
         core: &mut VerifierCore,
-        replies: &mut HashMap<u32, oneshot::Sender<Result<VerifyMsg>>>,
+        replies: &mut HashMap<u32, oneshot::Sender<Result<Option<VerifyMsg>>>>,
+        now: f64,
     ) {
-        match core.close_window() {
+        match core.close_window(now) {
             Ok(results) => {
                 for (id, vmsg) in results {
                     if let Some(tx) = replies.remove(&id) {
-                        let _ = tx.send(Ok(vmsg));
+                        let _ = tx.send(Ok(Some(vmsg)));
                     }
                 }
             }
@@ -345,13 +760,17 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
     }
 
     loop {
+        let now = now_ms(&start);
+        // reap parked sessions whose grace window is strictly over; the
+        // loop wakes at least every 200 ms, which bounds sweep latency
+        core.evict_expired(now);
         // A queued command beats a zero timeout in recv_timeout, so an
         // expired window must be flushed HERE — not only in the Timeout
         // arm — or a busy command stream could hold it open forever.
         if let Some(d) = deadline {
-            if now_ms(&start) >= d {
+            if now >= d {
                 deadline = None;
-                flush(&mut core, &mut replies);
+                flush(&mut core, &mut replies, now);
             }
         }
         let timeout = match deadline {
@@ -362,27 +781,66 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
             Ok(VerifierCmd::Open {
                 prompt,
                 max_new,
+                nonce,
                 reply,
             }) => {
-                let _ = reply.send(core.open_session(&prompt, max_new));
+                let _ = reply.send(core.open_session(&prompt, max_new, nonce));
             }
-            Ok(VerifierCmd::Verify { id, msg, reply }) => {
-                match core.submit(now_ms(&start), msg) {
-                    Ok(decision) => {
+            Ok(VerifierCmd::Verify {
+                id,
+                attachment,
+                msg,
+                reply,
+            }) => {
+                match core.submit(now_ms(&start), attachment, msg) {
+                    Ok(SubmitOutcome::Queued(decision)) => {
                         replies.insert(id, reply);
                         match decision {
                             BatchDecision::CloseNow => {
                                 deadline = None;
-                                flush(&mut core, &mut replies);
+                                let now = now_ms(&start);
+                                flush(&mut core, &mut replies, now);
                             }
                             BatchDecision::CloseAt(t) => deadline = Some(t),
                             BatchDecision::Queued => {}
                         }
                     }
+                    Ok(SubmitOutcome::Replay(v)) => {
+                        let _ = reply.send(Ok(Some(v)));
+                    }
+                    Ok(SubmitOutcome::TakeOver) => {
+                        // replace the previous waiter; its dropped
+                        // channel reads as "no reply owed" (benign —
+                        // see VerifierHandle::verify)
+                        replies.insert(id, reply);
+                    }
+                    Ok(SubmitOutcome::Swallowed) => {
+                        let _ = reply.send(Ok(None));
+                    }
                     Err(e) => {
                         let _ = reply.send(Err(e));
                     }
                 }
+            }
+            Ok(VerifierCmd::Detach { id, attachment }) => {
+                if core.detach(now_ms(&start), id, attachment) {
+                    // the dead connection's waiter (if any) can never
+                    // deliver (guarded: a stale detach must not drop a
+                    // live successor's waiter)
+                    replies.remove(&id);
+                }
+            }
+            Ok(VerifierCmd::Resume {
+                token,
+                committed_len,
+                reply,
+            }) => {
+                let res = core.resume(token, committed_len);
+                if let Ok(info) = &res {
+                    // a stolen session's old waiter can never deliver
+                    replies.remove(&info.session);
+                }
+                let _ = reply.send(res);
             }
             Ok(VerifierCmd::End { id }) => core.abort_session(id),
             Ok(VerifierCmd::Deploy { version, reply }) => {
@@ -396,14 +854,16 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
             }
             Ok(VerifierCmd::Shutdown { reply }) => {
                 deadline = None;
-                flush(&mut core, &mut replies);
+                let now = now_ms(&start);
+                flush(&mut core, &mut replies, now);
                 let _ = reply.send(core.metrics.clone());
                 return;
             }
             // expiry handled at the top of the loop
             Err(std_mpsc::RecvTimeoutError::Timeout) => {}
             Err(std_mpsc::RecvTimeoutError::Disconnected) => {
-                flush(&mut core, &mut replies);
+                let now = now_ms(&start);
+                flush(&mut core, &mut replies, now);
                 return;
             }
         }
@@ -413,14 +873,22 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::edge::DraftSource;
     use crate::protocol::{VerifyMode, WireFormat};
     use crate::serve::backend::{SyntheticDraft, SyntheticTarget};
-    use crate::coordinator::edge::DraftSource;
 
     fn core(window_ms: f64, max_batch: usize) -> VerifierCore {
         let cfg = VerifierConfig {
             window_ms,
             max_batch,
+            ..Default::default()
+        };
+        VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)))
+    }
+
+    fn core_with_grace(grace_ms: f64) -> VerifierCore {
+        let cfg = VerifierConfig {
+            resume_grace_ms: grace_ms,
             ..Default::default()
         };
         VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)))
@@ -440,14 +908,24 @@ mod tests {
         }
     }
 
+    fn queued(out: SubmitOutcome) -> BatchDecision {
+        match out {
+            SubmitOutcome::Queued(d) => d,
+            other => panic!("expected Queued, got {other:?}"),
+        }
+    }
+
     #[test]
     fn batches_verify_and_complete_sessions() {
         let mut c = core(10.0, 8);
         let prompt_a = vec![1, 70, 71];
         let prompt_b = vec![1, 80, 81];
-        let (a, seq) = c.open_session(&prompt_a, 8).unwrap();
-        let (b, _) = c.open_session(&prompt_b, 8).unwrap();
-        assert_eq!((a, b, seq), (1, 2, 1));
+        let oa = c.open_session(&prompt_a, 8, 0).unwrap();
+        let ob = c.open_session(&prompt_b, 8, 0).unwrap();
+        let (a, b) = (oa.session, ob.session);
+        assert_eq!((a, b, oa.target_seq), (1, 2, 1));
+        assert_ne!(oa.resume_token, ob.resume_token, "resume tokens must be distinct");
+        assert!(oa.resume_token != 0 && ob.resume_token != 0);
 
         let mut committed_a = prompt_a.clone();
         let mut committed_b = prompt_b.clone();
@@ -457,14 +935,16 @@ mod tests {
             if !c.sessions.contains_key(&a) && !c.sessions.contains_key(&b) {
                 break;
             }
-            for (&id, committed) in [(&a, &mut committed_a), (&b, &mut committed_b)] {
+            for (&id, att, committed) in
+                [(&a, oa.attachment, &mut committed_a), (&b, ob.attachment, &mut committed_b)]
+            {
                 if !c.sessions.contains_key(&id) {
                     continue;
                 }
                 let msg = draft_for(id, round, committed, 4);
-                c.submit(round as f64, msg).unwrap();
+                c.submit(round as f64, att, msg).unwrap();
             }
-            for (id, vmsg) in c.close_window().unwrap() {
+            for (id, vmsg) in c.close_window(round as f64).unwrap() {
                 let committed = if id == a { &mut committed_a } else { &mut committed_b };
                 let msg_tokens = draft_for(id, round, committed, 4).tokens;
                 committed.extend_from_slice(&msg_tokens[..vmsg.tau as usize]);
@@ -485,12 +965,211 @@ mod tests {
     }
 
     #[test]
-    fn duplicate_inflight_draft_is_rejected() {
+    fn duplicate_inflight_draft_takes_over_and_conflicts_rejected() {
         let mut c = core(10.0, 8);
         let prompt = vec![1, 70, 71];
-        let (id, _) = c.open_session(&prompt, 8).unwrap();
-        c.submit(0.0, draft_for(id, 0, &prompt, 2)).unwrap();
-        assert!(c.submit(0.1, draft_for(id, 0, &prompt, 2)).is_err());
+        let o = c.open_session(&prompt, 8, 0).unwrap();
+        let id = o.session;
+        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 2)).unwrap());
+        // byte-identical duplicate of the in-flight round: the round is
+        // NOT double-queued, but the newest requester owns the reply
+        // (its predecessor may be a dead connection's verify task)
+        assert!(matches!(
+            c.submit(0.1, o.attachment, draft_for(id, 0, &prompt, 2)).unwrap(),
+            SubmitOutcome::TakeOver
+        ));
+        // a draft from a STALE attachment epoch is swallowed outright
+        assert!(matches!(
+            c.submit(0.15, o.attachment + 99, draft_for(id, 0, &prompt, 2)).unwrap(),
+            SubmitOutcome::Swallowed
+        ));
+        // the round still runs exactly once
+        let out = c.close_window(0.2).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(c.metrics.rounds, 1);
+        // a DIFFERENT round while one is in flight is a protocol violation
+        let v = &out[0].1;
+        let mut committed = prompt.clone();
+        committed.extend_from_slice(&draft_for(id, 0, &prompt, 2).tokens[..v.tau as usize]);
+        committed.push(v.correction);
+        queued(c.submit(0.3, o.attachment, draft_for(id, 1, &committed, 2)).unwrap());
+        assert!(c
+            .submit(0.4, o.attachment, draft_for(id, 2, &committed, 2))
+            .is_err());
+    }
+
+    #[test]
+    fn verified_round_is_replayed_from_cache() {
+        let mut c = core(10.0, 8);
+        let prompt = vec![1, 70, 71];
+        let o = c.open_session(&prompt, 64, 0).unwrap();
+        let id = o.session;
+        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 2)).unwrap());
+        let out = c.close_window(0.0).unwrap();
+        assert_eq!(out.len(), 1);
+        let first = out[0].1.clone();
+        // retransmit of the verified round: cached verdict, no advance
+        let replay = match c.submit(1.0, o.attachment, draft_for(id, 0, &prompt, 2)).unwrap() {
+            SubmitOutcome::Replay(v) => v,
+            other => panic!("expected Replay, got {other:?}"),
+        };
+        assert_eq!(replay, first);
+        assert_eq!(c.metrics.verdicts_replayed, 1);
+        assert_eq!(c.metrics.rounds, 1, "replay must not re-count the round");
+        // ancient rounds are swallowed outright
+        let mut committed = prompt.clone();
+        committed.extend_from_slice(&draft_for(id, 0, &prompt, 2).tokens[..first.tau as usize]);
+        committed.push(first.correction);
+        queued(c.submit(2.0, o.attachment, draft_for(id, 1, &committed, 2)).unwrap());
+        let _ = c.close_window(2.0).unwrap();
+        assert!(matches!(
+            c.submit(3.0, o.attachment, draft_for(id, 0, &prompt, 2)).unwrap(),
+            SubmitOutcome::Swallowed
+        ));
+    }
+
+    #[test]
+    fn detach_resume_returns_missing_tail() {
+        let mut c = core_with_grace(1_000.0);
+        let prompt = vec![1, 70, 71];
+        let o = c.open_session(&prompt, 64, 0).unwrap();
+        let (id, token) = (o.session, o.resume_token);
+        // round 0 verified, verdict DELIVERED (edge applied it)
+        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 4)).unwrap());
+        let v0 = c.close_window(0.0).unwrap().remove(0).1;
+        let mut edge_committed = prompt.clone();
+        edge_committed.extend_from_slice(&draft_for(id, 0, &prompt, 4).tokens[..v0.tau as usize]);
+        edge_committed.push(v0.correction);
+        // round 1 verified, reply LOST (link died in flight)
+        queued(c.submit(1.0, o.attachment, draft_for(id, 1, &edge_committed, 4)).unwrap());
+        let _v1 = c.close_window(1.0).unwrap().remove(0).1;
+        assert!(c.detach(2.0, id, o.attachment));
+        assert_eq!(c.parked_sessions(), 1);
+        // resume from the edge's (stale) position: tail = round 1's commit
+        let info = c.resume(token, edge_committed.len()).unwrap();
+        assert_eq!(info.session, id);
+        assert!(!info.done);
+        assert_eq!(info.rounds, 2);
+        assert_eq!(info.tail.len(), 5, "K=4 accepted + correction");
+        assert_eq!(
+            info.committed_len,
+            edge_committed.len() + info.tail.len()
+        );
+        assert_eq!(c.parked_sessions(), 0);
+        assert_eq!(c.metrics.sessions_parked, 1);
+        assert_eq!(c.metrics.sessions_resumed, 1);
+        // bad positions are rejected
+        assert!(c.resume(token, 1).is_err(), "before prompt end");
+        assert!(c.resume(token, 10_000).is_err(), "beyond committed");
+        assert!(c.resume(token ^ 1, prompt.len()).is_err(), "bad token");
+    }
+
+    #[test]
+    fn finished_session_leaves_resumable_residue() {
+        let mut c = core_with_grace(1_000.0);
+        let prompt = vec![1, 70, 71];
+        // max_new 5 : one K=4 round (+correction) finishes the session
+        let o = c.open_session(&prompt, 5, 0).unwrap();
+        let (id, token) = (o.session, o.resume_token);
+        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 4)).unwrap());
+        let v = c.close_window(0.0).unwrap().remove(0).1;
+        assert!(v.eos, "session must finish in one round");
+        assert_eq!(c.active_sessions(), 0);
+        // the edge missed the final verdict entirely: resume by token
+        let info = c.resume(token, prompt.len()).unwrap();
+        assert!(info.done);
+        assert_eq!(info.session, id);
+        assert_eq!(info.tail.len(), 5);
+        // the residue (and its replay tombstone) expire with the grace
+        c.evict_expired(1_500.0);
+        assert!(c.resume(token, prompt.len()).is_err());
+    }
+
+    #[test]
+    fn open_nonce_deduplicates_retransmitted_opens() {
+        let mut c = core(10.0, 8);
+        let prompt = vec![1, 70, 71];
+        let o1 = c.open_session(&prompt, 8, 42).unwrap();
+        // retransmitted Open (ack lost): same session, same token, but a
+        // FRESH attachment epoch (the retransmit owns the session now)
+        let o2 = c.open_session(&prompt, 8, 42).unwrap();
+        assert_eq!(o1.session, o2.session);
+        assert_eq!(o1.resume_token, o2.resume_token);
+        assert!(o2.attachment > o1.attachment);
+        assert_eq!(c.metrics.sessions_opened, 1, "no second session leaked");
+        assert_eq!(c.active_sessions(), 1);
+        // ...so the ORIGINAL connection's detach is stale and ignored
+        assert!(!c.detach(0.0, o1.session, o1.attachment));
+        assert_eq!(c.parked_sessions(), 0);
+        // a different nonce is a genuinely new session
+        let o3 = c.open_session(&prompt, 8, 43).unwrap();
+        assert_ne!(o1.session, o3.session);
+        assert_eq!(c.metrics.sessions_opened, 2);
+    }
+
+    /// Regression test for the resume/eviction race: a reconnect that
+    /// lands within the grace window must never lose to the eviction
+    /// timer — (a) sweeps strictly before or AT the deadline are no-ops,
+    /// (b) resume succeeds whenever the session still exists without
+    /// re-checking the clock, and (c) re-parking after a resume records
+    /// a FRESH deadline so a stale sweep armed for the first park's
+    /// deadline cannot evict early.
+    #[test]
+    fn reconnect_within_grace_cannot_race_eviction() {
+        let prompt = vec![1, 70, 71];
+        let mut c = core_with_grace(100.0);
+        let o = c.open_session(&prompt, 8, 0).unwrap();
+        let (id, token) = (o.session, o.resume_token);
+
+        // attached sessions are never evicted, no matter the clock
+        assert_eq!(c.evict_expired(1e12), 0);
+
+        assert!(c.detach(0.0, id, o.attachment));
+        // sweep strictly before the deadline: no-op
+        assert_eq!(c.evict_expired(99.9), 0);
+        // sweep exactly AT the deadline: still a no-op (strict `>`), so
+        // a resume in the same tick wins the boundary
+        assert_eq!(c.evict_expired(100.0), 0);
+        let info = c.resume(token, prompt.len()).unwrap();
+        assert_eq!(info.session, id);
+
+        // re-park at t=120: deadline refreshes to 220. A stale sweep
+        // armed for the FIRST deadline (100) fires late at t=140 and
+        // must not evict the freshly parked session.
+        assert!(c.detach(120.0, id, info.attachment));
+        assert_eq!(c.evict_expired(140.0), 0, "stale timer evicted early");
+        // the session is still resumable right up to its live deadline
+        let info = c.resume(token, prompt.len()).unwrap();
+        assert_eq!(info.session, id);
+
+        // only a sweep strictly past the LIVE deadline reaps it
+        assert!(c.detach(220.0, id, info.attachment));
+        assert_eq!(c.evict_expired(320.0), 0);
+        assert_eq!(c.evict_expired(320.1), 1);
+        assert_eq!(c.metrics.sessions_evicted, 1);
+        assert!(c.resume(token, prompt.len()).is_err(), "evicted for real");
+        assert_eq!(c.active_sessions(), 0);
+    }
+
+    #[test]
+    fn detached_member_is_skipped_by_window_close() {
+        let mut c = core(10.0, 8);
+        let pa = vec![1, 70, 71];
+        let pb = vec![1, 80, 81];
+        let oa = c.open_session(&pa, 8, 0).unwrap();
+        let ob = c.open_session(&pb, 8, 0).unwrap();
+        let (a, b) = (oa.session, ob.session);
+        queued(c.submit(0.0, oa.attachment, draft_for(a, 0, &pa, 2)).unwrap());
+        c.submit(0.0, ob.attachment, draft_for(b, 0, &pb, 2)).unwrap();
+        // link carrying session a dies mid-window: parked, not aborted
+        assert!(c.detach(0.5, a, oa.attachment));
+        let out = c.close_window(1.0).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, b);
+        assert_eq!(c.metrics.sessions_parked, 1);
+        assert_eq!(c.metrics.sessions_aborted, 0);
+        // session a is still alive and resumable
+        assert_eq!(c.active_sessions(), 2);
     }
 
     #[test]
@@ -498,12 +1177,13 @@ mod tests {
         let mut c = core(10.0, 8);
         let pa = vec![1, 70, 71];
         let pb = vec![1, 80, 81];
-        let (a, _) = c.open_session(&pa, 8).unwrap();
-        let (b, _) = c.open_session(&pb, 8).unwrap();
-        c.submit(0.0, draft_for(a, 0, &pa, 2)).unwrap();
-        c.submit(0.0, draft_for(b, 0, &pb, 2)).unwrap();
+        let oa = c.open_session(&pa, 8, 0).unwrap();
+        let ob = c.open_session(&pb, 8, 0).unwrap();
+        let (a, b) = (oa.session, ob.session);
+        c.submit(0.0, oa.attachment, draft_for(a, 0, &pa, 2)).unwrap();
+        c.submit(0.0, ob.attachment, draft_for(b, 0, &pb, 2)).unwrap();
         c.abort_session(a);
-        let out = c.close_window().unwrap();
+        let out = c.close_window(0.0).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].0, b);
         assert_eq!(c.metrics.sessions_aborted, 1);
@@ -515,13 +1195,14 @@ mod tests {
         let backend = SyntheticTarget::new(7).with_version("evolved", 0.3);
         let mut c = VerifierCore::new(cfg, Box::new(backend));
         let prompt = vec![1, 70, 71];
-        let (id, seq1) = c.open_session(&prompt, 64).unwrap();
+        let o = c.open_session(&prompt, 64, 0).unwrap();
+        let (id, seq1) = (o.session, o.target_seq);
         let seq2 = c.deploy("evolved").unwrap();
         assert!(seq2 > seq1);
         assert_eq!(c.metrics.hot_swaps, 1);
         // the session survives and keeps decoding on the new version
-        c.submit(0.0, draft_for(id, 0, &prompt, 4)).unwrap();
-        let out = c.close_window().unwrap();
+        c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 4)).unwrap();
+        let out = c.close_window(0.0).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(c.active_sessions(), 1);
     }

@@ -1,0 +1,427 @@
+//! Fault-injection matrix for the serving stack: seeded drops,
+//! duplicates, delays, and forced disconnects (mid-draft, mid-verify-
+//! reply, repeated) over the REAL server code (`handle_conn` + verifier
+//! thread + resumable edge client), with the committed token sequences
+//! asserted IDENTICAL to the fault-free `scheduler::serve_with`
+//! trajectory — the paper's decoupling story applied to the link layer:
+//! a frozen draft needs only the committed prefix to continue, so no
+//! link failure mode may change a single token.
+//!
+//! Every schedule is deterministic per seed (`FaultPlan` +
+//! `SplitMix64`); the seed lists here are the ones CI runs.
+
+use anyhow::Result;
+use flexspec::channel::{NetworkKind, NetworkProfile};
+use flexspec::coordinator::{serve_with, DraftSource, ServeConfig};
+use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::protocol::frame::{
+    Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, ResumeAck, ResumeMsg, WIRE_VERSION,
+};
+use flexspec::protocol::VerifyMode;
+use flexspec::serve::{
+    handle_conn, loopback_fault_dial, loopback_pair, run_edge_session, run_session_on, EdgeMux,
+    EdgeReport, EdgeSessionConfig, FaultConfig, FaultPlan, FaultSide, ResumableTransport,
+    SyntheticDraft, SyntheticTarget, Transport, VerifierConfig, VerifierHandle, VerifyBackend,
+};
+
+const SEED: u64 = 23;
+/// Fixed seed list for the fault matrix (mirrored in CI).
+const FAULT_SEEDS: [u64; 3] = [3, 17, 42];
+const USERS: usize = 3;
+const MAX_NEW: usize = 24;
+
+fn rt() -> tokio::runtime::Runtime {
+    tokio::runtime::Builder::new_multi_thread()
+        .worker_threads(2)
+        .enable_all()
+        .build()
+        .unwrap()
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![1i32];
+            for j in 0..5 {
+                p.push(100 + ((i * 11 + j * 3) % 100) as i32);
+            }
+            p
+        })
+        .collect()
+}
+
+/// A target that has evolved away from the frozen draft (drift 0.3), so
+/// tau varies and corrections are frequent — resume must reconstruct a
+/// non-trivial trajectory, not an accept-everything one.
+fn evolved_target() -> Result<SyntheticTarget> {
+    let mut t = SyntheticTarget::new(SEED).with_version("evolved", 0.3);
+    t.deploy("evolved")?;
+    Ok(t)
+}
+
+/// The fault-free reference trajectories from the virtual-clock
+/// simulator (per prompt, full committed sequence).
+fn reference_committed(users: usize) -> Vec<Vec<i32>> {
+    let cfg = ServeConfig {
+        users,
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed: SEED,
+        ..Default::default()
+    };
+    let mut backend = evolved_target().unwrap();
+    let mut make =
+        |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(SEED))) };
+    let sim = serve_with(
+        &mut backend,
+        &mut make,
+        &prompts(users),
+        &JETSON_ORIN,
+        &A800_70B,
+        &NetworkProfile::new(NetworkKind::FourG),
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(sim.completed, users);
+    sim.per_session_committed
+}
+
+fn ecfg() -> EdgeSessionConfig {
+    EdgeSessionConfig {
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed: SEED,
+        // generous: a fault may land on a reattach handshake, costing
+        // extra attempts per forced disconnect
+        max_reattach: 16,
+        ..Default::default()
+    }
+}
+
+fn plan_for(seed: u64, side: FaultSide, disconnects: usize, dup_p: f64, delay_p: f64) -> FaultConfig {
+    FaultConfig {
+        seed,
+        dup_p,
+        delay_p,
+        max_disconnects: disconnects,
+        disconnect_gap: (5, 10),
+        disconnect_on: side,
+    }
+}
+
+/// Run `USERS` sessions, each over its own fault-injected (reconnecting)
+/// connection chain against ONE shared verifier; returns the reports and
+/// final metrics.
+fn run_faulty_sessions(
+    fault_seed: u64,
+    side: FaultSide,
+    disconnects: usize,
+    dup_p: f64,
+    delay_p: f64,
+) -> (Vec<EdgeReport>, flexspec::metrics::ServingMetrics) {
+    rt().block_on(async {
+        let vcfg = VerifierConfig {
+            seed: SEED,
+            ..Default::default()
+        };
+        let verifier = VerifierHandle::spawn(vcfg, || {
+            Ok(Box::new(evolved_target()?) as Box<dyn VerifyBackend>)
+        })
+        .unwrap();
+        let mut tasks = Vec::new();
+        for (i, prompt) in prompts(USERS).into_iter().enumerate() {
+            // per-session plan: EVERY session sees its own schedule and
+            // its own forced disconnects
+            let cfg = plan_for(
+                fault_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                side,
+                disconnects,
+                dup_p,
+                delay_p,
+            );
+            let chan = NetworkProfile::new(NetworkKind::FourG).channel(cfg.seed);
+            let plan = FaultPlan::shared(cfg, chan);
+            let dial = loopback_fault_dial(verifier.clone(), plan);
+            let ecfg = ecfg();
+            tasks.push(tokio::spawn(async move {
+                let mut t = ResumableTransport::connect(dial, &ecfg).await?;
+                let mut draft = SyntheticDraft::new(SEED);
+                run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+            }));
+        }
+        let mut reports = Vec::new();
+        for t in tasks {
+            reports.push(t.await.unwrap().unwrap());
+        }
+        let metrics = verifier.shutdown().await.unwrap();
+        (reports, metrics)
+    })
+}
+
+fn assert_matches_reference(reports: &[EdgeReport], reference: &[Vec<i32>], label: &str) {
+    assert_eq!(reports.len(), reference.len());
+    for (i, (r, want)) in reports.iter().zip(reference).enumerate() {
+        assert_eq!(
+            &r.committed, want,
+            "{label}: committed sequence diverged from fault-free run (prompt {i})"
+        );
+        assert_eq!(
+            r.new_tokens,
+            want.len() - prompts(reference.len())[i].len(),
+            "{label}: token count diverged (prompt {i})"
+        );
+    }
+}
+
+#[test]
+fn disconnect_mid_draft_resumes_to_identical_trajectory() {
+    let reference = reference_committed(USERS);
+    for seed in FAULT_SEEDS {
+        let (reports, metrics) =
+            run_faulty_sessions(seed, FaultSide::Send, 2, 0.0, 0.0);
+        assert_matches_reference(&reports, &reference, "drop-mid-draft");
+        let resumes: usize = reports.iter().map(|r| r.resumes).sum();
+        assert!(
+            reports.iter().all(|r| r.reattaches >= 1),
+            "seed {seed}: every session must see at least one forced disconnect"
+        );
+        assert!(resumes >= USERS, "seed {seed}: sessions must resume, not restart");
+        assert_eq!(metrics.sessions_completed, USERS);
+        assert_eq!(metrics.sessions_evicted, 0);
+        assert_eq!(metrics.sessions_aborted, 0);
+        assert!(metrics.sessions_resumed >= USERS);
+    }
+}
+
+#[test]
+fn disconnect_mid_verify_reply_resumes_to_identical_trajectory() {
+    let reference = reference_committed(USERS);
+    for seed in FAULT_SEEDS {
+        let (reports, metrics) =
+            run_faulty_sessions(seed, FaultSide::Recv, 2, 0.0, 0.0);
+        assert_matches_reference(&reports, &reference, "drop-mid-verify-reply");
+        assert!(reports.iter().all(|r| r.reattaches >= 1));
+        assert_eq!(metrics.sessions_completed, USERS);
+        assert_eq!(metrics.sessions_evicted, 0);
+    }
+}
+
+#[test]
+fn duplicated_frames_are_absorbed() {
+    let reference = reference_committed(USERS);
+    for seed in FAULT_SEEDS {
+        let (reports, metrics) = run_faulty_sessions(seed, FaultSide::Any, 0, 0.35, 0.0);
+        assert_matches_reference(&reports, &reference, "duplicate-frames");
+        assert!(
+            reports.iter().all(|r| r.reattaches == 0),
+            "duplicates alone must not force reconnects"
+        );
+        assert_eq!(metrics.sessions_completed, USERS);
+        assert_eq!(metrics.sessions_parked, 0);
+    }
+}
+
+#[test]
+fn repeated_disconnects_with_duplicates_and_delays_still_converge() {
+    let reference = reference_committed(USERS);
+    for seed in FAULT_SEEDS {
+        let (reports, metrics) = run_faulty_sessions(seed, FaultSide::Any, 3, 0.15, 0.15);
+        assert_matches_reference(&reports, &reference, "kitchen-sink");
+        assert_eq!(metrics.sessions_completed, USERS);
+        assert_eq!(metrics.sessions_evicted, 0);
+    }
+}
+
+/// The flagship mux scenario: several sessions share ONE connection, the
+/// connection dies (twice), the mux pump redials, and every session
+/// resumes on the new link — committed sequences still bit-identical to
+/// the fault-free simulator run.
+#[test]
+fn mux_connection_drop_resumes_all_sessions() {
+    let reference = reference_committed(USERS);
+    for seed in FAULT_SEEDS {
+        let (reports, metrics) = rt().block_on(async {
+            let vcfg = VerifierConfig {
+                seed: SEED,
+                ..Default::default()
+            };
+            let verifier = VerifierHandle::spawn(vcfg, || {
+                Ok(Box::new(evolved_target()?) as Box<dyn VerifyBackend>)
+            })
+            .unwrap();
+            // shared-connection plan: gaps scaled up since N sessions
+            // multiplex ~N× the frame events per round
+            let cfg = FaultConfig {
+                seed,
+                max_disconnects: 2,
+                disconnect_gap: (8, 24),
+                disconnect_on: FaultSide::Any,
+                ..Default::default()
+            };
+            let chan = NetworkProfile::new(NetworkKind::FourG).channel(seed);
+            let plan = FaultPlan::shared(cfg, chan);
+            let mut dial = loopback_fault_dial(verifier.clone(), plan);
+            let initial = dial.connect().await.unwrap();
+            let ecfg0 = ecfg();
+            let mut mux = EdgeMux::connect(initial, Some(dial), &ecfg0).await.unwrap();
+            let mut tasks = Vec::new();
+            for prompt in prompts(USERS) {
+                let mut stream = mux.open_stream();
+                let ecfg = ecfg();
+                tasks.push(tokio::spawn(async move {
+                    let sid = stream.stream_id();
+                    let mut draft = SyntheticDraft::new(SEED);
+                    run_session_on(&mut stream, sid, &mut draft, &prompt, &ecfg).await
+                }));
+            }
+            let mut reports = Vec::new();
+            for t in tasks {
+                reports.push(t.await.unwrap().unwrap());
+            }
+            drop(mux);
+            let metrics = verifier.shutdown().await.unwrap();
+            (reports, metrics)
+        });
+        assert_matches_reference(&reports, &reference, "mux-drop");
+        assert_eq!(metrics.sessions_completed, USERS, "seed {seed}");
+        assert_eq!(metrics.sessions_evicted, 0, "seed {seed}");
+        // at least one forced disconnect hit the shared link
+        assert!(
+            reports.iter().map(|r| r.reattaches).sum::<usize>() >= 1,
+            "seed {seed}: the shared connection must have dropped at least once"
+        );
+    }
+}
+
+/// Sessions whose edge never comes back are reaped by the grace-window
+/// eviction sweep — KV capacity is reclaimed, nothing leaks.
+#[test]
+fn unresumed_sessions_are_evicted_after_grace() {
+    rt().block_on(async {
+        let vcfg = VerifierConfig {
+            seed: SEED,
+            resume_grace_ms: 50.0,
+            ..Default::default()
+        };
+        let verifier = VerifierHandle::spawn(vcfg, || {
+            Ok(Box::new(SyntheticTarget::new(SEED)) as Box<dyn VerifyBackend>)
+        })
+        .unwrap();
+        let (mut edge, cloud) = loopback_pair();
+        let v = verifier.clone();
+        tokio::spawn(async move {
+            let _ = handle_conn(cloud, v).await;
+        });
+        // raw-frame client: handshake + open, then vanish without Bye
+        let hello = Hello {
+            wire_version: WIRE_VERSION,
+            mode: VerifyMode::Greedy,
+            k_max: 8,
+        };
+        edge.send_frame(Frame::control(FrameKind::Hello, hello.encode()))
+            .await
+            .unwrap();
+        let ack = HelloAck::decode(&edge.recv_frame().await.unwrap().unwrap().payload).unwrap();
+        assert!(ack.accepted);
+        let open = OpenMsg {
+            prompt: vec![1, 70, 71],
+            max_new: 32,
+            nonce: 7,
+        };
+        edge.send_frame(Frame::on(1, FrameKind::Open, open.encode()))
+            .await
+            .unwrap();
+        let oack = OpenAck::decode(&edge.recv_frame().await.unwrap().unwrap().payload).unwrap();
+        assert!(oack.resume_token != 0);
+        drop(edge); // link dies; the session parks
+
+        // wait (bounded) for the eviction sweep to reap it
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let stats = verifier.stats().await.unwrap();
+            if stats.sessions_evicted >= 1 {
+                assert_eq!(stats.sessions_parked, 1);
+                assert_eq!(stats.sessions_completed, 0);
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "eviction sweep never reaped the parked session"
+            );
+            tokio::time::sleep(std::time::Duration::from_millis(25)).await;
+        }
+        // the token is gone: a late resume is cleanly rejected
+        let (mut edge2, cloud2) = loopback_pair();
+        let v = verifier.clone();
+        tokio::spawn(async move {
+            let _ = handle_conn(cloud2, v).await;
+        });
+        edge2
+            .send_frame(Frame::control(FrameKind::Hello, hello.encode()))
+            .await
+            .unwrap();
+        let _ = edge2.recv_frame().await.unwrap().unwrap();
+        let resume = ResumeMsg {
+            token: oack.resume_token,
+            committed_len: 3,
+        };
+        edge2
+            .send_frame(Frame::on(1, FrameKind::Resume, resume.encode()))
+            .await
+            .unwrap();
+        let rack = ResumeAck::decode(&edge2.recv_frame().await.unwrap().unwrap().payload).unwrap();
+        assert!(!rack.accepted);
+        assert!(
+            rack.reason.contains("unknown or expired"),
+            "unexpected reason: {}",
+            rack.reason
+        );
+        verifier.shutdown().await.unwrap();
+    });
+}
+
+/// Raw-frame protocol checks: resumes with bogus tokens are rejected
+/// with a reason, and a draft on an unbound stream kills the connection
+/// (unknown stream ids are rejected, satellite #1's demux contract).
+#[test]
+fn bogus_resume_and_unknown_stream_are_rejected() {
+    rt().block_on(async {
+        let verifier = VerifierHandle::spawn(VerifierConfig::default(), || {
+            Ok(Box::new(SyntheticTarget::new(SEED)) as Box<dyn VerifyBackend>)
+        })
+        .unwrap();
+        let (mut edge, cloud) = loopback_pair();
+        let v = verifier.clone();
+        let server = tokio::spawn(async move { handle_conn(cloud, v).await });
+        let hello = Hello {
+            wire_version: WIRE_VERSION,
+            mode: VerifyMode::Greedy,
+            k_max: 8,
+        };
+        edge.send_frame(Frame::control(FrameKind::Hello, hello.encode()))
+            .await
+            .unwrap();
+        let _ = edge.recv_frame().await.unwrap().unwrap();
+        // bogus token → rejected ResumeAck, connection stays usable
+        let resume = ResumeMsg {
+            token: 0xBAAD_F00D,
+            committed_len: 10,
+        };
+        edge.send_frame(Frame::on(3, FrameKind::Resume, resume.encode()))
+            .await
+            .unwrap();
+        let rack = ResumeAck::decode(&edge.recv_frame().await.unwrap().unwrap().payload).unwrap();
+        assert!(!rack.accepted && !rack.done);
+        // draft on a never-bound stream → the server rejects and closes
+        edge.send_frame(Frame::on(9, FrameKind::Draft, vec![0; 8]))
+            .await
+            .unwrap();
+        assert!(edge.recv_frame().await.unwrap().is_none(), "server must close");
+        let err = server.await.unwrap().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unknown stream"),
+            "unexpected error: {err:#}"
+        );
+        verifier.shutdown().await.unwrap();
+    });
+}

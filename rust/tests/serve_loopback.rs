@@ -14,8 +14,9 @@ use flexspec::devices::{A800_70B, JETSON_ORIN};
 use flexspec::protocol::frame::{Frame, FrameKind, Hello, HelloAck, WIRE_VERSION};
 use flexspec::protocol::VerifyMode;
 use flexspec::serve::{
-    loopback_pair, run_edge_session, serve_cloud, serve_loopback, EdgeReport, EdgeSessionConfig,
-    SyntheticDraft, SyntheticTarget, TcpTransport, Transport, VerifierConfig, VerifyBackend,
+    loopback_pair, run_edge_session, serve_cloud, serve_loopback, serve_loopback_mux, EdgeReport,
+    EdgeSessionConfig, SyntheticDraft, SyntheticTarget, TcpTransport, Transport, VerifierConfig,
+    VerifyBackend,
 };
 
 const SEED: u64 = 23;
@@ -246,6 +247,115 @@ fn cross_connection_batching_amortizes_windows() {
     assert!(metrics.batches < metrics.rounds, "batching must merge rounds");
 }
 
+/// Satellite: 8 sessions multiplexed over ONE connection must commit
+/// exactly what 8 sessions over 8 connections commit, which in turn is
+/// exactly what the virtual-clock simulator commits — per-session token
+/// counts AND full committed sequences. The mux layer (stream ids,
+/// demux, concurrent per-stream verification) must be invisible to the
+/// decoding math.
+#[test]
+fn multiplexed_sessions_match_per_connection_and_simulator() {
+    const USERS: usize = 8;
+    const MAX_NEW: usize = 18;
+
+    // --- virtual-clock simulation reference --------------------------
+    let cfg = ServeConfig {
+        users: USERS,
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed: SEED,
+        ..Default::default()
+    };
+    let mut backend = evolved_target().unwrap();
+    let mut make =
+        |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(SEED))) };
+    let sim = serve_with(
+        &mut backend,
+        &mut make,
+        &prompts(USERS),
+        &JETSON_ORIN,
+        &A800_70B,
+        &NetworkProfile::new(NetworkKind::FourG),
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(sim.completed, USERS);
+    assert_eq!(sim.per_session_committed.len(), USERS);
+
+    let edges = || -> Vec<(Box<dyn DraftSource + Send>, Vec<i32>)> {
+        prompts(USERS)
+            .into_iter()
+            .map(|p| {
+                (
+                    Box::new(SyntheticDraft::new(SEED)) as Box<dyn DraftSource + Send>,
+                    p,
+                )
+            })
+            .collect()
+    };
+    let ecfg = EdgeSessionConfig {
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed: SEED,
+        ..Default::default()
+    };
+    let vcfg = || VerifierConfig {
+        window_ms: 40.0,
+        seed: SEED,
+        ..Default::default()
+    };
+
+    // --- 8 sessions over 8 loopback connections ----------------------
+    let (per_conn, _) = rt()
+        .block_on(serve_loopback(
+            vcfg(),
+            || Ok(Box::new(evolved_target()?) as Box<dyn VerifyBackend>),
+            edges(),
+            ecfg.clone(),
+        ))
+        .unwrap();
+
+    // --- 8 sessions multiplexed over ONE loopback connection ---------
+    let (muxed, mux_metrics) = rt()
+        .block_on(serve_loopback_mux(
+            vcfg(),
+            || Ok(Box::new(evolved_target()?) as Box<dyn VerifyBackend>),
+            edges(),
+            ecfg,
+        ))
+        .unwrap();
+
+    assert_eq!(mux_metrics.sessions_completed, USERS);
+    assert_eq!(mux_metrics.sessions_opened, USERS);
+    for i in 0..USERS {
+        let (so, pc, mx) = (&sim.per_session[i], &per_conn[i], &muxed[i]);
+        assert_eq!(mx.new_tokens, so.new_tokens, "mux vs sim tokens (prompt {i})");
+        assert_eq!(mx.accepted, so.accepted, "mux vs sim accepted (prompt {i})");
+        assert_eq!(mx.drafted, so.drafted, "mux vs sim drafted (prompt {i})");
+        assert_eq!(mx.rounds, so.rounds, "mux vs sim rounds (prompt {i})");
+        assert_eq!(
+            mx.new_tokens, pc.new_tokens,
+            "mux vs per-connection tokens (prompt {i})"
+        );
+        assert_eq!(
+            mx.committed, pc.committed,
+            "mux vs per-connection committed sequence (prompt {i})"
+        );
+        assert_eq!(
+            mx.committed, sim.per_session_committed[i],
+            "mux vs simulator committed sequence (prompt {i})"
+        );
+        assert_eq!(mx.reattaches, 0, "fault-free run must not reattach");
+    }
+    // the single connection still fed the cross-stream batcher
+    assert!(
+        mux_metrics.mean_batch() > 1.5,
+        "expected cross-stream batches on one connection, got occupancy {}",
+        mux_metrics.mean_batch()
+    );
+    assert!(mux_metrics.batches < mux_metrics.rounds);
+}
+
 #[test]
 fn wire_version_mismatch_is_rejected() {
     rt().block_on(async {
@@ -265,7 +375,7 @@ fn wire_version_mismatch_is_rejected() {
             mode: VerifyMode::Greedy,
             k_max: 8,
         };
-        edge.send_frame(Frame::new(FrameKind::Hello, bad_hello.encode()))
+        edge.send_frame(Frame::control(FrameKind::Hello, bad_hello.encode()))
             .await
             .unwrap();
         let f = edge.recv_frame().await.unwrap().unwrap();
