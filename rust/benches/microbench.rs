@@ -8,9 +8,12 @@ use flexspec::coordinator::edge::{DraftSource, ModelDraft};
 use flexspec::coordinator::policy::{AdaptivePolicy, LatencyModel};
 use flexspec::coordinator::CloudEngine;
 use flexspec::devices::{A800_70B, JETSON_ORIN};
-use flexspec::protocol::frame::{Frame, FrameDecoder, FrameKind};
-use flexspec::protocol::{DraftMsg, VerifyMode, WireFormat};
+use flexspec::protocol::frame::{CancelMsg, Frame, FrameDecoder, FrameKind};
+use flexspec::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
 use flexspec::runtime::Registry;
+use flexspec::serve::{
+    PipelinedDrafter, SessionCore, SyntheticDraft, SyntheticTarget, VerifyBackend,
+};
 use flexspec::util::bench::{black_box, Group};
 use flexspec::util::rng::SplitMix64;
 
@@ -41,6 +44,8 @@ fn main() -> anyhow::Result<()> {
         chosen_probs: vec![0.5; 6],
         mode: VerifyMode::Stochastic,
         wire: WireFormat::Sketch,
+        basis_len: 0,
+        spec: vec![],
     };
     g.add("protocol: DraftMsg encode+decode+air_bytes", || {
         let buf = msg.encode();
@@ -81,6 +86,8 @@ fn main() -> anyhow::Result<()> {
             chosen_probs: vec![0.5; k],
             mode: VerifyMode::Stochastic,
             wire: WireFormat::Compact,
+            basis_len: 0,
+            spec: vec![],
         })
         .collect();
     for (i, &k) in ks.iter().enumerate() {
@@ -103,6 +110,121 @@ fn main() -> anyhow::Result<()> {
             "    -> K={}: {:.1} MB/s framed-codec throughput",
             ks[i],
             nbytes as f64 / (r.mean_ns / 1e9) / 1e6
+        );
+    }
+
+    // ---- serve: pipelined drafting (cancel-on-reject) -----------------
+    // (regressions here tax every round of pipelined serving: the spec-
+    // tagged draft + cancel codec and the planner's launch/resolve step)
+    let mut gp = Group::new("serve: pipelined drafting").with_budget(80.0);
+    let spec_msg = DraftMsg {
+        session: 3,
+        round: 18,
+        tokens: (0..4).map(|i| 100 + i).collect(),
+        chosen_probs: vec![],
+        mode: VerifyMode::Greedy,
+        wire: WireFormat::Compact,
+        basis_len: 64,
+        spec: (0..5).map(|i| 200 + i).collect(),
+    };
+    gp.add("spec-tagged draft frame roundtrip K=4 + Cancel encode", || {
+        let f = Frame::on(1, FrameKind::Draft, black_box(&spec_msg).encode());
+        let b = f.encode();
+        let mut dec = FrameDecoder::new();
+        dec.push(&b);
+        let out = dec.next_frame().unwrap().unwrap();
+        let m = DraftMsg::decode(&out.payload).unwrap();
+        let c = Frame::on(1, FrameKind::Cancel, CancelMsg { round: m.round + 1 }.encode());
+        black_box((m.spec.len(), c.encode().len()));
+    });
+    gp.add("PipelinedDrafter: launch x2 + resolve (depth 2)", || {
+        let mut core = SessionCore::new(1, &[1, 70, 71], 64);
+        let mut p = PipelinedDrafter::new(2);
+        let plan = p.next_launch(&core).unwrap();
+        p.launched(&mut core, &plan, vec![5, 6, 7, 8], Some(9), 0);
+        let plan2 = p.next_launch(&core).unwrap();
+        p.launched(&mut core, &plan2, vec![10, 11, 12, 13], Some(14), 0);
+        let v = VerifyMsg {
+            session: 1,
+            round: 0,
+            tau: 4,
+            correction: 9,
+            eos: false,
+        };
+        black_box(p.resolve(&mut core, &v).held);
+    });
+
+    // RTT-hiding case (acceptance microbench): a pure pipelined decode
+    // against the drifted synthetic target exposes strictly fewer
+    // round-trip waits than the sequential lock-step loop
+    {
+        let seed = 23u64;
+        let prompt = vec![1i32, 100, 103, 106, 109, 112];
+        let mut target = {
+            let mut t = SyntheticTarget::new(seed).with_version("evolved", 0.3);
+            t.deploy("evolved").unwrap();
+            t
+        };
+        let mut draft = SyntheticDraft::new(seed);
+        let mut rng = SplitMix64::new(0);
+        target.start_session(1, &prompt).unwrap();
+        let mut core = SessionCore::new(1, &prompt, 48);
+        let mut cloud = SessionCore::new(1, &prompt, 48);
+        let mut p = PipelinedDrafter::new(2);
+        while !core.done {
+            while let Some(plan) = p.next_launch(&core) {
+                let prop = draft.propose(&plan.context, 4, 0.0, 1.0, &mut rng).unwrap();
+                let bonus = {
+                    let mut c2 = plan.context.clone();
+                    c2.extend_from_slice(&prop.tokens);
+                    draft
+                        .propose(&c2, 1, 0.0, 1.0, &mut rng)
+                        .unwrap()
+                        .tokens
+                        .first()
+                        .copied()
+                };
+                p.launched(&mut core, &plan, prop.tokens, bonus, 0);
+            }
+            p.note_wait();
+            // only basis-valid drafts reach verification, so the head
+            // equals the sequential draft from the committed prefix
+            let head_tokens = draft
+                .propose(&cloud.committed, 4, 0.0, 1.0, &mut rng)
+                .unwrap()
+                .tokens;
+            let v = target
+                .verify_block(
+                    1,
+                    &cloud.committed,
+                    &head_tokens,
+                    &[],
+                    VerifyMode::Greedy,
+                    0.0,
+                    1.0,
+                    &mut rng,
+                )
+                .unwrap();
+            let vm = VerifyMsg {
+                session: 1,
+                round: p.head_round().unwrap(),
+                tau: v.tau as u8,
+                correction: v.correction,
+                eos: v.eos,
+            };
+            cloud.apply_verdict(&head_tokens, v.tau, v.correction, v.eos, false);
+            let _ = p.resolve(&mut core, &vm);
+        }
+        assert!(
+            p.exposed_waits < core.rounds,
+            "pipelining must hide RTTs ({} !< {})",
+            p.exposed_waits,
+            core.rounds
+        );
+        println!(
+            "    -> depth 2 vs sequential: {} of {} RTT waits exposed \
+             ({} hidden, {} rounds pipelined, {} drafts cancelled)",
+            p.exposed_waits, core.rounds, p.overlapped_waits, p.rounds_pipelined, p.drafts_cancelled
         );
     }
 

@@ -30,7 +30,7 @@ const VALUE_OPTS: &[&str] = &[
     "max-new", "dataset", "samples", "arrival-ms", "artifacts",
     "bind", "addr", "backend", "sessions", "k", "draft", "version",
     "deploy-version", "deploy-after", "resume-grace", "fault-seed",
-    "fault-disconnects",
+    "fault-disconnects", "pipeline-depth",
 ];
 
 pub fn cli_main() -> Result<()> {
@@ -68,6 +68,7 @@ pub fn cli_main() -> Result<()> {
                  \x20 flexspec serve-edge [--addr 127.0.0.1:7411] [--sessions N] [--max-new N]\n\
                  \x20\x20\x20\x20 [--draft synthetic|pld] [--k K|0=adaptive] [--seed S]\n\
                  \x20\x20\x20\x20 [--mux] [--fault-seed S] [--fault-disconnects N]\n\
+                 \x20\x20\x20\x20 [--pipeline-depth D]  (1=sequential, >=2 pipelined, 0=auto policy)\n\
                  \x20 flexspec trace <5g|4g|wifi> <out.csv> [--samples N]\n\
                  Run `make artifacts` first to build the AOT model zoo."
             );
@@ -142,6 +143,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
         max_new: args.get_usize("max-new", 32),
         arrival_mean_ms: args.get_f64("arrival-ms", 300.0),
         seed: args.get_u64("seed", 1),
+        // pipelining needs a pure draft source; the PJRT model draft
+        // falls back to sequential (see ServeConfig::pipeline_depth)
+        pipeline_depth: args.get_usize("pipeline-depth", 1),
         ..Default::default()
     };
     let net = NetworkProfile::new(network);
@@ -301,7 +305,11 @@ fn fault_plan_for(fault_seed: u64, disconnects: usize, salt: u64) -> Arc<Mutex<F
 /// `--mux` all N sessions are MULTIPLEXED over one connection. With
 /// `--fault-seed` every connection is wrapped in a seeded
 /// `FaultTransport` (forced disconnects + reconnect-and-resume), which
-/// demos the resume path against a live server.
+/// demos the resume path against a live server. `--pipeline-depth`
+/// controls pipelined drafting (wire v3): 1 = sequential lock-step
+/// (default), >= 2 keeps that many rounds in flight with
+/// cancel-on-reject, 0 = the adaptive policy picks per round from the
+/// measured channel.
 fn serve_edge_cmd(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7411");
     let n = args.get_usize("sessions", 4);
@@ -319,6 +327,7 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
     let ecfg = EdgeSessionConfig {
         max_new: args.get_usize("max-new", 32),
         fixed_k: if k == 0 { None } else { Some(k) },
+        pipeline_depth: args.get_usize("pipeline-depth", 1),
         seed,
         ..Default::default()
     };
@@ -334,6 +343,20 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
             let mut dial = tcp_dial(addr.clone(), plan);
             let initial = dial.connect().await?;
             let mut emux = EdgeMux::connect(initial, Some(dial), &ecfg).await?;
+            // a v2-negotiated connection cannot carry spec-tagged drafts
+            // or Cancel frames: every muxed session runs sequentially
+            let ecfg = if emux.wire_version() < 3 && ecfg.pipeline_depth != 1 {
+                eprintln!(
+                    "cloud negotiated wire v{}; pipelining disabled",
+                    emux.wire_version()
+                );
+                EdgeSessionConfig {
+                    pipeline_depth: 1,
+                    ..ecfg.clone()
+                }
+            } else {
+                ecfg.clone()
+            };
             let mut tasks = Vec::new();
             for _ in 0..n {
                 let prompt = gen.next_request().prompt;
@@ -389,7 +412,10 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
     let mode = if mux { "1 muxed conn" } else { "1 conn/session" };
     let mut table = crate::util::table::Table::new(
         &format!("edge sessions vs {addr} ({draft_kind} draft, {mode})"),
-        &["session", "tokens", "rounds", "accept", "mean K", "resumes", "rtt p50 ms", "wall ms"],
+        &[
+            "session", "tokens", "rounds", "accept", "mean K", "resumes", "piped", "cancelled",
+            "rtt p50 ms", "wall ms",
+        ],
     );
     let mut failures = 0usize;
     for res in results {
@@ -402,6 +428,8 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
                     format!("{:.2}", r.acceptance()),
                     format!("{:.1}", r.k_used.mean()),
                     r.resumes.to_string(),
+                    r.rounds_pipelined.to_string(),
+                    r.drafts_cancelled.to_string(),
                     format!("{:.2}", r.rtt_ms.p50()),
                     format!("{:.0}", r.wall_ms),
                 ]);

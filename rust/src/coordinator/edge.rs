@@ -67,6 +67,18 @@ pub trait DraftSource {
     fn is_neural(&self) -> bool {
         false
     }
+
+    /// True when `propose` is a PURE function of `(committed, config)` —
+    /// no internal KV state, no rng consumption. Only pure sources may
+    /// drive pipelined drafting (`serve::pipeline`): a basis-valid
+    /// speculative draft must be byte-identical to the draft a
+    /// sequential edge would produce from the confirmed prefix, and the
+    /// extra bonus-prediction lookahead calls must not perturb later
+    /// proposals. Stateful sources (KV-cached neural drafts) default to
+    /// `false` and fall back to sequential decoding.
+    fn is_pure(&self) -> bool {
+        false
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -267,6 +279,10 @@ impl DraftSource for PromptLookup {
             format!("pld(n={})", self.n)
         }
     }
+
+    fn is_pure(&self) -> bool {
+        true // n-gram lookup over the context: no state, no sampling
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -293,6 +309,10 @@ impl DraftSource for NoDraft {
 
     fn name(&self) -> String {
         "cloud-only".into()
+    }
+
+    fn is_pure(&self) -> bool {
+        true // proposes nothing, trivially pure
     }
 }
 

@@ -87,6 +87,13 @@ pub struct RequestResult {
     pub bytes_down: usize,
     pub drafted: usize,
     pub accepted: usize,
+    /// Pipelined mode: rounds whose draft + uplink were hidden behind
+    /// the previous round's verify + downlink (speculation held).
+    pub rounds_pipelined: usize,
+    /// Pipelined mode: speculative drafts retracted (prefix broke).
+    pub drafts_cancelled: usize,
+    /// Pipelined mode: draft tokens of retracted rounds.
+    pub draft_tokens_wasted: usize,
     pub energy: EnergyBreakdown,
     pub rounds_log: Vec<RoundLog>,
     pub output: Vec<i32>,
@@ -128,6 +135,12 @@ pub struct Pipeline<'a> {
     pub temperature: f32,
     pub top_p: f32,
     pub method: String,
+    /// Pipelined drafting (`serve::pipeline` twin under the virtual
+    /// clock): 1 = sequential; >= 2 overlaps the next round's draft +
+    /// uplink with the current round's verify + downlink,
+    /// cancel-on-reject. One speculative round in flight (depth-2
+    /// model); requires a pure draft source, otherwise sequential.
+    pub pipeline_depth: usize,
     session_counter: u32,
 }
 
@@ -157,12 +170,19 @@ impl<'a> Pipeline<'a> {
             temperature,
             top_p,
             method: method.into(),
+            pipeline_depth: 1,
             session_counter: 0,
         }
     }
 
     pub fn with_wire(mut self, wire: WireFormat) -> Self {
         self.wire = wire;
+        self
+    }
+
+    /// Enable pipelined drafting (see the `pipeline_depth` field docs).
+    pub fn with_pipeline_depth(mut self, depth: usize) -> Self {
+        self.pipeline_depth = depth.max(1);
         self
     }
 
@@ -210,6 +230,26 @@ impl<'a> Pipeline<'a> {
         let eos = self.cloud.eos;
         let mut round_idx = 0u32;
 
+        // --- pipelined drafting state (depth-2 virtual model) ----------
+        // The speculative next-round draft rides the previous round's
+        // verify + downlink window; if its optimistic prefix holds, the
+        // round's draft + uplink cost collapses to the overflow beyond
+        // that window (see serve::pipeline for the full state machine).
+        struct SpecNext {
+            prop: Proposal,
+            /// Bonus token the speculation bets the current round commits.
+            link_bonus: i32,
+            /// Edge draft + uplink ms spent concurrently with the verify.
+            cost_ms: f64,
+            bytes_up: usize,
+        }
+        let pipelining = self.pipeline_depth > 1 && self.draft.is_pure();
+        let mut spec: Option<SpecNext> = None;
+        // previous round's (full_accept, correction) — the validity link
+        let mut prev_outcome: Option<(bool, i32)> = None;
+        // previous round's t_cloud + t_down: the hideable window
+        let mut shadow_ms = 0.0f64;
+
         // --- decode loop (Algorithm 2) ---------------------------------
         while res.new_tokens < max_new {
             // capacity guard: pending(1) + k + safety must fit both caches
@@ -225,35 +265,127 @@ impl<'a> Pipeline<'a> {
             // Step 1a: measure channel, choose K*.
             let chan = self.channel.sample(now_ms);
             let lat = LatencyModel::build(&chan, self.device, self.cloud_profile, self.wire);
-            let mut k = self.policy.choose(&lat);
-            k = k.min(8).min(cap);
 
-            // Step 1b: draft K tokens on the edge (real model).
-            let prop: Proposal =
-                self.draft
-                    .propose(&committed, k, self.temperature, self.top_p, &mut rng)?;
+            // Step 1b+1c: the round's draft + uplink — taken from the
+            // surviving speculation (already drafted AND uplinked during
+            // the previous round's verify) or produced fresh.
+            let mut from_spec: Option<(f64, usize)> = None; // (cost, bytes)
+            // a cancelled speculation still occupies the single-threaded
+            // edge for whatever part of its burst outlasted the verify +
+            // downlink shadow — the redraft cannot start before that
+            let mut stall_ms = 0.0f64;
+            let prop: Proposal = match spec.take() {
+                Some(sp)
+                    if prev_outcome
+                        .is_some_and(|(full, corr)| full && corr == sp.link_bonus)
+                        && sp.prop.tokens.len() <= cap =>
+                {
+                    res.rounds_pipelined += 1;
+                    from_spec = Some((sp.cost_ms, sp.bytes_up));
+                    sp.prop
+                }
+                other => {
+                    if let Some(sp) = other {
+                        // cancel-on-reject: the uplink bytes are spent
+                        // either way, the tokens are waste
+                        res.drafts_cancelled += 1;
+                        res.draft_tokens_wasted += sp.prop.tokens.len();
+                        res.bytes_up += sp.bytes_up;
+                        stall_ms = (sp.cost_ms - shadow_ms).max(0.0);
+                    }
+                    let mut k = self.policy.choose(&lat);
+                    k = k.min(8).min(cap);
+                    self.draft
+                        .propose(&committed, k, self.temperature, self.top_p, &mut rng)?
+                }
+            };
             let k_actual = prop.tokens.len();
-            let t_edge = if self.draft.is_neural() {
-                self.device.round_overhead_ms
-                    + prop.edge_tokens as f64 * self.device.draft_ms_per_token
-            } else {
-                self.device.round_overhead_ms * 0.25 // lookup cost
+            let (t_edge, t_up, bytes_up) = match from_spec {
+                Some((cost, bytes)) => {
+                    // hidden behind the previous round's shadow; only
+                    // the overflow (if any) stalls the pipeline. Energy
+                    // was metered at launch.
+                    (0.0, (cost - shadow_ms).max(0.0), bytes)
+                }
+                None => {
+                    let t_edge = if self.draft.is_neural() {
+                        self.device.round_overhead_ms
+                            + prop.edge_tokens as f64 * self.device.draft_ms_per_token
+                    } else {
+                        self.device.round_overhead_ms * 0.25 // lookup cost
+                    };
+                    meter.compute(t_edge);
+                    let msg = DraftMsg {
+                        session: sid,
+                        round: round_idx,
+                        tokens: prop.tokens.clone(),
+                        chosen_probs: prop.chosen_probs.clone(),
+                        mode: self.mode,
+                        wire: self.wire,
+                        basis_len: 0,
+                        spec: vec![],
+                    };
+                    let bytes_up = msg.air_bytes();
+                    let tx_ms = chan.up_ms(bytes_up);
+                    let t_up = chan.prop_ms + tx_ms;
+                    meter.radio_burst(tx_ms, now_ms + t_edge + t_up);
+                    (t_edge + stall_ms, t_up, bytes_up)
+                }
             };
-            meter.compute(t_edge);
 
-            // Step 1c: uplink.
-            let msg = DraftMsg {
-                session: sid,
-                round: round_idx,
-                tokens: prop.tokens.clone(),
-                chosen_probs: prop.chosen_probs.clone(),
-                mode: self.mode,
-                wire: self.wire,
-            };
-            let bytes_up = msg.air_bytes();
-            let tx_ms = chan.up_ms(bytes_up);
-            let t_up = chan.prop_ms + tx_ms;
-            meter.radio_burst(tx_ms, now_ms + t_edge + t_up);
+            // Step 1d (pipelined): launch the NEXT round's speculative
+            // draft from the optimistic prefix; it rides this round's
+            // verify + downlink window.
+            if pipelining && !prop.tokens.is_empty() {
+                // budget gate: a round that only exists if the
+                // speculation FAILS is never worth drafting
+                let optimistic_new = res.new_tokens + k_actual + 1;
+                if optimistic_new < max_new {
+                    let mut ctx = committed.clone();
+                    ctx.extend_from_slice(&prop.tokens);
+                    let bonus = self
+                        .draft
+                        .propose(&ctx, 1, self.temperature, self.top_p, &mut rng)?
+                        .tokens
+                        .first()
+                        .copied();
+                    if let Some(b) = bonus {
+                        ctx.push(b);
+                        let k2 = self.policy.choose(&lat).min(8);
+                        let sprop = self.draft.propose(
+                            &ctx,
+                            k2,
+                            self.temperature,
+                            self.top_p,
+                            &mut rng,
+                        )?;
+                        if !sprop.tokens.is_empty() {
+                            let smsg = DraftMsg {
+                                session: sid,
+                                round: round_idx + 1,
+                                tokens: sprop.tokens.clone(),
+                                chosen_probs: sprop.chosen_probs.clone(),
+                                mode: self.mode,
+                                wire: self.wire,
+                                basis_len: committed.len() as u64,
+                                spec: prop.tokens.iter().copied().chain([b]).collect(),
+                            };
+                            let sbytes = smsg.air_bytes();
+                            // pure sources are model-free: lookup cost
+                            let s_edge = self.device.round_overhead_ms * 0.25;
+                            let s_tx = chan.up_ms(sbytes);
+                            meter.compute(s_edge);
+                            meter.radio_burst(s_tx, now_ms + t_edge + t_up + s_edge + s_tx);
+                            spec = Some(SpecNext {
+                                prop: sprop,
+                                link_bonus: b,
+                                cost_ms: s_edge + chan.prop_ms + s_tx,
+                                bytes_up: sbytes,
+                            });
+                        }
+                    }
+                }
+            }
 
             // Step 2: cloud verification (real model + fused kernel).
             let verdict = self.cloud.verify(
@@ -313,10 +445,20 @@ impl<'a> Pipeline<'a> {
                 fading: chan.fading,
             });
             round_idx += 1;
+            // pipelined bookkeeping: the window the next round's spec
+            // rode, and the outcome its validity hinges on
+            shadow_ms = t_cloud + t_down;
+            prev_outcome = Some((tau == k_actual && k_actual > 0, verdict.outcome.correction));
 
             if verdict.eos {
                 break;
             }
+        }
+        // speculation still in flight when the request ended is waste
+        if let Some(sp) = spec {
+            res.drafts_cancelled += 1;
+            res.draft_tokens_wasted += sp.prop.tokens.len();
+            res.bytes_up += sp.bytes_up;
         }
 
         res.decode_ms = now_ms - res.prefill_ms;
@@ -338,7 +480,7 @@ impl<'a> Pipeline<'a> {
 mod tests {
     use super::*;
     use crate::channel::{ChannelState, ConstChannel};
-    use crate::coordinator::edge::{ModelDraft, NoDraft};
+    use crate::coordinator::edge::{ModelDraft, NoDraft, PromptLookup};
     use crate::devices::{A800_70B, JETSON_ORIN};
     use crate::runtime::{Engine, Manifest, Registry};
     use std::rc::Rc;
@@ -476,6 +618,41 @@ mod tests {
             "flexspec",
         );
         assert_eq!(a, b, "speculative decoding must be lossless");
+    }
+
+    #[test]
+    fn pipelined_request_is_lossless_and_never_slower() {
+        // Pipelined single-request decoding (depth 2, pure PLD draft)
+        // must emit the exact sequential output; valid speculation can
+        // only SHRINK virtual decode time (broken prefixes cost tokens
+        // and bytes, never latency).
+        let Some(reg) = registry() else { return };
+        let prompt = vec![1i32, 64, 67, 86, 93, 64, 67];
+        let run = |depth: usize| {
+            let mut cloud = CloudEngine::new(&reg, "target_llama2t_base", 2).unwrap();
+            let mut chan = const_chan();
+            let mut p = Pipeline::new(
+                Box::new(PromptLookup::pld(2)),
+                &mut cloud,
+                &mut chan,
+                StridePolicy::Fixed(4),
+                &JETSON_ORIN,
+                &A800_70B,
+                VerifyMode::Greedy,
+                0.0,
+                1.0,
+                "pld",
+            )
+            .with_pipeline_depth(depth);
+            p.run_request(&prompt, 16, 3).unwrap()
+        };
+        let seq = run(1);
+        let pipe = run(2);
+        assert_eq!(seq.output, pipe.output, "pipelining must be lossless");
+        assert_eq!(seq.new_tokens, pipe.new_tokens);
+        assert!(pipe.decode_ms <= seq.decode_ms + 1e-9);
+        assert_eq!(seq.rounds_pipelined, 0);
+        assert_eq!(seq.drafts_cancelled, 0);
     }
 
     #[test]

@@ -137,6 +137,30 @@ impl AdaptivePolicy {
     pub fn observe(&mut self, tau: usize, k: usize) {
         self.gamma.update(tau as f64 / k.max(1) as f64);
     }
+
+    /// Pipelined-drafting depth hook: how many rounds the edge should
+    /// keep in flight (1 = sequential, the `serve::pipeline` subsystem's
+    /// off switch).
+    ///
+    /// Pipelining hides the FIXED round cost (propagation + T_base +
+    /// headers) behind drafting, so it pays exactly when `T_fixed`
+    /// dominates `K * T_marginal`: each extra in-flight round can hide
+    /// up to one draft+uplink burst, and `T_fixed / (K * T_marginal)`
+    /// bursts fit in one fixed window. But a speculative round only
+    /// lands when its whole optimistic prefix holds — full acceptance
+    /// AND the predicted bonus token — which happens with probability
+    /// ≈ gamma^(K+1) per round; below ~0.2 the retraction traffic
+    /// outweighs the hidden RTTs and the hook falls back to sequential.
+    pub fn select_pipeline_depth(&self, lat: &LatencyModel, k: usize, max_depth: usize) -> usize {
+        let max_depth = max_depth.max(1);
+        let k = k.max(1);
+        let p_hold = self.gamma.get().max(0.0).powi(k as i32 + 1);
+        if p_hold < 0.2 {
+            return 1;
+        }
+        let ratio = lat.t_fixed_ms / (k as f64 * lat.t_marginal_ms).max(1e-9);
+        (1 + ratio as usize).min(max_depth)
+    }
 }
 
 #[cfg(test)]
@@ -254,6 +278,38 @@ mod tests {
             let g = p.gamma.get();
             prop::assert_prop((0.0..=1.0).contains(&g), format!("gamma {g}"))
         });
+    }
+
+    #[test]
+    fn pipeline_depth_tracks_fixed_cost_dominance() {
+        let mut p = AdaptivePolicy::new(8, 0.1);
+        p.gamma = Ema::new(0.95, 0.1); // near-aligned draft
+
+        // T_fixed >> K * T_marginal: depth opens up
+        let far = LatencyModel {
+            t_fixed_ms: 400.0,
+            t_marginal_ms: 10.0,
+        };
+        assert!(p.select_pipeline_depth(&far, 4, 4) >= 2, "far link must pipeline");
+        // cap respected
+        assert!(p.select_pipeline_depth(&far, 1, 3) <= 3);
+
+        // marginal-dominated link (weak uplink, Sketch-class payloads):
+        // pipelining cannot hide anything — sequential
+        let near = LatencyModel {
+            t_fixed_ms: 20.0,
+            t_marginal_ms: 30.0,
+        };
+        assert_eq!(p.select_pipeline_depth(&near, 4, 4), 1);
+
+        // drifted target (low gamma): speculation almost never holds, so
+        // even a fixed-cost-dominated link stays sequential
+        let mut drifted = AdaptivePolicy::new(8, 0.1);
+        drifted.gamma = Ema::new(0.4, 0.1);
+        assert_eq!(drifted.select_pipeline_depth(&far, 4, 4), 1);
+
+        // depth 1 is the floor no matter what
+        assert!(p.select_pipeline_depth(&near, 8, 0) >= 1);
     }
 
     #[test]

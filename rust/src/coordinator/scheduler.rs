@@ -80,7 +80,29 @@ struct SessionState {
     started_ms: f64,
     /// In-flight proposal awaiting verification.
     pending: Option<(Vec<i32>, Vec<f32>, Vec<Vec<f32>>)>,
+    /// Pipelined mode: the NEXT round's speculative draft, launched
+    /// while `pending` verifies (mirrors `serve::pipeline`'s depth-2
+    /// in-flight window under the virtual clock).
+    spec_next: Option<SpecDraft>,
     rng: SplitMix64,
+}
+
+/// One speculative round in flight (virtual-clock twin of
+/// `serve::pipeline::InflightRound`).
+struct SpecDraft {
+    round: u32,
+    tokens: Vec<i32>,
+    chosen_probs: Vec<f32>,
+    prob_rows: Vec<Vec<f32>>,
+    /// The bonus token the PREVIOUS round's speculation bet on — the
+    /// validity link: this draft survives iff that round fully accepts
+    /// AND commits exactly this correction.
+    link_bonus: i32,
+    /// This round's own predicted bonus — the chain link for the round
+    /// after it.
+    own_bonus: Option<i32>,
+    /// Virtual time the draft reaches the cloud.
+    arrive_ms: f64,
 }
 
 /// Scheduler configuration.
@@ -103,6 +125,14 @@ pub struct ServeConfig {
     /// `serve::VerifierConfig::capacity_floor` for sim ↔ serve count
     /// equality.
     pub capacity_floor: usize,
+    /// Pipelined drafting (`serve::pipeline` twin): 1 = sequential
+    /// lock-step; >= 2 overlaps the next round's draft + uplink with the
+    /// current round's verify + downlink, cancel-on-reject. The
+    /// simulator models ONE speculative round in flight (the serving
+    /// stack's depth-2 shape); committed sequences are identical either
+    /// way, and with `fixed_k` the pipeline counters match the serving
+    /// stack's exactly. Requires a pure draft source.
+    pub pipeline_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -119,6 +149,7 @@ impl Default for ServeConfig {
             seed: 1,
             fixed_k: None,
             capacity_floor: 10,
+            pipeline_depth: 1,
         }
     }
 }
@@ -136,6 +167,15 @@ pub struct ServeReport {
     pub per_token_latency: Summary,
     pub acceptance: Summary,
     pub t_base_saved_ms: f64,
+    /// Rounds verified from a speculative draft whose optimistic prefix
+    /// held (pipelined mode) — round trips hidden under the virtual
+    /// clock. Matches `ServingMetrics::rounds_pipelined` for the same
+    /// seed and fixed stride.
+    pub rounds_pipelined: usize,
+    /// Speculative rounds whose prefix broke: retracted and redrafted.
+    pub drafts_cancelled: usize,
+    /// Draft tokens of retracted speculative rounds.
+    pub draft_tokens_wasted: usize,
     /// Per-session final counters, in prompt order (for cross-checking
     /// against loopback/TCP serving runs).
     pub per_session: Vec<SessionOutcome>,
@@ -152,6 +192,9 @@ impl ServeReport {
 }
 
 /// Edge: draft + uplink; returns the virtual arrival time at the cloud.
+/// In pipelined mode (`cfg.pipeline_depth >= 2`, pure draft source) it
+/// also launches the NEXT round's speculative draft from the optimistic
+/// prefix, exactly as the serving edge does right after sending.
 fn draft_and_send(
     s: &mut SessionState,
     now: f64,
@@ -176,10 +219,105 @@ fn draft_and_send(
         chosen_probs: prop.chosen_probs.clone(),
         mode: cfg.mode,
         wire: WireFormat::Compact,
+        basis_len: 0,
+        spec: vec![],
     };
     let t_up = chan.prop_ms + chan.up_ms(msg.air_bytes());
+    let arrive = now + t_edge + t_up;
+    let head_tokens = prop.tokens.clone();
+    let head_round = s.core.rounds as u32;
     s.pending = Some((prop.tokens, prop.chosen_probs, prop.prob_rows));
-    Ok(now + t_edge + t_up)
+    s.spec_next = None;
+    if cfg.pipeline_depth > 1 && s.draft.is_pure() && !head_tokens.is_empty() {
+        // predict the bonus token (the +1 every round commits) — the
+        // validity link the speculation bets on
+        let mut ctx = s.core.committed.clone();
+        ctx.extend_from_slice(&head_tokens);
+        let bonus = s
+            .draft
+            .propose(&ctx, 1, cfg.temperature, cfg.top_p, &mut s.rng)?
+            .tokens
+            .first()
+            .copied();
+        if let Some(b) = bonus {
+            launch_spec(s, arrive, &head_tokens, b, head_round + 1, device, cfg, cloud_profile)?;
+        }
+    }
+    Ok(arrive)
+}
+
+/// Pipelined mode: draft round `round` from the optimistic prefix
+/// `committed ++ head_tokens ++ head_bonus` and put it in flight.
+/// Mirrors `serve::pipeline::PipelinedDrafter`'s launch gates exactly
+/// (same gates ⇒ identical pipeline counters in sim and serve for a
+/// fixed stride). `launch_ms` is when the edge starts drafting it.
+#[allow(clippy::too_many_arguments)]
+fn launch_spec(
+    s: &mut SessionState,
+    launch_ms: f64,
+    head_tokens: &[i32],
+    head_bonus: i32,
+    round: u32,
+    device: &EdgeDevice,
+    cfg: &ServeConfig,
+    cloud_profile: &CloudProfile,
+) -> Result<()> {
+    s.spec_next = None;
+    // optimistic budget gate (PipelinedDrafter::can_launch): a round
+    // that could only exist if the speculation FAILS is never drafted
+    let optimistic_new = s.core.committed.len() + head_tokens.len() + 1 - s.core.prompt_len;
+    if optimistic_new >= cfg.max_new {
+        return Ok(());
+    }
+    let mut ctx = s.core.committed.clone();
+    ctx.extend_from_slice(head_tokens);
+    ctx.push(head_bonus);
+    let chan = s.channel.sample(launch_ms);
+    let lat = LatencyModel::build(&chan, device, cloud_profile, WireFormat::Compact);
+    let k = cfg
+        .fixed_k
+        .unwrap_or_else(|| s.policy.select_k(&lat))
+        .clamp(1, 8);
+    let prop = s
+        .draft
+        .propose(&ctx, k, cfg.temperature, cfg.top_p, &mut s.rng)?;
+    if prop.tokens.is_empty() {
+        return Ok(());
+    }
+    // this round's own bonus chains the round after it
+    let own_bonus = {
+        let mut ctx2 = ctx.clone();
+        ctx2.extend_from_slice(&prop.tokens);
+        s.draft
+            .propose(&ctx2, 1, cfg.temperature, cfg.top_p, &mut s.rng)?
+            .tokens
+            .first()
+            .copied()
+    };
+    // wire shape (basis + spec tail) only matters for byte accounting
+    let spec_suffix: Vec<i32> = head_tokens.iter().copied().chain([head_bonus]).collect();
+    let msg = DraftMsg {
+        session: s.core.id,
+        round,
+        tokens: prop.tokens.clone(),
+        chosen_probs: prop.chosen_probs.clone(),
+        mode: cfg.mode,
+        wire: WireFormat::Compact,
+        basis_len: s.core.committed.len() as u64,
+        spec: spec_suffix,
+    };
+    let t_edge = device.round_overhead_ms + prop.edge_tokens as f64 * device.draft_ms_per_token;
+    let t_up = chan.prop_ms + chan.up_ms(msg.air_bytes());
+    s.spec_next = Some(SpecDraft {
+        round,
+        tokens: prop.tokens,
+        chosen_probs: prop.chosen_probs,
+        prob_rows: prop.prob_rows,
+        link_bonus: head_bonus,
+        own_bonus,
+        arrive_ms: launch_ms + t_edge + t_up,
+    });
+    Ok(())
 }
 
 /// Run a multi-user serving simulation with dynamic verification
@@ -219,6 +357,7 @@ pub fn serve_with(
             policy: AdaptivePolicy::new(8, 0.15),
             started_ms: 0.0,
             pending: None,
+            spec_next: None,
             rng: SplitMix64::new(cfg.seed ^ (0x2000 + id as u64)),
         });
         push(&mut heap, t_arrive, Event::SessionArrives(id), &mut seq);
@@ -310,7 +449,20 @@ pub fn serve_with(
                             .apply_verdict(&tokens, v.tau, v.correction, v.eos, out_of_capacity);
                     report.rounds += 1;
 
+                    // resolve the speculative next round (pipelined
+                    // mode), mirroring PipelinedDrafter::resolve: it
+                    // survives only on FULL acceptance with the bonus
+                    // token predicted exactly, in a live session
+                    let spec = s.spec_next.take();
+                    let held = spec.as_ref().is_some_and(|sp| {
+                        !finished && v.tau == tokens.len() && v.correction == sp.link_bonus
+                    });
+
                     if finished {
+                        if let Some(sp) = spec {
+                            report.drafts_cancelled += 1;
+                            report.draft_tokens_wasted += sp.tokens.len();
+                        }
                         backend.end_session(id);
                         report.completed += 1;
                         report.tokens += s.core.new_tokens;
@@ -323,7 +475,37 @@ pub fn serve_with(
                         }
                         report.per_session.push(s.core.outcome());
                         report.wall_ms = report.wall_ms.max(t_resp);
+                    } else if held {
+                        let sp = spec.expect("held implies a speculative round");
+                        debug_assert_eq!(sp.round, s.core.rounds as u32);
+                        report.rounds_pipelined += 1;
+                        // the cloud verifies the promoted round once it
+                        // has BOTH arrived and seen this commit — the
+                        // edge's draft + uplink legs are hidden
+                        let ready = sp.arrive_ms.max(now + t_batch);
+                        // the edge hears the verdict at t_resp and tops
+                        // the pipe back up with the next speculation
+                        if let Some(ob) = sp.own_bonus {
+                            launch_spec(
+                                s,
+                                t_resp,
+                                &sp.tokens,
+                                ob,
+                                sp.round + 1,
+                                device,
+                                cfg,
+                                cloud_profile,
+                            )?;
+                        }
+                        s.pending = Some((sp.tokens, sp.chosen_probs, sp.prob_rows));
+                        push(&mut heap, ready, Event::RequestArrives(id), &mut seq);
                     } else {
+                        // broken prefix (or no speculation): retract and
+                        // redraft from the true committed prefix
+                        if let Some(sp) = spec {
+                            report.drafts_cancelled += 1;
+                            report.draft_tokens_wasted += sp.tokens.len();
+                        }
                         let arrive = draft_and_send(s, t_resp, device, cfg, cloud_profile)?;
                         push(&mut heap, arrive, Event::RequestArrives(id), &mut seq);
                     }
@@ -537,6 +719,73 @@ mod tests {
         .unwrap();
         assert_eq!(rep.per_session, rep2.per_session);
         assert_eq!(rep.batches, rep2.batches);
+    }
+
+    #[test]
+    fn pipelined_sim_commits_identical_tokens_in_less_virtual_time() {
+        let run = |depth: usize, drift: f64| {
+            let mut backend = SyntheticTarget::new(11).with_version("evolved", drift);
+            if drift > 0.0 {
+                backend.deploy("evolved").unwrap();
+            }
+            let mut make = |_id: u32| -> Result<Box<dyn DraftSource>> {
+                Ok(Box::new(SyntheticDraft::new(11)))
+            };
+            let net = NetworkProfile::new(NetworkKind::FourG);
+            let cfg = ServeConfig {
+                users: 4,
+                max_new: 16,
+                fixed_k: Some(4),
+                seed: 5,
+                pipeline_depth: depth,
+                ..Default::default()
+            };
+            serve_with(
+                &mut backend,
+                &mut make,
+                &prompts(4),
+                &JETSON_ORIN,
+                &A800_70B,
+                &net,
+                &cfg,
+            )
+            .unwrap()
+        };
+
+        // zero drift: every speculation holds — identical tokens,
+        // strictly less virtual wall time (the RTT hiding)
+        let seq = run(1, 0.0);
+        let pipe = run(2, 0.0);
+        assert_eq!(seq.per_session, pipe.per_session);
+        assert_eq!(seq.per_session_committed, pipe.per_session_committed);
+        assert_eq!(seq.rounds_pipelined, 0);
+        assert!(pipe.rounds_pipelined > 0, "speculation must land");
+        assert_eq!(pipe.drafts_cancelled, 0, "zero drift never cancels");
+        assert!(
+            pipe.wall_ms < seq.wall_ms,
+            "pipelining must hide RTT: {} !< {}",
+            pipe.wall_ms,
+            seq.wall_ms
+        );
+
+        // drifted target: prefixes break, cancel-on-reject redrafts —
+        // the committed sequences STILL match the sequential run exactly
+        let seq_d = run(1, 0.3);
+        let pipe_d = run(2, 0.3);
+        assert_eq!(seq_d.per_session_committed, pipe_d.per_session_committed);
+        assert_eq!(seq_d.per_session, pipe_d.per_session);
+        assert!(pipe_d.drafts_cancelled > 0, "drift must break some prefixes");
+        assert!(pipe_d.rounds_pipelined > 0, "some speculation must survive");
+        assert!(pipe_d.draft_tokens_wasted > 0);
+        // identical trajectories imply identical verified-round counts
+        assert_eq!(pipe_d.rounds, seq_d.rounds);
+
+        // bit-identical replay of the pipelined schedule itself
+        let pipe2 = run(2, 0.3);
+        assert_eq!(pipe_d.per_session, pipe2.per_session);
+        assert_eq!(pipe_d.rounds_pipelined, pipe2.rounds_pipelined);
+        assert_eq!(pipe_d.drafts_cancelled, pipe2.drafts_cancelled);
+        assert_eq!(pipe_d.wall_ms, pipe2.wall_ms);
     }
 
     #[test]

@@ -139,6 +139,17 @@ pub struct ServingMetrics {
     /// duplicates and post-resume retransmits).
     pub verdicts_replayed: usize,
     pub handshakes_rejected: usize,
+    /// Rounds verified from a SPECULATIVE draft whose optimistic basis
+    /// matched the committed prefix exactly (wire v3 pipelining) — each
+    /// one is an edge round trip hidden behind the previous verify.
+    pub rounds_pipelined: usize,
+    /// Speculative drafts discarded: retracted by an edge `Cancel`,
+    /// failed the basis check after a partial acceptance, or voided by
+    /// their session finishing underneath them.
+    pub drafts_cancelled: usize,
+    /// Draft tokens of discarded speculative rounds — uplink air spent
+    /// on speculation that did not land.
+    pub draft_tokens_wasted: usize,
     pub rounds: usize,
     pub batches: usize,
     /// Verify requests per closed batch.
@@ -197,6 +208,7 @@ impl ServingMetrics {
             "{title}\n\
              \x20 sessions         {} completed / {} opened ({} aborted, {} handshakes rejected)\n\
              \x20 resume           {} parked, {} resumed, {} evicted, {} verdicts replayed\n\
+             \x20 pipeline         {} rounds pipelined, {} drafts cancelled, {} draft tokens wasted\n\
              \x20 rounds           {} in {} batches (mean occupancy {:.2})\n\
              \x20 tokens           {} committed, acceptance {:.3} ({} / {} drafted)\n\
              \x20 hot-swaps        {}\n\
@@ -209,6 +221,9 @@ impl ServingMetrics {
             self.sessions_resumed,
             self.sessions_evicted,
             self.verdicts_replayed,
+            self.rounds_pipelined,
+            self.drafts_cancelled,
+            self.draft_tokens_wasted,
             self.rounds,
             self.batches,
             self.mean_batch(),
@@ -240,6 +255,9 @@ mod tests {
             bytes_down: 200,
             drafted: 8,
             accepted: 5,
+            rounds_pipelined: 0,
+            drafts_cancelled: 0,
+            draft_tokens_wasted: 0,
             energy: Default::default(),
             output: vec![1; tokens],
             rounds_log: vec![
@@ -311,10 +329,14 @@ mod tests {
         m.sessions_resumed = 1;
         m.sessions_evicted = 1;
         m.verdicts_replayed = 3;
+        m.rounds_pipelined = 4;
+        m.drafts_cancelled = 2;
+        m.draft_tokens_wasted = 8;
         let r = m.render("serving");
         assert!(r.contains("6 committed"));
         assert!(r.contains("hot-swaps"));
         assert!(r.contains("2 parked, 1 resumed, 1 evicted, 3 verdicts replayed"));
+        assert!(r.contains("4 rounds pipelined, 2 drafts cancelled, 8 draft tokens wasted"));
     }
 
     #[test]

@@ -61,10 +61,21 @@ use super::VerifyMode;
 use anyhow::{bail, Result};
 
 /// Version of the frame layout + message payloads. Bump on any breaking
-/// change; the handshake rejects mismatched peers instead of
-/// misinterpreting their bytes. v2: stream-multiplexed framing + the
-/// resume handshake (`Resume`/`ResumeAck`, open nonces, resume tokens).
-pub const WIRE_VERSION: u16 = 2;
+/// change; the handshake NEGOTIATES the highest mutually supported
+/// version instead of misinterpreting bytes. v2: stream-multiplexed
+/// framing + the resume handshake (`Resume`/`ResumeAck`, open nonces,
+/// resume tokens). v3: pipelined drafting — speculative-basis-tagged
+/// `Draft` payloads (`DraftMsg::{basis_len, spec}`) and the `Cancel`
+/// frame that retracts in-flight speculative rounds after a partial
+/// acceptance.
+pub const WIRE_VERSION: u16 = 3;
+
+/// Oldest peer version the handshake still accepts. A v2 peer never
+/// sends spec-tagged drafts or `Cancel` frames, and the cloud sends it
+/// nothing new, so v3 clouds serve v2 edges unchanged; the negotiated
+/// version in `HelloAck` tells a v3 edge whether pipelining is allowed
+/// on this connection.
+pub const MIN_WIRE_VERSION: u16 = 2;
 
 /// Upper bound on one frame's body (kind + stream + payload). Prompts are
 /// ≤ a few hundred tokens and draft blocks ≤ K_max tokens, so 1 MiB is
@@ -103,6 +114,12 @@ pub enum FrameKind {
     Resume = 8,
     /// Cloud → edge: resume verdict + the committed tail the edge missed.
     ResumeAck = 9,
+    /// Edge → cloud (wire v3): retract in-flight speculative draft
+    /// rounds `>= round` after a partial acceptance broke their
+    /// optimistic prefix. Advisory fast-path: the cloud also discards
+    /// stale drafts autonomously by basis check, so a lost `Cancel` can
+    /// never change the committed sequence.
+    Cancel = 10,
 }
 
 impl FrameKind {
@@ -117,6 +134,7 @@ impl FrameKind {
             7 => FrameKind::Bye,
             8 => FrameKind::Resume,
             9 => FrameKind::ResumeAck,
+            10 => FrameKind::Cancel,
             _ => return None,
         })
     }
@@ -351,10 +369,17 @@ impl HelloAck {
 
 /// The cloud's answer to a `Hello`: the single place the version gate
 /// lives, so the simulator-side tests and the server agree on it.
+///
+/// Since wire v3 the gate NEGOTIATES: any peer version in
+/// [`MIN_WIRE_VERSION`, `WIRE_VERSION`] is accepted and the ack's
+/// `wire_version` carries the agreed (lower) version — a v2 edge keeps
+/// working against a v3 cloud, and a v3 edge talking to this cloud
+/// learns from the ack whether v3-only traffic (spec-tagged drafts,
+/// `Cancel`) is allowed on the connection.
 pub fn hello_response(h: &Hello) -> HelloAck {
-    if h.wire_version == WIRE_VERSION {
+    if (MIN_WIRE_VERSION..=WIRE_VERSION).contains(&h.wire_version) {
         HelloAck {
-            wire_version: WIRE_VERSION,
+            wire_version: h.wire_version.min(WIRE_VERSION),
             accepted: true,
             reason: String::new(),
         }
@@ -363,8 +388,8 @@ pub fn hello_response(h: &Hello) -> HelloAck {
             wire_version: WIRE_VERSION,
             accepted: false,
             reason: format!(
-                "wire version mismatch: peer speaks v{}, this cloud speaks v{}",
-                h.wire_version, WIRE_VERSION
+                "wire version mismatch: peer speaks v{}, this cloud speaks v{}..v{}",
+                h.wire_version, MIN_WIRE_VERSION, WIRE_VERSION
             ),
         }
     }
@@ -576,6 +601,35 @@ impl ResumeAck {
     }
 }
 
+/// Edge → cloud (wire v3): retract every in-flight speculative draft
+/// round `>= round` for the stream's session. Sent when a verdict broke
+/// the optimistic prefix those rounds were drafted from; the rounds are
+/// redrafted from the true committed prefix under the SAME round
+/// numbers. Idempotent and loss-tolerant: the cloud's basis check
+/// discards stale drafts even when the `Cancel` never arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CancelMsg {
+    /// First round to retract (everything at or beyond it is void).
+    pub round: u32,
+}
+
+impl CancelMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4);
+        write_u32(&mut out, self.round);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<CancelMsg> {
+        let mut pos = 0usize;
+        let round = read_u32(buf, &mut pos)?;
+        if pos != buf.len() {
+            bail!("cancel: trailing bytes");
+        }
+        Ok(CancelMsg { round })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -585,6 +639,7 @@ mod tests {
     fn draft_frame(rng: &mut crate::util::rng::SplitMix64) -> (DraftMsg, Frame) {
         let k = rng.next_range(8) as usize + 1;
         let stochastic = rng.chance(0.5);
+        let speculative = rng.chance(0.35);
         let msg = DraftMsg {
             session: rng.next_u64() as u32,
             round: rng.next_range(10_000) as u32,
@@ -600,6 +655,14 @@ mod tests {
                 VerifyMode::Greedy
             },
             wire: WireFormat::Compact,
+            // round-tagged speculative basis on a third of the drafts
+            // (the v3 pipelined payload shape)
+            basis_len: if speculative { rng.next_range(256) } else { 0 },
+            spec: if speculative {
+                (0..1 + rng.next_range(9)).map(|_| rng.next_range(512) as i32).collect()
+            } else {
+                vec![]
+            },
         };
         // stream ids from tiny to the full u32 range
         let stream = (rng.next_u64() as u32 >> (rng.next_range(31) as u32)).max(1);
@@ -633,6 +696,12 @@ mod tests {
                 prop::assert_prop(
                     back.tokens == msg.tokens && back.session == msg.session,
                     "payload mismatch",
+                )?;
+                prop::assert_prop(
+                    back.round == msg.round
+                        && back.spec == msg.spec
+                        && (msg.spec.is_empty() || back.basis_len == msg.basis_len),
+                    format!("round/speculative-basis mismatch at split {split}"),
                 )?;
                 prop::assert_prop(
                     dec.next_frame().map_err(|e| e.to_string())?.is_none(),
@@ -708,6 +777,7 @@ mod tests {
             FrameKind::Bye,
             FrameKind::Resume,
             FrameKind::ResumeAck,
+            FrameKind::Cancel,
         ] {
             assert!(check_stream(kind, 0, bound).is_err(), "{kind:?} on stream 0");
         }
@@ -717,18 +787,21 @@ mod tests {
         // everything else must be bound
         assert!(check_stream(FrameKind::Draft, 3, bound).is_ok());
         assert!(check_stream(FrameKind::Verify, 7, bound).is_ok());
+        assert!(check_stream(FrameKind::Cancel, 3, bound).is_ok());
         assert!(check_stream(FrameKind::Draft, 99, bound).is_err());
         assert!(check_stream(FrameKind::Bye, 4, bound).is_err());
+        assert!(check_stream(FrameKind::Cancel, 99, bound).is_err());
 
         // property: a random unknown stream is always rejected for
         // non-opening session kinds, and stream 0 for every session kind
         prop::check(60, |rng| {
             let s = rng.next_u64() as u32;
-            let kind = match rng.next_range(5) {
+            let kind = match rng.next_range(6) {
                 0 => FrameKind::Draft,
                 1 => FrameKind::Verify,
                 2 => FrameKind::Bye,
                 3 => FrameKind::OpenAck,
+                4 => FrameKind::Cancel,
                 _ => FrameKind::ResumeAck,
             };
             let none_bound = |_: u32| false;
@@ -851,6 +924,137 @@ mod tests {
         let mut bytes = live.encode();
         bytes[0] |= 0b100;
         assert!(ResumeAck::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn handshake_negotiates_v2_downgrade() {
+        // a v2 peer (pre-pipelining edge) is accepted and the ack tells
+        // both sides the connection runs v2 — no Cancel, no spec tails
+        let h = Hello {
+            wire_version: MIN_WIRE_VERSION,
+            mode: VerifyMode::Greedy,
+            k_max: 8,
+        };
+        let ack = hello_response(&Hello::decode(&h.encode()).unwrap());
+        assert!(ack.accepted);
+        assert_eq!(ack.wire_version, MIN_WIRE_VERSION);
+        let wire = HelloAck::decode(&ack.encode()).unwrap();
+        assert_eq!(wire.wire_version, MIN_WIRE_VERSION);
+        // below the floor is still rejected
+        let old = Hello {
+            wire_version: MIN_WIRE_VERSION - 1,
+            mode: VerifyMode::Greedy,
+            k_max: 8,
+        };
+        let nack = hello_response(&old);
+        assert!(!nack.accepted);
+        assert!(nack.reason.contains("mismatch"), "{}", nack.reason);
+    }
+
+    #[test]
+    fn cancel_roundtrips_and_rejects_garbage() {
+        let c = CancelMsg { round: 7341 };
+        assert_eq!(CancelMsg::decode(&c.encode()).unwrap(), c);
+        assert!(CancelMsg::decode(&c.encode()[..3]).is_err(), "truncated");
+        let mut long = c.encode();
+        long.push(0);
+        assert!(CancelMsg::decode(&long).is_err(), "trailing bytes");
+
+        // framed + split at every byte, like every other session frame
+        prop::check(20, |rng| {
+            let msg = CancelMsg {
+                round: rng.next_u64() as u32,
+            };
+            let frame = Frame::on(
+                1 + rng.next_u64() as u32 % 1000,
+                FrameKind::Cancel,
+                msg.encode(),
+            );
+            let bytes = frame.encode();
+            for split in 0..=bytes.len() {
+                let mut dec = FrameDecoder::new();
+                dec.push(&bytes[..split]);
+                dec.push(&bytes[split..]);
+                let f = dec
+                    .next_frame()
+                    .map_err(|e| e.to_string())?
+                    .ok_or("no frame after full input")?;
+                prop::assert_prop(f.kind == FrameKind::Cancel, "kind survived")?;
+                let back = CancelMsg::decode(&f.payload).map_err(|e| e.to_string())?;
+                prop::assert_prop(back == msg, format!("cancel mismatch at split {split}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn interleaved_drafts_and_cancels_demux_in_order() {
+        // pipelined wire shape: per stream, Draft(r) / Draft(r+1, spec) /
+        // Cancel(r+1) / Draft(r+1 redraft) interleaved across streams in
+        // random global order and random chunking.
+        prop::check(30, |rng| {
+            const STREAMS: u32 = 3;
+            let mut frames = Vec::new();
+            for s in 1..=STREAMS {
+                let base: Vec<i32> = (0..4).map(|_| rng.next_range(512) as i32).collect();
+                let mk = |round: u32, spec: Vec<i32>| DraftMsg {
+                    session: s,
+                    round,
+                    tokens: base.clone(),
+                    chosen_probs: vec![],
+                    mode: VerifyMode::Greedy,
+                    wire: WireFormat::Compact,
+                    basis_len: if spec.is_empty() { 0 } else { 11 },
+                    spec,
+                };
+                frames.push(Frame::on(s, FrameKind::Draft, mk(0, vec![]).encode()));
+                frames.push(Frame::on(
+                    s,
+                    FrameKind::Draft,
+                    mk(1, base.iter().copied().chain([9]).collect()).encode(),
+                ));
+                frames.push(Frame::on(
+                    s,
+                    FrameKind::Cancel,
+                    CancelMsg { round: 1 }.encode(),
+                ));
+                frames.push(Frame::on(s, FrameKind::Draft, mk(1, vec![]).encode()));
+            }
+            // shuffle across streams (stable per stream: sort-by random
+            // key would break per-stream order, so interleave by rotation)
+            let mut wire = Vec::new();
+            let mut per_stream: Vec<std::collections::VecDeque<Frame>> =
+                vec![Default::default(); STREAMS as usize];
+            for f in frames.iter().cloned() {
+                per_stream[(f.stream - 1) as usize].push_back(f);
+            }
+            let mut expect: Vec<Vec<Frame>> =
+                per_stream.iter().map(|q| q.iter().cloned().collect()).collect();
+            while per_stream.iter().any(|q| !q.is_empty()) {
+                let s = rng.next_range(STREAMS as u64) as usize;
+                if let Some(f) = per_stream[s].pop_front() {
+                    wire.extend_from_slice(&f.encode());
+                }
+            }
+            let mut dec = FrameDecoder::new();
+            let mut got: Vec<Vec<Frame>> = vec![Vec::new(); STREAMS as usize];
+            let mut i = 0usize;
+            while i < wire.len() {
+                let n = (rng.next_range(13) as usize + 1).min(wire.len() - i);
+                dec.push(&wire[i..i + n]);
+                i += n;
+                while let Some(f) = dec.next_frame().map_err(|e| e.to_string())? {
+                    got[(f.stream - 1) as usize].push(f);
+                }
+            }
+            for s in 0..STREAMS as usize {
+                prop::assert_prop(
+                    got[s] == std::mem::take(&mut expect[s]),
+                    format!("stream {} order diverged", s + 1),
+                )?;
+            }
+            prop::assert_prop(dec.pending_bytes() == 0, "leftover bytes")
+        });
     }
 
     #[test]

@@ -71,6 +71,19 @@ pub struct DraftMsg {
     pub chosen_probs: Vec<f32>,
     pub mode: VerifyMode,
     pub wire: WireFormat,
+    /// Pipelined drafting (wire v3): committed length the edge held when
+    /// this round was drafted. Meaningful only when `spec` is non-empty.
+    pub basis_len: u64,
+    /// Pipelined drafting (wire v3): the OPTIMISTIC tokens the edge
+    /// assumed committed beyond `basis_len` when drafting this round
+    /// (prior in-flight rounds' draft blocks + their predicted bonus
+    /// tokens). Empty for a draft from the true committed prefix — which
+    /// also keeps the encoding byte-identical to wire v2, so v2 peers
+    /// and v2 captures decode unchanged. The cloud verifies this round
+    /// only if its committed sequence equals exactly
+    /// `committed[..basis_len] ++ spec`; otherwise the draft is stale
+    /// and discarded (cancel-on-reject).
+    pub spec: Vec<i32>,
 }
 
 /// Per-token distribution sketch size on the wire (stochastic mode):
@@ -99,6 +112,15 @@ impl DraftMsg {
                 write_u16(&mut out, f32_to_f16_bits(p));
             }
         }
+        // wire v3 speculative-basis tail — present only for pipelined
+        // drafts, so non-speculative messages stay byte-identical to v2
+        if !self.spec.is_empty() {
+            write_varint(&mut out, self.basis_len);
+            write_varint(&mut out, self.spec.len() as u64);
+            for &t in &self.spec {
+                write_varint(&mut out, t as u64);
+            }
+        }
         out
     }
 
@@ -124,6 +146,22 @@ impl DraftMsg {
                 chosen_probs.push(f16_bits_to_f32(read_u16(buf, &mut pos)?));
             }
         }
+        // v2 messages end here; a v3 pipelined draft appends its
+        // speculative basis (see `spec` field docs)
+        let mut basis_len = 0u64;
+        let mut spec = Vec::new();
+        if pos < buf.len() {
+            basis_len = read_varint(buf, &mut pos)?;
+            let sn = read_varint(buf, &mut pos)? as usize;
+            // spec is bounded by depth * (k_max + 1); 255 is generous
+            if sn == 0 || sn > 255 {
+                bail!("draft: bad speculative basis length {sn}");
+            }
+            spec.reserve(sn);
+            for _ in 0..sn {
+                spec.push(read_varint(buf, &mut pos)? as i32);
+            }
+        }
         if pos != buf.len() {
             bail!("trailing bytes");
         }
@@ -136,6 +174,8 @@ impl DraftMsg {
             chosen_probs,
             mode,
             wire: WireFormat::Compact,
+            basis_len,
+            spec,
         })
     }
 
@@ -271,6 +311,8 @@ mod tests {
             chosen_probs: vec![],
             mode: VerifyMode::Greedy,
             wire: WireFormat::Compact,
+            basis_len: 0,
+            spec: vec![],
         };
         assert_eq!(DraftMsg::decode(&m.encode()).unwrap(), m);
     }
@@ -284,12 +326,81 @@ mod tests {
             chosen_probs: vec![0.75, 0.124],
             mode: VerifyMode::Stochastic,
             wire: WireFormat::Compact,
+            basis_len: 0,
+            spec: vec![],
         };
         let back = DraftMsg::decode(&m.encode()).unwrap();
         assert_eq!(back.tokens, m.tokens);
         for (a, b) in back.chosen_probs.iter().zip(&m.chosen_probs) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn draft_msg_speculative_basis_roundtrip_and_v2_compat() {
+        // a non-speculative v3 message is byte-identical to v2 ...
+        let plain = DraftMsg {
+            session: 3,
+            round: 9,
+            tokens: vec![7, 8, 9],
+            chosen_probs: vec![],
+            mode: VerifyMode::Greedy,
+            wire: WireFormat::Compact,
+            basis_len: 0,
+            spec: vec![],
+        };
+        let mut v2_bytes = Vec::new();
+        // hand-rolled v2 layout: session, round, mode, count, tokens
+        crate::protocol::codec::write_u32(&mut v2_bytes, 3);
+        crate::protocol::codec::write_u32(&mut v2_bytes, 9);
+        v2_bytes.push(0);
+        v2_bytes.push(3);
+        for t in [7u64, 8, 9] {
+            crate::protocol::codec::write_varint(&mut v2_bytes, t);
+        }
+        assert_eq!(plain.encode(), v2_bytes, "empty spec must stay v2-identical");
+        assert_eq!(DraftMsg::decode(&v2_bytes).unwrap(), plain);
+
+        // ... while a pipelined draft carries basis_len + spec and
+        // roundtrips exactly (both verify regimes)
+        for mode in [VerifyMode::Greedy, VerifyMode::Stochastic] {
+            let spec_msg = DraftMsg {
+                session: 3,
+                round: 10,
+                tokens: vec![20, 21],
+                chosen_probs: if mode == VerifyMode::Stochastic {
+                    vec![0.5, 0.25]
+                } else {
+                    vec![]
+                },
+                mode,
+                wire: WireFormat::Compact,
+                basis_len: 123,
+                spec: vec![7, 8, 9, 300],
+            };
+            let back = DraftMsg::decode(&spec_msg.encode()).unwrap();
+            assert_eq!(back.spec, spec_msg.spec);
+            assert_eq!(back.basis_len, 123);
+            assert_eq!(back.round, 10);
+            assert!(
+                spec_msg.air_bytes() > plain.air_bytes(),
+                "speculation costs air bytes"
+            );
+        }
+
+        // truncated spec tail is rejected
+        let spec_msg = DraftMsg {
+            session: 1,
+            round: 2,
+            tokens: vec![5],
+            chosen_probs: vec![],
+            mode: VerifyMode::Greedy,
+            wire: WireFormat::Compact,
+            basis_len: 4,
+            spec: vec![6, 7],
+        };
+        let bytes = spec_msg.encode();
+        assert!(DraftMsg::decode(&bytes[..bytes.len() - 1]).is_err());
     }
 
     #[test]
@@ -313,6 +424,8 @@ mod tests {
             chosen_probs: vec![0.5; k],
             mode: VerifyMode::Stochastic,
             wire,
+            basis_len: 0,
+            spec: vec![],
         };
         let c1 = mk(1, WireFormat::Compact).air_bytes();
         let c5 = mk(5, WireFormat::Compact).air_bytes();
@@ -337,6 +450,8 @@ mod tests {
             chosen_probs: vec![0.5; k],
             mode: VerifyMode::Stochastic,
             wire: WireFormat::Sketch,
+            basis_len: 0,
+            spec: vec![],
         };
         let delta_bits = (mk(6).air_bytes() - mk(5).air_bytes()) as f64 * 8.0;
         assert!((delta_bits - b).abs() / b < 0.1, "{delta_bits} vs {b}");
@@ -369,6 +484,8 @@ mod tests {
             chosen_probs: vec![],
             mode: VerifyMode::Greedy,
             wire: WireFormat::Compact,
+            basis_len: 0,
+            spec: vec![],
         };
         let mut buf = m.encode();
         buf.push(0xff);

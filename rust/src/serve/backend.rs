@@ -456,6 +456,10 @@ impl DraftSource for SyntheticDraft {
     fn name(&self) -> String {
         "synthetic-draft".into()
     }
+
+    fn is_pure(&self) -> bool {
+        true // greedy hash chain over the context: pure by construction
+    }
 }
 
 #[cfg(test)]

@@ -36,8 +36,8 @@ use super::verifier::{VerifierConfig, VerifierHandle};
 use crate::coordinator::edge::DraftSource;
 use crate::metrics::ServingMetrics;
 use crate::protocol::frame::{
-    check_stream, hello_response, Frame, FrameKind, Hello, OpenAck, OpenMsg, ResumeAck, ResumeMsg,
-    CONTROL_STREAM,
+    check_stream, hello_response, CancelMsg, Frame, FrameKind, Hello, OpenAck, OpenMsg, ResumeAck,
+    ResumeMsg, CONTROL_STREAM,
 };
 use crate::protocol::DraftMsg;
 use crate::util::log::{log, Level};
@@ -187,6 +187,9 @@ pub async fn handle_conn<T: Transport>(mut t: T, verifier: VerifierHandle) -> Re
     };
     let ack = hello_response(&hello);
     let accepted = ack.accepted;
+    // negotiated wire version: v3-only traffic (speculative drafts,
+    // Cancel) is a protocol violation on a v2-negotiated connection
+    let negotiated = ack.wire_version;
     let hello_ack = Frame::control(FrameKind::HelloAck, ack.encode());
     t.send_frame(hello_ack.clone()).await?;
     if !accepted {
@@ -196,7 +199,7 @@ pub async fn handle_conn<T: Transport>(mut t: T, verifier: VerifierHandle) -> Re
 
     // --- multiplexed session demux -----------------------------------
     let mut bound: HashMap<u32, Bound> = HashMap::new();
-    let result = mux_loop(&mut t, &verifier, &mut bound, hello_ack).await;
+    let result = mux_loop(&mut t, &verifier, &mut bound, hello_ack, negotiated).await;
     // the transport is gone: park every session this connection still
     // carried so a reconnecting edge can resume it within the grace
     // window (orderly completions already unbound their streams, and a
@@ -212,6 +215,7 @@ async fn mux_loop<T: Transport>(
     verifier: &VerifierHandle,
     bound: &mut HashMap<u32, Bound>,
     hello_ack: Frame,
+    negotiated: u16,
 ) -> Result<()> {
     let (out_tx, mut out_rx) = mpsc::unbounded_channel::<OutEvent>();
     loop {
@@ -232,17 +236,21 @@ async fn mux_loop<T: Transport>(
             Step::Out(Some(OutEvent::Fatal(msg))) => bail!("{msg}"),
             // peer hung up: the caller parks whatever is still bound
             Step::In(None) => return Ok(()),
-            Step::In(Some(f)) => handle_frame(t, verifier, bound, &out_tx, &hello_ack, f).await?,
+            Step::In(Some(f)) => {
+                handle_frame(t, verifier, bound, &out_tx, &hello_ack, negotiated, f).await?
+            }
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 async fn handle_frame<T: Transport>(
     t: &mut T,
     verifier: &VerifierHandle,
     bound: &mut HashMap<u32, Bound>,
     out_tx: &mpsc::UnboundedSender<OutEvent>,
     hello_ack: &Frame,
+    negotiated: u16,
     f: Frame,
 ) -> Result<()> {
     match f.kind {
@@ -335,6 +343,12 @@ async fn handle_frame<T: Transport>(
                 (b.id, b.attachment)
             };
             let mut msg = DraftMsg::decode(&f.payload)?;
+            if !msg.spec.is_empty() && negotiated < 3 {
+                bail!(
+                    "speculative draft on a wire v{negotiated} connection (stream {})",
+                    f.stream
+                );
+            }
             // the server-assigned session id is authoritative
             msg.session = id;
             // verify concurrently so other streams keep feeding the
@@ -360,6 +374,22 @@ async fn handle_frame<T: Transport>(
                     }
                 }
             });
+            Ok(())
+        }
+        FrameKind::Cancel => {
+            if negotiated < 3 {
+                bail!("Cancel frame on a wire v{negotiated} connection");
+            }
+            if f.stream == CONTROL_STREAM {
+                bail!("Cancel on reserved control stream 0");
+            }
+            // retract queued speculative rounds; a Cancel for an
+            // unknown stream is a harmless late retransmit (the session
+            // closed underneath it)
+            if let Some(b) = bound.get(&f.stream) {
+                let c = CancelMsg::decode(&f.payload)?;
+                verifier.cancel(b.id, b.attachment, c.round);
+            }
             Ok(())
         }
         FrameKind::Bye => {
@@ -440,6 +470,15 @@ pub async fn serve_loopback_mux(
         }
     });
     let mut mux = EdgeMux::connect(Box::new(edge_t), None, &ecfg).await?;
+    // belt-and-braces: sessions on a v2-negotiated mux must not pipeline
+    let ecfg = if mux.wire_version() < 3 && ecfg.pipeline_depth != 1 {
+        EdgeSessionConfig {
+            pipeline_depth: 1,
+            ..ecfg
+        }
+    } else {
+        ecfg
+    };
     let mut tasks = Vec::new();
     for (draft, prompt) in edges {
         let stream = mux.open_stream();

@@ -24,6 +24,7 @@
 //! leaking a second one. Transport-level duplicates of acks and
 //! verdicts are skipped by round/kind filters on the receive path.
 
+use super::pipeline::{PipelinedDrafter, MAX_PIPELINE_DEPTH};
 use super::session::SessionCore;
 use super::transport::{BoxFuture, Reconnect, Transport};
 use crate::channel::ChannelState;
@@ -31,13 +32,15 @@ use crate::coordinator::edge::DraftSource;
 use crate::coordinator::policy::{AdaptivePolicy, LatencyModel};
 use crate::devices::{CloudProfile, EdgeDevice, A800_70B, JETSON_ORIN};
 use crate::protocol::frame::{
-    Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, ResumeAck, ResumeMsg, WIRE_VERSION,
+    CancelMsg, Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, ResumeAck, ResumeMsg,
+    MIN_WIRE_VERSION, WIRE_VERSION,
 };
 use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
 use crate::util::log::{log, Level};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::{Ema, Summary};
 use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
@@ -59,6 +62,14 @@ pub struct EdgeSessionConfig {
     /// Pin the stride (reproducibility runs, ablations); `None` runs the
     /// channel-aware adaptive policy on measured RTTs.
     pub fixed_k: Option<usize>,
+    /// Pipelined drafting (wire v3): rounds kept in flight. 1 =
+    /// sequential (the classic lock-step loop); >= 2 overlaps round r+1
+    /// drafting with round r verification, cancel-on-reject; 0 = AUTO —
+    /// `AdaptivePolicy::select_pipeline_depth` picks per round from the
+    /// measured channel (pipelining pays exactly when T_fixed dominates
+    /// K * T_marginal). Requires a pure draft source
+    /// (`DraftSource::is_pure`); impure sources fall back to sequential.
+    pub pipeline_depth: usize,
     pub seed: u64,
     /// Give up after this many reattach attempts within one session.
     pub max_reattach: usize,
@@ -77,6 +88,7 @@ impl Default for EdgeSessionConfig {
             max_new: 32,
             k_max: 8,
             fixed_k: None,
+            pipeline_depth: 1,
             seed: 1,
             max_reattach: 8,
             device: &JETSON_ORIN,
@@ -105,6 +117,19 @@ pub struct EdgeReport {
     /// Measured per-round RTT (draft sent → verdict decoded).
     pub rtt_ms: Summary,
     pub k_used: Summary,
+    /// Rounds whose draft was launched speculatively and survived —
+    /// verify/downlink round trips hidden behind drafting (wire v3).
+    pub rounds_pipelined: usize,
+    /// Speculative rounds retracted after a broken optimistic prefix.
+    pub drafts_cancelled: usize,
+    /// Draft tokens of retracted rounds (uplink spent on speculation
+    /// that did not land).
+    pub draft_tokens_wasted: usize,
+    /// Verdict waits with another round already in flight (hidden RTT).
+    pub overlapped_waits: usize,
+    /// Verdict waits with nothing else in flight — the full round trip
+    /// stalls the edge. Sequential mode: every round is one of these.
+    pub exposed_waits: usize,
     /// Full committed sequence (prompt + generated).
     pub committed: Vec<i32>,
 }
@@ -139,25 +164,27 @@ pub(crate) fn hello_for(cfg: &EdgeSessionConfig) -> Hello {
 }
 
 /// Run the connection-scoped `Hello` handshake (once per connection,
-/// regardless of how many sessions it will carry).
+/// regardless of how many sessions it will carry). Returns the
+/// NEGOTIATED wire version — below 3, pipelined drafting (spec-tagged
+/// drafts + `Cancel`) must stay off on this connection.
 pub async fn edge_handshake<T: Transport + ?Sized>(
     t: &mut T,
     cfg: &EdgeSessionConfig,
-) -> Result<()> {
+) -> Result<u16> {
     handshake_with(t, &hello_for(cfg)).await
 }
 
 pub(crate) async fn handshake_with<T: Transport + ?Sized>(
     t: &mut T,
     hello: &Hello,
-) -> Result<()> {
+) -> Result<u16> {
     t.send_frame(Frame::control(FrameKind::Hello, hello.encode()))
         .await?;
     let ack = HelloAck::decode(&await_kind(t, FrameKind::HelloAck).await?.payload)?;
     if !ack.accepted {
         bail!("cloud rejected handshake: {}", ack.reason);
     }
-    Ok(())
+    Ok(ack.wire_version)
 }
 
 /// Wait for a frame of `want` kind, skipping harmless transport-level
@@ -265,6 +292,51 @@ impl LinkStats {
         self.rtt_summary.add(rtt_now_ms);
         self.k_summary.add(k as f64);
     }
+
+    /// Rounds to keep in flight this instant: the configured depth, or
+    /// the policy hook on the measured channel in AUTO mode
+    /// (`pipeline_depth == 0`).
+    fn select_depth(&mut self, cfg: &EdgeSessionConfig) -> usize {
+        match cfg.pipeline_depth {
+            0 => {
+                let state = ChannelState {
+                    up_bps: self.goodput_bps.get().max(1e4),
+                    down_bps: self.goodput_bps.get().max(1e4),
+                    prop_ms: (self.rtt_ms.get() / 2.0).max(0.01),
+                    fading: false,
+                    loss_rate: 0.0,
+                };
+                let lat = LatencyModel::build(&state, cfg.device, cfg.cloud, WireFormat::Compact);
+                let k = cfg
+                    .fixed_k
+                    .unwrap_or_else(|| self.policy.select_k(&lat))
+                    .clamp(1, cfg.k_max.max(1));
+                self.policy.select_pipeline_depth(&lat, k, MAX_PIPELINE_DEPTH)
+            }
+            d => d.min(MAX_PIPELINE_DEPTH),
+        }
+    }
+}
+
+/// Pipeline counters accumulated across reattaches (each attempt runs
+/// its own [`PipelinedDrafter`]; a link drop must not lose the tally).
+#[derive(Debug, Default, Clone, Copy)]
+struct PipeTotals {
+    rounds_pipelined: usize,
+    drafts_cancelled: usize,
+    draft_tokens_wasted: usize,
+    overlapped_waits: usize,
+    exposed_waits: usize,
+}
+
+impl PipeTotals {
+    fn merge(&mut self, p: &PipelinedDrafter) {
+        self.rounds_pipelined += p.rounds_pipelined;
+        self.drafts_cancelled += p.drafts_cancelled;
+        self.draft_tokens_wasted += p.draft_tokens_wasted;
+        self.overlapped_waits += p.overlapped_waits;
+        self.exposed_waits += p.exposed_waits;
+    }
 }
 
 /// Run one full serving session on an already-handshaked connection:
@@ -290,10 +362,21 @@ where
     let mut rng = SplitMix64::new(cfg.seed ^ (0x3000 + stream as u64));
     let mut reattaches = 0usize;
     let mut resumes = 0usize;
+    let mut pipe_totals = PipeTotals::default();
 
     loop {
         match attempt_session(
-            t, stream, &mut sess, draft, prompt, cfg, nonce, &mut stats, &mut rng, &mut resumes,
+            t,
+            stream,
+            &mut sess,
+            draft,
+            prompt,
+            cfg,
+            nonce,
+            &mut stats,
+            &mut rng,
+            &mut resumes,
+            &mut pipe_totals,
         )
         .await
         {
@@ -352,6 +435,11 @@ where
         resumes,
         rtt_ms: stats.rtt_summary,
         k_used: stats.k_summary,
+        rounds_pipelined: pipe_totals.rounds_pipelined,
+        drafts_cancelled: pipe_totals.drafts_cancelled,
+        draft_tokens_wasted: pipe_totals.draft_tokens_wasted,
+        overlapped_waits: pipe_totals.overlapped_waits,
+        exposed_waits: pipe_totals.exposed_waits,
         committed: st.core.committed,
     })
 }
@@ -371,6 +459,7 @@ async fn attempt_session<T, D>(
     stats: &mut LinkStats,
     rng: &mut SplitMix64,
     resumes: &mut usize,
+    pipe_totals: &mut PipeTotals,
 ) -> Result<()>
 where
     T: Transport + ?Sized,
@@ -418,36 +507,166 @@ where
 
     // --- decode loop -------------------------------------------------
     let st = sess.as_mut().expect("session is live after open/resume");
-    while !st.core.done {
-        let k = stats.select_k(cfg);
-        let prop = draft.propose(&st.core.committed, k, cfg.temperature, cfg.top_p, rng)?;
-        let round = st.core.rounds as u32;
-        let msg = DraftMsg {
-            session: st.id,
-            round,
-            tokens: prop.tokens.clone(),
-            chosen_probs: prop.chosen_probs,
-            mode: cfg.mode,
-            wire: WireFormat::Compact,
-        };
-        let air_up = msg.air_bytes();
-        let sent = Instant::now();
-        t.send_frame(Frame::on(stream, FrameKind::Draft, msg.encode()))
-            .await?;
-        let v = await_verify(t, round).await?;
+    let pipelined = cfg.pipeline_depth != 1 && draft.is_pure();
+    if cfg.pipeline_depth > 1 && !draft.is_pure() {
+        log(
+            Level::Warn,
+            "edge",
+            &format!(
+                "stream {stream}: draft source '{}' is not pure; pipelining disabled",
+                draft.name()
+            ),
+        );
+    }
+    if pipelined {
+        let mut pipe = PipelinedDrafter::new(cfg.pipeline_depth.max(1));
+        // any speculation a previous (dead-link) attempt left behind is
+        // void; resume already fast-forwarded the committed prefix
+        pipe.reset(&mut st.core);
+        let res = pipelined_decode(t, stream, st, draft, cfg, stats, rng, &mut pipe).await;
+        // on a link error, whatever was in flight dies with the attempt
+        pipe.reset(&mut st.core);
+        pipe_totals.merge(&pipe);
+        res?;
+    } else {
+        while !st.core.done {
+            let k = stats.select_k(cfg);
+            let prop = draft.propose(&st.core.committed, k, cfg.temperature, cfg.top_p, rng)?;
+            let round = st.core.rounds as u32;
+            let msg = DraftMsg {
+                session: st.id,
+                round,
+                tokens: prop.tokens.clone(),
+                chosen_probs: prop.chosen_probs,
+                mode: cfg.mode,
+                wire: WireFormat::Compact,
+                basis_len: 0,
+                spec: vec![],
+            };
+            let air_up = msg.air_bytes();
+            let sent = Instant::now();
+            t.send_frame(Frame::on(stream, FrameKind::Draft, msg.encode()))
+                .await?;
+            // sequential mode: every verdict wait exposes the full RTT
+            pipe_totals.exposed_waits += 1;
+            let v = await_verify(t, round).await?;
 
-        // measure the link this round actually saw
-        let rtt_now = sent.elapsed().as_secs_f64() * 1e3;
-        stats.observe_round(rtt_now, air_up + v.air_bytes(), prop.tokens.len());
+            // measure the link this round actually saw
+            let rtt_now = sent.elapsed().as_secs_f64() * 1e3;
+            stats.observe_round(rtt_now, air_up + v.air_bytes(), prop.tokens.len());
 
-        let tau = (v.tau as usize).min(prop.tokens.len());
-        if !prop.tokens.is_empty() {
-            stats.policy.observe(tau, prop.tokens.len());
+            let tau = (v.tau as usize).min(prop.tokens.len());
+            if !prop.tokens.is_empty() {
+                stats.policy.observe(tau, prop.tokens.len());
+            }
+            st.core.apply_verdict(&prop.tokens, tau, v.correction, v.eos, false);
         }
-        st.core.apply_verdict(&prop.tokens, tau, v.correction, v.eos, false);
     }
     t.send_frame(Frame::on(stream, FrameKind::Bye, vec![]))
         .await?;
+    Ok(())
+}
+
+/// Pipelined decode body (wire v3): keep the pipe topped up to `depth`
+/// rounds in flight, await the head verdict, commit, and on a broken
+/// optimistic prefix retract the stale tail with one `Cancel` and
+/// redraft from the true prefix. See `serve::pipeline` for the state
+/// machine and the determinism argument.
+#[allow(clippy::too_many_arguments)]
+async fn pipelined_decode<T, D>(
+    t: &mut T,
+    stream: u32,
+    st: &mut LiveSession,
+    draft: &mut D,
+    cfg: &EdgeSessionConfig,
+    stats: &mut LinkStats,
+    rng: &mut SplitMix64,
+    pipe: &mut PipelinedDrafter,
+) -> Result<()>
+where
+    T: Transport + ?Sized,
+    D: DraftSource + ?Sized,
+{
+    // send timestamps per in-flight round (pruned on cancel)
+    let mut sent_at: VecDeque<(u32, Instant)> = VecDeque::new();
+    while !st.core.done {
+        // --- top up the pipe -----------------------------------------
+        loop {
+            // the depth hook may widen/narrow the pipe round to round
+            pipe.depth = stats.select_depth(cfg);
+            let Some(plan) = pipe.next_launch(&st.core) else { break };
+            let k = stats.select_k(cfg);
+            let prop = draft.propose(&plan.context, k, cfg.temperature, cfg.top_p, rng)?;
+            if prop.tokens.is_empty() && plan.speculative {
+                break; // nothing to speculate with this round
+            }
+            // the bonus prediction is the chain link for the NEXT
+            // speculative launch — computed for EVERY round while
+            // pipelining is on (the pipe may be full now, but this round
+            // becomes the chain head once the verdict ahead of it
+            // lands), skipped only in degenerate sequential mode
+            let bonus = if pipe.depth > 1 && !prop.tokens.is_empty() {
+                let mut ctx2 = plan.context.clone();
+                ctx2.extend_from_slice(&prop.tokens);
+                draft
+                    .propose(&ctx2, 1, cfg.temperature, cfg.top_p, rng)?
+                    .tokens
+                    .first()
+                    .copied()
+            } else {
+                None
+            };
+            let msg = DraftMsg {
+                session: st.id,
+                round: plan.round,
+                tokens: prop.tokens.clone(),
+                chosen_probs: prop.chosen_probs,
+                mode: cfg.mode,
+                wire: WireFormat::Compact,
+                basis_len: plan.basis_len,
+                spec: plan.spec.clone(),
+            };
+            let air_up = msg.air_bytes();
+            sent_at.push_back((plan.round, Instant::now()));
+            t.send_frame(Frame::on(stream, FrameKind::Draft, msg.encode()))
+                .await?;
+            pipe.launched(&mut st.core, &plan, prop.tokens, bonus, air_up);
+        }
+
+        // --- await + resolve the head verdict ------------------------
+        let head = pipe
+            .head_round()
+            .expect("head launch is always allowed while the session lives");
+        pipe.note_wait();
+        let v = await_verify(t, head).await?;
+        let sent = loop {
+            match sent_at.pop_front() {
+                Some((r, at)) if r == head => break Some(at),
+                Some(_) => continue, // timestamp of an earlier, cancelled round
+                None => break None,
+            }
+        };
+        let res = pipe.resolve(&mut st.core, &v);
+        if let Some(at) = sent {
+            // measured from ITS OWN send: a pipelined round's RTT
+            // includes queueing behind the previous verify — that is the
+            // latency the link actually exhibits to this round
+            let rtt_now = at.elapsed().as_secs_f64() * 1e3;
+            stats.observe_round(rtt_now, res.air_up + v.air_bytes(), res.k.max(1));
+        }
+        if res.k > 0 {
+            stats.policy.observe(res.tau, res.k);
+        }
+        if let Some(from) = res.cancel_from {
+            sent_at.retain(|(r, _)| *r < from);
+            t.send_frame(Frame::on(
+                stream,
+                FrameKind::Cancel,
+                CancelMsg { round: from }.encode(),
+            ))
+            .await?;
+        }
+    }
     Ok(())
 }
 
@@ -464,12 +683,29 @@ where
     T: Transport + ?Sized,
     D: DraftSource + ?Sized,
 {
-    if let Err(e) = edge_handshake(t, cfg).await {
-        // a link fault during the very first handshake: one reattach
-        // (which redials AND replays the Hello) before giving up
-        if !t.reattach().await.unwrap_or(false) {
-            return Err(e);
+    let negotiated = match edge_handshake(t, cfg).await {
+        Ok(v) => v,
+        Err(e) => {
+            // a link fault during the very first handshake: one reattach
+            // (which redials AND replays the Hello) before giving up.
+            // The reattach negotiated its own version internally, which
+            // we cannot see — assume the CONSERVATIVE floor so a
+            // downgraded peer is never hit with v3 traffic (costs only
+            // this session's pipelining, never correctness).
+            if !t.reattach().await.unwrap_or(false) {
+                return Err(e);
+            }
+            MIN_WIRE_VERSION
         }
+    };
+    // a v2-negotiated connection must never see spec-tagged drafts or
+    // Cancel frames: force the sequential loop
+    if negotiated < 3 && cfg.pipeline_depth != 1 {
+        let sequential = EdgeSessionConfig {
+            pipeline_depth: 1,
+            ..cfg.clone()
+        };
+        return run_session_on(t, SESSION_STREAM, draft, prompt, &sequential).await;
     }
     run_session_on(t, SESSION_STREAM, draft, prompt, cfg).await
 }

@@ -30,6 +30,41 @@
 //!   round-trip times.
 //! * [`mux`] / [`fault`] — the edge-side connection multiplexer and the
 //!   deterministic fault-injection transport (below).
+//! * [`pipeline`] — pipelined speculative drafting with cancel-on-reject
+//!   (wire v3): the edge keeps up to `depth` rounds in flight, drafting
+//!   round r+1 from the OPTIMISTIC prefix while round r verifies. See
+//!   the pipeline data flow below.
+//!
+//! # Pipelined drafting data flow (wire v3)
+//!
+//! Sequentially, the edge idles for a full uplink + verify + downlink
+//! round trip after every draft burst; at low rate the channel — not
+//! the models — bounds throughput. With
+//! `EdgeSessionConfig::pipeline_depth >= 2` the edge overlaps:
+//!
+//! ```text
+//! edge                                     cloud
+//!  Draft(r)                ────────────▶   verify r (batch window)
+//!  Draft(r+1, basis+spec)  ────────────▶   queue r+1 behind r
+//!          ◀─────────────────── Verify(r)
+//!  prefix held? ──yes─▶ Draft(r+2, ...)    commit r, then basis-check r+1:
+//!             └──no──▶ Cancel(r+1)           committed == basis ++ spec →
+//!                      Draft(r+1) redraft      verify (rounds_pipelined++)
+//!                                            else → discard (wasted)
+//! ```
+//!
+//! `spec` is the optimistic suffix (in-flight draft blocks + their
+//! predicted bonus tokens) the round was drafted from; validity is a
+//! pure function of the committed sequence, so the edge's cancel
+//! decision and the cloud's discard decision always agree and a lost
+//! `Cancel` frame cannot change a single committed token. Pure draft
+//! sources ([`crate::coordinator::edge::DraftSource::is_pure`]) make a
+//! basis-valid speculative draft byte-identical to the sequential
+//! draft, which is why `--pipeline-depth 2` serving commits EXACTLY the
+//! sequential `serve_with` trajectory (pinned by
+//! `tests/serve_loopback.rs` + the pipelined rows of the fault matrix).
+//! The policy hook `AdaptivePolicy::select_pipeline_depth` enables the
+//! overlap exactly when `T_fixed` dominates `K * T_marginal`.
 //!
 //! # Multiplexed wire format (wire v2)
 //!
@@ -99,6 +134,7 @@ pub mod cloud;
 pub mod edge;
 pub mod fault;
 pub mod mux;
+pub mod pipeline;
 pub mod session;
 pub mod transport;
 pub mod verifier;
@@ -113,6 +149,9 @@ pub use edge::{
 };
 pub use fault::{loopback_fault_dial, FaultConfig, FaultOp, FaultPlan, FaultSide, FaultTransport};
 pub use mux::{EdgeMux, MuxStream};
+pub use pipeline::{
+    InflightRound, LaunchPlan, PipelinedDrafter, Resolution, MAX_PIPELINE_DEPTH,
+};
 pub use session::{BatchDecision, BatchWindow, SessionCore, SessionOutcome};
 pub use transport::{
     loopback_pair, loopback_pair_with_channel, AirtimeLedger, LoopbackTransport, Reconnect,

@@ -68,6 +68,10 @@ pub struct EdgeMux {
     out_tx: mpsc::UnboundedSender<(u64, Frame)>,
     gen_shared: Arc<AtomicU64>,
     next_stream: u32,
+    /// Wire version negotiated on the first handshake. Sessions on this
+    /// mux must keep `pipeline_depth == 1` when it is below 3 (no
+    /// spec-tagged drafts, no `Cancel` on a v2 connection).
+    wire_version: u16,
 }
 
 impl EdgeMux {
@@ -81,7 +85,7 @@ impl EdgeMux {
         cfg: &EdgeSessionConfig,
     ) -> Result<EdgeMux> {
         let hello = super::edge::hello_for(cfg);
-        handshake_with(&mut *t, &hello).await?;
+        let wire_version = handshake_with(&mut *t, &hello).await?;
         let (cmd_tx, cmd_rx) = mpsc::unbounded_channel();
         let (out_tx, out_rx) = mpsc::unbounded_channel();
         let gen_shared = Arc::new(AtomicU64::new(1));
@@ -102,7 +106,13 @@ impl EdgeMux {
             out_tx,
             gen_shared,
             next_stream: 0,
+            wire_version,
         })
+    }
+
+    /// Wire version negotiated on this connection (see the field docs).
+    pub fn wire_version(&self) -> u16 {
+        self.wire_version
     }
 
     /// Allocate the next stream id and register it with the pump. The
@@ -273,7 +283,7 @@ impl Pump {
         for attempt in 0..MAX_REDIALS {
             match dial.connect().await {
                 Ok(mut t) => match handshake_with(&mut *t, &self.hello).await {
-                    Ok(()) => {
+                    Ok(_) => {
                         self.t = Some(t);
                         self.gen += 1;
                         self.gen_shared.store(self.gen, Ordering::Release);

@@ -1,0 +1,539 @@
+//! Pipelined speculative drafting with cancel-on-reject (PipeSD-style,
+//! ROADMAP "Serving" item 1): the edge keeps up to `depth` rounds in
+//! flight, drafting round r+1 from the OPTIMISTIC prefix (all of round
+//! r accepted, bonus token predicted by the draft itself) while round r
+//! verifies — hiding the uplink + verify + downlink round trip that
+//! otherwise idles the edge whenever `T_fixed` dominates
+//! `K * T_marginal`.
+//!
+//! # Why the committed sequence cannot change
+//!
+//! A speculative round is verified by the cloud ONLY if its basis —
+//! `committed[..basis_len] ++ spec` — equals the cloud's actual
+//! committed sequence at that round's turn (`DraftMsg::{basis_len,
+//! spec}`, wire v3). Because every draft source used for pipelining is a
+//! pure function of its context ([`DraftSource::is_pure`]), a
+//! basis-valid speculative draft is byte-identical to the draft a
+//! sequential edge would have produced from the true committed prefix,
+//! so its verdict — and the committed sequence — is byte-identical to
+//! the sequential trajectory. A basis-broken draft is discarded by the
+//! cloud autonomously and retracted by the edge with a [`Cancel`]
+//! frame; the round is redrafted from the true prefix under the same
+//! round number. The `Cancel` is therefore an advisory fast-path: a
+//! dropped, delayed, or duplicated `Cancel` can never change a single
+//! committed token (pinned by `tests/serve_faults.rs`).
+//!
+//! # Data flow (depth 2)
+//!
+//! ```text
+//! edge                                   cloud
+//!  Draft(r)            ─────────────▶    verify r ──┐ (window)
+//!  Draft(r+1, spec=[draft_r ++ bonus]) ▶ queue r+1  │
+//!          ◀──────────────── Verify(r) ◀────────────┘
+//!  held? ──yes──▶ Draft(r+2, spec=...)   basis check on r+1:
+//!        └─no──▶ Cancel(r+1)               valid → verify (pipelined)
+//!                Draft(r+1) redraft        stale → discard (wasted)
+//! ```
+//!
+//! The state machine below ([`PipelinedDrafter`]) is PURE — no sockets,
+//! no clocks — and is driven by the edge session loop
+//! (`edge::run_session_on` with `EdgeSessionConfig::pipeline_depth`),
+//! while the virtual-clock simulator (`coordinator::scheduler`) mirrors
+//! the same launch/validity rules, which is what keeps the serving
+//! stack and the simulation committing identical sequences AND
+//! identical pipeline counters for a fixed seed.
+
+use super::session::SessionCore;
+use crate::protocol::VerifyMsg;
+use std::collections::VecDeque;
+
+/// Hard ceiling on rounds in flight (also bounds the cloud's per-session
+/// speculative queue). Depth beyond a few never pays: speculation must
+/// survive `depth - 1` consecutive full acceptances WITH predicted
+/// bonus tokens, a probability that decays like `gamma^{(K+1)(depth-1)}`.
+pub const MAX_PIPELINE_DEPTH: usize = 4;
+
+/// One round the edge has sent and not yet seen the verdict for.
+#[derive(Debug, Clone)]
+pub struct InflightRound {
+    pub round: u32,
+    /// Draft block sent to the cloud.
+    pub tokens: Vec<i32>,
+    /// The draft's own prediction of the round's correction/bonus token
+    /// (the target commits tau + 1 tokens per round; speculation must
+    /// predict the +1 too). `None` when the source could not extend —
+    /// no further round can chain past this one.
+    pub bonus: Option<i32>,
+    /// True when drafted from a speculative (optimistic) prefix.
+    pub speculative: bool,
+    /// Uplink air bytes of the sent draft (for link stats on resolve).
+    pub air_up: usize,
+}
+
+/// What to draft next, computed from the core's committed + speculative
+/// state. `context` is what the draft source extends; `basis_len`/`spec`
+/// go on the wire so the cloud can judge validity itself.
+#[derive(Debug, Clone)]
+pub struct LaunchPlan {
+    pub round: u32,
+    pub basis_len: u64,
+    pub spec: Vec<i32>,
+    pub context: Vec<i32>,
+    pub speculative: bool,
+}
+
+/// Outcome of applying one verdict to the pipeline.
+#[derive(Debug, Clone)]
+pub struct Resolution {
+    pub round: u32,
+    /// Head round's draft size (for `AdaptivePolicy::observe`).
+    pub k: usize,
+    pub tau: usize,
+    /// Session finished (eos or budget).
+    pub finished: bool,
+    /// The optimistic prefix survived: full acceptance AND the bonus
+    /// token predicted exactly — surviving in-flight rounds stay valid.
+    pub held: bool,
+    /// First in-flight round voided by a broken prefix (or by session
+    /// completion); the edge sends one `Cancel{round}` retracting it and
+    /// everything after it.
+    pub cancel_from: Option<u32>,
+    /// Uplink air bytes the head draft cost (from [`InflightRound`]).
+    pub air_up: usize,
+}
+
+/// Edge-side pipelined drafting state machine (pure; see module docs).
+#[derive(Debug)]
+pub struct PipelinedDrafter {
+    /// Target rounds in flight (1 = sequential).
+    pub depth: usize,
+    inflight: VecDeque<InflightRound>,
+    /// Verified rounds whose draft was launched speculatively and
+    /// survived — the RTT-hiding wins.
+    pub rounds_pipelined: usize,
+    /// Speculative rounds retracted after a broken prefix.
+    pub drafts_cancelled: usize,
+    /// Draft tokens of retracted rounds (uplink bytes spent for nothing).
+    pub draft_tokens_wasted: usize,
+    /// Verdict waits with at least one more round already in flight —
+    /// the RTT was overlapped with useful work.
+    pub overlapped_waits: usize,
+    /// Verdict waits with nothing else in flight (sequential mode: every
+    /// wait; pipelined mode: pipeline restarts after a cancel/open).
+    pub exposed_waits: usize,
+}
+
+impl PipelinedDrafter {
+    pub fn new(depth: usize) -> PipelinedDrafter {
+        PipelinedDrafter {
+            depth: depth.clamp(1, MAX_PIPELINE_DEPTH),
+            inflight: VecDeque::new(),
+            rounds_pipelined: 0,
+            drafts_cancelled: 0,
+            draft_tokens_wasted: 0,
+            overlapped_waits: 0,
+            exposed_waits: 0,
+        }
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Round number of the oldest in-flight draft — the verdict the edge
+    /// must wait for next.
+    pub fn head_round(&self) -> Option<u32> {
+        self.inflight.front().map(|r| r.round)
+    }
+
+    /// May another round be launched right now? The head (non-
+    /// speculative) launch is always allowed while the session lives;
+    /// speculative launches additionally require the previous round's
+    /// bonus prediction (the chain link) and head-room in the token
+    /// budget under the optimistic assumption — a round that could only
+    /// exist if speculation FAILS is drafted from a prefix that will
+    /// never be valid, so launching it is pure waste.
+    pub fn can_launch(&self, core: &SessionCore) -> bool {
+        if core.done || self.inflight.len() >= self.depth {
+            return false;
+        }
+        match self.inflight.back() {
+            None => true,
+            Some(last) => last.bonus.is_some() && core.optimistic_new_tokens() < core.max_new,
+        }
+    }
+
+    /// The next launch's wire tags + draft context, or `None` when the
+    /// pipe is full / blocked / the session is done.
+    pub fn next_launch(&self, core: &SessionCore) -> Option<LaunchPlan> {
+        if !self.can_launch(core) {
+            return None;
+        }
+        Some(LaunchPlan {
+            round: core.rounds as u32 + self.inflight.len() as u32,
+            basis_len: core.committed.len() as u64,
+            spec: core.speculated.clone(),
+            context: core.optimistic_context(),
+            speculative: !self.inflight.is_empty(),
+        })
+    }
+
+    /// Record a sent draft. `bonus` chains the next speculative launch;
+    /// when `Some`, the round's assumed outcome (tokens + bonus) joins
+    /// the core's speculative suffix.
+    pub fn launched(
+        &mut self,
+        core: &mut SessionCore,
+        plan: &LaunchPlan,
+        tokens: Vec<i32>,
+        bonus: Option<i32>,
+        air_up: usize,
+    ) {
+        if let Some(b) = bonus {
+            let mut assumed = Vec::with_capacity(tokens.len() + 1);
+            assumed.extend_from_slice(&tokens);
+            assumed.push(b);
+            core.speculate(&assumed);
+        }
+        self.inflight.push_back(InflightRound {
+            round: plan.round,
+            tokens,
+            bonus,
+            speculative: plan.speculative,
+            air_up,
+        });
+    }
+
+    /// Apply the head round's verdict: commit, then either confirm the
+    /// surviving speculation or roll everything back (cancel-on-reject).
+    /// Mirrors the cloud's basis check exactly — `held` here is true iff
+    /// the cloud's `committed == basis ++ spec` test passes for the next
+    /// in-flight round, so both sides always agree on which drafts died.
+    pub fn resolve(&mut self, core: &mut SessionCore, v: &VerifyMsg) -> Resolution {
+        let head = self
+            .inflight
+            .pop_front()
+            .expect("resolve called with no round in flight");
+        debug_assert_eq!(head.round, v.round, "verdict out of order");
+        let k = head.tokens.len();
+        let tau = (v.tau as usize).min(k);
+        let finished = core.apply_verdict(&head.tokens, tau, v.correction, v.eos, false);
+        let held = !finished && tau == k && head.bonus == Some(v.correction);
+        let mut cancel_from = None;
+        if held {
+            core.confirm_speculation(k + 1);
+            if self.inflight.front().is_some() {
+                // the surviving next round WILL be verified from its
+                // speculative draft — an RTT actually hidden
+                self.rounds_pipelined += 1;
+            }
+        } else {
+            core.rollback_speculation();
+            cancel_from = self.inflight.front().map(|r| r.round);
+            for r in self.inflight.drain(..) {
+                self.drafts_cancelled += 1;
+                self.draft_tokens_wasted += r.tokens.len();
+            }
+        }
+        Resolution {
+            round: v.round,
+            k,
+            tau,
+            finished,
+            held,
+            cancel_from,
+            air_up: head.air_up,
+        }
+    }
+
+    /// Count one verdict wait as overlapped (something else in flight)
+    /// or exposed (the pipe is empty behind the head — the full RTT
+    /// stalls the edge, exactly the sequential-mode cost).
+    pub fn note_wait(&mut self) {
+        if self.inflight.len() >= 2 {
+            self.overlapped_waits += 1;
+        } else {
+            self.exposed_waits += 1;
+        }
+    }
+
+    /// The link died (or the session is being torn down): every
+    /// in-flight round is void — no cancel owed (the cloud parks and the
+    /// resume handshake re-synchronizes instead).
+    pub fn reset(&mut self, core: &mut SessionCore) {
+        core.rollback_speculation();
+        self.inflight.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::edge::DraftSource;
+    use crate::protocol::VerifyMode;
+    use crate::serve::backend::{SyntheticDraft, SyntheticTarget, VerifyBackend};
+    use crate::util::rng::SplitMix64;
+
+    fn vmsg(round: u32, tau: usize, correction: i32, eos: bool) -> VerifyMsg {
+        VerifyMsg {
+            session: 1,
+            round,
+            tau: tau as u8,
+            correction,
+            eos,
+        }
+    }
+
+    #[test]
+    fn head_launch_then_speculative_chain() {
+        let mut core = SessionCore::new(1, &[1, 10], 20);
+        let mut p = PipelinedDrafter::new(3);
+
+        // head round: non-speculative, empty spec
+        let plan0 = p.next_launch(&core).unwrap();
+        assert_eq!((plan0.round, plan0.speculative), (0, false));
+        assert!(plan0.spec.is_empty());
+        assert_eq!(plan0.context, vec![1, 10]);
+        p.launched(&mut core, &plan0, vec![20, 21], Some(22), 10);
+
+        // second round: speculative, spec = assumed outcome of round 0
+        let plan1 = p.next_launch(&core).unwrap();
+        assert_eq!((plan1.round, plan1.speculative), (1, true));
+        assert_eq!(plan1.basis_len, 2);
+        assert_eq!(plan1.spec, vec![20, 21, 22]);
+        assert_eq!(plan1.context, vec![1, 10, 20, 21, 22]);
+        p.launched(&mut core, &plan1, vec![30, 31], Some(32), 10);
+
+        // third round chains once more, then the pipe is full
+        let plan2 = p.next_launch(&core).unwrap();
+        assert_eq!(plan2.spec, vec![20, 21, 22, 30, 31, 32]);
+        p.launched(&mut core, &plan2, vec![40], None, 10);
+        assert_eq!(p.inflight(), 3);
+        assert!(p.next_launch(&core).is_none(), "depth 3 pipe is full");
+        assert_eq!(p.head_round(), Some(0));
+    }
+
+    #[test]
+    fn held_verdict_confirms_and_counts_pipelined_round() {
+        let mut core = SessionCore::new(1, &[1, 10], 20);
+        let mut p = PipelinedDrafter::new(2);
+        let plan0 = p.next_launch(&core).unwrap();
+        p.launched(&mut core, &plan0, vec![20, 21], Some(22), 7);
+        let plan1 = p.next_launch(&core).unwrap();
+        p.launched(&mut core, &plan1, vec![30, 31], Some(32), 7);
+
+        // full acceptance + exact bonus: speculation holds
+        let res = p.resolve(&mut core, &vmsg(0, 2, 22, false));
+        assert!(res.held && !res.finished);
+        assert_eq!(res.cancel_from, None);
+        assert_eq!((res.k, res.tau, res.air_up), (2, 2, 7));
+        assert_eq!(p.rounds_pipelined, 1);
+        assert_eq!(core.committed, vec![1, 10, 20, 21, 22]);
+        assert_eq!(core.speculated, vec![30, 31, 32]);
+        assert_eq!(p.head_round(), Some(1));
+
+        // next launch chains from the surviving speculation
+        let plan2 = p.next_launch(&core).unwrap();
+        assert_eq!(plan2.round, 2);
+        assert_eq!(plan2.basis_len, 5);
+        assert_eq!(plan2.spec, vec![30, 31, 32]);
+    }
+
+    #[test]
+    fn broken_prefix_cancels_everything_in_flight() {
+        let mut core = SessionCore::new(1, &[1, 10], 40);
+        let mut p = PipelinedDrafter::new(3);
+        let rounds = [
+            (vec![20, 21], Some(22)),
+            (vec![30, 31], Some(32)),
+            (vec![40, 41], None),
+        ];
+        for (toks, bonus) in rounds {
+            let plan = p.next_launch(&core).unwrap();
+            p.launched(&mut core, &plan, toks, bonus, 5);
+        }
+        // partial acceptance: tau 1 < K 2 → rounds 1 and 2 are void
+        let res = p.resolve(&mut core, &vmsg(0, 1, 99, false));
+        assert!(!res.held);
+        assert_eq!(res.cancel_from, Some(1));
+        assert_eq!(p.inflight(), 0);
+        assert_eq!(p.drafts_cancelled, 2);
+        assert_eq!(p.draft_tokens_wasted, 4);
+        assert!(core.speculated.is_empty());
+        assert_eq!(core.committed, vec![1, 10, 20, 99]);
+        // the redraft reuses the SAME round number from the true prefix
+        let plan = p.next_launch(&core).unwrap();
+        assert_eq!((plan.round, plan.speculative), (1, false));
+        assert!(plan.spec.is_empty());
+    }
+
+    #[test]
+    fn bonus_miss_alone_breaks_speculation() {
+        let mut core = SessionCore::new(1, &[1, 10], 40);
+        let mut p = PipelinedDrafter::new(2);
+        let plan0 = p.next_launch(&core).unwrap();
+        p.launched(&mut core, &plan0, vec![20, 21], Some(22), 5);
+        let plan1 = p.next_launch(&core).unwrap();
+        p.launched(&mut core, &plan1, vec![30], Some(31), 5);
+        // full acceptance but the bonus token differs: still broken
+        let res = p.resolve(&mut core, &vmsg(0, 2, 23, false));
+        assert!(!res.held && res.cancel_from == Some(1));
+        assert_eq!(p.drafts_cancelled, 1);
+    }
+
+    #[test]
+    fn finish_voids_inflight_speculation() {
+        let mut core = SessionCore::new(1, &[1, 10], 3);
+        let mut p = PipelinedDrafter::new(2);
+        let plan0 = p.next_launch(&core).unwrap();
+        p.launched(&mut core, &plan0, vec![20, 21], Some(22), 5);
+        // optimistic budget gate: 3 assumed tokens >= max_new 3 — the
+        // next round could only exist if speculation fails
+        assert!(p.next_launch(&core).is_none());
+
+        // larger budget: launch one more, then eos kills it
+        let mut core2 = SessionCore::new(2, &[1, 10], 20);
+        let mut p2 = PipelinedDrafter::new(2);
+        let a = p2.next_launch(&core2).unwrap();
+        p2.launched(&mut core2, &a, vec![20, 21], Some(22), 5);
+        let b = p2.next_launch(&core2).unwrap();
+        p2.launched(&mut core2, &b, vec![30], Some(31), 5);
+        let res = p2.resolve(&mut core2, &vmsg(0, 2, 22, true));
+        assert!(res.finished && !res.held);
+        assert_eq!(res.cancel_from, Some(1));
+        assert!(core2.done);
+    }
+
+    #[test]
+    fn wait_accounting_distinguishes_overlap_from_exposure() {
+        let mut core = SessionCore::new(1, &[1, 10], 40);
+        let mut p = PipelinedDrafter::new(2);
+        let plan = p.next_launch(&core).unwrap();
+        p.launched(&mut core, &plan, vec![20], None, 5);
+        p.note_wait();
+        assert_eq!((p.exposed_waits, p.overlapped_waits), (1, 0));
+        let plan = LaunchPlan {
+            round: 1,
+            basis_len: 2,
+            spec: vec![],
+            context: vec![],
+            speculative: true,
+        };
+        p.inflight.push_back(InflightRound {
+            round: 1,
+            tokens: vec![9],
+            bonus: None,
+            speculative: plan.speculative,
+            air_up: 0,
+        });
+        p.note_wait();
+        assert_eq!((p.exposed_waits, p.overlapped_waits), (1, 1));
+    }
+
+    /// End-to-end pure-state-machine check against the REAL synthetic
+    /// draft/target pair: a pipelined decode driven entirely through
+    /// `PipelinedDrafter` commits exactly the sequential trajectory.
+    #[test]
+    fn pipelined_trajectory_equals_sequential_with_drifted_target() {
+        let seed = 23u64;
+        let prompt = vec![1i32, 100, 103, 106, 109, 112];
+        const MAX_NEW: usize = 24;
+        const K: usize = 4;
+
+        let mk_target = || {
+            let mut t = SyntheticTarget::new(seed).with_version("evolved", 0.3);
+            t.deploy("evolved").unwrap();
+            t
+        };
+        let mut rng = SplitMix64::new(0);
+
+        // --- sequential reference ------------------------------------
+        let mut target = mk_target();
+        let mut draft = SyntheticDraft::new(seed);
+        target.start_session(1, &prompt).unwrap();
+        let mut seq = SessionCore::new(1, &prompt, MAX_NEW);
+        while !seq.done {
+            let prop = draft.propose(&seq.committed, K, 0.0, 1.0, &mut rng).unwrap();
+            let v = target
+                .verify_block(
+                    1,
+                    &seq.committed,
+                    &prop.tokens,
+                    &[],
+                    VerifyMode::Greedy,
+                    0.0,
+                    1.0,
+                    &mut rng,
+                )
+                .unwrap();
+            seq.apply_verdict(&prop.tokens, v.tau, v.correction, v.eos, false);
+        }
+
+        // --- pipelined (depth 2) over the same pure functions --------
+        let mut target = mk_target();
+        let mut draft = SyntheticDraft::new(seed);
+        target.start_session(2, &prompt).unwrap();
+        let mut core = SessionCore::new(2, &prompt, MAX_NEW);
+        let mut p = PipelinedDrafter::new(2);
+        // the "cloud": committed mirror + verdict function
+        let mut cloud = SessionCore::new(2, &prompt, MAX_NEW);
+        while !core.done {
+            while let Some(plan) = p.next_launch(&core) {
+                let prop = draft.propose(&plan.context, K, 0.0, 1.0, &mut rng).unwrap();
+                let bonus = {
+                    let mut ctx2 = plan.context.clone();
+                    ctx2.extend_from_slice(&prop.tokens);
+                    draft
+                        .propose(&ctx2, 1, 0.0, 1.0, &mut rng)
+                        .unwrap()
+                        .tokens
+                        .first()
+                        .copied()
+                };
+                p.launched(&mut core, &plan, prop.tokens.clone(), bonus, 0);
+            }
+            p.note_wait();
+            // cloud verifies the head round from ITS committed prefix —
+            // only valid drafts get here, so tokens must match what a
+            // sequential edge would send
+            let head_tokens = p.inflight.front().unwrap().tokens.clone();
+            let expect = draft
+                .propose(&cloud.committed, head_tokens.len(), 0.0, 1.0, &mut rng)
+                .unwrap();
+            assert_eq!(
+                expect.tokens, head_tokens,
+                "speculative draft diverged from the sequential draft"
+            );
+            let v = target
+                .verify_block(
+                    2,
+                    &cloud.committed,
+                    &head_tokens,
+                    &[],
+                    VerifyMode::Greedy,
+                    0.0,
+                    1.0,
+                    &mut rng,
+                )
+                .unwrap();
+            let vm = vmsg(p.head_round().unwrap(), v.tau, v.correction, v.eos);
+            cloud.apply_verdict(&head_tokens, v.tau, v.correction, v.eos, false);
+            // a !held resolution drains the stale tail (the in-process
+            // "cloud" queues nothing, so no Cancel frame is owed here)
+            let _ = p.resolve(&mut core, &vm);
+        }
+
+        assert_eq!(core.committed, seq.committed, "pipelining changed tokens");
+        assert_eq!(core.rounds, seq.rounds, "pipelining changed round count");
+        // with drift 0.3 some speculation must fail AND some must land
+        assert!(p.drafts_cancelled > 0, "drifted target must break some prefixes");
+        assert!(p.rounds_pipelined > 0, "some speculation must survive");
+        assert!(
+            p.overlapped_waits > 0 && p.exposed_waits < seq.rounds,
+            "pipelining must hide some RTTs ({} overlapped, {} exposed, {} rounds)",
+            p.overlapped_waits,
+            p.exposed_waits,
+            seq.rounds
+        );
+    }
+}

@@ -101,6 +101,14 @@ pub struct SessionCore {
     pub accepted: usize,
     pub drafted: usize,
     pub done: bool,
+    /// Pipelined drafting: OPTIMISTIC tokens assumed committed beyond
+    /// `committed` — the in-flight rounds' draft blocks plus their
+    /// predicted bonus tokens. The edge drafts round r+1 from
+    /// `committed ++ speculated` while round r verifies; a verdict that
+    /// breaks the assumption rolls the whole suffix back
+    /// ([`SessionCore::rollback_speculation`]). Always empty in
+    /// sequential mode and on the cloud side.
+    pub speculated: Vec<i32>,
 }
 
 impl SessionCore {
@@ -115,7 +123,53 @@ impl SessionCore {
             accepted: 0,
             drafted: 0,
             done: false,
+            speculated: Vec::new(),
         }
+    }
+
+    // --- speculative-prefix bookkeeping (pipelined drafting) ----------
+
+    /// Optimistic decode context: the committed prefix plus every
+    /// in-flight round's assumed outcome. What the NEXT speculative
+    /// round drafts from.
+    pub fn optimistic_context(&self) -> Vec<i32> {
+        let mut ctx = Vec::with_capacity(self.committed.len() + self.speculated.len());
+        ctx.extend_from_slice(&self.committed);
+        ctx.extend_from_slice(&self.speculated);
+        ctx
+    }
+
+    /// Optimistically generated tokens if every in-flight round lands
+    /// fully accepted — gates further speculative launches against
+    /// `max_new`.
+    pub fn optimistic_new_tokens(&self) -> usize {
+        self.committed.len() + self.speculated.len() - self.prompt_len
+    }
+
+    /// Record one in-flight round's assumed outcome (its draft block +
+    /// predicted bonus token) on the speculative suffix.
+    pub fn speculate(&mut self, assumed: &[i32]) {
+        self.speculated.extend_from_slice(assumed);
+    }
+
+    /// A verdict confirmed the head in-flight assumption exactly: its
+    /// `n` tokens moved from speculation to the committed sequence
+    /// (via [`SessionCore::apply_verdict`]); drop them from the suffix.
+    pub fn confirm_speculation(&mut self, n: usize) {
+        let n = n.min(self.speculated.len());
+        self.speculated.drain(..n);
+    }
+
+    /// A verdict broke the optimistic prefix (partial acceptance, or a
+    /// bonus-token miss): every in-flight round beyond it was drafted
+    /// from a context that will never exist. Drop the whole suffix;
+    /// returns how many speculative tokens were thrown away (the
+    /// `draft_tokens_wasted` contribution includes these minus the
+    /// bonus predictions, which the caller tracks per round).
+    pub fn rollback_speculation(&mut self) -> usize {
+        let n = self.speculated.len();
+        self.speculated.clear();
+        n
     }
 
     /// Commit one round's outcome: accepted prefix + correction/bonus
@@ -164,6 +218,8 @@ impl SessionCore {
     /// committed sequence, not the counters, is the correctness
     /// contract under faults). Returns true when the session is done.
     pub fn fast_forward(&mut self, tail: &[i32], rounds: usize, done: bool) -> bool {
+        // any in-flight speculation died with the old link
+        self.speculated.clear();
         self.committed.extend_from_slice(tail);
         self.new_tokens = self.committed.len() - self.prompt_len;
         self.rounds = rounds;
@@ -300,6 +356,37 @@ mod tests {
         // an explicit done flag finishes regardless of budget
         let mut edge3 = SessionCore::new(3, &[1, 10], 100);
         assert!(edge3.fast_forward(&[5], 1, true));
+    }
+
+    #[test]
+    fn speculation_confirm_and_rollback() {
+        let mut s = SessionCore::new(1, &[1, 10], 20);
+        // round 0 in flight, assumed outcome [20, 21, 22] (K=2 + bonus)
+        s.speculate(&[20, 21, 22]);
+        // round 1 launched from the optimistic prefix
+        assert_eq!(s.optimistic_context(), vec![1, 10, 20, 21, 22]);
+        assert_eq!(s.optimistic_new_tokens(), 3);
+        s.speculate(&[30, 31, 32]);
+        assert_eq!(s.optimistic_new_tokens(), 6);
+
+        // round 0 verdict confirms the assumption exactly
+        s.apply_verdict(&[20, 21], 2, 22, false, false);
+        s.confirm_speculation(3);
+        assert_eq!(s.speculated, vec![30, 31, 32]);
+        assert_eq!(s.optimistic_context(), vec![1, 10, 20, 21, 22, 30, 31, 32]);
+
+        // round 1 verdict REJECTS at position 1: everything speculative
+        // beyond it is void
+        s.apply_verdict(&[30, 31], 1, 99, false, false);
+        assert_eq!(s.rollback_speculation(), 3);
+        assert!(s.speculated.is_empty());
+        assert_eq!(s.committed, vec![1, 10, 20, 21, 22, 30, 99]);
+
+        // a resume fast-forward also clears speculation
+        s.speculate(&[40, 41]);
+        s.fast_forward(&[50], s.rounds, false);
+        assert!(s.speculated.is_empty());
+        assert!(s.committed.ends_with(&[50]));
     }
 
     #[test]

@@ -96,16 +96,24 @@ impl Default for VerifierConfig {
 pub enum SubmitOutcome {
     /// Fresh round: queued for batched verification.
     Queued(BatchDecision),
+    /// Pipelined draft for a FUTURE round (wire v3): parked in the
+    /// session's speculative queue until every earlier round commits;
+    /// `promote_ready` then basis-checks it and either verifies it
+    /// (rounds_pipelined) or discards it (drafts_cancelled). The caller
+    /// keeps a reply waiter keyed by (session, round).
+    Deferred,
     /// The round was already verified (duplicate / retransmit): answer
     /// with the cached verdict, do not advance the sequence.
     Replay(VerifyMsg),
-    /// Duplicate of a round still in flight: the round is already
-    /// queued, but THIS caller becomes the reply waiter (the previous
-    /// waiter may belong to a dead predecessor connection — the latest
-    /// requester is the one that can still deliver the verdict).
+    /// Duplicate of a round still in flight (in the window OR in the
+    /// speculative queue): the round is already queued, but THIS caller
+    /// becomes the reply waiter (the previous waiter may belong to a
+    /// dead predecessor connection — the latest requester is the one
+    /// that can still deliver the verdict).
     TakeOver,
-    /// Stale retransmit of a round older than the cached verdict: no
-    /// reply owed.
+    /// Stale retransmit of a round older than the cached verdict, a
+    /// speculative draft whose basis no longer matches the committed
+    /// prefix, or a draft from a stale attachment: no reply owed.
     Swallowed,
 }
 
@@ -151,8 +159,14 @@ pub struct VerifierCore {
     pub cfg: VerifierConfig,
     backend: Box<dyn VerifyBackend>,
     sessions: HashMap<u32, SessionCore>,
-    /// In-flight draft per session (protocol allows exactly one).
+    /// Draft currently offered to the batch window, per session (at most
+    /// one: the session's NEXT round; later rounds wait in `queued`).
     pending: HashMap<u32, DraftMsg>,
+    /// Pipelined drafts for FUTURE rounds (wire v3), ascending round
+    /// order. Basis-checked and promoted into the window by
+    /// `promote_ready` once their turn comes; retracted by `cancel` or
+    /// discarded when stale.
+    queued: HashMap<u32, Vec<DraftMsg>>,
     /// Parked sessions: id → eviction deadline. Overlay on `sessions`
     /// (the core stays put; only attachment changes).
     parked: HashMap<u32, f64>,
@@ -194,6 +208,7 @@ impl VerifierCore {
             backend,
             sessions: HashMap::new(),
             pending: HashMap::new(),
+            queued: HashMap::new(),
             parked: HashMap::new(),
             last_verdict: HashMap::new(),
             token_of: HashMap::new(),
@@ -282,10 +297,11 @@ impl VerifierCore {
     }
 
     /// Queue one draft block for batched verification — or recognize it
-    /// as a duplicate/retransmit and replay/swallow it. `attachment` is
-    /// the submitting connection's epoch: a draft from a STALE
-    /// attachment (its session was stolen by a reconnect) is swallowed
-    /// outright — it could neither deliver a verdict nor is one owed.
+    /// as a duplicate/retransmit/speculative round and
+    /// replay/defer/swallow it. `attachment` is the submitting
+    /// connection's epoch: a draft from a STALE attachment (its session
+    /// was stolen by a reconnect) is swallowed outright — it could
+    /// neither deliver a verdict nor is one owed.
     pub fn submit(&mut self, now_ms: f64, attachment: u64, msg: DraftMsg) -> Result<SubmitOutcome> {
         let id = msg.session;
         if self.attachment_of.contains_key(&id)
@@ -306,6 +322,15 @@ impl VerifierCore {
             }
         }
         if !self.sessions.contains_key(&id) {
+            // a speculative round overtaken by its session's completion
+            // (the head verdict finished the session while this draft
+            // was in flight): wasted speculation, not a protocol error —
+            // the tombstoned verdict cache proves the session existed
+            if self.last_verdict.contains_key(&id) {
+                self.metrics.drafts_cancelled += 1;
+                self.metrics.draft_tokens_wasted += msg.tokens.len();
+                return Ok(SubmitOutcome::Swallowed);
+            }
             bail!("no session {id}");
         }
         if self.parked.contains_key(&id) {
@@ -313,16 +338,206 @@ impl VerifierCore {
         }
         if let Some(p) = self.pending.get(&id) {
             if p.round == msg.round {
-                // duplicated while still queued: the round runs once,
-                // but the NEWEST requester takes over the reply slot
-                // (its predecessor may be a dead connection's task)
-                return Ok(SubmitOutcome::TakeOver);
+                if p.tokens == msg.tokens && p.spec == msg.spec {
+                    // duplicated while still queued: the round runs
+                    // once, but the NEWEST requester takes over the
+                    // reply slot (its predecessor may be a dead
+                    // connection's task)
+                    return Ok(SubmitOutcome::TakeOver);
+                }
+                // same round, DIFFERENT payload: a stale speculative
+                // draft racing its own redraft (the redraft was already
+                // admitted — only basis-valid drafts reach the window,
+                // so the mismatched copy is the cancelled speculation,
+                // arriving late through a reordered verify task)
+                self.metrics.drafts_cancelled += 1;
+                self.metrics.draft_tokens_wasted += msg.tokens.len();
+                return Ok(SubmitOutcome::Swallowed);
             }
-            bail!("session {id} already has an in-flight draft (protocol violation)");
+            if msg.round < p.round {
+                return Ok(SubmitOutcome::Swallowed);
+            }
+            // pipelined draft for a future round (wire v3): park it
+            // until every earlier round commits
+            return self.defer(id, msg);
+        }
+        let expected = self.sessions[&id].rounds as u32;
+        if msg.round > expected {
+            return self.defer(id, msg);
+        }
+        // the session's next round: basis-check speculative drafts
+        // against the committed prefix before the window sees them
+        if !self.basis_valid(id, &msg) {
+            self.metrics.drafts_cancelled += 1;
+            self.metrics.draft_tokens_wasted += msg.tokens.len();
+            return Ok(SubmitOutcome::Swallowed);
+        }
+        if !msg.spec.is_empty() {
+            self.metrics.rounds_pipelined += 1;
         }
         self.metrics.bytes_up += msg.air_bytes();
         self.pending.insert(id, msg);
         Ok(SubmitOutcome::Queued(self.window.offer(now_ms, id)))
+    }
+
+    /// Park a pipelined draft for a future round (ascending round
+    /// order, retransmit-deduped, depth-bounded).
+    fn defer(&mut self, id: u32, msg: DraftMsg) -> Result<SubmitOutcome> {
+        let in_window = usize::from(self.pending.contains_key(&id));
+        let q = self.queued.entry(id).or_default();
+        if let Some(pos) = q.iter().position(|m| m.round == msg.round) {
+            // identical payload: a transport retransmit — the round
+            // stays queued once, the newest waiter takes the reply slot
+            if q[pos].tokens == msg.tokens && q[pos].spec == msg.spec {
+                q[pos] = msg;
+                return Ok(SubmitOutcome::TakeOver);
+            }
+            // same round, DIFFERENT payload: a stale pre-cancel copy
+            // racing the fresh redraft chain through reordered verify
+            // tasks. basis_len is the committed length at launch and
+            // committed is append-only, so the LARGER basis is the
+            // later (fresh) launch — keep it, count the stale copy as
+            // cancelled speculation either way.
+            if msg.basis_len > q[pos].basis_len {
+                self.metrics.drafts_cancelled += 1;
+                self.metrics.draft_tokens_wasted += q[pos].tokens.len();
+                q[pos] = msg;
+                return Ok(SubmitOutcome::TakeOver);
+            }
+            self.metrics.drafts_cancelled += 1;
+            self.metrics.draft_tokens_wasted += msg.tokens.len();
+            return Ok(SubmitOutcome::Swallowed);
+        }
+        if q.len() + in_window >= super::pipeline::MAX_PIPELINE_DEPTH {
+            bail!(
+                "session {id}: more than {} rounds in flight (protocol violation)",
+                super::pipeline::MAX_PIPELINE_DEPTH
+            );
+        }
+        let pos = q
+            .iter()
+            .position(|m| m.round > msg.round)
+            .unwrap_or(q.len());
+        q.insert(pos, msg);
+        Ok(SubmitOutcome::Deferred)
+    }
+
+    /// Wire-v3 basis check: a speculative draft is verifiable only when
+    /// the committed sequence equals EXACTLY `committed[..basis_len] ++
+    /// spec` — in which case, for a pure draft source, its tokens are
+    /// byte-identical to the draft a sequential edge would have produced
+    /// from the true committed prefix. Empty-spec drafts (v2 peers and
+    /// head rounds) carry no assumption and pass trivially.
+    fn basis_valid(&self, id: u32, msg: &DraftMsg) -> bool {
+        if msg.spec.is_empty() {
+            return true;
+        }
+        let Some(core) = self.sessions.get(&id) else {
+            return false;
+        };
+        // subtract, never add: a hostile basis_len must not overflow
+        // (debug panic) or wrap past the length check (release, then an
+        // out-of-bounds slice) — either would kill the shared verifier
+        // thread
+        let basis = msg.basis_len as usize;
+        basis <= core.committed.len()
+            && core.committed.len() - basis == msg.spec.len()
+            && core.committed[basis..] == msg.spec[..]
+    }
+
+    /// After a window close committed fresh verdicts: basis-check each
+    /// affected session's queued next round and promote the valid ones
+    /// into the (new) batch window; a broken basis voids the round AND
+    /// everything chained behind it. Returns the batch decisions the
+    /// caller must schedule plus the (session, round) keys of discarded
+    /// drafts whose reply waiters are void.
+    pub fn promote_ready(&mut self, now_ms: f64) -> (Vec<BatchDecision>, Vec<(u32, u32)>) {
+        let mut decisions = Vec::new();
+        let mut dropped = Vec::new();
+        let ids: Vec<u32> = self.queued.keys().copied().collect();
+        for id in ids {
+            if self.pending.contains_key(&id) || self.parked.contains_key(&id) {
+                continue;
+            }
+            let mut q = self.queued.remove(&id).unwrap_or_default();
+            let Some(expected) = self.sessions.get(&id).map(|c| c.rounds as u32) else {
+                // the session finished (or was evicted) underneath its
+                // speculative queue: every queued round is waste
+                for m in q {
+                    self.metrics.drafts_cancelled += 1;
+                    self.metrics.draft_tokens_wasted += m.tokens.len();
+                    dropped.push((id, m.round));
+                }
+                continue;
+            };
+            // duplicates of already-resolved rounds: quietly drop
+            while q.first().is_some_and(|m| m.round < expected) {
+                let m = q.remove(0);
+                dropped.push((id, m.round));
+            }
+            if !q.first().is_some_and(|m| m.round == expected) {
+                if !q.is_empty() {
+                    self.queued.insert(id, q);
+                }
+                continue;
+            }
+            let msg = q.remove(0);
+            if self.basis_valid(id, &msg) {
+                if !msg.spec.is_empty() {
+                    self.metrics.rounds_pipelined += 1;
+                }
+                self.metrics.bytes_up += msg.air_bytes();
+                self.pending.insert(id, msg);
+                decisions.push(self.window.offer(now_ms, id));
+                if !q.is_empty() {
+                    self.queued.insert(id, q);
+                }
+            } else {
+                // broken basis: this round and everything chained after
+                // it were drafted from a prefix that will never exist
+                self.metrics.drafts_cancelled += 1;
+                self.metrics.draft_tokens_wasted += msg.tokens.len();
+                dropped.push((id, msg.round));
+                for m in q {
+                    self.metrics.drafts_cancelled += 1;
+                    self.metrics.draft_tokens_wasted += m.tokens.len();
+                    dropped.push((id, m.round));
+                }
+            }
+        }
+        (decisions, dropped)
+    }
+
+    /// Edge `Cancel` (wire v3): retract queued speculative rounds
+    /// `>= round`. Advisory — stale drafts are also discarded by the
+    /// basis check — so a lost, late, or duplicated Cancel is harmless.
+    /// Never touches the batch window: a round already admitted there
+    /// passed its basis check, and the edge never cancels a valid
+    /// round. Returns the (session, round) keys whose reply waiters are
+    /// void.
+    pub fn cancel(&mut self, id: u32, attachment: u64, round: u32) -> Vec<(u32, u32)> {
+        if self.attachment_of.contains_key(&id)
+            && self.attachment_of.get(&id) != Some(&attachment)
+        {
+            return Vec::new();
+        }
+        let mut dropped = Vec::new();
+        if let Some(q) = self.queued.remove(&id) {
+            let mut kept = Vec::with_capacity(q.len());
+            for m in q {
+                if m.round >= round {
+                    self.metrics.drafts_cancelled += 1;
+                    self.metrics.draft_tokens_wasted += m.tokens.len();
+                    dropped.push((id, m.round));
+                } else {
+                    kept.push(m);
+                }
+            }
+            if !kept.is_empty() {
+                self.queued.insert(id, kept);
+            }
+        }
+        dropped
     }
 
     /// Close the open window and verify its members as ONE batch
@@ -413,8 +628,10 @@ impl VerifierCore {
         }
         // an in-flight draft whose reply can no longer be delivered is
         // void — the resume handshake re-synchronizes instead (and the
-        // id leaves the open window so a resubmit cannot double-count)
+        // id leaves the open window so a resubmit cannot double-count);
+        // queued speculative rounds from the dead link die with it
         self.pending.remove(&id);
+        self.queued.remove(&id);
         self.window.remove(id);
         let deadline = now_ms + self.cfg.resume_grace_ms;
         self.next_sweep_ms = self.next_sweep_ms.min(deadline);
@@ -471,9 +688,12 @@ impl VerifierCore {
         };
         // un-park; also steals from a half-dead connection (new link
         // wins, and the bumped attachment epoch makes the old
-        // connection's eventual detach a no-op)
+        // connection's eventual detach a no-op); the old attachment's
+        // speculative queue is void — the edge re-pipelines from the
+        // committed prefix it just synced
         self.parked.remove(&id);
         self.pending.remove(&id);
+        self.queued.remove(&id);
         self.window.remove(id);
         info.attachment = self.next_attachment(id);
         self.metrics.sessions_resumed += 1;
@@ -497,6 +717,7 @@ impl VerifierCore {
         for &id in &expired {
             self.parked.remove(&id);
             self.pending.remove(&id);
+            self.queued.remove(&id);
             self.last_verdict.remove(&id);
             self.sessions.remove(&id);
             if let Some(tok) = self.token_of.remove(&id) {
@@ -536,6 +757,7 @@ impl VerifierCore {
     pub fn abort_session(&mut self, id: u32) {
         if self.sessions.remove(&id).is_some() {
             self.pending.remove(&id);
+            self.queued.remove(&id);
             self.window.remove(id);
             self.parked.remove(&id);
             self.last_verdict.remove(&id);
@@ -575,6 +797,11 @@ enum VerifierCmd {
         attachment: u64,
         msg: DraftMsg,
         reply: oneshot::Sender<Result<Option<VerifyMsg>>>,
+    },
+    Cancel {
+        id: u32,
+        attachment: u64,
+        round: u32,
     },
     Detach {
         id: u32,
@@ -679,6 +906,17 @@ impl VerifierHandle {
         }
     }
 
+    /// Fire-and-forget retraction of queued speculative rounds
+    /// `>= round` (wire v3 `Cancel`). A stale attachment's cancel is
+    /// ignored, like its drafts.
+    pub fn cancel(&self, id: u32, attachment: u64, round: u32) {
+        let _ = self.post(VerifierCmd::Cancel {
+            id,
+            attachment,
+            round,
+        });
+    }
+
     /// Fire-and-forget park (connection died; session may resume).
     /// `attachment` is the epoch this connection was handed — a stale
     /// detach after a steal is ignored.
@@ -732,30 +970,64 @@ impl VerifierHandle {
 fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
     let start = Instant::now();
     let now_ms = |start: &Instant| start.elapsed().as_secs_f64() * 1e3;
-    let mut replies: HashMap<u32, oneshot::Sender<Result<Option<VerifyMsg>>>> = HashMap::new();
+    // keyed by (session, round): with pipelining a session can have
+    // several rounds awaiting replies at once
+    let mut replies: HashMap<(u32, u32), oneshot::Sender<Result<Option<VerifyMsg>>>> =
+        HashMap::new();
     let mut deadline: Option<f64> = None;
 
+    // Close the window, deliver its verdicts, then promote queued
+    // speculative rounds whose turn has come — looping when a promotion
+    // fills a batch to capacity (CloseNow). Discarded stale drafts get
+    // their waiters dropped, which the async side reads as "no reply
+    // owed".
     fn flush(
         core: &mut VerifierCore,
-        replies: &mut HashMap<u32, oneshot::Sender<Result<Option<VerifyMsg>>>>,
+        replies: &mut HashMap<(u32, u32), oneshot::Sender<Result<Option<VerifyMsg>>>>,
+        deadline: &mut Option<f64>,
         now: f64,
     ) {
-        match core.close_window(now) {
-            Ok(results) => {
-                for (id, vmsg) in results {
-                    if let Some(tx) = replies.remove(&id) {
-                        let _ = tx.send(Ok(Some(vmsg)));
+        loop {
+            match core.close_window(now) {
+                Ok(results) => {
+                    for (id, vmsg) in results {
+                        if let Some(tx) = replies.remove(&(id, vmsg.round)) {
+                            let _ = tx.send(Ok(Some(vmsg)));
+                        }
                     }
                 }
-            }
-            Err(e) => {
-                // a backend failure poisons the whole batch: every waiter
-                // gets the error and the connection layer tears down
-                let msg = format!("batch verification failed: {e:#}");
-                for (_, tx) in replies.drain() {
-                    let _ = tx.send(Err(anyhow!("{msg}")));
+                Err(e) => {
+                    // a backend failure poisons the whole batch: every
+                    // waiter gets the error and the connection layer
+                    // tears down
+                    let msg = format!("batch verification failed: {e:#}");
+                    for (_, tx) in replies.drain() {
+                        let _ = tx.send(Err(anyhow!("{msg}")));
+                    }
+                    return;
                 }
             }
+            let (decisions, dropped) = core.promote_ready(now);
+            for key in dropped {
+                replies.remove(&key);
+            }
+            let mut close_again = false;
+            for d in decisions {
+                match d {
+                    BatchDecision::CloseNow => close_again = true,
+                    BatchDecision::CloseAt(t) => {
+                        *deadline = Some(match *deadline {
+                            Some(d) => d.min(t),
+                            None => t,
+                        });
+                    }
+                    BatchDecision::Queued => {}
+                }
+            }
+            if !close_again {
+                return;
+            }
+            *deadline = None;
         }
     }
 
@@ -770,7 +1042,7 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
         if let Some(d) = deadline {
             if now >= d {
                 deadline = None;
-                flush(&mut core, &mut replies, now);
+                flush(&mut core, &mut replies, &mut deadline, now);
             }
         }
         let timeout = match deadline {
@@ -792,18 +1064,25 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                 msg,
                 reply,
             }) => {
+                let round = msg.round;
                 match core.submit(now_ms(&start), attachment, msg) {
                     Ok(SubmitOutcome::Queued(decision)) => {
-                        replies.insert(id, reply);
+                        replies.insert((id, round), reply);
                         match decision {
                             BatchDecision::CloseNow => {
                                 deadline = None;
                                 let now = now_ms(&start);
-                                flush(&mut core, &mut replies, now);
+                                flush(&mut core, &mut replies, &mut deadline, now);
                             }
                             BatchDecision::CloseAt(t) => deadline = Some(t),
                             BatchDecision::Queued => {}
                         }
+                    }
+                    // speculative round parked until its turn; the
+                    // waiter is answered when the round promotes (or
+                    // dropped when it dies — "no reply owed")
+                    Ok(SubmitOutcome::Deferred) => {
+                        replies.insert((id, round), reply);
                     }
                     Ok(SubmitOutcome::Replay(v)) => {
                         let _ = reply.send(Ok(Some(v)));
@@ -812,7 +1091,7 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                         // replace the previous waiter; its dropped
                         // channel reads as "no reply owed" (benign —
                         // see VerifierHandle::verify)
-                        replies.insert(id, reply);
+                        replies.insert((id, round), reply);
                     }
                     Ok(SubmitOutcome::Swallowed) => {
                         let _ = reply.send(Ok(None));
@@ -822,12 +1101,22 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                     }
                 }
             }
+            Ok(VerifierCmd::Cancel {
+                id,
+                attachment,
+                round,
+            }) => {
+                for key in core.cancel(id, attachment, round) {
+                    // dropping the waiter reads as "no reply owed"
+                    replies.remove(&key);
+                }
+            }
             Ok(VerifierCmd::Detach { id, attachment }) => {
                 if core.detach(now_ms(&start), id, attachment) {
-                    // the dead connection's waiter (if any) can never
-                    // deliver (guarded: a stale detach must not drop a
-                    // live successor's waiter)
-                    replies.remove(&id);
+                    // the dead connection's waiters (any round) can
+                    // never deliver (guarded: a stale detach must not
+                    // drop a live successor's waiters)
+                    replies.retain(|key, _| key.0 != id);
                 }
             }
             Ok(VerifierCmd::Resume {
@@ -837,8 +1126,9 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
             }) => {
                 let res = core.resume(token, committed_len);
                 if let Ok(info) = &res {
-                    // a stolen session's old waiter can never deliver
-                    replies.remove(&info.session);
+                    // a stolen session's old waiters can never deliver
+                    let id = info.session;
+                    replies.retain(|key, _| key.0 != id);
                 }
                 let _ = reply.send(res);
             }
@@ -855,7 +1145,7 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
             Ok(VerifierCmd::Shutdown { reply }) => {
                 deadline = None;
                 let now = now_ms(&start);
-                flush(&mut core, &mut replies, now);
+                flush(&mut core, &mut replies, &mut deadline, now);
                 let _ = reply.send(core.metrics.clone());
                 return;
             }
@@ -863,7 +1153,7 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
             Err(std_mpsc::RecvTimeoutError::Timeout) => {}
             Err(std_mpsc::RecvTimeoutError::Disconnected) => {
                 let now = now_ms(&start);
-                flush(&mut core, &mut replies, now);
+                flush(&mut core, &mut replies, &mut deadline, now);
                 return;
             }
         }
@@ -905,6 +1195,8 @@ mod tests {
             chosen_probs: p.chosen_probs,
             mode: VerifyMode::Greedy,
             wire: WireFormat::Compact,
+            basis_len: 0,
+            spec: vec![],
         }
     }
 
@@ -913,6 +1205,39 @@ mod tests {
             SubmitOutcome::Queued(d) => d,
             other => panic!("expected Queued, got {other:?}"),
         }
+    }
+
+    /// A pipelined (wire v3) draft for `round`, drafted from the
+    /// optimistic context `committed ++ spec`.
+    fn spec_draft_for(id: u32, round: u32, committed: &[i32], spec: &[i32], k: usize) -> DraftMsg {
+        let mut d = SyntheticDraft::new(7);
+        let mut rng = SplitMix64::new(0);
+        let mut ctx = committed.to_vec();
+        ctx.extend_from_slice(spec);
+        let p = d.propose(&ctx, k, 0.0, 1.0, &mut rng).unwrap();
+        DraftMsg {
+            session: id,
+            round,
+            tokens: p.tokens,
+            chosen_probs: p.chosen_probs,
+            mode: VerifyMode::Greedy,
+            wire: WireFormat::Compact,
+            basis_len: committed.len() as u64,
+            spec: spec.to_vec(),
+        }
+    }
+
+    /// The synthetic draft's assumed outcome of a fully-accepted round:
+    /// its own tokens plus its prediction of the bonus token.
+    fn assumed_outcome(committed: &[i32], tokens: &[i32]) -> Vec<i32> {
+        let mut d = SyntheticDraft::new(7);
+        let mut rng = SplitMix64::new(0);
+        let mut ctx = committed.to_vec();
+        ctx.extend_from_slice(tokens);
+        let bonus = d.propose(&ctx, 1, 0.0, 1.0, &mut rng).unwrap().tokens[0];
+        let mut assumed = tokens.to_vec();
+        assumed.push(bonus);
+        assumed
     }
 
     #[test]
@@ -1187,6 +1512,175 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].0, b);
         assert_eq!(c.metrics.sessions_aborted, 1);
+    }
+
+    #[test]
+    fn speculative_round_defers_then_promotes_and_pipelines() {
+        let mut c = core(10.0, 8);
+        let prompt = vec![1, 70, 71];
+        let o = c.open_session(&prompt, 64, 0).unwrap();
+        let id = o.session;
+        let d0 = draft_for(id, 0, &prompt, 4);
+        queued(c.submit(0.0, o.attachment, d0.clone()).unwrap());
+
+        // the edge pipelines round 1 from the optimistic prefix
+        let assumed = assumed_outcome(&prompt, &d0.tokens);
+        let d1 = spec_draft_for(id, 1, &prompt, &assumed, 4);
+        assert!(matches!(
+            c.submit(0.1, o.attachment, d1.clone()).unwrap(),
+            SubmitOutcome::Deferred
+        ));
+        // a retransmit of the queued round takes over, not double-queues
+        assert!(matches!(
+            c.submit(0.2, o.attachment, d1).unwrap(),
+            SubmitOutcome::TakeOver
+        ));
+
+        // round 0 verifies: zero drift -> full acceptance, exact bonus
+        let out = c.close_window(0.3).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.tau as usize, 4);
+
+        // promotion basis-checks and admits round 1 into the window
+        let (decisions, dropped) = c.promote_ready(0.4);
+        assert_eq!(decisions.len(), 1);
+        assert!(dropped.is_empty());
+        assert_eq!(c.metrics.rounds_pipelined, 1);
+        assert_eq!(c.metrics.drafts_cancelled, 0);
+        let out = c.close_window(0.5).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.round, 1);
+        assert_eq!(c.metrics.rounds, 2, "pipelined round verified exactly once");
+    }
+
+    #[test]
+    fn stale_speculative_round_is_discarded_at_promotion() {
+        // full drift: the target rejects every draft token, so every
+        // optimistic prefix breaks
+        let mut backend = SyntheticTarget::new(7).with_version("evolved", 1.0);
+        backend.deploy("evolved").unwrap();
+        let mut c = VerifierCore::new(VerifierConfig::default(), Box::new(backend));
+        let prompt = vec![1, 70, 71];
+        let o = c.open_session(&prompt, 64, 0).unwrap();
+        let id = o.session;
+        let d0 = draft_for(id, 0, &prompt, 4);
+        queued(c.submit(0.0, o.attachment, d0.clone()).unwrap());
+        let assumed = assumed_outcome(&prompt, &d0.tokens);
+        let d1 = spec_draft_for(id, 1, &prompt, &assumed, 4);
+        assert!(matches!(
+            c.submit(0.1, o.attachment, d1).unwrap(),
+            SubmitOutcome::Deferred
+        ));
+
+        let out = c.close_window(0.3).unwrap();
+        assert_eq!(out[0].1.tau, 0, "full drift must reject everything");
+        let correction = out[0].1.correction;
+
+        // the queued speculative round is stale: discarded, counted
+        let (decisions, dropped) = c.promote_ready(0.4);
+        assert!(decisions.is_empty());
+        assert_eq!(dropped, vec![(id, 1)]);
+        assert_eq!(c.metrics.drafts_cancelled, 1);
+        assert_eq!(c.metrics.draft_tokens_wasted, 4);
+        assert_eq!(c.metrics.rounds_pipelined, 0);
+
+        // the redraft from the TRUE prefix (same round number) verifies
+        let mut committed = prompt.clone();
+        committed.push(correction);
+        queued(c.submit(0.5, o.attachment, draft_for(id, 1, &committed, 4)).unwrap());
+        let out = c.close_window(0.6).unwrap();
+        assert_eq!(out[0].1.round, 1);
+        assert_eq!(c.metrics.rounds, 2);
+    }
+
+    #[test]
+    fn cancel_retracts_queued_rounds_and_bounds_depth() {
+        let mut c = core(10.0, 8);
+        let prompt = vec![1, 70, 71];
+        let o = c.open_session(&prompt, 64, 0).unwrap();
+        let id = o.session;
+        let d0 = draft_for(id, 0, &prompt, 4);
+        queued(c.submit(0.0, o.attachment, d0.clone()).unwrap());
+        let assumed = assumed_outcome(&prompt, &d0.tokens);
+        let d1 = spec_draft_for(id, 1, &prompt, &assumed, 4);
+        assert!(matches!(c.submit(0.1, o.attachment, d1).unwrap(), SubmitOutcome::Deferred));
+        let mut spec2 = assumed.clone();
+        let chained = assumed_outcome(&prompt, &spec2);
+        spec2.extend(chained);
+        let d2 = spec_draft_for(id, 2, &prompt, &spec2, 4);
+        assert!(matches!(c.submit(0.2, o.attachment, d2).unwrap(), SubmitOutcome::Deferred));
+        // depth bound: pending(1) + queued(2) + one more deferred = 4 ok,
+        // a fifth in-flight round is a protocol violation
+        let d3 = spec_draft_for(id, 3, &prompt, &spec2, 4);
+        assert!(matches!(c.submit(0.3, o.attachment, d3).unwrap(), SubmitOutcome::Deferred));
+        let d4 = spec_draft_for(id, 4, &prompt, &spec2, 4);
+        assert!(c.submit(0.35, o.attachment, d4).is_err());
+
+        // a stale attachment's cancel is ignored
+        assert!(c.cancel(id, o.attachment + 9, 1).is_empty());
+        // the edge retracts rounds >= 1
+        let dropped = c.cancel(id, o.attachment, 1);
+        assert_eq!(dropped, vec![(id, 1), (id, 2), (id, 3)]);
+        assert_eq!(c.metrics.drafts_cancelled, 3);
+        assert_eq!(c.metrics.draft_tokens_wasted, 12);
+        // idempotent (duplicate Cancel frames are absorbed)
+        assert!(c.cancel(id, o.attachment, 1).is_empty());
+
+        // the head round in the window is untouched and still verifies
+        let out = c.close_window(1.0).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.round, 0);
+    }
+
+    #[test]
+    fn speculative_draft_after_session_finish_is_swallowed_and_counted() {
+        let mut c = core_with_grace(1_000.0);
+        let prompt = vec![1, 70, 71];
+        // max_new 5: one K=4 round (+ bonus) finishes the session
+        let o = c.open_session(&prompt, 5, 0).unwrap();
+        let id = o.session;
+        let d0 = draft_for(id, 0, &prompt, 4);
+        queued(c.submit(0.0, o.attachment, d0.clone()).unwrap());
+        let v = c.close_window(0.1).unwrap().remove(0).1;
+        assert!(v.eos, "session must finish in one round");
+
+        // the in-flight speculative round 1 lands after the finish:
+        // wasted speculation, not a protocol error
+        let assumed = assumed_outcome(&prompt, &d0.tokens);
+        let d1 = spec_draft_for(id, 1, &prompt, &assumed, 4);
+        assert!(matches!(
+            c.submit(0.2, o.attachment, d1).unwrap(),
+            SubmitOutcome::Swallowed
+        ));
+        assert_eq!(c.metrics.drafts_cancelled, 1);
+        assert_eq!(c.metrics.draft_tokens_wasted, 4);
+        // ...and a duplicate of the FINAL round still replays its verdict
+        assert!(matches!(
+            c.submit(0.3, o.attachment, d0).unwrap(),
+            SubmitOutcome::Replay(_)
+        ));
+    }
+
+    #[test]
+    fn queued_rounds_die_with_the_session_at_promotion() {
+        let mut c = core_with_grace(1_000.0);
+        let prompt = vec![1, 70, 71];
+        let o = c.open_session(&prompt, 5, 0).unwrap();
+        let id = o.session;
+        let d0 = draft_for(id, 0, &prompt, 4);
+        queued(c.submit(0.0, o.attachment, d0.clone()).unwrap());
+        // speculative round 1 queued BEFORE the finishing verdict
+        let assumed = assumed_outcome(&prompt, &d0.tokens);
+        let d1 = spec_draft_for(id, 1, &prompt, &assumed, 4);
+        assert!(matches!(c.submit(0.1, o.attachment, d1).unwrap(), SubmitOutcome::Deferred));
+        let v = c.close_window(0.2).unwrap().remove(0).1;
+        assert!(v.eos);
+        // promotion sees the dead session and voids the queue
+        let (decisions, dropped) = c.promote_ready(0.3);
+        assert!(decisions.is_empty());
+        assert_eq!(dropped, vec![(id, 1)]);
+        assert_eq!(c.metrics.drafts_cancelled, 1);
+        assert_eq!(c.metrics.draft_tokens_wasted, 4);
     }
 
     #[test]

@@ -98,6 +98,14 @@ fn ecfg() -> EdgeSessionConfig {
     }
 }
 
+/// Pipelined-mode edge config: two rounds in flight, cancel-on-reject.
+fn pipelined_ecfg() -> EdgeSessionConfig {
+    EdgeSessionConfig {
+        pipeline_depth: 2,
+        ..ecfg()
+    }
+}
+
 fn plan_for(seed: u64, side: FaultSide, disconnects: usize, dup_p: f64, delay_p: f64) -> FaultConfig {
     FaultConfig {
         seed,
@@ -111,8 +119,10 @@ fn plan_for(seed: u64, side: FaultSide, disconnects: usize, dup_p: f64, delay_p:
 
 /// Run `USERS` sessions, each over its own fault-injected (reconnecting)
 /// connection chain against ONE shared verifier; returns the reports and
-/// final metrics.
-fn run_faulty_sessions(
+/// final metrics. `session_cfg` selects sequential vs pipelined mode —
+/// the whole matrix runs in both.
+fn run_faulty_sessions_with(
+    session_cfg: fn() -> EdgeSessionConfig,
     fault_seed: u64,
     side: FaultSide,
     disconnects: usize,
@@ -142,7 +152,7 @@ fn run_faulty_sessions(
             let chan = NetworkProfile::new(NetworkKind::FourG).channel(cfg.seed);
             let plan = FaultPlan::shared(cfg, chan);
             let dial = loopback_fault_dial(verifier.clone(), plan);
-            let ecfg = ecfg();
+            let ecfg = session_cfg();
             tasks.push(tokio::spawn(async move {
                 let mut t = ResumableTransport::connect(dial, &ecfg).await?;
                 let mut draft = SyntheticDraft::new(SEED);
@@ -156,6 +166,16 @@ fn run_faulty_sessions(
         let metrics = verifier.shutdown().await.unwrap();
         (reports, metrics)
     })
+}
+
+fn run_faulty_sessions(
+    fault_seed: u64,
+    side: FaultSide,
+    disconnects: usize,
+    dup_p: f64,
+    delay_p: f64,
+) -> (Vec<EdgeReport>, flexspec::metrics::ServingMetrics) {
+    run_faulty_sessions_with(ecfg, fault_seed, side, disconnects, dup_p, delay_p)
 }
 
 fn assert_matches_reference(reports: &[EdgeReport], reference: &[Vec<i32>], label: &str) {
@@ -229,6 +249,52 @@ fn repeated_disconnects_with_duplicates_and_delays_still_converge() {
         assert_matches_reference(&reports, &reference, "kitchen-sink");
         assert_eq!(metrics.sessions_completed, USERS);
         assert_eq!(metrics.sessions_evicted, 0);
+    }
+}
+
+/// Pipelined rows of the fault matrix (satellite #3): with TWO rounds in
+/// flight, forced disconnects land mid-draft, mid-speculative-draft,
+/// mid-cancel, and mid-verify-reply — and the committed sequences must
+/// STILL be byte-identical to the fault-free SEQUENTIAL simulator
+/// trajectory. The cancel-on-reject machinery (basis checks, Cancel
+/// frames, speculative queues) must be invisible to the tokens under
+/// every link failure mode, because validity is a pure function of the
+/// committed sequence on both ends.
+#[test]
+fn pipelined_disconnects_with_two_rounds_in_flight_resume_identically() {
+    let reference = reference_committed(USERS);
+    for seed in FAULT_SEEDS {
+        for side in [FaultSide::Send, FaultSide::Recv] {
+            let (reports, metrics) =
+                run_faulty_sessions_with(pipelined_ecfg, seed, side, 2, 0.0, 0.0);
+            assert_matches_reference(&reports, &reference, "pipelined-disconnect");
+            assert!(
+                reports.iter().all(|r| r.reattaches >= 1),
+                "seed {seed} {side:?}: every session must see a forced disconnect"
+            );
+            assert_eq!(metrics.sessions_completed, USERS, "seed {seed} {side:?}");
+            assert_eq!(metrics.sessions_evicted, 0, "seed {seed} {side:?}");
+            assert!(
+                reports.iter().map(|r| r.overlapped_waits).sum::<usize>() > 0,
+                "seed {seed} {side:?}: pipelining never engaged"
+            );
+        }
+    }
+}
+
+/// Duplicates (including duplicates of CANCELLED speculative drafts —
+/// the replay/basis machinery must swallow them), channel delays, and a
+/// forced disconnect, all at once, in pipelined mode.
+#[test]
+fn pipelined_duplicates_delays_and_disconnects_converge() {
+    let reference = reference_committed(USERS);
+    for seed in FAULT_SEEDS {
+        let (reports, metrics) =
+            run_faulty_sessions_with(pipelined_ecfg, seed, FaultSide::Any, 1, 0.25, 0.15);
+        assert_matches_reference(&reports, &reference, "pipelined-kitchen-sink");
+        assert_eq!(metrics.sessions_completed, USERS, "seed {seed}");
+        assert_eq!(metrics.sessions_evicted, 0, "seed {seed}");
+        assert_eq!(metrics.sessions_aborted, 0, "seed {seed}");
     }
 }
 

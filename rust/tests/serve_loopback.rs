@@ -356,6 +356,147 @@ fn multiplexed_sessions_match_per_connection_and_simulator() {
     assert!(mux_metrics.batches < mux_metrics.rounds);
 }
 
+/// Tentpole acceptance: pipelined serving (`--pipeline-depth 2`) — one
+/// connection per session AND all sessions muxed on one connection —
+/// commits token sequences BYTE-IDENTICAL to the sequential
+/// `serve_with` trajectory, while its pipeline counters (rounds
+/// pipelined / drafts cancelled / tokens wasted) match the pipelined
+/// simulator's exactly: sim == serve, now including the overlap
+/// schedule.
+#[test]
+fn pipelined_loopback_matches_sequential_trajectory_and_sim_counters() {
+    const USERS: usize = 4;
+    const MAX_NEW: usize = 20;
+
+    let sim_cfg = |depth: usize| ServeConfig {
+        users: USERS,
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed: SEED,
+        pipeline_depth: depth,
+        ..Default::default()
+    };
+    let run_sim = |depth: usize| {
+        let mut backend = evolved_target().unwrap();
+        let mut make =
+            |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(SEED))) };
+        serve_with(
+            &mut backend,
+            &mut make,
+            &prompts(USERS),
+            &JETSON_ORIN,
+            &A800_70B,
+            &NetworkProfile::new(NetworkKind::FourG),
+            &sim_cfg(depth),
+        )
+        .unwrap()
+    };
+
+    // sequential reference + pipelined simulator twin
+    let seq_sim = run_sim(1);
+    let pipe_sim = run_sim(2);
+    assert_eq!(
+        seq_sim.per_session_committed, pipe_sim.per_session_committed,
+        "pipelined sim must not change a single token"
+    );
+    assert!(pipe_sim.rounds_pipelined > 0, "some speculation must land");
+    assert!(pipe_sim.drafts_cancelled > 0, "drifted target must break some");
+
+    let edges = || -> Vec<(Box<dyn DraftSource + Send>, Vec<i32>)> {
+        prompts(USERS)
+            .into_iter()
+            .map(|p| {
+                (
+                    Box::new(SyntheticDraft::new(SEED)) as Box<dyn DraftSource + Send>,
+                    p,
+                )
+            })
+            .collect()
+    };
+    let ecfg = EdgeSessionConfig {
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed: SEED,
+        pipeline_depth: 2,
+        ..Default::default()
+    };
+    let vcfg = || VerifierConfig {
+        window_ms: 40.0,
+        seed: SEED,
+        ..Default::default()
+    };
+
+    let check = |reports: &[EdgeReport], metrics: &flexspec::metrics::ServingMetrics, label: &str| {
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(
+                r.committed, seq_sim.per_session_committed[i],
+                "{label}: pipelined committed sequence diverged (prompt {i})"
+            );
+            assert_eq!(r.rounds, seq_sim.per_session[i].rounds, "{label}: rounds (prompt {i})");
+            // RTT hiding: strictly fewer exposed waits than a
+            // sequential run (which exposes every round's RTT)
+            assert!(
+                r.exposed_waits < r.rounds,
+                "{label}: no RTT hidden (exposed {} of {} rounds, prompt {i})",
+                r.exposed_waits,
+                r.rounds
+            );
+            assert!(r.overlapped_waits > 0, "{label}: nothing overlapped (prompt {i})");
+            assert_eq!(
+                r.exposed_waits + r.overlapped_waits,
+                r.rounds,
+                "{label}: wait accounting broken (prompt {i})"
+            );
+        }
+        // cloud-side pipeline counters match the pipelined simulator
+        assert_eq!(
+            metrics.rounds_pipelined, pipe_sim.rounds_pipelined,
+            "{label}: rounds_pipelined diverged from sim"
+        );
+        assert_eq!(
+            metrics.drafts_cancelled, pipe_sim.drafts_cancelled,
+            "{label}: drafts_cancelled diverged from sim"
+        );
+        assert_eq!(
+            metrics.draft_tokens_wasted, pipe_sim.draft_tokens_wasted,
+            "{label}: draft_tokens_wasted diverged from sim"
+        );
+        // ...and the edge-side tallies agree with the cloud's
+        assert_eq!(
+            reports.iter().map(|r| r.rounds_pipelined).sum::<usize>(),
+            metrics.rounds_pipelined,
+            "{label}: edge/cloud pipelined tallies disagree"
+        );
+        assert_eq!(
+            reports.iter().map(|r| r.drafts_cancelled).sum::<usize>(),
+            metrics.drafts_cancelled,
+            "{label}: edge/cloud cancel tallies disagree"
+        );
+    };
+
+    // --- one connection per session ----------------------------------
+    let (per_conn, metrics) = rt()
+        .block_on(serve_loopback(
+            vcfg(),
+            || Ok(Box::new(evolved_target()?) as Box<dyn VerifyBackend>),
+            edges(),
+            ecfg.clone(),
+        ))
+        .unwrap();
+    check(&per_conn, &metrics, "per-conn");
+
+    // --- all sessions muxed on ONE connection ------------------------
+    let (muxed, mux_metrics) = rt()
+        .block_on(serve_loopback_mux(
+            vcfg(),
+            || Ok(Box::new(evolved_target()?) as Box<dyn VerifyBackend>),
+            edges(),
+            ecfg,
+        ))
+        .unwrap();
+    check(&muxed, &mux_metrics, "mux");
+}
+
 #[test]
 fn wire_version_mismatch_is_rejected() {
     rt().block_on(async {
