@@ -12,9 +12,10 @@ use flexspec::protocol::frame::{CancelMsg, Frame, FrameDecoder, FrameKind};
 use flexspec::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
 use flexspec::runtime::Registry;
 use flexspec::serve::{
-    PipelinedDrafter, SessionCore, SyntheticDraft, SyntheticTarget, VerifyBackend,
+    BatchVerifyReq, PipelinedDrafter, SessionCore, SubmitOutcome, SyntheticDraft, SyntheticTarget,
+    VerifierConfig, VerifierCore, VerifyBackend,
 };
-use flexspec::util::bench::{black_box, Group};
+use flexspec::util::bench::{black_box, maybe_write_json_report, Group};
 use flexspec::util::rng::SplitMix64;
 
 fn main() -> anyhow::Result<()> {
@@ -228,12 +229,121 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- serve: batched verification executor -------------------------
+    // (the tentpole's amortization claim, measurable: one stacked
+    // verify_batch over the window vs the per-session loop, at window
+    // sizes 1/4/8 with ragged strides — plus the cost of turning a
+    // draft away at a full admission queue, which must stay state-free
+    // and cheap since a saturated cloud pays it on every deferral)
+    let mut gb = Group::new("serve: batched verification executor").with_budget(80.0);
+    for &w in &[1usize, 4, 8] {
+        let mut target = SyntheticTarget::new(9);
+        let mut draft = SyntheticDraft::new(9);
+        let mut brng = SplitMix64::new(0);
+        let committed: Vec<Vec<i32>> = (0..w)
+            .map(|i| {
+                let mut c = vec![1, 100 + i as i32, 120 + 2 * i as i32];
+                let p = draft.propose(&c, 6, 0.0, 1.0, &mut brng).unwrap();
+                c.extend(p.tokens);
+                c
+            })
+            .collect();
+        for (i, c) in committed.iter().enumerate() {
+            target.start_session(i as u32 + 1, c).unwrap();
+        }
+        // ragged strides K ∈ 1..=8 across the window
+        let drafts: Vec<Vec<i32>> = committed
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                draft
+                    .propose(c, 1 + i % 8, 0.0, 1.0, &mut brng)
+                    .unwrap()
+                    .tokens
+            })
+            .collect();
+        gb.add(&format!("verify window={w}: per-session loop"), || {
+            for i in 0..w {
+                let v = target
+                    .verify_block(
+                        i as u32 + 1,
+                        &committed[i],
+                        &drafts[i],
+                        &[],
+                        VerifyMode::Greedy,
+                        0.0,
+                        1.0,
+                        &mut brng,
+                    )
+                    .unwrap();
+                black_box(v);
+            }
+        });
+        gb.add(&format!("verify window={w}: stacked verify_batch"), || {
+            let reqs: Vec<BatchVerifyReq> = committed
+                .iter()
+                .zip(&drafts)
+                .enumerate()
+                .map(|(i, (c, d))| BatchVerifyReq {
+                    id: i as u32 + 1,
+                    committed: c,
+                    draft: d,
+                    mode: VerifyMode::Greedy,
+                })
+                .collect();
+            black_box(target.verify_batch(&reqs, 0.0, 1.0, &mut brng).unwrap());
+        });
+    }
+    {
+        let cfg = VerifierConfig {
+            admission_queue: 1,
+            ..Default::default()
+        };
+        let mut core = VerifierCore::new(cfg, Box::new(SyntheticTarget::new(9)));
+        let pa = vec![1, 70, 71];
+        let pb = vec![1, 80, 81];
+        let oa = core.open_session(&pa, 64, 0).unwrap();
+        let ob = core.open_session(&pb, 64, 0).unwrap();
+        let mk = |session: u32, committed: &[i32]| {
+            let mut d = SyntheticDraft::new(9);
+            let mut r = SplitMix64::new(0);
+            let p = d.propose(committed, 4, 0.0, 1.0, &mut r).unwrap();
+            DraftMsg {
+                session,
+                round: 0,
+                tokens: p.tokens,
+                chosen_probs: vec![],
+                mode: VerifyMode::Greedy,
+                wire: WireFormat::Compact,
+                basis_len: 0,
+                spec: vec![],
+            }
+        };
+        // a's round fills the bound; every further submit is deferred
+        core.submit(0.0, oa.attachment, mk(oa.session, &pa), true)
+            .unwrap();
+        let busy_draft = mk(ob.session, &pb);
+        gb.add("admission: queue-full submit -> Busy (state-free)", || {
+            match core
+                .submit(0.1, ob.attachment, busy_draft.clone(), true)
+                .unwrap()
+            {
+                SubmitOutcome::Busy { retry_after_ms } => {
+                    black_box(retry_after_ms);
+                }
+                other => panic!("expected Busy, got {other:?}"),
+            }
+        });
+    }
+
     // ---- PJRT execution paths (need artifacts) ------------------------
     let Ok(reg) = Registry::open_default() else {
         println!("\n(artifacts missing — run `make artifacts` for the PJRT benches)");
+        maybe_write_json_report(&[&g, &gf, &gp, &gb])?;
         return Ok(());
     };
     if !reg.manifest.weights.contains_key("draft_flex_llama2t") {
+        maybe_write_json_report(&[&g, &gf, &gp, &gb])?;
         return Ok(());
     }
     let mut g2 = Group::new("PJRT execution paths").with_budget(2000.0);
@@ -321,5 +431,6 @@ fn main() -> anyhow::Result<()> {
         target.stats.tokens_processed.get(),
         target.stats.exec_nanos.get() as f64 / 1e6,
     );
+    maybe_write_json_report(&[&g, &gf, &gp, &gb, &g2])?;
     Ok(())
 }

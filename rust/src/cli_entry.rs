@@ -30,7 +30,7 @@ const VALUE_OPTS: &[&str] = &[
     "max-new", "dataset", "samples", "arrival-ms", "artifacts",
     "bind", "addr", "backend", "sessions", "k", "draft", "version",
     "deploy-version", "deploy-after", "resume-grace", "fault-seed",
-    "fault-disconnects", "pipeline-depth",
+    "fault-disconnects", "pipeline-depth", "admission-queue", "tier-weights",
 ];
 
 pub fn cli_main() -> Result<()> {
@@ -64,10 +64,12 @@ pub fn cli_main() -> Result<()> {
                  \x20 flexspec serve [--users N] [--network 5g|4g|wifi] [--window MS]\n\
                  \x20 flexspec serve-cloud [--bind 127.0.0.1:7411] [--backend synthetic|engine]\n\
                  \x20\x20\x20\x20 [--sessions N] [--window MS] [--max-batch N] [--seed S]\n\
+                 \x20\x20\x20\x20 [--admission-queue N]  (pending-draft bound; 0=unbounded,\n\
+                 \x20\x20\x20\x20\x20 effective values 1..max-batch — the window drains at max-batch)\n\
                  \x20\x20\x20\x20 [--resume-grace MS] [--deploy-version NAME --deploy-after N]\n\
                  \x20 flexspec serve-edge [--addr 127.0.0.1:7411] [--sessions N] [--max-new N]\n\
                  \x20\x20\x20\x20 [--draft synthetic|pld] [--k K|0=adaptive] [--seed S]\n\
-                 \x20\x20\x20\x20 [--mux] [--fault-seed S] [--fault-disconnects N]\n\
+                 \x20\x20\x20\x20 [--mux] [--tier-weights 3,1,...] [--fault-seed S] [--fault-disconnects N]\n\
                  \x20\x20\x20\x20 [--pipeline-depth D]  (1=sequential, >=2 pipelined, 0=auto policy)\n\
                  \x20 flexspec trace <5g|4g|wifi> <out.csv> [--samples N]\n\
                  Run `make artifacts` first to build the AOT model zoo."
@@ -146,6 +148,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         // pipelining needs a pure draft source; the PJRT model draft
         // falls back to sequential (see ServeConfig::pipeline_depth)
         pipeline_depth: args.get_usize("pipeline-depth", 1),
+        admission_queue: args.get_usize("admission-queue", 0),
         ..Default::default()
     };
     let net = NetworkProfile::new(network);
@@ -156,6 +159,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     println!("  throughput       {:.1} tok/s", rep.throughput_tok_s());
     println!("  mean batch size  {:.2} ({} batches)", rep.mean_batch, rep.batches);
     println!("  T_base amortized {:.0} ms saved", rep.t_base_saved_ms);
+    println!("  busy deferrals   {}", rep.drafts_busy_deferred);
     println!("  request latency  p50 {:.0} ms  p95 {:.0} ms", rep.request_latency.p50(), rep.request_latency.p95());
     println!("  per-token        p50 {:.0} ms  p95 {:.0} ms", rep.per_token_latency.p50(), rep.per_token_latency.p95());
     println!("  acceptance       {:.2}", rep.acceptance.mean());
@@ -180,6 +184,7 @@ fn serve_cloud_cmd(args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 8),
         seed,
         resume_grace_ms: args.get_f64("resume-grace", 10_000.0),
+        admission_queue: args.get_usize("admission-queue", 0),
         ..Default::default()
     };
     let sessions_target = args.get_usize("sessions", 0);
@@ -316,6 +321,18 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 1);
     let k = args.get_usize("k", 0);
     let mux = args.flag("mux");
+    // per-tier uplink weights for muxed sessions, cycled across them
+    // (e.g. --tier-weights 3,1 alternates premium/standard); empty =
+    // every stream at the default tier (weight 1)
+    let tier_weights: Vec<u32> = args
+        .get("tier-weights")
+        .map(|s| {
+            s.split(',')
+                .filter_map(|w| w.trim().parse().ok())
+                .filter(|&w| w > 0)
+                .collect()
+        })
+        .unwrap_or_default();
     let fault_seed = args.get_u64("fault-seed", 0); // 0 = no faults
     let fault_disconnects = args.get_usize("fault-disconnects", 1);
     let draft_kind = args.get_or("draft", "synthetic");
@@ -358,9 +375,13 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
                 ecfg.clone()
             };
             let mut tasks = Vec::new();
-            for _ in 0..n {
+            for i in 0..n {
                 let prompt = gen.next_request().prompt;
-                let mut stream = emux.open_stream();
+                let mut stream = if tier_weights.is_empty() {
+                    emux.open_stream()
+                } else {
+                    emux.open_stream_tier(tier_weights[i % tier_weights.len()])
+                };
                 let ecfg = ecfg.clone();
                 let dk = draft_kind.clone();
                 tasks.push(tokio::spawn(async move {
@@ -414,7 +435,7 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
         &format!("edge sessions vs {addr} ({draft_kind} draft, {mode})"),
         &[
             "session", "tokens", "rounds", "accept", "mean K", "resumes", "piped", "cancelled",
-            "rtt p50 ms", "wall ms",
+            "busy", "rtt p50 ms", "wall ms",
         ],
     );
     let mut failures = 0usize;
@@ -430,6 +451,7 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
                     r.resumes.to_string(),
                     r.rounds_pipelined.to_string(),
                     r.drafts_cancelled.to_string(),
+                    r.busy_retries.to_string(),
                     format!("{:.2}", r.rtt_ms.p50()),
                     format!("{:.0}", r.wall_ms),
                 ]);

@@ -9,7 +9,7 @@
 //! position-pointer rewind (§IV-C).
 
 use crate::protocol::VerifyMode;
-use crate::runtime::model::KvState;
+use crate::runtime::model::{BatchFwdItem, KvState};
 use crate::runtime::registry::TargetVersion;
 use crate::runtime::sampling::{self, VerifyOutcome};
 use crate::runtime::{Registry, VerifyRuntime};
@@ -36,6 +36,17 @@ pub struct CloudVerdict {
     /// the KV yet — it is next round's pending token.
     pub committed_tokens: usize,
     pub eos: bool,
+}
+
+/// One member of a stacked greedy verification call — the coordinator-
+/// layer mirror of `serve::backend::BatchVerifyReq`, kept separate so
+/// the runtime layer never depends on serve types.
+#[derive(Debug, Clone, Copy)]
+pub struct GreedyBatchReq<'a> {
+    pub id: u32,
+    /// Full committed sequence (prompt + generated).
+    pub committed: &'a [i32],
+    pub draft: &'a [i32],
 }
 
 impl CloudEngine {
@@ -206,6 +217,101 @@ impl CloudEngine {
             committed_tokens,
             eos,
         })
+    }
+
+    /// Verify one planner bucket of greedy drafts in a SINGLE stacked
+    /// runtime call: plan every member's block, execute all forwards
+    /// through `ModelRuntime::forward_block_batched` (one engine
+    /// dispatch), then run the fused verify kernel + KV commit/rollback
+    /// per member, in request order. Byte-identical to per-member
+    /// [`CloudEngine::verify`] calls — stacking amortizes the fixed
+    /// per-call cost, it never changes a verdict.
+    ///
+    /// Session ids must be distinct within one call. On error the whole
+    /// batch is poisoned (members' KV sessions may already be consumed);
+    /// the serving layer treats a failed batch as fatal to the verifier
+    /// thread, exactly like a failed single verify.
+    pub fn verify_batch_greedy(
+        &mut self,
+        reqs: &[GreedyBatchReq<'_>],
+    ) -> Result<Vec<CloudVerdict>> {
+        // ---- plan: pull each member's KV out of the session map so the
+        // stacked forward can hold every mutable KV at once ------------
+        let rt = &self.version.runtime;
+        let mut kvs: Vec<KvState> = Vec::with_capacity(reqs.len());
+        let mut blocks: Vec<Vec<i32>> = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let kv = self.sessions.remove(&r.id).ok_or_else(|| {
+                anyhow::anyhow!("no session {} (or duplicate id in batch)", r.id)
+            })?;
+            let pending = &r.committed[kv.pos.min(r.committed.len())..];
+            if pending.is_empty() {
+                bail!("session {}: nothing pending (protocol violation)", r.id);
+            }
+            let block_len = pending.len() + r.draft.len();
+            if block_len > rt.block {
+                bail!(
+                    "block {} exceeds {} (pending {} + k {})",
+                    block_len,
+                    rt.block,
+                    pending.len(),
+                    r.draft.len()
+                );
+            }
+            let mut toks = Vec::with_capacity(block_len);
+            toks.extend_from_slice(pending);
+            toks.extend_from_slice(r.draft);
+            blocks.push(toks);
+            kvs.push(kv);
+        }
+
+        // ---- execute: one stacked forward for the whole bucket -------
+        let mut items: Vec<BatchFwdItem> = blocks
+            .iter()
+            .zip(kvs.iter_mut())
+            .map(|(toks, kv)| BatchFwdItem {
+                tokens: toks.as_slice(),
+                kv,
+            })
+            .collect();
+        let outs = rt.forward_block_batched(Some(&self.version.lora), &mut items)?;
+        drop(items);
+
+        // ---- apply: fused verify kernel + commit per member ----------
+        let vocab = rt.arch.vocab;
+        let mut verdicts = Vec::with_capacity(reqs.len());
+        for ((r, mut kv), out) in reqs.iter().zip(kvs).zip(outs) {
+            let pending_len = r.committed.len() - kv.pos;
+            let k = r.draft.len();
+            let first = pending_len - 1;
+            let rows = &out.logits[first * vocab..(first + k + 1) * vocab];
+            let mut padded = vec![0f32; self.verify_rt.block * vocab];
+            padded[..rows.len()].copy_from_slice(rows);
+            let mut dtoks = vec![0i32; self.verify_rt.block - 1];
+            dtoks[..k].copy_from_slice(r.draft);
+            let (tau, corr, _greedy) = self.verify_rt.verify(&padded, &dtoks, k)?;
+            let outcome = VerifyOutcome {
+                tau,
+                correction: corr,
+            };
+            // commit pending + accepted prefix; rewind the rest (the
+            // position-pointer rewind IS the KV rollback)
+            let committed_tokens = pending_len + outcome.tau;
+            kv.pos += committed_tokens;
+            self.rounds += 1;
+            if outcome.tau < k {
+                self.rollbacks += 1;
+            }
+            let eos = outcome.correction == self.eos
+                || r.draft[..outcome.tau].iter().any(|&t| t == self.eos);
+            self.sessions.insert(r.id, kv);
+            verdicts.push(CloudVerdict {
+                outcome,
+                committed_tokens,
+                eos,
+            });
+        }
+        Ok(verdicts)
     }
 }
 

@@ -22,7 +22,7 @@ use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
 use crate::runtime::ModelRuntime;
 #[cfg(test)]
 use crate::runtime::Registry;
-use crate::serve::backend::VerifyBackend;
+use crate::serve::backend::{BatchVerifyReq, VerifyBackend};
 use crate::serve::session::{BatchDecision, BatchWindow, SessionCore, SessionOutcome};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::Summary;
@@ -133,6 +133,17 @@ pub struct ServeConfig {
     /// way, and with `fixed_k` the pipeline counters match the serving
     /// stack's exactly. Requires a pure draft source.
     pub pipeline_depth: usize,
+    /// Admission-control mirror of `serve::VerifierConfig::
+    /// admission_queue`: a draft arriving while this many drafts are
+    /// already pending verification is turned away (the serving
+    /// stack's `Busy` frame) and re-arrives after one batching window.
+    /// Committed sequences are unchanged — drafts are pure functions of
+    /// the committed prefix, so deferral only moves virtual wall time.
+    /// MUST match the serving config for sim ↔ serve comparability.
+    /// 0 (default) = unbounded; effective values are `1..max_batch`
+    /// (the window drains at `max_batch`, so larger bounds never
+    /// trigger — see the serving-side doc).
+    pub admission_queue: usize,
 }
 
 impl Default for ServeConfig {
@@ -150,6 +161,7 @@ impl Default for ServeConfig {
             fixed_k: None,
             capacity_floor: 10,
             pipeline_depth: 1,
+            admission_queue: 0,
         }
     }
 }
@@ -176,6 +188,9 @@ pub struct ServeReport {
     pub drafts_cancelled: usize,
     /// Draft tokens of retracted speculative rounds.
     pub draft_tokens_wasted: usize,
+    /// Drafts turned away at the admission-queue bound and re-arrived
+    /// after the retry horizon (the serving stack's `Busy` deferrals).
+    pub drafts_busy_deferred: usize,
     /// Per-session final counters, in prompt order (for cross-checking
     /// against loopback/TCP serving runs).
     pub per_session: Vec<SessionOutcome>,
@@ -366,6 +381,11 @@ pub fn serve_with(
 
     let mut window = BatchWindow::new(cfg.window_ms, cfg.max_batch);
     let mut report = ServeReport::default();
+    // Greedy batched verification ignores the sampling stream entirely
+    // (both the synthetic target and the stacked engine path); this rng
+    // exists only to satisfy the verify_batch signature. Stochastic
+    // mode never reaches it — it keeps the per-session streams below.
+    let mut batch_rng = SplitMix64::new(cfg.seed ^ 0x0BA7_C4E6);
     #[allow(unused_assignments)]
     let mut now = 0.0f64;
 
@@ -385,15 +405,34 @@ pub fn serve_with(
                 )?;
                 push(&mut heap, arrive, Event::RequestArrives(id), &mut seq);
             }
-            Event::RequestArrives(id) => match window.offer(now, id) {
-                BatchDecision::CloseNow => {
-                    push(&mut heap, now, Event::BatchClose(window.epoch()), &mut seq)
+            Event::RequestArrives(id) => {
+                // admission-control mirror: at the backlog bound the
+                // draft is turned away (a Busy on the wire) and
+                // re-arrives after one batching window — the same
+                // retry horizon the live edge backs off to. The head
+                // promotion shortcut of the serving stack has no sim
+                // twin, so under saturation only COMMITTED SEQUENCES
+                // (not busy counts) are comparable sim ↔ serve.
+                if cfg.admission_queue > 0 && window.len() >= cfg.admission_queue {
+                    report.drafts_busy_deferred += 1;
+                    push(
+                        &mut heap,
+                        now + cfg.window_ms.max(1.0),
+                        Event::RequestArrives(id),
+                        &mut seq,
+                    );
+                    continue;
                 }
-                BatchDecision::CloseAt(t) => {
-                    push(&mut heap, t, Event::BatchClose(window.epoch()), &mut seq)
+                match window.offer(now, id) {
+                    BatchDecision::CloseNow => {
+                        push(&mut heap, now, Event::BatchClose(window.epoch()), &mut seq)
+                    }
+                    BatchDecision::CloseAt(t) => {
+                        push(&mut heap, t, Event::BatchClose(window.epoch()), &mut seq)
+                    }
+                    BatchDecision::Queued => {}
                 }
-                BatchDecision::Queued => {}
-            },
+            }
             Event::BatchClose(epoch) => {
                 if epoch != window.epoch() {
                     continue; // stale timer from an already-drained window
@@ -405,24 +444,55 @@ pub fn serve_with(
                 report.batches += 1;
                 report.mean_batch += members.len() as f64;
 
-                // batched verification: ONE T_base + per-token marginals
-                let mut total_tokens = 0usize;
-                let mut verdicts = Vec::new();
+                // take every member's pending draft, then verify the
+                // whole window through the SAME batched executor entry
+                // the live verifier drives (`verify_batch`: planner
+                // buckets → stacked [B, K] forwards, one amortized
+                // T_base per bucket). Stochastic mode keeps the
+                // sequential loop — it consumes per-session sampling
+                // streams in member order, which stacking would break.
+                let mut taken: Vec<(u32, Vec<i32>, Vec<Vec<f32>>)> =
+                    Vec::with_capacity(members.len());
                 for &id in &members {
                     let s = &mut sessions[(id - 1) as usize];
                     let (tokens, _probs, rows) = s.pending.take().unwrap();
-                    let v = backend.verify_block(
-                        id,
-                        &s.core.committed,
-                        &tokens,
-                        &rows,
-                        cfg.mode,
-                        cfg.temperature,
-                        cfg.top_p,
-                        &mut s.rng,
-                    )?;
-                    total_tokens += tokens.len() + 1;
-                    verdicts.push((id, tokens, v));
+                    taken.push((id, tokens, rows));
+                }
+                let mut total_tokens = 0usize;
+                let mut verdicts = Vec::with_capacity(taken.len());
+                if cfg.mode == VerifyMode::Greedy {
+                    let reqs: Vec<BatchVerifyReq> = taken
+                        .iter()
+                        .map(|(id, tokens, _)| BatchVerifyReq {
+                            id: *id,
+                            committed: &sessions[(*id - 1) as usize].core.committed,
+                            draft: tokens,
+                            mode: cfg.mode,
+                        })
+                        .collect();
+                    let vs =
+                        backend.verify_batch(&reqs, cfg.temperature, cfg.top_p, &mut batch_rng)?;
+                    drop(reqs);
+                    for ((id, tokens, _rows), v) in taken.into_iter().zip(vs) {
+                        total_tokens += tokens.len() + 1;
+                        verdicts.push((id, tokens, v));
+                    }
+                } else {
+                    for (id, tokens, rows) in taken {
+                        let s = &mut sessions[(id - 1) as usize];
+                        let v = backend.verify_block(
+                            id,
+                            &s.core.committed,
+                            &tokens,
+                            &rows,
+                            cfg.mode,
+                            cfg.temperature,
+                            cfg.top_p,
+                            &mut s.rng,
+                        )?;
+                        total_tokens += tokens.len() + 1;
+                        verdicts.push((id, tokens, v));
+                    }
                 }
                 let t_batch = cloud_profile.t_base_ms
                     + total_tokens as f64 * cloud_profile.delta_per_token_ms;

@@ -150,10 +150,24 @@ pub struct ServingMetrics {
     /// Draft tokens of discarded speculative rounds — uplink air spent
     /// on speculation that did not land.
     pub draft_tokens_wasted: usize,
+    /// Pending drafts skipped at window close because their session
+    /// detached (or was torn down) mid-window. Counted so these drafts
+    /// never vanish without a trace.
+    pub drafts_orphaned: usize,
+    /// Drafts turned away with a `Busy` deferral because the pending-
+    /// draft queue was at its admission bound (wire v4). Each is one
+    /// edge retry; committed tokens never change.
+    pub drafts_busy: usize,
+    /// Finished-session residues reclaimed by the periodic sweep after
+    /// their resume-grace window expired.
+    pub residues_expired: usize,
     pub rounds: usize,
     pub batches: usize,
     /// Verify requests per closed batch.
     pub batch_occupancy: Summary,
+    /// Pending-draft backlog observed at each window close (the
+    /// admission queue's operating depth).
+    pub queue_depth: Summary,
     /// Committed tokens (accepted + correction/bonus) across sessions.
     pub tokens_committed: usize,
     pub drafted: usize,
@@ -207,9 +221,10 @@ impl ServingMetrics {
         format!(
             "{title}\n\
              \x20 sessions         {} completed / {} opened ({} aborted, {} handshakes rejected)\n\
-             \x20 resume           {} parked, {} resumed, {} evicted, {} verdicts replayed\n\
+             \x20 resume           {} parked, {} resumed, {} evicted, {} verdicts replayed, {} residues expired\n\
              \x20 pipeline         {} rounds pipelined, {} drafts cancelled, {} draft tokens wasted\n\
              \x20 rounds           {} in {} batches (mean occupancy {:.2})\n\
+             \x20 admission        {} busy deferrals, {} drafts orphaned, queue depth mean {:.2} / p95 {:.0}\n\
              \x20 tokens           {} committed, acceptance {:.3} ({} / {} drafted)\n\
              \x20 hot-swaps        {}\n\
              \x20 air bytes        {} up / {} down",
@@ -221,12 +236,17 @@ impl ServingMetrics {
             self.sessions_resumed,
             self.sessions_evicted,
             self.verdicts_replayed,
+            self.residues_expired,
             self.rounds_pipelined,
             self.drafts_cancelled,
             self.draft_tokens_wasted,
             self.rounds,
             self.batches,
             self.mean_batch(),
+            self.drafts_busy,
+            self.drafts_orphaned,
+            self.queue_depth.mean(),
+            self.queue_depth.p95(),
             self.tokens_committed,
             self.acceptance_rate(),
             self.accepted,
@@ -329,14 +349,19 @@ mod tests {
         m.sessions_resumed = 1;
         m.sessions_evicted = 1;
         m.verdicts_replayed = 3;
+        m.residues_expired = 1;
         m.rounds_pipelined = 4;
         m.drafts_cancelled = 2;
         m.draft_tokens_wasted = 8;
+        m.drafts_busy = 5;
+        m.drafts_orphaned = 1;
+        m.queue_depth.add(2.0);
         let r = m.render("serving");
         assert!(r.contains("6 committed"));
         assert!(r.contains("hot-swaps"));
-        assert!(r.contains("2 parked, 1 resumed, 1 evicted, 3 verdicts replayed"));
+        assert!(r.contains("2 parked, 1 resumed, 1 evicted, 3 verdicts replayed, 1 residues expired"));
         assert!(r.contains("4 rounds pipelined, 2 drafts cancelled, 8 draft tokens wasted"));
+        assert!(r.contains("5 busy deferrals, 1 drafts orphaned"));
     }
 
     #[test]

@@ -67,14 +67,19 @@ use anyhow::{bail, Result};
 /// resume tokens). v3: pipelined drafting — speculative-basis-tagged
 /// `Draft` payloads (`DraftMsg::{basis_len, spec}`) and the `Cancel`
 /// frame that retracts in-flight speculative rounds after a partial
-/// acceptance.
-pub const WIRE_VERSION: u16 = 3;
+/// acceptance. v4: admission control — the cloud may answer a draft
+/// with a `Busy` frame instead of a verdict when its pending-draft
+/// queue is saturated; the edge retries the identical draft after
+/// `retry_after_ms` (with backoff), so committed tokens never change.
+pub const WIRE_VERSION: u16 = 4;
 
 /// Oldest peer version the handshake still accepts. A v2 peer never
 /// sends spec-tagged drafts or `Cancel` frames, and the cloud sends it
-/// nothing new, so v3 clouds serve v2 edges unchanged; the negotiated
-/// version in `HelloAck` tells a v3 edge whether pipelining is allowed
-/// on this connection.
+/// nothing new, so v4 clouds serve v2/v3 edges unchanged; the
+/// negotiated version in `HelloAck` tells the edge whether pipelining
+/// (>= 3) is allowed on the connection and tells the cloud whether the
+/// peer understands `Busy` (>= 4) — drafts from older peers are always
+/// admitted because they could not act on a deferral.
 pub const MIN_WIRE_VERSION: u16 = 2;
 
 /// Upper bound on one frame's body (kind + stream + payload). Prompts are
@@ -120,6 +125,13 @@ pub enum FrameKind {
     /// stale drafts autonomously by basis check, so a lost `Cancel` can
     /// never change the committed sequence.
     Cancel = 10,
+    /// Cloud → edge (wire v4): the pending-draft queue is saturated and
+    /// this round was NOT admitted — retry the identical draft after
+    /// `retry_after_ms`. Pure backpressure: the draft left no state
+    /// behind, and a pure draft source re-produces byte-identical
+    /// tokens from the same committed prefix, so deferral can never
+    /// change a committed token (it only moves wall time).
+    Busy = 11,
 }
 
 impl FrameKind {
@@ -135,6 +147,7 @@ impl FrameKind {
             8 => FrameKind::Resume,
             9 => FrameKind::ResumeAck,
             10 => FrameKind::Cancel,
+            11 => FrameKind::Busy,
             _ => return None,
         })
     }
@@ -630,6 +643,44 @@ impl CancelMsg {
     }
 }
 
+/// Cloud → edge (wire v4): admission-control deferral for one draft
+/// round. Sent INSTEAD of a `Verify` verdict when the cloud's bounded
+/// pending-draft queue is full at submit time; the edge re-sends the
+/// identical draft after `retry_after_ms` (exponential backoff on
+/// repeat). Only emitted on connections that negotiated v4 — older
+/// peers are always admitted, because a deferral they cannot parse
+/// would strand their round forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BusyMsg {
+    /// The deferred round (matches the draft's round number).
+    pub round: u32,
+    /// Suggested wait before retrying — the cloud's batching window, the
+    /// horizon at which queue slots free up.
+    pub retry_after_ms: u32,
+}
+
+impl BusyMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8);
+        write_u32(&mut out, self.round);
+        write_u32(&mut out, self.retry_after_ms);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<BusyMsg> {
+        let mut pos = 0usize;
+        let round = read_u32(buf, &mut pos)?;
+        let retry_after_ms = read_u32(buf, &mut pos)?;
+        if pos != buf.len() {
+            bail!("busy: trailing bytes");
+        }
+        Ok(BusyMsg {
+            round,
+            retry_after_ms,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -778,6 +829,7 @@ mod tests {
             FrameKind::Resume,
             FrameKind::ResumeAck,
             FrameKind::Cancel,
+            FrameKind::Busy,
         ] {
             assert!(check_stream(kind, 0, bound).is_err(), "{kind:?} on stream 0");
         }
@@ -949,6 +1001,63 @@ mod tests {
         let nack = hello_response(&old);
         assert!(!nack.accepted);
         assert!(nack.reason.contains("mismatch"), "{}", nack.reason);
+    }
+
+    #[test]
+    fn handshake_negotiates_v3_peer_below_busy_support() {
+        // a v3 peer (pre-admission-control) is accepted; the agreed
+        // version tells the cloud it must never send Busy frames there
+        let h = Hello {
+            wire_version: 3,
+            mode: VerifyMode::Greedy,
+            k_max: 8,
+        };
+        let ack = hello_response(&Hello::decode(&h.encode()).unwrap());
+        assert!(ack.accepted);
+        assert_eq!(ack.wire_version, 3);
+    }
+
+    #[test]
+    fn busy_roundtrips_and_rejects_garbage() {
+        let b = BusyMsg {
+            round: 19,
+            retry_after_ms: 12,
+        };
+        assert_eq!(BusyMsg::decode(&b.encode()).unwrap(), b);
+        assert!(BusyMsg::decode(&b.encode()[..5]).is_err(), "truncated");
+        let mut long = b.encode();
+        long.push(0);
+        assert!(BusyMsg::decode(&long).is_err(), "trailing bytes");
+        assert_eq!(FrameKind::from_u8(11), Some(FrameKind::Busy));
+        assert!(!FrameKind::Busy.is_control());
+        assert!(!FrameKind::Busy.opens_stream());
+
+        // framed + split at every byte, like every other session frame
+        prop::check(20, |rng| {
+            let msg = BusyMsg {
+                round: rng.next_u64() as u32,
+                retry_after_ms: rng.next_range(10_000) as u32,
+            };
+            let frame = Frame::on(
+                1 + rng.next_u64() as u32 % 1000,
+                FrameKind::Busy,
+                msg.encode(),
+            );
+            let bytes = frame.encode();
+            for split in 0..=bytes.len() {
+                let mut dec = FrameDecoder::new();
+                dec.push(&bytes[..split]);
+                dec.push(&bytes[split..]);
+                let f = dec
+                    .next_frame()
+                    .map_err(|e| e.to_string())?
+                    .ok_or("no frame after full input")?;
+                prop::assert_prop(f.kind == FrameKind::Busy, "kind survived")?;
+                let back = BusyMsg::decode(&f.payload).map_err(|e| e.to_string())?;
+                prop::assert_prop(back == msg, format!("busy mismatch at split {split}"))?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -82,6 +82,22 @@ impl Engine {
         let elems = lit.decompose_tuple()?;
         Ok(elems)
     }
+
+    /// Execute one compiled entry point over MANY argument sets through
+    /// a single engine call, returning outputs in input order — the
+    /// seam the batched verification executor drives (one call per
+    /// planner bucket). The prebuilt PJRT shim runs the sets
+    /// back-to-back on the device, amortizing the per-call host
+    /// dispatch here; a true stacked `[B, ...]` executable (one XLA
+    /// program over the whole bucket) replaces ONLY this function, so
+    /// no caller changes when it lands.
+    pub fn run_batched(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        argsets: &[Vec<&xla::PjRtBuffer>],
+    ) -> Result<Vec<Vec<xla::Literal>>> {
+        argsets.iter().map(|args| self.run_b(exe, args)).collect()
+    }
 }
 
 #[cfg(test)]

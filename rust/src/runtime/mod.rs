@@ -12,5 +12,5 @@ pub mod weights;
 
 pub use engine::Engine;
 pub use manifest::{ArchInfo, DomainInfo, Manifest, WeightInfo};
-pub use model::{BlockOut, KvState, ModelRuntime, VerifyRuntime, WeightSet};
+pub use model::{BatchFwdItem, BlockOut, KvState, ModelRuntime, VerifyRuntime, WeightSet};
 pub use registry::{Registry, TargetVersion};

@@ -112,6 +112,9 @@ impl KvState {
 pub struct ModelStats {
     pub block_calls: Cell<u64>,
     pub prefill_calls: Cell<u64>,
+    /// Stacked entries into `forward_block_batched` (each covers one or
+    /// more `block_calls` rows in a single engine dispatch).
+    pub stacked_calls: Cell<u64>,
     pub tokens_processed: Cell<u64>,
     pub exec_nanos: Cell<u64>,
 }
@@ -126,6 +129,13 @@ pub struct ModelRuntime {
     pub block: usize,
     pub prefill_chunk: usize,
     pub stats: ModelStats,
+}
+
+/// One row of a stacked block forward (`forward_block_batched`): the
+/// block tokens plus the session's own KV cache.
+pub struct BatchFwdItem<'a> {
+    pub tokens: &'a [i32],
+    pub kv: &'a mut KvState,
 }
 
 /// Result of one block forward: per-row logits and the updated cache.
@@ -270,6 +280,101 @@ impl ModelRuntime {
         assert!(commit <= tokens.len());
         kv.pos = pos + commit;
         Ok(out)
+    }
+
+    /// Stacked block forward over several independent KV sessions: the
+    /// batched verification executor's runtime entry. Validates every
+    /// row, then executes all of them through ONE `Engine::run_batched`
+    /// call, in row order. KV positions are NOT advanced — verification
+    /// decides the commit, and the caller performs the position-pointer
+    /// rewind exactly as with `forward_block(.., commit = 0)`.
+    ///
+    /// Buffers are still created per row: the published xla crate's
+    /// `execute_b` donates its inputs, so rows cannot share uploaded
+    /// weight buffers (see the `WeightSet` doc comment on the measured
+    /// leak/crash tradeoffs). What this entry amortizes today is the
+    /// per-call host dispatch; a true `[B, block]` stacked executable
+    /// plugs in behind `Engine::run_batched` without touching callers.
+    pub fn forward_block_batched(
+        &self,
+        lora: Option<&WeightSet>,
+        items: &mut [BatchFwdItem<'_>],
+    ) -> Result<Vec<BlockOut>> {
+        for it in items.iter() {
+            if it.tokens.is_empty() || it.tokens.len() > self.block {
+                bail!(
+                    "block must hold 1..={} tokens, got {}",
+                    self.block,
+                    it.tokens.len()
+                );
+            }
+            if it.kv.pos + it.tokens.len() > self.arch.max_seq {
+                bail!(
+                    "KV overflow: pos {} + {} > max_seq {}",
+                    it.kv.pos,
+                    it.tokens.len(),
+                    self.arch.max_seq
+                );
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let client = self.engine.client();
+        let mut row_bufs: Vec<Vec<xla::PjRtBuffer>> = Vec::with_capacity(items.len());
+        for it in items.iter() {
+            let mut padded = it.tokens.to_vec();
+            padded.resize(self.block, 0);
+            let tok_lit = xla::Literal::vec1(&padded);
+            let pos_lit = xla::Literal::vec1(&[it.kv.pos as i32]);
+            let valid_lit = xla::Literal::vec1(&[it.tokens.len() as i32]);
+            let mut bufs: Vec<xla::PjRtBuffer> =
+                Vec::with_capacity(self.weights.literals.len() + self.arch.lora.len() + 4);
+            for lit in &self.weights.literals {
+                bufs.push(client.buffer_from_host_literal(None, lit)?);
+            }
+            if self.arch.lora_rank > 0 {
+                let l = lora.expect("target arch requires a LoRA set (use zero_lora for base)");
+                assert_eq!(l.literals.len(), self.arch.lora.len());
+                for lit in &l.literals {
+                    bufs.push(client.buffer_from_host_literal(None, lit)?);
+                }
+            }
+            bufs.push(client.buffer_from_host_literal(None, &tok_lit)?);
+            bufs.push(client.buffer_from_host_literal(None, &pos_lit)?);
+            bufs.push(client.buffer_from_host_literal(None, &valid_lit)?);
+            bufs.push(client.buffer_from_host_literal(None, &it.kv.lit)?);
+            row_bufs.push(bufs);
+        }
+        let argsets: Vec<Vec<&xla::PjRtBuffer>> =
+            row_bufs.iter().map(|b| b.iter().collect()).collect();
+        let outs = self.engine.run_batched(&self.block_exe, &argsets)?;
+        drop(argsets);
+        drop(row_bufs); // same ownership discipline as `call`
+        let mut result = Vec::with_capacity(items.len());
+        for (it, mut out) in items.iter_mut().zip(outs) {
+            if out.len() != 2 {
+                bail!("expected (logits, kv) tuple, got {} elements", out.len());
+            }
+            let kv_out = out.pop().unwrap();
+            let logits_lit = out.pop().unwrap();
+            let logits = logits_lit.to_vec::<f32>()?;
+            it.kv.lit = kv_out;
+            self.stats
+                .tokens_processed
+                .set(self.stats.tokens_processed.get() + it.tokens.len() as u64);
+            self.stats.block_calls.set(self.stats.block_calls.get() + 1);
+            result.push(BlockOut {
+                rows: self.block,
+                vocab: self.arch.vocab,
+                logits,
+            });
+        }
+        self.stats
+            .stacked_calls
+            .set(self.stats.stacked_calls.get() + 1);
+        self.stats
+            .exec_nanos
+            .set(self.stats.exec_nanos.get() + t0.elapsed().as_nanos() as u64);
+        Ok(result)
     }
 
     /// Chunked prompt ingestion. Returns the logits row after the last

@@ -18,7 +18,48 @@
 //! the *base* (drift-free) trajectory, so acceptance degrades exactly by
 //! the deployed version's drift — the paper's frozen-draft-vs-evolving-
 //! target story in miniature.
+//!
+//! # The `verify_batch` contract (batched verification executor)
+//!
+//! `VerifyBackend::verify_batch` is the entry point the verifier's
+//! window close drives: ONE call per closed batch, covering every
+//! member's draft, instead of per-session `verify_block` calls. The
+//! contract:
+//!
+//! * **Request order is result order.** `reqs[i]` produces verdict `i`,
+//!   regardless of how the implementation groups execution internally.
+//! * **Session ids are distinct** within one call (the window holds at
+//!   most one pending draft per session).
+//! * **Byte-identical to the sequential loop.** For a deterministic
+//!   backend, the verdicts (and all per-session bookkeeping) must equal
+//!   what per-request `verify_block` calls in request order would have
+//!   produced — batching is an execution optimization, never a
+//!   semantics change. This is what keeps sim == serve committed
+//!   sequences intact.
+//! * **Bucketing + padding.** Implementations that stack rows group
+//!   ragged draft lengths with [`plan_buckets`]: requests are bucketed
+//!   by draft length rounded up to the next power of two, and shorter
+//!   rows inside a bucket are PADDED up to the bucket's K (padding rows
+//!   are masked out of the verdict — for the model path the per-call
+//!   `block` padding already guarantees this). One stacked `[B, K]`
+//!   forward per bucket amortizes the fixed per-call cost `T_base`
+//!   across B members.
+//! * **Regime B (stochastic).** The compact wire never ships full draft
+//!   distributions; the backend reconstructs them cloud-side (point
+//!   mass / its own forward pass — the documented Regime-B
+//!   approximation, see `protocol` module docs). Stochastic
+//!   verification draws from the SHARED sampling stream in request
+//!   order, so implementations must either execute stochastic requests
+//!   sequentially in request order or otherwise preserve the exact
+//!   draw order; the provided engine path falls back to the sequential
+//!   loop for stochastic batches for exactly this reason.
+//!
+//! The default trait implementation is the per-session fallback (a
+//! plain loop over `verify_block`), so third-party backends keep
+//! working unchanged and are free to override with a genuinely stacked
+//! execution when they can.
 
+use crate::coordinator::cloud::GreedyBatchReq;
 use crate::coordinator::edge::{DraftSource, Proposal};
 use crate::coordinator::CloudEngine;
 use crate::protocol::VerifyMode;
@@ -37,6 +78,60 @@ pub struct BackendVerdict {
     pub correction: i32,
     /// True when the round emitted (or accepted) an end-of-sequence.
     pub eos: bool,
+}
+
+/// One member of a stacked verification batch (see the module docs for
+/// the `verify_batch` contract). Borrows the session's committed
+/// sequence and the pending draft — the planner never copies token
+/// payloads.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchVerifyReq<'a> {
+    pub id: u32,
+    /// Full committed sequence (prompt + generated) of the session.
+    pub committed: &'a [i32],
+    /// The draft block to verify against it.
+    pub draft: &'a [i32],
+    pub mode: VerifyMode,
+}
+
+/// Draft lengths are bucketed by rounding up to the next power of two,
+/// so a window of ragged K ∈ 1..=8 drafts needs at most 4 stacked calls
+/// (K ∈ {1, 2, 4, 8}) instead of one per distinct length.
+pub fn bucket_k(k: usize) -> usize {
+    if k == 0 {
+        0
+    } else {
+        k.next_power_of_two()
+    }
+}
+
+/// One stacked `[B, K]` execution unit the planner emits: every member's
+/// draft is at most `k` tokens and is padded up to `k` inside the call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchBucket {
+    /// Padded draft length of the stacked call.
+    pub k: usize,
+    /// Indices into the request slice, in request order.
+    pub members: Vec<usize>,
+}
+
+/// Bucket ragged draft lengths into stacked execution units (ascending
+/// K; members keep request order inside each bucket). Pure planning —
+/// no tokens move.
+pub fn plan_buckets(reqs: &[BatchVerifyReq<'_>]) -> Vec<BatchBucket> {
+    let mut buckets: Vec<BatchBucket> = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        let k = bucket_k(r.draft.len());
+        match buckets.iter_mut().find(|b| b.k == k) {
+            Some(b) => b.members.push(i),
+            None => buckets.push(BatchBucket {
+                k,
+                members: vec![i],
+            }),
+        }
+    }
+    buckets.sort_by_key(|b| b.k);
+    buckets
 }
 
 /// Cloud-side verification service: KV sessions + draft-block
@@ -59,6 +154,35 @@ pub trait VerifyBackend {
         top_p: f32,
         rng: &mut SplitMix64,
     ) -> Result<BackendVerdict>;
+
+    /// Verify a whole window's drafts in ONE call (the batched
+    /// verification executor's entry point — see the module docs for
+    /// the full contract). Verdicts come back in request order and must
+    /// be byte-identical to per-request `verify_block` calls in request
+    /// order. The default implementation IS that sequential fallback,
+    /// so third-party backends keep working without opting in.
+    fn verify_batch(
+        &mut self,
+        reqs: &[BatchVerifyReq<'_>],
+        temperature: f32,
+        top_p: f32,
+        rng: &mut SplitMix64,
+    ) -> Result<Vec<BackendVerdict>> {
+        reqs.iter()
+            .map(|r| {
+                self.verify_block(
+                    r.id,
+                    r.committed,
+                    r.draft,
+                    &[],
+                    r.mode,
+                    temperature,
+                    top_p,
+                    rng,
+                )
+            })
+            .collect()
+    }
 
     /// Hot-swap the deployed target version without dropping sessions.
     /// Returns the new version sequence number.
@@ -118,6 +242,62 @@ impl VerifyBackend for CloudEngine {
             correction: v.outcome.correction,
             eos: v.eos,
         })
+    }
+
+    /// Stacked execution: one `[B, K]` runtime call per planner bucket
+    /// (greedy). Stochastic batches fall back to the sequential loop —
+    /// Regime-B sampling draws from the shared stream in request order,
+    /// which stacked execution would not preserve.
+    fn verify_batch(
+        &mut self,
+        reqs: &[BatchVerifyReq<'_>],
+        temperature: f32,
+        top_p: f32,
+        rng: &mut SplitMix64,
+    ) -> Result<Vec<BackendVerdict>> {
+        if reqs.iter().any(|r| r.mode == VerifyMode::Stochastic) {
+            return reqs
+                .iter()
+                .map(|r| {
+                    VerifyBackend::verify_block(
+                        self,
+                        r.id,
+                        r.committed,
+                        r.draft,
+                        &[],
+                        r.mode,
+                        temperature,
+                        top_p,
+                        rng,
+                    )
+                })
+                .collect();
+        }
+        let buckets = plan_buckets(reqs);
+        let mut out: Vec<Option<BackendVerdict>> = vec![None; reqs.len()];
+        for b in &buckets {
+            let breqs: Vec<GreedyBatchReq> = b
+                .members
+                .iter()
+                .map(|&i| GreedyBatchReq {
+                    id: reqs[i].id,
+                    committed: reqs[i].committed,
+                    draft: reqs[i].draft,
+                })
+                .collect();
+            let verdicts = self.verify_batch_greedy(&breqs)?;
+            for (&i, v) in b.members.iter().zip(verdicts) {
+                out[i] = Some(BackendVerdict {
+                    tau: v.outcome.tau,
+                    correction: v.outcome.correction,
+                    eos: v.eos,
+                });
+            }
+        }
+        Ok(out
+            .into_iter()
+            .map(|v| v.expect("planner covers every request"))
+            .collect())
     }
 
     fn version_name(&self) -> String {
@@ -183,6 +363,16 @@ impl VerifyBackend for EngineBackend {
             top_p,
             rng,
         )
+    }
+
+    fn verify_batch(
+        &mut self,
+        reqs: &[BatchVerifyReq<'_>],
+        temperature: f32,
+        top_p: f32,
+        rng: &mut SplitMix64,
+    ) -> Result<Vec<BackendVerdict>> {
+        VerifyBackend::verify_batch(&mut self.cloud, reqs, temperature, top_p, rng)
     }
 
     fn deploy(&mut self, version: &str) -> Result<u64> {
@@ -316,6 +506,37 @@ impl SyntheticTarget {
         let v = self.current_version();
         synth_target_token(self.seed, self.vocab, name_salt(&v.name), v.drift, ctx)
     }
+
+    /// Greedy verification against the deterministic trajectory — the
+    /// shared core of `verify_block` and the batched path (stochastic
+    /// mode degrades to greedy here by design: the synthetic target
+    /// exists for reproducibility, not sampling).
+    fn verify_one(&mut self, id: u32, committed: &[i32], draft: &[i32]) -> Result<BackendVerdict> {
+        if !self.sessions.contains_key(&id) {
+            bail!("no session {id}");
+        }
+        let mut ctx = committed.to_vec();
+        let mut tau = draft.len();
+        let mut correction = None;
+        for (j, &d) in draft.iter().enumerate() {
+            let t = self.target_token(&ctx);
+            if d == t {
+                ctx.push(d);
+            } else {
+                tau = j;
+                correction = Some(t);
+                break;
+            }
+        }
+        let correction = correction.unwrap_or_else(|| self.target_token(&ctx));
+        let eos = correction == self.eos || draft[..tau].contains(&self.eos);
+        self.sessions.insert(id, committed.len() + tau + 1);
+        Ok(BackendVerdict {
+            tau,
+            correction,
+            eos,
+        })
+    }
 }
 
 impl VerifyBackend for SyntheticTarget {
@@ -345,33 +566,27 @@ impl VerifyBackend for SyntheticTarget {
         _top_p: f32,
         _rng: &mut SplitMix64,
     ) -> Result<BackendVerdict> {
-        if !self.sessions.contains_key(&id) {
-            bail!("no session {id}");
-        }
-        // Greedy verification against the deterministic trajectory
-        // (stochastic mode degrades to greedy here by design — the
-        // synthetic target exists for reproducibility, not sampling).
-        let mut ctx = committed.to_vec();
-        let mut tau = draft.len();
-        let mut correction = None;
-        for (j, &d) in draft.iter().enumerate() {
-            let t = self.target_token(&ctx);
-            if d == t {
-                ctx.push(d);
-            } else {
-                tau = j;
-                correction = Some(t);
-                break;
-            }
-        }
-        let correction = correction.unwrap_or_else(|| self.target_token(&ctx));
-        let eos = correction == self.eos || draft[..tau].contains(&self.eos);
-        self.sessions.insert(id, committed.len() + tau + 1);
-        Ok(BackendVerdict {
-            tau,
-            correction,
-            eos,
-        })
+        self.verify_one(id, committed, draft)
+    }
+
+    /// Vectorized batched path. Each stacked row is an independent pure
+    /// function of (context, version), so evaluating rows in request
+    /// order IS the bucket-stacked computation — no reordering
+    /// scaffolding needed — and the result is BYTE-IDENTICAL to the
+    /// sequential fallback (the property the executor determinism tests
+    /// pin). The override exists so the synthetic backend states its
+    /// batching contract explicitly (and skips the unused
+    /// mode/temperature/rng plumbing of `verify_block`).
+    fn verify_batch(
+        &mut self,
+        reqs: &[BatchVerifyReq<'_>],
+        _temperature: f32,
+        _top_p: f32,
+        _rng: &mut SplitMix64,
+    ) -> Result<Vec<BackendVerdict>> {
+        reqs.iter()
+            .map(|r| self.verify_one(r.id, r.committed, r.draft))
+            .collect()
     }
 
     fn deploy(&mut self, version: &str) -> Result<u64> {
@@ -560,5 +775,156 @@ mod tests {
         t.start_session(1, &[1, 2, 3, 4]).unwrap();
         assert_eq!(t.remaining_capacity(1), 6);
         assert_eq!(t.remaining_capacity(99), 0);
+    }
+
+    // --- batched verification executor -------------------------------
+
+    #[test]
+    fn planner_buckets_ragged_draft_lengths() {
+        let committed = vec![1, 70, 71];
+        let drafts: Vec<Vec<i32>> = (1..=8).map(|k| vec![9; k]).collect();
+        let reqs: Vec<BatchVerifyReq> = drafts
+            .iter()
+            .enumerate()
+            .map(|(i, d)| BatchVerifyReq {
+                id: i as u32 + 1,
+                committed: &committed,
+                draft: d,
+                mode: VerifyMode::Greedy,
+            })
+            .collect();
+        let buckets = plan_buckets(&reqs);
+        // K ∈ 1..=8 collapses to the power-of-two classes {1, 2, 4, 8}
+        assert_eq!(
+            buckets.iter().map(|b| b.k).collect::<Vec<_>>(),
+            vec![1, 2, 4, 8]
+        );
+        // K=1 → bucket 1; K=2 → 2; K∈{3,4} → 4; K∈{5..8} → 8
+        assert_eq!(buckets[0].members, vec![0]);
+        assert_eq!(buckets[1].members, vec![1]);
+        assert_eq!(buckets[2].members, vec![2, 3]);
+        assert_eq!(buckets[3].members, vec![4, 5, 6, 7]);
+        // every request covered exactly once
+        let mut all: Vec<usize> = buckets.iter().flat_map(|b| b.members.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+        // degenerate plans
+        assert!(plan_buckets(&[]).is_empty(), "empty window plans nothing");
+        let single = [reqs[4]];
+        let b = plan_buckets(&single);
+        assert_eq!(b.len(), 1);
+        assert_eq!((b[0].k, b[0].members.as_slice()), (8, &[0usize][..]));
+        assert_eq!(bucket_k(0), 0, "empty draft stays in its own class");
+    }
+
+    /// Determinism pin: across seeds and drift levels, the vectorized
+    /// `verify_batch` must produce verdicts and committed sequences
+    /// BYTE-IDENTICAL to per-request `verify_block` calls in request
+    /// order — for ragged K ∈ 1..=8, including drift-induced partial
+    /// acceptances.
+    #[test]
+    fn batched_verdicts_match_sequential_across_seeds() {
+        for &seed in &[3u64, 17, 42] {
+            let mk = || {
+                let mut t = SyntheticTarget::new(seed).with_version("evolved", 0.35);
+                t.deploy("evolved").unwrap();
+                t
+            };
+            let mut seq_t = mk();
+            let mut bat_t = mk();
+            let mut d = SyntheticDraft::new(seed);
+            let n = 6usize;
+            let mut committed: Vec<Vec<i32>> = (0..n)
+                .map(|i| vec![1, 70 + i as i32, 80 + 2 * i as i32])
+                .collect();
+            for (i, c) in committed.iter().enumerate() {
+                seq_t.start_session(i as u32 + 1, c).unwrap();
+                bat_t.start_session(i as u32 + 1, c).unwrap();
+            }
+            for round in 0..10 {
+                // ragged strides, varying per session and round
+                let drafts: Vec<Vec<i32>> = committed
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| {
+                        let k = 1 + (i + round) % 8;
+                        d.propose(c, k, 0.0, 1.0, &mut rng()).unwrap().tokens
+                    })
+                    .collect();
+                let seq_verdicts: Vec<BackendVerdict> = committed
+                    .iter()
+                    .zip(&drafts)
+                    .enumerate()
+                    .map(|(i, (c, dr))| {
+                        seq_t
+                            .verify_block(
+                                i as u32 + 1,
+                                c,
+                                dr,
+                                &[],
+                                VerifyMode::Greedy,
+                                0.0,
+                                1.0,
+                                &mut rng(),
+                            )
+                            .unwrap()
+                    })
+                    .collect();
+                let reqs: Vec<BatchVerifyReq> = committed
+                    .iter()
+                    .zip(&drafts)
+                    .enumerate()
+                    .map(|(i, (c, dr))| BatchVerifyReq {
+                        id: i as u32 + 1,
+                        committed: c,
+                        draft: dr,
+                        mode: VerifyMode::Greedy,
+                    })
+                    .collect();
+                let bat_verdicts = bat_t
+                    .verify_batch(&reqs, 0.0, 1.0, &mut rng())
+                    .unwrap();
+                assert_eq!(
+                    seq_verdicts, bat_verdicts,
+                    "batched != sequential verdicts (seed {seed}, round {round})"
+                );
+                drop(reqs);
+                for ((c, dr), v) in committed.iter_mut().zip(&drafts).zip(&seq_verdicts) {
+                    c.extend_from_slice(&dr[..v.tau]);
+                    c.push(v.correction);
+                }
+                // both backends agree on per-session capacity, too
+                for i in 0..n {
+                    assert_eq!(
+                        seq_t.remaining_capacity(i as u32 + 1),
+                        bat_t.remaining_capacity(i as u32 + 1),
+                        "capacity bookkeeping diverged (seed {seed})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn verify_batch_rejects_unknown_session() {
+        let mut t = SyntheticTarget::new(1);
+        t.start_session(1, &[1, 2, 3]).unwrap();
+        let committed = vec![1, 2, 3];
+        let draft = vec![9, 9];
+        let reqs = [
+            BatchVerifyReq {
+                id: 1,
+                committed: &committed,
+                draft: &draft,
+                mode: VerifyMode::Greedy,
+            },
+            BatchVerifyReq {
+                id: 99,
+                committed: &committed,
+                draft: &draft,
+                mode: VerifyMode::Greedy,
+            },
+        ];
+        assert!(t.verify_batch(&reqs, 0.0, 1.0, &mut rng()).is_err());
     }
 }

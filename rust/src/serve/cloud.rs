@@ -32,12 +32,12 @@ use super::backend::VerifyBackend;
 use super::edge::{run_edge_session, EdgeReport, EdgeSessionConfig};
 use super::mux::EdgeMux;
 use super::transport::{loopback_pair, TcpTransport, Transport};
-use super::verifier::{VerifierConfig, VerifierHandle};
+use super::verifier::{VerifierConfig, VerifierHandle, VerifyReply};
 use crate::coordinator::edge::DraftSource;
 use crate::metrics::ServingMetrics;
 use crate::protocol::frame::{
-    check_stream, hello_response, CancelMsg, Frame, FrameKind, Hello, OpenAck, OpenMsg, ResumeAck,
-    ResumeMsg, CONTROL_STREAM,
+    check_stream, hello_response, BusyMsg, CancelMsg, Frame, FrameKind, Hello, OpenAck, OpenMsg,
+    ResumeAck, ResumeMsg, CONTROL_STREAM,
 };
 use crate::protocol::DraftMsg;
 use crate::util::log::{log, Level};
@@ -352,17 +352,35 @@ async fn handle_frame<T: Transport>(
             // the server-assigned session id is authoritative
             msg.session = id;
             // verify concurrently so other streams keep feeding the
-            // batcher while this round waits for its window
+            // batcher while this round waits for its window; peers
+            // below wire v4 cannot parse a Busy deferral, so their
+            // drafts are always admitted
+            let can_defer = negotiated >= 4;
             let v = verifier.clone();
             let out = out_tx.clone();
             let stream = f.stream;
             tokio::spawn(async move {
-                match v.verify(id, attachment, msg).await {
-                    Ok(Some(vmsg)) => {
+                match v.verify(id, attachment, msg, can_defer).await {
+                    Ok(Some(VerifyReply::Verdict(vmsg))) => {
                         let _ = out.send(OutEvent::Frame(Frame::on(
                             stream,
                             FrameKind::Verify,
                             vmsg.encode(),
+                        )));
+                    }
+                    // admission queue full: tell the edge to retry
+                    Ok(Some(VerifyReply::Busy {
+                        round,
+                        retry_after_ms,
+                    })) => {
+                        let _ = out.send(OutEvent::Frame(Frame::on(
+                            stream,
+                            FrameKind::Busy,
+                            BusyMsg {
+                                round,
+                                retry_after_ms,
+                            }
+                            .encode(),
                         )));
                     }
                     // duplicate swallowed by the verifier: no reply owed
@@ -403,7 +421,11 @@ async fn handle_frame<T: Transport>(
             }
             Ok(())
         }
-        FrameKind::HelloAck | FrameKind::OpenAck | FrameKind::ResumeAck | FrameKind::Verify => {
+        FrameKind::HelloAck
+        | FrameKind::OpenAck
+        | FrameKind::ResumeAck
+        | FrameKind::Verify
+        | FrameKind::Busy => {
             bail!("unexpected {:?} frame from edge", f.kind)
         }
     }

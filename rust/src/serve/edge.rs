@@ -32,7 +32,7 @@ use crate::coordinator::edge::DraftSource;
 use crate::coordinator::policy::{AdaptivePolicy, LatencyModel};
 use crate::devices::{CloudProfile, EdgeDevice, A800_70B, JETSON_ORIN};
 use crate::protocol::frame::{
-    CancelMsg, Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, ResumeAck, ResumeMsg,
+    BusyMsg, CancelMsg, Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, ResumeAck, ResumeMsg,
     MIN_WIRE_VERSION, WIRE_VERSION,
 };
 use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
@@ -40,7 +40,7 @@ use crate::util::log::{log, Level};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::{Ema, Summary};
 use anyhow::{anyhow, bail, Result};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
@@ -51,6 +51,27 @@ pub const SESSION_STREAM: u32 = 1;
 /// for a specific one (duplicate-retransmit tolerance, not an allowance
 /// for protocol drift).
 const SKIP_BUDGET: usize = 1024;
+
+/// Give up on a round after this many consecutive `Busy` deferrals.
+/// The cloud's queue drains every batching window, so a healthy server
+/// answers within a handful of retries; exhausting the budget means the
+/// cloud is persistently over capacity and the session should fail
+/// loudly rather than spin forever.
+const MAX_BUSY_RETRIES: usize = 64;
+
+/// Ceiling on the per-retry backoff sleep (the suggested retry_after is
+/// doubled per consecutive deferral up to this cap).
+const BUSY_BACKOFF_CAP_MS: u64 = 500;
+
+/// Sleep before re-sending a `Busy`-deferred draft: the cloud's
+/// suggested horizon, doubled per consecutive deferral (capped).
+async fn busy_backoff(retry_after_ms: u32, attempt: usize) {
+    let base = retry_after_ms.max(1) as u64;
+    let ms = base
+        .saturating_mul(1u64 << attempt.min(6).saturating_sub(1))
+        .min(BUSY_BACKOFF_CAP_MS);
+    tokio::time::sleep(std::time::Duration::from_millis(ms)).await;
+}
 
 #[derive(Debug, Clone)]
 pub struct EdgeSessionConfig {
@@ -130,6 +151,10 @@ pub struct EdgeReport {
     /// Verdict waits with nothing else in flight — the full round trip
     /// stalls the edge. Sequential mode: every round is one of these.
     pub exposed_waits: usize,
+    /// `Busy`-deferred drafts re-sent after backoff (admission control,
+    /// wire v4). Each is one extra uplink of the same round; committed
+    /// tokens never change.
+    pub busy_retries: usize,
     /// Full committed sequence (prompt + generated).
     pub committed: Vec<i32>,
 }
@@ -201,6 +226,7 @@ async fn await_kind<T: Transport + ?Sized>(t: &mut T, want: FrameKind) -> Result
                         | FrameKind::OpenAck
                         | FrameKind::ResumeAck
                         | FrameKind::Verify
+                        | FrameKind::Busy
                 ) =>
             {
                 log(
@@ -215,19 +241,57 @@ async fn await_kind<T: Transport + ?Sized>(t: &mut T, want: FrameKind) -> Result
     bail!("no {want:?} frame within the skip budget")
 }
 
-/// Wait for THE verdict of `round`, ignoring stale duplicates of
-/// earlier rounds (replays the cloud sent to absorb retransmits).
-async fn await_verify<T: Transport + ?Sized>(t: &mut T, round: u32) -> Result<VerifyMsg> {
+/// The cloud's answer to one awaited round: a verdict, or an
+/// admission-control deferral (wire v4) telling the edge to re-send the
+/// identical draft after a backoff.
+enum RoundReply {
+    Verdict(VerifyMsg),
+    Busy(BusyMsg),
+}
+
+/// Wait for THE reply of `round` — its verdict or its `Busy` deferral —
+/// ignoring stale duplicates of earlier rounds (replays the cloud sent
+/// to absorb retransmits) and stale `Busy` frames for rounds that have
+/// since resolved.
+async fn await_round_reply<T: Transport + ?Sized>(t: &mut T, round: u32) -> Result<RoundReply> {
     for _ in 0..SKIP_BUDGET {
-        let f = await_kind(t, FrameKind::Verify).await?;
-        let v = VerifyMsg::decode(&f.payload)?;
-        if v.round == round {
-            return Ok(v);
+        match t.recv_frame().await? {
+            None => bail!("connection closed while waiting for round {round}"),
+            Some(f) if f.kind == FrameKind::Verify => {
+                let v = VerifyMsg::decode(&f.payload)?;
+                if v.round == round {
+                    return Ok(RoundReply::Verdict(v));
+                }
+                if v.round > round {
+                    bail!("verdict for future round {} (expected {round})", v.round);
+                }
+                // stale duplicate of an already-applied round: ignore
+            }
+            Some(f) if f.kind == FrameKind::Busy => {
+                let b = BusyMsg::decode(&f.payload)?;
+                if b.round == round {
+                    return Ok(RoundReply::Busy(b));
+                }
+                // a deferral for a round that already resolved (e.g. a
+                // transport duplicate of a Busy we already acted on):
+                // stale, ignore. Deferrals only ever target the
+                // session's next expected round, so a future-round Busy
+                // cannot occur on an ordered transport.
+            }
+            Some(f)
+                if matches!(
+                    f.kind,
+                    FrameKind::HelloAck | FrameKind::OpenAck | FrameKind::ResumeAck
+                ) =>
+            {
+                log(
+                    Level::Debug,
+                    "edge",
+                    &format!("skipping stale {:?} while waiting for round {round}", f.kind),
+                );
+            }
+            Some(f) => bail!("expected Verify, got {:?}", f.kind),
         }
-        if v.round > round {
-            bail!("verdict for future round {} (expected {round})", v.round);
-        }
-        // stale duplicate of an already-applied round: ignore
     }
     bail!("no verdict for round {round} within the skip budget")
 }
@@ -327,6 +391,9 @@ struct PipeTotals {
     draft_tokens_wasted: usize,
     overlapped_waits: usize,
     exposed_waits: usize,
+    /// Busy-deferred drafts re-sent (accumulated across reattaches and
+    /// both loop shapes — not pipeline-specific despite the host).
+    busy_retries: usize,
 }
 
 impl PipeTotals {
@@ -440,6 +507,7 @@ where
         draft_tokens_wasted: pipe_totals.draft_tokens_wasted,
         overlapped_waits: pipe_totals.overlapped_waits,
         exposed_waits: pipe_totals.exposed_waits,
+        busy_retries: pipe_totals.busy_retries,
         committed: st.core.committed,
     })
 }
@@ -523,7 +591,18 @@ where
         // any speculation a previous (dead-link) attempt left behind is
         // void; resume already fast-forwarded the committed prefix
         pipe.reset(&mut st.core);
-        let res = pipelined_decode(t, stream, st, draft, cfg, stats, rng, &mut pipe).await;
+        let res = pipelined_decode(
+            t,
+            stream,
+            st,
+            draft,
+            cfg,
+            stats,
+            rng,
+            &mut pipe,
+            &mut pipe_totals.busy_retries,
+        )
+        .await;
         // on a link error, whatever was in flight dies with the attempt
         pipe.reset(&mut st.core);
         pipe_totals.merge(&pipe);
@@ -544,12 +623,39 @@ where
                 spec: vec![],
             };
             let air_up = msg.air_bytes();
-            let sent = Instant::now();
+            let mut sent = Instant::now();
             t.send_frame(Frame::on(stream, FrameKind::Draft, msg.encode()))
                 .await?;
             // sequential mode: every verdict wait exposes the full RTT
             pipe_totals.exposed_waits += 1;
-            let v = await_verify(t, round).await?;
+            // Busy-deferral loop: re-send the IDENTICAL draft after the
+            // suggested backoff until the cloud admits it. Identical
+            // bytes + pure draft source ⇒ the retried round commits the
+            // exact tokens an unsaturated cloud would have committed.
+            // (Re-encoding only happens on the rare retry — the hot
+            // path sends the frame without a clone.)
+            let mut busy_attempts = 0usize;
+            let v = loop {
+                match await_round_reply(t, round).await? {
+                    RoundReply::Verdict(v) => break v,
+                    RoundReply::Busy(b) => {
+                        busy_attempts += 1;
+                        if busy_attempts > MAX_BUSY_RETRIES {
+                            bail!(
+                                "cloud stayed busy for round {round} after {MAX_BUSY_RETRIES} retries"
+                            );
+                        }
+                        pipe_totals.busy_retries += 1;
+                        busy_backoff(b.retry_after_ms, busy_attempts).await;
+                        // re-stamp so backoff sleeps never pollute the
+                        // measured RTT the adaptive policy feeds on —
+                        // the last attempt's round trip IS the link
+                        sent = Instant::now();
+                        t.send_frame(Frame::on(stream, FrameKind::Draft, msg.encode()))
+                            .await?;
+                    }
+                }
+            };
 
             // measure the link this round actually saw
             let rtt_now = sent.elapsed().as_secs_f64() * 1e3;
@@ -582,6 +688,7 @@ async fn pipelined_decode<T, D>(
     stats: &mut LinkStats,
     rng: &mut SplitMix64,
     pipe: &mut PipelinedDrafter,
+    busy_retries: &mut usize,
 ) -> Result<()>
 where
     T: Transport + ?Sized,
@@ -589,6 +696,9 @@ where
 {
     // send timestamps per in-flight round (pruned on cancel)
     let mut sent_at: VecDeque<(u32, Instant)> = VecDeque::new();
+    // encoded frames per in-flight round, retained for Busy retransmits
+    // (pruned on resolve/cancel; bounded by the pipeline depth)
+    let mut inflight_frames: HashMap<u32, Frame> = HashMap::new();
     while !st.core.done {
         // --- top up the pipe -----------------------------------------
         loop {
@@ -628,8 +738,9 @@ where
             };
             let air_up = msg.air_bytes();
             sent_at.push_back((plan.round, Instant::now()));
-            t.send_frame(Frame::on(stream, FrameKind::Draft, msg.encode()))
-                .await?;
+            let frame = Frame::on(stream, FrameKind::Draft, msg.encode());
+            inflight_frames.insert(plan.round, frame.clone());
+            t.send_frame(frame).await?;
             pipe.launched(&mut st.core, &plan, prop.tokens, bonus, air_up);
         }
 
@@ -638,7 +749,37 @@ where
             .head_round()
             .expect("head launch is always allowed while the session lives");
         pipe.note_wait();
-        let v = await_verify(t, head).await?;
+        // admission control only ever defers the session's next
+        // expected round — the head — so a Busy here is answered by
+        // re-sending the head's retained frame after backoff
+        let mut busy_attempts = 0usize;
+        let v = loop {
+            match await_round_reply(t, head).await? {
+                RoundReply::Verdict(v) => break v,
+                RoundReply::Busy(b) => {
+                    busy_attempts += 1;
+                    if busy_attempts > MAX_BUSY_RETRIES {
+                        bail!(
+                            "cloud stayed busy for round {head} after {MAX_BUSY_RETRIES} retries"
+                        );
+                    }
+                    *busy_retries += 1;
+                    busy_backoff(b.retry_after_ms, busy_attempts).await;
+                    let frame = inflight_frames
+                        .get(&head)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("no retained frame for deferred round {head}"))?;
+                    // re-stamp the head's send time so backoff sleeps
+                    // never pollute the measured RTT (see the
+                    // sequential loop)
+                    if let Some(entry) = sent_at.iter_mut().find(|(r, _)| *r == head) {
+                        entry.1 = Instant::now();
+                    }
+                    t.send_frame(frame).await?;
+                }
+            }
+        };
+        inflight_frames.remove(&head);
         let sent = loop {
             match sent_at.pop_front() {
                 Some((r, at)) if r == head => break Some(at),
@@ -659,6 +800,7 @@ where
         }
         if let Some(from) = res.cancel_from {
             sent_at.retain(|(r, _)| *r < from);
+            inflight_frames.retain(|r, _| *r < from);
             t.send_frame(Frame::on(
                 stream,
                 FrameKind::Cancel,

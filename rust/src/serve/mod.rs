@@ -140,7 +140,8 @@ pub mod transport;
 pub mod verifier;
 
 pub use backend::{
-    BackendVerdict, EngineBackend, SyntheticDraft, SyntheticTarget, VerifyBackend,
+    bucket_k, plan_buckets, BackendVerdict, BatchBucket, BatchVerifyReq, EngineBackend,
+    SyntheticDraft, SyntheticTarget, VerifyBackend,
 };
 pub use cloud::{handle_conn, serve_cloud, serve_loopback, serve_loopback_mux, ServerHandle};
 pub use edge::{
@@ -159,4 +160,5 @@ pub use transport::{
 };
 pub use verifier::{
     OpenInfo, ResumeInfo, SubmitOutcome, VerifierConfig, VerifierCore, VerifierHandle,
+    VerifyReply,
 };

@@ -16,7 +16,12 @@
 //!
 //! The pump performs the connection-scoped `Hello` handshake once,
 //! stamps outbound frames with their stream id, and demuxes inbound
-//! frames by stream id. When the transport dies it (a) notifies every
+//! frames by stream id. Outbound frames are staged on PER-STREAM queues
+//! and drained in **weighted round-robin** order (`open_stream_tier`):
+//! each pass grants every stream with queued frames up to its tier
+//! weight of sends, so one chatty session's burst cannot starve its
+//! siblings on the shared connection, and a premium tier gets
+//! proportionally more of the uplink under contention. When the transport dies it (a) notifies every
 //! stream with a generation-tagged reset, (b) redials through the
 //! optional [`Reconnect`] factory and replays the handshake, and
 //! (c) answers the streams' `reattach` requests once the new generation
@@ -31,7 +36,7 @@ use super::transport::{BoxFuture, Reconnect, Transport};
 use crate::protocol::frame::{Frame, Hello, CONTROL_STREAM};
 use crate::util::log::{log, Level};
 use anyhow::{anyhow, bail, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -43,6 +48,8 @@ const MAX_REDIALS: usize = 8;
 enum PumpCmd {
     Register {
         stream: u32,
+        /// Tier weight: sends granted per weighted-round-robin pass.
+        weight: u32,
         tx: mpsc::UnboundedSender<InEvent>,
     },
     Deregister {
@@ -99,6 +106,8 @@ impl EdgeMux {
             cmd_rx,
             out_rx,
             waiting: Vec::new(),
+            out_q: HashMap::new(),
+            rr: Vec::new(),
         };
         tokio::spawn(run_pump(pump));
         Ok(EdgeMux {
@@ -115,16 +124,31 @@ impl EdgeMux {
         self.wire_version
     }
 
-    /// Allocate the next stream id and register it with the pump. The
-    /// returned handle is a full [`Transport`] for one session.
+    /// Allocate the next stream id and register it with the pump at the
+    /// default tier (weight 1). The returned handle is a full
+    /// [`Transport`] for one session.
     pub fn open_stream(&mut self) -> MuxStream {
+        self.open_stream_tier(1)
+    }
+
+    /// Allocate a stream with an explicit TIER WEIGHT: the pump drains
+    /// outbound frames in weighted round-robin order, granting each
+    /// stream with queued frames up to `weight` sends per pass — so one
+    /// chatty session's burst cannot starve its siblings on the shared
+    /// connection, and a premium tier (higher weight) gets
+    /// proportionally more of the uplink when it is contended.
+    pub fn open_stream_tier(&mut self, weight: u32) -> MuxStream {
         self.next_stream += 1;
         let stream = self.next_stream;
         let (tx, rx) = mpsc::unbounded_channel();
         // the pump polls its command queue before the outbound queue, so
         // this registration is processed before any frame the session
         // sends on the new stream
-        let _ = self.cmd_tx.send(PumpCmd::Register { stream, tx });
+        let _ = self.cmd_tx.send(PumpCmd::Register {
+            stream,
+            weight: weight.max(1),
+            tx,
+        });
         MuxStream {
             stream,
             seen_gen: 0,
@@ -246,16 +270,26 @@ impl Transport for MuxStream {
 // The pump: one task owning the real transport
 // ---------------------------------------------------------------------
 
+struct StreamEntry {
+    tx: mpsc::UnboundedSender<InEvent>,
+    /// Sends granted per weighted-round-robin pass (tier weight).
+    weight: u32,
+}
+
 struct Pump {
     t: Option<Box<dyn Transport>>,
     reconnect: Option<Box<dyn Reconnect>>,
     hello: Hello,
     gen: u64,
     gen_shared: Arc<AtomicU64>,
-    streams: HashMap<u32, mpsc::UnboundedSender<InEvent>>,
+    streams: HashMap<u32, StreamEntry>,
     cmd_rx: mpsc::UnboundedReceiver<PumpCmd>,
     out_rx: mpsc::UnboundedReceiver<(u64, Frame)>,
     waiting: Vec<oneshot::Sender<Result<u64>>>,
+    /// Per-stream outbound queues (FIFO within a stream) + the visit
+    /// order for the weighted round-robin drain.
+    out_q: HashMap<u32, VecDeque<(u64, Frame)>>,
+    rr: Vec<u32>,
 }
 
 impl Pump {
@@ -264,10 +298,74 @@ impl Pump {
     fn link_down(&mut self) {
         if self.t.take().is_some() {
             let gen = self.gen;
-            for tx in self.streams.values() {
-                let _ = tx.send(InEvent::Reset(gen));
+            for e in self.streams.values() {
+                let _ = e.tx.send(InEvent::Reset(gen));
             }
         }
+    }
+
+    /// Stage one outbound frame on its stream's queue (creating the
+    /// queue and its round-robin slot on first use).
+    fn enqueue_out(&mut self, gen: u64, frame: Frame) {
+        let stream = frame.stream;
+        let q = self.out_q.entry(stream).or_default();
+        if q.is_empty() && !self.rr.contains(&stream) {
+            self.rr.push(stream);
+        }
+        q.push_back((gen, frame));
+    }
+
+    /// Drain the staged outbound queues into the transport in WEIGHTED
+    /// round-robin order: each pass grants every stream with queued
+    /// frames up to its tier weight of sends, so one chatty session's
+    /// burst cannot starve its siblings on the shared connection.
+    /// Per-stream FIFO order is preserved; frames tagged with a dead
+    /// generation are dropped with a Reset notification exactly like
+    /// bytes in a dead socket's buffer. Stops (leaving the remainder
+    /// queued) when the link is down or dies mid-drain.
+    async fn flush_out(&mut self) {
+        while !self.rr.is_empty() {
+            let pass: Vec<u32> = self.rr.clone();
+            for stream in pass {
+                let weight = self
+                    .streams
+                    .get(&stream)
+                    .map(|e| e.weight.max(1))
+                    .unwrap_or(1) as usize;
+                for _ in 0..weight {
+                    let Some((gen, frame)) = self.out_q.get_mut(&stream).and_then(|q| q.pop_front())
+                    else {
+                        break;
+                    };
+                    if gen != self.gen {
+                        // queued against a dead generation: lost in
+                        // flight. Tell the sender (it may not have
+                        // observed the reset yet) so it reattaches
+                        // instead of waiting on a reply that can never
+                        // come.
+                        if let Some(e) = self.streams.get(&frame.stream) {
+                            let _ = e.tx.send(InEvent::Reset(gen));
+                        }
+                        continue;
+                    }
+                    let sent = match self.t.as_mut() {
+                        Some(t) => t.send_frame(frame).await,
+                        // link down: the remainder waits for the redial
+                        // (and dies there by generation check)
+                        None => return,
+                    };
+                    if let Err(e) = sent {
+                        log(Level::Debug, "mux", &format!("send failed: {e:#}"));
+                        self.link_down();
+                        return;
+                    }
+                }
+            }
+            let out_q = &self.out_q;
+            self.rr
+                .retain(|s| out_q.get(s).is_some_and(|q| !q.is_empty()));
+        }
+        self.out_q.retain(|_, q| !q.is_empty());
     }
 
     /// Redial + handshake until a new generation is live; notify waiting
@@ -309,11 +407,13 @@ impl Pump {
 
     fn handle_cmd(&mut self, cmd: PumpCmd) {
         match cmd {
-            PumpCmd::Register { stream, tx } => {
-                self.streams.insert(stream, tx);
+            PumpCmd::Register { stream, weight, tx } => {
+                self.streams.insert(stream, StreamEntry { tx, weight });
             }
             PumpCmd::Deregister { stream } => {
                 self.streams.remove(&stream);
+                self.out_q.remove(&stream);
+                self.rr.retain(|&s| s != stream);
             }
             PumpCmd::AwaitReattach { seen, reply } => {
                 // `seen` is at most the current generation (it comes
@@ -344,8 +444,8 @@ impl Pump {
             return;
         }
         match self.streams.get(&f.stream) {
-            Some(tx) => {
-                let _ = tx.send(InEvent::Frame(f));
+            Some(e) => {
+                let _ = e.tx.send(InEvent::Frame(f));
             }
             None => {
                 // unknown stream: a late frame for a closed session
@@ -374,7 +474,12 @@ async fn run_pump(mut p: Pump) {
     loop {
         if p.t.is_none() {
             match p.ensure_link().await {
-                Ok(()) => {}
+                Ok(()) => {
+                    // frames staged against the dead generation are
+                    // drained (and dropped with Reset notifications)
+                    // now, not on the next unrelated event
+                    p.flush_out().await;
+                }
                 Err(e) => {
                     log(Level::Warn, "mux", &format!("pump stopping: {e:#}"));
                     p.fail_all(e);
@@ -404,33 +509,22 @@ async fn run_pump(mut p: Pump) {
             // transport, which closes the connection
             Step::Cmd(None) | Step::Out(None) => {
                 while let Ok((gen, frame)) = p.out_rx.try_recv() {
-                    if gen != p.gen {
-                        continue;
-                    }
-                    let Some(t) = p.t.as_mut() else { break };
-                    if t.send_frame(frame).await.is_err() {
-                        break;
-                    }
+                    p.enqueue_out(gen, frame);
                 }
+                p.flush_out().await;
                 return;
             }
             Step::Cmd(Some(cmd)) => p.handle_cmd(cmd),
             Step::Out(Some((gen, frame))) => {
-                if gen != p.gen {
-                    // queued against a dead generation: lost in flight.
-                    // Tell the sender (it may not have observed the
-                    // reset yet) so it reattaches instead of waiting on
-                    // a reply that can never come.
-                    if let Some(tx) = p.streams.get(&frame.stream) {
-                        let _ = tx.send(InEvent::Reset(gen));
-                    }
-                    continue;
+                // stage everything immediately available, THEN drain in
+                // weighted round-robin order — this is where a burst
+                // from one stream gets interleaved with (instead of
+                // queued ahead of) its siblings' frames
+                p.enqueue_out(gen, frame);
+                while let Ok((g, f)) = p.out_rx.try_recv() {
+                    p.enqueue_out(g, f);
                 }
-                let Some(t) = p.t.as_mut() else { continue };
-                if let Err(e) = t.send_frame(frame).await {
-                    log(Level::Debug, "mux", &format!("send failed: {e:#}"));
-                    p.link_down();
-                }
+                p.flush_out().await;
             }
             Step::In(Ok(Some(f))) => p.route(f),
             Step::In(Ok(None)) => p.link_down(),
@@ -496,6 +590,71 @@ mod tests {
             assert_eq!((fb.stream, fb.payload), (b.stream_id(), vec![2]));
             let fa = a.recv_frame().await.unwrap().unwrap();
             assert_eq!((fa.stream, fa.payload), (a.stream_id(), vec![1]));
+        });
+    }
+
+    /// Satellite (admission/QoS): a burst from one chatty stream must
+    /// not starve a sibling — the weighted round-robin drain interleaves
+    /// the quiet stream's frame near the front instead of queuing it
+    /// behind the whole burst.
+    #[test]
+    fn weighted_round_robin_prevents_starvation() {
+        rt().block_on(async {
+            let (edge_t, cloud_t) = loopback_pair();
+            // record global arrival order cloud-side
+            let order = std::sync::Arc::new(tokio::sync::Mutex::new(Vec::<u32>::new()));
+            let ord = order.clone();
+            tokio::spawn(async move {
+                let mut t = cloud_t;
+                let f = t.recv_frame().await.unwrap().unwrap();
+                assert_eq!(f.kind, FrameKind::Hello);
+                let ack = hello_response(&Hello::decode(&f.payload).unwrap());
+                t.send_frame(Frame::control(FrameKind::HelloAck, ack.encode()))
+                    .await
+                    .unwrap();
+                while let Ok(Some(f)) = t.recv_frame().await {
+                    ord.lock().await.push(f.stream);
+                }
+            });
+            let mut mux = EdgeMux::connect(
+                Box::new(edge_t),
+                None,
+                &crate::serve::EdgeSessionConfig::default(),
+            )
+            .await
+            .unwrap();
+            let mut chatty = mux.open_stream(); // weight 1
+            let mut premium = mux.open_stream_tier(3);
+            let premium_id = premium.stream_id();
+            // queue the whole burst without yielding to the pump: 8
+            // chatty frames, THEN one premium frame — FIFO would put
+            // the premium frame last
+            for i in 0..8u8 {
+                chatty
+                    .send_frame(Frame::on(0, FrameKind::Draft, vec![i]))
+                    .await
+                    .unwrap();
+            }
+            premium
+                .send_frame(Frame::on(0, FrameKind::Draft, vec![99]))
+                .await
+                .unwrap();
+            // wait for the drain to complete cloud-side
+            loop {
+                if order.lock().await.len() >= 9 {
+                    break;
+                }
+                tokio::time::sleep(Duration::from_millis(1)).await;
+            }
+            let got = order.lock().await.clone();
+            let pos = got
+                .iter()
+                .position(|&s| s == premium_id)
+                .expect("premium frame must arrive");
+            assert!(
+                pos <= 2,
+                "premium frame starved behind the chatty burst (position {pos} in {got:?})"
+            );
         });
     }
 

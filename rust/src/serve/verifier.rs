@@ -45,7 +45,7 @@
 //!   retransmit) is answered from the cache instead of re-advancing the
 //!   sequence, and `Open` retransmits are deduplicated by client nonce.
 
-use super::backend::VerifyBackend;
+use super::backend::{BatchVerifyReq, VerifyBackend};
 use super::session::{BatchDecision, BatchWindow, SessionCore};
 use crate::metrics::ServingMetrics;
 use crate::protocol::{DraftMsg, VerifyMsg};
@@ -75,6 +75,26 @@ pub struct VerifierConfig {
     /// How long a parked session (and a finished residue) survives a
     /// dead link before eviction reclaims its KV state.
     pub resume_grace_ms: f64,
+    /// Admission control: bound on drafts pending verification (the
+    /// batcher's backlog across ALL sessions). A fresh head-round draft
+    /// arriving at the bound is answered with `Busy { retry_after_ms }`
+    /// instead of being queued — the edge retries it with backoff, and
+    /// because drafts are pure functions of the committed prefix the
+    /// deferral can never change a committed token.
+    ///
+    /// 0 (the default) = unbounded. EFFECTIVE values are
+    /// `1..max_batch`: the window drains synchronously the moment it
+    /// reaches `max_batch` members, so the backlog can never exceed
+    /// `max_batch` and a larger bound is unreachable. Promotions of
+    /// already-uploaded speculative rounds bypass the bound (turning
+    /// them away would waste uplink the edge already spent), so it is
+    /// a soft cap with overshoot bounded by the pipeline depth. Peers
+    /// that negotiated wire < 4 are always admitted (they cannot parse
+    /// `Busy`). Note for lossy deployments: a dropped `Busy` frame
+    /// strands its round until the link-level disconnect/resume path
+    /// kicks in, so pair a bound with the resume machinery (always on)
+    /// rather than bare UDP-style transports.
+    pub admission_queue: usize,
 }
 
 impl Default for VerifierConfig {
@@ -87,6 +107,7 @@ impl Default for VerifierConfig {
             seed: 1,
             capacity_floor: 10,
             resume_grace_ms: 10_000.0,
+            admission_queue: 0,
         }
     }
 }
@@ -115,6 +136,13 @@ pub enum SubmitOutcome {
     /// speculative draft whose basis no longer matches the committed
     /// prefix, or a draft from a stale attachment: no reply owed.
     Swallowed,
+    /// Admission control (wire v4): the pending-draft queue is at its
+    /// bound and this fresh round was NOT admitted. The caller answers
+    /// with a `Busy` frame; the edge retries the identical draft after
+    /// `retry_after_ms`. No state was recorded for the round.
+    Busy {
+        retry_after_ms: u32,
+    },
 }
 
 /// Everything a `ResumeAck` needs.
@@ -301,8 +329,16 @@ impl VerifierCore {
     /// replay/defer/swallow it. `attachment` is the submitting
     /// connection's epoch: a draft from a STALE attachment (its session
     /// was stolen by a reconnect) is swallowed outright — it could
-    /// neither deliver a verdict nor is one owed.
-    pub fn submit(&mut self, now_ms: f64, attachment: u64, msg: DraftMsg) -> Result<SubmitOutcome> {
+    /// neither deliver a verdict nor is one owed. `can_defer` says the
+    /// peer negotiated wire >= 4 and understands a `Busy` deferral;
+    /// older peers are always admitted.
+    pub fn submit(
+        &mut self,
+        now_ms: f64,
+        attachment: u64,
+        msg: DraftMsg,
+        can_defer: bool,
+    ) -> Result<SubmitOutcome> {
         let id = msg.session;
         if self.attachment_of.contains_key(&id)
             && self.attachment_of.get(&id) != Some(&attachment)
@@ -371,6 +407,19 @@ impl VerifierCore {
             self.metrics.drafts_cancelled += 1;
             self.metrics.draft_tokens_wasted += msg.tokens.len();
             return Ok(SubmitOutcome::Swallowed);
+        }
+        // admission control: a fresh head round arriving at the backlog
+        // bound is deferred (after the dedup/staleness filters above, so
+        // a Busy is only ever sent for a round that would genuinely have
+        // consumed a new queue slot)
+        if can_defer
+            && self.cfg.admission_queue > 0
+            && self.pending.len() >= self.cfg.admission_queue
+        {
+            self.metrics.drafts_busy += 1;
+            return Ok(SubmitOutcome::Busy {
+                retry_after_ms: self.busy_retry_after_ms(),
+            });
         }
         if !msg.spec.is_empty() {
             self.metrics.rounds_pipelined += 1;
@@ -540,40 +589,84 @@ impl VerifierCore {
         dropped
     }
 
-    /// Close the open window and verify its members as ONE batch
-    /// (one amortized T_base on a real accelerator). Sessions that
-    /// finish are torn down server-side (leaving a grace-window residue
-    /// for late resumes); the verdict's `eos` flag tells the edge to
-    /// stop.
+    /// Suggested retry horizon for a `Busy` deferral: one batching
+    /// window — the cadence at which queue slots free up.
+    fn busy_retry_after_ms(&self) -> u32 {
+        self.cfg.window_ms.max(1.0).ceil() as u32
+    }
+
+    /// Close the open window and verify its members as ONE batch:
+    /// **plan** (pull each member's pending draft + live session, count
+    /// the orphans), **execute** (a single `verify_batch` call — the
+    /// backend stacks planner buckets into `[B, K]` forwards, one
+    /// amortized T_base per bucket on a real accelerator), **apply**
+    /// (commit verdicts with exactly the eviction/residue/replay
+    /// bookkeeping of the per-session path). Sessions that finish are
+    /// torn down server-side (leaving a grace-window residue for late
+    /// resumes); the verdict's `eos` flag tells the edge to stop.
     pub fn close_window(&mut self, now_ms: f64) -> Result<Vec<(u32, VerifyMsg)>> {
         let members = self.window.close();
         if members.is_empty() {
             return Ok(Vec::new());
         }
-        self.metrics.note_batch(members.len());
-        let mut out = Vec::with_capacity(members.len());
+        // ---- plan --------------------------------------------------
+        self.metrics.queue_depth.add(self.pending.len() as f64);
+        let mut jobs: Vec<(u32, DraftMsg)> = Vec::with_capacity(members.len());
         for id in members {
-            // detached mid-window (link died): nothing pending
+            // detached mid-window (link died) or torn down underneath
+            // the window: nothing to verify — but never silently. The
+            // orphan counter is the only trace these drafts leave.
             let Some(msg) = self.pending.remove(&id) else {
+                self.metrics.drafts_orphaned += 1;
                 continue;
             };
+            if !self.sessions.contains_key(&id) {
+                self.metrics.drafts_orphaned += 1;
+                continue;
+            }
+            jobs.push((id, msg));
+        }
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.metrics.note_batch(jobs.len());
+
+        // ---- execute: ONE stacked call over the whole window --------
+        // Compact wire: full draft distributions never cross the air —
+        // the backend reconstructs them cloud-side (point mass / its
+        // own forward pass; see the verify_batch contract in
+        // serve::backend on bucketing, padding and the Regime-B
+        // distribution reconstruction).
+        let reqs: Vec<BatchVerifyReq> = jobs
+            .iter()
+            .map(|(id, msg)| BatchVerifyReq {
+                id: *id,
+                committed: &self.sessions[id].committed,
+                draft: &msg.tokens,
+                mode: msg.mode,
+            })
+            .collect();
+        let verdicts = self.backend.verify_batch(
+            &reqs,
+            self.cfg.temperature,
+            self.cfg.top_p,
+            &mut self.rng,
+        )?;
+        drop(reqs);
+        if verdicts.len() != jobs.len() {
+            bail!(
+                "backend returned {} verdicts for {} requests",
+                verdicts.len(),
+                jobs.len()
+            );
+        }
+
+        // ---- apply ------------------------------------------------
+        let mut out = Vec::with_capacity(jobs.len());
+        for ((id, msg), v) in jobs.into_iter().zip(verdicts) {
             let Some(core) = self.sessions.get_mut(&id) else {
-                continue;
+                continue; // unreachable: planned against live sessions
             };
-            // Compact wire: full draft distributions never cross the
-            // air — the backend reconstructs them cloud-side (point
-            // mass / its own forward pass; see protocol module docs on
-            // the documented Regime-B approximation).
-            let v = self.backend.verify_block(
-                id,
-                &core.committed,
-                &msg.tokens,
-                &[],
-                msg.mode,
-                self.cfg.temperature,
-                self.cfg.top_p,
-                &mut self.rng,
-            )?;
             let out_of_capacity =
                 self.backend.remaining_capacity(id) <= self.cfg.capacity_floor;
             let finished =
@@ -739,8 +832,17 @@ impl VerifierCore {
         for t in expired_residues {
             if let Some(f) = self.finished.remove(&t) {
                 self.last_verdict.remove(&f.session);
+                self.metrics.residues_expired += 1;
             }
         }
+        // Defensive invariant sweep: every open-nonce entry must name a
+        // LIVE session (finish/evict/abort all clean their nonce up).
+        // Enforcing it here — on the same periodic timer — means a
+        // future edit that forgets one cleanup path degrades into a
+        // bounded map instead of an unbounded leak on an idle cloud.
+        let sessions = &self.sessions;
+        self.open_nonces.retain(|_, id| sessions.contains_key(id));
+        self.nonce_of.retain(|id, _| sessions.contains_key(id));
         // recompute the gate from what survived (resumes may have left
         // it stale-early, which only costs one extra sweep)
         self.next_sweep_ms = self
@@ -785,6 +887,19 @@ impl VerifierCore {
 // Dedicated verifier thread + async handle
 // ---------------------------------------------------------------------
 
+/// What the connection layer owes the edge for one submitted draft.
+#[derive(Debug, Clone)]
+pub enum VerifyReply {
+    /// A verdict to deliver as a `Verify` frame.
+    Verdict(VerifyMsg),
+    /// Admission-control deferral to deliver as a `Busy` frame (wire
+    /// v4): the round was not admitted; the edge retries it.
+    Busy {
+        round: u32,
+        retry_after_ms: u32,
+    },
+}
+
 enum VerifierCmd {
     Open {
         prompt: Vec<i32>,
@@ -796,7 +911,9 @@ enum VerifierCmd {
         id: u32,
         attachment: u64,
         msg: DraftMsg,
-        reply: oneshot::Sender<Result<Option<VerifyMsg>>>,
+        /// Peer negotiated wire >= 4 (understands `Busy` deferrals).
+        can_defer: bool,
+        reply: oneshot::Sender<Result<Option<VerifyReply>>>,
     },
     Cancel {
         id: u32,
@@ -886,18 +1003,22 @@ impl VerifierHandle {
     /// the draft was a swallowed duplicate, or this waiter was
     /// superseded by a later retransmit of the same round (the newest
     /// requester delivers the verdict) — a dropped reply channel is
-    /// therefore benign, not an error.
+    /// therefore benign, not an error. `Ok(Some(VerifyReply::Busy))`
+    /// means the admission queue turned the round away (only possible
+    /// when `can_defer` — the peer negotiated wire >= 4).
     pub async fn verify(
         &self,
         id: u32,
         attachment: u64,
         msg: DraftMsg,
-    ) -> Result<Option<VerifyMsg>> {
+        can_defer: bool,
+    ) -> Result<Option<VerifyReply>> {
         let (reply, rx) = oneshot::channel();
         self.post(VerifierCmd::Verify {
             id,
             attachment,
             msg,
+            can_defer,
             reply,
         })?;
         match rx.await {
@@ -967,12 +1088,19 @@ impl VerifierHandle {
     }
 }
 
+/// Upper bound on one verifier-loop wait: parked sessions, finished
+/// residues and nonce orphans are reaped on THIS periodic timer even
+/// when no traffic flows and no batch deadline is armed — an idle cloud
+/// must not depend on the next frame happening to arrive to bound its
+/// residue maps.
+const SWEEP_INTERVAL: Duration = Duration::from_millis(200);
+
 fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
     let start = Instant::now();
     let now_ms = |start: &Instant| start.elapsed().as_secs_f64() * 1e3;
     // keyed by (session, round): with pipelining a session can have
     // several rounds awaiting replies at once
-    let mut replies: HashMap<(u32, u32), oneshot::Sender<Result<Option<VerifyMsg>>>> =
+    let mut replies: HashMap<(u32, u32), oneshot::Sender<Result<Option<VerifyReply>>>> =
         HashMap::new();
     let mut deadline: Option<f64> = None;
 
@@ -983,7 +1111,7 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
     // owed".
     fn flush(
         core: &mut VerifierCore,
-        replies: &mut HashMap<(u32, u32), oneshot::Sender<Result<Option<VerifyMsg>>>>,
+        replies: &mut HashMap<(u32, u32), oneshot::Sender<Result<Option<VerifyReply>>>>,
         deadline: &mut Option<f64>,
         now: f64,
     ) {
@@ -992,7 +1120,7 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                 Ok(results) => {
                     for (id, vmsg) in results {
                         if let Some(tx) = replies.remove(&(id, vmsg.round)) {
-                            let _ = tx.send(Ok(Some(vmsg)));
+                            let _ = tx.send(Ok(Some(VerifyReply::Verdict(vmsg))));
                         }
                     }
                 }
@@ -1045,9 +1173,12 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                 flush(&mut core, &mut replies, &mut deadline, now);
             }
         }
+        // capped at SWEEP_INTERVAL so the eviction sweep above runs on a
+        // periodic timer regardless of traffic or batch deadlines
         let timeout = match deadline {
-            Some(d) => Duration::from_secs_f64(((d - now_ms(&start)) / 1e3).max(0.0)),
-            None => Duration::from_millis(200),
+            Some(d) => Duration::from_secs_f64(((d - now_ms(&start)) / 1e3).max(0.0))
+                .min(SWEEP_INTERVAL),
+            None => SWEEP_INTERVAL,
         };
         match rx.recv_timeout(timeout) {
             Ok(VerifierCmd::Open {
@@ -1062,10 +1193,11 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                 id,
                 attachment,
                 msg,
+                can_defer,
                 reply,
             }) => {
                 let round = msg.round;
-                match core.submit(now_ms(&start), attachment, msg) {
+                match core.submit(now_ms(&start), attachment, msg, can_defer) {
                     Ok(SubmitOutcome::Queued(decision)) => {
                         replies.insert((id, round), reply);
                         match decision {
@@ -1085,7 +1217,7 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                         replies.insert((id, round), reply);
                     }
                     Ok(SubmitOutcome::Replay(v)) => {
-                        let _ = reply.send(Ok(Some(v)));
+                        let _ = reply.send(Ok(Some(VerifyReply::Verdict(v))));
                     }
                     Ok(SubmitOutcome::TakeOver) => {
                         // replace the previous waiter; its dropped
@@ -1095,6 +1227,14 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                     }
                     Ok(SubmitOutcome::Swallowed) => {
                         let _ = reply.send(Ok(None));
+                    }
+                    // admission queue full: answer immediately, no
+                    // waiter recorded (the round left no state behind)
+                    Ok(SubmitOutcome::Busy { retry_after_ms }) => {
+                        let _ = reply.send(Ok(Some(VerifyReply::Busy {
+                            round,
+                            retry_after_ms,
+                        })));
                     }
                     Err(e) => {
                         let _ = reply.send(Err(e));
@@ -1166,6 +1306,10 @@ mod tests {
     use crate::coordinator::edge::DraftSource;
     use crate::protocol::{VerifyMode, WireFormat};
     use crate::serve::backend::{SyntheticDraft, SyntheticTarget};
+
+    fn rng() -> SplitMix64 {
+        SplitMix64::new(0)
+    }
 
     fn core(window_ms: f64, max_batch: usize) -> VerifierCore {
         let cfg = VerifierConfig {
@@ -1267,7 +1411,7 @@ mod tests {
                     continue;
                 }
                 let msg = draft_for(id, round, committed, 4);
-                c.submit(round as f64, att, msg).unwrap();
+                c.submit(round as f64, att, msg, false).unwrap();
             }
             for (id, vmsg) in c.close_window(round as f64).unwrap() {
                 let committed = if id == a { &mut committed_a } else { &mut committed_b };
@@ -1295,17 +1439,17 @@ mod tests {
         let prompt = vec![1, 70, 71];
         let o = c.open_session(&prompt, 8, 0).unwrap();
         let id = o.session;
-        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 2)).unwrap());
+        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 2), false).unwrap());
         // byte-identical duplicate of the in-flight round: the round is
         // NOT double-queued, but the newest requester owns the reply
         // (its predecessor may be a dead connection's verify task)
         assert!(matches!(
-            c.submit(0.1, o.attachment, draft_for(id, 0, &prompt, 2)).unwrap(),
+            c.submit(0.1, o.attachment, draft_for(id, 0, &prompt, 2), false).unwrap(),
             SubmitOutcome::TakeOver
         ));
         // a draft from a STALE attachment epoch is swallowed outright
         assert!(matches!(
-            c.submit(0.15, o.attachment + 99, draft_for(id, 0, &prompt, 2)).unwrap(),
+            c.submit(0.15, o.attachment + 99, draft_for(id, 0, &prompt, 2), false).unwrap(),
             SubmitOutcome::Swallowed
         ));
         // the round still runs exactly once
@@ -1317,9 +1461,9 @@ mod tests {
         let mut committed = prompt.clone();
         committed.extend_from_slice(&draft_for(id, 0, &prompt, 2).tokens[..v.tau as usize]);
         committed.push(v.correction);
-        queued(c.submit(0.3, o.attachment, draft_for(id, 1, &committed, 2)).unwrap());
+        queued(c.submit(0.3, o.attachment, draft_for(id, 1, &committed, 2), false).unwrap());
         assert!(c
-            .submit(0.4, o.attachment, draft_for(id, 2, &committed, 2))
+            .submit(0.4, o.attachment, draft_for(id, 2, &committed, 2), false)
             .is_err());
     }
 
@@ -1329,12 +1473,12 @@ mod tests {
         let prompt = vec![1, 70, 71];
         let o = c.open_session(&prompt, 64, 0).unwrap();
         let id = o.session;
-        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 2)).unwrap());
+        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 2), false).unwrap());
         let out = c.close_window(0.0).unwrap();
         assert_eq!(out.len(), 1);
         let first = out[0].1.clone();
         // retransmit of the verified round: cached verdict, no advance
-        let replay = match c.submit(1.0, o.attachment, draft_for(id, 0, &prompt, 2)).unwrap() {
+        let replay = match c.submit(1.0, o.attachment, draft_for(id, 0, &prompt, 2), false).unwrap() {
             SubmitOutcome::Replay(v) => v,
             other => panic!("expected Replay, got {other:?}"),
         };
@@ -1345,10 +1489,10 @@ mod tests {
         let mut committed = prompt.clone();
         committed.extend_from_slice(&draft_for(id, 0, &prompt, 2).tokens[..first.tau as usize]);
         committed.push(first.correction);
-        queued(c.submit(2.0, o.attachment, draft_for(id, 1, &committed, 2)).unwrap());
+        queued(c.submit(2.0, o.attachment, draft_for(id, 1, &committed, 2), false).unwrap());
         let _ = c.close_window(2.0).unwrap();
         assert!(matches!(
-            c.submit(3.0, o.attachment, draft_for(id, 0, &prompt, 2)).unwrap(),
+            c.submit(3.0, o.attachment, draft_for(id, 0, &prompt, 2), false).unwrap(),
             SubmitOutcome::Swallowed
         ));
     }
@@ -1360,13 +1504,13 @@ mod tests {
         let o = c.open_session(&prompt, 64, 0).unwrap();
         let (id, token) = (o.session, o.resume_token);
         // round 0 verified, verdict DELIVERED (edge applied it)
-        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 4)).unwrap());
+        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 4), false).unwrap());
         let v0 = c.close_window(0.0).unwrap().remove(0).1;
         let mut edge_committed = prompt.clone();
         edge_committed.extend_from_slice(&draft_for(id, 0, &prompt, 4).tokens[..v0.tau as usize]);
         edge_committed.push(v0.correction);
         // round 1 verified, reply LOST (link died in flight)
-        queued(c.submit(1.0, o.attachment, draft_for(id, 1, &edge_committed, 4)).unwrap());
+        queued(c.submit(1.0, o.attachment, draft_for(id, 1, &edge_committed, 4), false).unwrap());
         let _v1 = c.close_window(1.0).unwrap().remove(0).1;
         assert!(c.detach(2.0, id, o.attachment));
         assert_eq!(c.parked_sessions(), 1);
@@ -1396,7 +1540,7 @@ mod tests {
         // max_new 5 : one K=4 round (+correction) finishes the session
         let o = c.open_session(&prompt, 5, 0).unwrap();
         let (id, token) = (o.session, o.resume_token);
-        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 4)).unwrap());
+        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 4), false).unwrap());
         let v = c.close_window(0.0).unwrap().remove(0).1;
         assert!(v.eos, "session must finish in one round");
         assert_eq!(c.active_sessions(), 0);
@@ -1484,8 +1628,8 @@ mod tests {
         let oa = c.open_session(&pa, 8, 0).unwrap();
         let ob = c.open_session(&pb, 8, 0).unwrap();
         let (a, b) = (oa.session, ob.session);
-        queued(c.submit(0.0, oa.attachment, draft_for(a, 0, &pa, 2)).unwrap());
-        c.submit(0.0, ob.attachment, draft_for(b, 0, &pb, 2)).unwrap();
+        queued(c.submit(0.0, oa.attachment, draft_for(a, 0, &pa, 2), false).unwrap());
+        c.submit(0.0, ob.attachment, draft_for(b, 0, &pb, 2), false).unwrap();
         // link carrying session a dies mid-window: parked, not aborted
         assert!(c.detach(0.5, a, oa.attachment));
         let out = c.close_window(1.0).unwrap();
@@ -1505,8 +1649,8 @@ mod tests {
         let oa = c.open_session(&pa, 8, 0).unwrap();
         let ob = c.open_session(&pb, 8, 0).unwrap();
         let (a, b) = (oa.session, ob.session);
-        c.submit(0.0, oa.attachment, draft_for(a, 0, &pa, 2)).unwrap();
-        c.submit(0.0, ob.attachment, draft_for(b, 0, &pb, 2)).unwrap();
+        c.submit(0.0, oa.attachment, draft_for(a, 0, &pa, 2), false).unwrap();
+        c.submit(0.0, ob.attachment, draft_for(b, 0, &pb, 2), false).unwrap();
         c.abort_session(a);
         let out = c.close_window(0.0).unwrap();
         assert_eq!(out.len(), 1);
@@ -1521,18 +1665,18 @@ mod tests {
         let o = c.open_session(&prompt, 64, 0).unwrap();
         let id = o.session;
         let d0 = draft_for(id, 0, &prompt, 4);
-        queued(c.submit(0.0, o.attachment, d0.clone()).unwrap());
+        queued(c.submit(0.0, o.attachment, d0.clone(), false).unwrap());
 
         // the edge pipelines round 1 from the optimistic prefix
         let assumed = assumed_outcome(&prompt, &d0.tokens);
         let d1 = spec_draft_for(id, 1, &prompt, &assumed, 4);
         assert!(matches!(
-            c.submit(0.1, o.attachment, d1.clone()).unwrap(),
+            c.submit(0.1, o.attachment, d1.clone(), false).unwrap(),
             SubmitOutcome::Deferred
         ));
         // a retransmit of the queued round takes over, not double-queues
         assert!(matches!(
-            c.submit(0.2, o.attachment, d1).unwrap(),
+            c.submit(0.2, o.attachment, d1, false).unwrap(),
             SubmitOutcome::TakeOver
         ));
 
@@ -1564,11 +1708,11 @@ mod tests {
         let o = c.open_session(&prompt, 64, 0).unwrap();
         let id = o.session;
         let d0 = draft_for(id, 0, &prompt, 4);
-        queued(c.submit(0.0, o.attachment, d0.clone()).unwrap());
+        queued(c.submit(0.0, o.attachment, d0.clone(), false).unwrap());
         let assumed = assumed_outcome(&prompt, &d0.tokens);
         let d1 = spec_draft_for(id, 1, &prompt, &assumed, 4);
         assert!(matches!(
-            c.submit(0.1, o.attachment, d1).unwrap(),
+            c.submit(0.1, o.attachment, d1, false).unwrap(),
             SubmitOutcome::Deferred
         ));
 
@@ -1587,7 +1731,7 @@ mod tests {
         // the redraft from the TRUE prefix (same round number) verifies
         let mut committed = prompt.clone();
         committed.push(correction);
-        queued(c.submit(0.5, o.attachment, draft_for(id, 1, &committed, 4)).unwrap());
+        queued(c.submit(0.5, o.attachment, draft_for(id, 1, &committed, 4), false).unwrap());
         let out = c.close_window(0.6).unwrap();
         assert_eq!(out[0].1.round, 1);
         assert_eq!(c.metrics.rounds, 2);
@@ -1600,21 +1744,21 @@ mod tests {
         let o = c.open_session(&prompt, 64, 0).unwrap();
         let id = o.session;
         let d0 = draft_for(id, 0, &prompt, 4);
-        queued(c.submit(0.0, o.attachment, d0.clone()).unwrap());
+        queued(c.submit(0.0, o.attachment, d0.clone(), false).unwrap());
         let assumed = assumed_outcome(&prompt, &d0.tokens);
         let d1 = spec_draft_for(id, 1, &prompt, &assumed, 4);
-        assert!(matches!(c.submit(0.1, o.attachment, d1).unwrap(), SubmitOutcome::Deferred));
+        assert!(matches!(c.submit(0.1, o.attachment, d1, false).unwrap(), SubmitOutcome::Deferred));
         let mut spec2 = assumed.clone();
         let chained = assumed_outcome(&prompt, &spec2);
         spec2.extend(chained);
         let d2 = spec_draft_for(id, 2, &prompt, &spec2, 4);
-        assert!(matches!(c.submit(0.2, o.attachment, d2).unwrap(), SubmitOutcome::Deferred));
+        assert!(matches!(c.submit(0.2, o.attachment, d2, false).unwrap(), SubmitOutcome::Deferred));
         // depth bound: pending(1) + queued(2) + one more deferred = 4 ok,
         // a fifth in-flight round is a protocol violation
         let d3 = spec_draft_for(id, 3, &prompt, &spec2, 4);
-        assert!(matches!(c.submit(0.3, o.attachment, d3).unwrap(), SubmitOutcome::Deferred));
+        assert!(matches!(c.submit(0.3, o.attachment, d3, false).unwrap(), SubmitOutcome::Deferred));
         let d4 = spec_draft_for(id, 4, &prompt, &spec2, 4);
-        assert!(c.submit(0.35, o.attachment, d4).is_err());
+        assert!(c.submit(0.35, o.attachment, d4, false).is_err());
 
         // a stale attachment's cancel is ignored
         assert!(c.cancel(id, o.attachment + 9, 1).is_empty());
@@ -1640,7 +1784,7 @@ mod tests {
         let o = c.open_session(&prompt, 5, 0).unwrap();
         let id = o.session;
         let d0 = draft_for(id, 0, &prompt, 4);
-        queued(c.submit(0.0, o.attachment, d0.clone()).unwrap());
+        queued(c.submit(0.0, o.attachment, d0.clone(), false).unwrap());
         let v = c.close_window(0.1).unwrap().remove(0).1;
         assert!(v.eos, "session must finish in one round");
 
@@ -1649,14 +1793,14 @@ mod tests {
         let assumed = assumed_outcome(&prompt, &d0.tokens);
         let d1 = spec_draft_for(id, 1, &prompt, &assumed, 4);
         assert!(matches!(
-            c.submit(0.2, o.attachment, d1).unwrap(),
+            c.submit(0.2, o.attachment, d1, false).unwrap(),
             SubmitOutcome::Swallowed
         ));
         assert_eq!(c.metrics.drafts_cancelled, 1);
         assert_eq!(c.metrics.draft_tokens_wasted, 4);
         // ...and a duplicate of the FINAL round still replays its verdict
         assert!(matches!(
-            c.submit(0.3, o.attachment, d0).unwrap(),
+            c.submit(0.3, o.attachment, d0, false).unwrap(),
             SubmitOutcome::Replay(_)
         ));
     }
@@ -1668,11 +1812,11 @@ mod tests {
         let o = c.open_session(&prompt, 5, 0).unwrap();
         let id = o.session;
         let d0 = draft_for(id, 0, &prompt, 4);
-        queued(c.submit(0.0, o.attachment, d0.clone()).unwrap());
+        queued(c.submit(0.0, o.attachment, d0.clone(), false).unwrap());
         // speculative round 1 queued BEFORE the finishing verdict
         let assumed = assumed_outcome(&prompt, &d0.tokens);
         let d1 = spec_draft_for(id, 1, &prompt, &assumed, 4);
-        assert!(matches!(c.submit(0.1, o.attachment, d1).unwrap(), SubmitOutcome::Deferred));
+        assert!(matches!(c.submit(0.1, o.attachment, d1, false).unwrap(), SubmitOutcome::Deferred));
         let v = c.close_window(0.2).unwrap().remove(0).1;
         assert!(v.eos);
         // promotion sees the dead session and voids the queue
@@ -1681,6 +1825,295 @@ mod tests {
         assert_eq!(dropped, vec![(id, 1)]);
         assert_eq!(c.metrics.drafts_cancelled, 1);
         assert_eq!(c.metrics.draft_tokens_wasted, 4);
+    }
+
+    // --- batched verification executor -------------------------------
+
+    /// Delegates to a `SyntheticTarget` but deliberately does NOT
+    /// override `verify_batch`, so `close_window` runs the default
+    /// per-session fallback — the reference trajectory the batched
+    /// override is pinned against.
+    struct SequentialOnly(SyntheticTarget);
+
+    impl VerifyBackend for SequentialOnly {
+        fn start_session(&mut self, id: u32, prompt: &[i32]) -> Result<()> {
+            self.0.start_session(id, prompt)
+        }
+
+        fn end_session(&mut self, id: u32) {
+            self.0.end_session(id);
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn verify_block(
+            &mut self,
+            id: u32,
+            committed: &[i32],
+            draft: &[i32],
+            draft_probs: &[Vec<f32>],
+            mode: VerifyMode,
+            temperature: f32,
+            top_p: f32,
+            rng: &mut SplitMix64,
+        ) -> Result<crate::serve::backend::BackendVerdict> {
+            self.0
+                .verify_block(id, committed, draft, draft_probs, mode, temperature, top_p, rng)
+        }
+
+        fn deploy(&mut self, version: &str) -> Result<u64> {
+            self.0.deploy(version)
+        }
+
+        fn version_name(&self) -> String {
+            self.0.version_name()
+        }
+
+        fn version_seq(&self) -> u64 {
+            self.0.version_seq()
+        }
+
+        fn remaining_capacity(&self, id: u32) -> usize {
+            self.0.remaining_capacity(id)
+        }
+    }
+
+    /// Drive a core with lock-step rounds (ragged strides chosen by
+    /// `k_of(session_index, round)`) until every session finishes;
+    /// returns the per-session committed sequences.
+    fn drive(
+        c: &mut VerifierCore,
+        seed: u64,
+        users: usize,
+        max_new: usize,
+        k_of: impl Fn(usize, usize) -> usize,
+    ) -> Vec<Vec<i32>> {
+        let prompts: Vec<Vec<i32>> = (0..users)
+            .map(|i| vec![1, 70 + i as i32, 90 + 2 * i as i32])
+            .collect();
+        let opens: Vec<OpenInfo> = prompts
+            .iter()
+            .map(|p| c.open_session(p, max_new, 0).unwrap())
+            .collect();
+        let mut committed = prompts;
+        let mut rounds_ctr = vec![0u32; users];
+        let mut done = vec![false; users];
+        let mut iter = 0usize;
+        while done.iter().any(|d| !d) && iter < 64 {
+            let mut sent: Vec<Option<Vec<i32>>> = vec![None; users];
+            for i in 0..users {
+                if done[i] {
+                    continue;
+                }
+                let mut d = SyntheticDraft::new(seed);
+                let k = k_of(i, iter).clamp(1, 8);
+                let p = d.propose(&committed[i], k, 0.0, 1.0, &mut rng()).unwrap();
+                let msg = DraftMsg {
+                    session: opens[i].session,
+                    round: rounds_ctr[i],
+                    tokens: p.tokens.clone(),
+                    chosen_probs: p.chosen_probs,
+                    mode: VerifyMode::Greedy,
+                    wire: WireFormat::Compact,
+                    basis_len: 0,
+                    spec: vec![],
+                };
+                queued(c.submit(iter as f64, opens[i].attachment, msg, false).unwrap());
+                sent[i] = Some(p.tokens);
+            }
+            for (id, vmsg) in c.close_window(iter as f64).unwrap() {
+                let i = opens.iter().position(|o| o.session == id).unwrap();
+                let toks = sent[i].take().unwrap();
+                committed[i].extend_from_slice(&toks[..vmsg.tau as usize]);
+                committed[i].push(vmsg.correction);
+                rounds_ctr[i] += 1;
+                if vmsg.eos {
+                    done[i] = true;
+                }
+            }
+            iter += 1;
+        }
+        assert!(done.iter().all(|&d| d), "sessions failed to finish");
+        committed
+    }
+
+    /// Tentpole determinism pin: the batched `close_window` (planner
+    /// buckets → one `verify_batch` call) commits sequences
+    /// BYTE-IDENTICAL to the per-session fallback, for ragged strides
+    /// K ∈ 1..=8 and seeds [3, 17, 42] against a drifted target.
+    #[test]
+    fn batched_close_window_matches_per_session_fallback_across_seeds() {
+        for &seed in &[3u64, 17, 42] {
+            let mk = || {
+                let mut t = SyntheticTarget::new(seed).with_version("evolved", 0.3);
+                t.deploy("evolved").unwrap();
+                t
+            };
+            let cfg = || VerifierConfig {
+                window_ms: 10.0,
+                max_batch: 8,
+                ..Default::default()
+            };
+            let mut batched = VerifierCore::new(cfg(), Box::new(mk()));
+            let mut fallback = VerifierCore::new(cfg(), Box::new(SequentialOnly(mk())));
+            let k_of = |i: usize, r: usize| 1 + (i + r) % 8;
+            let a = drive(&mut batched, seed, 5, 20, k_of);
+            let b = drive(&mut fallback, seed, 5, 20, k_of);
+            assert_eq!(
+                a, b,
+                "batched close_window diverged from the per-session fallback (seed {seed})"
+            );
+            assert_eq!(batched.metrics.rounds, fallback.metrics.rounds);
+            assert_eq!(batched.metrics.accepted, fallback.metrics.accepted);
+            assert_eq!(batched.metrics.drafted, fallback.metrics.drafted);
+            assert_eq!(
+                batched.metrics.tokens_committed,
+                fallback.metrics.tokens_committed
+            );
+        }
+    }
+
+    #[test]
+    fn capacity_floor_finishes_session_mid_batch() {
+        let cfg = VerifierConfig {
+            capacity_floor: 10,
+            ..Default::default()
+        };
+        let mut backend = SyntheticTarget::new(7);
+        backend.max_ctx = 20;
+        let mut c = VerifierCore::new(cfg, Box::new(backend));
+        // session a's long prompt puts it near the KV ceiling; b is far
+        let pa: Vec<i32> = (0..10).map(|i| 1 + i).collect();
+        let pb = vec![1, 80, 81];
+        let oa = c.open_session(&pa, 64, 0).unwrap();
+        let ob = c.open_session(&pb, 64, 0).unwrap();
+        let (a, b) = (oa.session, ob.session);
+        queued(c.submit(0.0, oa.attachment, draft_for(a, 0, &pa, 4), false).unwrap());
+        queued(c.submit(0.0, ob.attachment, draft_for(b, 0, &pb, 4), false).unwrap());
+        let out = c.close_window(0.1).unwrap();
+        assert_eq!(out.len(), 2);
+        let va = &out.iter().find(|(id, _)| *id == a).unwrap().1;
+        let vb = &out.iter().find(|(id, _)| *id == b).unwrap().1;
+        // zero drift: both fully accepted — but a crossed the capacity
+        // floor mid-batch and is finished + torn down, b decodes on
+        assert_eq!(va.tau, 4);
+        assert!(va.eos, "capacity floor must finish the session");
+        assert!(!vb.eos);
+        assert_eq!(c.active_sessions(), 1);
+        assert_eq!(c.metrics.sessions_completed, 1);
+        // the survivor's next round still verifies in a fresh batch
+        let mut committed_b = pb.clone();
+        let toks = draft_for(b, 0, &pb, 4).tokens;
+        committed_b.extend_from_slice(&toks[..vb.tau as usize]);
+        committed_b.push(vb.correction);
+        queued(c.submit(1.0, ob.attachment, draft_for(b, 1, &committed_b, 4), false).unwrap());
+        assert_eq!(c.close_window(1.1).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn orphaned_pending_drafts_are_counted_not_silent() {
+        let mut c = core(10.0, 8);
+        let pa = vec![1, 70, 71];
+        let pb = vec![1, 80, 81];
+        let oa = c.open_session(&pa, 8, 0).unwrap();
+        let ob = c.open_session(&pb, 8, 0).unwrap();
+        let (a, b) = (oa.session, ob.session);
+        queued(c.submit(0.0, oa.attachment, draft_for(a, 0, &pa, 2), false).unwrap());
+        queued(c.submit(0.0, ob.attachment, draft_for(b, 0, &pb, 2), false).unwrap());
+        // a's pending draft vanishes behind the window's back (the
+        // defensive branch a future lifecycle edit could reach)
+        c.pending.remove(&a);
+        let out = c.close_window(0.5).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, b);
+        assert_eq!(c.metrics.drafts_orphaned, 1);
+        // ...and a session torn down under its pending draft
+        let mut committed_b = pb.clone();
+        let toks = draft_for(b, 0, &pb, 2).tokens;
+        committed_b.extend_from_slice(&toks[..out[0].1.tau as usize]);
+        committed_b.push(out[0].1.correction);
+        queued(c.submit(1.0, ob.attachment, draft_for(b, 1, &committed_b, 2), false).unwrap());
+        c.sessions.remove(&b);
+        let out = c.close_window(1.5).unwrap();
+        assert!(out.is_empty(), "orphaned member must produce no verdict");
+        assert_eq!(c.metrics.drafts_orphaned, 2);
+    }
+
+    #[test]
+    fn admission_queue_defers_fresh_rounds_with_busy() {
+        let cfg = VerifierConfig {
+            window_ms: 10.0,
+            max_batch: 8,
+            admission_queue: 1,
+            ..Default::default()
+        };
+        let mut c = VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)));
+        let pa = vec![1, 70, 71];
+        let pb = vec![1, 80, 81];
+        let oa = c.open_session(&pa, 64, 0).unwrap();
+        let ob = c.open_session(&pb, 64, 0).unwrap();
+        let (a, b) = (oa.session, ob.session);
+        queued(c.submit(0.0, oa.attachment, draft_for(a, 0, &pa, 2), true).unwrap());
+        // b's fresh round hits the bound: deferred with a retry hint
+        match c.submit(0.1, ob.attachment, draft_for(b, 0, &pb, 2), true).unwrap() {
+            SubmitOutcome::Busy { retry_after_ms } => assert!(retry_after_ms >= 1),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        assert_eq!(c.metrics.drafts_busy, 1);
+        // a duplicate of the ADMITTED round is deduped before admission
+        // (TakeOver, never Busy) — dedup filters run first
+        assert!(matches!(
+            c.submit(0.15, oa.attachment, draft_for(a, 0, &pa, 2), true).unwrap(),
+            SubmitOutcome::TakeOver
+        ));
+        // a legacy peer (wire < 4) is always admitted
+        queued(c.submit(0.2, ob.attachment, draft_for(b, 0, &pb, 2), false).unwrap());
+        let out = c.close_window(0.3).unwrap();
+        assert_eq!(out.len(), 2, "legacy round must verify alongside a's");
+        // the queue drained: b's retried NEXT round is admitted
+        let vb = &out.iter().find(|(id, _)| *id == b).unwrap().1;
+        let mut committed_b = pb.clone();
+        let toks = draft_for(b, 0, &pb, 2).tokens;
+        committed_b.extend_from_slice(&toks[..vb.tau as usize]);
+        committed_b.push(vb.correction);
+        queued(c.submit(1.0, ob.attachment, draft_for(b, 1, &committed_b, 2), true).unwrap());
+        assert_eq!(c.metrics.drafts_busy, 1, "admission after drain must not defer");
+    }
+
+    #[test]
+    fn idle_cloud_sweeps_residues_on_the_timer() {
+        let rt = tokio::runtime::Builder::new_current_thread()
+            .enable_all()
+            .build()
+            .unwrap();
+        rt.block_on(async {
+            let cfg = VerifierConfig {
+                window_ms: 1.0,
+                resume_grace_ms: 50.0,
+                ..Default::default()
+            };
+            let h = VerifierHandle::spawn(cfg, || {
+                Ok(Box::new(SyntheticTarget::new(7)) as Box<dyn VerifyBackend>)
+            })
+            .unwrap();
+            let prompt = vec![1, 70, 71];
+            // max_new 5: one K=4 round (+ bonus) finishes the session
+            let o = h.open(prompt.clone(), 5, 0).await.unwrap();
+            let msg = draft_for(o.session, 0, &prompt, 4);
+            match h.verify(o.session, o.attachment, msg, false).await.unwrap() {
+                Some(VerifyReply::Verdict(v)) => assert!(v.eos),
+                other => panic!("expected a verdict, got {other:?}"),
+            }
+            // NO further traffic: the periodic sweep alone must reap
+            // the finished residue once its grace window expires
+            tokio::time::sleep(Duration::from_millis(600)).await;
+            let stats = h.stats().await.unwrap();
+            assert_eq!(stats.sessions_completed, 1);
+            assert_eq!(
+                stats.residues_expired, 1,
+                "idle cloud kept its residue past the grace window"
+            );
+            h.shutdown().await.unwrap();
+        });
     }
 
     #[test]
@@ -1695,7 +2128,7 @@ mod tests {
         assert!(seq2 > seq1);
         assert_eq!(c.metrics.hot_swaps, 1);
         // the session survives and keeps decoding on the new version
-        c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 4)).unwrap();
+        c.submit(0.0, o.attachment, draft_for(id, 0, &prompt, 4), false).unwrap();
         let out = c.close_window(0.0).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(c.active_sessions(), 1);

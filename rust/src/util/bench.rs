@@ -18,6 +18,18 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("iters".into(), Json::Num(self.iters as f64)),
+            ("mean_ns".into(), Json::Num(self.mean_ns)),
+            ("p50_ns".into(), Json::Num(self.p50_ns)),
+            ("p95_ns".into(), Json::Num(self.p95_ns)),
+            ("min_ns".into(), Json::Num(self.min_ns)),
+        ])
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10}  mean {:>12}  p50 {:>12}  p95 {:>12}",
@@ -104,6 +116,37 @@ impl Group {
         self.results.push(r);
         self
     }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(vec![
+            ("group".into(), Json::Str(self.name.clone())),
+            (
+                "results".into(),
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Write a machine-readable report of the given groups when the
+/// `FLEXSPEC_BENCH_JSON` env var names a path (CI uploads it as an
+/// artifact so bench trajectories survive the run). No-op otherwise.
+pub fn maybe_write_json_report(groups: &[&Group]) -> std::io::Result<()> {
+    let Some(path) = std::env::var_os("FLEXSPEC_BENCH_JSON") else {
+        return Ok(());
+    };
+    let path = std::path::PathBuf::from(path);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let json =
+        crate::util::json::Json::Arr(groups.iter().map(|g| g.to_json()).collect());
+    std::fs::write(&path, json.to_string_pretty())?;
+    println!("\nwrote bench report to {}", path.display());
+    Ok(())
 }
 
 #[cfg(test)]

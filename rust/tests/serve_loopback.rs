@@ -497,6 +497,144 @@ fn pipelined_loopback_matches_sequential_trajectory_and_sim_counters() {
     check(&muxed, &mux_metrics, "mux");
 }
 
+/// Tentpole acceptance: under a SATURATED admission queue the cloud
+/// answers drafts with `Busy`, the edges retry with backoff, and NOT A
+/// SINGLE committed token changes — sequences stay byte-identical to
+/// the unsaturated simulator reference, in sequential AND pipelined
+/// mode. Edge-side retry tallies must equal the cloud's deferral count
+/// (every `Busy` is answered by exactly one re-send on a clean link).
+#[test]
+fn saturated_admission_queue_defers_but_never_changes_tokens() {
+    const USERS: usize = 6;
+    const MAX_NEW: usize = 16;
+
+    // unsaturated virtual-clock reference
+    let cfg = ServeConfig {
+        users: USERS,
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed: SEED,
+        ..Default::default()
+    };
+    let mut backend = evolved_target().unwrap();
+    let mut make =
+        |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(SEED))) };
+    let sim = serve_with(
+        &mut backend,
+        &mut make,
+        &prompts(USERS),
+        &JETSON_ORIN,
+        &A800_70B,
+        &NetworkProfile::new(NetworkKind::FourG),
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(sim.completed, USERS);
+    assert_eq!(sim.drafts_busy_deferred, 0, "reference must be unsaturated");
+
+    let edges = || -> Vec<(Box<dyn DraftSource + Send>, Vec<i32>)> {
+        prompts(USERS)
+            .into_iter()
+            .map(|p| {
+                (
+                    Box::new(SyntheticDraft::new(SEED)) as Box<dyn DraftSource + Send>,
+                    p,
+                )
+            })
+            .collect()
+    };
+    // admission_queue 2 << USERS: concurrent lock-step rounds overflow
+    // the bound every window, so deferrals are guaranteed
+    let vcfg = || VerifierConfig {
+        window_ms: 5.0,
+        admission_queue: 2,
+        seed: SEED,
+        ..Default::default()
+    };
+
+    for depth in [1usize, 2] {
+        let ecfg = EdgeSessionConfig {
+            max_new: MAX_NEW,
+            fixed_k: Some(4),
+            seed: SEED,
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let (reports, metrics) = rt()
+            .block_on(serve_loopback(
+                vcfg(),
+                || Ok(Box::new(evolved_target()?) as Box<dyn VerifyBackend>),
+                edges(),
+                ecfg,
+            ))
+            .unwrap();
+        assert_eq!(metrics.sessions_completed, USERS, "depth {depth}");
+        assert!(
+            metrics.drafts_busy > 0,
+            "depth {depth}: saturation must defer some drafts"
+        );
+        let edge_retries: usize = reports.iter().map(|r| r.busy_retries).sum();
+        assert_eq!(
+            edge_retries, metrics.drafts_busy,
+            "depth {depth}: every Busy must be answered by exactly one retry"
+        );
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(
+                r.committed, sim.per_session_committed[i],
+                "depth {depth}: admission control changed a committed token (prompt {i})"
+            );
+        }
+    }
+}
+
+/// The simulator's admission-queue mirror: same bound, same retry
+/// horizon, same invariant — deferrals move virtual wall time, never a
+/// committed token.
+#[test]
+fn simulator_admission_queue_mirror_keeps_tokens() {
+    const USERS: usize = 6;
+    let run = |admission_queue: usize| {
+        let mut backend = evolved_target().unwrap();
+        let mut make =
+            |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(SEED))) };
+        serve_with(
+            &mut backend,
+            &mut make,
+            &prompts(USERS),
+            &JETSON_ORIN,
+            &A800_70B,
+            &NetworkProfile::new(NetworkKind::FourG),
+            &ServeConfig {
+                users: USERS,
+                max_new: 16,
+                fixed_k: Some(4),
+                seed: SEED,
+                // concurrent arrivals so rounds actually contend
+                arrival_mean_ms: 1.0,
+                admission_queue,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let open = run(0);
+    let tight = run(1);
+    assert_eq!(open.drafts_busy_deferred, 0);
+    assert!(
+        tight.drafts_busy_deferred > 0,
+        "bound 1 must defer contended arrivals"
+    );
+    assert_eq!(
+        open.per_session_committed, tight.per_session_committed,
+        "sim admission queue changed a committed token"
+    );
+    assert_eq!(open.per_session, tight.per_session);
+    assert!(
+        tight.wall_ms >= open.wall_ms,
+        "deferrals can only move wall time forward"
+    );
+}
+
 #[test]
 fn wire_version_mismatch_is_rejected() {
     rt().block_on(async {
