@@ -8,12 +8,12 @@ use flexspec::coordinator::edge::{DraftSource, ModelDraft};
 use flexspec::coordinator::policy::{AdaptivePolicy, LatencyModel};
 use flexspec::coordinator::CloudEngine;
 use flexspec::devices::{A800_70B, JETSON_ORIN};
-use flexspec::protocol::frame::{CancelMsg, Frame, FrameDecoder, FrameKind};
+use flexspec::protocol::frame::{CancelMsg, Frame, FrameDecoder, FrameKind, RedirectMsg};
 use flexspec::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
 use flexspec::runtime::Registry;
 use flexspec::serve::{
-    BatchVerifyReq, PipelinedDrafter, SessionCore, SubmitOutcome, SyntheticDraft, SyntheticTarget,
-    VerifierConfig, VerifierCore, VerifyBackend,
+    BatchVerifyReq, PipelinedDrafter, SessionCore, SessionLedger, SubmitOutcome, SyntheticDraft,
+    SyntheticTarget, VerifierConfig, VerifierCore, VerifyBackend,
 };
 use flexspec::util::bench::{black_box, maybe_write_json_report, Group};
 use flexspec::util::rng::SplitMix64;
@@ -336,14 +336,82 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // ---- serve: fleet redirect handoff (wire v5) ----------------------
+    // (the cost of moving one live session between replicas: export to
+    // the shared ledger + the Redirect frame + ledger import on resume.
+    // This is pure control-plane work — it must stay microseconds, since
+    // a draining replica pays it once per session and the edge already
+    // pays the real price in reconnect round trips)
+    let mut gfl = Group::new("serve: fleet redirect handoff").with_budget(80.0);
+    {
+        let ledger = SessionLedger::new();
+        // zero grace + a per-iteration sweep: the handoff tombstones
+        // (redirected ids/tokens, verdict cache) must be reclaimed as
+        // the loop runs, or the bench would time HashMap growth instead
+        // of the constant-time handoff it claims to pin
+        let mut a = VerifierCore::new(
+            VerifierConfig {
+                resume_grace_ms: 0.0,
+                ..Default::default()
+            },
+            Box::new(SyntheticTarget::new(9)),
+        )
+        .with_ledger(ledger.clone());
+        let mut b = VerifierCore::new(
+            VerifierConfig::default(),
+            Box::new(SyntheticTarget::new(9)),
+        )
+        .with_ledger(ledger.clone());
+        a.set_redirect(Some("replica-b".into()));
+        let prompt = vec![1, 70, 71];
+        let mut d = SyntheticDraft::new(9);
+        let mut r0 = SplitMix64::new(0);
+        let p = d.propose(&prompt, 4, 0.0, 1.0, &mut r0).unwrap();
+        let mut now = 0.0f64;
+        gfl.add("handoff: export -> Redirect -> import (1 session)", || {
+            now += 1.0;
+            let o = a.open_session(&prompt, 64, 0).unwrap();
+            let msg = DraftMsg {
+                session: o.session,
+                round: 0,
+                tokens: p.tokens.clone(),
+                chosen_probs: vec![],
+                mode: VerifyMode::Greedy,
+                wire: WireFormat::Compact,
+                basis_len: 0,
+                spec: vec![],
+            };
+            let token = match a.submit_from(now, o.attachment, msg, 5).unwrap() {
+                SubmitOutcome::Redirect { resume_token, .. } => resume_token,
+                other => panic!("expected Redirect, got {other:?}"),
+            };
+            let info = b.resume(token, prompt.len()).unwrap();
+            b.abort_session(info.session);
+            a.evict_expired(now + 1.0);
+            black_box(info.committed_len);
+        });
+        let rmsg = RedirectMsg {
+            addr: "replica-b:7412".into(),
+            resume_token: 0x1234_5678_9ABC_DEF0,
+        };
+        gfl.add("Redirect frame roundtrip", || {
+            let f = Frame::on(1, FrameKind::Redirect, black_box(&rmsg).encode());
+            let bytes = f.encode();
+            let mut dec = FrameDecoder::new();
+            dec.push(&bytes);
+            let out = dec.next_frame().unwrap().unwrap();
+            black_box(RedirectMsg::decode(&out.payload).unwrap());
+        });
+    }
+
     // ---- PJRT execution paths (need artifacts) ------------------------
     let Ok(reg) = Registry::open_default() else {
         println!("\n(artifacts missing — run `make artifacts` for the PJRT benches)");
-        maybe_write_json_report(&[&g, &gf, &gp, &gb])?;
+        maybe_write_json_report(&[&g, &gf, &gp, &gb, &gfl])?;
         return Ok(());
     };
     if !reg.manifest.weights.contains_key("draft_flex_llama2t") {
-        maybe_write_json_report(&[&g, &gf, &gp, &gb])?;
+        maybe_write_json_report(&[&g, &gf, &gp, &gb, &gfl])?;
         return Ok(());
     }
     let mut g2 = Group::new("PJRT execution paths").with_budget(2000.0);
@@ -431,6 +499,6 @@ fn main() -> anyhow::Result<()> {
         target.stats.tokens_processed.get(),
         target.stats.exec_nanos.get() as f64 / 1e6,
     );
-    maybe_write_json_report(&[&g, &gf, &gp, &gb, &g2])?;
+    maybe_write_json_report(&[&g, &gf, &gp, &gb, &gfl, &g2])?;
     Ok(())
 }

@@ -31,6 +31,7 @@ const VALUE_OPTS: &[&str] = &[
     "bind", "addr", "backend", "sessions", "k", "draft", "version",
     "deploy-version", "deploy-after", "resume-grace", "fault-seed",
     "fault-disconnects", "pipeline-depth", "admission-queue", "tier-weights",
+    "fleet", "canary", "drain-after", "fleet-addrs",
 ];
 
 pub fn cli_main() -> Result<()> {
@@ -67,10 +68,14 @@ pub fn cli_main() -> Result<()> {
                  \x20\x20\x20\x20 [--admission-queue N]  (pending-draft bound; 0=unbounded,\n\
                  \x20\x20\x20\x20\x20 effective values 1..max-batch — the window drains at max-batch)\n\
                  \x20\x20\x20\x20 [--resume-grace MS] [--deploy-version NAME --deploy-after N]\n\
+                 \x20\x20\x20\x20 [--fleet N]  (N replicas on consecutive ports, shared handoff ledger)\n\
+                 \x20\x20\x20\x20 [--canary K]  (staged rollout: deploy-version goes to K replicas first)\n\
+                 \x20\x20\x20\x20 [--drain-after M]  (drain replica 0 to replica 1 after M sessions)\n\
                  \x20 flexspec serve-edge [--addr 127.0.0.1:7411] [--sessions N] [--max-new N]\n\
                  \x20\x20\x20\x20 [--draft synthetic|pld] [--k K|0=adaptive] [--seed S]\n\
                  \x20\x20\x20\x20 [--mux] [--tier-weights 3,1,...] [--fault-seed S] [--fault-disconnects N]\n\
                  \x20\x20\x20\x20 [--pipeline-depth D]  (1=sequential, >=2 pipelined, 0=auto policy)\n\
+                 \x20\x20\x20\x20 [--fleet-addrs a:p,b:p,...]  (follow Redirects, fail over, re-root)\n\
                  \x20 flexspec trace <5g|4g|wifi> <out.csv> [--samples N]\n\
                  Run `make artifacts` first to build the AOT model zoo."
             );
@@ -176,6 +181,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
 /// M` it hot-swaps the target once M sessions finished — live sessions
 /// keep decoding.
 fn serve_cloud_cmd(args: &Args) -> Result<()> {
+    let fleet = args.get_usize("fleet", 1);
+    if fleet > 1 {
+        return serve_fleet_cmd(args, fleet);
+    }
     let bind = args.get_or("bind", "127.0.0.1:7411");
     let backend_kind = args.get_or("backend", "synthetic");
     let seed = args.get_u64("seed", 1);
@@ -192,18 +201,7 @@ fn serve_cloud_cmd(args: &Args) -> Result<()> {
     let deploy_after = args.get_usize("deploy-after", 1);
     let version = args.get_or("version", "target_llama2t_base");
 
-    let make_backend: Box<dyn FnOnce() -> Result<Box<dyn VerifyBackend>> + Send> =
-        match backend_kind.as_str() {
-            "synthetic" => Box::new(move || -> Result<Box<dyn VerifyBackend>> {
-                Ok(Box::new(synthetic_fleet(seed)) as Box<dyn VerifyBackend>)
-            }),
-            "engine" => Box::new(move || -> Result<Box<dyn VerifyBackend>> {
-                let reg = std::rc::Rc::new(crate::runtime::Registry::open_default()?);
-                Ok(Box::new(EngineBackend::new(reg, &version, crate::workload::EOS)?)
-                    as Box<dyn VerifyBackend>)
-            }),
-            other => bail!("unknown --backend '{other}' (synthetic|engine)"),
-        };
+    let make_backend = make_backend_for(&backend_kind, seed, &version)?;
 
     let rt = tokio::runtime::Builder::new_multi_thread()
         .worker_threads(2)
@@ -234,6 +232,151 @@ fn serve_cloud_cmd(args: &Args) -> Result<()> {
         }
         let metrics = handle.shutdown().await?;
         println!("{}", metrics.render("serving totals"));
+        Ok(())
+    })
+}
+
+/// `host:port` + i — fleet replicas bind consecutive ports.
+fn bump_port(bind: &str, i: usize) -> Result<String> {
+    let (host, port) = bind
+        .rsplit_once(':')
+        .ok_or_else(|| anyhow::anyhow!("--bind must be host:port, got '{bind}'"))?;
+    let port: u16 = port
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad port in --bind '{bind}'"))?;
+    let bumped = port as usize + i;
+    if bumped > u16::MAX as usize {
+        bail!("fleet replica {i} would exceed the port range (base {port})");
+    }
+    Ok(format!("{host}:{bumped}"))
+}
+
+/// One replica's backend factory (each replica owns its backend — the
+/// whole point of per-replica versioned rollout).
+fn make_backend_for(
+    backend_kind: &str,
+    seed: u64,
+    version: &str,
+) -> Result<Box<dyn FnOnce() -> Result<Box<dyn VerifyBackend>> + Send>> {
+    match backend_kind {
+        "synthetic" => Ok(Box::new(move || -> Result<Box<dyn VerifyBackend>> {
+            Ok(Box::new(synthetic_fleet(seed)) as Box<dyn VerifyBackend>)
+        })),
+        "engine" => {
+            let version = version.to_string();
+            Ok(Box::new(move || -> Result<Box<dyn VerifyBackend>> {
+                let reg = std::rc::Rc::new(crate::runtime::Registry::open_default()?);
+                Ok(Box::new(EngineBackend::new(reg, &version, crate::workload::EOS)?)
+                    as Box<dyn VerifyBackend>)
+            }))
+        }
+        other => bail!("unknown --backend '{other}' (synthetic|engine)"),
+    }
+}
+
+/// `serve-cloud --fleet N`: N TCP replicas on consecutive ports, one
+/// verifier + backend each, sharing one handoff ledger through a
+/// [`crate::serve::FleetRegistry`]. Optional orchestration while
+/// serving: `--drain-after M` drains replica 0 to replica 1 once M
+/// sessions completed fleet-wide (its sessions are redirected
+/// mid-decode); `--deploy-version V --deploy-after M [--canary K]`
+/// stages the rollout — V goes to the first K replicas at M completed
+/// sessions and to the rest at 2M (the multi-node twin of the
+/// single-node hot-swap).
+fn serve_fleet_cmd(args: &Args, fleet: usize) -> Result<()> {
+    use crate::serve::FleetRegistry;
+
+    let bind = args.get_or("bind", "127.0.0.1:7411");
+    let backend_kind = args.get_or("backend", "synthetic");
+    let seed = args.get_u64("seed", 1);
+    let vcfg = VerifierConfig {
+        window_ms: args.get_f64("window", 12.0),
+        max_batch: args.get_usize("max-batch", 8),
+        seed,
+        resume_grace_ms: args.get_f64("resume-grace", 10_000.0),
+        admission_queue: args.get_usize("admission-queue", 0),
+        ..Default::default()
+    };
+    let sessions_target = args.get_usize("sessions", 0);
+    let deploy_version = args.get("deploy-version").map(|s| s.to_string());
+    let deploy_after = args.get_usize("deploy-after", 1).max(1);
+    let canary = args.get_usize("canary", 1).clamp(1, fleet);
+    let drain_after = args.get_usize("drain-after", 0);
+    let version = args.get_or("version", "target_llama2t_base");
+
+    let rt = tokio::runtime::Builder::new_multi_thread()
+        .worker_threads(2)
+        .enable_all()
+        .build()?;
+    rt.block_on(async move {
+        let mut registry = FleetRegistry::new();
+        let mut handles = Vec::new();
+        for i in 0..fleet {
+            let addr = bump_port(&bind, i)?;
+            let make = make_backend_for(&backend_kind, seed, &version)?;
+            let handle =
+                crate::serve::serve_cloud_with(&addr, vcfg.clone(), Some(registry.ledger()), make)
+                    .await?;
+            let actual = handle.addr.to_string();
+            registry.register(&actual, handle.verifier());
+            println!("replica {i} on {actual} ({backend_kind} backend)");
+            handles.push(handle);
+        }
+        let addrs: Vec<String> = registry.replicas().iter().map(|r| r.addr.clone()).collect();
+        println!(
+            "fleet of {fleet}; edges: serve-edge --fleet-addrs {}",
+            addrs.join(",")
+        );
+        if sessions_target == 0 {
+            println!("serving until ctrl-c ...");
+        } else {
+            println!("serving until {sessions_target} sessions complete ...");
+        }
+
+        let ctrlc = tokio::signal::ctrl_c();
+        tokio::pin!(ctrlc);
+        let mut drained = false;
+        let mut canary_done = false;
+        let mut full_done = false;
+        loop {
+            tokio::select! {
+                _ = &mut ctrlc, if sessions_target == 0 => break,
+                _ = tokio::time::sleep(std::time::Duration::from_millis(200)) => {}
+            }
+            let mut completed = 0usize;
+            for h in &handles {
+                completed += h.stats().await?.sessions_completed;
+            }
+            if drain_after > 0 && !drained && completed >= drain_after {
+                registry.drain(&addrs[0], &addrs[1])?;
+                println!("draining {} -> {} ({completed} sessions done)", addrs[0], addrs[1]);
+                drained = true;
+            }
+            if let Some(v) = &deploy_version {
+                if !canary_done && completed >= deploy_after {
+                    let subset: Vec<&str> =
+                        addrs[..canary].iter().map(String::as_str).collect();
+                    let seqs = registry.advance_version(&subset, v).await?;
+                    println!("canary rollout of '{v}' to {canary} replica(s): seqs {seqs:?}");
+                    canary_done = true;
+                } else if canary_done && !full_done && canary < fleet
+                    && completed >= deploy_after * 2
+                {
+                    let subset: Vec<&str> =
+                        addrs[canary..].iter().map(String::as_str).collect();
+                    let seqs = registry.advance_version(&subset, v).await?;
+                    println!("full rollout of '{v}': seqs {seqs:?}");
+                    full_done = true;
+                }
+            }
+            if sessions_target > 0 && completed >= sessions_target {
+                break;
+            }
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let metrics = h.shutdown().await?;
+            println!("{}", metrics.render(&format!("replica {i} ({}) totals", addrs[i])));
+        }
         Ok(())
     })
 }
@@ -316,7 +459,23 @@ fn fault_plan_for(fault_seed: u64, disconnects: usize, salt: u64) -> Arc<Mutex<F
 /// cancel-on-reject, 0 = the adaptive policy picks per round from the
 /// measured channel.
 fn serve_edge_cmd(args: &Args) -> Result<()> {
-    let addr = args.get_or("addr", "127.0.0.1:7411");
+    // fleet mode: the list of replica addresses — the dial follows
+    // Redirect handoffs, fails over past dead replicas, and re-roots a
+    // session whose state was lost fleet-wide
+    let fleet_addrs: Vec<String> = args
+        .get("fleet-addrs")
+        .map(|s| {
+            s.split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    let addr = if fleet_addrs.is_empty() {
+        args.get_or("addr", "127.0.0.1:7411")
+    } else {
+        fleet_addrs[0].clone()
+    };
     let n = args.get_usize("sessions", 4);
     let seed = args.get_u64("seed", 1);
     let k = args.get_usize("k", 0);
@@ -335,6 +494,9 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
         .unwrap_or_default();
     let fault_seed = args.get_u64("fault-seed", 0); // 0 = no faults
     let fault_disconnects = args.get_usize("fault-disconnects", 1);
+    if !fleet_addrs.is_empty() && fault_seed != 0 {
+        bail!("--fleet-addrs and --fault-seed are mutually exclusive");
+    }
     let draft_kind = args.get_or("draft", "synthetic");
     if !matches!(draft_kind.as_str(), "synthetic" | "pld") {
         bail!("unknown --draft '{draft_kind}' (synthetic|pld)");
@@ -346,7 +508,20 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
         fixed_k: if k == 0 { None } else { Some(k) },
         pipeline_depth: args.get_usize("pipeline-depth", 1),
         seed,
+        // fleet edges survive replica death by re-opening from the
+        // committed prefix on a survivor
+        reroot_on_unknown_session: !fleet_addrs.is_empty(),
         ..Default::default()
+    };
+    let make_dial = {
+        let fleet_addrs = fleet_addrs.clone();
+        move |addr: String, plan: Option<Arc<Mutex<FaultPlan>>>| -> Box<dyn Reconnect> {
+            if fleet_addrs.is_empty() {
+                tcp_dial(addr, plan)
+            } else {
+                crate::serve::tcp_fleet_dial(fleet_addrs.clone())
+            }
+        }
     };
 
     let results: Vec<Result<EdgeReport>> = if mux {
@@ -357,7 +532,7 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
             .build()?;
         rt.block_on(async {
             let plan = (fault_seed != 0).then(|| fault_plan_for(fault_seed, fault_disconnects, 0));
-            let mut dial = tcp_dial(addr.clone(), plan);
+            let mut dial = make_dial(addr.clone(), plan);
             let initial = dial.connect().await?;
             let mut emux = EdgeMux::connect(initial, Some(dial), &ecfg).await?;
             // a v2-negotiated connection cannot carry spec-tagged drafts
@@ -407,6 +582,7 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
             let addr = addr.clone();
             let ecfg = ecfg.clone();
             let dk = draft_kind.clone();
+            let make_dial = make_dial.clone();
             let plan =
                 (fault_seed != 0).then(|| fault_plan_for(fault_seed, fault_disconnects, 1 + i as u64));
             threads.push(std::thread::spawn(move || -> Result<EdgeReport> {
@@ -416,7 +592,7 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
                 rt.block_on(async move {
                     let mut draft = make_edge_draft(&dk, ecfg.seed)?;
                     let mut t =
-                        ResumableTransport::connect(tcp_dial(addr, plan), &ecfg).await?;
+                        ResumableTransport::connect(make_dial(addr, plan), &ecfg).await?;
                     run_edge_session(&mut t, draft.as_mut(), &prompt, &ecfg).await
                 })
             }));
@@ -435,7 +611,7 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
         &format!("edge sessions vs {addr} ({draft_kind} draft, {mode})"),
         &[
             "session", "tokens", "rounds", "accept", "mean K", "resumes", "piped", "cancelled",
-            "busy", "rtt p50 ms", "wall ms",
+            "busy", "redir", "rtt p50 ms", "wall ms",
         ],
     );
     let mut failures = 0usize;
@@ -452,6 +628,7 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
                     r.rounds_pipelined.to_string(),
                     r.drafts_cancelled.to_string(),
                     r.busy_retries.to_string(),
+                    format!("{}+{}", r.redirects, r.reroots),
                     format!("{:.2}", r.rtt_ms.p50()),
                     format!("{:.0}", r.wall_ms),
                 ]);

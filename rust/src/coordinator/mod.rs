@@ -15,4 +15,4 @@ pub use cloud::CloudEngine;
 pub use edge::{DraftSource, ModelDraft, NoDraft, PromptLookup, Proposal};
 pub use pipeline::{Pipeline, RequestResult, RoundLog, StridePolicy};
 pub use policy::{AcceptanceModel, AdaptivePolicy, LatencyModel};
-pub use scheduler::{serve, serve_with, ServeConfig, ServeReport};
+pub use scheduler::{serve, serve_with, FleetSimConfig, ServeConfig, ServeReport};

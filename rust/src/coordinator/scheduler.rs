@@ -84,6 +84,8 @@ struct SessionState {
     /// while `pending` verifies (mirrors `serve::pipeline`'s depth-2
     /// in-flight window under the virtual clock).
     spec_next: Option<SpecDraft>,
+    /// Fleet twin: handoffs this session has survived.
+    redirects: usize,
     rng: SplitMix64,
 }
 
@@ -144,6 +146,51 @@ pub struct ServeConfig {
     /// (the window drains at `max_batch`, so larger bounds never
     /// trigger — see the serving-side doc).
     pub admission_queue: usize,
+    /// Fleet twin (`serve::fleet`): `None` (default) = single replica.
+    /// `Some` replays a deterministic redirect schedule — each session
+    /// is handed to the next replica after a fixed number of verified
+    /// rounds, paying the handoff's control round trips in virtual
+    /// time. Committed sequences are UNCHANGED (drafts and synthetic
+    /// verdicts are pure functions of the committed prefix), which is
+    /// the fleet determinism claim `tests/serve_fleet.rs` pins.
+    pub fleet: Option<FleetSimConfig>,
+}
+
+/// Virtual-clock twin of the live fleet's redirect schedule (see
+/// [`ServeConfig::fleet`]). Versions are fleet-uniform in the twin —
+/// per-replica version evolution is a live-stack concern (the sim's
+/// single backend plays every replica); the twin models HANDOFF TIMING
+/// (which replica serves a round is unobservable to a pure backend, so
+/// placement itself has no simulated state).
+#[derive(Debug, Clone)]
+pub struct FleetSimConfig {
+    /// Replica count — gates the schedule (a 1-replica fleet never
+    /// redirects).
+    pub replicas: usize,
+    /// Hand a session to the next replica after this many verified
+    /// rounds (0 = never redirect).
+    pub redirect_after_rounds: usize,
+    /// Handoffs per session before it settles (the live drain redirects
+    /// a session at most once per replica per grace window; 1 mirrors
+    /// the common drain).
+    pub max_redirects: usize,
+    /// Virtual cost of one handoff, ms (redial + Hello/HelloAck +
+    /// Resume/ResumeAck control round trips). A FLAT figure by design:
+    /// sampling the session's channel here would advance its RNG stream
+    /// and change adaptive-K stride choices — the handoff must move
+    /// wall time only.
+    pub handoff_ms: f64,
+}
+
+impl Default for FleetSimConfig {
+    fn default() -> Self {
+        FleetSimConfig {
+            replicas: 2,
+            redirect_after_rounds: 3,
+            max_redirects: 1,
+            handoff_ms: 40.0,
+        }
+    }
 }
 
 impl Default for ServeConfig {
@@ -162,6 +209,7 @@ impl Default for ServeConfig {
             capacity_floor: 10,
             pipeline_depth: 1,
             admission_queue: 0,
+            fleet: None,
         }
     }
 }
@@ -169,15 +217,26 @@ impl Default for ServeConfig {
 /// Aggregate serving report.
 #[derive(Debug, Clone, Default)]
 pub struct ServeReport {
+    /// Sessions decoded to completion.
     pub completed: usize,
+    /// Virtual wall time of the last completion, ms.
     pub wall_ms: f64,
+    /// Committed tokens (accepted + correction/bonus) across sessions.
     pub tokens: usize,
+    /// Verified rounds across sessions.
     pub rounds: usize,
+    /// Verification batches closed.
     pub batches: usize,
+    /// Mean verify requests per closed batch.
     pub mean_batch: f64,
+    /// Per-request latency (arrival → final verdict delivered), ms.
     pub request_latency: Summary,
+    /// Request latency divided by tokens generated, ms/token.
     pub per_token_latency: Summary,
+    /// Per-session acceptance rates (sessions that drafted ≥ 1 token).
     pub acceptance: Summary,
+    /// Fixed per-step cloud cost amortized away by batching: T_base ×
+    /// (batch occupancy − 1), summed over batches.
     pub t_base_saved_ms: f64,
     /// Rounds verified from a speculative draft whose optimistic prefix
     /// held (pipelined mode) — round trips hidden under the virtual
@@ -191,6 +250,10 @@ pub struct ServeReport {
     /// Drafts turned away at the admission-queue bound and re-arrived
     /// after the retry horizon (the serving stack's `Busy` deferrals).
     pub drafts_busy_deferred: usize,
+    /// Fleet twin: sessions handed to another replica mid-decode (the
+    /// serving stack's `Redirect`/export/import path). Handoffs move
+    /// virtual wall time, never a committed token.
+    pub sessions_redirected: usize,
     /// Per-session final counters, in prompt order (for cross-checking
     /// against loopback/TCP serving runs).
     pub per_session: Vec<SessionOutcome>,
@@ -373,6 +436,7 @@ pub fn serve_with(
             started_ms: 0.0,
             pending: None,
             spec_next: None,
+            redirects: 0,
             rng: SplitMix64::new(cfg.seed ^ (0x2000 + id as u64)),
         });
         push(&mut heap, t_arrive, Event::SessionArrives(id), &mut seq);
@@ -406,6 +470,45 @@ pub fn serve_with(
                 push(&mut heap, arrive, Event::RequestArrives(id), &mut seq);
             }
             Event::RequestArrives(id) => {
+                // fleet twin: after the scheduled number of verified
+                // rounds the session is handed to the next replica —
+                // the arriving draft is held while the edge redials and
+                // resumes (two control round trips of virtual air
+                // time), then re-arrives at the peer. The draft bytes
+                // are unchanged (pure function of the committed
+                // prefix), so the handoff moves wall time only — the
+                // live stack's export/Redirect/import path under the
+                // virtual clock.
+                if let Some(fl) = &cfg.fleet {
+                    let s = &mut sessions[(id - 1) as usize];
+                    if fl.replicas > 1
+                        && fl.redirect_after_rounds > 0
+                        && s.redirects < fl.max_redirects
+                        && s.core.rounds >= fl.redirect_after_rounds * (s.redirects + 1)
+                    {
+                        s.redirects += 1;
+                        report.sessions_redirected += 1;
+                        // in-flight speculation dies with the handoff
+                        // (the live edge resets its pipe on reattach)
+                        // and is re-launched after the resume.
+                        // The handoff cost is a FLAT configured figure,
+                        // deliberately not drawn from the session's
+                        // channel stream: `StochasticChannel::sample`
+                        // advances per-session RNG state, and an extra
+                        // draw here would shift every later round's
+                        // sample — with adaptive K that changes stride
+                        // choices and breaks the tokens-never-change
+                        // invariant this twin exists to pin.
+                        s.spec_next = None;
+                        push(
+                            &mut heap,
+                            now + fl.handoff_ms.max(0.0),
+                            Event::RequestArrives(id),
+                            &mut seq,
+                        );
+                        continue;
+                    }
+                }
                 // admission-control mirror: at the backlog bound the
                 // draft is turned away (a Busy on the wire) and
                 // re-arrives after one batching window — the same
@@ -856,6 +959,74 @@ mod tests {
         assert_eq!(pipe_d.rounds_pipelined, pipe2.rounds_pipelined);
         assert_eq!(pipe_d.drafts_cancelled, pipe2.drafts_cancelled);
         assert_eq!(pipe_d.wall_ms, pipe2.wall_ms);
+    }
+
+    /// Fleet twin (`ServeConfig::fleet`): a deterministic mid-decode
+    /// handoff schedule must move VIRTUAL TIME only — committed
+    /// sequences and per-session counters stay byte-identical to the
+    /// single-replica run, in sequential AND pipelined mode, and the
+    /// whole schedule replays bit-identically.
+    #[test]
+    fn fleet_twin_redirects_move_time_not_tokens() {
+        let run = |fleet: Option<FleetSimConfig>, depth: usize| {
+            let mut backend = SyntheticTarget::new(11).with_version("evolved", 0.3);
+            backend.deploy("evolved").unwrap();
+            let mut make = |_id: u32| -> Result<Box<dyn DraftSource>> {
+                Ok(Box::new(SyntheticDraft::new(11)))
+            };
+            let net = NetworkProfile::new(NetworkKind::FourG);
+            let cfg = ServeConfig {
+                users: 4,
+                max_new: 16,
+                fixed_k: Some(4),
+                seed: 5,
+                pipeline_depth: depth,
+                fleet,
+                ..Default::default()
+            };
+            serve_with(
+                &mut backend,
+                &mut make,
+                &prompts(4),
+                &JETSON_ORIN,
+                &A800_70B,
+                &net,
+                &cfg,
+            )
+            .unwrap()
+        };
+        let fleet_cfg = || {
+            Some(FleetSimConfig {
+                replicas: 2,
+                redirect_after_rounds: 2,
+                max_redirects: 1,
+                ..Default::default()
+            })
+        };
+        for depth in [1usize, 2] {
+            let single = run(None, depth);
+            let fleet = run(fleet_cfg(), depth);
+            assert_eq!(
+                single.per_session_committed, fleet.per_session_committed,
+                "depth {depth}: a handoff changed a committed token"
+            );
+            assert_eq!(single.per_session, fleet.per_session, "depth {depth}");
+            assert!(
+                fleet.sessions_redirected >= 1,
+                "depth {depth}: the schedule must hand off at least one session"
+            );
+            assert!(
+                fleet.wall_ms > single.wall_ms,
+                "depth {depth}: a handoff must cost virtual time ({} !> {})",
+                fleet.wall_ms,
+                single.wall_ms
+            );
+            // bit-identical replay of the fleet schedule itself
+            let fleet2 = run(fleet_cfg(), depth);
+            assert_eq!(fleet.per_session, fleet2.per_session);
+            assert_eq!(fleet.sessions_redirected, fleet2.sessions_redirected);
+            assert_eq!(fleet.wall_ms, fleet2.wall_ms);
+        }
     }
 
     #[test]

@@ -123,7 +123,10 @@ impl MetricsSet {
 /// verification service and is snapshotted by `stats`/`shutdown`.
 #[derive(Debug, Clone, Default)]
 pub struct ServingMetrics {
+    /// KV sessions created by `Open` (nonce-deduplicated retransmits
+    /// reattach instead of counting again).
     pub sessions_opened: usize,
+    /// Sessions that decoded to completion (EOS, budget, or capacity).
     pub sessions_completed: usize,
     /// Sessions ended by an explicit client Bye before completion.
     pub sessions_aborted: usize,
@@ -138,7 +141,16 @@ pub struct ServingMetrics {
     /// Drafts answered from the per-session verdict cache (transport
     /// duplicates and post-resume retransmits).
     pub verdicts_replayed: usize,
+    /// Connections turned away at the wire-version gate.
     pub handshakes_rejected: usize,
+    /// Fleet handoffs OUT (wire v5): sessions exported to the shared
+    /// ledger and answered with a `Redirect` — a drain or targeted
+    /// rebalance shedding load to a sibling replica.
+    pub sessions_redirected: usize,
+    /// Fleet handoffs IN: sessions reconstructed from the shared
+    /// ledger on a `Resume` (exported by a sibling — or by this
+    /// replica, when the edge could not follow the redirect).
+    pub sessions_imported: usize,
     /// Rounds verified from a SPECULATIVE draft whose optimistic basis
     /// matched the committed prefix exactly (wire v3 pipelining) — each
     /// one is an edge round trip hidden behind the previous verify.
@@ -161,7 +173,9 @@ pub struct ServingMetrics {
     /// Finished-session residues reclaimed by the periodic sweep after
     /// their resume-grace window expired.
     pub residues_expired: usize,
+    /// Verified rounds across sessions.
     pub rounds: usize,
+    /// Verification batches closed (each one `verify_batch` call).
     pub batches: usize,
     /// Verify requests per closed batch.
     pub batch_occupancy: Summary,
@@ -170,7 +184,9 @@ pub struct ServingMetrics {
     pub queue_depth: Summary,
     /// Committed tokens (accepted + correction/bonus) across sessions.
     pub tokens_committed: usize,
+    /// Draft tokens verified across sessions.
     pub drafted: usize,
+    /// Draft tokens accepted across sessions.
     pub accepted: usize,
     /// Target version hot-swaps performed while serving.
     pub hot_swaps: usize,
@@ -222,6 +238,7 @@ impl ServingMetrics {
             "{title}\n\
              \x20 sessions         {} completed / {} opened ({} aborted, {} handshakes rejected)\n\
              \x20 resume           {} parked, {} resumed, {} evicted, {} verdicts replayed, {} residues expired\n\
+             \x20 fleet            {} redirected out, {} imported\n\
              \x20 pipeline         {} rounds pipelined, {} drafts cancelled, {} draft tokens wasted\n\
              \x20 rounds           {} in {} batches (mean occupancy {:.2})\n\
              \x20 admission        {} busy deferrals, {} drafts orphaned, queue depth mean {:.2} / p95 {:.0}\n\
@@ -237,6 +254,8 @@ impl ServingMetrics {
             self.sessions_evicted,
             self.verdicts_replayed,
             self.residues_expired,
+            self.sessions_redirected,
+            self.sessions_imported,
             self.rounds_pipelined,
             self.drafts_cancelled,
             self.draft_tokens_wasted,
@@ -355,11 +374,14 @@ mod tests {
         m.draft_tokens_wasted = 8;
         m.drafts_busy = 5;
         m.drafts_orphaned = 1;
+        m.sessions_redirected = 3;
+        m.sessions_imported = 2;
         m.queue_depth.add(2.0);
         let r = m.render("serving");
         assert!(r.contains("6 committed"));
         assert!(r.contains("hot-swaps"));
         assert!(r.contains("2 parked, 1 resumed, 1 evicted, 3 verdicts replayed, 1 residues expired"));
+        assert!(r.contains("3 redirected out, 2 imported"));
         assert!(r.contains("4 rounds pipelined, 2 drafts cancelled, 8 draft tokens wasted"));
         assert!(r.contains("5 busy deferrals, 1 drafts orphaned"));
     }

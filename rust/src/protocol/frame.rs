@@ -71,15 +71,22 @@ use anyhow::{bail, Result};
 /// with a `Busy` frame instead of a verdict when its pending-draft
 /// queue is saturated; the edge retries the identical draft after
 /// `retry_after_ms` (with backoff), so committed tokens never change.
-pub const WIRE_VERSION: u16 = 4;
+/// v5: fleet serving — a draining or saturated replica may answer a
+/// draft with a `Redirect { addr, resume_token }` frame that hands the
+/// session to a peer replica (the edge redials and replays the normal
+/// `Resume` there), and the cloud announces `ReplicaInfo { version,
+/// load }` telemetry on the control stream after the handshake.
+pub const WIRE_VERSION: u16 = 5;
 
 /// Oldest peer version the handshake still accepts. A v2 peer never
 /// sends spec-tagged drafts or `Cancel` frames, and the cloud sends it
-/// nothing new, so v4 clouds serve v2/v3 edges unchanged; the
+/// nothing new, so v5 clouds serve v2..v4 edges unchanged; the
 /// negotiated version in `HelloAck` tells the edge whether pipelining
-/// (>= 3) is allowed on the connection and tells the cloud whether the
+/// (>= 3) is allowed on the connection, tells the cloud whether the
 /// peer understands `Busy` (>= 4) — drafts from older peers are always
-/// admitted because they could not act on a deferral.
+/// admitted because they could not act on a deferral — and whether the
+/// peer can follow a `Redirect` to a fleet sibling (>= 5; older peers
+/// are never redirected and simply keep decoding on this replica).
 pub const MIN_WIRE_VERSION: u16 = 2;
 
 /// Upper bound on one frame's body (kind + stream + payload). Prompts are
@@ -132,6 +139,22 @@ pub enum FrameKind {
     /// tokens from the same committed prefix, so deferral can never
     /// change a committed token (it only moves wall time).
     Busy = 11,
+    /// Cloud → edge (wire v5): this replica is draining or saturated —
+    /// the session has been exported to the fleet's shared handoff
+    /// ledger and the edge should redial `addr` and replay the normal
+    /// `Resume { resume_token, committed_len }` handshake there. Sent
+    /// INSTEAD of a verdict for the session's next head round; the
+    /// draft left no state behind, so the redirected session commits
+    /// byte-identical tokens (drafts are pure functions of the
+    /// committed prefix — the handoff only moves wall time). A peer
+    /// that cannot follow the redirect resumes in place and the
+    /// exporting replica re-imports the session from the ledger.
+    Redirect = 12,
+    /// Cloud → edge (wire v5, control stream): replica telemetry —
+    /// deployed target version sequence + current load — announced once
+    /// after the handshake. Informational: edges may log it, fleet
+    /// registries read the same numbers out-of-band for placement.
+    ReplicaInfo = 13,
 }
 
 impl FrameKind {
@@ -148,6 +171,8 @@ impl FrameKind {
             9 => FrameKind::ResumeAck,
             10 => FrameKind::Cancel,
             11 => FrameKind::Busy,
+            12 => FrameKind::Redirect,
+            13 => FrameKind::ReplicaInfo,
             _ => return None,
         })
     }
@@ -155,7 +180,10 @@ impl FrameKind {
     /// Connection-scoped control frames ride [`CONTROL_STREAM`]; every
     /// other kind is session-scoped and must name a nonzero stream.
     pub fn is_control(self) -> bool {
-        matches!(self, FrameKind::Hello | FrameKind::HelloAck)
+        matches!(
+            self,
+            FrameKind::Hello | FrameKind::HelloAck | FrameKind::ReplicaInfo
+        )
     }
 
     /// Kinds that may bind a FRESH stream id. Everything else
@@ -532,6 +560,14 @@ pub struct ResumeAck {
     /// True when the session already finished server-side while the link
     /// was down — `tail` completes it and no further drafting is needed.
     pub done: bool,
+    /// Rejection class (wire v5, meaningful only when `!accepted`):
+    /// true when the resume token is unknown or expired EVERYWHERE the
+    /// cloud can see — the structured signal a fleet edge's re-root
+    /// decision keys on (`EdgeSessionConfig::reroot_on_unknown_session`
+    /// must not depend on parsing the human-readable `reason`). Only
+    /// set on connections that negotiated v5; older peers always see
+    /// the bit clear.
+    pub unknown_token: bool,
     /// Server-assigned session id (0 when rejected).
     pub session: u32,
     /// Server-side committed length after applying `tail`.
@@ -553,6 +589,7 @@ impl ResumeAck {
         ResumeAck {
             accepted: false,
             done: false,
+            unknown_token: false,
             session: 0,
             committed_len: 0,
             rounds: 0,
@@ -564,7 +601,11 @@ impl ResumeAck {
 
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(32 + self.tail.len() * 2 + self.reason.len());
-        out.push((self.accepted as u8) | ((self.done as u8) << 1));
+        out.push(
+            (self.accepted as u8)
+                | ((self.done as u8) << 1)
+                | ((self.unknown_token as u8) << 2),
+        );
         write_u32(&mut out, self.session);
         write_varint(&mut out, self.committed_len);
         write_varint(&mut out, self.rounds);
@@ -580,7 +621,7 @@ impl ResumeAck {
 
     pub fn decode(buf: &[u8]) -> Result<ResumeAck> {
         let flags = *buf.first().ok_or_else(|| anyhow::anyhow!("resume-ack: empty"))?;
-        if flags & !0b11 != 0 {
+        if flags & !0b111 != 0 {
             bail!("resume-ack: bad flags byte {flags:#x}");
         }
         let mut pos = 1usize;
@@ -604,6 +645,7 @@ impl ResumeAck {
         Ok(ResumeAck {
             accepted: flags & 1 != 0,
             done: flags & 2 != 0,
+            unknown_token: flags & 4 != 0,
             session,
             committed_len,
             rounds,
@@ -678,6 +720,87 @@ impl BusyMsg {
             round,
             retry_after_ms,
         })
+    }
+}
+
+/// Upper bound on a redirect target address (defensive: a hostile frame
+/// must not allocate unbounded strings before validation).
+pub const MAX_REDIRECT_ADDR: usize = 512;
+
+/// Cloud → edge (wire v5): fleet session handoff. The session's state
+/// was exported to the fleet's shared ledger; the edge should point its
+/// next reattach at `addr` and replay the normal `Resume` handshake
+/// with `resume_token` — the importing replica reconstructs the session
+/// from the ledger and decoding continues from the committed prefix.
+/// Loss-tolerant and duplicate-tolerant: the exporting replica keeps a
+/// replay tombstone, re-imports if the edge resumes in place, and never
+/// redirects the same session twice, so a lost, late, or duplicated
+/// `Redirect` can never change a committed token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RedirectMsg {
+    /// Peer replica to redial (a fleet address — TCP `host:port` or a
+    /// registry label for in-process replicas).
+    pub addr: String,
+    /// Resume capability to replay there (the session's existing token;
+    /// the ledger entry is keyed by it).
+    pub resume_token: u64,
+}
+
+impl RedirectMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.addr.len());
+        write_varint(&mut out, self.resume_token);
+        write_varint(&mut out, self.addr.len() as u64);
+        out.extend_from_slice(self.addr.as_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<RedirectMsg> {
+        let mut pos = 0usize;
+        let resume_token = read_varint(buf, &mut pos)?;
+        let n = read_varint(buf, &mut pos)? as usize;
+        if n > MAX_REDIRECT_ADDR {
+            bail!("redirect: absurd address length {n}");
+        }
+        if pos + n != buf.len() {
+            bail!("redirect: address length mismatch");
+        }
+        let addr = String::from_utf8(buf[pos..pos + n].to_vec())?;
+        Ok(RedirectMsg { addr, resume_token })
+    }
+}
+
+/// Cloud → edge (wire v5, control stream): one replica's telemetry,
+/// announced after the handshake. `version` is the deployed target
+/// version sequence (the same number `OpenAck::target_seq` carries);
+/// `load` is the replica's instantaneous load (active sessions + drafts
+/// pending verification). Purely informational on the wire — placement
+/// decisions live in the fleet registry, which reads the same numbers
+/// out-of-band.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaInfoMsg {
+    /// Deployed target version sequence number.
+    pub version: u64,
+    /// Active sessions + pending drafts at announcement time.
+    pub load: u32,
+}
+
+impl ReplicaInfoMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12);
+        write_varint(&mut out, self.version);
+        write_u32(&mut out, self.load);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ReplicaInfoMsg> {
+        let mut pos = 0usize;
+        let version = read_varint(buf, &mut pos)?;
+        let load = read_u32(buf, &mut pos)?;
+        if pos != buf.len() {
+            bail!("replica-info: trailing bytes");
+        }
+        Ok(ReplicaInfoMsg { version, load })
     }
 }
 
@@ -818,7 +941,9 @@ mod tests {
         // control frames: stream 0 only
         assert!(check_stream(FrameKind::Hello, 0, bound).is_ok());
         assert!(check_stream(FrameKind::HelloAck, 0, bound).is_ok());
+        assert!(check_stream(FrameKind::ReplicaInfo, 0, bound).is_ok());
         assert!(check_stream(FrameKind::Hello, 1, bound).is_err());
+        assert!(check_stream(FrameKind::ReplicaInfo, 3, bound).is_err());
         // session frames: never stream 0
         for kind in [
             FrameKind::Open,
@@ -830,6 +955,7 @@ mod tests {
             FrameKind::ResumeAck,
             FrameKind::Cancel,
             FrameKind::Busy,
+            FrameKind::Redirect,
         ] {
             assert!(check_stream(kind, 0, bound).is_err(), "{kind:?} on stream 0");
         }
@@ -840,9 +966,11 @@ mod tests {
         assert!(check_stream(FrameKind::Draft, 3, bound).is_ok());
         assert!(check_stream(FrameKind::Verify, 7, bound).is_ok());
         assert!(check_stream(FrameKind::Cancel, 3, bound).is_ok());
+        assert!(check_stream(FrameKind::Redirect, 3, bound).is_ok());
         assert!(check_stream(FrameKind::Draft, 99, bound).is_err());
         assert!(check_stream(FrameKind::Bye, 4, bound).is_err());
         assert!(check_stream(FrameKind::Cancel, 99, bound).is_err());
+        assert!(check_stream(FrameKind::Redirect, 99, bound).is_err());
 
         // property: a random unknown stream is always rejected for
         // non-opening session kinds, and stream 0 for every session kind
@@ -946,6 +1074,7 @@ mod tests {
         let live = ResumeAck {
             accepted: true,
             done: false,
+            unknown_token: false,
             session: 7,
             committed_len: 24,
             rounds: 5,
@@ -958,6 +1087,7 @@ mod tests {
         let finished = ResumeAck {
             accepted: true,
             done: true,
+            unknown_token: false,
             session: 7,
             committed_len: 30,
             rounds: 8,
@@ -969,12 +1099,18 @@ mod tests {
 
         let rejected = ResumeAck::rejected("unknown or expired resume token".into());
         let back = ResumeAck::decode(&rejected.encode()).unwrap();
-        assert!(!back.accepted && !back.done);
+        assert!(!back.accepted && !back.done && !back.unknown_token);
         assert!(back.reason.contains("expired"));
+
+        // the structured rejection class (wire v5) survives the trip
+        let mut lost = ResumeAck::rejected("session state lost fleet-wide".into());
+        lost.unknown_token = true;
+        let back = ResumeAck::decode(&lost.encode()).unwrap();
+        assert!(!back.accepted && back.unknown_token);
 
         // flags byte with junk bits is rejected (guards against skew)
         let mut bytes = live.encode();
-        bytes[0] |= 0b100;
+        bytes[0] |= 0b1000;
         assert!(ResumeAck::decode(&bytes).is_err());
     }
 
@@ -1055,6 +1191,106 @@ mod tests {
                 prop::assert_prop(f.kind == FrameKind::Busy, "kind survived")?;
                 let back = BusyMsg::decode(&f.payload).map_err(|e| e.to_string())?;
                 prop::assert_prop(back == msg, format!("busy mismatch at split {split}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn handshake_negotiates_v4_peer_below_redirect_support() {
+        // a v4 peer (pre-fleet) is accepted; the agreed version tells
+        // the cloud it must never send Redirect/ReplicaInfo frames there
+        let h = Hello {
+            wire_version: 4,
+            mode: VerifyMode::Greedy,
+            k_max: 8,
+        };
+        let ack = hello_response(&Hello::decode(&h.encode()).unwrap());
+        assert!(ack.accepted);
+        assert_eq!(ack.wire_version, 4);
+    }
+
+    #[test]
+    fn redirect_roundtrips_and_rejects_garbage() {
+        let r = RedirectMsg {
+            addr: "replica-b:7412".into(),
+            resume_token: 0x1234_5678_9ABC_DEF0,
+        };
+        assert_eq!(RedirectMsg::decode(&r.encode()).unwrap(), r);
+        assert!(RedirectMsg::decode(&r.encode()[..3]).is_err(), "truncated");
+        let mut long = r.encode();
+        long.push(0);
+        assert!(RedirectMsg::decode(&long).is_err(), "trailing bytes");
+        // hostile length prefix is rejected before allocation
+        let mut bogus = Vec::new();
+        write_varint(&mut bogus, 7);
+        write_varint(&mut bogus, (MAX_REDIRECT_ADDR + 1) as u64);
+        assert!(RedirectMsg::decode(&bogus).is_err(), "absurd addr length");
+        assert_eq!(FrameKind::from_u8(12), Some(FrameKind::Redirect));
+        assert!(!FrameKind::Redirect.is_control());
+        assert!(!FrameKind::Redirect.opens_stream());
+
+        // framed + split at every byte, like every other session frame
+        prop::check(20, |rng| {
+            let msg = RedirectMsg {
+                addr: format!("replica-{}:{}", rng.next_range(64), rng.next_range(65536)),
+                resume_token: rng.next_u64(),
+            };
+            let frame = Frame::on(
+                1 + rng.next_u64() as u32 % 1000,
+                FrameKind::Redirect,
+                msg.encode(),
+            );
+            let bytes = frame.encode();
+            for split in 0..=bytes.len() {
+                let mut dec = FrameDecoder::new();
+                dec.push(&bytes[..split]);
+                dec.push(&bytes[split..]);
+                let f = dec
+                    .next_frame()
+                    .map_err(|e| e.to_string())?
+                    .ok_or("no frame after full input")?;
+                prop::assert_prop(f.kind == FrameKind::Redirect, "kind survived")?;
+                let back = RedirectMsg::decode(&f.payload).map_err(|e| e.to_string())?;
+                prop::assert_prop(back == msg, format!("redirect mismatch at split {split}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replica_info_roundtrips_and_rejects_garbage() {
+        let m = ReplicaInfoMsg {
+            version: 17,
+            load: 42,
+        };
+        assert_eq!(ReplicaInfoMsg::decode(&m.encode()).unwrap(), m);
+        assert!(ReplicaInfoMsg::decode(&m.encode()[..2]).is_err(), "truncated");
+        let mut long = m.encode();
+        long.push(0);
+        assert!(ReplicaInfoMsg::decode(&long).is_err(), "trailing bytes");
+        assert_eq!(FrameKind::from_u8(13), Some(FrameKind::ReplicaInfo));
+        assert!(FrameKind::ReplicaInfo.is_control(), "telemetry is control-scoped");
+        assert!(!FrameKind::ReplicaInfo.opens_stream());
+
+        prop::check(20, |rng| {
+            let msg = ReplicaInfoMsg {
+                version: rng.next_u64(),
+                load: rng.next_range(100_000) as u32,
+            };
+            let frame = Frame::control(FrameKind::ReplicaInfo, msg.encode());
+            let bytes = frame.encode();
+            for split in 0..=bytes.len() {
+                let mut dec = FrameDecoder::new();
+                dec.push(&bytes[..split]);
+                dec.push(&bytes[split..]);
+                let f = dec
+                    .next_frame()
+                    .map_err(|e| e.to_string())?
+                    .ok_or("no frame after full input")?;
+                prop::assert_prop(f.stream == CONTROL_STREAM, "control stream survived")?;
+                let back = ReplicaInfoMsg::decode(&f.payload).map_err(|e| e.to_string())?;
+                prop::assert_prop(back == msg, format!("replica-info mismatch at split {split}"))?;
             }
             Ok(())
         });
@@ -1172,6 +1408,7 @@ mod tests {
             let ack = ResumeAck {
                 accepted: true,
                 done: rng.chance(0.3),
+                unknown_token: false,
                 session: rng.next_u64() as u32,
                 committed_len: rng.next_range(4096),
                 rounds: rng.next_range(512),

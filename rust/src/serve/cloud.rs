@@ -37,7 +37,7 @@ use crate::coordinator::edge::DraftSource;
 use crate::metrics::ServingMetrics;
 use crate::protocol::frame::{
     check_stream, hello_response, BusyMsg, CancelMsg, Frame, FrameKind, Hello, OpenAck, OpenMsg,
-    ResumeAck, ResumeMsg, CONTROL_STREAM,
+    RedirectMsg, ReplicaInfoMsg, ResumeAck, ResumeMsg, CONTROL_STREAM,
 };
 use crate::protocol::DraftMsg;
 use crate::util::log::{log, Level};
@@ -99,7 +99,22 @@ pub async fn serve_cloud(
     vcfg: VerifierConfig,
     make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
 ) -> Result<ServerHandle> {
-    let verifier = VerifierHandle::spawn(vcfg, make_backend)?;
+    serve_cloud_with(bind, vcfg, None, make_backend).await
+}
+
+/// [`serve_cloud`] with an optional fleet handoff ledger: one replica
+/// of an N-replica fleet (`serve::fleet`) — sessions can be exported to
+/// (and imported from) siblings sharing the same ledger.
+pub async fn serve_cloud_with(
+    bind: &str,
+    vcfg: VerifierConfig,
+    ledger: Option<crate::serve::fleet::SessionLedger>,
+    make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
+) -> Result<ServerHandle> {
+    let verifier = match ledger {
+        Some(l) => VerifierHandle::spawn_with_ledger(vcfg, l, make_backend)?,
+        None => VerifierHandle::spawn(vcfg, make_backend)?,
+    };
     let listener = TcpListener::bind(bind)
         .await
         .with_context(|| format!("binding cloud server to {bind}"))?;
@@ -196,7 +211,6 @@ pub async fn handle_conn<T: Transport>(mut t: T, verifier: VerifierHandle) -> Re
         verifier.note_rejected_handshake();
         return Ok(());
     }
-
     // --- multiplexed session demux -----------------------------------
     let mut bound: HashMap<u32, Bound> = HashMap::new();
     let result = mux_loop(&mut t, &verifier, &mut bound, hello_ack, negotiated).await;
@@ -218,6 +232,29 @@ async fn mux_loop<T: Transport>(
     negotiated: u16,
 ) -> Result<()> {
     let (out_tx, mut out_rx) = mpsc::unbounded_channel::<OutEvent>();
+    // fleet telemetry (wire v5): announce the deployed target version +
+    // current load once per connection. Fetched OFF the connection's
+    // critical path — the verifier thread may be mid-batch, and a
+    // reconnect storm must not queue its handshakes behind
+    // verification; the frame rides the writer queue whenever the
+    // snapshot arrives. Informational — edges absorb it at any point;
+    // fleet registries read the same numbers via `VerifierHandle::info`.
+    if negotiated >= 5 {
+        let v = verifier.clone();
+        let out = out_tx.clone();
+        tokio::spawn(async move {
+            if let Ok(info) = v.info().await {
+                let m = ReplicaInfoMsg {
+                    version: info.version_seq,
+                    load: info.load().min(u32::MAX as usize) as u32,
+                };
+                let _ = out.send(OutEvent::Frame(Frame::control(
+                    FrameKind::ReplicaInfo,
+                    m.encode(),
+                )));
+            }
+        });
+    }
     loop {
         // Stage the winning event, then act with the select borrows
         // released (recv_frame holds &mut t while polled).
@@ -312,6 +349,7 @@ async fn handle_frame<T: Transport>(
                         ResumeAck {
                             accepted: true,
                             done: info.done,
+                            unknown_token: false,
                             session: info.session,
                             committed_len: info.committed_len as u64,
                             rounds: info.rounds as u64,
@@ -321,7 +359,19 @@ async fn handle_frame<T: Transport>(
                         },
                         (!info.done).then_some((info.session, info.attachment)),
                     ),
-                    Err(e) => (ResumeAck::rejected(format!("{e:#}")), None),
+                    Err(e) => {
+                        let text = format!("{e:#}");
+                        let mut ack = ResumeAck::rejected(text.clone());
+                        // structured rejection class (wire v5): the
+                        // token maps to nothing anywhere this replica
+                        // can see — fleet edges key their re-root on
+                        // this bit, never on the reason text. Peers
+                        // below v5 reject unknown flag bits, so the
+                        // bit stays clear for them.
+                        ack.unknown_token = negotiated >= 5
+                            && text.contains(crate::serve::verifier::UNKNOWN_RESUME_TOKEN);
+                        (ack, None)
+                    }
                 };
             let frame = Frame::on(f.stream, FrameKind::ResumeAck, ack.encode());
             if let Some((id, attachment)) = live_session {
@@ -353,14 +403,15 @@ async fn handle_frame<T: Transport>(
             msg.session = id;
             // verify concurrently so other streams keep feeding the
             // batcher while this round waits for its window; peers
-            // below wire v4 cannot parse a Busy deferral, so their
-            // drafts are always admitted
-            let can_defer = negotiated >= 4;
+            // below wire v4 cannot parse a Busy deferral (always
+            // admitted) and peers below v5 cannot follow a fleet
+            // Redirect (never handed off) — the verifier gates both on
+            // the negotiated version we pass through
             let v = verifier.clone();
             let out = out_tx.clone();
             let stream = f.stream;
             tokio::spawn(async move {
-                match v.verify(id, attachment, msg, can_defer).await {
+                match v.verify(id, attachment, msg, negotiated).await {
                     Ok(Some(VerifyReply::Verdict(vmsg))) => {
                         let _ = out.send(OutEvent::Frame(Frame::on(
                             stream,
@@ -381,6 +432,15 @@ async fn handle_frame<T: Transport>(
                                 retry_after_ms,
                             }
                             .encode(),
+                        )));
+                    }
+                    // fleet handoff: the session was exported — tell
+                    // the edge where to resume
+                    Ok(Some(VerifyReply::Redirect { addr, resume_token })) => {
+                        let _ = out.send(OutEvent::Frame(Frame::on(
+                            stream,
+                            FrameKind::Redirect,
+                            RedirectMsg { addr, resume_token }.encode(),
                         )));
                     }
                     // duplicate swallowed by the verifier: no reply owed
@@ -425,7 +485,9 @@ async fn handle_frame<T: Transport>(
         | FrameKind::OpenAck
         | FrameKind::ResumeAck
         | FrameKind::Verify
-        | FrameKind::Busy => {
+        | FrameKind::Busy
+        | FrameKind::Redirect
+        | FrameKind::ReplicaInfo => {
             bail!("unexpected {:?} frame from edge", f.kind)
         }
     }

@@ -32,8 +32,8 @@ use crate::coordinator::edge::DraftSource;
 use crate::coordinator::policy::{AdaptivePolicy, LatencyModel};
 use crate::devices::{CloudProfile, EdgeDevice, A800_70B, JETSON_ORIN};
 use crate::protocol::frame::{
-    BusyMsg, CancelMsg, Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, ResumeAck, ResumeMsg,
-    MIN_WIRE_VERSION, WIRE_VERSION,
+    BusyMsg, CancelMsg, Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, RedirectMsg,
+    ReplicaInfoMsg, ResumeAck, ResumeMsg, MIN_WIRE_VERSION, WIRE_VERSION,
 };
 use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
 use crate::util::log::{log, Level};
@@ -94,6 +94,16 @@ pub struct EdgeSessionConfig {
     pub seed: u64,
     /// Give up after this many reattach attempts within one session.
     pub max_reattach: usize,
+    /// Fleet fallback (wire v5): when a resume is rejected because the
+    /// session's state is gone everywhere — its replica died before it
+    /// could export — RE-ROOT instead of failing: open a FRESH session
+    /// on the current (failed-over) replica with the committed prefix
+    /// as the prompt and the remaining budget. A pure draft source and
+    /// a deterministic target continue the trajectory byte-identically
+    /// — the paper's thesis that the frozen draft needs nothing but the
+    /// committed position, applied to replica death. Off by default:
+    /// outside a fleet, a lost session should fail loudly.
+    pub reroot_on_unknown_session: bool,
     /// Device/cloud compute constants for the latency model's
     /// alpha_edge / T_base terms (the network terms are measured).
     pub device: &'static EdgeDevice,
@@ -112,6 +122,7 @@ impl Default for EdgeSessionConfig {
             pipeline_depth: 1,
             seed: 1,
             max_reattach: 8,
+            reroot_on_unknown_session: false,
             device: &JETSON_ORIN,
             cloud: &A800_70B,
         }
@@ -155,6 +166,18 @@ pub struct EdgeReport {
     /// wire v4). Each is one extra uplink of the same round; committed
     /// tokens never change.
     pub busy_retries: usize,
+    /// Fleet `Redirect` frames honored (wire v5): handoffs this
+    /// session survived — FOLLOWED to the named peer when the
+    /// transport could retarget, or absorbed by a resume-in-place
+    /// (the exporter re-imports) when it could not, e.g. a mux stream
+    /// pinned to its shared connection. Committed tokens never change
+    /// either way.
+    pub redirects: usize,
+    /// Re-roots after the session's state was lost fleet-wide (replica
+    /// death before export): fresh sessions opened from the committed
+    /// prefix on a surviving replica
+    /// (`EdgeSessionConfig::reroot_on_unknown_session`).
+    pub reroots: usize,
     /// Full committed sequence (prompt + generated).
     pub committed: Vec<i32>,
 }
@@ -213,12 +236,26 @@ pub(crate) async fn handshake_with<T: Transport + ?Sized>(
 }
 
 /// Wait for a frame of `want` kind, skipping harmless transport-level
-/// duplicates of earlier acks/verdicts.
+/// duplicates of earlier acks/verdicts, replica telemetry, and stale
+/// `Redirect` duplicates (a redirect already followed; the session's
+/// current home answers the pending handshake).
 async fn await_kind<T: Transport + ?Sized>(t: &mut T, want: FrameKind) -> Result<Frame> {
     for _ in 0..SKIP_BUDGET {
         match t.recv_frame().await? {
             None => bail!("connection closed while waiting for {want:?}"),
             Some(f) if f.kind == want => return Ok(f),
+            Some(f) if f.kind == FrameKind::ReplicaInfo => {
+                if let Ok(info) = ReplicaInfoMsg::decode(&f.payload) {
+                    log(
+                        Level::Debug,
+                        "edge",
+                        &format!(
+                            "replica telemetry: version seq {} load {}",
+                            info.version, info.load
+                        ),
+                    );
+                }
+            }
             Some(f)
                 if matches!(
                     f.kind,
@@ -227,6 +264,7 @@ async fn await_kind<T: Transport + ?Sized>(t: &mut T, want: FrameKind) -> Result
                         | FrameKind::ResumeAck
                         | FrameKind::Verify
                         | FrameKind::Busy
+                        | FrameKind::Redirect
                 ) =>
             {
                 log(
@@ -241,12 +279,14 @@ async fn await_kind<T: Transport + ?Sized>(t: &mut T, want: FrameKind) -> Result
     bail!("no {want:?} frame within the skip budget")
 }
 
-/// The cloud's answer to one awaited round: a verdict, or an
+/// The cloud's answer to one awaited round: a verdict, an
 /// admission-control deferral (wire v4) telling the edge to re-send the
-/// identical draft after a backoff.
+/// identical draft after a backoff, or a fleet handoff (wire v5)
+/// telling the edge to resume the session on a peer replica.
 enum RoundReply {
     Verdict(VerifyMsg),
     Busy(BusyMsg),
+    Redirect(RedirectMsg),
 }
 
 /// Wait for THE reply of `round` — its verdict or its `Busy` deferral —
@@ -278,6 +318,21 @@ async fn await_round_reply<T: Transport + ?Sized>(t: &mut T, round: u32) -> Resu
                 // session's next expected round, so a future-round Busy
                 // cannot occur on an ordered transport.
             }
+            Some(f) if f.kind == FrameKind::Redirect => {
+                // fleet handoff (wire v5): the session left this
+                // replica. Not round-filtered — whatever round was in
+                // flight, the right move is to resume at the target
+                // (duplicates converge: the session's current home
+                // answers the replayed resume).
+                return Ok(RoundReply::Redirect(RedirectMsg::decode(&f.payload)?));
+            }
+            Some(f) if f.kind == FrameKind::ReplicaInfo => {
+                log(
+                    Level::Debug,
+                    "edge",
+                    "skipping replica telemetry while waiting for a verdict",
+                );
+            }
             Some(f)
                 if matches!(
                     f.kind,
@@ -296,11 +351,67 @@ async fn await_round_reply<T: Transport + ?Sized>(t: &mut T, round: u32) -> Resu
     bail!("no verdict for round {round} within the skip budget")
 }
 
+/// Follow (or fall back on) a fleet `Redirect` (wire v5), shared by the
+/// sequential and pipelined decode loops: adopt the handoff token,
+/// point the transport's next reattach at the target (transports that
+/// cannot move resume in place — the exporter re-imports), and hand
+/// back the error that fails the attempt so the normal reattach path
+/// replays the Resume wherever the session now lives. Any in-flight
+/// drafts die with the attempt and are redrafted byte-identically from
+/// the committed prefix.
+async fn follow_redirect<T>(
+    t: &mut T,
+    stream: u32,
+    st: &mut LiveSession,
+    totals: &mut PipeTotals,
+    r: RedirectMsg,
+    context: &str,
+) -> anyhow::Error
+where
+    T: Transport + ?Sized,
+{
+    totals.redirects += 1;
+    st.token = r.resume_token;
+    let moved = t.redirect(r.addr.clone()).await.unwrap_or(false);
+    log(
+        Level::Debug,
+        "edge",
+        &format!(
+            "stream {stream}: redirected {context} to '{}' ({})",
+            r.addr,
+            if moved { "following" } else { "resuming in place" },
+        ),
+    );
+    anyhow!("session handed off to '{}'", r.addr)
+}
+
 /// Rejections the cloud made deliberately (bad token, version gate):
 /// reconnecting cannot change the verdict, so the session fails fast.
 fn is_permanent_rejection(e: &anyhow::Error) -> bool {
     let msg = format!("{e:#}");
     msg.contains("cloud rejected resume") || msg.contains("cloud rejected handshake")
+}
+
+/// Counters carried across a RE-ROOT (replica death: the session's
+/// state was lost fleet-wide, and a fresh wire session continues from
+/// the committed prefix on a survivor). The fresh [`SessionCore`]
+/// restarts its tallies; the report sums `base + core` so the request's
+/// totals survive the identity change.
+#[derive(Debug, Default, Clone, Copy)]
+struct Carried {
+    new_tokens: usize,
+    accepted: usize,
+    drafted: usize,
+    rounds: usize,
+}
+
+impl Carried {
+    fn absorb(&mut self, core: &SessionCore) {
+        self.new_tokens += core.new_tokens;
+        self.accepted += core.accepted;
+        self.drafted += core.drafted;
+        self.rounds += core.rounds;
+    }
 }
 
 /// Session state that survives reattaches.
@@ -309,6 +420,16 @@ struct LiveSession {
     token: u64,
     target_seq_at_open: u64,
     core: SessionCore,
+    /// Totals absorbed from pre-re-root incarnations (zero until a
+    /// replica death forces a re-root).
+    base: Carried,
+    /// Nonce of an in-flight re-root `Open` (0 = none). Minted ONCE
+    /// per re-root and kept until its ack arrives, so a link drop
+    /// mid-re-root retransmits the SAME nonce and the survivor's
+    /// open-nonce dedup reattaches the half-created session instead of
+    /// leaking a second one — the same idempotency the initial Open
+    /// gets from `run_session_on`'s session-level nonce.
+    reroot_nonce: u64,
 }
 
 /// Measured-link state + policy, persistent across reattaches.
@@ -394,6 +515,10 @@ struct PipeTotals {
     /// Busy-deferred drafts re-sent (accumulated across reattaches and
     /// both loop shapes — not pipeline-specific despite the host).
     busy_retries: usize,
+    /// Fleet redirects followed (wire v5; same host rationale).
+    redirects: usize,
+    /// Re-roots after fleet-wide session loss (same host rationale).
+    reroots: usize,
 }
 
 impl PipeTotals {
@@ -493,10 +618,10 @@ where
     Ok(EdgeReport {
         session: st.id,
         target_seq_at_open: st.target_seq_at_open,
-        new_tokens: st.core.new_tokens,
-        accepted: st.core.accepted,
-        drafted: st.core.drafted,
-        rounds: st.core.rounds,
+        new_tokens: st.base.new_tokens + st.core.new_tokens,
+        accepted: st.base.accepted + st.core.accepted,
+        drafted: st.base.drafted + st.core.drafted,
+        rounds: st.base.rounds + st.core.rounds,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         reattaches,
         resumes,
@@ -508,6 +633,8 @@ where
         overlapped_waits: pipe_totals.overlapped_waits,
         exposed_waits: pipe_totals.exposed_waits,
         busy_retries: pipe_totals.busy_retries,
+        redirects: pipe_totals.redirects,
+        reroots: pipe_totals.reroots,
         committed: st.core.committed,
     })
 }
@@ -554,6 +681,8 @@ where
                 token: ack.resume_token,
                 target_seq_at_open: ack.target_seq,
                 core: SessionCore::new(ack.session, prompt, cfg.max_new),
+                base: Carried::default(),
+                reroot_nonce: 0,
             });
         }
         Some(st) => {
@@ -565,11 +694,67 @@ where
             t.send_frame(Frame::on(stream, FrameKind::Resume, msg.encode()))
                 .await?;
             let ack = ResumeAck::decode(&await_kind(t, FrameKind::ResumeAck).await?.payload)?;
-            if !ack.accepted {
+            if ack.accepted {
+                *resumes += 1;
+                // adopt the server-assigned id: after a fleet handoff
+                // the importing replica mints a fresh one (the cloud
+                // demux rewrites draft session ids anyway — this keeps
+                // the report and logs truthful)
+                if ack.session != 0 {
+                    st.id = ack.session;
+                    st.core.id = ack.session;
+                }
+                st.core.fast_forward(&ack.tail, ack.rounds as usize, ack.done);
+            } else if cfg.reroot_on_unknown_session && ack.unknown_token {
+                // fleet-wide session loss (the replica died before it
+                // could export): RE-ROOT — open a fresh session on this
+                // (failed-over) replica with the committed prefix as
+                // the prompt and the remaining budget. The frozen draft
+                // needs nothing but the position, so the trajectory
+                // continues byte-identically; only the wire identity
+                // (session id, round counter) restarts.
+                let committed = st.core.committed.clone();
+                let remaining = cfg
+                    .max_new
+                    .saturating_sub(st.base.new_tokens + st.core.new_tokens);
+                if remaining == 0 || st.core.done {
+                    st.core.done = true;
+                } else {
+                    // one nonce per re-root, held until its ack lands:
+                    // a retransmit after a mid-re-root link drop must
+                    // reattach, not leak a second session
+                    if st.reroot_nonce == 0 {
+                        st.reroot_nonce = fresh_nonce();
+                    }
+                    let open = OpenMsg {
+                        prompt: committed.clone(),
+                        max_new: remaining as u32,
+                        nonce: st.reroot_nonce,
+                    };
+                    t.send_frame(Frame::on(stream, FrameKind::Open, open.encode()))
+                        .await?;
+                    let ack =
+                        OpenAck::decode(&await_kind(t, FrameKind::OpenAck).await?.payload)?;
+                    st.reroot_nonce = 0;
+                    st.base.absorb(&st.core);
+                    st.id = ack.session;
+                    st.token = ack.resume_token;
+                    st.core = SessionCore::new(ack.session, &committed, remaining);
+                    pipe_totals.reroots += 1;
+                    log(
+                        Level::Warn,
+                        "edge",
+                        &format!(
+                            "stream {stream}: session lost fleet-wide; re-rooted as \
+                             session {} from {} committed tokens",
+                            ack.session,
+                            committed.len()
+                        ),
+                    );
+                }
+            } else {
                 bail!("cloud rejected resume: {}", ack.reason);
             }
-            *resumes += 1;
-            st.core.fast_forward(&ack.tail, ack.rounds as usize, ack.done);
         }
     }
 
@@ -600,7 +785,7 @@ where
             stats,
             rng,
             &mut pipe,
-            &mut pipe_totals.busy_retries,
+            pipe_totals,
         )
         .await;
         // on a link error, whatever was in flight dies with the attempt
@@ -654,6 +839,11 @@ where
                         t.send_frame(Frame::on(stream, FrameKind::Draft, msg.encode()))
                             .await?;
                     }
+                    RoundReply::Redirect(r) => {
+                        return Err(
+                            follow_redirect(t, stream, st, pipe_totals, r, "mid-decode").await
+                        );
+                    }
                 }
             };
 
@@ -677,7 +867,10 @@ where
 /// rounds in flight, await the head verdict, commit, and on a broken
 /// optimistic prefix retract the stale tail with one `Cancel` and
 /// redraft from the true prefix. See `serve::pipeline` for the state
-/// machine and the determinism argument.
+/// machine and the determinism argument. A fleet `Redirect` (wire v5)
+/// may land with rounds in flight: everything in the pipe dies with
+/// the attempt (the caller resets it) and is redrafted byte-identically
+/// from the committed prefix after the resume, wherever it happens.
 #[allow(clippy::too_many_arguments)]
 async fn pipelined_decode<T, D>(
     t: &mut T,
@@ -688,7 +881,7 @@ async fn pipelined_decode<T, D>(
     stats: &mut LinkStats,
     rng: &mut SplitMix64,
     pipe: &mut PipelinedDrafter,
-    busy_retries: &mut usize,
+    totals: &mut PipeTotals,
 ) -> Result<()>
 where
     T: Transport + ?Sized,
@@ -763,7 +956,7 @@ where
                             "cloud stayed busy for round {head} after {MAX_BUSY_RETRIES} retries"
                         );
                     }
-                    *busy_retries += 1;
+                    totals.busy_retries += 1;
                     busy_backoff(b.retry_after_ms, busy_attempts).await;
                     let frame = inflight_frames
                         .get(&head)
@@ -776,6 +969,11 @@ where
                         entry.1 = Instant::now();
                     }
                     t.send_frame(frame).await?;
+                }
+                RoundReply::Redirect(r) => {
+                    return Err(
+                        follow_redirect(t, stream, st, totals, r, "mid-pipeline").await
+                    );
                 }
             }
         };
@@ -938,6 +1136,25 @@ impl Transport for ResumableTransport {
             handshake_with(&mut *t, &self.hello).await?;
             self.inner = Some(t);
             Ok(true)
+        })
+    }
+
+    /// Follow a fleet `Redirect`: point the dial factory at the
+    /// handoff target and abandon the current connection (the
+    /// exporting replica parks nothing — the session already left), so
+    /// the next reattach redials there and the session loop replays
+    /// its `Resume` against the importing replica. Single-target dial
+    /// factories cannot retarget (their `set_target` returns false):
+    /// the connection is left in place and `Ok(false)` tells the
+    /// caller this degrades into a resume-in-place — still correct,
+    /// the exporter re-imports.
+    fn redirect(&mut self, addr: String) -> BoxFuture<'_, Result<bool>> {
+        Box::pin(async move {
+            let moved = self.dial.set_target(&addr);
+            if moved {
+                self.inner = None;
+            }
+            Ok(moved)
         })
     }
 }

@@ -1,0 +1,741 @@
+//! `serve::fleet` — multi-replica serving for one frozen edge draft
+//! against a FLEET of evolving cloud targets (wire v5).
+//!
+//! The paper's thesis is that a frozen draft stays compatible with a
+//! *family* of evolving targets; this module makes the family literal:
+//! N verification replicas, each its own [`VerifierHandle`] (own
+//! backend, own deployed target version), stitched together by two
+//! small pieces of shared state:
+//!
+//! * [`SessionLedger`] — the handoff store. A replica that wants to
+//!   shed a session (drain for a staged rollout, targeted rebalance)
+//!   EXPORTS the session's portable remainder — committed sequence,
+//!   prompt boundary, budget, counters, keyed by its resume token —
+//!   and answers the session's next head round with a `Redirect
+//!   { addr, resume_token }` frame instead of a verdict. Whichever
+//!   replica sees the edge's `Resume` next IMPORTS the entry and
+//!   decoding continues from the committed prefix. Because drafts are
+//!   pure functions of the committed prefix and synthetic verdicts are
+//!   pure functions of (context, version), the handed-off session
+//!   commits byte-identical tokens (`tests/serve_fleet.rs` pins this
+//!   across seeds [3, 17, 42], sequential / muxed / pipelined).
+//! * [`FleetRegistry`] — the control plane. Tracks replica endpoints,
+//!   deployed version, load (active sessions + pending drafts, from
+//!   [`ReplicaTelemetry`]) and health; performs staged/canary rollout
+//!   ([`FleetRegistry::advance_version`] reuses the existing per-
+//!   replica hot-swap) and rollback; starts/stops drains; and hands
+//!   out fleet-aware dialers.
+//!
+//! # Handoff state machine
+//!
+//! ```text
+//!  replica A (draining)                edge                  replica B
+//!   submit(head round r) ──▶ export to ledger
+//!            Redirect{B, token} ──▶ retarget dial at B
+//!                                   reattach ─── Resume{token} ──▶ import
+//!            ◀── (old conn dies; stale detach is a no-op)  ResumeAck{rounds: r}
+//!                                   redraft round r ── Draft(r) ──▶ verify
+//! ```
+//!
+//! Degraded paths, all loss-tolerant:
+//! * The edge cannot follow (a mux stream is pinned to its shared
+//!   connection): it resumes IN PLACE and A re-imports its own export;
+//!   a once-per-grace-window guard stops A from bouncing the session
+//!   again, so it always makes progress.
+//! * A duplicated `Redirect` frame re-triggers a resume that finds the
+//!   session live at its current home — absorbed like any duplicate.
+//! * A replica dies before it can export: the edge's resume is
+//!   rejected everywhere, and an edge with
+//!   `EdgeSessionConfig::reroot_on_unknown_session` re-opens on a
+//!   surviving replica with its committed prefix as the prompt — the
+//!   frozen draft needs nothing but the position, so the trajectory is
+//!   still byte-identical.
+//!
+//! Peers that negotiated wire < 5 are never redirected (they cannot
+//! parse the frame) — a drain degrades to serving them in place.
+//!
+//! The virtual-clock twin lives in `coordinator::scheduler`
+//! ([`crate::coordinator::ServeConfig`]`::fleet`): the simulator
+//! replays the redirect schedule under virtual time and commits the
+//! identical tokens, which is what keeps sim == serve determinism at
+//! fleet scale.
+
+use super::cloud::handle_conn;
+use super::fault::{FaultPlan, FaultTransport};
+use super::transport::{loopback_pair, BoxFuture, Reconnect, TcpTransport, Transport};
+use super::verifier::{ReplicaTelemetry, VerifierConfig, VerifierHandle};
+use crate::serve::backend::VerifyBackend;
+use crate::util::log::{log, Level};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+// ---------------------------------------------------------------------
+// Portable session state + the shared handoff ledger
+// ---------------------------------------------------------------------
+
+/// Everything a session needs to continue decoding on another replica
+/// — for synthetic/pure backends this IS the whole session (the KV
+/// cache is a deterministic function of `committed`; PJRT KV migration
+/// is the documented open item). Token payloads only; no handles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PortableSession {
+    /// Full committed sequence (prompt + generated).
+    pub committed: Vec<i32>,
+    /// Original prompt boundary (acceptance metrics and resume-position
+    /// validation need it; `committed[..prompt_len]` is the prompt).
+    pub prompt_len: usize,
+    /// Original per-session generation budget.
+    pub max_new: usize,
+    /// Verified rounds so far — the wire round counter continues from
+    /// here on the importing replica.
+    pub rounds: usize,
+    /// Accepted draft tokens so far (metrics continuity).
+    pub accepted: usize,
+    /// Drafted tokens so far (metrics continuity).
+    pub drafted: usize,
+    /// True when the session finished before the handoff completed.
+    pub done: bool,
+}
+
+/// The fleet's shared handoff store: resume token → [`PortableSession`].
+///
+/// Cheap to clone (an `Arc` around a mutexed map); every replica of one
+/// fleet holds a clone. Entries are WRITTEN by `export` (a draining
+/// replica, inside its verifier thread) and CONSUMED by `import` (the
+/// replica that sees the session's `Resume`), so an entry lives exactly
+/// as long as the session is in flight between replicas. In-process
+/// fleets (loopback replicas, or several TCP listeners in one server
+/// process) share it directly; a cross-process deployment would back
+/// the same two calls with an external store — the interface is the
+/// contract, deliberately tiny.
+#[derive(Clone, Default)]
+pub struct SessionLedger {
+    inner: Arc<Mutex<LedgerInner>>,
+}
+
+#[derive(Default)]
+struct LedgerInner {
+    /// Monotonic export sequence: every export gets a fresh stamp, so
+    /// an exporter can later [`SessionLedger::reap`] exactly the entry
+    /// IT wrote — never a newer re-export of the same token by a
+    /// sibling (a multi-hop handoff within one grace window).
+    seq: u64,
+    entries: HashMap<u64, (u64, PortableSession)>,
+}
+
+impl SessionLedger {
+    pub fn new() -> SessionLedger {
+        SessionLedger::default()
+    }
+
+    /// Park a session under its resume token (overwrites a stale entry
+    /// for the same token — the newest export is the truth). Returns
+    /// the entry's export stamp; the exporter passes it back to
+    /// [`SessionLedger::reap`] when its grace window expires, so an
+    /// abandoned handoff (the edge never resumes anywhere) cannot pin
+    /// the committed sequence in the shared store forever.
+    pub fn export(&self, token: u64, session: PortableSession) -> u64 {
+        let mut inner = self.inner.lock().expect("session ledger poisoned");
+        inner.seq += 1;
+        let seq = inner.seq;
+        inner.entries.insert(token, (seq, session));
+        seq
+    }
+
+    /// Take a session out (consuming its entry), if it is parked here.
+    pub fn import(&self, token: u64) -> Option<PortableSession> {
+        self.inner
+            .lock()
+            .expect("session ledger poisoned")
+            .entries
+            .remove(&token)
+            .map(|(_, p)| p)
+    }
+
+    /// Remove `token`'s entry iff it still carries the exporter's
+    /// stamp: a no-op when the entry was imported (gone) or re-exported
+    /// by a later hop (newer stamp). Called by the exporting replica
+    /// when its handoff grace window expires.
+    pub fn reap(&self, token: u64, seq: u64) {
+        let mut inner = self.inner.lock().expect("session ledger poisoned");
+        if inner.entries.get(&token).is_some_and(|(s, _)| *s == seq) {
+            inner.entries.remove(&token);
+        }
+    }
+
+    /// Sessions currently in flight between replicas.
+    pub fn len(&self) -> usize {
+        self.inner
+            .lock()
+            .expect("session ledger poisoned")
+            .entries
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// The fleet registry (control plane)
+// ---------------------------------------------------------------------
+
+/// Shared address book for in-process fleets: address label →
+/// verifier. Fleet dialers resolve redirect targets (and fail over on
+/// replica death) through it; removing an entry
+/// ([`FleetRegistry::mark_dead`]) makes dials skip the replica.
+pub type FleetDirectory = Arc<Mutex<HashMap<String, VerifierHandle>>>;
+
+/// One replica's registry entry: endpoint + the last refreshed
+/// telemetry snapshot.
+#[derive(Clone)]
+pub struct FleetReplica {
+    /// Registry-assigned replica id (stable across refreshes).
+    pub id: u32,
+    /// Endpoint: a TCP `host:port` or an in-process registry label.
+    pub addr: String,
+    /// Handle to the replica's verification service.
+    pub verifier: VerifierHandle,
+    /// False once a refresh failed to reach the replica (or
+    /// [`FleetRegistry::mark_dead`] was called) — dead replicas are
+    /// never picked as redirect targets.
+    pub healthy: bool,
+    /// Sticky operator verdict ([`FleetRegistry::mark_dead`]): a
+    /// quarantined replica is skipped by refresh entirely — it can
+    /// never be resurrected into the dial directory or the peer pool
+    /// behind the operator's back. Cleared only by
+    /// [`FleetRegistry::revive`].
+    pub quarantined: bool,
+    /// True while a drain is active on this replica.
+    pub draining: bool,
+    /// Last telemetry snapshot ([`FleetRegistry::refresh`]).
+    pub last: Option<ReplicaTelemetry>,
+}
+
+impl FleetReplica {
+    /// Load scalar for least-loaded placement (`usize::MAX` before the
+    /// first refresh, so unknown replicas are never preferred).
+    pub fn load(&self) -> usize {
+        self.last.as_ref().map(|t| t.load()).unwrap_or(usize::MAX)
+    }
+}
+
+/// Cloud-side replica registry: endpoints, versions, load, health,
+/// staged rollout, drains, and fleet-aware dialers. See the module docs
+/// for the data flow.
+#[derive(Default)]
+pub struct FleetRegistry {
+    ledger: SessionLedger,
+    directory: FleetDirectory,
+    replicas: Vec<FleetReplica>,
+    next_id: u32,
+}
+
+impl FleetRegistry {
+    pub fn new() -> FleetRegistry {
+        FleetRegistry::default()
+    }
+
+    /// The fleet's shared handoff ledger (clone it into every replica
+    /// via [`VerifierHandle::spawn_with_ledger`]).
+    pub fn ledger(&self) -> SessionLedger {
+        self.ledger.clone()
+    }
+
+    /// The shared address book fleet dialers resolve through.
+    pub fn directory(&self) -> FleetDirectory {
+        self.directory.clone()
+    }
+
+    /// Register an already-spawned replica under `addr`. The verifier
+    /// should have been spawned with this fleet's ledger, or handoffs
+    /// to/from it will be rejected resumes instead of imports.
+    pub fn register(&mut self, addr: &str, verifier: VerifierHandle) -> u32 {
+        self.next_id += 1;
+        self.directory
+            .lock()
+            .expect("fleet directory poisoned")
+            .insert(addr.to_string(), verifier.clone());
+        self.replicas.push(FleetReplica {
+            id: self.next_id,
+            addr: addr.to_string(),
+            verifier,
+            healthy: true,
+            quarantined: false,
+            draining: false,
+            last: None,
+        });
+        self.next_id
+    }
+
+    /// Spawn an in-process replica (own verifier thread + backend) and
+    /// register it: the loopback twin of adding a `serve-cloud` node.
+    pub fn spawn_loopback_replica(
+        &mut self,
+        addr: &str,
+        vcfg: VerifierConfig,
+        make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
+    ) -> Result<u32> {
+        let v = VerifierHandle::spawn_with_ledger(vcfg, self.ledger.clone(), make_backend)?;
+        Ok(self.register(addr, v))
+    }
+
+    pub fn replicas(&self) -> &[FleetReplica] {
+        &self.replicas
+    }
+
+    pub fn replica(&self, addr: &str) -> Option<&FleetReplica> {
+        self.replicas.iter().find(|r| r.addr == addr)
+    }
+
+    /// Verifier handle for `addr` (live replicas only).
+    pub fn verifier(&self, addr: &str) -> Option<VerifierHandle> {
+        self.replica(addr).map(|r| r.verifier.clone())
+    }
+
+    /// Pull fresh telemetry from every replica; a replica that fails to
+    /// answer is marked unhealthy — and pulled from the dial directory,
+    /// so fleet dials skip it — until a later refresh reaches it again,
+    /// which restores both the health flag AND the directory entry
+    /// (dials and the control plane must agree on who is reachable).
+    pub async fn refresh(&mut self) {
+        for r in &mut self.replicas {
+            if r.quarantined {
+                continue; // the operator's verdict outlives liveness
+            }
+            match r.verifier.info().await {
+                Ok(t) => {
+                    r.draining = t.draining;
+                    r.last = Some(t);
+                    r.healthy = true;
+                    self.directory
+                        .lock()
+                        .expect("fleet directory poisoned")
+                        .insert(r.addr.clone(), r.verifier.clone());
+                }
+                Err(_) => {
+                    r.healthy = false;
+                    self.directory
+                        .lock()
+                        .expect("fleet directory poisoned")
+                        .remove(&r.addr);
+                }
+            }
+        }
+    }
+
+    /// Least-loaded healthy, non-draining replica other than
+    /// `not_addr` — the standard redirect target. Ties break by
+    /// registration order (deterministic).
+    pub fn pick_peer(&self, not_addr: &str) -> Option<String> {
+        self.replicas
+            .iter()
+            .filter(|r| r.healthy && !r.quarantined && !r.draining && r.addr != not_addr)
+            .min_by_key(|r| (r.load(), r.id))
+            .map(|r| r.addr.clone())
+    }
+
+    /// Start draining `addr`: every redirect-capable session's next
+    /// head round there is handed to `to`. Sessions of pre-v5 peers
+    /// keep decoding in place.
+    pub fn drain(&mut self, addr: &str, to: &str) -> Result<()> {
+        let r = self
+            .replicas
+            .iter_mut()
+            .find(|r| r.addr == addr)
+            .ok_or_else(|| anyhow!("unknown replica '{addr}'"))?;
+        r.draining = true;
+        r.verifier.set_redirect(Some(to.to_string()));
+        Ok(())
+    }
+
+    /// Stop a drain (rollback of a scale-down, or the rollout finished).
+    pub fn undrain(&mut self, addr: &str) -> Result<()> {
+        let r = self
+            .replicas
+            .iter_mut()
+            .find(|r| r.addr == addr)
+            .ok_or_else(|| anyhow!("unknown replica '{addr}'"))?;
+        r.draining = false;
+        r.verifier.set_redirect(None);
+        Ok(())
+    }
+
+    /// Targeted rebalance: move ONE session (by its server-assigned id
+    /// on `addr`) to `to` at its next head round.
+    pub fn redirect_session(&self, addr: &str, session: u32, to: &str) -> Result<()> {
+        self.verifier(addr)
+            .ok_or_else(|| anyhow!("unknown replica '{addr}'"))?
+            .redirect_session(session, to.to_string());
+        Ok(())
+    }
+
+    /// Staged / canary rollout: hot-swap the deployed target version on
+    /// a SUBSET of replicas (live sessions there keep their state and
+    /// simply see the new verdict function — the existing single-node
+    /// hot-swap, fleet-wide). Returns the new version sequence per
+    /// replica, in `subset` order. Rolling BACK a canary is the same
+    /// call with the previous version name.
+    pub async fn advance_version(&mut self, subset: &[&str], version: &str) -> Result<Vec<u64>> {
+        let mut seqs = Vec::with_capacity(subset.len());
+        for addr in subset {
+            let v = self
+                .verifier(addr)
+                .ok_or_else(|| anyhow!("unknown replica '{addr}'"))?;
+            seqs.push(v.deploy(version).await?);
+        }
+        Ok(seqs)
+    }
+
+    /// Declare a replica dead: it leaves the directory (dials fail over
+    /// past it) and is never picked as a redirect target. STICKY — a
+    /// later refresh that happens to reach the replica will not
+    /// resurrect it behind the operator's back (sessions placed on a
+    /// replica that is about to be torn down would be lost); only
+    /// [`FleetRegistry::revive`] clears the verdict. Its unexported
+    /// sessions are lost — edges with `reroot_on_unknown_session`
+    /// re-open on a surviving replica from their committed prefix.
+    pub fn mark_dead(&mut self, addr: &str) {
+        self.directory
+            .lock()
+            .expect("fleet directory poisoned")
+            .remove(addr);
+        if let Some(r) = self.replicas.iter_mut().find(|r| r.addr == addr) {
+            r.healthy = false;
+            r.quarantined = true;
+        }
+    }
+
+    /// Lift a [`FleetRegistry::mark_dead`] quarantine: the next refresh
+    /// may mark the replica healthy and restore its directory entry.
+    pub fn revive(&mut self, addr: &str) {
+        if let Some(r) = self.replicas.iter_mut().find(|r| r.addr == addr) {
+            r.quarantined = false;
+        }
+    }
+
+    /// A fleet-aware [`Reconnect`] for in-process replicas: dials
+    /// `initial` through the shared directory, follows `Redirect`
+    /// retargets (`set_target`), and on connect failure fails over
+    /// through the directory in sorted-address order. Optionally wraps
+    /// every connection in a [`FaultTransport`] over `fault` (schedules
+    /// span reconnects — the fault-matrix wiring).
+    pub fn dial(
+        &self,
+        initial: &str,
+        fault: Option<Arc<Mutex<FaultPlan>>>,
+    ) -> Box<dyn Reconnect> {
+        Box::new(LoopbackFleetDial {
+            directory: self.directory.clone(),
+            target: initial.to_string(),
+            fault,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fleet-aware dialers (edge side)
+// ---------------------------------------------------------------------
+
+/// In-process fleet dialer: resolves its current target through the
+/// shared [`FleetDirectory`], spawning the REAL connection handler
+/// (`cloud::handle_conn`) on the replica's verifier for each fresh
+/// loopback pair — the same wiring `serve_loopback` uses, plus
+/// retargeting and failover.
+struct LoopbackFleetDial {
+    directory: FleetDirectory,
+    target: String,
+    fault: Option<Arc<Mutex<FaultPlan>>>,
+}
+
+impl Reconnect for LoopbackFleetDial {
+    fn connect(&mut self) -> BoxFuture<'_, Result<Box<dyn Transport>>> {
+        Box::pin(async move {
+            // current target first, then fail over through the
+            // directory in sorted-address order (deterministic)
+            let mut candidates = vec![self.target.clone()];
+            {
+                let d = self.directory.lock().expect("fleet directory poisoned");
+                let mut rest: Vec<String> = d
+                    .keys()
+                    .filter(|k| **k != self.target)
+                    .cloned()
+                    .collect();
+                rest.sort();
+                candidates.extend(rest);
+            }
+            for addr in candidates {
+                let Some(v) = self
+                    .directory
+                    .lock()
+                    .expect("fleet directory poisoned")
+                    .get(&addr)
+                    .cloned()
+                else {
+                    continue; // dead replica: skip
+                };
+                if addr != self.target {
+                    log(
+                        Level::Debug,
+                        "fleet",
+                        &format!("failing over from '{}' to '{addr}'", self.target),
+                    );
+                    self.target = addr.clone();
+                }
+                let (edge_t, cloud_t) = loopback_pair();
+                tokio::spawn(async move {
+                    // conn errors under drains/faults are expected; the
+                    // verifier parks or exports and the edge resumes
+                    let _ = handle_conn(cloud_t, v).await;
+                });
+                let t: Box<dyn Transport> = match &self.fault {
+                    Some(p) => Box::new(FaultTransport::new(Box::new(edge_t), p.clone())),
+                    None => Box::new(edge_t),
+                };
+                return Ok(t);
+            }
+            Err(anyhow!(
+                "fleet directory has no live replica (wanted '{}')",
+                self.target
+            ))
+        })
+    }
+
+    fn set_target(&mut self, addr: &str) -> bool {
+        self.target = addr.to_string();
+        true
+    }
+}
+
+/// TCP fleet dialer: dials its current target address, follows
+/// `Redirect` retargets, and on connect failure fails over through the
+/// known replica list (round-robin from the failed target). `addrs`
+/// seeds the known list; redirect targets outside it are learned on the
+/// fly.
+pub fn tcp_fleet_dial(addrs: Vec<String>) -> Box<dyn Reconnect> {
+    Box::new(TcpFleetDial {
+        addrs: addrs.clone(),
+        target: addrs.first().cloned().unwrap_or_default(),
+    })
+}
+
+struct TcpFleetDial {
+    addrs: Vec<String>,
+    target: String,
+}
+
+impl Reconnect for TcpFleetDial {
+    fn connect(&mut self) -> BoxFuture<'_, Result<Box<dyn Transport>>> {
+        Box::pin(async move {
+            let mut candidates = vec![self.target.clone()];
+            candidates.extend(self.addrs.iter().filter(|a| **a != self.target).cloned());
+            let mut last_err = anyhow!("no fleet addresses configured");
+            for addr in candidates {
+                match TcpTransport::connect(&addr).await {
+                    Ok(t) => {
+                        if addr != self.target {
+                            log(
+                                Level::Debug,
+                                "fleet",
+                                &format!("failing over from '{}' to '{addr}'", self.target),
+                            );
+                            self.target = addr;
+                        }
+                        return Ok(Box::new(t) as Box<dyn Transport>);
+                    }
+                    Err(e) => last_err = e,
+                }
+            }
+            Err(last_err)
+        })
+    }
+
+    fn set_target(&mut self, addr: &str) -> bool {
+        if !self.addrs.iter().any(|a| a == addr) {
+            self.addrs.push(addr.to_string());
+        }
+        self.target = addr.to_string();
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::backend::SyntheticTarget;
+
+    fn rt() -> tokio::runtime::Runtime {
+        tokio::runtime::Builder::new_current_thread()
+            .enable_all()
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn ledger_export_import_roundtrip() {
+        let l = SessionLedger::new();
+        assert!(l.is_empty());
+        let p = PortableSession {
+            committed: vec![1, 70, 71, 80, 81],
+            prompt_len: 3,
+            max_new: 32,
+            rounds: 2,
+            accepted: 5,
+            drafted: 6,
+            done: false,
+        };
+        l.export(9, p.clone());
+        assert_eq!(l.len(), 1);
+        // import consumes
+        assert_eq!(l.import(9), Some(p.clone()));
+        assert!(l.import(9).is_none());
+        // newest export wins
+        l.export(9, p.clone());
+        let p2 = PortableSession {
+            rounds: 3,
+            ..p.clone()
+        };
+        l.export(9, p2.clone());
+        assert_eq!(l.import(9), Some(p2.clone()));
+
+        // reap removes exactly the stamped entry: a stale stamp (the
+        // entry was re-exported by a later hop) is a no-op, the
+        // matching stamp clears an abandoned handoff
+        let s1 = l.export(9, p.clone());
+        let s2 = l.export(9, p2.clone());
+        assert!(s2 > s1);
+        l.reap(9, s1);
+        assert_eq!(l.len(), 1, "stale stamp must not reap a newer export");
+        l.reap(9, s2);
+        assert!(l.is_empty(), "matching stamp reaps the abandoned entry");
+        // reaping an imported (gone) entry is a no-op
+        let s3 = l.export(9, p);
+        assert!(l.import(9).is_some());
+        l.reap(9, s3);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn registry_tracks_health_load_and_picks_peers() {
+        rt().block_on(async {
+            let mut reg = FleetRegistry::new();
+            for addr in ["replica-a", "replica-b", "replica-c"] {
+                reg.spawn_loopback_replica(addr, VerifierConfig::default(), || {
+                    Ok(Box::new(SyntheticTarget::new(5)) as Box<dyn VerifyBackend>)
+                })
+                .unwrap();
+            }
+            reg.refresh().await;
+            assert!(reg.replicas().iter().all(|r| r.healthy && !r.draining));
+            assert!(reg.replicas().iter().all(|r| r.load() == 0));
+
+            // load one replica: it stops being the preferred peer
+            let vb = reg.verifier("replica-b").unwrap();
+            vb.open(vec![1, 70, 71], 32, 0).await.unwrap();
+            reg.refresh().await;
+            assert_eq!(reg.replica("replica-b").unwrap().load(), 1);
+            // from a's perspective the least-loaded peer is c (b has a
+            // session; ties break by registration order)
+            assert_eq!(reg.pick_peer("replica-a").unwrap(), "replica-c");
+
+            // draining replicas are not placement targets
+            reg.drain("replica-c", "replica-b").unwrap();
+            reg.refresh().await;
+            assert!(reg.replica("replica-c").unwrap().draining);
+            assert_eq!(reg.pick_peer("replica-a").unwrap(), "replica-b");
+            reg.undrain("replica-c").unwrap();
+            reg.refresh().await;
+            assert!(!reg.replica("replica-c").unwrap().draining);
+
+            // a dead replica leaves the directory and the peer pool
+            reg.mark_dead("replica-c");
+            assert_eq!(reg.pick_peer("replica-a").unwrap(), "replica-b");
+            assert!(reg
+                .directory()
+                .lock()
+                .unwrap()
+                .get("replica-c")
+                .is_none());
+            // mark_dead is STICKY: a refresh that still reaches the
+            // (in-process, alive) verifier must not resurrect the
+            // replica behind the operator's back
+            reg.refresh().await;
+            assert!(!reg.replica("replica-c").unwrap().healthy);
+            assert!(reg
+                .directory()
+                .lock()
+                .unwrap()
+                .get("replica-c")
+                .is_none());
+            assert_eq!(reg.pick_peer("replica-a").unwrap(), "replica-b");
+            // ...until the operator revives it
+            reg.revive("replica-c");
+            reg.refresh().await;
+            assert!(reg.replica("replica-c").unwrap().healthy);
+            assert!(reg
+                .directory()
+                .lock()
+                .unwrap()
+                .get("replica-c")
+                .is_some());
+
+            // staged rollout: canary one replica, then the rest — the
+            // per-replica version sequences advance independently
+            let seqs = reg
+                .advance_version(&["replica-a"], "synthetic_base")
+                .await
+                .unwrap();
+            assert_eq!(seqs.len(), 1);
+            reg.refresh().await;
+            let seq_a = reg.replica("replica-a").unwrap().last.as_ref().unwrap().version_seq;
+            let seq_b = reg.replica("replica-b").unwrap().last.as_ref().unwrap().version_seq;
+            assert!(seq_a > seq_b, "canary must advance ahead of the rest");
+        });
+    }
+
+    #[test]
+    fn loopback_fleet_dial_fails_over_past_dead_replicas() {
+        rt().block_on(async {
+            let mut reg = FleetRegistry::new();
+            for addr in ["replica-a", "replica-b"] {
+                reg.spawn_loopback_replica(addr, VerifierConfig::default(), || {
+                    Ok(Box::new(SyntheticTarget::new(5)) as Box<dyn VerifyBackend>)
+                })
+                .unwrap();
+            }
+            let mut dial = reg.dial("replica-a", None);
+            // normal dial reaches a live handler
+            let mut t = dial.connect().await.unwrap();
+            let hello = crate::protocol::frame::Hello {
+                wire_version: crate::protocol::frame::WIRE_VERSION,
+                mode: crate::protocol::VerifyMode::Greedy,
+                k_max: 8,
+            };
+            t.send_frame(crate::protocol::frame::Frame::control(
+                crate::protocol::frame::FrameKind::Hello,
+                hello.encode(),
+            ))
+            .await
+            .unwrap();
+            let ack = t.recv_frame().await.unwrap().unwrap();
+            assert_eq!(ack.kind, crate::protocol::frame::FrameKind::HelloAck);
+
+            // kill a: the next dial lands on b
+            reg.mark_dead("replica-a");
+            let mut t2 = dial.connect().await.unwrap();
+            t2.send_frame(crate::protocol::frame::Frame::control(
+                crate::protocol::frame::FrameKind::Hello,
+                hello.encode(),
+            ))
+            .await
+            .unwrap();
+            assert!(t2.recv_frame().await.unwrap().is_some());
+
+            // kill b too: the dial reports an empty fleet
+            reg.mark_dead("replica-b");
+            assert!(dial.connect().await.is_err());
+        });
+    }
+}

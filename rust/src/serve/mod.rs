@@ -34,6 +34,13 @@
 //!   (wire v3): the edge keeps up to `depth` rounds in flight, drafting
 //!   round r+1 from the OPTIMISTIC prefix while round r verifies. See
 //!   the pipeline data flow below.
+//! * [`fleet`] — multi-replica serving (wire v5): the [`FleetRegistry`]
+//!   control plane (replica endpoints, versions, load, health,
+//!   staged/canary rollout via the per-replica hot-swap, drains), the
+//!   shared [`SessionLedger`] handoff store, and the `Redirect` /
+//!   `ReplicaInfo` frames that let a draining or saturated replica hand
+//!   a live session to a peer mid-decode — committed sequences stay
+//!   byte-identical across the move (`tests/serve_fleet.rs`).
 //!
 //! # Pipelined drafting data flow (wire v3)
 //!
@@ -133,6 +140,7 @@ pub mod backend;
 pub mod cloud;
 pub mod edge;
 pub mod fault;
+pub mod fleet;
 pub mod mux;
 pub mod pipeline;
 pub mod session;
@@ -143,12 +151,17 @@ pub use backend::{
     bucket_k, plan_buckets, BackendVerdict, BatchBucket, BatchVerifyReq, EngineBackend,
     SyntheticDraft, SyntheticTarget, VerifyBackend,
 };
-pub use cloud::{handle_conn, serve_cloud, serve_loopback, serve_loopback_mux, ServerHandle};
+pub use cloud::{
+    handle_conn, serve_cloud, serve_cloud_with, serve_loopback, serve_loopback_mux, ServerHandle,
+};
 pub use edge::{
     edge_handshake, run_edge_session, run_session_on, EdgeReport, EdgeSessionConfig,
     ResumableTransport, SESSION_STREAM,
 };
 pub use fault::{loopback_fault_dial, FaultConfig, FaultOp, FaultPlan, FaultSide, FaultTransport};
+pub use fleet::{
+    tcp_fleet_dial, FleetDirectory, FleetRegistry, FleetReplica, PortableSession, SessionLedger,
+};
 pub use mux::{EdgeMux, MuxStream};
 pub use pipeline::{
     InflightRound, LaunchPlan, PipelinedDrafter, Resolution, MAX_PIPELINE_DEPTH,
@@ -159,6 +172,6 @@ pub use transport::{
     TcpTransport, Transport,
 };
 pub use verifier::{
-    OpenInfo, ResumeInfo, SubmitOutcome, VerifierConfig, VerifierCore, VerifierHandle,
-    VerifyReply,
+    OpenInfo, ReplicaTelemetry, ResumeInfo, SubmitOutcome, VerifierConfig, VerifierCore,
+    VerifierHandle, VerifyReply,
 };

@@ -169,6 +169,13 @@ impl EdgeMux {
 /// the shared connection stayed up), reattach returns immediately and
 /// the session simply replays its `Resume` on the live connection — the
 /// cloud handles an in-place resume on a bound stream correctly.
+///
+/// A fleet `Redirect` (wire v5) cannot be followed from here: one
+/// stream cannot leave the shared connection, so `redirect` keeps the
+/// trait default (`Ok(false)`) and the session resumes IN PLACE — the
+/// exporting replica re-imports it from the shared ledger while the
+/// SIBLING streams stay pinned to their connection, untouched
+/// (`tests/serve_fleet.rs` pins this).
 pub struct MuxStream {
     stream: u32,
     /// Latest generation this stream has observed dying (reset dedup).

@@ -12,12 +12,14 @@
 //! `committed[..basis_len] ++ spec` — equals the cloud's actual
 //! committed sequence at that round's turn (`DraftMsg::{basis_len,
 //! spec}`, wire v3). Because every draft source used for pipelining is a
-//! pure function of its context ([`DraftSource::is_pure`]), a
+//! pure function of its context
+//! ([`DraftSource::is_pure`](crate::coordinator::edge::DraftSource::is_pure)), a
 //! basis-valid speculative draft is byte-identical to the draft a
 //! sequential edge would have produced from the true committed prefix,
 //! so its verdict — and the committed sequence — is byte-identical to
 //! the sequential trajectory. A basis-broken draft is discarded by the
-//! cloud autonomously and retracted by the edge with a [`Cancel`]
+//! cloud autonomously and retracted by the edge with a
+//! [`Cancel`](crate::protocol::frame::FrameKind::Cancel)
 //! frame; the round is redrafted from the true prefix under the same
 //! round number. The `Cancel` is therefore an advisory fast-path: a
 //! dropped, delayed, or duplicated `Cancel` can never change a single

@@ -127,6 +127,39 @@ impl SessionCore {
         }
     }
 
+    /// Reconstruct a session mid-decode from portable state (a fleet
+    /// handoff import, `serve::fleet`): the full committed sequence,
+    /// the ORIGINAL prompt boundary, and the counters accumulated so
+    /// far. The invariant `new_tokens == committed.len() - prompt_len`
+    /// is restored from the arguments, so a resumed-on-another-replica
+    /// session is indistinguishable from one that decoded here all
+    /// along — which is what keeps fleet trajectories byte-identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore(
+        id: u32,
+        committed: Vec<i32>,
+        prompt_len: usize,
+        max_new: usize,
+        rounds: usize,
+        accepted: usize,
+        drafted: usize,
+        done: bool,
+    ) -> SessionCore {
+        let prompt_len = prompt_len.min(committed.len());
+        SessionCore {
+            id,
+            new_tokens: committed.len() - prompt_len,
+            committed,
+            prompt_len,
+            max_new,
+            rounds,
+            accepted,
+            drafted,
+            done,
+            speculated: Vec::new(),
+        }
+    }
+
     // --- speculative-prefix bookkeeping (pipelined drafting) ----------
 
     /// Optimistic decode context: the committed prefix plus every
@@ -387,6 +420,38 @@ mod tests {
         s.fast_forward(&[50], s.rounds, false);
         assert!(s.speculated.is_empty());
         assert!(s.committed.ends_with(&[50]));
+    }
+
+    #[test]
+    fn restore_rebuilds_mid_decode_state() {
+        // a session decoded to [prompt(2) + 5 generated] hands off
+        let mut orig = SessionCore::new(1, &[1, 10], 12);
+        orig.apply_verdict(&[20, 21], 2, 30, false, false);
+        orig.apply_verdict(&[40], 1, 41, false, false);
+        let back = SessionCore::restore(
+            7,
+            orig.committed.clone(),
+            orig.prompt_len,
+            orig.max_new,
+            orig.rounds,
+            orig.accepted,
+            orig.drafted,
+            orig.done,
+        );
+        assert_eq!(back.id, 7);
+        assert_eq!(back.committed, orig.committed);
+        assert_eq!(back.new_tokens, orig.new_tokens);
+        assert_eq!(back.rounds, orig.rounds);
+        assert!(!back.done);
+        // decoding continues exactly where the original stopped
+        let mut a = orig.clone();
+        let mut b = back.clone();
+        assert_eq!(
+            a.apply_verdict(&[50, 51], 2, 52, false, false),
+            b.apply_verdict(&[50, 51], 2, 52, false, false)
+        );
+        assert_eq!(a.committed, b.committed);
+        assert_eq!(a.new_tokens, b.new_tokens);
     }
 
     #[test]

@@ -45,6 +45,24 @@ pub trait Transport: Send {
     fn reattach(&mut self) -> BoxFuture<'_, Result<bool>> {
         Box::pin(async { Ok(false) })
     }
+
+    /// Point the NEXT reattach at a different peer (a fleet `Redirect`,
+    /// wire v5). `Ok(false)` means this transport cannot move — the
+    /// default, and the right answer for [`mux::MuxStream`]: a
+    /// per-session stream cannot leave its shared connection, so the
+    /// session resumes in place and the exporting replica re-imports it
+    /// from the fleet ledger. `Ok(true)` means the target was switched
+    /// and the current link (if any) was abandoned; the caller should
+    /// fail its attempt so the normal reattach path redials the new
+    /// target and replays the resume handshake there.
+    /// `edge::ResumableTransport` overrides this by forwarding the
+    /// address to its [`Reconnect`] factory.
+    ///
+    /// [`mux::MuxStream`]: super::mux::MuxStream
+    fn redirect(&mut self, addr: String) -> BoxFuture<'_, Result<bool>> {
+        let _ = addr;
+        Box::pin(async { Ok(false) })
+    }
 }
 
 /// Async connection factory used by the reconnect-capable wrappers
@@ -53,6 +71,19 @@ pub trait Transport: Send {
 /// `'static` futures implement it directly.
 pub trait Reconnect: Send {
     fn connect(&mut self) -> BoxFuture<'_, Result<Box<dyn Transport>>>;
+
+    /// Retarget future `connect` calls at a different peer (a fleet
+    /// `Redirect`). Returns whether the retarget took effect: the
+    /// default ignores the address and returns false — single-target
+    /// dialers (plain closures) keep redialing their one peer, which
+    /// degrades a redirect into a resume-in-place (the exporting
+    /// replica re-imports the session from the fleet ledger). Fleet
+    /// dialers ([`crate::serve::fleet`]) override this to follow the
+    /// handoff and return true.
+    fn set_target(&mut self, addr: &str) -> bool {
+        let _ = addr;
+        false
+    }
 }
 
 impl<F> Reconnect for F

@@ -46,6 +46,7 @@
 //!   sequence, and `Open` retransmits are deduplicated by client nonce.
 
 use super::backend::{BatchVerifyReq, VerifyBackend};
+use super::fleet::{PortableSession, SessionLedger};
 use super::session::{BatchDecision, BatchWindow, SessionCore};
 use crate::metrics::ServingMetrics;
 use crate::protocol::{DraftMsg, VerifyMsg};
@@ -143,7 +144,58 @@ pub enum SubmitOutcome {
     Busy {
         retry_after_ms: u32,
     },
+    /// Fleet handoff (wire v5): this replica is draining (or the
+    /// session was targeted for rebalance), so the session's state was
+    /// EXPORTED to the shared [`SessionLedger`] and the caller answers
+    /// with a `Redirect` frame instead of a verdict. The edge redials
+    /// `addr` and replays the normal `Resume { resume_token }` there;
+    /// the importing replica reconstructs the session from the ledger.
+    /// The submitted draft left no state behind — a pure draft source
+    /// re-produces byte-identical tokens from the committed prefix on
+    /// the new replica, so a handoff can never change a committed
+    /// token.
+    Redirect {
+        addr: String,
+        resume_token: u64,
+    },
 }
+
+/// One replica's instantaneous state, read by the fleet registry for
+/// placement/health and announced on the wire as a `ReplicaInfo` frame
+/// after a v5 handshake.
+#[derive(Debug, Clone)]
+pub struct ReplicaTelemetry {
+    /// Deployed target version sequence number (what `OpenAck::
+    /// target_seq` reports to edges).
+    pub version_seq: u64,
+    /// Deployed target version name.
+    pub version_name: String,
+    /// Live sessions (attached + parked).
+    pub active_sessions: usize,
+    /// Sessions parked awaiting a resume.
+    pub parked_sessions: usize,
+    /// Drafts pending verification right now (the admission queue's
+    /// instantaneous depth).
+    pub queue_len: usize,
+    /// True when a drain target is set: every redirect-capable
+    /// session's next head round is being handed off.
+    pub draining: bool,
+}
+
+impl ReplicaTelemetry {
+    /// The scalar the registry's least-loaded placement (and the wire
+    /// `ReplicaInfo::load` field) uses.
+    pub fn load(&self) -> usize {
+        self.active_sessions + self.queue_len
+    }
+}
+
+/// The rejection `resume` raises when a token maps to nothing — no live
+/// session, no finished residue, no fleet-ledger entry. One constant so
+/// the connection layer's structured-rejection classification
+/// (`ResumeAck::unknown_token`, what fleet edges key their re-root on)
+/// can never drift from the error text.
+pub const UNKNOWN_RESUME_TOKEN: &str = "unknown or expired resume token";
 
 /// Everything a `ResumeAck` needs.
 #[derive(Debug, Clone)]
@@ -212,6 +264,36 @@ pub struct VerifierCore {
     /// `detach` is a no-op unless the caller's epoch is still current.
     attachment_of: HashMap<u32, u64>,
     attach_seq: u64,
+    /// Fleet handoff ledger (`None` outside fleet deployments): the
+    /// shared store exported sessions travel through on their way to a
+    /// peer replica (`serve::fleet`).
+    ledger: Option<SessionLedger>,
+    /// Drain target: when set, every redirect-capable (wire v5)
+    /// session's next head round is answered with a `Redirect` to this
+    /// address instead of a verdict.
+    redirect_all_to: Option<String>,
+    /// Targeted handoffs (load rebalance): session id → peer address,
+    /// consumed when the session's next head round arrives.
+    redirect_sessions: HashMap<u32, String>,
+    /// Tombstones for exported sessions: id → grace deadline. Late
+    /// in-flight drafts of a handed-off session are swallowed (wasted
+    /// speculation, like a session finishing underneath its pipeline)
+    /// instead of being treated as protocol errors.
+    redirected_ids: HashMap<u32, f64>,
+    /// Resume tokens this replica already redirected once → (grace
+    /// deadline, ledger export stamp). A re-imported session — the
+    /// edge could not follow the redirect and resumed in place — is
+    /// admitted normally instead of being bounced again, which
+    /// guarantees progress; when the deadline passes, the stamp lets
+    /// the sweep reap an ABANDONED export (edge never resumed) from
+    /// the shared ledger without racing a sibling's newer re-export.
+    redirected_tokens: HashMap<u64, (f64, u64)>,
+    /// Last negotiated wire version seen submitting for each live
+    /// session (the attachment guard keeps stale connections out, so
+    /// this is the CURRENT connection's version) — promotion-time
+    /// redirects need it, because the deferred draft no longer carries
+    /// its connection.
+    wire_of: HashMap<u32, u16>,
     /// Earliest grace deadline among parked sessions and finished
     /// residues (+inf when none) — cheap gate so the per-iteration
     /// eviction sweep skips the map walks until something can expire.
@@ -246,12 +328,56 @@ impl VerifierCore {
             finished: HashMap::new(),
             attachment_of: HashMap::new(),
             attach_seq: 0,
+            ledger: None,
+            redirect_all_to: None,
+            redirect_sessions: HashMap::new(),
+            redirected_ids: HashMap::new(),
+            redirected_tokens: HashMap::new(),
+            wire_of: HashMap::new(),
             next_sweep_ms: f64::INFINITY,
             window,
             next_id: 1,
             rng,
             token_rng,
             metrics: ServingMetrics::default(),
+        }
+    }
+
+    /// Attach this replica to a fleet's shared handoff ledger
+    /// (builder-style). Without a ledger the core never redirects and
+    /// never imports — the pre-fleet single-replica behavior.
+    pub fn with_ledger(mut self, ledger: SessionLedger) -> VerifierCore {
+        self.ledger = Some(ledger);
+        self
+    }
+
+    /// Start (or stop, with `None`) DRAINING: every redirect-capable
+    /// session's next head round is answered with a `Redirect` to
+    /// `target` — the staged-rollout / scale-down primitive. Sessions
+    /// of peers below wire v5 keep decoding here (they cannot parse a
+    /// redirect), and a session is bounced at most once per grace
+    /// window so a peer that resumes in place always makes progress.
+    pub fn set_redirect(&mut self, target: Option<String>) {
+        self.redirect_all_to = target;
+    }
+
+    /// Target ONE session for handoff to `target` (load rebalance):
+    /// its next head round is redirected; everything else on this
+    /// replica is untouched.
+    pub fn redirect_session(&mut self, id: u32, target: String) {
+        self.redirect_sessions.insert(id, target);
+    }
+
+    /// Instantaneous replica state for the fleet registry and the wire
+    /// `ReplicaInfo` announcement.
+    pub fn telemetry(&self) -> ReplicaTelemetry {
+        ReplicaTelemetry {
+            version_seq: self.backend.version_seq(),
+            version_name: self.backend.version_name(),
+            active_sessions: self.sessions.len(),
+            parked_sessions: self.parked.len(),
+            queue_len: self.pending.len(),
+            draining: self.redirect_all_to.is_some(),
         }
     }
 
@@ -324,14 +450,9 @@ impl VerifierCore {
         })
     }
 
-    /// Queue one draft block for batched verification — or recognize it
-    /// as a duplicate/retransmit/speculative round and
-    /// replay/defer/swallow it. `attachment` is the submitting
-    /// connection's epoch: a draft from a STALE attachment (its session
-    /// was stolen by a reconnect) is swallowed outright — it could
-    /// neither deliver a verdict nor is one owed. `can_defer` says the
-    /// peer negotiated wire >= 4 and understands a `Busy` deferral;
-    /// older peers are always admitted.
+    /// [`VerifierCore::submit_from`] with the peer capability expressed
+    /// as the pre-fleet bool: `can_defer` maps to wire v4, everything
+    /// else to the v2 floor (no `Busy`, no `Redirect`).
     pub fn submit(
         &mut self,
         now_ms: f64,
@@ -339,6 +460,27 @@ impl VerifierCore {
         msg: DraftMsg,
         can_defer: bool,
     ) -> Result<SubmitOutcome> {
+        self.submit_from(now_ms, attachment, msg, if can_defer { 4 } else { 2 })
+    }
+
+    /// Queue one draft block for batched verification — or recognize it
+    /// as a duplicate/retransmit/speculative round and
+    /// replay/defer/swallow it. `attachment` is the submitting
+    /// connection's epoch: a draft from a STALE attachment (its session
+    /// was stolen by a reconnect) is swallowed outright — it could
+    /// neither deliver a verdict nor is one owed. `peer_wire` is the
+    /// connection's NEGOTIATED wire version: peers >= 4 may be answered
+    /// with a `Busy` deferral, peers >= 5 may be handed to a fleet
+    /// sibling with a `Redirect`; older peers are always admitted
+    /// because they could not act on either.
+    pub fn submit_from(
+        &mut self,
+        now_ms: f64,
+        attachment: u64,
+        msg: DraftMsg,
+        peer_wire: u16,
+    ) -> Result<SubmitOutcome> {
+        let can_defer = peer_wire >= 4;
         let id = msg.session;
         if self.attachment_of.contains_key(&id)
             && self.attachment_of.get(&id) != Some(&attachment)
@@ -360,9 +502,10 @@ impl VerifierCore {
         if !self.sessions.contains_key(&id) {
             // a speculative round overtaken by its session's completion
             // (the head verdict finished the session while this draft
-            // was in flight): wasted speculation, not a protocol error —
-            // the tombstoned verdict cache proves the session existed
-            if self.last_verdict.contains_key(&id) {
+            // was in flight) — or by its session's HANDOFF to a fleet
+            // sibling: wasted speculation, not a protocol error — the
+            // tombstones prove the session existed
+            if self.last_verdict.contains_key(&id) || self.redirected_ids.contains_key(&id) {
                 self.metrics.drafts_cancelled += 1;
                 self.metrics.draft_tokens_wasted += msg.tokens.len();
                 return Ok(SubmitOutcome::Swallowed);
@@ -372,6 +515,9 @@ impl VerifierCore {
         if self.parked.contains_key(&id) {
             bail!("session {id} is parked (reconnect pending)");
         }
+        // remember the live connection's wire version: deferred rounds
+        // promoted later (promote_ready) have no connection in hand
+        self.wire_of.insert(id, peer_wire);
         if let Some(p) = self.pending.get(&id) {
             if p.round == msg.round {
                 if p.tokens == msg.tokens && p.spec == msg.spec {
@@ -407,6 +553,21 @@ impl VerifierCore {
             self.metrics.drafts_cancelled += 1;
             self.metrics.draft_tokens_wasted += msg.tokens.len();
             return Ok(SubmitOutcome::Swallowed);
+        }
+        // fleet handoff (wire v5): a draining replica — or a targeted
+        // rebalance — answers the session's NEXT head round with a
+        // Redirect instead of a verdict. Placed after the
+        // dedup/staleness/basis filters (a swallowed stale copy must
+        // never trigger an export) and before admission (a handoff
+        // beats a deferral: it permanently sheds the load). The whole
+        // session is exported to the shared ledger here, so whichever
+        // replica sees the edge's Resume next — the redirect target,
+        // or this one if the edge cannot follow — reconstructs it.
+        if peer_wire >= 5 {
+            if let Some(addr) = self.redirect_target(id) {
+                let resume_token = self.export_session(now_ms, id)?;
+                return Ok(SubmitOutcome::Redirect { addr, resume_token });
+            }
         }
         // admission control: a fresh head round arriving at the backlog
         // bound is deferred (after the dedup/staleness filters above, so
@@ -494,15 +655,186 @@ impl VerifierCore {
             && core.committed[basis..] == msg.spec[..]
     }
 
+    /// Where `id`'s next head round should be handed off, if anywhere:
+    /// a targeted rebalance entry wins over the drain target; both need
+    /// a ledger, and a token this replica already bounced once (within
+    /// the grace window) is never bounced again — the edge may have
+    /// resumed in place because it cannot follow redirects, and it must
+    /// make progress.
+    fn redirect_target(&self, id: u32) -> Option<String> {
+        self.ledger.as_ref()?;
+        let token = self.token_of.get(&id)?;
+        if self.redirected_tokens.contains_key(token) {
+            return None;
+        }
+        self.redirect_sessions
+            .get(&id)
+            .cloned()
+            .or_else(|| self.redirect_all_to.clone())
+    }
+
+    /// Hand one live session off to the fleet: strip every local trace
+    /// (backend session, token maps, window membership) and publish the
+    /// portable remainder — committed sequence, prompt boundary,
+    /// budget, counters — under its resume token in the shared ledger.
+    /// Two tombstones stay behind for one grace window: the verdict
+    /// replay cache (late duplicates of already-verified rounds still
+    /// replay) and a redirected-id marker (in-flight speculative drafts
+    /// of the handed-off session are swallowed, not fatal).
+    fn export_session(&mut self, now_ms: f64, id: u32) -> Result<u64> {
+        let ledger = self
+            .ledger
+            .clone()
+            .ok_or_else(|| anyhow!("no fleet ledger configured"))?;
+        let core = self
+            .sessions
+            .remove(&id)
+            .ok_or_else(|| anyhow!("no session {id} to export"))?;
+        let token = self
+            .token_of
+            .remove(&id)
+            .ok_or_else(|| anyhow!("session {id} has no resume token"))?;
+        self.session_of_token.remove(&token);
+        self.pending.remove(&id);
+        self.queued.remove(&id);
+        self.window.remove(id);
+        self.parked.remove(&id);
+        if let Some(n) = self.nonce_of.remove(&id) {
+            self.open_nonces.remove(&n);
+        }
+        self.attachment_of.remove(&id);
+        self.redirect_sessions.remove(&id);
+        self.wire_of.remove(&id);
+        self.backend.end_session(id);
+        let deadline = now_ms + self.cfg.resume_grace_ms;
+        self.redirected_ids.insert(id, deadline);
+        self.next_sweep_ms = self.next_sweep_ms.min(deadline);
+        let seq = ledger.export(
+            token,
+            PortableSession {
+                committed: core.committed,
+                prompt_len: core.prompt_len,
+                max_new: core.max_new,
+                rounds: core.rounds,
+                accepted: core.accepted,
+                drafted: core.drafted,
+                done: core.done,
+            },
+        );
+        self.redirected_tokens.insert(token, (deadline, seq));
+        self.metrics.sessions_redirected += 1;
+        Ok(token)
+    }
+
+    /// Reconstruct a handed-off session from its ledger state (the
+    /// other half of [`VerifierCore::export_session`], running on the
+    /// redirect target — or on the exporting replica itself when the
+    /// edge resumed in place). A fresh local id and attachment epoch
+    /// are minted; the resume token is preserved, so a second handoff
+    /// keeps working. On any failure the entry is put back so a bad
+    /// resume position cannot destroy the only copy of the session.
+    fn import_session(
+        &mut self,
+        token: u64,
+        p: PortableSession,
+        committed_len: usize,
+    ) -> Result<ResumeInfo> {
+        let floor = p.prompt_len.min(p.committed.len());
+        if committed_len < floor || committed_len > p.committed.len() {
+            let range = format!("{floor}..={}", p.committed.len());
+            if let Some(l) = &self.ledger {
+                l.export(token, p);
+            }
+            bail!("resume position {committed_len} out of range ({range})");
+        }
+        if p.done {
+            // finished before the handoff completed (only reachable
+            // with an external ledger writer — in-tree exports are
+            // always live): answer like a finished residue, and put
+            // the entry BACK so a lost ResumeAck can be replayed — the
+            // import above consumed the only copy, and unlike
+            // close_window's FinishedResidue there is no clock here to
+            // arm a local grace window with.
+            self.metrics.sessions_imported += 1;
+            self.metrics.sessions_resumed += 1;
+            let info = ResumeInfo {
+                session: 0,
+                attachment: 0,
+                committed_len: p.committed.len(),
+                tail: p.committed[committed_len..].to_vec(),
+                rounds: p.rounds,
+                target_seq: self.backend.version_seq(),
+                done: true,
+            };
+            if let Some(l) = &self.ledger {
+                l.export(token, p);
+            }
+            return Ok(info);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        if let Err(e) = self.backend.start_session(id, &p.committed) {
+            if let Some(l) = &self.ledger {
+                l.export(token, p);
+            }
+            return Err(e);
+        }
+        let tail = p.committed[committed_len..].to_vec();
+        let info = ResumeInfo {
+            session: id,
+            attachment: 0,
+            committed_len: p.committed.len(),
+            tail,
+            rounds: p.rounds,
+            target_seq: self.backend.version_seq(),
+            done: false,
+        };
+        self.sessions.insert(
+            id,
+            SessionCore::restore(
+                id,
+                p.committed,
+                p.prompt_len,
+                p.max_new,
+                p.rounds,
+                p.accepted,
+                p.drafted,
+                false,
+            ),
+        );
+        self.token_of.insert(id, token);
+        self.session_of_token.insert(token, id);
+        self.metrics.sessions_imported += 1;
+        self.metrics.sessions_resumed += 1;
+        Ok(ResumeInfo {
+            attachment: self.next_attachment(id),
+            ..info
+        })
+    }
+
     /// After a window close committed fresh verdicts: basis-check each
     /// affected session's queued next round and promote the valid ones
     /// into the (new) batch window; a broken basis voids the round AND
     /// everything chained behind it. Returns the batch decisions the
-    /// caller must schedule plus the (session, round) keys of discarded
-    /// drafts whose reply waiters are void.
-    pub fn promote_ready(&mut self, now_ms: f64) -> (Vec<BatchDecision>, Vec<(u32, u32)>) {
+    /// caller must schedule, the (session, round) keys of discarded
+    /// drafts whose reply waiters are void, and the fleet handoffs
+    /// (session, round, addr, resume_token) fired at promotion time —
+    /// a saturated pipeline's next head round always arrives EARLY and
+    /// parks in the speculative queue, so a drain that only checked
+    /// `submit` could never shed it; the promotion point is the same
+    /// head-round boundary, just reached from the queue.
+    #[allow(clippy::type_complexity)]
+    pub fn promote_ready(
+        &mut self,
+        now_ms: f64,
+    ) -> (
+        Vec<BatchDecision>,
+        Vec<(u32, u32)>,
+        Vec<(u32, u32, String, u64)>,
+    ) {
         let mut decisions = Vec::new();
         let mut dropped = Vec::new();
+        let mut redirects = Vec::new();
         let ids: Vec<u32> = self.queued.keys().copied().collect();
         for id in ids {
             if self.pending.contains_key(&id) || self.parked.contains_key(&id) {
@@ -532,6 +864,27 @@ impl VerifierCore {
             }
             let msg = q.remove(0);
             if self.basis_valid(id, &msg) {
+                // fleet drain at the promotion boundary: same gate as
+                // submit (peer wire >= 5, once per grace window), same
+                // export — the promoted draft and everything chained
+                // behind it die with the handoff (the edge redrafts
+                // byte-identically from the committed prefix after its
+                // resume)
+                if self.wire_of.get(&id).copied().unwrap_or(0) >= 5 {
+                    if let Some(addr) = self.redirect_target(id) {
+                        if let Ok(token) = self.export_session(now_ms, id) {
+                            self.metrics.drafts_cancelled += 1;
+                            self.metrics.draft_tokens_wasted += msg.tokens.len();
+                            for m in q {
+                                self.metrics.drafts_cancelled += 1;
+                                self.metrics.draft_tokens_wasted += m.tokens.len();
+                                dropped.push((id, m.round));
+                            }
+                            redirects.push((id, msg.round, addr, token));
+                            continue;
+                        }
+                    }
+                }
                 if !msg.spec.is_empty() {
                     self.metrics.rounds_pipelined += 1;
                 }
@@ -554,7 +907,7 @@ impl VerifierCore {
                 }
             }
         }
-        (decisions, dropped)
+        (decisions, dropped, redirects)
     }
 
     /// Edge `Cancel` (wire v3): retract queued speculative rounds
@@ -701,6 +1054,8 @@ impl VerifierCore {
                     self.open_nonces.remove(&n);
                 }
                 self.attachment_of.remove(&id);
+                self.wire_of.remove(&id);
+                self.redirect_sessions.remove(&id);
             }
             out.push((id, vmsg));
         }
@@ -757,7 +1112,14 @@ impl VerifierCore {
             });
         }
         let Some(&id) = self.session_of_token.get(&token) else {
-            bail!("unknown or expired resume token");
+            // fleet handoff: the session may be parked in the shared
+            // ledger — exported by a draining sibling whose Redirect
+            // pointed here, or by THIS replica if the edge could not
+            // follow the redirect and resumed in place
+            if let Some(p) = self.ledger.as_ref().and_then(|l| l.import(token)) {
+                return self.import_session(token, p, committed_len);
+            }
+            bail!(UNKNOWN_RESUME_TOKEN);
         };
         let core = self
             .sessions
@@ -820,6 +1182,8 @@ impl VerifierCore {
                 self.open_nonces.remove(&n);
             }
             self.attachment_of.remove(&id);
+            self.wire_of.remove(&id);
+            self.redirect_sessions.remove(&id);
             self.backend.end_session(id);
             self.metrics.sessions_evicted += 1;
         }
@@ -835,6 +1199,37 @@ impl VerifierCore {
                 self.metrics.residues_expired += 1;
             }
         }
+        // fleet-handoff tombstones expire with the same grace window:
+        // past it, a late draft for an exported session is a genuine
+        // protocol error again, and a long-lived re-imported session
+        // becomes eligible for one more handoff. The exported id's
+        // verdict-replay tombstone goes with it — no other cleanup path
+        // ever fires for an exported session, so forgetting it here
+        // would leak one cached VerifyMsg per handoff forever — and an
+        // export the edge NEVER resumed is reaped from the shared
+        // ledger (stamp-checked: an imported or re-exported entry is
+        // left alone), so abandoned handoffs cannot pin committed
+        // sequences fleet-wide.
+        let last_verdict = &mut self.last_verdict;
+        self.redirected_ids.retain(|id, d| {
+            if now_ms <= *d {
+                true
+            } else {
+                last_verdict.remove(id);
+                false
+            }
+        });
+        let ledger = self.ledger.clone();
+        self.redirected_tokens.retain(|token, (d, seq)| {
+            if now_ms <= *d {
+                true
+            } else {
+                if let Some(l) = &ledger {
+                    l.reap(*token, *seq);
+                }
+                false
+            }
+        });
         // Defensive invariant sweep: every open-nonce entry must name a
         // LIVE session (finish/evict/abort all clean their nonce up).
         // Enforcing it here — on the same periodic timer — means a
@@ -850,6 +1245,8 @@ impl VerifierCore {
             .values()
             .copied()
             .chain(self.finished.values().map(|f| f.deadline_ms))
+            .chain(self.redirected_ids.values().copied())
+            .chain(self.redirected_tokens.values().map(|(d, _)| *d))
             .fold(f64::INFINITY, f64::min);
         expired.len()
     }
@@ -870,6 +1267,8 @@ impl VerifierCore {
                 self.open_nonces.remove(&n);
             }
             self.attachment_of.remove(&id);
+            self.wire_of.remove(&id);
+            self.redirect_sessions.remove(&id);
             self.backend.end_session(id);
             self.metrics.sessions_aborted += 1;
         }
@@ -898,6 +1297,13 @@ pub enum VerifyReply {
         round: u32,
         retry_after_ms: u32,
     },
+    /// Fleet handoff to deliver as a `Redirect` frame (wire v5): the
+    /// session was exported to the shared ledger; the edge resumes on
+    /// `addr` with `resume_token`.
+    Redirect {
+        addr: String,
+        resume_token: u64,
+    },
 }
 
 enum VerifierCmd {
@@ -911,9 +1317,20 @@ enum VerifierCmd {
         id: u32,
         attachment: u64,
         msg: DraftMsg,
-        /// Peer negotiated wire >= 4 (understands `Busy` deferrals).
-        can_defer: bool,
+        /// The connection's negotiated wire version (>= 4 understands
+        /// `Busy` deferrals, >= 5 can follow a fleet `Redirect`).
+        wire: u16,
         reply: oneshot::Sender<Result<Option<VerifyReply>>>,
+    },
+    SetRedirect {
+        target: Option<String>,
+    },
+    RedirectSession {
+        id: u32,
+        target: String,
+    },
+    Info {
+        reply: oneshot::Sender<ReplicaTelemetry>,
     },
     Cancel {
         id: u32,
@@ -959,6 +1376,26 @@ impl VerifierHandle {
         cfg: VerifierConfig,
         make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
     ) -> Result<VerifierHandle> {
+        VerifierHandle::spawn_inner(cfg, None, make_backend)
+    }
+
+    /// [`VerifierHandle::spawn`] with a fleet handoff ledger attached:
+    /// the replica can export sessions on `Redirect` and import
+    /// sessions a sibling (or itself) exported. Every replica of one
+    /// fleet shares one ledger (`FleetRegistry` hands out clones).
+    pub fn spawn_with_ledger(
+        cfg: VerifierConfig,
+        ledger: SessionLedger,
+        make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
+    ) -> Result<VerifierHandle> {
+        VerifierHandle::spawn_inner(cfg, Some(ledger), make_backend)
+    }
+
+    fn spawn_inner(
+        cfg: VerifierConfig,
+        ledger: Option<SessionLedger>,
+        make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
+    ) -> Result<VerifierHandle> {
         let (tx, rx) = std_mpsc::channel();
         let (ready_tx, ready_rx) = std_mpsc::channel::<Result<()>>();
         std::thread::Builder::new()
@@ -974,7 +1411,11 @@ impl VerifierHandle {
                         return;
                     }
                 };
-                run_verifier(VerifierCore::new(cfg, backend), rx);
+                let mut core = VerifierCore::new(cfg, backend);
+                if let Some(l) = ledger {
+                    core = core.with_ledger(l);
+                }
+                run_verifier(core, rx);
             })?;
         ready_rx
             .recv_timeout(Duration::from_secs(60))
@@ -1005,26 +1446,48 @@ impl VerifierHandle {
     /// requester delivers the verdict) — a dropped reply channel is
     /// therefore benign, not an error. `Ok(Some(VerifyReply::Busy))`
     /// means the admission queue turned the round away (only possible
-    /// when `can_defer` — the peer negotiated wire >= 4).
+    /// for peers that negotiated `wire >= 4`);
+    /// `Ok(Some(VerifyReply::Redirect))` hands the session to a fleet
+    /// sibling (only for peers with `wire >= 5`).
     pub async fn verify(
         &self,
         id: u32,
         attachment: u64,
         msg: DraftMsg,
-        can_defer: bool,
+        wire: u16,
     ) -> Result<Option<VerifyReply>> {
         let (reply, rx) = oneshot::channel();
         self.post(VerifierCmd::Verify {
             id,
             attachment,
             msg,
-            can_defer,
+            wire,
             reply,
         })?;
         match rx.await {
             Ok(res) => res,
             Err(_) => Ok(None),
         }
+    }
+
+    /// Fire-and-forget drain toggle: `Some(addr)` starts redirecting
+    /// every redirect-capable session's next head round to `addr`
+    /// (staged rollout / scale-down); `None` stops.
+    pub fn set_redirect(&self, target: Option<String>) {
+        let _ = self.post(VerifierCmd::SetRedirect { target });
+    }
+
+    /// Fire-and-forget targeted handoff of ONE session (rebalance).
+    pub fn redirect_session(&self, id: u32, target: String) {
+        let _ = self.post(VerifierCmd::RedirectSession { id, target });
+    }
+
+    /// Instantaneous replica telemetry (version, load, drain state) —
+    /// what the fleet registry polls and the `ReplicaInfo` frame ships.
+    pub async fn info(&self) -> Result<ReplicaTelemetry> {
+        let (reply, rx) = oneshot::channel();
+        self.post(VerifierCmd::Info { reply })?;
+        rx.await.map_err(|_| anyhow!("verifier dropped the reply"))
     }
 
     /// Fire-and-forget retraction of queued speculative rounds
@@ -1135,9 +1598,21 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                     return;
                 }
             }
-            let (decisions, dropped) = core.promote_ready(now);
+            let (decisions, dropped, redirects) = core.promote_ready(now);
             for key in dropped {
                 replies.remove(&key);
+            }
+            // promotion-time fleet handoffs: the promoted round's
+            // waiter gets the Redirect; every other waiter of the
+            // exported session can never be answered here
+            for (id, round, addr, resume_token) in redirects {
+                if let Some(tx) = replies.remove(&(id, round)) {
+                    let _ = tx.send(Ok(Some(VerifyReply::Redirect {
+                        addr,
+                        resume_token,
+                    })));
+                }
+                replies.retain(|key, _| key.0 != id);
             }
             let mut close_again = false;
             for d in decisions {
@@ -1193,11 +1668,11 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                 id,
                 attachment,
                 msg,
-                can_defer,
+                wire,
                 reply,
             }) => {
                 let round = msg.round;
-                match core.submit(now_ms(&start), attachment, msg, can_defer) {
+                match core.submit_from(now_ms(&start), attachment, msg, wire) {
                     Ok(SubmitOutcome::Queued(decision)) => {
                         replies.insert((id, round), reply);
                         match decision {
@@ -1236,10 +1711,27 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                             retry_after_ms,
                         })));
                     }
+                    // fleet handoff: the whole session left this
+                    // replica — any other waiters it had (deferred
+                    // speculative rounds) can never be answered here
+                    Ok(SubmitOutcome::Redirect { addr, resume_token }) => {
+                        replies.retain(|key, _| key.0 != id);
+                        let _ = reply.send(Ok(Some(VerifyReply::Redirect {
+                            addr,
+                            resume_token,
+                        })));
+                    }
                     Err(e) => {
                         let _ = reply.send(Err(e));
                     }
                 }
+            }
+            Ok(VerifierCmd::SetRedirect { target }) => core.set_redirect(target),
+            Ok(VerifierCmd::RedirectSession { id, target }) => {
+                core.redirect_session(id, target)
+            }
+            Ok(VerifierCmd::Info { reply }) => {
+                let _ = reply.send(core.telemetry());
             }
             Ok(VerifierCmd::Cancel {
                 id,
@@ -1287,6 +1779,43 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                 let now = now_ms(&start);
                 flush(&mut core, &mut replies, &mut deadline, now);
                 let _ = reply.send(core.metrics.clone());
+                // Drain-until-quiet: commands queued behind the
+                // shutdown (a draft racing a replica teardown) must
+                // learn the service is gone — an unanswered verify
+                // would strand its edge on a healthy-looking
+                // connection. Each straggler gets an error, which tears
+                // its connection down; once traffic stops for one
+                // interval the thread exits and later posts fail at the
+                // sender.
+                while let Ok(cmd) = rx.recv_timeout(Duration::from_millis(20)) {
+                    let gone = || anyhow!("verifier is shutting down");
+                    match cmd {
+                        VerifierCmd::Verify { reply, .. } => {
+                            let _ = reply.send(Err(gone()));
+                        }
+                        VerifierCmd::Open { reply, .. } => {
+                            let _ = reply.send(Err(gone()));
+                        }
+                        VerifierCmd::Resume { reply, .. } => {
+                            let _ = reply.send(Err(gone()));
+                        }
+                        VerifierCmd::Deploy { reply, .. } => {
+                            let _ = reply.send(Err(gone()));
+                        }
+                        VerifierCmd::Stats { reply } | VerifierCmd::Shutdown { reply } => {
+                            let _ = reply.send(core.metrics.clone());
+                        }
+                        VerifierCmd::Info { reply } => {
+                            let _ = reply.send(core.telemetry());
+                        }
+                        VerifierCmd::Cancel { .. }
+                        | VerifierCmd::Detach { .. }
+                        | VerifierCmd::End { .. }
+                        | VerifierCmd::SetRedirect { .. }
+                        | VerifierCmd::RedirectSession { .. }
+                        | VerifierCmd::RejectedHandshake => {}
+                    }
+                }
                 return;
             }
             // expiry handled at the top of the loop
@@ -1686,7 +2215,7 @@ mod tests {
         assert_eq!(out[0].1.tau as usize, 4);
 
         // promotion basis-checks and admits round 1 into the window
-        let (decisions, dropped) = c.promote_ready(0.4);
+        let (decisions, dropped, _) = c.promote_ready(0.4);
         assert_eq!(decisions.len(), 1);
         assert!(dropped.is_empty());
         assert_eq!(c.metrics.rounds_pipelined, 1);
@@ -1721,7 +2250,7 @@ mod tests {
         let correction = out[0].1.correction;
 
         // the queued speculative round is stale: discarded, counted
-        let (decisions, dropped) = c.promote_ready(0.4);
+        let (decisions, dropped, _) = c.promote_ready(0.4);
         assert!(decisions.is_empty());
         assert_eq!(dropped, vec![(id, 1)]);
         assert_eq!(c.metrics.drafts_cancelled, 1);
@@ -1820,7 +2349,7 @@ mod tests {
         let v = c.close_window(0.2).unwrap().remove(0).1;
         assert!(v.eos);
         // promotion sees the dead session and voids the queue
-        let (decisions, dropped) = c.promote_ready(0.3);
+        let (decisions, dropped, _) = c.promote_ready(0.3);
         assert!(decisions.is_empty());
         assert_eq!(dropped, vec![(id, 1)]);
         assert_eq!(c.metrics.drafts_cancelled, 1);
@@ -2099,7 +2628,7 @@ mod tests {
             // max_new 5: one K=4 round (+ bonus) finishes the session
             let o = h.open(prompt.clone(), 5, 0).await.unwrap();
             let msg = draft_for(o.session, 0, &prompt, 4);
-            match h.verify(o.session, o.attachment, msg, false).await.unwrap() {
+            match h.verify(o.session, o.attachment, msg, 2).await.unwrap() {
                 Some(VerifyReply::Verdict(v)) => assert!(v.eos),
                 other => panic!("expected a verdict, got {other:?}"),
             }
@@ -2132,5 +2661,276 @@ mod tests {
         let out = c.close_window(0.0).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(c.active_sessions(), 1);
+    }
+
+    // --- fleet handoff (serve::fleet, wire v5) ------------------------
+
+    use crate::serve::fleet::SessionLedger;
+
+    fn evolved_core(ledger: &SessionLedger) -> VerifierCore {
+        let mut t = SyntheticTarget::new(7).with_version("evolved", 0.3);
+        t.deploy("evolved").unwrap();
+        VerifierCore::new(VerifierConfig::default(), Box::new(t)).with_ledger(ledger.clone())
+    }
+
+    /// Drive one verification round on `c` as a wire-v5 peer: submit
+    /// the pure draft for `round` from `committed`, close the window,
+    /// apply the verdict to the edge mirror.
+    fn drive_round(
+        c: &mut VerifierCore,
+        att: u64,
+        id: u32,
+        round: u32,
+        committed: &mut Vec<i32>,
+    ) -> VerifyMsg {
+        let msg = draft_for(id, round, committed, 4);
+        let toks = msg.tokens.clone();
+        queued(c.submit_from(round as f64, att, msg, 5).unwrap());
+        let v = c.close_window(round as f64).unwrap().remove(0).1;
+        committed.extend_from_slice(&toks[..v.tau as usize]);
+        committed.push(v.correction);
+        v
+    }
+
+    /// Tentpole (core level): draining replica A exports mid-decode,
+    /// replica B imports from the shared ledger on the edge's Resume,
+    /// and the committed trajectory is byte-identical to one replica
+    /// decoding uninterrupted — the frozen-draft/evolving-target
+    /// decoupling applied across the fleet.
+    #[test]
+    fn drain_hands_session_to_peer_with_identical_trajectory() {
+        // reference: one replica, uninterrupted, 6 rounds
+        let mut reference = evolved_core(&SessionLedger::new());
+        let prompt = vec![1, 70, 71];
+        let o = reference.open_session(&prompt, 256, 0).unwrap();
+        let mut want = prompt.clone();
+        for round in 0..6 {
+            drive_round(&mut reference, o.attachment, o.session, round, &mut want);
+        }
+
+        // fleet: 3 rounds on A, drain, resume on B, 3 rounds there
+        let ledger = SessionLedger::new();
+        let mut a = evolved_core(&ledger);
+        let mut b = evolved_core(&ledger);
+        let oa = a.open_session(&prompt, 256, 0).unwrap();
+        let mut committed = prompt.clone();
+        for round in 0..3 {
+            drive_round(&mut a, oa.attachment, oa.session, round, &mut committed);
+        }
+        a.set_redirect(Some("replica-b".into()));
+        assert!(a.telemetry().draining);
+        let (addr, token) = match a
+            .submit_from(3.0, oa.attachment, draft_for(oa.session, 3, &committed, 4), 5)
+            .unwrap()
+        {
+            SubmitOutcome::Redirect { addr, resume_token } => (addr, resume_token),
+            other => panic!("expected Redirect, got {other:?}"),
+        };
+        assert_eq!(addr, "replica-b");
+        assert_eq!(token, oa.resume_token);
+        assert_eq!(a.active_sessions(), 0, "session must leave the exporter");
+        assert_eq!(ledger.len(), 1);
+
+        // the edge resumes on B with its committed position
+        let info = b.resume(token, committed.len()).unwrap();
+        assert!(!info.done);
+        assert!(info.tail.is_empty(), "edge was up to date at handoff");
+        assert_eq!(info.rounds, 3, "round counter travels with the session");
+        assert!(ledger.is_empty(), "import consumes the ledger entry");
+        for round in 3..6 {
+            drive_round(&mut b, info.attachment, info.session, round, &mut committed);
+        }
+        assert_eq!(committed, want, "handoff changed a committed token");
+        assert_eq!(a.metrics.sessions_redirected, 1);
+        assert_eq!(b.metrics.sessions_imported, 1);
+        assert_eq!(b.metrics.sessions_resumed, 1);
+        // a second handoff of the SAME session keeps working (token is
+        // preserved across the import)
+        b.set_redirect(Some("replica-c".into()));
+        match b
+            .submit_from(6.0, info.attachment, draft_for(info.session, 6, &committed, 4), 5)
+            .unwrap()
+        {
+            SubmitOutcome::Redirect { addr, resume_token } => {
+                assert_eq!(addr, "replica-c");
+                assert_eq!(resume_token, token);
+            }
+            other => panic!("expected second Redirect, got {other:?}"),
+        }
+    }
+
+    /// Satellite (fleet edge cases): after a session is exported, a
+    /// late `Cancel` and in-flight speculative drafts from the old
+    /// attachment are absorbed — swallowed or replayed, never fatal —
+    /// pinning the redirect-races-cancel corner at the core level.
+    #[test]
+    fn cancel_and_late_drafts_after_export_are_absorbed() {
+        let ledger = SessionLedger::new();
+        let mut a = evolved_core(&ledger);
+        let prompt = vec![1, 70, 71];
+        let o = a.open_session(&prompt, 256, 0).unwrap();
+        let mut committed = prompt.clone();
+        let v0 = drive_round(&mut a, o.attachment, o.session, 0, &mut committed);
+        a.set_redirect(Some("replica-b".into()));
+        let head = draft_for(o.session, 1, &committed, 4);
+        assert!(matches!(
+            a.submit_from(1.0, o.attachment, head, 5).unwrap(),
+            SubmitOutcome::Redirect { .. }
+        ));
+        // a Cancel racing the redirect (retracting the speculative round
+        // the edge had in flight): no-op, not a panic
+        assert!(a.cancel(o.session, o.attachment, 2).is_empty());
+        // the in-flight speculative round itself straggles in: wasted
+        // speculation, swallowed
+        let spec = spec_draft_for(o.session, 2, &committed, &[9, 9, 9], 4);
+        let cancelled_before = a.metrics.drafts_cancelled;
+        assert!(matches!(
+            a.submit_from(1.1, o.attachment, spec, 5).unwrap(),
+            SubmitOutcome::Swallowed
+        ));
+        assert_eq!(a.metrics.drafts_cancelled, cancelled_before + 1);
+        // a duplicate of the last VERIFIED round still replays from the
+        // tombstoned verdict cache
+        let d0 = draft_for(o.session, 0, &prompt, 4);
+        match a.submit_from(1.2, o.attachment, d0, 5).unwrap() {
+            SubmitOutcome::Replay(v) => assert_eq!(v, v0),
+            other => panic!("expected Replay, got {other:?}"),
+        }
+    }
+
+    /// A peer below wire v5 is never redirected, and without a ledger
+    /// even a v5 peer is admitted — draining degrades to serving.
+    #[test]
+    fn redirect_needs_wire_v5_and_a_ledger() {
+        let ledger = SessionLedger::new();
+        let mut a = evolved_core(&ledger);
+        a.set_redirect(Some("replica-b".into()));
+        let prompt = vec![1, 70, 71];
+        let o = a.open_session(&prompt, 64, 0).unwrap();
+        // v4 peer: admitted (it could not parse a Redirect)
+        queued(
+            a.submit_from(0.0, o.attachment, draft_for(o.session, 0, &prompt, 4), 4)
+                .unwrap(),
+        );
+        assert_eq!(a.metrics.sessions_redirected, 0);
+
+        // no ledger: even a v5 peer is admitted (export is impossible)
+        let mut c = VerifierCore::new(
+            VerifierConfig::default(),
+            Box::new(SyntheticTarget::new(7)),
+        );
+        c.set_redirect(Some("replica-b".into()));
+        let o2 = c.open_session(&prompt, 64, 0).unwrap();
+        queued(
+            c.submit_from(0.0, o2.attachment, draft_for(o2.session, 0, &prompt, 4), 5)
+                .unwrap(),
+        );
+        assert_eq!(c.metrics.sessions_redirected, 0);
+    }
+
+    /// Progress guarantee: an edge that cannot follow the redirect
+    /// resumes in place, the replica re-imports its own export, and the
+    /// session is NOT bounced again while the drain continues.
+    #[test]
+    fn reimported_session_is_not_bounced_again() {
+        let ledger = SessionLedger::new();
+        let mut a = evolved_core(&ledger);
+        a.set_redirect(Some("replica-b".into()));
+        let prompt = vec![1, 70, 71];
+        let o = a.open_session(&prompt, 256, 0).unwrap();
+        let mut committed = prompt.clone();
+        let token = match a
+            .submit_from(0.0, o.attachment, draft_for(o.session, 0, &prompt, 4), 5)
+            .unwrap()
+        {
+            SubmitOutcome::Redirect { resume_token, .. } => resume_token,
+            other => panic!("expected Redirect, got {other:?}"),
+        };
+        // the edge resumes HERE (e.g. a mux stream pinned to its
+        // connection); A re-imports its own export
+        let info = a.resume(token, committed.len()).unwrap();
+        assert!(ledger.is_empty());
+        // still draining, but this session now makes progress
+        drive_round(&mut a, info.attachment, info.session, 0, &mut committed);
+        assert_eq!(a.metrics.sessions_redirected, 1);
+        assert_eq!(a.metrics.sessions_imported, 1);
+        // the tombstones expire with the grace window, after which the
+        // session becomes eligible for one more handoff
+        a.evict_expired(a.cfg.resume_grace_ms * 2.0 + 1.0);
+        match a
+            .submit_from(100.0, info.attachment, draft_for(info.session, 1, &committed, 4), 5)
+            .unwrap()
+        {
+            SubmitOutcome::Redirect { .. } => {}
+            other => panic!("expected post-grace Redirect, got {other:?}"),
+        }
+    }
+
+    /// A saturated pipeline's next head round arrives EARLY and parks
+    /// in the speculative queue — the drain must fire at PROMOTION
+    /// time, or a continuously-pipelined session could never be shed.
+    #[test]
+    fn drain_redirects_promoted_speculative_round() {
+        let ledger = SessionLedger::new();
+        // zero drift: the speculation always holds, so the queued
+        // round reaches the promotion (not the basis-discard) path
+        let mut a = VerifierCore::new(
+            VerifierConfig::default(),
+            Box::new(SyntheticTarget::new(7)),
+        )
+        .with_ledger(ledger.clone());
+        let prompt = vec![1, 70, 71];
+        let o = a.open_session(&prompt, 256, 0).unwrap();
+        let d0 = draft_for(o.session, 0, &prompt, 4);
+        let assumed = assumed_outcome(&prompt, &d0.tokens);
+        queued(a.submit_from(0.0, o.attachment, d0, 5).unwrap());
+        let d1 = spec_draft_for(o.session, 1, &prompt, &assumed, 4);
+        assert!(matches!(
+            a.submit_from(0.1, o.attachment, d1, 5).unwrap(),
+            SubmitOutcome::Deferred
+        ));
+        // the drain starts with both rounds in flight: round 0 (already
+        // admitted) verifies normally...
+        a.set_redirect(Some("replica-b".into()));
+        let out = a.close_window(0.2).unwrap();
+        assert_eq!(out.len(), 1);
+        // ...and round 1's promotion becomes the handoff point
+        let (decisions, _dropped, redirects) = a.promote_ready(0.3);
+        assert!(decisions.is_empty(), "nothing may enter the window");
+        assert_eq!(redirects.len(), 1);
+        let (id, round, addr, token) = redirects[0].clone();
+        assert_eq!(id, o.session);
+        assert_eq!(round, 1);
+        assert_eq!(addr, "replica-b");
+        assert_eq!(token, o.resume_token);
+        assert_eq!(a.active_sessions(), 0, "session must leave the exporter");
+        assert_eq!(ledger.len(), 1);
+        assert_eq!(a.metrics.sessions_redirected, 1);
+        assert!(a.metrics.drafts_cancelled >= 1, "the promoted draft is waste");
+    }
+
+    /// Targeted rebalance: `redirect_session` moves exactly one
+    /// session; its siblings on the same replica are untouched.
+    #[test]
+    fn targeted_redirect_moves_one_session_only() {
+        let ledger = SessionLedger::new();
+        let mut a = evolved_core(&ledger);
+        let pa = vec![1, 70, 71];
+        let pb = vec![1, 80, 81];
+        let oa = a.open_session(&pa, 64, 0).unwrap();
+        let ob = a.open_session(&pb, 64, 0).unwrap();
+        a.redirect_session(oa.session, "replica-b".into());
+        assert!(matches!(
+            a.submit_from(0.0, oa.attachment, draft_for(oa.session, 0, &pa, 4), 5)
+                .unwrap(),
+            SubmitOutcome::Redirect { .. }
+        ));
+        queued(
+            a.submit_from(0.1, ob.attachment, draft_for(ob.session, 0, &pb, 4), 5)
+                .unwrap(),
+        );
+        assert_eq!(a.metrics.sessions_redirected, 1);
+        assert_eq!(a.active_sessions(), 1, "sibling stays");
+        assert!(!a.telemetry().draining, "targeted move is not a drain");
     }
 }

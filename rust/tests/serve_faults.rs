@@ -38,6 +38,18 @@ fn rt() -> tokio::runtime::Runtime {
         .unwrap()
 }
 
+/// Receive the next frame for a raw-frame client, skipping the
+/// control-stream `ReplicaInfo` telemetry a v5 cloud announces after
+/// the handshake.
+async fn recv_skipping_info<T: Transport>(t: &mut T) -> Frame {
+    loop {
+        let f = t.recv_frame().await.unwrap().unwrap();
+        if f.kind != FrameKind::ReplicaInfo {
+            return f;
+        }
+    }
+}
+
 fn prompts(n: usize) -> Vec<Vec<i32>> {
     (0..n)
         .map(|i| {
@@ -397,7 +409,7 @@ fn unresumed_sessions_are_evicted_after_grace() {
         edge.send_frame(Frame::on(1, FrameKind::Open, open.encode()))
             .await
             .unwrap();
-        let oack = OpenAck::decode(&edge.recv_frame().await.unwrap().unwrap().payload).unwrap();
+        let oack = OpenAck::decode(&recv_skipping_info(&mut edge).await.payload).unwrap();
         assert!(oack.resume_token != 0);
         drop(edge); // link dies; the session parks
 
@@ -426,7 +438,7 @@ fn unresumed_sessions_are_evicted_after_grace() {
             .send_frame(Frame::control(FrameKind::Hello, hello.encode()))
             .await
             .unwrap();
-        let _ = edge2.recv_frame().await.unwrap().unwrap();
+        let _ = recv_skipping_info(&mut edge2).await;
         let resume = ResumeMsg {
             token: oack.resume_token,
             committed_len: 3,
@@ -435,7 +447,7 @@ fn unresumed_sessions_are_evicted_after_grace() {
             .send_frame(Frame::on(1, FrameKind::Resume, resume.encode()))
             .await
             .unwrap();
-        let rack = ResumeAck::decode(&edge2.recv_frame().await.unwrap().unwrap().payload).unwrap();
+        let rack = ResumeAck::decode(&recv_skipping_info(&mut edge2).await.payload).unwrap();
         assert!(!rack.accepted);
         assert!(
             rack.reason.contains("unknown or expired"),
@@ -467,7 +479,7 @@ fn bogus_resume_and_unknown_stream_are_rejected() {
         edge.send_frame(Frame::control(FrameKind::Hello, hello.encode()))
             .await
             .unwrap();
-        let _ = edge.recv_frame().await.unwrap().unwrap();
+        let _ = recv_skipping_info(&mut edge).await;
         // bogus token → rejected ResumeAck, connection stays usable
         let resume = ResumeMsg {
             token: 0xBAAD_F00D,
@@ -476,7 +488,7 @@ fn bogus_resume_and_unknown_stream_are_rejected() {
         edge.send_frame(Frame::on(3, FrameKind::Resume, resume.encode()))
             .await
             .unwrap();
-        let rack = ResumeAck::decode(&edge.recv_frame().await.unwrap().unwrap().payload).unwrap();
+        let rack = ResumeAck::decode(&recv_skipping_info(&mut edge).await.payload).unwrap();
         assert!(!rack.accepted && !rack.done);
         // draft on a never-bound stream → the server rejects and closes
         edge.send_frame(Frame::on(9, FrameKind::Draft, vec![0; 8]))

@@ -1,0 +1,481 @@
+//! Fleet-serving integration tests (`serve::fleet`, wire v5): N
+//! loopback replicas — each the REAL server code (`handle_conn` + its
+//! own verifier thread + backend) — stitched together by the shared
+//! handoff ledger and the fleet registry.
+//!
+//! The headline property (the tentpole's acceptance bar): a session
+//! REDIRECTED between replicas mid-decode — sequential, pipelined with
+//! rounds in flight, or multiplexed — commits a token sequence
+//! byte-identical to the single-replica virtual-clock simulation, for
+//! every seed in the pinned list [3, 17, 42]. Handoffs move wall time,
+//! never tokens: the frozen draft needs nothing but the committed
+//! prefix, on whichever replica it lands.
+
+use anyhow::Result;
+use flexspec::channel::{NetworkKind, NetworkProfile};
+use flexspec::coordinator::{serve_with, DraftSource, FleetSimConfig, ServeConfig};
+use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::serve::{
+    run_edge_session, run_session_on, EdgeMux, EdgeReport, EdgeSessionConfig, FaultConfig,
+    FaultPlan, FleetRegistry, Reconnect, ResumableTransport, SyntheticDraft, SyntheticTarget,
+    VerifierConfig, VerifyBackend,
+};
+
+/// Fixed seed list (mirrored in CI and in `tests/serve_faults.rs`).
+const FLEET_SEEDS: [u64; 3] = [3, 17, 42];
+const USERS: usize = 3;
+const MAX_NEW: usize = 24;
+
+fn rt() -> tokio::runtime::Runtime {
+    tokio::runtime::Builder::new_multi_thread()
+        .worker_threads(2)
+        .enable_all()
+        .build()
+        .unwrap()
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![1i32];
+            for j in 0..5 {
+                p.push(100 + ((i * 11 + j * 3) % 100) as i32);
+            }
+            p
+        })
+        .collect()
+}
+
+/// A target that has evolved away from the frozen draft (drift 0.3), so
+/// tau genuinely varies — handoffs must reconstruct a non-trivial
+/// trajectory. Every replica deploys the same version: version
+/// evolution during a handoff is the canary test's subject, not this
+/// file's baseline.
+fn evolved_target(seed: u64) -> Result<SyntheticTarget> {
+    let mut t = SyntheticTarget::new(seed)
+        .with_version("evolved", 0.3)
+        .with_version("canary", 0.5);
+    t.deploy("evolved")?;
+    Ok(t)
+}
+
+/// Single-replica virtual-clock reference trajectories.
+fn reference_committed(seed: u64) -> Vec<Vec<i32>> {
+    let cfg = ServeConfig {
+        users: USERS,
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed,
+        ..Default::default()
+    };
+    let mut backend = evolved_target(seed).unwrap();
+    let mut make = move |_id: u32| -> Result<Box<dyn DraftSource>> {
+        Ok(Box::new(SyntheticDraft::new(seed)))
+    };
+    let sim = serve_with(
+        &mut backend,
+        &mut make,
+        &prompts(USERS),
+        &JETSON_ORIN,
+        &A800_70B,
+        &NetworkProfile::new(NetworkKind::FourG),
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(sim.completed, USERS);
+    sim.per_session_committed
+}
+
+fn ecfg(seed: u64, depth: usize) -> EdgeSessionConfig {
+    EdgeSessionConfig {
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed,
+        pipeline_depth: depth,
+        // a handoff consumes one reattach; leave room for duplicates
+        max_reattach: 16,
+        ..Default::default()
+    }
+}
+
+/// Two-replica registry, both on the drifted target.
+fn two_replicas(seed: u64) -> FleetRegistry {
+    let mut reg = FleetRegistry::new();
+    for addr in ["replica-a", "replica-b"] {
+        reg.spawn_loopback_replica(addr, VerifierConfig { seed, ..Default::default() }, move || {
+            Ok(Box::new(evolved_target(seed)?) as Box<dyn VerifyBackend>)
+        })
+        .unwrap();
+    }
+    reg
+}
+
+fn assert_matches_reference(reports: &[EdgeReport], reference: &[Vec<i32>], label: &str) {
+    assert_eq!(reports.len(), reference.len());
+    for (i, (r, want)) in reports.iter().zip(reference).enumerate() {
+        assert_eq!(
+            &r.committed, want,
+            "{label}: committed sequence diverged from the single-replica sim (prompt {i})"
+        );
+    }
+}
+
+/// Wait (bounded) until replica A has opened all `USERS` sessions and
+/// verified at least one round — the "mid-decode" trigger point for
+/// drains, targeted redirects, and replica death.
+async fn await_mid_decode(reg: &FleetRegistry, addr: &str) {
+    let v = reg.verifier(addr).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let s = v.stats().await.unwrap();
+        if s.sessions_opened >= USERS && s.rounds >= 1 {
+            return;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "sessions never reached mid-decode on {addr}"
+        );
+        tokio::time::sleep(std::time::Duration::from_millis(2)).await;
+    }
+}
+
+/// Tentpole acceptance: drain replica A mid-decode; every session is
+/// exported, redirected, imported by B, and finishes there — committed
+/// sequences byte-identical to the single-replica sim, in sequential
+/// AND pipelined mode (rounds in flight at handoff time), across the
+/// pinned seeds.
+#[test]
+fn drained_replica_hands_sessions_over_with_identical_sequences() {
+    for seed in FLEET_SEEDS {
+        let reference = reference_committed(seed);
+        for depth in [1usize, 2] {
+            let (reports, a_stats, b_stats) = rt().block_on(async {
+                let mut reg = two_replicas(seed);
+                let mut tasks = Vec::new();
+                for prompt in prompts(USERS) {
+                    let dial = reg.dial("replica-a", None);
+                    let ecfg = ecfg(seed, depth);
+                    tasks.push(tokio::spawn(async move {
+                        let mut t = ResumableTransport::connect(dial, &ecfg).await?;
+                        let mut draft = SyntheticDraft::new(seed);
+                        run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+                    }));
+                }
+                await_mid_decode(&reg, "replica-a").await;
+                reg.drain("replica-a", "replica-b").unwrap();
+                let mut reports = Vec::new();
+                for t in tasks {
+                    reports.push(t.await.unwrap().unwrap());
+                }
+                let a = reg.verifier("replica-a").unwrap().shutdown().await.unwrap();
+                let b = reg.verifier("replica-b").unwrap().shutdown().await.unwrap();
+                (reports, a, b)
+            });
+            let label = format!("drain seed {seed} depth {depth}");
+            assert_matches_reference(&reports, &reference, &label);
+            let redirects: usize = reports.iter().map(|r| r.redirects).sum();
+            assert!(redirects >= 1, "{label}: no session was handed off");
+            assert_eq!(
+                a_stats.sessions_redirected, b_stats.sessions_imported,
+                "{label}: every export must be imported exactly once"
+            );
+            assert!(a_stats.sessions_redirected >= 1, "{label}: A exported nothing");
+            assert_eq!(
+                a_stats.sessions_completed + b_stats.sessions_completed,
+                USERS,
+                "{label}: completions must split across the fleet"
+            );
+            assert_eq!(a_stats.sessions_evicted + b_stats.sessions_evicted, 0);
+            if depth == 2 {
+                assert!(
+                    reports.iter().map(|r| r.overlapped_waits).sum::<usize>() > 0,
+                    "{label}: pipelining never engaged"
+                );
+            }
+        }
+    }
+}
+
+/// Satellite (fleet edge cases): duplicated frames — including
+/// duplicates of the `Redirect` itself and of `Cancel` frames racing it
+/// in pipelined mode — are absorbed: the session converges wherever it
+/// lands and the tokens never change.
+#[test]
+fn duplicate_redirect_delivery_is_absorbed() {
+    for seed in FLEET_SEEDS {
+        let reference = reference_committed(seed);
+        for depth in [1usize, 2] {
+            let (reports, a_stats, b_stats) = rt().block_on(async {
+                let mut reg = two_replicas(seed);
+                let mut tasks = Vec::new();
+                for (i, prompt) in prompts(USERS).into_iter().enumerate() {
+                    // duplicates only (no disconnects): every frame —
+                    // drafts, verdicts, cancels, redirects — may arrive
+                    // twice
+                    let plan = FaultPlan::shared(
+                        FaultConfig {
+                            seed: seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                            dup_p: 0.35,
+                            max_disconnects: 0,
+                            ..Default::default()
+                        },
+                        NetworkProfile::new(NetworkKind::FourG).channel(seed),
+                    );
+                    let dial = reg.dial("replica-a", Some(plan));
+                    let ecfg = ecfg(seed, depth);
+                    tasks.push(tokio::spawn(async move {
+                        let mut t = ResumableTransport::connect(dial, &ecfg).await?;
+                        let mut draft = SyntheticDraft::new(seed);
+                        run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+                    }));
+                }
+                await_mid_decode(&reg, "replica-a").await;
+                reg.drain("replica-a", "replica-b").unwrap();
+                let mut reports = Vec::new();
+                for t in tasks {
+                    reports.push(t.await.unwrap().unwrap());
+                }
+                let a = reg.verifier("replica-a").unwrap().shutdown().await.unwrap();
+                let b = reg.verifier("replica-b").unwrap().shutdown().await.unwrap();
+                (reports, a, b)
+            });
+            let label = format!("dup-redirect seed {seed} depth {depth}");
+            assert_matches_reference(&reports, &reference, &label);
+            assert_eq!(
+                a_stats.sessions_completed + b_stats.sessions_completed,
+                USERS,
+                "{label}"
+            );
+            assert_eq!(a_stats.sessions_evicted + b_stats.sessions_evicted, 0, "{label}");
+        }
+    }
+}
+
+/// Satellite (fleet edge cases): on a MUXED connection a redirected
+/// stream cannot leave the shared transport — it resumes in place and
+/// the exporting replica re-imports it from the ledger, while the
+/// SIBLING streams stay pinned and untouched. Tokens never change.
+#[test]
+fn mux_stream_redirected_in_place_while_siblings_stay_pinned() {
+    for seed in FLEET_SEEDS {
+        let reference = reference_committed(seed);
+        let (reports, a_stats, b_stats) = rt().block_on(async {
+            let reg = two_replicas(seed);
+            let mut dial = reg.dial("replica-a", None);
+            let initial = dial.connect().await.unwrap();
+            let ecfg0 = ecfg(seed, 1);
+            let mut mux = EdgeMux::connect(initial, Some(dial), &ecfg0).await.unwrap();
+            let mut tasks = Vec::new();
+            for prompt in prompts(USERS) {
+                let mut stream = mux.open_stream();
+                let ecfg = ecfg(seed, 1);
+                tasks.push(tokio::spawn(async move {
+                    let sid = stream.stream_id();
+                    let mut draft = SyntheticDraft::new(seed);
+                    run_session_on(&mut stream, sid, &mut draft, &prompt, &ecfg).await
+                }));
+            }
+            await_mid_decode(&reg, "replica-a").await;
+            // targeted handoff of server session 2: its next head round
+            // is redirected; server ids are assigned in open order so
+            // exactly one stream is affected
+            reg.redirect_session("replica-a", 2, "replica-b").unwrap();
+            let mut reports = Vec::new();
+            for t in tasks {
+                reports.push(t.await.unwrap().unwrap());
+            }
+            drop(mux);
+            let a = reg.verifier("replica-a").unwrap().shutdown().await.unwrap();
+            let b = reg.verifier("replica-b").unwrap().shutdown().await.unwrap();
+            (reports, a, b)
+        });
+        let label = format!("mux-redirect seed {seed}");
+        assert_matches_reference(&reports, &reference, &label);
+        assert_eq!(
+            a_stats.sessions_redirected, 1,
+            "{label}: exactly one session is targeted"
+        );
+        assert_eq!(
+            a_stats.sessions_imported, 1,
+            "{label}: the pinned stream must resume in place (A re-imports)"
+        );
+        assert_eq!(b_stats.sessions_imported, 0, "{label}: B never sees it");
+        assert_eq!(a_stats.sessions_completed, USERS, "{label}: all finish on A");
+        // exactly one stream followed the in-place handoff (one resume,
+        // one redirect); its siblings never reattached at all
+        let moved: Vec<&EdgeReport> = reports.iter().filter(|r| r.redirects > 0).collect();
+        assert_eq!(moved.len(), 1, "{label}: exactly one stream is redirected");
+        assert!(moved[0].resumes >= 1, "{label}: the move is a resume");
+        for r in reports.iter().filter(|r| r.redirects == 0) {
+            assert_eq!(r.reattaches, 0, "{label}: siblings must stay pinned");
+            assert_eq!(r.resumes, 0, "{label}: siblings must stay pinned");
+        }
+    }
+}
+
+/// Satellite (fleet edge cases): replica DEATH without a handoff — the
+/// fleet dial fails over to the survivor, the resume is rejected
+/// everywhere (nothing was exported), and the re-root path re-opens
+/// from the committed prefix: the trajectory still completes
+/// byte-identically. The frozen draft needs nothing but the position.
+#[test]
+fn replica_death_reroots_sessions_onto_survivor() {
+    for seed in FLEET_SEEDS {
+        let reference = reference_committed(seed);
+        let (reports, b_stats) = rt().block_on(async {
+            let mut reg = two_replicas(seed);
+            let mut tasks = Vec::new();
+            for prompt in prompts(USERS) {
+                let dial = reg.dial("replica-a", None);
+                let mut cfg = ecfg(seed, 1);
+                cfg.reroot_on_unknown_session = true;
+                tasks.push(tokio::spawn(async move {
+                    let mut t = ResumableTransport::connect(dial, &cfg).await?;
+                    let mut draft = SyntheticDraft::new(seed);
+                    run_edge_session(&mut t, &mut draft, &prompt, &cfg).await
+                }));
+            }
+            await_mid_decode(&reg, "replica-a").await;
+            // kill A: directory entry gone (dials fail over) and the
+            // verifier thread stops (its conns die on the next command)
+            let a = reg.verifier("replica-a").unwrap();
+            reg.mark_dead("replica-a");
+            let _ = a.shutdown().await;
+            let mut reports = Vec::new();
+            for t in tasks {
+                reports.push(t.await.unwrap().unwrap());
+            }
+            let b = reg.verifier("replica-b").unwrap().shutdown().await.unwrap();
+            (reports, b)
+        });
+        let label = format!("replica-death seed {seed}");
+        assert_matches_reference(&reports, &reference, &label);
+        let reroots: usize = reports.iter().map(|r| r.reroots).sum();
+        assert!(reroots >= 1, "{label}: at least one session must re-root");
+        assert!(
+            b_stats.sessions_completed >= reroots,
+            "{label}: re-rooted sessions finish on the survivor"
+        );
+        assert_eq!(b_stats.sessions_imported, 0, "{label}: nothing was exported");
+    }
+}
+
+/// Satellite (fleet edge cases): canary rollout + rollback. The canary
+/// version is deployed to replica B and rolled back MID-DECODE of A's
+/// sessions; A's traffic is byte-identical throughout (its version
+/// never moved), and sessions opened on B after the rollback commit the
+/// reference bytes again — rollback genuinely restores the verdict
+/// function, while B's version sequence records both swaps.
+#[test]
+fn canary_rollback_mid_decode_restores_reference_bytes() {
+    let seed = FLEET_SEEDS[0];
+    let reference = reference_committed(seed);
+    let (phase1, phase2, b_info) = rt().block_on(async {
+        let mut reg = two_replicas(seed);
+        // phase 1: USERS sessions on A, mid-decode
+        let mut tasks = Vec::new();
+        for prompt in prompts(USERS) {
+            let dial = reg.dial("replica-a", None);
+            let ecfg = ecfg(seed, 1);
+            tasks.push(tokio::spawn(async move {
+                let mut t = ResumableTransport::connect(dial, &ecfg).await?;
+                let mut draft = SyntheticDraft::new(seed);
+                run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+            }));
+        }
+        await_mid_decode(&reg, "replica-a").await;
+        // canary B to the drifted-further version, then roll it back
+        let seqs = reg.advance_version(&["replica-b"], "canary").await.unwrap();
+        assert_eq!(seqs.len(), 1);
+        reg.advance_version(&["replica-b"], "evolved").await.unwrap();
+        let mut phase1 = Vec::new();
+        for t in tasks {
+            phase1.push(t.await.unwrap().unwrap());
+        }
+        // phase 2: fresh sessions on the rolled-back canary
+        let mut tasks = Vec::new();
+        for prompt in prompts(USERS) {
+            let dial = reg.dial("replica-b", None);
+            let ecfg = ecfg(seed, 1);
+            tasks.push(tokio::spawn(async move {
+                let mut t = ResumableTransport::connect(dial, &ecfg).await?;
+                let mut draft = SyntheticDraft::new(seed);
+                run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+            }));
+        }
+        let mut phase2 = Vec::new();
+        for t in tasks {
+            phase2.push(t.await.unwrap().unwrap());
+        }
+        let b_info = reg.verifier("replica-b").unwrap().info().await.unwrap();
+        reg.verifier("replica-a").unwrap().shutdown().await.unwrap();
+        reg.verifier("replica-b").unwrap().shutdown().await.unwrap();
+        (phase1, phase2, b_info)
+    });
+    assert_matches_reference(&phase1, &reference, "canary phase 1 (A untouched)");
+    assert_matches_reference(&phase2, &reference, "canary phase 2 (B rolled back)");
+    assert_eq!(
+        b_info.version_name, "evolved",
+        "rollback must restore the version"
+    );
+    assert_eq!(
+        b_info.version_seq, 4,
+        "deploy(evolved) + canary + rollback = three swaps past the initial seq"
+    );
+}
+
+/// The virtual-clock fleet twin (`ServeConfig::fleet`): the simulated
+/// redirect schedule commits byte-identical tokens to the single-
+/// replica run across the pinned seeds, sequential AND pipelined, while
+/// the handoffs cost strictly positive virtual time — sim == serve
+/// determinism extended to fleet scale.
+#[test]
+fn fleet_sim_twin_is_byte_identical_across_seeds() {
+    for seed in FLEET_SEEDS {
+        for depth in [1usize, 2] {
+            let run = |fleet: Option<FleetSimConfig>| {
+                let mut backend = evolved_target(seed).unwrap();
+                let mut make = move |_id: u32| -> Result<Box<dyn DraftSource>> {
+                    Ok(Box::new(SyntheticDraft::new(seed)))
+                };
+                serve_with(
+                    &mut backend,
+                    &mut make,
+                    &prompts(USERS),
+                    &JETSON_ORIN,
+                    &A800_70B,
+                    &NetworkProfile::new(NetworkKind::FourG),
+                    &ServeConfig {
+                        users: USERS,
+                        max_new: MAX_NEW,
+                        fixed_k: Some(4),
+                        seed,
+                        pipeline_depth: depth,
+                        fleet,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+            };
+            let single = run(None);
+            let fleet = run(Some(FleetSimConfig {
+                replicas: 2,
+                redirect_after_rounds: 2,
+                max_redirects: 1,
+                ..Default::default()
+            }));
+            assert_eq!(
+                single.per_session_committed, fleet.per_session_committed,
+                "seed {seed} depth {depth}: sim handoff changed a token"
+            );
+            assert!(
+                fleet.sessions_redirected >= 1,
+                "seed {seed} depth {depth}: schedule never fired"
+            );
+            assert!(
+                fleet.wall_ms > single.wall_ms,
+                "seed {seed} depth {depth}: handoffs must cost virtual time"
+            );
+        }
+    }
+}
