@@ -1,0 +1,203 @@
+//! `cargo bench --bench serve_latency` — the CI perf-trajectory run.
+//!
+//! Two halves:
+//!
+//! 1. **Observability primitive costs** (`util::bench` groups): the
+//!    per-event cost of `Trace::record`, `LogHistogram::record`, a
+//!    quantile read, the `LatencySummary` wire codec, and — the number
+//!    the < 2% disabled-overhead budget rests on — the cost of the
+//!    `Option<Trace>` check an instrumented hot path pays when no
+//!    journal is installed.
+//! 2. **An 8-session loopback serving run**, untraced and traced, on
+//!    the deterministic synthetic backend: wall time plus the
+//!    p50/p90/p99/p999 round/queue/verify/rtt quantiles from the
+//!    `ServingMetrics` histograms.
+//!
+//! With `FLEXSPEC_BENCH_SERVE_JSON=path` the run writes a
+//! machine-readable `BENCH_serve.json` (schema documented in
+//! `docs/OBSERVABILITY.md`); CI uploads it as an artifact and gates on
+//! the round-latency p99 against the checked-in baseline at the
+//! repository root.
+
+use std::time::Instant;
+
+use anyhow::Result;
+use flexspec::coordinator::DraftSource;
+use flexspec::metrics::ServingMetrics;
+use flexspec::obs::{LatencySummary, LogHistogram, SpanKind, Trace};
+use flexspec::serve::{
+    serve_loopback, EdgeReport, EdgeSessionConfig, SyntheticDraft, SyntheticTarget,
+    VerifierConfig, VerifyBackend,
+};
+use flexspec::util::bench::{black_box, Group};
+use flexspec::util::json::Json;
+
+const SEED: u64 = 23;
+const USERS: usize = 8;
+const MAX_NEW: usize = 24;
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![1i32];
+            for j in 0..5 {
+                p.push(100 + ((i * 11 + j * 3) % 100) as i32);
+            }
+            p
+        })
+        .collect()
+}
+
+fn evolved_target() -> Result<SyntheticTarget> {
+    let mut t = SyntheticTarget::new(SEED).with_version("evolved", 0.3);
+    t.deploy("evolved")?;
+    Ok(t)
+}
+
+/// One 8-session loopback run; `traced` installs a shared journal on
+/// both the verifier and every edge session.
+fn run_loopback(traced: bool) -> Result<(f64, ServingMetrics, Vec<EdgeReport>, Option<Trace>)> {
+    let trace = traced.then(Trace::wall);
+    let vcfg = VerifierConfig {
+        window_ms: 12.0,
+        seed: SEED,
+        trace: trace.clone(),
+        ..Default::default()
+    };
+    let ecfg = EdgeSessionConfig {
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed: SEED,
+        trace: trace.clone(),
+        ..Default::default()
+    };
+    let edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>)> = prompts(USERS)
+        .into_iter()
+        .map(|p| {
+            (
+                Box::new(SyntheticDraft::new(SEED)) as Box<dyn DraftSource + Send>,
+                p,
+            )
+        })
+        .collect();
+    let rt = tokio::runtime::Builder::new_multi_thread()
+        .worker_threads(2)
+        .enable_all()
+        .build()?;
+    let t0 = Instant::now();
+    let (reports, metrics) = rt.block_on(serve_loopback(
+        vcfg,
+        || Ok(Box::new(evolved_target()?) as Box<dyn VerifyBackend>),
+        edges,
+        ecfg,
+    ))?;
+    Ok((t0.elapsed().as_secs_f64() * 1e3, metrics, reports, trace))
+}
+
+fn quantiles_json(l: &LatencySummary) -> Json {
+    let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+    Json::obj(vec![
+        ("round_p50", num(l.round_ms.p50())),
+        ("round_p90", num(l.round_ms.p90())),
+        ("round_p99", num(l.round_ms.p99())),
+        ("round_p999", num(l.round_ms.p999())),
+        ("queue_p99", num(l.queue_ms.p99())),
+        ("verify_p99", num(l.verify_ms.p99())),
+        ("rtt_p99", num(l.rtt_ms.p99())),
+    ])
+}
+
+fn main() -> Result<()> {
+    // ---- obs primitive costs ------------------------------------------
+    let mut g = Group::new("obs: primitive costs").with_budget(60.0);
+    let tr = Trace::wall();
+    let mut round = 0u32;
+    g.add("Trace::record (steady-state, ring at cap)", || {
+        round = round.wrapping_add(1);
+        tr.record(1, round, SpanKind::Draft, 0.5, 4, 0);
+    });
+    // the disabled path every instrumented call site pays with no
+    // journal installed — the < 2% regression budget rests on this
+    let disabled: Option<Trace> = None;
+    let mut n = 0u64;
+    g.add("disabled: Option<Trace> check on the hot path", || {
+        if let Some(t) = black_box(&disabled) {
+            t.event(0, 0, SpanKind::Draft);
+        }
+        n = n.wrapping_add(1);
+    });
+    let mut h = LogHistogram::new();
+    let mut x = 1.0f64;
+    g.add("LogHistogram::record", || {
+        x = (x * 1.37) % 900.0 + 0.01;
+        h.record(black_box(x));
+    });
+    g.add("LogHistogram::p99 (256 buckets)", || {
+        black_box(h.p99());
+    });
+    let mut summary = LatencySummary::new();
+    for i in 0..512 {
+        summary.round_ms.record(5.0 + (i % 37) as f64);
+        summary.queue_ms.record(0.2 + (i % 11) as f64 * 0.1);
+        summary.verify_ms.record(1.0 + (i % 7) as f64);
+        summary.rtt_ms.record(8.0 + (i % 29) as f64);
+    }
+    g.add("LatencySummary wire encode+decode (sparse)", || {
+        let mut buf = Vec::with_capacity(256);
+        summary.encode_into(&mut buf);
+        let (back, _) = LatencySummary::decode_from(&buf).unwrap();
+        black_box(back.round_ms.count());
+    });
+
+    // ---- 8-session loopback latency run -------------------------------
+    // warm-up run (thread spawn, allocator), then the measured pair
+    let _ = run_loopback(false)?;
+    let (wall_off, m_off, _, _) = run_loopback(false)?;
+    let (wall_on, m_on, reports, trace) = run_loopback(true)?;
+    assert_eq!(m_on.sessions_completed, USERS);
+    assert_eq!(m_off.rounds, m_on.rounds, "tracing changed the trajectory");
+    println!(
+        "\nserve: {USERS}-session loopback run — wall {wall_off:.0} ms untraced, \
+         {wall_on:.0} ms traced ({} rounds, {} batches)",
+        m_on.rounds, m_on.batches
+    );
+    print!("{}", m_on.latency.render_lines("  "));
+    let events = trace.as_ref().map_or(0, |t| t.len());
+    println!("  trace events recorded: {events}");
+
+    // merged edge-side rtt across the 8 sessions
+    let mut edge_lat = LatencySummary::new();
+    for r in &reports {
+        edge_lat.merge(&r.latency);
+    }
+
+    // ---- machine-readable report (BENCH_serve.json) -------------------
+    if let Some(path) = std::env::var_os("FLEXSPEC_BENCH_SERVE_JSON") {
+        let mut lat = m_on.latency.clone();
+        lat.rtt_ms.merge(&edge_lat.rtt_ms);
+        let j = Json::obj(vec![
+            ("schema", Json::str("flexspec-serve-bench-v1")),
+            ("users", Json::Num(USERS as f64)),
+            ("seed", Json::Num(SEED as f64)),
+            ("max_new", Json::Num(MAX_NEW as f64)),
+            ("rounds", Json::Num(m_on.rounds as f64)),
+            ("batches", Json::Num(m_on.batches as f64)),
+            ("tokens_committed", Json::Num(m_on.tokens_committed as f64)),
+            ("wall_ms_untraced", Json::Num(wall_off)),
+            ("wall_ms_traced", Json::Num(wall_on)),
+            ("trace_events", Json::Num(events as f64)),
+            ("quantiles_ms", quantiles_json(&lat)),
+            ("latency", lat.to_json()),
+            ("obs_primitives", g.to_json()),
+        ]);
+        let path = std::path::PathBuf::from(path);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(&path, j.to_string_pretty())?;
+        println!("wrote serve bench report to {}", path.display());
+    }
+    Ok(())
+}

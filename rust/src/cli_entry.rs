@@ -14,6 +14,7 @@ use crate::coordinator::edge::DraftSource;
 use crate::coordinator::{serve, CloudEngine, ServeConfig};
 use crate::devices::{A800_70B, JETSON_ORIN};
 use crate::experiments::Ctx;
+use crate::obs::{LatencySummary, Trace, VirtualClock};
 use crate::serve::transport::BoxFuture;
 use crate::serve::{
     run_edge_session, run_session_on, serve_cloud, EdgeMux, EdgeReport, EdgeSessionConfig,
@@ -32,6 +33,7 @@ const VALUE_OPTS: &[&str] = &[
     "deploy-version", "deploy-after", "resume-grace", "fault-seed",
     "fault-disconnects", "pipeline-depth", "admission-queue", "tier-weights",
     "fleet", "canary", "drain-after", "fleet-addrs",
+    "metrics-json", "trace", "log-level",
 ];
 
 pub fn cli_main() -> Result<()> {
@@ -41,6 +43,13 @@ pub fn cli_main() -> Result<()> {
     }
     if args.flag("verbose") {
         crate::util::log::set_level(crate::util::log::Level::Debug);
+    }
+    // --log-level beats --verbose when both are given
+    if let Some(lv) = args.get("log-level") {
+        let Some(level) = crate::util::log::Level::parse(&lv) else {
+            bail!("bad --log-level '{lv}' (error|warn|info|debug)");
+        };
+        crate::util::log::set_level(level);
     }
     match args.positional(0) {
         Some("list") => {
@@ -77,6 +86,10 @@ pub fn cli_main() -> Result<()> {
                  \x20\x20\x20\x20 [--pipeline-depth D]  (1=sequential, >=2 pipelined, 0=auto policy)\n\
                  \x20\x20\x20\x20 [--fleet-addrs a:p,b:p,...]  (follow Redirects, fail over, re-root)\n\
                  \x20 flexspec trace <5g|4g|wifi> <out.csv> [--samples N]\n\
+                 Observability (serve / serve-cloud / serve-edge):\n\
+                 \x20\x20\x20\x20 [--trace out.jsonl]       per-round span journal (JSONL)\n\
+                 \x20\x20\x20\x20 [--metrics-json out.json] counters + latency histograms\n\
+                 \x20\x20\x20\x20 [--log-level error|warn|info|debug]\n\
                  Run `make artifacts` first to build the AOT model zoo."
             );
             Ok(())
@@ -154,8 +167,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
         // falls back to sequential (see ServeConfig::pipeline_depth)
         pipeline_depth: args.get_usize("pipeline-depth", 1),
         admission_queue: args.get_usize("admission-queue", 0),
+        // the simulator journals on its own virtual clock; event
+        // timestamps in the JSONL are virtual ms
+        trace: args.get("trace").map(|_| Trace::new(VirtualClock::shared())),
         ..Default::default()
     };
+    let trace = cfg.trace.clone();
     let net = NetworkProfile::new(network);
     let rep = serve(&mut cloud, draft, &prompts, &JETSON_ORIN, &A800_70B, &net, &cfg)?;
     println!("served {} sessions on {} ({} dataset)", rep.completed, network.label(), dataset);
@@ -168,6 +185,24 @@ fn serve_cmd(args: &Args) -> Result<()> {
     println!("  request latency  p50 {:.0} ms  p95 {:.0} ms", rep.request_latency.p50(), rep.request_latency.p95());
     println!("  per-token        p50 {:.0} ms  p95 {:.0} ms", rep.per_token_latency.p50(), rep.per_token_latency.p95());
     println!("  acceptance       {:.2}", rep.acceptance.mean());
+    print!("{}", rep.latency.render_lines("  "));
+    if let Some(path) = args.get("metrics-json") {
+        use crate::util::json::Json;
+        let j = Json::obj(vec![
+            ("sessions", Json::Num(rep.completed as f64)),
+            ("tokens", Json::Num(rep.tokens as f64)),
+            ("rounds", Json::Num(rep.rounds as f64)),
+            ("batches", Json::Num(rep.batches as f64)),
+            ("wall_ms", Json::Num(rep.wall_ms)),
+            ("latency", rep.latency.to_json()),
+        ]);
+        std::fs::write(&path, j.to_string_pretty())?;
+        println!("wrote metrics to {path}");
+    }
+    if let (Some(tr), Some(path)) = (&trace, args.get("trace")) {
+        tr.write_jsonl(&path)?;
+        println!("wrote {} trace events to {path}", tr.len());
+    }
     Ok(())
 }
 
@@ -188,18 +223,22 @@ fn serve_cloud_cmd(args: &Args) -> Result<()> {
     let bind = args.get_or("bind", "127.0.0.1:7411");
     let backend_kind = args.get_or("backend", "synthetic");
     let seed = args.get_u64("seed", 1);
+    let trace = args.get("trace").map(|_| Trace::wall());
     let vcfg = VerifierConfig {
         window_ms: args.get_f64("window", 12.0),
         max_batch: args.get_usize("max-batch", 8),
         seed,
         resume_grace_ms: args.get_f64("resume-grace", 10_000.0),
         admission_queue: args.get_usize("admission-queue", 0),
+        trace: trace.clone(),
         ..Default::default()
     };
     let sessions_target = args.get_usize("sessions", 0);
     let deploy_version = args.get("deploy-version").map(|s| s.to_string());
     let deploy_after = args.get_usize("deploy-after", 1);
     let version = args.get_or("version", "target_llama2t_base");
+    let metrics_json = args.get("metrics-json").map(|s| s.to_string());
+    let trace_path = args.get("trace").map(|s| s.to_string());
 
     let make_backend = make_backend_for(&backend_kind, seed, &version)?;
 
@@ -232,6 +271,14 @@ fn serve_cloud_cmd(args: &Args) -> Result<()> {
         }
         let metrics = handle.shutdown().await?;
         println!("{}", metrics.render("serving totals"));
+        if let Some(path) = metrics_json {
+            std::fs::write(&path, metrics.to_json().to_string_pretty())?;
+            println!("wrote metrics to {path}");
+        }
+        if let (Some(tr), Some(path)) = (&trace, &trace_path) {
+            tr.write_jsonl(path)?;
+            println!("wrote {} trace events to {path}", tr.len());
+        }
         Ok(())
     })
 }
@@ -373,9 +420,25 @@ fn serve_fleet_cmd(args: &Args, fleet: usize) -> Result<()> {
                 break;
             }
         }
+        // merged fleet snapshot while the replicas are still up — the
+        // same pull the v6 `Stats` wire frame gives a remote edge
+        let fs = registry.fleet_stats().await;
+        println!(
+            "fleet stats: {} replica(s), {} sessions, {} rounds, {} batches, {} tokens",
+            fs.replicas, fs.sessions_completed, fs.rounds, fs.batches, fs.tokens_committed
+        );
+        print!("{}", fs.latency.render_lines("  "));
+        let mut per_replica = Vec::new();
         for (i, h) in handles.into_iter().enumerate() {
             let metrics = h.shutdown().await?;
             println!("{}", metrics.render(&format!("replica {i} ({}) totals", addrs[i])));
+            per_replica.push(metrics);
+        }
+        if let Some(path) = args.get("metrics-json") {
+            use crate::util::json::Json;
+            let j = Json::Arr(per_replica.iter().map(|m| m.to_json()).collect());
+            std::fs::write(&path, j.to_string_pretty())?;
+            println!("wrote per-replica metrics to {path}");
         }
         Ok(())
     })
@@ -503,11 +566,15 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
     }
     let dataset = args.get_or("dataset", "mtbench");
     let mut gen = crate::workload::WorkloadGen::new(&dataset, seed)?;
+    // one shared journal across all sessions (session ids are unique
+    // per verifier, so rings never collide)
+    let trace = args.get("trace").map(|_| Trace::wall());
     let ecfg = EdgeSessionConfig {
         max_new: args.get_usize("max-new", 32),
         fixed_k: if k == 0 { None } else { Some(k) },
         pipeline_depth: args.get_usize("pipeline-depth", 1),
         seed,
+        trace: trace.clone(),
         // fleet edges survive replica death by re-opening from the
         // committed prefix on a survivor
         reroot_on_unknown_session: !fleet_addrs.is_empty(),
@@ -572,6 +639,19 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
                     Err(e) => Err(anyhow::anyhow!("session task panicked: {e}")),
                 });
             }
+            // pull the cloud's histogram snapshot over the live control
+            // stream (wire v6 Stats/StatsAck)
+            match emux.fetch_stats().await {
+                Ok(st) => {
+                    println!(
+                        "cloud stats (target seq {}): {} sessions, {} rounds, {} batches, {} tokens",
+                        st.version, st.sessions_completed, st.rounds, st.batches,
+                        st.tokens_committed
+                    );
+                    print!("{}", st.latency.render_lines("  "));
+                }
+                Err(e) => eprintln!("cloud stats unavailable: {e:#}"),
+            }
             Ok::<_, anyhow::Error>(out)
         })?
     } else {
@@ -615,9 +695,11 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
         ],
     );
     let mut failures = 0usize;
+    let mut edge_lat = LatencySummary::new();
     for res in results {
         match res {
             Ok(r) => {
+                edge_lat.merge(&r.latency);
                 table.row(vec![
                     r.session.to_string(),
                     r.new_tokens.to_string(),
@@ -640,6 +722,11 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
         }
     }
     println!("{}", table.render());
+    print!("{}", edge_lat.render_lines("  "));
+    if let (Some(tr), Some(path)) = (&trace, args.get("trace")) {
+        tr.write_jsonl(path)?;
+        println!("wrote {} trace events to {path}", tr.len());
+    }
     if failures > 0 {
         bail!("{failures}/{n} edge sessions failed");
     }

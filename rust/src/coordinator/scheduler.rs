@@ -18,11 +18,12 @@ use super::policy::{AdaptivePolicy, LatencyModel};
 use crate::channel::{Channel, StochasticChannel};
 use crate::channel::profiles::NetworkProfile;
 use crate::devices::{CloudProfile, EdgeDevice};
+use crate::obs::{LatencySummary, SpanKind, Trace};
 use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
 use crate::runtime::ModelRuntime;
 #[cfg(test)]
 use crate::runtime::Registry;
-use crate::serve::backend::{BatchVerifyReq, VerifyBackend};
+use crate::serve::backend::{bucket_k, BatchVerifyReq, VerifyBackend};
 use crate::serve::session::{BatchDecision, BatchWindow, SessionCore, SessionOutcome};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::Summary;
@@ -86,6 +87,11 @@ struct SessionState {
     spec_next: Option<SpecDraft>,
     /// Fleet twin: handoffs this session has survived.
     redirects: usize,
+    /// Virtual time the pending draft was admitted to the batching
+    /// window (queue-wait measurement).
+    arrived_ms: f64,
+    /// Virtual time the pending draft left the edge (RTT measurement).
+    sent_ms: f64,
     rng: SplitMix64,
 }
 
@@ -105,6 +111,8 @@ struct SpecDraft {
     own_bonus: Option<i32>,
     /// Virtual time the draft reaches the cloud.
     arrive_ms: f64,
+    /// Virtual time the draft left the edge (RTT measurement).
+    sent_ms: f64,
 }
 
 /// Scheduler configuration.
@@ -154,6 +162,12 @@ pub struct ServeConfig {
     /// verdicts are pure functions of the committed prefix), which is
     /// the fleet determinism claim `tests/serve_fleet.rs` pins.
     pub fleet: Option<FleetSimConfig>,
+    /// Trace journal (usually on a [`crate::obs::VirtualClock`] the
+    /// event loop advances). The sim emits the SAME canonical
+    /// per-session event sequence the serving stack does — the
+    /// determinism contract extended to observability
+    /// (`tests/serve_obs.rs`). `None` (default) records nothing.
+    pub trace: Option<Trace>,
 }
 
 /// Virtual-clock twin of the live fleet's redirect schedule (see
@@ -210,6 +224,7 @@ impl Default for ServeConfig {
             pipeline_depth: 1,
             admission_queue: 0,
             fleet: None,
+            trace: None,
         }
     }
 }
@@ -261,6 +276,10 @@ pub struct ServeReport {
     /// with `per_session` — the reference trajectory the fault-injection
     /// serving tests compare reconnect-and-resume runs against.
     pub per_session_committed: Vec<Vec<i32>>,
+    /// Virtual-time latency histograms mirroring the serving stack's
+    /// `ServingMetrics::latency` (queue wait, verify execution,
+    /// per-round, and edge-observed RTT).
+    pub latency: LatencySummary,
 }
 
 impl ServeReport {
@@ -304,6 +323,13 @@ fn draft_and_send(
     let arrive = now + t_edge + t_up;
     let head_tokens = prop.tokens.clone();
     let head_round = s.core.rounds as u32;
+    // one Draft + Uplink per LAUNCH, exactly like the serving edge (a
+    // Busy re-arrival later records nothing)
+    if let Some(tr) = &cfg.trace {
+        tr.record(s.core.id, head_round, SpanKind::Draft, t_edge, head_tokens.len() as u32, 0);
+        tr.record(s.core.id, head_round, SpanKind::Uplink, t_up, msg.air_bytes() as u32, 0);
+    }
+    s.sent_ms = now + t_edge;
     s.pending = Some((prop.tokens, prop.chosen_probs, prop.prob_rows));
     s.spec_next = None;
     if cfg.pipeline_depth > 1 && s.draft.is_pure() && !head_tokens.is_empty() {
@@ -386,6 +412,13 @@ fn launch_spec(
     };
     let t_edge = device.round_overhead_ms + prop.edge_tokens as f64 * device.draft_ms_per_token;
     let t_up = chan.prop_ms + chan.up_ms(msg.air_bytes());
+    // a speculative launch records like any other; if its prefix later
+    // breaks, the redraft records again under the same round number —
+    // the serving edge's per-launch semantics
+    if let Some(tr) = &cfg.trace {
+        tr.record(s.core.id, round, SpanKind::Draft, t_edge, prop.tokens.len() as u32, 0);
+        tr.record(s.core.id, round, SpanKind::Uplink, t_up, msg.air_bytes() as u32, 0);
+    }
     s.spec_next = Some(SpecDraft {
         round,
         tokens: prop.tokens,
@@ -394,6 +427,7 @@ fn launch_spec(
         link_bonus: head_bonus,
         own_bonus,
         arrive_ms: launch_ms + t_edge + t_up,
+        sent_ms: launch_ms + t_edge,
     });
     Ok(())
 }
@@ -437,6 +471,8 @@ pub fn serve_with(
             pending: None,
             spec_next: None,
             redirects: 0,
+            arrived_ms: 0.0,
+            sent_ms: 0.0,
             rng: SplitMix64::new(cfg.seed ^ (0x2000 + id as u64)),
         });
         push(&mut heap, t_arrive, Event::SessionArrives(id), &mut seq);
@@ -455,6 +491,11 @@ pub fn serve_with(
 
     while let Some(Reverse(Scheduled { at_ms, ev, .. })) = heap.pop() {
         now = at_ms;
+        if let Some(tr) = &cfg.trace {
+            // drive the trace's (virtual) clock so event timestamps
+            // read simulated time, not wall time
+            tr.clock().advance_to(now);
+        }
         match ev {
             Event::SessionArrives(id) => {
                 let s = &mut sessions[(id - 1) as usize];
@@ -488,6 +529,15 @@ pub fn serve_with(
                     {
                         s.redirects += 1;
                         report.sessions_redirected += 1;
+                        // the live stack's exporter records Redirect +
+                        // Export; the importer records Import — one
+                        // handoff, three events, same round number
+                        if let Some(tr) = &cfg.trace {
+                            let round = s.core.rounds as u32;
+                            tr.record(id, round, SpanKind::Redirect, 0.0, 0, 0);
+                            tr.record(id, round, SpanKind::Export, 0.0, 0, 0);
+                            tr.record(id, round, SpanKind::Import, fl.handoff_ms.max(0.0), 0, 0);
+                        }
                         // in-flight speculation dies with the handoff
                         // (the live edge resets its pipe on reattach)
                         // and is re-launched after the resume.
@@ -526,6 +576,7 @@ pub fn serve_with(
                     );
                     continue;
                 }
+                sessions[(id - 1) as usize].arrived_ms = now;
                 match window.offer(now, id) {
                     BatchDecision::CloseNow => {
                         push(&mut heap, now, Event::BatchClose(window.epoch()), &mut seq)
@@ -561,6 +612,9 @@ pub fn serve_with(
                     let (tokens, _probs, rows) = s.pending.take().unwrap();
                     taken.push((id, tokens, rows));
                 }
+                let batch = taken.len();
+                let total_draft: usize = taken.iter().map(|(_, t, _)| t.len()).sum();
+                let max_k = taken.iter().map(|(_, t, _)| t.len()).max().unwrap_or(0);
                 let mut total_tokens = 0usize;
                 let mut verdicts = Vec::with_capacity(taken.len());
                 if cfg.mode == VerifyMode::Greedy {
@@ -601,6 +655,10 @@ pub fn serve_with(
                     + total_tokens as f64 * cloud_profile.delta_per_token_ms;
                 report.t_base_saved_ms +=
                     (members.len().saturating_sub(1)) as f64 * cloud_profile.t_base_ms;
+                // one verify-latency sample per closed batch, keeping
+                // `latency.verify_ms.count() == batches` in lockstep
+                // with the serving metrics
+                report.latency.verify_ms.record(t_batch);
 
                 for (id, tokens, v) in verdicts {
                     let s = &mut sessions[(id - 1) as usize];
@@ -613,6 +671,21 @@ pub fn serve_with(
                         eos: v.eos,
                     };
                     let t_resp = now + t_batch + chan.prop_ms + chan.down_ms(vmsg.air_bytes());
+                    let wait_ms = (now - s.arrived_ms).max(0.0);
+                    report.latency.queue_ms.record(wait_ms);
+                    report.latency.round_ms.record(wait_ms + t_batch);
+                    report.latency.rtt_ms.record((t_resp - s.sent_ms).max(0.0));
+                    if let Some(tr) = &cfg.trace {
+                        // the serving stack's cloud-side window records
+                        // (QueueWait/BucketPlan/VerifyBatch/Commit) plus
+                        // the edge-side Downlink, same round number
+                        let round = s.core.rounds as u32;
+                        tr.record(id, round, SpanKind::QueueWait, wait_ms, 0, 0);
+                        tr.record(id, round, SpanKind::BucketPlan, 0.0, batch as u32, bucket_k(max_k) as u32);
+                        tr.record(id, round, SpanKind::VerifyBatch, t_batch, batch as u32, total_draft as u32);
+                        tr.record(id, round, SpanKind::Downlink, t_resp - now, vmsg.air_bytes() as u32, 0);
+                        tr.record(id, round, SpanKind::Commit, 0.0, v.tau as u32 + 1, 0);
+                    }
                     if !tokens.is_empty() {
                         s.policy.observe(v.tau, tokens.len());
                     }
@@ -652,6 +725,7 @@ pub fn serve_with(
                         let sp = spec.expect("held implies a speculative round");
                         debug_assert_eq!(sp.round, s.core.rounds as u32);
                         report.rounds_pipelined += 1;
+                        s.sent_ms = sp.sent_ms;
                         // the cloud verifies the promoted round once it
                         // has BOTH arrived and seen this commit — the
                         // edge's draft + uplink legs are hidden

@@ -5,6 +5,8 @@
 
 use crate::coordinator::pipeline::RequestResult;
 use crate::energy::EnergyBreakdown;
+use crate::obs::LatencySummary;
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::util::table::Table;
 use std::collections::BTreeMap;
@@ -196,6 +198,20 @@ pub struct ServingMetrics {
     /// Per completed session: acceptance rate and round count.
     pub session_acceptance: Summary,
     pub session_rounds: Summary,
+    /// Every draft submitted to the verifier, before any disposition.
+    /// Conservation (see [`ServingMetrics::invariant_violations`]):
+    /// every received draft ends up verified, cancelled, orphaned,
+    /// busy-deferred, replayed from cache, or swallowed.
+    pub drafts_received: usize,
+    /// Drafts quietly dropped without an edge-visible verdict (e.g. a
+    /// speculative draft whose session vanished before promotion).
+    pub drafts_swallowed: usize,
+    /// Fleet imports that found the ledger entry already finished and
+    /// answered done immediately (no live session created).
+    pub sessions_imported_done: usize,
+    /// Latency histograms (p50/p90/p99/p999); empty unless the verifier
+    /// records rounds. Mergeable across replicas.
+    pub latency: LatencySummary,
 }
 
 impl ServingMetrics {
@@ -232,9 +248,138 @@ impl ServingMetrics {
         self.batch_occupancy.mean()
     }
 
+    /// Conservation audit: every opened session and every received
+    /// draft must be accounted for by exactly one disposition counter.
+    /// `sessions_live` and `drafts_pending` describe state still in
+    /// flight (0 at a clean shutdown). Returns one message per violated
+    /// invariant; empty means the books balance.
+    pub fn invariant_violations(&self, sessions_live: usize, drafts_pending: usize) -> Vec<String> {
+        let mut v = Vec::new();
+        let opened = self.sessions_opened + self.sessions_imported;
+        let disposed = self.sessions_completed
+            + self.sessions_aborted
+            + self.sessions_evicted
+            + self.sessions_redirected
+            + self.sessions_imported_done
+            + sessions_live;
+        if opened != disposed {
+            v.push(format!(
+                "session conservation: opened {} + imported {} != \
+                 completed {} + aborted {} + evicted {} + redirected {} \
+                 + imported-done {} + live {}",
+                self.sessions_opened,
+                self.sessions_imported,
+                self.sessions_completed,
+                self.sessions_aborted,
+                self.sessions_evicted,
+                self.sessions_redirected,
+                self.sessions_imported_done,
+                sessions_live,
+            ));
+        }
+        let drafts_disposed = self.rounds
+            + self.drafts_cancelled
+            + self.drafts_orphaned
+            + self.drafts_busy
+            + self.verdicts_replayed
+            + self.drafts_swallowed
+            + drafts_pending;
+        if self.drafts_received != drafts_disposed {
+            v.push(format!(
+                "draft conservation: received {} != verified {} + cancelled {} \
+                 + orphaned {} + busy {} + replayed {} + swallowed {} + pending {}",
+                self.drafts_received,
+                self.rounds,
+                self.drafts_cancelled,
+                self.drafts_orphaned,
+                self.drafts_busy,
+                self.verdicts_replayed,
+                self.drafts_swallowed,
+                drafts_pending,
+            ));
+        }
+        if self.accepted > self.drafted {
+            v.push(format!(
+                "acceptance: accepted {} > drafted {}",
+                self.accepted, self.drafted
+            ));
+        }
+        // each verified round commits tau + 1 tokens: rounds ≤ committed ≤ accepted + rounds
+        if self.tokens_committed < self.rounds || self.tokens_committed > self.accepted + self.rounds
+        {
+            v.push(format!(
+                "token conservation: committed {} outside [rounds {}, accepted {} + rounds]",
+                self.tokens_committed, self.rounds, self.accepted
+            ));
+        }
+        if self.latency.verify_ms.count() != self.batches as u64 {
+            v.push(format!(
+                "histogram conservation: verify_ms count {} != batches {}",
+                self.latency.verify_ms.count(),
+                self.batches
+            ));
+        }
+        v
+    }
+
+    /// `debug_assert`-backed conservation audit, called at shutdown.
+    /// Release builds log violations instead of aborting.
+    pub fn check_invariants(&self, sessions_live: usize, drafts_pending: usize) {
+        let violations = self.invariant_violations(sessions_live, drafts_pending);
+        for msg in &violations {
+            crate::util::log::log(
+                crate::util::log::Level::Warn,
+                "metrics",
+                &format!("invariant violated: {msg}"),
+            );
+        }
+        debug_assert!(
+            violations.is_empty(),
+            "ServingMetrics conservation audit failed:\n  {}",
+            violations.join("\n  ")
+        );
+    }
+
+    /// JSON snapshot for `--metrics-json PATH` and `BENCH_serve.json`.
+    pub fn to_json(&self) -> Json {
+        let n = |v: usize| Json::Num(v as f64);
+        Json::obj(vec![
+            ("sessions_opened", n(self.sessions_opened)),
+            ("sessions_completed", n(self.sessions_completed)),
+            ("sessions_aborted", n(self.sessions_aborted)),
+            ("sessions_parked", n(self.sessions_parked)),
+            ("sessions_resumed", n(self.sessions_resumed)),
+            ("sessions_evicted", n(self.sessions_evicted)),
+            ("sessions_redirected", n(self.sessions_redirected)),
+            ("sessions_imported", n(self.sessions_imported)),
+            ("sessions_imported_done", n(self.sessions_imported_done)),
+            ("handshakes_rejected", n(self.handshakes_rejected)),
+            ("verdicts_replayed", n(self.verdicts_replayed)),
+            ("residues_expired", n(self.residues_expired)),
+            ("rounds", n(self.rounds)),
+            ("rounds_pipelined", n(self.rounds_pipelined)),
+            ("batches", n(self.batches)),
+            ("mean_batch", Json::Num(self.mean_batch())),
+            ("drafts_received", n(self.drafts_received)),
+            ("drafts_cancelled", n(self.drafts_cancelled)),
+            ("drafts_orphaned", n(self.drafts_orphaned)),
+            ("drafts_busy", n(self.drafts_busy)),
+            ("drafts_swallowed", n(self.drafts_swallowed)),
+            ("draft_tokens_wasted", n(self.draft_tokens_wasted)),
+            ("tokens_committed", n(self.tokens_committed)),
+            ("drafted", n(self.drafted)),
+            ("accepted", n(self.accepted)),
+            ("acceptance_rate", Json::Num(self.acceptance_rate())),
+            ("hot_swaps", n(self.hot_swaps)),
+            ("bytes_up", n(self.bytes_up)),
+            ("bytes_down", n(self.bytes_down)),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+
     /// Human-readable multi-line report for CLIs and examples.
     pub fn render(&self, title: &str) -> String {
-        format!(
+        let mut s = format!(
             "{title}\n\
              \x20 sessions         {} completed / {} opened ({} aborted, {} handshakes rejected)\n\
              \x20 resume           {} parked, {} resumed, {} evicted, {} verdicts replayed, {} residues expired\n\
@@ -273,7 +418,13 @@ impl ServingMetrics {
             self.hot_swaps,
             self.bytes_up,
             self.bytes_down,
-        )
+        );
+        let latency = self.latency.render_lines("  ");
+        if !latency.is_empty() {
+            s.push('\n');
+            s.push_str(latency.trim_end());
+        }
+        s
     }
 }
 
@@ -384,6 +535,108 @@ mod tests {
         assert!(r.contains("3 redirected out, 2 imported"));
         assert!(r.contains("4 rounds pipelined, 2 drafts cancelled, 8 draft tokens wasted"));
         assert!(r.contains("5 busy deferrals, 1 drafts orphaned"));
+    }
+
+    /// A metrics state where all conservation books balance.
+    fn balanced() -> ServingMetrics {
+        let mut m = ServingMetrics::default();
+        m.sessions_opened = 4;
+        m.sessions_imported = 1;
+        m.sessions_completed = 3;
+        m.sessions_aborted = 1;
+        m.sessions_redirected = 1;
+        m.drafts_received = 10;
+        m.rounds = 5;
+        m.drafts_cancelled = 2;
+        m.drafts_orphaned = 1;
+        m.drafts_busy = 1;
+        m.verdicts_replayed = 1;
+        m.drafted = 20;
+        m.accepted = 15;
+        m.tokens_committed = 20; // accepted + one bonus per round
+        m.batches = 3;
+        for _ in 0..3 {
+            m.latency.verify_ms.record(1.0);
+        }
+        m
+    }
+
+    #[test]
+    fn invariants_hold_on_balanced_books() {
+        assert!(balanced().invariant_violations(0, 0).is_empty());
+        // in-flight state balances too
+        let mut m = balanced();
+        m.sessions_opened += 2; // two still live
+        m.drafts_received += 1; // one still pending
+        assert!(m.invariant_violations(2, 1).is_empty());
+        m.check_invariants(2, 1); // must not panic
+    }
+
+    #[test]
+    fn invariant_session_conservation() {
+        let mut m = balanced();
+        m.sessions_opened += 1; // one session vanished without a disposition
+        let v = m.invariant_violations(0, 0);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("session conservation"));
+    }
+
+    #[test]
+    fn invariant_draft_conservation() {
+        let mut m = balanced();
+        m.drafts_received += 1; // a draft vanished without a disposition
+        let v = m.invariant_violations(0, 0);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("draft conservation"));
+    }
+
+    #[test]
+    fn invariant_acceptance_bound() {
+        let mut m = balanced();
+        m.accepted = m.drafted + 1;
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("acceptance:")), "{v:?}");
+    }
+
+    #[test]
+    fn invariant_token_conservation() {
+        let mut m = balanced();
+        m.tokens_committed = m.accepted + m.rounds + 1; // more than tau+1 per round
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("token conservation")), "{v:?}");
+        let mut m = balanced();
+        m.tokens_committed = m.rounds - 1; // a round committed nothing
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("token conservation")), "{v:?}");
+    }
+
+    #[test]
+    fn invariant_histogram_totals() {
+        let mut m = balanced();
+        m.batches += 1; // a batch closed without a verify_ms sample
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("histogram conservation")), "{v:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "conservation audit failed")]
+    #[cfg(debug_assertions)]
+    fn check_invariants_asserts_in_debug() {
+        let mut m = balanced();
+        m.drafts_received += 5;
+        m.check_invariants(0, 0);
+    }
+
+    #[test]
+    fn metrics_json_snapshot() {
+        let m = balanced();
+        let j = m.to_json();
+        assert_eq!(j.get("rounds").and_then(|x| x.as_usize()), Some(5));
+        assert_eq!(j.get("drafts_received").and_then(|x| x.as_usize()), Some(10));
+        assert!(j.get("latency").and_then(|l| l.get("verify_ms")).is_some());
+        // render appends latency lines once histograms fill
+        assert!(m.render("t").contains("latency/verify"));
+        assert!(!ServingMetrics::default().render("t").contains("latency/"));
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Time sources for the observability layer.
+//!
+//! Spans and latency histograms must work identically in the live
+//! serving stack (real time) and the virtual-clock simulator
+//! (`coordinator::scheduler`), so everything in `obs` reads time
+//! through the [`Clock`] trait instead of touching `Instant` directly:
+//!
+//! * [`WallClock`] — monotonic wall time in ms since construction; the
+//!   serving stack's default.
+//! * [`VirtualClock`] — a shared, monotonically advanced virtual time;
+//!   the simulator drives it from its event loop (`advance_to`), so a
+//!   sim-side trace carries virtual timestamps and a `ScopeTimer`
+//!   routed through it measures virtual elapsed time.
+//!
+//! Clocks are cheap to share (`Arc<dyn Clock>`) and lock-free.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A monotonic millisecond time source. `advance_to` is a no-op for
+/// real clocks; virtual clocks ratchet forward through it.
+pub trait Clock: Send + Sync {
+    /// Current time in milliseconds (monotonic, origin arbitrary).
+    fn now_ms(&self) -> f64;
+
+    /// Advance a virtual clock to `ms` (monotonic: earlier times are
+    /// ignored). Real clocks ignore this entirely.
+    fn advance_to(&self, _ms: f64) {}
+}
+
+/// Monotonic wall time, in ms since the clock was created.
+#[derive(Debug)]
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock {
+            start: Instant::now(),
+        }
+    }
+
+    /// A shared wall clock.
+    pub fn shared() -> Arc<dyn Clock> {
+        Arc::new(WallClock::new())
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Shared virtual time: reads return the last `advance_to` value.
+/// Stored as f64 bits in an atomic so concurrent readers (e.g. a trace
+/// shared between the sim loop and assertions) never lock. Time never
+/// goes backwards — `advance_to` is a monotonic max.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    bits: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock {
+            bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// A shared virtual clock starting at 0 ms.
+    pub fn shared() -> Arc<VirtualClock> {
+        Arc::new(VirtualClock::new())
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ms(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Acquire))
+    }
+
+    fn advance_to(&self, ms: f64) {
+        if !ms.is_finite() {
+            return; // a poisoned event time must not wedge the clock
+        }
+        let _ = self
+            .bits
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                (ms > f64::from_bits(cur)).then(|| ms.to_bits())
+            });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_advances() {
+        let c = WallClock::new();
+        let a = c.now_ms();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(c.now_ms() > a);
+        c.advance_to(1e9); // no-op on a real clock
+        assert!(c.now_ms() < 1e6);
+    }
+
+    #[test]
+    fn virtual_clock_is_monotonic() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        c.advance_to(12.5);
+        assert_eq!(c.now_ms(), 12.5);
+        c.advance_to(3.0); // earlier: ignored
+        assert_eq!(c.now_ms(), 12.5);
+        c.advance_to(f64::NAN); // poisoned: ignored
+        assert_eq!(c.now_ms(), 12.5);
+        c.advance_to(40.0);
+        assert_eq!(c.now_ms(), 40.0);
+    }
+
+    #[test]
+    fn virtual_clock_shares_across_threads() {
+        let c = VirtualClock::shared();
+        let c2 = c.clone();
+        std::thread::spawn(move || c2.advance_to(99.0))
+            .join()
+            .unwrap();
+        assert_eq!(c.now_ms(), 99.0);
+    }
+}

@@ -1,0 +1,424 @@
+//! Log-bucketed latency histograms.
+//!
+//! Fixed geometric buckets (growth 2^(1/8) per bucket, ~±4.5% relative
+//! error at the reported geometric midpoint) spanning 1 µs to ~1 hour —
+//! wide enough for a queue wait and a whole fault-injected session
+//! alike. Because the bucket boundaries are a pure function of the
+//! bucket index, histograms from different replicas (or different
+//! processes, via the wire encoding) MERGE exactly: the fleet's p99 is
+//! computable without shipping raw samples, which a `Summary` (retained
+//! samples) cannot do cheaply.
+//!
+//! The wire encoding is sparse — `(bucket index, count)` varint pairs —
+//! so an idle replica's stats reply costs a handful of bytes.
+
+use anyhow::{bail, Result};
+
+/// Smallest distinguishable latency: everything at or below lands in
+/// bucket 0.
+pub const HIST_MIN_MS: f64 = 1e-3;
+/// Buckets per octave (bucket width factor 2^(1/8) ≈ 1.09).
+pub const HIST_BUCKETS_PER_OCTAVE: f64 = 8.0;
+/// Total bucket count. Bucket 255's lower bound is ~1 hour; larger
+/// values saturate there.
+pub const HIST_BUCKETS: usize = 256;
+
+/// A mergeable log-bucketed histogram of millisecond latencies.
+///
+/// `Default` is empty and allocation-free; the bucket array is
+/// allocated on the first `record`, so carrying unused histograms in
+/// metrics structs costs nothing.
+#[derive(Debug, Clone, Default)]
+pub struct LogHistogram {
+    /// Bucket counts (empty until the first sample).
+    counts: Vec<u64>,
+    total: u64,
+    sum_ms: f64,
+    max_ms: f64,
+}
+
+/// Bucket index for a value (pure function — replicas agree by
+/// construction).
+fn bucket_of(ms: f64) -> usize {
+    if !(ms > HIST_MIN_MS) {
+        return 0; // includes NaN and negatives: never panic on bad input
+    }
+    let idx = ((ms / HIST_MIN_MS).log2() * HIST_BUCKETS_PER_OCTAVE).floor() as isize + 1;
+    (idx.max(1) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Representative (geometric midpoint) value of a bucket.
+fn bucket_value(idx: usize) -> f64 {
+    if idx == 0 {
+        HIST_MIN_MS
+    } else {
+        HIST_MIN_MS * ((idx as f64 - 0.5) / HIST_BUCKETS_PER_OCTAVE).exp2()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Record one latency sample (ms). NaN / negative values count into
+    /// bucket 0 rather than poisoning the histogram.
+    pub fn record(&mut self, ms: f64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; HIST_BUCKETS];
+        }
+        self.counts[bucket_of(ms)] += 1;
+        self.total += 1;
+        if ms.is_finite() && ms > 0.0 {
+            self.sum_ms += ms;
+            if ms > self.max_ms {
+                self.max_ms = ms;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum_ms / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.max_ms
+        }
+    }
+
+    /// Quantile estimate, `q` in [0, 1]: the geometric midpoint of the
+    /// bucket holding the ceil(q·total)-th smallest sample. Relative
+    /// error is bounded by the half-bucket width (~4.5%).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_value(i);
+            }
+        }
+        bucket_value(HIST_BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.quantile(0.999)
+    }
+
+    /// Merge another histogram in (exact: buckets are index-aligned by
+    /// construction). The fleet aggregation path.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.total == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; HIST_BUCKETS];
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ms += other.sum_ms;
+        if other.max_ms > self.max_ms {
+            self.max_ms = other.max_ms;
+        }
+    }
+
+    /// One-line rendering for reports: `n=…, p50/p90/p99/p999 in ms`.
+    pub fn brief(&self) -> String {
+        if self.total == 0 {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} p50 {:.2} ms, p90 {:.2} ms, p99 {:.2} ms, p999 {:.2} ms (max {:.2} ms)",
+            self.total,
+            self.p50(),
+            self.p90(),
+            self.p99(),
+            self.p999(),
+            self.max_ms,
+        )
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let q = |v: f64| {
+            if v.is_finite() {
+                Json::Num(v)
+            } else {
+                Json::Null
+            }
+        };
+        Json::obj(vec![
+            ("count", Json::Num(self.total as f64)),
+            ("mean_ms", q(self.mean())),
+            ("p50_ms", q(self.p50())),
+            ("p90_ms", q(self.p90())),
+            ("p99_ms", q(self.p99())),
+            ("p999_ms", q(self.p999())),
+            ("max_ms", q(self.max())),
+        ])
+    }
+
+    // -----------------------------------------------------------------
+    // wire encoding (sparse): used by the v6 `StatsAck` frame
+    // -----------------------------------------------------------------
+
+    /// Append the sparse encoding: `varint(nonzero buckets)`, then
+    /// `(varint index, varint count)` pairs in index order, then the
+    /// `sum_ms`/`max_ms` f64 bits (LE).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let nonzero: Vec<(usize, u64)> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect();
+        write_uv(out, nonzero.len() as u64);
+        for (i, c) in nonzero {
+            write_uv(out, i as u64);
+            write_uv(out, c);
+        }
+        out.extend_from_slice(&self.sum_ms.to_le_bytes());
+        out.extend_from_slice(&self.max_ms.to_le_bytes());
+    }
+
+    /// Decode one sparse encoding from the front of `b`; returns the
+    /// histogram and the bytes consumed.
+    pub fn decode_from(b: &[u8]) -> Result<(LogHistogram, usize)> {
+        let mut pos = 0usize;
+        let n = read_uv(b, &mut pos)?;
+        if n as usize > HIST_BUCKETS {
+            bail!("histogram claims {n} nonzero buckets (max {HIST_BUCKETS})");
+        }
+        let mut h = LogHistogram::new();
+        let mut last: Option<u64> = None;
+        for _ in 0..n {
+            let idx = read_uv(b, &mut pos)?;
+            if idx as usize >= HIST_BUCKETS {
+                bail!("histogram bucket index {idx} out of range");
+            }
+            if last.is_some_and(|l| idx <= l) {
+                bail!("histogram bucket indices must be strictly increasing");
+            }
+            last = Some(idx);
+            let c = read_uv(b, &mut pos)?;
+            if c == 0 {
+                bail!("histogram encodes an empty bucket");
+            }
+            if h.counts.is_empty() {
+                h.counts = vec![0; HIST_BUCKETS];
+            }
+            h.counts[idx as usize] = c;
+            h.total = h
+                .total
+                .checked_add(c)
+                .ok_or_else(|| anyhow::anyhow!("histogram count overflow"))?;
+        }
+        if pos + 16 > b.len() {
+            bail!("histogram encoding truncated");
+        }
+        h.sum_ms = f64::from_le_bytes(b[pos..pos + 8].try_into().unwrap());
+        h.max_ms = f64::from_le_bytes(b[pos + 8..pos + 16].try_into().unwrap());
+        if !h.sum_ms.is_finite() || !h.max_ms.is_finite() {
+            bail!("histogram sum/max not finite");
+        }
+        pos += 16;
+        Ok((h, pos))
+    }
+}
+
+// ---------------------------------------------------------------------
+// LEB128 varints (self-contained: `obs` sits below `protocol`)
+// ---------------------------------------------------------------------
+
+pub(crate) fn write_uv(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+pub(crate) fn read_uv(b: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&byte) = b.get(*pos) else {
+            bail!("varint truncated");
+        };
+        *pos += 1;
+        if shift >= 64 {
+            bail!("varint overlong");
+        }
+        v |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::stats::percentile_sorted;
+
+    #[test]
+    fn quantiles_track_known_samples() {
+        let mut h = LogHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64); // 1..1000 ms
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.p50() / 500.0 - 1.0).abs() < 0.05, "p50 {}", h.p50());
+        assert!((h.p99() / 990.0 - 1.0).abs() < 0.05, "p99 {}", h.p99());
+        assert!((h.mean() - 500.5).abs() < 1e-6);
+        assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert!(h.p50().is_nan() && h.mean().is_nan() && h.max().is_nan());
+        let mut h = LogHistogram::new();
+        h.record(f64::NAN);
+        h.record(-5.0);
+        h.record(0.0);
+        assert_eq!(h.count(), 3);
+        // all land in bucket 0 (the "at or below 1µs" bucket)
+        assert_eq!(h.p50(), HIST_MIN_MS);
+        // a saturating sample stays in range
+        h.record(1e12);
+        assert!(h.p999() > 1e6);
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut both = LogHistogram::new();
+        for i in 0..200 {
+            let x = 0.01 * 1.07f64.powi(i % 97);
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            both.record(x);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), both.count());
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(merged.quantile(q), both.quantile(q), "q={q}");
+        }
+        assert!((merged.mean() - both.mean()).abs() < 1e-9);
+        // merging into an empty histogram copies
+        let mut empty = LogHistogram::new();
+        empty.merge(&both);
+        assert_eq!(empty.quantile(0.9), both.quantile(0.9));
+    }
+
+    #[test]
+    fn wire_roundtrip_and_garbage_rejection() {
+        let mut h = LogHistogram::new();
+        for x in [0.004, 0.004, 1.5, 1.6, 250.0, 8000.0] {
+            h.record(x);
+        }
+        let mut buf = Vec::new();
+        h.encode_into(&mut buf);
+        let (back, used) = LogHistogram::decode_from(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(back.count(), h.count());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(back.quantile(q), h.quantile(q));
+        }
+        assert_eq!(back.max(), h.max());
+        // empty histogram round-trips too
+        let mut buf2 = Vec::new();
+        LogHistogram::new().encode_into(&mut buf2);
+        let (e, _) = LogHistogram::decode_from(&buf2).unwrap();
+        assert!(e.is_empty());
+        // truncations never panic
+        for cut in 0..buf.len() {
+            assert!(LogHistogram::decode_from(&buf[..cut]).is_err(), "cut {cut}");
+        }
+        // out-of-range bucket index rejected
+        let mut bad = Vec::new();
+        write_uv(&mut bad, 1);
+        write_uv(&mut bad, HIST_BUCKETS as u64);
+        write_uv(&mut bad, 3);
+        bad.extend_from_slice(&[0u8; 16]);
+        assert!(LogHistogram::decode_from(&bad).is_err());
+    }
+
+    /// Satellite (CI matrix): quantile error bound vs an exact sort on
+    /// random log-uniform samples — the half-bucket geometric-midpoint
+    /// guarantee, checked at p50/p90/p99/p999.
+    #[test]
+    fn prop_quantile_error_bounds_vs_exact_sort() {
+        prop::check(150, |rng| {
+            let n = 1 + rng.next_range(400) as usize;
+            let mut xs = Vec::with_capacity(n);
+            let mut h = LogHistogram::new();
+            for _ in 0..n {
+                // log-uniform over [1e-2, 1e4] ms
+                let x = 10f64.powf(rng.next_f64() * 6.0 - 2.0);
+                xs.push(x);
+                h.record(x);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [50.0, 90.0, 99.0, 99.9] {
+                let est = h.quantile(q / 100.0);
+                // the estimate must sit within a bucket width of the
+                // exact order statistics bracketing the rank
+                let rank = q / 100.0 * (n - 1) as f64;
+                let lo = xs[rank.floor() as usize];
+                let hi = xs[(rank.ceil() as usize).min(n - 1)];
+                prop::assert_prop(
+                    est >= lo / 1.1 && est <= hi * 1.1,
+                    format!("q{q}: estimate {est} outside [{lo}/1.1, {hi}*1.1] (n={n})"),
+                )?;
+            }
+            prop::assert_prop(h.count() as usize == n, "count mismatch")
+        });
+    }
+}

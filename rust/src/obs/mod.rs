@@ -1,0 +1,161 @@
+//! Observability: clocks, trace journals, latency histograms.
+//!
+//! This module is the shared instrumentation layer for the live
+//! serving stack (`serve::*`) and the virtual-clock simulator
+//! (`coordinator::scheduler`):
+//!
+//! * [`Clock`] / [`WallClock`] / [`VirtualClock`] — one time
+//!   abstraction for both worlds ([`clock`]).
+//! * [`Trace`] / [`SpanKind`] — bounded per-session event journals
+//!   with JSONL export; the determinism contract extends to these:
+//!   sim twin and serve must emit identical canonical event sequences
+//!   ([`trace`]).
+//! * [`LogHistogram`] — mergeable log-bucketed latency histograms
+//!   ([`hist`]), grouped into the [`LatencySummary`] carried by
+//!   `ServingMetrics`, `ServeReport`, and `EdgeReport`, and shipped
+//!   over the wire in the v6 `StatsAck` frame.
+//!
+//! Everything here is optional at the call site (`Option<Trace>`
+//! fields default to `None`); with observability disabled the serving
+//! hot paths do no extra work.
+
+pub mod clock;
+pub mod hist;
+pub mod trace;
+
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use hist::{LogHistogram, HIST_BUCKETS, HIST_MIN_MS};
+pub use trace::{SpanKind, Trace, TraceEvent, TRACE_RING_CAP};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// The standard latency histogram bundle reported by the verifier, the
+/// edge, the simulator, and (merged) the fleet registry. All four
+/// histograms are mergeable across replicas.
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    /// End-to-end per-round latency (draft proposed → verdict applied).
+    pub round_ms: LogHistogram,
+    /// Admission-window wait (draft arrival → batch close).
+    pub queue_ms: LogHistogram,
+    /// Batched verification execution time per batch.
+    pub verify_ms: LogHistogram,
+    /// Edge-observed request→verdict round trip.
+    pub rtt_ms: LogHistogram,
+}
+
+impl LatencySummary {
+    pub fn new() -> LatencySummary {
+        LatencySummary::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.round_ms.is_empty()
+            && self.queue_ms.is_empty()
+            && self.verify_ms.is_empty()
+            && self.rtt_ms.is_empty()
+    }
+
+    /// Merge another summary in (fleet aggregation).
+    pub fn merge(&mut self, other: &LatencySummary) {
+        self.round_ms.merge(&other.round_ms);
+        self.queue_ms.merge(&other.queue_ms);
+        self.verify_ms.merge(&other.verify_ms);
+        self.rtt_ms.merge(&other.rtt_ms);
+    }
+
+    /// Human-readable lines for the text reports (`render` paths);
+    /// empty histograms are omitted, so pre-observability report text
+    /// is unchanged when nothing was recorded.
+    pub fn render_lines(&self, indent: &str) -> String {
+        let mut out = String::new();
+        for (name, h) in [
+            ("round", &self.round_ms),
+            ("queue", &self.queue_ms),
+            ("verify", &self.verify_ms),
+            ("rtt", &self.rtt_ms),
+        ] {
+            if !h.is_empty() {
+                out.push_str(&format!("{indent}latency/{name}: {}\n", h.brief()));
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round_ms", self.round_ms.to_json()),
+            ("queue_ms", self.queue_ms.to_json()),
+            ("verify_ms", self.verify_ms.to_json()),
+            ("rtt_ms", self.rtt_ms.to_json()),
+        ])
+    }
+
+    /// Wire encoding: the four histograms back to back (sparse), used
+    /// by the `StatsAck` payload.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        self.round_ms.encode_into(out);
+        self.queue_ms.encode_into(out);
+        self.verify_ms.encode_into(out);
+        self.rtt_ms.encode_into(out);
+    }
+
+    /// Decode four histograms from the front of `b`; returns the
+    /// summary and bytes consumed.
+    pub fn decode_from(b: &[u8]) -> Result<(LatencySummary, usize)> {
+        let mut pos = 0usize;
+        let (round_ms, n) = LogHistogram::decode_from(&b[pos..])?;
+        pos += n;
+        let (queue_ms, n) = LogHistogram::decode_from(&b[pos..])?;
+        pos += n;
+        let (verify_ms, n) = LogHistogram::decode_from(&b[pos..])?;
+        pos += n;
+        let (rtt_ms, n) = LogHistogram::decode_from(&b[pos..])?;
+        pos += n;
+        Ok((
+            LatencySummary {
+                round_ms,
+                queue_ms,
+                verify_ms,
+                rtt_ms,
+            },
+            pos,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_merge_and_roundtrip() {
+        let mut a = LatencySummary::new();
+        a.round_ms.record(12.0);
+        a.queue_ms.record(0.5);
+        a.verify_ms.record(3.0);
+        let mut b = LatencySummary::new();
+        b.round_ms.record(30.0);
+        b.rtt_ms.record(9.0);
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.round_ms.count(), 2);
+        assert_eq!(m.rtt_ms.count(), 1);
+
+        let mut buf = Vec::new();
+        m.encode_into(&mut buf);
+        let (back, used) = LatencySummary::decode_from(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(back.round_ms.count(), 2);
+        assert_eq!(back.queue_ms.count(), 1);
+        assert_eq!(back.verify_ms.count(), 1);
+        assert_eq!(back.rtt_ms.count(), 1);
+        assert_eq!(back.round_ms.p50(), m.round_ms.p50());
+
+        let text = m.render_lines("  ");
+        assert!(text.contains("latency/round"));
+        assert!(!LatencySummary::new().render_lines("").contains("latency"));
+    }
+}

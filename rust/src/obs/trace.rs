@@ -1,0 +1,346 @@
+//! Per-session span/event journal.
+//!
+//! A [`Trace`] is an instance-scoped (NOT process-global — parallel
+//! tests each own one), cheaply cloneable handle to a bounded
+//! per-session event journal. The serving stack and the simulator both
+//! record the same per-round lifecycle into it:
+//!
+//! `draft → uplink → queue_wait → bucket_plan → verify_batch →
+//! downlink → commit`
+//!
+//! plus the fleet lifecycle events `export`, `redirect`, `import`,
+//! `reroot`. Under the determinism contract the sim twin and the live
+//! stack must produce the **same ordered event sequence** per session
+//! (timestamps aside); [`Trace::sequence`] returns the canonical
+//! ordering used by those pinned tests, which makes a trace diff the
+//! first debugging tool for a determinism violation.
+//!
+//! Cost model: everything takes `&Option<Trace>`-shaped call sites —
+//! when no trace is installed the instrumented code does no work at
+//! all (a single `if let` on an `Option`), so the hot paths stay
+//! within the microbench regression budget.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use super::clock::{Clock, WallClock};
+
+/// Max retained events per session; older events are dropped (counted)
+/// so a pathological session cannot grow the journal unboundedly.
+pub const TRACE_RING_CAP: usize = 4096;
+
+/// What happened. The numeric order is the canonical within-round
+/// ordering used by [`Trace::sequence`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// Edge drafted `a` tokens for a round.
+    Draft = 0,
+    /// Draft left the edge (first transmission only — Busy retries and
+    /// replays do not re-record, so sim and serve agree).
+    Uplink = 1,
+    /// Draft waited `dur_ms` in the admission window before batching.
+    QueueWait = 2,
+    /// Batch planned: `a` = batch size, `b` = bucket K.
+    BucketPlan = 3,
+    /// Batched verification executed: `a` = batch size, `b` = total
+    /// draft tokens in the batch.
+    VerifyBatch = 4,
+    /// Verdict left the cloud / arrived at the edge.
+    Downlink = 5,
+    /// Tokens committed: `a` = accepted count (+bonus).
+    Commit = 6,
+    /// Session exported to the fleet ledger.
+    Export = 7,
+    /// Session redirected toward another replica.
+    Redirect = 8,
+    /// Session imported from the fleet ledger.
+    Import = 9,
+    /// Edge rerooted its draft context after a handoff.
+    Reroot = 10,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 11] = [
+        SpanKind::Draft,
+        SpanKind::Uplink,
+        SpanKind::QueueWait,
+        SpanKind::BucketPlan,
+        SpanKind::VerifyBatch,
+        SpanKind::Downlink,
+        SpanKind::Commit,
+        SpanKind::Export,
+        SpanKind::Redirect,
+        SpanKind::Import,
+        SpanKind::Reroot,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Draft => "draft",
+            SpanKind::Uplink => "uplink",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::BucketPlan => "bucket_plan",
+            SpanKind::VerifyBatch => "verify_batch",
+            SpanKind::Downlink => "downlink",
+            SpanKind::Commit => "commit",
+            SpanKind::Export => "export",
+            SpanKind::Redirect => "redirect",
+            SpanKind::Import => "import",
+            SpanKind::Reroot => "reroot",
+        }
+    }
+}
+
+/// One recorded event. `a`/`b` are kind-specific small arguments (see
+/// [`SpanKind`] docs); unused ones are 0.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub session: u32,
+    pub round: u32,
+    pub kind: SpanKind,
+    /// Clock reading when the event was recorded (wall or virtual ms).
+    pub at_ms: f64,
+    /// Duration of the spanned work, 0 for point events.
+    pub dur_ms: f64,
+    pub a: u32,
+    pub b: u32,
+}
+
+#[derive(Debug, Default)]
+struct SessionRing {
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+#[derive(Debug, Default)]
+struct Journal {
+    sessions: BTreeMap<u32, SessionRing>,
+    total: u64,
+}
+
+struct TraceInner {
+    clock: Arc<dyn Clock>,
+    journal: Mutex<Journal>,
+}
+
+/// Cloneable handle to a trace journal; see module docs.
+#[derive(Clone)]
+pub struct Trace {
+    inner: Arc<TraceInner>,
+}
+
+impl std::fmt::Debug for Trace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let j = self.inner.journal.lock().unwrap();
+        f.debug_struct("Trace")
+            .field("sessions", &j.sessions.len())
+            .field("events", &j.total)
+            .finish()
+    }
+}
+
+impl Trace {
+    /// A trace journal reading the given clock.
+    pub fn new(clock: Arc<dyn Clock>) -> Trace {
+        Trace {
+            inner: Arc::new(TraceInner {
+                clock,
+                journal: Mutex::new(Journal::default()),
+            }),
+        }
+    }
+
+    /// A trace on a fresh wall clock — the serving-stack default.
+    pub fn wall() -> Trace {
+        Trace::new(WallClock::shared())
+    }
+
+    /// The clock this trace reads. The simulator drives its virtual
+    /// clock through this handle (`trace.clock().advance_to(now)`).
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.inner.clock
+    }
+
+    /// Current clock reading, for span begin/end bracketing at call
+    /// sites that want a duration without allocating a guard.
+    pub fn now_ms(&self) -> f64 {
+        self.inner.clock.now_ms()
+    }
+
+    /// Record one event (timestamped from the trace clock).
+    pub fn record(&self, session: u32, round: u32, kind: SpanKind, dur_ms: f64, a: u32, b: u32) {
+        let at_ms = self.inner.clock.now_ms();
+        let mut j = self.inner.journal.lock().unwrap();
+        let ring = j.sessions.entry(session).or_default();
+        if ring.events.len() >= TRACE_RING_CAP {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        ring.events.push_back(TraceEvent {
+            session,
+            round,
+            kind,
+            at_ms,
+            dur_ms,
+            a,
+            b,
+        });
+        j.total += 1;
+    }
+
+    /// Point-event shorthand (no duration, no args).
+    pub fn event(&self, session: u32, round: u32, kind: SpanKind) {
+        self.record(session, round, kind, 0.0, 0, 0);
+    }
+
+    /// Total events recorded (including any since dropped from rings).
+    pub fn len(&self) -> u64 {
+        self.inner.journal.lock().unwrap().total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Session ids present in the journal, ascending.
+    pub fn sessions(&self) -> Vec<u32> {
+        let j = self.inner.journal.lock().unwrap();
+        j.sessions.keys().copied().collect()
+    }
+
+    /// Events dropped from a session's ring (0 when within cap).
+    pub fn dropped(&self, session: u32) -> u64 {
+        let j = self.inner.journal.lock().unwrap();
+        j.sessions.get(&session).map_or(0, |r| r.dropped)
+    }
+
+    /// Raw events for a session in insertion order.
+    pub fn events(&self, session: u32) -> Vec<TraceEvent> {
+        let j = self.inner.journal.lock().unwrap();
+        j.sessions
+            .get(&session)
+            .map_or_else(Vec::new, |r| r.events.iter().cloned().collect())
+    }
+
+    /// The canonical ordered event sequence for a session: events
+    /// sorted by `(round, kind)` with insertion order as tiebreak.
+    ///
+    /// This is the determinism-contract view: the serving stack records
+    /// concurrently (edge task vs verifier task), so raw insertion
+    /// order interleaves nondeterministically ACROSS kinds — but sorted
+    /// by `(round, kind)`, equality of two sequences reduces to
+    /// equality of per-`(round, kind)` event counts, which the contract
+    /// pins. Timestamps and durations are deliberately excluded.
+    pub fn sequence(&self, session: u32) -> Vec<(u32, SpanKind)> {
+        let mut evs: Vec<(u32, SpanKind)> = self
+            .events(session)
+            .iter()
+            .map(|e| (e.round, e.kind))
+            .collect();
+        evs.sort(); // stable: insertion order breaks (round, kind) ties
+        evs
+    }
+
+    /// Count events of one kind for a session.
+    pub fn count(&self, session: u32, kind: SpanKind) -> usize {
+        self.events(session).iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// Serialize the whole journal as JSONL, one event per line,
+    /// sessions ascending, insertion order within a session.
+    pub fn to_jsonl(&self) -> String {
+        use crate::util::json::Json;
+        let j = self.inner.journal.lock().unwrap();
+        let mut out = String::new();
+        for ring in j.sessions.values() {
+            for e in &ring.events {
+                let line = Json::obj(vec![
+                    ("session", Json::Num(e.session as f64)),
+                    ("round", Json::Num(e.round as f64)),
+                    ("kind", Json::str(e.kind.name())),
+                    ("at_ms", Json::Num(e.at_ms)),
+                    ("dur_ms", Json::Num(e.dur_ms)),
+                    ("a", Json::Num(e.a as f64)),
+                    ("b", Json::Num(e.b as f64)),
+                ]);
+                out.push_str(&line.to_string());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Write the JSONL journal to a file (the `--trace PATH` flag).
+    pub fn write_jsonl(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::clock::VirtualClock;
+
+    #[test]
+    fn records_and_orders_events() {
+        let t = Trace::wall();
+        t.record(1, 0, SpanKind::Draft, 0.0, 4, 0);
+        t.event(1, 0, SpanKind::Uplink);
+        t.record(1, 0, SpanKind::Commit, 0.0, 3, 0);
+        t.record(1, 1, SpanKind::Draft, 0.0, 4, 0);
+        // commit recorded "late" for round 0 after round 1's draft —
+        // canonical sequence still orders by round first
+        t.record(1, 0, SpanKind::Downlink, 0.0, 0, 0);
+        assert_eq!(
+            t.sequence(1),
+            vec![
+                (0, SpanKind::Draft),
+                (0, SpanKind::Uplink),
+                (0, SpanKind::Downlink),
+                (0, SpanKind::Commit),
+                (1, SpanKind::Draft),
+            ]
+        );
+        assert_eq!(t.count(1, SpanKind::Draft), 2);
+        assert_eq!(t.len(), 5);
+        assert!(t.sequence(7).is_empty());
+        assert_eq!(t.sessions(), vec![1]);
+    }
+
+    #[test]
+    fn virtual_clock_timestamps() {
+        let vc = VirtualClock::shared();
+        let t = Trace::new(vc.clone());
+        vc.advance_to(10.0);
+        t.event(1, 0, SpanKind::Draft);
+        vc.advance_to(25.0);
+        t.event(1, 0, SpanKind::Commit);
+        let evs = t.events(1);
+        assert_eq!(evs[0].at_ms, 10.0);
+        assert_eq!(evs[1].at_ms, 25.0);
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let t = Trace::wall();
+        for r in 0..(TRACE_RING_CAP as u32 + 10) {
+            t.event(3, r, SpanKind::Draft);
+        }
+        assert_eq!(t.events(3).len(), TRACE_RING_CAP);
+        assert_eq!(t.dropped(3), 10);
+        assert_eq!(t.len(), TRACE_RING_CAP as u64 + 10);
+        // oldest were dropped: first retained round is 10
+        assert_eq!(t.events(3)[0].round, 10);
+    }
+
+    #[test]
+    fn jsonl_export_parses() {
+        let t = Trace::wall();
+        t.record(2, 0, SpanKind::VerifyBatch, 1.25, 3, 12);
+        let out = t.to_jsonl();
+        assert_eq!(out.lines().count(), 1);
+        let v = crate::util::json::Json::parse(out.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("kind").and_then(|k| k.as_str()), Some("verify_batch"));
+        assert_eq!(v.get("a").and_then(|a| a.as_f64()), Some(3.0));
+    }
+}

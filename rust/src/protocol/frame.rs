@@ -76,7 +76,13 @@ use anyhow::{bail, Result};
 /// session to a peer replica (the edge redials and replays the normal
 /// `Resume` there), and the cloud announces `ReplicaInfo { version,
 /// load }` telemetry on the control stream after the handshake.
-pub const WIRE_VERSION: u16 = 5;
+/// v6: wire-level stats — an edge (or a fleet registry probing a
+/// replica out-of-band) may send a `Stats` request on the control
+/// stream and receives a `StatsAck` snapshot carrying the replica's
+/// serving counters plus its mergeable latency histograms
+/// (`obs::LatencySummary`). Read-only and connection-scoped: a lost or
+/// reordered `Stats` exchange can never affect a committed token.
+pub const WIRE_VERSION: u16 = 6;
 
 /// Oldest peer version the handshake still accepts. A v2 peer never
 /// sends spec-tagged drafts or `Cancel` frames, and the cloud sends it
@@ -84,9 +90,11 @@ pub const WIRE_VERSION: u16 = 5;
 /// negotiated version in `HelloAck` tells the edge whether pipelining
 /// (>= 3) is allowed on the connection, tells the cloud whether the
 /// peer understands `Busy` (>= 4) — drafts from older peers are always
-/// admitted because they could not act on a deferral — and whether the
+/// admitted because they could not act on a deferral — whether the
 /// peer can follow a `Redirect` to a fleet sibling (>= 5; older peers
-/// are never redirected and simply keep decoding on this replica).
+/// are never redirected and simply keep decoding on this replica), and
+/// whether `Stats`/`StatsAck` snapshots may flow on the control stream
+/// (>= 6; older peers never see either frame).
 pub const MIN_WIRE_VERSION: u16 = 2;
 
 /// Upper bound on one frame's body (kind + stream + payload). Prompts are
@@ -155,6 +163,13 @@ pub enum FrameKind {
     /// after the handshake. Informational: edges may log it, fleet
     /// registries read the same numbers out-of-band for placement.
     ReplicaInfo = 13,
+    /// Edge → cloud (wire v6, control stream): request a metrics
+    /// snapshot. Carries a client nonce echoed in the `StatsAck` so a
+    /// poller can match replies to requests on a shared connection.
+    Stats = 14,
+    /// Cloud → edge (wire v6, control stream): metrics snapshot reply —
+    /// serving counters + the four mergeable latency histograms.
+    StatsAck = 15,
 }
 
 impl FrameKind {
@@ -173,6 +188,8 @@ impl FrameKind {
             11 => FrameKind::Busy,
             12 => FrameKind::Redirect,
             13 => FrameKind::ReplicaInfo,
+            14 => FrameKind::Stats,
+            15 => FrameKind::StatsAck,
             _ => return None,
         })
     }
@@ -182,7 +199,11 @@ impl FrameKind {
     pub fn is_control(self) -> bool {
         matches!(
             self,
-            FrameKind::Hello | FrameKind::HelloAck | FrameKind::ReplicaInfo
+            FrameKind::Hello
+                | FrameKind::HelloAck
+                | FrameKind::ReplicaInfo
+                | FrameKind::Stats
+                | FrameKind::StatsAck
         )
     }
 
@@ -804,6 +825,98 @@ impl ReplicaInfoMsg {
     }
 }
 
+/// Edge → cloud (wire v6, control stream): metrics snapshot request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StatsMsg {
+    /// Client-chosen nonce, echoed in the reply so multiple outstanding
+    /// requests on one connection can be matched up.
+    pub nonce: u64,
+}
+
+impl StatsMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(10);
+        write_varint(&mut out, self.nonce);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<StatsMsg> {
+        let mut pos = 0usize;
+        let nonce = read_varint(buf, &mut pos)?;
+        if pos != buf.len() {
+            bail!("stats: trailing bytes");
+        }
+        Ok(StatsMsg { nonce })
+    }
+}
+
+/// Cloud → edge (wire v6, control stream): one replica's metrics
+/// snapshot — headline serving counters plus the four mergeable latency
+/// histograms ([`crate::obs::LatencySummary`]). Cheap on the wire: the
+/// histograms use a sparse bucket encoding, so an idle replica answers
+/// in tens of bytes. Purely informational — a fleet registry merges
+/// these across replicas for fleet-wide percentiles.
+#[derive(Debug, Clone)]
+pub struct StatsAckMsg {
+    /// Nonce echoed from the request.
+    pub nonce: u64,
+    /// Deployed target version sequence number.
+    pub version: u64,
+    /// Live sessions at snapshot time.
+    pub sessions_active: u32,
+    /// Sessions decoded to completion so far.
+    pub sessions_completed: u64,
+    /// Rounds verified so far.
+    pub rounds: u64,
+    /// Verification batches closed so far.
+    pub batches: u64,
+    /// Tokens committed so far.
+    pub tokens_committed: u64,
+    /// Latency histograms (round / queue / verify / rtt).
+    pub latency: crate::obs::LatencySummary,
+}
+
+impl StatsAckMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(96);
+        write_varint(&mut out, self.nonce);
+        write_varint(&mut out, self.version);
+        write_u32(&mut out, self.sessions_active);
+        write_varint(&mut out, self.sessions_completed);
+        write_varint(&mut out, self.rounds);
+        write_varint(&mut out, self.batches);
+        write_varint(&mut out, self.tokens_committed);
+        self.latency.encode_into(&mut out);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<StatsAckMsg> {
+        let mut pos = 0usize;
+        let nonce = read_varint(buf, &mut pos)?;
+        let version = read_varint(buf, &mut pos)?;
+        let sessions_active = read_u32(buf, &mut pos)?;
+        let sessions_completed = read_varint(buf, &mut pos)?;
+        let rounds = read_varint(buf, &mut pos)?;
+        let batches = read_varint(buf, &mut pos)?;
+        let tokens_committed = read_varint(buf, &mut pos)?;
+        let (latency, used) = crate::obs::LatencySummary::decode_from(&buf[pos..])?;
+        pos += used;
+        if pos != buf.len() {
+            bail!("stats-ack: trailing bytes");
+        }
+        Ok(StatsAckMsg {
+            nonce,
+            version,
+            sessions_active,
+            sessions_completed,
+            rounds,
+            batches,
+            tokens_committed,
+            latency,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -942,8 +1055,12 @@ mod tests {
         assert!(check_stream(FrameKind::Hello, 0, bound).is_ok());
         assert!(check_stream(FrameKind::HelloAck, 0, bound).is_ok());
         assert!(check_stream(FrameKind::ReplicaInfo, 0, bound).is_ok());
+        assert!(check_stream(FrameKind::Stats, 0, bound).is_ok());
+        assert!(check_stream(FrameKind::StatsAck, 0, bound).is_ok());
         assert!(check_stream(FrameKind::Hello, 1, bound).is_err());
         assert!(check_stream(FrameKind::ReplicaInfo, 3, bound).is_err());
+        assert!(check_stream(FrameKind::Stats, 3, bound).is_err());
+        assert!(check_stream(FrameKind::StatsAck, 7, bound).is_err());
         // session frames: never stream 0
         for kind in [
             FrameKind::Open,
@@ -1291,6 +1408,108 @@ mod tests {
                 prop::assert_prop(f.stream == CONTROL_STREAM, "control stream survived")?;
                 let back = ReplicaInfoMsg::decode(&f.payload).map_err(|e| e.to_string())?;
                 prop::assert_prop(back == msg, format!("replica-info mismatch at split {split}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn handshake_negotiates_v5_peer_below_stats_support() {
+        // a v5 peer (pre-stats) is accepted; the agreed version tells
+        // both sides that Stats/StatsAck never flow on the connection
+        let h = Hello {
+            wire_version: 5,
+            mode: VerifyMode::Greedy,
+            k_max: 8,
+        };
+        let ack = hello_response(&Hello::decode(&h.encode()).unwrap());
+        assert!(ack.accepted);
+        assert_eq!(ack.wire_version, 5);
+    }
+
+    #[test]
+    fn stats_messages_roundtrip_and_reject_garbage() {
+        let s = StatsMsg { nonce: 0xFEED_F00D };
+        assert_eq!(StatsMsg::decode(&s.encode()).unwrap(), s);
+        let mut long = s.encode();
+        long.push(0);
+        assert!(StatsMsg::decode(&long).is_err(), "trailing bytes");
+        assert_eq!(FrameKind::from_u8(14), Some(FrameKind::Stats));
+        assert_eq!(FrameKind::from_u8(15), Some(FrameKind::StatsAck));
+        assert!(FrameKind::Stats.is_control());
+        assert!(FrameKind::StatsAck.is_control());
+        assert!(!FrameKind::Stats.opens_stream());
+
+        let mut latency = crate::obs::LatencySummary::new();
+        for x in [1.5, 3.0, 120.0] {
+            latency.round_ms.record(x);
+        }
+        latency.verify_ms.record(4.0);
+        let ack = StatsAckMsg {
+            nonce: 0xFEED_F00D,
+            version: 3,
+            sessions_active: 7,
+            sessions_completed: 41,
+            rounds: 900,
+            batches: 310,
+            tokens_committed: 4200,
+            latency,
+        };
+        let back = StatsAckMsg::decode(&ack.encode()).unwrap();
+        assert_eq!(back.nonce, ack.nonce);
+        assert_eq!(back.version, 3);
+        assert_eq!(back.sessions_active, 7);
+        assert_eq!(back.sessions_completed, 41);
+        assert_eq!(back.rounds, 900);
+        assert_eq!(back.batches, 310);
+        assert_eq!(back.tokens_committed, 4200);
+        assert_eq!(back.latency.round_ms.count(), 3);
+        assert_eq!(back.latency.round_ms.p50(), ack.latency.round_ms.p50());
+        assert_eq!(back.latency.verify_ms.count(), 1);
+        assert!(back.latency.queue_ms.is_empty());
+        let mut long = ack.encode();
+        long.push(0);
+        assert!(StatsAckMsg::decode(&long).is_err(), "trailing bytes");
+        // truncations never panic
+        let bytes = ack.encode();
+        for cut in 0..bytes.len() {
+            assert!(StatsAckMsg::decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+
+        // framed + split at every byte, on the control stream
+        prop::check(20, |rng| {
+            let mut latency = crate::obs::LatencySummary::new();
+            for _ in 0..rng.next_range(40) {
+                latency.round_ms.record(10f64.powf(rng.next_f64() * 5.0 - 2.0));
+            }
+            let msg = StatsAckMsg {
+                nonce: rng.next_u64(),
+                version: rng.next_range(64),
+                sessions_active: rng.next_range(1000) as u32,
+                sessions_completed: rng.next_range(10_000),
+                rounds: rng.next_range(100_000),
+                batches: rng.next_range(50_000),
+                tokens_committed: rng.next_range(1_000_000),
+                latency,
+            };
+            let frame = Frame::control(FrameKind::StatsAck, msg.encode());
+            let bytes = frame.encode();
+            for split in 0..=bytes.len() {
+                let mut dec = FrameDecoder::new();
+                dec.push(&bytes[..split]);
+                dec.push(&bytes[split..]);
+                let f = dec
+                    .next_frame()
+                    .map_err(|e| e.to_string())?
+                    .ok_or("no frame after full input")?;
+                prop::assert_prop(f.stream == CONTROL_STREAM, "control stream survived")?;
+                let back = StatsAckMsg::decode(&f.payload).map_err(|e| e.to_string())?;
+                prop::assert_prop(
+                    back.nonce == msg.nonce
+                        && back.rounds == msg.rounds
+                        && back.latency.round_ms.count() == msg.latency.round_ms.count(),
+                    format!("stats-ack mismatch at split {split}"),
+                )?;
             }
             Ok(())
         });

@@ -37,7 +37,7 @@ use crate::coordinator::edge::DraftSource;
 use crate::metrics::ServingMetrics;
 use crate::protocol::frame::{
     check_stream, hello_response, BusyMsg, CancelMsg, Frame, FrameKind, Hello, OpenAck, OpenMsg,
-    RedirectMsg, ReplicaInfoMsg, ResumeAck, ResumeMsg, CONTROL_STREAM,
+    RedirectMsg, ReplicaInfoMsg, ResumeAck, ResumeMsg, StatsAckMsg, StatsMsg, CONTROL_STREAM,
 };
 use crate::protocol::DraftMsg;
 use crate::util::log::{log, Level};
@@ -481,13 +481,50 @@ async fn handle_frame<T: Transport>(
             }
             Ok(())
         }
+        // wire-level stats pull (wire v6): an edge or fleet registry
+        // asks for this replica's counter + latency-histogram snapshot.
+        // Answered off the critical path like the ReplicaInfo
+        // announcement — the verifier thread may be mid-batch — and
+        // read-only: a lost or reordered Stats exchange can never
+        // affect a committed token.
+        FrameKind::Stats => {
+            if negotiated < 6 {
+                bail!("Stats frame on a wire v{negotiated} connection");
+            }
+            check_stream(f.kind, f.stream, |_| false)?;
+            let req = StatsMsg::decode(&f.payload)?;
+            let v = verifier.clone();
+            let out = out_tx.clone();
+            tokio::spawn(async move {
+                let (m, info) = match (v.stats().await, v.info().await) {
+                    (Ok(m), Ok(i)) => (m, i),
+                    _ => return, // verifier shutting down: no reply owed
+                };
+                let ack = StatsAckMsg {
+                    nonce: req.nonce,
+                    version: info.version_seq,
+                    sessions_active: info.active_sessions.min(u32::MAX as usize) as u32,
+                    sessions_completed: m.sessions_completed as u64,
+                    rounds: m.rounds as u64,
+                    batches: m.batches as u64,
+                    tokens_committed: m.tokens_committed as u64,
+                    latency: m.latency,
+                };
+                let _ = out.send(OutEvent::Frame(Frame::control(
+                    FrameKind::StatsAck,
+                    ack.encode(),
+                )));
+            });
+            Ok(())
+        }
         FrameKind::HelloAck
         | FrameKind::OpenAck
         | FrameKind::ResumeAck
         | FrameKind::Verify
         | FrameKind::Busy
         | FrameKind::Redirect
-        | FrameKind::ReplicaInfo => {
+        | FrameKind::ReplicaInfo
+        | FrameKind::StatsAck => {
             bail!("unexpected {:?} frame from edge", f.kind)
         }
     }

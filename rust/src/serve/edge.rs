@@ -35,6 +35,7 @@ use crate::protocol::frame::{
     BusyMsg, CancelMsg, Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, RedirectMsg,
     ReplicaInfoMsg, ResumeAck, ResumeMsg, MIN_WIRE_VERSION, WIRE_VERSION,
 };
+use crate::obs::{LatencySummary, SpanKind, Trace};
 use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
 use crate::util::log::{log, Level};
 use crate::util::rng::SplitMix64;
@@ -108,6 +109,10 @@ pub struct EdgeSessionConfig {
     /// alpha_edge / T_base terms (the network terms are measured).
     pub device: &'static EdgeDevice,
     pub cloud: &'static CloudProfile,
+    /// Edge-side trace journal (`Draft`/`Uplink`/`Downlink`/`Reroot`
+    /// events per round). `None` (the default) keeps the decode loops
+    /// free of any timing or recording work.
+    pub trace: Option<Trace>,
 }
 
 impl Default for EdgeSessionConfig {
@@ -125,6 +130,7 @@ impl Default for EdgeSessionConfig {
             reroot_on_unknown_session: false,
             device: &JETSON_ORIN,
             cloud: &A800_70B,
+            trace: None,
         }
     }
 }
@@ -178,6 +184,9 @@ pub struct EdgeReport {
     /// prefix on a surviving replica
     /// (`EdgeSessionConfig::reroot_on_unknown_session`).
     pub reroots: usize,
+    /// Edge-observed latency histograms (`rtt_ms` populated; the
+    /// queue/verify components live cloud-side in `ServingMetrics`).
+    pub latency: LatencySummary,
     /// Full committed sequence (prompt + generated).
     pub committed: Vec<i32>,
 }
@@ -439,6 +448,7 @@ struct LinkStats {
     goodput_bps: Ema,
     rtt_summary: Summary,
     k_summary: Summary,
+    latency: LatencySummary,
 }
 
 impl LinkStats {
@@ -450,6 +460,7 @@ impl LinkStats {
             goodput_bps: Ema::new(10e6, 0.3),
             rtt_summary: Summary::new(),
             k_summary: Summary::new(),
+            latency: LatencySummary::new(),
         }
     }
 
@@ -476,6 +487,7 @@ impl LinkStats {
             .update(air_bytes as f64 * 8.0 / (rtt_now_ms / 1e3).max(1e-6));
         self.rtt_summary.add(rtt_now_ms);
         self.k_summary.add(k as f64);
+        self.latency.rtt_ms.record(rtt_now_ms);
     }
 
     /// Rounds to keep in flight this instant: the configured depth, or
@@ -635,6 +647,7 @@ where
         busy_retries: pipe_totals.busy_retries,
         redirects: pipe_totals.redirects,
         reroots: pipe_totals.reroots,
+        latency: stats.latency,
         committed: st.core.committed,
     })
 }
@@ -741,6 +754,9 @@ where
                     st.token = ack.resume_token;
                     st.core = SessionCore::new(ack.session, &committed, remaining);
                     pipe_totals.reroots += 1;
+                    if let Some(tr) = &cfg.trace {
+                        tr.record(ack.session, 0, SpanKind::Reroot, 0.0, committed.len() as u32, 0);
+                    }
                     log(
                         Level::Warn,
                         "edge",
@@ -795,6 +811,7 @@ where
     } else {
         while !st.core.done {
             let k = stats.select_k(cfg);
+            let t_draft = cfg.trace.as_ref().map(|_| Instant::now());
             let prop = draft.propose(&st.core.committed, k, cfg.temperature, cfg.top_p, rng)?;
             let round = st.core.rounds as u32;
             let msg = DraftMsg {
@@ -808,6 +825,13 @@ where
                 spec: vec![],
             };
             let air_up = msg.air_bytes();
+            // recorded per LAUNCH — Busy retransmits of the identical
+            // draft below add no Draft/Uplink events
+            if let Some(tr) = &cfg.trace {
+                let d_ms = t_draft.map(|t| t.elapsed().as_secs_f64() * 1e3).unwrap_or(0.0);
+                tr.record(st.id, round, SpanKind::Draft, d_ms, prop.tokens.len() as u32, 0);
+                tr.record(st.id, round, SpanKind::Uplink, 0.0, air_up as u32, 0);
+            }
             let mut sent = Instant::now();
             t.send_frame(Frame::on(stream, FrameKind::Draft, msg.encode()))
                 .await?;
@@ -850,6 +874,9 @@ where
             // measure the link this round actually saw
             let rtt_now = sent.elapsed().as_secs_f64() * 1e3;
             stats.observe_round(rtt_now, air_up + v.air_bytes(), prop.tokens.len());
+            if let Some(tr) = &cfg.trace {
+                tr.record(st.id, round, SpanKind::Downlink, rtt_now, v.air_bytes() as u32, 0);
+            }
 
             let tau = (v.tau as usize).min(prop.tokens.len());
             if !prop.tokens.is_empty() {
@@ -899,6 +926,7 @@ where
             pipe.depth = stats.select_depth(cfg);
             let Some(plan) = pipe.next_launch(&st.core) else { break };
             let k = stats.select_k(cfg);
+            let t_draft = cfg.trace.as_ref().map(|_| Instant::now());
             let prop = draft.propose(&plan.context, k, cfg.temperature, cfg.top_p, rng)?;
             if prop.tokens.is_empty() && plan.speculative {
                 break; // nothing to speculate with this round
@@ -930,6 +958,14 @@ where
                 spec: plan.spec.clone(),
             };
             let air_up = msg.air_bytes();
+            // per LAUNCH (a cancelled round redrafted later records
+            // again under the same round number; Busy retransmits of
+            // the retained frame record nothing)
+            if let Some(tr) = &cfg.trace {
+                let d_ms = t_draft.map(|t| t.elapsed().as_secs_f64() * 1e3).unwrap_or(0.0);
+                tr.record(st.id, plan.round, SpanKind::Draft, d_ms, prop.tokens.len() as u32, 0);
+                tr.record(st.id, plan.round, SpanKind::Uplink, 0.0, air_up as u32, 0);
+            }
             sent_at.push_back((plan.round, Instant::now()));
             let frame = Frame::on(stream, FrameKind::Draft, msg.encode());
             inflight_frames.insert(plan.round, frame.clone());
@@ -986,12 +1022,16 @@ where
             }
         };
         let res = pipe.resolve(&mut st.core, &v);
+        let mut rtt_now = 0.0;
         if let Some(at) = sent {
             // measured from ITS OWN send: a pipelined round's RTT
             // includes queueing behind the previous verify — that is the
             // latency the link actually exhibits to this round
-            let rtt_now = at.elapsed().as_secs_f64() * 1e3;
+            rtt_now = at.elapsed().as_secs_f64() * 1e3;
             stats.observe_round(rtt_now, res.air_up + v.air_bytes(), res.k.max(1));
+        }
+        if let Some(tr) = &cfg.trace {
+            tr.record(st.id, head, SpanKind::Downlink, rtt_now, v.air_bytes() as u32, 0);
         }
         if res.k > 0 {
             stats.policy.observe(res.tau, res.k);

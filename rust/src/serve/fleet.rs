@@ -64,6 +64,7 @@ use super::cloud::handle_conn;
 use super::fault::{FaultPlan, FaultTransport};
 use super::transport::{loopback_pair, BoxFuture, Reconnect, TcpTransport, Transport};
 use super::verifier::{ReplicaTelemetry, VerifierConfig, VerifierHandle};
+use crate::obs::LatencySummary;
 use crate::serve::backend::VerifyBackend;
 use crate::util::log::{log, Level};
 use anyhow::{anyhow, Result};
@@ -416,6 +417,33 @@ impl FleetRegistry {
         }
     }
 
+    /// Merged metrics snapshot across every reachable replica: headline
+    /// counters summed, latency histograms MERGED — the mergeable-
+    /// histogram property is what makes fleet-wide p99 a real quantile
+    /// over all rounds, not an average of per-replica percentiles.
+    /// Quarantined/unhealthy replicas are skipped; a live replica that
+    /// fails to answer is counted in `unreachable`.
+    pub async fn fleet_stats(&self) -> FleetStats {
+        let mut out = FleetStats::default();
+        for r in &self.replicas {
+            if r.quarantined || !r.healthy {
+                continue;
+            }
+            match r.verifier.stats().await {
+                Ok(m) => {
+                    out.replicas += 1;
+                    out.sessions_completed += m.sessions_completed;
+                    out.rounds += m.rounds;
+                    out.batches += m.batches;
+                    out.tokens_committed += m.tokens_committed;
+                    out.latency.merge(&m.latency);
+                }
+                Err(_) => out.unreachable += 1,
+            }
+        }
+        out
+    }
+
     /// A fleet-aware [`Reconnect`] for in-process replicas: dials
     /// `initial` through the shared directory, follows `Redirect`
     /// retargets (`set_target`), and on connect failure fails over
@@ -433,6 +461,21 @@ impl FleetRegistry {
             fault,
         })
     }
+}
+
+/// Fleet-wide metrics rollup ([`FleetRegistry::fleet_stats`]).
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    /// Replicas that answered.
+    pub replicas: usize,
+    /// Healthy replicas that failed to answer the snapshot request.
+    pub unreachable: usize,
+    pub sessions_completed: usize,
+    pub rounds: usize,
+    pub batches: usize,
+    pub tokens_committed: usize,
+    /// Merged latency histograms across the answering replicas.
+    pub latency: LatencySummary,
 }
 
 // ---------------------------------------------------------------------
@@ -692,6 +735,28 @@ mod tests {
             let seq_a = reg.replica("replica-a").unwrap().last.as_ref().unwrap().version_seq;
             let seq_b = reg.replica("replica-b").unwrap().last.as_ref().unwrap().version_seq;
             assert!(seq_a > seq_b, "canary must advance ahead of the rest");
+        });
+    }
+
+    #[test]
+    fn fleet_stats_merges_across_replicas() {
+        rt().block_on(async {
+            let mut reg = FleetRegistry::new();
+            for addr in ["replica-a", "replica-b"] {
+                reg.spawn_loopback_replica(addr, VerifierConfig::default(), || {
+                    Ok(Box::new(SyntheticTarget::new(5)) as Box<dyn VerifyBackend>)
+                })
+                .unwrap();
+            }
+            reg.refresh().await;
+            let s = reg.fleet_stats().await;
+            assert_eq!((s.replicas, s.unreachable), (2, 0));
+            assert_eq!(s.rounds, 0);
+            assert!(s.latency.is_empty(), "idle fleet records no latency");
+            // a quarantined replica is skipped entirely
+            reg.mark_dead("replica-b");
+            let s = reg.fleet_stats().await;
+            assert_eq!(s.replicas, 1);
         });
     }
 

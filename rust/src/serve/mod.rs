@@ -160,7 +160,8 @@ pub use edge::{
 };
 pub use fault::{loopback_fault_dial, FaultConfig, FaultOp, FaultPlan, FaultSide, FaultTransport};
 pub use fleet::{
-    tcp_fleet_dial, FleetDirectory, FleetRegistry, FleetReplica, PortableSession, SessionLedger,
+    tcp_fleet_dial, FleetDirectory, FleetRegistry, FleetReplica, FleetStats, PortableSession,
+    SessionLedger,
 };
 pub use mux::{EdgeMux, MuxStream};
 pub use pipeline::{

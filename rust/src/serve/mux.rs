@@ -33,7 +33,7 @@
 
 use super::edge::{handshake_with, EdgeSessionConfig};
 use super::transport::{BoxFuture, Reconnect, Transport};
-use crate::protocol::frame::{Frame, Hello, CONTROL_STREAM};
+use crate::protocol::frame::{Frame, FrameKind, Hello, StatsAckMsg, StatsMsg, CONTROL_STREAM};
 use crate::util::log::{log, Level};
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, VecDeque};
@@ -60,6 +60,12 @@ enum PumpCmd {
         seen: u64,
         reply: oneshot::Sender<Result<u64>>,
     },
+    /// Send a `Stats` request on the control stream (wire v6) and reply
+    /// with the decoded `StatsAck` when the cloud answers.
+    AwaitStats {
+        nonce: u64,
+        reply: oneshot::Sender<Result<StatsAckMsg>>,
+    },
 }
 
 enum InEvent {
@@ -75,6 +81,7 @@ pub struct EdgeMux {
     out_tx: mpsc::UnboundedSender<(u64, Frame)>,
     gen_shared: Arc<AtomicU64>,
     next_stream: u32,
+    next_stats_nonce: u64,
     /// Wire version negotiated on the first handshake. Sessions on this
     /// mux must keep `pipeline_depth == 1` when it is below 3 (no
     /// spec-tagged drafts, no `Cancel` on a v2 connection).
@@ -108,6 +115,7 @@ impl EdgeMux {
             waiting: Vec::new(),
             out_q: HashMap::new(),
             rr: Vec::new(),
+            stats_waiters: VecDeque::new(),
         };
         tokio::spawn(run_pump(pump));
         Ok(EdgeMux {
@@ -115,6 +123,7 @@ impl EdgeMux {
             out_tx,
             gen_shared,
             next_stream: 0,
+            next_stats_nonce: 0,
             wire_version,
         })
     }
@@ -122,6 +131,30 @@ impl EdgeMux {
     /// Wire version negotiated on this connection (see the field docs).
     pub fn wire_version(&self) -> u16 {
         self.wire_version
+    }
+
+    /// Pull the cloud replica's metrics/latency snapshot over the shared
+    /// connection (`Stats`/`StatsAck` control frames, wire v6). The
+    /// request rides the normal outbound queue; the pump answers from
+    /// the matching `StatsAck` by nonce, so concurrent fetches and
+    /// session traffic interleave safely.
+    pub async fn fetch_stats(&mut self) -> Result<StatsAckMsg> {
+        if self.wire_version < 6 {
+            bail!(
+                "peer wire version {} predates the Stats frame (needs >= 6)",
+                self.wire_version
+            );
+        }
+        self.next_stats_nonce += 1;
+        let (tx, rx) = oneshot::channel();
+        self.cmd_tx
+            .send(PumpCmd::AwaitStats {
+                nonce: self.next_stats_nonce,
+                reply: tx,
+            })
+            .map_err(|_| anyhow!("mux pump is gone"))?;
+        rx.await
+            .map_err(|_| anyhow!("mux pump dropped the stats request"))?
     }
 
     /// Allocate the next stream id and register it with the pump at the
@@ -297,6 +330,8 @@ struct Pump {
     /// order for the weighted round-robin drain.
     out_q: HashMap<u32, VecDeque<(u64, Frame)>>,
     rr: Vec<u32>,
+    /// Outstanding `Stats` requests awaiting their `StatsAck`, by nonce.
+    stats_waiters: VecDeque<(u64, oneshot::Sender<Result<StatsAckMsg>>)>,
 }
 
 impl Pump {
@@ -307,6 +342,11 @@ impl Pump {
             let gen = self.gen;
             for e in self.streams.values() {
                 let _ = e.tx.send(InEvent::Reset(gen));
+            }
+            // a stats reply in flight died with the connection; the
+            // caller retries on the fresh link if it still cares
+            for (_, reply) in self.stats_waiters.drain(..) {
+                let _ = reply.send(Err(anyhow!("link dropped before the stats reply")));
             }
         }
     }
@@ -412,7 +452,9 @@ impl Pump {
         Err(last_err.context(format!("redial failed {MAX_REDIALS} times")))
     }
 
-    fn handle_cmd(&mut self, cmd: PumpCmd) {
+    /// Returns `true` when the command staged an outbound frame the
+    /// caller should flush.
+    fn handle_cmd(&mut self, cmd: PumpCmd) -> bool {
         match cmd {
             PumpCmd::Register { stream, weight, tx } => {
                 self.streams.insert(stream, StreamEntry { tx, weight });
@@ -421,6 +463,14 @@ impl Pump {
                 self.streams.remove(&stream);
                 self.out_q.remove(&stream);
                 self.rr.retain(|&s| s != stream);
+            }
+            PumpCmd::AwaitStats { nonce, reply } => {
+                self.stats_waiters.push_back((nonce, reply));
+                self.enqueue_out(
+                    self.gen,
+                    Frame::control(FrameKind::Stats, StatsMsg { nonce }.encode()),
+                );
+                return true;
             }
             PumpCmd::AwaitReattach { seen, reply } => {
                 // `seen` is at most the current generation (it comes
@@ -437,10 +487,33 @@ impl Pump {
                 }
             }
         }
+        false
     }
 
     fn route(&mut self, f: Frame) {
         if f.stream == CONTROL_STREAM {
+            // the one control frame expected outside the handshake: the
+            // cloud's answer to a Stats request (wire v6)
+            if f.kind == FrameKind::StatsAck {
+                match StatsAckMsg::decode(&f.payload) {
+                    Ok(ack) => {
+                        match self.stats_waiters.iter().position(|(n, _)| *n == ack.nonce) {
+                            Some(i) => {
+                                let (_, reply) =
+                                    self.stats_waiters.remove(i).expect("index from position");
+                                let _ = reply.send(Ok(ack));
+                            }
+                            None => log(
+                                Level::Debug,
+                                "mux",
+                                &format!("stale StatsAck nonce {}", ack.nonce),
+                            ),
+                        }
+                    }
+                    Err(e) => log(Level::Debug, "mux", &format!("bad StatsAck: {e:#}")),
+                }
+                return;
+            }
             // duplicate HelloAck retransmits and the like: connection-
             // scoped, already handled at handshake time
             log(
@@ -521,7 +594,11 @@ async fn run_pump(mut p: Pump) {
                 p.flush_out().await;
                 return;
             }
-            Step::Cmd(Some(cmd)) => p.handle_cmd(cmd),
+            Step::Cmd(Some(cmd)) => {
+                if p.handle_cmd(cmd) {
+                    p.flush_out().await;
+                }
+            }
             Step::Out(Some((gen, frame))) => {
                 // stage everything immediately available, THEN drain in
                 // weighted round-robin order — this is where a burst
@@ -662,6 +739,63 @@ mod tests {
                 pos <= 2,
                 "premium frame starved behind the chatty burst (position {pos} in {got:?})"
             );
+        });
+    }
+
+    /// Wire v6 `Stats` control frames round-trip through the pump while
+    /// session traffic shares the connection.
+    #[test]
+    fn stats_fetch_round_trips_over_control_stream() {
+        rt().block_on(async {
+            let (edge_t, cloud_t) = loopback_pair();
+            tokio::spawn(async move {
+                let mut t = cloud_t;
+                let f = t.recv_frame().await.unwrap().unwrap();
+                assert_eq!(f.kind, FrameKind::Hello);
+                let ack = hello_response(&Hello::decode(&f.payload).unwrap());
+                t.send_frame(Frame::control(FrameKind::HelloAck, ack.encode()))
+                    .await
+                    .unwrap();
+                while let Ok(Some(f)) = t.recv_frame().await {
+                    if f.kind == FrameKind::Stats {
+                        let req = StatsMsg::decode(&f.payload).unwrap();
+                        let mut latency = crate::obs::LatencySummary::new();
+                        latency.verify_ms.record(2.5);
+                        let ack = StatsAckMsg {
+                            nonce: req.nonce,
+                            version: 3,
+                            sessions_active: 1,
+                            sessions_completed: 2,
+                            rounds: 10,
+                            batches: 4,
+                            tokens_committed: 55,
+                            latency,
+                        };
+                        t.send_frame(Frame::control(FrameKind::StatsAck, ack.encode()))
+                            .await
+                            .unwrap();
+                    } else {
+                        t.send_frame(f).await.unwrap();
+                    }
+                }
+            });
+            let mut mux = EdgeMux::connect(
+                Box::new(edge_t),
+                None,
+                &crate::serve::EdgeSessionConfig::default(),
+            )
+            .await
+            .unwrap();
+            // a session frame in flight does not confuse the matcher
+            let mut s = mux.open_stream();
+            s.send_frame(Frame::on(0, FrameKind::Draft, vec![7]))
+                .await
+                .unwrap();
+            let stats = mux.fetch_stats().await.unwrap();
+            assert_eq!(stats.rounds, 10);
+            assert_eq!(stats.tokens_committed, 55);
+            assert_eq!(stats.latency.verify_ms.count(), 1);
+            assert_eq!(s.recv_frame().await.unwrap().unwrap().payload, vec![7]);
         });
     }
 

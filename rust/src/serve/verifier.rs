@@ -45,10 +45,11 @@
 //!   retransmit) is answered from the cache instead of re-advancing the
 //!   sequence, and `Open` retransmits are deduplicated by client nonce.
 
-use super::backend::{BatchVerifyReq, VerifyBackend};
+use super::backend::{bucket_k, BatchVerifyReq, VerifyBackend};
 use super::fleet::{PortableSession, SessionLedger};
 use super::session::{BatchDecision, BatchWindow, SessionCore};
 use crate::metrics::ServingMetrics;
+use crate::obs::{SpanKind, Trace};
 use crate::protocol::{DraftMsg, VerifyMsg};
 use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, bail, Result};
@@ -96,6 +97,11 @@ pub struct VerifierConfig {
     /// kicks in, so pair a bound with the resume machinery (always on)
     /// rather than bare UDP-style transports.
     pub admission_queue: usize,
+    /// Optional trace journal (`flexspec::obs`): when set, the verifier
+    /// records the cloud half of every round's span chain — QueueWait,
+    /// BucketPlan, VerifyBatch, Commit — plus fleet Export/Import
+    /// events. `None` (the default) keeps the hot path untouched.
+    pub trace: Option<Trace>,
 }
 
 impl Default for VerifierConfig {
@@ -109,6 +115,7 @@ impl Default for VerifierConfig {
             capacity_floor: 10,
             resume_grace_ms: 10_000.0,
             admission_queue: 0,
+            trace: None,
         }
     }
 }
@@ -242,6 +249,9 @@ pub struct VerifierCore {
     /// Draft currently offered to the batch window, per session (at most
     /// one: the session's NEXT round; later rounds wait in `queued`).
     pending: HashMap<u32, DraftMsg>,
+    /// Admission time of each window-pending draft (queue-wait
+    /// latency); maintained in lockstep with `pending`.
+    arrived: HashMap<u32, f64>,
     /// Pipelined drafts for FUTURE rounds (wire v3), ascending round
     /// order. Basis-checked and promoted into the window by
     /// `promote_ready` once their turn comes; retracted by `cancel` or
@@ -318,6 +328,7 @@ impl VerifierCore {
             backend,
             sessions: HashMap::new(),
             pending: HashMap::new(),
+            arrived: HashMap::new(),
             queued: HashMap::new(),
             parked: HashMap::new(),
             last_verdict: HashMap::new(),
@@ -401,6 +412,40 @@ impl VerifierCore {
         self.attach_seq
     }
 
+    /// Remove a session's window-pending draft during teardown
+    /// (detach, resume-steal, evict, abort, export, open-reattach),
+    /// counting it as swallowed so the draft conservation audit stays
+    /// balanced: a received draft must end up in exactly one
+    /// disposition bucket.
+    fn drop_pending(&mut self, id: u32) {
+        self.arrived.remove(&id);
+        if self.pending.remove(&id).is_some() {
+            self.metrics.drafts_swallowed += 1;
+        }
+    }
+
+    /// Same, for the speculative queue: rounds parked behind a session
+    /// being torn down die with it.
+    fn drop_queued(&mut self, id: u32) {
+        if let Some(q) = self.queued.remove(&id) {
+            self.metrics.drafts_swallowed += q.len();
+        }
+    }
+
+    /// Drafts received but not yet disposed (window-pending + parked
+    /// speculative rounds) — the in-flight term of the draft
+    /// conservation invariant.
+    pub fn drafts_in_flight(&self) -> usize {
+        self.pending.len() + self.queued.values().map(Vec::len).sum::<usize>()
+    }
+
+    /// Conservation audit at shutdown: warn-log and `debug_assert` on
+    /// any counter imbalance (see `ServingMetrics::invariant_violations`).
+    pub fn audit(&self) {
+        self.metrics
+            .check_invariants(self.sessions.len(), self.drafts_in_flight());
+    }
+
     /// Open a new KV session. A nonzero `nonce` seen before reattaches
     /// the session it created (retransmitted `Open` whose ack was lost)
     /// instead of leaking a second one.
@@ -409,7 +454,7 @@ impl VerifierCore {
             if let Some(&id) = self.open_nonces.get(&nonce) {
                 if self.sessions.contains_key(&id) {
                     self.parked.remove(&id);
-                    self.pending.remove(&id);
+                    self.drop_pending(id);
                     let resume_token = *self
                         .token_of
                         .get(&id)
@@ -482,9 +527,15 @@ impl VerifierCore {
     ) -> Result<SubmitOutcome> {
         let can_defer = peer_wire >= 4;
         let id = msg.session;
+        // Conservation audit: every draft entering here is counted
+        // once, and every return path below lands it in exactly one
+        // disposition bucket (rounds / cancelled / orphaned / busy /
+        // replayed / swallowed / still in flight).
+        self.metrics.drafts_received += 1;
         if self.attachment_of.contains_key(&id)
             && self.attachment_of.get(&id) != Some(&attachment)
         {
+            self.metrics.drafts_swallowed += 1;
             return Ok(SubmitOutcome::Swallowed);
         }
         // already-verified round: replay the cached verdict (covers
@@ -496,6 +547,7 @@ impl VerifierCore {
                 return Ok(SubmitOutcome::Replay(v.clone()));
             }
             if msg.round < v.round {
+                self.metrics.drafts_swallowed += 1;
                 return Ok(SubmitOutcome::Swallowed);
             }
         }
@@ -510,9 +562,12 @@ impl VerifierCore {
                 self.metrics.draft_tokens_wasted += msg.tokens.len();
                 return Ok(SubmitOutcome::Swallowed);
             }
+            // error dispositions: the draft dies with its connection
+            self.metrics.drafts_swallowed += 1;
             bail!("no session {id}");
         }
         if self.parked.contains_key(&id) {
+            self.metrics.drafts_swallowed += 1;
             bail!("session {id} is parked (reconnect pending)");
         }
         // remember the live connection's wire version: deferred rounds
@@ -524,7 +579,9 @@ impl VerifierCore {
                     // duplicated while still queued: the round runs
                     // once, but the NEWEST requester takes over the
                     // reply slot (its predecessor may be a dead
-                    // connection's task)
+                    // connection's task); the duplicate copy itself is
+                    // swallowed
+                    self.metrics.drafts_swallowed += 1;
                     return Ok(SubmitOutcome::TakeOver);
                 }
                 // same round, DIFFERENT payload: a stale speculative
@@ -537,6 +594,7 @@ impl VerifierCore {
                 return Ok(SubmitOutcome::Swallowed);
             }
             if msg.round < p.round {
+                self.metrics.drafts_swallowed += 1;
                 return Ok(SubmitOutcome::Swallowed);
             }
             // pipelined draft for a future round (wire v3): park it
@@ -566,6 +624,9 @@ impl VerifierCore {
         if peer_wire >= 5 {
             if let Some(addr) = self.redirect_target(id) {
                 let resume_token = self.export_session(now_ms, id)?;
+                // the head draft is answered with the redirect, not a
+                // verdict: the edge redrafts it at the new replica
+                self.metrics.drafts_swallowed += 1;
                 return Ok(SubmitOutcome::Redirect { addr, resume_token });
             }
         }
@@ -586,6 +647,7 @@ impl VerifierCore {
             self.metrics.rounds_pipelined += 1;
         }
         self.metrics.bytes_up += msg.air_bytes();
+        self.arrived.insert(id, now_ms);
         self.pending.insert(id, msg);
         Ok(SubmitOutcome::Queued(self.window.offer(now_ms, id)))
     }
@@ -600,6 +662,7 @@ impl VerifierCore {
             // stays queued once, the newest waiter takes the reply slot
             if q[pos].tokens == msg.tokens && q[pos].spec == msg.spec {
                 q[pos] = msg;
+                self.metrics.drafts_swallowed += 1;
                 return Ok(SubmitOutcome::TakeOver);
             }
             // same round, DIFFERENT payload: a stale pre-cancel copy
@@ -619,6 +682,7 @@ impl VerifierCore {
             return Ok(SubmitOutcome::Swallowed);
         }
         if q.len() + in_window >= super::pipeline::MAX_PIPELINE_DEPTH {
+            self.metrics.drafts_swallowed += 1;
             bail!(
                 "session {id}: more than {} rounds in flight (protocol violation)",
                 super::pipeline::MAX_PIPELINE_DEPTH
@@ -690,13 +754,14 @@ impl VerifierCore {
             .sessions
             .remove(&id)
             .ok_or_else(|| anyhow!("no session {id} to export"))?;
+        let core_rounds = core.rounds;
         let token = self
             .token_of
             .remove(&id)
             .ok_or_else(|| anyhow!("session {id} has no resume token"))?;
         self.session_of_token.remove(&token);
-        self.pending.remove(&id);
-        self.queued.remove(&id);
+        self.drop_pending(id);
+        self.drop_queued(id);
         self.window.remove(id);
         self.parked.remove(&id);
         if let Some(n) = self.nonce_of.remove(&id) {
@@ -723,6 +788,11 @@ impl VerifierCore {
         );
         self.redirected_tokens.insert(token, (deadline, seq));
         self.metrics.sessions_redirected += 1;
+        if let Some(tr) = &self.cfg.trace {
+            let round = core_rounds as u32;
+            tr.record(id, round, SpanKind::Redirect, 0.0, 0, 0);
+            tr.record(id, round, SpanKind::Export, 0.0, 0, 0);
+        }
         Ok(token)
     }
 
@@ -756,6 +826,7 @@ impl VerifierCore {
             // close_window's FinishedResidue there is no clock here to
             // arm a local grace window with.
             self.metrics.sessions_imported += 1;
+            self.metrics.sessions_imported_done += 1;
             self.metrics.sessions_resumed += 1;
             let info = ResumeInfo {
                 session: 0,
@@ -806,6 +877,9 @@ impl VerifierCore {
         self.session_of_token.insert(token, id);
         self.metrics.sessions_imported += 1;
         self.metrics.sessions_resumed += 1;
+        if let Some(tr) = &self.cfg.trace {
+            tr.record(id, info.rounds as u32, SpanKind::Import, 0.0, 0, 0);
+        }
         Ok(ResumeInfo {
             attachment: self.next_attachment(id),
             ..info
@@ -854,6 +928,7 @@ impl VerifierCore {
             // duplicates of already-resolved rounds: quietly drop
             while q.first().is_some_and(|m| m.round < expected) {
                 let m = q.remove(0);
+                self.metrics.drafts_swallowed += 1;
                 dropped.push((id, m.round));
             }
             if !q.first().is_some_and(|m| m.round == expected) {
@@ -889,6 +964,7 @@ impl VerifierCore {
                     self.metrics.rounds_pipelined += 1;
                 }
                 self.metrics.bytes_up += msg.air_bytes();
+                self.arrived.insert(id, now_ms);
                 self.pending.insert(id, msg);
                 decisions.push(self.window.offer(now_ms, id));
                 if !q.is_empty() {
@@ -964,8 +1040,9 @@ impl VerifierCore {
         }
         // ---- plan --------------------------------------------------
         self.metrics.queue_depth.add(self.pending.len() as f64);
-        let mut jobs: Vec<(u32, DraftMsg)> = Vec::with_capacity(members.len());
+        let mut jobs: Vec<(u32, DraftMsg, f64)> = Vec::with_capacity(members.len());
         for id in members {
+            let arrived = self.arrived.remove(&id);
             // detached mid-window (link died) or torn down underneath
             // the window: nothing to verify — but never silently. The
             // orphan counter is the only trace these drafts leave.
@@ -977,12 +1054,29 @@ impl VerifierCore {
                 self.metrics.drafts_orphaned += 1;
                 continue;
             }
-            jobs.push((id, msg));
+            let wait_ms = (now_ms - arrived.unwrap_or(now_ms)).max(0.0);
+            jobs.push((id, msg, wait_ms));
         }
         if jobs.is_empty() {
             return Ok(Vec::new());
         }
-        self.metrics.note_batch(jobs.len());
+        let batch = jobs.len();
+        let total_draft: usize = jobs.iter().map(|(_, m, _)| m.tokens.len()).sum();
+        let max_k = jobs.iter().map(|(_, m, _)| m.tokens.len()).max().unwrap_or(0);
+        for (id, msg, wait_ms) in &jobs {
+            self.metrics.latency.queue_ms.record(*wait_ms);
+            if let Some(tr) = &self.cfg.trace {
+                tr.record(*id, msg.round, SpanKind::QueueWait, *wait_ms, 0, 0);
+                tr.record(
+                    *id,
+                    msg.round,
+                    SpanKind::BucketPlan,
+                    0.0,
+                    batch as u32,
+                    bucket_k(max_k) as u32,
+                );
+            }
+        }
 
         // ---- execute: ONE stacked call over the whole window --------
         // Compact wire: full draft distributions never cross the air —
@@ -992,19 +1086,21 @@ impl VerifierCore {
         // distribution reconstruction).
         let reqs: Vec<BatchVerifyReq> = jobs
             .iter()
-            .map(|(id, msg)| BatchVerifyReq {
+            .map(|(id, msg, _)| BatchVerifyReq {
                 id: *id,
                 committed: &self.sessions[id].committed,
                 draft: &msg.tokens,
                 mode: msg.mode,
             })
             .collect();
+        let t_exec = Instant::now();
         let verdicts = self.backend.verify_batch(
             &reqs,
             self.cfg.temperature,
             self.cfg.top_p,
             &mut self.rng,
         )?;
+        let verify_ms = t_exec.elapsed().as_secs_f64() * 1e3;
         drop(reqs);
         if verdicts.len() != jobs.len() {
             bail!(
@@ -1013,10 +1109,15 @@ impl VerifierCore {
                 jobs.len()
             );
         }
+        // counted only once the backend actually produced verdicts, so
+        // `batches` and the verify-latency histogram stay in lockstep
+        // (the conservation audit pins them equal)
+        self.metrics.note_batch(batch);
+        self.metrics.latency.verify_ms.record(verify_ms);
 
         // ---- apply ------------------------------------------------
         let mut out = Vec::with_capacity(jobs.len());
-        for ((id, msg), v) in jobs.into_iter().zip(verdicts) {
+        for ((id, msg, wait_ms), v) in jobs.into_iter().zip(verdicts) {
             let Some(core) = self.sessions.get_mut(&id) else {
                 continue; // unreachable: planned against live sessions
             };
@@ -1033,6 +1134,19 @@ impl VerifierCore {
             };
             self.metrics.note_round(msg.tokens.len(), v.tau);
             self.metrics.bytes_down += vmsg.air_bytes();
+            // cloud-observed round latency: admission → verdict ready
+            self.metrics.latency.round_ms.record(wait_ms + verify_ms);
+            if let Some(tr) = &self.cfg.trace {
+                tr.record(
+                    id,
+                    msg.round,
+                    SpanKind::VerifyBatch,
+                    verify_ms,
+                    batch as u32,
+                    total_draft as u32,
+                );
+                tr.record(id, msg.round, SpanKind::Commit, 0.0, v.tau as u32 + 1, 0);
+            }
             self.last_verdict.insert(id, vmsg.clone());
             if finished {
                 self.metrics.finish_session(core);
@@ -1078,8 +1192,8 @@ impl VerifierCore {
         // void — the resume handshake re-synchronizes instead (and the
         // id leaves the open window so a resubmit cannot double-count);
         // queued speculative rounds from the dead link die with it
-        self.pending.remove(&id);
-        self.queued.remove(&id);
+        self.drop_pending(id);
+        self.drop_queued(id);
         self.window.remove(id);
         let deadline = now_ms + self.cfg.resume_grace_ms;
         self.next_sweep_ms = self.next_sweep_ms.min(deadline);
@@ -1147,8 +1261,8 @@ impl VerifierCore {
         // speculative queue is void — the edge re-pipelines from the
         // committed prefix it just synced
         self.parked.remove(&id);
-        self.pending.remove(&id);
-        self.queued.remove(&id);
+        self.drop_pending(id);
+        self.drop_queued(id);
         self.window.remove(id);
         info.attachment = self.next_attachment(id);
         self.metrics.sessions_resumed += 1;
@@ -1171,8 +1285,8 @@ impl VerifierCore {
             .collect();
         for &id in &expired {
             self.parked.remove(&id);
-            self.pending.remove(&id);
-            self.queued.remove(&id);
+            self.drop_pending(id);
+            self.drop_queued(id);
             self.last_verdict.remove(&id);
             self.sessions.remove(&id);
             if let Some(tok) = self.token_of.remove(&id) {
@@ -1255,8 +1369,8 @@ impl VerifierCore {
     /// completion (and without a resume residue).
     pub fn abort_session(&mut self, id: u32) {
         if self.sessions.remove(&id).is_some() {
-            self.pending.remove(&id);
-            self.queued.remove(&id);
+            self.drop_pending(id);
+            self.drop_queued(id);
             self.window.remove(id);
             self.parked.remove(&id);
             self.last_verdict.remove(&id);
@@ -1778,6 +1892,9 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                 deadline = None;
                 let now = now_ms(&start);
                 flush(&mut core, &mut replies, &mut deadline, now);
+                // conservation audit: every counter ledger must balance
+                // once the final batch has flushed
+                core.audit();
                 let _ = reply.send(core.metrics.clone());
                 // Drain-until-quiet: commands queued behind the
                 // shutdown (a draft racing a replica teardown) must
@@ -1823,6 +1940,7 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
             Err(std_mpsc::RecvTimeoutError::Disconnected) => {
                 let now = now_ms(&start);
                 flush(&mut core, &mut replies, &mut deadline, now);
+                core.audit();
                 return;
             }
         }
@@ -2565,6 +2683,48 @@ mod tests {
         let out = c.close_window(1.5).unwrap();
         assert!(out.is_empty(), "orphaned member must produce no verdict");
         assert_eq!(c.metrics.drafts_orphaned, 2);
+    }
+
+    #[test]
+    fn conservation_audit_balances_after_mixed_lifecycle() {
+        let mut c = core(10.0, 8);
+        let trace = Trace::wall();
+        c.cfg.trace = Some(trace.clone());
+        let p = vec![1, 70, 71];
+        let o = c.open_session(&p, 8, 0).unwrap();
+        let id = o.session;
+        queued(c.submit(0.0, o.attachment, draft_for(id, 0, &p, 2), false).unwrap());
+        // duplicate while queued: the copy is swallowed, reply taken over
+        match c.submit(0.1, o.attachment, draft_for(id, 0, &p, 2), false).unwrap() {
+            SubmitOutcome::TakeOver => {}
+            other => panic!("expected TakeOver, got {other:?}"),
+        }
+        let out = c.close_window(0.5).unwrap();
+        assert_eq!(out.len(), 1);
+        // retransmit of the verified round: replayed from the cache
+        match c.submit(1.0, o.attachment, draft_for(id, 0, &p, 2), false).unwrap() {
+            SubmitOutcome::Replay(_) => {}
+            other => panic!("expected Replay, got {other:?}"),
+        }
+        assert_eq!(c.metrics.drafts_received, 3);
+        assert_eq!(c.metrics.drafts_swallowed, 1);
+        assert_eq!(c.metrics.verdicts_replayed, 1);
+        assert_eq!(c.metrics.rounds, 1);
+        assert_eq!(c.drafts_in_flight(), 0);
+        c.audit(); // must not panic: every ledger balances
+        // the cloud half of the round's span chain is in the journal
+        for kind in [
+            SpanKind::QueueWait,
+            SpanKind::BucketPlan,
+            SpanKind::VerifyBatch,
+            SpanKind::Commit,
+        ] {
+            assert_eq!(trace.count(id, kind), 1, "{kind:?}");
+        }
+        // latency books move in lockstep with the round/batch counters
+        assert_eq!(c.metrics.latency.verify_ms.count(), 1);
+        assert_eq!(c.metrics.latency.queue_ms.count(), 1);
+        assert_eq!(c.metrics.latency.round_ms.count(), 1);
     }
 
     #[test]

@@ -1,7 +1,17 @@
 //! Minimal leveled logger with a global verbosity switch.
+//!
+//! Lines carry an elapsed-since-process-start timestamp and pass
+//! through a per-module token bucket so a hot-path warn loop cannot
+//! flood stderr (errors are exempt). `ScopeTimer` reads time through
+//! [`crate::obs::Clock`], so a timer handed a simulator's virtual
+//! clock measures virtual elapsed time instead of wall time.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
+
+use crate::obs::clock::{Clock, WallClock};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -10,6 +20,19 @@ pub enum Level {
     Warn = 1,
     Info = 2,
     Debug = 3,
+}
+
+impl Level {
+    /// Parse a `--log-level` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
 }
 
 static VERBOSITY: AtomicU8 = AtomicU8::new(Level::Info as u8);
@@ -22,15 +45,76 @@ pub fn enabled(level: Level) -> bool {
     level as u8 <= VERBOSITY.load(Ordering::Relaxed)
 }
 
+/// Seconds since the first log call (process-lifetime origin).
+fn uptime_s() -> f64 {
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+// ---------------------------------------------------------------------
+// Per-module token-bucket rate limiting
+// ---------------------------------------------------------------------
+
+/// Burst capacity per module.
+const RATE_BURST: f64 = 200.0;
+/// Sustained refill, lines per second per module.
+const RATE_PER_S: f64 = 50.0;
+
+struct Bucket {
+    tokens: f64,
+    last_s: f64,
+    suppressed: u64,
+}
+
+fn buckets() -> &'static Mutex<HashMap<String, Bucket>> {
+    static BUCKETS: OnceLock<Mutex<HashMap<String, Bucket>>> = OnceLock::new();
+    BUCKETS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Take one token for `module` at time `now_s`; returns
+/// `Some(previously_suppressed)` if the line may print, `None` if it is
+/// rate-limited. Errors bypass this entirely.
+fn admit(module: &str, now_s: f64) -> Option<u64> {
+    let mut map = buckets().lock().unwrap();
+    let b = map.entry(module.to_string()).or_insert(Bucket {
+        tokens: RATE_BURST,
+        last_s: now_s,
+        suppressed: 0,
+    });
+    b.tokens = (b.tokens + (now_s - b.last_s).max(0.0) * RATE_PER_S).min(RATE_BURST);
+    b.last_s = now_s;
+    if b.tokens >= 1.0 {
+        b.tokens -= 1.0;
+        Some(std::mem::take(&mut b.suppressed))
+    } else {
+        b.suppressed += 1;
+        None
+    }
+}
+
 pub fn log(level: Level, module: &str, msg: &str) {
-    if enabled(level) {
-        let tag = match level {
-            Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
-            Level::Debug => "DEBUG",
-        };
-        eprintln!("[{tag} {module}] {msg}");
+    if !enabled(level) {
+        return;
+    }
+    let now_s = uptime_s();
+    let suppressed = if level == Level::Error {
+        0
+    } else {
+        match admit(module, now_s) {
+            Some(n) => n,
+            None => return,
+        }
+    };
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+    };
+    if suppressed > 0 {
+        eprintln!("[{now_s:9.3} {tag} {module}] ({suppressed} lines rate-limited) {msg}");
+    } else {
+        eprintln!("[{now_s:9.3} {tag} {module}] {msg}");
     }
 }
 
@@ -56,21 +140,32 @@ macro_rules! debug {
 }
 
 /// Scope timer for coarse profiling (prints at Debug level on drop).
+///
+/// Defaults to a wall clock; `with_clock` routes it through any
+/// [`Clock`], so sim-side code timing against a `VirtualClock` reports
+/// virtual milliseconds.
 pub struct ScopeTimer {
     name: String,
-    start: Instant,
+    clock: Arc<dyn Clock>,
+    start_ms: f64,
 }
 
 impl ScopeTimer {
     pub fn new(name: impl Into<String>) -> Self {
+        Self::with_clock(name, WallClock::shared())
+    }
+
+    pub fn with_clock(name: impl Into<String>, clock: Arc<dyn Clock>) -> Self {
+        let start_ms = clock.now_ms();
         Self {
             name: name.into(),
-            start: Instant::now(),
+            clock,
+            start_ms,
         }
     }
 
     pub fn elapsed_ms(&self) -> f64 {
-        self.start.elapsed().as_secs_f64() * 1e3
+        self.clock.now_ms() - self.start_ms
     }
 }
 
@@ -87,6 +182,7 @@ impl Drop for ScopeTimer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::clock::VirtualClock;
 
     #[test]
     fn level_gating() {
@@ -100,9 +196,47 @@ mod tests {
     }
 
     #[test]
+    fn level_parses() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
     fn timer_measures() {
         let t = ScopeTimer::new("test");
         std::thread::sleep(std::time::Duration::from_millis(5));
         assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn timer_follows_virtual_clock() {
+        let vc = VirtualClock::shared();
+        vc.advance_to(100.0);
+        let t = ScopeTimer::with_clock("virt", vc.clone());
+        vc.advance_to(130.0);
+        assert_eq!(t.elapsed_ms(), 30.0);
+        // wall time passing does not move a virtual timer
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert_eq!(t.elapsed_ms(), 30.0);
+    }
+
+    #[test]
+    fn rate_limiter_admits_then_suppresses() {
+        let now = 1000.0;
+        // a fresh module gets the full burst...
+        for i in 0..(RATE_BURST as u64) {
+            assert!(admit("test-rl-module", now).is_some(), "line {i}");
+        }
+        // ...then suppresses
+        assert!(admit("test-rl-module", now).is_none());
+        assert!(admit("test-rl-module", now).is_none());
+        // refill after time passes, and the suppressed count is handed
+        // back on the first admitted line
+        let later = now + 1.0;
+        assert_eq!(admit("test-rl-module", later), Some(2));
+        // other modules are unaffected
+        assert_eq!(admit("test-rl-other", now), Some(0));
     }
 }

@@ -14,6 +14,7 @@ use anyhow::Result;
 use flexspec::channel::{NetworkKind, NetworkProfile};
 use flexspec::coordinator::{serve_with, DraftSource, ServeConfig};
 use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::obs::{SpanKind, Trace};
 use flexspec::protocol::frame::{
     Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, ResumeAck, ResumeMsg, WIRE_VERSION,
 };
@@ -190,6 +191,58 @@ fn run_faulty_sessions(
     run_faulty_sessions_with(ecfg, fault_seed, side, disconnects, dup_p, delay_p)
 }
 
+/// Traced variant of the matrix runner: one shared journal covering
+/// both the edge and the verifier halves of every session.
+fn run_faulty_sessions_traced(
+    session_cfg: fn() -> EdgeSessionConfig,
+    fault_seed: u64,
+    side: FaultSide,
+    disconnects: usize,
+    dup_p: f64,
+    delay_p: f64,
+) -> (Vec<EdgeReport>, flexspec::metrics::ServingMetrics, Trace) {
+    let trace = Trace::wall();
+    let journal = trace.clone();
+    let (reports, metrics) = rt().block_on(async move {
+        let vcfg = VerifierConfig {
+            seed: SEED,
+            trace: Some(journal.clone()),
+            ..Default::default()
+        };
+        let verifier = VerifierHandle::spawn(vcfg, || {
+            Ok(Box::new(evolved_target()?) as Box<dyn VerifyBackend>)
+        })
+        .unwrap();
+        let mut tasks = Vec::new();
+        for (i, prompt) in prompts(USERS).into_iter().enumerate() {
+            let cfg = plan_for(
+                fault_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                side,
+                disconnects,
+                dup_p,
+                delay_p,
+            );
+            let chan = NetworkProfile::new(NetworkKind::FourG).channel(cfg.seed);
+            let plan = FaultPlan::shared(cfg, chan);
+            let dial = loopback_fault_dial(verifier.clone(), plan);
+            let mut ecfg = session_cfg();
+            ecfg.trace = Some(journal.clone());
+            tasks.push(tokio::spawn(async move {
+                let mut t = ResumableTransport::connect(dial, &ecfg).await?;
+                let mut draft = SyntheticDraft::new(SEED);
+                run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+            }));
+        }
+        let mut reports = Vec::new();
+        for t in tasks {
+            reports.push(t.await.unwrap().unwrap());
+        }
+        let metrics = verifier.shutdown().await.unwrap();
+        (reports, metrics)
+    });
+    (reports, metrics, trace)
+}
+
 fn assert_matches_reference(reports: &[EdgeReport], reference: &[Vec<i32>], label: &str) {
     assert_eq!(reports.len(), reference.len());
     for (i, (r, want)) in reports.iter().zip(reference).enumerate() {
@@ -307,6 +360,83 @@ fn pipelined_duplicates_delays_and_disconnects_converge() {
         assert_eq!(metrics.sessions_completed, USERS, "seed {seed}");
         assert_eq!(metrics.sessions_evicted, 0, "seed {seed}");
         assert_eq!(metrics.sessions_aborted, 0, "seed {seed}");
+    }
+}
+
+/// Observability satellite: the fault matrix re-run with tracing
+/// enabled. Three properties, per seed and mode:
+///
+/// (a) tracing is a pure observer — committed sequences stay identical
+///     to the fault-free simulator reference;
+/// (b) every committed round leaves a COMPLETE span chain (draft →
+///     uplink → queue_wait → bucket_plan → verify_batch → downlink →
+///     commit) in the journal, with the cloud-side spans recorded
+///     EXACTLY once per verified round — duplicated frames and resume
+///     replays are answered from caches and must not re-record;
+/// (c) the latency-histogram totals move in lockstep with the round
+///     and batch counters even under forced disconnects.
+#[test]
+fn fault_matrix_with_tracing_keeps_sequences_and_span_chains() {
+    let reference = reference_committed(USERS);
+    let rows: [(&str, fn() -> EdgeSessionConfig, FaultSide, usize, f64, f64); 3] = [
+        ("seq-disconnect", ecfg, FaultSide::Send, 2, 0.0, 0.0),
+        ("seq-kitchen-sink", ecfg, FaultSide::Any, 3, 0.15, 0.15),
+        ("pipe-disconnect", pipelined_ecfg, FaultSide::Recv, 2, 0.0, 0.0),
+    ];
+    for (label, session_cfg, side, disconnects, dup_p, delay_p) in rows {
+        for seed in FAULT_SEEDS {
+            let (reports, metrics, trace) =
+                run_faulty_sessions_traced(session_cfg, seed, side, disconnects, dup_p, delay_p);
+            // (a) sequences unchanged under tracing
+            assert_matches_reference(&reports, &reference, label);
+            // (b) complete span chain per committed round
+            for r in &reports {
+                let evs = trace.events(r.session);
+                for round in 0..r.rounds as u32 {
+                    for kind in [
+                        SpanKind::Draft,
+                        SpanKind::Uplink,
+                        SpanKind::QueueWait,
+                        SpanKind::BucketPlan,
+                        SpanKind::VerifyBatch,
+                        SpanKind::Downlink,
+                        SpanKind::Commit,
+                    ] {
+                        assert!(
+                            evs.iter().any(|e| e.round == round && e.kind == kind),
+                            "{label} seed {seed}: session {} round {round} missing {kind:?}",
+                            r.session
+                        );
+                    }
+                }
+                // cloud-side spans: exactly once per verified round (the
+                // edge-side ones may legitimately exceed `rounds` when a
+                // disconnect forces a redraft or a verdict replay)
+                for kind in [SpanKind::QueueWait, SpanKind::VerifyBatch, SpanKind::Commit] {
+                    assert_eq!(
+                        trace.count(r.session, kind),
+                        r.rounds,
+                        "{label} seed {seed}: {kind:?} count for session {}",
+                        r.session
+                    );
+                }
+                // every committed token is accounted for by a commit span
+                let committed: usize = evs
+                    .iter()
+                    .filter(|e| e.kind == SpanKind::Commit)
+                    .map(|e| e.a as usize)
+                    .sum();
+                assert_eq!(
+                    committed, r.new_tokens,
+                    "{label} seed {seed}: commit spans don't cover session {}'s tokens",
+                    r.session
+                );
+            }
+            // (c) histogram totals == round/batch counters
+            assert_eq!(metrics.latency.verify_ms.count(), metrics.batches as u64, "{label} {seed}");
+            assert_eq!(metrics.latency.queue_ms.count(), metrics.rounds as u64, "{label} {seed}");
+            assert_eq!(metrics.latency.round_ms.count(), metrics.rounds as u64, "{label} {seed}");
+        }
     }
 }
 

@@ -1,0 +1,221 @@
+//! Observability determinism tests (the tentpole acceptance for
+//! `flexspec::obs`).
+//!
+//! The determinism contract already pins committed token sequences
+//! sim == serve; this file extends it to the TRACE layer: with a
+//! journal installed on both the virtual-clock simulator and the
+//! loopback serving stack, every session must emit the SAME canonical
+//! event sequence (`Trace::sequence` — `(round, kind)` pairs,
+//! timestamps aside) in sequential, pipelined, and multiplexed modes,
+//! for seeds 3 / 17 / 42. A trace diff is therefore the first
+//! debugging tool for any future determinism violation.
+
+use anyhow::Result;
+use flexspec::channel::{NetworkKind, NetworkProfile};
+use flexspec::coordinator::{serve_with, DraftSource, ServeConfig, ServeReport};
+use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::obs::{SpanKind, Trace, VirtualClock};
+use flexspec::serve::{
+    serve_loopback, serve_loopback_mux, EdgeReport, EdgeSessionConfig, SyntheticDraft,
+    SyntheticTarget, VerifierConfig, VerifyBackend,
+};
+
+const USERS: usize = 4;
+const MAX_NEW: usize = 18;
+
+fn rt() -> tokio::runtime::Runtime {
+    tokio::runtime::Builder::new_multi_thread()
+        .worker_threads(2)
+        .enable_all()
+        .build()
+        .unwrap()
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![1i32];
+            for j in 0..5 {
+                p.push(100 + ((i * 11 + j * 3) % 100) as i32);
+            }
+            p
+        })
+        .collect()
+}
+
+/// Drifted target (acceptance genuinely varies round to round) so the
+/// event sequences are not trivially identical.
+fn evolved_target(seed: u64) -> Result<SyntheticTarget> {
+    let mut t = SyntheticTarget::new(seed).with_version("evolved", 0.3);
+    t.deploy("evolved")?;
+    Ok(t)
+}
+
+/// Virtual-clock simulation with a journal on a virtual clock.
+fn run_sim(seed: u64, depth: usize) -> (ServeReport, Trace) {
+    let trace = Trace::new(VirtualClock::shared());
+    let cfg = ServeConfig {
+        users: USERS,
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed,
+        pipeline_depth: depth,
+        trace: Some(trace.clone()),
+        ..Default::default()
+    };
+    let mut backend = evolved_target(seed).unwrap();
+    let mut make =
+        |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(seed))) };
+    let rep = serve_with(
+        &mut backend,
+        &mut make,
+        &prompts(USERS),
+        &JETSON_ORIN,
+        &A800_70B,
+        &NetworkProfile::new(NetworkKind::FourG),
+        &cfg,
+    )
+    .unwrap();
+    (rep, trace)
+}
+
+/// Loopback serving run with ONE shared journal covering both halves:
+/// the edge records draft/uplink/downlink, the verifier records
+/// queue/plan/verify/commit — all keyed by the cloud-assigned session
+/// id, so each session's ring carries its full span chain.
+fn run_serve(
+    seed: u64,
+    depth: usize,
+    mux: bool,
+) -> (Vec<EdgeReport>, flexspec::metrics::ServingMetrics, Trace) {
+    let trace = Trace::wall();
+    let vcfg = VerifierConfig {
+        window_ms: 40.0,
+        seed,
+        trace: Some(trace.clone()),
+        ..Default::default()
+    };
+    let ecfg = EdgeSessionConfig {
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed,
+        pipeline_depth: depth,
+        trace: Some(trace.clone()),
+        ..Default::default()
+    };
+    let edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>)> = prompts(USERS)
+        .into_iter()
+        .map(|p| {
+            (
+                Box::new(SyntheticDraft::new(seed)) as Box<dyn DraftSource + Send>,
+                p,
+            )
+        })
+        .collect();
+    let mk = move || Ok(Box::new(evolved_target(seed)?) as Box<dyn VerifyBackend>);
+    let (reports, metrics) = if mux {
+        rt().block_on(serve_loopback_mux(vcfg, mk, edges, ecfg)).unwrap()
+    } else {
+        rt().block_on(serve_loopback(vcfg, mk, edges, ecfg)).unwrap()
+    };
+    (reports, metrics, trace)
+}
+
+/// Tentpole acceptance: identical canonical event sequences, sim vs
+/// serve, across sequential / pipelined / multiplexed modes and seeds
+/// 3, 17, 42. Loopback reports come back in prompt order; the sim's
+/// session ids are 1-based prompt order, the serving stack's are
+/// whatever the cloud assigned (`reports[i].session`).
+#[test]
+fn sim_and_serve_emit_identical_event_sequences() {
+    for seed in [3u64, 17, 42] {
+        for depth in [1usize, 2] {
+            let (sim_rep, sim_tr) = run_sim(seed, depth);
+            assert_eq!(sim_rep.completed, USERS);
+            for mux in [false, true] {
+                let (reports, _, serve_tr) = run_serve(seed, depth, mux);
+                assert_eq!(reports.len(), USERS);
+                for (i, r) in reports.iter().enumerate() {
+                    let sim_seq = sim_tr.sequence(i as u32 + 1);
+                    let serve_seq = serve_tr.sequence(r.session);
+                    assert!(
+                        !serve_seq.is_empty(),
+                        "empty trace (seed {seed} depth {depth} mux {mux} prompt {i})"
+                    );
+                    assert_eq!(
+                        serve_seq, sim_seq,
+                        "event sequence diverged (seed {seed} depth {depth} mux {mux} prompt {i})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Every committed round must leave a COMPLETE span chain in the
+/// journal: draft → uplink → queue_wait → bucket_plan → verify_batch →
+/// downlink → commit, each exactly `rounds` times per session (the
+/// sequential, fault-free case — pipelined launches may exceed rounds
+/// by the cancelled-draft count, covered by the equality test above).
+#[test]
+fn every_round_leaves_a_complete_span_chain() {
+    let (reports, metrics, trace) = run_serve(17, 1, false);
+    for r in &reports {
+        for kind in [
+            SpanKind::Draft,
+            SpanKind::Uplink,
+            SpanKind::QueueWait,
+            SpanKind::BucketPlan,
+            SpanKind::VerifyBatch,
+            SpanKind::Downlink,
+            SpanKind::Commit,
+        ] {
+            assert_eq!(
+                trace.count(r.session, kind),
+                r.rounds,
+                "span chain broken for session {} at {kind:?}",
+                r.session
+            );
+        }
+        assert_eq!(trace.dropped(r.session), 0);
+    }
+    // histogram totals move in lockstep with the round/batch counters
+    assert_eq!(metrics.latency.verify_ms.count(), metrics.batches as u64);
+    assert_eq!(metrics.latency.queue_ms.count(), metrics.rounds as u64);
+    assert_eq!(metrics.latency.round_ms.count(), metrics.rounds as u64);
+    let edge_rtt: u64 = reports.iter().map(|r| r.latency.rtt_ms.count()).sum();
+    assert_eq!(edge_rtt, metrics.rounds as u64);
+
+    // the JSONL export round-trips through the JSON parser
+    let jsonl = trace.to_jsonl();
+    assert_eq!(jsonl.lines().count() as u64, trace.len());
+    for line in jsonl.lines().take(20) {
+        flexspec::util::json::Json::parse(line).unwrap();
+    }
+}
+
+/// The simulator mirrors the same latency bookkeeping under virtual
+/// time: one verify record per batch, one queue/round/rtt record per
+/// verified round — and the trace clock is the sim's virtual clock, so
+/// event timestamps are virtual ms bounded by the final wall time.
+#[test]
+fn simulator_latency_books_and_virtual_timestamps() {
+    let (rep, trace) = run_sim(3, 1);
+    assert_eq!(rep.latency.verify_ms.count(), rep.batches as u64);
+    assert_eq!(rep.latency.queue_ms.count(), rep.rounds as u64);
+    assert_eq!(rep.latency.round_ms.count(), rep.rounds as u64);
+    assert_eq!(rep.latency.rtt_ms.count(), rep.rounds as u64);
+    // rtt includes the downlink the queue wait does not, and both are
+    // bounded by the end-to-end round latency books
+    assert!(rep.latency.rtt_ms.p50() > 0.0);
+    for s in trace.sessions() {
+        for e in trace.events(s) {
+            assert!(
+                e.at_ms.is_finite() && e.at_ms >= 0.0 && e.at_ms <= rep.wall_ms,
+                "virtual timestamp {} outside run [0, {}]",
+                e.at_ms,
+                rep.wall_ms
+            );
+        }
+    }
+}
