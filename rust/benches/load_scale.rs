@@ -1,0 +1,152 @@
+//! `cargo bench --bench load_scale` — the fleet-scale trajectory run.
+//!
+//! Runs the named workload scenarios at bench scale and emits
+//! `BENCH_load.json` (schema `flexspec-load-bench-v1`, documented in
+//! `docs/LOADGEN.md`) when `FLEXSPEC_BENCH_LOAD_JSON=path` is set. CI
+//! uploads the report as an artifact next to `BENCH_serve.json`, so
+//! every PR extends the scalability trajectory.
+//!
+//! Hard assertions (machine-independent, so CI can gate on them
+//! without a perf baseline):
+//!
+//! * determinism — every scenario runs twice; the digests must match
+//!   byte for byte;
+//! * conservation — every report passes the `ServingMetrics` audit;
+//! * scale — the flash scenario must sustain >= 100k concurrently
+//!   live sessions (the ISSUE's acceptance floor).
+//!
+//! Wall-clock numbers (events/s, real seconds) are reported for the
+//! trajectory but never gated — they are machine-dependent.
+//!
+//! `FLEXSPEC_LOAD_MEGA=1` adds the million-session flash run (~10x the
+//! default bench cost); it is off in CI's per-PR loop by design.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+use flexspec::load::{run, LoadReport, Scenario};
+use flexspec::util::json::Json;
+
+const SEED: u64 = 3;
+/// The acceptance floor: the flash scenario must hold at least this
+/// many concurrently-live virtual sessions.
+const FLASH_LIVE_FLOOR: usize = 100_000;
+
+struct Cell {
+    scenario: Scenario,
+    sessions: usize,
+    report: LoadReport,
+    real_s: f64,
+    second_real_s: f64,
+}
+
+fn run_cell(scenario: Scenario, sessions: usize) -> Result<Cell> {
+    let cfg = scenario.config(sessions, SEED);
+    let t0 = Instant::now();
+    let report = run(&cfg);
+    let real_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let again = run(&cfg);
+    let second_real_s = t1.elapsed().as_secs_f64();
+    ensure!(
+        report.digest() == again.digest(),
+        "{}: determinism violated — {:016x} != {:016x}",
+        scenario.label(),
+        report.digest(),
+        again.digest()
+    );
+    let violations = report.metrics.invariant_violations(0, 0);
+    ensure!(
+        violations.is_empty(),
+        "{}: conservation audit failed: {violations:?}",
+        scenario.label()
+    );
+    println!(
+        "{:8} {:>9} sessions: {:>9} events in {:.2} s real ({:>9.0} ev/s), \
+         peak {:>7} live, ttft p99 {:>9.0} ms, digest {:016x}",
+        scenario.label(),
+        sessions,
+        report.events,
+        real_s,
+        report.events as f64 / real_s.max(1e-9),
+        report.peak_live,
+        report.ttft_ms.quantile(0.99),
+        report.digest()
+    );
+    Ok(Cell {
+        scenario,
+        sessions,
+        report,
+        real_s,
+        second_real_s,
+    })
+}
+
+fn cell_json(c: &Cell) -> Json {
+    Json::obj(vec![
+        ("scenario", Json::str(c.scenario.label())),
+        ("sessions", Json::Num(c.sessions as f64)),
+        ("real_s", Json::Num(c.real_s)),
+        ("real_s_second_run", Json::Num(c.second_real_s)),
+        (
+            "events_per_s",
+            Json::Num(c.report.events as f64 / c.real_s.max(1e-9)),
+        ),
+        ("report", c.report.to_json()),
+    ])
+}
+
+fn main() -> Result<()> {
+    let mega = std::env::var("FLEXSPEC_LOAD_MEGA").map_or(false, |v| v == "1");
+    println!("load_scale: virtual-clock fleet workloads (seed {SEED})\n");
+
+    let mut cells = vec![
+        run_cell(Scenario::Steady, 10_000)?,
+        run_cell(Scenario::Diurnal, 10_000)?,
+        run_cell(Scenario::Churn, 10_000)?,
+        run_cell(Scenario::Flash, 120_000)?,
+    ];
+    let flash = cells
+        .iter()
+        .find(|c| c.scenario == Scenario::Flash)
+        .expect("flash cell");
+    ensure!(
+        flash.report.peak_live >= FLASH_LIVE_FLOOR,
+        "flash scenario peaked at {} live sessions (< {FLASH_LIVE_FLOOR})",
+        flash.report.peak_live
+    );
+    println!(
+        "\nflash scale floor: {} live sessions >= {FLASH_LIVE_FLOOR} ok",
+        flash.report.peak_live
+    );
+
+    if mega {
+        let c = run_cell(Scenario::Flash, 1_000_000)?;
+        println!(
+            "mega: 1M-session flash peaked at {} live sessions",
+            c.report.peak_live
+        );
+        cells.push(c);
+    } else {
+        println!("(set FLEXSPEC_LOAD_MEGA=1 for the 1M-session run)");
+    }
+
+    if let Some(path) = std::env::var_os("FLEXSPEC_BENCH_LOAD_JSON") {
+        let j = Json::obj(vec![
+            ("schema", Json::str("flexspec-load-bench-v1")),
+            ("seed", Json::Num(SEED as f64)),
+            ("flash_live_floor", Json::Num(FLASH_LIVE_FLOOR as f64)),
+            ("mega", Json::Num(mega as u8 as f64)),
+            ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
+        ]);
+        let path = std::path::PathBuf::from(path);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(&path, j.to_string_pretty())?;
+        println!("wrote load bench report to {}", path.display());
+    }
+    Ok(())
+}

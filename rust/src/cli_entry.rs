@@ -6,6 +6,7 @@
 //!   serve [--users N] [--network 5g|4g|wifi] [--window MS] ...
 //!   serve-cloud [--bind H:P] [--backend synthetic|engine] [--sessions N]
 //!   serve-edge  [--addr H:P] [--sessions N] [--draft synthetic|pld]
+//!   loadgen <scenario> [--sessions N] [--replicas N] [--seed S] ...
 //!   info                         artifact + model zoo inventory
 //!   trace <5g|4g|wifi> <out.csv> [--samples N]
 
@@ -33,7 +34,7 @@ const VALUE_OPTS: &[&str] = &[
     "deploy-version", "deploy-after", "resume-grace", "fault-seed",
     "fault-disconnects", "pipeline-depth", "admission-queue", "tier-weights",
     "fleet", "canary", "drain-after", "fleet-addrs",
-    "metrics-json", "trace", "log-level",
+    "metrics-json", "trace", "log-level", "replicas", "network-mix",
 ];
 
 pub fn cli_main() -> Result<()> {
@@ -64,6 +65,7 @@ pub fn cli_main() -> Result<()> {
         Some("serve") => serve_cmd(&args),
         Some("serve-cloud") => serve_cloud_cmd(&args),
         Some("serve-edge") => serve_edge_cmd(&args),
+        Some("loadgen") => loadgen_cmd(&args),
         Some("trace") => trace_cmd(&args),
         _ => {
             println!(
@@ -85,8 +87,13 @@ pub fn cli_main() -> Result<()> {
                  \x20\x20\x20\x20 [--mux] [--tier-weights 3,1,...] [--fault-seed S] [--fault-disconnects N]\n\
                  \x20\x20\x20\x20 [--pipeline-depth D]  (1=sequential, >=2 pipelined, 0=auto policy)\n\
                  \x20\x20\x20\x20 [--fleet-addrs a:p,b:p,...]  (follow Redirects, fail over, re-root)\n\
+                 \x20 flexspec loadgen <steady|flash|diurnal|churn> [--sessions N] [--seed S]\n\
+                 \x20\x20\x20\x20 [--replicas N] [--window MS] [--max-batch N] [--k K]\n\
+                 \x20\x20\x20\x20 [--admission-queue N] [--network-mix 5g|4g|wifi|W5,W4,Ww]\n\
+                 \x20\x20\x20\x20 [--selfcheck]  (run twice, assert byte-identical digests)\n\
+                 \x20\x20\x20\x20 fleet-scale virtual-clock workload (docs/LOADGEN.md)\n\
                  \x20 flexspec trace <5g|4g|wifi> <out.csv> [--samples N]\n\
-                 Observability (serve / serve-cloud / serve-edge):\n\
+                 Observability (serve / serve-cloud / serve-edge / loadgen):\n\
                  \x20\x20\x20\x20 [--trace out.jsonl]       per-round span journal (JSONL)\n\
                  \x20\x20\x20\x20 [--metrics-json out.json] counters + latency histograms\n\
                  \x20\x20\x20\x20 [--log-level error|warn|info|debug]\n\
@@ -729,6 +736,74 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
     }
     if failures > 0 {
         bail!("{failures}/{n} edge sessions failed");
+    }
+    Ok(())
+}
+
+/// `loadgen <scenario>`: fleet-scale workload simulation on the
+/// virtual clock (ROADMAP item 2; model and presets in
+/// `docs/LOADGEN.md`). Scenario presets scale to `--sessions`; every
+/// run finishes with the `ServingMetrics` conservation audit, and
+/// `--selfcheck` re-runs the whole workload to assert the determinism
+/// contract (byte-identical digest). `--trace` journals the first
+/// [`crate::load::TRACE_SESSIONS`] sessions on the virtual clock.
+fn loadgen_cmd(args: &Args) -> Result<()> {
+    use crate::load::{ChannelMix, Scenario};
+    let Some(sc) = args.positional(1).and_then(Scenario::parse) else {
+        bail!("usage: flexspec loadgen <steady|flash|diurnal|churn> [--sessions N] [--seed S]");
+    };
+    let sessions = args.get_usize("sessions", 10_000);
+    let seed = args.get_u64("seed", 3);
+    let mut cfg = sc.config(sessions, seed);
+    cfg.replicas = args.get_usize("replicas", cfg.replicas).max(1);
+    cfg.window_ms = args.get_f64("window", cfg.window_ms);
+    cfg.max_batch = args.get_usize("max-batch", cfg.max_batch).max(1);
+    cfg.fixed_k = args.get_usize("k", cfg.fixed_k).clamp(1, 64);
+    cfg.admission_queue = args.get_usize("admission-queue", cfg.admission_queue);
+    if let Some(m) = args.get("network-mix") {
+        cfg.mix = ChannelMix::parse(&m)
+            .ok_or_else(|| anyhow::anyhow!("bad --network-mix '{m}' (5g|4g|wifi or W5,W4,Ww)"))?;
+    }
+    let trace = args.get("trace").map(|_| Trace::new(VirtualClock::shared()));
+    println!(
+        "loadgen/{}: {} sessions on {} replicas, mix {} (seed {seed})",
+        sc.label(),
+        cfg.sessions,
+        cfg.replicas,
+        cfg.mix.describe()
+    );
+    let t0 = std::time::Instant::now();
+    let rep = crate::load::run_with(&cfg, trace.as_ref());
+    let real_s = t0.elapsed().as_secs_f64();
+    rep.metrics.check_invariants(0, 0);
+    let violations = rep.metrics.invariant_violations(0, 0);
+    if !violations.is_empty() {
+        bail!("conservation audit failed:\n  {}", violations.join("\n  "));
+    }
+    println!("{}", rep.render());
+    println!(
+        "  real time        {:.2} s ({:.0} events/s)",
+        real_s,
+        rep.events as f64 / real_s.max(1e-9)
+    );
+    if args.flag("selfcheck") {
+        let again = crate::load::run(&cfg);
+        if again.digest() != rep.digest() {
+            bail!(
+                "determinism self-check FAILED: {:016x} != {:016x}",
+                again.digest(),
+                rep.digest()
+            );
+        }
+        println!("  selfcheck        ok (second run digest {:016x})", again.digest());
+    }
+    if let Some(path) = args.get("metrics-json") {
+        std::fs::write(&path, rep.to_json().to_string_pretty())?;
+        println!("wrote load report to {path}");
+    }
+    if let (Some(tr), Some(path)) = (&trace, args.get("trace")) {
+        tr.write_jsonl(&path)?;
+        println!("wrote {} trace events to {path}", tr.len());
     }
     Ok(())
 }

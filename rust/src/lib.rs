@@ -31,6 +31,7 @@ pub mod channel;
 pub mod coordinator;
 pub mod devices;
 pub mod energy;
+pub mod load;
 pub mod obs;
 pub mod protocol;
 pub mod runtime;

@@ -1,0 +1,219 @@
+//! Arrival processes and heavy-tailed size distributions for the
+//! fleet-scale load harness.
+//!
+//! Session arrivals follow a NON-homogeneous Poisson process: a base
+//! rate shaped by a diurnal sinusoid and an optional flash-crowd burst
+//! window, sampled by Lewis-Shedler thinning (draw candidate arrivals
+//! at the peak rate `lambda_max`, keep each with probability
+//! `lambda(t) / lambda_max`). Thinning keeps the stream deterministic
+//! for a fixed seed regardless of the rate shape — the rejection draws
+//! consume RNG state in a fixed order.
+//!
+//! Session sizes (token budgets, prompt lengths) are BOUNDED PARETO:
+//! `x = xm * u^(-1/alpha)` clamped to a cap. Real chat populations are
+//! heavy-tailed — most sessions are short, a fat tail runs for
+//! hundreds of tokens — and the tail is exactly what stresses parked-
+//! session bookkeeping and per-replica queues at scale.
+
+use crate::util::rng::SplitMix64;
+
+/// Shape of the arrival intensity `lambda(t)`.
+#[derive(Debug, Clone, Copy)]
+pub struct ArrivalShape {
+    /// Base arrival rate, sessions per second of virtual time.
+    pub base_per_s: f64,
+    /// Diurnal modulation amplitude in [0, 1): rate swings between
+    /// `base * (1 - amp)` and `base * (1 + amp)`.
+    pub diurnal_amp: f64,
+    /// Diurnal period, virtual ms (a compressed "day").
+    pub diurnal_period_ms: f64,
+    /// Flash-crowd multiplier applied inside the burst window
+    /// (1.0 = no flash).
+    pub flash_mult: f64,
+    /// Burst window start, virtual ms.
+    pub flash_start_ms: f64,
+    /// Burst window duration, virtual ms.
+    pub flash_dur_ms: f64,
+}
+
+impl ArrivalShape {
+    /// A flat Poisson stream at `base_per_s`.
+    pub fn steady(base_per_s: f64) -> ArrivalShape {
+        ArrivalShape {
+            base_per_s,
+            diurnal_amp: 0.0,
+            diurnal_period_ms: 86_400.0,
+            flash_mult: 1.0,
+            flash_start_ms: 0.0,
+            flash_dur_ms: 0.0,
+        }
+    }
+
+    /// Instantaneous intensity, sessions per second at virtual `t_ms`.
+    pub fn lambda(&self, t_ms: f64) -> f64 {
+        let wave = 1.0
+            + self.diurnal_amp
+                * (2.0 * std::f64::consts::PI * t_ms / self.diurnal_period_ms).sin();
+        let flash = if self.flash_mult > 1.0
+            && t_ms >= self.flash_start_ms
+            && t_ms < self.flash_start_ms + self.flash_dur_ms
+        {
+            self.flash_mult
+        } else {
+            1.0
+        };
+        (self.base_per_s * wave * flash).max(0.0)
+    }
+
+    /// Peak intensity the thinning sampler proposes at.
+    pub fn lambda_max(&self) -> f64 {
+        self.base_per_s * (1.0 + self.diurnal_amp) * self.flash_mult.max(1.0)
+    }
+}
+
+/// Deterministic non-homogeneous Poisson arrival stream (thinning).
+#[derive(Debug, Clone)]
+pub struct ArrivalProcess {
+    shape: ArrivalShape,
+    rng: SplitMix64,
+    t_ms: f64,
+}
+
+impl ArrivalProcess {
+    pub fn new(shape: ArrivalShape, rng: SplitMix64) -> ArrivalProcess {
+        ArrivalProcess {
+            shape,
+            rng,
+            t_ms: 0.0,
+        }
+    }
+
+    /// Virtual timestamp (ms) of the next arrival.
+    pub fn next_arrival_ms(&mut self) -> f64 {
+        let lam_max = self.shape.lambda_max().max(1e-9);
+        loop {
+            // candidate gap at the peak rate, in ms
+            self.t_ms += self.rng.next_exp(lam_max) * 1e3;
+            let keep = self.shape.lambda(self.t_ms) / lam_max;
+            if self.rng.chance(keep) {
+                return self.t_ms;
+            }
+        }
+    }
+}
+
+/// Bounded-Pareto sample: heavy-tailed in `[xm, cap]` with tail index
+/// `alpha` (smaller alpha = fatter tail).
+pub fn bounded_pareto(rng: &mut SplitMix64, xm: f64, alpha: f64, cap: f64) -> f64 {
+    let u = rng.next_f64().max(1e-12);
+    (xm * u.powf(-1.0 / alpha)).min(cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_stream_matches_rate() {
+        let mut p = ArrivalProcess::new(ArrivalShape::steady(100.0), SplitMix64::new(3));
+        let mut last = 0.0;
+        let n = 5000;
+        for _ in 0..n {
+            last = p.next_arrival_ms();
+        }
+        // 5000 arrivals at 100/s ≈ 50 s of virtual time (±20%)
+        let secs = last / 1e3;
+        assert!((40.0..60.0).contains(&secs), "{secs} s for {n} arrivals");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mk = || {
+            let shape = ArrivalShape {
+                diurnal_amp: 0.5,
+                flash_mult: 10.0,
+                flash_start_ms: 5_000.0,
+                flash_dur_ms: 2_000.0,
+                ..ArrivalShape::steady(50.0)
+            };
+            ArrivalProcess::new(shape, SplitMix64::new(17))
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..1000 {
+            assert_eq!(a.next_arrival_ms().to_bits(), b.next_arrival_ms().to_bits());
+        }
+    }
+
+    #[test]
+    fn flash_window_concentrates_arrivals() {
+        let shape = ArrivalShape {
+            flash_mult: 20.0,
+            flash_start_ms: 10_000.0,
+            flash_dur_ms: 5_000.0,
+            ..ArrivalShape::steady(10.0)
+        };
+        let mut p = ArrivalProcess::new(shape, SplitMix64::new(42));
+        let times: Vec<f64> = (0..2000).map(|_| p.next_arrival_ms()).collect();
+        let in_burst = times
+            .iter()
+            .filter(|&&t| (10_000.0..15_000.0).contains(&t))
+            .count();
+        // the 5 s burst at 200/s should hold ~1000 of the first 2000
+        assert!(
+            in_burst > 600,
+            "only {in_burst} of {} arrivals in the burst",
+            times.len()
+        );
+        // arrivals are strictly increasing (no simultaneous sessions)
+        assert!(times.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn diurnal_wave_modulates_rate() {
+        let shape = ArrivalShape {
+            diurnal_amp: 0.9,
+            diurnal_period_ms: 20_000.0,
+            ..ArrivalShape::steady(50.0)
+        };
+        // crest (sin = +1) vs trough (sin = -1)
+        assert!(shape.lambda(5_000.0) > 90.0);
+        assert!(shape.lambda(15_000.0) < 10.0);
+        let mut p = ArrivalProcess::new(shape, SplitMix64::new(7));
+        // count arrivals per half-period over a few cycles
+        let mut crest = 0usize;
+        let mut trough = 0usize;
+        loop {
+            let t = p.next_arrival_ms();
+            if t > 100_000.0 {
+                break;
+            }
+            if (t / 10_000.0) as u64 % 2 == 0 {
+                crest += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            crest > 3 * trough,
+            "crest {crest} vs trough {trough} arrivals"
+        );
+    }
+
+    #[test]
+    fn bounded_pareto_is_heavy_tailed_and_bounded() {
+        let mut r = SplitMix64::new(3);
+        let xs: Vec<f64> = (0..20_000)
+            .map(|_| bounded_pareto(&mut r, 8.0, 1.1, 256.0))
+            .collect();
+        assert!(xs.iter().all(|&x| (8.0..=256.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let median = {
+            let mut s = xs.clone();
+            s.sort_by(f64::total_cmp);
+            s[s.len() / 2]
+        };
+        // heavy tail: mean well above median, cap actually reached
+        assert!(mean > 1.5 * median, "mean {mean} median {median}");
+        assert!(xs.iter().any(|&x| x == 256.0), "cap never reached");
+    }
+}

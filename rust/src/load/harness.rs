@@ -1,0 +1,710 @@
+//! Event-driven fleet simulator on the virtual clock.
+//!
+//! One discrete-event loop drives 10^4–10^6 concurrent sessions against
+//! a fleet of replicas without spawning a task per session: the heap
+//! holds one in-flight event per live session plus one or two per
+//! replica, so memory is O(sessions) with a ~100-byte constant and the
+//! wall cost is O(events · log heap).
+//!
+//! The model reuses the serving stack's own building blocks rather than
+//! re-deriving them: channel dynamics from [`sample_channel`] (the
+//! `StochasticChannel` math over shared [`NetworkProfile`]s),
+//! verification cost from the eq. (9) constants of
+//! [`CloudProfile::verify_ms`](crate::devices::CloudProfile::verify_ms)
+//! with K bucketing via [`bucket_k`], Busy deferral
+//! pacing from the edge's exported [`busy_backoff_ms`] schedule, and
+//! air-byte accounting from `protocol`. Results flow through the same
+//! [`ServingMetrics`] the live verifier keeps, so its conservation
+//! audit (`check_invariants`) applies verbatim to a million simulated
+//! sessions.
+//!
+//! Replica model: each session is pinned to a replica (its KV state
+//! lives there). Drafts land in a per-replica FIFO backlog; an
+//! admission window closes `window_ms` after the first draft arrives
+//! (or after the previous batch retires, under saturation) and takes up
+//! to `max_batch` drafts into one verification batch. Under overload
+//! the backlog — and the queue-wait quantiles — grow without bound
+//! unless `admission_queue` bounds it, in which case excess drafts get
+//! the wire's `Busy` deferral and back off on the edge's schedule.
+//!
+//! Determinism contract: a run is a pure function of [`LoadConfig`]
+//! (including the seed). Every random draw flows from `SplitMix64`
+//! streams forked per subsystem/session in a fixed order, and the event
+//! heap breaks time ties by sequence number, so reports — including
+//! [`LoadReport::digest`] — are byte-identical across runs and across
+//! machines.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::channel::{ChannelState, NetworkProfile};
+use crate::devices::{A800_70B, JETSON_ORIN};
+use crate::metrics::ServingMetrics;
+use crate::obs::{LogHistogram, SpanKind, Trace};
+use crate::protocol::{bits_per_token, prompt_air_bytes, WireFormat, O_HEADER_BYTES};
+use crate::serve::{bucket_k, busy_backoff_ms, MAX_BUSY_RETRIES};
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+use super::arrival::{bounded_pareto, ArrivalProcess};
+use super::population::{sample_channel, LoadConfig};
+
+/// Sessions whose spans are recorded when a [`Trace`] is attached —
+/// tracing every session at fleet scale would swamp the journal.
+pub const TRACE_SESSIONS: u32 = 64;
+
+/// Safety valve against scheduling bugs: no workload needs more than
+/// this many events per admitted session (a full Busy-retry storm on
+/// every round stays well under it).
+const MAX_EVENTS_PER_SESSION: u64 = 4000;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    /// Admit the next session from the arrival process.
+    Admit,
+    /// A draft (uplink done) reaches its replica's admission queue.
+    DraftArrive { sid: u32 },
+    /// A replica's admission window closes: form a batch.
+    WindowClose { rep: u16 },
+    /// A replica's in-flight batch retires.
+    ReplicaFree { rep: u16 },
+    /// A verdict (downlink done) reaches the edge.
+    Verdict { sid: u32, tau: u8, eos: bool },
+    /// Busy-deferral backoff expired: resend the draft.
+    Retry { sid: u32 },
+}
+
+#[derive(Debug)]
+struct Sched {
+    at_ms: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Sched {
+    fn eq(&self, other: &Sched) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Sched {}
+impl PartialOrd for Sched {
+    fn partial_cmp(&self, other: &Sched) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Sched {
+    fn cmp(&self, other: &Sched) -> std::cmp::Ordering {
+        // ascending time; sequence number breaks ties deterministically
+        self.at_ms
+            .total_cmp(&other.at_ms)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Compact per-session state (~88 bytes): at 10^6 sessions the
+/// population fits in well under 100 MB.
+struct Sess {
+    rng: SplitMix64,
+    arrived_ms: f64,
+    /// When drafting of the in-flight round started (edge-side).
+    send_ms: f64,
+    /// When the in-flight draft entered the replica backlog.
+    enqueue_ms: f64,
+    first_token_ms: f64,
+    log_shadow: f32,
+    accept: f32,
+    budget: u16,
+    committed: u16,
+    prompt_len: u16,
+    rounds: u16,
+    replica: u16,
+    class: u8,
+    busy_attempts: u8,
+    fading: bool,
+    done: bool,
+}
+
+#[derive(Default)]
+struct Replica {
+    backlog: VecDeque<u32>,
+    busy: bool,
+    close_armed: bool,
+}
+
+/// Everything one load run reports.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub scenario: &'static str,
+    pub sessions: usize,
+    pub replicas: usize,
+    pub seed: u64,
+    /// The serving stack's own counter vocabulary; passes
+    /// `check_invariants(0, 0)` after a full drain.
+    pub metrics: ServingMetrics,
+    /// Time-to-first-token per session (virtual ms).
+    pub ttft_ms: LogHistogram,
+    /// End-to-end ms per committed token per completed session.
+    pub ms_per_token: LogHistogram,
+    /// Maximum concurrently-live sessions observed.
+    pub peak_live: usize,
+    /// Deepest per-replica backlog observed.
+    pub peak_backlog: usize,
+    /// Cross-replica session handoffs performed.
+    pub handoffs: usize,
+    /// Discrete events processed.
+    pub events: u64,
+    /// Virtual timestamp of the last event (run length).
+    pub virtual_ms: f64,
+    /// Pure transmission airtime (up + down, ex propagation), ms.
+    pub air_ms: f64,
+}
+
+impl LoadReport {
+    /// Airtime spent per committed token, ms — the edge-energy proxy
+    /// the paper's eq. (8) accounting cares about.
+    pub fn air_ms_per_token(&self) -> f64 {
+        self.air_ms / self.metrics.tokens_committed.max(1) as f64
+    }
+
+    /// Order-sensitive FNV-1a fold over every counter and the latency
+    /// quantiles. Two runs of the same config are byte-identical iff
+    /// their digests match — the determinism pin CI re-checks each PR.
+    pub fn digest(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        let m = &self.metrics;
+        for c in [
+            m.sessions_opened,
+            m.sessions_completed,
+            m.sessions_aborted,
+            m.sessions_redirected,
+            m.sessions_imported,
+            m.drafts_received,
+            m.drafts_busy,
+            m.rounds,
+            m.batches,
+            m.tokens_committed,
+            m.drafted,
+            m.accepted,
+            m.bytes_up,
+            m.bytes_down,
+            self.peak_live,
+            self.peak_backlog,
+            self.handoffs,
+        ] {
+            mix(c as u64);
+        }
+        mix(self.events);
+        mix(self.virtual_ms.to_bits());
+        mix(self.air_ms.to_bits());
+        for q in [
+            self.ttft_ms.quantile(0.5),
+            self.ttft_ms.quantile(0.99),
+            self.ttft_ms.quantile(0.999),
+            self.ms_per_token.quantile(0.5),
+            self.ms_per_token.quantile(0.99),
+            m.latency.queue_ms.quantile(0.99),
+            m.latency.round_ms.quantile(0.99),
+        ] {
+            mix(q.to_bits());
+        }
+        h
+    }
+
+    pub fn to_json(&self) -> Json {
+        // empty histograms quantile to NaN; encode those as null
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let q = |hist: &LogHistogram| {
+            Json::obj(vec![
+                ("p50", num(hist.quantile(0.5))),
+                ("p90", num(hist.quantile(0.9))),
+                ("p99", num(hist.quantile(0.99))),
+                ("p999", num(hist.quantile(0.999))),
+                ("mean", num(hist.mean())),
+                ("count", Json::Num(hist.count() as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.into())),
+            ("sessions", Json::Num(self.sessions as f64)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("peak_live", Json::Num(self.peak_live as f64)),
+            ("peak_backlog", Json::Num(self.peak_backlog as f64)),
+            ("handoffs", Json::Num(self.handoffs as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("virtual_ms", Json::Num(self.virtual_ms)),
+            ("air_ms_per_token", Json::Num(self.air_ms_per_token())),
+            ("ttft_ms", q(&self.ttft_ms)),
+            ("ms_per_token", q(&self.ms_per_token)),
+            ("digest", Json::Str(format!("{:016x}", self.digest()))),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "load/{} — {} sessions on {} replicas (seed {})\n\
+             \x20 peak            {} live sessions, backlog depth {}, {} handoffs\n\
+             \x20 run             {} events over {:.1} s virtual\n\
+             \x20 ttft            p50 {:.0} ms, p99 {:.0} ms, p999 {:.0} ms\n\
+             \x20 ms/token        p50 {:.1}, p99 {:.1}\n\
+             \x20 airtime         {:.2} ms per committed token\n\
+             \x20 digest          {:016x}",
+            self.scenario,
+            self.sessions,
+            self.replicas,
+            self.seed,
+            self.peak_live,
+            self.peak_backlog,
+            self.handoffs,
+            self.events,
+            self.virtual_ms / 1e3,
+            self.ttft_ms.quantile(0.5),
+            self.ttft_ms.quantile(0.99),
+            self.ttft_ms.quantile(0.999),
+            self.ms_per_token.quantile(0.5),
+            self.ms_per_token.quantile(0.99),
+            self.air_ms_per_token(),
+            self.digest(),
+        );
+        s.push('\n');
+        s.push_str(&self.metrics.render("  serving counters"));
+        s
+    }
+}
+
+fn push(heap: &mut BinaryHeap<Reverse<Sched>>, seq: &mut u64, at_ms: f64, ev: Ev) {
+    heap.push(Reverse(Sched {
+        at_ms,
+        seq: *seq,
+        ev,
+    }));
+    *seq += 1;
+}
+
+fn chan(profiles: &[NetworkProfile; 3], s: &mut Sess) -> ChannelState {
+    sample_channel(
+        &profiles[s.class as usize],
+        &mut s.log_shadow,
+        &mut s.fading,
+        &mut s.rng,
+    )
+}
+
+/// Run a workload to completion. See [`run_with`] for tracing.
+pub fn run(cfg: &LoadConfig) -> LoadReport {
+    run_with(cfg, None)
+}
+
+/// Run a workload, recording spans for the first [`TRACE_SESSIONS`]
+/// sessions into `trace` (whose clock is advanced to virtual time).
+pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
+    assert!(cfg.sessions > 0 && cfg.replicas > 0 && cfg.max_batch > 0);
+    assert!(cfg.replicas <= u16::MAX as usize && cfg.sessions <= u32::MAX as usize);
+    let mut master = SplitMix64::new(cfg.seed);
+    let mut arrivals = ArrivalProcess::new(cfg.shape, master.fork(0xA5));
+    let profiles: [NetworkProfile; 3] = {
+        let kinds = crate::channel::NetworkKind::all();
+        [
+            NetworkProfile::new(kinds[0]),
+            NetworkProfile::new(kinds[1]),
+            NetworkProfile::new(kinds[2]),
+        ]
+    };
+    let draft_ms =
+        JETSON_ORIN.round_overhead_ms + cfg.fixed_k as f64 * JETSON_ORIN.draft_ms_per_token;
+    let draft_bytes = O_HEADER_BYTES
+        + ((cfg.fixed_k as f64 * bits_per_token(WireFormat::Compact)) / 8.0).ceil() as usize;
+    let verdict_bytes = O_HEADER_BYTES + 12;
+    let per_req_verify_ms = A800_70B.delta_per_token_ms * (bucket_k(cfg.fixed_k) + 1) as f64;
+
+    let mut sessions: Vec<Sess> = Vec::with_capacity(cfg.sessions);
+    let mut replicas: Vec<Replica> = (0..cfg.replicas).map(|_| Replica::default()).collect();
+    let mut metrics = ServingMetrics::default();
+    let mut ttft_ms = LogHistogram::default();
+    let mut ms_per_token = LogHistogram::default();
+    let mut heap: BinaryHeap<Reverse<Sched>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let (mut live, mut peak_live, mut peak_backlog, mut handoffs) = (0usize, 0usize, 0usize, 0usize);
+    let mut air_ms = 0.0f64;
+    let mut events = 0u64;
+    let mut now = 0.0f64;
+    let max_events = cfg.sessions as u64 * MAX_EVENTS_PER_SESSION + 10_000;
+
+    let traced = |sid: u32| sid < TRACE_SESSIONS;
+    let span = |trace: Option<&Trace>, t: f64, sid: u32, round: u32, kind: SpanKind, dur: f64, a: u32, b: u32| {
+        if let Some(tr) = trace {
+            if traced(sid) {
+                tr.clock().advance_to(t);
+                tr.record(sid, round, kind, dur, a, b);
+            }
+        }
+    };
+
+    push(&mut heap, &mut seq, arrivals.next_arrival_ms(), Ev::Admit);
+
+    while let Some(Reverse(Sched { at_ms: t, ev, .. })) = heap.pop() {
+        now = t;
+        events += 1;
+        assert!(events <= max_events, "load harness event storm: {ev:?} at {t}");
+        match ev {
+            Ev::Admit => {
+                let sid = sessions.len() as u32;
+                let mut srng = master.fork(0x5E55 + sid as u64);
+                let class = cfg.mix.pick(&mut srng);
+                let budget = bounded_pareto(&mut srng, cfg.budget_xm, cfg.budget_alpha, cfg.budget_cap)
+                    .round()
+                    .max(1.0) as u16;
+                let prompt_len =
+                    bounded_pareto(&mut srng, cfg.prompt_xm, cfg.prompt_alpha, cfg.prompt_cap)
+                        .round() as u16;
+                let accept = cfg.draw_accept(&mut srng) as f32;
+                let replica = srng.next_range(cfg.replicas as u64) as u16;
+                let mut s = Sess {
+                    rng: srng,
+                    arrived_ms: t,
+                    send_ms: t,
+                    enqueue_ms: t,
+                    first_token_ms: f64::NAN,
+                    log_shadow: 0.0,
+                    accept,
+                    budget,
+                    committed: 0,
+                    prompt_len,
+                    rounds: 0,
+                    replica,
+                    class,
+                    busy_attempts: 0,
+                    fading: false,
+                    done: false,
+                };
+                metrics.sessions_opened += 1;
+                live += 1;
+                peak_live = peak_live.max(live);
+                // first uplink carries the prompt alongside round 0's draft
+                let ch = chan(&profiles, &mut s);
+                let bytes = prompt_air_bytes(prompt_len as usize) + draft_bytes;
+                let up = ch.up_ms(bytes);
+                metrics.bytes_up += bytes;
+                air_ms += up;
+                span(trace, t, sid, 0, SpanKind::Draft, draft_ms, cfg.fixed_k as u32, 0);
+                span(trace, t, sid, 0, SpanKind::Uplink, up + ch.prop_ms, bytes as u32, 0);
+                push(&mut heap, &mut seq, t + draft_ms + up + ch.prop_ms, Ev::DraftArrive { sid });
+                sessions.push(s);
+                if sessions.len() < cfg.sessions {
+                    push(&mut heap, &mut seq, arrivals.next_arrival_ms(), Ev::Admit);
+                }
+            }
+            Ev::DraftArrive { sid } => {
+                let s = &mut sessions[sid as usize];
+                debug_assert!(!s.done);
+                metrics.drafts_received += 1;
+                let r = &mut replicas[s.replica as usize];
+                if cfg.admission_queue > 0 && r.backlog.len() >= cfg.admission_queue {
+                    metrics.drafts_busy += 1;
+                    s.busy_attempts += 1;
+                    if s.busy_attempts as usize > MAX_BUSY_RETRIES {
+                        // the edge gives up after the retry budget —
+                        // same outcome as run_edge_session erroring out
+                        s.done = true;
+                        live -= 1;
+                        metrics.sessions_aborted += 1;
+                    } else {
+                        // the verifier suggests waiting out the current
+                        // window; the edge escalates on ITS schedule
+                        let delay = busy_backoff_ms(
+                            cfg.window_ms.ceil() as u32,
+                            s.busy_attempts as usize - 1,
+                        ) as f64;
+                        push(&mut heap, &mut seq, t + delay, Ev::Retry { sid });
+                    }
+                } else {
+                    s.busy_attempts = 0;
+                    s.enqueue_ms = t;
+                    r.backlog.push_back(sid);
+                    peak_backlog = peak_backlog.max(r.backlog.len());
+                    if !r.busy && !r.close_armed {
+                        r.close_armed = true;
+                        let rep = s.replica;
+                        push(&mut heap, &mut seq, t + cfg.window_ms, Ev::WindowClose { rep });
+                    }
+                }
+            }
+            Ev::Retry { sid } => {
+                let s = &mut sessions[sid as usize];
+                if !s.done {
+                    let ch = chan(&profiles, s);
+                    let up = ch.up_ms(draft_bytes);
+                    metrics.bytes_up += draft_bytes;
+                    air_ms += up;
+                    push(&mut heap, &mut seq, t + up + ch.prop_ms, Ev::DraftArrive { sid });
+                }
+            }
+            Ev::WindowClose { rep } => {
+                let members: Vec<u32> = {
+                    let r = &mut replicas[rep as usize];
+                    r.close_armed = false;
+                    let n = cfg.max_batch.min(r.backlog.len());
+                    (0..n).filter_map(|_| r.backlog.pop_front()).collect()
+                };
+                debug_assert!(!members.is_empty());
+                metrics.queue_depth.add(replicas[rep as usize].backlog.len() as f64);
+                let mut dur = A800_70B.t_base_ms;
+                for &sid in &members {
+                    let s = &sessions[sid as usize];
+                    dur += per_req_verify_ms;
+                    if s.rounds == 0 {
+                        // first verify of a session pays its prefill
+                        dur += s.prompt_len as f64 * A800_70B.prefill_ms_per_token;
+                    }
+                    metrics.latency.queue_ms.record(t - s.enqueue_ms);
+                    span(
+                        trace,
+                        t,
+                        sid,
+                        s.rounds as u32,
+                        SpanKind::QueueWait,
+                        t - s.enqueue_ms,
+                        0,
+                        0,
+                    );
+                }
+                metrics.note_batch(members.len());
+                metrics.latency.verify_ms.record(dur);
+                if let Some(&sid) = members.iter().find(|&&sid| traced(sid)) {
+                    span(
+                        trace,
+                        t,
+                        sid,
+                        sessions[sid as usize].rounds as u32,
+                        SpanKind::VerifyBatch,
+                        dur,
+                        members.len() as u32,
+                        bucket_k(cfg.fixed_k) as u32,
+                    );
+                }
+                for &sid in &members {
+                    let s = &mut sessions[sid as usize];
+                    let mut tau = 0u8;
+                    for _ in 0..cfg.fixed_k {
+                        if s.rng.chance(s.accept as f64) {
+                            tau += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    let eos = s.committed as usize + tau as usize + 1 >= s.budget as usize;
+                    let ch = chan(&profiles, s);
+                    let down = ch.down_ms(verdict_bytes);
+                    metrics.bytes_down += verdict_bytes;
+                    air_ms += down;
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        t + dur + down + ch.prop_ms,
+                        Ev::Verdict { sid, tau, eos },
+                    );
+                }
+                replicas[rep as usize].busy = true;
+                push(&mut heap, &mut seq, t + dur, Ev::ReplicaFree { rep });
+            }
+            Ev::ReplicaFree { rep } => {
+                let r = &mut replicas[rep as usize];
+                r.busy = false;
+                if !r.backlog.is_empty() && !r.close_armed {
+                    r.close_armed = true;
+                    push(&mut heap, &mut seq, t + cfg.window_ms, Ev::WindowClose { rep });
+                }
+            }
+            Ev::Verdict { sid, tau, eos } => {
+                let s = &mut sessions[sid as usize];
+                debug_assert!(!s.done);
+                metrics.note_round(cfg.fixed_k, tau as usize);
+                metrics.latency.round_ms.record(t - s.send_ms);
+                metrics.latency.rtt_ms.record(t - s.send_ms - draft_ms);
+                s.rounds += 1;
+                s.committed += tau as u16 + 1;
+                if s.first_token_ms.is_nan() {
+                    s.first_token_ms = t;
+                    ttft_ms.record(t - s.arrived_ms);
+                }
+                span(
+                    trace,
+                    t,
+                    sid,
+                    s.rounds as u32 - 1,
+                    SpanKind::Commit,
+                    t - s.send_ms,
+                    tau as u32,
+                    s.committed as u32,
+                );
+                if eos {
+                    s.done = true;
+                    live -= 1;
+                    metrics.sessions_completed += 1;
+                    metrics.session_rounds.add(s.rounds as f64);
+                    let drafted = s.rounds as f64 * cfg.fixed_k as f64;
+                    metrics
+                        .session_acceptance
+                        .add((s.committed - s.rounds) as f64 / drafted);
+                    ms_per_token.record((t - s.arrived_ms) / s.committed as f64);
+                } else if s.rng.chance(cfg.abort_p) {
+                    s.done = true;
+                    live -= 1;
+                    metrics.sessions_aborted += 1;
+                } else {
+                    let mut extra = 0.0;
+                    if s.rng.chance(cfg.redirect_p) {
+                        // ledger handoff to the next replica: the old
+                        // one redirects, the new one imports
+                        metrics.sessions_redirected += 1;
+                        metrics.sessions_imported += 1;
+                        handoffs += 1;
+                        s.replica = (s.replica + 1) % cfg.replicas as u16;
+                        extra = cfg.handoff_ms;
+                        span(
+                            trace,
+                            t,
+                            sid,
+                            s.rounds as u32,
+                            SpanKind::Redirect,
+                            cfg.handoff_ms,
+                            s.replica as u32,
+                            0,
+                        );
+                    }
+                    let ch = chan(&profiles, s);
+                    let up = ch.up_ms(draft_bytes);
+                    metrics.bytes_up += draft_bytes;
+                    air_ms += up;
+                    s.send_ms = t + extra;
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        t + extra + draft_ms + up + ch.prop_ms,
+                        Ev::DraftArrive { sid },
+                    );
+                }
+            }
+        }
+    }
+
+    debug_assert_eq!(live, 0, "sessions still live after the heap drained");
+    LoadReport {
+        scenario: cfg.scenario.label(),
+        sessions: cfg.sessions,
+        replicas: cfg.replicas,
+        seed: cfg.seed,
+        metrics,
+        ttft_ms,
+        ms_per_token,
+        peak_live,
+        peak_backlog,
+        handoffs,
+        events,
+        virtual_ms: now,
+        air_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::population::Scenario;
+    use crate::obs::VirtualClock;
+
+    #[test]
+    fn steady_run_is_deterministic_and_conserves() {
+        let cfg = Scenario::Steady.config(2000, 42);
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.virtual_ms.to_bits(), b.virtual_ms.to_bits());
+        let v = a.metrics.invariant_violations(0, 0);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(a.metrics.sessions_opened, 2000);
+        // steady never aborts (no admission bound, abort_p == 0), so
+        // every session completes and has a first token
+        assert_eq!(a.metrics.sessions_completed, 2000);
+        assert_eq!(a.metrics.sessions_aborted, 0);
+        assert_eq!(a.ttft_ms.count(), 2000);
+        assert!(a.peak_live > 0 && a.peak_live <= 2000);
+        assert!(a.metrics.tokens_committed > 2000);
+        assert!(a.air_ms_per_token() > 0.0);
+    }
+
+    #[test]
+    fn different_seeds_give_different_digests() {
+        let a = run(&Scenario::Steady.config(1000, 3));
+        let b = run(&Scenario::Steady.config(1000, 4));
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn flash_overload_floods_live_count_and_queues() {
+        let steady = run(&Scenario::Steady.config(4000, 17));
+        let flash = run(&Scenario::Flash.config(4000, 17));
+        assert!(
+            flash.peak_live > 2 * steady.peak_live,
+            "flash peak {} vs steady peak {}",
+            flash.peak_live,
+            steady.peak_live
+        );
+        let (fq, sq) = (
+            flash.metrics.latency.queue_ms.quantile(0.99),
+            steady.metrics.latency.queue_ms.quantile(0.99),
+        );
+        assert!(fq > 2.0 * sq, "flash queue p99 {fq} vs steady {sq}");
+        assert!(flash.metrics.invariant_violations(0, 0).is_empty());
+    }
+
+    #[test]
+    fn churn_exercises_busy_deferrals_and_handoffs() {
+        let r = run(&Scenario::Churn.config(3000, 3));
+        assert!(r.metrics.drafts_busy > 0, "no Busy deferrals under churn");
+        assert!(r.metrics.sessions_redirected > 0, "no handoffs under churn");
+        assert_eq!(r.metrics.sessions_redirected, r.metrics.sessions_imported);
+        assert_eq!(r.handoffs, r.metrics.sessions_redirected);
+        assert!(r.metrics.sessions_aborted > 0, "no aborts under churn");
+        let v = r.metrics.invariant_violations(0, 0);
+        assert!(v.is_empty(), "{v:?}");
+        // Busy drafts resolve: received == verified + busy
+        assert_eq!(
+            r.metrics.drafts_received,
+            r.metrics.rounds + r.metrics.drafts_busy
+        );
+    }
+
+    #[test]
+    fn trace_records_spans_for_early_sessions() {
+        let cfg = Scenario::Steady.config(500, 7);
+        let tr = Trace::new(VirtualClock::shared());
+        let r = run_with(&cfg, Some(&tr));
+        assert!(tr.len() > 0, "no spans recorded");
+        // tracing must not perturb the simulation
+        assert_eq!(r.digest(), run(&cfg).digest());
+    }
+
+    #[test]
+    fn report_json_and_render_are_complete() {
+        let r = run(&Scenario::Steady.config(800, 3));
+        let j = r.to_json();
+        assert_eq!(j.get("sessions").and_then(|x| x.as_usize()), Some(800));
+        assert!(j.get("ttft_ms").and_then(|t| t.get("p99")).is_some());
+        assert!(j.get("digest").is_some());
+        assert!(j.get("metrics").and_then(|m| m.get("rounds")).is_some());
+        let text = r.render();
+        assert!(text.contains("load/steady"));
+        assert!(text.contains("digest"));
+        assert!(text.contains("serving counters"));
+    }
+}

@@ -1,0 +1,44 @@
+//! `flexspec::load` — fleet-scale workload generation on the virtual
+//! clock (ROADMAP item 2; see `docs/LOADGEN.md`).
+//!
+//! The serving subsystem is proven correct session-by-session by the
+//! `serve::*` tests; this module asks the SCALE question: what do the
+//! tail latencies, queue depths, and handoff counts look like when
+//! 10^4–10^6 concurrent sessions with heavy-tailed budgets arrive over
+//! heterogeneous channels — including flash crowds and diurnal waves —
+//! against a bounded fleet?
+//!
+//! Three layers:
+//!
+//! * [`arrival`] — non-homogeneous Poisson arrivals (diurnal sinusoid +
+//!   flash-crowd bursts, sampled by thinning) and bounded-Pareto
+//!   session sizes.
+//! * [`population`] — heterogeneous channel mixes over the paper's
+//!   three regimes, a compact per-session channel sampler (same
+//!   dynamics as `StochasticChannel`, ~5 bytes of state per session),
+//!   and the named [`Scenario`] presets (`steady` / `flash` /
+//!   `diurnal` / `churn`).
+//! * [`harness`] — the discrete-event simulator: per-replica admission
+//!   windows and FIFO backlogs, eq. (9) batched verification costs,
+//!   Busy deferrals on the edge's real [`busy_backoff_ms`]
+//!   (`serve::edge`) schedule, cross-replica handoffs, and air-byte
+//!   accounting — all reported through the serving stack's own
+//!   [`ServingMetrics`](crate::metrics::ServingMetrics) vocabulary so
+//!   `check_invariants` audits the simulation exactly like a live
+//!   replica.
+//!
+//! Entry points: `Scenario::parse("flash").config(sessions, seed)` →
+//! [`run`] → [`LoadReport`] (quantiles, peaks, digest). Reports are
+//! deterministic per config — `LoadReport::digest` is the pin CI's
+//! `BENCH_load.json` trajectory re-checks on every PR. The `loadgen`
+//! CLI subcommand and `benches/load_scale.rs` wrap these.
+//!
+//! [`busy_backoff_ms`]: crate::serve::busy_backoff_ms
+
+pub mod arrival;
+pub mod harness;
+pub mod population;
+
+pub use arrival::{bounded_pareto, ArrivalProcess, ArrivalShape};
+pub use harness::{run, run_with, LoadReport, TRACE_SESSIONS};
+pub use population::{sample_channel, ChannelMix, LoadConfig, Scenario};

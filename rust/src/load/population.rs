@@ -1,0 +1,359 @@
+//! Session populations for the load harness: heterogeneous channel
+//! mixes, a compact per-session channel sampler, and scenario presets.
+//!
+//! At 10^5–10^6 concurrent sessions the per-session state has to stay
+//! small. [`StochasticChannel`](crate::channel::StochasticChannel)
+//! clones a full [`NetworkProfile`] per instance; the harness instead
+//! shares the three profiles fleet-wide and keeps only the AR(1)
+//! log-shadow term (f32) and the Gilbert-Elliott fade bit per session —
+//! [`sample_channel`] reproduces the exact dynamics of
+//! `StochasticChannel::sample` against that compact state, driven by
+//! the session's own RNG stream.
+
+use crate::channel::{ChannelState, NetworkKind, NetworkProfile};
+use crate::util::rng::SplitMix64;
+
+use super::arrival::ArrivalShape;
+
+/// AR(1) correlation of the log-shadowing term — matches
+/// `StochasticChannel`.
+const RHO: f64 = 0.85;
+
+/// One channel-model step against shared profile + compact state.
+///
+/// Same math as `StochasticChannel::sample`: AR(1) shadowing on the log
+/// rate (stationary sigma == `p.sigma`), a Gilbert-Elliott fade chain,
+/// and log-normal propagation jitter. The only difference is where the
+/// state lives (caller-owned f32 + bool instead of a per-channel
+/// struct) and which RNG stream drives it.
+pub fn sample_channel(
+    p: &NetworkProfile,
+    log_shadow: &mut f32,
+    fading: &mut bool,
+    rng: &mut SplitMix64,
+) -> ChannelState {
+    let innov = (1.0 - RHO * RHO).sqrt() * p.sigma;
+    let ls = RHO * (*log_shadow as f64) + innov * rng.next_normal();
+    *log_shadow = ls as f32;
+    if *fading {
+        if rng.chance(p.p_exit_fade) {
+            *fading = false;
+        }
+    } else if rng.chance(p.p_enter_fade) {
+        *fading = true;
+    }
+    let shadow = ls.exp();
+    let (rate_div, prop_mul) = if *fading {
+        (p.fade_rate_div, p.fade_prop_mul)
+    } else {
+        (1.0, 1.0)
+    };
+    let prop_jitter = rng.next_lognormal(0.0, p.prop_sigma);
+    ChannelState {
+        up_bps: (p.up_bps * shadow / rate_div).max(1e3),
+        down_bps: (p.down_bps * shadow / rate_div).max(1e3),
+        prop_ms: p.prop_ms * prop_jitter * prop_mul,
+        fading: *fading,
+        loss_rate: if *fading { p.fade_loss_rate } else { p.loss_rate },
+    }
+}
+
+/// Weighted mix over the three evaluation regimes
+/// (5G strong / 4G average / weak WiFi), in `NetworkKind::all()` order.
+#[derive(Debug, Clone, Copy)]
+pub struct ChannelMix {
+    pub weights: [f64; 3],
+}
+
+impl ChannelMix {
+    /// The paper-ish fleet mix: mostly strong/average links with a
+    /// weak-signal tail that dominates the latency quantiles.
+    pub const EVAL: ChannelMix = ChannelMix {
+        weights: [0.45, 0.40, 0.15],
+    };
+
+    pub fn new(w5g: f64, w4g: f64, wwifi: f64) -> ChannelMix {
+        let sum = (w5g + w4g + wwifi).max(1e-12);
+        ChannelMix {
+            weights: [w5g / sum, w4g / sum, wwifi / sum],
+        }
+    }
+
+    /// `"0.5,0.3,0.2"` (5g,4g,wifi weights) or a single profile alias
+    /// (`"4g"`, `"wifi"`, ...) for a homogeneous fleet.
+    pub fn parse(s: &str) -> Option<ChannelMix> {
+        if let Some(kind) = NetworkKind::parse(s) {
+            let idx = NetworkKind::all().iter().position(|k| *k == kind)?;
+            let mut weights = [0.0; 3];
+            weights[idx] = 1.0;
+            return Some(ChannelMix { weights });
+        }
+        let parts: Vec<f64> = s.split(',').map(|p| p.trim().parse().ok()).collect::<Option<_>>()?;
+        if parts.len() != 3 || parts.iter().any(|w| *w < 0.0) || parts.iter().sum::<f64>() <= 0.0 {
+            return None;
+        }
+        Some(ChannelMix::new(parts[0], parts[1], parts[2]))
+    }
+
+    /// Draw a class index into `NetworkKind::all()`.
+    pub fn pick(&self, rng: &mut SplitMix64) -> u8 {
+        let u = rng.next_f64();
+        let mut acc = 0.0;
+        for (i, w) in self.weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                return i as u8;
+            }
+        }
+        2
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "5g:{:.0}% 4g:{:.0}% wifi:{:.0}%",
+            self.weights[0] * 100.0,
+            self.weights[1] * 100.0,
+            self.weights[2] * 100.0
+        )
+    }
+}
+
+/// Named workload shapes the CLI / bench / CI run by name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Poisson arrivals at ~60% of fleet capacity — the stable
+    /// baseline whose quantiles the trajectory tracks.
+    Steady,
+    /// A flash crowd: 40x arrival burst that floods the backlogs and
+    /// pushes live-session count near the admitted total.
+    Flash,
+    /// Compressed diurnal wave: crest near capacity, light trough.
+    Diurnal,
+    /// Hot fleet with a bounded admission queue — exercises Busy
+    /// deferrals/backoff, aborts, and cross-replica handoffs.
+    Churn,
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().as_str() {
+            "steady" => Some(Scenario::Steady),
+            "flash" => Some(Scenario::Flash),
+            "diurnal" => Some(Scenario::Diurnal),
+            "churn" => Some(Scenario::Churn),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Flash => "flash",
+            Scenario::Diurnal => "diurnal",
+            Scenario::Churn => "churn",
+        }
+    }
+
+    pub fn all() -> [Scenario; 4] {
+        [Scenario::Steady, Scenario::Flash, Scenario::Diurnal, Scenario::Churn]
+    }
+
+    /// Preset sized to `sessions`: the replica count scales with the
+    /// population and arrival rates are expressed as fractions of the
+    /// fleet's estimated service capacity (~1 session/s per replica at
+    /// the default batch geometry), so every preset keeps its intended
+    /// character — stable, overloaded, wavy — at any scale.
+    pub fn config(&self, sessions: usize, seed: u64) -> LoadConfig {
+        let replicas = (sessions / 1250).clamp(4, 64);
+        let cap = replicas as f64; // ~1 session/s per replica
+        let shape = match self {
+            Scenario::Steady => ArrivalShape::steady(0.6 * cap),
+            Scenario::Flash => ArrivalShape {
+                flash_mult: 40.0,
+                flash_start_ms: 30_000.0,
+                flash_dur_ms: 120_000.0,
+                ..ArrivalShape::steady(0.5 * cap)
+            },
+            Scenario::Diurnal => ArrivalShape {
+                diurnal_amp: 0.8,
+                diurnal_period_ms: 600_000.0,
+                ..ArrivalShape::steady(0.5 * cap)
+            },
+            Scenario::Churn => ArrivalShape {
+                flash_mult: 6.0,
+                flash_start_ms: 20_000.0,
+                flash_dur_ms: 30_000.0,
+                ..ArrivalShape::steady(0.9 * cap)
+            },
+        };
+        let (admission_queue, abort_p, redirect_p) = match self {
+            Scenario::Churn => (48, 0.02, 0.015),
+            _ => (0, 0.0, 0.0),
+        };
+        LoadConfig {
+            scenario: *self,
+            sessions,
+            replicas,
+            seed,
+            window_ms: 12.0,
+            max_batch: 8,
+            fixed_k: 4,
+            admission_queue,
+            shape,
+            mix: ChannelMix::EVAL,
+            budget_xm: 8.0,
+            budget_alpha: 1.2,
+            budget_cap: 192.0,
+            prompt_xm: 24.0,
+            prompt_alpha: 1.3,
+            prompt_cap: 1024.0,
+            accept_mean: 0.70,
+            accept_sd: 0.10,
+            abort_p,
+            redirect_p,
+            handoff_ms: 40.0,
+        }
+    }
+}
+
+/// Full parameterization of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub scenario: Scenario,
+    /// Total sessions admitted before the arrival stream stops.
+    pub sessions: usize,
+    pub replicas: usize,
+    pub seed: u64,
+    /// Admission window span, ms (mirrors `VerifierConfig`).
+    pub window_ms: f64,
+    pub max_batch: usize,
+    /// Fixed draft-block length (the load model does not adapt K).
+    pub fixed_k: usize,
+    /// Per-replica backlog bound; 0 = unbounded (no Busy deferrals).
+    pub admission_queue: usize,
+    pub shape: ArrivalShape,
+    pub mix: ChannelMix,
+    /// Bounded-Pareto token-budget distribution.
+    pub budget_xm: f64,
+    pub budget_alpha: f64,
+    pub budget_cap: f64,
+    /// Bounded-Pareto prompt-length distribution.
+    pub prompt_xm: f64,
+    pub prompt_alpha: f64,
+    pub prompt_cap: f64,
+    /// Per-session acceptance probability ~ N(mean, sd), clamped.
+    pub accept_mean: f64,
+    pub accept_sd: f64,
+    /// P(session aborts at a verdict) — client gave up / link died.
+    pub abort_p: f64,
+    /// P(session is handed to the next replica at a verdict).
+    pub redirect_p: f64,
+    /// Control-plane cost of one ledger handoff, ms.
+    pub handoff_ms: f64,
+}
+
+impl LoadConfig {
+    /// Draw a session's acceptance probability.
+    pub fn draw_accept(&self, rng: &mut SplitMix64) -> f64 {
+        (self.accept_mean + self.accept_sd * rng.next_normal()).clamp(0.35, 0.95)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Channel;
+
+    #[test]
+    fn compact_sampler_matches_stochastic_channel_statistics() {
+        // Same dynamics, different RNG stream: the stationary moments
+        // and fade occupancy must agree with StochasticChannel.
+        for kind in NetworkKind::all() {
+            let p = NetworkProfile::new(kind);
+            let mut reference = p.channel(9);
+            let n = 6000;
+            let (mut ref_rate, mut ref_fade) = (0.0, 0usize);
+            for i in 0..n {
+                let s = reference.sample(i as f64);
+                ref_rate += s.up_bps;
+                ref_fade += s.fading as usize;
+            }
+            let mut rng = SplitMix64::new(9).fork(1);
+            let (mut ls, mut fading) = (0.0f32, false);
+            let (mut rate, mut fade) = (0.0, 0usize);
+            for _ in 0..n {
+                let s = sample_channel(&p, &mut ls, &mut fading, &mut rng);
+                rate += s.up_bps;
+                fade += s.fading as usize;
+            }
+            let (m_ref, m) = (ref_rate / n as f64, rate / n as f64);
+            assert!(
+                (m / m_ref - 1.0).abs() < 0.35,
+                "{kind:?}: mean rate {m} vs reference {m_ref}"
+            );
+            let (f_ref, f) = (ref_fade as f64 / n as f64, fade as f64 / n as f64);
+            assert!(
+                (f - f_ref).abs() < 0.08,
+                "{kind:?}: fade occupancy {f} vs reference {f_ref}"
+            );
+        }
+    }
+
+    #[test]
+    fn compact_sampler_is_deterministic() {
+        let p = NetworkProfile::new(NetworkKind::WifiWeak);
+        let run = || {
+            let mut rng = SplitMix64::new(17);
+            let (mut ls, mut fading) = (0.0f32, false);
+            (0..200)
+                .map(|_| sample_channel(&p, &mut ls, &mut fading, &mut rng).up_bps.to_bits())
+                .collect::<Vec<u64>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn mix_parses_and_normalizes() {
+        let m = ChannelMix::parse("2,1,1").unwrap();
+        assert!((m.weights[0] - 0.5).abs() < 1e-12);
+        let homog = ChannelMix::parse("wifi").unwrap();
+        assert_eq!(homog.weights, [0.0, 0.0, 1.0]);
+        assert!(ChannelMix::parse("1,2").is_none());
+        assert!(ChannelMix::parse("zigbee").is_none());
+        let mut rng = SplitMix64::new(3);
+        let picks: Vec<u8> = (0..100).map(|_| homog.pick(&mut rng)).collect();
+        assert!(picks.iter().all(|&c| c == 2));
+    }
+
+    #[test]
+    fn mix_pick_tracks_weights() {
+        let m = ChannelMix::EVAL;
+        let mut rng = SplitMix64::new(42);
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[m.pick(&mut rng) as usize] += 1;
+        }
+        for (i, w) in m.weights.iter().enumerate() {
+            let got = counts[i] as f64 / 10_000.0;
+            assert!((got - w).abs() < 0.03, "class {i}: {got} vs weight {w}");
+        }
+    }
+
+    #[test]
+    fn scenario_presets_parse_and_scale() {
+        for sc in Scenario::all() {
+            assert_eq!(Scenario::parse(sc.label()), Some(sc));
+            let small = sc.config(10_000, 3);
+            let big = sc.config(120_000, 3);
+            assert!(big.replicas > small.replicas);
+            assert!(big.shape.base_per_s > small.shape.base_per_s);
+        }
+        assert_eq!(Scenario::parse("rush-hour"), None);
+        // churn is the only preset with an admission bound
+        assert!(Scenario::Churn.config(10_000, 3).admission_queue > 0);
+        assert_eq!(Scenario::Steady.config(10_000, 3).admission_queue, 0);
+        // flash burst rate dwarfs fleet capacity
+        let f = Scenario::Flash.config(120_000, 3);
+        assert!(f.shape.lambda(31_000.0) > 10.0 * f.replicas as f64);
+    }
+}

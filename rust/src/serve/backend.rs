@@ -119,16 +119,30 @@ pub struct BatchBucket {
 /// K; members keep request order inside each bucket). Pure planning —
 /// no tokens move.
 pub fn plan_buckets(reqs: &[BatchVerifyReq<'_>]) -> Vec<BatchBucket> {
+    // Bucketed K is always 0 or a power of two, so the class of a
+    // request is `log2(k)` (offset by one to give k == 0 its own slot).
+    // A fixed-size slot table makes the insert O(1) per request instead
+    // of the linear `find` scan, which at large admission windows was
+    // O(window × distinct-K). Buckets are still created in first-
+    // appearance order and members keep request order, so the output is
+    // byte-identical to the scanning version after the final sort.
+    let mut slots = [usize::MAX; usize::BITS as usize + 1];
     let mut buckets: Vec<BatchBucket> = Vec::new();
     for (i, r) in reqs.iter().enumerate() {
         let k = bucket_k(r.draft.len());
-        match buckets.iter_mut().find(|b| b.k == k) {
-            Some(b) => b.members.push(i),
-            None => buckets.push(BatchBucket {
+        let slot = if k == 0 {
+            0
+        } else {
+            1 + k.trailing_zeros() as usize
+        };
+        if slots[slot] == usize::MAX {
+            slots[slot] = buckets.len();
+            buckets.push(BatchBucket {
                 k,
-                members: vec![i],
-            }),
+                members: Vec::new(),
+            });
         }
+        buckets[slots[slot]].members.push(i);
     }
     buckets.sort_by_key(|b| b.k);
     buckets
@@ -815,6 +829,58 @@ mod tests {
         assert_eq!(b.len(), 1);
         assert_eq!((b[0].k, b[0].members.as_slice()), (8, &[0usize][..]));
         assert_eq!(bucket_k(0), 0, "empty draft stays in its own class");
+    }
+
+    /// Pin for the O(1)-slot planner rewrite: over ragged K (including
+    /// the k == 0 empty-draft class) at window sizes 1, 64 and 1024 the
+    /// emitted plan must be byte-identical to the original linear-scan
+    /// planner — same bucket order, same member order.
+    #[test]
+    fn planner_matches_linear_scan_reference_at_scale() {
+        // the pre-rewrite planner, kept inline as the oracle
+        fn naive(reqs: &[BatchVerifyReq<'_>]) -> Vec<BatchBucket> {
+            let mut buckets: Vec<BatchBucket> = Vec::new();
+            for (i, r) in reqs.iter().enumerate() {
+                let k = bucket_k(r.draft.len());
+                match buckets.iter_mut().find(|b| b.k == k) {
+                    Some(b) => b.members.push(i),
+                    None => buckets.push(BatchBucket {
+                        k,
+                        members: vec![i],
+                    }),
+                }
+            }
+            buckets.sort_by_key(|b| b.k);
+            buckets
+        }
+
+        let committed = vec![1, 70, 71];
+        for &window in &[1usize, 64, 1024] {
+            for &seed in &[3u64, 17, 42] {
+                let mut r = SplitMix64::new(seed);
+                // ragged draft lengths 0..=33: exercises the empty-draft
+                // class, the non-power-of-two round-ups and a k beyond
+                // the verifier's usual max_batch
+                let drafts: Vec<Vec<i32>> = (0..window)
+                    .map(|_| vec![9; r.next_range(34) as usize])
+                    .collect();
+                let reqs: Vec<BatchVerifyReq> = drafts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, d)| BatchVerifyReq {
+                        id: i as u32 + 1,
+                        committed: &committed,
+                        draft: d,
+                        mode: VerifyMode::Greedy,
+                    })
+                    .collect();
+                assert_eq!(
+                    plan_buckets(&reqs),
+                    naive(&reqs),
+                    "window {window} seed {seed}: plan diverged from the linear-scan oracle"
+                );
+            }
+        }
     }
 
     /// Determinism pin: across seeds and drift levels, the vectorized

@@ -58,19 +58,34 @@ const SKIP_BUDGET: usize = 1024;
 /// answers within a handful of retries; exhausting the budget means the
 /// cloud is persistently over capacity and the session should fail
 /// loudly rather than spin forever.
-const MAX_BUSY_RETRIES: usize = 64;
+pub const MAX_BUSY_RETRIES: usize = 64;
 
 /// Ceiling on the per-retry backoff sleep (the suggested retry_after is
 /// doubled per consecutive deferral up to this cap).
-const BUSY_BACKOFF_CAP_MS: u64 = 500;
+pub const BUSY_BACKOFF_CAP_MS: u64 = 500;
 
-/// Sleep before re-sending a `Busy`-deferred draft: the cloud's
-/// suggested horizon, doubled per consecutive deferral (capped).
-async fn busy_backoff(retry_after_ms: u32, attempt: usize) {
+/// Backoff schedule for `Busy`-deferred drafts: the cloud's suggested
+/// horizon doubled per consecutive deferral, `base * 2^attempt` capped
+/// at [`BUSY_BACKOFF_CAP_MS`]. `attempt` counts completed deferrals of
+/// this round, so the first retry (attempt 0) sleeps exactly the
+/// suggested horizon and every further deferral doubles it. Pure so the
+/// virtual-clock load harness can share the exact live schedule.
+pub fn busy_backoff_ms(retry_after_ms: u32, attempt: usize) -> u64 {
     let base = retry_after_ms.max(1) as u64;
-    let ms = base
-        .saturating_mul(1u64 << attempt.min(6).saturating_sub(1))
-        .min(BUSY_BACKOFF_CAP_MS);
+    // 2^attempt saturates well past the cap; clamp the shift so it
+    // stays defined, then let `min` flatten everything at the ceiling.
+    let doubled = if attempt >= u64::BITS as usize {
+        u64::MAX
+    } else {
+        base.saturating_mul(1u64 << attempt)
+    };
+    doubled.min(BUSY_BACKOFF_CAP_MS)
+}
+
+/// Sleep before re-sending a `Busy`-deferred draft (see
+/// [`busy_backoff_ms`] for the schedule).
+async fn busy_backoff(retry_after_ms: u32, attempt: usize) {
+    let ms = busy_backoff_ms(retry_after_ms, attempt);
     tokio::time::sleep(std::time::Duration::from_millis(ms)).await;
 }
 
@@ -855,7 +870,9 @@ where
                             );
                         }
                         pipe_totals.busy_retries += 1;
-                        busy_backoff(b.retry_after_ms, busy_attempts).await;
+                        // attempt counts COMPLETED deferrals: the first
+                        // retry sleeps the suggested horizon as-is
+                        busy_backoff(b.retry_after_ms, busy_attempts - 1).await;
                         // re-stamp so backoff sleeps never pollute the
                         // measured RTT the adaptive policy feeds on —
                         // the last attempt's round trip IS the link
@@ -993,7 +1010,9 @@ where
                         );
                     }
                     totals.busy_retries += 1;
-                    busy_backoff(b.retry_after_ms, busy_attempts).await;
+                    // attempt counts COMPLETED deferrals: the first
+                    // retry sleeps the suggested horizon as-is
+                    busy_backoff(b.retry_after_ms, busy_attempts - 1).await;
                     let frame = inflight_frames
                         .get(&head)
                         .cloned()
@@ -1196,5 +1215,33 @@ impl Transport for ResumableTransport {
             }
             Ok(moved)
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full backoff schedule, end to end: the first deferral
+    /// (attempt 0) sleeps exactly the suggested horizon, every further
+    /// deferral doubles it, and the cap flattens the tail. Attempts 0,
+    /// 1 and 2 must all be distinct — the pre-fix schedule collapsed
+    /// them onto at most two sleeps.
+    #[test]
+    fn busy_backoff_doubles_from_the_first_retry() {
+        let schedule: Vec<u64> = (0..10).map(|a| busy_backoff_ms(7, a)).collect();
+        assert_eq!(schedule, vec![7, 14, 28, 56, 112, 224, 448, 500, 500, 500]);
+
+        // a zero suggested horizon still backs off from a 1 ms base
+        let zero: Vec<u64> = (0..11).map(|a| busy_backoff_ms(0, a)).collect();
+        assert_eq!(zero, vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 500, 500]);
+
+        // the cap binds immediately when the suggestion exceeds it
+        assert_eq!(busy_backoff_ms(10_000, 0), BUSY_BACKOFF_CAP_MS);
+
+        // absurd attempt counts (shift ≥ 64) stay defined and capped
+        assert_eq!(busy_backoff_ms(7, 63), BUSY_BACKOFF_CAP_MS);
+        assert_eq!(busy_backoff_ms(7, 64), BUSY_BACKOFF_CAP_MS);
+        assert_eq!(busy_backoff_ms(7, usize::MAX), BUSY_BACKOFF_CAP_MS);
     }
 }

@@ -155,8 +155,8 @@ pub use cloud::{
     handle_conn, serve_cloud, serve_cloud_with, serve_loopback, serve_loopback_mux, ServerHandle,
 };
 pub use edge::{
-    edge_handshake, run_edge_session, run_session_on, EdgeReport, EdgeSessionConfig,
-    ResumableTransport, SESSION_STREAM,
+    busy_backoff_ms, edge_handshake, run_edge_session, run_session_on, EdgeReport,
+    EdgeSessionConfig, ResumableTransport, BUSY_BACKOFF_CAP_MS, MAX_BUSY_RETRIES, SESSION_STREAM,
 };
 pub use fault::{loopback_fault_dial, FaultConfig, FaultOp, FaultPlan, FaultSide, FaultTransport};
 pub use fleet::{

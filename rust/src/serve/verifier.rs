@@ -3093,4 +3093,199 @@ mod tests {
         assert_eq!(a.active_sessions(), 1, "sibling stays");
         assert!(!a.telemetry().draining, "targeted move is not a drain");
     }
+
+    // --- eviction-sweep gate under load-harness churn -----------------
+
+    /// Earliest pending deadline across every residue map the sweep is
+    /// responsible for (the oracle the `next_sweep_ms` gate must never
+    /// exceed).
+    fn earliest_pending_deadline(c: &VerifierCore) -> f64 {
+        c.parked
+            .values()
+            .copied()
+            .chain(c.finished.values().map(|f| f.deadline_ms))
+            .chain(c.redirected_ids.values().copied())
+            .chain(c.redirected_tokens.values().map(|(d, _)| *d))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// The gate is allowed to be stale-EARLY (costs one extra sweep)
+    /// but never stale-LATE (a residue would be reaped after its grace)
+    /// and never `INFINITY` while residues are pending.
+    fn assert_gate_fresh(c: &VerifierCore) {
+        let min = earliest_pending_deadline(c);
+        assert!(
+            c.next_sweep_ms <= min,
+            "sweep gate {} lags earliest pending deadline {min}",
+            c.next_sweep_ms
+        );
+    }
+
+    /// Load-harness churn: thousands of randomized open / round /
+    /// detach / resume / finish / redirect-export / evict cycles
+    /// (seeds [3, 17, 42]). After EVERY operation the sweep gate must
+    /// cover the earliest pending deadline, and after every sweep no
+    /// expired residue may survive. Drains to empty at the end: all
+    /// four residue maps empty and the gate back at `INFINITY`.
+    #[test]
+    fn sweep_gate_survives_randomized_churn() {
+        for &seed in &[3u64, 17, 42] {
+            let ledger = SessionLedger::new();
+            let cfg = VerifierConfig {
+                resume_grace_ms: 50.0,
+                ..Default::default()
+            };
+            let mut c = VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)))
+                .with_ledger(ledger.clone());
+            let mut r = SplitMix64::new(seed);
+            let prompt = vec![1, 70, 71];
+            // (id, attachment, resume token, committed mirror, next round)
+            let mut live: Vec<(u32, u64, u64, Vec<i32>, u32)> = Vec::new();
+            // (resume token, committed mirror at detach time)
+            let mut detached: Vec<(u64, Vec<i32>)> = Vec::new();
+            let mut t = 0.0;
+
+            for cycle in 0..2000 {
+                t = cycle as f64 * 7.0;
+                match r.next_range(6) {
+                    0 => {
+                        let o = c.open_session(&prompt, 8, 0).unwrap();
+                        live.push((o.session, o.attachment, o.resume_token, prompt.clone(), 0));
+                    }
+                    1 if !live.is_empty() => {
+                        // one verification round; eos leaves a finished
+                        // residue behind
+                        let i = r.next_range(live.len() as u64) as usize;
+                        let (id, att, token, mut committed, round) = live.swap_remove(i);
+                        let msg = draft_for(id, round, &committed, 4);
+                        let tokens = msg.tokens.clone();
+                        match c.submit(t, att, msg, false).unwrap() {
+                            SubmitOutcome::Queued(_) => {
+                                let mut finished = false;
+                                for (vid, vmsg) in c.close_window(t).unwrap() {
+                                    assert_eq!(vid, id);
+                                    committed.extend_from_slice(&tokens[..vmsg.tau as usize]);
+                                    committed.push(vmsg.correction);
+                                    finished = vmsg.eos;
+                                }
+                                if finished {
+                                    detached.push((token, committed));
+                                } else {
+                                    live.push((id, att, token, committed, round + 1));
+                                }
+                            }
+                            SubmitOutcome::Busy { .. } => {
+                                live.push((id, att, token, committed, round));
+                            }
+                            other => panic!("unexpected outcome {other:?}"),
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let i = r.next_range(live.len() as u64) as usize;
+                        let (id, att, token, committed, _) = live.swap_remove(i);
+                        assert!(c.detach(t, id, att), "detach of a live session");
+                        detached.push((token, committed));
+                    }
+                    3 if !detached.is_empty() => {
+                        // resume (may race eviction and lose: the token
+                        // is simply gone, which is fine)
+                        let i = r.next_range(detached.len() as u64) as usize;
+                        let (token, committed) = detached.swap_remove(i);
+                        if let Ok(info) = c.resume(token, committed.len()) {
+                            if !info.done {
+                                // the mirror held the full sequence, so
+                                // the resume tail must be empty
+                                assert!(info.tail.is_empty());
+                                live.push((
+                                    info.session,
+                                    info.attachment,
+                                    token,
+                                    committed,
+                                    info.rounds as u32,
+                                ));
+                            }
+                        }
+                    }
+                    4 if !live.is_empty() => {
+                        // targeted redirect: the next draft exports the
+                        // session into the shared ledger
+                        let i = r.next_range(live.len() as u64) as usize;
+                        let (id, att, token, committed, round) = live.swap_remove(i);
+                        c.redirect_session(id, "replica-b".into());
+                        match c.submit_from(t, att, draft_for(id, round, &committed, 4), 5) {
+                            Ok(SubmitOutcome::Redirect { .. }) => {
+                                detached.push((token, committed));
+                            }
+                            Ok(SubmitOutcome::Busy { .. }) => {
+                                // deferred before the export could fire;
+                                // the session stays redirect-marked, so
+                                // drop it rather than draft from it again
+                                c.abort_session(id);
+                                let _ = (token, committed);
+                            }
+                            other => panic!("unexpected outcome {other:?}"),
+                        }
+                    }
+                    _ => {
+                        c.evict_expired(t);
+                        assert!(
+                            earliest_pending_deadline(&c) >= t,
+                            "sweep at {t} left an expired residue behind"
+                        );
+                    }
+                }
+                assert_gate_fresh(&c);
+            }
+
+            // drain: everything pending expires, one sweep reaps it all
+            let t_end = t + 10_000.0;
+            c.evict_expired(t_end);
+            assert!(c.parked.is_empty(), "seed {seed}: parked drained");
+            assert!(c.finished.is_empty(), "seed {seed}: residues drained");
+            assert!(c.redirected_ids.is_empty(), "seed {seed}: tombstones drained");
+            assert!(c.redirected_tokens.is_empty(), "seed {seed}: exports drained");
+            assert_eq!(
+                c.next_sweep_ms,
+                f64::INFINITY,
+                "seed {seed}: empty sweep state must disarm the gate"
+            );
+        }
+    }
+
+    /// Tight park/resume cycles: the gate tracks each fresh park
+    /// exactly, a resume may leave it stale-early but never stuck — the
+    /// next sweep past the stale deadline reaps nothing, resets the
+    /// gate to `INFINITY`, and the resumed session survives.
+    #[test]
+    fn park_resume_cycles_never_wedge_the_sweep_gate() {
+        let mut c = core_with_grace(50.0);
+        let prompt = vec![1, 70, 71];
+        let o = c.open_session(&prompt, 64, 0).unwrap();
+        let (id, token) = (o.session, o.resume_token);
+        let mut att = o.attachment;
+        for i in 0..2000 {
+            let t_park = i as f64 * 100.0;
+            assert!(c.detach(t_park, id, att));
+            assert_eq!(c.next_sweep_ms, t_park + 50.0, "fresh park arms the gate");
+            let info = c.resume(token, prompt.len()).unwrap();
+            att = info.attachment;
+            // stale-early is allowed...
+            assert!(c.next_sweep_ms <= t_park + 50.0);
+            // ...but one sweep past the stale deadline must reset it
+            assert_eq!(c.evict_expired(t_park + 50.1), 0);
+            assert_eq!(c.next_sweep_ms, f64::INFINITY, "cycle {i}: gate stuck");
+            assert!(c.sessions.contains_key(&id), "resumed session reaped");
+        }
+
+        // eviction timing is exact: the deadline itself is still within
+        // grace, the first instant strictly past it reaps
+        let t_park = 1_000_000.0;
+        assert!(c.detach(t_park, id, att));
+        assert_eq!(c.evict_expired(t_park + 50.0), 0, "deadline is inclusive");
+        assert!(c.parked.contains_key(&id));
+        assert_eq!(c.evict_expired(t_park + 50.1), 1, "strictly past: reaped");
+        assert!(c.parked.is_empty());
+        assert!(!c.sessions.contains_key(&id));
+        assert_eq!(c.next_sweep_ms, f64::INFINITY);
+    }
 }

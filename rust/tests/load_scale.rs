@@ -1,0 +1,79 @@
+//! Tier-1 smoke for the fleet-scale load harness (`flexspec::load`):
+//! 10k-session workloads must be deterministic per seed, pass the
+//! `ServingMetrics` conservation audit after a full drain, and exercise
+//! the churn machinery (Busy deferrals, handoffs, aborts) the scenario
+//! presets promise. The heavyweight scale floor (>= 100k live sessions)
+//! lives in `benches/load_scale.rs`; this test keeps the per-PR loop
+//! fast.
+
+use flexspec::load::{run, Scenario};
+
+const SEEDS: [u64; 3] = [3, 17, 42];
+
+#[test]
+fn smoke_10k_deterministic_per_seed() {
+    let mut digests = Vec::new();
+    for seed in SEEDS {
+        let cfg = Scenario::Churn.config(10_000, seed);
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(
+            a.digest(),
+            b.digest(),
+            "seed {seed}: same config must give a byte-identical report"
+        );
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.virtual_ms.to_bits(), b.virtual_ms.to_bits());
+        let v = a.metrics.invariant_violations(0, 0);
+        assert!(v.is_empty(), "seed {seed}: conservation audit failed: {v:?}");
+        a.metrics.check_invariants(0, 0);
+        assert_eq!(a.metrics.sessions_opened, 10_000);
+        digests.push(a.digest());
+    }
+    assert_ne!(digests[0], digests[1], "different seeds gave the same run");
+    assert_ne!(digests[1], digests[2], "different seeds gave the same run");
+}
+
+#[test]
+fn churn_smoke_exercises_the_hot_paths() {
+    let r = run(&Scenario::Churn.config(10_000, 3));
+    // the bounded admission queue must actually turn drafts away ...
+    assert!(r.metrics.drafts_busy > 0, "no Busy deferrals at 10k churn");
+    // ... and Busy drafts must all resolve (retried into a round or
+    // the session aborted): received == verified + deferred
+    assert_eq!(
+        r.metrics.drafts_received,
+        r.metrics.rounds + r.metrics.drafts_busy
+    );
+    assert!(r.handoffs > 0, "no cross-replica handoffs at 10k churn");
+    assert_eq!(r.metrics.sessions_redirected, r.metrics.sessions_imported);
+    assert!(
+        r.metrics.sessions_completed + r.metrics.sessions_aborted == 10_000,
+        "sessions leaked: {} completed + {} aborted != 10000",
+        r.metrics.sessions_completed,
+        r.metrics.sessions_aborted
+    );
+    assert!(r.peak_backlog > 0 && r.ttft_ms.count() > 0);
+    assert!(r.metrics.latency.queue_ms.count() > 0);
+    assert!(r.air_ms_per_token() > 0.0);
+}
+
+#[test]
+fn flash_floods_the_fleet() {
+    let steady = run(&Scenario::Steady.config(10_000, 17));
+    let flash = run(&Scenario::Flash.config(10_000, 17));
+    // the burst piles sessions up far beyond the steady operating point
+    assert!(
+        flash.peak_live > 4 * steady.peak_live,
+        "flash peak {} vs steady peak {}",
+        flash.peak_live,
+        steady.peak_live
+    );
+    // most of the population is simultaneously live at the peak
+    assert!(
+        flash.peak_live > 5_000,
+        "flash only peaked at {} of 10000 sessions",
+        flash.peak_live
+    );
+    assert!(flash.metrics.invariant_violations(0, 0).is_empty());
+}
