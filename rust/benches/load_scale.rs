@@ -1,7 +1,7 @@
 //! `cargo bench --bench load_scale` — the fleet-scale trajectory run.
 //!
 //! Runs the named workload scenarios at bench scale and emits
-//! `BENCH_load.json` (schema `flexspec-load-bench-v1`, documented in
+//! `BENCH_load.json` (schema `flexspec-load-bench-v2`, documented in
 //! `docs/LOADGEN.md`) when `FLEXSPEC_BENCH_LOAD_JSON=path` is set. CI
 //! uploads the report as an artifact next to `BENCH_serve.json`, so
 //! every PR extends the scalability trajectory.
@@ -10,10 +10,15 @@
 //! without a perf baseline):
 //!
 //! * determinism — every scenario runs twice; the digests must match
-//!   byte for byte;
+//!   byte for byte (with autoscale on, the digest folds in the control
+//!   plane's action-log digest, so the loop's decisions are pinned
+//!   too);
 //! * conservation — every report passes the `ServingMetrics` audit;
 //! * scale — the flash scenario must sustain >= 100k concurrently
-//!   live sessions (the ISSUE's acceptance floor).
+//!   live sessions (the ISSUE's acceptance floor);
+//! * control — on the SAME bounded-admission flash crowd, the
+//!   autoscaled fleet must beat the fixed fleet on ttft p99 (the
+//!   closed loop has to pay for itself, not just act).
 //!
 //! Wall-clock numbers (events/s, real seconds) are reported for the
 //! trajectory but never gated — they are machine-dependent.
@@ -24,48 +29,48 @@
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
-use flexspec::load::{run, LoadReport, Scenario};
+use flexspec::autoscale::AutoscaleConfig;
+use flexspec::load::{run, LoadConfig, LoadReport, Scenario};
 use flexspec::util::json::Json;
 
 const SEED: u64 = 3;
 /// The acceptance floor: the flash scenario must hold at least this
 /// many concurrently-live virtual sessions.
 const FLASH_LIVE_FLOOR: usize = 100_000;
+/// Sessions in the fixed-vs-autoscaled flash comparison cells.
+const AUTOSCALE_SESSIONS: usize = 120_000;
 
 struct Cell {
-    scenario: Scenario,
+    label: &'static str,
     sessions: usize,
     report: LoadReport,
     real_s: f64,
     second_real_s: f64,
 }
 
-fn run_cell(scenario: Scenario, sessions: usize) -> Result<Cell> {
-    let cfg = scenario.config(sessions, SEED);
+fn run_cfg_cell(label: &'static str, cfg: &LoadConfig) -> Result<Cell> {
     let t0 = Instant::now();
-    let report = run(&cfg);
+    let report = run(cfg);
     let real_s = t0.elapsed().as_secs_f64();
     let t1 = Instant::now();
-    let again = run(&cfg);
+    let again = run(cfg);
     let second_real_s = t1.elapsed().as_secs_f64();
     ensure!(
         report.digest() == again.digest(),
-        "{}: determinism violated — {:016x} != {:016x}",
-        scenario.label(),
+        "{label}: determinism violated — {:016x} != {:016x}",
         report.digest(),
         again.digest()
     );
     let violations = report.metrics.invariant_violations(0, 0);
     ensure!(
         violations.is_empty(),
-        "{}: conservation audit failed: {violations:?}",
-        scenario.label()
+        "{label}: conservation audit failed: {violations:?}"
     );
     println!(
-        "{:8} {:>9} sessions: {:>9} events in {:.2} s real ({:>9.0} ev/s), \
+        "{:15} {:>9} sessions: {:>9} events in {:.2} s real ({:>9.0} ev/s), \
          peak {:>7} live, ttft p99 {:>9.0} ms, digest {:016x}",
-        scenario.label(),
-        sessions,
+        label,
+        cfg.sessions,
         report.events,
         real_s,
         report.events as f64 / real_s.max(1e-9),
@@ -74,17 +79,43 @@ fn run_cell(scenario: Scenario, sessions: usize) -> Result<Cell> {
         report.digest()
     );
     Ok(Cell {
-        scenario,
-        sessions,
+        label,
+        sessions: cfg.sessions,
         report,
         real_s,
         second_real_s,
     })
 }
 
+fn run_cell(scenario: Scenario, sessions: usize) -> Result<Cell> {
+    run_cfg_cell(scenario.label(), &scenario.config(sessions, SEED))
+}
+
+/// The comparison workload: the flash preset with a bounded admission
+/// queue (so Busy hints exist to adapt), fixed fleet vs an aggressive
+/// closed loop. Everything except `autoscale` is identical.
+fn flash_bounded(autoscaled: bool) -> LoadConfig {
+    let mut cfg = Scenario::Flash.config(AUTOSCALE_SESSIONS, SEED);
+    cfg.admission_queue = 48;
+    if autoscaled {
+        cfg.autoscale = Some(AutoscaleConfig {
+            tick_ms: 500.0,
+            min_replicas: cfg.replicas,
+            max_replicas: 256,
+            scale_up_queue: 4,
+            up_ticks: 1,
+            cooldown_ticks: 1,
+            max_scale_step: 16,
+            down_ticks: 20,
+            ..AutoscaleConfig::default()
+        });
+    }
+    cfg
+}
+
 fn cell_json(c: &Cell) -> Json {
     Json::obj(vec![
-        ("scenario", Json::str(c.scenario.label())),
+        ("scenario", Json::str(c.label)),
         ("sessions", Json::Num(c.sessions as f64)),
         ("real_s", Json::Num(c.real_s)),
         ("real_s_second_run", Json::Num(c.second_real_s)),
@@ -108,7 +139,7 @@ fn main() -> Result<()> {
     ];
     let flash = cells
         .iter()
-        .find(|c| c.scenario == Scenario::Flash)
+        .find(|c| c.label == "flash")
         .expect("flash cell");
     ensure!(
         flash.report.peak_live >= FLASH_LIVE_FLOOR,
@@ -119,6 +150,46 @@ fn main() -> Result<()> {
         "\nflash scale floor: {} live sessions >= {FLASH_LIVE_FLOOR} ok",
         flash.report.peak_live
     );
+
+    // the control-plane gate: same bounded-admission flash crowd, the
+    // only difference being the closed loop — it must WIN on tail ttft
+    let fixed = run_cfg_cell("flash-fixed", &flash_bounded(false))?;
+    let auto = run_cfg_cell("flash-autoscale", &flash_bounded(true))?;
+    let fq = fixed.report.ttft_ms.quantile(0.99);
+    let aq = auto.report.ttft_ms.quantile(0.99);
+    {
+        let ar = auto.report.autoscale.as_ref().expect("autoscale report");
+        println!(
+            "autoscale gate: ttft p99 {aq:.0} ms vs fixed {fq:.0} ms \
+             (+{} -{} replicas, {} rebalance redirects, {} actions, \
+             retry_after {}–{} ms, log digest {:016x})",
+            ar.replicas_added,
+            ar.replicas_retired,
+            ar.redirects,
+            ar.actions,
+            auto.report.retry_after_min_ms,
+            auto.report.retry_after_max_ms,
+            ar.log_digest
+        );
+        ensure!(
+            ar.replicas_added > 0,
+            "the flash crowd never triggered a scale-up"
+        );
+        // the static fleet quotes one window per Busy; the adaptive
+        // hint must quote deeper once the backlog is multiple batches
+        ensure!(
+            auto.report.retry_after_max_ms > fixed.report.retry_after_max_ms,
+            "adaptive Busy hints ({} ms) never quoted past the static window ({} ms)",
+            auto.report.retry_after_max_ms,
+            fixed.report.retry_after_max_ms
+        );
+    }
+    ensure!(
+        aq < fq,
+        "autoscaled flash ttft p99 {aq:.0} ms must beat the fixed fleet's {fq:.0} ms"
+    );
+    cells.push(fixed);
+    cells.push(auto);
 
     if mega {
         let c = run_cell(Scenario::Flash, 1_000_000)?;
@@ -133,7 +204,7 @@ fn main() -> Result<()> {
 
     if let Some(path) = std::env::var_os("FLEXSPEC_BENCH_LOAD_JSON") {
         let j = Json::obj(vec![
-            ("schema", Json::str("flexspec-load-bench-v1")),
+            ("schema", Json::str("flexspec-load-bench-v2")),
             ("seed", Json::Num(SEED as f64)),
             ("flash_live_floor", Json::Num(FLASH_LIVE_FLOOR as f64)),
             ("mega", Json::Num(mega as u8 as f64)),

@@ -1,0 +1,217 @@
+//! The live actuation layer: one [`AutoscaleController`] per fleet,
+//! ticked on a fixed period, translating [`AutoscalePolicy`] decisions
+//! into [`FleetRegistry`] calls.
+//!
+//! The controller deliberately does NOT spawn replicas itself —
+//! spawning needs a backend factory and a bind address scheme that
+//! belong to the embedding layer (`serve-cloud --autoscale` in
+//! `cli_entry`, loopback factories in tests). [`AutoscaleController::
+//! step`] applies `ScaleDown` (drain toward the best peer) and
+//! `Rebalance` (targeted `redirect_some`) itself and RETURNS the full
+//! action list so the caller can honor `ScaleUp` with whatever
+//! replica-construction recipe it owns. The sim twin in
+//! `load::harness` applies the same action vocabulary to its replica
+//! table — both sides consume the identical policy, so for the same
+//! snapshot stream the action logs are byte-identical.
+
+use anyhow::Result;
+
+use super::policy::{AutoscaleAction, AutoscaleConfig, AutoscalePolicy, ReplicaSnapshot};
+use crate::obs::{SpanKind, Trace};
+use crate::serve::fleet::FleetRegistry;
+
+/// Pseudo session id autoscale span events journal under: fleet-level
+/// control actions have no session of their own, and this id can never
+/// collide with a server-assigned one (those start at 1 and a fleet
+/// never reaches 2^32-1 concurrent sessions in-process).
+pub const CONTROL_SESSION: u32 = u32::MAX;
+
+/// Drives one fleet's autoscaling loop. Construct once, call
+/// [`AutoscaleController::step`] every `cfg.tick_ms`.
+pub struct AutoscaleController {
+    policy: AutoscalePolicy,
+    tick: u64,
+}
+
+impl AutoscaleController {
+    pub fn new(cfg: AutoscaleConfig) -> AutoscaleController {
+        AutoscaleController {
+            policy: AutoscalePolicy::new(cfg),
+            tick: 0,
+        }
+    }
+
+    /// The policy (action log + digest live here).
+    pub fn policy(&self) -> &AutoscalePolicy {
+        &self.policy
+    }
+
+    /// Ticks taken so far.
+    pub fn ticks(&self) -> u64 {
+        self.tick
+    }
+
+    /// Build policy snapshots from the registry's current view.
+    /// Quarantined replicas are invisible to the policy (the operator
+    /// verdict outranks it); replicas whose refresh is older than the
+    /// staleness window surface with their true age and are discounted
+    /// inside the policy.
+    pub fn snapshots(registry: &FleetRegistry, now_ms: f64) -> Vec<ReplicaSnapshot> {
+        registry
+            .replicas()
+            .iter()
+            .filter(|r| !r.quarantined)
+            .map(|r| {
+                let (active, queue) = r
+                    .last
+                    .as_ref()
+                    .map(|t| (t.active_sessions, t.queue_len))
+                    .unwrap_or((0, 0));
+                ReplicaSnapshot {
+                    id: r.id,
+                    active,
+                    queue,
+                    draining: r.draining,
+                    age_ms: r.age_ms(now_ms),
+                }
+            })
+            .collect()
+    }
+
+    /// One control tick against the live fleet: refresh telemetry,
+    /// decide, actuate `ScaleDown`/`Rebalance`, journal span events,
+    /// and return every decided action (the caller spawns replicas for
+    /// `ScaleUp` and retires fully-drained victims at its own pace).
+    pub async fn step(
+        &mut self,
+        registry: &mut FleetRegistry,
+        now_ms: f64,
+        trace: Option<&Trace>,
+    ) -> Result<Vec<AutoscaleAction>> {
+        registry.refresh(now_ms).await;
+        let snaps = Self::snapshots(registry, now_ms);
+        let tick = self.tick;
+        self.tick += 1;
+        let actions = self.policy.tick(tick, &snaps);
+        for action in &actions {
+            if let Some(tr) = trace {
+                let (a, _, _) = action.args();
+                tr.record(
+                    CONTROL_SESSION,
+                    tick as u32,
+                    SpanKind::Autoscale,
+                    0.0,
+                    action.code() as u32,
+                    a as u32,
+                );
+            }
+            match *action {
+                AutoscaleAction::ScaleUp { .. } => {} // caller-owned
+                AutoscaleAction::ScaleDown { victim } => {
+                    let addr = registry
+                        .replicas()
+                        .iter()
+                        .find(|r| r.id == victim)
+                        .map(|r| r.addr.clone());
+                    if let Some(addr) = addr {
+                        if let Some(to) = registry.pick_peer(&addr, now_ms) {
+                            registry.drain(&addr, &to)?;
+                        }
+                    }
+                }
+                AutoscaleAction::Rebalance { from, to, sessions } => {
+                    let addr_of = |id: u32| {
+                        registry
+                            .replicas()
+                            .iter()
+                            .find(|r| r.id == id)
+                            .map(|r| r.addr.clone())
+                    };
+                    if let (Some(from), Some(to)) = (addr_of(from), addr_of(to)) {
+                        registry.rebalance(&from, &to, sessions).await?;
+                    }
+                }
+            }
+        }
+        Ok(actions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{SyntheticTarget, VerifierConfig, VerifyBackend};
+
+    fn rt() -> tokio::runtime::Runtime {
+        tokio::runtime::Builder::new_current_thread()
+            .enable_all()
+            .build()
+            .unwrap()
+    }
+
+    fn make_backend() -> Result<Box<dyn VerifyBackend>> {
+        Ok(Box::new(SyntheticTarget::new(5)) as Box<dyn VerifyBackend>)
+    }
+
+    #[test]
+    fn controller_drains_the_scale_down_victim() {
+        rt().block_on(async {
+            let mut reg = FleetRegistry::new();
+            reg.spawn_loopback_replica("replica-a", VerifierConfig::default(), make_backend)
+                .unwrap();
+            reg.spawn_loopback_replica("replica-b", VerifierConfig::default(), make_backend)
+                .unwrap();
+            let cfg = AutoscaleConfig {
+                min_replicas: 1,
+                down_ticks: 2,
+                cooldown_ticks: 0,
+                ..AutoscaleConfig::default()
+            };
+            let mut ctl = AutoscaleController::new(cfg);
+            // two idle ticks accrue scale-down pressure; the third
+            // tick's decision drains a victim toward its peer
+            let mut drained = false;
+            for t in 0..4 {
+                let acts = ctl.step(&mut reg, t as f64 * 1000.0, None).await.unwrap();
+                if acts
+                    .iter()
+                    .any(|a| matches!(a, AutoscaleAction::ScaleDown { .. }))
+                {
+                    drained = true;
+                }
+            }
+            assert!(drained, "idle two-replica fleet never scaled down");
+            assert_eq!(
+                reg.replicas().iter().filter(|r| r.draining).count(),
+                1,
+                "exactly one replica should be draining"
+            );
+            assert_eq!(ctl.policy().log().len(), 1);
+            assert!(ctl.ticks() >= 3);
+            for r in reg.replicas() {
+                r.verifier.shutdown().await.unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn controller_snapshots_track_age_and_quarantine() {
+        rt().block_on(async {
+            let mut reg = FleetRegistry::new();
+            reg.spawn_loopback_replica("replica-a", VerifierConfig::default(), make_backend)
+                .unwrap();
+            reg.spawn_loopback_replica("replica-b", VerifierConfig::default(), make_backend)
+                .unwrap();
+            reg.refresh(100.0).await;
+            let snaps = AutoscaleController::snapshots(&reg, 150.0);
+            assert_eq!(snaps.len(), 2);
+            assert!(snaps.iter().all(|s| (s.age_ms - 50.0).abs() < 1e-9));
+            reg.mark_dead("replica-b");
+            let snaps = AutoscaleController::snapshots(&reg, 150.0);
+            assert_eq!(snaps.len(), 1, "quarantined replicas are invisible");
+            for r in reg.replicas() {
+                r.verifier.shutdown().await.unwrap();
+            }
+        });
+    }
+}

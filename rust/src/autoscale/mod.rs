@@ -1,0 +1,35 @@
+//! `flexspec::autoscale` — the closed-loop fleet control plane
+//! (ROADMAP item 3; see `docs/AUTOSCALE.md`).
+//!
+//! PR 5's [`FleetRegistry`](crate::serve::FleetRegistry) grew every
+//! actuator a fleet needs — telemetry, `pick_peer`, targeted
+//! redirects, drain/undrain, canary rollout — and PR 7's
+//! `flexspec::load` harness built a deterministic million-session
+//! testbed. This module is the brain between them:
+//!
+//! * [`policy`] — the pure decision loop: [`AutoscalePolicy::tick`]
+//!   consumes [`ReplicaSnapshot`]s and emits [`AutoscaleAction`]s
+//!   (scale-up, drain-and-retire, bounded rebalancing) under triple
+//!   hysteresis (dead band, consecutive-tick pressure, cooldown), plus
+//!   [`adaptive_retry_after_ms`] — the queue-depth-adaptive Busy
+//!   suggestion shared by the live verifier and the load harness.
+//! * [`controller`] — the live actuation layer: a tick thread in
+//!   `serve-cloud --autoscale` refreshes the registry, runs the
+//!   policy, and applies drains/redirects; `ScaleUp` is returned to
+//!   the embedding layer, which owns replica construction.
+//!
+//! The sim twin lives in `load::harness` (an `AutoscaleTick` event on
+//! the virtual clock applying the same action vocabulary to the
+//! simulated replica table). Because the policy is pure and both
+//! actuation layers consume it identically, the determinism contract
+//! extends to the control plane: same config + seed ⇒ byte-identical
+//! action log ([`AutoscalePolicy::log_digest`], FNV-folded like
+//! `LoadReport::digest`) and byte-identical committed sequences.
+
+pub mod controller;
+pub mod policy;
+
+pub use controller::{AutoscaleController, CONTROL_SESSION};
+pub use policy::{
+    adaptive_retry_after_ms, AutoscaleAction, AutoscaleConfig, AutoscalePolicy, ReplicaSnapshot,
+};

@@ -1,0 +1,554 @@
+//! The deterministic autoscaling policy: pure decision logic over
+//! telemetry snapshots.
+//!
+//! [`AutoscalePolicy::tick`] is a pure function of its accumulated
+//! state and the snapshot slice it is handed — no clocks, no RNG, no
+//! I/O — which is what lets the SAME policy drive the live fleet (the
+//! [`controller`](super::controller) on the wall clock) and the load
+//! harness's sim twin (`load::harness` on the virtual clock) and emit
+//! byte-identical action logs for the same inputs. The log is
+//! FNV-digested exactly like `LoadReport::digest`, extending the
+//! repo's determinism contract to the control plane.
+//!
+//! # Hysteresis model
+//!
+//! Three mechanisms keep the loop from oscillating:
+//!
+//! * a **dead band** between `scale_down_queue` and `scale_up_queue` —
+//!   mean queue depths inside the band reset both pressure counters,
+//!   so noise near either threshold never accumulates into an action;
+//! * **consecutive-tick pressure counters** — the mean queue must sit
+//!   beyond a threshold for `up_ticks` (resp. `down_ticks`)
+//!   consecutive ticks before a scale action fires, and `down_ticks`
+//!   defaults much larger than `up_ticks` (scaling up is cheap and
+//!   urgent, scaling down is neither);
+//! * a **cooldown** of `cooldown_ticks` after every scale action,
+//!   during which no further scale action can fire (rebalancing is
+//!   exempt — moving sessions is how a freshly grown fleet absorbs
+//!   load).
+//!
+//! Rebalancing has its own hysteresis: the most- and least-loaded
+//! replicas must differ by BOTH a ratio (`rebalance_ratio`) and an
+//! absolute margin (`rebalance_margin`) before any sessions move, and
+//! at most `max_redirects_per_tick` move per tick. The per-session
+//! redirect budget (`redirect_budget` per `redirect_window_ticks`) is
+//! enforced by the actuators, which know session identity; the policy
+//! only caps aggregate flow.
+
+/// One replica as the policy sees it. Built from
+/// [`ReplicaTelemetry`](crate::serve::ReplicaTelemetry) by the live
+/// controller and from the harness's replica table by the sim twin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaSnapshot {
+    /// Stable replica id (registry id live, replica index in the sim).
+    pub id: u32,
+    /// Sessions currently attached (decoding or between rounds).
+    pub active: usize,
+    /// Drafts waiting in the admission queue / backlog.
+    pub queue: usize,
+    /// True while the replica drains (never a rebalance target).
+    pub draining: bool,
+    /// Time since the snapshot was refreshed, ms. Snapshots older than
+    /// [`AutoscaleConfig::staleness_ms`] are treated as UNKNOWN — a
+    /// replica whose refreshes stopped must not keep winning placement
+    /// on a stale low-load reading. `f64::INFINITY` = never refreshed.
+    pub age_ms: f64,
+}
+
+impl ReplicaSnapshot {
+    /// The same load scalar `ReplicaTelemetry::load()` reports.
+    pub fn load(&self) -> usize {
+        self.active + self.queue
+    }
+}
+
+/// Policy knobs. `Default` is a conservative production shape; the
+/// bench and the CLI override per scenario. All thresholds are in
+/// "mean drafts queued per replica" units — the quantity the admission
+/// queue bounds and `retry_after_ms` adapts to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Control-loop period, ms (wall or virtual).
+    pub tick_ms: f64,
+    /// Never scale below this many replicas.
+    pub min_replicas: usize,
+    /// Never scale above this many replicas.
+    pub max_replicas: usize,
+    /// Mean queue depth at/above which scale-up pressure accrues.
+    pub scale_up_queue: usize,
+    /// Mean queue depth at/below which scale-down pressure accrues.
+    /// Must sit below `scale_up_queue`; the gap is the dead band.
+    pub scale_down_queue: usize,
+    /// Consecutive over-threshold ticks before a scale-up fires.
+    pub up_ticks: u32,
+    /// Consecutive under-threshold ticks before a scale-down fires.
+    pub down_ticks: u32,
+    /// Ticks after any scale action during which neither scale
+    /// direction may fire again.
+    pub cooldown_ticks: u32,
+    /// Most replicas added by a single scale-up action.
+    pub max_scale_step: usize,
+    /// Max/min load ratio that arms a rebalance.
+    pub rebalance_ratio: f64,
+    /// Absolute load gap (drafts) the ratio must also clear.
+    pub rebalance_margin: usize,
+    /// Sessions moved per rebalance action, at most.
+    pub max_redirects_per_tick: usize,
+    /// Per-session redirect budget within one redirect window —
+    /// enforced by the actuators (harness / registry), not here.
+    pub redirect_budget: u8,
+    /// Redirect-budget window length, in ticks.
+    pub redirect_window_ticks: u32,
+    /// Telemetry older than this is unknown (never preferred, never
+    /// counted toward fleet sizing).
+    pub staleness_ms: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> AutoscaleConfig {
+        AutoscaleConfig {
+            tick_ms: 1000.0,
+            min_replicas: 1,
+            max_replicas: 64,
+            scale_up_queue: 6,
+            scale_down_queue: 1,
+            up_ticks: 3,
+            down_ticks: 10,
+            cooldown_ticks: 5,
+            max_scale_step: 4,
+            rebalance_ratio: 2.0,
+            rebalance_margin: 4,
+            max_redirects_per_tick: 4,
+            redirect_budget: 2,
+            redirect_window_ticks: 30,
+            staleness_ms: 2000.0,
+        }
+    }
+}
+
+/// One control decision. Replica-granular: the actuation layer maps
+/// these onto `FleetRegistry` primitives (live) or the harness's
+/// replica table (sim).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AutoscaleAction {
+    /// Spawn `add` fresh replicas.
+    ScaleUp { add: usize },
+    /// Drain and retire the replica with this id.
+    ScaleDown { victim: u32 },
+    /// Move up to `sessions` sessions from `from` to `to` at their
+    /// next head round.
+    Rebalance { from: u32, to: u32, sessions: usize },
+}
+
+impl AutoscaleAction {
+    /// Stable numeric code, digested into the action log.
+    pub fn code(&self) -> u64 {
+        match self {
+            AutoscaleAction::ScaleUp { .. } => 1,
+            AutoscaleAction::ScaleDown { .. } => 2,
+            AutoscaleAction::Rebalance { .. } => 3,
+        }
+    }
+
+    /// The action's arguments as three u64s (unused ones 0) — the
+    /// digest fold and the trace journal share this encoding.
+    pub fn args(&self) -> (u64, u64, u64) {
+        match *self {
+            AutoscaleAction::ScaleUp { add } => (add as u64, 0, 0),
+            AutoscaleAction::ScaleDown { victim } => (victim as u64, 0, 0),
+            AutoscaleAction::Rebalance { from, to, sessions } => {
+                (from as u64, to as u64, sessions as u64)
+            }
+        }
+    }
+
+    /// Human line for action-log exports.
+    pub fn describe(&self) -> String {
+        match *self {
+            AutoscaleAction::ScaleUp { add } => format!("scale_up add={add}"),
+            AutoscaleAction::ScaleDown { victim } => format!("scale_down victim={victim}"),
+            AutoscaleAction::Rebalance { from, to, sessions } => {
+                format!("rebalance from={from} to={to} sessions={sessions}")
+            }
+        }
+    }
+}
+
+/// The control loop's brain: feed it one snapshot slice per tick, get
+/// back the actions to apply. Accumulates the full `(tick, action)`
+/// log; [`AutoscalePolicy::log_digest`] is the byte-identity pin.
+#[derive(Debug, Clone)]
+pub struct AutoscalePolicy {
+    cfg: AutoscaleConfig,
+    up_for: u32,
+    down_for: u32,
+    cooldown: u32,
+    log: Vec<(u64, AutoscaleAction)>,
+}
+
+impl AutoscalePolicy {
+    pub fn new(cfg: AutoscaleConfig) -> AutoscalePolicy {
+        AutoscalePolicy {
+            cfg,
+            up_for: 0,
+            down_for: 0,
+            cooldown: 0,
+            log: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// The accumulated `(tick, action)` log.
+    pub fn log(&self) -> &[(u64, AutoscaleAction)] {
+        &self.log
+    }
+
+    /// Order-sensitive FNV-1a fold over the action log — same idiom as
+    /// `LoadReport::digest`. Two runs of the same config + seed must
+    /// produce byte-identical logs, hence equal digests.
+    pub fn log_digest(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        for (tick, action) in &self.log {
+            mix(*tick);
+            mix(action.code());
+            let (a, b, c) = action.args();
+            mix(a);
+            mix(b);
+            mix(c);
+        }
+        h
+    }
+
+    /// One control step. `snaps` should cover every non-retired
+    /// replica; stale and draining entries are ignored for sizing and
+    /// placement (a drain in progress IS the previous decision still
+    /// executing). Returns the actions in a deterministic order:
+    /// at most one scale action, then at most one rebalance.
+    pub fn tick(&mut self, tick: u64, snaps: &[ReplicaSnapshot]) -> Vec<AutoscaleAction> {
+        let cfg = &self.cfg;
+        let known: Vec<&ReplicaSnapshot> = snaps
+            .iter()
+            .filter(|s| !s.draining && s.age_ms <= cfg.staleness_ms)
+            .collect();
+        let mut out = Vec::new();
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+        }
+        if known.is_empty() {
+            // flying blind: hold state, take no action
+            return out;
+        }
+        let n = known.len();
+        let mean_q = known.iter().map(|s| s.queue).sum::<usize>() as f64 / n as f64;
+
+        // pressure accrual with a dead band between the thresholds
+        if mean_q >= cfg.scale_up_queue as f64 {
+            self.up_for += 1;
+            self.down_for = 0;
+        } else if mean_q <= cfg.scale_down_queue as f64 {
+            self.down_for += 1;
+            self.up_for = 0;
+        } else {
+            self.up_for = 0;
+            self.down_for = 0;
+        }
+
+        if self.cooldown == 0 && self.up_for >= cfg.up_ticks && n < cfg.max_replicas {
+            // size the step to the overload: one replica per
+            // `scale_up_queue` of mean depth, bounded by the step cap
+            // and the fleet ceiling
+            let add = ((mean_q / cfg.scale_up_queue.max(1) as f64) as usize)
+                .clamp(1, cfg.max_scale_step)
+                .min(cfg.max_replicas - n);
+            out.push(AutoscaleAction::ScaleUp { add });
+            self.up_for = 0;
+            self.cooldown = cfg.cooldown_ticks;
+        } else if self.cooldown == 0 && self.down_for >= cfg.down_ticks && n > cfg.min_replicas {
+            // retire the least-loaded replica; its sessions drain to
+            // peers through the ledger (never stranded)
+            let victim = known
+                .iter()
+                .min_by_key(|s| (s.load(), s.id))
+                .expect("known is non-empty")
+                .id;
+            out.push(AutoscaleAction::ScaleDown { victim });
+            self.down_for = 0;
+            self.cooldown = cfg.cooldown_ticks;
+        }
+
+        // load-adaptive rebalancing — exempt from the scale cooldown
+        if n >= 2 {
+            let most = known
+                .iter()
+                .max_by_key(|s| (s.load(), s.id))
+                .expect("known is non-empty");
+            let least = known
+                .iter()
+                .min_by_key(|s| (s.load(), s.id))
+                .expect("known is non-empty");
+            let gap = most.load().saturating_sub(least.load());
+            if most.id != least.id
+                && most.load() as f64 >= cfg.rebalance_ratio * least.load().max(1) as f64
+                && gap >= cfg.rebalance_margin
+            {
+                let sessions = (gap / 2).clamp(1, cfg.max_redirects_per_tick);
+                out.push(AutoscaleAction::Rebalance {
+                    from: most.id,
+                    to: least.id,
+                    sessions,
+                });
+            }
+        }
+
+        for a in &out {
+            self.log.push((tick, *a));
+        }
+        out
+    }
+}
+
+/// Queue-depth-adaptive Busy backoff: the static suggestion was one
+/// admission window regardless of backlog; under a deep queue that
+/// made every deferred edge retry into the SAME congested window.
+/// This scales the suggestion by how many windows the present backlog
+/// needs to drain (`1 + queue_len / max_batch`), capped at 16 windows
+/// so a transient spike cannot park edges for minutes. At
+/// `queue_len == 0` it equals the old static value, so unsaturated
+/// behavior is unchanged. Pure — the verifier and the load harness
+/// call the same function, keeping sim == serve.
+pub fn adaptive_retry_after_ms(window_ms: f64, queue_len: usize, max_batch: usize) -> u32 {
+    let base = window_ms.max(1.0).ceil() as u32;
+    let windows = 1 + queue_len / max_batch.max(1);
+    (base.saturating_mul(windows as u32)).min(base.saturating_mul(16))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(id: u32, active: usize, queue: usize) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            id,
+            active,
+            queue,
+            draining: false,
+            age_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn adaptive_retry_matches_static_when_idle_and_grows_with_backlog() {
+        // empty queue: exactly the old static suggestion
+        assert_eq!(adaptive_retry_after_ms(12.0, 0, 8), 12);
+        assert_eq!(adaptive_retry_after_ms(0.25, 0, 8), 1);
+        // one extra window per max_batch of backlog
+        assert_eq!(adaptive_retry_after_ms(12.0, 8, 8), 24);
+        assert_eq!(adaptive_retry_after_ms(12.0, 40, 8), 72);
+        // capped at 16 windows
+        assert_eq!(adaptive_retry_after_ms(12.0, 100_000, 8), 192);
+        // degenerate max_batch never divides by zero
+        assert_eq!(adaptive_retry_after_ms(12.0, 3, 0), 48);
+    }
+
+    #[test]
+    fn scale_up_needs_consecutive_pressure_and_respects_cooldown() {
+        let cfg = AutoscaleConfig {
+            up_ticks: 3,
+            cooldown_ticks: 4,
+            max_scale_step: 1,
+            ..AutoscaleConfig::default()
+        };
+        let mut p = AutoscalePolicy::new(cfg);
+        let hot = [snap(1, 4, 20), snap(2, 4, 20)];
+        assert!(p.tick(0, &hot).is_empty());
+        assert!(p.tick(1, &hot).is_empty());
+        let a = p.tick(2, &hot);
+        assert_eq!(a, vec![AutoscaleAction::ScaleUp { add: 1 }]);
+        // cooldown: pressure keeps accruing but nothing fires
+        for t in 3..6 {
+            assert!(
+                !p.tick(t, &hot).iter().any(|a| matches!(a, AutoscaleAction::ScaleUp { .. })),
+                "scale-up fired during cooldown at tick {t}"
+            );
+        }
+        let again = p.tick(6, &hot);
+        assert!(again.iter().any(|a| matches!(a, AutoscaleAction::ScaleUp { .. })));
+    }
+
+    #[test]
+    fn dead_band_resets_pressure_so_noise_never_scales() {
+        let cfg = AutoscaleConfig {
+            scale_up_queue: 6,
+            scale_down_queue: 1,
+            up_ticks: 2,
+            ..AutoscaleConfig::default()
+        };
+        let mut p = AutoscalePolicy::new(cfg);
+        let hot = [snap(1, 0, 8)];
+        let mid = [snap(1, 0, 3)]; // inside the dead band
+        for t in 0..20 {
+            // alternating hot/mid never accrues up_ticks consecutive
+            let s = if t % 2 == 0 { &hot } else { &mid };
+            let acts = p.tick(t, s);
+            assert!(acts.is_empty(), "oscillating load scaled at tick {t}: {acts:?}");
+        }
+    }
+
+    #[test]
+    fn scale_down_retires_least_loaded_and_floors_at_min() {
+        let cfg = AutoscaleConfig {
+            min_replicas: 2,
+            down_ticks: 2,
+            cooldown_ticks: 0,
+            ..AutoscaleConfig::default()
+        };
+        let mut p = AutoscalePolicy::new(cfg);
+        let idle = [snap(1, 2, 0), snap(2, 0, 0), snap(3, 1, 0)];
+        assert!(p.tick(0, &idle).is_empty());
+        let a = p.tick(1, &idle);
+        assert_eq!(a, vec![AutoscaleAction::ScaleDown { victim: 2 }]);
+        // at the floor, nothing more comes off
+        let two = [snap(1, 0, 0), snap(3, 0, 0)];
+        assert!(p.tick(2, &two).is_empty());
+        assert!(p.tick(3, &two).is_empty());
+        assert!(p.tick(4, &two).is_empty());
+    }
+
+    #[test]
+    fn rebalance_needs_ratio_and_margin_and_caps_flow() {
+        let cfg = AutoscaleConfig {
+            rebalance_ratio: 2.0,
+            rebalance_margin: 4,
+            max_redirects_per_tick: 3,
+            ..AutoscaleConfig::default()
+        };
+        let mut p = AutoscalePolicy::new(cfg);
+        // ratio met but margin not: 3 vs 1
+        assert!(p.tick(0, &[snap(1, 3, 0), snap(2, 1, 0)]).is_empty());
+        // margin met but ratio not: 10 vs 6
+        assert!(p.tick(1, &[snap(1, 10, 0), snap(2, 6, 0)]).is_empty());
+        // both met: flow capped at max_redirects_per_tick
+        let a = p.tick(2, &[snap(1, 20, 0), snap(2, 2, 0)]);
+        assert_eq!(
+            a,
+            vec![AutoscaleAction::Rebalance { from: 1, to: 2, sessions: 3 }]
+        );
+    }
+
+    #[test]
+    fn stale_snapshots_are_never_preferred_or_counted() {
+        let cfg = AutoscaleConfig {
+            staleness_ms: 1000.0,
+            rebalance_margin: 2,
+            ..AutoscaleConfig::default()
+        };
+        let mut p = AutoscalePolicy::new(cfg);
+        // the stale replica reads empty — without the staleness gate it
+        // would win every rebalance and soak up redirected sessions
+        let stale_min = [
+            snap(1, 9, 0),
+            snap(2, 1, 0),
+            ReplicaSnapshot { age_ms: 5000.0, ..snap(3, 0, 0) },
+        ];
+        let a = p.tick(0, &stale_min);
+        assert_eq!(
+            a,
+            vec![AutoscaleAction::Rebalance { from: 1, to: 2, sessions: 4 }],
+            "rebalance must target the freshest least-loaded replica, not the stale one"
+        );
+        // a fully stale fleet takes no action at all
+        let blind = [
+            ReplicaSnapshot { age_ms: 5000.0, ..snap(1, 0, 50) },
+            ReplicaSnapshot { age_ms: f64::INFINITY, ..snap(2, 0, 50) },
+        ];
+        assert!(p.tick(1, &blind).is_empty());
+    }
+
+    #[test]
+    fn log_digest_is_deterministic_and_order_sensitive() {
+        let run = || {
+            let mut p = AutoscalePolicy::new(AutoscaleConfig {
+                up_ticks: 1,
+                cooldown_ticks: 0,
+                ..AutoscaleConfig::default()
+            });
+            for t in 0..10 {
+                p.tick(t, &[snap(1, 4, 30), snap(2, 0, 0)]);
+            }
+            p.log_digest()
+        };
+        assert_eq!(run(), run());
+        let mut other = AutoscalePolicy::new(AutoscaleConfig::default());
+        other.tick(0, &[snap(1, 0, 0)]);
+        assert_ne!(run(), other.log_digest());
+        // empty log digests to the FNV offset basis, consistently
+        assert_eq!(
+            AutoscalePolicy::new(AutoscaleConfig::default()).log_digest(),
+            0xcbf2_9ce4_8422_2325
+        );
+    }
+
+    #[test]
+    fn skewed_fleet_converges_within_bounded_ticks() {
+        // a model fleet: apply the policy's own rebalances to synthetic
+        // loads and require convergence below the margin within N ticks
+        let cfg = AutoscaleConfig {
+            rebalance_margin: 4,
+            max_redirects_per_tick: 4,
+            ..AutoscaleConfig::default()
+        };
+        for seed_skew in [40usize, 25, 13] {
+            let mut p = AutoscalePolicy::new(cfg.clone());
+            let mut loads = [seed_skew, 2, 3, 1];
+            let mut converged_at = None;
+            for t in 0..64u64 {
+                let snaps: Vec<ReplicaSnapshot> = loads
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| snap(i as u32, l, 0))
+                    .collect();
+                for a in p.tick(t, &snaps) {
+                    if let AutoscaleAction::Rebalance { from, to, sessions } = a {
+                        let n = sessions.min(loads[from as usize]);
+                        loads[from as usize] -= n;
+                        loads[to as usize] += n;
+                    }
+                }
+                let (max, min) = (
+                    *loads.iter().max().unwrap(),
+                    *loads.iter().min().unwrap(),
+                );
+                if max - min < cfg.rebalance_margin {
+                    converged_at = Some(t);
+                    break;
+                }
+            }
+            let t = converged_at.expect("fleet never converged");
+            assert!(t <= 16, "skew {seed_skew} took {t} ticks to converge");
+            // and once converged it STAYS converged (no ping-pong)
+            for t in 100..110u64 {
+                let snaps: Vec<ReplicaSnapshot> = loads
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| snap(i as u32, l, 0))
+                    .collect();
+                let acts = p.tick(t, &snaps);
+                assert!(
+                    !acts.iter().any(|a| matches!(a, AutoscaleAction::Rebalance { .. })),
+                    "balanced fleet kept rebalancing: {acts:?}"
+                );
+            }
+        }
+    }
+}

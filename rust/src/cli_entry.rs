@@ -35,7 +35,46 @@ const VALUE_OPTS: &[&str] = &[
     "fault-disconnects", "pipeline-depth", "admission-queue", "tier-weights",
     "fleet", "canary", "drain-after", "fleet-addrs",
     "metrics-json", "trace", "log-level", "replicas", "network-mix",
+    "autoscale-tick", "min-replicas", "max-replicas", "scale-up-queue",
+    "scale-down-queue", "redirect-budget", "action-log", "tier-reserve",
+    "ledger-ttl", "staleness",
 ];
+
+/// The `--autoscale` knob family → a policy config. Shared by `loadgen
+/// --autoscale` (sim twin) and `serve-cloud --fleet N --autoscale`
+/// (live controller) so the SAME flags drive both sides of the
+/// determinism contract. `initial` seeds `--min-replicas` — by default
+/// the autoscaler never shrinks below the fleet it started with.
+fn autoscale_config_from(args: &Args, initial: usize) -> crate::autoscale::AutoscaleConfig {
+    let d = crate::autoscale::AutoscaleConfig::default();
+    let min_replicas = args.get_usize("min-replicas", initial).max(1);
+    crate::autoscale::AutoscaleConfig {
+        tick_ms: args.get_f64("autoscale-tick", d.tick_ms).max(1.0),
+        min_replicas,
+        max_replicas: args.get_usize("max-replicas", d.max_replicas).max(min_replicas),
+        scale_up_queue: args.get_usize("scale-up-queue", d.scale_up_queue),
+        scale_down_queue: args.get_usize("scale-down-queue", d.scale_down_queue),
+        redirect_budget: args
+            .get_usize("redirect-budget", d.redirect_budget as usize)
+            .min(u8::MAX as usize) as u8,
+        staleness_ms: args.get_f64("staleness", d.staleness_ms).max(1.0),
+        ..d
+    }
+}
+
+/// One `tick action` line per control decision plus a trailing digest
+/// comment — `loadgen --action-log` and the fleet controller's export
+/// share this format, so diffing the two files IS the byte-identity
+/// check.
+fn write_action_log(path: &str, lines: &[String], digest: u64) -> Result<()> {
+    let mut out = lines.join("\n");
+    if !lines.is_empty() {
+        out.push('\n');
+    }
+    out.push_str(&format!("# log_digest {digest:016x}\n"));
+    std::fs::write(path, out)?;
+    Ok(())
+}
 
 pub fn cli_main() -> Result<()> {
     let args = Args::from_env(VALUE_OPTS);
@@ -79,9 +118,12 @@ pub fn cli_main() -> Result<()> {
                  \x20\x20\x20\x20 [--admission-queue N]  (pending-draft bound; 0=unbounded,\n\
                  \x20\x20\x20\x20\x20 effective values 1..max-batch — the window drains at max-batch)\n\
                  \x20\x20\x20\x20 [--resume-grace MS] [--deploy-version NAME --deploy-after N]\n\
+                 \x20\x20\x20\x20 [--tier-reserve N]  (admission slots held back for QoS tier > 1, wire v7)\n\
+                 \x20\x20\x20\x20 [--ledger-ttl MS]  (handoff-ledger entry TTL; abandoned exports expire)\n\
                  \x20\x20\x20\x20 [--fleet N]  (N replicas on consecutive ports, shared handoff ledger)\n\
                  \x20\x20\x20\x20 [--canary K]  (staged rollout: deploy-version goes to K replicas first)\n\
                  \x20\x20\x20\x20 [--drain-after M]  (drain replica 0 to replica 1 after M sessions)\n\
+                 \x20\x20\x20\x20 [--autoscale]  (closed-loop fleet sizing; see autoscale knobs below)\n\
                  \x20 flexspec serve-edge [--addr 127.0.0.1:7411] [--sessions N] [--max-new N]\n\
                  \x20\x20\x20\x20 [--draft synthetic|pld] [--k K|0=adaptive] [--seed S]\n\
                  \x20\x20\x20\x20 [--mux] [--tier-weights 3,1,...] [--fault-seed S] [--fault-disconnects N]\n\
@@ -90,8 +132,13 @@ pub fn cli_main() -> Result<()> {
                  \x20 flexspec loadgen <steady|flash|diurnal|churn> [--sessions N] [--seed S]\n\
                  \x20\x20\x20\x20 [--replicas N] [--window MS] [--max-batch N] [--k K]\n\
                  \x20\x20\x20\x20 [--admission-queue N] [--network-mix 5g|4g|wifi|W5,W4,Ww]\n\
+                 \x20\x20\x20\x20 [--autoscale]  (run the control loop's sim twin; docs/AUTOSCALE.md)\n\
                  \x20\x20\x20\x20 [--selfcheck]  (run twice, assert byte-identical digests)\n\
                  \x20\x20\x20\x20 fleet-scale virtual-clock workload (docs/LOADGEN.md)\n\
+                 Autoscale knobs (loadgen --autoscale / serve-cloud --fleet N --autoscale):\n\
+                 \x20\x20\x20\x20 [--autoscale-tick MS] [--min-replicas N] [--max-replicas N]\n\
+                 \x20\x20\x20\x20 [--scale-up-queue D] [--scale-down-queue D] [--redirect-budget N]\n\
+                 \x20\x20\x20\x20 [--staleness MS] [--action-log out.log]  (tick+action lines, FNV digest)\n\
                  \x20 flexspec trace <5g|4g|wifi> <out.csv> [--samples N]\n\
                  Observability (serve / serve-cloud / serve-edge / loadgen):\n\
                  \x20\x20\x20\x20 [--trace out.jsonl]       per-round span journal (JSONL)\n\
@@ -231,14 +278,17 @@ fn serve_cloud_cmd(args: &Args) -> Result<()> {
     let backend_kind = args.get_or("backend", "synthetic");
     let seed = args.get_u64("seed", 1);
     let trace = args.get("trace").map(|_| Trace::wall());
+    let d = VerifierConfig::default();
     let vcfg = VerifierConfig {
         window_ms: args.get_f64("window", 12.0),
         max_batch: args.get_usize("max-batch", 8),
         seed,
         resume_grace_ms: args.get_f64("resume-grace", 10_000.0),
         admission_queue: args.get_usize("admission-queue", 0),
+        tier_reserve: args.get_usize("tier-reserve", d.tier_reserve),
+        ledger_ttl_ms: args.get_f64("ledger-ttl", d.ledger_ttl_ms),
         trace: trace.clone(),
-        ..Default::default()
+        ..d
     };
     let sessions_target = args.get_usize("sessions", 0);
     let deploy_version = args.get("deploy-version").map(|s| s.to_string());
@@ -343,14 +393,20 @@ fn serve_fleet_cmd(args: &Args, fleet: usize) -> Result<()> {
     let bind = args.get_or("bind", "127.0.0.1:7411");
     let backend_kind = args.get_or("backend", "synthetic");
     let seed = args.get_u64("seed", 1);
+    let d = VerifierConfig::default();
     let vcfg = VerifierConfig {
         window_ms: args.get_f64("window", 12.0),
         max_batch: args.get_usize("max-batch", 8),
         seed,
         resume_grace_ms: args.get_f64("resume-grace", 10_000.0),
         admission_queue: args.get_usize("admission-queue", 0),
-        ..Default::default()
+        tier_reserve: args.get_usize("tier-reserve", d.tier_reserve),
+        ledger_ttl_ms: args.get_f64("ledger-ttl", d.ledger_ttl_ms),
+        ..d
     };
+    let autoscale = args
+        .flag("autoscale")
+        .then(|| autoscale_config_from(args, fleet));
     let sessions_target = args.get_usize("sessions", 0);
     let deploy_version = args.get("deploy-version").map(|s| s.to_string());
     let deploy_after = args.get_usize("deploy-after", 1).max(1);
@@ -364,6 +420,7 @@ fn serve_fleet_cmd(args: &Args, fleet: usize) -> Result<()> {
         .build()?;
     rt.block_on(async move {
         let mut registry = FleetRegistry::new();
+        registry.staleness_ms = args.get_f64("staleness", registry.staleness_ms).max(1.0);
         let mut handles = Vec::new();
         for i in 0..fleet {
             let addr = bump_port(&bind, i)?;
@@ -376,7 +433,7 @@ fn serve_fleet_cmd(args: &Args, fleet: usize) -> Result<()> {
             println!("replica {i} on {actual} ({backend_kind} backend)");
             handles.push(handle);
         }
-        let addrs: Vec<String> = registry.replicas().iter().map(|r| r.addr.clone()).collect();
+        let mut addrs: Vec<String> = registry.replicas().iter().map(|r| r.addr.clone()).collect();
         println!(
             "fleet of {fleet}; edges: serve-edge --fleet-addrs {}",
             addrs.join(",")
@@ -392,10 +449,46 @@ fn serve_fleet_cmd(args: &Args, fleet: usize) -> Result<()> {
         let mut drained = false;
         let mut canary_done = false;
         let mut full_done = false;
+        // live control loop: same policy as the loadgen sim twin, on
+        // the wall clock. ScaleUp is actuated HERE (the controller does
+        // not own the backend factory or the port scheme).
+        let mut controller = autoscale.map(crate::autoscale::AutoscaleController::new);
+        let mut spawned = fleet; // total replicas ever created (port bump)
+        let t0 = std::time::Instant::now();
+        let mut next_tick_ms = 0.0f64;
         loop {
             tokio::select! {
                 _ = &mut ctrlc, if sessions_target == 0 => break,
                 _ = tokio::time::sleep(std::time::Duration::from_millis(200)) => {}
+            }
+            if let Some(ctl) = controller.as_mut() {
+                let now_ms = t0.elapsed().as_secs_f64() * 1000.0;
+                if now_ms >= next_tick_ms {
+                    next_tick_ms = now_ms + ctl.policy().config().tick_ms;
+                    let actions = ctl.step(&mut registry, now_ms, None).await?;
+                    for a in &actions {
+                        println!("autoscale: {}", a.describe());
+                        if let crate::autoscale::AutoscaleAction::ScaleUp { add } = *a {
+                            for _ in 0..add {
+                                let addr = bump_port(&bind, spawned)?;
+                                spawned += 1;
+                                let make = make_backend_for(&backend_kind, seed, &version)?;
+                                let handle = crate::serve::serve_cloud_with(
+                                    &addr,
+                                    vcfg.clone(),
+                                    Some(registry.ledger()),
+                                    make,
+                                )
+                                .await?;
+                                let actual = handle.addr.to_string();
+                                registry.register(&actual, handle.verifier());
+                                println!("autoscale: replica up on {actual}");
+                                addrs.push(actual);
+                                handles.push(handle);
+                            }
+                        }
+                    }
+                }
             }
             let mut completed = 0usize;
             for h in &handles {
@@ -425,6 +518,24 @@ fn serve_fleet_cmd(args: &Args, fleet: usize) -> Result<()> {
             }
             if sessions_target > 0 && completed >= sessions_target {
                 break;
+            }
+        }
+        if let Some(ctl) = &controller {
+            let p = ctl.policy();
+            println!(
+                "autoscale: {} ticks, {} actions, log digest {:016x}",
+                ctl.ticks(),
+                p.log().len(),
+                p.log_digest()
+            );
+            if let Some(path) = args.get("action-log") {
+                let lines: Vec<String> = p
+                    .log()
+                    .iter()
+                    .map(|(t, a)| format!("{t} {}", a.describe()))
+                    .collect();
+                write_action_log(&path, &lines, p.log_digest())?;
+                println!("wrote {} control actions to {path}", lines.len());
             }
         }
         // merged fleet snapshot while the replicas are still up — the
@@ -623,15 +734,28 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
             } else {
                 ecfg.clone()
             };
+            // wire v7 carries each stream's QoS tier in its Open, so
+            // the cloud's `tier_reserve` admission headroom lines up
+            // with the edge mux's weighted uplink; a pre-v7 cloud
+            // rejects trailing Open bytes, so the tier is clamped off
+            let wire_tier = emux.wire_version() >= 7;
             let mut tasks = Vec::new();
             for i in 0..n {
                 let prompt = gen.next_request().prompt;
+                let weight = if tier_weights.is_empty() {
+                    1
+                } else {
+                    tier_weights[i % tier_weights.len()]
+                };
                 let mut stream = if tier_weights.is_empty() {
                     emux.open_stream()
                 } else {
-                    emux.open_stream_tier(tier_weights[i % tier_weights.len()])
+                    emux.open_stream_tier(weight)
                 };
-                let ecfg = ecfg.clone();
+                let ecfg = EdgeSessionConfig {
+                    tier: if wire_tier { weight } else { 1 },
+                    ..ecfg.clone()
+                };
                 let dk = draft_kind.clone();
                 tasks.push(tokio::spawn(async move {
                     let sid = stream.stream_id();
@@ -764,6 +888,11 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         cfg.mix = ChannelMix::parse(&m)
             .ok_or_else(|| anyhow::anyhow!("bad --network-mix '{m}' (5g|4g|wifi or W5,W4,Ww)"))?;
     }
+    if args.flag("autoscale") {
+        cfg.autoscale = Some(autoscale_config_from(args, cfg.replicas));
+    } else if args.get("action-log").is_some() {
+        bail!("--action-log needs --autoscale (there is no control loop without it)");
+    }
     let trace = args.get("trace").map(|_| Trace::new(VirtualClock::shared()));
     println!(
         "loadgen/{}: {} sessions on {} replicas, mix {} (seed {seed})",
@@ -796,6 +925,10 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
             );
         }
         println!("  selfcheck        ok (second run digest {:016x})", again.digest());
+    }
+    if let (Some(a), Some(path)) = (&rep.autoscale, args.get("action-log")) {
+        write_action_log(&path, &a.log_lines, a.log_digest)?;
+        println!("wrote {} control actions to {path}", a.log_lines.len());
     }
     if let Some(path) = args.get("metrics-json") {
         std::fs::write(&path, rep.to_json().to_string_pretty())?;

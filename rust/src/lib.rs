@@ -27,6 +27,7 @@
 //! reproduces the simulator's token counts exactly — experiments stay
 //! reproducible while the transport is real.
 
+pub mod autoscale;
 pub mod channel;
 pub mod coordinator;
 pub mod devices;

@@ -33,10 +33,26 @@
 //! heap breaks time ties by sequence number, so reports — including
 //! [`LoadReport::digest`] — are byte-identical across runs and across
 //! machines.
+//!
+//! Autoscale twin: with [`LoadConfig::autoscale`] set, the SAME
+//! [`AutoscalePolicy`] that drives the live fleet controller ticks on
+//! the virtual clock ([`Ev::AutoscaleTick`]): scale-ups grow the
+//! replica table, scale-downs drain a replica (its sessions evacuate
+//! at their next head round, exactly where the live verifier exports),
+//! rebalance directives move up to `sessions` pinned sessions per tick
+//! under the per-session redirect budget, and Busy deferrals quote the
+//! queue-depth-adaptive [`adaptive_retry_after_ms`] instead of the
+//! static window. The policy's action log rides the report
+//! ([`AutoscaleReport::log_digest`]), extending the byte-identity pin
+//! to the control plane. With `autoscale == None` every draw, event,
+//! and counter is exactly the pre-autoscale harness.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
+use crate::autoscale::{
+    adaptive_retry_after_ms, AutoscaleAction, AutoscalePolicy, ReplicaSnapshot, CONTROL_SESSION,
+};
 use crate::channel::{ChannelState, NetworkProfile};
 use crate::devices::{A800_70B, JETSON_ORIN};
 use crate::metrics::ServingMetrics;
@@ -72,6 +88,9 @@ enum Ev {
     Verdict { sid: u32, tau: u8, eos: bool },
     /// Busy-deferral backoff expired: resend the draft.
     Retry { sid: u32 },
+    /// One control-loop period elapsed: feed the autoscale policy a
+    /// snapshot of the replica table and apply its actions.
+    AutoscaleTick,
 }
 
 #[derive(Debug)]
@@ -101,7 +120,7 @@ impl Ord for Sched {
     }
 }
 
-/// Compact per-session state (~88 bytes): at 10^6 sessions the
+/// Compact per-session state (~96 bytes): at 10^6 sessions the
 /// population fits in well under 100 MB.
 struct Sess {
     rng: SplitMix64,
@@ -120,6 +139,11 @@ struct Sess {
     replica: u16,
     class: u8,
     busy_attempts: u8,
+    /// Rebalance redirects consumed inside the current redirect window
+    /// (autoscale only; the per-session budget gate).
+    redirects_used: u8,
+    /// Which redirect window `redirects_used` counts against.
+    redirect_epoch: u32,
     fading: bool,
     done: bool,
 }
@@ -129,6 +153,40 @@ struct Replica {
     backlog: VecDeque<u32>,
     busy: bool,
     close_armed: bool,
+    /// Live sessions pinned here (autoscale sizing + drain tracking).
+    pinned: usize,
+    /// Draining: no placement, sessions evacuate at their head rounds.
+    draining: bool,
+    /// Fully drained and removed from service (id stays stable).
+    retired: bool,
+    /// Armed rebalance directive: up to `.1` sessions move to `.0` at
+    /// their next head round. Re-armed (or cleared) every tick.
+    rebalance_out: Option<(u16, usize)>,
+}
+
+/// What the autoscale twin did during one run (present iff
+/// [`LoadConfig::autoscale`] was set).
+#[derive(Debug, Clone)]
+pub struct AutoscaleReport {
+    /// Replicas spawned by `ScaleUp` actions.
+    pub replicas_added: usize,
+    /// Replicas fully drained and retired after `ScaleDown`.
+    pub replicas_retired: usize,
+    /// Sessions moved by the autoscaler (rebalance + drain evacuation).
+    pub redirects: usize,
+    /// Non-retired replicas when the run drained.
+    pub final_replicas: usize,
+    /// Total actions in the policy log.
+    pub actions: usize,
+    /// Most rebalance redirects any single session absorbed within one
+    /// redirect window — the budget pin (`<= redirect_budget`).
+    pub peak_session_redirects: u8,
+    /// [`AutoscalePolicy::log_digest`] — byte-identity pin for the
+    /// action log.
+    pub log_digest: u64,
+    /// Human-readable `tick action` lines for `--action-log` export.
+    /// Identity is pinned by `log_digest`; these are not re-digested.
+    pub log_lines: Vec<String>,
 }
 
 /// Everything one load run reports.
@@ -157,6 +215,15 @@ pub struct LoadReport {
     pub virtual_ms: f64,
     /// Pure transmission airtime (up + down, ex propagation), ms.
     pub air_ms: f64,
+    /// Smallest `retry_after_ms` quoted on a Busy deferral (0 when
+    /// none were sent). Static mode quotes one window; autoscale mode
+    /// quotes the queue-depth-adaptive value, so the min/max spread
+    /// shows how far the backlog pushed the hint.
+    pub retry_after_min_ms: u32,
+    /// Largest `retry_after_ms` quoted on a Busy deferral.
+    pub retry_after_max_ms: u32,
+    /// Autoscale-twin summary (`None` without [`LoadConfig::autoscale`]).
+    pub autoscale: Option<AutoscaleReport>,
 }
 
 impl LoadReport {
@@ -204,6 +271,17 @@ impl LoadReport {
         mix(self.events);
         mix(self.virtual_ms.to_bits());
         mix(self.air_ms.to_bits());
+        mix(self.retry_after_min_ms as u64);
+        mix(self.retry_after_max_ms as u64);
+        if let Some(a) = &self.autoscale {
+            mix(a.replicas_added as u64);
+            mix(a.replicas_retired as u64);
+            mix(a.redirects as u64);
+            mix(a.final_replicas as u64);
+            mix(a.actions as u64);
+            mix(a.peak_session_redirects as u64);
+            mix(a.log_digest);
+        }
         for q in [
             self.ttft_ms.quantile(0.5),
             self.ttft_ms.quantile(0.99),
@@ -242,6 +320,26 @@ impl LoadReport {
             ("events", Json::Num(self.events as f64)),
             ("virtual_ms", Json::Num(self.virtual_ms)),
             ("air_ms_per_token", Json::Num(self.air_ms_per_token())),
+            ("retry_after_min_ms", Json::Num(self.retry_after_min_ms as f64)),
+            ("retry_after_max_ms", Json::Num(self.retry_after_max_ms as f64)),
+            (
+                "autoscale",
+                match &self.autoscale {
+                    None => Json::Null,
+                    Some(a) => Json::obj(vec![
+                        ("replicas_added", Json::Num(a.replicas_added as f64)),
+                        ("replicas_retired", Json::Num(a.replicas_retired as f64)),
+                        ("redirects", Json::Num(a.redirects as f64)),
+                        ("final_replicas", Json::Num(a.final_replicas as f64)),
+                        ("actions", Json::Num(a.actions as f64)),
+                        (
+                            "peak_session_redirects",
+                            Json::Num(a.peak_session_redirects as f64),
+                        ),
+                        ("log_digest", Json::Str(format!("{:016x}", a.log_digest))),
+                    ]),
+                },
+            ),
             ("ttft_ms", q(&self.ttft_ms)),
             ("ms_per_token", q(&self.ms_per_token)),
             ("digest", Json::Str(format!("{:016x}", self.digest()))),
@@ -275,6 +373,24 @@ impl LoadReport {
             self.air_ms_per_token(),
             self.digest(),
         );
+        if self.retry_after_max_ms > 0 {
+            s.push_str(&format!(
+                "\n\x20 busy hints      retry_after {}–{} ms",
+                self.retry_after_min_ms, self.retry_after_max_ms
+            ));
+        }
+        if let Some(a) = &self.autoscale {
+            s.push_str(&format!(
+                "\n\x20 autoscale       +{} replicas, {} retired, {} redirects, \
+                 {} final, {} actions, log {:016x}",
+                a.replicas_added,
+                a.replicas_retired,
+                a.redirects,
+                a.final_replicas,
+                a.actions,
+                a.log_digest,
+            ));
+        }
         s.push('\n');
         s.push_str(&self.metrics.render("  serving counters"));
         s
@@ -297,6 +413,32 @@ fn chan(profiles: &[NetworkProfile; 3], s: &mut Sess) -> ChannelState {
         &mut s.fading,
         &mut s.rng,
     )
+}
+
+/// Least-loaded active replica other than `not` — where a draining
+/// replica's sessions evacuate to (mirrors `FleetRegistry::pick_peer`
+/// with the sim's always-fresh snapshots; ties break by id).
+fn least_loaded_active(replicas: &[Replica], not: usize) -> Option<u16> {
+    replicas
+        .iter()
+        .enumerate()
+        .filter(|&(i, r)| i != not && !r.draining && !r.retired)
+        .min_by_key(|&(i, r)| (r.pinned + r.backlog.len(), i))
+        .map(|(i, _)| i as u16)
+}
+
+/// Next active replica after `from` in cyclic id order — the scenario
+/// `redirect_p` hop under autoscale, which must skip drained/retired
+/// ids the static `(r + 1) % replicas` hop could land on.
+fn next_active(replicas: &[Replica], from: u16) -> u16 {
+    let n = replicas.len();
+    for step in 1..=n {
+        let i = (from as usize + step) % n;
+        if !replicas[i].draining && !replicas[i].retired {
+            return i as u16;
+        }
+    }
+    from
 }
 
 /// Run a workload to completion. See [`run_with`] for tracing.
@@ -338,6 +480,12 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
     let mut events = 0u64;
     let mut now = 0.0f64;
     let max_events = cfg.sessions as u64 * MAX_EVENTS_PER_SESSION + 10_000;
+    // autoscale-twin state (inert when cfg.autoscale is None)
+    let mut autoscaler = cfg.autoscale.as_ref().map(|ac| AutoscalePolicy::new(ac.clone()));
+    let mut tick_no = 0u64;
+    let (mut replicas_added, mut replicas_retired, mut auto_redirects) = (0usize, 0usize, 0usize);
+    let mut peak_session_redirects = 0u8;
+    let (mut retry_after_min, mut retry_after_max) = (u32::MAX, 0u32);
 
     let traced = |sid: u32| sid < TRACE_SESSIONS;
     let span = |trace: Option<&Trace>, t: f64, sid: u32, round: u32, kind: SpanKind, dur: f64, a: u32, b: u32| {
@@ -350,6 +498,10 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
     };
 
     push(&mut heap, &mut seq, arrivals.next_arrival_ms(), Ev::Admit);
+    if let Some(ac) = &cfg.autoscale {
+        assert!(ac.max_replicas <= u16::MAX as usize, "autoscale ceiling exceeds u16 ids");
+        push(&mut heap, &mut seq, ac.tick_ms, Ev::AutoscaleTick);
+    }
 
     while let Some(Reverse(Sched { at_ms: t, ev, .. })) = heap.pop() {
         now = t;
@@ -367,7 +519,21 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                     bounded_pareto(&mut srng, cfg.prompt_xm, cfg.prompt_alpha, cfg.prompt_cap)
                         .round() as u16;
                 let accept = cfg.draw_accept(&mut srng) as f32;
-                let replica = srng.next_range(cfg.replicas as u64) as u16;
+                // same draw position either way; under autoscale it
+                // lands among the currently-ACTIVE replicas only
+                let replica = if cfg.autoscale.is_some() {
+                    let eligible: Vec<u16> = replicas
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, r)| !r.draining && !r.retired)
+                        .map(|(i, _)| i as u16)
+                        .collect();
+                    debug_assert!(!eligible.is_empty(), "no active replica to admit into");
+                    eligible[srng.next_range(eligible.len() as u64) as usize]
+                } else {
+                    srng.next_range(cfg.replicas as u64) as u16
+                };
+                replicas[replica as usize].pinned += 1;
                 let mut s = Sess {
                     rng: srng,
                     arrived_ms: t,
@@ -383,6 +549,8 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                     replica,
                     class,
                     busy_attempts: 0,
+                    redirects_used: 0,
+                    redirect_epoch: 0,
                     fading: false,
                     done: false,
                 };
@@ -407,6 +575,75 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                 let s = &mut sessions[sid as usize];
                 debug_assert!(!s.done);
                 metrics.drafts_received += 1;
+                // autoscale seam: a draining source evacuates the
+                // session at its head round, an armed rebalance
+                // directive moves it under the per-session budget —
+                // both answer the draft with the wire's Redirect
+                // (swallowed, redrafted at the target), exactly where
+                // the live verifier exports
+                if let Some(ac) = &cfg.autoscale {
+                    let from = s.replica as usize;
+                    let target: Option<u16> = if replicas[from].draining {
+                        least_loaded_active(&replicas, from)
+                    } else if let Some((to, left)) = replicas[from].rebalance_out {
+                        let dst = &replicas[to as usize];
+                        if left == 0 || dst.draining || dst.retired {
+                            None
+                        } else {
+                            let epoch =
+                                (tick_no / ac.redirect_window_ticks.max(1) as u64) as u32;
+                            if s.redirect_epoch != epoch {
+                                s.redirect_epoch = epoch;
+                                s.redirects_used = 0;
+                            }
+                            if s.redirects_used < ac.redirect_budget {
+                                s.redirects_used += 1;
+                                peak_session_redirects =
+                                    peak_session_redirects.max(s.redirects_used);
+                                replicas[from].rebalance_out = Some((to, left - 1));
+                                Some(to)
+                            } else {
+                                None
+                            }
+                        }
+                    } else {
+                        None
+                    };
+                    if let Some(to) = target {
+                        metrics.drafts_swallowed += 1;
+                        metrics.sessions_redirected += 1;
+                        metrics.sessions_imported += 1;
+                        handoffs += 1;
+                        auto_redirects += 1;
+                        replicas[from].pinned -= 1;
+                        replicas[to as usize].pinned += 1;
+                        s.replica = to;
+                        span(
+                            trace,
+                            t,
+                            sid,
+                            s.rounds as u32,
+                            SpanKind::Redirect,
+                            cfg.handoff_ms,
+                            to as u32,
+                            1,
+                        );
+                        // the edge follows the redirect and redrafts
+                        // at the target after the handoff
+                        let ch = chan(&profiles, s);
+                        let up = ch.up_ms(draft_bytes);
+                        metrics.bytes_up += draft_bytes;
+                        air_ms += up;
+                        s.send_ms = t + cfg.handoff_ms;
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            t + cfg.handoff_ms + draft_ms + up + ch.prop_ms,
+                            Ev::DraftArrive { sid },
+                        );
+                        continue;
+                    }
+                }
                 let r = &mut replicas[s.replica as usize];
                 if cfg.admission_queue > 0 && r.backlog.len() >= cfg.admission_queue {
                     metrics.drafts_busy += 1;
@@ -417,13 +654,25 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                         s.done = true;
                         live -= 1;
                         metrics.sessions_aborted += 1;
+                        r.pinned -= 1;
                     } else {
-                        // the verifier suggests waiting out the current
-                        // window; the edge escalates on ITS schedule
-                        let delay = busy_backoff_ms(
-                            cfg.window_ms.ceil() as u32,
-                            s.busy_attempts as usize - 1,
-                        ) as f64;
+                        // the verifier suggests a retry horizon — one
+                        // window statically, queue-depth-adaptive under
+                        // autoscale (the live verifier's same formula)
+                        // — and the edge escalates on ITS schedule
+                        let base = if cfg.autoscale.is_some() {
+                            adaptive_retry_after_ms(
+                                cfg.window_ms,
+                                r.backlog.len(),
+                                cfg.max_batch,
+                            )
+                        } else {
+                            cfg.window_ms.ceil() as u32
+                        };
+                        retry_after_min = retry_after_min.min(base);
+                        retry_after_max = retry_after_max.max(base);
+                        let delay =
+                            busy_backoff_ms(base, s.busy_attempts as usize - 1) as f64;
                         push(&mut heap, &mut seq, t + delay, Ev::Retry { sid });
                     }
                 } else {
@@ -556,19 +805,29 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                         .session_acceptance
                         .add((s.committed - s.rounds) as f64 / drafted);
                     ms_per_token.record((t - s.arrived_ms) / s.committed as f64);
+                    replicas[s.replica as usize].pinned -= 1;
                 } else if s.rng.chance(cfg.abort_p) {
                     s.done = true;
                     live -= 1;
                     metrics.sessions_aborted += 1;
+                    replicas[s.replica as usize].pinned -= 1;
                 } else {
                     let mut extra = 0.0;
                     if s.rng.chance(cfg.redirect_p) {
-                        // ledger handoff to the next replica: the old
-                        // one redirects, the new one imports
+                        // ledger handoff to the next replica (the next
+                        // ACTIVE one under autoscale): the old replica
+                        // redirects, the new one imports
                         metrics.sessions_redirected += 1;
                         metrics.sessions_imported += 1;
                         handoffs += 1;
-                        s.replica = (s.replica + 1) % cfg.replicas as u16;
+                        let to = if cfg.autoscale.is_some() {
+                            next_active(&replicas, s.replica)
+                        } else {
+                            (s.replica + 1) % cfg.replicas as u16
+                        };
+                        replicas[s.replica as usize].pinned -= 1;
+                        replicas[to as usize].pinned += 1;
+                        s.replica = to;
                         extra = cfg.handoff_ms;
                         span(
                             trace,
@@ -594,10 +853,90 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                     );
                 }
             }
+            Ev::AutoscaleTick => {
+                let ac = cfg.autoscale.as_ref().expect("tick without autoscale config");
+                let policy = autoscaler.as_mut().expect("tick without autoscale policy");
+                // rebalance directives live for exactly one tick period
+                for r in replicas.iter_mut() {
+                    r.rebalance_out = None;
+                }
+                let snaps: Vec<ReplicaSnapshot> = replicas
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, r)| !r.retired)
+                    .map(|(i, r)| ReplicaSnapshot {
+                        id: i as u32,
+                        active: r.pinned,
+                        queue: r.backlog.len(),
+                        draining: r.draining,
+                        // the sim's telemetry is always fresh; staleness
+                        // is exercised by the live controller's tests
+                        age_ms: 0.0,
+                    })
+                    .collect();
+                for a in policy.tick(tick_no, &snaps) {
+                    // control-plane spans bypass the per-session trace
+                    // gate: CONTROL_SESSION marks them in the journal
+                    if let Some(tr) = trace {
+                        let (arg, _, _) = a.args();
+                        tr.clock().advance_to(t);
+                        tr.record(
+                            CONTROL_SESSION,
+                            tick_no as u32,
+                            SpanKind::Autoscale,
+                            0.0,
+                            a.code() as u32,
+                            arg as u32,
+                        );
+                    }
+                    match a {
+                        AutoscaleAction::ScaleUp { add } => {
+                            for _ in 0..add {
+                                replicas.push(Replica::default());
+                            }
+                            replicas_added += add;
+                        }
+                        AutoscaleAction::ScaleDown { victim } => {
+                            replicas[victim as usize].draining = true;
+                        }
+                        AutoscaleAction::Rebalance { from, to, sessions } => {
+                            replicas[from as usize].rebalance_out =
+                                Some((to as u16, sessions));
+                        }
+                    }
+                }
+                // a drained replica retires once nothing is pinned,
+                // queued, or verifying there (its id stays stable)
+                for r in replicas.iter_mut() {
+                    if r.draining && r.pinned == 0 && r.backlog.is_empty() && !r.busy {
+                        r.draining = false;
+                        r.retired = true;
+                        replicas_retired += 1;
+                    }
+                }
+                tick_no += 1;
+                if live > 0 || sessions.len() < cfg.sessions {
+                    push(&mut heap, &mut seq, t + ac.tick_ms, Ev::AutoscaleTick);
+                }
+            }
         }
     }
 
     debug_assert_eq!(live, 0, "sessions still live after the heap drained");
+    let autoscale = autoscaler.map(|p| AutoscaleReport {
+        replicas_added,
+        replicas_retired,
+        redirects: auto_redirects,
+        final_replicas: replicas.iter().filter(|r| !r.retired).count(),
+        actions: p.log().len(),
+        peak_session_redirects,
+        log_digest: p.log_digest(),
+        log_lines: p
+            .log()
+            .iter()
+            .map(|(t, a)| format!("{t} {}", a.describe()))
+            .collect(),
+    });
     LoadReport {
         scenario: cfg.scenario.label(),
         sessions: cfg.sessions,
@@ -612,6 +951,9 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
         events,
         virtual_ms: now,
         air_ms,
+        retry_after_min_ms: if retry_after_max == 0 { 0 } else { retry_after_min },
+        retry_after_max_ms: retry_after_max,
+        autoscale,
     }
 }
 
@@ -631,6 +973,9 @@ mod tests {
         assert_eq!(a.virtual_ms.to_bits(), b.virtual_ms.to_bits());
         let v = a.metrics.invariant_violations(0, 0);
         assert!(v.is_empty(), "{v:?}");
+        // autoscale off: the twin's fields are inert
+        assert!(a.autoscale.is_none());
+        assert_eq!((a.retry_after_min_ms, a.retry_after_max_ms), (0, 0));
         assert_eq!(a.metrics.sessions_opened, 2000);
         // steady never aborts (no admission bound, abort_p == 0), so
         // every session completes and has a first token
@@ -692,6 +1037,96 @@ mod tests {
         assert!(tr.len() > 0, "no spans recorded");
         // tracing must not perturb the simulation
         assert_eq!(r.digest(), run(&cfg).digest());
+    }
+
+    use crate::autoscale::AutoscaleConfig;
+
+    /// Flash preset with a bounded admission queue and an aggressive
+    /// autoscaler — the shape the bench's flash-crowd cell runs.
+    fn autoscaled_flash(sessions: usize, seed: u64) -> LoadConfig {
+        let mut cfg = Scenario::Flash.config(sessions, seed);
+        cfg.admission_queue = 48;
+        cfg.autoscale = Some(AutoscaleConfig {
+            tick_ms: 500.0,
+            min_replicas: cfg.replicas,
+            max_replicas: 256,
+            scale_up_queue: 4,
+            up_ticks: 2,
+            cooldown_ticks: 2,
+            max_scale_step: 8,
+            down_ticks: 20,
+            ..AutoscaleConfig::default()
+        });
+        cfg
+    }
+
+    #[test]
+    fn autoscale_twin_is_deterministic_and_grows_under_flash() {
+        let cfg = autoscaled_flash(6000, 3);
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.digest(), b.digest());
+        let (ar, br) = (a.autoscale.as_ref().unwrap(), b.autoscale.as_ref().unwrap());
+        assert_eq!(ar.log_digest, br.log_digest, "action log must be byte-identical");
+        assert!(ar.replicas_added > 0, "flash crowd never triggered a scale-up");
+        assert!(ar.final_replicas > cfg.replicas);
+        assert!(ar.redirects > 0, "grown fleet never rebalanced");
+        assert!(
+            ar.peak_session_redirects <= cfg.autoscale.as_ref().unwrap().redirect_budget,
+            "per-session redirect budget exceeded: {}",
+            ar.peak_session_redirects
+        );
+        let v = a.metrics.invariant_violations(0, 0);
+        assert!(v.is_empty(), "{v:?}");
+        // autoscaler handoffs ride the same accounting as scenario ones
+        assert_eq!(a.handoffs, a.metrics.sessions_redirected);
+        assert_eq!(a.metrics.sessions_redirected, a.metrics.sessions_imported);
+        // the bounded queue deferred drafts and the hints were adaptive:
+        // deeper-than-one-window quotes appear under the flash backlog
+        assert!(a.metrics.drafts_busy > 0, "flash never hit the admission bound");
+        assert!(a.retry_after_max_ms > cfg.window_ms.ceil() as u32);
+        assert!(a.retry_after_min_ms >= cfg.window_ms.ceil() as u32);
+    }
+
+    #[test]
+    fn scale_down_drains_without_stranding_sessions() {
+        let mut cfg = Scenario::Steady.config(1500, 17);
+        cfg.autoscale = Some(AutoscaleConfig {
+            min_replicas: 1,
+            down_ticks: 3,
+            cooldown_ticks: 1,
+            ..AutoscaleConfig::default()
+        });
+        let r = run(&cfg);
+        let a = r.autoscale.as_ref().unwrap();
+        assert!(a.replicas_retired > 0, "idle fleet never scaled down");
+        assert!(a.final_replicas >= 1);
+        // no session is stranded on a retired replica: every admitted
+        // session still completes (steady neither aborts nor bounds
+        // admission), and the conservation audit balances
+        assert_eq!(r.metrics.sessions_completed, r.metrics.sessions_opened);
+        let v = r.metrics.invariant_violations(0, 0);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn autoscale_twin_traces_control_actions() {
+        let cfg = autoscaled_flash(4000, 17);
+        let tr = Trace::new(VirtualClock::shared());
+        let r = run_with(&cfg, Some(&tr));
+        assert!(r.autoscale.as_ref().unwrap().replicas_added > 0);
+        assert_eq!(
+            tr.count(CONTROL_SESSION, SpanKind::Autoscale),
+            r.autoscale.as_ref().unwrap().actions,
+            "every control action must journal one span"
+        );
+        // tracing must not perturb the simulation or the action log
+        let quiet = run(&cfg);
+        assert_eq!(r.digest(), quiet.digest());
+        assert_eq!(
+            r.autoscale.as_ref().unwrap().log_digest,
+            quiet.autoscale.as_ref().unwrap().log_digest
+        );
     }
 
     #[test]

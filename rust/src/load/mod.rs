@@ -40,5 +40,5 @@ pub mod harness;
 pub mod population;
 
 pub use arrival::{bounded_pareto, ArrivalProcess, ArrivalShape};
-pub use harness::{run, run_with, LoadReport, TRACE_SESSIONS};
+pub use harness::{run, run_with, AutoscaleReport, LoadReport, TRACE_SESSIONS};
 pub use population::{sample_channel, ChannelMix, LoadConfig, Scenario};

@@ -212,6 +212,7 @@ impl Scenario {
             abort_p,
             redirect_p,
             handoff_ms: 40.0,
+            autoscale: None,
         }
     }
 }
@@ -250,6 +251,12 @@ pub struct LoadConfig {
     pub redirect_p: f64,
     /// Control-plane cost of one ledger handoff, ms.
     pub handoff_ms: f64,
+    /// Closed-loop autoscale twin: `Some` runs the live fleet's own
+    /// [`AutoscalePolicy`](crate::autoscale::AutoscalePolicy) on the
+    /// virtual clock (replica scale-up/down, rebalancing, adaptive
+    /// Busy hints). `None` (every preset) is the fixed-fleet harness,
+    /// digest-identical to the pre-autoscale one.
+    pub autoscale: Option<crate::autoscale::AutoscaleConfig>,
 }
 
 impl LoadConfig {

@@ -175,6 +175,15 @@ pub struct ServingMetrics {
     /// Finished-session residues reclaimed by the periodic sweep after
     /// their resume-grace window expired.
     pub residues_expired: usize,
+    /// Fleet-ledger entries aged out by this replica's TTL sweep
+    /// (`SessionLedger::expire_before`): exported sessions whose
+    /// exporter died before its grace-window reap fired and whose edge
+    /// never resumed. In-tree every expired entry was once somebody's
+    /// `sessions_redirected`; the conservation audit checks the
+    /// per-replica common case (a replica predominantly collects its
+    /// own abandoned exports — cross-replica collection would need a
+    /// fleet-level rollup, noted as headroom in `docs/AUTOSCALE.md`).
+    pub ledger_expired: usize,
     /// Verified rounds across sessions.
     pub rounds: usize,
     /// Verification batches closed (each one `verify_batch` call).
@@ -319,6 +328,16 @@ impl ServingMetrics {
                 self.batches
             ));
         }
+        // every TTL-expired ledger entry was once an export; a replica
+        // sweeping its own orphans can never expire more than it
+        // redirected (see the `ledger_expired` field docs for the
+        // cross-replica caveat)
+        if self.ledger_expired > self.sessions_redirected {
+            v.push(format!(
+                "ledger conservation: expired {} > redirected {}",
+                self.ledger_expired, self.sessions_redirected
+            ));
+        }
         v
     }
 
@@ -353,6 +372,7 @@ impl ServingMetrics {
             ("sessions_redirected", n(self.sessions_redirected)),
             ("sessions_imported", n(self.sessions_imported)),
             ("sessions_imported_done", n(self.sessions_imported_done)),
+            ("ledger_expired", n(self.ledger_expired)),
             ("handshakes_rejected", n(self.handshakes_rejected)),
             ("verdicts_replayed", n(self.verdicts_replayed)),
             ("residues_expired", n(self.residues_expired)),
@@ -383,7 +403,7 @@ impl ServingMetrics {
             "{title}\n\
              \x20 sessions         {} completed / {} opened ({} aborted, {} handshakes rejected)\n\
              \x20 resume           {} parked, {} resumed, {} evicted, {} verdicts replayed, {} residues expired\n\
-             \x20 fleet            {} redirected out, {} imported\n\
+             \x20 fleet            {} redirected out, {} imported, {} ledger entries expired\n\
              \x20 pipeline         {} rounds pipelined, {} drafts cancelled, {} draft tokens wasted\n\
              \x20 rounds           {} in {} batches (mean occupancy {:.2})\n\
              \x20 admission        {} busy deferrals, {} drafts orphaned, queue depth mean {:.2} / p95 {:.0}\n\
@@ -401,6 +421,7 @@ impl ServingMetrics {
             self.residues_expired,
             self.sessions_redirected,
             self.sessions_imported,
+            self.ledger_expired,
             self.rounds_pipelined,
             self.drafts_cancelled,
             self.draft_tokens_wasted,
@@ -527,12 +548,13 @@ mod tests {
         m.drafts_orphaned = 1;
         m.sessions_redirected = 3;
         m.sessions_imported = 2;
+        m.ledger_expired = 1;
         m.queue_depth.add(2.0);
         let r = m.render("serving");
         assert!(r.contains("6 committed"));
         assert!(r.contains("hot-swaps"));
         assert!(r.contains("2 parked, 1 resumed, 1 evicted, 3 verdicts replayed, 1 residues expired"));
-        assert!(r.contains("3 redirected out, 2 imported"));
+        assert!(r.contains("3 redirected out, 2 imported, 1 ledger entries expired"));
         assert!(r.contains("4 rounds pipelined, 2 drafts cancelled, 8 draft tokens wasted"));
         assert!(r.contains("5 busy deferrals, 1 drafts orphaned"));
     }
@@ -619,6 +641,18 @@ mod tests {
     }
 
     #[test]
+    fn invariant_ledger_expiry_bound() {
+        // expiring exactly what was redirected balances...
+        let mut m = balanced();
+        m.ledger_expired = m.sessions_redirected;
+        assert!(m.invariant_violations(0, 0).is_empty());
+        // ...expiring MORE than this replica ever exported cannot
+        m.ledger_expired = m.sessions_redirected + 1;
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("ledger conservation")), "{v:?}");
+    }
+
+    #[test]
     #[should_panic(expected = "conservation audit failed")]
     #[cfg(debug_assertions)]
     fn check_invariants_asserts_in_debug() {
@@ -629,10 +663,12 @@ mod tests {
 
     #[test]
     fn metrics_json_snapshot() {
-        let m = balanced();
+        let mut m = balanced();
+        m.ledger_expired = 1;
         let j = m.to_json();
         assert_eq!(j.get("rounds").and_then(|x| x.as_usize()), Some(5));
         assert_eq!(j.get("drafts_received").and_then(|x| x.as_usize()), Some(10));
+        assert_eq!(j.get("ledger_expired").and_then(|x| x.as_usize()), Some(1));
         assert!(j.get("latency").and_then(|l| l.get("verify_ms")).is_some());
         // render appends latency lines once histograms fill
         assert!(m.render("t").contains("latency/verify"));

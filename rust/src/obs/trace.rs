@@ -57,10 +57,16 @@ pub enum SpanKind {
     Import = 9,
     /// Edge rerooted its draft context after a handoff.
     Reroot = 10,
+    /// Autoscale control action (journaled under the pseudo session
+    /// `autoscale::CONTROL_SESSION`): `round` = control tick, `a` =
+    /// action code (1 scale-up, 2 scale-down, 3 rebalance), `b` = the
+    /// action's first argument (replicas added / victim id / source
+    /// id).
+    Autoscale = 11,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 11] = [
+    pub const ALL: [SpanKind; 12] = [
         SpanKind::Draft,
         SpanKind::Uplink,
         SpanKind::QueueWait,
@@ -72,6 +78,7 @@ impl SpanKind {
         SpanKind::Redirect,
         SpanKind::Import,
         SpanKind::Reroot,
+        SpanKind::Autoscale,
     ];
 
     pub fn name(self) -> &'static str {
@@ -87,6 +94,7 @@ impl SpanKind {
             SpanKind::Redirect => "redirect",
             SpanKind::Import => "import",
             SpanKind::Reroot => "reroot",
+            SpanKind::Autoscale => "autoscale",
         }
     }
 }

@@ -82,7 +82,12 @@ use anyhow::{bail, Result};
 /// serving counters plus its mergeable latency histograms
 /// (`obs::LatencySummary`). Read-only and connection-scoped: a lost or
 /// reordered `Stats` exchange can never affect a committed token.
-pub const WIRE_VERSION: u16 = 6;
+/// v7: QoS tiers — `Open` grows an OPTIONAL trailing tier varint
+/// (encoded only when != 1, so a default-tier v7 open is byte-identical
+/// to v6); the cloud reserves `tier_reserve` admission slots for
+/// tier > 1 sessions, mirroring the edge mux's weighted tiers. Tiers
+/// only shape Busy backpressure — committed tokens never change.
+pub const WIRE_VERSION: u16 = 7;
 
 /// Oldest peer version the handshake still accepts. A v2 peer never
 /// sends spec-tagged drafts or `Cancel` frames, and the cloud sends it
@@ -467,6 +472,13 @@ pub struct OpenMsg {
     /// cloud reattaches the already-created session instead of leaking a
     /// second KV session.
     pub nonce: u64,
+    /// QoS tier (wire v7): 1 = default/bulk; higher tiers bypass the
+    /// cloud's `tier_reserve` admission headroom. Encoded as an
+    /// OPTIONAL trailing varint, present only when != 1 — a
+    /// default-tier open is byte-identical to its v6 encoding, and a
+    /// pre-v7 decoder (which rejects trailing bytes) never sees a tier
+    /// because edges only send one after negotiating >= 7.
+    pub tier: u32,
 }
 
 impl OpenMsg {
@@ -477,6 +489,9 @@ impl OpenMsg {
         write_varint(&mut out, self.prompt.len() as u64);
         for &t in &self.prompt {
             write_varint(&mut out, t as u64);
+        }
+        if self.tier != 1 {
+            write_varint(&mut out, self.tier as u64);
         }
         out
     }
@@ -493,6 +508,12 @@ impl OpenMsg {
         for _ in 0..n {
             prompt.push(read_varint(buf, &mut pos)? as i32);
         }
+        // optional v7 tier tail (absent = tier 1)
+        let tier = if pos < buf.len() {
+            read_varint(buf, &mut pos)? as u32
+        } else {
+            1
+        };
         if pos != buf.len() {
             bail!("open: trailing bytes");
         }
@@ -500,6 +521,7 @@ impl OpenMsg {
             prompt,
             max_new,
             nonce,
+            tier,
         })
     }
 }
@@ -1168,6 +1190,7 @@ mod tests {
             prompt: vec![1, 64, 127, 511, 3],
             max_new: 32,
             nonce: 0xDEAD_BEEF_CAFE,
+            tier: 1,
         };
         assert_eq!(OpenMsg::decode(&o.encode()).unwrap(), o);
         let a = OpenAck {
@@ -1177,6 +1200,39 @@ mod tests {
         };
         assert_eq!(OpenAck::decode(&a.encode()).unwrap(), a);
         assert!(OpenMsg::decode(&o.encode()[..3]).is_err());
+    }
+
+    #[test]
+    fn open_tier_tail_is_optional_and_backward_compatible() {
+        // default tier encodes NO tail: byte-identical to the v6 layout
+        let default_tier = OpenMsg {
+            prompt: vec![1, 70, 71],
+            max_new: 16,
+            nonce: 9,
+            tier: 1,
+        };
+        let bytes = default_tier.encode();
+        let mut v6_bytes = Vec::new();
+        super::super::codec::write_u32(&mut v6_bytes, 16);
+        super::super::codec::write_varint(&mut v6_bytes, 9);
+        super::super::codec::write_varint(&mut v6_bytes, 3);
+        for t in [1u64, 70, 71] {
+            super::super::codec::write_varint(&mut v6_bytes, t);
+        }
+        assert_eq!(bytes, v6_bytes, "tier 1 must not change the encoding");
+        assert_eq!(OpenMsg::decode(&bytes).unwrap().tier, 1);
+        // a priority tier rides the optional tail and round-trips
+        let prio = OpenMsg {
+            tier: 3,
+            ..default_tier.clone()
+        };
+        let prio_bytes = prio.encode();
+        assert!(prio_bytes.len() > bytes.len());
+        assert_eq!(OpenMsg::decode(&prio_bytes).unwrap(), prio);
+        // garbage AFTER the tier tail is still rejected
+        let mut trailing = prio_bytes.clone();
+        trailing.push(0x7F);
+        assert!(OpenMsg::decode(&trailing).is_err());
     }
 
     #[test]

@@ -308,7 +308,7 @@ async fn handle_frame<T: Transport>(
             }
             let open = OpenMsg::decode(&f.payload)?;
             let info = verifier
-                .open(open.prompt, open.max_new as usize, open.nonce)
+                .open_tier(open.prompt, open.max_new as usize, open.nonce, open.tier)
                 .await?;
             let ack = Frame::on(
                 f.stream,

@@ -120,6 +120,12 @@ pub struct EdgeSessionConfig {
     /// committed position, applied to replica death. Off by default:
     /// outside a fleet, a lost session should fail loudly.
     pub reroot_on_unknown_session: bool,
+    /// QoS tier announced at `Open` (wire v7). Tier 1 (the default) is
+    /// best-effort and encodes byte-identically to a v6 open; higher
+    /// tiers bypass the verifier's `tier_reserve` admission headroom
+    /// under overload (they still queue — tiers never change tokens).
+    /// Clamped back to 1 on connections negotiated below v7.
+    pub tier: u32,
     /// Device/cloud compute constants for the latency model's
     /// alpha_edge / T_base terms (the network terms are measured).
     pub device: &'static EdgeDevice,
@@ -143,6 +149,7 @@ impl Default for EdgeSessionConfig {
             seed: 1,
             max_reattach: 8,
             reroot_on_unknown_session: false,
+            tier: 1,
             device: &JETSON_ORIN,
             cloud: &A800_70B,
             trace: None,
@@ -695,6 +702,7 @@ where
                 prompt: prompt.to_vec(),
                 max_new: cfg.max_new as u32,
                 nonce,
+                tier: cfg.tier,
             };
             t.send_frame(Frame::on(stream, FrameKind::Open, open.encode()))
                 .await?;
@@ -758,6 +766,7 @@ where
                         prompt: committed.clone(),
                         max_new: remaining as u32,
                         nonce: st.reroot_nonce,
+                        tier: cfg.tier,
                     };
                     t.send_frame(Frame::on(stream, FrameKind::Open, open.encode()))
                         .await?;
@@ -1098,13 +1107,15 @@ where
         }
     };
     // a v2-negotiated connection must never see spec-tagged drafts or
-    // Cancel frames: force the sequential loop
-    if negotiated < 3 && cfg.pipeline_depth != 1 {
-        let sequential = EdgeSessionConfig {
-            pipeline_depth: 1,
+    // Cancel frames (force the sequential loop), and a pre-v7 peer
+    // rejects the Open tier tail (clamp back to the default tier)
+    if (negotiated < 3 && cfg.pipeline_depth != 1) || (negotiated < 7 && cfg.tier != 1) {
+        let downgraded = EdgeSessionConfig {
+            pipeline_depth: if negotiated < 3 { 1 } else { cfg.pipeline_depth },
+            tier: if negotiated < 7 { 1 } else { cfg.tier },
             ..cfg.clone()
         };
-        return run_session_on(t, SESSION_STREAM, draft, prompt, &sequential).await;
+        return run_session_on(t, SESSION_STREAM, draft, prompt, &downgraded).await;
     }
     run_session_on(t, SESSION_STREAM, draft, prompt, cfg).await
 }

@@ -122,7 +122,11 @@ struct LedgerInner {
     /// IT wrote — never a newer re-export of the same token by a
     /// sibling (a multi-hop handoff within one grace window).
     seq: u64,
-    entries: HashMap<u64, (u64, PortableSession)>,
+    /// token → (export stamp, export timestamp ms, session). The
+    /// timestamp feeds the TTL sweep ([`SessionLedger::expire_before`]):
+    /// an exporter can die before its reap fires, so the store itself
+    /// must be able to age entries out.
+    entries: HashMap<u64, (u64, f64, PortableSession)>,
 }
 
 impl SessionLedger {
@@ -131,27 +135,36 @@ impl SessionLedger {
     }
 
     /// Park a session under its resume token (overwrites a stale entry
-    /// for the same token — the newest export is the truth). Returns
-    /// the entry's export stamp; the exporter passes it back to
-    /// [`SessionLedger::reap`] when its grace window expires, so an
-    /// abandoned handoff (the edge never resumes anywhere) cannot pin
-    /// the committed sequence in the shared store forever.
-    pub fn export(&self, token: u64, session: PortableSession) -> u64 {
+    /// for the same token — the newest export is the truth). `now_ms`
+    /// stamps the entry for the TTL sweep. Returns the entry's export
+    /// stamp; the exporter passes it back to [`SessionLedger::reap`]
+    /// when its grace window expires, so an abandoned handoff (the edge
+    /// never resumes anywhere) cannot pin the committed sequence in the
+    /// shared store forever.
+    pub fn export(&self, token: u64, session: PortableSession, now_ms: f64) -> u64 {
         let mut inner = self.inner.lock().expect("session ledger poisoned");
         inner.seq += 1;
         let seq = inner.seq;
-        inner.entries.insert(token, (seq, session));
+        inner.entries.insert(token, (seq, now_ms, session));
         seq
     }
 
     /// Take a session out (consuming its entry), if it is parked here.
     pub fn import(&self, token: u64) -> Option<PortableSession> {
+        self.import_timed(token).map(|(_, p)| p)
+    }
+
+    /// [`SessionLedger::import`] plus the entry's export timestamp: an
+    /// importer that has to put a FAILED import back re-exports with
+    /// the ORIGINAL timestamp, so a bad resume cannot refresh an
+    /// abandoned entry's TTL forever.
+    pub fn import_timed(&self, token: u64) -> Option<(f64, PortableSession)> {
         self.inner
             .lock()
             .expect("session ledger poisoned")
             .entries
             .remove(&token)
-            .map(|(_, p)| p)
+            .map(|(_, at, p)| (at, p))
     }
 
     /// Remove `token`'s entry iff it still carries the exporter's
@@ -160,9 +173,35 @@ impl SessionLedger {
     /// when its handoff grace window expires.
     pub fn reap(&self, token: u64, seq: u64) {
         let mut inner = self.inner.lock().expect("session ledger poisoned");
-        if inner.entries.get(&token).is_some_and(|(s, _)| *s == seq) {
+        if inner.entries.get(&token).is_some_and(|(s, _, _)| *s == seq) {
             inner.entries.remove(&token);
         }
+    }
+
+    /// TTL sweep: drop every entry exported more than `ttl_ms` before
+    /// `now_ms` and return how many were dropped. The reap path covers
+    /// a live exporter; this covers the exporter that died (or was
+    /// retired by the autoscaler) before its grace window fired —
+    /// without it the shared store grows forever. Virtual-clock
+    /// friendly: the caller supplies the clock.
+    pub fn expire_before(&self, now_ms: f64, ttl_ms: f64) -> usize {
+        let mut inner = self.inner.lock().expect("session ledger poisoned");
+        let before = inner.entries.len();
+        inner.entries.retain(|_, (_, at, _)| now_ms - *at <= ttl_ms);
+        before - inner.entries.len()
+    }
+
+    /// Earliest TTL deadline over the parked entries (`f64::INFINITY`
+    /// when empty) — joins the verifier's next-sweep fold so the sweep
+    /// stays event-driven instead of polling.
+    pub fn next_expiry(&self, ttl_ms: f64) -> f64 {
+        self.inner
+            .lock()
+            .expect("session ledger poisoned")
+            .entries
+            .values()
+            .map(|(_, at, _)| at + ttl_ms)
+            .fold(f64::INFINITY, f64::min)
     }
 
     /// Sessions currently in flight between replicas.
@@ -213,6 +252,11 @@ pub struct FleetReplica {
     pub draining: bool,
     /// Last telemetry snapshot ([`FleetRegistry::refresh`]).
     pub last: Option<ReplicaTelemetry>,
+    /// When the last SUCCESSFUL refresh stamped `last` (`None` before
+    /// the first). A replica whose refreshes have stopped keeps its
+    /// old snapshot, so placement must judge the snapshot's AGE, not
+    /// just its presence.
+    pub refreshed_at_ms: Option<f64>,
 }
 
 impl FleetReplica {
@@ -221,17 +265,55 @@ impl FleetReplica {
     pub fn load(&self) -> usize {
         self.last.as_ref().map(|t| t.load()).unwrap_or(usize::MAX)
     }
+
+    /// Age of the telemetry snapshot at `now_ms` (`f64::INFINITY`
+    /// before the first refresh).
+    pub fn age_ms(&self, now_ms: f64) -> f64 {
+        self.refreshed_at_ms
+            .map(|at| now_ms - at)
+            .unwrap_or(f64::INFINITY)
+    }
+
+    /// Load as placement sees it at `now_ms`: a snapshot older than
+    /// `staleness_ms` is UNKNOWN (`usize::MAX`, never preferred), same
+    /// as a replica that was never refreshed — a stale low number must
+    /// not win placement over a fresh honest one.
+    pub fn effective_load(&self, now_ms: f64, staleness_ms: f64) -> usize {
+        if self.age_ms(now_ms) > staleness_ms {
+            usize::MAX
+        } else {
+            self.load()
+        }
+    }
 }
+
+/// Default telemetry staleness window
+/// ([`FleetRegistry::staleness_ms`]): 10 missed 200ms refresh beats.
+pub const DEFAULT_STALENESS_MS: f64 = 2000.0;
 
 /// Cloud-side replica registry: endpoints, versions, load, health,
 /// staged rollout, drains, and fleet-aware dialers. See the module docs
 /// for the data flow.
-#[derive(Default)]
 pub struct FleetRegistry {
     ledger: SessionLedger,
     directory: FleetDirectory,
     replicas: Vec<FleetReplica>,
     next_id: u32,
+    /// Telemetry snapshots older than this are treated as unknown by
+    /// [`FleetRegistry::pick_peer`] and the autoscaler.
+    pub staleness_ms: f64,
+}
+
+impl Default for FleetRegistry {
+    fn default() -> FleetRegistry {
+        FleetRegistry {
+            ledger: SessionLedger::default(),
+            directory: FleetDirectory::default(),
+            replicas: Vec::new(),
+            next_id: 0,
+            staleness_ms: DEFAULT_STALENESS_MS,
+        }
+    }
 }
 
 impl FleetRegistry {
@@ -267,6 +349,7 @@ impl FleetRegistry {
             quarantined: false,
             draining: false,
             last: None,
+            refreshed_at_ms: None,
         });
         self.next_id
     }
@@ -301,7 +384,10 @@ impl FleetRegistry {
     /// so fleet dials skip it — until a later refresh reaches it again,
     /// which restores both the health flag AND the directory entry
     /// (dials and the control plane must agree on who is reachable).
-    pub async fn refresh(&mut self) {
+    /// `now_ms` stamps each successful snapshot for the staleness
+    /// window; a failed refresh keeps the old stamp, so the snapshot
+    /// ages out of placement naturally.
+    pub async fn refresh(&mut self, now_ms: f64) {
         for r in &mut self.replicas {
             if r.quarantined {
                 continue; // the operator's verdict outlives liveness
@@ -310,6 +396,7 @@ impl FleetRegistry {
                 Ok(t) => {
                     r.draining = t.draining;
                     r.last = Some(t);
+                    r.refreshed_at_ms = Some(now_ms);
                     r.healthy = true;
                     self.directory
                         .lock()
@@ -329,12 +416,14 @@ impl FleetRegistry {
 
     /// Least-loaded healthy, non-draining replica other than
     /// `not_addr` — the standard redirect target. Ties break by
-    /// registration order (deterministic).
-    pub fn pick_peer(&self, not_addr: &str) -> Option<String> {
+    /// registration order (deterministic). Replicas whose telemetry is
+    /// older than [`FleetRegistry::staleness_ms`] at `now_ms` rank as
+    /// unknown load (never preferred over a fresh snapshot).
+    pub fn pick_peer(&self, not_addr: &str, now_ms: f64) -> Option<String> {
         self.replicas
             .iter()
             .filter(|r| r.healthy && !r.quarantined && !r.draining && r.addr != not_addr)
-            .min_by_key(|r| (r.load(), r.id))
+            .min_by_key(|r| (r.effective_load(now_ms, self.staleness_ms), r.id))
             .map(|r| r.addr.clone())
     }
 
@@ -371,6 +460,19 @@ impl FleetRegistry {
             .ok_or_else(|| anyhow!("unknown replica '{addr}'"))?
             .redirect_session(session, to.to_string());
         Ok(())
+    }
+
+    /// Bulk rebalance (the autoscaler's flow actuator): mark up to `n`
+    /// redirect-capable sessions on `from` for handoff to `to` at their
+    /// next head round. The verifier picks the lowest session ids first
+    /// (deterministic) and skips sessions already marked or pinned to
+    /// pre-v5 peers. Returns the ids actually marked — possibly fewer
+    /// than `n`, possibly none.
+    pub async fn rebalance(&self, from: &str, to: &str, n: usize) -> Result<Vec<u32>> {
+        self.verifier(from)
+            .ok_or_else(|| anyhow!("unknown replica '{from}'"))?
+            .redirect_some(n, to.to_string())
+            .await
     }
 
     /// Staged / canary rollout: hot-swap the deployed target version on
@@ -629,35 +731,68 @@ mod tests {
             drafted: 6,
             done: false,
         };
-        l.export(9, p.clone());
+        l.export(9, p.clone(), 0.0);
         assert_eq!(l.len(), 1);
         // import consumes
         assert_eq!(l.import(9), Some(p.clone()));
         assert!(l.import(9).is_none());
         // newest export wins
-        l.export(9, p.clone());
+        l.export(9, p.clone(), 0.0);
         let p2 = PortableSession {
             rounds: 3,
             ..p.clone()
         };
-        l.export(9, p2.clone());
+        l.export(9, p2.clone(), 1.0);
         assert_eq!(l.import(9), Some(p2.clone()));
 
         // reap removes exactly the stamped entry: a stale stamp (the
         // entry was re-exported by a later hop) is a no-op, the
         // matching stamp clears an abandoned handoff
-        let s1 = l.export(9, p.clone());
-        let s2 = l.export(9, p2.clone());
+        let s1 = l.export(9, p.clone(), 2.0);
+        let s2 = l.export(9, p2.clone(), 3.0);
         assert!(s2 > s1);
         l.reap(9, s1);
         assert_eq!(l.len(), 1, "stale stamp must not reap a newer export");
         l.reap(9, s2);
         assert!(l.is_empty(), "matching stamp reaps the abandoned entry");
         // reaping an imported (gone) entry is a no-op
-        let s3 = l.export(9, p);
+        let s3 = l.export(9, p, 4.0);
         assert!(l.import(9).is_some());
         l.reap(9, s3);
         assert!(l.is_empty());
+    }
+
+    #[test]
+    fn ledger_ttl_sweep_expires_only_old_entries() {
+        let l = SessionLedger::new();
+        let p = PortableSession {
+            committed: vec![1, 70],
+            prompt_len: 1,
+            max_new: 8,
+            rounds: 1,
+            accepted: 1,
+            drafted: 1,
+            done: false,
+        };
+        assert_eq!(l.next_expiry(100.0), f64::INFINITY, "empty ledger");
+        l.export(1, p.clone(), 0.0);
+        l.export(2, p.clone(), 500.0);
+        l.export(3, p.clone(), 900.0);
+        assert_eq!(l.next_expiry(100.0), 100.0);
+        // nothing is old enough yet: an entry expires strictly after
+        // now - at > ttl
+        assert_eq!(l.expire_before(100.0, 100.0), 0);
+        assert_eq!(l.len(), 3);
+        // the first entry ages out; the later two survive
+        assert_eq!(l.expire_before(600.0, 100.0), 1);
+        assert_eq!(l.len(), 2);
+        assert!(l.import(1).is_none(), "expired entry is gone");
+        assert!(l.import(2).is_some(), "fresh entry survives the sweep");
+        // a re-export refreshes the timestamp (newest export is truth)
+        l.export(3, p, 2000.0);
+        assert_eq!(l.expire_before(2001.0, 100.0), 0);
+        assert_eq!(l.len(), 1);
+        assert_eq!(l.next_expiry(50.0), 2050.0);
     }
 
     #[test]
@@ -670,31 +805,31 @@ mod tests {
                 })
                 .unwrap();
             }
-            reg.refresh().await;
+            reg.refresh(0.0).await;
             assert!(reg.replicas().iter().all(|r| r.healthy && !r.draining));
             assert!(reg.replicas().iter().all(|r| r.load() == 0));
 
             // load one replica: it stops being the preferred peer
             let vb = reg.verifier("replica-b").unwrap();
             vb.open(vec![1, 70, 71], 32, 0).await.unwrap();
-            reg.refresh().await;
+            reg.refresh(0.0).await;
             assert_eq!(reg.replica("replica-b").unwrap().load(), 1);
             // from a's perspective the least-loaded peer is c (b has a
             // session; ties break by registration order)
-            assert_eq!(reg.pick_peer("replica-a").unwrap(), "replica-c");
+            assert_eq!(reg.pick_peer("replica-a", 0.0).unwrap(), "replica-c");
 
             // draining replicas are not placement targets
             reg.drain("replica-c", "replica-b").unwrap();
-            reg.refresh().await;
+            reg.refresh(0.0).await;
             assert!(reg.replica("replica-c").unwrap().draining);
-            assert_eq!(reg.pick_peer("replica-a").unwrap(), "replica-b");
+            assert_eq!(reg.pick_peer("replica-a", 0.0).unwrap(), "replica-b");
             reg.undrain("replica-c").unwrap();
-            reg.refresh().await;
+            reg.refresh(0.0).await;
             assert!(!reg.replica("replica-c").unwrap().draining);
 
             // a dead replica leaves the directory and the peer pool
             reg.mark_dead("replica-c");
-            assert_eq!(reg.pick_peer("replica-a").unwrap(), "replica-b");
+            assert_eq!(reg.pick_peer("replica-a", 0.0).unwrap(), "replica-b");
             assert!(reg
                 .directory()
                 .lock()
@@ -704,7 +839,7 @@ mod tests {
             // mark_dead is STICKY: a refresh that still reaches the
             // (in-process, alive) verifier must not resurrect the
             // replica behind the operator's back
-            reg.refresh().await;
+            reg.refresh(0.0).await;
             assert!(!reg.replica("replica-c").unwrap().healthy);
             assert!(reg
                 .directory()
@@ -712,10 +847,10 @@ mod tests {
                 .unwrap()
                 .get("replica-c")
                 .is_none());
-            assert_eq!(reg.pick_peer("replica-a").unwrap(), "replica-b");
+            assert_eq!(reg.pick_peer("replica-a", 0.0).unwrap(), "replica-b");
             // ...until the operator revives it
             reg.revive("replica-c");
-            reg.refresh().await;
+            reg.refresh(0.0).await;
             assert!(reg.replica("replica-c").unwrap().healthy);
             assert!(reg
                 .directory()
@@ -731,10 +866,52 @@ mod tests {
                 .await
                 .unwrap();
             assert_eq!(seqs.len(), 1);
-            reg.refresh().await;
+            reg.refresh(0.0).await;
             let seq_a = reg.replica("replica-a").unwrap().last.as_ref().unwrap().version_seq;
             let seq_b = reg.replica("replica-b").unwrap().last.as_ref().unwrap().version_seq;
             assert!(seq_a > seq_b, "canary must advance ahead of the rest");
+        });
+    }
+
+    /// Staleness satellite: a replica whose refreshes have stopped
+    /// keeps its last (idle-looking) snapshot, but past the staleness
+    /// window placement must treat it as UNKNOWN — a stale low load
+    /// never beats a fresh honest one.
+    #[test]
+    fn stale_telemetry_is_never_preferred_for_placement() {
+        rt().block_on(async {
+            let mut reg = FleetRegistry::new();
+            for addr in ["replica-a", "replica-b", "replica-c"] {
+                reg.spawn_loopback_replica(addr, VerifierConfig::default(), || {
+                    Ok(Box::new(SyntheticTarget::new(5)) as Box<dyn VerifyBackend>)
+                })
+                .unwrap();
+            }
+            reg.refresh(0.0).await;
+            // c carries a session, b is idle: fresh snapshots pick b
+            let vc = reg.verifier("replica-c").unwrap();
+            vc.open(vec![1, 70, 71], 32, 0).await.unwrap();
+            reg.refresh(0.0).await;
+            assert_eq!(reg.pick_peer("replica-a", 0.0).unwrap(), "replica-b");
+
+            // b's refreshes stop while the others keep beating: its
+            // idle snapshot ages past the staleness window and ranks as
+            // unknown, so the loaded-but-fresh c wins placement
+            for r in reg.replicas.iter_mut() {
+                if r.addr != "replica-b" {
+                    r.refreshed_at_ms = Some(3000.0);
+                }
+            }
+            assert_eq!(reg.pick_peer("replica-a", 3000.0).unwrap(), "replica-c");
+            let b = reg.replica("replica-b").unwrap();
+            assert_eq!(b.age_ms(3000.0), 3000.0);
+            assert_eq!(b.effective_load(3000.0, reg.staleness_ms), usize::MAX);
+            assert!(b.load() < usize::MAX, "the raw snapshot itself is still there");
+
+            // one successful refresh re-stamps b and it wins back the
+            // placement slot
+            reg.refresh(6000.0).await;
+            assert_eq!(reg.pick_peer("replica-a", 6000.0).unwrap(), "replica-b");
         });
     }
 
@@ -748,7 +925,7 @@ mod tests {
                 })
                 .unwrap();
             }
-            reg.refresh().await;
+            reg.refresh(0.0).await;
             let s = reg.fleet_stats().await;
             assert_eq!((s.replicas, s.unreachable), (2, 0));
             assert_eq!(s.rounds, 0);

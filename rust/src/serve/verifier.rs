@@ -97,6 +97,22 @@ pub struct VerifierConfig {
     /// kicks in, so pair a bound with the resume machinery (always on)
     /// rather than bare UDP-style transports.
     pub admission_queue: usize,
+    /// Tier-aware admission (wire v7): how many `admission_queue` slots
+    /// are RESERVED for priority traffic. Sessions opened with QoS tier
+    /// > 1 (the edge mux's interactive tiers) may fill the whole queue;
+    /// tier-1 (default/bulk) sessions are turned away `tier_reserve`
+    /// slots early, so a flash crowd of bulk traffic cannot starve the
+    /// interactive tiers out of admission. 0 (the default) = no
+    /// reservation; clamped so at least one slot stays open to tier 1.
+    /// Meaningless while `admission_queue == 0` (unbounded).
+    pub tier_reserve: usize,
+    /// TTL for fleet-ledger entries exported by THIS replica's sweeps:
+    /// `evict_expired` ages out parked [`PortableSession`]s
+    /// (`crate::serve::fleet::SessionLedger::expire_before`) older than
+    /// this, covering exporters that died before their reap fired. The
+    /// default (10 min) is far beyond any handoff grace window, so it
+    /// only collects genuinely abandoned entries.
+    pub ledger_ttl_ms: f64,
     /// Optional trace journal (`flexspec::obs`): when set, the verifier
     /// records the cloud half of every round's span chain — QueueWait,
     /// BucketPlan, VerifyBatch, Commit — plus fleet Export/Import
@@ -115,6 +131,8 @@ impl Default for VerifierConfig {
             capacity_floor: 10,
             resume_grace_ms: 10_000.0,
             admission_queue: 0,
+            tier_reserve: 0,
+            ledger_ttl_ms: 600_000.0,
             trace: None,
         }
     }
@@ -187,6 +205,11 @@ pub struct ReplicaTelemetry {
     /// True when a drain target is set: every redirect-capable
     /// session's next head round is being handed off.
     pub draining: bool,
+    /// Age of this snapshot in ms. The verifier itself always reports
+    /// 0.0 (the snapshot is made on demand); the fleet registry and the
+    /// autoscaler stamp/derive real ages so stale snapshots rank as
+    /// unknown in placement.
+    pub age_ms: f64,
 }
 
 impl ReplicaTelemetry {
@@ -304,10 +327,21 @@ pub struct VerifierCore {
     /// redirects need it, because the deferred draft no longer carries
     /// its connection.
     wire_of: HashMap<u32, u16>,
+    /// QoS tier per live session (wire v7 `Open::tier`; absent = tier
+    /// 1). Tier > 1 sessions bypass the `tier_reserve` admission
+    /// headroom — the cloud-side mirror of the edge mux's weighted
+    /// tiers.
+    tier_of: HashMap<u32, u32>,
     /// Earliest grace deadline among parked sessions and finished
     /// residues (+inf when none) — cheap gate so the per-iteration
     /// eviction sweep skips the map walks until something can expire.
     next_sweep_ms: f64,
+    /// Same idea for the fleet-ledger TTL sweep
+    /// ([`VerifierCore::sweep_ledger_ttl`]); separate gate because the
+    /// shared store must be swept even when THIS replica has nothing
+    /// parked. Starts at -inf so the first sweep observes the ledger
+    /// and arms itself.
+    next_ledger_sweep_ms: f64,
     window: BatchWindow,
     next_id: u32,
     /// Verification sampling stream (stochastic mode).
@@ -345,7 +379,9 @@ impl VerifierCore {
             redirected_ids: HashMap::new(),
             redirected_tokens: HashMap::new(),
             wire_of: HashMap::new(),
+            tier_of: HashMap::new(),
             next_sweep_ms: f64::INFINITY,
+            next_ledger_sweep_ms: f64::NEG_INFINITY,
             window,
             next_id: 1,
             rng,
@@ -379,6 +415,28 @@ impl VerifierCore {
         self.redirect_sessions.insert(id, target);
     }
 
+    /// Target up to `n` sessions for handoff to `target` — the
+    /// autoscaler's bulk-rebalance actuator. Picks the LOWEST live
+    /// session ids first (deterministic across runs), skipping
+    /// sessions already marked for a redirect and sessions pinned to
+    /// pre-v5 peers (they cannot parse the frame). Returns the ids
+    /// actually marked.
+    pub fn redirect_some(&mut self, n: usize, target: String) -> Vec<u32> {
+        let mut ids: Vec<u32> = self
+            .sessions
+            .keys()
+            .copied()
+            .filter(|id| !self.redirect_sessions.contains_key(id))
+            .filter(|id| self.wire_of.get(id).copied().unwrap_or(0) >= 5)
+            .collect();
+        ids.sort_unstable();
+        ids.truncate(n);
+        for &id in &ids {
+            self.redirect_sessions.insert(id, target.clone());
+        }
+        ids
+    }
+
     /// Instantaneous replica state for the fleet registry and the wire
     /// `ReplicaInfo` announcement.
     pub fn telemetry(&self) -> ReplicaTelemetry {
@@ -389,6 +447,7 @@ impl VerifierCore {
             parked_sessions: self.parked.len(),
             queue_len: self.pending.len(),
             draining: self.redirect_all_to.is_some(),
+            age_ms: 0.0,
         }
     }
 
@@ -448,8 +507,23 @@ impl VerifierCore {
 
     /// Open a new KV session. A nonzero `nonce` seen before reattaches
     /// the session it created (retransmitted `Open` whose ack was lost)
-    /// instead of leaking a second one.
+    /// instead of leaking a second one. Opens at the default QoS tier
+    /// (1); wire-v7 peers carrying an explicit tier go through
+    /// [`VerifierCore::open_session_tier`].
     pub fn open_session(&mut self, prompt: &[i32], max_new: usize, nonce: u64) -> Result<OpenInfo> {
+        self.open_session_tier(prompt, max_new, nonce, 1)
+    }
+
+    /// [`VerifierCore::open_session`] with an explicit QoS tier (wire
+    /// v7 `Open::tier`). Tier > 1 sessions bypass the
+    /// [`VerifierConfig::tier_reserve`] admission headroom.
+    pub fn open_session_tier(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+        nonce: u64,
+        tier: u32,
+    ) -> Result<OpenInfo> {
         if nonce != 0 {
             if let Some(&id) = self.open_nonces.get(&nonce) {
                 if self.sessions.contains_key(&id) {
@@ -485,6 +559,9 @@ impl VerifierCore {
         if nonce != 0 {
             self.open_nonces.insert(nonce, id);
             self.nonce_of.insert(id, nonce);
+        }
+        if tier != 1 {
+            self.tier_of.insert(id, tier);
         }
         self.metrics.sessions_opened += 1;
         Ok(OpenInfo {
@@ -633,15 +710,17 @@ impl VerifierCore {
         // admission control: a fresh head round arriving at the backlog
         // bound is deferred (after the dedup/staleness filters above, so
         // a Busy is only ever sent for a round that would genuinely have
-        // consumed a new queue slot)
-        if can_defer
-            && self.cfg.admission_queue > 0
-            && self.pending.len() >= self.cfg.admission_queue
-        {
-            self.metrics.drafts_busy += 1;
-            return Ok(SubmitOutcome::Busy {
-                retry_after_ms: self.busy_retry_after_ms(),
-            });
+        // consumed a new queue slot). Tier-1 sessions stop
+        // `tier_reserve` slots early so priority tiers keep admission
+        // headroom under a bulk flash crowd (wire v7).
+        if can_defer && self.cfg.admission_queue > 0 {
+            let bound = self.admission_bound_for(id);
+            if self.pending.len() >= bound {
+                self.metrics.drafts_busy += 1;
+                return Ok(SubmitOutcome::Busy {
+                    retry_after_ms: self.busy_retry_after_ms(),
+                });
+            }
         }
         if !msg.spec.is_empty() {
             self.metrics.rounds_pipelined += 1;
@@ -770,6 +849,7 @@ impl VerifierCore {
         self.attachment_of.remove(&id);
         self.redirect_sessions.remove(&id);
         self.wire_of.remove(&id);
+        self.tier_of.remove(&id);
         self.backend.end_session(id);
         let deadline = now_ms + self.cfg.resume_grace_ms;
         self.redirected_ids.insert(id, deadline);
@@ -785,6 +865,7 @@ impl VerifierCore {
                 drafted: core.drafted,
                 done: core.done,
             },
+            now_ms,
         );
         self.redirected_tokens.insert(token, (deadline, seq));
         self.metrics.sessions_redirected += 1;
@@ -801,19 +882,22 @@ impl VerifierCore {
     /// redirect target — or on the exporting replica itself when the
     /// edge resumed in place). A fresh local id and attachment epoch
     /// are minted; the resume token is preserved, so a second handoff
-    /// keeps working. On any failure the entry is put back so a bad
-    /// resume position cannot destroy the only copy of the session.
+    /// keeps working. On any failure the entry is put back — with its
+    /// ORIGINAL export timestamp, so repeated bad resumes cannot keep
+    /// an abandoned entry's TTL fresh — so a bad resume position cannot
+    /// destroy the only copy of the session.
     fn import_session(
         &mut self,
         token: u64,
         p: PortableSession,
         committed_len: usize,
+        exported_at_ms: f64,
     ) -> Result<ResumeInfo> {
         let floor = p.prompt_len.min(p.committed.len());
         if committed_len < floor || committed_len > p.committed.len() {
             let range = format!("{floor}..={}", p.committed.len());
             if let Some(l) = &self.ledger {
-                l.export(token, p);
+                l.export(token, p, exported_at_ms);
             }
             bail!("resume position {committed_len} out of range ({range})");
         }
@@ -838,7 +922,7 @@ impl VerifierCore {
                 done: true,
             };
             if let Some(l) = &self.ledger {
-                l.export(token, p);
+                l.export(token, p, exported_at_ms);
             }
             return Ok(info);
         }
@@ -846,7 +930,7 @@ impl VerifierCore {
         self.next_id += 1;
         if let Err(e) = self.backend.start_session(id, &p.committed) {
             if let Some(l) = &self.ledger {
-                l.export(token, p);
+                l.export(token, p, exported_at_ms);
             }
             return Err(e);
         }
@@ -1018,10 +1102,32 @@ impl VerifierCore {
         dropped
     }
 
-    /// Suggested retry horizon for a `Busy` deferral: one batching
-    /// window — the cadence at which queue slots free up.
+    /// Suggested retry horizon for a `Busy` deferral: queue-depth
+    /// adaptive — one batching window per backlog's worth of
+    /// `max_batch`, so backoff pressure tracks how long the queue will
+    /// actually take to drain instead of a static one-window guess
+    /// (`crate::autoscale::adaptive_retry_after_ms`; the load harness
+    /// runs the identical formula).
     fn busy_retry_after_ms(&self) -> u32 {
-        self.cfg.window_ms.max(1.0).ceil() as u32
+        crate::autoscale::adaptive_retry_after_ms(
+            self.cfg.window_ms,
+            self.pending.len(),
+            self.cfg.max_batch,
+        )
+    }
+
+    /// Effective admission bound for one session: tier > 1 sessions may
+    /// fill the whole queue; tier-1 traffic stops `tier_reserve` slots
+    /// early (clamped so at least one slot always remains reachable by
+    /// tier 1 — a reservation must shape pressure, not starve bulk
+    /// traffic outright).
+    fn admission_bound_for(&self, id: u32) -> usize {
+        let cap = self.cfg.admission_queue;
+        if self.tier_of.get(&id).copied().unwrap_or(1) > 1 {
+            return cap;
+        }
+        let reserve = self.cfg.tier_reserve.min(cap.saturating_sub(1));
+        cap - reserve
     }
 
     /// Close the open window and verify its members as ONE batch:
@@ -1169,6 +1275,7 @@ impl VerifierCore {
                 }
                 self.attachment_of.remove(&id);
                 self.wire_of.remove(&id);
+                self.tier_of.remove(&id);
                 self.redirect_sessions.remove(&id);
             }
             out.push((id, vmsg));
@@ -1230,8 +1337,8 @@ impl VerifierCore {
             // ledger — exported by a draining sibling whose Redirect
             // pointed here, or by THIS replica if the edge could not
             // follow the redirect and resumed in place
-            if let Some(p) = self.ledger.as_ref().and_then(|l| l.import(token)) {
-                return self.import_session(token, p, committed_len);
+            if let Some((at, p)) = self.ledger.as_ref().and_then(|l| l.import_timed(token)) {
+                return self.import_session(token, p, committed_len, at);
             }
             bail!(UNKNOWN_RESUME_TOKEN);
         };
@@ -1272,8 +1379,11 @@ impl VerifierCore {
     /// Reap parked sessions and finished residues whose grace deadline
     /// is STRICTLY in the past. Attached sessions are never touched.
     /// O(1) until the earliest pending deadline passes (the verifier
-    /// loop calls this every iteration).
+    /// loop calls this every iteration). Also drives the fleet-ledger
+    /// TTL sweep (own gate — it must fire even when nothing is parked
+    /// locally).
     pub fn evict_expired(&mut self, now_ms: f64) -> usize {
+        self.sweep_ledger_ttl(now_ms);
         if now_ms <= self.next_sweep_ms {
             return 0;
         }
@@ -1297,6 +1407,7 @@ impl VerifierCore {
             }
             self.attachment_of.remove(&id);
             self.wire_of.remove(&id);
+            self.tier_of.remove(&id);
             self.redirect_sessions.remove(&id);
             self.backend.end_session(id);
             self.metrics.sessions_evicted += 1;
@@ -1365,6 +1476,29 @@ impl VerifierCore {
         expired.len()
     }
 
+    /// Fleet-ledger TTL sweep (ROADMAP item 3 satellite): age out
+    /// shared-store entries whose EXPORTER died before its grace-window
+    /// reap fired — the stamp-checked reap in [`VerifierCore::
+    /// evict_expired`] covers this replica's own exports; the TTL
+    /// covers everyone else's orphans. Runs behind its own gate,
+    /// independent of `next_sweep_ms` (an otherwise-idle replica must
+    /// still collect a dead sibling's orphans). The gate is re-armed to
+    /// min(earliest entry expiry, now + TTL) — never later than any
+    /// live entry's deadline, including entries exported AFTER this
+    /// sweep — so at most one ledger walk per TTL period when idle.
+    pub fn sweep_ledger_ttl(&mut self, now_ms: f64) -> usize {
+        let Some(l) = &self.ledger else { return 0 };
+        if now_ms <= self.next_ledger_sweep_ms {
+            return 0;
+        }
+        let n = l.expire_before(now_ms, self.cfg.ledger_ttl_ms);
+        self.metrics.ledger_expired += n;
+        self.next_ledger_sweep_ms = l
+            .next_expiry(self.cfg.ledger_ttl_ms)
+            .min(now_ms + self.cfg.ledger_ttl_ms);
+        n
+    }
+
     /// Client explicitly gave up: drop the session without counting
     /// completion (and without a resume residue).
     pub fn abort_session(&mut self, id: u32) {
@@ -1382,6 +1516,7 @@ impl VerifierCore {
             }
             self.attachment_of.remove(&id);
             self.wire_of.remove(&id);
+            self.tier_of.remove(&id);
             self.redirect_sessions.remove(&id);
             self.backend.end_session(id);
             self.metrics.sessions_aborted += 1;
@@ -1425,6 +1560,8 @@ enum VerifierCmd {
         prompt: Vec<i32>,
         max_new: usize,
         nonce: u64,
+        /// QoS tier (wire v7 `Open::tier`; 1 = default/bulk).
+        tier: u32,
         reply: oneshot::Sender<Result<OpenInfo>>,
     },
     Verify {
@@ -1442,6 +1579,11 @@ enum VerifierCmd {
     RedirectSession {
         id: u32,
         target: String,
+    },
+    RedirectSome {
+        n: usize,
+        target: String,
+        reply: oneshot::Sender<Vec<u32>>,
     },
     Info {
         reply: oneshot::Sender<ReplicaTelemetry>,
@@ -1544,11 +1686,24 @@ impl VerifierHandle {
     }
 
     pub async fn open(&self, prompt: Vec<i32>, max_new: usize, nonce: u64) -> Result<OpenInfo> {
+        self.open_tier(prompt, max_new, nonce, 1).await
+    }
+
+    /// [`VerifierHandle::open`] with an explicit QoS tier (wire v7):
+    /// tier > 1 sessions bypass the `tier_reserve` admission headroom.
+    pub async fn open_tier(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        nonce: u64,
+        tier: u32,
+    ) -> Result<OpenInfo> {
         let (reply, rx) = oneshot::channel();
         self.post(VerifierCmd::Open {
             prompt,
             max_new,
             nonce,
+            tier,
             reply,
         })?;
         rx.await.map_err(|_| anyhow!("verifier dropped the reply"))?
@@ -1594,6 +1749,15 @@ impl VerifierHandle {
     /// Fire-and-forget targeted handoff of ONE session (rebalance).
     pub fn redirect_session(&self, id: u32, target: String) {
         let _ = self.post(VerifierCmd::RedirectSession { id, target });
+    }
+
+    /// Bulk targeted handoff (the autoscaler's rebalance actuator):
+    /// mark up to `n` redirect-capable sessions for `target`, lowest
+    /// ids first. Returns the ids actually marked.
+    pub async fn redirect_some(&self, n: usize, target: String) -> Result<Vec<u32>> {
+        let (reply, rx) = oneshot::channel();
+        self.post(VerifierCmd::RedirectSome { n, target, reply })?;
+        rx.await.map_err(|_| anyhow!("verifier dropped the reply"))
     }
 
     /// Instantaneous replica telemetry (version, load, drain state) —
@@ -1774,9 +1938,10 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                 prompt,
                 max_new,
                 nonce,
+                tier,
                 reply,
             }) => {
-                let _ = reply.send(core.open_session(&prompt, max_new, nonce));
+                let _ = reply.send(core.open_session_tier(&prompt, max_new, nonce, tier));
             }
             Ok(VerifierCmd::Verify {
                 id,
@@ -1843,6 +2008,9 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
             Ok(VerifierCmd::SetRedirect { target }) => core.set_redirect(target),
             Ok(VerifierCmd::RedirectSession { id, target }) => {
                 core.redirect_session(id, target)
+            }
+            Ok(VerifierCmd::RedirectSome { n, target, reply }) => {
+                let _ = reply.send(core.redirect_some(n, target));
             }
             Ok(VerifierCmd::Info { reply }) => {
                 let _ = reply.send(core.telemetry());
@@ -1924,6 +2092,9 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                         }
                         VerifierCmd::Info { reply } => {
                             let _ = reply.send(core.telemetry());
+                        }
+                        VerifierCmd::RedirectSome { reply, .. } => {
+                            let _ = reply.send(Vec::new());
                         }
                         VerifierCmd::Cancel { .. }
                         | VerifierCmd::Detach { .. }
@@ -2768,6 +2939,73 @@ mod tests {
         assert_eq!(c.metrics.drafts_busy, 1, "admission after drain must not defer");
     }
 
+    /// Tier-aware admission (wire v7): tier-1 traffic is turned away
+    /// `tier_reserve` slots early, priority tiers may fill the whole
+    /// queue — and nothing more: the cap still binds for every tier.
+    #[test]
+    fn tier_reserve_holds_admission_headroom_for_priority_tiers() {
+        let cfg = VerifierConfig {
+            window_ms: 10.0,
+            max_batch: 8,
+            admission_queue: 2,
+            tier_reserve: 1,
+            ..Default::default()
+        };
+        let mut c = VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)));
+        let pa = vec![1, 70, 71];
+        let pb = vec![1, 80, 81];
+        let pc = vec![1, 90, 91];
+        let pd = vec![1, 60, 61];
+        let oa = c.open_session(&pa, 64, 0).unwrap();
+        let ob = c.open_session(&pb, 64, 0).unwrap();
+        let oc = c.open_session_tier(&pc, 64, 0, 3).unwrap();
+        let od = c.open_session_tier(&pd, 64, 0, 5).unwrap();
+        // first tier-1 round fits under the reserved bound (2 - 1 = 1)
+        queued(c.submit(0.0, oa.attachment, draft_for(oa.session, 0, &pa, 2), true).unwrap());
+        // second tier-1 round hits the reserved bound: deferred
+        assert!(matches!(
+            c.submit(0.1, ob.attachment, draft_for(ob.session, 0, &pb, 2), true).unwrap(),
+            SubmitOutcome::Busy { .. }
+        ));
+        // a priority tier sails past the reservation into the last slot
+        queued(c.submit(0.2, oc.attachment, draft_for(oc.session, 0, &pc, 2), true).unwrap());
+        // but the cap itself still binds for every tier
+        assert!(matches!(
+            c.submit(0.3, od.attachment, draft_for(od.session, 0, &pd, 2), true).unwrap(),
+            SubmitOutcome::Busy { .. }
+        ));
+        assert_eq!(c.metrics.drafts_busy, 2);
+    }
+
+    /// The `Busy` retry hint scales with queue depth: a backlog of
+    /// `queue / max_batch` windows quotes that many window periods, not
+    /// the static one-window guess (autoscale satellite).
+    #[test]
+    fn busy_retry_hint_scales_with_queue_depth() {
+        let cfg = VerifierConfig {
+            window_ms: 10.0,
+            max_batch: 1,
+            admission_queue: 3,
+            ..Default::default()
+        };
+        let mut c = VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)));
+        let prompts = [vec![1, 70, 71], vec![1, 80, 81], vec![1, 90, 91], vec![1, 60, 61]];
+        let opens: Vec<_> =
+            prompts.iter().map(|p| c.open_session(p, 64, 0).unwrap()).collect();
+        for (o, p) in opens.iter().zip(&prompts).take(3) {
+            queued(c.submit(0.0, o.attachment, draft_for(o.session, 0, p, 2), true).unwrap());
+        }
+        // 3 pending / max_batch 1 = 3 extra windows behind the current
+        // one: the hint quotes 4 window periods of 10ms
+        match c
+            .submit(0.1, opens[3].attachment, draft_for(opens[3].session, 0, &prompts[3], 2), true)
+            .unwrap()
+        {
+            SubmitOutcome::Busy { retry_after_ms } => assert_eq!(retry_after_ms, 40),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+    }
+
     #[test]
     fn idle_cloud_sweeps_residues_on_the_timer() {
         let rt = tokio::runtime::Builder::new_current_thread()
@@ -2917,6 +3155,45 @@ mod tests {
             }
             other => panic!("expected second Redirect, got {other:?}"),
         }
+    }
+
+    /// Ledger TTL satellite: an export the edge NEVER resumes ages out
+    /// of the shared ledger on the TTL sweep — before the exporter's
+    /// own grace-window reap, and even though nothing is parked locally
+    /// (the sweep runs behind its own gate, not the residue gate).
+    #[test]
+    fn ledger_ttl_sweep_collects_abandoned_exports() {
+        let ledger = SessionLedger::new();
+        let mut t = SyntheticTarget::new(7).with_version("evolved", 0.3);
+        t.deploy("evolved").unwrap();
+        let cfg = VerifierConfig {
+            ledger_ttl_ms: 50.0,
+            resume_grace_ms: 10_000.0,
+            ..Default::default()
+        };
+        let mut a = VerifierCore::new(cfg, Box::new(t)).with_ledger(ledger.clone());
+        let prompt = vec![1, 70, 71];
+        let o = a.open_session(&prompt, 256, 0).unwrap();
+        let mut committed = prompt.clone();
+        drive_round(&mut a, o.attachment, o.session, 0, &mut committed);
+        a.set_redirect(Some("replica-b".into()));
+        assert!(matches!(
+            a.submit_from(1.0, o.attachment, draft_for(o.session, 1, &committed, 4), 5)
+                .unwrap(),
+            SubmitOutcome::Redirect { .. }
+        ));
+        assert_eq!(ledger.len(), 1);
+        // within the TTL the entry stays resumable
+        a.evict_expired(40.0);
+        assert_eq!(ledger.len(), 1);
+        assert_eq!(a.metrics.ledger_expired, 0);
+        // past it the abandoned export is collected and counted
+        a.evict_expired(60.0);
+        assert!(ledger.is_empty(), "TTL sweep must reap the abandoned export");
+        assert_eq!(a.metrics.ledger_expired, 1);
+        // the exporter swept its own orphan: the ledger-conservation
+        // invariant (expired <= redirected) holds
+        assert!(a.metrics.invariant_violations(a.active_sessions(), 0).is_empty());
     }
 
     /// Satellite (fleet edge cases): after a session is exported, a

@@ -1,0 +1,388 @@
+//! `flexspec::autoscale` integration tests — the closed-loop control
+//! plane, on both sides of the determinism contract.
+//!
+//! Harness side (virtual clock): autoscaled workloads are byte-
+//! deterministic per seed INCLUDING the policy's action log, respect
+//! the per-session redirect budget, strand no session on a retired
+//! replica, converge without thrashing on a steady workload, and beat
+//! the fixed fleet on tail ttft for the same flash crowd.
+//!
+//! Live side (wall clock, loopback fleet): real replicas driven by an
+//! [`AutoscaleController`] rebalancing sessions MID-DECODE commit token
+//! sequences byte-identical to the single-replica virtual-clock sim —
+//! sequential, pipelined, and multiplexed, across the pinned seeds
+//! [3, 17, 42]. The control plane moves wall time, never tokens.
+
+use anyhow::Result;
+use flexspec::autoscale::{AutoscaleConfig, AutoscaleController};
+use flexspec::channel::{NetworkKind, NetworkProfile};
+use flexspec::coordinator::{serve_with, DraftSource, ServeConfig};
+use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::load::{run, LoadConfig, Scenario};
+use flexspec::serve::{
+    run_edge_session, run_session_on, EdgeMux, EdgeReport, EdgeSessionConfig, FleetRegistry,
+    ResumableTransport, SyntheticDraft, SyntheticTarget, VerifierConfig, VerifyBackend,
+};
+
+/// Fixed seed list (mirrored in CI, `tests/serve_fleet.rs`, and
+/// `tests/load_scale.rs`).
+const SEEDS: [u64; 3] = [3, 17, 42];
+const USERS: usize = 3;
+const MAX_NEW: usize = 24;
+
+// ---------------------------------------------------------------------
+// harness side: the sim twin
+// ---------------------------------------------------------------------
+
+/// Flash preset with a bounded admission queue and an aggressive
+/// closed loop — the bench's comparison shape at test scale.
+fn autoscaled_flash(sessions: usize, seed: u64) -> LoadConfig {
+    let mut cfg = Scenario::Flash.config(sessions, seed);
+    cfg.admission_queue = 48;
+    cfg.autoscale = Some(AutoscaleConfig {
+        tick_ms: 500.0,
+        min_replicas: cfg.replicas,
+        max_replicas: 128,
+        scale_up_queue: 4,
+        up_ticks: 1,
+        cooldown_ticks: 1,
+        max_scale_step: 8,
+        down_ticks: 20,
+        redirect_budget: 2,
+        ..AutoscaleConfig::default()
+    });
+    cfg
+}
+
+#[test]
+fn autoscaled_runs_are_deterministic_per_seed_including_action_log() {
+    let mut digests = Vec::new();
+    for seed in SEEDS {
+        let cfg = autoscaled_flash(10_000, seed);
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(
+            a.digest(),
+            b.digest(),
+            "seed {seed}: same config must give a byte-identical report"
+        );
+        let (ar, br) = (a.autoscale.as_ref().unwrap(), b.autoscale.as_ref().unwrap());
+        assert_eq!(
+            ar.log_digest, br.log_digest,
+            "seed {seed}: control-plane action log diverged"
+        );
+        assert_eq!(ar.log_lines, br.log_lines);
+        assert!(ar.replicas_added > 0, "seed {seed}: flash never scaled up");
+        assert!(
+            ar.peak_session_redirects <= 2,
+            "seed {seed}: redirect budget exceeded ({})",
+            ar.peak_session_redirects
+        );
+        // no session is stranded on a drained or retired replica
+        assert_eq!(
+            a.metrics.sessions_completed + a.metrics.sessions_aborted,
+            10_000,
+            "seed {seed}: sessions leaked"
+        );
+        let v = a.metrics.invariant_violations(0, 0);
+        assert!(v.is_empty(), "seed {seed}: {v:?}");
+        digests.push(a.digest());
+    }
+    assert_ne!(digests[0], digests[1], "different seeds gave the same run");
+    assert_ne!(digests[1], digests[2], "different seeds gave the same run");
+}
+
+#[test]
+fn steady_fleet_converges_without_thrashing() {
+    for seed in SEEDS {
+        // steady runs at 0.6x the 4-replica preset capacity: a floor of
+        // 3 leaves one trim to equilibrium (~0.8x per replica) —
+        // comfortably inside the dead band, so hysteresis must produce
+        // EXACTLY one scale-down over the whole run and never a
+        // scale-up, however long the workload runs
+        let mut cfg = Scenario::Steady.config(6_000, seed);
+        assert_eq!(cfg.replicas, 4, "preset geometry moved; re-derive the floor");
+        cfg.autoscale = Some(AutoscaleConfig {
+            min_replicas: 3,
+            down_ticks: 3,
+            cooldown_ticks: 2,
+            ..AutoscaleConfig::default()
+        });
+        let r = run(&cfg);
+        let a = r.autoscale.as_ref().unwrap();
+        let ups = a.log_lines.iter().filter(|l| l.contains("scale_up")).count();
+        let downs = a.log_lines.iter().filter(|l| l.contains("scale_down")).count();
+        assert_eq!(
+            (ups, downs),
+            (0, 1),
+            "seed {seed}: converged loop must trim once and then hold: {:?}",
+            a.log_lines
+        );
+        assert_eq!(a.replicas_retired, 1, "seed {seed}: the trimmed replica retires");
+        assert_eq!(a.final_replicas, 3, "seed {seed}: fleet settles at the floor");
+        assert_eq!(
+            r.metrics.sessions_completed, 6_000,
+            "seed {seed}: steady sessions must all complete"
+        );
+        assert!(r.metrics.invariant_violations(0, 0).is_empty());
+    }
+}
+
+#[test]
+fn autoscaled_flash_beats_fixed_fleet_on_tail_ttft() {
+    let seed = SEEDS[0];
+    let mut fixed_cfg = autoscaled_flash(20_000, seed);
+    fixed_cfg.autoscale = None;
+    let auto_cfg = autoscaled_flash(20_000, seed);
+    let fixed = run(&fixed_cfg);
+    let auto = run(&auto_cfg);
+    let (fq, aq) = (fixed.ttft_ms.quantile(0.99), auto.ttft_ms.quantile(0.99));
+    assert!(
+        aq < fq,
+        "autoscaled ttft p99 {aq:.0} ms must beat the fixed fleet's {fq:.0} ms"
+    );
+    // the adaptive Busy hint quotes deeper than the fixed fleet's
+    // static one-window suggestion
+    assert!(fixed.retry_after_max_ms > 0, "fixed fleet never said Busy");
+    assert!(
+        auto.retry_after_max_ms > fixed.retry_after_max_ms,
+        "adaptive hint {} ms never quoted past the static {} ms",
+        auto.retry_after_max_ms,
+        fixed.retry_after_max_ms
+    );
+}
+
+// ---------------------------------------------------------------------
+// live side: the controller on a loopback fleet
+// ---------------------------------------------------------------------
+
+fn rt() -> tokio::runtime::Runtime {
+    tokio::runtime::Builder::new_multi_thread()
+        .worker_threads(2)
+        .enable_all()
+        .build()
+        .unwrap()
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![1i32];
+            for j in 0..5 {
+                p.push(100 + ((i * 11 + j * 3) % 100) as i32);
+            }
+            p
+        })
+        .collect()
+}
+
+/// A target drifted from the frozen draft (0.3) so tau genuinely
+/// varies — rebalanced sessions must reconstruct a non-trivial
+/// trajectory (same baseline as `tests/serve_fleet.rs`).
+fn evolved_target(seed: u64) -> Result<SyntheticTarget> {
+    let mut t = SyntheticTarget::new(seed).with_version("evolved", 0.3);
+    t.deploy("evolved")?;
+    Ok(t)
+}
+
+/// Single-replica virtual-clock reference trajectories.
+fn reference_committed(seed: u64) -> Vec<Vec<i32>> {
+    let cfg = ServeConfig {
+        users: USERS,
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed,
+        ..Default::default()
+    };
+    let mut backend = evolved_target(seed).unwrap();
+    let mut make = move |_id: u32| -> Result<Box<dyn DraftSource>> {
+        Ok(Box::new(SyntheticDraft::new(seed)))
+    };
+    let sim = serve_with(
+        &mut backend,
+        &mut make,
+        &prompts(USERS),
+        &JETSON_ORIN,
+        &A800_70B,
+        &NetworkProfile::new(NetworkKind::FourG),
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(sim.completed, USERS);
+    sim.per_session_committed
+}
+
+fn ecfg(seed: u64, depth: usize) -> EdgeSessionConfig {
+    EdgeSessionConfig {
+        max_new: MAX_NEW,
+        fixed_k: Some(4),
+        seed,
+        pipeline_depth: depth,
+        max_reattach: 16,
+        ..Default::default()
+    }
+}
+
+fn two_replicas(seed: u64) -> FleetRegistry {
+    let mut reg = FleetRegistry::new();
+    for addr in ["replica-a", "replica-b"] {
+        reg.spawn_loopback_replica(addr, VerifierConfig { seed, ..Default::default() }, move || {
+            Ok(Box::new(evolved_target(seed)?) as Box<dyn VerifyBackend>)
+        })
+        .unwrap();
+    }
+    reg
+}
+
+/// Rebalance-only control config for a two-replica fleet: the floor
+/// pins the size (no scale actions possible at steady queues), but the
+/// margin is low enough that A's whole-fleet session load arms a
+/// rebalance toward idle B on the first tick that sees it.
+fn rebalance_only() -> AutoscaleConfig {
+    AutoscaleConfig {
+        min_replicas: 2,
+        max_replicas: 2,
+        rebalance_margin: 1,
+        max_redirects_per_tick: 2,
+        ..AutoscaleConfig::default()
+    }
+}
+
+async fn await_mid_decode(reg: &FleetRegistry, addr: &str) {
+    let v = reg.verifier(addr).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let s = v.stats().await.unwrap();
+        if s.sessions_opened >= USERS && s.rounds >= 1 {
+            return;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "sessions never reached mid-decode on {addr}"
+        );
+        tokio::time::sleep(std::time::Duration::from_millis(2)).await;
+    }
+}
+
+fn assert_matches_reference(reports: &[EdgeReport], reference: &[Vec<i32>], label: &str) {
+    assert_eq!(reports.len(), reference.len());
+    for (i, (r, want)) in reports.iter().zip(reference).enumerate() {
+        assert_eq!(
+            &r.committed, want,
+            "{label}: committed sequence diverged from the single-replica sim (prompt {i})"
+        );
+    }
+}
+
+/// The live acceptance bar: a controller rebalancing a lopsided fleet
+/// MID-DECODE (all sessions opened on A, B idle) never changes a
+/// committed token — sequential and pipelined, across the pinned
+/// seeds.
+#[test]
+fn controller_rebalances_mid_decode_with_identical_sequences() {
+    for seed in SEEDS {
+        let reference = reference_committed(seed);
+        for depth in [1usize, 2] {
+            let (reports, a_stats, b_stats, actions) = rt().block_on(async {
+                let mut reg = two_replicas(seed);
+                let mut tasks = Vec::new();
+                for prompt in prompts(USERS) {
+                    let dial = reg.dial("replica-a", None);
+                    let ecfg = ecfg(seed, depth);
+                    tasks.push(tokio::spawn(async move {
+                        let mut t = ResumableTransport::connect(dial, &ecfg).await?;
+                        let mut draft = SyntheticDraft::new(seed);
+                        run_edge_session(&mut t, &mut draft, &prompt, &ecfg).await
+                    }));
+                }
+                await_mid_decode(&reg, "replica-a").await;
+                let mut ctl = AutoscaleController::new(rebalance_only());
+                // a few control ticks while the sessions decode: the
+                // load gap (A: USERS, B: 0) arms rebalances that move
+                // sessions at their next head round
+                for t in 0..4u32 {
+                    ctl.step(&mut reg, t as f64 * 1000.0, None).await.unwrap();
+                    tokio::time::sleep(std::time::Duration::from_millis(5)).await;
+                }
+                let mut reports = Vec::new();
+                for t in tasks {
+                    reports.push(t.await.unwrap().unwrap());
+                }
+                let a = reg.verifier("replica-a").unwrap().shutdown().await.unwrap();
+                let b = reg.verifier("replica-b").unwrap().shutdown().await.unwrap();
+                (reports, a, b, ctl.policy().log().len())
+            });
+            let label = format!("controller-rebalance seed {seed} depth {depth}");
+            assert_matches_reference(&reports, &reference, &label);
+            assert!(actions >= 1, "{label}: the controller never acted");
+            assert!(
+                a_stats.sessions_redirected >= 1,
+                "{label}: no session was rebalanced away from A"
+            );
+            assert_eq!(
+                a_stats.sessions_redirected,
+                b_stats.sessions_imported,
+                "{label}: every export must be imported exactly once"
+            );
+            assert_eq!(
+                a_stats.sessions_completed + b_stats.sessions_completed,
+                USERS,
+                "{label}: completions must split across the fleet"
+            );
+            assert_eq!(a_stats.sessions_evicted + b_stats.sessions_evicted, 0);
+        }
+    }
+}
+
+/// Same bar on a MUXED connection: a rebalanced stream cannot leave the
+/// shared transport, so it resumes in place (A re-imports it) while its
+/// siblings stay pinned — and no token moves.
+#[test]
+fn controller_rebalance_on_mux_resumes_in_place_with_identical_sequences() {
+    for seed in SEEDS {
+        let reference = reference_committed(seed);
+        let (reports, a_stats, b_stats) = rt().block_on(async {
+            let mut reg = two_replicas(seed);
+            let mut dial = reg.dial("replica-a", None);
+            let initial = dial.connect().await.unwrap();
+            let ecfg0 = ecfg(seed, 1);
+            let mut mux = EdgeMux::connect(initial, Some(dial), &ecfg0).await.unwrap();
+            let mut tasks = Vec::new();
+            for prompt in prompts(USERS) {
+                let mut stream = mux.open_stream();
+                let ecfg = ecfg(seed, 1);
+                tasks.push(tokio::spawn(async move {
+                    let sid = stream.stream_id();
+                    let mut draft = SyntheticDraft::new(seed);
+                    run_session_on(&mut stream, sid, &mut draft, &prompt, &ecfg).await
+                }));
+            }
+            await_mid_decode(&reg, "replica-a").await;
+            let mut ctl = AutoscaleController::new(rebalance_only());
+            for t in 0..4u32 {
+                ctl.step(&mut reg, t as f64 * 1000.0, None).await.unwrap();
+                tokio::time::sleep(std::time::Duration::from_millis(5)).await;
+            }
+            let mut reports = Vec::new();
+            for t in tasks {
+                reports.push(t.await.unwrap().unwrap());
+            }
+            drop(mux);
+            let a = reg.verifier("replica-a").unwrap().shutdown().await.unwrap();
+            let b = reg.verifier("replica-b").unwrap().shutdown().await.unwrap();
+            (reports, a, b)
+        });
+        let label = format!("controller-mux seed {seed}");
+        assert_matches_reference(&reports, &reference, &label);
+        assert!(
+            a_stats.sessions_redirected >= 1,
+            "{label}: the controller never rebalanced a stream"
+        );
+        assert_eq!(
+            a_stats.sessions_redirected, a_stats.sessions_imported,
+            "{label}: pinned streams resume in place (A re-imports its own exports)"
+        );
+        assert_eq!(b_stats.sessions_imported, 0, "{label}: B never sees them");
+        assert_eq!(a_stats.sessions_completed, USERS, "{label}: all finish on A");
+    }
+}

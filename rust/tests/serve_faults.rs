@@ -535,6 +535,7 @@ fn unresumed_sessions_are_evicted_after_grace() {
             prompt: vec![1, 70, 71],
             max_new: 32,
             nonce: 7,
+            tier: 1,
         };
         edge.send_frame(Frame::on(1, FrameKind::Open, open.encode()))
             .await
