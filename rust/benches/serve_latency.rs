@@ -11,7 +11,10 @@
 //! 2. **An 8-session loopback serving run**, untraced and traced, on
 //!    the deterministic synthetic backend: wall time plus the
 //!    p50/p90/p99/p999 round/queue/verify/rtt quantiles from the
-//!    `ServingMetrics` histograms.
+//!    `ServingMetrics` histograms — then the same run under continuous
+//!    batching (`--batch-mode continuous`), asserting the rolling
+//!    admission loop commits identical tokens while beating the
+//!    windowed queue-wait p99 (docs/BATCHING.md).
 //!
 //! With `FLEXSPEC_BENCH_SERVE_JSON=path` the run writes a
 //! machine-readable `BENCH_serve.json` (schema documented in
@@ -26,7 +29,7 @@ use flexspec::coordinator::DraftSource;
 use flexspec::metrics::ServingMetrics;
 use flexspec::obs::{LatencySummary, LogHistogram, SpanKind, Trace};
 use flexspec::serve::{
-    serve_loopback, EdgeReport, EdgeSessionConfig, SyntheticDraft, SyntheticTarget,
+    serve_loopback, BatchMode, EdgeReport, EdgeSessionConfig, SyntheticDraft, SyntheticTarget,
     VerifierConfig, VerifyBackend,
 };
 use flexspec::util::bench::{black_box, Group};
@@ -55,11 +58,16 @@ fn evolved_target() -> Result<SyntheticTarget> {
 }
 
 /// One 8-session loopback run; `traced` installs a shared journal on
-/// both the verifier and every edge session.
-fn run_loopback(traced: bool) -> Result<(f64, ServingMetrics, Vec<EdgeReport>, Option<Trace>)> {
+/// both the verifier and every edge session, `mode` picks the batcher
+/// (windowed close-the-window vs continuous rolling slots).
+fn run_loopback(
+    traced: bool,
+    mode: BatchMode,
+) -> Result<(f64, ServingMetrics, Vec<EdgeReport>, Option<Trace>)> {
     let trace = traced.then(Trace::wall);
     let vcfg = VerifierConfig {
         window_ms: 12.0,
+        batch_mode: mode,
         seed: SEED,
         trace: trace.clone(),
         ..Default::default()
@@ -151,9 +159,9 @@ fn main() -> Result<()> {
 
     // ---- 8-session loopback latency run -------------------------------
     // warm-up run (thread spawn, allocator), then the measured pair
-    let _ = run_loopback(false)?;
-    let (wall_off, m_off, _, _) = run_loopback(false)?;
-    let (wall_on, m_on, reports, trace) = run_loopback(true)?;
+    let _ = run_loopback(false, BatchMode::Windowed)?;
+    let (wall_off, m_off, _, _) = run_loopback(false, BatchMode::Windowed)?;
+    let (wall_on, m_on, reports, trace) = run_loopback(true, BatchMode::Windowed)?;
     assert_eq!(m_on.sessions_completed, USERS);
     assert_eq!(m_off.rounds, m_on.rounds, "tracing changed the trajectory");
     println!(
@@ -164,6 +172,29 @@ fn main() -> Result<()> {
     print!("{}", m_on.latency.render_lines("  "));
     let events = trace.as_ref().map_or(0, |t| t.len());
     println!("  trace events recorded: {events}");
+
+    // ---- windowed vs continuous batching cell -------------------------
+    let (wall_cont, m_cont, _, _) = run_loopback(false, BatchMode::Continuous)?;
+    assert_eq!(m_cont.sessions_completed, USERS);
+    assert_eq!(
+        m_cont.tokens_committed, m_off.tokens_committed,
+        "batch mode changed a committed token"
+    );
+    let (win_q99, cont_q99) = (m_off.latency.queue_ms.p99(), m_cont.latency.queue_ms.p99());
+    assert!(
+        cont_q99 < win_q99,
+        "continuous queue p99 {cont_q99:.2} ms must beat windowed {win_q99:.2} ms"
+    );
+    println!(
+        "serve: continuous batching — wall {wall_cont:.0} ms, {} batches, \
+         {} stacked dispatches, occupancy mean {:.2}",
+        m_cont.batches,
+        m_cont.stacked_dispatches,
+        if m_cont.slot_occupancy.count() == 0 { 0.0 } else { m_cont.slot_occupancy.mean() }
+    );
+    println!(
+        "  queue p99: windowed {win_q99:.2} ms -> continuous {cont_q99:.2} ms"
+    );
 
     // merged edge-side rtt across the 8 sessions
     let mut edge_lat = LatencySummary::new();
@@ -188,6 +219,45 @@ fn main() -> Result<()> {
             ("trace_events", Json::Num(events as f64)),
             ("quantiles_ms", quantiles_json(&lat)),
             ("latency", lat.to_json()),
+            (
+                "batch_modes",
+                Json::obj(vec![
+                    (
+                        "window",
+                        Json::obj(vec![
+                            ("wall_ms", Json::Num(wall_off)),
+                            ("batches", Json::Num(m_off.batches as f64)),
+                            (
+                                "stacked_dispatches",
+                                Json::Num(m_off.stacked_dispatches as f64),
+                            ),
+                            ("queue_p99_ms", Json::Num(win_q99)),
+                            ("round_p99_ms", Json::Num(m_off.latency.round_ms.p99())),
+                        ]),
+                    ),
+                    (
+                        "continuous",
+                        Json::obj(vec![
+                            ("wall_ms", Json::Num(wall_cont)),
+                            ("batches", Json::Num(m_cont.batches as f64)),
+                            (
+                                "stacked_dispatches",
+                                Json::Num(m_cont.stacked_dispatches as f64),
+                            ),
+                            ("queue_p99_ms", Json::Num(cont_q99)),
+                            ("round_p99_ms", Json::Num(m_cont.latency.round_ms.p99())),
+                            (
+                                "slot_occupancy_mean",
+                                Json::Num(if m_cont.slot_occupancy.count() == 0 {
+                                    0.0
+                                } else {
+                                    m_cont.slot_occupancy.mean()
+                                }),
+                            ),
+                        ]),
+                    ),
+                ]),
+            ),
             ("obs_primitives", g.to_json()),
         ]);
         let path = std::path::PathBuf::from(path);

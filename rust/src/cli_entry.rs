@@ -18,9 +18,9 @@ use crate::experiments::Ctx;
 use crate::obs::{LatencySummary, Trace, VirtualClock};
 use crate::serve::transport::BoxFuture;
 use crate::serve::{
-    run_edge_session, run_session_on, serve_cloud, EdgeMux, EdgeReport, EdgeSessionConfig,
-    EngineBackend, FaultConfig, FaultPlan, Reconnect, ResumableTransport, SyntheticDraft,
-    SyntheticTarget, TcpTransport, Transport, VerifierConfig, VerifyBackend,
+    run_edge_session, run_session_on, serve_cloud, BatchMode, EdgeMux, EdgeReport,
+    EdgeSessionConfig, EngineBackend, FaultConfig, FaultPlan, Reconnect, ResumableTransport,
+    SyntheticDraft, SyntheticTarget, TcpTransport, Transport, VerifierConfig, VerifyBackend,
 };
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
@@ -28,7 +28,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 const VALUE_OPTS: &[&str] = &[
-    "requests", "seed", "report", "users", "network", "window", "max-batch",
+    "requests", "seed", "report", "users", "network", "window", "max-batch", "batch-mode",
     "max-new", "dataset", "samples", "arrival-ms", "artifacts",
     "bind", "addr", "backend", "sessions", "k", "draft", "version",
     "deploy-version", "deploy-after", "resume-grace", "fault-seed",
@@ -39,6 +39,13 @@ const VALUE_OPTS: &[&str] = &[
     "scale-down-queue", "redirect-budget", "action-log", "tier-reserve",
     "ledger-ttl", "staleness",
 ];
+
+/// `--batch-mode window|continuous` (default: the windowed batcher).
+fn batch_mode_from(args: &Args) -> Result<BatchMode> {
+    let s = args.get_or("batch-mode", "window");
+    BatchMode::parse(&s)
+        .ok_or_else(|| anyhow::anyhow!("bad --batch-mode '{s}' (window|continuous)"))
+}
 
 /// The `--autoscale` knob family → a policy config. Shared by `loadgen
 /// --autoscale` (sim twin) and `serve-cloud --fleet N --autoscale`
@@ -115,6 +122,7 @@ pub fn cli_main() -> Result<()> {
                  \x20 flexspec serve [--users N] [--network 5g|4g|wifi] [--window MS]\n\
                  \x20 flexspec serve-cloud [--bind 127.0.0.1:7411] [--backend synthetic|engine]\n\
                  \x20\x20\x20\x20 [--sessions N] [--window MS] [--max-batch N] [--seed S]\n\
+                 \x20\x20\x20\x20 [--batch-mode window|continuous]  (rolling slot admission, docs/BATCHING.md)\n\
                  \x20\x20\x20\x20 [--admission-queue N]  (pending-draft bound; 0=unbounded,\n\
                  \x20\x20\x20\x20\x20 effective values 1..max-batch — the window drains at max-batch)\n\
                  \x20\x20\x20\x20 [--resume-grace MS] [--deploy-version NAME --deploy-after N]\n\
@@ -131,6 +139,7 @@ pub fn cli_main() -> Result<()> {
                  \x20\x20\x20\x20 [--fleet-addrs a:p,b:p,...]  (follow Redirects, fail over, re-root)\n\
                  \x20 flexspec loadgen <steady|flash|diurnal|churn> [--sessions N] [--seed S]\n\
                  \x20\x20\x20\x20 [--replicas N] [--window MS] [--max-batch N] [--k K]\n\
+                 \x20\x20\x20\x20 [--batch-mode window|continuous]\n\
                  \x20\x20\x20\x20 [--admission-queue N] [--network-mix 5g|4g|wifi|W5,W4,Ww]\n\
                  \x20\x20\x20\x20 [--autoscale]  (run the control loop's sim twin; docs/AUTOSCALE.md)\n\
                  \x20\x20\x20\x20 [--selfcheck]  (run twice, assert byte-identical digests)\n\
@@ -282,6 +291,7 @@ fn serve_cloud_cmd(args: &Args) -> Result<()> {
     let vcfg = VerifierConfig {
         window_ms: args.get_f64("window", 12.0),
         max_batch: args.get_usize("max-batch", 8),
+        batch_mode: batch_mode_from(args)?,
         seed,
         resume_grace_ms: args.get_f64("resume-grace", 10_000.0),
         admission_queue: args.get_usize("admission-queue", 0),
@@ -397,6 +407,7 @@ fn serve_fleet_cmd(args: &Args, fleet: usize) -> Result<()> {
     let vcfg = VerifierConfig {
         window_ms: args.get_f64("window", 12.0),
         max_batch: args.get_usize("max-batch", 8),
+        batch_mode: batch_mode_from(args)?,
         seed,
         resume_grace_ms: args.get_f64("resume-grace", 10_000.0),
         admission_queue: args.get_usize("admission-queue", 0),
@@ -882,6 +893,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
     cfg.replicas = args.get_usize("replicas", cfg.replicas).max(1);
     cfg.window_ms = args.get_f64("window", cfg.window_ms);
     cfg.max_batch = args.get_usize("max-batch", cfg.max_batch).max(1);
+    cfg.batch_mode = batch_mode_from(args)?;
     cfg.fixed_k = args.get_usize("k", cfg.fixed_k).clamp(1, 64);
     cfg.admission_queue = args.get_usize("admission-queue", cfg.admission_queue);
     if let Some(m) = args.get("network-mix") {

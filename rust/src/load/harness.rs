@@ -58,7 +58,7 @@ use crate::devices::{A800_70B, JETSON_ORIN};
 use crate::metrics::ServingMetrics;
 use crate::obs::{LogHistogram, SpanKind, Trace};
 use crate::protocol::{bits_per_token, prompt_air_bytes, WireFormat, O_HEADER_BYTES};
-use crate::serve::{bucket_k, busy_backoff_ms, MAX_BUSY_RETRIES};
+use crate::serve::{bucket_k, busy_backoff_ms, BatchMode, MAX_BUSY_RETRIES};
 use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
 
@@ -463,6 +463,13 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
     };
     let draft_ms =
         JETSON_ORIN.round_overhead_ms + cfg.fixed_k as f64 * JETSON_ORIN.draft_ms_per_token;
+    // continuous batching never waits for stragglers: the close fires
+    // as soon as the event loop drains the instant's arrivals (the
+    // rolling-slot analogue of the verifier's zero-delay deadline)
+    let window_arm_ms = match cfg.batch_mode {
+        BatchMode::Continuous => 0.0,
+        BatchMode::Windowed => cfg.window_ms,
+    };
     let draft_bytes = O_HEADER_BYTES
         + ((cfg.fixed_k as f64 * bits_per_token(WireFormat::Compact)) / 8.0).ceil() as usize;
     let verdict_bytes = O_HEADER_BYTES + 12;
@@ -683,7 +690,7 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                     if !r.busy && !r.close_armed {
                         r.close_armed = true;
                         let rep = s.replica;
-                        push(&mut heap, &mut seq, t + cfg.window_ms, Ev::WindowClose { rep });
+                        push(&mut heap, &mut seq, t + window_arm_ms, Ev::WindowClose { rep });
                     }
                 }
             }
@@ -727,6 +734,12 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                     );
                 }
                 metrics.note_batch(members.len());
+                // every member drafts the same fixed K, so the planner
+                // stacks the whole batch as one [B, K] dispatch class
+                metrics.stacked_dispatches += 1;
+                if cfg.batch_mode == BatchMode::Continuous {
+                    metrics.slot_occupancy.add(members.len() as f64);
+                }
                 metrics.latency.verify_ms.record(dur);
                 if let Some(&sid) = members.iter().find(|&&sid| traced(sid)) {
                     span(
@@ -770,7 +783,7 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                 r.busy = false;
                 if !r.backlog.is_empty() && !r.close_armed {
                     r.close_armed = true;
-                    push(&mut heap, &mut seq, t + cfg.window_ms, Ev::WindowClose { rep });
+                    push(&mut heap, &mut seq, t + window_arm_ms, Ev::WindowClose { rep });
                 }
             }
             Ev::Verdict { sid, tau, eos } => {
@@ -1027,6 +1040,32 @@ mod tests {
             r.metrics.drafts_received,
             r.metrics.rounds + r.metrics.drafts_busy
         );
+    }
+
+    #[test]
+    fn continuous_mode_is_deterministic_and_cuts_queue_wait() {
+        let mut windowed = Scenario::Steady.config(2000, 42);
+        windowed.batch_mode = BatchMode::Windowed;
+        let mut rolling = windowed.clone();
+        rolling.batch_mode = BatchMode::Continuous;
+        let w = run(&windowed);
+        let c = run(&rolling);
+        assert_eq!(c.digest(), run(&rolling).digest(), "continuous run not deterministic");
+        let v = c.metrics.invariant_violations(0, 0);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(c.metrics.sessions_completed, 2000);
+        // same decode work either way — only the batching schedule moves
+        assert_eq!(c.metrics.rounds, w.metrics.rounds);
+        assert_eq!(c.metrics.tokens_committed, w.metrics.tokens_committed);
+        // rolling admission records one occupancy sample per close and
+        // stops making drafts wait out the window
+        assert_eq!(c.metrics.slot_occupancy.count(), c.metrics.batches);
+        assert_eq!(w.metrics.slot_occupancy.count(), 0);
+        let (wq, cq) = (
+            w.metrics.latency.queue_ms.quantile(0.99),
+            c.metrics.latency.queue_ms.quantile(0.99),
+        );
+        assert!(cq < wq, "continuous queue p99 {cq} must beat windowed {wq}");
     }
 
     #[test]

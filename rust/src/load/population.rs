@@ -197,6 +197,7 @@ impl Scenario {
             seed,
             window_ms: 12.0,
             max_batch: 8,
+            batch_mode: crate::serve::BatchMode::Windowed,
             fixed_k: 4,
             admission_queue,
             shape,
@@ -228,6 +229,11 @@ pub struct LoadConfig {
     /// Admission window span, ms (mirrors `VerifierConfig`).
     pub window_ms: f64,
     pub max_batch: usize,
+    /// Windowed (close-the-window) or continuous (rolling slot)
+    /// batching — mirrors `VerifierConfig::batch_mode`. Continuous
+    /// arms a zero-delay window, so drafts dispatch as soon as the
+    /// event loop drains the arrival burst (docs/BATCHING.md).
+    pub batch_mode: crate::serve::BatchMode,
     /// Fixed draft-block length (the load model does not adapt K).
     pub fixed_k: usize,
     /// Per-replica backlog bound; 0 = unbounded (no Busy deferrals).

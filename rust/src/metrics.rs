@@ -188,8 +188,19 @@ pub struct ServingMetrics {
     pub rounds: usize,
     /// Verification batches closed (each one `verify_batch` call).
     pub batches: usize,
+    /// Stacked `[B, K]` device dispatches across all closed batches:
+    /// one per distinct planner bucket class per close (ragged drafts
+    /// pad to power-of-two K and share one stacked forward per class).
+    /// Conservation: each batch stacks at least one bucket and at most
+    /// one per member row, so `batches <= stacked_dispatches <= rounds`.
+    pub stacked_dispatches: usize,
     /// Verify requests per closed batch.
     pub batch_occupancy: Summary,
+    /// Continuous batching only (`BatchMode::Continuous`): verification
+    /// slots occupied at each rolling close — how full the stacked
+    /// executor ran without a window timer to fill it. Empty in
+    /// windowed mode.
+    pub slot_occupancy: Summary,
     /// Pending-draft backlog observed at each window close (the
     /// admission queue's operating depth).
     pub queue_depth: Summary,
@@ -321,6 +332,24 @@ impl ServingMetrics {
                 self.tokens_committed, self.rounds, self.accepted
             ));
         }
+        // stacked-dispatch conservation (see the field docs): every
+        // closed batch costs at least one stacked [B, K] dispatch and
+        // never more than one per verified row
+        if self.stacked_dispatches < self.batches || self.stacked_dispatches > self.rounds {
+            v.push(format!(
+                "stacked dispatch conservation: {} dispatches outside \
+                 [batches {}, rounds {}]",
+                self.stacked_dispatches, self.batches, self.rounds
+            ));
+        }
+        // continuous-mode closes record occupancy once per batch
+        if self.slot_occupancy.count() > self.batches {
+            v.push(format!(
+                "slot occupancy conservation: {} samples > {} batches",
+                self.slot_occupancy.count(),
+                self.batches
+            ));
+        }
         if self.latency.verify_ms.count() != self.batches as u64 {
             v.push(format!(
                 "histogram conservation: verify_ms count {} != batches {}",
@@ -380,6 +409,16 @@ impl ServingMetrics {
             ("rounds_pipelined", n(self.rounds_pipelined)),
             ("batches", n(self.batches)),
             ("mean_batch", Json::Num(self.mean_batch())),
+            ("stacked_dispatches", n(self.stacked_dispatches)),
+            (
+                "slot_occupancy_mean",
+                Json::Num(if self.slot_occupancy.count() == 0 {
+                    0.0
+                } else {
+                    self.slot_occupancy.mean()
+                }),
+            ),
+            ("slot_occupancy_samples", n(self.slot_occupancy.count())),
             ("drafts_received", n(self.drafts_received)),
             ("drafts_cancelled", n(self.drafts_cancelled)),
             ("drafts_orphaned", n(self.drafts_orphaned)),
@@ -405,7 +444,7 @@ impl ServingMetrics {
              \x20 resume           {} parked, {} resumed, {} evicted, {} verdicts replayed, {} residues expired\n\
              \x20 fleet            {} redirected out, {} imported, {} ledger entries expired\n\
              \x20 pipeline         {} rounds pipelined, {} drafts cancelled, {} draft tokens wasted\n\
-             \x20 rounds           {} in {} batches (mean occupancy {:.2})\n\
+             \x20 rounds           {} in {} batches (mean occupancy {:.2}, {} stacked dispatches)\n\
              \x20 admission        {} busy deferrals, {} drafts orphaned, queue depth mean {:.2} / p95 {:.0}\n\
              \x20 tokens           {} committed, acceptance {:.3} ({} / {} drafted)\n\
              \x20 hot-swaps        {}\n\
@@ -428,6 +467,7 @@ impl ServingMetrics {
             self.rounds,
             self.batches,
             self.mean_batch(),
+            self.stacked_dispatches,
             self.drafts_busy,
             self.drafts_orphaned,
             self.queue_depth.mean(),
@@ -577,6 +617,7 @@ mod tests {
         m.accepted = 15;
         m.tokens_committed = 20; // accepted + one bonus per round
         m.batches = 3;
+        m.stacked_dispatches = 4; // within [batches, rounds]
         for _ in 0..3 {
             m.latency.verify_ms.record(1.0);
         }
@@ -633,6 +674,39 @@ mod tests {
     }
 
     #[test]
+    fn invariant_stacked_dispatch_bounds() {
+        // fewer dispatches than batches: a batch ran without stacking
+        let mut m = balanced();
+        m.stacked_dispatches = m.batches - 1;
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("stacked dispatch")), "{v:?}");
+        // more dispatches than rows: stacking fragmented past 1/row
+        let mut m = balanced();
+        m.stacked_dispatches = m.rounds + 1;
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("stacked dispatch")), "{v:?}");
+        // the boundary values balance
+        let mut m = balanced();
+        m.stacked_dispatches = m.batches;
+        assert!(m.invariant_violations(0, 0).is_empty());
+        m.stacked_dispatches = m.rounds;
+        assert!(m.invariant_violations(0, 0).is_empty());
+    }
+
+    #[test]
+    fn invariant_slot_occupancy_samples() {
+        // continuous closes record occupancy at most once per batch
+        let mut m = balanced();
+        for _ in 0..m.batches {
+            m.slot_occupancy.add(2.0);
+        }
+        assert!(m.invariant_violations(0, 0).is_empty());
+        m.slot_occupancy.add(2.0);
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("slot occupancy")), "{v:?}");
+    }
+
+    #[test]
     fn invariant_histogram_totals() {
         let mut m = balanced();
         m.batches += 1; // a batch closed without a verify_ms sample
@@ -667,6 +741,8 @@ mod tests {
         m.ledger_expired = 1;
         let j = m.to_json();
         assert_eq!(j.get("rounds").and_then(|x| x.as_usize()), Some(5));
+        assert_eq!(j.get("stacked_dispatches").and_then(|x| x.as_usize()), Some(4));
+        assert_eq!(j.get("slot_occupancy_samples").and_then(|x| x.as_usize()), Some(0));
         assert_eq!(j.get("drafts_received").and_then(|x| x.as_usize()), Some(10));
         assert_eq!(j.get("ledger_expired").and_then(|x| x.as_usize()), Some(1));
         assert!(j.get("latency").and_then(|l| l.get("verify_ms")).is_some());

@@ -278,11 +278,27 @@ impl Frame {
     /// len = 5 + payload.len().
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(4 + FRAME_HEAD + self.payload.len());
-        write_u32(&mut out, (FRAME_HEAD + self.payload.len()) as u32);
-        out.push(self.kind as u8);
-        write_u32(&mut out, self.stream);
+        out.extend_from_slice(&self.encode_head());
         out.extend_from_slice(&self.payload);
         out
+    }
+
+    /// Just the 9-byte prefix (`[len][kind][stream]`) of
+    /// [`encode`](Self::encode): senders with vectored I/O write
+    /// `[head, payload]` as two slices and skip copying the payload
+    /// into a fresh buffer (`Transport::send_frame` hot path).
+    pub fn encode_head(&self) -> [u8; 4 + FRAME_HEAD] {
+        let mut head = [0u8; 4 + FRAME_HEAD];
+        head[..4].copy_from_slice(&((FRAME_HEAD + self.payload.len()) as u32).to_le_bytes());
+        head[4] = self.kind as u8;
+        head[5..9].copy_from_slice(&self.stream.to_le_bytes());
+        head
+    }
+
+    /// Total wire bytes [`encode`](Self::encode) would produce, without
+    /// producing them (airtime metering on the vectored send path).
+    pub fn encoded_len(&self) -> usize {
+        4 + FRAME_HEAD + self.payload.len()
     }
 }
 
@@ -1017,6 +1033,32 @@ mod tests {
                     "phantom trailing frame",
                 )?;
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vectored_head_plus_payload_equals_encode() {
+        prop::check(40, |rng| {
+            let (_, frame) = draft_frame(rng);
+            let mut vectored = frame.encode_head().to_vec();
+            vectored.extend_from_slice(&frame.payload);
+            prop::assert_prop(vectored == frame.encode(), "head+payload != encode()")?;
+            prop::assert_prop(
+                frame.encoded_len() == frame.encode().len(),
+                "encoded_len disagrees with encode().len()",
+            )?;
+            // A decoder fed the two vectored slices separately yields
+            // the original frame — exactly what a writev-split send
+            // produces on the wire.
+            let mut dec = FrameDecoder::new();
+            dec.push(&frame.encode_head());
+            dec.push(&frame.payload);
+            let back = dec
+                .next_frame()
+                .map_err(|e| e.to_string())?
+                .ok_or("no frame from vectored slices")?;
+            prop::assert_prop(back == frame, "vectored decode mismatch")?;
             Ok(())
         });
     }

@@ -3,6 +3,11 @@
 //! One `Engine` per OS thread (PJRT handles are not `Send`); the
 //! coordinator performs logical concurrency via the discrete-event clock
 //! on a single thread, which also keeps every experiment deterministic.
+//!
+//! Every execution funnels through one dispatch point that counts
+//! device calls (`dispatches()`), so tests can assert the batching
+//! contract structurally: one stacked dispatch per planner bucket, not
+//! one per row.
 
 use anyhow::{Context, Result};
 use std::cell::RefCell;
@@ -14,6 +19,7 @@ pub struct Engine {
     client: xla::PjRtClient,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     compile_count: RefCell<usize>,
+    dispatch_count: RefCell<u64>,
 }
 
 impl Engine {
@@ -22,6 +28,7 @@ impl Engine {
             client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
             cache: RefCell::new(HashMap::new()),
             compile_count: RefCell::new(0),
+            dispatch_count: RefCell::new(0),
         })
     }
 
@@ -35,6 +42,13 @@ impl Engine {
 
     pub fn compiles(&self) -> usize {
         *self.compile_count.borrow()
+    }
+
+    /// Device executions performed so far (each `run*` call is exactly
+    /// one). The batched-verification contract is asserted against this
+    /// counter: a bucket of B rows must cost ONE dispatch.
+    pub fn dispatches(&self) -> u64 {
+        *self.dispatch_count.borrow()
     }
 
     /// Load an HLO **text** file (see python/compile/aot.py for why text,
@@ -57,46 +71,49 @@ impl Engine {
         Ok(exe)
     }
 
-    /// Execute and unwrap the single tuple output into its elements.
+    /// Unwrap one execution's single tuple output into its elements.
     /// jax-lowered modules always return a tuple root (return_tuple=True).
+    fn unpack(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        *self.dispatch_count.borrow_mut() += 1;
+        let mut lit = out[0][0].to_literal_sync()?;
+        let elems = lit.decompose_tuple()?;
+        Ok(elems)
+    }
+
+    /// Execute over host literals (cold path: uploads per call).
     pub fn run(
         &self,
         exe: &xla::PjRtLoadedExecutable,
         args: &[&xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
-        let out = exe.execute::<&xla::Literal>(args)?;
-        let mut lit = out[0][0].to_literal_sync()?;
-        let elems = lit.decompose_tuple()?;
-        Ok(elems)
+        self.unpack(exe.execute::<&xla::Literal>(args)?)
     }
 
-    /// Same, over device-resident buffers (hot path: weights stay
-    /// uploaded across calls — see WeightSet::buffers).
+    /// Execute over device-resident buffers, donating EVERY argument
+    /// (upstream `execute_b` semantics). Only correct when every input
+    /// is per-call scratch; weights go through [`run_b_opts`](Self::run_b_opts).
     pub fn run_b(
         &self,
         exe: &xla::PjRtLoadedExecutable,
         args: &[&xla::PjRtBuffer],
     ) -> Result<Vec<xla::Literal>> {
-        let out = exe.execute_b::<&xla::PjRtBuffer>(args)?;
-        let mut lit = out[0][0].to_literal_sync()?;
-        let elems = lit.decompose_tuple()?;
-        Ok(elems)
+        self.unpack(exe.execute_b::<&xla::PjRtBuffer>(args)?)
     }
 
-    /// Execute one compiled entry point over MANY argument sets through
-    /// a single engine call, returning outputs in input order — the
-    /// seam the batched verification executor drives (one call per
-    /// planner bucket). The prebuilt PJRT shim runs the sets
-    /// back-to-back on the device, amortizing the per-call host
-    /// dispatch here; a true stacked `[B, ...]` executable (one XLA
-    /// program over the whole bucket) replaces ONLY this function, so
-    /// no caller changes when it lands.
-    pub fn run_batched(
+    /// Execute over device-resident buffers with a per-argument
+    /// donation mask — the hot path. Weight buffers are passed with
+    /// `donate = false` so ONE upload (per target version) serves every
+    /// row of every call; per-step activations (tokens/pos/valid/KV)
+    /// are donated as usual. This is also the whole batched story: the
+    /// model layer row-stacks a planner bucket into `[B, ...]` literals
+    /// and makes exactly one `run_b_opts` call per bucket.
+    pub fn run_b_opts(
         &self,
         exe: &xla::PjRtLoadedExecutable,
-        argsets: &[Vec<&xla::PjRtBuffer>],
-    ) -> Result<Vec<Vec<xla::Literal>>> {
-        argsets.iter().map(|args| self.run_b(exe, args)).collect()
+        args: &[&xla::PjRtBuffer],
+        donate: &[bool],
+    ) -> Result<Vec<xla::Literal>> {
+        self.unpack(exe.execute_b_opts::<&xla::PjRtBuffer>(args, donate)?)
     }
 }
 
@@ -112,6 +129,7 @@ mod tests {
     fn engine_creates_cpu_client() {
         let e = Engine::cpu().unwrap();
         assert_eq!(e.platform(), "cpu");
+        assert_eq!(e.dispatches(), 0);
     }
 
     #[test]
@@ -135,5 +153,28 @@ mod tests {
             Err(err) => err.to_string(),
         };
         assert!(err.contains("nonexistent"));
+    }
+
+    #[test]
+    fn dispatch_counter_tracks_each_execution_once() {
+        let e = Engine::cpu().unwrap();
+        // identity over its single argument, wrapped in the tuple root
+        let exe = xla::PjRtLoadedExecutable::hosted(|args| {
+            Ok(xla::Literal::tuple(vec![args[0].clone()]))
+        });
+        let lit = xla::Literal::vec1(&[3i32, 4]);
+        let out = e.run(&exe, &[&lit]).unwrap();
+        assert_eq!(out[0].to_vec::<i32>().unwrap(), vec![3, 4]);
+        assert_eq!(e.dispatches(), 1);
+
+        let buf = e.client().buffer_from_host_literal(None, &lit).unwrap();
+        let out = e.run_b_opts(&exe, &[&buf], &[false]).unwrap();
+        assert_eq!(out[0].to_vec::<i32>().unwrap(), vec![3, 4]);
+        assert_eq!(e.dispatches(), 2);
+        // non-donated: the buffer survives for a donate-all call
+        let out = e.run_b(&exe, &[&buf]).unwrap();
+        assert_eq!(out[0].to_vec::<i32>().unwrap(), vec![3, 4]);
+        assert_eq!(e.dispatches(), 3);
+        assert!(buf.to_literal_sync().is_err(), "run_b must donate");
     }
 }

@@ -4,6 +4,7 @@
 //! (coordinator, baselines, experiments) sees typed rust APIs.
 
 pub mod engine;
+pub mod kv;
 pub mod manifest;
 pub mod model;
 pub mod registry;
@@ -11,6 +12,7 @@ pub mod sampling;
 pub mod weights;
 
 pub use engine::Engine;
+pub use kv::{KvBlockPool, KvLease, PoolExhausted};
 pub use manifest::{ArchInfo, DomainInfo, Manifest, WeightInfo};
 pub use model::{BatchFwdItem, BlockOut, KvState, ModelRuntime, VerifyRuntime, WeightSet};
 pub use registry::{Registry, TargetVersion};

@@ -1,36 +1,61 @@
 //! Model runtime: drives the AOT-compiled `forward_block` / `prefill`
-//! executables with resident weight literals and a per-session KV cache.
+//! executables with device-resident weights and a per-session KV cache.
 //!
 //! Argument order contract (python/compile/aot.py): params in sorted name
 //! order, then LoRA adapters in sorted name order (targets only), then
 //! tokens[B] i32, pos[1] i32, valid[1] i32, kv f32. Output tuple:
 //! (logits [B, vocab] f32, kv_out).
+//!
+//! The stacked entry (`forward_block_batched`) uses the same argument
+//! order with a leading batch dimension on every activation operand:
+//! tokens [B, block], pos [B], valid [B], kv [B, ...kv_shape] →
+//! (logits [B, block, vocab], kv_out [B, ...kv_shape]). Weights carry
+//! no batch dimension — one device-resident upload serves every row.
 
 use super::engine::Engine;
 use super::manifest::{ArchInfo, Manifest, WeightInfo};
 use super::weights::Bundle;
 use anyhow::{bail, Context, Result};
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
-/// A weight bundle uploaded as xla literals in HLO argument order.
+/// A weight bundle: host literals in HLO argument order plus a cached
+/// device-resident upload.
 ///
-/// MEMORY SEMANTICS of the published xla 0.1.6 crate (measured, see
-/// EXPERIMENTS.md §Perf L3-3): `execute()` over literals LEAKS the
-/// device buffer it creates per argument (~the KV size per call → OOM
-/// over long experiment runs). The call path therefore creates its own
-/// buffers per call, hands them to `execute_b`, and frees them after —
-/// same copy volume, zero net growth. (A cached-weight-buffer variant
-/// crashed inside the prebuilt shim and was abandoned; fresh buffers
-/// measured leak-free and stable.)
+/// MEMORY SEMANTICS: the forked vendor `xla` layer supports per-argument
+/// donation (`execute_b_opts`), so weight buffers are uploaded ONCE per
+/// target version via [`WeightSet::device_buffers`] and passed
+/// non-donated to every call — rows of a stacked bucket and successive
+/// calls all share the same device allocation. (The published 0.1.6
+/// crate donated every `execute_b` input and leaked per-argument
+/// buffers under `execute()` — see EXPERIMENTS.md §Perf L3-3 for the
+/// measurements that motivated the fork.)
 pub struct WeightSet {
     pub info: WeightInfo,
     pub literals: Vec<xla::Literal>,
     pub n_params: usize,
     pub byte_size: usize,
+    /// Lazily-populated device upload (once per weight set, i.e. once
+    /// per target version — not once per call or per row).
+    device: RefCell<Option<Rc<Vec<xla::PjRtBuffer>>>>,
 }
 
 impl WeightSet {
+    fn from_literals(
+        info: WeightInfo,
+        n_params: usize,
+        byte_size: usize,
+        literals: Vec<xla::Literal>,
+    ) -> WeightSet {
+        WeightSet {
+            info,
+            literals,
+            n_params,
+            byte_size,
+            device: RefCell::new(None),
+        }
+    }
+
     pub fn load(m: &Manifest, arch: &ArchInfo, info: &WeightInfo, lora: bool) -> Result<WeightSet> {
         let bundle = Bundle::load(&m.path(&info.file))?;
         let spec = if lora { &arch.lora } else { &arch.params };
@@ -49,12 +74,12 @@ impl WeightSet {
             }
             literals.push(t.to_literal()?);
         }
-        Ok(WeightSet {
-            info: info.clone(),
-            n_params: bundle.n_params(),
-            byte_size: bundle.byte_size(),
+        Ok(WeightSet::from_literals(
+            info.clone(),
+            bundle.n_params(),
+            bundle.byte_size(),
             literals,
-        })
+        ))
     }
 
     /// All-zero LoRA adapters for an arch (the base version's "adapter").
@@ -65,8 +90,8 @@ impl WeightSet {
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
             literals.push(xla::Literal::vec1(&vec![0f32; n]).reshape(&dims)?);
         }
-        Ok(WeightSet {
-            info: WeightInfo {
+        Ok(WeightSet::from_literals(
+            WeightInfo {
                 name: "zero_lora".into(),
                 arch: arch.name.clone(),
                 kind: "lora".into(),
@@ -75,10 +100,29 @@ impl WeightSet {
                 domain: None,
                 target: None,
             },
-            n_params: 0,
-            byte_size: 0,
+            0,
+            0,
             literals,
-        })
+        ))
+    }
+
+    /// The device-resident upload of this weight set, created on first
+    /// use and shared (non-donated) by every subsequent call. Returns
+    /// `(buffers, freshly_uploaded)` so callers can account uploads.
+    pub fn device_buffers(
+        &self,
+        client: &xla::PjRtClient,
+    ) -> Result<(Rc<Vec<xla::PjRtBuffer>>, bool)> {
+        if let Some(b) = self.device.borrow().as_ref() {
+            return Ok((b.clone(), false));
+        }
+        let mut bufs = Vec::with_capacity(self.literals.len());
+        for lit in &self.literals {
+            bufs.push(client.buffer_from_host_literal(None, lit)?);
+        }
+        let rc = Rc::new(bufs);
+        *self.device.borrow_mut() = Some(rc.clone());
+        Ok((rc, true))
     }
 }
 
@@ -115,6 +159,10 @@ pub struct ModelStats {
     /// Stacked entries into `forward_block_batched` (each covers one or
     /// more `block_calls` rows in a single engine dispatch).
     pub stacked_calls: Cell<u64>,
+    /// Weight-set uploads into device-resident buffers. The batching
+    /// contract pins this to once per weight set (target version), NOT
+    /// once per call or per bucket row.
+    pub weight_uploads: Cell<u64>,
     pub tokens_processed: Cell<u64>,
     pub exec_nanos: Cell<u64>,
 }
@@ -189,8 +237,62 @@ impl ModelRuntime {
         })
     }
 
+    /// Wire an arch + weight set to caller-supplied (typically hosted,
+    /// closure-backed) entry points. This is how the dispatch, donation,
+    /// and stacking machinery is exercised without compiled artifacts —
+    /// see the stacked-vs-scalar tests below and `benches`.
+    pub fn with_executables(
+        engine: Rc<Engine>,
+        arch: ArchInfo,
+        weights: WeightSet,
+        block_exe: xla::PjRtLoadedExecutable,
+        prefill_exe: xla::PjRtLoadedExecutable,
+        block: usize,
+        prefill_chunk: usize,
+    ) -> ModelRuntime {
+        ModelRuntime {
+            arch,
+            weights: Rc::new(weights),
+            engine,
+            block_exe: Rc::new(block_exe),
+            prefill_exe: Rc::new(prefill_exe),
+            block,
+            prefill_chunk,
+            stats: ModelStats::default(),
+        }
+    }
+
     pub fn new_kv(&self) -> Result<KvState> {
         KvState::new(&self.arch)
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Resident weight + LoRA buffer refs (uploaded on first use) and
+    /// the matching non-donate mask prefix length.
+    fn resident_buffers(
+        &self,
+        lora: Option<&WeightSet>,
+    ) -> Result<(Rc<Vec<xla::PjRtBuffer>>, Option<Rc<Vec<xla::PjRtBuffer>>>)> {
+        let client = self.engine.client();
+        let (wb, fresh) = self.weights.device_buffers(client)?;
+        if fresh {
+            self.stats.weight_uploads.set(self.stats.weight_uploads.get() + 1);
+        }
+        let lora_bufs = if self.arch.lora_rank > 0 {
+            let l = lora.expect("target arch requires a LoRA set (use zero_lora for base)");
+            assert_eq!(l.literals.len(), self.arch.lora.len());
+            let (lb, lfresh) = l.device_buffers(client)?;
+            if lfresh {
+                self.stats.weight_uploads.set(self.stats.weight_uploads.get() + 1);
+            }
+            Some(lb)
+        } else {
+            None
+        };
+        Ok((wb, lora_bufs))
     }
 
     fn call(
@@ -202,36 +304,29 @@ impl ModelRuntime {
         valid: usize,
         kv: &mut KvState,
     ) -> Result<BlockOut> {
-        // Fresh buffers per call + execute_b (donating) — see the
-        // WeightSet doc comment for why NOT execute() (leaks per-arg
-        // buffers) and why NOT cached buffers (donation frees them).
         let t0 = std::time::Instant::now();
         let client = self.engine.client();
+        let (wb, lora_bufs) = self.resident_buffers(lora)?;
         let tok_lit = xla::Literal::vec1(tokens);
         let pos_lit = xla::Literal::vec1(&[pos as i32]);
         let valid_lit = xla::Literal::vec1(&[valid as i32]);
+        let tok_buf = client.buffer_from_host_literal(None, &tok_lit)?;
+        let pos_buf = client.buffer_from_host_literal(None, &pos_lit)?;
+        let valid_buf = client.buffer_from_host_literal(None, &valid_lit)?;
+        let kv_buf = client.buffer_from_host_literal(None, &kv.lit)?;
 
-        let mut bufs: Vec<xla::PjRtBuffer> =
-            Vec::with_capacity(self.weights.literals.len() + self.arch.lora.len() + 4);
-        for lit in &self.weights.literals {
-            bufs.push(client.buffer_from_host_literal(None, lit)?);
+        // Resident weights ride every call non-donated; the four
+        // per-step activation buffers are donated (consumed on device).
+        let mut refs: Vec<&xla::PjRtBuffer> = wb.iter().collect();
+        if let Some(lb) = &lora_bufs {
+            refs.extend(lb.iter());
         }
-        if self.arch.lora_rank > 0 {
-            let l = lora.expect("target arch requires a LoRA set (use zero_lora for base)");
-            assert_eq!(l.literals.len(), self.arch.lora.len());
-            for lit in &l.literals {
-                bufs.push(client.buffer_from_host_literal(None, lit)?);
-            }
-        }
-        bufs.push(client.buffer_from_host_literal(None, &tok_lit)?);
-        bufs.push(client.buffer_from_host_literal(None, &pos_lit)?);
-        bufs.push(client.buffer_from_host_literal(None, &valid_lit)?);
-        bufs.push(client.buffer_from_host_literal(None, &kv.lit)?);
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let resident = refs.len();
+        refs.extend([&tok_buf, &pos_buf, &valid_buf, &kv_buf]);
+        let mut donate = vec![false; resident];
+        donate.extend([true; 4]);
 
-        let mut out = self.engine.run_b(exe, &refs)?;
-        drop(refs);
-        drop(bufs); // caller-owned buffers freed here — execute() would have leaked its internal copies
+        let mut out = self.engine.run_b_opts(exe, &refs, &donate)?;
         if out.len() != 2 {
             bail!("expected (logits, kv) tuple, got {} elements", out.len());
         }
@@ -275,7 +370,7 @@ impl ModelRuntime {
         let mut padded = tokens.to_vec();
         padded.resize(self.block, 0);
         let pos = kv.pos;
-        let out = self.call(&self.block_exe.clone(), lora, &padded, pos, tokens.len(), kv)?;
+        let out = self.call(&self.block_exe, lora, &padded, pos, tokens.len(), kv)?;
         self.stats.block_calls.set(self.stats.block_calls.get() + 1);
         assert!(commit <= tokens.len());
         kv.pos = pos + commit;
@@ -284,17 +379,17 @@ impl ModelRuntime {
 
     /// Stacked block forward over several independent KV sessions: the
     /// batched verification executor's runtime entry. Validates every
-    /// row, then executes all of them through ONE `Engine::run_batched`
-    /// call, in row order. KV positions are NOT advanced — verification
-    /// decides the commit, and the caller performs the position-pointer
-    /// rewind exactly as with `forward_block(.., commit = 0)`.
+    /// row, row-stacks tokens/pos/valid/KV into `[B, ...]` literals, and
+    /// executes the whole bucket through ONE engine dispatch; per-row
+    /// logits and KV caches are split back out of the stacked outputs.
+    /// KV positions are NOT advanced — verification decides the commit,
+    /// and the caller performs the position-pointer rewind exactly as
+    /// with `forward_block(.., commit = 0)`.
     ///
-    /// Buffers are still created per row: the published xla crate's
-    /// `execute_b` donates its inputs, so rows cannot share uploaded
-    /// weight buffers (see the `WeightSet` doc comment on the measured
-    /// leak/crash tradeoffs). What this entry amortizes today is the
-    /// per-call host dispatch; a true `[B, block]` stacked executable
-    /// plugs in behind `Engine::run_batched` without touching callers.
+    /// Weight buffers are the shared device-resident upload (once per
+    /// target version, never per row); only the four stacked activation
+    /// operands are built and donated per call. Engine-call-count and
+    /// upload-count assertions live in the tests below.
     pub fn forward_block_batched(
         &self,
         lora: Option<&WeightSet>,
@@ -317,47 +412,70 @@ impl ModelRuntime {
                 );
             }
         }
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
         let t0 = std::time::Instant::now();
         let client = self.engine.client();
-        let mut row_bufs: Vec<Vec<xla::PjRtBuffer>> = Vec::with_capacity(items.len());
+        let (wb, lora_bufs) = self.resident_buffers(lora)?;
+
+        // Row-stack the activation operands: tokens [B, block], pos [B],
+        // valid [B], kv [B, ...kv_shape].
+        let b = items.len();
+        let kvn = self.arch.kv_elements();
+        let mut tokens = Vec::with_capacity(b * self.block);
+        let mut pos = Vec::with_capacity(b);
+        let mut valid = Vec::with_capacity(b);
+        let mut kv = Vec::with_capacity(b * kvn);
         for it in items.iter() {
-            let mut padded = it.tokens.to_vec();
-            padded.resize(self.block, 0);
-            let tok_lit = xla::Literal::vec1(&padded);
-            let pos_lit = xla::Literal::vec1(&[it.kv.pos as i32]);
-            let valid_lit = xla::Literal::vec1(&[it.tokens.len() as i32]);
-            let mut bufs: Vec<xla::PjRtBuffer> =
-                Vec::with_capacity(self.weights.literals.len() + self.arch.lora.len() + 4);
-            for lit in &self.weights.literals {
-                bufs.push(client.buffer_from_host_literal(None, lit)?);
-            }
-            if self.arch.lora_rank > 0 {
-                let l = lora.expect("target arch requires a LoRA set (use zero_lora for base)");
-                assert_eq!(l.literals.len(), self.arch.lora.len());
-                for lit in &l.literals {
-                    bufs.push(client.buffer_from_host_literal(None, lit)?);
-                }
-            }
-            bufs.push(client.buffer_from_host_literal(None, &tok_lit)?);
-            bufs.push(client.buffer_from_host_literal(None, &pos_lit)?);
-            bufs.push(client.buffer_from_host_literal(None, &valid_lit)?);
-            bufs.push(client.buffer_from_host_literal(None, &it.kv.lit)?);
-            row_bufs.push(bufs);
+            tokens.extend_from_slice(it.tokens);
+            tokens.resize(tokens.len() + self.block - it.tokens.len(), 0);
+            pos.push(it.kv.pos as i32);
+            valid.push(it.tokens.len() as i32);
+            kv.extend_from_slice(&it.kv.lit.to_vec::<f32>()?);
         }
-        let argsets: Vec<Vec<&xla::PjRtBuffer>> =
-            row_bufs.iter().map(|b| b.iter().collect()).collect();
-        let outs = self.engine.run_batched(&self.block_exe, &argsets)?;
-        drop(argsets);
-        drop(row_bufs); // same ownership discipline as `call`
-        let mut result = Vec::with_capacity(items.len());
-        for (it, mut out) in items.iter_mut().zip(outs) {
-            if out.len() != 2 {
-                bail!("expected (logits, kv) tuple, got {} elements", out.len());
-            }
-            let kv_out = out.pop().unwrap();
-            let logits_lit = out.pop().unwrap();
-            let logits = logits_lit.to_vec::<f32>()?;
-            it.kv.lit = kv_out;
+        let mut kv_dims: Vec<i64> = vec![b as i64];
+        kv_dims.extend(self.arch.kv_shape.iter().map(|&d| d as i64));
+        let tok_lit =
+            xla::Literal::vec1(&tokens).reshape(&[b as i64, self.block as i64])?;
+        let pos_lit = xla::Literal::vec1(&pos);
+        let valid_lit = xla::Literal::vec1(&valid);
+        let kv_lit = xla::Literal::vec1(&kv).reshape(&kv_dims)?;
+        let tok_buf = client.buffer_from_host_literal(None, &tok_lit)?;
+        let pos_buf = client.buffer_from_host_literal(None, &pos_lit)?;
+        let valid_buf = client.buffer_from_host_literal(None, &valid_lit)?;
+        let kv_buf = client.buffer_from_host_literal(None, &kv_lit)?;
+
+        let mut refs: Vec<&xla::PjRtBuffer> = wb.iter().collect();
+        if let Some(lb) = &lora_bufs {
+            refs.extend(lb.iter());
+        }
+        let resident = refs.len();
+        refs.extend([&tok_buf, &pos_buf, &valid_buf, &kv_buf]);
+        let mut donate = vec![false; resident];
+        donate.extend([true; 4]);
+
+        // ONE dispatch for the whole bucket.
+        let mut out = self.engine.run_b_opts(&self.block_exe, &refs, &donate)?;
+        if out.len() != 2 {
+            bail!("expected (logits, kv) tuple, got {} elements", out.len());
+        }
+        let kv_out = out.pop().unwrap().to_vec::<f32>()?;
+        let logits = out.pop().unwrap().to_vec::<f32>()?;
+        let row_logits = self.block * self.arch.vocab;
+        if logits.len() != b * row_logits || kv_out.len() != b * kvn {
+            bail!(
+                "stacked output shape mismatch: {} logits / {} kv for B={b}",
+                logits.len(),
+                kv_out.len()
+            );
+        }
+
+        let kv_row_dims: Vec<i64> = self.arch.kv_shape.iter().map(|&d| d as i64).collect();
+        let mut result = Vec::with_capacity(b);
+        for (r, it) in items.iter_mut().enumerate() {
+            it.kv.lit =
+                xla::Literal::vec1(&kv_out[r * kvn..(r + 1) * kvn]).reshape(&kv_row_dims)?;
             self.stats
                 .tokens_processed
                 .set(self.stats.tokens_processed.get() + it.tokens.len() as u64);
@@ -365,7 +483,7 @@ impl ModelRuntime {
             result.push(BlockOut {
                 rows: self.block,
                 vocab: self.arch.vocab,
-                logits,
+                logits: logits[r * row_logits..(r + 1) * row_logits].to_vec(),
             });
         }
         self.stats
@@ -396,7 +514,7 @@ impl ModelRuntime {
             let mut padded = chunk.to_vec();
             padded.resize(self.prefill_chunk, 0);
             let pos = kv.pos;
-            let out = self.call(&self.prefill_exe.clone(), lora, &padded, pos, chunk.len(), kv)?;
+            let out = self.call(&self.prefill_exe, lora, &padded, pos, chunk.len(), kv)?;
             self.stats.prefill_calls.set(self.stats.prefill_calls.get() + 1);
             kv.pos = pos + chunk.len();
             last_row = Some(out.row(chunk.len() - 1).to_vec());
@@ -461,6 +579,217 @@ mod tests {
         }
         Some((Rc::new(Engine::cpu().unwrap()), m))
     }
+
+    // ----- hosted toy model (no artifacts needed) --------------------
+
+    const TOY_VOCAB: usize = 4;
+    const TOY_BLOCK: usize = 9;
+    const TOY_KV: [usize; 2] = [2, 2];
+
+    fn toy_arch() -> ArchInfo {
+        ArchInfo {
+            name: "toy".into(),
+            vocab: TOY_VOCAB,
+            d_model: 2,
+            n_layers: 1,
+            n_heads: 1,
+            d_ff: 2,
+            max_seq: 64,
+            n_experts: 0,
+            lora_rank: 0,
+            draft_head: false,
+            kv_shape: TOY_KV.to_vec(),
+            params: vec![("w".into(), vec![2])],
+            lora: vec![],
+            hlo_block: String::new(),
+            hlo_prefill: String::new(),
+        }
+    }
+
+    fn toy_weights() -> WeightSet {
+        WeightSet::from_literals(
+            WeightInfo {
+                name: "toy".into(),
+                arch: "toy".into(),
+                kind: "base".into(),
+                file: String::new(),
+                base: None,
+                domain: None,
+                target: None,
+            },
+            2,
+            8,
+            vec![xla::Literal::vec1(&[0.5f32, 1.5])],
+        )
+    }
+
+    /// Deterministic per-row toy forward implementing BOTH calling
+    /// conventions: rank-1 tokens = scalar, rank-2 tokens [B, block] =
+    /// stacked. Per-row math is the identical f32 expression in the
+    /// identical order, so scalar and stacked outputs must be
+    /// bit-identical row for row.
+    fn toy_block_exe() -> xla::PjRtLoadedExecutable {
+        let kvn: usize = TOY_KV.iter().product();
+        xla::PjRtLoadedExecutable::hosted(move |args| {
+            let w = args[0].to_vec::<f32>()?[0];
+            let tok = args[1].to_vec::<i32>()?;
+            let stacked = args[1].shape_dims().len() == 2;
+            let b = if stacked {
+                args[1].shape_dims()[0] as usize
+            } else {
+                1
+            };
+            let block = tok.len() / b;
+            let pos = args[2].to_vec::<i32>()?;
+            let valid = args[3].to_vec::<i32>()?;
+            let kv = args[4].to_vec::<f32>()?;
+            let mut logits = vec![0f32; b * block * TOY_VOCAB];
+            let mut kv_out = vec![0f32; b * kvn];
+            for r in 0..b {
+                let p = pos[r] as f32;
+                let v = valid[r] as f32;
+                let kvs: f32 = kv[r * kvn..(r + 1) * kvn].iter().sum();
+                for t in 0..block {
+                    for c in 0..TOY_VOCAB {
+                        logits[(r * block + t) * TOY_VOCAB + c] = w
+                            + tok[r * block + t] as f32 * 0.5
+                            + p * 0.25
+                            + v * 0.125
+                            + kvs
+                            + (t * TOY_VOCAB + c) as f32 * 0.01;
+                    }
+                }
+                for i in 0..kvn {
+                    kv_out[r * kvn + i] = kv[r * kvn + i] + v;
+                }
+            }
+            let kv_dims = args[4].shape_dims().to_vec();
+            let logits_lit = if stacked {
+                xla::Literal::vec1(&logits)
+                    .reshape(&[b as i64, block as i64, TOY_VOCAB as i64])?
+            } else {
+                xla::Literal::vec1(&logits).reshape(&[block as i64, TOY_VOCAB as i64])?
+            };
+            let kv_lit = xla::Literal::vec1(&kv_out).reshape(&kv_dims)?;
+            Ok(xla::Literal::tuple(vec![logits_lit, kv_lit]))
+        })
+    }
+
+    fn toy_runtime() -> ModelRuntime {
+        ModelRuntime::with_executables(
+            Rc::new(Engine::cpu().unwrap()),
+            toy_arch(),
+            toy_weights(),
+            toy_block_exe(),
+            toy_block_exe(),
+            TOY_BLOCK,
+            TOY_BLOCK,
+        )
+    }
+
+    #[test]
+    fn stacked_matches_scalar_across_ragged_k() {
+        // one session per draft length K = 1..=8 (ragged bucket), each
+        // with a distinct KV state and position
+        let rt_scalar = toy_runtime();
+        let rt_stacked = toy_runtime();
+        let kvn: usize = TOY_KV.iter().product();
+        let mk_kv = |i: usize| {
+            let vals: Vec<f32> = (0..kvn).map(|j| (i * kvn + j) as f32 * 0.1).collect();
+            let dims: Vec<i64> = TOY_KV.iter().map(|&d| d as i64).collect();
+            KvState {
+                lit: xla::Literal::vec1(&vals).reshape(&dims).unwrap(),
+                pos: 3 * i,
+                max_seq: 64,
+            }
+        };
+        let rows: Vec<Vec<i32>> =
+            (1..=8).map(|k| (0..k).map(|t| (10 * k + t) as i32).collect()).collect();
+
+        // scalar: one forward_block per row, commit 0 (pure verify shape)
+        let mut scalar_out = Vec::new();
+        let mut scalar_kv = Vec::new();
+        for (i, toks) in rows.iter().enumerate() {
+            let mut kv = mk_kv(i);
+            let out = rt_scalar.forward_block(None, toks, &mut kv, 0).unwrap();
+            scalar_out.push(out);
+            scalar_kv.push(kv);
+        }
+
+        // stacked: the whole ragged bucket in one call
+        let mut kvs: Vec<KvState> = (0..rows.len()).map(mk_kv).collect();
+        let mut items: Vec<BatchFwdItem<'_>> = rows
+            .iter()
+            .zip(kvs.iter_mut())
+            .map(|(toks, kv)| BatchFwdItem { tokens: toks, kv })
+            .collect();
+        let stacked_out = rt_stacked.forward_block_batched(None, &mut items).unwrap();
+        drop(items);
+
+        assert_eq!(stacked_out.len(), scalar_out.len());
+        for (r, (s, b)) in scalar_out.iter().zip(&stacked_out).enumerate() {
+            assert_eq!(s.logits, b.logits, "row {r} logits diverge");
+            assert_eq!(s.vocab, b.vocab);
+        }
+        for (r, (s, b)) in scalar_kv.iter().zip(&kvs).enumerate() {
+            assert_eq!(s.lit, b.lit, "row {r} kv diverges");
+            assert_eq!(s.pos, b.pos, "row {r} pos must stay unadvanced");
+        }
+    }
+
+    #[test]
+    fn stacked_bucket_costs_one_dispatch_and_one_upload() {
+        let rt = toy_runtime();
+        let mut kvs: Vec<KvState> = (0..4).map(|_| rt.new_kv().unwrap()).collect();
+        let rows: Vec<Vec<i32>> = (0..4).map(|i| vec![i as i32 + 1; 3]).collect();
+        let before = rt.engine().dispatches();
+        let mut items: Vec<BatchFwdItem<'_>> = rows
+            .iter()
+            .zip(kvs.iter_mut())
+            .map(|(toks, kv)| BatchFwdItem { tokens: toks, kv })
+            .collect();
+        rt.forward_block_batched(None, &mut items).unwrap();
+        drop(items);
+        // ONE engine dispatch for the whole 4-row bucket...
+        assert_eq!(rt.engine().dispatches() - before, 1);
+        assert_eq!(rt.stats.stacked_calls.get(), 1);
+        assert_eq!(rt.stats.block_calls.get(), 4);
+        // ...and one weight upload TOTAL, not one per row
+        assert_eq!(rt.stats.weight_uploads.get(), 1);
+
+        // a second bucket re-uses the resident weights: +1 dispatch, +0 uploads
+        let mut items: Vec<BatchFwdItem<'_>> = rows
+            .iter()
+            .zip(kvs.iter_mut())
+            .map(|(toks, kv)| BatchFwdItem { tokens: toks, kv })
+            .collect();
+        rt.forward_block_batched(None, &mut items).unwrap();
+        assert_eq!(rt.engine().dispatches() - before, 2);
+        assert_eq!(rt.stats.weight_uploads.get(), 1);
+    }
+
+    #[test]
+    fn scalar_calls_share_the_resident_weight_upload() {
+        let rt = toy_runtime();
+        let mut kv = rt.new_kv().unwrap();
+        let before = rt.engine().dispatches();
+        rt.forward_block(None, &[1, 2, 3], &mut kv, 3).unwrap();
+        rt.forward_block(None, &[4, 5], &mut kv, 2).unwrap();
+        assert_eq!(rt.engine().dispatches() - before, 2);
+        assert_eq!(rt.stats.weight_uploads.get(), 1, "upload once per version");
+        assert_eq!(kv.pos, 5);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let rt = toy_runtime();
+        let out = rt.forward_block_batched(None, &mut []).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(rt.stats.stacked_calls.get(), 0);
+        assert_eq!(rt.engine().dispatches(), 0);
+    }
+
+    // ----- artifact-gated tests (real compiled model) ----------------
 
     #[test]
     fn verify_kernel_roundtrip() {

@@ -12,9 +12,11 @@
 //!   the deterministic wireless-channel simulation) — plus the
 //!   [`Reconnect`] connection-factory trait the resumable wrappers use.
 //! * [`session`] — transport-agnostic state machines shared with the
-//!   simulator: [`BatchWindow`] (dynamic verification batching) and
-//!   [`SessionCore`] (per-session commit bookkeeping both endpoints
-//!   mirror, including the resume fast-forward).
+//!   simulator: [`BatchWindow`] (close-the-window batching),
+//!   [`SlotBatch`] (continuous rolling admission — see
+//!   [`BatchMode`] and `docs/BATCHING.md`) and [`SessionCore`]
+//!   (per-session commit bookkeeping both endpoints mirror, including
+//!   the resume fast-forward).
 //! * [`backend`] — pluggable cloud verification: the PJRT
 //!   [`EngineBackend`] (KV sessions + LoRA hot-swap, artifact-gated) and
 //!   the deterministic [`SyntheticTarget`]/[`SyntheticDraft`] pair whose
@@ -167,7 +169,7 @@ pub use mux::{EdgeMux, MuxStream};
 pub use pipeline::{
     InflightRound, LaunchPlan, PipelinedDrafter, Resolution, MAX_PIPELINE_DEPTH,
 };
-pub use session::{BatchDecision, BatchWindow, SessionCore, SessionOutcome};
+pub use session::{BatchDecision, BatchMode, BatchWindow, SessionCore, SessionOutcome, SlotBatch};
 pub use transport::{
     loopback_pair, loopback_pair_with_channel, AirtimeLedger, LoopbackTransport, Reconnect,
     TcpTransport, Transport,

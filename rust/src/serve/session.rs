@@ -85,6 +85,142 @@ impl BatchWindow {
     }
 }
 
+/// How the verifier forms cross-connection batches
+/// (`VerifierConfig::batch_mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchMode {
+    /// Close-the-window batching ([`BatchWindow`]): the first draft of a
+    /// fresh window arms a `window_ms` timer and the batch closes on the
+    /// timer or on reaching `max_batch` — whichever comes first. Simple
+    /// and well-amortized, but every draft pays up to `window_ms` of
+    /// queue latency waiting for the edge to arrive.
+    #[default]
+    Windowed,
+    /// Continuous (rolling-admission) batching ([`SlotBatch`]): the
+    /// batch is always open. An arriving draft takes a free verification
+    /// slot immediately (KV pages permitting) and the batch closes as
+    /// soon as the command queue drains — or instantly when the slots
+    /// fill. Verdicts free slots, which are refilled from a FIFO of
+    /// waiters, so admission rolls instead of quantizing on window
+    /// edges. Greedy verdicts are pure functions of (context, draft),
+    /// so committed sequences stay byte-identical to the windowed path.
+    Continuous,
+}
+
+impl BatchMode {
+    /// Parse a CLI value (`--batch-mode window|continuous`).
+    pub fn parse(s: &str) -> Option<BatchMode> {
+        match s {
+            "window" | "windowed" => Some(BatchMode::Windowed),
+            "continuous" | "cont" => Some(BatchMode::Continuous),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BatchMode::Windowed => "window",
+            BatchMode::Continuous => "continuous",
+        }
+    }
+}
+
+/// Rolling-admission slot state for continuous batching
+/// ([`BatchMode::Continuous`]): `slots` concurrent verification rows
+/// (the stacked executor's maximum B) plus a FIFO of admitted-but-
+/// unslotted waiters. Pure bookkeeping over session ids — the verifier
+/// layers KV-page leasing on top and decides *when* a waiter may take a
+/// slot; this struct only guarantees admission order.
+#[derive(Debug, Clone)]
+pub struct SlotBatch {
+    slots: usize,
+    /// Slot occupants in admission order — the next close verifies
+    /// exactly these, in this order (determinism contract).
+    occupied: Vec<u32>,
+    /// Waiters parked behind a full slot table (or an exhausted KV
+    /// pool), admitted strictly first-in-first-out as slots free.
+    fifo: std::collections::VecDeque<u32>,
+}
+
+impl SlotBatch {
+    pub fn new(slots: usize) -> SlotBatch {
+        SlotBatch {
+            slots: slots.max(1),
+            occupied: Vec::new(),
+            fifo: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// Free verification slots right now.
+    pub fn free_slots(&self) -> usize {
+        self.slots - self.occupied.len()
+    }
+
+    /// Seat `id` in a free slot (caller has checked `free_slots() > 0`
+    /// and reserved its KV pages). Filling the last slot demands an
+    /// immediate close; otherwise the batch should close as soon as the
+    /// caller's command queue drains — `CloseAt(now_ms)`, a zero-delay
+    /// deadline that still coalesces a burst of already-queued drafts.
+    pub fn admit(&mut self, now_ms: f64, id: u32) -> BatchDecision {
+        debug_assert!(self.occupied.len() < self.slots, "admit into a full slot table");
+        self.occupied.push(id);
+        if self.occupied.len() >= self.slots {
+            BatchDecision::CloseNow
+        } else {
+            BatchDecision::CloseAt(now_ms)
+        }
+    }
+
+    /// Park `id` behind the full slot table (or an exhausted KV pool).
+    pub fn enqueue(&mut self, id: u32) -> BatchDecision {
+        self.fifo.push_back(id);
+        BatchDecision::Queued
+    }
+
+    /// Next waiter in line, if any (admission stays FIFO: callers peek,
+    /// check the KV reservation, then [`pop_waiter`](Self::pop_waiter)).
+    pub fn peek_waiter(&self) -> Option<u32> {
+        self.fifo.front().copied()
+    }
+
+    pub fn pop_waiter(&mut self) -> Option<u32> {
+        self.fifo.pop_front()
+    }
+
+    /// Take the current slot occupants for verification, in admission
+    /// order. Waiters stay parked — the verifier refills after the
+    /// verdicts free slots (and KV pages).
+    pub fn take(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.occupied)
+    }
+
+    /// Drop a voided member (link died, session stolen by a reconnect,
+    /// or aborted) from its slot or the waiting line.
+    pub fn remove(&mut self, id: u32) {
+        self.occupied.retain(|&m| m != id);
+        self.fifo.retain(|&m| m != id);
+    }
+
+    /// Occupied slots (the batch a close would verify).
+    pub fn occupied_len(&self) -> usize {
+        self.occupied.len()
+    }
+
+    /// FIFO waiters without a slot yet.
+    pub fn waiting_len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    /// Total admitted drafts (slotted + waiting).
+    pub fn len(&self) -> usize {
+        self.occupied.len() + self.fifo.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.occupied.is_empty() && self.fifo.is_empty()
+    }
+}
+
 /// Per-session decoding progress — the part of Algorithm 2's state that
 /// both endpoints must agree on. The cloud keeps one per KV session; the
 /// edge keeps its own mirror and both advance it with `apply_verdict`,
@@ -345,6 +481,57 @@ mod tests {
         assert_ne!(timer1_epoch, w.epoch());
         // window 2's own timer is current
         assert_eq!(w.epoch(), 1);
+    }
+
+    #[test]
+    fn batch_mode_parses_cli_values() {
+        assert_eq!(BatchMode::parse("window"), Some(BatchMode::Windowed));
+        assert_eq!(BatchMode::parse("windowed"), Some(BatchMode::Windowed));
+        assert_eq!(BatchMode::parse("continuous"), Some(BatchMode::Continuous));
+        assert_eq!(BatchMode::parse("nope"), None);
+        assert_eq!(BatchMode::default().as_str(), "window");
+        assert_eq!(BatchMode::Continuous.as_str(), "continuous");
+    }
+
+    #[test]
+    fn slot_batch_rolls_admission_in_fifo_order() {
+        let mut s = SlotBatch::new(2);
+        // first admission wants a close as soon as the queue drains
+        assert_eq!(s.admit(5.0, 1), BatchDecision::CloseAt(5.0));
+        // filling the last slot closes immediately
+        assert_eq!(s.admit(6.0, 2), BatchDecision::CloseNow);
+        assert_eq!(s.free_slots(), 0);
+        // overflow parks in the FIFO
+        assert_eq!(s.enqueue(3), BatchDecision::Queued);
+        assert_eq!(s.enqueue(4), BatchDecision::Queued);
+        assert_eq!((s.occupied_len(), s.waiting_len(), s.len()), (2, 2, 4));
+
+        // close takes the slot occupants in admission order, waiters stay
+        assert_eq!(s.take(), vec![1, 2]);
+        assert_eq!((s.occupied_len(), s.waiting_len()), (0, 2));
+        // refill strictly first-in-first-out
+        assert_eq!(s.peek_waiter(), Some(3));
+        assert_eq!(s.pop_waiter(), Some(3));
+        assert_eq!(s.admit(9.0, 3), BatchDecision::CloseAt(9.0));
+        assert_eq!(s.pop_waiter(), Some(4));
+        assert_eq!(s.admit(9.0, 4), BatchDecision::CloseNow);
+        assert_eq!(s.take(), vec![3, 4]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn slot_batch_remove_drops_slot_or_waiter() {
+        let mut s = SlotBatch::new(2);
+        let _ = s.admit(0.0, 1);
+        let _ = s.admit(0.0, 2);
+        let _ = s.enqueue(3);
+        // a voided slot occupant frees its slot without a verdict
+        s.remove(1);
+        assert_eq!((s.free_slots(), s.occupied_len()), (1, 1));
+        // a voided waiter leaves the line
+        s.remove(3);
+        assert_eq!(s.waiting_len(), 0);
+        assert_eq!(s.take(), vec![2]);
     }
 
     #[test]

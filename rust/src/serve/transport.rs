@@ -6,7 +6,9 @@
 //!
 //! * `TcpTransport` — length-prefixed frames over `tokio::net::TcpStream`
 //!   with `TCP_NODELAY` (a draft block is one small write; Nagle would
-//!   serialize the whole decode loop on the ACK clock).
+//!   serialize the whole decode loop on the ACK clock). Sends are
+//!   vectored `[head, payload]` writes (`Frame::encode_head`), so the
+//!   payload bytes are never copied into a contiguous scratch buffer.
 //! * `LoopbackTransport` — an in-process channel pair. It optionally
 //!   wraps the deterministic wireless-channel simulation: every frame is
 //!   metered through a `StochasticChannel` into a shared `AirtimeLedger`,
@@ -126,11 +128,27 @@ impl TcpTransport {
 impl Transport for TcpTransport {
     fn send_frame(&mut self, frame: Frame) -> BoxFuture<'_, Result<()>> {
         Box::pin(async move {
-            let bytes = frame.encode();
-            self.stream
-                .write_all(&bytes)
-                .await
-                .with_context(|| format!("writing frame to {}", self.peer))?;
+            // Vectored write of [head, payload]: the payload never gets
+            // copied into a fresh contiguous buffer. Partial writes are
+            // advanced by hand because writev has no write_all analogue.
+            let head = frame.encode_head();
+            let total = frame.encoded_len();
+            let mut written = 0usize;
+            while written < total {
+                let bufs = [
+                    std::io::IoSlice::new(&head[written.min(head.len())..]),
+                    std::io::IoSlice::new(&frame.payload[written.saturating_sub(head.len())..]),
+                ];
+                let n = self
+                    .stream
+                    .write_vectored(&bufs)
+                    .await
+                    .with_context(|| format!("writing frame to {}", self.peer))?;
+                if n == 0 {
+                    bail!("{}: connection closed mid-frame write", self.peer);
+                }
+                written += n;
+            }
             Ok(())
         })
     }
@@ -261,7 +279,8 @@ impl Transport for LoopbackTransport {
     fn send_frame(&mut self, frame: Frame) -> BoxFuture<'_, Result<()>> {
         Box::pin(async move {
             if let Some(ledger) = &self.ledger {
-                let bytes = frame.encode().len();
+                // Metered from the layout, not a throwaway encode().
+                let bytes = frame.encoded_len();
                 ledger
                     .lock()
                     .expect("airtime ledger poisoned")

@@ -3,6 +3,22 @@
 //! logic the simulator uses (`serve::session::BatchWindow`) to real
 //! concurrent connections.
 //!
+//! Batch *formation* is pluggable (`VerifierConfig::batch_mode`,
+//! `docs/BATCHING.md`):
+//!
+//! * **Windowed** (default) — close-the-window: the first draft arms a
+//!   `window_ms` timer, the batch closes on the timer or `max_batch`.
+//! * **Continuous** — rolling slot admission (`SlotBatch`): the batch
+//!   is always open; an arriving draft takes a free slot immediately
+//!   under a paged-KV lease (`runtime::KvBlockPool`, released on
+//!   verdict), a zero-delay deadline coalesces same-burst arrivals,
+//!   and freed slots are refilled from a strict FIFO of waiters.
+//!
+//! Either way a close is *plan → execute → apply* — one
+//! `verify_batch` call, power-of-two `[B, K]` buckets, one stacked
+//! engine dispatch per bucket — and committed sequences are
+//! byte-identical across both modes and the simulator.
+//!
 //! Split in two layers:
 //!
 //! * `VerifierCore` — pure, synchronous state machine (sessions, open
@@ -47,8 +63,9 @@
 
 use super::backend::{bucket_k, BatchVerifyReq, VerifyBackend};
 use super::fleet::{PortableSession, SessionLedger};
-use super::session::{BatchDecision, BatchWindow, SessionCore};
+use super::session::{BatchDecision, BatchMode, BatchWindow, SessionCore, SlotBatch};
 use crate::metrics::ServingMetrics;
+use crate::runtime::{KvBlockPool, KvLease};
 use crate::obs::{SpanKind, Trace};
 use crate::protocol::{DraftMsg, VerifyMsg};
 use crate::util::rng::SplitMix64;
@@ -118,6 +135,28 @@ pub struct VerifierConfig {
     /// BucketPlan, VerifyBatch, Commit — plus fleet Export/Import
     /// events. `None` (the default) keeps the hot path untouched.
     pub trace: Option<Trace>,
+    /// How batches form (see `docs/BATCHING.md`). `Windowed` (the
+    /// default) is close-the-window: drafts wait up to `window_ms` for
+    /// company. `Continuous` is rolling admission: a draft takes one of
+    /// `max_batch` verification slots immediately (KV pages permitting)
+    /// and the batch closes the moment the command queue drains, so no
+    /// draft ever waits on a timer — verdicts free slots, a FIFO of
+    /// waiters refills them. Greedy verdicts are pure functions of
+    /// (context, draft), so the committed sequences are byte-identical
+    /// across both modes (pinned by `tests::continuous_mode_commits_
+    /// identical_sequences_across_seeds`).
+    pub batch_mode: BatchMode,
+    /// Continuous mode only: capacity of the paged KV block pool
+    /// ([`crate::runtime::KvBlockPool`]) backing per-slot sequence
+    /// state, in pages. Admission reserves pages for the whole row
+    /// (committed prefix + draft + correction) and returns them with
+    /// the verdict, so the pool bounds aggregate slot residency. Size
+    /// it for at least `max_batch` maximum-length sequences; the
+    /// default (4096 pages x 16 tokens) covers 8 slots of 4096-token
+    /// rows with 2x headroom. Ignored in windowed mode.
+    pub kv_pool_pages: usize,
+    /// Continuous mode only: committed positions per KV pool page.
+    pub kv_page_tokens: usize,
 }
 
 impl Default for VerifierConfig {
@@ -134,6 +173,9 @@ impl Default for VerifierConfig {
             tier_reserve: 0,
             ledger_ttl_ms: 600_000.0,
             trace: None,
+            batch_mode: BatchMode::Windowed,
+            kv_pool_pages: 4096,
+            kv_page_tokens: 16,
         }
     }
 }
@@ -343,6 +385,18 @@ pub struct VerifierCore {
     /// and arms itself.
     next_ledger_sweep_ms: f64,
     window: BatchWindow,
+    /// Continuous-mode slot table + admission FIFO (untouched in
+    /// windowed mode); `batch_offer`/`batch_remove`/`batch_take`
+    /// dispatch on `cfg.batch_mode`.
+    slots: SlotBatch,
+    /// Paged KV pool backing continuous-mode slot rows. A slot
+    /// occupant's lease covers its full sequence (committed + draft +
+    /// correction) and is released with the verdict, so pool residency
+    /// is bounded by the CURRENT slot occupants, never by idle
+    /// sessions — FIFO waiters are admitted as verdicts return pages.
+    kv_pool: KvBlockPool,
+    /// Live slot leases, keyed by session id (continuous mode only).
+    kv_leases: HashMap<u32, KvLease>,
     next_id: u32,
     /// Verification sampling stream (stochastic mode).
     rng: SplitMix64,
@@ -355,6 +409,8 @@ pub struct VerifierCore {
 impl VerifierCore {
     pub fn new(cfg: VerifierConfig, backend: Box<dyn VerifyBackend>) -> VerifierCore {
         let window = BatchWindow::new(cfg.window_ms, cfg.max_batch);
+        let slots = SlotBatch::new(cfg.max_batch);
+        let kv_pool = KvBlockPool::new(cfg.kv_pool_pages, cfg.kv_page_tokens.max(1));
         let rng = SplitMix64::new(cfg.seed ^ 0x5E54_1CE5);
         let token_rng = SplitMix64::new(cfg.seed ^ 0x70CE_D117);
         VerifierCore {
@@ -383,6 +439,9 @@ impl VerifierCore {
             next_sweep_ms: f64::INFINITY,
             next_ledger_sweep_ms: f64::NEG_INFINITY,
             window,
+            slots,
+            kv_pool,
+            kv_leases: HashMap::new(),
             next_id: 1,
             rng,
             token_rng,
@@ -503,6 +562,18 @@ impl VerifierCore {
     pub fn audit(&self) {
         self.metrics
             .check_invariants(self.sessions.len(), self.drafts_in_flight());
+        // continuous mode: the paged-KV allocator must balance too —
+        // pages never leaked, never aliased (trivially true windowed,
+        // where the pool is never touched)
+        if let Err(e) = self.kv_pool.audit() {
+            debug_assert!(false, "kv pool conservation audit failed: {e}");
+        }
+        let leased: usize = self.kv_leases.values().map(|l| l.page_count()).sum();
+        debug_assert!(
+            leased == self.kv_pool.in_use(),
+            "slot leases hold {leased} pages but the pool accounts {}",
+            self.kv_pool.in_use()
+        );
     }
 
     /// Open a new KV session. A nonzero `nonce` seen before reattaches
@@ -728,7 +799,119 @@ impl VerifierCore {
         self.metrics.bytes_up += msg.air_bytes();
         self.arrived.insert(id, now_ms);
         self.pending.insert(id, msg);
-        Ok(SubmitOutcome::Queued(self.window.offer(now_ms, id)))
+        Ok(SubmitOutcome::Queued(self.batch_offer(now_ms, id)))
+    }
+
+    // --- batcher dispatch (windowed vs continuous) --------------------
+
+    /// True in continuous (rolling-admission) mode.
+    fn continuous(&self) -> bool {
+        self.cfg.batch_mode == BatchMode::Continuous
+    }
+
+    /// Route one admitted draft to the active batcher. Windowed mode is
+    /// the classic close-the-window offer; continuous mode seats the
+    /// draft in a free verification slot immediately (KV pages
+    /// permitting) and otherwise parks it in the rolling FIFO until a
+    /// verdict frees a slot.
+    fn batch_offer(&mut self, now_ms: f64, id: u32) -> BatchDecision {
+        if !self.continuous() {
+            return self.window.offer(now_ms, id);
+        }
+        if self.slots.free_slots() > 0 && self.reserve_slot_kv(id) {
+            self.slots.admit(now_ms, id)
+        } else {
+            self.slots.enqueue(id)
+        }
+    }
+
+    /// Drop a voided member (dead link, reconnect takeover, abort,
+    /// export) from whichever batcher holds it, returning its KV pages.
+    fn batch_remove(&mut self, id: u32) {
+        self.window.remove(id);
+        self.slots.remove(id);
+        self.release_slot_kv(id);
+    }
+
+    /// Take the batch a close should verify, in admission order.
+    fn batch_take(&mut self) -> Vec<u32> {
+        if self.continuous() {
+            self.slots.take()
+        } else {
+            self.window.close()
+        }
+    }
+
+    /// Continuous admission gate: reserve KV pool pages covering `id`'s
+    /// full slot row — committed prefix + pending draft + correction
+    /// token. A sequence larger than the ENTIRE pool is admitted
+    /// unreserved (refusing it forever would wedge the session; the
+    /// pool bounds aggregate residency, not one row's length).
+    fn reserve_slot_kv(&mut self, id: u32) -> bool {
+        let need = match (self.sessions.get(&id), self.pending.get(&id)) {
+            (Some(core), Some(msg)) => core.committed.len() + msg.tokens.len() + 1,
+            // nothing to back (defensive: offers always follow a
+            // pending insert) — admit rather than wedge
+            _ => return true,
+        };
+        if self.kv_pool.pages_for(need) > self.kv_pool.capacity() {
+            return true;
+        }
+        let mut lease = match self.kv_leases.remove(&id) {
+            Some(l) => l,
+            None => self.kv_pool.lease(),
+        };
+        match self.kv_pool.grow(&mut lease, need) {
+            Ok(()) => {
+                self.kv_leases.insert(id, lease);
+                true
+            }
+            Err(_) => {
+                self.kv_pool.release(lease);
+                false
+            }
+        }
+    }
+
+    /// Return `id`'s slot pages to the pool (verdict applied, or the
+    /// draft was voided). No-op when the session holds no lease.
+    fn release_slot_kv(&mut self, id: u32) {
+        if let Some(lease) = self.kv_leases.remove(&id) {
+            self.kv_pool.release(lease);
+        }
+    }
+
+    /// Continuous mode: admit FIFO waiters into free verification slots,
+    /// strictly in arrival order — stopping at the first whose KV
+    /// reservation the pool cannot cover yet (skipping ahead would
+    /// starve long sequences). Waiters whose draft was voided
+    /// underneath them are discarded. Returns true when at least one
+    /// waiter took a slot, i.e. the caller owes a flush.
+    pub fn refill_slots(&mut self, now_ms: f64) -> bool {
+        if !self.continuous() {
+            return false;
+        }
+        let mut admitted = false;
+        while self.slots.free_slots() > 0 {
+            let Some(id) = self.slots.peek_waiter() else { break };
+            if !self.pending.contains_key(&id) {
+                self.slots.pop_waiter();
+                continue;
+            }
+            if !self.reserve_slot_kv(id) {
+                break;
+            }
+            self.slots.pop_waiter();
+            let _ = self.slots.admit(now_ms, id);
+            admitted = true;
+        }
+        admitted
+    }
+
+    /// Continuous mode: are there slot occupants a flush should verify
+    /// now? (Windowed mode answers false — its deadlines drive closes.)
+    pub fn batch_ready(&self) -> bool {
+        self.continuous() && self.slots.occupied_len() > 0
     }
 
     /// Park a pipelined draft for a future round (ascending round
@@ -841,7 +1024,7 @@ impl VerifierCore {
         self.session_of_token.remove(&token);
         self.drop_pending(id);
         self.drop_queued(id);
-        self.window.remove(id);
+        self.batch_remove(id);
         self.parked.remove(&id);
         if let Some(n) = self.nonce_of.remove(&id) {
             self.open_nonces.remove(&n);
@@ -1050,7 +1233,7 @@ impl VerifierCore {
                 self.metrics.bytes_up += msg.air_bytes();
                 self.arrived.insert(id, now_ms);
                 self.pending.insert(id, msg);
-                decisions.push(self.window.offer(now_ms, id));
+                decisions.push(self.batch_offer(now_ms, id));
                 if !q.is_empty() {
                     self.queued.insert(id, q);
                 }
@@ -1140,7 +1323,7 @@ impl VerifierCore {
     /// torn down server-side (leaving a grace-window residue for late
     /// resumes); the verdict's `eos` flag tells the edge to stop.
     pub fn close_window(&mut self, now_ms: f64) -> Result<Vec<(u32, VerifyMsg)>> {
-        let members = self.window.close();
+        let members = self.batch_take();
         if members.is_empty() {
             return Ok(Vec::new());
         }
@@ -1154,10 +1337,12 @@ impl VerifierCore {
             // orphan counter is the only trace these drafts leave.
             let Some(msg) = self.pending.remove(&id) else {
                 self.metrics.drafts_orphaned += 1;
+                self.release_slot_kv(id);
                 continue;
             };
             if !self.sessions.contains_key(&id) {
                 self.metrics.drafts_orphaned += 1;
+                self.release_slot_kv(id);
                 continue;
             }
             let wait_ms = (now_ms - arrived.unwrap_or(now_ms)).max(0.0);
@@ -1169,6 +1354,17 @@ impl VerifierCore {
         let batch = jobs.len();
         let total_draft: usize = jobs.iter().map(|(_, m, _)| m.tokens.len()).sum();
         let max_k = jobs.iter().map(|(_, m, _)| m.tokens.len()).max().unwrap_or(0);
+        // distinct planner bucket classes = stacked [B, K] device
+        // dispatches this close (mirrors `plan_buckets`: every member
+        // pads to the next power-of-two K and rides one stacked call
+        // per class on the engine path)
+        let stacked = {
+            let mut kinds: Vec<usize> =
+                jobs.iter().map(|(_, m, _)| bucket_k(m.tokens.len())).collect();
+            kinds.sort_unstable();
+            kinds.dedup();
+            kinds.len()
+        };
         for (id, msg, wait_ms) in &jobs {
             self.metrics.latency.queue_ms.record(*wait_ms);
             if let Some(tr) = &self.cfg.trace {
@@ -1219,6 +1415,7 @@ impl VerifierCore {
         // `batches` and the verify-latency histogram stay in lockstep
         // (the conservation audit pins them equal)
         self.metrics.note_batch(batch);
+        self.metrics.stacked_dispatches += stacked;
         self.metrics.latency.verify_ms.record(verify_ms);
 
         // ---- apply ------------------------------------------------
@@ -1278,7 +1475,18 @@ impl VerifierCore {
                 self.tier_of.remove(&id);
                 self.redirect_sessions.remove(&id);
             }
+            // continuous mode: the verdict frees the slot — its KV
+            // pages go back to the pool before the FIFO refill below
+            // (no-op in windowed mode, which holds no leases)
+            self.release_slot_kv(id);
             out.push((id, vmsg));
+        }
+        if self.continuous() {
+            // a close is the slot table's drain point: record how full
+            // the stacked executor ran, then re-seat FIFO waiters with
+            // the pages the verdicts just returned
+            self.metrics.slot_occupancy.add(batch as f64);
+            self.refill_slots(now_ms);
         }
         Ok(out)
     }
@@ -1301,7 +1509,7 @@ impl VerifierCore {
         // queued speculative rounds from the dead link die with it
         self.drop_pending(id);
         self.drop_queued(id);
-        self.window.remove(id);
+        self.batch_remove(id);
         let deadline = now_ms + self.cfg.resume_grace_ms;
         self.next_sweep_ms = self.next_sweep_ms.min(deadline);
         self.parked.insert(id, deadline);
@@ -1370,7 +1578,7 @@ impl VerifierCore {
         self.parked.remove(&id);
         self.drop_pending(id);
         self.drop_queued(id);
-        self.window.remove(id);
+        self.batch_remove(id);
         info.attachment = self.next_attachment(id);
         self.metrics.sessions_resumed += 1;
         Ok(info)
@@ -1409,6 +1617,7 @@ impl VerifierCore {
             self.wire_of.remove(&id);
             self.tier_of.remove(&id);
             self.redirect_sessions.remove(&id);
+            self.release_slot_kv(id);
             self.backend.end_session(id);
             self.metrics.sessions_evicted += 1;
         }
@@ -1505,7 +1714,7 @@ impl VerifierCore {
         if self.sessions.remove(&id).is_some() {
             self.drop_pending(id);
             self.drop_queued(id);
-            self.window.remove(id);
+            self.batch_remove(id);
             self.parked.remove(&id);
             self.last_verdict.remove(&id);
             if let Some(tok) = self.token_of.remove(&id) {
@@ -1905,6 +2114,13 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                     BatchDecision::Queued => {}
                 }
             }
+            // continuous mode: the close's verdicts freed slots and KV
+            // pages, and promotions/refills may have re-seated
+            // occupants — keep closing until the slot table drains
+            // (each pass verifies its occupants, so this terminates)
+            if core.batch_ready() {
+                close_again = true;
+            }
             if !close_again {
                 return;
             }
@@ -1917,11 +2133,23 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
         // reap parked sessions whose grace window is strictly over; the
         // loop wakes at least every 200 ms, which bounds sweep latency
         core.evict_expired(now);
+        // continuous mode: evictions/aborts since the last close may
+        // have returned the KV pages a FIFO waiter was blocked on —
+        // seat it and arm a zero-delay close (SWEEP_INTERVAL bounds
+        // how stale this check can get)
+        if core.refill_slots(now) {
+            deadline = Some(deadline.map_or(now, |d: f64| d.min(now)));
+        }
         // A queued command beats a zero timeout in recv_timeout, so an
-        // expired window must be flushed HERE — not only in the Timeout
+        // expired WINDOW must be flushed HERE — not only in the Timeout
         // arm — or a busy command stream could hold it open forever.
+        // Continuous mode wants the opposite: queued commands ARE the
+        // burst its zero-delay deadline coalesces, so the rolling batch
+        // closes from the Timeout arm (command queue drained) instead —
+        // a busy stream cannot hold it open because filling the slot
+        // table closes synchronously via CloseNow.
         if let Some(d) = deadline {
-            if now >= d {
+            if now >= d && core.cfg.batch_mode != BatchMode::Continuous {
                 deadline = None;
                 flush(&mut core, &mut replies, &mut deadline, now);
             }
@@ -2106,8 +2334,21 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                 }
                 return;
             }
-            // expiry handled at the top of the loop
-            Err(std_mpsc::RecvTimeoutError::Timeout) => {}
+            // windowed expiry handled at the top of the loop
+            Err(std_mpsc::RecvTimeoutError::Timeout) => {
+                // continuous mode: the command queue just drained — the
+                // admission burst the zero-delay deadline was
+                // coalescing is over; close the rolling batch
+                if core.cfg.batch_mode == BatchMode::Continuous {
+                    if let Some(d) = deadline {
+                        let now = now_ms(&start);
+                        if now >= d {
+                            deadline = None;
+                            flush(&mut core, &mut replies, &mut deadline, now);
+                        }
+                    }
+                }
+            }
             Err(std_mpsc::RecvTimeoutError::Disconnected) => {
                 let now = now_ms(&start);
                 flush(&mut core, &mut replies, &mut deadline, now);
@@ -2788,6 +3029,205 @@ mod tests {
                 fallback.metrics.tokens_committed
             );
         }
+    }
+
+    // --- continuous (rolling-admission) batching ----------------------
+
+    /// Tentpole determinism pin: continuous batching (slot table + KV
+    /// block pool + FIFO refill) commits sequences BYTE-IDENTICAL to
+    /// the windowed path, for ragged strides K ∈ 1..=8 and seeds
+    /// [3, 17, 42] against a drifted target — batch formation timing
+    /// is never allowed to change a committed token.
+    #[test]
+    fn continuous_mode_commits_identical_sequences_across_seeds() {
+        for &seed in &[3u64, 17, 42] {
+            let mk = || {
+                let mut t = SyntheticTarget::new(seed).with_version("evolved", 0.3);
+                t.deploy("evolved").unwrap();
+                t
+            };
+            let cfg = |mode: BatchMode| VerifierConfig {
+                window_ms: 10.0,
+                max_batch: 8,
+                batch_mode: mode,
+                ..Default::default()
+            };
+            let mut windowed = VerifierCore::new(cfg(BatchMode::Windowed), Box::new(mk()));
+            let mut rolling = VerifierCore::new(cfg(BatchMode::Continuous), Box::new(mk()));
+            let k_of = |i: usize, r: usize| 1 + (i + r) % 8;
+            let a = drive(&mut windowed, seed, 5, 20, k_of);
+            let b = drive(&mut rolling, seed, 5, 20, k_of);
+            assert_eq!(
+                a, b,
+                "continuous batching diverged from the windowed path (seed {seed})"
+            );
+            assert_eq!(windowed.metrics.rounds, rolling.metrics.rounds);
+            assert_eq!(windowed.metrics.accepted, rolling.metrics.accepted);
+            assert_eq!(windowed.metrics.drafted, rolling.metrics.drafted);
+            assert_eq!(
+                windowed.metrics.tokens_committed,
+                rolling.metrics.tokens_committed
+            );
+            // identical batch composition → identical stacked dispatch
+            // plans; only continuous mode records slot occupancy
+            assert_eq!(
+                windowed.metrics.stacked_dispatches,
+                rolling.metrics.stacked_dispatches
+            );
+            assert_eq!(windowed.metrics.slot_occupancy.count(), 0);
+            assert_eq!(
+                rolling.metrics.slot_occupancy.count(),
+                rolling.metrics.batches
+            );
+            assert!(rolling.metrics.stacked_dispatches >= rolling.metrics.batches);
+            assert!(rolling.metrics.stacked_dispatches <= rolling.metrics.rounds);
+            // every lease returned: finished sessions drained the pool
+            assert!(rolling.kv_leases.is_empty(), "leases leaked (seed {seed})");
+            assert_eq!(rolling.kv_pool.free_pages(), rolling.kv_pool.capacity());
+            windowed.audit();
+            rolling.audit();
+        }
+    }
+
+    /// Continuous admission never arms a `window_ms` timer: a draft
+    /// either takes a slot (zero-delay close), fills the table
+    /// (CloseNow), or waits in the FIFO for a verdict to free a slot.
+    #[test]
+    fn continuous_slots_roll_admission_without_window_timers() {
+        let cfg = VerifierConfig {
+            window_ms: 12.0,
+            max_batch: 2,
+            batch_mode: BatchMode::Continuous,
+            ..Default::default()
+        };
+        let mut c = VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)));
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| vec![1, 70 + i, 90 + 2 * i]).collect();
+        let opens: Vec<OpenInfo> = prompts
+            .iter()
+            .map(|p| c.open_session(p, 16, 0).unwrap())
+            .collect();
+        let offer = |c: &mut VerifierCore, i: usize, prompts: &[Vec<i32>]| {
+            let msg = draft_for(opens[i].session, 0, &prompts[i], 2);
+            queued(c.submit(3.0, opens[i].attachment, msg, false).unwrap())
+        };
+        // slot 1: zero-delay deadline at NOW, not now + window_ms
+        assert_eq!(offer(&mut c, 0, &prompts), BatchDecision::CloseAt(3.0));
+        // slot 2 fills the table: close immediately
+        assert_eq!(offer(&mut c, 1, &prompts), BatchDecision::CloseNow);
+        // the rest wait in the FIFO
+        assert_eq!(offer(&mut c, 2, &prompts), BatchDecision::Queued);
+        assert_eq!(offer(&mut c, 3, &prompts), BatchDecision::Queued);
+
+        // first close verifies the two slot occupants (admission order)
+        // and its verdicts refill the slots from the FIFO
+        let out = c.close_window(4.0).unwrap();
+        assert_eq!(
+            out.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            vec![opens[0].session, opens[1].session]
+        );
+        assert!(c.batch_ready(), "refill must re-seat the FIFO waiters");
+        let out = c.close_window(4.1).unwrap();
+        assert_eq!(
+            out.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            vec![opens[2].session, opens[3].session]
+        );
+        assert!(!c.batch_ready());
+        assert_eq!(c.metrics.batches, 2);
+        assert_eq!(c.metrics.slot_occupancy.count(), 2);
+        assert!((c.metrics.slot_occupancy.mean() - 2.0).abs() < 1e-12);
+        c.audit();
+    }
+
+    /// An exhausted KV block pool parks admissions in the FIFO even
+    /// while slots are free; verdict-released pages re-admit them in
+    /// arrival order. No Busy, no drop — just rolling backpressure.
+    #[test]
+    fn continuous_kv_exhaustion_parks_waiters_until_pages_return() {
+        let cfg = VerifierConfig {
+            max_batch: 8,
+            batch_mode: BatchMode::Continuous,
+            // 2 pages x 4 tokens: exactly one prompt(3) + K(2) + 1 row
+            kv_pool_pages: 2,
+            kv_page_tokens: 4,
+            ..Default::default()
+        };
+        let mut c = VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)));
+        let pa = vec![1, 70, 71];
+        let pb = vec![1, 80, 81];
+        let oa = c.open_session(&pa, 16, 0).unwrap();
+        let ob = c.open_session(&pb, 16, 0).unwrap();
+        let da = queued(c.submit(0.0, oa.attachment, draft_for(oa.session, 0, &pa, 2), false).unwrap());
+        assert_eq!(da, BatchDecision::CloseAt(0.0));
+        assert_eq!(c.kv_pool.free_pages(), 0, "first row takes the whole pool");
+        // plenty of free slots, but no pages: b waits in the FIFO
+        let db = queued(c.submit(0.1, ob.attachment, draft_for(ob.session, 0, &pb, 2), false).unwrap());
+        assert_eq!(db, BatchDecision::Queued);
+
+        // a's verdict returns its pages; the refill seats b
+        let out = c.close_window(1.0).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, oa.session);
+        assert!(c.batch_ready());
+        assert_eq!(c.kv_pool.free_pages(), 0, "b's row now holds the pool");
+        let out = c.close_window(1.1).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, ob.session);
+        assert_eq!(c.kv_pool.free_pages(), c.kv_pool.capacity());
+        assert_eq!(c.metrics.batches, 2);
+        c.audit();
+    }
+
+    /// A row larger than the ENTIRE pool is admitted unreserved instead
+    /// of waiting forever — the pool bounds aggregate residency, not a
+    /// single sequence's length.
+    #[test]
+    fn continuous_oversized_row_is_admitted_unreserved() {
+        let cfg = VerifierConfig {
+            max_batch: 4,
+            batch_mode: BatchMode::Continuous,
+            kv_pool_pages: 1,
+            kv_page_tokens: 4, // pool covers 4 tokens; the row needs 6
+            ..Default::default()
+        };
+        let mut c = VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)));
+        let p = vec![1, 70, 71];
+        let o = c.open_session(&p, 16, 0).unwrap();
+        let d = queued(c.submit(0.0, o.attachment, draft_for(o.session, 0, &p, 2), false).unwrap());
+        assert_eq!(d, BatchDecision::CloseAt(0.0), "oversized row still admits");
+        assert!(c.kv_leases.is_empty(), "no reservation for an oversized row");
+        assert_eq!(c.close_window(0.5).unwrap().len(), 1);
+        c.audit();
+    }
+
+    /// Voided slot occupants and FIFO waiters (detach, abort) return
+    /// their pages without a verdict.
+    #[test]
+    fn continuous_teardown_releases_slot_pages() {
+        let cfg = VerifierConfig {
+            max_batch: 2,
+            batch_mode: BatchMode::Continuous,
+            kv_pool_pages: 8,
+            kv_page_tokens: 4,
+            ..Default::default()
+        };
+        let mut c = VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)));
+        let pa = vec![1, 70, 71];
+        let pb = vec![1, 80, 81];
+        let oa = c.open_session(&pa, 16, 0).unwrap();
+        let ob = c.open_session(&pb, 16, 0).unwrap();
+        queued(c.submit(0.0, oa.attachment, draft_for(oa.session, 0, &pa, 2), false).unwrap());
+        queued(c.submit(0.1, ob.attachment, draft_for(ob.session, 0, &pb, 2), false).unwrap());
+        let held = c.kv_pool.in_use();
+        assert!(held > 0);
+        // a's link dies mid-slot: its draft is void, pages come back
+        assert!(c.detach(1.0, oa.session, oa.attachment));
+        assert!(c.kv_pool.in_use() < held, "detach must return a's pages");
+        // b aborts outright from its slot
+        c.abort_session(ob.session);
+        assert_eq!(c.kv_pool.in_use(), 0);
+        assert!(c.kv_leases.is_empty());
+        assert_eq!(c.close_window(2.0).unwrap().len(), 0);
+        c.audit();
     }
 
     #[test]

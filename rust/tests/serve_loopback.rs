@@ -14,9 +14,9 @@ use flexspec::devices::{A800_70B, JETSON_ORIN};
 use flexspec::protocol::frame::{Frame, FrameKind, Hello, HelloAck, WIRE_VERSION};
 use flexspec::protocol::VerifyMode;
 use flexspec::serve::{
-    loopback_pair, run_edge_session, serve_cloud, serve_loopback, serve_loopback_mux, EdgeReport,
-    EdgeSessionConfig, SyntheticDraft, SyntheticTarget, TcpTransport, Transport, VerifierConfig,
-    VerifyBackend,
+    loopback_pair, run_edge_session, serve_cloud, serve_loopback, serve_loopback_mux, BatchMode,
+    EdgeReport, EdgeSessionConfig, SyntheticDraft, SyntheticTarget, TcpTransport, Transport,
+    VerifierConfig, VerifyBackend,
 };
 
 const SEED: u64 = 23;
@@ -633,6 +633,149 @@ fn simulator_admission_queue_mirror_keeps_tokens() {
         tight.wall_ms >= open.wall_ms,
         "deferrals can only move wall time forward"
     );
+}
+
+/// Tentpole acceptance: continuous batching (rolling slot admission +
+/// per-slot KV leases, `--batch-mode continuous`) must be invisible to
+/// the decoding math. Across sequential, pipelined, and multiplexed
+/// serving, and across several seeds, the committed token sequences
+/// stay BYTE-IDENTICAL to the windowed runs and to the virtual-clock
+/// simulator — only the batching schedule (and therefore queue time)
+/// is allowed to change.
+#[test]
+fn continuous_batching_matrix_matches_windowed_and_simulator() {
+    const USERS: usize = 4;
+    const MAX_NEW: usize = 16;
+
+    for seed in [3u64, 17, 42] {
+        // --- virtual-clock simulator reference -----------------------
+        let mk_target = move || -> Result<SyntheticTarget> {
+            let mut t = SyntheticTarget::new(seed).with_version("evolved", 0.3);
+            t.deploy("evolved")?;
+            Ok(t)
+        };
+        let mut backend = mk_target().unwrap();
+        let mut make =
+            |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(seed))) };
+        let sim = serve_with(
+            &mut backend,
+            &mut make,
+            &prompts(USERS),
+            &JETSON_ORIN,
+            &A800_70B,
+            &NetworkProfile::new(NetworkKind::FourG),
+            &ServeConfig {
+                users: USERS,
+                max_new: MAX_NEW,
+                fixed_k: Some(4),
+                seed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(sim.completed, USERS, "seed {seed}");
+
+        let edges = || -> Vec<(Box<dyn DraftSource + Send>, Vec<i32>)> {
+            prompts(USERS)
+                .into_iter()
+                .map(|p| {
+                    (
+                        Box::new(SyntheticDraft::new(seed)) as Box<dyn DraftSource + Send>,
+                        p,
+                    )
+                })
+                .collect()
+        };
+        let ecfg = |depth: usize| EdgeSessionConfig {
+            max_new: MAX_NEW,
+            fixed_k: Some(4),
+            seed,
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let vcfg = |mode: BatchMode| VerifierConfig {
+            window_ms: 40.0,
+            batch_mode: mode,
+            seed,
+            ..Default::default()
+        };
+
+        // --- sequential + pipelined, one connection per session ------
+        for depth in [1usize, 2] {
+            let (win, _) = rt()
+                .block_on(serve_loopback(
+                    vcfg(BatchMode::Windowed),
+                    move || Ok(Box::new(mk_target()?) as Box<dyn VerifyBackend>),
+                    edges(),
+                    ecfg(depth),
+                ))
+                .unwrap();
+            let (cont, cm) = rt()
+                .block_on(serve_loopback(
+                    vcfg(BatchMode::Continuous),
+                    move || Ok(Box::new(mk_target()?) as Box<dyn VerifyBackend>),
+                    edges(),
+                    ecfg(depth),
+                ))
+                .unwrap();
+            assert_eq!(cm.sessions_completed, USERS, "seed {seed} depth {depth}");
+            for i in 0..USERS {
+                assert_eq!(
+                    cont[i].committed, win[i].committed,
+                    "seed {seed} depth {depth}: continuous vs windowed committed (prompt {i})"
+                );
+                assert_eq!(
+                    cont[i].committed, sim.per_session_committed[i],
+                    "seed {seed} depth {depth}: continuous vs simulator committed (prompt {i})"
+                );
+                assert_eq!(
+                    cont[i].new_tokens, sim.per_session[i].new_tokens,
+                    "seed {seed} depth {depth}: tokens (prompt {i})"
+                );
+            }
+            // rolling-batch bookkeeping: one occupancy sample per close,
+            // dispatch count within [batches, rounds]
+            assert_eq!(
+                cm.slot_occupancy.count(),
+                cm.batches,
+                "seed {seed} depth {depth}: occupancy samples"
+            );
+            assert!(
+                cm.stacked_dispatches >= cm.batches && cm.stacked_dispatches <= cm.rounds,
+                "seed {seed} depth {depth}: stacked dispatches {} outside [{}, {}]",
+                cm.stacked_dispatches,
+                cm.batches,
+                cm.rounds
+            );
+            assert!(
+                cm.invariant_violations(0, 0).is_empty(),
+                "seed {seed} depth {depth}: {:?}",
+                cm.invariant_violations(0, 0)
+            );
+        }
+
+        // --- all sessions muxed on ONE continuous connection ---------
+        let (muxed, mm) = rt()
+            .block_on(serve_loopback_mux(
+                vcfg(BatchMode::Continuous),
+                move || Ok(Box::new(mk_target()?) as Box<dyn VerifyBackend>),
+                edges(),
+                ecfg(1),
+            ))
+            .unwrap();
+        assert_eq!(mm.sessions_completed, USERS, "seed {seed} mux");
+        for i in 0..USERS {
+            assert_eq!(
+                muxed[i].committed, sim.per_session_committed[i],
+                "seed {seed}: mux continuous vs simulator committed (prompt {i})"
+            );
+        }
+        assert!(
+            mm.invariant_violations(0, 0).is_empty(),
+            "seed {seed} mux: {:?}",
+            mm.invariant_violations(0, 0)
+        );
+    }
 }
 
 #[test]

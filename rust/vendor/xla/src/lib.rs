@@ -1,20 +1,41 @@
-//! API-compatible stub of the `xla` 0.1.6 crate (PJRT C-API bindings).
+//! API-compatible stub of the `xla` 0.1.6 crate (PJRT C-API bindings),
+//! forked to support the stacked-batch runtime.
 //!
 //! The real crate drives XLA through a prebuilt `xla_extension` shared
 //! library. That native payload cannot be fetched in hermetic build
 //! environments, so this stub reimplements the *host-side* surface the
 //! FlexSpec runtime uses (`Literal` construction/reshape/readback) and
-//! turns every *device-side* operation (HLO loading, compilation,
-//! execution) into a clear runtime error. The crate therefore always
-//! builds; artifact-gated tests and experiments detect the missing
-//! backend exactly the way they detect missing artifacts and no-op.
+//! turns HLO loading/compilation into a clear runtime error. The crate
+//! therefore always builds; artifact-gated tests and experiments detect
+//! the missing backend exactly the way they detect missing artifacts
+//! and no-op.
 //!
-//! To run the real model zoo, point the `xla` path dependency in
-//! rust/Cargo.toml at the real crate (same version, same API).
+//! Two deliberate departures from upstream 0.1.6, both needed by the
+//! shared device-resident weight cache (`runtime::model::WeightSet`):
+//!
+//! * **Host-backed buffers.** `buffer_from_host_literal` is functional:
+//!   a `PjRtBuffer` owns a host copy of its literal, `to_literal_sync`
+//!   reads it back, and donation is modeled by *taking* the literal out
+//!   of the buffer (a donated buffer errors on reuse, exactly like a
+//!   freed device allocation).
+//! * **Per-argument donation.** Upstream `execute_b` donates every
+//!   input buffer. [`PjRtLoadedExecutable::execute_b_opts`] takes a
+//!   per-argument `donate` mask so long-lived weight buffers survive
+//!   the call while per-step activations are still consumed.
+//!   `execute_b` keeps the donate-all upstream semantics.
+//!
+//! Execution itself stays unavailable for *compiled* executables (no
+//! native backend), but [`PjRtLoadedExecutable::hosted`] wraps a host
+//! closure as an executable so the runtime's dispatch/donation/stacking
+//! machinery is testable without artifacts. When the real backend is
+//! wanted, point the `xla` path dependency in rust/Cargo.toml at the
+//! real crate (same version, same API + the two extensions above).
 
 use std::borrow::Borrow;
+use std::cell::RefCell;
 use std::fmt;
 use std::path::Path;
+use std::rc::Rc;
 
 /// Error type mirroring `xla::Error` closely enough for `anyhow` interop.
 #[derive(Debug)]
@@ -47,6 +68,10 @@ enum Data {
     F64(Vec<f64>),
     I32(Vec<i32>),
     I64(Vec<i64>),
+    /// A tuple of element literals — the shape every jax-lowered entry
+    /// point returns (`return_tuple=True`). Hosted executables build
+    /// these; `decompose_tuple` splits them.
+    Tuple(Vec<Literal>),
 }
 
 impl Data {
@@ -56,6 +81,7 @@ impl Data {
             Data::F64(v) => v.len(),
             Data::I32(v) => v.len(),
             Data::I64(v) => v.len(),
+            Data::Tuple(v) => v.iter().map(|l| l.element_count()).sum(),
         }
     }
 
@@ -65,6 +91,7 @@ impl Data {
             Data::F64(_) => "f64",
             Data::I32(_) => "i32",
             Data::I64(_) => "i64",
+            Data::Tuple(_) => "tuple",
         }
     }
 }
@@ -101,7 +128,8 @@ native!(f64, F64, "f64");
 native!(i32, I32, "i32");
 native!(i64, I64, "i64");
 
-/// A host tensor: typed element buffer + dimensions.
+/// A host tensor: typed element buffer + dimensions. May also be a
+/// tuple of tensors (execution outputs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Literal {
     data: Data,
@@ -117,8 +145,20 @@ impl Literal {
         }
     }
 
+    /// A tuple literal over element literals (the root shape of every
+    /// jax-lowered module output).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal {
+            dims: vec![elements.len() as i64],
+            data: Data::Tuple(elements),
+        }
+    }
+
     /// Reinterpret with new dimensions (element count must match).
     pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".to_string()));
+        }
         let want: i64 = dims.iter().product();
         if want < 0 || want as usize != self.data.len() {
             return Err(Error(format!(
@@ -153,11 +193,17 @@ impl Literal {
         })
     }
 
-    /// Split a tuple literal into its elements. Stub literals are never
-    /// tuples (tuples only come back from execution, which the stub
-    /// cannot perform), so this always errors.
+    /// Split a tuple literal into its elements. Errors on non-tuple
+    /// literals (mirrors upstream, where only execution outputs carry
+    /// the tuple root).
     pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
-        Err(unavailable("decomposing an executable output tuple"))
+        match &mut self.data {
+            Data::Tuple(v) => Ok(std::mem::take(v)),
+            other => Err(Error(format!(
+                "decompose_tuple on a non-tuple {} literal",
+                other.type_name()
+            ))),
+        }
     }
 }
 
@@ -190,7 +236,7 @@ impl XlaComputation {
 }
 
 // ---------------------------------------------------------------------
-// PJRT client / buffers / executables (stubs: execution always fails)
+// PJRT client / buffers / executables
 // ---------------------------------------------------------------------
 
 /// A PJRT device handle (opaque in the stub).
@@ -217,36 +263,129 @@ impl PjRtClient {
         Err(unavailable("compiling an XLA computation"))
     }
 
+    /// Upload a host literal into a (host-backed) device buffer. The
+    /// buffer owns its copy; it stays valid across non-donating
+    /// executions and is consumed by donation.
     pub fn buffer_from_host_literal(
         &self,
         _device: Option<&PjRtDevice>,
-        _literal: &Literal,
+        literal: &Literal,
     ) -> Result<PjRtBuffer> {
-        Err(unavailable("uploading a host literal to a device buffer"))
+        Ok(PjRtBuffer {
+            data: RefCell::new(Some(literal.clone())),
+        })
     }
 }
 
+/// A device buffer, modeled host-side. `None` means the buffer was
+/// donated to an execution (the device allocation was consumed); any
+/// further use errors, exactly like touching a freed PJRT buffer.
 pub struct PjRtBuffer {
-    _private: (),
+    data: RefCell<Option<Literal>>,
 }
 
 impl PjRtBuffer {
+    fn from_literal(lit: Literal) -> PjRtBuffer {
+        PjRtBuffer {
+            data: RefCell::new(Some(lit)),
+        }
+    }
+
+    fn read(&self) -> Result<Literal> {
+        self.data
+            .borrow()
+            .clone()
+            .ok_or_else(|| Error("use of donated device buffer".to_string()))
+    }
+
+    fn donate(&self) -> Result<Literal> {
+        self.data
+            .borrow_mut()
+            .take()
+            .ok_or_else(|| Error("double donation of device buffer".to_string()))
+    }
+
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        Err(unavailable("downloading a device buffer"))
+        self.read()
     }
 }
 
+type HostFn = dyn Fn(&[Literal]) -> Result<Literal>;
+
+/// A loaded executable. Compiled executables (from `PjRtClient::compile`)
+/// never exist in the stub; hosted executables wrap a host closure so
+/// the runtime's dispatch, donation, and stacking machinery runs (and is
+/// testable) without the native backend.
 pub struct PjRtLoadedExecutable {
-    _private: (),
+    host_fn: Option<Rc<HostFn>>,
 }
 
 impl PjRtLoadedExecutable {
-    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Err(unavailable("executing a loaded executable"))
+    /// Wrap a host closure as an executable. The closure receives the
+    /// argument literals in order and must return the module's root
+    /// tuple (use [`Literal::tuple`]), matching jax's
+    /// `return_tuple=True` lowering.
+    pub fn hosted<F>(f: F) -> PjRtLoadedExecutable
+    where
+        F: Fn(&[Literal]) -> Result<Literal> + 'static,
+    {
+        PjRtLoadedExecutable {
+            host_fn: Some(Rc::new(f)),
+        }
     }
 
-    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Err(unavailable("executing a loaded executable"))
+    fn call(&self, args: Vec<Literal>) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let f = self
+            .host_fn
+            .as_ref()
+            .ok_or_else(|| unavailable("executing a loaded executable"))?;
+        let out = f(&args)?;
+        Ok(vec![vec![PjRtBuffer::from_literal(out)]])
+    }
+
+    pub fn execute<L: Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let lits: Vec<Literal> = args.iter().map(|l| l.borrow().clone()).collect();
+        self.call(lits)
+    }
+
+    /// Execute over device buffers, donating EVERY input (upstream
+    /// 0.1.6 semantics): each argument buffer is consumed and errors on
+    /// reuse. Prefer [`execute_b_opts`](Self::execute_b_opts) when some
+    /// arguments (weights) must survive the call.
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let donate = vec![true; args.len()];
+        self.execute_b_opts(args, &donate)
+    }
+
+    /// Execute over device buffers with a per-argument donation mask.
+    /// `donate[i] == false` leaves `args[i]` valid after the call (the
+    /// device allocation is aliased read-only); `true` consumes it.
+    /// The mask must cover every argument.
+    pub fn execute_b_opts<B: Borrow<PjRtBuffer>>(
+        &self,
+        args: &[B],
+        donate: &[bool],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        if donate.len() != args.len() {
+            return Err(Error(format!(
+                "donation mask covers {} of {} arguments",
+                donate.len(),
+                args.len()
+            )));
+        }
+        let lits: Vec<Literal> = args
+            .iter()
+            .zip(donate)
+            .map(|(b, &d)| {
+                let b = b.borrow();
+                if d {
+                    b.donate()
+                } else {
+                    b.read()
+                }
+            })
+            .collect::<Result<_>>()?;
+        self.call(lits)
     }
 }
 
@@ -266,12 +405,55 @@ mod tests {
     }
 
     #[test]
-    fn client_constructs_but_execution_is_unavailable() {
+    fn tuple_literals_decompose_and_reject_reshape() {
+        let mut t = Literal::tuple(vec![
+            Literal::vec1(&[1i32, 2]),
+            Literal::vec1(&[0.5f32]),
+        ]);
+        assert_eq!(t.element_count(), 3);
+        assert!(t.reshape(&[3]).is_err());
+        assert!(t.to_vec::<i32>().is_err());
+        let elems = t.decompose_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        assert_eq!(elems[0].to_vec::<i32>().unwrap(), vec![1, 2]);
+        assert!(Literal::vec1(&[1i32]).decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn client_constructs_but_compilation_is_unavailable() {
         let c = PjRtClient::cpu().unwrap();
         assert_eq!(c.platform_name(), "cpu");
-        let lit = Literal::vec1(&[1i32]);
-        assert!(c.buffer_from_host_literal(None, &lit).is_err());
         let err = HloModuleProto::from_text_file("/tmp/nope.hlo.txt").unwrap_err();
         assert!(err.to_string().contains("nope.hlo.txt"));
+    }
+
+    #[test]
+    fn buffers_roundtrip_and_donation_consumes() {
+        let c = PjRtClient::cpu().unwrap();
+        let lit = Literal::vec1(&[7i32, 8, 9]);
+        let buf = c.buffer_from_host_literal(None, &lit).unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap(), lit);
+        // identity hosted executable returning a 1-tuple
+        let exe =
+            PjRtLoadedExecutable::hosted(|args| Ok(Literal::tuple(vec![args[0].clone()])));
+        // non-donating call: the buffer survives
+        let out = exe.execute_b_opts(&[&buf], &[false]).unwrap();
+        let mut root = out[0][0].to_literal_sync().unwrap();
+        assert_eq!(root.decompose_tuple().unwrap()[0], lit);
+        assert_eq!(buf.to_literal_sync().unwrap(), lit);
+        // donating call (execute_b = donate-all): consumed afterwards
+        exe.execute_b(&[&buf]).unwrap();
+        assert!(buf.to_literal_sync().is_err(), "donated buffer must die");
+        assert!(exe.execute_b(&[&buf]).is_err(), "double donation");
+        // mask must cover every argument
+        let b2 = c.buffer_from_host_literal(None, &lit).unwrap();
+        assert!(exe.execute_b_opts(&[&b2], &[]).is_err());
+    }
+
+    #[test]
+    fn compiled_execution_stays_unavailable() {
+        let exe = PjRtLoadedExecutable { host_fn: None };
+        let lit = Literal::vec1(&[1i32]);
+        assert!(exe.execute(&[&lit]).is_err());
     }
 }
