@@ -1,7 +1,7 @@
 //! `cargo bench --bench load_scale` — the fleet-scale trajectory run.
 //!
 //! Runs the named workload scenarios at bench scale and emits
-//! `BENCH_load.json` (schema `flexspec-load-bench-v2`, documented in
+//! `BENCH_load.json` (schema `flexspec-load-bench-v3`, documented in
 //! `docs/LOADGEN.md`) when `FLEXSPEC_BENCH_LOAD_JSON=path` is set. CI
 //! uploads the report as an artifact next to `BENCH_serve.json`, so
 //! every PR extends the scalability trajectory.
@@ -18,7 +18,11 @@
 //!   live sessions (the ISSUE's acceptance floor);
 //! * control — on the SAME bounded-admission flash crowd, the
 //!   autoscaled fleet must beat the fixed fleet on ttft p99 (the
-//!   closed loop has to pay for itself, not just act).
+//!   closed loop has to pay for itself, not just act);
+//! * hetero — on the heterogeneous device mix (wire v8), tier-capped
+//!   tree speculation must strictly beat forced-linear chains on
+//!   accepted tokens per stacked dispatch (the bucket-aligned comb
+//!   adds rows, never dispatch classes — docs/HETERO.md).
 //!
 //! Wall-clock numbers (events/s, real seconds) are reported for the
 //! trajectory but never gated — they are machine-dependent.
@@ -191,6 +195,42 @@ fn main() -> Result<()> {
     cells.push(fixed);
     cells.push(auto);
 
+    // the hetero tree gate (wire v8): the SAME heterogeneous device
+    // population, tier-capped comb trees vs forced-linear chains — the
+    // hedge rows ride existing stacked dispatches, so tree speculation
+    // must strictly raise accepted tokens per dispatch
+    let tree = run_cell(Scenario::Hetero, 10_000)?;
+    let mut linear_cfg = Scenario::Hetero.config(10_000, SEED);
+    linear_cfg.branching = 1;
+    let linear = run_cfg_cell("hetero-linear", &linear_cfg)?;
+    {
+        let (ta, la) = (
+            tree.report.accepted_per_dispatch(),
+            linear.report.accepted_per_dispatch(),
+        );
+        println!(
+            "hetero gate: {ta:.3} accepted/dispatch (tree) vs {la:.3} (linear), \
+             {} tree rounds over {} rows",
+            tree.report.metrics.tree_rounds, tree.report.metrics.verify_rows
+        );
+        ensure!(
+            tree.report.metrics.tree_rounds > 0,
+            "the hetero mix never drafted a tree"
+        );
+        ensure!(
+            linear.report.metrics.tree_rounds == 0
+                && linear.report.metrics.verify_rows == linear.report.metrics.rounds,
+            "forced-linear hetero run still fanned out rows"
+        );
+        ensure!(
+            ta > la,
+            "tree speculation lost the dispatch-efficiency gate: \
+             {ta:.3} accepted/dispatch <= linear {la:.3}"
+        );
+    }
+    cells.push(tree);
+    cells.push(linear);
+
     if mega {
         let c = run_cell(Scenario::Flash, 1_000_000)?;
         println!(
@@ -204,7 +244,7 @@ fn main() -> Result<()> {
 
     if let Some(path) = std::env::var_os("FLEXSPEC_BENCH_LOAD_JSON") {
         let j = Json::obj(vec![
-            ("schema", Json::str("flexspec-load-bench-v2")),
+            ("schema", Json::str("flexspec-load-bench-v3")),
             ("seed", Json::Num(SEED as f64)),
             ("flash_live_floor", Json::Num(FLASH_LIVE_FLOOR as f64)),
             ("mega", Json::Num(mega as u8 as f64)),

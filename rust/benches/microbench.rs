@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         wire: WireFormat::Sketch,
         basis_len: 0,
         spec: vec![],
+        tree: vec![],
     };
     g.add("protocol: DraftMsg encode+decode+air_bytes", || {
         let buf = msg.encode();
@@ -89,6 +90,7 @@ fn main() -> anyhow::Result<()> {
             wire: WireFormat::Compact,
             basis_len: 0,
             spec: vec![],
+            tree: vec![],
         })
         .collect();
     for (i, &k) in ks.iter().enumerate() {
@@ -127,6 +129,7 @@ fn main() -> anyhow::Result<()> {
         wire: WireFormat::Compact,
         basis_len: 64,
         spec: (0..5).map(|i| 200 + i).collect(),
+        tree: vec![],
     };
     gp.add("spec-tagged draft frame roundtrip K=4 + Cancel encode", || {
         let f = Frame::on(1, FrameKind::Draft, black_box(&spec_msg).encode());
@@ -151,6 +154,7 @@ fn main() -> anyhow::Result<()> {
             tau: 4,
             correction: 9,
             eos: false,
+            leaf: None,
         };
         black_box(p.resolve(&mut core, &v).held);
     });
@@ -212,6 +216,7 @@ fn main() -> anyhow::Result<()> {
                 tau: v.tau as u8,
                 correction: v.correction,
                 eos: v.eos,
+                leaf: None,
             };
             cloud.apply_verdict(&head_tokens, v.tau, v.correction, v.eos, false);
             let _ = p.resolve(&mut core, &vm);
@@ -317,6 +322,7 @@ fn main() -> anyhow::Result<()> {
                 wire: WireFormat::Compact,
                 basis_len: 0,
                 spec: vec![],
+                tree: vec![],
             }
         };
         // a's round fills the bound; every further submit is deferred
@@ -380,6 +386,7 @@ fn main() -> anyhow::Result<()> {
                 wire: WireFormat::Compact,
                 basis_len: 0,
                 spec: vec![],
+                tree: vec![],
             };
             let token = match a.submit_from(now, o.attachment, msg, 5).unwrap() {
                 SubmitOutcome::Redirect { resume_token, .. } => resume_token,

@@ -137,10 +137,12 @@ pub fn cli_main() -> Result<()> {
                  \x20\x20\x20\x20 [--mux] [--tier-weights 3,1,...] [--fault-seed S] [--fault-disconnects N]\n\
                  \x20\x20\x20\x20 [--pipeline-depth D]  (1=sequential, >=2 pipelined, 0=auto policy)\n\
                  \x20\x20\x20\x20 [--fleet-addrs a:p,b:p,...]  (follow Redirects, fail over, re-root)\n\
-                 \x20 flexspec loadgen <steady|flash|diurnal|churn> [--sessions N] [--seed S]\n\
+                 \x20 flexspec loadgen <steady|flash|diurnal|churn|hetero> [--sessions N] [--seed S]\n\
                  \x20\x20\x20\x20 [--replicas N] [--window MS] [--max-batch N] [--k K]\n\
                  \x20\x20\x20\x20 [--batch-mode window|continuous]\n\
                  \x20\x20\x20\x20 [--admission-queue N] [--network-mix 5g|4g|wifi|W5,W4,Ww]\n\
+                 \x20\x20\x20\x20 [--device-mix eval|strong|Ww,Wm,Ws] [--branching B]\n\
+                 \x20\x20\x20\x20\x20\x20 (heterogeneous tiers + tree speculation, wire v8; docs/HETERO.md)\n\
                  \x20\x20\x20\x20 [--autoscale]  (run the control loop's sim twin; docs/AUTOSCALE.md)\n\
                  \x20\x20\x20\x20 [--selfcheck]  (run twice, assert byte-identical digests)\n\
                  \x20\x20\x20\x20 fleet-scale virtual-clock workload (docs/LOADGEN.md)\n\
@@ -883,9 +885,10 @@ fn serve_edge_cmd(args: &Args) -> Result<()> {
 /// contract (byte-identical digest). `--trace` journals the first
 /// [`crate::load::TRACE_SESSIONS`] sessions on the virtual clock.
 fn loadgen_cmd(args: &Args) -> Result<()> {
+    use crate::device::DeviceMix;
     use crate::load::{ChannelMix, Scenario};
     let Some(sc) = args.positional(1).and_then(Scenario::parse) else {
-        bail!("usage: flexspec loadgen <steady|flash|diurnal|churn> [--sessions N] [--seed S]");
+        bail!("usage: flexspec loadgen <steady|flash|diurnal|churn|hetero> [--sessions N] [--seed S]");
     };
     let sessions = args.get_usize("sessions", 10_000);
     let seed = args.get_u64("seed", 3);
@@ -900,6 +903,16 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         cfg.mix = ChannelMix::parse(&m)
             .ok_or_else(|| anyhow::anyhow!("bad --network-mix '{m}' (5g|4g|wifi or W5,W4,Ww)"))?;
     }
+    if let Some(m) = args.get("device-mix") {
+        cfg.device_mix =
+            Some(DeviceMix::parse(&m).map_err(|e| anyhow::anyhow!("bad --device-mix: {e}"))?);
+    }
+    cfg.branching = args
+        .get_usize("branching", cfg.branching)
+        .clamp(1, crate::device::MAX_BRANCHING);
+    if cfg.branching > 1 && cfg.device_mix.is_none() {
+        bail!("--branching needs a device population (--device-mix or the hetero scenario)");
+    }
     if args.flag("autoscale") {
         cfg.autoscale = Some(autoscale_config_from(args, cfg.replicas));
     } else if args.get("action-log").is_some() {
@@ -913,6 +926,13 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         cfg.replicas,
         cfg.mix.describe()
     );
+    if let Some(dm) = &cfg.device_mix {
+        println!(
+            "  devices          {} (tree branching {})",
+            dm.describe(),
+            cfg.branching
+        );
+    }
     let t0 = std::time::Instant::now();
     let rep = crate::load::run_with(&cfg, trace.as_ref());
     let real_s = t0.elapsed().as_secs_f64();

@@ -37,6 +37,34 @@ pub struct Proposal {
     pub edge_tokens: usize,
 }
 
+/// One round's TREE draft proposal (wire v8 tree speculation): a main
+/// chain plus single-token alternate leaves, laid out exactly as
+/// `DraftMsg::{tokens, tree}` — chain nodes first, alternates appended,
+/// `parents[i]` naming node `i`'s parent (0 = committed prefix,
+/// `j > 0` = child of `tokens[j-1]`). An empty `parents` array IS the
+/// linear chain.
+#[derive(Debug, Clone, Default)]
+pub struct TreeProposal {
+    /// All tree node tokens, chain first.
+    pub tokens: Vec<i32>,
+    /// Tree topology (`DraftMsg::tree` convention); empty = linear.
+    pub parents: Vec<u8>,
+    /// Number of *model forward* tokens the edge executed this round —
+    /// every alternate leaf costs one extra draft step.
+    pub edge_tokens: usize,
+}
+
+impl TreeProposal {
+    /// Number of tree nodes drafted (chain + alternates).
+    pub fn n_nodes(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_linear(&self) -> bool {
+        self.parents.is_empty()
+    }
+}
+
 pub trait DraftSource {
     /// Propose up to `k` tokens extending `committed`.
     fn propose(
@@ -47,6 +75,32 @@ pub trait DraftSource {
         top_p: f32,
         rng: &mut SplitMix64,
     ) -> Result<Proposal>;
+
+    /// Propose a token TREE extending `committed`: a main chain of up to
+    /// `k` tokens plus alternate leaves, at most `branching` children
+    /// per node (wire v8). The default delegates to the linear
+    /// [`propose`](DraftSource::propose) and returns it as a chain, so
+    /// every source keeps working; sources that can hedge against
+    /// target drift override it. Contract: `branching <= 1` MUST return
+    /// a linear tree (empty `parents`) whose chain is byte-identical to
+    /// `propose` — the degenerate-case equality the device-matrix suite
+    /// pins.
+    fn propose_tree(
+        &mut self,
+        committed: &[i32],
+        k: usize,
+        _branching: usize,
+        temperature: f32,
+        top_p: f32,
+        rng: &mut SplitMix64,
+    ) -> Result<TreeProposal> {
+        let p = self.propose(committed, k, temperature, top_p, rng)?;
+        Ok(TreeProposal {
+            edge_tokens: p.edge_tokens,
+            tokens: p.tokens,
+            parents: Vec::new(),
+        })
+    }
 
     /// Start a new request (context reset).
     fn reset(&mut self) -> Result<()>;
@@ -366,6 +420,26 @@ mod tests {
         pld.set_prompt_len(4);
         let p2 = pld.propose(&committed, 2, 0.0, 1.0, &mut rng).unwrap();
         assert!(p2.tokens.is_empty());
+    }
+
+    #[test]
+    fn default_propose_tree_is_the_linear_chain() {
+        // every source gets tree drafting for free as the degenerate
+        // linear case, byte-identical to `propose`
+        let mut pld = PromptLookup::pld(2);
+        pld.set_prompt_len(8);
+        let committed = vec![5, 6, 7, 8, 1, 2, 3, 4, 5, 6];
+        let mut rng = SplitMix64::new(1);
+        let lin = pld.propose(&committed, 4, 0.0, 1.0, &mut rng).unwrap();
+        for branching in [1usize, 4] {
+            let t = pld
+                .propose_tree(&committed, 4, branching, 0.0, 1.0, &mut rng)
+                .unwrap();
+            assert!(t.is_linear());
+            assert_eq!(t.tokens, lin.tokens);
+            assert_eq!(t.n_nodes(), lin.tokens.len());
+            assert_eq!(t.edge_tokens, lin.edge_tokens);
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod scheduler;
 pub mod sync;
 
 pub use cloud::CloudEngine;
-pub use edge::{DraftSource, ModelDraft, NoDraft, PromptLookup, Proposal};
+pub use edge::{DraftSource, ModelDraft, NoDraft, PromptLookup, Proposal, TreeProposal};
 pub use pipeline::{Pipeline, RequestResult, RoundLog, StridePolicy};
 pub use policy::{AcceptanceModel, AdaptivePolicy, LatencyModel};
 pub use scheduler::{serve, serve_with, FleetSimConfig, ServeConfig, ServeReport};

@@ -324,6 +324,7 @@ impl<'a> Pipeline<'a> {
                         wire: self.wire,
                         basis_len: 0,
                         spec: vec![],
+                        tree: vec![],
                     };
                     let bytes_up = msg.air_bytes();
                     let tx_ms = chan.up_ms(bytes_up);
@@ -369,6 +370,7 @@ impl<'a> Pipeline<'a> {
                                 wire: self.wire,
                                 basis_len: committed.len() as u64,
                                 spec: prop.tokens.iter().copied().chain([b]).collect(),
+                                tree: vec![],
                             };
                             let sbytes = smsg.air_bytes();
                             // pure sources are model-free: lookup cost
@@ -408,6 +410,7 @@ impl<'a> Pipeline<'a> {
                 tau: verdict.outcome.tau as u8,
                 correction: verdict.outcome.correction,
                 eos: verdict.eos,
+                leaf: None,
             };
             let bytes_down = vmsg.air_bytes();
             let rx_ms = chan.down_ms(bytes_down);

@@ -14,6 +14,7 @@
 //! every round commits.
 
 use crate::channel::ChannelState;
+use crate::device::{ComputeTier, SpecPlan};
 use crate::devices::{CloudProfile, EdgeDevice};
 use crate::protocol::{self, WireFormat};
 use crate::util::stats::Ema;
@@ -160,6 +161,54 @@ impl AdaptivePolicy {
         }
         let ratio = lat.t_fixed_ms / (k as f64 * lat.t_marginal_ms).max(1e-9);
         (1 + ratio as usize).min(max_depth)
+    }
+
+    /// Resource-aware joint plan (wire v8 device layer, ROADMAP item 4):
+    /// stride K, pipeline depth, and draft-tree branching for ONE
+    /// session.
+    ///
+    /// The channel-driven selection above picks a RAW (K, depth) exactly
+    /// as before; the device tier's cap table
+    /// ([`ComputeTier::plan_caps`]) then bounds it componentwise, and a
+    /// draining energy budget walks the session down the same table
+    /// (frac >= 0.5 → own tier, >= 0.2 → one tier weaker, below → Weak).
+    /// Because the raw plan is tier-independent and the cap table is
+    /// componentwise monotone, a weaker tier (or a lower energy
+    /// fraction) can NEVER receive a larger plan along any axis — the
+    /// property `select_plan_is_monotone_in_tier_and_energy` pins.
+    ///
+    /// Branching is deliberately a pure function of (tier, energy
+    /// fraction, `branching_cap`) and never of the noisy channel sample,
+    /// so the live edge and the scheduler sim compute identical trees.
+    /// Pipelined rounds keep drafts linear — a retracted speculative
+    /// round would have drafted its tree from a poisoned prefix — so
+    /// depth > 1 forces branching = 1.
+    pub fn select_plan(
+        &self,
+        lat: &LatencyModel,
+        tier: ComputeTier,
+        energy_frac: f64,
+        max_depth: usize,
+        branching_cap: usize,
+    ) -> SpecPlan {
+        let effective = if energy_frac >= 0.5 {
+            tier
+        } else if energy_frac >= 0.2 {
+            tier.weaker()
+        } else {
+            ComputeTier::Weak
+        };
+        let raw_k = self.select_k(lat);
+        let raw = SpecPlan {
+            k: raw_k,
+            depth: self.select_pipeline_depth(lat, raw_k, max_depth),
+            branching: branching_cap.max(1),
+        };
+        let mut plan = raw.min(effective.plan_caps());
+        if plan.depth > 1 {
+            plan.branching = 1;
+        }
+        plan
     }
 }
 
@@ -310,6 +359,85 @@ mod tests {
 
         // depth 1 is the floor no matter what
         assert!(p.select_pipeline_depth(&near, 8, 0) >= 1);
+    }
+
+    #[test]
+    fn select_plan_tracks_the_tier_table() {
+        use crate::device::ComputeTier;
+        // strong channel + high gamma: the raw plan is large, so the
+        // tier caps are what bind.
+        let mut p = AdaptivePolicy::new(8, 0.1);
+        p.gamma = Ema::new(0.85, 0.1);
+        let l = lat(300.0, 18.0);
+        let strong = p.select_plan(&l, ComputeTier::Strong, 1.0, 1, 4);
+        let mid = p.select_plan(&l, ComputeTier::Mid, 1.0, 1, 4);
+        let weak = p.select_plan(&l, ComputeTier::Weak, 1.0, 1, 4);
+        assert!(weak.fits_within(mid) && mid.fits_within(strong));
+        assert_eq!(weak.branching, 1, "weak edges never draft trees");
+        assert_eq!(mid.branching, 2);
+        assert_eq!(strong.branching, 4);
+        assert_eq!(weak.k, 2);
+        assert_eq!(mid.k, 4);
+        // a draining battery steps a strong edge down the SAME table
+        assert_eq!(p.select_plan(&l, ComputeTier::Strong, 0.3, 1, 4), mid);
+        assert_eq!(p.select_plan(&l, ComputeTier::Strong, 0.1, 1, 4), weak);
+        // the config cap binds when tighter than the tier cap
+        assert_eq!(p.select_plan(&l, ComputeTier::Strong, 1.0, 1, 1).branching, 1);
+        // pipelined rounds keep drafts linear
+        let far = p.select_plan(&l, ComputeTier::Strong, 1.0, 4, 4);
+        if far.depth > 1 {
+            assert_eq!(far.branching, 1);
+        }
+    }
+
+    #[test]
+    fn select_plan_is_monotone_in_tier_and_energy() {
+        use crate::device::ComputeTier;
+        prop::check(300, |rng| {
+            let mut p = AdaptivePolicy::new(8, 0.2);
+            for _ in 0..rng.next_range(20) {
+                let k = 1 + rng.next_range(8) as usize;
+                let tau = rng.next_range(k as u64 + 1) as usize;
+                p.observe(tau, k);
+            }
+            let l = lat(rng.range_f64(0.5, 400.0), rng.range_f64(5.0, 500.0));
+            let max_depth = 1 + rng.next_range(4) as usize;
+            let cap = 1 + rng.next_range(4) as usize;
+            let fracs = [0.05, 0.2, 0.35, 0.5, 0.8, 1.0];
+            let tiers = ComputeTier::all();
+            for (fi, &frac) in fracs.iter().enumerate() {
+                for (ti, &tier) in tiers.iter().enumerate() {
+                    let plan = p.select_plan(&l, tier, frac, max_depth, cap);
+                    prop::assert_prop(
+                        plan.fits_within(tier.plan_caps()),
+                        format!("{plan:?} exceeds {tier:?} caps"),
+                    )?;
+                    prop::assert_prop(
+                        plan.k >= 1 && plan.depth >= 1 && plan.branching >= 1,
+                        format!("degenerate plan {plan:?}"),
+                    )?;
+                    prop::assert_prop(
+                        plan.depth == 1 || plan.branching == 1,
+                        format!("pipelined plan must stay linear: {plan:?}"),
+                    )?;
+                    if ti > 0 {
+                        let weaker = p.select_plan(&l, tiers[ti - 1], frac, max_depth, cap);
+                        prop::assert_prop(
+                            weaker.fits_within(plan),
+                            format!("tier monotonicity: {weaker:?} !<= {plan:?}"),
+                        )?;
+                    }
+                    if fi > 0 {
+                        let drained = p.select_plan(&l, tier, fracs[fi - 1], max_depth, cap);
+                        prop::assert_prop(
+                            drained.fits_within(plan),
+                            format!("energy monotonicity: {drained:?} !<= {plan:?}"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

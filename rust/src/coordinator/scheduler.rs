@@ -17,13 +17,15 @@ use super::edge::{DraftSource, ModelDraft};
 use super::policy::{AdaptivePolicy, LatencyModel};
 use crate::channel::{Channel, StochasticChannel};
 use crate::channel::profiles::NetworkProfile;
+use crate::device::DeviceProfile;
 use crate::devices::{CloudProfile, EdgeDevice};
+use crate::energy::EnergyBudget;
 use crate::obs::{LatencySummary, SpanKind, Trace};
 use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg, WireFormat};
 use crate::runtime::ModelRuntime;
 #[cfg(test)]
 use crate::runtime::Registry;
-use crate::serve::backend::{bucket_k, BatchVerifyReq, VerifyBackend};
+use crate::serve::backend::{bucket_k, BackendVerdict, BatchVerifyReq, VerifyBackend};
 use crate::serve::session::{BatchDecision, BatchWindow, SessionCore, SessionOutcome};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::Summary;
@@ -79,8 +81,17 @@ struct SessionState {
     channel: StochasticChannel,
     policy: AdaptivePolicy,
     started_ms: f64,
-    /// In-flight proposal awaiting verification.
-    pending: Option<(Vec<i32>, Vec<f32>, Vec<Vec<f32>>)>,
+    /// Hetero twin (wire v8): the session's device profile, if the run
+    /// models a heterogeneous population. `None` = unprofiled, which
+    /// reduces EXACTLY to the v7 drafting path.
+    profile: Option<DeviceProfile>,
+    /// Per-session energy meter, charged per drafted tree node exactly
+    /// like the live edge's `LinkStats` (same `charge_draft` inputs ⇒
+    /// the same remaining fraction feeds `select_plan` on both sides).
+    energy: EnergyBudget,
+    /// In-flight proposal awaiting verification: (tokens, chosen_probs,
+    /// prob_rows, tree parents). `parents` empty = linear draft.
+    pending: Option<(Vec<i32>, Vec<f32>, Vec<Vec<f32>>, Vec<u8>)>,
     /// Pipelined mode: the NEXT round's speculative draft, launched
     /// while `pending` verifies (mirrors `serve::pipeline`'s depth-2
     /// in-flight window under the virtual clock).
@@ -168,6 +179,26 @@ pub struct ServeConfig {
     /// determinism contract extended to observability
     /// (`tests/serve_obs.rs`). `None` (default) records nothing.
     pub trace: Option<Trace>,
+    /// Hetero twin (wire v8): per-session device profiles. `None`
+    /// (default) leaves every session unprofiled — drafting, policy and
+    /// energy behave exactly as in v7. `Some(ps)` assigns session `i`
+    /// the profile `ps[i % ps.len()]`: its device sets the virtual
+    /// draft cost, its tier caps the speculation plan, and its energy
+    /// budget is metered per drafted node. Feed the SAME vector to the
+    /// live stack's per-session `EdgeSessionConfig`s for sim ↔ serve
+    /// comparability (`tests/serve_hetero.rs`).
+    pub profiles: Option<Vec<DeviceProfile>>,
+    /// Draft-tree branching cap (wire v8). 1 (default) = linear
+    /// drafting, byte-identical to v7. >1 lets PROFILED greedy
+    /// sequential sessions draft a token tree up to this wide at each
+    /// bucket-aligned chain position; the batcher flattens root→leaf
+    /// paths into ragged rows and commits the deepest accepted path
+    /// (ties to the main chain), mirroring `VerifierCore::close_window`.
+    /// The effective width is still capped by the session tier's
+    /// `plan_caps` — a Weak device drafts linearly no matter the cap.
+    /// Stochastic modes and pipelined rounds stay linear, like the live
+    /// edge.
+    pub branching: usize,
 }
 
 /// Virtual-clock twin of the live fleet's redirect schedule (see
@@ -225,6 +256,8 @@ impl Default for ServeConfig {
             admission_queue: 0,
             fleet: None,
             trace: None,
+            profiles: None,
+            branching: 1,
         }
     }
 }
@@ -269,6 +302,23 @@ pub struct ServeReport {
     /// serving stack's `Redirect`/export/import path). Handoffs move
     /// virtual wall time, never a committed token.
     pub sessions_redirected: usize,
+    /// Verification ROWS executed across closed batches (a linear draft
+    /// is one row; a tree draft is one row per root→leaf path). Mirrors
+    /// `ServingMetrics::verify_rows`.
+    pub verify_rows: usize,
+    /// Rounds whose verified draft was a token tree (wire v8). Mirrors
+    /// `ServingMetrics::tree_rounds`.
+    pub tree_rounds: usize,
+    /// Stacked `[B, K]` device dispatches across closed batches: one
+    /// per distinct planner bucket class per greedy batch (mirrors
+    /// `ServingMetrics::stacked_dispatches`). Bucket-aligned tree combs
+    /// add rows WITHOUT adding classes — the hetero bench gates
+    /// accepted-per-dispatch on exactly this counter.
+    pub stacked_dispatches: usize,
+    /// Sessions per device compute tier (weak / mid / strong); all
+    /// zeros when the run is unprofiled. Mirrors
+    /// `ServingMetrics::sessions_by_device_tier`.
+    pub sessions_by_tier: [usize; 3],
     /// Per-session final counters, in prompt order (for cross-checking
     /// against loopback/TCP serving runs).
     pub per_session: Vec<SessionOutcome>,
@@ -299,29 +349,77 @@ fn draft_and_send(
     cfg: &ServeConfig,
     cloud_profile: &CloudProfile,
 ) -> Result<f64> {
+    // a profiled session drafts on ITS device (the tier's
+    // representative) — the fleet-wide `device` is the unprofiled
+    // default, exactly as the live edge runs on its own hardware
+    let device = s.profile.map_or(device, |p| p.device);
     let chan = s.channel.sample(now);
     let lat = LatencyModel::build(&chan, device, cloud_profile, WireFormat::Compact);
-    let k = cfg
-        .fixed_k
-        .unwrap_or_else(|| s.policy.select_k(&lat))
-        .clamp(1, 8);
-    let prop = s
-        .draft
-        .propose(&s.core.committed, k, cfg.temperature, cfg.top_p, &mut s.rng)?;
-    let t_edge = device.round_overhead_ms + prop.edge_tokens as f64 * device.draft_ms_per_token;
+    // plan selection mirrors the live `LinkStats::select_plan`:
+    // unprofiled = the v7 stride policy verbatim; profiled = the joint
+    // (K, depth, branching) policy under tier caps + remaining energy,
+    // with `fixed_k` overriding the stride (never the branching) and
+    // stochastic / pipelined rounds forced linear.
+    let (k, branching) = if let Some(p) = s.profile {
+        let mut plan = s.policy.select_plan(
+            &lat,
+            p.tier,
+            s.energy.remaining_frac(),
+            1,
+            cfg.branching.max(1),
+        );
+        if let Some(k) = cfg.fixed_k {
+            plan.k = k;
+        }
+        plan.k = plan.k.clamp(1, 8);
+        if cfg.mode != VerifyMode::Greedy || cfg.pipeline_depth > 1 {
+            plan.branching = 1;
+        }
+        (plan.k, plan.branching)
+    } else {
+        let k = cfg
+            .fixed_k
+            .unwrap_or_else(|| s.policy.select_k(&lat))
+            .clamp(1, 8);
+        (k, 1)
+    };
+    let (tokens, chosen_probs, prob_rows, parents, edge_tokens) = if branching > 1 {
+        let tp = s.draft.propose_tree(
+            &s.core.committed,
+            k,
+            branching,
+            cfg.temperature,
+            cfg.top_p,
+            &mut s.rng,
+        )?;
+        let n = tp.edge_tokens;
+        (tp.tokens, vec![], vec![], tp.parents, n)
+    } else {
+        let prop =
+            s.draft
+                .propose(&s.core.committed, k, cfg.temperature, cfg.top_p, &mut s.rng)?;
+        let n = prop.edge_tokens;
+        (prop.tokens, prop.chosen_probs, prop.prob_rows, vec![], n)
+    };
+    if let Some(p) = s.profile {
+        // same charge the live edge applies: one draft forward per node
+        s.energy.charge_draft(p.device, tokens.len());
+    }
+    let t_edge = device.round_overhead_ms + edge_tokens as f64 * device.draft_ms_per_token;
     let msg = DraftMsg {
         session: s.core.id,
         round: s.core.rounds as u32,
-        tokens: prop.tokens.clone(),
-        chosen_probs: prop.chosen_probs.clone(),
+        tokens: tokens.clone(),
+        chosen_probs: chosen_probs.clone(),
         mode: cfg.mode,
         wire: WireFormat::Compact,
         basis_len: 0,
         spec: vec![],
+        tree: parents.clone(),
     };
     let t_up = chan.prop_ms + chan.up_ms(msg.air_bytes());
     let arrive = now + t_edge + t_up;
-    let head_tokens = prop.tokens.clone();
+    let head_tokens = tokens.clone();
     let head_round = s.core.rounds as u32;
     // one Draft + Uplink per LAUNCH, exactly like the serving edge (a
     // Busy re-arrival later records nothing)
@@ -330,7 +428,7 @@ fn draft_and_send(
         tr.record(s.core.id, head_round, SpanKind::Uplink, t_up, msg.air_bytes() as u32, 0);
     }
     s.sent_ms = now + t_edge;
-    s.pending = Some((prop.tokens, prop.chosen_probs, prop.prob_rows));
+    s.pending = Some((tokens, chosen_probs, prob_rows, parents));
     s.spec_next = None;
     if cfg.pipeline_depth > 1 && s.draft.is_pure() && !head_tokens.is_empty() {
         // predict the bonus token (the +1 every round commits) — the
@@ -367,6 +465,7 @@ fn launch_spec(
     cloud_profile: &CloudProfile,
 ) -> Result<()> {
     s.spec_next = None;
+    let device = s.profile.map_or(device, |p| p.device);
     // optimistic budget gate (PipelinedDrafter::can_launch): a round
     // that could only exist if the speculation FAILS is never drafted
     let optimistic_new = s.core.committed.len() + head_tokens.len() + 1 - s.core.prompt_len;
@@ -387,6 +486,9 @@ fn launch_spec(
         .propose(&ctx, k, cfg.temperature, cfg.top_p, &mut s.rng)?;
     if prop.tokens.is_empty() {
         return Ok(());
+    }
+    if let Some(p) = s.profile {
+        s.energy.charge_draft(p.device, prop.tokens.len());
     }
     // this round's own bonus chains the round after it
     let own_bonus = {
@@ -409,6 +511,7 @@ fn launch_spec(
         wire: WireFormat::Compact,
         basis_len: s.core.committed.len() as u64,
         spec: spec_suffix,
+        tree: vec![],
     };
     let t_edge = device.round_overhead_ms + prop.edge_tokens as f64 * device.draft_ms_per_token;
     let t_up = chan.prop_ms + chan.up_ms(msg.air_bytes());
@@ -456,18 +559,36 @@ pub fn serve_with(
     let mut arrival_rng = SplitMix64::new(cfg.seed ^ 0xA881);
     let mut sessions: Vec<SessionState> = Vec::new();
     let mut t_arrive = 0.0;
+    let mut window = BatchWindow::new(cfg.window_ms, cfg.max_batch);
+    let mut report = ServeReport::default();
     for (i, prompt) in prompts.iter().take(cfg.users).enumerate() {
         let id = (i + 1) as u32;
         let mut draft = make_draft(id)?;
         // same session-start notification the edge client gives its
         // draft (PLD needs the prompt/generation boundary)
         draft.on_prompt(prompt.len());
+        // hetero twin: session i wears profile i (mod len) — feed the
+        // live stack the same vector and the populations line up
+        let profile = cfg
+            .profiles
+            .as_ref()
+            .filter(|ps| !ps.is_empty())
+            .map(|ps| ps[i % ps.len()]);
+        if let Some(p) = profile {
+            if let Some(slot) = report.sessions_by_tier.get_mut(p.tier.code() as usize) {
+                *slot += 1;
+            }
+        }
         sessions.push(SessionState {
             core: SessionCore::new(id, prompt, cfg.max_new),
             draft,
             channel: net.channel(cfg.seed ^ (0x1000 + id as u64)),
             policy: AdaptivePolicy::new(8, 0.15),
             started_ms: 0.0,
+            profile,
+            energy: profile.map_or(EnergyBudget::unmetered(), |p| {
+                EnergyBudget::new(p.energy_budget_j)
+            }),
             pending: None,
             spec_next: None,
             redirects: 0,
@@ -478,9 +599,6 @@ pub fn serve_with(
         push(&mut heap, t_arrive, Event::SessionArrives(id), &mut seq);
         t_arrive += arrival_rng.next_exp(1.0 / cfg.arrival_mean_ms);
     }
-
-    let mut window = BatchWindow::new(cfg.window_ms, cfg.max_batch);
-    let mut report = ServeReport::default();
     // Greedy batched verification ignores the sampling stream entirely
     // (both the synthetic target and the stacked engine path); this rng
     // exists only to satisfy the verify_batch signature. Stochastic
@@ -605,37 +723,108 @@ pub fn serve_with(
                 // T_base per bucket). Stochastic mode keeps the
                 // sequential loop — it consumes per-session sampling
                 // streams in member order, which stacking would break.
-                let mut taken: Vec<(u32, Vec<i32>, Vec<Vec<f32>>)> =
+                let mut taken: Vec<(u32, Vec<i32>, Vec<Vec<f32>>, Vec<u8>)> =
                     Vec::with_capacity(members.len());
                 for &id in &members {
                     let s = &mut sessions[(id - 1) as usize];
-                    let (tokens, _probs, rows) = s.pending.take().unwrap();
-                    taken.push((id, tokens, rows));
+                    let (tokens, _probs, rows, parents) = s.pending.take().unwrap();
+                    taken.push((id, tokens, rows, parents));
                 }
                 let batch = taken.len();
-                let total_draft: usize = taken.iter().map(|(_, t, _)| t.len()).sum();
-                let max_k = taken.iter().map(|(_, t, _)| t.len()).max().unwrap_or(0);
+                let total_draft: usize = taken.iter().map(|(_, t, _, _)| t.len()).sum();
+                let max_k = taken.iter().map(|(_, t, _, _)| t.len()).max().unwrap_or(0);
                 let mut total_tokens = 0usize;
-                let mut verdicts = Vec::with_capacity(taken.len());
+                // verdict per member: (id, applied draft, verdict,
+                // winning leaf, was-a-tree-round)
+                let mut verdicts: Vec<(u32, Vec<i32>, BackendVerdict, Option<u8>, bool)> =
+                    Vec::with_capacity(taken.len());
                 if cfg.mode == VerifyMode::Greedy {
-                    let reqs: Vec<BatchVerifyReq> = taken
+                    // expand: tree drafts fan out into one row per
+                    // root→leaf path, ascending leaf order (the main
+                    // chain first), mirroring `VerifierCore::
+                    // close_window`. Backends whose per-session rows
+                    // are not independent verify only the first root
+                    // path and stay effectively linear.
+                    let tree_ok = backend.supports_tree_rows();
+                    let mut rows_plan: Vec<(usize, Option<u8>, Option<Vec<i32>>)> =
+                        Vec::with_capacity(taken.len());
+                    for (ji, (id, tokens, _rows, parents)) in taken.iter().enumerate() {
+                        if parents.is_empty() {
+                            rows_plan.push((ji, None, None));
+                            continue;
+                        }
+                        let tmsg = DraftMsg {
+                            session: *id,
+                            round: 0,
+                            tokens: tokens.clone(),
+                            chosen_probs: vec![],
+                            mode: cfg.mode,
+                            wire: WireFormat::Compact,
+                            basis_len: 0,
+                            spec: vec![],
+                            tree: parents.clone(),
+                        };
+                        let leaves = tmsg.tree_leaves();
+                        let fan = if tree_ok { leaves.len() } else { 1 };
+                        for &leaf in leaves.iter().take(fan) {
+                            rows_plan.push((ji, Some(leaf), Some(tmsg.tree_path(leaf))));
+                        }
+                    }
+                    report.verify_rows += rows_plan.len();
+                    // one stacked [B, K] dispatch per distinct planner
+                    // bucket class, counted over ROWS (bucket-aligned
+                    // combs add rows, not classes)
+                    report.stacked_dispatches += {
+                        let mut kinds: Vec<usize> = rows_plan
+                            .iter()
+                            .map(|(ji, _, path)| {
+                                bucket_k(path.as_ref().map_or(taken[*ji].1.len(), Vec::len))
+                            })
+                            .collect();
+                        kinds.sort_unstable();
+                        kinds.dedup();
+                        kinds.len()
+                    };
+                    let reqs: Vec<BatchVerifyReq> = rows_plan
                         .iter()
-                        .map(|(id, tokens, _)| BatchVerifyReq {
-                            id: *id,
-                            committed: &sessions[(*id - 1) as usize].core.committed,
-                            draft: tokens,
+                        .map(|(ji, _, path)| BatchVerifyReq {
+                            id: taken[*ji].0,
+                            committed: &sessions[(taken[*ji].0 - 1) as usize].core.committed,
+                            draft: path.as_deref().unwrap_or(&taken[*ji].1),
                             mode: cfg.mode,
                         })
                         .collect();
                     let vs =
                         backend.verify_batch(&reqs, cfg.temperature, cfg.top_p, &mut batch_rng)?;
                     drop(reqs);
-                    for ((id, tokens, _rows), v) in taken.into_iter().zip(vs) {
-                        total_tokens += tokens.len() + 1;
-                        verdicts.push((id, tokens, v));
+                    total_tokens += rows_plan
+                        .iter()
+                        .map(|(ji, _, path)| {
+                            path.as_ref().map_or(taken[*ji].1.len(), Vec::len) + 1
+                        })
+                        .sum::<usize>();
+                    // reduce each member's rows to one verdict: deepest
+                    // accepted prefix (max tau) wins, ties break toward
+                    // the SMALLEST row index — a drift-free tree round
+                    // commits exactly the linear chain
+                    let mut row_iter = rows_plan.into_iter().zip(vs).peekable();
+                    for (ji, (id, tokens, _rows, parents)) in taken.into_iter().enumerate() {
+                        let mut winner: Option<(Option<u8>, Option<Vec<i32>>, BackendVerdict)> =
+                            None;
+                        while row_iter.peek().map_or(false, |((rj, _, _), _)| *rj == ji) {
+                            let ((_, leaf, path), v) = row_iter.next().expect("peeked row");
+                            if winner.as_ref().map_or(true, |w| v.tau > w.2.tau) {
+                                winner = Some((leaf, path, v));
+                            }
+                        }
+                        let Some((leaf, path, v)) = winner else {
+                            continue; // unreachable: every member planned >= 1 row
+                        };
+                        let applied = path.unwrap_or(tokens);
+                        verdicts.push((id, applied, v, leaf, !parents.is_empty()));
                     }
                 } else {
-                    for (id, tokens, rows) in taken {
+                    for (id, tokens, rows, _parents) in taken {
                         let s = &mut sessions[(id - 1) as usize];
                         let v = backend.verify_block(
                             id,
@@ -648,7 +837,8 @@ pub fn serve_with(
                             &mut s.rng,
                         )?;
                         total_tokens += tokens.len() + 1;
-                        verdicts.push((id, tokens, v));
+                        report.verify_rows += 1;
+                        verdicts.push((id, tokens, v, None, false));
                     }
                 }
                 let t_batch = cloud_profile.t_base_ms
@@ -660,7 +850,7 @@ pub fn serve_with(
                 // with the serving metrics
                 report.latency.verify_ms.record(t_batch);
 
-                for (id, tokens, v) in verdicts {
+                for (id, tokens, v, leaf, was_tree) in verdicts {
                     let s = &mut sessions[(id - 1) as usize];
                     let chan = s.channel.sample(now);
                     let vmsg = VerifyMsg {
@@ -669,6 +859,7 @@ pub fn serve_with(
                         tau: v.tau as u8,
                         correction: v.correction,
                         eos: v.eos,
+                        leaf,
                     };
                     let t_resp = now + t_batch + chan.prop_ms + chan.down_ms(vmsg.air_bytes());
                     let wait_ms = (now - s.arrived_ms).max(0.0);
@@ -688,6 +879,14 @@ pub fn serve_with(
                     }
                     if !tokens.is_empty() {
                         s.policy.observe(v.tau, tokens.len());
+                    }
+                    if was_tree {
+                        report.tree_rounds += 1;
+                        // per-row bookkeeping left the LAST row's
+                        // acceptance as the session's length; re-assert
+                        // the winning path's before reading capacity
+                        // (`VerifierCore::close_window` does the same)
+                        backend.note_committed(id, s.core.committed.len() + v.tau + 1);
                     }
                     let out_of_capacity = backend.remaining_capacity(id) <= cfg.capacity_floor;
                     let finished =
@@ -744,7 +943,7 @@ pub fn serve_with(
                                 cloud_profile,
                             )?;
                         }
-                        s.pending = Some((sp.tokens, sp.chosen_probs, sp.prob_rows));
+                        s.pending = Some((sp.tokens, sp.chosen_probs, sp.prob_rows, vec![]));
                         push(&mut heap, ready, Event::RequestArrives(id), &mut seq);
                     } else {
                         // broken prefix (or no speculation): retract and
@@ -1101,6 +1300,128 @@ mod tests {
             assert_eq!(fleet.sessions_redirected, fleet2.sessions_redirected);
             assert_eq!(fleet.wall_ms, fleet2.wall_ms);
         }
+    }
+
+    /// Hetero twin (wire v8): an UNMETERED strong profile with
+    /// branching 1 must reduce to the unprofiled v7 path exactly —
+    /// same committed bytes, same counters, same virtual wall time —
+    /// and the run must tally the session tiers.
+    #[test]
+    fn hetero_profiled_linear_matches_unprofiled() {
+        use crate::device::{ComputeTier, DeviceProfile};
+        let run = |profiles: Option<Vec<DeviceProfile>>| {
+            let mut backend = SyntheticTarget::new(11).with_version("evolved", 0.3);
+            backend.deploy("evolved").unwrap();
+            let mut make = |_id: u32| -> Result<Box<dyn DraftSource>> {
+                Ok(Box::new(SyntheticDraft::new(11)))
+            };
+            let net = NetworkProfile::new(NetworkKind::FourG);
+            let cfg = ServeConfig {
+                users: 4,
+                max_new: 16,
+                fixed_k: Some(4),
+                seed: 5,
+                profiles,
+                ..Default::default()
+            };
+            serve_with(
+                &mut backend,
+                &mut make,
+                &prompts(4),
+                &JETSON_ORIN,
+                &A800_70B,
+                &net,
+                &cfg,
+            )
+            .unwrap()
+        };
+        let plain = run(None);
+        // the strong representative IS the fleet default device, so the
+        // profiled run's virtual draft costs match too
+        let strong = DeviceProfile::of(ComputeTier::Strong.representative());
+        let profiled = run(Some(vec![strong]));
+        assert_eq!(plain.per_session_committed, profiled.per_session_committed);
+        assert_eq!(plain.per_session, profiled.per_session);
+        assert_eq!(plain.wall_ms, profiled.wall_ms);
+        assert_eq!(plain.verify_rows, profiled.verify_rows);
+        assert_eq!(profiled.tree_rounds, 0, "branching 1 never drafts a tree");
+        assert_eq!(plain.sessions_by_tier, [0, 0, 0]);
+        assert_eq!(profiled.sessions_by_tier, [0, 0, 4]);
+    }
+
+    /// Hetero twin (wire v8): on a drifted target, a heterogeneous mix
+    /// with branching 4 hedges bucket-aligned drift breaks and strictly
+    /// increases accepted tokens per stacked dispatch over the same
+    /// population drafting linearly — the sim side of the hetero bench
+    /// gate. Weak sessions stay linear (tier caps), so rows fan out
+    /// only where a tier can afford them.
+    #[test]
+    fn hetero_tree_twin_gains_accepted_per_dispatch() {
+        use crate::device::{ComputeTier, DeviceProfile};
+        let mix = || {
+            Some(vec![
+                DeviceProfile::of(ComputeTier::Weak.representative()),
+                DeviceProfile::of(ComputeTier::Mid.representative()),
+                DeviceProfile::of(ComputeTier::Strong.representative()),
+                DeviceProfile::of(ComputeTier::Strong.representative()),
+            ])
+        };
+        let run = |branching: usize| {
+            let mut backend = SyntheticTarget::new(11).with_version("evolved", 0.3);
+            backend.deploy("evolved").unwrap();
+            let mut make = |_id: u32| -> Result<Box<dyn DraftSource>> {
+                Ok(Box::new(SyntheticDraft::new(11)))
+            };
+            let net = NetworkProfile::new(NetworkKind::FourG);
+            let cfg = ServeConfig {
+                users: 12,
+                max_new: 64,
+                fixed_k: Some(4),
+                seed: 5,
+                profiles: mix(),
+                branching,
+                ..Default::default()
+            };
+            serve_with(
+                &mut backend,
+                &mut make,
+                &prompts(12),
+                &JETSON_ORIN,
+                &A800_70B,
+                &net,
+                &cfg,
+            )
+            .unwrap()
+        };
+        let lin = run(1);
+        let tre = run(4);
+        assert_eq!(lin.completed, 12);
+        assert_eq!(tre.completed, 12);
+        assert_eq!(tre.sessions_by_tier, [3, 3, 6]);
+        assert!(tre.tree_rounds > 0, "mid/strong sessions must draft trees");
+        assert!(
+            tre.verify_rows > tre.rounds,
+            "tree rounds must fan out extra rows ({} rows / {} rounds)",
+            tre.verify_rows,
+            tre.rounds
+        );
+        assert_eq!(lin.verify_rows, lin.rounds);
+        assert_eq!(lin.tree_rounds, 0);
+        let acc = |r: &ServeReport| r.per_session.iter().map(|o| o.accepted).sum::<usize>();
+        let (la, ta) = (acc(&lin), acc(&tre));
+        assert!(
+            ta * lin.stacked_dispatches > la * tre.stacked_dispatches,
+            "tree speculation must raise accepted tokens per stacked dispatch: \
+             {ta}/{} !> {la}/{}",
+            tre.stacked_dispatches,
+            lin.stacked_dispatches
+        );
+        // bit-identical replay of the tree schedule
+        let tre2 = run(4);
+        assert_eq!(tre.per_session, tre2.per_session);
+        assert_eq!(tre.per_session_committed, tre2.per_session_committed);
+        assert_eq!(tre.verify_rows, tre2.verify_rows);
+        assert_eq!(tre.wall_ms, tre2.wall_ms);
     }
 
     #[test]

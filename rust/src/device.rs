@@ -1,0 +1,322 @@
+//! Heterogeneous edge device layer (wire v8, ROADMAP item 4).
+//!
+//! Everything before this module assumed ONE edge archetype per run.
+//! Here the fleet becomes a population of unlike devices: each session
+//! carries a [`DeviceProfile`] — compute tier, channel class, energy
+//! budget — on its `Open`, and the resource-aware policy extension
+//! ([`crate::coordinator::AdaptivePolicy::select_plan`]) turns that
+//! profile plus the measured channel into a joint speculation plan
+//! ([`SpecPlan`]): stride K, pipeline depth, and draft BRANCHING factor
+//! for tree speculation.
+//!
+//! The tier → plan-cap table is deliberately coarse (three tiers, small
+//! caps) and MONOTONE: a weaker tier never receives a larger plan along
+//! any axis, and a draining energy budget only ever steps a session
+//! down the same table. That monotonicity is what keeps the policy
+//! deterministic enough to pin live == sim byte-identically: branching
+//! is a pure function of (tier, remaining-energy fraction, config cap)
+//! and never of the noisy channel sample.
+//!
+//! Grounded in PAPERS.md: "Efficient LLM Inference over Heterogeneous
+//! Edge Networks with Speculative Decoding" (per-device joint parameter
+//! optimization) and "Collaborative Large Language Model Inference via
+//! Resource-Aware Parallel Speculative Decoding" (resource-aware
+//! branching drafts).
+
+use crate::devices::{EdgeDevice, IPHONE_15_PRO_MAX, JETSON_ORIN, RASPBERRY_PI_5};
+use crate::protocol::frame::DeviceProfileMsg;
+use crate::util::rng::SplitMix64;
+
+/// Branching-factor ceiling the wire and the verifier plan for
+/// (`DraftMsg::tree` node indices are u8 and the comb expansion keeps
+/// every alternate a single-token leaf).
+pub const MAX_BRANCHING: usize = 4;
+
+/// Coarse compute class of an edge device — the axis the plan-cap table
+/// is keyed on. Derived from the device's measured draft speed so the
+/// tier is a property of the hardware, not a config knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ComputeTier {
+    /// CPU-class drafting (Raspberry Pi 5: ~7 tok/s). Speculation barely
+    /// pays; keep strides short and never branch.
+    Weak,
+    /// Phone-NPU-class drafting (iPhone / Snapdragon: ~80–95 tok/s).
+    Mid,
+    /// Embedded-GPU-class drafting (Jetson Orin: ~118 tok/s). Full
+    /// strides, deep pipelines, widest trees.
+    Strong,
+}
+
+impl ComputeTier {
+    /// Classify a device by its marginal draft latency.
+    pub fn of(device: &EdgeDevice) -> ComputeTier {
+        if device.draft_ms_per_token < 10.0 {
+            ComputeTier::Strong
+        } else if device.draft_ms_per_token < 40.0 {
+            ComputeTier::Mid
+        } else {
+            ComputeTier::Weak
+        }
+    }
+
+    /// Wire code ([`DeviceProfileMsg::compute_tier`]).
+    pub fn code(self) -> u8 {
+        match self {
+            ComputeTier::Weak => 0,
+            ComputeTier::Mid => 1,
+            ComputeTier::Strong => 2,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<ComputeTier> {
+        Some(match code {
+            0 => ComputeTier::Weak,
+            1 => ComputeTier::Mid,
+            2 => ComputeTier::Strong,
+            _ => return None,
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ComputeTier::Weak => "weak",
+            ComputeTier::Mid => "mid",
+            ComputeTier::Strong => "strong",
+        }
+    }
+
+    pub fn all() -> [ComputeTier; 3] {
+        [ComputeTier::Weak, ComputeTier::Mid, ComputeTier::Strong]
+    }
+
+    /// The next weaker tier (saturating) — the step a draining energy
+    /// budget takes down the cap table.
+    pub fn weaker(self) -> ComputeTier {
+        match self {
+            ComputeTier::Strong => ComputeTier::Mid,
+            _ => ComputeTier::Weak,
+        }
+    }
+
+    /// Per-tier plan ceilings. Componentwise monotone in the tier — the
+    /// invariant [`AdaptivePolicy::select_plan`]'s monotonicity proof
+    /// (and its property test) rests on.
+    ///
+    /// [`AdaptivePolicy::select_plan`]: crate::coordinator::AdaptivePolicy::select_plan
+    pub fn plan_caps(self) -> SpecPlan {
+        match self {
+            ComputeTier::Weak => SpecPlan { k: 2, depth: 1, branching: 1 },
+            ComputeTier::Mid => SpecPlan { k: 4, depth: 2, branching: 2 },
+            ComputeTier::Strong => SpecPlan { k: 8, depth: 4, branching: MAX_BRANCHING },
+        }
+    }
+
+    /// Representative hardware for the tier — what the load harness and
+    /// the device-mix CLI instantiate per simulated session.
+    pub fn representative(self) -> &'static EdgeDevice {
+        match self {
+            ComputeTier::Weak => &RASPBERRY_PI_5,
+            ComputeTier::Mid => &IPHONE_15_PRO_MAX,
+            ComputeTier::Strong => &JETSON_ORIN,
+        }
+    }
+}
+
+/// A joint speculation plan: what one session should do THIS round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecPlan {
+    /// Draft stride (main-chain depth), 1..=8.
+    pub k: usize,
+    /// Pipelined rounds in flight (1 = sequential).
+    pub depth: usize,
+    /// Draft tree branching factor (1 = linear chain).
+    pub branching: usize,
+}
+
+impl SpecPlan {
+    /// Componentwise minimum — how caps compose.
+    pub fn min(self, other: SpecPlan) -> SpecPlan {
+        SpecPlan {
+            k: self.k.min(other.k),
+            depth: self.depth.min(other.depth),
+            branching: self.branching.min(other.branching),
+        }
+    }
+
+    /// `self` never exceeds `other` on any axis.
+    pub fn fits_within(self, other: SpecPlan) -> bool {
+        self.k <= other.k && self.depth <= other.depth && self.branching <= other.branching
+    }
+}
+
+/// Who a session's edge is: the wire-v8 `Open` payload's local form.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceProfile {
+    pub device: &'static EdgeDevice,
+    pub tier: ComputeTier,
+    /// Channel class index into [`crate::channel::NetworkKind::all`].
+    pub channel_class: u8,
+    /// Session energy budget, joules (0 = unmetered).
+    pub energy_budget_j: f64,
+}
+
+impl DeviceProfile {
+    pub fn new(device: &'static EdgeDevice, channel_class: u8, energy_budget_j: f64) -> DeviceProfile {
+        DeviceProfile {
+            device,
+            tier: ComputeTier::of(device),
+            channel_class,
+            energy_budget_j,
+        }
+    }
+
+    /// Unmetered profile on the default channel — the pre-v8 archetype.
+    pub fn of(device: &'static EdgeDevice) -> DeviceProfile {
+        DeviceProfile::new(device, 0, 0.0)
+    }
+
+    /// Wire form, carrying the REMAINING budget (what the cloud can act
+    /// on at open time).
+    pub fn to_wire(&self, remaining_j: f64) -> DeviceProfileMsg {
+        DeviceProfileMsg {
+            compute_tier: self.tier.code(),
+            channel_class: self.channel_class,
+            energy_mj: (remaining_j.max(0.0) * 1e3).round() as u64,
+        }
+    }
+}
+
+/// Tier mix for a heterogeneous fleet — the device axis twin of
+/// `load::population::ChannelMix`. Weights order: [weak, mid, strong].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceMix {
+    pub weights: [f64; 3],
+}
+
+impl DeviceMix {
+    /// Single-archetype mix (everyone strong) — the pre-v8 behavior.
+    pub const UNIFORM_STRONG: DeviceMix = DeviceMix { weights: [0.0, 0.0, 1.0] };
+
+    /// Evaluation mix: a quarter CPU-class stragglers, half phones, a
+    /// quarter embedded GPUs — the hetero bench/test operating point.
+    pub const EVAL: DeviceMix = DeviceMix { weights: [0.25, 0.5, 0.25] };
+
+    pub fn new(weak: f64, mid: f64, strong: f64) -> DeviceMix {
+        assert!(weak >= 0.0 && mid >= 0.0 && strong >= 0.0, "negative mix weight");
+        assert!(weak + mid + strong > 0.0, "empty device mix");
+        DeviceMix { weights: [weak, mid, strong] }
+    }
+
+    /// Parse `"0.25,0.5,0.25"` (weak,mid,strong) or the aliases
+    /// `"eval"` / `"strong"`.
+    pub fn parse(s: &str) -> Result<DeviceMix, String> {
+        match s {
+            "eval" => return Ok(DeviceMix::EVAL),
+            "strong" => return Ok(DeviceMix::UNIFORM_STRONG),
+            _ => {}
+        }
+        let parts: Vec<f64> = s
+            .split(',')
+            .map(|p| p.trim().parse::<f64>().map_err(|e| format!("device mix `{s}`: {e}")))
+            .collect::<Result<_, _>>()?;
+        if parts.len() != 3 {
+            return Err(format!("device mix `{s}`: want 3 weights (weak,mid,strong)"));
+        }
+        if parts.iter().any(|&w| w < 0.0) || parts.iter().sum::<f64>() <= 0.0 {
+            return Err(format!("device mix `{s}`: weights must be >= 0 and sum > 0"));
+        }
+        Ok(DeviceMix { weights: [parts[0], parts[1], parts[2]] })
+    }
+
+    /// Draw a tier (one rng draw, mirroring `ChannelMix::pick`).
+    pub fn pick(&self, rng: &mut SplitMix64) -> ComputeTier {
+        let total: f64 = self.weights.iter().sum();
+        let mut x = rng.next_f64() * total;
+        for (i, &w) in self.weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return ComputeTier::from_code(i as u8).unwrap();
+            }
+        }
+        ComputeTier::Strong
+    }
+
+    pub fn describe(&self) -> String {
+        let total: f64 = self.weights.iter().sum();
+        format!(
+            "weak {:.0}% / mid {:.0}% / strong {:.0}%",
+            self.weights[0] / total * 100.0,
+            self.weights[1] / total * 100.0,
+            self.weights[2] / total * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::SNAPDRAGON_8G3;
+
+    #[test]
+    fn tiers_classify_the_table5_devices() {
+        assert_eq!(ComputeTier::of(&RASPBERRY_PI_5), ComputeTier::Weak);
+        assert_eq!(ComputeTier::of(&IPHONE_15_PRO_MAX), ComputeTier::Mid);
+        assert_eq!(ComputeTier::of(&SNAPDRAGON_8G3), ComputeTier::Mid);
+        assert_eq!(ComputeTier::of(&JETSON_ORIN), ComputeTier::Strong);
+        for t in ComputeTier::all() {
+            assert_eq!(ComputeTier::from_code(t.code()), Some(t));
+            assert_eq!(ComputeTier::of(t.representative()), t);
+        }
+        assert_eq!(ComputeTier::from_code(3), None);
+    }
+
+    #[test]
+    fn plan_caps_are_monotone_in_tier() {
+        let [w, m, s] = ComputeTier::all().map(|t| t.plan_caps());
+        assert!(w.fits_within(m) && m.fits_within(s));
+        assert_eq!(w.branching, 1, "weak tier never branches");
+        assert!(s.branching <= MAX_BRANCHING);
+        // energy downgrade walks the same table and terminates at Weak
+        assert_eq!(ComputeTier::Strong.weaker(), ComputeTier::Mid);
+        assert_eq!(ComputeTier::Mid.weaker(), ComputeTier::Weak);
+        assert_eq!(ComputeTier::Weak.weaker(), ComputeTier::Weak);
+    }
+
+    #[test]
+    fn profile_round_trips_to_wire() {
+        let p = DeviceProfile::new(&IPHONE_15_PRO_MAX, 1, 120.0);
+        let w = p.to_wire(84.5);
+        assert_eq!(w.compute_tier, ComputeTier::Mid.code());
+        assert_eq!(w.channel_class, 1);
+        assert_eq!(w.energy_mj, 84_500);
+        // the default archetype is unmetered on channel class 0
+        let d = DeviceProfile::of(&JETSON_ORIN);
+        assert_eq!(d.to_wire(0.0).energy_mj, 0);
+        assert_eq!(d.tier, ComputeTier::Strong);
+    }
+
+    #[test]
+    fn device_mix_parses_and_picks_deterministically() {
+        assert_eq!(DeviceMix::parse("eval").unwrap(), DeviceMix::EVAL);
+        assert_eq!(DeviceMix::parse("strong").unwrap(), DeviceMix::UNIFORM_STRONG);
+        let m = DeviceMix::parse("1,0,0").unwrap();
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..32 {
+            assert_eq!(m.pick(&mut rng), ComputeTier::Weak);
+        }
+        assert!(DeviceMix::parse("0.5,0.5").is_err());
+        assert!(DeviceMix::parse("-1,1,1").is_err());
+        assert!(DeviceMix::parse("0,0,0").is_err());
+        // same seed, same tier stream; all three tiers appear under EVAL
+        let draws = |seed: u64| -> Vec<ComputeTier> {
+            let mut rng = SplitMix64::new(seed);
+            (0..64).map(|_| DeviceMix::EVAL.pick(&mut rng)).collect()
+        };
+        assert_eq!(draws(42), draws(42));
+        let d = draws(42);
+        for t in ComputeTier::all() {
+            assert!(d.contains(&t), "{t:?} missing from EVAL draws");
+        }
+        assert!(DeviceMix::EVAL.describe().contains("50%"));
+    }
+}

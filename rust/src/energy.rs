@@ -89,6 +89,73 @@ impl EnergyMeter {
     }
 }
 
+/// Session energy budget (wire v8 device layer, ROADMAP item 4).
+///
+/// Tracks how much of an edge session's energy allowance remains so the
+/// resource-aware policy can step speculation DOWN as the battery
+/// drains. Charging is a pure function of (device, nodes drafted) —
+/// deliberately independent of channel noise — so the live edge and the
+/// scheduler sim deplete budgets in lockstep and committed sequences
+/// stay byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyBudget {
+    /// Total allowance in joules; 0 = unmetered (never depletes).
+    budget_j: f64,
+    spent_j: f64,
+}
+
+impl EnergyBudget {
+    pub fn new(budget_j: f64) -> EnergyBudget {
+        assert!(budget_j >= 0.0, "negative energy budget");
+        EnergyBudget { budget_j, spent_j: 0.0 }
+    }
+
+    /// No metering: `remaining_frac` pins at 1.0 forever.
+    pub fn unmetered() -> EnergyBudget {
+        EnergyBudget::new(0.0)
+    }
+
+    pub fn is_metered(&self) -> bool {
+        self.budget_j > 0.0
+    }
+
+    /// Draft-compute cost of proposing `n_nodes` tree nodes on `device`
+    /// (each alternate leaf costs one extra drafted token).
+    pub fn draft_cost_j(device: &EdgeDevice, n_nodes: usize) -> f64 {
+        device.compute_watts * n_nodes as f64 * device.draft_ms_per_token / 1e3
+    }
+
+    /// Charge one draft proposal of `n_nodes` nodes.
+    pub fn charge_draft(&mut self, device: &EdgeDevice, n_nodes: usize) {
+        self.charge_j(EnergyBudget::draft_cost_j(device, n_nodes));
+    }
+
+    /// Charge an arbitrary number of joules (e.g. radio burst share).
+    pub fn charge_j(&mut self, j: f64) {
+        self.spent_j += j.max(0.0);
+    }
+
+    pub fn remaining_j(&self) -> f64 {
+        if self.budget_j <= 0.0 {
+            return 0.0;
+        }
+        (self.budget_j - self.spent_j).max(0.0)
+    }
+
+    /// Fraction of the budget left, in [0, 1]; 1.0 when unmetered. This
+    /// is the ONLY energy signal the speculation policy reads.
+    pub fn remaining_frac(&self) -> f64 {
+        if self.budget_j <= 0.0 {
+            return 1.0;
+        }
+        (self.remaining_j() / self.budget_j).clamp(0.0, 1.0)
+    }
+
+    pub fn depleted(&self) -> bool {
+        self.is_metered() && self.remaining_j() <= 0.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +208,50 @@ mod tests {
         assert!(s.radio_tail_j > 5.0 * b.radio_tail_j, "{s:?} vs {b:?}");
         // same active energy (same bytes worth of airtime)
         assert!((s.radio_active_j - b.radio_active_j).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_depletes_monotonically_and_unmetered_never_does() {
+        let dev = &SNAPDRAGON_8G3;
+        let per_chain = EnergyBudget::draft_cost_j(dev, 4);
+        let mut b = EnergyBudget::new(10.0 * per_chain);
+        assert!(b.is_metered() && !b.depleted());
+        let mut last = b.remaining_frac();
+        assert!((last - 1.0).abs() < 1e-12);
+        for i in 1..=10 {
+            b.charge_draft(dev, 4);
+            let f = b.remaining_frac();
+            assert!(f < last, "frac must fall each draft (round {i})");
+            assert!((f - (1.0 - i as f64 / 10.0)).abs() < 1e-9);
+            last = f;
+        }
+        assert!(b.depleted());
+        assert_eq!(b.remaining_j(), 0.0);
+        // over-charging clamps, never goes negative
+        b.charge_draft(dev, 4);
+        assert_eq!(b.remaining_frac(), 0.0);
+
+        let mut u = EnergyBudget::unmetered();
+        u.charge_draft(dev, 1_000_000);
+        assert!(!u.depleted());
+        assert_eq!(u.remaining_frac(), 1.0);
+    }
+
+    #[test]
+    fn tree_drafts_charge_per_node_not_per_chain() {
+        // a comb tree with k=4 chain + 3 alternates costs exactly 7 tokens
+        // of draft compute: alternates are not free.
+        let dev = &SNAPDRAGON_8G3;
+        let chain = EnergyBudget::draft_cost_j(dev, 4);
+        let tree = EnergyBudget::draft_cost_j(dev, 7);
+        assert!((tree - chain * 7.0 / 4.0).abs() < 1e-12);
+        let mut b = EnergyBudget::new(100.0);
+        b.charge_draft(dev, 7);
+        assert!((b.remaining_j() - (100.0 - tree)).abs() < 1e-12);
+        // charging is device-scaled: same nodes on a weaker device cost
+        // more joules (slower draft, comparable power)
+        let pi = crate::devices::RASPBERRY_PI_5;
+        assert!(EnergyBudget::draft_cost_j(&pi, 4) > chain);
     }
 
     #[test]

@@ -30,6 +30,7 @@
 pub mod autoscale;
 pub mod channel;
 pub mod coordinator;
+pub mod device;
 pub mod devices;
 pub mod energy;
 pub mod load;

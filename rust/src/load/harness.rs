@@ -54,7 +54,9 @@ use crate::autoscale::{
     adaptive_retry_after_ms, AutoscaleAction, AutoscalePolicy, ReplicaSnapshot, CONTROL_SESSION,
 };
 use crate::channel::{ChannelState, NetworkProfile};
+use crate::device::ComputeTier;
 use crate::devices::{A800_70B, JETSON_ORIN};
+use crate::energy::EnergyBudget;
 use crate::metrics::ServingMetrics;
 use crate::obs::{LogHistogram, SpanKind, Trace};
 use crate::protocol::{bits_per_token, prompt_air_bytes, WireFormat, O_HEADER_BYTES};
@@ -138,6 +140,10 @@ struct Sess {
     rounds: u16,
     replica: u16,
     class: u8,
+    /// Compute-tier code ([`ComputeTier::code`]); drawn from the device
+    /// mix on hetero runs, pinned to Strong (whose representative is the
+    /// fleet's homogeneous JETSON_ORIN) otherwise.
+    tier: u8,
     busy_attempts: u8,
     /// Rebalance redirects consumed inside the current redirect window
     /// (autoscale only; the per-session budget gate).
@@ -224,6 +230,15 @@ pub struct LoadReport {
     pub retry_after_max_ms: u32,
     /// Autoscale-twin summary (`None` without [`LoadConfig::autoscale`]).
     pub autoscale: Option<AutoscaleReport>,
+    /// Time-to-first-token per compute tier (weak/mid/strong), populated
+    /// only on hetero runs ([`LoadConfig::device_mix`]).
+    pub ttft_by_tier: [LogHistogram; 3],
+    /// Draft-compute energy spent per tier (J), priced by
+    /// [`EnergyBudget::draft_cost_j`] at the tier representative's
+    /// speed/power over the tier-capped tree node count. Hetero runs only.
+    pub energy_j_by_tier: [f64; 3],
+    /// Tokens committed by sessions of each tier. Hetero runs only.
+    pub tokens_by_tier: [usize; 3],
 }
 
 impl LoadReport {
@@ -231,6 +246,19 @@ impl LoadReport {
     /// the paper's eq. (8) accounting cares about.
     pub fn air_ms_per_token(&self) -> f64 {
         self.air_ms / self.metrics.tokens_committed.max(1) as f64
+    }
+
+    /// Whether this run carried a heterogeneous device population
+    /// (some session was admitted with a drawn compute tier).
+    pub fn is_hetero(&self) -> bool {
+        self.metrics.sessions_by_device_tier.iter().sum::<usize>() > 0
+    }
+
+    /// Accepted draft tokens per stacked `[B, K]` dispatch — the
+    /// efficiency ratio the hetero bench cell gates (tree speculation
+    /// must not lose to linear chains on the same dispatch budget).
+    pub fn accepted_per_dispatch(&self) -> f64 {
+        self.metrics.accepted as f64 / self.metrics.stacked_dispatches.max(1) as f64
     }
 
     /// Order-sensitive FNV-1a fold over every counter and the latency
@@ -293,6 +321,20 @@ impl LoadReport {
         ] {
             mix(q.to_bits());
         }
+        // hetero-only extension: homogeneous runs skip this block
+        // entirely, so their digests are byte-identical to the
+        // pre-device-layer harness
+        if self.is_hetero() {
+            mix(m.verify_rows as u64);
+            mix(m.tree_rounds as u64);
+            for i in 0..3 {
+                mix(m.sessions_by_device_tier[i] as u64);
+                mix(self.tokens_by_tier[i] as u64);
+                mix(self.energy_j_by_tier[i].to_bits());
+                mix(self.ttft_by_tier[i].quantile(0.5).to_bits());
+                mix(self.ttft_by_tier[i].quantile(0.99).to_bits());
+            }
+        }
         h
     }
 
@@ -342,6 +384,49 @@ impl LoadReport {
             ),
             ("ttft_ms", q(&self.ttft_ms)),
             ("ms_per_token", q(&self.ms_per_token)),
+            (
+                "tiers",
+                if !self.is_hetero() {
+                    Json::Null
+                } else {
+                    Json::Arr(
+                        (0..3)
+                            .map(|i| {
+                                let tokens = self.tokens_by_tier[i];
+                                Json::obj(vec![
+                                    (
+                                        "tier",
+                                        Json::Str(["weak", "mid", "strong"][i].into()),
+                                    ),
+                                    (
+                                        "sessions",
+                                        Json::Num(
+                                            self.metrics.sessions_by_device_tier[i] as f64,
+                                        ),
+                                    ),
+                                    ("tokens", Json::Num(tokens as f64)),
+                                    ("ttft_ms", q(&self.ttft_by_tier[i])),
+                                    (
+                                        "draft_energy_j",
+                                        Json::Num(self.energy_j_by_tier[i]),
+                                    ),
+                                    (
+                                        "energy_mj_per_token",
+                                        Json::Num(
+                                            self.energy_j_by_tier[i] * 1e3
+                                                / tokens.max(1) as f64,
+                                        ),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    )
+                },
+            ),
+            (
+                "accepted_per_dispatch",
+                Json::Num(self.accepted_per_dispatch()),
+            ),
             ("digest", Json::Str(format!("{:016x}", self.digest()))),
             ("metrics", self.metrics.to_json()),
         ])
@@ -378,6 +463,25 @@ impl LoadReport {
                 "\n\x20 busy hints      retry_after {}–{} ms",
                 self.retry_after_min_ms, self.retry_after_max_ms
             ));
+        }
+        if self.is_hetero() {
+            s.push_str(&format!(
+                "\n\x20 tree            {:.2} accepted/dispatch, {} tree rounds, {} rows",
+                self.accepted_per_dispatch(),
+                self.metrics.tree_rounds,
+                self.metrics.verify_rows,
+            ));
+            for (i, name) in ["weak", "mid", "strong"].iter().enumerate() {
+                s.push_str(&format!(
+                    "\n\x20 tier {:<6}     {} sessions, ttft p50 {:.0} ms, \
+                     {:.1} J drafted ({:.2} mJ/token)",
+                    name,
+                    self.metrics.sessions_by_device_tier[i],
+                    self.ttft_by_tier[i].quantile(0.5),
+                    self.energy_j_by_tier[i],
+                    self.energy_j_by_tier[i] * 1e3 / self.tokens_by_tier[i].max(1) as f64,
+                ));
+            }
         }
         if let Some(a) = &self.autoscale {
             s.push_str(&format!(
@@ -475,11 +579,53 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
     let verdict_bytes = O_HEADER_BYTES + 12;
     let per_req_verify_ms = A800_70B.delta_per_token_ms * (bucket_k(cfg.fixed_k) + 1) as f64;
 
+    // Heterogeneous-population twin (wire v8): sessions draw a compute
+    // tier from the mix and draft bucket-aligned comb trees capped by
+    // their tier's plan. The per-tier tables below price drafting at
+    // the tier REPRESENTATIVE's speed/power — for the homogeneous fleet
+    // (tier pinned to Strong, branching 1) they reproduce the scalar
+    // `draft_ms`/`draft_bytes` bit-for-bit, because Strong's
+    // representative IS the fleet's JETSON_ORIN.
+    let hetero = cfg.device_mix.is_some();
+    let branching = if hetero {
+        cfg.branching.clamp(1, crate::device::MAX_BRANCHING)
+    } else {
+        1
+    };
+    // chain positions whose path length shares the chain's bucket class
+    // — the only places the comb hangs alternates (backend::propose_tree)
+    let aligned = (1..=cfg.fixed_k)
+        .filter(|&p| bucket_k(p) == bucket_k(cfg.fixed_k))
+        .count();
+    let mut tier_branch = [1usize; 3];
+    let mut tier_rows = [1usize; 3];
+    let mut tier_draft_ms = [draft_ms; 3];
+    let mut tier_draft_bytes = [draft_bytes; 3];
+    let mut tier_draft_j = [0.0f64; 3];
+    for t in [ComputeTier::Weak, ComputeTier::Mid, ComputeTier::Strong] {
+        let i = t.code() as usize;
+        let b = t.plan_caps().branching.min(branching).max(1);
+        let rep = t.representative();
+        let nodes = cfg.fixed_k + aligned * (b - 1);
+        tier_branch[i] = b;
+        tier_rows[i] = 1 + aligned * (b - 1);
+        tier_draft_ms[i] = rep.round_overhead_ms + nodes as f64 * rep.draft_ms_per_token;
+        // tree drafts add the zero-length-spec marker (2 bytes) plus one
+        // parent byte per node to the linear payload (protocol::frame)
+        tier_draft_bytes[i] = O_HEADER_BYTES
+            + ((nodes as f64 * bits_per_token(WireFormat::Compact)) / 8.0).ceil() as usize
+            + if b > 1 { 2 + nodes } else { 0 };
+        tier_draft_j[i] = EnergyBudget::draft_cost_j(rep, nodes);
+    }
+
     let mut sessions: Vec<Sess> = Vec::with_capacity(cfg.sessions);
     let mut replicas: Vec<Replica> = (0..cfg.replicas).map(|_| Replica::default()).collect();
     let mut metrics = ServingMetrics::default();
     let mut ttft_ms = LogHistogram::default();
     let mut ms_per_token = LogHistogram::default();
+    let mut ttft_by_tier: [LogHistogram; 3] = std::array::from_fn(|_| LogHistogram::default());
+    let mut energy_j_by_tier = [0.0f64; 3];
+    let mut tokens_by_tier = [0usize; 3];
     let mut heap: BinaryHeap<Reverse<Sched>> = BinaryHeap::new();
     let mut seq = 0u64;
     let (mut live, mut peak_live, mut peak_backlog, mut handoffs) = (0usize, 0usize, 0usize, 0usize);
@@ -526,6 +672,13 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                     bounded_pareto(&mut srng, cfg.prompt_xm, cfg.prompt_alpha, cfg.prompt_cap)
                         .round() as u16;
                 let accept = cfg.draw_accept(&mut srng) as f32;
+                // the tier draw is skipped entirely on homogeneous
+                // runs, so every pre-device-layer per-session stream
+                // stays byte-identical
+                let tier = match &cfg.device_mix {
+                    Some(mix) => mix.pick(&mut srng).code(),
+                    None => ComputeTier::Strong.code(),
+                };
                 // same draw position either way; under autoscale it
                 // lands among the currently-ACTIVE replicas only
                 let replica = if cfg.autoscale.is_some() {
@@ -555,6 +708,7 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                     rounds: 0,
                     replica,
                     class,
+                    tier,
                     busy_attempts: 0,
                     redirects_used: 0,
                     redirect_epoch: 0,
@@ -562,17 +716,22 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                     done: false,
                 };
                 metrics.sessions_opened += 1;
+                if hetero {
+                    metrics.sessions_by_device_tier[tier as usize] += 1;
+                    energy_j_by_tier[tier as usize] += tier_draft_j[tier as usize];
+                }
                 live += 1;
                 peak_live = peak_live.max(live);
                 // first uplink carries the prompt alongside round 0's draft
+                let t_draft = tier_draft_ms[tier as usize];
                 let ch = chan(&profiles, &mut s);
-                let bytes = prompt_air_bytes(prompt_len as usize) + draft_bytes;
+                let bytes = prompt_air_bytes(prompt_len as usize) + tier_draft_bytes[tier as usize];
                 let up = ch.up_ms(bytes);
                 metrics.bytes_up += bytes;
                 air_ms += up;
-                span(trace, t, sid, 0, SpanKind::Draft, draft_ms, cfg.fixed_k as u32, 0);
+                span(trace, t, sid, 0, SpanKind::Draft, t_draft, cfg.fixed_k as u32, 0);
                 span(trace, t, sid, 0, SpanKind::Uplink, up + ch.prop_ms, bytes as u32, 0);
-                push(&mut heap, &mut seq, t + draft_ms + up + ch.prop_ms, Ev::DraftArrive { sid });
+                push(&mut heap, &mut seq, t + t_draft + up + ch.prop_ms, Ev::DraftArrive { sid });
                 sessions.push(s);
                 if sessions.len() < cfg.sessions {
                     push(&mut heap, &mut seq, arrivals.next_arrival_ms(), Ev::Admit);
@@ -637,15 +796,19 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                         );
                         // the edge follows the redirect and redrafts
                         // at the target after the handoff
+                        let bytes = tier_draft_bytes[s.tier as usize];
+                        if hetero {
+                            energy_j_by_tier[s.tier as usize] += tier_draft_j[s.tier as usize];
+                        }
                         let ch = chan(&profiles, s);
-                        let up = ch.up_ms(draft_bytes);
-                        metrics.bytes_up += draft_bytes;
+                        let up = ch.up_ms(bytes);
+                        metrics.bytes_up += bytes;
                         air_ms += up;
                         s.send_ms = t + cfg.handoff_ms;
                         push(
                             &mut heap,
                             &mut seq,
-                            t + cfg.handoff_ms + draft_ms + up + ch.prop_ms,
+                            t + cfg.handoff_ms + tier_draft_ms[s.tier as usize] + up + ch.prop_ms,
                             Ev::DraftArrive { sid },
                         );
                         continue;
@@ -697,9 +860,12 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
             Ev::Retry { sid } => {
                 let s = &mut sessions[sid as usize];
                 if !s.done {
+                    // resend of the already-drafted block: airtime only,
+                    // no fresh draft compute
+                    let bytes = tier_draft_bytes[s.tier as usize];
                     let ch = chan(&profiles, s);
-                    let up = ch.up_ms(draft_bytes);
-                    metrics.bytes_up += draft_bytes;
+                    let up = ch.up_ms(bytes);
+                    metrics.bytes_up += bytes;
                     air_ms += up;
                     push(&mut heap, &mut seq, t + up + ch.prop_ms, Ev::DraftArrive { sid });
                 }
@@ -716,7 +882,18 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                 let mut dur = A800_70B.t_base_ms;
                 for &sid in &members {
                     let s = &sessions[sid as usize];
-                    dur += per_req_verify_ms;
+                    // a tree draft's leaves each ride one ragged row in
+                    // the SAME bucket class as the chain (the comb is
+                    // bucket-aligned), so the batch still costs one
+                    // stacked dispatch but pays per-row verify time
+                    let rows = tier_rows[s.tier as usize];
+                    dur += per_req_verify_ms * rows as f64;
+                    if hetero {
+                        metrics.verify_rows += rows;
+                        if tier_branch[s.tier as usize] > 1 {
+                            metrics.tree_rounds += 1;
+                        }
+                    }
                     if s.rounds == 0 {
                         // first verify of a session pays its prefill
                         dur += s.prompt_len as f64 * A800_70B.prefill_ms_per_token;
@@ -763,6 +940,24 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                             break;
                         }
                     }
+                    // statistical twin of the comb hedge: when the chain
+                    // breaks at a bucket-aligned position, one of the
+                    // b - 1 alternate leaves catches the divergent token
+                    // with probability (b - 1) / SYNTH_ALTS — exactly the
+                    // synthetic backend's drift-catch odds. The alternate
+                    // is a leaf, so the rescue extends tau by one.
+                    if hetero && (tau as usize) < cfg.fixed_k {
+                        let b = tier_branch[s.tier as usize];
+                        let broke_at = tau as usize + 1;
+                        if b > 1
+                            && bucket_k(broke_at) == bucket_k(cfg.fixed_k)
+                            && s.rng.chance(
+                                (b - 1) as f64 / crate::serve::backend::SYNTH_ALTS as f64,
+                            )
+                        {
+                            tau += 1;
+                        }
+                    }
                     let eos = s.committed as usize + tau as usize + 1 >= s.budget as usize;
                     let ch = chan(&profiles, s);
                     let down = ch.down_ms(verdict_bytes);
@@ -791,12 +986,18 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                 debug_assert!(!s.done);
                 metrics.note_round(cfg.fixed_k, tau as usize);
                 metrics.latency.round_ms.record(t - s.send_ms);
-                metrics.latency.rtt_ms.record(t - s.send_ms - draft_ms);
+                metrics.latency.rtt_ms.record(t - s.send_ms - tier_draft_ms[s.tier as usize]);
                 s.rounds += 1;
                 s.committed += tau as u16 + 1;
+                if hetero {
+                    tokens_by_tier[s.tier as usize] += tau as usize + 1;
+                }
                 if s.first_token_ms.is_nan() {
                     s.first_token_ms = t;
                     ttft_ms.record(t - s.arrived_ms);
+                    if hetero {
+                        ttft_by_tier[s.tier as usize].record(t - s.arrived_ms);
+                    }
                 }
                 span(
                     trace,
@@ -853,15 +1054,19 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
                             0,
                         );
                     }
+                    let bytes = tier_draft_bytes[s.tier as usize];
+                    if hetero {
+                        energy_j_by_tier[s.tier as usize] += tier_draft_j[s.tier as usize];
+                    }
                     let ch = chan(&profiles, s);
-                    let up = ch.up_ms(draft_bytes);
-                    metrics.bytes_up += draft_bytes;
+                    let up = ch.up_ms(bytes);
+                    metrics.bytes_up += bytes;
                     air_ms += up;
                     s.send_ms = t + extra;
                     push(
                         &mut heap,
                         &mut seq,
-                        t + extra + draft_ms + up + ch.prop_ms,
+                        t + extra + tier_draft_ms[s.tier as usize] + up + ch.prop_ms,
                         Ev::DraftArrive { sid },
                     );
                 }
@@ -967,6 +1172,9 @@ pub fn run_with(cfg: &LoadConfig, trace: Option<&Trace>) -> LoadReport {
         retry_after_min_ms: if retry_after_max == 0 { 0 } else { retry_after_min },
         retry_after_max_ms: retry_after_max,
         autoscale,
+        ttft_by_tier,
+        energy_j_by_tier,
+        tokens_by_tier,
     }
 }
 
@@ -1180,5 +1388,65 @@ mod tests {
         assert!(text.contains("load/steady"));
         assert!(text.contains("digest"));
         assert!(text.contains("serving counters"));
+        // homogeneous presets stay untouched by the device layer
+        assert!(!r.is_hetero());
+        assert_eq!(r.metrics.verify_rows, 0);
+        assert_eq!(r.metrics.tree_rounds, 0);
+        assert!(matches!(j.get("tiers"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn hetero_run_is_deterministic_and_fills_tier_cells() {
+        let cfg = Scenario::Hetero.config(2000, 42);
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.digest(), b.digest());
+        let v = a.metrics.invariant_violations(0, 0);
+        assert!(v.is_empty(), "{v:?}");
+        assert!(a.is_hetero());
+        // every admitted session drew a tier, and the EVAL mix fills
+        // all three cells at this population size
+        let profiled: usize = a.metrics.sessions_by_device_tier.iter().sum();
+        assert_eq!(profiled, a.metrics.sessions_opened);
+        assert!(a.metrics.sessions_by_device_tier.iter().all(|&n| n > 0));
+        // mid+strong sessions draft trees: extra rows on the same
+        // stacked dispatches, never fewer rows than rounds
+        assert!(a.metrics.tree_rounds > 0, "no tree rounds on the hetero mix");
+        assert!(a.metrics.verify_rows > a.metrics.rounds);
+        assert_eq!(a.metrics.stacked_dispatches, a.metrics.batches);
+        // per-tier books balance against the fleet-wide ones
+        let tokens: usize = a.tokens_by_tier.iter().sum();
+        assert_eq!(tokens, a.metrics.tokens_committed);
+        let ttft: usize = (0..3).map(|i| a.ttft_by_tier[i].count()).sum();
+        assert_eq!(ttft, a.ttft_ms.count());
+        assert!(a.energy_j_by_tier.iter().all(|&j| j > 0.0));
+        // weak drafting is pricier per token than strong drafting
+        let per_tok = |i: usize| a.energy_j_by_tier[i] / a.tokens_by_tier[i] as f64;
+        assert!(per_tok(0) > per_tok(2), "weak tier must pay more J/token");
+        let j = a.to_json();
+        let tiers = j.get("tiers").and_then(|t| t.as_arr()).expect("tiers cell");
+        assert_eq!(tiers.len(), 3);
+        assert!(a.render().contains("tier weak"));
+    }
+
+    #[test]
+    fn hetero_tree_beats_linear_on_accepted_per_dispatch() {
+        let tree = Scenario::Hetero.config(2000, 42);
+        let mut linear = tree.clone();
+        linear.branching = 1;
+        let tr = run(&tree);
+        let ln = run(&linear);
+        // linear hetero runs fan nothing out: one row per round
+        assert_eq!(ln.metrics.tree_rounds, 0);
+        assert_eq!(ln.metrics.verify_rows, ln.metrics.rounds);
+        assert!(ln.metrics.invariant_violations(0, 0).is_empty());
+        // the comb hedge strictly raises accepted tokens per stacked
+        // dispatch — the same ratio the bench's hetero cell gates
+        assert!(
+            tr.accepted_per_dispatch() > ln.accepted_per_dispatch(),
+            "tree {} <= linear {}",
+            tr.accepted_per_dispatch(),
+            ln.accepted_per_dispatch()
+        );
     }
 }

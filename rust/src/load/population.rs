@@ -11,6 +11,7 @@
 //! the session's own RNG stream.
 
 use crate::channel::{ChannelState, NetworkKind, NetworkProfile};
+use crate::device::DeviceMix;
 use crate::util::rng::SplitMix64;
 
 use super::arrival::ArrivalShape;
@@ -132,6 +133,11 @@ pub enum Scenario {
     /// Hot fleet with a bounded admission queue — exercises Busy
     /// deferrals/backoff, aborts, and cross-replica handoffs.
     Churn,
+    /// Heterogeneous device population (wire v8): steady arrivals over
+    /// the weak/mid/strong [`DeviceMix::EVAL`] with tier-capped tree
+    /// speculation — the load-scale twin of the hetero serving matrix
+    /// (`tests/serve_hetero.rs`, docs/HETERO.md).
+    Hetero,
 }
 
 impl Scenario {
@@ -141,6 +147,7 @@ impl Scenario {
             "flash" => Some(Scenario::Flash),
             "diurnal" => Some(Scenario::Diurnal),
             "churn" => Some(Scenario::Churn),
+            "hetero" => Some(Scenario::Hetero),
             _ => None,
         }
     }
@@ -151,11 +158,18 @@ impl Scenario {
             Scenario::Flash => "flash",
             Scenario::Diurnal => "diurnal",
             Scenario::Churn => "churn",
+            Scenario::Hetero => "hetero",
         }
     }
 
-    pub fn all() -> [Scenario; 4] {
-        [Scenario::Steady, Scenario::Flash, Scenario::Diurnal, Scenario::Churn]
+    pub fn all() -> [Scenario; 5] {
+        [
+            Scenario::Steady,
+            Scenario::Flash,
+            Scenario::Diurnal,
+            Scenario::Churn,
+            Scenario::Hetero,
+        ]
     }
 
     /// Preset sized to `sessions`: the replica count scales with the
@@ -167,7 +181,7 @@ impl Scenario {
         let replicas = (sessions / 1250).clamp(4, 64);
         let cap = replicas as f64; // ~1 session/s per replica
         let shape = match self {
-            Scenario::Steady => ArrivalShape::steady(0.6 * cap),
+            Scenario::Steady | Scenario::Hetero => ArrivalShape::steady(0.6 * cap),
             Scenario::Flash => ArrivalShape {
                 flash_mult: 40.0,
                 flash_start_ms: 30_000.0,
@@ -214,6 +228,14 @@ impl Scenario {
             redirect_p,
             handoff_ms: 40.0,
             autoscale: None,
+            device_mix: match self {
+                Scenario::Hetero => Some(DeviceMix::EVAL),
+                _ => None,
+            },
+            branching: match self {
+                Scenario::Hetero => 4,
+                _ => 1,
+            },
         }
     }
 }
@@ -263,6 +285,18 @@ pub struct LoadConfig {
     /// Busy hints). `None` (every preset) is the fixed-fleet harness,
     /// digest-identical to the pre-autoscale one.
     pub autoscale: Option<crate::autoscale::AutoscaleConfig>,
+    /// Heterogeneous device population (wire v8): `Some(mix)` draws a
+    /// compute tier per session from the weak/mid/strong weights, prices
+    /// drafting at the tier representative's speed/energy, and enables
+    /// the statistical tree-speculation twin. `None` (every preset but
+    /// `hetero`) is the homogeneous fleet, digest-identical to the
+    /// pre-device-layer harness.
+    pub device_mix: Option<DeviceMix>,
+    /// Requested tree branching factor, capped per tier by
+    /// [`ComputeTier::plan_caps`](crate::device::ComputeTier::plan_caps);
+    /// 1 = linear chains (every preset but `hetero`). Only takes effect
+    /// when `device_mix` is set.
+    pub branching: usize,
 }
 
 impl LoadConfig {
@@ -368,5 +402,14 @@ mod tests {
         // flash burst rate dwarfs fleet capacity
         let f = Scenario::Flash.config(120_000, 3);
         assert!(f.shape.lambda(31_000.0) > 10.0 * f.replicas as f64);
+        // hetero is the only preset with a device mix + tree branching
+        let h = Scenario::Hetero.config(10_000, 3);
+        assert!(h.device_mix.is_some());
+        assert_eq!(h.branching, 4);
+        for sc in [Scenario::Steady, Scenario::Flash, Scenario::Diurnal, Scenario::Churn] {
+            let c = sc.config(10_000, 3);
+            assert!(c.device_mix.is_none(), "{sc:?} must stay homogeneous");
+            assert_eq!(c.branching, 1, "{sc:?} must stay linear");
+        }
     }
 }

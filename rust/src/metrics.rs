@@ -194,12 +194,22 @@ pub struct ServingMetrics {
     /// Conservation: each batch stacks at least one bucket and at most
     /// one per member row, so `batches <= stacked_dispatches <= rounds`.
     pub stacked_dispatches: usize,
+    /// Ragged verification rows across all closed batches: one per
+    /// root→leaf path of each verified draft. Equal to `rounds` when
+    /// every draft is a linear chain; larger under wire v8 tree
+    /// speculation, where one round fans out into `n_leaves` rows that
+    /// ride the same stacked dispatch classes as the main chain.
+    pub verify_rows: usize,
+    /// Rounds whose draft carried a tree tail (wire v8): the round
+    /// expanded into multiple rows and committed the best root path.
+    pub tree_rounds: usize,
     /// Verify requests per closed batch.
     pub batch_occupancy: Summary,
-    /// Continuous batching only (`BatchMode::Continuous`): verification
-    /// slots occupied at each rolling close — how full the stacked
-    /// executor ran without a window timer to fill it. Empty in
-    /// windowed mode.
+    /// Continuous batching only (`BatchMode::Continuous`): executor
+    /// ROWS verified at each rolling close — how full the stacked
+    /// executor ran without a window timer to fill it. A tree draft's
+    /// leaves each occupy one row, so this can exceed the slot count
+    /// under wire v8 tree speculation. Empty in windowed mode.
     pub slot_occupancy: Summary,
     /// Pending-draft backlog observed at each window close (the
     /// admission queue's operating depth).
@@ -229,6 +239,11 @@ pub struct ServingMetrics {
     /// Fleet imports that found the ledger entry already finished and
     /// answered done immediately (no live session created).
     pub sessions_imported_done: usize,
+    /// Sessions opened carrying a wire v8 device profile, by compute
+    /// tier (weak / mid / strong). Profile-less opens (pre-v8 peers,
+    /// fleet imports) count in none of the cells, so the sum is
+    /// bounded by `sessions_opened`.
+    pub sessions_by_device_tier: [usize; 3],
     /// Latency histograms (p50/p90/p99/p999); empty unless the verifier
     /// records rounds. Mergeable across replicas.
     pub latency: LatencySummary,
@@ -334,12 +349,35 @@ impl ServingMetrics {
         }
         // stacked-dispatch conservation (see the field docs): every
         // closed batch costs at least one stacked [B, K] dispatch and
-        // never more than one per verified row
-        if self.stacked_dispatches < self.batches || self.stacked_dispatches > self.rounds {
+        // never more than one per verified ROW (tree drafts fan one
+        // round into several rows, so the row ledger is the bound —
+        // `rounds` covers verifiers that predate row tracking)
+        let rows = self.verify_rows.max(self.rounds);
+        if self.stacked_dispatches < self.batches || self.stacked_dispatches > rows {
             v.push(format!(
                 "stacked dispatch conservation: {} dispatches outside \
-                 [batches {}, rounds {}]",
-                self.stacked_dispatches, self.batches, self.rounds
+                 [batches {}, rows {}]",
+                self.stacked_dispatches, self.batches, rows
+            ));
+        }
+        // every verified round contributes at least one row once rows
+        // are tracked, and only tree rounds contribute more than one
+        if self.verify_rows != 0 && self.verify_rows < self.rounds {
+            v.push(format!(
+                "row conservation: {} rows < {} rounds",
+                self.verify_rows, self.rounds
+            ));
+        }
+        if self.tree_rounds > self.rounds {
+            v.push(format!(
+                "row conservation: {} tree rounds > {} rounds",
+                self.tree_rounds, self.rounds
+            ));
+        }
+        if self.verify_rows != 0 && self.verify_rows > self.rounds && self.tree_rounds == 0 {
+            v.push(format!(
+                "row conservation: {} rows > {} rounds with no tree round",
+                self.verify_rows, self.rounds
             ));
         }
         // continuous-mode closes record occupancy once per batch
@@ -365,6 +403,14 @@ impl ServingMetrics {
             v.push(format!(
                 "ledger conservation: expired {} > redirected {}",
                 self.ledger_expired, self.sessions_redirected
+            ));
+        }
+        // a device-tier cell is only ever filled by a profiled Open
+        let profiled: usize = self.sessions_by_device_tier.iter().sum();
+        if profiled > self.sessions_opened {
+            v.push(format!(
+                "device tier conservation: {} profiled sessions > {} opened",
+                profiled, self.sessions_opened
             ));
         }
         v
@@ -401,6 +447,9 @@ impl ServingMetrics {
             ("sessions_redirected", n(self.sessions_redirected)),
             ("sessions_imported", n(self.sessions_imported)),
             ("sessions_imported_done", n(self.sessions_imported_done)),
+            ("sessions_weak", n(self.sessions_by_device_tier[0])),
+            ("sessions_mid", n(self.sessions_by_device_tier[1])),
+            ("sessions_strong", n(self.sessions_by_device_tier[2])),
             ("ledger_expired", n(self.ledger_expired)),
             ("handshakes_rejected", n(self.handshakes_rejected)),
             ("verdicts_replayed", n(self.verdicts_replayed)),
@@ -410,6 +459,8 @@ impl ServingMetrics {
             ("batches", n(self.batches)),
             ("mean_batch", Json::Num(self.mean_batch())),
             ("stacked_dispatches", n(self.stacked_dispatches)),
+            ("verify_rows", n(self.verify_rows)),
+            ("tree_rounds", n(self.tree_rounds)),
             (
                 "slot_occupancy_mean",
                 Json::Num(if self.slot_occupancy.count() == 0 {
@@ -444,7 +495,7 @@ impl ServingMetrics {
              \x20 resume           {} parked, {} resumed, {} evicted, {} verdicts replayed, {} residues expired\n\
              \x20 fleet            {} redirected out, {} imported, {} ledger entries expired\n\
              \x20 pipeline         {} rounds pipelined, {} drafts cancelled, {} draft tokens wasted\n\
-             \x20 rounds           {} in {} batches (mean occupancy {:.2}, {} stacked dispatches)\n\
+             \x20 rounds           {} in {} batches (mean occupancy {:.2}, {} stacked dispatches, {} rows, {} tree rounds)\n\
              \x20 admission        {} busy deferrals, {} drafts orphaned, queue depth mean {:.2} / p95 {:.0}\n\
              \x20 tokens           {} committed, acceptance {:.3} ({} / {} drafted)\n\
              \x20 hot-swaps        {}\n\
@@ -468,6 +519,8 @@ impl ServingMetrics {
             self.batches,
             self.mean_batch(),
             self.stacked_dispatches,
+            self.verify_rows,
+            self.tree_rounds,
             self.drafts_busy,
             self.drafts_orphaned,
             self.queue_depth.mean(),
@@ -617,7 +670,9 @@ mod tests {
         m.accepted = 15;
         m.tokens_committed = 20; // accepted + one bonus per round
         m.batches = 3;
-        m.stacked_dispatches = 4; // within [batches, rounds]
+        m.stacked_dispatches = 4; // within [batches, rows]
+        m.verify_rows = 6; // 5 linear rows + one tree round's extra row
+        m.tree_rounds = 1;
         for _ in 0..3 {
             m.latency.verify_ms.record(1.0);
         }
@@ -682,14 +737,48 @@ mod tests {
         assert!(v.iter().any(|s| s.contains("stacked dispatch")), "{v:?}");
         // more dispatches than rows: stacking fragmented past 1/row
         let mut m = balanced();
-        m.stacked_dispatches = m.rounds + 1;
+        m.stacked_dispatches = m.verify_rows + 1;
         let v = m.invariant_violations(0, 0);
         assert!(v.iter().any(|s| s.contains("stacked dispatch")), "{v:?}");
         // the boundary values balance
         let mut m = balanced();
         m.stacked_dispatches = m.batches;
         assert!(m.invariant_violations(0, 0).is_empty());
+        m.stacked_dispatches = m.verify_rows;
+        assert!(m.invariant_violations(0, 0).is_empty());
+        // a pre-row-tracking verifier (verify_rows == 0) still bounds
+        // dispatches by rounds
+        let mut m = balanced();
+        m.verify_rows = 0;
+        m.tree_rounds = 0;
         m.stacked_dispatches = m.rounds;
+        assert!(m.invariant_violations(0, 0).is_empty());
+        m.stacked_dispatches = m.rounds + 1;
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("stacked dispatch")), "{v:?}");
+    }
+
+    #[test]
+    fn invariant_row_conservation() {
+        // fewer rows than rounds: a verified round left no row behind
+        let mut m = balanced();
+        m.verify_rows = m.rounds - 1;
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("row conservation")), "{v:?}");
+        // extra rows demand a tree round to explain them
+        let mut m = balanced();
+        m.tree_rounds = 0;
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("no tree round")), "{v:?}");
+        // tree rounds are a subset of rounds
+        let mut m = balanced();
+        m.tree_rounds = m.rounds + 1;
+        let v = m.invariant_violations(0, 0);
+        assert!(v.iter().any(|s| s.contains("tree rounds")), "{v:?}");
+        // all-linear books (rows == rounds, no tree rounds) balance
+        let mut m = balanced();
+        m.verify_rows = m.rounds;
+        m.tree_rounds = 0;
         assert!(m.invariant_violations(0, 0).is_empty());
     }
 

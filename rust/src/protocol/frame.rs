@@ -87,7 +87,17 @@ use anyhow::{bail, Result};
 /// to v6); the cloud reserves `tier_reserve` admission slots for
 /// tier > 1 sessions, mirroring the edge mux's weighted tiers. Tiers
 /// only shape Busy backpressure — committed tokens never change.
-pub const WIRE_VERSION: u16 = 7;
+/// v8: heterogeneous devices + tree speculation — `Open` grows an
+/// OPTIONAL trailing [`DeviceProfileMsg`] (compute tier, channel
+/// class, energy budget) behind the tier varint; `Draft` grows an
+/// optional tree-topology tail (`DraftMsg::tree`, parent pointers
+/// behind a zero-length spec marker every pre-v8 decoder rejects) so
+/// the edge can ship a token TREE whose root→leaf paths the cloud
+/// verifies as ragged rows of one stacked batch; `Verify` grows an
+/// optional trailing leaf byte (`VerifyMsg::leaf`) naming the winning
+/// path. All three tails are absent for default-profile linear
+/// traffic, which stays byte-identical to v7.
+pub const WIRE_VERSION: u16 = 8;
 
 /// Oldest peer version the handshake still accepts. A v2 peer never
 /// sends spec-tagged drafts or `Cancel` frames, and the cloud sends it
@@ -495,6 +505,52 @@ pub struct OpenMsg {
     /// pre-v7 decoder (which rejects trailing bytes) never sees a tier
     /// because edges only send one after negotiating >= 7.
     pub tier: u32,
+    /// Device profile (wire v8): who this session's edge IS — compute
+    /// tier, channel class, remaining energy budget — so the cloud can
+    /// observe (and a future placement layer exploit) the fleet's
+    /// heterogeneity. Encoded as an OPTIONAL tail BEHIND the tier
+    /// varint; when present the tier varint is always written (even the
+    /// default 1) so the layout stays unambiguous. Absent profile +
+    /// default tier is byte-identical to the v6/v7 encoding, and edges
+    /// only send a profile after negotiating >= 8.
+    pub profile: Option<DeviceProfileMsg>,
+}
+
+/// Wire form of a [`crate::device::DeviceProfile`] (wire v8): the three
+/// numbers the cloud can act on without ever seeing the device model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceProfileMsg {
+    /// Compute tier code: 0 = weak, 1 = mid, 2 = strong
+    /// ([`crate::device::ComputeTier`]).
+    pub compute_tier: u8,
+    /// Channel class index into [`crate::channel::NetworkKind::all`].
+    pub channel_class: u8,
+    /// Remaining energy budget in millijoules (0 = unmetered).
+    pub energy_mj: u64,
+}
+
+impl DeviceProfileMsg {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.push(self.compute_tier);
+        out.push(self.channel_class);
+        write_varint(out, self.energy_mj);
+    }
+
+    fn decode_from(buf: &[u8], pos: &mut usize) -> Result<DeviceProfileMsg> {
+        let compute_tier = *buf.get(*pos).ok_or_else(|| anyhow::anyhow!("profile: truncated"))?;
+        *pos += 1;
+        let channel_class = *buf.get(*pos).ok_or_else(|| anyhow::anyhow!("profile: truncated"))?;
+        *pos += 1;
+        if compute_tier > 2 || channel_class > 2 {
+            bail!("profile: bad tier/class ({compute_tier}/{channel_class})");
+        }
+        let energy_mj = read_varint(buf, pos)?;
+        Ok(DeviceProfileMsg {
+            compute_tier,
+            channel_class,
+            energy_mj,
+        })
+    }
 }
 
 impl OpenMsg {
@@ -506,8 +562,13 @@ impl OpenMsg {
         for &t in &self.prompt {
             write_varint(&mut out, t as u64);
         }
-        if self.tier != 1 {
+        // the tier varint anchors the v8 profile tail, so a profiled
+        // open writes it even at the default tier
+        if self.tier != 1 || self.profile.is_some() {
             write_varint(&mut out, self.tier as u64);
+        }
+        if let Some(p) = &self.profile {
+            p.encode_into(&mut out);
         }
         out
     }
@@ -530,6 +591,12 @@ impl OpenMsg {
         } else {
             1
         };
+        // optional v8 device-profile tail behind the tier
+        let profile = if pos < buf.len() {
+            Some(DeviceProfileMsg::decode_from(buf, &mut pos)?)
+        } else {
+            None
+        };
         if pos != buf.len() {
             bail!("open: trailing bytes");
         }
@@ -538,6 +605,7 @@ impl OpenMsg {
             max_new,
             nonce,
             tier,
+            profile,
         })
     }
 }
@@ -988,6 +1056,14 @@ mod tests {
             } else {
                 vec![]
             },
+            // ragged v8 tree topologies on a third of the drafts: each
+            // node attaches to the committed prefix (0) or any earlier
+            // node — combs, chains, and stars all come out of this
+            tree: if rng.chance(0.35) {
+                (0..k).map(|i| rng.next_range(i as u64 + 1) as u8).collect()
+            } else {
+                vec![]
+            },
         };
         // stream ids from tiny to the full u32 range
         let stream = (rng.next_u64() as u32 >> (rng.next_range(31) as u32)).max(1);
@@ -1027,6 +1103,10 @@ mod tests {
                         && back.spec == msg.spec
                         && (msg.spec.is_empty() || back.basis_len == msg.basis_len),
                     format!("round/speculative-basis mismatch at split {split}"),
+                )?;
+                prop::assert_prop(
+                    back.tree == msg.tree && back.n_leaves() == msg.n_leaves(),
+                    format!("tree topology mismatch at split {split}"),
                 )?;
                 prop::assert_prop(
                     dec.next_frame().map_err(|e| e.to_string())?.is_none(),
@@ -1080,6 +1160,12 @@ mod tests {
                     tau: rng.next_range(9) as u8,
                     correction: rng.next_range(512) as i32,
                     eos: rng.chance(0.2),
+                    // v8 tree verdicts carry the winning leaf index
+                    leaf: if rng.chance(0.3) {
+                        Some(rng.next_range(12) as u8)
+                    } else {
+                        None
+                    },
                 };
                 per_stream[(stream - 1) as usize].push(m.clone());
                 frames.push(Frame::on(stream, FrameKind::Verify, m.encode()));
@@ -1233,6 +1319,7 @@ mod tests {
             max_new: 32,
             nonce: 0xDEAD_BEEF_CAFE,
             tier: 1,
+            profile: None,
         };
         assert_eq!(OpenMsg::decode(&o.encode()).unwrap(), o);
         let a = OpenAck {
@@ -1252,6 +1339,7 @@ mod tests {
             max_new: 16,
             nonce: 9,
             tier: 1,
+            profile: None,
         };
         let bytes = default_tier.encode();
         let mut v6_bytes = Vec::new();
@@ -1271,10 +1359,68 @@ mod tests {
         let prio_bytes = prio.encode();
         assert!(prio_bytes.len() > bytes.len());
         assert_eq!(OpenMsg::decode(&prio_bytes).unwrap(), prio);
-        // garbage AFTER the tier tail is still rejected
+        // a tier tail followed by ONE byte is a truncated v8 profile
         let mut trailing = prio_bytes.clone();
         trailing.push(0x7F);
         assert!(OpenMsg::decode(&trailing).is_err());
+    }
+
+    #[test]
+    fn open_device_profile_tail_is_optional_and_backward_compatible() {
+        let plain = OpenMsg {
+            prompt: vec![2, 80, 81, 300],
+            max_new: 24,
+            nonce: 41,
+            tier: 1,
+            profile: None,
+        };
+        let profile = DeviceProfileMsg {
+            compute_tier: 2,
+            channel_class: 1,
+            energy_mj: 180_000,
+        };
+        // a profiled open roundtrips, at the default tier too (the tier
+        // varint is forced so the tail stays unambiguous)
+        for tier in [1u32, 3] {
+            let o = OpenMsg {
+                tier,
+                profile: Some(profile),
+                ..plain.clone()
+            };
+            assert_eq!(OpenMsg::decode(&o.encode()).unwrap(), o);
+            // the profile rides strictly behind the v7 layout
+            let v7 = OpenMsg { profile: None, tier, ..plain.clone() };
+            assert!(o.encode().len() > v7.encode().len());
+        }
+        // absent profile at default tier: byte-identical to v6/v7, and
+        // the profiled encoding is a strict extension of it
+        let with = OpenMsg { profile: Some(profile), ..plain.clone() };
+        let (pb, wb) = (plain.encode(), with.encode());
+        assert_eq!(&wb[..pb.len()], &pb[..]);
+        assert_eq!(wb[pb.len()], 1, "forced tier varint anchors the tail");
+        // bad tier/class codes and truncations are rejected
+        let mut bad = with.clone();
+        bad.profile = Some(DeviceProfileMsg { compute_tier: 3, ..profile });
+        assert!(OpenMsg::decode(&bad.encode()).is_err());
+        let bytes = with.encode();
+        for cut in plain.encode().len()..bytes.len() {
+            assert!(OpenMsg::decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn handshake_negotiates_v7_peer_below_tree_support() {
+        // a v7 peer (pre-tree, pre-profile) is accepted; the agreed
+        // version tells the edge it must send linear drafts with no
+        // device profile, and the cloud never sends a leaf tail
+        let h = Hello {
+            wire_version: 7,
+            mode: VerifyMode::Greedy,
+            k_max: 8,
+        };
+        let ack = hello_response(&Hello::decode(&h.encode()).unwrap());
+        assert!(ack.accepted);
+        assert_eq!(ack.wire_version, 7);
     }
 
     #[test]
@@ -1668,6 +1814,7 @@ mod tests {
                     wire: WireFormat::Compact,
                     basis_len: if spec.is_empty() { 0 } else { 11 },
                     spec,
+                    tree: vec![],
                 };
                 frames.push(Frame::on(s, FrameKind::Draft, mk(0, vec![]).encode()));
                 frames.push(Frame::on(

@@ -84,6 +84,16 @@ pub struct DraftMsg {
     /// `committed[..basis_len] ++ spec`; otherwise the draft is stale
     /// and discarded (cancel-on-reject).
     pub spec: Vec<i32>,
+    /// Tree speculation (wire v8): parent pointers giving `tokens` a
+    /// tree topology instead of a single chain. `parents[i] == 0`
+    /// attaches `tokens[i]` to the committed prefix; `parents[i] == j`
+    /// with `j > 0` makes it a child of `tokens[j - 1]` (so
+    /// `parents[i] <= i` always — nodes only reference earlier nodes).
+    /// Empty means a linear chain, which also keeps the encoding
+    /// byte-identical to wire v7 and below. The cloud verifies every
+    /// root→leaf path as one ragged row of the same stacked batch and
+    /// commits the longest accepted path ([`VerifyMsg::leaf`]).
+    pub tree: Vec<u8>,
 }
 
 /// Per-token distribution sketch size on the wire (stochastic mode):
@@ -120,6 +130,17 @@ impl DraftMsg {
             for &t in &self.spec {
                 write_varint(&mut out, t as u64);
             }
+        } else if !self.tree.is_empty() {
+            // wire v8 tree marker: a zero-length spec tail (which every
+            // pre-v8 decoder rejects as "bad speculative basis length")
+            // announces that one parent byte per token follows
+            write_varint(&mut out, 0);
+            write_varint(&mut out, 0);
+        }
+        // wire v8 tree-topology tail — absent for linear drafts, so
+        // chain messages stay byte-identical to v7 and below
+        if !self.tree.is_empty() {
+            out.extend_from_slice(&self.tree);
         }
         out
     }
@@ -147,19 +168,54 @@ impl DraftMsg {
             }
         }
         // v2 messages end here; a v3 pipelined draft appends its
-        // speculative basis (see `spec` field docs)
+        // speculative basis (see `spec` field docs), a v8 tree draft a
+        // parent-pointer tail behind a zero-length spec marker
         let mut basis_len = 0u64;
         let mut spec = Vec::new();
+        let mut tree = Vec::new();
         if pos < buf.len() {
             basis_len = read_varint(buf, &mut pos)?;
             let sn = read_varint(buf, &mut pos)? as usize;
-            // spec is bounded by depth * (k_max + 1); 255 is generous
-            if sn == 0 || sn > 255 {
-                bail!("draft: bad speculative basis length {sn}");
-            }
-            spec.reserve(sn);
-            for _ in 0..sn {
-                spec.push(read_varint(buf, &mut pos)? as i32);
+            if sn == 0 {
+                // wire v8 tree marker (pre-v8 decoders reject exactly
+                // here): one parent byte per token, nothing else
+                if basis_len != 0 {
+                    bail!("draft: tree marker with nonzero basis");
+                }
+                if n == 0 || buf.len() - pos != n {
+                    bail!("draft: tree topology length mismatch");
+                }
+                tree.extend_from_slice(&buf[pos..]);
+                pos = buf.len();
+                for (i, &p) in tree.iter().enumerate() {
+                    if p as usize > i {
+                        bail!("draft: tree parent {p} ahead of node {i}");
+                    }
+                }
+            } else {
+                // spec is bounded by depth * (k_max + 1); 255 is generous
+                if sn > 255 {
+                    bail!("draft: bad speculative basis length {sn}");
+                }
+                spec.reserve(sn);
+                for _ in 0..sn {
+                    spec.push(read_varint(buf, &mut pos)? as i32);
+                }
+                if pos < buf.len() {
+                    // tree tail behind a speculative basis: exactly one
+                    // parent byte per token (a pre-v8 decoder rejects
+                    // the residue as trailing bytes)
+                    if buf.len() - pos != n || n == 0 {
+                        bail!("draft: tree topology length mismatch");
+                    }
+                    tree.extend_from_slice(&buf[pos..]);
+                    pos = buf.len();
+                    for (i, &p) in tree.iter().enumerate() {
+                        if p as usize > i {
+                            bail!("draft: tree parent {p} ahead of node {i}");
+                        }
+                    }
+                }
             }
         }
         if pos != buf.len() {
@@ -176,7 +232,73 @@ impl DraftMsg {
             wire: WireFormat::Compact,
             basis_len,
             spec,
+            tree,
         })
+    }
+
+    /// Whether this draft carries a tree topology (wire v8). Linear
+    /// chains — the only shape pre-v8 peers understand — return false.
+    pub fn is_tree(&self) -> bool {
+        !self.tree.is_empty()
+    }
+
+    /// Structural validity of the tree tail: either absent (linear) or
+    /// exactly one parent byte per token, each referencing the
+    /// committed prefix (0) or an earlier node (`parents[i] <= i`).
+    pub fn tree_valid(&self) -> bool {
+        self.tree.is_empty()
+            || (self.tree.len() == self.tokens.len()
+                && self.tree.iter().enumerate().all(|(i, &p)| p as usize <= i))
+    }
+
+    /// Leaf node indices in ascending order (a node is a leaf when no
+    /// other node names it as parent). For a linear chain this is just
+    /// `[k - 1]`; for the edge's comb drafts the main-chain leaf sorts
+    /// first because alternates are appended after the chain.
+    pub fn tree_leaves(&self) -> Vec<u8> {
+        if self.tokens.is_empty() {
+            return Vec::new();
+        }
+        if self.tree.is_empty() {
+            return vec![(self.tokens.len() - 1) as u8];
+        }
+        let mut has_child = vec![false; self.tokens.len()];
+        for &p in &self.tree {
+            if p > 0 {
+                has_child[p as usize - 1] = true;
+            }
+        }
+        (0..self.tokens.len())
+            .filter(|&i| !has_child[i])
+            .map(|i| i as u8)
+            .collect()
+    }
+
+    /// Number of root→leaf paths the verifier must check — the ragged
+    /// row count of the stacked batch (1 for a linear chain).
+    pub fn n_leaves(&self) -> usize {
+        if self.tree.is_empty() {
+            usize::from(!self.tokens.is_empty())
+        } else {
+            self.tree_leaves().len()
+        }
+    }
+
+    /// Root→leaf token path for leaf node index `leaf`, in draft order
+    /// (first element attaches to the committed prefix). For a linear
+    /// chain this is the whole token vector.
+    pub fn tree_path(&self, leaf: u8) -> Vec<i32> {
+        if self.tree.is_empty() {
+            return self.tokens.clone();
+        }
+        let mut rev = Vec::new();
+        let mut node = leaf as usize + 1;
+        while node > 0 {
+            rev.push(self.tokens[node - 1]);
+            node = self.tree[node - 1] as usize;
+        }
+        rev.reverse();
+        rev
     }
 
     /// Total air bytes for eq. (8): header + body, plus the per-token
@@ -211,6 +333,13 @@ pub struct VerifyMsg {
     pub tau: u8,
     pub correction: i32,
     pub eos: bool,
+    /// Tree speculation (wire v8): which leaf's root→leaf path `tau`
+    /// counts along, as the leaf's node index into the draft's token
+    /// vector. `None` for linear rounds — which also keeps the encoding
+    /// byte-identical to wire v7 and below. The edge reconstructs the
+    /// winning path from its own retained tree; only the index crosses
+    /// the air.
+    pub leaf: Option<u8>,
 }
 
 impl VerifyMsg {
@@ -221,6 +350,11 @@ impl VerifyMsg {
         out.push(self.tau);
         out.push(self.eos as u8);
         write_varint(&mut out, self.correction as u64);
+        // wire v8 leaf tail — absent for linear rounds, so chain
+        // verdicts stay byte-identical to v7 and below
+        if let Some(leaf) = self.leaf {
+            out.push(leaf);
+        }
         out
     }
 
@@ -233,6 +367,15 @@ impl VerifyMsg {
         let eos = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("truncated"))? == 1;
         pos += 1;
         let correction = read_varint(buf, &mut pos)? as i32;
+        // v7 verdicts end here; a v8 tree verdict appends the winning
+        // leaf's node index
+        let leaf = if pos < buf.len() {
+            let b = buf[pos];
+            pos += 1;
+            Some(b)
+        } else {
+            None
+        };
         if pos != buf.len() {
             bail!("trailing bytes");
         }
@@ -242,6 +385,7 @@ impl VerifyMsg {
             tau,
             correction,
             eos,
+            leaf,
         })
     }
 
@@ -313,6 +457,7 @@ mod tests {
             wire: WireFormat::Compact,
             basis_len: 0,
             spec: vec![],
+            tree: vec![],
         };
         assert_eq!(DraftMsg::decode(&m.encode()).unwrap(), m);
     }
@@ -328,6 +473,7 @@ mod tests {
             wire: WireFormat::Compact,
             basis_len: 0,
             spec: vec![],
+            tree: vec![],
         };
         let back = DraftMsg::decode(&m.encode()).unwrap();
         assert_eq!(back.tokens, m.tokens);
@@ -348,6 +494,7 @@ mod tests {
             wire: WireFormat::Compact,
             basis_len: 0,
             spec: vec![],
+            tree: vec![],
         };
         let mut v2_bytes = Vec::new();
         // hand-rolled v2 layout: session, round, mode, count, tokens
@@ -377,6 +524,7 @@ mod tests {
                 wire: WireFormat::Compact,
                 basis_len: 123,
                 spec: vec![7, 8, 9, 300],
+                tree: vec![],
             };
             let back = DraftMsg::decode(&spec_msg.encode()).unwrap();
             assert_eq!(back.spec, spec_msg.spec);
@@ -398,6 +546,7 @@ mod tests {
             wire: WireFormat::Compact,
             basis_len: 4,
             spec: vec![6, 7],
+            tree: vec![],
         };
         let bytes = spec_msg.encode();
         assert!(DraftMsg::decode(&bytes[..bytes.len() - 1]).is_err());
@@ -411,8 +560,15 @@ mod tests {
             tau: 5,
             correction: 123,
             eos: true,
+            leaf: None,
         };
         assert_eq!(VerifyMsg::decode(&m.encode()).unwrap(), m);
+        // a v8 tree verdict appends one leaf byte and roundtrips; the
+        // linear encoding is a strict prefix of it
+        let t = VerifyMsg { leaf: Some(6), ..m.clone() };
+        assert_eq!(VerifyMsg::decode(&t.encode()).unwrap(), t);
+        assert_eq!(t.encode().len(), m.encode().len() + 1);
+        assert_eq!(&t.encode()[..m.encode().len()], &m.encode()[..]);
     }
 
     #[test]
@@ -426,6 +582,7 @@ mod tests {
             wire,
             basis_len: 0,
             spec: vec![],
+            tree: vec![],
         };
         let c1 = mk(1, WireFormat::Compact).air_bytes();
         let c5 = mk(5, WireFormat::Compact).air_bytes();
@@ -452,6 +609,7 @@ mod tests {
             wire: WireFormat::Sketch,
             basis_len: 0,
             spec: vec![],
+            tree: vec![],
         };
         let delta_bits = (mk(6).air_bytes() - mk(5).air_bytes()) as f64 * 8.0;
         assert!((delta_bits - b).abs() / b < 0.1, "{delta_bits} vs {b}");
@@ -486,9 +644,137 @@ mod tests {
             wire: WireFormat::Compact,
             basis_len: 0,
             spec: vec![],
+            tree: vec![],
         };
         let mut buf = m.encode();
         buf.push(0xff);
         assert!(DraftMsg::decode(&buf).is_err());
+    }
+
+    /// A comb over 4 chain tokens with alternates at depths 2 and 3:
+    /// nodes 0..4 are the chain, node 4 branches off after chain node 1,
+    /// node 5 after chain node 2.
+    fn comb_draft() -> DraftMsg {
+        DraftMsg {
+            session: 11,
+            round: 4,
+            tokens: vec![40, 41, 42, 43, 140, 141],
+            chosen_probs: vec![],
+            mode: VerifyMode::Greedy,
+            wire: WireFormat::Compact,
+            basis_len: 0,
+            spec: vec![],
+            tree: vec![0, 1, 2, 3, 2, 3],
+        }
+    }
+
+    #[test]
+    fn draft_msg_tree_roundtrip_and_paths() {
+        let m = comb_draft();
+        assert!(m.tree_valid() && m.is_tree());
+        let back = DraftMsg::decode(&m.encode()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(m.tree_leaves(), vec![3, 4, 5]);
+        assert_eq!(m.n_leaves(), 3);
+        assert_eq!(m.tree_path(3), vec![40, 41, 42, 43]);
+        assert_eq!(m.tree_path(4), vec![40, 41, 140]);
+        assert_eq!(m.tree_path(5), vec![40, 41, 42, 141]);
+        // linear helpers: the whole chain is the single path
+        let lin = DraftMsg { tree: vec![], tokens: vec![7, 8], ..m.clone() };
+        assert_eq!(lin.tree_leaves(), vec![1]);
+        assert_eq!(lin.n_leaves(), 1);
+        assert_eq!(lin.tree_path(1), vec![7, 8]);
+    }
+
+    #[test]
+    fn draft_msg_linear_stays_v7_identical_and_tree_downgrades_cleanly() {
+        // branching == 1 (empty tree) must not move a single byte
+        let lin = DraftMsg { tree: vec![], ..comb_draft() };
+        let mut v7_bytes = Vec::new();
+        crate::protocol::codec::write_u32(&mut v7_bytes, 11);
+        crate::protocol::codec::write_u32(&mut v7_bytes, 4);
+        v7_bytes.push(0);
+        v7_bytes.push(6);
+        for t in [40u64, 41, 42, 43, 140, 141] {
+            crate::protocol::codec::write_varint(&mut v7_bytes, t);
+        }
+        assert_eq!(lin.encode(), v7_bytes, "empty tree must stay v7-identical");
+
+        // a tree draft decodes under v8 but its marker is exactly the
+        // zero-length spec a v7 decoder rejects: simulate the old
+        // decoder by checking the marker position carries sn == 0
+        let tree_bytes = comb_draft().encode();
+        let mut pos = v7_bytes.len();
+        assert_eq!(read_varint(&tree_bytes, &mut pos).unwrap(), 0, "basis");
+        assert_eq!(read_varint(&tree_bytes, &mut pos).unwrap(), 0, "sn marker");
+        assert_eq!(&tree_bytes[..v7_bytes.len()], &v7_bytes[..]);
+
+        // malformed trees are rejected: wrong length, forward parent
+        let mut short = tree_bytes.clone();
+        short.pop();
+        assert!(DraftMsg::decode(&short).is_err());
+        let mut forward = comb_draft();
+        forward.tree[1] = 5; // parent ahead of node 1
+        assert!(DraftMsg::decode(&forward.encode()).is_err());
+        assert!(!forward.tree_valid());
+    }
+
+    #[test]
+    fn draft_msg_tree_behind_spec_roundtrips() {
+        // pipelined rounds stay linear in practice, but the codec keeps
+        // the combination well-formed: spec tail first, then parents
+        let m = DraftMsg {
+            basis_len: 9,
+            spec: vec![3, 4],
+            ..comb_draft()
+        };
+        assert_eq!(DraftMsg::decode(&m.encode()).unwrap(), m);
+        let bytes = m.encode();
+        assert!(DraftMsg::decode(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn draft_msg_random_tree_topology_roundtrip_property() {
+        prop::check(200, |rng| {
+            let n = 1 + rng.next_range(8) as usize;
+            let tokens: Vec<i32> = (0..n).map(|_| rng.next_range(512) as i32).collect();
+            // random valid topology: each node attaches to the prefix
+            // (0) or any earlier node
+            let tree: Vec<u8> = (0..n)
+                .map(|i| rng.next_range(i as u64 + 1) as u8)
+                .collect();
+            let m = DraftMsg {
+                session: rng.next_range(1 << 20) as u32,
+                round: rng.next_range(1 << 10) as u32,
+                tokens,
+                chosen_probs: vec![],
+                mode: VerifyMode::Greedy,
+                wire: WireFormat::Compact,
+                basis_len: 0,
+                spec: vec![],
+                tree,
+            };
+            if !m.tree_valid() {
+                return Err("generated topology must be valid".into());
+            }
+            let back = DraftMsg::decode(&m.encode())
+                .map_err(|e| format!("decode failed: {e}"))?;
+            if back != m {
+                return Err(format!("roundtrip mismatch: {back:?} vs {m:?}"));
+            }
+            // every leaf path starts at a prefix-attached node and has
+            // positive length bounded by the node count
+            let leaves = back.tree_leaves();
+            if leaves.is_empty() {
+                return Err("tree must have at least one leaf".into());
+            }
+            for leaf in leaves {
+                let path = back.tree_path(leaf);
+                if path.is_empty() || path.len() > n {
+                    return Err(format!("bad path for leaf {leaf}: {path:?}"));
+                }
+            }
+            Ok(())
+        });
     }
 }

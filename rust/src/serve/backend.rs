@@ -29,7 +29,16 @@
 //! * **Request order is result order.** `reqs[i]` produces verdict `i`,
 //!   regardless of how the implementation groups execution internally.
 //! * **Session ids are distinct** within one call (the window holds at
-//!   most one pending draft per session).
+//!   most one pending draft per session) — UNLESS the backend opts into
+//!   tree rows (`supports_tree_rows`, wire v8): a tree draft expands
+//!   into one row per root→leaf path, all sharing the session id. Such
+//!   rows must be evaluated as INDEPENDENT pure functions of
+//!   `(committed, draft)` — no per-row session state may be consumed —
+//!   and the verifier re-asserts the session's true committed length
+//!   afterwards via `note_committed` (row-order bookkeeping may have
+//!   recorded a losing path's length last). Backends that keep per-row
+//!   session state (the engine path consumes one KV per row) leave the
+//!   default `false` and never see tree-expanded windows.
 //! * **Byte-identical to the sequential loop.** For a deterministic
 //!   backend, the verdicts (and all per-session bookkeeping) must equal
 //!   what per-request `verify_block` calls in request order would have
@@ -60,7 +69,7 @@
 //! execution when they can.
 
 use crate::coordinator::cloud::GreedyBatchReq;
-use crate::coordinator::edge::{DraftSource, Proposal};
+use crate::coordinator::edge::{DraftSource, Proposal, TreeProposal};
 use crate::coordinator::CloudEngine;
 use crate::protocol::VerifyMode;
 use crate::runtime::Registry;
@@ -210,6 +219,20 @@ pub trait VerifyBackend {
 
     /// KV slots left for this session (0 when unknown session).
     fn remaining_capacity(&self, id: u32) -> usize;
+
+    /// True when `verify_batch` evaluates every request row as an
+    /// independent pure function of `(committed, draft)` — the
+    /// precondition for tree-expanded windows, where several rows share
+    /// one session id (see the module docs). Default `false`: the
+    /// verifier keeps such a backend's drafts linear.
+    fn supports_tree_rows(&self) -> bool {
+        false
+    }
+
+    /// Re-assert a session's committed length after the verifier picks
+    /// a tree round's winning path. Only meaningful for backends with
+    /// `supports_tree_rows`; default no-op.
+    fn note_committed(&mut self, _id: u32, _len: usize) {}
 
     fn label(&self) -> String {
         "backend".into()
@@ -437,8 +460,39 @@ pub fn synth_base_token(seed: u64, vocab: i32, ctx: &[i32]) -> i32 {
     SYNTH_RESERVED + r.next_range((vocab - SYNTH_RESERVED) as u64) as i32
 }
 
+/// How many candidate drifted continuations the synthetic family
+/// exposes per context (see [`synth_alt_tokens`]).
+pub const SYNTH_ALTS: usize = 8;
+
+/// The eight candidate "drifted" continuations at a context: distinct
+/// tokens, deterministically spread over the vocabulary, all different
+/// from the base prediction. The evolved target commits ONE of them at
+/// each drift position ([`synth_target_token`]); tree drafts hedge by
+/// proposing the first `branching - 1` of them as alternate leaves, so
+/// a comb of branching `b` catches a drift with probability
+/// `(b - 1) / 8` — the mechanism behind the accepted-tokens-per-
+/// dispatch gain the hetero bench cell gates.
+///
+/// Pure in `(seed, vocab, ctx)` and independent of the version salt, so
+/// the frozen draft can compute the same hedge set without knowing
+/// which target version is deployed.
+pub fn synth_alt_tokens(seed: u64, vocab: i32, ctx: &[i32]) -> [i32; SYNTH_ALTS] {
+    let base = synth_base_token(seed, vocab, ctx);
+    let span = vocab - SYNTH_RESERVED;
+    let step = ((span - 1) / SYNTH_ALTS as i32).max(1);
+    let mut out = [0i32; SYNTH_ALTS];
+    for (j, slot) in out.iter_mut().enumerate() {
+        let jump = 1 + (j as i32 * step) % (span - 1).max(1);
+        *slot = SYNTH_RESERVED + (base - SYNTH_RESERVED + jump).rem_euclid(span);
+    }
+    out
+}
+
 /// The deployed target version's greedy next token: equals the base
-/// prediction except at (deterministic, context-keyed) drift positions.
+/// prediction except at (deterministic, context-keyed) drift positions,
+/// where it commits one of the context's [`synth_alt_tokens`] instead —
+/// chosen by the version-salted stream, so different versions drift to
+/// different alternates but always within the hedgeable set.
 pub fn synth_target_token(seed: u64, vocab: i32, version_salt: u64, drift: f64, ctx: &[i32]) -> i32 {
     let base = synth_base_token(seed, vocab, ctx);
     if drift <= 0.0 {
@@ -448,9 +502,8 @@ pub fn synth_target_token(seed: u64, vocab: i32, version_salt: u64, drift: f64, 
         ctx_hash(ctx) ^ seed ^ version_salt.wrapping_mul(0x9E37_79B9_7F4A_7C15),
     );
     if r.next_f64() < drift {
-        let span = (vocab - SYNTH_RESERVED) as u64;
-        let jump = 1 + r.next_range(span - 1) as i32;
-        SYNTH_RESERVED + (base - SYNTH_RESERVED + jump).rem_euclid(span as i32)
+        let alts = synth_alt_tokens(seed, vocab, ctx);
+        alts[r.next_range(SYNTH_ALTS as u64) as usize]
     } else {
         base
     }
@@ -638,6 +691,20 @@ impl VerifyBackend for SyntheticTarget {
             .unwrap_or(0)
     }
 
+    /// Every row is a pure function of `(committed, draft)` — the
+    /// synthetic target carries no per-row KV state — so tree-expanded
+    /// windows (several root→leaf rows sharing one session id) are
+    /// safe here.
+    fn supports_tree_rows(&self) -> bool {
+        true
+    }
+
+    fn note_committed(&mut self, id: u32, len: usize) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            *s = len;
+        }
+    }
+
     fn label(&self) -> String {
         format!("synthetic:{}", self.current_version().name)
     }
@@ -676,6 +743,58 @@ impl DraftSource for SyntheticDraft {
         }
         prop.edge_tokens = k;
         Ok(prop)
+    }
+
+    /// Bucket-aligned comb (wire v8 tree speculation): the linear chain
+    /// plus `branching - 1` single-token alternate leaves hedging the
+    /// target's possible drifts ([`synth_alt_tokens`]) — but ONLY at
+    /// chain positions `p` whose root→leaf path length falls in the
+    /// SAME [`bucket_k`] class as the chain itself. Every tree row then
+    /// rides a stacked dispatch the chain already pays for, so the tree
+    /// adds zero bucket classes and any acceptance gain strictly
+    /// increases accepted tokens per dispatch (the hetero bench gate).
+    /// A full comb would instead scatter rows over the {1, 2, 4, ...}
+    /// classes and inflate dispatch counts.
+    fn propose_tree(
+        &mut self,
+        committed: &[i32],
+        k: usize,
+        branching: usize,
+        temperature: f32,
+        top_p: f32,
+        rng: &mut SplitMix64,
+    ) -> Result<TreeProposal> {
+        let lin = self.propose(committed, k, temperature, top_p, rng)?;
+        let b = branching.clamp(1, crate::device::MAX_BRANCHING);
+        if b == 1 || lin.tokens.is_empty() {
+            return Ok(TreeProposal {
+                edge_tokens: lin.edge_tokens,
+                tokens: lin.tokens,
+                parents: Vec::new(),
+            });
+        }
+        let k = lin.tokens.len();
+        let kb = bucket_k(k);
+        let mut tokens = lin.tokens.clone();
+        let mut parents: Vec<u8> = (0..k as u8).collect();
+        let mut ctx = committed.to_vec();
+        for p in 1..=k {
+            // an alternate replacing chain position p has path length p
+            if bucket_k(p) == kb {
+                let alts = synth_alt_tokens(self.seed, self.vocab, &ctx);
+                for &alt in alts.iter().take(b - 1) {
+                    tokens.push(alt);
+                    parents.push((p - 1) as u8);
+                }
+            }
+            ctx.push(lin.tokens[p - 1]);
+        }
+        let n_alt = tokens.len() - k;
+        Ok(TreeProposal {
+            tokens,
+            parents,
+            edge_tokens: lin.edge_tokens + n_alt,
+        })
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -969,6 +1088,113 @@ mod tests {
                 }
             }
         }
+    }
+
+    // --- tree speculation (wire v8) -----------------------------------
+
+    #[test]
+    fn alt_tokens_are_distinct_and_cover_target_drift() {
+        let ctx = vec![1, 70, 80, 90];
+        let alts = synth_alt_tokens(7, 512, &ctx);
+        let base = synth_base_token(7, 512, &ctx);
+        let mut uniq: Vec<i32> = alts.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), SYNTH_ALTS, "alternates must be distinct");
+        assert!(!alts.contains(&base), "alternates never equal the base");
+        assert!(alts.iter().all(|&t| t >= SYNTH_RESERVED && t < 512));
+        // drift = 1.0: the target ALWAYS lands inside the hedge set
+        let mut t = SyntheticTarget::new(7).with_version("evolved", 1.0);
+        t.deploy("evolved").unwrap();
+        let mut c = ctx.clone();
+        for _ in 0..32 {
+            let drifted = t.target_token(&c);
+            assert_ne!(drifted, synth_base_token(7, 512, &c));
+            assert!(
+                synth_alt_tokens(7, 512, &c).contains(&drifted),
+                "drift target must be one of the 8 alternates"
+            );
+            c.push(drifted);
+        }
+    }
+
+    #[test]
+    fn comb_tree_is_bucket_aligned_and_linear_at_branching_one() {
+        let mut d = SyntheticDraft::new(7);
+        let committed = vec![1, 70, 80, 90];
+        for k in 1..=8usize {
+            let lin = d.propose(&committed, k, 0.0, 1.0, &mut rng()).unwrap();
+            for b in 1..=4usize {
+                let t = d
+                    .propose_tree(&committed, k, b, 0.0, 1.0, &mut rng())
+                    .unwrap();
+                assert_eq!(&t.tokens[..k], &lin.tokens[..], "chain must equal propose()");
+                if b == 1 {
+                    assert!(t.is_linear(), "branching 1 is the linear wire form");
+                    assert_eq!(t.edge_tokens, lin.edge_tokens);
+                    continue;
+                }
+                // every alternate path length stays in the chain's
+                // bucket class — trees never add dispatch classes
+                let aligned = (1..=k).filter(|&p| bucket_k(p) == bucket_k(k)).count();
+                assert_eq!(t.n_nodes(), k + aligned * (b - 1));
+                assert_eq!(t.edge_tokens, lin.edge_tokens + aligned * (b - 1));
+                for i in k..t.n_nodes() {
+                    let path_len = t.parents[i] as usize + 1;
+                    assert_eq!(
+                        bucket_k(path_len),
+                        bucket_k(k),
+                        "k {k} b {b}: alternate path length {path_len} left the bucket"
+                    );
+                    // hedge token = one of the context's alternates
+                    let mut ctx = committed.clone();
+                    ctx.extend_from_slice(&lin.tokens[..t.parents[i] as usize]);
+                    assert!(synth_alt_tokens(7, 512, &ctx).contains(&t.tokens[i]));
+                }
+                // chain prefix parents are the identity walk
+                assert_eq!(&t.parents[..k], (0..k as u8).collect::<Vec<_>>().as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn tree_rows_share_session_and_note_committed_reasserts_capacity() {
+        let mut t = SyntheticTarget::new(7).with_version("evolved", 1.0);
+        t.deploy("evolved").unwrap();
+        assert!(t.supports_tree_rows());
+        let committed = vec![1, 70, 80, 90];
+        t.start_session(1, &committed).unwrap();
+        // drift 1.0 breaks the chain at position 1; the hedge row
+        // carrying the right alternate extends one token further
+        let drifted = t.target_token(&committed);
+        let base = synth_base_token(7, 512, &committed);
+        let chain = vec![base, synth_base_token(7, 512, &[committed.clone(), vec![base]].concat())];
+        let hedge = vec![drifted];
+        let reqs = [
+            BatchVerifyReq {
+                id: 1,
+                committed: &committed,
+                draft: &chain,
+                mode: VerifyMode::Greedy,
+            },
+            BatchVerifyReq {
+                id: 1,
+                committed: &committed,
+                draft: &hedge,
+                mode: VerifyMode::Greedy,
+            },
+        ];
+        let verdicts = t.verify_batch(&reqs, 0.0, 1.0, &mut rng()).unwrap();
+        assert_eq!(verdicts[0].tau, 0, "chain row rejects at the drift");
+        assert_eq!(verdicts[0].correction, drifted);
+        assert_eq!(verdicts[1].tau, 1, "hedge row rides through the drift");
+        // row-order bookkeeping recorded the LAST row; the verifier
+        // re-asserts the winning row's commit length
+        let win_len = committed.len() + verdicts[1].tau + 1;
+        t.note_committed(1, win_len);
+        assert_eq!(t.remaining_capacity(1), t.max_ctx - win_len);
+        t.note_committed(99, 1); // unknown session: ignored
+        assert_eq!(t.remaining_capacity(99), 0);
     }
 
     #[test]

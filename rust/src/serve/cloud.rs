@@ -307,8 +307,23 @@ async fn handle_frame<T: Transport>(
                 // reattaches rather than leaking a session
             }
             let open = OpenMsg::decode(&f.payload)?;
+            // a pre-v8 edge cannot encode the profile tail; one arriving
+            // on a downgraded connection is a protocol violation, same
+            // class as spec-tagged drafts below v3
+            if open.profile.is_some() && negotiated < 8 {
+                bail!(
+                    "device profile on a wire v{negotiated} connection (stream {})",
+                    f.stream
+                );
+            }
             let info = verifier
-                .open_tier(open.prompt, open.max_new as usize, open.nonce, open.tier)
+                .open_profile(
+                    open.prompt,
+                    open.max_new as usize,
+                    open.nonce,
+                    open.tier,
+                    open.profile,
+                )
                 .await?;
             let ack = Frame::on(
                 f.stream,
@@ -396,6 +411,12 @@ async fn handle_frame<T: Transport>(
             if !msg.spec.is_empty() && negotiated < 3 {
                 bail!(
                     "speculative draft on a wire v{negotiated} connection (stream {})",
+                    f.stream
+                );
+            }
+            if msg.is_tree() && negotiated < 8 {
+                bail!(
+                    "tree draft on a wire v{negotiated} connection (stream {})",
                     f.stream
                 );
             }
@@ -542,9 +563,24 @@ pub async fn serve_loopback(
     edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>)>,
     ecfg: EdgeSessionConfig,
 ) -> Result<(Vec<EdgeReport>, ServingMetrics)> {
+    let edges = edges
+        .into_iter()
+        .map(|(d, p)| (d, p, ecfg.clone()))
+        .collect();
+    serve_loopback_each(vcfg, make_backend, edges).await
+}
+
+/// [`serve_loopback`] with a PER-SESSION edge config — how the hetero
+/// device-matrix suite runs unlike devices (profile, branching, stride)
+/// side by side against one verifier (wire v8).
+pub async fn serve_loopback_each(
+    vcfg: VerifierConfig,
+    make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
+    edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>, EdgeSessionConfig)>,
+) -> Result<(Vec<EdgeReport>, ServingMetrics)> {
     let verifier = VerifierHandle::spawn(vcfg, make_backend)?;
     let mut tasks = Vec::new();
-    for (draft, prompt) in edges {
+    for (draft, prompt, ecfg) in edges {
         let (edge_t, cloud_t) = loopback_pair();
         let v = verifier.clone();
         tokio::spawn(async move {
@@ -552,7 +588,6 @@ pub async fn serve_loopback(
                 log(Level::Warn, "serve", &format!("loopback conn: {e:#}"));
             }
         });
-        let ecfg = ecfg.clone();
         tasks.push(tokio::spawn(async move {
             let mut draft = draft;
             let mut t = edge_t;
@@ -582,6 +617,24 @@ pub async fn serve_loopback_mux(
     edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>)>,
     ecfg: EdgeSessionConfig,
 ) -> Result<(Vec<EdgeReport>, ServingMetrics)> {
+    let edges = edges
+        .into_iter()
+        .map(|(d, p)| (d, p, ecfg.clone()))
+        .collect();
+    serve_loopback_mux_each(vcfg, make_backend, edges).await
+}
+
+/// [`serve_loopback_mux`] with a PER-SESSION edge config (wire v8
+/// hetero populations). The shared connection's `Hello` uses the first
+/// session's mode with the largest `k_max` across sessions; per-session
+/// knobs that would violate the negotiated version (pipelining below
+/// v3, profiles/branching below v8) are clamped per session, mirroring
+/// `run_edge_session`'s own downgrade path.
+pub async fn serve_loopback_mux_each(
+    vcfg: VerifierConfig,
+    make_backend: impl FnOnce() -> Result<Box<dyn VerifyBackend>> + Send + 'static,
+    edges: Vec<(Box<dyn DraftSource + Send>, Vec<i32>, EdgeSessionConfig)>,
+) -> Result<(Vec<EdgeReport>, ServingMetrics)> {
     let verifier = VerifierHandle::spawn(vcfg, make_backend)?;
     let (edge_t, cloud_t) = loopback_pair();
     let v = verifier.clone();
@@ -590,20 +643,29 @@ pub async fn serve_loopback_mux(
             log(Level::Warn, "serve", &format!("loopback mux conn: {e:#}"));
         }
     });
-    let mut mux = EdgeMux::connect(Box::new(edge_t), None, &ecfg).await?;
-    // belt-and-braces: sessions on a v2-negotiated mux must not pipeline
-    let ecfg = if mux.wire_version() < 3 && ecfg.pipeline_depth != 1 {
-        EdgeSessionConfig {
-            pipeline_depth: 1,
-            ..ecfg
-        }
-    } else {
-        ecfg
-    };
+    let mut hello_cfg = edges
+        .first()
+        .map(|(_, _, c)| c.clone())
+        .unwrap_or_default();
+    hello_cfg.k_max = edges
+        .iter()
+        .map(|(_, _, c)| c.k_max)
+        .max()
+        .unwrap_or(hello_cfg.k_max);
+    let mut mux = EdgeMux::connect(Box::new(edge_t), None, &hello_cfg).await?;
+    let wire = mux.wire_version();
     let mut tasks = Vec::new();
-    for (draft, prompt) in edges {
+    for (draft, prompt, ecfg) in edges {
         let stream = mux.open_stream();
-        let ecfg = ecfg.clone();
+        // belt-and-braces: clamp anything the negotiated version cannot
+        // carry (the mux streams skip run_edge_session's own gate)
+        let ecfg = EdgeSessionConfig {
+            pipeline_depth: if wire < 3 { 1 } else { ecfg.pipeline_depth },
+            tier: if wire < 7 { 1 } else { ecfg.tier },
+            profile: if wire < 8 { None } else { ecfg.profile },
+            branching: if wire < 8 { 1 } else { ecfg.branching },
+            ..ecfg
+        };
         tasks.push(tokio::spawn(async move {
             let mut draft = draft;
             let mut t = stream;

@@ -30,7 +30,9 @@ use super::transport::{BoxFuture, Reconnect, Transport};
 use crate::channel::ChannelState;
 use crate::coordinator::edge::DraftSource;
 use crate::coordinator::policy::{AdaptivePolicy, LatencyModel};
+use crate::device::{DeviceProfile, SpecPlan};
 use crate::devices::{CloudProfile, EdgeDevice, A800_70B, JETSON_ORIN};
+use crate::energy::EnergyBudget;
 use crate::protocol::frame::{
     BusyMsg, CancelMsg, Frame, FrameKind, Hello, HelloAck, OpenAck, OpenMsg, RedirectMsg,
     ReplicaInfoMsg, ResumeAck, ResumeMsg, MIN_WIRE_VERSION, WIRE_VERSION,
@@ -126,6 +128,20 @@ pub struct EdgeSessionConfig {
     /// under overload (they still queue — tiers never change tokens).
     /// Clamped back to 1 on connections negotiated below v7.
     pub tier: u32,
+    /// Device profile announced at `Open` (wire v8): compute tier,
+    /// channel class, and remaining energy budget. `None` (the
+    /// default) opens an unprofiled session whose bytes — and behavior
+    /// — are identical to wire v7. Cleared on connections negotiated
+    /// below v8 (the pre-v8 open decoder rejects the profile tail).
+    pub profile: Option<DeviceProfile>,
+    /// Ceiling on the draft-tree branching factor (wire v8). 1 (the
+    /// default) keeps every draft a linear chain, byte-identical to
+    /// v7; up to [`crate::device::MAX_BRANCHING`] lets
+    /// `AdaptivePolicy::select_plan` hedge the chain with alternate
+    /// leaves when the device tier and remaining energy allow.
+    /// Unprofiled sessions stay linear regardless. Clamped back to 1
+    /// on connections negotiated below v8.
+    pub branching: usize,
     /// Device/cloud compute constants for the latency model's
     /// alpha_edge / T_base terms (the network terms are measured).
     pub device: &'static EdgeDevice,
@@ -150,6 +166,8 @@ impl Default for EdgeSessionConfig {
             max_reattach: 8,
             reroot_on_unknown_session: false,
             tier: 1,
+            profile: None,
+            branching: 1,
             device: &JETSON_ORIN,
             cloud: &A800_70B,
             trace: None,
@@ -471,6 +489,10 @@ struct LinkStats {
     rtt_summary: Summary,
     k_summary: Summary,
     latency: LatencySummary,
+    /// Session energy budget (wire v8): drained per drafted tree node,
+    /// read by [`LinkStats::select_plan`] to step speculation down as
+    /// the battery empties. Unmetered for unprofiled sessions.
+    energy: EnergyBudget,
 }
 
 impl LinkStats {
@@ -483,7 +505,49 @@ impl LinkStats {
             rtt_summary: Summary::new(),
             k_summary: Summary::new(),
             latency: LatencySummary::new(),
+            energy: cfg
+                .profile
+                .map_or(EnergyBudget::unmetered(), |p| EnergyBudget::new(p.energy_budget_j)),
         }
+    }
+
+    /// Joint per-round speculation plan (wire v8): profiled sessions
+    /// run the resource-aware [`AdaptivePolicy::select_plan`] against
+    /// the measured channel — stride capped by the device tier,
+    /// branching a pure function of (tier, remaining energy, config
+    /// cap). The unprofiled path reduces EXACTLY to the classic
+    /// `select_k` with a linear chain, so pre-v8 sessions behave byte
+    /// for byte as before. Tree rounds are greedy-only (the verifier
+    /// rejects stochastic trees), so a stochastic config pins
+    /// branching at 1.
+    fn select_plan(&mut self, cfg: &EdgeSessionConfig) -> SpecPlan {
+        let Some(profile) = cfg.profile else {
+            return SpecPlan { k: self.select_k(cfg), depth: 1, branching: 1 };
+        };
+        let state = ChannelState {
+            up_bps: self.goodput_bps.get().max(1e4),
+            down_bps: self.goodput_bps.get().max(1e4),
+            prop_ms: (self.rtt_ms.get() / 2.0).max(0.01),
+            fading: false,
+            loss_rate: 0.0,
+        };
+        let lat = LatencyModel::build(&state, cfg.device, cfg.cloud, WireFormat::Compact);
+        let mut plan = self.policy.select_plan(
+            &lat,
+            profile.tier,
+            self.energy.remaining_frac(),
+            1, // the sequential loop owns this call; depth is decided upstream
+            cfg.branching.max(1),
+        );
+        if let Some(k) = cfg.fixed_k {
+            // the pinning/ablation knob overrides the stride but never
+            // the branching (which stays tier- and energy-capped)
+            plan.k = k.clamp(1, cfg.k_max.max(1));
+        }
+        if cfg.mode != VerifyMode::Greedy {
+            plan.branching = 1;
+        }
+        plan
     }
 
     fn select_k(&mut self, cfg: &EdgeSessionConfig) -> usize {
@@ -530,7 +594,14 @@ impl LinkStats {
                     .fixed_k
                     .unwrap_or_else(|| self.policy.select_k(&lat))
                     .clamp(1, cfg.k_max.max(1));
-                self.policy.select_pipeline_depth(&lat, k, MAX_PIPELINE_DEPTH)
+                let d = self.policy.select_pipeline_depth(&lat, k, MAX_PIPELINE_DEPTH);
+                // a device profile caps AUTO depth at its tier ceiling
+                // (an explicitly configured depth is an ablation knob
+                // and stays untouched)
+                match cfg.profile {
+                    Some(p) => d.min(p.tier.plan_caps().depth).max(1),
+                    None => d,
+                }
             }
             d => d.min(MAX_PIPELINE_DEPTH),
         }
@@ -703,6 +774,7 @@ where
                 max_new: cfg.max_new as u32,
                 nonce,
                 tier: cfg.tier,
+                profile: cfg.profile.map(|p| p.to_wire(stats.energy.remaining_j())),
             };
             t.send_frame(Frame::on(stream, FrameKind::Open, open.encode()))
                 .await?;
@@ -767,6 +839,9 @@ where
                         max_new: remaining as u32,
                         nonce: st.reroot_nonce,
                         tier: cfg.tier,
+                        // the re-rooted session inherits the device and
+                        // whatever energy the first incarnation left
+                        profile: cfg.profile.map(|p| p.to_wire(stats.energy.remaining_j())),
                     };
                     t.send_frame(Frame::on(stream, FrameKind::Open, open.encode()))
                         .await?;
@@ -834,26 +909,50 @@ where
         res?;
     } else {
         while !st.core.done {
-            let k = stats.select_k(cfg);
+            let plan = stats.select_plan(cfg);
             let t_draft = cfg.trace.as_ref().map(|_| Instant::now());
-            let prop = draft.propose(&st.core.committed, k, cfg.temperature, cfg.top_p, rng)?;
+            // tree speculation (wire v8): a profiled session with
+            // branching headroom hedges the chain with alternate
+            // leaves; every other round takes the EXACT v7 linear path
+            // (same calls, same rng draws, same bytes)
+            let (tokens, chosen_probs, tree) = if plan.branching > 1 {
+                let tp = draft.propose_tree(
+                    &st.core.committed,
+                    plan.k,
+                    plan.branching,
+                    cfg.temperature,
+                    cfg.top_p,
+                    rng,
+                )?;
+                (tp.tokens, vec![], tp.parents)
+            } else {
+                let p = draft.propose(&st.core.committed, plan.k, cfg.temperature, cfg.top_p, rng)?;
+                (p.tokens, p.chosen_probs, vec![])
+            };
+            if let Some(p) = &cfg.profile {
+                // every tree node is one draft forward pass; charging is
+                // a pure function of (device, nodes) so the sim twin
+                // drains budgets in lockstep
+                stats.energy.charge_draft(p.device, tokens.len());
+            }
             let round = st.core.rounds as u32;
             let msg = DraftMsg {
                 session: st.id,
                 round,
-                tokens: prop.tokens.clone(),
-                chosen_probs: prop.chosen_probs,
+                tokens,
+                chosen_probs,
                 mode: cfg.mode,
                 wire: WireFormat::Compact,
                 basis_len: 0,
                 spec: vec![],
+                tree,
             };
             let air_up = msg.air_bytes();
             // recorded per LAUNCH — Busy retransmits of the identical
             // draft below add no Draft/Uplink events
             if let Some(tr) = &cfg.trace {
                 let d_ms = t_draft.map(|t| t.elapsed().as_secs_f64() * 1e3).unwrap_or(0.0);
-                tr.record(st.id, round, SpanKind::Draft, d_ms, prop.tokens.len() as u32, 0);
+                tr.record(st.id, round, SpanKind::Draft, d_ms, msg.tokens.len() as u32, 0);
                 tr.record(st.id, round, SpanKind::Uplink, 0.0, air_up as u32, 0);
             }
             let mut sent = Instant::now();
@@ -897,18 +996,37 @@ where
                 }
             };
 
+            // a tree round's tau counts along the WINNING root→leaf
+            // path, named by the verdict's leaf index; the edge
+            // reconstructs the path from its own retained tree (only
+            // the index crossed the air). Linear rounds apply the whole
+            // chain exactly as before.
+            let path: Vec<i32>;
+            let applied: &[i32] = if msg.is_tree() {
+                let leaf = v
+                    .leaf
+                    .ok_or_else(|| anyhow!("tree verdict for round {round} without a leaf"))?;
+                if (leaf as usize) >= msg.tokens.len() {
+                    bail!("tree verdict leaf {leaf} out of range for round {round}");
+                }
+                path = msg.tree_path(leaf);
+                &path
+            } else {
+                &msg.tokens
+            };
+
             // measure the link this round actually saw
             let rtt_now = sent.elapsed().as_secs_f64() * 1e3;
-            stats.observe_round(rtt_now, air_up + v.air_bytes(), prop.tokens.len());
+            stats.observe_round(rtt_now, air_up + v.air_bytes(), applied.len());
             if let Some(tr) = &cfg.trace {
                 tr.record(st.id, round, SpanKind::Downlink, rtt_now, v.air_bytes() as u32, 0);
             }
 
-            let tau = (v.tau as usize).min(prop.tokens.len());
-            if !prop.tokens.is_empty() {
-                stats.policy.observe(tau, prop.tokens.len());
+            let tau = (v.tau as usize).min(applied.len());
+            if !applied.is_empty() {
+                stats.policy.observe(tau, applied.len());
             }
-            st.core.apply_verdict(&prop.tokens, tau, v.correction, v.eos, false);
+            st.core.apply_verdict(applied, tau, v.correction, v.eos, false);
         }
     }
     t.send_frame(Frame::on(stream, FrameKind::Bye, vec![]))
@@ -973,6 +1091,9 @@ where
             } else {
                 None
             };
+            if let Some(p) = &cfg.profile {
+                stats.energy.charge_draft(p.device, prop.tokens.len());
+            }
             let msg = DraftMsg {
                 session: st.id,
                 round: plan.round,
@@ -982,6 +1103,11 @@ where
                 wire: WireFormat::Compact,
                 basis_len: plan.basis_len,
                 spec: plan.spec.clone(),
+                // pipelined rounds keep drafts linear: a retracted
+                // speculative round would have drafted its tree from a
+                // poisoned prefix (`select_plan` forces branching = 1
+                // whenever depth > 1)
+                tree: vec![],
             };
             let air_up = msg.air_bytes();
             // per LAUNCH (a cancelled round redrafted later records
@@ -1107,12 +1233,19 @@ where
         }
     };
     // a v2-negotiated connection must never see spec-tagged drafts or
-    // Cancel frames (force the sequential loop), and a pre-v7 peer
-    // rejects the Open tier tail (clamp back to the default tier)
-    if (negotiated < 3 && cfg.pipeline_depth != 1) || (negotiated < 7 && cfg.tier != 1) {
+    // Cancel frames (force the sequential loop), a pre-v7 peer rejects
+    // the Open tier tail (clamp back to the default tier), and a
+    // pre-v8 peer rejects both the Open profile tail and tree-tagged
+    // drafts (strip the profile, pin branching at 1)
+    if (negotiated < 3 && cfg.pipeline_depth != 1)
+        || (negotiated < 7 && cfg.tier != 1)
+        || (negotiated < 8 && (cfg.profile.is_some() || cfg.branching != 1))
+    {
         let downgraded = EdgeSessionConfig {
             pipeline_depth: if negotiated < 3 { 1 } else { cfg.pipeline_depth },
             tier: if negotiated < 7 { 1 } else { cfg.tier },
+            profile: if negotiated < 8 { None } else { cfg.profile },
+            branching: if negotiated < 8 { 1 } else { cfg.branching },
             ..cfg.clone()
         };
         return run_session_on(t, SESSION_STREAM, draft, prompt, &downgraded).await;

@@ -154,7 +154,8 @@ pub use backend::{
     SyntheticDraft, SyntheticTarget, VerifyBackend,
 };
 pub use cloud::{
-    handle_conn, serve_cloud, serve_cloud_with, serve_loopback, serve_loopback_mux, ServerHandle,
+    handle_conn, serve_cloud, serve_cloud_with, serve_loopback, serve_loopback_each,
+    serve_loopback_mux, serve_loopback_mux_each, ServerHandle,
 };
 pub use edge::{
     busy_backoff_ms, edge_handshake, run_edge_session, run_session_on, EdgeReport,

@@ -283,6 +283,7 @@ mod tests {
             tau: tau as u8,
             correction,
             eos,
+            leaf: None,
         }
     }
 

@@ -67,7 +67,8 @@ use super::session::{BatchDecision, BatchMode, BatchWindow, SessionCore, SlotBat
 use crate::metrics::ServingMetrics;
 use crate::runtime::{KvBlockPool, KvLease};
 use crate::obs::{SpanKind, Trace};
-use crate::protocol::{DraftMsg, VerifyMsg};
+use crate::protocol::frame::DeviceProfileMsg;
+use crate::protocol::{DraftMsg, VerifyMode, VerifyMsg};
 use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -374,6 +375,14 @@ pub struct VerifierCore {
     /// headroom — the cloud-side mirror of the edge mux's weighted
     /// tiers.
     tier_of: HashMap<u32, u32>,
+    /// Device profile per live session (wire v8 `Open::profile`;
+    /// absent for pre-v8 peers and unprofiled opens). The cloud keeps
+    /// it for telemetry and capacity planning — the speculation policy
+    /// that CONSUMES the profile runs edge-side, so committed bytes
+    /// never depend on this map. Dropped with the session; a fleet
+    /// handoff does not carry it (the edge re-announces on its next
+    /// `Open`, and an imported session simply reads as unprofiled).
+    profile_of: HashMap<u32, DeviceProfileMsg>,
     /// Earliest grace deadline among parked sessions and finished
     /// residues (+inf when none) — cheap gate so the per-iteration
     /// eviction sweep skips the map walks until something can expire.
@@ -436,6 +445,7 @@ impl VerifierCore {
             redirected_tokens: HashMap::new(),
             wire_of: HashMap::new(),
             tier_of: HashMap::new(),
+            profile_of: HashMap::new(),
             next_sweep_ms: f64::INFINITY,
             next_ledger_sweep_ms: f64::NEG_INFINITY,
             window,
@@ -520,6 +530,12 @@ impl VerifierCore {
         self.parked.len()
     }
 
+    /// The wire v8 device profile a live session announced at `Open`,
+    /// if any. Fleet imports and pre-v8 peers read as unprofiled.
+    pub fn device_profile(&self, id: u32) -> Option<&DeviceProfileMsg> {
+        self.profile_of.get(&id)
+    }
+
     pub fn backend_label(&self) -> String {
         self.backend.label()
     }
@@ -595,6 +611,22 @@ impl VerifierCore {
         nonce: u64,
         tier: u32,
     ) -> Result<OpenInfo> {
+        self.open_session_profile(prompt, max_new, nonce, tier, None)
+    }
+
+    /// [`VerifierCore::open_session_tier`] with the peer's wire v8
+    /// device profile attached. The profile is bookkeeping, not policy:
+    /// the cloud records it (telemetry, per-tier capacity accounting)
+    /// while the resource-aware speculation plan that reads it runs on
+    /// the edge — so a profile can never change committed bytes.
+    pub fn open_session_profile(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+        nonce: u64,
+        tier: u32,
+        profile: Option<DeviceProfileMsg>,
+    ) -> Result<OpenInfo> {
         if nonce != 0 {
             if let Some(&id) = self.open_nonces.get(&nonce) {
                 if self.sessions.contains_key(&id) {
@@ -633,6 +665,16 @@ impl VerifierCore {
         }
         if tier != 1 {
             self.tier_of.insert(id, tier);
+        }
+        if let Some(p) = profile {
+            if let Some(slot) = self
+                .metrics
+                .sessions_by_device_tier
+                .get_mut(p.compute_tier as usize)
+            {
+                *slot += 1;
+            }
+            self.profile_of.insert(id, p);
         }
         self.metrics.sessions_opened += 1;
         Ok(OpenInfo {
@@ -718,12 +760,29 @@ impl VerifierCore {
             self.metrics.drafts_swallowed += 1;
             bail!("session {id} is parked (reconnect pending)");
         }
+        // wire v8 tree tail: structurally valid, and greedy-only — the
+        // edge never trees a stochastic round (tree reduction needs
+        // per-path determinism to commit the best root path)
+        if msg.is_tree() {
+            if !msg.tree_valid() {
+                self.metrics.drafts_swallowed += 1;
+                bail!(
+                    "session {id}: malformed tree topology ({} parents for {} tokens)",
+                    msg.tree.len(),
+                    msg.tokens.len()
+                );
+            }
+            if msg.mode != VerifyMode::Greedy {
+                self.metrics.drafts_swallowed += 1;
+                bail!("session {id}: tree drafts require greedy verification");
+            }
+        }
         // remember the live connection's wire version: deferred rounds
         // promoted later (promote_ready) have no connection in hand
         self.wire_of.insert(id, peer_wire);
         if let Some(p) = self.pending.get(&id) {
             if p.round == msg.round {
-                if p.tokens == msg.tokens && p.spec == msg.spec {
+                if p.tokens == msg.tokens && p.spec == msg.spec && p.tree == msg.tree {
                     // duplicated while still queued: the round runs
                     // once, but the NEWEST requester takes over the
                     // reply slot (its predecessor may be a dead
@@ -843,13 +902,19 @@ impl VerifierCore {
     }
 
     /// Continuous admission gate: reserve KV pool pages covering `id`'s
-    /// full slot row — committed prefix + pending draft + correction
-    /// token. A sequence larger than the ENTIRE pool is admitted
-    /// unreserved (refusing it forever would wedge the session; the
-    /// pool bounds aggregate residency, not one row's length).
+    /// full slot row — committed prefix + pending draft nodes + one
+    /// correction token per root→leaf row (a wire v8 tree draft fans
+    /// out into `n_leaves` verification rows, each of which may append
+    /// its own correction; counting chains instead would under-reserve
+    /// oversized tree admissions). A sequence larger than the ENTIRE
+    /// pool is admitted unreserved (refusing it forever would wedge the
+    /// session; the pool bounds aggregate residency, not one row's
+    /// length).
     fn reserve_slot_kv(&mut self, id: u32) -> bool {
         let need = match (self.sessions.get(&id), self.pending.get(&id)) {
-            (Some(core), Some(msg)) => core.committed.len() + msg.tokens.len() + 1,
+            (Some(core), Some(msg)) => {
+                core.committed.len() + msg.tokens.len() + msg.n_leaves().max(1)
+            }
             // nothing to back (defensive: offers always follow a
             // pending insert) — admit rather than wedge
             _ => return true,
@@ -922,7 +987,8 @@ impl VerifierCore {
         if let Some(pos) = q.iter().position(|m| m.round == msg.round) {
             // identical payload: a transport retransmit — the round
             // stays queued once, the newest waiter takes the reply slot
-            if q[pos].tokens == msg.tokens && q[pos].spec == msg.spec {
+            if q[pos].tokens == msg.tokens && q[pos].spec == msg.spec && q[pos].tree == msg.tree
+            {
                 q[pos] = msg;
                 self.metrics.drafts_swallowed += 1;
                 return Ok(SubmitOutcome::TakeOver);
@@ -1033,6 +1099,7 @@ impl VerifierCore {
         self.redirect_sessions.remove(&id);
         self.wire_of.remove(&id);
         self.tier_of.remove(&id);
+        self.profile_of.remove(&id);
         self.backend.end_session(id);
         let deadline = now_ms + self.cfg.resume_grace_ms;
         self.redirected_ids.insert(id, deadline);
@@ -1354,13 +1421,47 @@ impl VerifierCore {
         let batch = jobs.len();
         let total_draft: usize = jobs.iter().map(|(_, m, _)| m.tokens.len()).sum();
         let max_k = jobs.iter().map(|(_, m, _)| m.tokens.len()).max().unwrap_or(0);
+        // ---- expand: tree drafts fan out into ragged rows ------------
+        // A wire v8 tree draft becomes one verification row per
+        // root→leaf path, all sharing the session id — legal only
+        // against backends whose rows are independent pure functions of
+        // (committed, draft) (`supports_tree_rows`); everything else
+        // verifies the first root path (the main chain — leaf node
+        // indices ascend and the edge's comb appends alternates after
+        // the chain) and stays effectively linear. Rows are contiguous
+        // per job and in ascending leaf order, so the reduction below
+        // walks them in one pass. `None` paths borrow the draft's own
+        // token vector — linear drafts allocate nothing extra.
+        let tree_ok = self.backend.supports_tree_rows();
+        let mut rows: Vec<(usize, Option<u8>, Option<Vec<i32>>)> =
+            Vec::with_capacity(jobs.len());
+        for (ji, (_, msg, _)) in jobs.iter().enumerate() {
+            if !msg.is_tree() {
+                rows.push((ji, None, None));
+            } else if tree_ok {
+                for leaf in msg.tree_leaves() {
+                    rows.push((ji, Some(leaf), Some(msg.tree_path(leaf))));
+                }
+            } else {
+                let leaf = msg.tree_leaves()[0];
+                rows.push((ji, Some(leaf), Some(msg.tree_path(leaf))));
+            }
+        }
+        let n_rows = rows.len();
         // distinct planner bucket classes = stacked [B, K] device
-        // dispatches this close (mirrors `plan_buckets`: every member
-        // pads to the next power-of-two K and rides one stacked call
-        // per class on the engine path)
+        // dispatches this close (mirrors `plan_buckets`: every row pads
+        // to the next power-of-two K and rides one stacked call per
+        // class on the engine path). Counted over ROWS: a bucket-
+        // aligned comb's alternate paths land in the chain's existing
+        // classes, so tree speculation adds rows without adding
+        // dispatches.
         let stacked = {
-            let mut kinds: Vec<usize> =
-                jobs.iter().map(|(_, m, _)| bucket_k(m.tokens.len())).collect();
+            let mut kinds: Vec<usize> = rows
+                .iter()
+                .map(|(ji, _, path)| {
+                    bucket_k(path.as_ref().map_or(jobs[*ji].1.tokens.len(), Vec::len))
+                })
+                .collect();
             kinds.sort_unstable();
             kinds.dedup();
             kinds.len()
@@ -1386,13 +1487,16 @@ impl VerifierCore {
         // own forward pass; see the verify_batch contract in
         // serve::backend on bucketing, padding and the Regime-B
         // distribution reconstruction).
-        let reqs: Vec<BatchVerifyReq> = jobs
+        let reqs: Vec<BatchVerifyReq> = rows
             .iter()
-            .map(|(id, msg, _)| BatchVerifyReq {
-                id: *id,
-                committed: &self.sessions[id].committed,
-                draft: &msg.tokens,
-                mode: msg.mode,
+            .map(|(ji, _, path)| {
+                let (id, msg, _) = &jobs[*ji];
+                BatchVerifyReq {
+                    id: *id,
+                    committed: &self.sessions[id].committed,
+                    draft: path.as_deref().unwrap_or(&msg.tokens),
+                    mode: msg.mode,
+                }
             })
             .collect();
         let t_exec = Instant::now();
@@ -1404,11 +1508,11 @@ impl VerifierCore {
         )?;
         let verify_ms = t_exec.elapsed().as_secs_f64() * 1e3;
         drop(reqs);
-        if verdicts.len() != jobs.len() {
+        if verdicts.len() != n_rows {
             bail!(
-                "backend returned {} verdicts for {} requests",
+                "backend returned {} verdicts for {} rows",
                 verdicts.len(),
-                jobs.len()
+                n_rows
             );
         }
         // counted only once the backend actually produced verdicts, so
@@ -1416,26 +1520,53 @@ impl VerifierCore {
         // (the conservation audit pins them equal)
         self.metrics.note_batch(batch);
         self.metrics.stacked_dispatches += stacked;
+        self.metrics.verify_rows += n_rows;
         self.metrics.latency.verify_ms.record(verify_ms);
 
         // ---- apply ------------------------------------------------
+        // Reduce each job's rows to one verdict: the deepest accepted
+        // prefix (max tau) wins; ties break toward the SMALLEST row
+        // index. The main chain is always a tree job's first row, so a
+        // tie — including every drift-free round — commits exactly the
+        // linear path: branching never changes committed bytes unless
+        // an alternate strictly beats the chain.
         let mut out = Vec::with_capacity(jobs.len());
-        for ((id, msg, wait_ms), v) in jobs.into_iter().zip(verdicts) {
+        let mut row_iter = rows.into_iter().zip(verdicts).peekable();
+        for (ji, (id, msg, wait_ms)) in jobs.into_iter().enumerate() {
+            let mut winner = None;
+            while row_iter.peek().map_or(false, |((rj, _, _), _)| *rj == ji) {
+                let ((_, leaf, path), v) = row_iter.next().expect("peeked row");
+                if winner.as_ref().map_or(true, |w: &(_, _, _)| v.tau > w.2.tau) {
+                    winner = Some((leaf, path, v));
+                }
+            }
+            let Some((leaf, path, v)) = winner else {
+                continue; // unreachable: every job planned >= 1 row
+            };
             let Some(core) = self.sessions.get_mut(&id) else {
                 continue; // unreachable: planned against live sessions
             };
+            let draft: &[i32] = path.as_deref().unwrap_or(&msg.tokens);
+            if msg.is_tree() {
+                self.metrics.tree_rounds += 1;
+                // per-row bookkeeping in the backend left the LAST
+                // row's acceptance as the session's length; re-assert
+                // the winning path's before reading capacity
+                self.backend
+                    .note_committed(id, core.committed.len() + v.tau + 1);
+            }
             let out_of_capacity =
                 self.backend.remaining_capacity(id) <= self.cfg.capacity_floor;
-            let finished =
-                core.apply_verdict(&msg.tokens, v.tau, v.correction, v.eos, out_of_capacity);
+            let finished = core.apply_verdict(draft, v.tau, v.correction, v.eos, out_of_capacity);
             let vmsg = VerifyMsg {
                 session: id,
                 round: msg.round,
                 tau: v.tau as u8,
                 correction: v.correction,
                 eos: finished,
+                leaf: if msg.is_tree() { leaf } else { None },
             };
-            self.metrics.note_round(msg.tokens.len(), v.tau);
+            self.metrics.note_round(draft.len(), v.tau);
             self.metrics.bytes_down += vmsg.air_bytes();
             // cloud-observed round latency: admission → verdict ready
             self.metrics.latency.round_ms.record(wait_ms + verify_ms);
@@ -1473,6 +1604,7 @@ impl VerifierCore {
                 self.attachment_of.remove(&id);
                 self.wire_of.remove(&id);
                 self.tier_of.remove(&id);
+                self.profile_of.remove(&id);
                 self.redirect_sessions.remove(&id);
             }
             // continuous mode: the verdict frees the slot — its KV
@@ -1483,9 +1615,12 @@ impl VerifierCore {
         }
         if self.continuous() {
             // a close is the slot table's drain point: record how full
-            // the stacked executor ran, then re-seat FIFO waiters with
-            // the pages the verdicts just returned
-            self.metrics.slot_occupancy.add(batch as f64);
+            // the stacked executor ran — in ROWS, since a tree draft's
+            // leaves each occupy an executor row (counting chains would
+            // under-report occupancy under tree speculation) — then
+            // re-seat FIFO waiters with the pages the verdicts just
+            // returned
+            self.metrics.slot_occupancy.add(n_rows as f64);
             self.refill_slots(now_ms);
         }
         Ok(out)
@@ -1616,6 +1751,7 @@ impl VerifierCore {
             self.attachment_of.remove(&id);
             self.wire_of.remove(&id);
             self.tier_of.remove(&id);
+            self.profile_of.remove(&id);
             self.redirect_sessions.remove(&id);
             self.release_slot_kv(id);
             self.backend.end_session(id);
@@ -1726,6 +1862,7 @@ impl VerifierCore {
             self.attachment_of.remove(&id);
             self.wire_of.remove(&id);
             self.tier_of.remove(&id);
+            self.profile_of.remove(&id);
             self.redirect_sessions.remove(&id);
             self.backend.end_session(id);
             self.metrics.sessions_aborted += 1;
@@ -1771,6 +1908,8 @@ enum VerifierCmd {
         nonce: u64,
         /// QoS tier (wire v7 `Open::tier`; 1 = default/bulk).
         tier: u32,
+        /// Device profile (wire v8 `Open::profile`; absent below v8).
+        profile: Option<DeviceProfileMsg>,
         reply: oneshot::Sender<Result<OpenInfo>>,
     },
     Verify {
@@ -1907,12 +2046,27 @@ impl VerifierHandle {
         nonce: u64,
         tier: u32,
     ) -> Result<OpenInfo> {
+        self.open_profile(prompt, max_new, nonce, tier, None).await
+    }
+
+    /// [`VerifierHandle::open_tier`] with the peer's wire v8 device
+    /// profile attached (telemetry + per-tier capacity accounting; the
+    /// resource-aware speculation policy itself runs edge-side).
+    pub async fn open_profile(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        nonce: u64,
+        tier: u32,
+        profile: Option<DeviceProfileMsg>,
+    ) -> Result<OpenInfo> {
         let (reply, rx) = oneshot::channel();
         self.post(VerifierCmd::Open {
             prompt,
             max_new,
             nonce,
             tier,
+            profile,
             reply,
         })?;
         rx.await.map_err(|_| anyhow!("verifier dropped the reply"))?
@@ -2167,9 +2321,11 @@ fn run_verifier(mut core: VerifierCore, rx: std_mpsc::Receiver<VerifierCmd>) {
                 max_new,
                 nonce,
                 tier,
+                profile,
                 reply,
             }) => {
-                let _ = reply.send(core.open_session_tier(&prompt, max_new, nonce, tier));
+                let _ =
+                    reply.send(core.open_session_profile(&prompt, max_new, nonce, tier, profile));
             }
             Ok(VerifierCmd::Verify {
                 id,
@@ -2400,6 +2556,7 @@ mod tests {
             wire: WireFormat::Compact,
             basis_len: 0,
             spec: vec![],
+            tree: vec![],
         }
     }
 
@@ -2427,7 +2584,187 @@ mod tests {
             wire: WireFormat::Compact,
             basis_len: committed.len() as u64,
             spec: spec.to_vec(),
+            tree: vec![],
         }
+    }
+
+    /// A wire v8 comb-tree draft for `round`: the synthetic edge's
+    /// bucket-aligned tree proposal with branching `b`.
+    fn tree_draft_for(id: u32, round: u32, committed: &[i32], k: usize, b: usize) -> DraftMsg {
+        let mut d = SyntheticDraft::new(7);
+        let mut rng = SplitMix64::new(0);
+        let p = d.propose_tree(committed, k, b, 0.0, 1.0, &mut rng).unwrap();
+        DraftMsg {
+            session: id,
+            round,
+            tokens: p.tokens,
+            chosen_probs: vec![],
+            mode: VerifyMode::Greedy,
+            wire: WireFormat::Compact,
+            basis_len: 0,
+            spec: vec![],
+            tree: p.parents,
+        }
+    }
+
+    #[test]
+    fn tree_round_with_no_drift_commits_the_linear_bytes() {
+        // drift-free target: every alternate loses its tie against the
+        // main chain, so branching must not change a single committed
+        // byte — the degenerate-case equality the device-matrix suite
+        // pins end to end.
+        let mut lin = core(5.0, 4);
+        let mut tre = core(5.0, 4);
+        let prompt = vec![1, 2, 3];
+        let ol = lin.open_session(&prompt, 64, 0).unwrap();
+        let ot = tre.open_session(&prompt, 64, 0).unwrap();
+        let mut want = prompt.clone();
+        let mut got = prompt.clone();
+        let mut expect_rows = 0usize;
+        let mut rounds = 0usize;
+        for round in 0..4u32 {
+            let lm = draft_for(ol.session, round, &want, 4);
+            let lt = lm.tokens.clone();
+            queued(lin.submit(round as f64, ol.attachment, lm, false).unwrap());
+            let lv = lin.close_window(round as f64).unwrap().remove(0).1;
+            assert!(lv.leaf.is_none(), "linear rounds never name a leaf");
+            want.extend_from_slice(&lt[..lv.tau as usize]);
+            want.push(lv.correction);
+
+            let tm = tree_draft_for(ot.session, round, &got, 4, 4);
+            assert!(tm.is_tree() && tm.n_leaves() > 1);
+            expect_rows += tm.n_leaves();
+            rounds += 1;
+            let chain: Vec<i32> = tm.tree_path(3);
+            assert_eq!(chain, lt, "comb chain must equal the linear draft");
+            queued(tre.submit(round as f64, ot.attachment, tm, false).unwrap());
+            let tv = tre.close_window(round as f64).unwrap().remove(0).1;
+            assert_eq!((tv.tau, tv.correction, tv.eos), (lv.tau, lv.correction, lv.eos));
+            assert_eq!(tv.leaf, Some(3), "the tie must pick the chain leaf");
+            got.extend_from_slice(&chain[..tv.tau as usize]);
+            got.push(tv.correction);
+            assert_eq!(got, want, "round {round}");
+            if lv.eos {
+                break;
+            }
+        }
+        // bucket-aligned comb: extra rows, zero extra dispatch classes
+        assert_eq!(tre.metrics.verify_rows, expect_rows);
+        assert_eq!(tre.metrics.tree_rounds, rounds);
+        assert_eq!(tre.metrics.stacked_dispatches, lin.metrics.stacked_dispatches);
+        assert_eq!(lin.metrics.verify_rows, lin.metrics.rounds);
+        tre.metrics.check_invariants(tre.sessions.len(), tre.drafts_in_flight());
+    }
+
+    #[test]
+    fn tree_alternate_beats_the_chain_on_a_drifted_target() {
+        let drifted = || {
+            let mut t = SyntheticTarget::new(7).with_version("evolved", 1.0);
+            t.deploy("evolved").unwrap();
+            t
+        };
+        let prompt = vec![9, 8, 7];
+        // discover the drifted continuation with a LINEAR probe
+        let mut probe = VerifierCore::new(VerifierConfig::default(), Box::new(drifted()));
+        let o = probe.open_session(&prompt, 64, 0).unwrap();
+        let pm = draft_for(o.session, 0, &prompt, 4);
+        let chain = pm.tokens.clone();
+        queued(probe.submit(0.0, o.attachment, pm, false).unwrap());
+        let pv = probe.close_window(0.0).unwrap().remove(0).1;
+        let tau = pv.tau as usize;
+        assert!(tau < 4, "full drift must break the pure chain");
+
+        // same target, but the draft hedges: one alternate carrying the
+        // drifted token, attached exactly where the chain broke
+        let mut c = VerifierCore::new(VerifierConfig::default(), Box::new(drifted()));
+        let o2 = c.open_session(&prompt, 64, 0).unwrap();
+        let mut tokens = chain.clone();
+        let mut parents: Vec<u8> = (0..chain.len() as u8).collect();
+        tokens.push(pv.correction);
+        parents.push(tau as u8);
+        let msg = DraftMsg {
+            session: o2.session,
+            round: 0,
+            tokens,
+            chosen_probs: vec![],
+            mode: VerifyMode::Greedy,
+            wire: WireFormat::Compact,
+            basis_len: 0,
+            spec: vec![],
+            tree: parents,
+        };
+        assert!(msg.tree_valid());
+        queued(c.submit(0.0, o2.attachment, msg, false).unwrap());
+        let v = c.close_window(0.0).unwrap().remove(0).1;
+        // the hedge row `chain[..tau] ++ correction` accepts one token
+        // deeper than the chain row, and the verdict names its leaf
+        assert_eq!(v.tau as usize, tau + 1);
+        assert_eq!(v.leaf, Some(chain.len() as u8));
+        let committed = &c.sessions[&o2.session].committed;
+        assert_eq!(committed.len(), prompt.len() + tau + 2);
+        let mut hedge = chain[..tau].to_vec();
+        hedge.push(pv.correction);
+        assert_eq!(committed[prompt.len()..prompt.len() + tau + 1], hedge[..]);
+        assert_eq!(c.metrics.tree_rounds, 1);
+        assert_eq!(c.metrics.verify_rows, 2);
+        assert_eq!(c.metrics.rounds, 1);
+        c.metrics.check_invariants(c.sessions.len(), c.drafts_in_flight());
+    }
+
+    #[test]
+    fn malformed_and_stochastic_trees_are_rejected() {
+        let mut c = core(5.0, 4);
+        let o = c.open_session(&[1, 2], 64, 0).unwrap();
+        let mut bad = draft_for(o.session, 0, &[1, 2], 3);
+        bad.tree = vec![0]; // wrong arity: 1 parent for 3 tokens
+        assert!(c.submit(0.0, o.attachment, bad, false).is_err());
+        let mut stoch = tree_draft_for(o.session, 0, &[1, 2], 3, 4);
+        stoch.mode = VerifyMode::Stochastic;
+        assert!(c.submit(0.0, o.attachment, stoch, false).is_err());
+        // the books still balance: both rejected drafts were swallowed
+        c.metrics.check_invariants(c.sessions.len(), c.drafts_in_flight());
+    }
+
+    #[test]
+    fn continuous_close_counts_tree_leaves_in_slot_occupancy() {
+        let cfg = VerifierConfig {
+            batch_mode: BatchMode::Continuous,
+            ..Default::default()
+        };
+        let mut c = VerifierCore::new(cfg, Box::new(SyntheticTarget::new(7)));
+        let prompt = vec![4, 5, 6];
+        let o = c.open_session(&prompt, 64, 0).unwrap();
+        let msg = tree_draft_for(o.session, 0, &prompt, 4, 4);
+        let leaves = msg.n_leaves();
+        assert!(leaves > 1);
+        queued(c.submit(0.0, o.attachment, msg, false).unwrap());
+        let out = c.close_window(0.0).unwrap();
+        assert_eq!(out.len(), 1);
+        // occupancy is recorded in executor ROWS, one per tree leaf
+        assert_eq!(c.metrics.slot_occupancy.count(), 1);
+        assert!((c.metrics.slot_occupancy.mean() - leaves as f64).abs() < 1e-9);
+        c.metrics.check_invariants(c.sessions.len(), c.drafts_in_flight());
+    }
+
+    #[test]
+    fn open_with_profile_is_recorded_and_dropped_with_the_session() {
+        let mut c = core(5.0, 4);
+        let p = DeviceProfileMsg {
+            compute_tier: 2,
+            channel_class: 1,
+            energy_mj: 12_000,
+        };
+        let o = c
+            .open_session_profile(&[1, 2], 64, 0, 1, Some(p))
+            .unwrap();
+        assert_eq!(c.device_profile(o.session), Some(&p));
+        assert_eq!(c.metrics.sessions_by_device_tier, [0, 0, 1]);
+        c.abort_session(o.session);
+        assert!(c.device_profile(o.session).is_none());
+        // unprofiled opens land in no cell
+        let o2 = c.open_session(&[3, 4], 64, 0).unwrap();
+        assert!(c.device_profile(o2.session).is_none());
+        assert_eq!(c.metrics.sessions_by_device_tier, [0, 0, 1]);
     }
 
     /// The synthetic draft's assumed outcome of a fully-accepted round:
@@ -2975,6 +3312,7 @@ mod tests {
                     wire: WireFormat::Compact,
                     basis_len: 0,
                     spec: vec![],
+                    tree: vec![],
                 };
                 queued(c.submit(iter as f64, opens[i].attachment, msg, false).unwrap());
                 sent[i] = Some(p.tokens);

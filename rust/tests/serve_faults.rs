@@ -536,6 +536,7 @@ fn unresumed_sessions_are_evicted_after_grace() {
             max_new: 32,
             nonce: 7,
             tier: 1,
+            profile: None,
         };
         edge.send_frame(Frame::on(1, FrameKind::Open, open.encode()))
             .await

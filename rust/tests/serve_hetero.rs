@@ -1,0 +1,418 @@
+//! Wire-v8 device-matrix suite: a heterogeneous edge population (weak /
+//! mid / strong tiers riding `Open` profiles) served over the REAL
+//! loopback stack, pinned against the unprofiled v7 path and the
+//! virtual-clock simulator.
+//!
+//! Two headline properties:
+//!
+//! * carrying a device profile with `branching = 1` is BYTE-IDENTICAL
+//!   to the linear v7 protocol — same committed sequences, same
+//!   accepted/drafted/round counts — across per-connection, multiplexed,
+//!   sequential, and pipelined serving, and across the simulator twin;
+//! * raising `branching` to 4 on the same mix drafts bucket-aligned
+//!   comb trees whose hedge rows ride the EXISTING stacked dispatches,
+//!   so accepted tokens per dispatch strictly increase while not a
+//!   single committed token changes.
+
+use anyhow::Result;
+use flexspec::channel::{NetworkKind, NetworkProfile};
+use flexspec::coordinator::{serve_with, DraftSource, ServeConfig};
+use flexspec::device::{ComputeTier, DeviceProfile};
+use flexspec::devices::{A800_70B, JETSON_ORIN};
+use flexspec::serve::{
+    serve_loopback_each, serve_loopback_mux_each, EdgeSessionConfig, SyntheticDraft,
+    SyntheticTarget, VerifierConfig, VerifyBackend,
+};
+
+/// The device-matrix seeds — same set the continuous-batching matrix
+/// runs, so the two suites pin the same trajectories.
+const SEEDS: [u64; 3] = [3, 17, 42];
+
+fn rt() -> tokio::runtime::Runtime {
+    tokio::runtime::Builder::new_multi_thread()
+        .worker_threads(2)
+        .enable_all()
+        .build()
+        .unwrap()
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![1i32];
+            for j in 0..5 {
+                p.push(100 + ((i * 11 + j * 3) % 100) as i32);
+            }
+            p
+        })
+        .collect()
+}
+
+/// A target that has evolved away from the frozen draft (drift 0.3), so
+/// chains break mid-stride and the comb's alternate leaves have
+/// something to catch.
+fn mk_target(seed: u64) -> Result<SyntheticTarget> {
+    let mut t = SyntheticTarget::new(seed).with_version("evolved", 0.3);
+    t.deploy("evolved")?;
+    Ok(t)
+}
+
+/// The 3-tier population: session i cycles weak → mid → strong, each on
+/// its tier's representative hardware with an unmetered budget.
+fn tier_cycle(n: usize) -> Vec<DeviceProfile> {
+    (0..n)
+        .map(|i| DeviceProfile::of(ComputeTier::all()[i % 3].representative()))
+        .collect()
+}
+
+type Edges = Vec<(Box<dyn DraftSource + Send>, Vec<i32>, EdgeSessionConfig)>;
+
+fn edges(
+    seed: u64,
+    users: usize,
+    max_new: usize,
+    profiles: Option<&[DeviceProfile]>,
+    branching: usize,
+    depth: usize,
+) -> Edges {
+    prompts(users)
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let ecfg = EdgeSessionConfig {
+                max_new,
+                fixed_k: Some(4),
+                seed,
+                pipeline_depth: depth,
+                profile: profiles.map(|ps| ps[i % ps.len()]),
+                branching,
+                ..Default::default()
+            };
+            (
+                Box::new(SyntheticDraft::new(seed)) as Box<dyn DraftSource + Send>,
+                p,
+                ecfg,
+            )
+        })
+        .collect()
+}
+
+fn run_sim(
+    seed: u64,
+    users: usize,
+    max_new: usize,
+    profiles: Option<Vec<DeviceProfile>>,
+    branching: usize,
+) -> flexspec::coordinator::ServeReport {
+    let mut backend = mk_target(seed).unwrap();
+    let mut make =
+        |_id: u32| -> Result<Box<dyn DraftSource>> { Ok(Box::new(SyntheticDraft::new(seed))) };
+    serve_with(
+        &mut backend,
+        &mut make,
+        &prompts(users),
+        &JETSON_ORIN,
+        &A800_70B,
+        &NetworkProfile::new(NetworkKind::FourG),
+        &ServeConfig {
+            users,
+            max_new,
+            fixed_k: Some(4),
+            seed,
+            profiles,
+            branching,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Satellite acceptance, part 1: across the seed matrix, a profiled
+/// 3-tier population with `branching = 1` commits EXACTLY what the
+/// unprofiled v7 path commits — full sequences and per-session counts —
+/// over per-connection sequential, per-connection pipelined, and
+/// multiplexed serving, and all of it matches the virtual-clock
+/// simulator fed the same profile vector. The device layer must be
+/// bookkeeping (tier census, energy meter), never decoding math.
+#[test]
+fn device_matrix_branching_one_is_byte_identical_to_linear_v7() {
+    const USERS: usize = 6;
+    const MAX_NEW: usize = 16;
+
+    for seed in SEEDS {
+        // --- simulator: unprofiled reference + profiled twin ----------
+        let sim = run_sim(seed, USERS, MAX_NEW, None, 1);
+        assert_eq!(sim.completed, USERS, "seed {seed}");
+        assert_eq!(sim.sessions_by_tier, [0, 0, 0], "seed {seed}");
+        let sim_prof = run_sim(seed, USERS, MAX_NEW, Some(tier_cycle(USERS)), 1);
+        assert_eq!(
+            sim_prof.per_session_committed, sim.per_session_committed,
+            "seed {seed}: profiled sim changed a committed token"
+        );
+        assert_eq!(sim_prof.tree_rounds, 0, "seed {seed}: branching 1 drafted a tree");
+        assert_eq!(sim_prof.sessions_by_tier, [2, 2, 2], "seed {seed}: sim tier census");
+        for (i, (po, so)) in sim_prof.per_session.iter().zip(&sim.per_session).enumerate() {
+            assert_eq!(po.new_tokens, so.new_tokens, "seed {seed} sim tokens (prompt {i})");
+            assert_eq!(po.accepted, so.accepted, "seed {seed} sim accepted (prompt {i})");
+            assert_eq!(po.drafted, so.drafted, "seed {seed} sim drafted (prompt {i})");
+            assert_eq!(po.rounds, so.rounds, "seed {seed} sim rounds (prompt {i})");
+        }
+
+        let vcfg = || VerifierConfig {
+            window_ms: 40.0,
+            seed,
+            ..Default::default()
+        };
+        let cycle = tier_cycle(USERS);
+
+        // --- live loopback: sequential + pipelined, one conn/session --
+        for depth in [1usize, 2] {
+            let (base, bm) = rt()
+                .block_on(serve_loopback_each(
+                    vcfg(),
+                    move || Ok(Box::new(mk_target(seed)?) as Box<dyn VerifyBackend>),
+                    edges(seed, USERS, MAX_NEW, None, 1, depth),
+                ))
+                .unwrap();
+            let (prof, pm) = rt()
+                .block_on(serve_loopback_each(
+                    vcfg(),
+                    move || Ok(Box::new(mk_target(seed)?) as Box<dyn VerifyBackend>),
+                    edges(seed, USERS, MAX_NEW, Some(&cycle), 1, depth),
+                ))
+                .unwrap();
+            assert_eq!(pm.sessions_completed, USERS, "seed {seed} depth {depth}");
+            assert_eq!(
+                bm.sessions_by_device_tier,
+                [0, 0, 0],
+                "seed {seed} depth {depth}: unprofiled run reported a tier"
+            );
+            assert_eq!(
+                pm.sessions_by_device_tier,
+                [2, 2, 2],
+                "seed {seed} depth {depth}: live tier census"
+            );
+            assert_eq!(pm.tree_rounds, 0, "seed {seed} depth {depth}: branching 1 tree");
+            for i in 0..USERS {
+                assert_eq!(
+                    prof[i].committed, base[i].committed,
+                    "seed {seed} depth {depth}: profile changed a committed token (prompt {i})"
+                );
+                assert_eq!(
+                    prof[i].committed, sim.per_session_committed[i],
+                    "seed {seed} depth {depth}: live vs sim committed (prompt {i})"
+                );
+                assert_eq!(
+                    prof[i].accepted, base[i].accepted,
+                    "seed {seed} depth {depth}: accepted diverged (prompt {i})"
+                );
+                assert_eq!(
+                    prof[i].drafted, base[i].drafted,
+                    "seed {seed} depth {depth}: drafted diverged (prompt {i})"
+                );
+                assert_eq!(
+                    prof[i].rounds, base[i].rounds,
+                    "seed {seed} depth {depth}: rounds diverged (prompt {i})"
+                );
+            }
+            // sequential live counts also reproduce the simulator's
+            if depth == 1 {
+                for (i, (lr, so)) in prof.iter().zip(&sim.per_session).enumerate() {
+                    assert_eq!(lr.accepted, so.accepted, "seed {seed} live vs sim (prompt {i})");
+                    assert_eq!(lr.rounds, so.rounds, "seed {seed} live vs sim rounds ({i})");
+                }
+            }
+            assert!(
+                pm.invariant_violations(0, 0).is_empty(),
+                "seed {seed} depth {depth}: {:?}",
+                pm.invariant_violations(0, 0)
+            );
+        }
+
+        // --- live loopback: all sessions muxed on ONE connection ------
+        let (mux_base, _) = rt()
+            .block_on(serve_loopback_mux_each(
+                vcfg(),
+                move || Ok(Box::new(mk_target(seed)?) as Box<dyn VerifyBackend>),
+                edges(seed, USERS, MAX_NEW, None, 1, 1),
+            ))
+            .unwrap();
+        let (mux_prof, mm) = rt()
+            .block_on(serve_loopback_mux_each(
+                vcfg(),
+                move || Ok(Box::new(mk_target(seed)?) as Box<dyn VerifyBackend>),
+                edges(seed, USERS, MAX_NEW, Some(&cycle), 1, 1),
+            ))
+            .unwrap();
+        assert_eq!(mm.sessions_completed, USERS, "seed {seed} mux");
+        assert_eq!(mm.sessions_by_device_tier, [2, 2, 2], "seed {seed}: mux tier census");
+        for i in 0..USERS {
+            assert_eq!(
+                mux_prof[i].committed, mux_base[i].committed,
+                "seed {seed}: mux profile changed a committed token (prompt {i})"
+            );
+            assert_eq!(
+                mux_prof[i].committed, sim.per_session_committed[i],
+                "seed {seed}: mux vs sim committed (prompt {i})"
+            );
+        }
+    }
+}
+
+/// Satellite acceptance, part 2: on the SAME 3-tier mix, raising the
+/// branching cap to 4 drafts tier-capped comb trees (weak stays linear,
+/// mid hedges 2-wide, strong 4-wide). `max_batch = 1` pins the batching
+/// schedule (one round = one batch = one bucket-aligned dispatch), so
+/// the dispatch-efficiency gate is deterministic: accepted tokens per
+/// stacked dispatch must STRICTLY increase over the forced-linear run,
+/// while every committed sequence stays byte-identical.
+#[test]
+fn tree_speculation_raises_accepted_per_stacked_dispatch() {
+    const USERS: usize = 9;
+    const MAX_NEW: usize = 48;
+
+    let (mut acc_t, mut disp_t) = (0usize, 0usize);
+    let (mut acc_l, mut disp_l) = (0usize, 0usize);
+    for seed in SEEDS {
+        let vcfg = || VerifierConfig {
+            window_ms: 40.0,
+            max_batch: 1,
+            seed,
+            ..Default::default()
+        };
+        let cycle = tier_cycle(USERS);
+        let (lin, lm) = rt()
+            .block_on(serve_loopback_each(
+                vcfg(),
+                move || Ok(Box::new(mk_target(seed)?) as Box<dyn VerifyBackend>),
+                edges(seed, USERS, MAX_NEW, Some(&cycle), 1, 1),
+            ))
+            .unwrap();
+        let (tre, tm) = rt()
+            .block_on(serve_loopback_each(
+                vcfg(),
+                move || Ok(Box::new(mk_target(seed)?) as Box<dyn VerifyBackend>),
+                edges(seed, USERS, MAX_NEW, Some(&cycle), 4, 1),
+            ))
+            .unwrap();
+        assert_eq!(tm.sessions_completed, USERS, "seed {seed}");
+
+        // the forced-linear profiled run never fans out a row...
+        assert_eq!(lm.tree_rounds, 0, "seed {seed}: linear run drafted a tree");
+        assert_eq!(lm.verify_rows, lm.rounds, "seed {seed}: linear rows != rounds");
+        // ...the tree run does, and the hedge rows ride EXISTING
+        // dispatches: max_batch 1 makes every round one batch, and the
+        // bucket-aligned comb keeps all of a round's rows in one
+        // dispatch class
+        assert!(tm.tree_rounds > 0, "seed {seed}: hetero mix never drafted a tree");
+        assert!(
+            tm.verify_rows > tm.rounds,
+            "seed {seed}: tree rounds added no rows ({} rows, {} rounds)",
+            tm.verify_rows,
+            tm.rounds
+        );
+        for (label, m) in [("linear", &lm), ("tree", &tm)] {
+            assert_eq!(
+                m.stacked_dispatches, m.batches,
+                "seed {seed} {label}: comb rows split a dispatch"
+            );
+            assert_eq!(
+                m.batches, m.rounds,
+                "seed {seed} {label}: max_batch 1 must pin one round per batch"
+            );
+            assert!(
+                m.invariant_violations(0, 0).is_empty(),
+                "seed {seed} {label}: {:?}",
+                m.invariant_violations(0, 0)
+            );
+        }
+
+        for i in 0..USERS {
+            // alternates only ever catch the token the correction slot
+            // would have committed anyway — sequences are invariant
+            assert_eq!(
+                tre[i].committed, lin[i].committed,
+                "seed {seed}: branching changed a committed token (prompt {i})"
+            );
+            assert!(
+                tre[i].rounds <= lin[i].rounds,
+                "seed {seed}: tree run took MORE rounds (prompt {i}: {} > {})",
+                tre[i].rounds,
+                lin[i].rounds
+            );
+            assert!(
+                tre[i].accepted >= lin[i].accepted,
+                "seed {seed}: tree run accepted less (prompt {i})"
+            );
+        }
+
+        // weak sessions (every third) stay linear under the tier cap, so
+        // strictly fewer than all rounds are tree rounds
+        assert!(
+            tm.tree_rounds < tm.rounds,
+            "seed {seed}: weak tier must stay linear ({} of {} rounds treed)",
+            tm.tree_rounds,
+            tm.rounds
+        );
+
+        acc_t += tm.accepted;
+        disp_t += tm.stacked_dispatches;
+        acc_l += lm.accepted;
+        disp_l += lm.stacked_dispatches;
+    }
+
+    // the gate itself, on the full seed matrix: strictly more accepted
+    // tokens per stacked dispatch (cross-multiplied to stay in integers)
+    assert!(
+        acc_t * disp_l > acc_l * disp_t,
+        "tree speculation lost the dispatch-efficiency gate: \
+         {acc_t}/{disp_t} accepted/dispatch <= linear {acc_l}/{disp_l}"
+    );
+    assert!(acc_t > acc_l, "branching 4 never caught an alternate across the matrix");
+}
+
+/// Pipelined rounds stay LINEAR by construction — a speculative round
+/// must not fan a tree out of an unverified prefix — so a profiled
+/// branching-4 session with two rounds in flight still commits the
+/// byte-identical sequence the sequential linear run commits.
+#[test]
+fn pipelined_tree_sessions_stay_byte_identical() {
+    const USERS: usize = 6;
+    const MAX_NEW: usize = 24;
+
+    for seed in SEEDS {
+        let vcfg = || VerifierConfig {
+            window_ms: 40.0,
+            seed,
+            ..Default::default()
+        };
+        let cycle = tier_cycle(USERS);
+        let (lin, _) = rt()
+            .block_on(serve_loopback_each(
+                vcfg(),
+                move || Ok(Box::new(mk_target(seed)?) as Box<dyn VerifyBackend>),
+                edges(seed, USERS, MAX_NEW, Some(&cycle), 1, 1),
+            ))
+            .unwrap();
+        let (pipe, pm) = rt()
+            .block_on(serve_loopback_each(
+                vcfg(),
+                move || Ok(Box::new(mk_target(seed)?) as Box<dyn VerifyBackend>),
+                edges(seed, USERS, MAX_NEW, Some(&cycle), 4, 2),
+            ))
+            .unwrap();
+        assert_eq!(pm.sessions_completed, USERS, "seed {seed}");
+        assert_eq!(pm.sessions_by_device_tier, [2, 2, 2], "seed {seed}: tier census");
+        for i in 0..USERS {
+            assert_eq!(
+                pipe[i].committed, lin[i].committed,
+                "seed {seed}: pipelined tree run changed a committed token (prompt {i})"
+            );
+        }
+        assert!(
+            pm.invariant_violations(0, 0).is_empty(),
+            "seed {seed}: {:?}",
+            pm.invariant_violations(0, 0)
+        );
+    }
+}
